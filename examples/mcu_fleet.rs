@@ -1,0 +1,90 @@
+//! Fleet deployment report: every (model, MCU, engine) combination of the
+//! paper's evaluation in one table — the Sec. 6 experience end to end.
+//!
+//! For each combination: does it fit (Flash/RAM/port availability), the
+//! modeled inference time and the modeled energy. This regenerates the
+//! *qualitative* layer of Fig. 9-11 / Table 6 (which engine runs where);
+//! the per-figure benches print the quantitative series.
+
+use anyhow::Result;
+use microflow::compiler::plan::{CompileOptions, CompiledModel};
+use microflow::format::mfb::MfbModel;
+use microflow::interp::arena::ArenaPlan;
+use microflow::sim::report::Table;
+use microflow::sim::{self, Engine, MCUS};
+use microflow::util::{fmt_energy_wh, fmt_kb, fmt_time};
+
+fn main() -> Result<()> {
+    let art = microflow::artifacts_dir();
+    let mut table = Table::new(
+        "fleet deployment matrix (model x MCU x engine)",
+        &["model", "mcu", "engine", "flash", "ram", "fits", "time", "energy"],
+    );
+
+    for model_name in ["sine", "speech", "person"] {
+        let path = art.join(format!("{model_name}.mfb"));
+        anyhow::ensure!(path.exists(), "run `make artifacts` first");
+        let model = MfbModel::load(&path)?;
+        let arena = ArenaPlan::plan(&model)?;
+
+        for mcu in MCUS.iter() {
+            for engine in [Engine::MicroFlow, Engine::Tflm] {
+                // on the smallest device MicroFlow switches paging on,
+                // exactly as a user would (Sec. 4.3)
+                let paging = engine == Engine::MicroFlow && mcu.ram_bytes <= 4 * 1024;
+                let compiled = CompiledModel::compile(&model, CompileOptions { paging })?;
+                let fp = match engine {
+                    Engine::MicroFlow => sim::memory_model::microflow_footprint(&compiled, mcu),
+                    Engine::Tflm => sim::memory_model::tflm_footprint(&model, &arena, mcu),
+                };
+                let fit = sim::memory_model::fits(mcu, engine, fp);
+                let engine_s = match engine {
+                    Engine::MicroFlow => {
+                        if paging {
+                            "microflow+pg"
+                        } else {
+                            "microflow"
+                        }
+                    }
+                    Engine::Tflm => "tflm",
+                };
+                let (fits_s, time_s, energy_s) = match fit {
+                    Ok(()) => (
+                        "yes".to_string(),
+                        fmt_time(sim::inference_seconds(&compiled, mcu, engine)),
+                        fmt_energy_wh(sim::energy::inference_energy_wh(&compiled, mcu, engine)),
+                    ),
+                    Err(e) => (format!("NO: {e}"), "-".into(), "-".into()),
+                };
+                table.row(vec![
+                    model_name.into(),
+                    mcu.name.into(),
+                    engine_s.into(),
+                    fmt_kb(fp.flash),
+                    fmt_kb(fp.ram),
+                    fits_s,
+                    time_s,
+                    energy_s,
+                ]);
+            }
+        }
+    }
+    sim::report::emit("mcu_fleet", &table);
+
+    // the paper's headline qualitative claims, asserted:
+    println!("checking paper claims ...");
+    let sine = MfbModel::load(art.join("sine.mfb"))?;
+    let compiled = CompiledModel::compile(&sine, CompileOptions { paging: true })?;
+    let atmega = sim::mcu::by_name("ATmega328").unwrap();
+    let fp = sim::memory_model::microflow_footprint(&compiled, atmega);
+    assert!(
+        sim::memory_model::fits(atmega, Engine::MicroFlow, fp).is_ok(),
+        "sine must fit the 8-bit ATmega328 under MicroFlow (paper Sec. 6.2.2)"
+    );
+    assert!(
+        !atmega.tflm_supported,
+        "TFLM must not be available on the ATmega328"
+    );
+    println!("mcu_fleet OK");
+    Ok(())
+}

@@ -1,0 +1,72 @@
+//! Quickstart: the 60-second tour of the public API.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+//!
+//! Loads the sine predictor, compiles it with the MicroFlow compiler, runs
+//! a few inferences, cross-checks the TFLM-like interpreter and the PJRT
+//! (JAX-AOT) oracle, and prints the static memory plan — the whole paper
+//! in one screen.
+
+use anyhow::Result;
+use microflow::compiler::plan::CompileOptions;
+use microflow::engine::MicroFlowEngine;
+use microflow::format::golden::Golden;
+use microflow::interp::resolver::OpResolver;
+use microflow::interp::Interpreter;
+use microflow::runtime::oracle::check_against_golden;
+use microflow::runtime::PjrtEngine;
+use microflow::util::fmt_kb;
+
+fn main() -> Result<()> {
+    let art = microflow::artifacts_dir();
+    anyhow::ensure!(art.join("sine.mfb").exists(), "run `make artifacts` first");
+
+    // 1. compile the model (paper Sec. 3.3: parse -> preprocess -> plan)
+    let engine = MicroFlowEngine::load(art.join("sine.mfb"), CompileOptions::default())?;
+    println!("== MicroFlow engine (sine predictor) ==");
+    println!("steps: {}", engine.compiled().steps.len());
+    println!("MACs/inference: {}", engine.compiled().total_macs());
+    println!("weights+consts: {}", fmt_kb(engine.compiled().weight_bytes()));
+
+    // 2. static memory plan (Sec. 4.2): two ping-pong buffers, no heap on
+    //    the hot path
+    let m = &engine.compiled().memory;
+    println!(
+        "static memory plan: peak {} at step {} (buffers {} + {} + scratch {})",
+        fmt_kb(m.peak),
+        m.peak_step,
+        fmt_kb(m.buf_a),
+        fmt_kb(m.buf_b),
+        fmt_kb(m.scratch),
+    );
+
+    // 3. run inference: sin(x) for a few x
+    println!("\n x      sin(x)   microflow");
+    for x in [0.5f32, 1.0, 2.0, 4.0, 5.5] {
+        let y = engine.predict_f32(&[x]);
+        println!("{x:4.1}   {:+.4}  {:+.4}", x.sin(), y[0]);
+    }
+
+    // 4. golden cross-check: JAX oracle vs all three engines
+    let golden = Golden::load(art.join("sine_golden.bin"))?;
+    let a = check_against_golden(&golden, |x| Ok(engine.predict(x)))?;
+    println!("\nvs JAX golden vectors:");
+    println!("  microflow engine  : exact {}/{}", a.exact, a.n_outputs);
+
+    let bytes = std::fs::read(art.join("sine.mfb"))?;
+    let mut interp = Interpreter::new(&bytes, &OpResolver::with_all_kernels())?;
+    let b = check_against_golden(&golden, |x| interp.invoke(x))?;
+    println!(
+        "  tflm interpreter  : exact {}/{} (max |Δ| = {} — the paper's ±1)",
+        b.exact, b.n_outputs, b.max_abs_diff
+    );
+
+    let pjrt = PjrtEngine::load(&art, "sine")?;
+    let c = check_against_golden(&golden, |x| pjrt.predict_q(x))?;
+    println!("  pjrt (AOT HLO)    : exact {}/{} on {}", c.exact, c.n_outputs, pjrt.platform());
+
+    println!("\nquickstart OK");
+    Ok(())
+}

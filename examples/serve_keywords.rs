@@ -1,0 +1,97 @@
+//! **End-to-end serving driver** (experiment E10 in DESIGN.md — the
+//! session's mandated e2e validation): load the real (trained, quantized,
+//! AOT-compiled) speech-command model and serve batched requests through
+//! the full stack, reporting latency and throughput.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example serve_keywords
+//! ```
+//!
+//! The run exercises every layer: the MFB container and compiler (L3
+//! substrate), the MicroFlow engine AND the PJRT executable compiled from
+//! the JAX/Pallas graph (L2/L1 artifacts), the dynamic batcher, worker
+//! pool and metrics (L3 coordinator). An open-loop Poisson client drives
+//! it with real test-set spectrograms, and the output classes are checked
+//! against the dataset labels (accuracy must match the Table-5 level).
+//! Results are recorded in EXPERIMENTS.md §E10.
+
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+use microflow::coordinator::{Backend, NativeBackend, PjrtBackend, Server, ServerConfig};
+use microflow::eval::accuracy::argmax;
+use microflow::format::mds::MdsDataset;
+use microflow::util::Prng;
+
+const REQUESTS: usize = 1000;
+const RATE_RPS: f64 = 400.0;
+
+fn drive(name: &str, server: &Server, ds: &MdsDataset, requests: usize, rate: f64) -> Result<f64> {
+    let qp = server.input_qparams();
+    let mut rng = Prng::new(7);
+    let mut pending = Vec::with_capacity(requests);
+    let t0 = Instant::now();
+    for i in 0..requests {
+        let idx = i % ds.n;
+        let q = qp.quantize_slice(ds.sample(idx));
+        pending.push((idx, server.submit(q)?));
+        std::thread::sleep(Duration::from_secs_f64(rng.exp(rate)));
+    }
+    let mut hits = 0usize;
+    for (idx, rx) in pending {
+        let out = rx.recv().context("reply dropped")??;
+        if argmax(&out) as i32 == ds.class(idx) {
+            hits += 1;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let acc = hits as f64 / requests as f64;
+    let snap = server.metrics.snapshot();
+    println!("[{name}] {}", snap);
+    println!(
+        "[{name}] wall {:.2}s | offered {:.0} rps | achieved {:.0} rps | accuracy {:.1}%",
+        wall,
+        rate,
+        requests as f64 / wall,
+        acc * 100.0
+    );
+    Ok(acc)
+}
+
+fn main() -> Result<()> {
+    let art = microflow::artifacts_dir();
+    anyhow::ensure!(art.join("speech.mfb").exists(), "run `make artifacts` first");
+    let ds = MdsDataset::load(art.join("speech_test.mds"))?;
+    println!(
+        "speech command serving: {} test spectrograms ({}x{}), {REQUESTS} requests @ ~{RATE_RPS} rps\n",
+        ds.n, ds.sample_shape[0], ds.sample_shape[1]
+    );
+
+    // --- backend 1: native MicroFlow engines, 2 replicas ---
+    let backends: Vec<Box<dyn Backend>> = vec![
+        Box::new(NativeBackend::load(art.join("speech.mfb"))?),
+        Box::new(NativeBackend::load(art.join("speech.mfb"))?),
+    ];
+    let mut cfg = ServerConfig::default();
+    cfg.batcher.max_batch = 8;
+    cfg.batcher.max_wait = Duration::from_millis(2);
+    let server = Server::start(backends, cfg)?;
+    let acc_native = drive("microflow x2", &server, &ds, REQUESTS, RATE_RPS)?;
+    server.shutdown();
+
+    // --- backend 2: the JAX-AOT'd HLO on PJRT (batch-8 executable) ---
+    println!();
+    let backends: Vec<Box<dyn Backend>> = vec![Box::new(PjrtBackend::load(&art, "speech")?)];
+    let server = Server::start(backends, cfg)?;
+    let acc_pjrt = drive("pjrt b8    ", &server, &ds, REQUESTS, RATE_RPS)?;
+    server.shutdown();
+
+    // the two serving paths must agree on accuracy (same quantized graph)
+    anyhow::ensure!(
+        (acc_native - acc_pjrt).abs() < 0.01,
+        "native ({acc_native}) and PJRT ({acc_pjrt}) accuracy diverged"
+    );
+    anyhow::ensure!(acc_native > 0.80, "serving accuracy collapsed: {acc_native}");
+    println!("\nserve_keywords OK: all layers compose (engine == AOT graph, accuracy {:.1}%)", acc_native * 100.0);
+    Ok(())
+}

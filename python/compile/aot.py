@@ -1,0 +1,178 @@
+"""AOT pipeline: train → quantize → export → lower to HLO text.
+
+This is the single build-time entrypoint (``make artifacts``).  Python never
+runs on the request path: after this script finishes, ``artifacts/``
+contains everything the Rust binary needs:
+
+    <model>.mfb             — quantized model for the native engines
+    <model>_test.mds        — test dataset (Table 5 protocol sizes)
+    <model>_golden.bin      — int8 input/output pairs from the jnp oracle
+                              (bit-exactness gate for the Rust engine)
+    <model>_quant_b<N>.hlo.txt — quantized Pallas inference graph, AOT-lowered
+                              to HLO *text* for the Rust PJRT runtime
+    <model>_params.npz      — trained float params (training cache)
+    manifest.txt            — sizes + metadata (Table 3 regeneration)
+
+HLO text (NOT ``.serialize()``) is the interchange format: jax >= 0.5 emits
+protos with 64-bit instruction ids that xla_extension 0.5.1 rejects; the
+text parser reassigns ids (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import datasets as D
+from . import model as M
+from . import train as T
+from .export_mfb import write_golden, write_mds, write_mfb
+from .kernels.ref import quantize as q_input
+from .quantize import QuantizedModel, ptq
+
+# batch sizes per model for the AOT'd PJRT executables (one executable per
+# variant — the serving coordinator picks the best fit per batch)
+AOT_BATCHES = {"sine": (1, 32), "speech": (1, 8), "person": (1,)}
+GOLDEN_N = 8
+
+
+def to_hlo_text(lowered) -> str:
+    from jax._src.lib import xla_client as xc
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_quant_model(qm: QuantizedModel, batch: int) -> str:
+    """Lower the quantized Pallas forward pass for a fixed batch size."""
+    in_shape = (batch, *qm.model.input_shape)
+
+    def fn(x_q):
+        return (M.forward_quant(qm, x_q, backend="pallas", interpret=True),)
+
+    spec = jax.ShapeDtypeStruct(in_shape, jnp.int8)
+    lowered = jax.jit(fn).lower(spec)
+    return to_hlo_text(lowered)
+
+
+def params_cache_path(art: str, name: str) -> str:
+    return os.path.join(art, f"{name}_params.npz")
+
+
+def save_params(path: str, params: list) -> None:
+    flat: dict[str, np.ndarray] = {}
+    for i, p in enumerate(params):
+        if p is not None:
+            flat[f"{i}_w"] = np.asarray(p["w"])
+            flat[f"{i}_b"] = np.asarray(p["b"])
+    np.savez(path, **flat)
+
+
+def load_params(path: str, model: M.ModelDef) -> list | None:
+    if not os.path.exists(path):
+        return None
+    z = np.load(path)
+    params: list = []
+    for i, layer in enumerate(model.layers):
+        if f"{i}_w" in z:
+            params.append({"w": jnp.asarray(z[f"{i}_w"]), "b": jnp.asarray(z[f"{i}_b"])})
+        else:
+            params.append(None)
+    return params
+
+
+TEST_SETS = {"sine": D.sine_test, "speech": D.speech_test, "person": D.person_test}
+CALIB_SETS = {"sine": D.sine_train, "speech": D.speech_train, "person": D.person_train}
+
+
+def build_model(name: str, art: str, *, force: bool = False, log=print) -> dict:
+    """Run the full pipeline for one model; returns summary facts."""
+    model = M.MODELS[name]()
+    t0 = time.time()
+
+    params = None if force else load_params(params_cache_path(art, name), model)
+    if params is None:
+        log(f"[aot] training {name} ...")
+        _, params = T.TRAINERS[name](log=log)
+        save_params(params_cache_path(art, name), params)
+    else:
+        log(f"[aot] {name}: using cached params")
+
+    calib = CALIB_SETS[name]()
+    calib_x = calib.x[:256]
+    qm = ptq(model, params, calib_x)
+
+    mfb_bytes = write_mfb(qm, os.path.join(art, f"{name}.mfb"))
+    test = TEST_SETS[name]()
+    write_mds(test, os.path.join(art, f"{name}_test.mds"))
+
+    # golden vectors through the *jnp oracle* path (ref backend)
+    qin = qm.input_qparams
+    gx = q_input(jnp.asarray(test.x[:GOLDEN_N]), qin.scale, qin.zero_point)
+    gy = M.forward_quant(qm, gx, backend="ref")
+    write_golden(np.asarray(gx), np.asarray(gy), os.path.join(art, f"{name}_golden.bin"))
+
+    # Pallas path must agree bit-exactly with the oracle before we export HLO
+    py = M.forward_quant(qm, gx, backend="pallas")
+    if not bool(jnp.all(py == gy)):
+        raise AssertionError(f"{name}: pallas != ref on golden inputs")
+
+    hlo_sizes = {}
+    for b in AOT_BATCHES[name]:
+        text = lower_quant_model(qm, b)
+        p = os.path.join(art, f"{name}_quant_b{b}.hlo.txt")
+        with open(p, "w") as f:
+            f.write(text)
+        hlo_sizes[b] = len(text)
+        log(f"[aot] {name}: wrote {p} ({len(text)} chars)")
+
+    facts = {
+        "name": name,
+        "params": M.param_count(model),
+        "layers": len(model.layers),
+        "mfb_bytes": mfb_bytes,
+        "weights_bytes": qm.size_bytes(),
+        "test_n": test.n,
+        "hlo": hlo_sizes,
+        "secs": round(time.time() - t0, 1),
+    }
+    log(f"[aot] {name}: done {facts}")
+    return facts
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=None, help="(legacy) ignored; use --artifacts")
+    ap.add_argument("--artifacts", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--models", default="sine,speech,person")
+    ap.add_argument("--force", action="store_true", help="retrain even if params are cached")
+    args = ap.parse_args()
+
+    art = os.path.abspath(args.artifacts)
+    os.makedirs(art, exist_ok=True)
+    all_facts = []
+    for name in args.models.split(","):
+        all_facts.append(build_model(name.strip(), art))
+
+    with open(os.path.join(art, "manifest.txt"), "w") as f:
+        f.write("# model | layers | params | weights_bytes | mfb_bytes | test_n\n")
+        for fa in all_facts:
+            f.write(
+                f"{fa['name']} | {fa['layers']} | {fa['params']} | "
+                f"{fa['weights_bytes']} | {fa['mfb_bytes']} | {fa['test_n']}\n"
+            )
+    print("[aot] manifest written; artifacts complete")
+
+
+if __name__ == "__main__":
+    main()

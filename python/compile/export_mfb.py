@@ -1,0 +1,249 @@
+"""Binary exporters: MFB models, MDS datasets, GLD golden vectors.
+
+These are the build-time halves of the three containers parsed by the Rust
+side (rust/src/format/).  Byte layouts are mirrored there; any change must
+be made in both places and bump the version field.
+
+MFB ("MicroFlow Binary", .mfb) — semantic equivalent of the paper's TFLite
+FlatBuffers input (DESIGN.md §4 Substitutions).  Little-endian:
+
+    magic "MFB1" | u32 version=1 | str producer
+    u32 n_tensors | tensor*
+    u32 n_ops     | op*
+    u8 n_graph_in  | i32*   (tensor indices)
+    u8 n_graph_out | i32*
+    str metadata
+
+    str    := u16 len | utf8 bytes
+    tensor := str name | u8 dtype(0=i8,1=i32,2=f32) | u8 ndims | u32* dims
+              | f32 scale | i32 zero_point | u64 nbytes | bytes data
+    op     := u8 opcode | u32 version | u8 n_in | i32* | u8 n_out | i32*
+              | u16 opt_len | opts
+
+    opcodes: 0 FullyConnected | 1 Conv2D | 2 DepthwiseConv2D
+             | 3 AveragePool2D | 4 Reshape | 5 Softmax | 6 Relu | 7 Relu6
+    opts:
+      FullyConnected  : u8 fused_act (0 none, 1 relu, 2 relu6)
+      Conv2D          : u8 stride_h | u8 stride_w | u8 padding(0 same,1 valid) | u8 fused_act
+      DepthwiseConv2D : as Conv2D | u32 depth_multiplier
+      AveragePool2D   : u8 filter_h | u8 filter_w | u8 stride_h | u8 stride_w | u8 padding | u8 fused_act
+      Reshape         : u8 ndims | u32* dims   (per-sample target shape)
+      Softmax         : f32 beta
+      Relu/Relu6      : (empty)
+
+Activation tensors have nbytes=0 (no data); weights/biases carry payloads.
+Names, versions and metadata are retained on purpose: the interpreter
+baseline must parse them at runtime like TFLM parses the FlatBuffer, while
+the MicroFlow compiler strips them (paper Sec. 6.2.2).
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+from . import datasets as D
+from .model import ModelDef, layer_shapes
+from .quantize import QuantizedModel
+
+OPCODES = {
+    "fully_connected": 0,
+    "conv2d": 1,
+    "depthwise_conv2d": 2,
+    "average_pool2d": 3,
+    "reshape": 4,
+    "softmax": 5,
+    "relu": 6,
+    "relu6": 7,
+}
+ACT_CODES = {"none": 0, "relu": 1, "relu6": 2}
+PAD_CODES = {"same": 0, "valid": 1}
+DT_I8, DT_I32, DT_F32 = 0, 1, 2
+
+
+def _s(b: bytearray, s: str) -> None:
+    raw = s.encode()
+    b += struct.pack("<H", len(raw))
+    b += raw
+
+
+def _tensor(
+    b: bytearray,
+    name: str,
+    dtype: int,
+    dims: tuple[int, ...],
+    scale: float,
+    zero_point: int,
+    data: bytes = b"",
+) -> None:
+    _s(b, name)
+    b += struct.pack("<BB", dtype, len(dims))
+    for d in dims:
+        b += struct.pack("<I", d)
+    b += struct.pack("<fi", scale, zero_point)
+    b += struct.pack("<Q", len(data))
+    b += data
+
+
+def _op(b: bytearray, opcode: int, version: int, ins: list[int], outs: list[int], opts: bytes) -> None:
+    b += struct.pack("<BI", opcode, version)
+    b += struct.pack("<B", len(ins))
+    for i in ins:
+        b += struct.pack("<i", i)
+    b += struct.pack("<B", len(outs))
+    for o in outs:
+        b += struct.pack("<i", o)
+    b += struct.pack("<H", len(opts))
+    b += opts
+
+
+def serialize_mfb(qm: QuantizedModel) -> bytes:
+    """Serialize a quantized model to MFB bytes."""
+    model = qm.model
+    shapes = layer_shapes(model)
+
+    tensors = bytearray()
+    ops = bytearray()
+    n_tensors = 0
+
+    def add_tensor(name, dtype, dims, scale, zp, data=b"") -> int:
+        nonlocal n_tensors
+        _tensor(tensors, name, dtype, tuple(int(d) for d in dims), float(scale), int(zp), data)
+        n_tensors += 1
+        return n_tensors - 1
+
+    qin0 = qm.layers[0]["in"] if qm.layers else None
+    in_idx = add_tensor("serving_default_input:0", DT_I8, (1, *model.input_shape), qin0.scale, qin0.zero_point)
+    cur = in_idx
+
+    n_ops = 0
+    for li, (layer, lq) in enumerate(zip(model.layers, qm.layers)):
+        op = layer["op"]
+        out_shape = (1, *shapes[li + 1])
+        qo = lq["out"]
+        ins: list[int] = [cur]
+        if lq.get("w_q") is not None:
+            w = np.asarray(lq["w_q"], np.int8)
+            bia = np.asarray(lq["b_q"], np.int32)
+            widx = add_tensor(
+                f"{model.name}/layer{li}/weights", DT_I8, w.shape,
+                lq["wq"].scale, lq["wq"].zero_point, w.tobytes(),
+            )
+            bidx = add_tensor(
+                f"{model.name}/layer{li}/bias", DT_I32, bia.shape,
+                lq["bq"].scale, lq["bq"].zero_point, bia.tobytes(),
+            )
+            ins += [widx, bidx]
+        out_idx = add_tensor(f"{model.name}/layer{li}/out", DT_I8, out_shape, qo.scale, qo.zero_point)
+
+        if op == "fully_connected":
+            opts = struct.pack("<B", ACT_CODES[layer["act"]])
+        elif op == "conv2d":
+            opts = struct.pack(
+                "<BBBB", layer["stride"][0], layer["stride"][1],
+                PAD_CODES[layer["padding"]], ACT_CODES[layer["act"]],
+            )
+        elif op == "depthwise_conv2d":
+            opts = struct.pack(
+                "<BBBBI", layer["stride"][0], layer["stride"][1],
+                PAD_CODES[layer["padding"]], ACT_CODES[layer["act"]], layer["mult"],
+            )
+        elif op == "average_pool2d":
+            opts = struct.pack(
+                "<BBBBBB", layer["filter"][0], layer["filter"][1],
+                layer["stride"][0], layer["stride"][1],
+                PAD_CODES[layer["padding"]], 0,
+            )
+        elif op == "reshape":
+            tgt = shapes[li + 1]
+            opts = struct.pack("<B", len(tgt)) + b"".join(struct.pack("<I", d) for d in tgt)
+        elif op == "softmax":
+            opts = struct.pack("<f", 1.0)
+        else:
+            raise ValueError(op)
+        _op(ops, OPCODES[op], 1, ins, [out_idx], opts)
+        n_ops += 1
+        cur = out_idx
+
+    out = bytearray()
+    out += b"MFB1"
+    out += struct.pack("<I", 1)
+    _s(out, "microflow-repro exporter 0.1 (jax)")
+    out += struct.pack("<I", n_tensors)
+    out += tensors
+    out += struct.pack("<I", n_ops)
+    out += ops
+    out += struct.pack("<B", 1) + struct.pack("<i", in_idx)
+    out += struct.pack("<B", 1) + struct.pack("<i", cur)
+    _s(out, f'{{"model":"{model.name}","params":{sum(1 for l in qm.layers if l.get("w_q") is not None)} layers with weights"}}')
+    return bytes(out)
+
+
+def write_mfb(qm: QuantizedModel, path: str) -> int:
+    data = serialize_mfb(qm)
+    with open(path, "wb") as f:
+        f.write(data)
+    return len(data)
+
+
+# ---------------------------------------------------------------------------
+# MDS datasets
+# ---------------------------------------------------------------------------
+
+def serialize_mds(ds: D.Dataset) -> bytes:
+    """MDS1: name | per-sample dims | label kind/dim | n | X f32 | Y f32/i32."""
+    b = bytearray()
+    b += b"MDS1"
+    b += struct.pack("<I", 1)
+    _s(b, ds.name)
+    sample = ds.x.shape[1:]
+    b += struct.pack("<B", len(sample))
+    for d in sample:
+        b += struct.pack("<I", d)
+    if ds.is_classification:
+        b += struct.pack("<BI", 1, 1)
+    else:
+        b += struct.pack("<BI", 0, ds.y.shape[1])
+    b += struct.pack("<I", ds.n)
+    b += np.ascontiguousarray(ds.x, np.float32).tobytes()
+    if ds.is_classification:
+        b += np.ascontiguousarray(ds.y, np.int32).tobytes()
+    else:
+        b += np.ascontiguousarray(ds.y, np.float32).tobytes()
+    return bytes(b)
+
+
+def write_mds(ds: D.Dataset, path: str) -> int:
+    data = serialize_mds(ds)
+    with open(path, "wb") as f:
+        f.write(data)
+    return len(data)
+
+
+# ---------------------------------------------------------------------------
+# GLD golden vectors (cross-implementation bit-exactness checks)
+# ---------------------------------------------------------------------------
+
+def serialize_golden(x_q: np.ndarray, y_q: np.ndarray) -> bytes:
+    """GLD1: n | in dims | out dims | int8 X | int8 Y (batch-major)."""
+    b = bytearray()
+    b += b"GLD1"
+    b += struct.pack("<I", 1)
+    b += struct.pack("<I", x_q.shape[0])
+    b += struct.pack("<B", x_q.ndim - 1)
+    for d in x_q.shape[1:]:
+        b += struct.pack("<I", d)
+    b += struct.pack("<B", y_q.ndim - 1)
+    for d in y_q.shape[1:]:
+        b += struct.pack("<I", d)
+    b += np.ascontiguousarray(x_q, np.int8).tobytes()
+    b += np.ascontiguousarray(y_q, np.int8).tobytes()
+    return bytes(b)
+
+
+def write_golden(x_q: np.ndarray, y_q: np.ndarray, path: str) -> int:
+    data = serialize_golden(x_q, y_q)
+    with open(path, "wb") as f:
+        f.write(data)
+    return len(data)

@@ -1,0 +1,393 @@
+"""Pallas kernels for MicroFlow's quantized operator hot-spots (L1).
+
+The paper's hot path is the int8 multiply-accumulate inner loop of
+FullyConnected / Conv2D / DepthwiseConv2D (Sec. 5).  On TPU the same insight
+maps onto the MXU (DESIGN.md §5 Hardware adaptation):
+
+* everything input-independent (Eq. 4/7/10) is folded *outside* the kernel —
+  the per-output-column int32 constants and the float32 requant scale are
+  kernel operands, exactly mirroring the Rust compiler's ``preprocess`` step;
+* the kernel body is a pure int8→int32 matmul (MXU-shaped) plus a
+  vectorized float epilogue (VPU);
+* the paper's *paging* (Sec. 4.3) is expressed as the BlockSpec grid over
+  output columns: one page == one grid step over N.
+
+All kernels run with ``interpret=True`` (the CPU PJRT plugin cannot execute
+Mosaic custom-calls); correctness is asserted against ``ref.py`` bit-exactly
+in python/tests/.  Real-TPU VMEM/MXU estimates are documented in
+EXPERIMENTS.md §Perf.
+
+Bit-exactness contract: identical int32 accumulation and the identical
+float32 epilogue ``round_half_away(const_bias[j] + scale * acc)`` as ref.py
+and the Rust engine.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import numpy as np
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+INT8_MIN = -128
+INT8_MAX = 127
+
+# Default MXU-aligned tile sizes. On a real TPU these map to the systolic
+# array (128x128) and the 8-sublane VPU registers; under interpret=True they
+# only affect how the grid is carved. Chosen by the L1 perf pass (see
+# EXPERIMENTS.md §Perf: block-shape sweep).
+BLOCK_M = 128
+BLOCK_N = 128
+
+
+def _round_half_away(x):
+    return jnp.sign(x) * jnp.floor(jnp.abs(x) + 0.5)
+
+
+def _pad_to(a: jnp.ndarray, axis: int, mult: int, value) -> jnp.ndarray:
+    size = a.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths, constant_values=value)
+
+
+# ---------------------------------------------------------------------------
+# quantized GEMM — the shared hot-spot of FullyConnected and Conv2D(im2col)
+# ---------------------------------------------------------------------------
+
+def _qgemm_kernel(
+    x_ref,  # int8 [bm, K]
+    w_ref,  # int8 [K, bn]
+    wsum_ref,  # int32 [1, bn]   pre-processed  z_x * sum_k W
+    cbias_ref,  # f32 [1, bn]    pre-processed  z_y + s_b/s_y (b - z_b)
+    o_ref,  # int8 [bm, bn]
+    *,
+    k: int,
+    z_x: int,
+    z_w: int,
+    scale_ratio: float,
+    act_min: int,
+    act_max: int,
+):
+    """One (bm, bn) output tile of Eq. (3).
+
+    int32 MXU matmul + data-dependent row-sum correction, then the float32
+    VPU epilogue. ``k * z_x * z_w`` is a compile-time constant.
+    """
+    xi = x_ref[...].astype(jnp.int32)
+    wi = w_ref[...].astype(jnp.int32)
+    dot = jax.lax.dot_general(
+        xi, wi, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    )
+    rowsum = jnp.sum(xi, axis=1, keepdims=True)  # [bm, 1]
+    acc = dot - z_w * rowsum - wsum_ref[...] + jnp.int32(k * z_x * z_w)
+    y = cbias_ref[...] + jnp.float32(scale_ratio) * acc.astype(jnp.float32)
+    yq = jnp.clip(_round_half_away(y), act_min, act_max)
+    o_ref[...] = yq.astype(jnp.int8)
+
+
+def qgemm(
+    x_q: jnp.ndarray,  # int8 [M, K]
+    w_q: jnp.ndarray,  # int8 [K, N]
+    b_q: jnp.ndarray,  # int32 [N]
+    *,
+    s_x: float,
+    z_x: int,
+    s_w: float,
+    z_w: int,
+    s_b: float,
+    z_b: int,
+    s_y: float,
+    z_y: int,
+    act: str = "none",
+    block_m: int = BLOCK_M,
+    block_n: int = BLOCK_N,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Quantized GEMM with the Eq. (3) epilogue, tiled over (M, N).
+
+    Padding strategy keeps the quantized algebra exact: rows of ``x`` are
+    padded with ``z_x`` and columns of ``w`` with ``z_w`` so every padded
+    contribution of (X-z_x)(W-z_w) vanishes; padded outputs are sliced off.
+    """
+    m, k = x_q.shape
+    _, n = w_q.shape
+    bm = min(block_m, max(8, m))
+    bn = min(block_n, max(8, n))
+
+    xp = _pad_to(x_q, 0, bm, z_x)
+    wp = _pad_to(w_q, 1, bn, z_w)
+    mp, np_ = xp.shape[0], wp.shape[1]
+
+    # pre-processed constants (the MicroFlow Compiler side of the split)
+    wsum = z_x * jnp.sum(wp.astype(jnp.int32), axis=0, keepdims=True)  # [1, Np]
+    cbias = jnp.float32(z_y) + (jnp.float32(s_b) / jnp.float32(s_y)) * (
+        b_q.astype(jnp.float32) - jnp.float32(z_b)
+    )
+    cbias = _pad_to(cbias[None, :], 1, bn, 0.0)
+    scale_ratio = float(np.float32(s_x) * np.float32(s_w) / np.float32(s_y))
+    act_min, act_max = ref.act_bounds(act, s_y, z_y)
+
+    kernel = functools.partial(
+        _qgemm_kernel,
+        k=k,
+        z_x=z_x,
+        z_w=z_w,
+        scale_ratio=scale_ratio,
+        act_min=act_min,
+        act_max=act_max,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.int8),
+        interpret=interpret,
+    )(xp, wp, wsum, cbias)
+    return out[:m, :n]
+
+
+def fully_connected(x_q, w_q, b_q, **kw) -> jnp.ndarray:
+    """FullyConnected (Eq. 3) == qgemm on [M, K] x [K, N]."""
+    return qgemm(x_q, w_q, b_q, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Conv2D — Eq. (6) as im2col + qgemm
+# ---------------------------------------------------------------------------
+
+def conv2d(
+    x_q: jnp.ndarray,  # int8 [N, H, W, Cin]
+    f_q: jnp.ndarray,  # int8 [Cout, KH, KW, Cin]
+    b_q: jnp.ndarray,  # int32 [Cout]
+    *,
+    stride: tuple[int, int],
+    padding: str,
+    s_x: float,
+    z_x: int,
+    s_f: float,
+    z_f: int,
+    s_b: float,
+    z_b: int,
+    s_y: float,
+    z_y: int,
+    act: str = "none",
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Quantized Conv2D: Algorithm-1 view extraction (L2) + qgemm (L1).
+
+    On MCU the paper fuses view extraction into the kernel loop; on TPU the
+    idiomatic mapping is im2col (a relayout the XLA fusion absorbs) feeding
+    the MXU GEMM. Padded positions carry z_x so the algebra is unchanged.
+    """
+    cout, kh, kw, cin = f_q.shape
+    views = ref.extract_views(x_q, kh, kw, stride[0], stride[1], padding, z_x)
+    n, oh, ow = views.shape[:3]
+    patches = views.reshape(n * oh * ow, kh * kw * cin).astype(jnp.int8)
+    filt = f_q.reshape(cout, kh * kw * cin).T  # [KKC, Cout], int8
+    out = qgemm(
+        patches, filt, b_q,
+        s_x=s_x, z_x=z_x, s_w=s_f, z_w=z_f, s_b=s_b, z_b=z_b,
+        s_y=s_y, z_y=z_y, act=act, interpret=interpret,
+    )
+    return out.reshape(n, oh, ow, cout)
+
+
+# ---------------------------------------------------------------------------
+# DepthwiseConv2D — Eq. (9)
+# ---------------------------------------------------------------------------
+
+def _qdepthwise_kernel(
+    v_ref,  # int8 [bb, KK, C]   extracted views (replicated to Cout)
+    w_ref,  # int8 [KK, C]
+    wsum_ref,  # int32 [1, C]    z_x * sum W
+    cbias_ref,  # f32 [1, C]
+    o_ref,  # int8 [bb, C]
+    *,
+    mn: int,
+    z_x: int,
+    z_w: int,
+    scale_ratio: float,
+    act_min: int,
+    act_max: int,
+):
+    """One block of output pixels for all channels (Eq. 9 epilogue)."""
+    vi = v_ref[...].astype(jnp.int32)  # [bb, KK, C]
+    wi = w_ref[...].astype(jnp.int32)  # [KK, C]
+    dot = jnp.sum(vi * wi[None], axis=1)  # [bb, C]
+    xsum = jnp.sum(vi, axis=1)  # [bb, C]
+    acc = dot - z_w * xsum - wsum_ref[...] + jnp.int32(mn * z_x * z_w)
+    y = cbias_ref[...] + jnp.float32(scale_ratio) * acc.astype(jnp.float32)
+    o_ref[...] = jnp.clip(_round_half_away(y), act_min, act_max).astype(jnp.int8)
+
+
+def depthwise_conv2d(
+    x_q: jnp.ndarray,  # int8 [N, H, W, Cin]
+    w_q: jnp.ndarray,  # int8 [1, KH, KW, Cout]
+    b_q: jnp.ndarray,  # int32 [Cout]
+    *,
+    stride: tuple[int, int],
+    padding: str,
+    depth_multiplier: int,
+    s_x: float,
+    z_x: int,
+    s_w: float,
+    z_w: int,
+    s_b: float,
+    z_b: int,
+    s_y: float,
+    z_y: int,
+    act: str = "none",
+    block_b: int = 256,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Quantized DepthwiseConv2D (Eq. 9) as a Pallas per-channel MAC kernel."""
+    _, kh, kw, cout = w_q.shape
+    n, h, w, cin = x_q.shape
+    assert cout == cin * depth_multiplier
+    views = ref.extract_views(x_q, kh, kw, stride[0], stride[1], padding, z_x)
+    oh, ow = views.shape[1:3]
+    vi = jnp.repeat(views, depth_multiplier, axis=5)  # [N,OH,OW,KH,KW,Cout]
+    bpix = n * oh * ow
+    v = vi.reshape(bpix, kh * kw, cout).astype(jnp.int8)
+
+    bb = min(block_b, max(8, bpix))
+    vp = _pad_to(v, 0, bb, z_x)
+    wk = w_q[0].reshape(kh * kw, cout)
+
+    wsum = z_x * jnp.sum(wk.astype(jnp.int32), axis=0, keepdims=True)
+    cbias = jnp.float32(z_y) + (jnp.float32(s_b) / jnp.float32(s_y)) * (
+        b_q.astype(jnp.float32) - jnp.float32(z_b)
+    )
+    scale_ratio = float(np.float32(s_x) * np.float32(s_w) / np.float32(s_y))
+    act_min, act_max = ref.act_bounds(act, s_y, z_y)
+
+    kernel = functools.partial(
+        _qdepthwise_kernel,
+        mn=kh * kw,
+        z_x=z_x,
+        z_w=z_w,
+        scale_ratio=scale_ratio,
+        act_min=act_min,
+        act_max=act_max,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(vp.shape[0] // bb,),
+        in_specs=[
+            pl.BlockSpec((bb, kh * kw, cout), lambda i: (i, 0, 0)),
+            pl.BlockSpec((kh * kw, cout), lambda i: (0, 0)),
+            pl.BlockSpec((1, cout), lambda i: (0, 0)),
+            pl.BlockSpec((1, cout), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, cout), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((vp.shape[0], cout), jnp.int8),
+        interpret=interpret,
+    )(vp, wk, wsum, cbias[None, :])
+    return out[:bpix].reshape(n, oh, ow, cout)
+
+
+# ---------------------------------------------------------------------------
+# AveragePool2D — Eq. (12)
+# ---------------------------------------------------------------------------
+
+def _qavgpool_kernel(
+    v_ref,  # int8 [bb, KK, C]
+    o_ref,  # int8 [bb, C]
+    *,
+    mn: int,
+    z_x: int,
+    scale_ratio: float,
+    z_y: int,
+    act_min: int,
+    act_max: int,
+):
+    vi = v_ref[...].astype(jnp.float32)
+    mean = jnp.sum(vi, axis=1) / jnp.float32(mn)
+    y = jnp.float32(z_y) + jnp.float32(scale_ratio) * (mean - jnp.float32(z_x))
+    o_ref[...] = jnp.clip(_round_half_away(y), act_min, act_max).astype(jnp.int8)
+
+
+def average_pool2d(
+    x_q: jnp.ndarray,
+    *,
+    filter_size: tuple[int, int],
+    stride: tuple[int, int],
+    padding: str,
+    s_x: float,
+    z_x: int,
+    s_y: float,
+    z_y: int,
+    act: str = "none",
+    block_b: int = 512,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Quantized AveragePool2D (Eq. 12) as a Pallas reduction kernel."""
+    kh, kw = filter_size
+    n, h, w, c = x_q.shape
+    views = ref.extract_views(x_q, kh, kw, stride[0], stride[1], padding, z_x)
+    oh, ow = views.shape[1:3]
+    bpix = n * oh * ow
+    v = views.reshape(bpix, kh * kw, c).astype(jnp.int8)
+    bb = min(block_b, max(8, bpix))
+    vp = _pad_to(v, 0, bb, z_x)
+    scale_ratio = float(np.float32(s_x) / np.float32(s_y))
+    act_min, act_max = ref.act_bounds(act, s_y, z_y)
+    kernel = functools.partial(
+        _qavgpool_kernel,
+        mn=kh * kw, z_x=z_x, scale_ratio=scale_ratio, z_y=z_y,
+        act_min=act_min, act_max=act_max,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(vp.shape[0] // bb,),
+        in_specs=[pl.BlockSpec((bb, kh * kw, c), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((bb, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((vp.shape[0], c), jnp.int8),
+        interpret=interpret,
+    )(vp)
+    return out[:bpix].reshape(n, oh, ow, c)
+
+
+# ---------------------------------------------------------------------------
+# Softmax — Eq. (18)
+# ---------------------------------------------------------------------------
+
+def _qsoftmax_kernel(x_ref, o_ref, *, s_x: float, z_x: int, s_y: float, z_y: int):
+    xf = jnp.float32(s_x) * (x_ref[...].astype(jnp.float32) - jnp.float32(z_x))
+    xf = xf - jnp.max(xf, axis=-1, keepdims=True)
+    e = jnp.exp(xf)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    y = jnp.float32(z_y) + p / jnp.float32(s_y)
+    o_ref[...] = jnp.clip(_round_half_away(y), INT8_MIN, INT8_MAX).astype(jnp.int8)
+
+
+def softmax(
+    x_q: jnp.ndarray,  # int8 [M, N]
+    *,
+    s_x: float,
+    z_x: int,
+    s_y: float,
+    z_y: int,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Quantized softmax (Eq. 18) as a single-block Pallas kernel."""
+    kernel = functools.partial(_qsoftmax_kernel, s_x=s_x, z_x=z_x, s_y=s_y, z_y=z_y)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(x_q.shape, jnp.int8),
+        interpret=interpret,
+    )(x_q)

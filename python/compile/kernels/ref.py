@@ -1,0 +1,375 @@
+"""Pure-jnp oracle for MicroFlow's quantized operators (DESIGN.md S19).
+
+Implements the exact quantized formulas of the paper (Sec. 5 + Appendix A)
+with NO Pallas: these are the correctness references the Pallas kernels in
+``quantized.py`` and the Rust runtime kernels are validated against.
+
+Arithmetic contract (shared with the Rust MicroFlow engine, see
+rust/src/tensor/quant.rs):
+
+* accumulation in int32;
+* requantization multiplies the int32 accumulator by a *float32* scale and
+  adds a float32 per-output constant (the paper's pre-processed terms,
+  Eq. 4/7/10/13), then rounds **half away from zero** and clamps to int8;
+* fused activations clamp to [act_min, act_max] in the quantized domain
+  (Eq. 15/17).
+
+The TFLM comparator uses gemmlowp fixed-point requantization instead; that
+path lives purely in Rust (rust/src/tensor/fixedpoint.rs) and is *expected*
+to differ from this oracle by at most one integer unit (paper Sec. 6.2.1).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+INT8_MIN = -128
+INT8_MAX = 127
+
+
+def round_half_away(x: jnp.ndarray) -> jnp.ndarray:
+    """Round half away from zero (matches Rust's ``f32::round``).
+
+    ``jnp.round`` rounds half to even, which does NOT match; this must be
+    used everywhere a float is converted back to a quantized integer.
+    """
+    return jnp.sign(x) * jnp.floor(jnp.abs(x) + 0.5)
+
+
+def quantize(r: jnp.ndarray, scale: float, zero_point: int) -> jnp.ndarray:
+    """Eq. (1) inverted: q = round(r / S) + Z, clamped to int8."""
+    q = round_half_away(r / jnp.float32(scale)) + zero_point
+    return jnp.clip(q, INT8_MIN, INT8_MAX).astype(jnp.int8)
+
+
+def dequantize(q: jnp.ndarray, scale: float, zero_point: int) -> jnp.ndarray:
+    """Eq. (1): r = S (q - Z)."""
+    return jnp.float32(scale) * (q.astype(jnp.float32) - jnp.float32(zero_point))
+
+
+def act_bounds(act: str, s_y: float, z_y: int) -> tuple[int, int]:
+    """Quantized clamp bounds for a fused activation (Eqs. 15/17).
+
+    Returns (act_min, act_max) in the int8 domain.  ``none`` clamps to the
+    full int8 range (saturation only).
+    """
+    if act == "none":
+        return INT8_MIN, INT8_MAX
+    if act == "relu":
+        return max(INT8_MIN, int(z_y)), INT8_MAX
+    if act == "relu6":
+        hi = int(np.floor(z_y + 6.0 / s_y + 0.5))
+        return max(INT8_MIN, int(z_y)), min(INT8_MAX, hi)
+    raise ValueError(f"unknown fused activation {act!r}")
+
+
+def requantize(
+    acc: jnp.ndarray,
+    const_bias: jnp.ndarray,
+    scale_ratio: float,
+    act_min: int,
+    act_max: int,
+) -> jnp.ndarray:
+    """Shared epilogue: y_q = clamp(round(const_bias + scale_ratio * acc)).
+
+    ``const_bias`` is the paper's pre-processed term
+    ``z_Y + (s_b/s_Y)(b_q - z_b)`` (float32, broadcast over outputs) and
+    ``scale_ratio`` is ``s_X s_W / s_Y`` (float32 scalar).
+    """
+    y = jnp.float32(const_bias) + jnp.float32(scale_ratio) * acc.astype(jnp.float32)
+    return jnp.clip(round_half_away(y), act_min, act_max).astype(jnp.int8)
+
+
+# ---------------------------------------------------------------------------
+# FullyConnected — Eq. (3)
+# ---------------------------------------------------------------------------
+
+def fully_connected(
+    x_q: jnp.ndarray,  # int8 [M, K]
+    w_q: jnp.ndarray,  # int8 [K, N]
+    b_q: jnp.ndarray,  # int32 [N]
+    *,
+    s_x: float,
+    z_x: int,
+    s_w: float,
+    z_w: int,
+    s_b: float,
+    z_b: int,
+    s_y: float,
+    z_y: int,
+    act: str = "none",
+) -> jnp.ndarray:
+    """Quantized dense layer, Eq. (3) evaluated literally.
+
+    The four bracketed terms of Eq. (3) are computed separately so the test
+    suite can assert the pre-processed/constant split used by both the
+    Pallas kernel and the Rust compiler.
+    """
+    m, k = x_q.shape
+    k2, n = w_q.shape
+    assert k == k2, (x_q.shape, w_q.shape)
+    xi = x_q.astype(jnp.int32)
+    wi = w_q.astype(jnp.int32)
+    dot = xi @ wi  # [M, N]
+    x_rowsum = jnp.sum(xi, axis=1, keepdims=True)  # [M, 1] — data dependent
+    w_colsum = jnp.sum(wi, axis=0, keepdims=True)  # [1, N] — pre-processable
+    acc = dot - z_w * x_rowsum - z_x * w_colsum + k * z_x * z_w
+    const_bias = jnp.float32(z_y) + (jnp.float32(s_b) / jnp.float32(s_y)) * (
+        b_q.astype(jnp.float32) - jnp.float32(z_b)
+    )
+    scale_ratio = jnp.float32(s_x) * jnp.float32(s_w) / jnp.float32(s_y)
+    lo, hi = act_bounds(act, s_y, z_y)
+    return requantize(acc, const_bias[None, :], scale_ratio, lo, hi)
+
+
+# ---------------------------------------------------------------------------
+# view extraction — Algorithm 1 (im2col form)
+# ---------------------------------------------------------------------------
+
+def out_dims(h: int, w: int, kh: int, kw: int, sh: int, sw: int, padding: str) -> tuple[int, int]:
+    """Output spatial dims for SAME/VALID padding (TFLite convention)."""
+    if padding == "same":
+        return -(-h // sh), -(-w // sw)  # ceil div
+    return (h - kh) // sh + 1, (w - kw) // sw + 1
+
+
+def extract_views(
+    x_q: jnp.ndarray,  # int8/int32 [N, H, W, C]
+    kh: int,
+    kw: int,
+    sh: int,
+    sw: int,
+    padding: str,
+    z_x: int,
+) -> jnp.ndarray:
+    """Algorithm 1: gather the kh*kw receptive field for every output pixel.
+
+    Returns int32 [N, OH, OW, KH, KW, C].  Out-of-bounds positions (SAME
+    padding) are filled with ``z_x`` — the quantized representation of real
+    zero, so the quantized formulas stay exact (the paper's kernels skip
+    padded elements; filling with z_x makes the (X_q - z_X) factor vanish
+    identically, which is the same thing).
+    """
+    n, h, w, c = x_q.shape
+    oh, ow = out_dims(h, w, kh, kw, sh, sw, padding)
+    if padding == "same":
+        # TFLite SAME: total pad = max((o-1)*s + k - in, 0), split low/high
+        pad_h = max((oh - 1) * sh + kh - h, 0)
+        pad_w = max((ow - 1) * sw + kw - w, 0)
+        pt, pl = pad_h // 2, pad_w // 2
+        xp = jnp.full((n, h + pad_h, w + pad_w, c), z_x, dtype=jnp.int32)
+        xp = xp.at[:, pt : pt + h, pl : pl + w, :].set(x_q.astype(jnp.int32))
+    else:
+        xp = x_q.astype(jnp.int32)
+    idx_h = (jnp.arange(oh) * sh)[:, None] + jnp.arange(kh)[None, :]  # [OH, KH]
+    idx_w = (jnp.arange(ow) * sw)[:, None] + jnp.arange(kw)[None, :]  # [OW, KW]
+    v = xp[:, idx_h, :, :]  # [N, OH, KH, W', C]
+    v = v[:, :, :, idx_w, :]  # [N, OH, KH, OW, KW, C]
+    return jnp.transpose(v, (0, 1, 3, 2, 4, 5))  # [N, OH, OW, KH, KW, C]
+
+
+# ---------------------------------------------------------------------------
+# Conv2D — Eq. (6)
+# ---------------------------------------------------------------------------
+
+def conv2d(
+    x_q: jnp.ndarray,  # int8 [N, H, W, Cin]
+    f_q: jnp.ndarray,  # int8 [Cout, KH, KW, Cin]  (TFLite layout)
+    b_q: jnp.ndarray,  # int32 [Cout]
+    *,
+    stride: tuple[int, int],
+    padding: str,
+    s_x: float,
+    z_x: int,
+    s_f: float,
+    z_f: int,
+    s_b: float,
+    z_b: int,
+    s_y: float,
+    z_y: int,
+    act: str = "none",
+) -> jnp.ndarray:
+    """Quantized 2-D convolution, Eq. (6) via view extraction + dot."""
+    cout, kh, kw, cin = f_q.shape
+    sh, sw = stride
+    views = extract_views(x_q, kh, kw, sh, sw, padding, z_x)  # [N,OH,OW,KH,KW,C]
+    n, oh, ow = views.shape[:3]
+    patches = views.reshape(n * oh * ow, kh * kw * cin)  # int32
+    filt = f_q.astype(jnp.int32).reshape(cout, kh * kw * cin).T  # [KKC, Cout]
+    dot = patches @ filt
+    x_sum = jnp.sum(patches, axis=1, keepdims=True)
+    f_sum = jnp.sum(filt, axis=0, keepdims=True)
+    kkc = kh * kw * cin
+    acc = dot - z_f * x_sum - z_x * f_sum + kkc * z_x * z_f
+    const_bias = jnp.float32(z_y) + (jnp.float32(s_b) / jnp.float32(s_y)) * (
+        b_q.astype(jnp.float32) - jnp.float32(z_b)
+    )
+    scale_ratio = jnp.float32(s_x) * jnp.float32(s_f) / jnp.float32(s_y)
+    lo, hi = act_bounds(act, s_y, z_y)
+    out = requantize(acc, const_bias[None, :], scale_ratio, lo, hi)
+    return out.reshape(n, oh, ow, cout)
+
+
+# ---------------------------------------------------------------------------
+# DepthwiseConv2D — Eq. (9)
+# ---------------------------------------------------------------------------
+
+def depthwise_conv2d(
+    x_q: jnp.ndarray,  # int8 [N, H, W, Cin]
+    w_q: jnp.ndarray,  # int8 [1, KH, KW, Cout]  (TFLite layout, Cout = Cin*mult)
+    b_q: jnp.ndarray,  # int32 [Cout]
+    *,
+    stride: tuple[int, int],
+    padding: str,
+    depth_multiplier: int,
+    s_x: float,
+    z_x: int,
+    s_w: float,
+    z_w: int,
+    s_b: float,
+    z_b: int,
+    s_y: float,
+    z_y: int,
+    act: str = "none",
+) -> jnp.ndarray:
+    """Quantized depthwise convolution, Eq. (9): channels never merge."""
+    _, kh, kw, cout = w_q.shape
+    n, h, w, cin = x_q.shape
+    assert cout == cin * depth_multiplier, (cout, cin, depth_multiplier)
+    sh, sw = stride
+    views = extract_views(x_q, kh, kw, sh, sw, padding, z_x)  # [N,OH,OW,KH,KW,Cin]
+    oh, ow = views.shape[1:3]
+    # replicate each input channel depth_multiplier times -> output channels
+    vi = jnp.repeat(views, depth_multiplier, axis=5)  # [N,OH,OW,KH,KW,Cout]
+    wi = w_q.astype(jnp.int32)[0]  # [KH, KW, Cout]
+    dot = jnp.sum(vi * wi[None, None, None], axis=(3, 4))  # [N,OH,OW,Cout]
+    x_sum = jnp.sum(vi, axis=(3, 4))
+    w_sum = jnp.sum(wi, axis=(0, 1))  # [Cout]
+    mn = kh * kw
+    acc = dot - z_w * x_sum - z_x * w_sum[None, None, None, :] + mn * z_x * z_w
+    const_bias = jnp.float32(z_y) + (jnp.float32(s_b) / jnp.float32(s_y)) * (
+        b_q.astype(jnp.float32) - jnp.float32(z_b)
+    )
+    scale_ratio = jnp.float32(s_x) * jnp.float32(s_w) / jnp.float32(s_y)
+    lo, hi = act_bounds(act, s_y, z_y)
+    return requantize(acc, const_bias[None, None, None, :], scale_ratio, lo, hi)
+
+
+# ---------------------------------------------------------------------------
+# AveragePool2D — Eq. (12)
+# ---------------------------------------------------------------------------
+
+def average_pool2d(
+    x_q: jnp.ndarray,  # int8 [N, H, W, C]
+    *,
+    filter_size: tuple[int, int],
+    stride: tuple[int, int],
+    padding: str,
+    s_x: float,
+    z_x: int,
+    s_y: float,
+    z_y: int,
+    act: str = "none",
+) -> jnp.ndarray:
+    """Quantized average pooling, Eq. (12).
+
+    VALID padding only sees full windows so the 1/(m n) factor is constant,
+    as the paper's pre-processing assumes (Eq. 13).
+    """
+    kh, kw = filter_size
+    sh, sw = stride
+    views = extract_views(x_q, kh, kw, sh, sw, padding, z_x)  # [N,OH,OW,KH,KW,C]
+    mean = jnp.mean(views.astype(jnp.float32), axis=(3, 4))  # [N,OH,OW,C]
+    y = jnp.float32(z_y) + (jnp.float32(s_x) / jnp.float32(s_y)) * (mean - jnp.float32(z_x))
+    lo, hi = act_bounds(act, s_y, z_y)
+    return jnp.clip(round_half_away(y), lo, hi).astype(jnp.int8)
+
+
+# ---------------------------------------------------------------------------
+# standalone activations — Eqs. (14), (16), (18)
+# ---------------------------------------------------------------------------
+
+def relu(x_q: jnp.ndarray, *, s_x: float, z_x: int, s_y: float, z_y: int) -> jnp.ndarray:
+    """Eq. (14): standalone (non-fused) quantized ReLU."""
+    xf = x_q.astype(jnp.float32)
+    y = jnp.where(
+        xf < z_x,
+        jnp.float32(z_y),
+        jnp.float32(z_y) + (jnp.float32(s_x) / jnp.float32(s_y)) * (xf - z_x),
+    )
+    return jnp.clip(round_half_away(y), INT8_MIN, INT8_MAX).astype(jnp.int8)
+
+
+def relu6(x_q: jnp.ndarray, *, s_x: float, z_x: int, s_y: float, z_y: int) -> jnp.ndarray:
+    """Eq. (16): standalone quantized ReLU6."""
+    xf = x_q.astype(jnp.float32)
+    knee = jnp.float32(z_x) + 6.0 / jnp.float32(s_x)
+    lo = jnp.where(
+        xf < z_x,
+        jnp.float32(z_y),
+        jnp.float32(z_y) + (jnp.float32(s_x) / jnp.float32(s_y)) * (xf - z_x),
+    )
+    y = jnp.where(xf >= knee, jnp.float32(z_y) + 6.0 / jnp.float32(s_y), lo)
+    return jnp.clip(round_half_away(y), INT8_MIN, INT8_MAX).astype(jnp.int8)
+
+
+def softmax(x_q: jnp.ndarray, *, s_x: float, z_x: int, s_y: float, z_y: int) -> jnp.ndarray:
+    """Eq. (18): quantized softmax over the last axis.
+
+    Computed with a max-subtraction for numerical stability; algebraically
+    identical to Eq. (18) (the z_x and max terms cancel in the ratio).
+    TFLite convention for int8 softmax output is s_y = 1/256, z_y = -128.
+    """
+    xf = jnp.float32(s_x) * (x_q.astype(jnp.float32) - jnp.float32(z_x))
+    xf = xf - jnp.max(xf, axis=-1, keepdims=True)
+    e = jnp.exp(xf)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    y = jnp.float32(z_y) + p / jnp.float32(s_y)
+    return jnp.clip(round_half_away(y), INT8_MIN, INT8_MAX).astype(jnp.int8)
+
+
+# ---------------------------------------------------------------------------
+# float references (training-time forward passes and PTQ calibration)
+# ---------------------------------------------------------------------------
+
+def fully_connected_float(x, w, b):
+    """Float dense layer with [K, N] weights (Eq. 2)."""
+    return x @ w + b[None, :]
+
+
+def conv2d_float(x, f, b, stride, padding):
+    """Float NHWC conv with TFLite [Cout, KH, KW, Cin] filters (Eq. 5)."""
+    import jax
+
+    fw = jnp.transpose(f, (1, 2, 3, 0))  # -> HWIO
+    dn = jax.lax.conv_dimension_numbers(x.shape, fw.shape, ("NHWC", "HWIO", "NHWC"))
+    out = jax.lax.conv_general_dilated(x, fw, stride, padding.upper(), dimension_numbers=dn)
+    return out + b[None, None, None, :]
+
+
+def depthwise_conv2d_float(x, w, b, stride, padding, depth_multiplier):
+    """Float depthwise conv with TFLite [1, KH, KW, Cout] filters (Eq. 8)."""
+    import jax
+
+    cin = x.shape[3]
+    kh, kw, cout = w.shape[1], w.shape[2], w.shape[3]
+    assert cout == cin * depth_multiplier
+    fw = w[0].reshape(kh, kw, cin, depth_multiplier)
+    fw = fw.reshape(kh, kw, 1, cout)
+    dn = jax.lax.conv_dimension_numbers(x.shape, fw.shape, ("NHWC", "HWIO", "NHWC"))
+    out = jax.lax.conv_general_dilated(
+        x, fw, stride, padding.upper(), dimension_numbers=dn, feature_group_count=cin
+    )
+    return out + b[None, None, None, :]
+
+
+def average_pool2d_float(x, filter_size, stride, padding):
+    """Float average pooling (Eq. 11)."""
+    import jax
+
+    kh, kw = filter_size
+    out = jax.lax.reduce_window(
+        x, 0.0, jax.lax.add, (1, kh, kw, 1), (1, stride[0], stride[1], 1), padding.upper()
+    )
+    return out / float(kh * kw)

@@ -1,0 +1,318 @@
+"""L2: the three paper models as declarative layer graphs (DESIGN.md S18).
+
+A model is a list of layer specs.  One description drives everything:
+
+* ``init_params``   — parameter initialization (training),
+* ``forward_float`` — float forward pass (training / PTQ calibration),
+* ``forward_quant`` — quantized int8 forward pass calling the **Pallas**
+                      kernels (L1); this is the graph that is AOT-lowered to
+                      HLO text for the Rust PJRT runtime,
+* ``quantize.ptq``  — post-training quantization,
+* ``export_mfb``    — serialization to the MFB container for the Rust
+                      native engines.
+
+The three models mirror Table 3 of the paper:
+
+* ``sine``   — FC(1→16) ReLU, FC(16→16) ReLU, FC(16→1)
+* ``speech`` — TinyConv: DepthwiseConv2D(1→8, 10x8, s2x2) ReLU, Flatten,
+               FC(4000→4), Softmax
+* ``person`` — MobileNetV1 x0.25 on 96x96x1: Conv + 13 depthwise-separable
+               blocks + AvgPool + Conv1x1(→2) + Softmax (30 layers)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import quantized as qk
+from .kernels import ref
+
+# ---------------------------------------------------------------------------
+# layer spec constructors
+# ---------------------------------------------------------------------------
+
+
+def fc(out_features: int, act: str = "none") -> dict:
+    return {"op": "fully_connected", "out": out_features, "act": act}
+
+
+def conv(filters: int, kernel: tuple[int, int], stride: tuple[int, int], padding: str, act: str = "none") -> dict:
+    return {"op": "conv2d", "filters": filters, "kernel": kernel, "stride": stride, "padding": padding, "act": act}
+
+
+def dwconv(mult: int, kernel: tuple[int, int], stride: tuple[int, int], padding: str, act: str = "none") -> dict:
+    return {"op": "depthwise_conv2d", "mult": mult, "kernel": kernel, "stride": stride, "padding": padding, "act": act}
+
+
+def avgpool(filter_size: tuple[int, int], stride: tuple[int, int], padding: str = "valid") -> dict:
+    return {"op": "average_pool2d", "filter": filter_size, "stride": stride, "padding": padding}
+
+
+def flatten() -> dict:
+    return {"op": "reshape", "mode": "flatten"}
+
+
+def softmax() -> dict:
+    return {"op": "softmax"}
+
+
+@dataclasses.dataclass
+class ModelDef:
+    """A named model: per-sample input shape (no batch dim) + layer list."""
+
+    name: str
+    input_shape: tuple[int, ...]
+    layers: list[dict]
+    classification: bool
+
+
+def sine_model() -> ModelDef:
+    return ModelDef("sine", (1,), [fc(16, "relu"), fc(16, "relu"), fc(1)], classification=False)
+
+
+def speech_model() -> ModelDef:
+    """TinyConv (paper Fig. 8 centre): dwconv (mult 8) + FC + softmax."""
+    return ModelDef(
+        "speech",
+        (49, 40, 1),
+        [
+            dwconv(8, (10, 8), (2, 2), "same", "relu"),  # -> 25x20x8
+            flatten(),  # -> 4000
+            fc(4),
+            softmax(),
+        ],
+        classification=True,
+    )
+
+
+def person_model() -> ModelDef:
+    """MobileNetV1 x0.25 (paper Fig. 8 right), 96x96x1 -> 2 classes.
+
+    Channel progression is the standard MobileNet table scaled by 0.25
+    (32→8 ... 1024→256); 30 layers counting each op like the paper does.
+    """
+    layers: list[dict] = [conv(8, (3, 3), (2, 2), "same", "relu6")]  # 96 -> 48
+    blocks = [
+        (1, 16),  # 48
+        (2, 32),  # -> 24
+        (1, 32),
+        (2, 64),  # -> 12
+        (1, 64),
+        (2, 128),  # -> 6
+        (1, 128),
+        (1, 128),
+        (1, 128),
+        (1, 128),
+        (1, 128),
+        (2, 256),  # -> 3
+        (1, 256),
+    ]
+    for stride, out_ch in blocks:
+        layers.append(dwconv(1, (3, 3), (stride, stride), "same", "relu6"))
+        layers.append(conv(out_ch, (1, 1), (1, 1), "same", "relu6"))
+    layers += [avgpool((3, 3), (3, 3), "valid"), flatten(), fc(2), softmax()]
+    return ModelDef("person", (96, 96, 1), layers, classification=True)
+
+
+MODELS = {"sine": sine_model, "speech": speech_model, "person": person_model}
+
+
+# ---------------------------------------------------------------------------
+# shape inference
+# ---------------------------------------------------------------------------
+
+def layer_shapes(model: ModelDef) -> list[tuple[int, ...]]:
+    """Per-sample activation shape after each layer (index 0 = input)."""
+    shapes = [model.input_shape]
+    s: tuple[int, ...] = model.input_shape
+    for layer in model.layers:
+        op = layer["op"]
+        if op == "fully_connected":
+            assert len(s) == 1, f"FC needs flat input, got {s}"
+            s = (layer["out"],)
+        elif op == "conv2d":
+            oh, ow = ref.out_dims(s[0], s[1], *layer["kernel"], *layer["stride"], layer["padding"])
+            s = (oh, ow, layer["filters"])
+        elif op == "depthwise_conv2d":
+            oh, ow = ref.out_dims(s[0], s[1], *layer["kernel"], *layer["stride"], layer["padding"])
+            s = (oh, ow, s[2] * layer["mult"])
+        elif op == "average_pool2d":
+            oh, ow = ref.out_dims(s[0], s[1], *layer["filter"], *layer["stride"], layer["padding"])
+            s = (oh, ow, s[2])
+        elif op == "reshape":
+            s = (int(np.prod(s)),)
+        elif op == "softmax":
+            pass
+        else:
+            raise ValueError(op)
+        shapes.append(s)
+    return shapes
+
+
+def param_count(model: ModelDef) -> int:
+    """Total scalar parameters (weights + biases)."""
+    n = 0
+    shapes = layer_shapes(model)
+    for i, layer in enumerate(model.layers):
+        sin = shapes[i]
+        op = layer["op"]
+        if op == "fully_connected":
+            n += sin[0] * layer["out"] + layer["out"]
+        elif op == "conv2d":
+            kh, kw = layer["kernel"]
+            n += layer["filters"] * kh * kw * sin[2] + layer["filters"]
+        elif op == "depthwise_conv2d":
+            kh, kw = layer["kernel"]
+            cout = sin[2] * layer["mult"]
+            n += kh * kw * cout + cout
+    return n
+
+
+# ---------------------------------------------------------------------------
+# parameters + float forward (training path)
+# ---------------------------------------------------------------------------
+
+def init_params(model: ModelDef, seed: int = 0) -> list:
+    """He-initialized float parameters; ``None`` for parameterless layers."""
+    key = jax.random.PRNGKey(seed)
+    shapes = layer_shapes(model)
+    params: list = []
+    for i, layer in enumerate(model.layers):
+        sin = shapes[i]
+        op = layer["op"]
+        if op == "fully_connected":
+            key, k = jax.random.split(key)
+            fan_in = sin[0]
+            w = jax.random.normal(k, (fan_in, layer["out"]), jnp.float32) * math.sqrt(2.0 / fan_in)
+            params.append({"w": w, "b": jnp.zeros((layer["out"],), jnp.float32)})
+        elif op == "conv2d":
+            key, k = jax.random.split(key)
+            kh, kw = layer["kernel"]
+            fan_in = kh * kw * sin[2]
+            w = jax.random.normal(k, (layer["filters"], kh, kw, sin[2]), jnp.float32) * math.sqrt(2.0 / fan_in)
+            params.append({"w": w, "b": jnp.zeros((layer["filters"],), jnp.float32)})
+        elif op == "depthwise_conv2d":
+            key, k = jax.random.split(key)
+            kh, kw = layer["kernel"]
+            cout = sin[2] * layer["mult"]
+            w = jax.random.normal(k, (1, kh, kw, cout), jnp.float32) * math.sqrt(2.0 / (kh * kw))
+            params.append({"w": w, "b": jnp.zeros((cout,), jnp.float32)})
+        else:
+            params.append(None)
+    return params
+
+
+def _apply_act_float(x: jnp.ndarray, act: str) -> jnp.ndarray:
+    if act == "none":
+        return x
+    if act == "relu":
+        return jnp.maximum(x, 0.0)
+    if act == "relu6":
+        return jnp.clip(x, 0.0, 6.0)
+    raise ValueError(act)
+
+
+def forward_float(
+    model: ModelDef,
+    params: list,
+    x: jnp.ndarray,
+    *,
+    collect: bool = False,
+    logits_only: bool = True,
+) -> Any:
+    """Float forward pass.
+
+    ``collect=True`` also returns every intermediate activation (post
+    fused-activation) for PTQ calibration.  ``logits_only`` skips the final
+    softmax (training uses cross-entropy-with-logits).
+    """
+    acts = [x]
+    for layer, p in zip(model.layers, params):
+        op = layer["op"]
+        if op == "fully_connected":
+            x = ref.fully_connected_float(x, p["w"], p["b"])
+            x = _apply_act_float(x, layer["act"])
+        elif op == "conv2d":
+            x = ref.conv2d_float(x, p["w"], p["b"], layer["stride"], layer["padding"])
+            x = _apply_act_float(x, layer["act"])
+        elif op == "depthwise_conv2d":
+            x = ref.depthwise_conv2d_float(x, p["w"], p["b"], layer["stride"], layer["padding"], layer["mult"])
+            x = _apply_act_float(x, layer["act"])
+        elif op == "average_pool2d":
+            x = ref.average_pool2d_float(x, layer["filter"], layer["stride"], layer["padding"])
+        elif op == "reshape":
+            x = x.reshape(x.shape[0], -1)
+        elif op == "softmax":
+            if not logits_only:
+                x = jax.nn.softmax(x, axis=-1)
+        else:
+            raise ValueError(op)
+        acts.append(x)
+    return (x, acts) if collect else x
+
+
+# ---------------------------------------------------------------------------
+# quantized forward (Pallas path — this is what gets AOT-lowered)
+# ---------------------------------------------------------------------------
+
+def forward_quant(
+    qmodel,
+    x_q: jnp.ndarray,
+    *,
+    backend: str = "pallas",
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Quantized int8 forward pass.
+
+    ``backend`` selects the Pallas kernels (``"pallas"``, the L1 hot path)
+    or the pure-jnp oracle (``"ref"``); both must agree bit-exactly — the
+    equivalence is asserted in python/tests/test_models.py.
+    """
+    k = qk if backend == "pallas" else ref
+    model = qmodel.model
+    for layer, lq in zip(model.layers, qmodel.layers):
+        op = layer["op"]
+        qi, qo = lq["in"], lq["out"]
+        common = dict(s_x=qi.scale, z_x=qi.zero_point, s_y=qo.scale, z_y=qo.zero_point)
+        extra = {"interpret": interpret} if backend == "pallas" else {}
+        if op == "fully_connected":
+            x_q = k.fully_connected(
+                x_q, jnp.asarray(lq["w_q"]), jnp.asarray(lq["b_q"]),
+                s_w=lq["wq"].scale, z_w=lq["wq"].zero_point,
+                s_b=lq["bq"].scale, z_b=lq["bq"].zero_point,
+                act=layer["act"], **common, **extra,
+            )
+        elif op == "conv2d":
+            x_q = k.conv2d(
+                x_q, jnp.asarray(lq["w_q"]), jnp.asarray(lq["b_q"]),
+                stride=layer["stride"], padding=layer["padding"],
+                s_f=lq["wq"].scale, z_f=lq["wq"].zero_point,
+                s_b=lq["bq"].scale, z_b=lq["bq"].zero_point,
+                act=layer["act"], **common, **extra,
+            )
+        elif op == "depthwise_conv2d":
+            x_q = k.depthwise_conv2d(
+                x_q, jnp.asarray(lq["w_q"]), jnp.asarray(lq["b_q"]),
+                stride=layer["stride"], padding=layer["padding"], depth_multiplier=layer["mult"],
+                s_w=lq["wq"].scale, z_w=lq["wq"].zero_point,
+                s_b=lq["bq"].scale, z_b=lq["bq"].zero_point,
+                act=layer["act"], **common, **extra,
+            )
+        elif op == "average_pool2d":
+            x_q = k.average_pool2d(
+                x_q, filter_size=layer["filter"], stride=layer["stride"],
+                padding=layer["padding"], **common, **extra,
+            )
+        elif op == "reshape":
+            x_q = x_q.reshape(x_q.shape[0], -1)
+        elif op == "softmax":
+            x_q = k.softmax(x_q, **common, **extra)
+        else:
+            raise ValueError(op)
+    return x_q

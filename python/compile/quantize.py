@@ -1,0 +1,163 @@
+"""Post-training quantization (PTQ) to int8 — DESIGN.md S18.
+
+Follows the TFLite full-integer scheme the paper builds on (Eq. 1 and
+[26] Jacob et al.):
+
+* activations — per-tensor **asymmetric** int8: scale/zero-point from the
+  observed min/max over a calibration set (forced to contain real 0);
+* weights     — per-tensor **symmetric** int8 (z_W = 0), scale = max|w|/127.
+  The paper's equations keep z_W general, and so do all our kernels; our
+  exported models simply have z_W = 0 like TFLite's;
+* biases      — int32 with s_b = s_X * s_W, z_b = 0;
+* softmax output — fixed s = 1/256, z = -128 (TFLite convention).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+
+INT8_MIN = -128
+INT8_MAX = 127
+
+
+@dataclasses.dataclass(frozen=True)
+class QParams:
+    """Affine quantization parameters of Eq. (1): r = scale * (q - zero_point)."""
+
+    scale: float
+    zero_point: int
+
+    def quantize(self, r: np.ndarray) -> np.ndarray:
+        return quantize_array(r, self)
+
+    def dequantize(self, q: np.ndarray) -> np.ndarray:
+        return np.float32(self.scale) * (q.astype(np.float32) - np.float32(self.zero_point))
+
+
+def quantize_array(r: np.ndarray, qp: QParams) -> np.ndarray:
+    """q = clamp(round_half_away(r / S) + Z) — matches ref.quantize."""
+    x = r / np.float32(qp.scale)
+    q = np.sign(x) * np.floor(np.abs(x) + 0.5) + qp.zero_point
+    return np.clip(q, INT8_MIN, INT8_MAX).astype(np.int8)
+
+
+def activation_qparams(lo: float, hi: float) -> QParams:
+    """Asymmetric int8 params covering [lo, hi] (always including 0)."""
+    lo, hi = float(min(lo, 0.0)), float(max(hi, 0.0))
+    if hi - lo < 1e-8:
+        hi = lo + 1e-8
+    scale = (hi - lo) / 255.0
+    zp = int(round(INT8_MIN - lo / scale))
+    return QParams(float(np.float32(scale)), int(np.clip(zp, INT8_MIN, INT8_MAX)))
+
+
+def weight_qparams(w: np.ndarray) -> QParams:
+    """Symmetric int8 params (z = 0)."""
+    m = float(np.max(np.abs(w)))
+    if m < 1e-8:
+        m = 1e-8
+    return QParams(float(np.float32(m / 127.0)), 0)
+
+
+SOFTMAX_OUT = QParams(1.0 / 256.0, -128)
+
+
+@dataclasses.dataclass
+class QuantizedModel:
+    """A fully quantized model ready for export and inference.
+
+    ``layers[i]`` holds, for layer i of ``model.layers``:
+      in / out : activation QParams (out == post-fused-activation range)
+      wq / bq  : weight / bias QParams  (None for parameterless layers)
+      w_q / b_q: quantized arrays       (None for parameterless layers)
+    """
+
+    model: M.ModelDef
+    layers: list[dict]
+
+    @property
+    def input_qparams(self) -> QParams:
+        return self.layers[0]["in"]
+
+    @property
+    def output_qparams(self) -> QParams:
+        return self.layers[-1]["out"]
+
+    def size_bytes(self) -> int:
+        """int8 weights + int32 biases (the paper's 'Size' column)."""
+        n = 0
+        for lq in self.layers:
+            if lq.get("w_q") is not None:
+                n += lq["w_q"].size + 4 * lq["b_q"].size
+        return n
+
+
+def ptq(
+    model: M.ModelDef,
+    params: list,
+    calib_x: np.ndarray,
+    *,
+    smooth_pct: float = 0.0,
+) -> QuantizedModel:
+    """Calibrate activation ranges on ``calib_x`` and quantize everything.
+
+    ``smooth_pct`` optionally clips the observed range to the given
+    percentile (0 = plain min/max, the TFLite default for small models).
+    """
+    _, acts = M.forward_float(model, params, jnp.asarray(calib_x), collect=True, logits_only=True)
+    acts = [np.asarray(a) for a in acts]
+
+    def arange(a: np.ndarray) -> QParams:
+        if smooth_pct > 0.0:
+            lo = float(np.percentile(a, smooth_pct))
+            hi = float(np.percentile(a, 100.0 - smooth_pct))
+        else:
+            lo, hi = float(a.min()), float(a.max())
+        return activation_qparams(lo, hi)
+
+    qlayers: list[dict] = []
+    for i, (layer, p) in enumerate(zip(model.layers, params)):
+        op = layer["op"]
+        qin = arange(acts[i])
+        if op == "softmax":
+            qout = SOFTMAX_OUT
+        elif op == "reshape":
+            qout = qin  # reshape never requantizes (paper Table 2)
+        else:
+            qout = arange(acts[i + 1])
+        lq: dict = {"in": qin, "out": qout, "wq": None, "bq": None, "w_q": None, "b_q": None}
+        if p is not None:
+            w = np.asarray(p["w"], np.float32)
+            b = np.asarray(p["b"], np.float32)
+            wq = weight_qparams(w)
+            sb = float(np.float32(qin.scale) * np.float32(wq.scale))
+            bq = QParams(sb, 0)
+            lq["wq"] = wq
+            lq["bq"] = bq
+            lq["w_q"] = quantize_array(w, wq)
+            x = b / np.float32(sb)
+            lq["b_q"] = (np.sign(x) * np.floor(np.abs(x) + 0.5)).astype(np.int64).clip(-(2**31), 2**31 - 1).astype(np.int32)
+        qlayers.append(lq)
+
+    # stitch: layer i's out MUST equal layer i+1's in (single-path graphs)
+    for i in range(len(qlayers) - 1):
+        qlayers[i + 1]["in"] = qlayers[i]["out"]
+        # bias scale depends on the (possibly stitched) input scale — redo it
+        if qlayers[i + 1]["w_q"] is not None:
+            layer_p = params[i + 1]
+            qin = qlayers[i + 1]["in"]
+            wq = qlayers[i + 1]["wq"]
+            sb = float(np.float32(qin.scale) * np.float32(wq.scale))
+            qlayers[i + 1]["bq"] = QParams(sb, 0)
+            b = np.asarray(layer_p["b"], np.float32)
+            x = b / np.float32(sb)
+            qlayers[i + 1]["b_q"] = (
+                (np.sign(x) * np.floor(np.abs(x) + 0.5)).astype(np.int64).clip(-(2**31), 2**31 - 1).astype(np.int32)
+            )
+
+    return QuantizedModel(model, qlayers)

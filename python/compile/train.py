@@ -1,0 +1,123 @@
+"""Training for the three paper models (build-time only, DESIGN.md S18).
+
+No optax is available in this environment, so a minimal Adam is hand-rolled
+on jax pytrees.  Training is deliberately small-scale: the paper uses
+pre-trained TFLM reference models; what our evaluation needs is *trained
+quantized models of the same architectures* so the engine-vs-engine
+comparison (Table 5) is meaningful.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import datasets as D
+from . import model as M
+
+# ---------------------------------------------------------------------------
+# minimal Adam
+# ---------------------------------------------------------------------------
+
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(params, grads, state, lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+    mh = jax.tree_util.tree_map(lambda m_: m_ / (1 - b1**t), m)
+    vh = jax.tree_util.tree_map(lambda v_: v_ / (1 - b2**t), v)
+    new = jax.tree_util.tree_map(lambda p, m_, v_: p - lr * m_ / (jnp.sqrt(v_) + eps), params, mh, vh)
+    return new, {"m": m, "v": v, "t": t}
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+
+def mse_loss(model, params, x, y):
+    pred = M.forward_float(model, params, x)
+    return jnp.mean((pred - y) ** 2)
+
+
+def xent_loss(model, params, x, y):
+    logits = M.forward_float(model, params, x)  # softmax skipped (logits_only)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=-1))
+
+
+def accuracy(model, params, x, y, batch: int = 256) -> float:
+    hits = 0
+    for i in range(0, x.shape[0], batch):
+        logits = M.forward_float(model, params, jnp.asarray(x[i : i + batch]))
+        hits += int(jnp.sum(jnp.argmax(logits, -1) == jnp.asarray(y[i : i + batch])))
+    return hits / x.shape[0]
+
+
+# ---------------------------------------------------------------------------
+# generic training loop
+# ---------------------------------------------------------------------------
+
+
+def train(
+    model: M.ModelDef,
+    train_ds: D.Dataset,
+    *,
+    steps: int,
+    batch: int,
+    lr: float,
+    seed: int = 0,
+    log_every: int = 50,
+    log=print,
+) -> list:
+    """Train ``model`` on ``train_ds``; returns the trained float params."""
+    params = M.init_params(model, seed)
+    opt = adam_init(params)
+    loss_fn = xent_loss if model.classification else mse_loss
+
+    @jax.jit
+    def step_fn(params, opt, x, y):
+        loss, grads = jax.value_and_grad(lambda p: loss_fn(model, p, x, y))(params)
+        params, opt = adam_update(params, grads, opt, lr)
+        return params, opt, loss
+
+    rng = np.random.default_rng(seed)
+    n = train_ds.n
+    t0 = time.time()
+    for s in range(steps):
+        idx = rng.integers(0, n, size=batch)
+        x = jnp.asarray(train_ds.x[idx])
+        y = jnp.asarray(train_ds.y[idx])
+        params, opt, loss = step_fn(params, opt, x, y)
+        if log_every and (s % log_every == 0 or s == steps - 1):
+            log(f"[train:{model.name}] step {s:4d}/{steps} loss={float(loss):.4f} ({time.time()-t0:.1f}s)")
+    return params
+
+
+def train_sine(log=print):
+    model = M.sine_model()
+    params = train(model, D.sine_train(), steps=3000, batch=64, lr=5e-3, seed=0, log=log)
+    return model, params
+
+
+def train_speech(log=print):
+    model = M.speech_model()
+    params = train(model, D.speech_train(), steps=500, batch=32, lr=1e-3, seed=1, log=log)
+    return model, params
+
+
+def train_person(log=print):
+    model = M.person_model()
+    params = train(model, D.person_train(), steps=400, batch=16, lr=1e-3, seed=2, log=log)
+    return model, params
+
+
+TRAINERS = {"sine": train_sine, "speech": train_speech, "person": train_person}

@@ -1,0 +1,101 @@
+"""L2 model-graph tests: shapes, parameter counts, pallas==ref equivalence
+on whole models, dataset invariants."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import datasets as D
+from compile import model as M
+from compile.kernels import ref
+from compile.quantize import ptq
+
+
+def test_layer_shapes_sine():
+    shapes = M.layer_shapes(M.sine_model())
+    assert shapes == [(1,), (16,), (16,), (1,)]
+
+
+def test_layer_shapes_speech():
+    shapes = M.layer_shapes(M.speech_model())
+    assert shapes[0] == (49, 40, 1)
+    assert shapes[1] == (25, 20, 8)  # dwconv s2, mult 8
+    assert shapes[2] == (4000,)
+    assert shapes[-1] == (4,)
+
+
+def test_layer_shapes_person():
+    model = M.person_model()
+    shapes = M.layer_shapes(model)
+    assert shapes[0] == (96, 96, 1)
+    assert shapes[1] == (48, 48, 8)
+    # end of the conv stack: 3x3x256 before avgpool
+    assert (3, 3, 256) in shapes
+    assert shapes[-1] == (2,)
+    # the paper counts 30 layers; ours is 31 including the explicit flatten
+    assert len(model.layers) == 31
+
+
+def test_person_param_count_in_paper_ballpark():
+    n = M.param_count(M.person_model())
+    # MobileNetV1 x0.25 (96x96, 2 classes): ~210k params -> ~210 kB int8
+    assert 150_000 < n < 300_000, n
+
+
+def test_speech_size_matches_paper_19kb():
+    n = M.param_count(M.speech_model())
+    assert 15_000 < n < 22_000, n  # paper: ~19 kB int8
+
+
+@pytest.mark.parametrize("name", ["sine", "speech"])
+def test_forward_quant_pallas_equals_ref_whole_model(name):
+    model = M.MODELS[name]()
+    params = M.init_params(model, seed=7)
+    calib = {"sine": D.sine_train(64).x, "speech": D.speech_train(16).x}[name]
+    qm = ptq(model, params, calib)
+    test_x = calib[:4]
+    gx = ref.quantize(jnp.asarray(test_x), qm.input_qparams.scale, qm.input_qparams.zero_point)
+    a = M.forward_quant(qm, gx, backend="ref")
+    b = M.forward_quant(qm, gx, backend="pallas")
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_forward_float_batch_independence():
+    """Per-sample results must not depend on batch composition."""
+    model = M.speech_model()
+    params = M.init_params(model, seed=9)
+    x = D.speech_train(4).x
+    full = np.asarray(M.forward_float(model, params, jnp.asarray(x)))
+    single = np.asarray(M.forward_float(model, params, jnp.asarray(x[1:2])))
+    np.testing.assert_allclose(full[1:2], single, rtol=1e-5, atol=1e-5)
+
+
+def test_datasets_are_deterministic():
+    a = D.speech_test(10, seed=11)
+    b = D.speech_test(10, seed=11)
+    np.testing.assert_array_equal(a.x, b.x)
+    np.testing.assert_array_equal(a.y, b.y)
+    c = D.speech_test(10, seed=12)
+    assert not np.array_equal(a.x, c.x)
+
+
+def test_dataset_shapes_and_sizes_match_paper():
+    assert D.sine_test().n == 1000
+    assert D.speech_test(5).x.shape[1:] == (49, 40, 1)
+    assert D.person_test(5).x.shape[1:] == (96, 96, 1)
+    assert D.SPEECH_TEST_N == 1236
+    assert D.PERSON_TEST_N == 406
+
+
+def test_sine_test_noise_band():
+    ds = D.sine_test(500)
+    noise = ds.y.ravel() - np.sin(ds.x.ravel())
+    assert np.abs(noise).max() <= 0.1 + 1e-6
+    assert np.abs(noise).mean() > 0.01  # actually noisy
+
+
+def test_all_classes_present():
+    sp = D.speech_test(400)
+    assert set(np.unique(sp.y)) == {0, 1, 2, 3}
+    pe = D.person_test(100)
+    assert set(np.unique(pe.y)) == {0, 1}

@@ -1,0 +1,103 @@
+"""PTQ unit tests: quantization parameters, roundtrips, model PTQ sanity."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import datasets as D
+from compile import model as M
+from compile.kernels import ref
+from compile.quantize import (
+    QParams,
+    activation_qparams,
+    ptq,
+    quantize_array,
+    weight_qparams,
+)
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+@given(st.floats(-3.0, 0.0), st.floats(0.0, 3.0))
+def test_activation_qparams_cover_range(lo, hi):
+    qp = activation_qparams(lo, hi)
+    assert qp.scale > 0
+    # zero must be exactly representable (zero_point lands on it)
+    z_real = qp.dequantize(np.int8(np.clip(qp.zero_point, -128, 127)))
+    assert abs(z_real) < 1e-6
+    # endpoints quantize inside the int8 range within one step
+    for v in (lo, hi):
+        q = quantize_array(np.array([v], np.float32), qp)
+        back = qp.dequantize(q)[0]
+        assert abs(back - v) <= qp.scale + 1e-6
+
+
+@given(st.integers(0, 2**31))
+def test_weight_qparams_symmetric(seed):
+    rng = np.random.default_rng(seed)
+    w = rng.normal(0, 0.5, 64).astype(np.float32)
+    qp = weight_qparams(w)
+    assert qp.zero_point == 0
+    q = quantize_array(w, qp)
+    assert int(np.abs(q.astype(np.int32)).max()) <= 127
+    err = np.abs(qp.dequantize(q) - w).max()
+    assert err <= qp.scale / 2 + 1e-6
+
+
+def test_quantize_array_matches_ref_quantize():
+    rng = np.random.default_rng(3)
+    vals = rng.normal(0, 1, 256).astype(np.float32)
+    qp = QParams(0.0173, -7)
+    a = quantize_array(vals, qp)
+    b = np.asarray(ref.quantize(jnp.asarray(vals), qp.scale, qp.zero_point))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_ptq_sine_end_to_end_quality():
+    """PTQ'd sine model must stay close to the float model (paper Table 5
+    regime: quantization costs little accuracy)."""
+    model = M.sine_model()
+    params = M.init_params(model, seed=0)
+    # quick train so the function is non-trivial
+    from compile import train as T
+
+    params = T.train(model, D.sine_train(1000), steps=600, batch=64, lr=5e-3, log_every=0, log=lambda *a: None)
+    qm = ptq(model, params, D.sine_train(256).x)
+    xs = D.sine_test(200)
+    f_out = np.asarray(M.forward_float(model, params, jnp.asarray(xs.x))).ravel()
+    gx = ref.quantize(jnp.asarray(xs.x), qm.input_qparams.scale, qm.input_qparams.zero_point)
+    q_out = np.asarray(M.forward_quant(qm, gx, backend="ref")).ravel()
+    q_real = qm.output_qparams.dequantize(q_out)
+    # quantization error bounded by a handful of output steps (per-layer
+    # rounding compounds across the 3 FC layers; ~8 steps observed)
+    assert np.abs(q_real - f_out).max() < 12 * qm.output_qparams.scale
+    assert np.sqrt(np.mean((q_real - f_out) ** 2)) < 4 * qm.output_qparams.scale
+
+
+def test_ptq_layer_stitching_is_consistent():
+    """Adjacent layers must share qparams at the seam (out[i] == in[i+1])."""
+    model = M.speech_model()
+    params = M.init_params(model, seed=1)
+    qm = ptq(model, params, D.speech_train(32).x)
+    for a, b in zip(qm.layers, qm.layers[1:]):
+        assert a["out"] == b["in"]
+
+
+def test_ptq_bias_scale_is_product():
+    model = M.sine_model()
+    params = M.init_params(model, seed=2)
+    qm = ptq(model, params, D.sine_train(64).x)
+    for lq in qm.layers:
+        if lq["wq"] is not None:
+            want = float(np.float32(lq["in"].scale) * np.float32(lq["wq"].scale))
+            assert abs(lq["bq"].scale - want) < 1e-12
+            assert lq["bq"].zero_point == 0
+
+
+def test_softmax_output_qparams_fixed():
+    model = M.speech_model()
+    params = M.init_params(model, seed=3)
+    qm = ptq(model, params, D.speech_train(16).x)
+    assert qm.output_qparams.scale == 1 / 256
+    assert qm.output_qparams.zero_point == -128

@@ -1,0 +1,68 @@
+//! Ablation: paging (experiment E8 in DESIGN.md; paper Sec. 4.3).
+//!
+//! Measures the two sides of the paging trade on the real sine model and
+//! on synthetic FC layers of growing width:
+//!
+//! * RAM: per-page working set vs full working set (paper's 163 B vs 5 kB
+//!   example, computed by the actual PagePlan);
+//! * time: host-measured slowdown of the paged executor (Flash re-reads).
+
+use microflow::bench_support::{black_box, time_iters};
+use microflow::compiler::paging::PagePlan;
+use microflow::compiler::plan::CompileOptions;
+use microflow::engine::MicroFlowEngine;
+use microflow::format::mfb::MfbModel;
+use microflow::kernels::fully_connected::{fully_connected_microflow, fully_connected_paged};
+use microflow::sim::report::{emit, Table};
+use microflow::tensor::quant::{FusedAct, PreComputed};
+use microflow::util::{fmt_time, Prng};
+
+fn main() -> anyhow::Result<()> {
+    let mut t = Table::new(
+        "ablation: paging — RAM (paper costing) and host time per FC layer",
+        &["K x N", "unpaged RAM", "paged RAM/page", "unpaged time", "paged time", "slowdown"],
+    );
+    let mut rng = Prng::new(9);
+    for (k, n) in [(32usize, 32usize), (64, 64), (256, 64), (1024, 32)] {
+        let plan = PagePlan::for_fully_connected(k, n);
+        let x = rng.i8_vec(k);
+        let w = rng.i8_vec(k * n);
+        let b = rng.i32_vec(n, -500, 500);
+        let colsum: Vec<i32> = (0..n).map(|j| (0..k).map(|i| w[i * n + j] as i32).sum()).collect();
+        let pc = PreComputed::fold(&b, &colsum, k, 0.05, 3, 0.02, 0, 0.001, 0, 0.08, 0, FusedAct::None);
+        let mut out = vec![0i8; n];
+        let mut page = vec![0i8; k];
+        let s_un = time_iters(10, 200, || {
+            fully_connected_microflow(&x, &w, k, n, &pc, &mut out);
+            black_box(&out);
+        });
+        let s_pg = time_iters(10, 200, || {
+            fully_connected_paged(&x, &w, k, n, &pc, &mut page, &mut out);
+            black_box(&out);
+        });
+        t.row(vec![
+            format!("{k}x{n}"),
+            format!("{} B", plan.unpaged_bytes),
+            format!("{} B", plan.page_bytes),
+            fmt_time(s_un.median),
+            fmt_time(s_pg.median),
+            format!("{:.2}x", s_pg.median / s_un.median),
+        ]);
+    }
+    emit("ablation_paging", &t);
+
+    // the paper's exact worked example must hold
+    assert_eq!(PagePlan::paged_ram(32), 163);
+    assert!(PagePlan::unpaged_ram(32, 32) > 5000);
+
+    // whole-model: paged == unpaged outputs on the shipped sine model
+    let art = microflow::artifacts_dir();
+    let model = MfbModel::load(art.join("sine.mfb"))?;
+    let a = MicroFlowEngine::new(&model, CompileOptions { paging: false })?;
+    let b = MicroFlowEngine::new(&model, CompileOptions { paging: true })?;
+    for q in (-120..=120).step_by(7) {
+        assert_eq!(a.predict(&[q]), b.predict(&[q]));
+    }
+    println!("ablation_paging OK");
+    Ok(())
+}

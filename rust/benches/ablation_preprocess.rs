@@ -1,0 +1,100 @@
+//! Ablation: compile-time pre-processing (paper Sec. 3.3.3; DESIGN.md E9).
+//!
+//! Quantifies what the MicroFlow Compiler's constant folding buys: the
+//! same float-scale kernel is run (a) with constants folded once at
+//! compile time (the shipped path) vs (b) re-deriving the Eq. 4 constants
+//! on every inference (what a naive runtime without a pre-processing phase
+//! would do). Also reports the end-to-end compile-vs-interpret split on
+//! the shipped models: compile cost is paid once, invoke cost every time.
+
+use std::time::Instant;
+
+use microflow::bench_support::{black_box, time_iters};
+use microflow::compiler::plan::{CompileOptions, CompiledModel};
+use microflow::engine::MicroFlowEngine;
+use microflow::format::mfb::MfbModel;
+use microflow::interp::resolver::OpResolver;
+use microflow::interp::Interpreter;
+use microflow::kernels::fully_connected::fully_connected_microflow;
+use microflow::sim::report::{emit, Table};
+use microflow::tensor::quant::{FusedAct, PreComputed};
+use microflow::util::{fmt_time, Prng};
+
+fn main() -> anyhow::Result<()> {
+    // --- kernel-level: folded vs re-derived constants ---
+    let mut rng = Prng::new(4);
+    let mut t = Table::new(
+        "ablation: pre-processing — folded constants vs per-inference folding",
+        &["K x N", "folded", "refold each call", "overhead"],
+    );
+    for (k, n) in [(16usize, 16usize), (256, 64), (4000, 4)] {
+        let x = rng.i8_vec(k);
+        let w = rng.i8_vec(k * n);
+        let b = rng.i32_vec(n, -500, 500);
+        let colsum: Vec<i32> = (0..n).map(|j| (0..k).map(|i| w[i * n + j] as i32).sum()).collect();
+        let pc = PreComputed::fold(&b, &colsum, k, 0.05, 3, 0.02, -1, 0.001, 0, 0.08, 0, FusedAct::None);
+        let mut out = vec![0i8; n];
+        let s_folded = time_iters(10, 100, || {
+            fully_connected_microflow(&x, &w, k, n, &pc, &mut out);
+            black_box(&out);
+        });
+        let s_refold = time_iters(10, 100, || {
+            // a runtime without Sec. 3.3.3 recomputes the weight column
+            // sums and constant terms per inference
+            let colsum: Vec<i32> =
+                (0..n).map(|j| (0..k).map(|i| w[i * n + j] as i32).sum()).collect();
+            let pc2 = PreComputed::fold(&b, &colsum, k, 0.05, 3, 0.02, -1, 0.001, 0, 0.08, 0, FusedAct::None);
+            fully_connected_microflow(&x, &w, k, n, &pc2, &mut out);
+            black_box(&out);
+        });
+        t.row(vec![
+            format!("{k}x{n}"),
+            fmt_time(s_folded.median),
+            fmt_time(s_refold.median),
+            format!("+{:.0}%", (s_refold.median / s_folded.median - 1.0) * 100.0),
+        ]);
+    }
+    emit("ablation_preprocess_kernel", &t);
+
+    // --- model-level: one-time compile vs per-inference interpret ---
+    let art = microflow::artifacts_dir();
+    let mut t2 = Table::new(
+        "compile-once vs interpret-every-time (host)",
+        &["model", "MF compile (once)", "MF invoke", "interp init (once)", "interp invoke"],
+    );
+    for name in ["sine", "speech", "person"] {
+        let path = art.join(format!("{name}.mfb"));
+        let bytes = std::fs::read(&path)?;
+        let model = MfbModel::parse(&bytes)?;
+
+        let t0 = Instant::now();
+        let engine = MicroFlowEngine::new(&model, CompileOptions::default())?;
+        let compile_t = t0.elapsed().as_secs_f64();
+
+        let t0 = Instant::now();
+        let mut interp = Interpreter::new(&bytes, &OpResolver::with_all_kernels())?;
+        let init_t = t0.elapsed().as_secs_f64();
+
+        let mut rng = Prng::new(2);
+        let input = rng.i8_vec(engine.input_len());
+        let mut out = vec![0i8; engine.output_len()];
+        let iters = if name == "person" { 20 } else { 100 };
+        let s_mf = time_iters(3, iters, || engine.predict_into(&input, &mut out));
+        let s_in = time_iters(3, iters, || {
+            let _ = interp.invoke(&input).unwrap();
+        });
+        t2.row(vec![
+            name.into(),
+            fmt_time(compile_t),
+            fmt_time(s_mf.median),
+            fmt_time(init_t),
+            fmt_time(s_in.median),
+        ]);
+        // the central claim: compile work is front-loaded, invoke is lean
+        let compiled = CompiledModel::compile(&model, CompileOptions::default())?;
+        assert!(compiled.total_macs() > 0);
+    }
+    emit("ablation_preprocess_model", &t2);
+    println!("ablation_preprocess OK");
+    Ok(())
+}

@@ -1,0 +1,74 @@
+//! Fig. 10 — Flash and RAM for the speech command recognizer and person
+//! detector across MCUs (experiment E5 in DESIGN.md).
+//!
+//! Expected shape (paper Sec. 6.2.2): MicroFlow consistently smaller; the
+//! gap narrows as weights dominate (person: still >15% total Flash saved);
+//! the person model no longer fits the smallest devices at all; TFLM only
+//! exists on ESP32 + nRF52840.
+
+use microflow::compiler::plan::{CompileOptions, CompiledModel};
+use microflow::format::mfb::MfbModel;
+use microflow::interp::arena::ArenaPlan;
+use microflow::sim::report::{emit, Table};
+use microflow::sim::{self, Engine, MCUS};
+use microflow::util::fmt_kb;
+
+fn main() -> anyhow::Result<()> {
+    let art = microflow::artifacts_dir();
+
+    for model_name in ["speech", "person"] {
+        let model = MfbModel::load(art.join(format!("{model_name}.mfb")))?;
+        let arena = ArenaPlan::plan(&model)?;
+        let mut t = Table::new(
+            &format!("Fig. 10 — {model_name} memory (Flash / RAM per MCU)"),
+            &["mcu", "TFLM flash", "MF flash", "TFLM ram", "MF ram", "TFLM runs", "MF runs"],
+        );
+        let mut esp = ((0usize, 0usize), (0usize, 0usize)); // (flash tf/mf, ram tf/mf)
+        for mcu in MCUS.iter() {
+            let paging = mcu.ram_bytes <= 4 * 1024;
+            let compiled = CompiledModel::compile(&model, CompileOptions { paging })?;
+            let mf = sim::memory_model::microflow_footprint(&compiled, mcu);
+            let tf = sim::memory_model::tflm_footprint(&model, &arena, mcu);
+            let mf_ok = sim::memory_model::fits(mcu, Engine::MicroFlow, mf).is_ok();
+            let tf_ok = sim::memory_model::fits(mcu, Engine::Tflm, tf).is_ok();
+            if mcu.name == "ESP32" {
+                esp = ((tf.flash, mf.flash), (tf.ram, mf.ram));
+            }
+            t.row(vec![
+                mcu.name.into(),
+                fmt_kb(tf.flash),
+                fmt_kb(mf.flash),
+                fmt_kb(tf.ram),
+                fmt_kb(mf.ram),
+                if tf_ok { "yes" } else { "NO" }.into(),
+                if mf_ok { "yes" } else { "NO" }.into(),
+            ]);
+        }
+        emit(&format!("fig10_memory_{model_name}"), &t);
+
+        let flash_saving = 1.0 - (esp.0 .1 as f64 / esp.0 .0 as f64);
+        println!("{model_name}: ESP32 Flash saving {:.0}%", flash_saving * 100.0);
+        assert!(
+            flash_saving > 0.10,
+            "{model_name}: MicroFlow must still save >10% Flash (paper: >15% on person)"
+        );
+        assert!(esp.1 .1 < esp.1 .0, "{model_name}: MicroFlow RAM must be below TFLM's");
+    }
+
+    // the narrowing-gap claim: person saving < sine saving
+    let saving = |name: &str| -> anyhow::Result<f64> {
+        let model = MfbModel::load(art.join(format!("{name}.mfb")))?;
+        let arena = ArenaPlan::plan(&model)?;
+        let esp = sim::mcu::by_name("ESP32").unwrap();
+        let compiled = CompiledModel::compile(&model, CompileOptions::default())?;
+        let mf = sim::memory_model::microflow_footprint(&compiled, esp);
+        let tf = sim::memory_model::tflm_footprint(&model, &arena, esp);
+        Ok(1.0 - mf.flash as f64 / tf.flash as f64)
+    };
+    let (s_sine, s_speech, s_person) = (saving("sine")?, saving("speech")?, saving("person")?);
+    println!("Flash saving narrows: sine {:.0}% > speech {:.0}% > person {:.0}%",
+        s_sine * 100.0, s_speech * 100.0, s_person * 100.0);
+    assert!(s_sine > s_speech && s_speech > s_person, "gap must narrow with model size (paper)");
+    println!("fig10_memory_models OK");
+    Ok(())
+}

@@ -1,0 +1,66 @@
+//! Fig. 9 — Flash and RAM for the sine predictor across all five MCUs
+//! (experiment E4 in DESIGN.md).
+//!
+//! Expected shape (paper Sec. 6.2.2): MicroFlow ~65% less Flash than TFLM
+//! on ESP32; MicroFlow RAM ~5.3 kB vs TFLM ~45.7 kB on nRF52840; MicroFlow
+//! runs on ALL five devices including the 8-bit ATmega328 (~13.6 kB Flash
+//! / ~1.7 kB RAM with paging); TFLM only on ESP32 + nRF52840.
+
+use microflow::compiler::plan::{CompileOptions, CompiledModel};
+use microflow::format::mfb::MfbModel;
+use microflow::interp::arena::ArenaPlan;
+use microflow::sim::report::{emit, Table};
+use microflow::sim::{self, Engine, MCUS};
+use microflow::util::fmt_kb;
+
+fn main() -> anyhow::Result<()> {
+    let art = microflow::artifacts_dir();
+    let model = MfbModel::load(art.join("sine.mfb"))?;
+    let arena = ArenaPlan::plan(&model)?;
+
+    let mut t = Table::new(
+        "Fig. 9 — sine predictor memory (Flash / RAM per MCU)",
+        &["mcu", "TFLM flash", "MF flash", "TFLM ram", "MF ram", "TFLM runs", "MF runs"],
+    );
+
+    let mut esp_flash = (0usize, 0usize);
+    let mut nrf_ram = (0usize, 0usize);
+    let mut mf_runs_everywhere = true;
+
+    for mcu in MCUS.iter() {
+        let paging = mcu.ram_bytes <= 4 * 1024;
+        let compiled = CompiledModel::compile(&model, CompileOptions { paging })?;
+        let mf = sim::memory_model::microflow_footprint(&compiled, mcu);
+        let tf = sim::memory_model::tflm_footprint(&model, &arena, mcu);
+        let mf_ok = sim::memory_model::fits(mcu, Engine::MicroFlow, mf).is_ok();
+        let tf_ok = sim::memory_model::fits(mcu, Engine::Tflm, tf).is_ok();
+        mf_runs_everywhere &= mf_ok;
+        if mcu.name == "ESP32" {
+            esp_flash = (tf.flash, mf.flash);
+        }
+        if mcu.name == "nRF52840" {
+            nrf_ram = (tf.ram, mf.ram);
+        }
+        t.row(vec![
+            mcu.name.into(),
+            fmt_kb(tf.flash),
+            fmt_kb(mf.flash),
+            fmt_kb(tf.ram),
+            fmt_kb(mf.ram),
+            if tf_ok { "yes" } else { "NO" }.into(),
+            if mf_ok { "yes" } else { "NO" }.into(),
+        ]);
+    }
+    emit("fig9_memory_sine", &t);
+
+    // paper-shape assertions
+    let flash_saving = 1.0 - esp_flash.1 as f64 / esp_flash.0 as f64;
+    println!("ESP32 Flash saving: {:.0}% (paper: ~65%)", flash_saving * 100.0);
+    assert!(flash_saving > 0.5, "MicroFlow must save most of the Flash on ESP32");
+    let ram_ratio = nrf_ram.0 as f64 / nrf_ram.1 as f64;
+    println!("nRF52840 RAM ratio TFLM/MF: {:.1}x (paper: 45.7/5.3 ≈ 8.6x)", ram_ratio);
+    assert!(ram_ratio > 4.0, "TFLM RAM must dwarf MicroFlow's on the sine model");
+    assert!(mf_runs_everywhere, "MicroFlow must fit all five devices (paper)");
+    println!("fig9_memory_sine OK");
+    Ok(())
+}

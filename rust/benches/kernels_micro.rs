@@ -1,0 +1,124 @@
+//! Kernel micro-benchmarks (experiment E11 in DESIGN.md) — real
+//! host-measured wall-clock for the hot-path kernels in both arithmetic
+//! variants, at the layer shapes of the three paper models.
+//!
+//! This is also the §Perf harness: the perf pass iterates on these numbers
+//! (EXPERIMENTS.md records before/after).
+
+use microflow::bench_support::{black_box, report_line, time_iters};
+use microflow::format::mfb::Padding;
+use microflow::kernels::view::ConvGeometry;
+use microflow::kernels::{conv2d, depthwise_conv2d, fully_connected};
+use microflow::sim::report::{emit, Table};
+use microflow::tensor::fixedpoint::FixedPointMultiplier;
+use microflow::tensor::quant::{FusedAct, PreComputed};
+use microflow::util::{fmt_time, Prng};
+
+fn main() {
+    let mut rng = Prng::new(3);
+    let mut t = Table::new(
+        "kernel micro-benches (host wall-clock, median of 200)",
+        &["kernel", "shape", "microflow", "tflm-interp", "ratio"],
+    );
+
+    // --- FullyConnected at the speech classifier shape (4000 -> 4) and the
+    //     sine shapes (16 -> 16)
+    for (k, n, label) in [(16usize, 16usize, "sine fc"), (4000, 4, "speech fc"), (256, 128, "generic fc")] {
+        let x = rng.i8_vec(k);
+        let w = rng.i8_vec(k * n);
+        let b = rng.i32_vec(n, -1000, 1000);
+        let colsum: Vec<i32> = (0..n).map(|j| (0..k).map(|i| w[i * n + j] as i32).sum()).collect();
+        let pc = PreComputed::fold(&b, &colsum, k, 0.05, 3, 0.02, 0, 0.001, 0, 0.08, -5, FusedAct::Relu);
+        let m = FixedPointMultiplier::from_real(0.05 * 0.02 / 0.08);
+        let mut out = vec![0i8; n];
+        let s_mf = time_iters(10, 200, || {
+            fully_connected::fully_connected_microflow(&x, &w, k, n, &pc, &mut out);
+            black_box(&out);
+        });
+        let s_tf = time_iters(10, 200, || {
+            fully_connected::fully_connected_interp(&x, &w, &b, k, n, 3, 0, m, -5, -128, 127, &mut out);
+            black_box(&out);
+        });
+        println!("{}", report_line(&format!("fc {label} ({k}x{n}) microflow"), &s_mf));
+        println!("{}", report_line(&format!("fc {label} ({k}x{n}) interp"), &s_tf));
+        t.row(vec![
+            "fully_connected".into(),
+            format!("{k}x{n}"),
+            fmt_time(s_mf.median),
+            fmt_time(s_tf.median),
+            format!("{:.2}x", s_tf.median / s_mf.median),
+        ]);
+    }
+
+    // --- DepthwiseConv2D at the TinyConv shape (49x40x1, k10x8, s2, mult 8)
+    {
+        let geo = ConvGeometry::new(49, 40, 1, 10, 8, 2, 2, Padding::Same);
+        let cout = 8;
+        let x = rng.i8_vec(49 * 40);
+        let w = rng.i8_vec(80 * cout);
+        let b = rng.i32_vec(cout, -500, 500);
+        let colsum: Vec<i32> = (0..cout).map(|co| (0..80).map(|t| w[t * cout + co] as i32).sum()).collect();
+        let pc = PreComputed::fold(&b, &colsum, 80, 0.05, -128, 0.02, 0, 0.001, 0, 0.1, -128, FusedAct::Relu);
+        let m = FixedPointMultiplier::from_real(0.05 * 0.02 / 0.1);
+        let mut view = vec![0i8; 80];
+        let mut out = vec![0i8; 25 * 20 * cout];
+        let w_t = depthwise_conv2d::transpose_filters(&w, 80, cout);
+        let s_mf = time_iters(5, 200, || {
+            depthwise_conv2d::depthwise_conv2d_microflow(&x, &w_t, &geo, 8, -128, &pc, &mut view, &mut out);
+            black_box(&out);
+        });
+        let s_tf = time_iters(5, 200, || {
+            depthwise_conv2d::depthwise_conv2d_interp(
+                &x, &w, &b, &geo, 8, -128, 0, m, -128, -128, 127, &mut view, &mut out,
+            );
+            black_box(&out);
+        });
+        println!("{}", report_line("dwconv speech (49x40, k10x8, m8) microflow", &s_mf));
+        println!("{}", report_line("dwconv speech (49x40, k10x8, m8) interp", &s_tf));
+        t.row(vec![
+            "depthwise_conv2d".into(),
+            "49x40x1 k10x8 m8".into(),
+            fmt_time(s_mf.median),
+            fmt_time(s_tf.median),
+            format!("{:.2}x", s_tf.median / s_mf.median),
+        ]);
+    }
+
+    // --- Conv2D at a MobileNet pointwise shape (6x6x128 -> 128) and the
+    //     first-layer shape (96x96x1, k3, s2 -> 8)
+    for (h, w_, cin, cout, kk, stride, label) in
+        [(6usize, 6usize, 128usize, 128usize, 1usize, 1usize, "pw 6x6x128"), (96, 96, 1, 8, 3, 2, "first 96x96")]
+    {
+        let geo = ConvGeometry::new(h, w_, cin, kk, kk, stride, stride, Padding::Same);
+        let x = rng.i8_vec(h * w_ * cin);
+        let f = rng.i8_vec(cout * kk * kk * cin);
+        let b = rng.i32_vec(cout, -500, 500);
+        let kkc = kk * kk * cin;
+        let colsum: Vec<i32> =
+            (0..cout).map(|co| f[co * kkc..(co + 1) * kkc].iter().map(|&v| v as i32).sum()).collect();
+        let pc = PreComputed::fold(&b, &colsum, kkc, 0.05, -3, 0.02, 0, 0.001, 0, 0.08, 4, FusedAct::Relu6);
+        let m = FixedPointMultiplier::from_real(0.05 * 0.02 / 0.08);
+        let mut view = vec![0i8; kkc];
+        let mut out = vec![0i8; geo.out_h * geo.out_w * cout];
+        let s_mf = time_iters(5, 200, || {
+            conv2d::conv2d_microflow(&x, &f, &geo, cout, -3, &pc, &mut view, &mut out);
+            black_box(&out);
+        });
+        let s_tf = time_iters(5, 200, || {
+            conv2d::conv2d_interp(&x, &f, &b, &geo, cout, -3, 0, m, 4, -128, 127, &mut view, &mut out);
+            black_box(&out);
+        });
+        println!("{}", report_line(&format!("conv {label} microflow"), &s_mf));
+        println!("{}", report_line(&format!("conv {label} interp"), &s_tf));
+        t.row(vec![
+            "conv2d".into(),
+            label.into(),
+            fmt_time(s_mf.median),
+            fmt_time(s_tf.median),
+            format!("{:.2}x", s_tf.median / s_mf.median),
+        ]);
+    }
+
+    emit("kernels_micro", &t);
+    println!("kernels_micro OK");
+}

@@ -1,0 +1,84 @@
+//! Table 5 — accuracy of MicroFlow vs the TFLM-like interpreter on the
+//! three models (experiment E3 in DESIGN.md).
+//!
+//! Protocol exactly as the paper (Sec. 6.2.1): sine on 1000 noisy samples
+//! with MSE/RMSE against the true function; speech on 1236 samples with
+//! macro-averaged Precision/Recall/F1; person on 406 samples with
+//! positive-class Precision/Recall/F1.
+//!
+//! Expected shape (paper Table 5): the two engines are on par, differing
+//! only through the ±1 requantization rounding.
+
+use microflow::compiler::plan::CompileOptions;
+use microflow::engine::MicroFlowEngine;
+use microflow::eval::accuracy::{evaluate_classifier, evaluate_sine};
+use microflow::format::mds::MdsDataset;
+use microflow::interp::resolver::OpResolver;
+use microflow::interp::Interpreter;
+use microflow::sim::report::{emit, Table};
+
+fn pct(v: f64) -> String {
+    format!("{:.3}%", v * 100.0)
+}
+
+fn main() -> anyhow::Result<()> {
+    let art = microflow::artifacts_dir();
+    anyhow::ensure!(art.join("sine.mfb").exists(), "run `make artifacts` first");
+
+    let engines = |name: &str| -> anyhow::Result<(MicroFlowEngine, Interpreter)> {
+        let path = art.join(format!("{name}.mfb"));
+        let e = MicroFlowEngine::load(&path, CompileOptions::default())?;
+        let bytes = std::fs::read(&path)?;
+        let i = Interpreter::new(&bytes, &OpResolver::with_all_kernels())?;
+        Ok((e, i))
+    };
+
+    // --- sine ---
+    let ds = MdsDataset::load(art.join("sine_test.mds"))?;
+    let (mut mf, mut tf) = engines("sine")?;
+    let s_mf = evaluate_sine(&mut mf, &ds)?;
+    let s_tf = evaluate_sine(&mut tf, &ds)?;
+    let mut t = Table::new(
+        "Table 5 (left) — sine predictor, MSE/RMSE vs true sin(x), n=1000",
+        &["metric", "TFLM(interp)", "MicroFlow", "paper TFLM", "paper MicroFlow"],
+    );
+    t.row(vec!["MSE".into(), format!("{:.4}", s_tf.mse), format!("{:.4}", s_mf.mse), "0.0157".into(), "0.0154".into()]);
+    t.row(vec!["RMSE".into(), format!("{:.4}", s_tf.rmse), format!("{:.4}", s_mf.rmse), "0.1253".into(), "0.1241".into()]);
+    emit("table5_sine", &t);
+    assert!((s_mf.mse - s_tf.mse).abs() < 0.005, "engines must be on par (sine)");
+
+    // --- speech (macro-averaged over 4 classes) ---
+    let ds = MdsDataset::load(art.join("speech_test.mds"))?;
+    let (mut mf, mut tf) = engines("speech")?;
+    let c_mf = evaluate_classifier(&mut mf, &ds, 4, true)?;
+    let c_tf = evaluate_classifier(&mut tf, &ds, 4, true)?;
+    let mut t = Table::new(
+        "Table 5 (middle) — speech command recognizer, macro P/R/F1, n=1236",
+        &["metric", "TFLM(interp)", "MicroFlow", "paper TFLM", "paper MicroFlow"],
+    );
+    t.row(vec!["Precision".into(), pct(c_tf.precision), pct(c_mf.precision), "91.737%".into(), "91.638%".into()]);
+    t.row(vec!["Recall".into(), pct(c_tf.recall), pct(c_mf.recall), "88.611%".into(), "88.972%".into()]);
+    t.row(vec!["F1".into(), pct(c_tf.f1), pct(c_mf.f1), "90.147%".into(), "90.285%".into()]);
+    emit("table5_speech", &t);
+    assert!((c_mf.f1 - c_tf.f1).abs() < 0.02, "engines must be on par (speech)");
+
+    // --- person (positive class) ---
+    let ds = MdsDataset::load(art.join("person_test.mds"))?;
+    let (mut mf, mut tf) = engines("person")?;
+    let p_mf = evaluate_classifier(&mut mf, &ds, 2, false)?;
+    let p_tf = evaluate_classifier(&mut tf, &ds, 2, false)?;
+    let mut t = Table::new(
+        "Table 5 (right) — person detector, P/R/F1, n=406",
+        &["metric", "TFLM(interp)", "MicroFlow", "paper TFLM", "paper MicroFlow"],
+    );
+    t.row(vec!["Precision".into(), pct(p_tf.precision), pct(p_mf.precision), "71.843%".into(), "72.003%".into()]);
+    t.row(vec!["Recall".into(), pct(p_tf.recall), pct(p_mf.recall), "85.382%".into(), "85.401%".into()]);
+    t.row(vec!["F1".into(), pct(p_tf.f1), pct(p_mf.f1), "78.030%".into(), "78.132%".into()]);
+    emit("table5_person", &t);
+    assert!((p_mf.f1 - p_tf.f1).abs() < 0.03, "engines must be on par (person)");
+
+    // the paper's ordering: speech scores above person (harder task)
+    assert!(c_mf.f1 > p_mf.f1, "speech should outscore person, as in the paper");
+    println!("table5_accuracy OK");
+    Ok(())
+}

@@ -1,0 +1,71 @@
+//! Bench harness (DESIGN.md S21) — criterion is unavailable offline, so
+//! this provides what the figure/table benches need, matching the paper's
+//! own protocol: N timed iterations (default 100), median + 95% interval
+//! (Sec. 6.2.3).
+
+use std::time::Instant;
+
+use crate::util::stats::Summary;
+use crate::util::{fmt_time, Prng};
+
+/// Time `iters` runs of `f` (after `warmup` runs) and summarize seconds.
+pub fn time_iters<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Summary {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    Summary::from(&samples)
+}
+
+/// Paper protocol: 100 iterations, median + 95% interval.
+pub fn paper_protocol<F: FnMut()>(f: F) -> Summary {
+    time_iters(3, 100, f)
+}
+
+/// One printed bench line: `name  median [p2.5, p97.5]`.
+pub fn report_line(name: &str, s: &Summary) -> String {
+    format!(
+        "{name:40} median {:>12} [{} .. {}]",
+        fmt_time(s.median),
+        fmt_time(s.p2_5),
+        fmt_time(s.p97_5)
+    )
+}
+
+/// Deterministic random quantized inputs for kernel benches.
+pub fn random_inputs(seed: u64, n: usize) -> Vec<i8> {
+    Prng::new(seed).i8_vec(n)
+}
+
+/// Guard against the optimizer deleting benched work.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_summary_has_iters() {
+        let s = time_iters(1, 10, || {
+            black_box((0..100).sum::<u64>());
+        });
+        assert_eq!(s.n, 10);
+        assert!(s.median >= 0.0);
+        assert!(s.p2_5 <= s.p97_5);
+    }
+
+    #[test]
+    fn report_line_contains_name() {
+        let s = Summary::from(&[0.001, 0.002, 0.003]);
+        let line = report_line("demo", &s);
+        assert!(line.contains("demo") && line.contains("median"));
+    }
+}

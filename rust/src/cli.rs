@@ -1,0 +1,111 @@
+//! Hand-rolled CLI (clap is unavailable offline — DESIGN.md §7).
+//!
+//! Subcommands of the `microflow` binary:
+//!
+//! * `models`            — Table-3 style inventory from the artifacts;
+//! * `predict <model>`   — run one inference on a dataset sample;
+//! * `verify <model>`    — golden-vector cross-check of all engines;
+//! * `deploy <model> <mcu>` — simulate a deployment: memory fit, timing,
+//!   energy on one Table-4 device;
+//! * `serve <model>`     — spin up the coordinator under synthetic load.
+
+use std::collections::HashMap;
+
+/// Parsed command line: positional args + `--key value` / `--flag` options.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: HashMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (without argv[0]).
+    pub fn parse(raw: impl IntoIterator<Item = String>) -> Args {
+        let mut args = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                // `--key=value`, `--key value`, or boolean `--flag`
+                if let Some((k, v)) = key.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    args.options.insert(key.to_string(), it.next().unwrap());
+                } else {
+                    args.flags.push(key.to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        args
+    }
+
+    pub fn from_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_usize(&self, name: &str, default: usize) -> usize {
+        self.opt(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn opt_f64(&self, name: &str, default: f64) -> f64 {
+        self.opt(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+pub const USAGE: &str = "\
+microflow — MicroFlow (Carnelos et al., 2024) reproduction CLI
+
+USAGE:
+  microflow models                         list model inventory (Table 3)
+  microflow predict <model> [--index N]    run one inference on a test sample
+  microflow verify  <model>                golden cross-check of all engines
+  microflow deploy  <model> <mcu> [--paging] [--engine microflow|tflm]
+                                           simulate a Table-4 deployment
+  microflow serve   <model> [--requests N] [--rate RPS] [--backend ...]
+                                           serve synthetic load, print metrics
+  microflow help                           this text
+
+Models: sine | speech | person (built by `make artifacts`)
+MCUs:   ESP32 | ATSAMV71 | nRF52840 | LM3S6965 | ATmega328
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn positional_and_options() {
+        let a = parse("deploy sine ESP32 --engine tflm --paging");
+        assert_eq!(a.positional, vec!["deploy", "sine", "ESP32"]);
+        assert_eq!(a.opt("engine"), Some("tflm"));
+        assert!(a.flag("paging"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("serve speech --rate=100 --requests 500");
+        assert_eq!(a.opt_f64("rate", 0.0), 100.0);
+        assert_eq!(a.opt_usize("requests", 0), 500);
+    }
+
+    #[test]
+    fn defaults_when_missing() {
+        let a = parse("models");
+        assert_eq!(a.opt_usize("index", 7), 7);
+        assert!(!a.flag("paging"));
+    }
+}

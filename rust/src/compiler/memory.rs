@@ -1,0 +1,163 @@
+//! Static memory planning (paper Sec. 4.1-4.2; DESIGN.md S7).
+//!
+//! MicroFlow allocates everything on the stack: during execution the live
+//! set at operator `i` is `input_i + output_i + scratch_i` (+ the folded
+//! constants, which live in Flash/rodata, not RAM). The engine therefore
+//! needs exactly two ping-pong activation buffers sized by the largest
+//! activations, plus the largest scratch — and the **peak** over operators
+//! is the device's RAM high-water mark (what Fig. 9/10 plot for MicroFlow).
+//!
+//! Contrast with the TFLM arena ([`crate::interp::arena`]): sized for the
+//! worst case, allocated for the whole lifetime, never freed.
+
+use super::plan::Step;
+
+/// Per-step memory accounting (bytes).
+#[derive(Clone, Debug, PartialEq)]
+pub struct StepMemory {
+    pub op: &'static str,
+    pub input: usize,
+    pub output: usize,
+    pub scratch: usize,
+}
+
+impl StepMemory {
+    pub fn live(&self) -> usize {
+        self.input + self.output + self.scratch
+    }
+}
+
+/// The static memory plan for a compiled model.
+#[derive(Clone, Debug)]
+pub struct MemoryPlan {
+    pub per_step: Vec<StepMemory>,
+    /// RAM high-water mark across the inference (bytes): the MicroFlow
+    /// number in the paper's RAM plots.
+    pub peak: usize,
+    /// Index of the peak step.
+    pub peak_step: usize,
+    /// Sizes of the two ping-pong buffers the executor allocates.
+    pub buf_a: usize,
+    pub buf_b: usize,
+    /// Largest kernel scratch (view/page buffer).
+    pub scratch: usize,
+}
+
+impl MemoryPlan {
+    /// Analyze a step sequence.
+    pub fn analyze(steps: &[Step]) -> MemoryPlan {
+        let mut per_step = Vec::with_capacity(steps.len());
+        let mut peak = 0usize;
+        let mut peak_step = 0usize;
+        // ping-pong: even steps read A write B, odd steps read B write A;
+        // reshape is free (same buffer reinterpreted)
+        let mut buf_a = 0usize;
+        let mut buf_b = 0usize;
+        let mut scratch = 0usize;
+        let mut reads_a = true;
+        for (i, s) in steps.iter().enumerate() {
+            let m = StepMemory {
+                op: s.kind.name(),
+                input: s.in_len,
+                output: if matches!(s.kind, super::plan::StepKind::Reshape) { 0 } else { s.out_len },
+                scratch: s.scratch_len,
+            };
+            if m.live() > peak {
+                peak = m.live();
+                peak_step = i;
+            }
+            if matches!(s.kind, super::plan::StepKind::Reshape) {
+                // in-place: no buffer flip, no new allocation
+                per_step.push(m);
+                continue;
+            }
+            if reads_a {
+                buf_a = buf_a.max(s.in_len);
+                buf_b = buf_b.max(s.out_len);
+            } else {
+                buf_b = buf_b.max(s.in_len);
+                buf_a = buf_a.max(s.out_len);
+            }
+            scratch = scratch.max(s.scratch_len);
+            reads_a = !reads_a;
+            per_step.push(m);
+        }
+        MemoryPlan { per_step, peak, peak_step, buf_a, buf_b, scratch }
+    }
+
+    /// Total bytes the executor actually allocates (ping-pong + scratch).
+    pub fn executor_bytes(&self) -> usize {
+        self.buf_a + self.buf_b + self.scratch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::format::mfb::Padding;
+    use crate::kernels::view::ConvGeometry;
+    use crate::compiler::plan::{Step, StepKind};
+    use crate::tensor::quant::{FusedAct, PreComputed};
+
+    fn fc_step(k: usize, n: usize) -> Step {
+        let pc = PreComputed::fold(
+            &vec![0; n],
+            &vec![0; n],
+            k,
+            0.1,
+            0,
+            0.1,
+            0,
+            0.01,
+            0,
+            0.1,
+            0,
+            FusedAct::None,
+        );
+        Step {
+            kind: StepKind::FullyConnected { k, n, weights: vec![0; k * n], pc, paged: false },
+            in_len: k,
+            out_len: n,
+            scratch_len: 0,
+        }
+    }
+
+    #[test]
+    fn peak_is_biggest_live_set() {
+        let steps = vec![fc_step(10, 100), fc_step(100, 4)];
+        let plan = MemoryPlan::analyze(&steps);
+        assert_eq!(plan.peak, 110);
+        assert_eq!(plan.peak_step, 0);
+        // ping-pong sizing: A holds inputs of even steps + outputs of odd
+        assert_eq!(plan.buf_a, 10.max(4));
+        assert_eq!(plan.buf_b, 100);
+    }
+
+    #[test]
+    fn reshape_is_free() {
+        let mut steps = vec![fc_step(8, 8)];
+        steps.push(Step { kind: StepKind::Reshape, in_len: 8, out_len: 8, scratch_len: 0 });
+        steps.push(fc_step(8, 2));
+        let plan = MemoryPlan::analyze(&steps);
+        // reshape contributes no output copy
+        assert_eq!(plan.per_step[1].output, 0);
+        // second FC still reads buffer B (no flip on reshape)
+        assert_eq!(plan.buf_a, 8);
+        assert_eq!(plan.buf_b, 8);
+    }
+
+    #[test]
+    fn conv_scratch_counts_toward_peak() {
+        let geo = ConvGeometry::new(8, 8, 4, 3, 3, 1, 1, Padding::Same);
+        let pc = PreComputed::fold(&[0], &[0], 36, 0.1, 0, 0.1, 0, 0.01, 0, 0.1, 0, FusedAct::None);
+        let step = Step {
+            kind: StepKind::Conv2D { geo, c_out: 1, filters: vec![0; 36], z_x: 0, pc },
+            in_len: 8 * 8 * 4,
+            out_len: 8 * 8,
+            scratch_len: 36,
+        };
+        let plan = MemoryPlan::analyze(&[step]);
+        assert_eq!(plan.peak, 256 + 64 + 36);
+        assert_eq!(plan.scratch, 36);
+    }
+}

@@ -1,0 +1,30 @@
+//! The MicroFlow Compiler (paper Sec. 3.3; DESIGN.md S5-S8).
+//!
+//! Pipeline (Fig. 2/4 of the paper):
+//!
+//! ```text
+//! MFB bytes ──parse──▶ MfbModel (lossless IR) ──preprocess──▶ folded
+//! constants (Eq. 4/7/10/13) ──plan──▶ ExecutionPlan + MemoryPlan (+
+//! PagePlan when paging is requested)
+//! ```
+//!
+//! The paper runs this inside a procedural macro at `rustc` time; here the
+//! identical pipeline runs once at model load, producing an immutable
+//! [`plan::CompiledModel`] (see DESIGN.md §4 for why this substitution
+//! preserves the compile-time/run-time split: all shape checks, constant
+//! folding and memory sizing happen *before* the first inference, and the
+//! per-inference work is exactly the generated-code equivalent).
+//!
+//! Everything the runtime does not need — tensor names, operator versions,
+//! metadata, the serialized container itself — is dropped here; the
+//! interpreter baseline ([`crate::interp`]) keeps all of it, which is the
+//! memory story of Fig. 9/10.
+
+pub mod memory;
+pub mod paging;
+pub mod plan;
+pub mod preprocess;
+
+pub use memory::MemoryPlan;
+pub use paging::PagePlan;
+pub use plan::{CompiledModel, CompileOptions, Step, StepKind};

@@ -1,0 +1,96 @@
+//! Paging planner (paper Sec. 4.3, Fig. 6; DESIGN.md S8).
+//!
+//! A *page* holds everything needed to produce **one output neuron** of a
+//! FullyConnected layer: its K weights, its bias/constants, and the working
+//! accumulator. Pages are staged Flash→RAM one at a time, trading time for
+//! a working set small enough for a 2 kB device (ATmega328).
+//!
+//! RAM accounting follows the paper's own costing (footnote 13):
+//!
+//! * unpaged: `K*N` weight bytes + `4*K*N` accumulator bytes + `3*N`
+//!   (bias/input/output vectors) — ≈ 5 kB for the 32×32 example;
+//! * paged (N pages): `K + 4*K + 3` per page — 163 bytes for K = 32.
+
+/// Paging plan for the FullyConnected layers of a model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PagePlan {
+    /// Total pages across all paged layers (one per output neuron).
+    pub pages: usize,
+    /// Largest single-page RAM footprint (bytes, paper costing).
+    pub page_bytes: usize,
+    /// RAM the same layers would need unpaged (paper costing).
+    pub unpaged_bytes: usize,
+}
+
+impl PagePlan {
+    /// Plan one FC layer of shape `[K, N]`.
+    pub fn for_fully_connected(k: usize, n: usize) -> PagePlan {
+        PagePlan {
+            pages: n,
+            page_bytes: Self::paged_ram(k),
+            unpaged_bytes: Self::unpaged_ram(k, n),
+        }
+    }
+
+    /// Paper footnote-13 unpaged costing: weights + int32 accumulators +
+    /// bias/input/output vectors.
+    pub fn unpaged_ram(k: usize, n: usize) -> usize {
+        k * n + 4 * k * n + 3 * n
+    }
+
+    /// Paper paged costing: one page of weights + its accumulators + the
+    /// three per-neuron scalars.
+    pub fn paged_ram(k: usize) -> usize {
+        k + 4 * k + 3
+    }
+
+    /// Combine with another layer's plan (a model may page several layers).
+    pub fn merge(self, other: PagePlan) -> PagePlan {
+        PagePlan {
+            pages: self.pages + other.pages,
+            page_bytes: self.page_bytes.max(other.page_bytes),
+            unpaged_bytes: self.unpaged_bytes.max(other.unpaged_bytes),
+        }
+    }
+
+    /// Paging slowdown model: each page staging costs one pass over K
+    /// weight bytes of Flash reads that the unpaged kernel amortizes.
+    /// Returns the multiplicative execution-time factor (≥ 1).
+    pub fn slowdown_factor(&self) -> f64 {
+        // staging a page touches every weight byte once more than the
+        // streaming unpaged kernel: ~2x weight traffic on AVR-class parts
+        2.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reproduces_paper_footnote_13() {
+        // 32-neuron dense layer, 32 inputs: ~5 kB unpaged ...
+        let unpaged = PagePlan::unpaged_ram(32, 32);
+        assert_eq!(unpaged, 32 * 32 + 4 * 32 * 32 + 3 * 32); // 5216 ≈ 5 kB
+        assert!(unpaged > 5000 && unpaged < 5500);
+        // ... and exactly 163 bytes per page
+        assert_eq!(PagePlan::paged_ram(32), 163);
+    }
+
+    #[test]
+    fn paged_fits_atmega_unpaged_does_not() {
+        const ATMEGA_RAM: usize = 2048;
+        let plan = PagePlan::for_fully_connected(32, 32);
+        assert!(plan.unpaged_bytes > ATMEGA_RAM);
+        assert!(plan.page_bytes < ATMEGA_RAM);
+    }
+
+    #[test]
+    fn merge_takes_max_footprint_and_sums_pages() {
+        let a = PagePlan::for_fully_connected(32, 32);
+        let b = PagePlan::for_fully_connected(64, 8);
+        let m = a.merge(b);
+        assert_eq!(m.pages, 40);
+        assert_eq!(m.page_bytes, PagePlan::paged_ram(64));
+    }
+}

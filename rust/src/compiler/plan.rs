@@ -1,0 +1,447 @@
+//! Execution planning: MFB internal representation → static plan
+//! (paper Sec. 3.3; DESIGN.md S5).
+//!
+//! A [`CompiledModel`] is the runtime image the paper's proc-macro would
+//! have generated: a linear sequence of [`Step`]s with
+//!
+//! * all tensor shapes resolved (the const-generics of the paper),
+//! * all Eq. 4/7/10/13 constants folded ([`PreComputed`]),
+//! * weight payloads re-owned in kernel layout,
+//! * every name / version / option byte dropped,
+//! * a [`MemoryPlan`] giving the static buffer sizes.
+//!
+//! Single-path graphs only (the paper's models are chains); the parser
+//! validates that each operator consumes the previous operator's output.
+
+use anyhow::{bail, Context, Result};
+
+use super::memory::MemoryPlan;
+use super::paging::PagePlan;
+use super::preprocess;
+use crate::format::mfb::{MfbModel, OpCode, OpOptions, Padding};
+use crate::kernels::view::ConvGeometry;
+use crate::tensor::quant::{PreComputed, QParams};
+
+/// Compilation options.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CompileOptions {
+    /// Execute FullyConnected layers page-by-page (paper Sec. 4.3). Slower
+    /// but shrinks the working set to one page (for 2 kB-RAM devices).
+    pub paging: bool,
+}
+
+/// One executable step.
+#[derive(Clone, Debug)]
+pub struct Step {
+    pub kind: StepKind,
+    /// Input / output activation element counts (per sample).
+    pub in_len: usize,
+    pub out_len: usize,
+    /// Scratch bytes the kernel needs (view buffer / page buffer).
+    pub scratch_len: usize,
+}
+
+/// Step payload: everything the kernel call needs, nothing else.
+#[derive(Clone, Debug)]
+pub enum StepKind {
+    FullyConnected {
+        k: usize,
+        n: usize,
+        weights: Vec<i8>,
+        pc: PreComputed,
+        paged: bool,
+    },
+    Conv2D {
+        geo: ConvGeometry,
+        c_out: usize,
+        filters: Vec<i8>,
+        z_x: i8,
+        pc: PreComputed,
+    },
+    DepthwiseConv2D {
+        geo: ConvGeometry,
+        depth_multiplier: usize,
+        filters: Vec<i8>,
+        z_x: i8,
+        pc: PreComputed,
+    },
+    AveragePool2D {
+        geo: ConvGeometry,
+        z_x: i8,
+        ratio: f32,
+        z_y: i32,
+        act_min: i8,
+        act_max: i8,
+    },
+    /// Pure re-interpretation of the buffer; no data movement at runtime.
+    Reshape,
+    Softmax {
+        s_x: f32,
+        z_x: i32,
+        s_y: f32,
+        z_y: i32,
+    },
+    Relu {
+        s_x: f32,
+        z_x: i32,
+        s_y: f32,
+        z_y: i32,
+    },
+    Relu6 {
+        s_x: f32,
+        z_x: i32,
+        s_y: f32,
+        z_y: i32,
+    },
+}
+
+impl StepKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            StepKind::FullyConnected { .. } => "FullyConnected",
+            StepKind::Conv2D { .. } => "Conv2D",
+            StepKind::DepthwiseConv2D { .. } => "DepthwiseConv2D",
+            StepKind::AveragePool2D { .. } => "AveragePool2D",
+            StepKind::Reshape => "Reshape",
+            StepKind::Softmax { .. } => "Softmax",
+            StepKind::Relu { .. } => "Relu",
+            StepKind::Relu6 { .. } => "Relu6",
+        }
+    }
+
+    /// Multiply-accumulate count per inference (the sim cost driver).
+    pub fn macs(&self, out_len: usize) -> u64 {
+        match self {
+            StepKind::FullyConnected { k, n, .. } => (*k as u64) * (*n as u64),
+            StepKind::Conv2D { geo, c_out, .. } => {
+                (geo.out_h * geo.out_w * c_out * geo.k_h * geo.k_w * geo.in_c) as u64
+            }
+            StepKind::DepthwiseConv2D { geo, depth_multiplier, .. } => {
+                (geo.out_h * geo.out_w * geo.in_c * depth_multiplier * geo.k_h * geo.k_w) as u64
+            }
+            StepKind::AveragePool2D { geo, .. } => {
+                (geo.out_h * geo.out_w * geo.in_c * geo.k_h * geo.k_w) as u64
+            }
+            StepKind::Softmax { .. } | StepKind::Relu { .. } | StepKind::Relu6 { .. } => {
+                out_len as u64
+            }
+            StepKind::Reshape => 0,
+        }
+    }
+
+    /// Weight bytes carried by this step (Flash cost).
+    pub fn weight_bytes(&self) -> usize {
+        match self {
+            StepKind::FullyConnected { weights, pc, .. } => weights.len() + pc.const_bias.len() * 4,
+            StepKind::Conv2D { filters, pc, .. } => filters.len() + pc.const_bias.len() * 4,
+            StepKind::DepthwiseConv2D { filters, pc, .. } => {
+                filters.len() + pc.const_bias.len() * 4
+            }
+            _ => 0,
+        }
+    }
+}
+
+/// A compiled model: the MicroFlow Runtime's entire world.
+#[derive(Clone, Debug)]
+pub struct CompiledModel {
+    pub steps: Vec<Step>,
+    pub input_shape: Vec<usize>,
+    pub output_shape: Vec<usize>,
+    pub input_qparams: QParams,
+    pub output_qparams: QParams,
+    pub memory: MemoryPlan,
+    pub page_plan: Option<PagePlan>,
+    pub options: CompileOptions,
+}
+
+impl CompiledModel {
+    /// Run the full compiler pipeline on a parsed model.
+    pub fn compile(model: &MfbModel, options: CompileOptions) -> Result<CompiledModel> {
+        if model.graph_inputs.len() != 1 || model.graph_outputs.len() != 1 {
+            bail!("only single-input single-output graphs are supported");
+        }
+        let mut steps = Vec::with_capacity(model.operators.len());
+        let mut cur_tensor = model.graph_inputs[0];
+        let mut page_plan: Option<PagePlan> = None;
+
+        for (oi, op) in model.operators.iter().enumerate() {
+            let (want_in, _) = preprocess::expected_arity(op.opcode);
+            if op.inputs.len() != want_in {
+                bail!("op #{oi} {}: expected {want_in} inputs, got {}", op.opcode.name(), op.inputs.len());
+            }
+            let x_idx = op.input(0)?;
+            if x_idx != cur_tensor {
+                bail!(
+                    "op #{oi} {}: non-chain graph (input tensor {x_idx}, expected {cur_tensor})",
+                    op.opcode.name()
+                );
+            }
+            let x_t = &model.tensors[x_idx];
+            let y_idx = op.output(0)?;
+            let y_t = &model.tensors[y_idx];
+            let in_len: usize = x_t.dims.iter().product();
+            let out_len: usize = y_t.dims.iter().product();
+            let act = preprocess::fused_act_of(op)?;
+
+            let (kind, scratch_len) = match op.opcode {
+                OpCode::FullyConnected => {
+                    let w_t = &model.tensors[op.input(1)?];
+                    let b_t = &model.tensors[op.input(2)?];
+                    let pc = preprocess::preprocess_fully_connected(x_t, w_t, b_t, y_t, act)
+                        .with_context(|| format!("op #{oi}"))?;
+                    let (k, n) = (w_t.dims[0], w_t.dims[1]);
+                    if in_len != k || out_len != n {
+                        bail!("op #{oi} FC: shape mismatch in={in_len} k={k} out={out_len} n={n}");
+                    }
+                    let paged = options.paging;
+                    if paged {
+                        let plan = PagePlan::for_fully_connected(k, n);
+                        page_plan = Some(match page_plan.take() {
+                            Some(p) => p.merge(plan),
+                            None => plan,
+                        });
+                    }
+                    let scratch = if paged { k } else { 0 };
+                    (
+                        StepKind::FullyConnected { k, n, weights: w_t.data_i8()?, pc, paged },
+                        scratch,
+                    )
+                }
+                OpCode::Conv2D => {
+                    let f_t = &model.tensors[op.input(1)?];
+                    let b_t = &model.tensors[op.input(2)?];
+                    let (stride, padding) = match op.options {
+                        OpOptions::Conv2D { stride, padding, .. } => (stride, padding),
+                        _ => bail!("op #{oi}: bad Conv2D options"),
+                    };
+                    let [c_out, kh, kw, c_in] = f_t.dims[..] else {
+                        bail!("op #{oi}: Conv2D filters must be 4-D");
+                    };
+                    let [_, h, w, ci2] = x_t.dims[..] else {
+                        bail!("op #{oi}: Conv2D input must be [1,H,W,C]");
+                    };
+                    if ci2 != c_in {
+                        bail!("op #{oi}: Conv2D Cin mismatch {ci2} vs {c_in}");
+                    }
+                    let geo = ConvGeometry::new(h, w, c_in, kh, kw, stride.0, stride.1, padding);
+                    check_out_dims(oi, &y_t.dims, geo.out_h, geo.out_w, c_out)?;
+                    let pc = preprocess::preprocess_conv2d(x_t, f_t, b_t, y_t, act)?;
+                    let scratch = geo.k_h * geo.k_w * geo.in_c;
+                    (
+                        StepKind::Conv2D {
+                            geo,
+                            c_out,
+                            filters: f_t.data_i8()?,
+                            z_x: x_t.qparams.zero_point as i8,
+                            pc,
+                        },
+                        scratch,
+                    )
+                }
+                OpCode::DepthwiseConv2D => {
+                    let w_t = &model.tensors[op.input(1)?];
+                    let b_t = &model.tensors[op.input(2)?];
+                    let (stride, padding, mult) = match op.options {
+                        OpOptions::DepthwiseConv2D { stride, padding, depth_multiplier, .. } => {
+                            (stride, padding, depth_multiplier)
+                        }
+                        _ => bail!("op #{oi}: bad DepthwiseConv2D options"),
+                    };
+                    let [_, kh, kw, c_out] = w_t.dims[..] else {
+                        bail!("op #{oi}: DW filters must be [1,KH,KW,Cout]");
+                    };
+                    let [_, h, w, c_in] = x_t.dims[..] else {
+                        bail!("op #{oi}: DW input must be [1,H,W,C]");
+                    };
+                    if c_out != c_in * mult {
+                        bail!("op #{oi}: DW Cout {c_out} != Cin {c_in} * mult {mult}");
+                    }
+                    let geo = ConvGeometry::new(h, w, c_in, kh, kw, stride.0, stride.1, padding);
+                    check_out_dims(oi, &y_t.dims, geo.out_h, geo.out_w, c_out)?;
+                    let pc = preprocess::preprocess_depthwise(x_t, w_t, b_t, y_t, act)?;
+                    let scratch = geo.k_h * geo.k_w * geo.in_c;
+                    // compile-time weight re-layout: [KH*KW, Cout] ->
+                    // [Cout, KH*KW] so the per-channel kernel streams its
+                    // filter contiguously (EXPERIMENTS.md §Perf)
+                    let filters = crate::kernels::depthwise_conv2d::transpose_filters(
+                        &w_t.data_i8()?,
+                        kh * kw,
+                        c_out,
+                    );
+                    (
+                        StepKind::DepthwiseConv2D {
+                            geo,
+                            depth_multiplier: mult,
+                            filters,
+                            z_x: x_t.qparams.zero_point as i8,
+                            pc,
+                        },
+                        scratch,
+                    )
+                }
+                OpCode::AveragePool2D => {
+                    let (filter, stride, padding) = match op.options {
+                        OpOptions::AveragePool2D { filter, stride, padding, .. } => {
+                            (filter, stride, padding)
+                        }
+                        _ => bail!("op #{oi}: bad AveragePool2D options"),
+                    };
+                    let [_, h, w, c] = x_t.dims[..] else {
+                        bail!("op #{oi}: pool input must be [1,H,W,C]");
+                    };
+                    let geo = ConvGeometry::new(h, w, c, filter.0, filter.1, stride.0, stride.1, padding);
+                    check_out_dims(oi, &y_t.dims, geo.out_h, geo.out_w, c)?;
+                    if padding == Padding::Same && (h % stride.0 != 0 || w % stride.1 != 0) {
+                        // the Eq. 13 constant 1/(mn) assumes full windows
+                        bail!("op #{oi}: SAME-padded AveragePool2D with partial windows unsupported");
+                    }
+                    let ratio = x_t.qparams.scale / y_t.qparams.scale;
+                    let (act_min, act_max) = act.bounds(y_t.qparams.scale, y_t.qparams.zero_point);
+                    let scratch = geo.k_h * geo.k_w * geo.in_c;
+                    (
+                        StepKind::AveragePool2D {
+                            geo,
+                            z_x: x_t.qparams.zero_point as i8,
+                            ratio,
+                            z_y: y_t.qparams.zero_point,
+                            act_min,
+                            act_max,
+                        },
+                        scratch,
+                    )
+                }
+                OpCode::Reshape => {
+                    if in_len != out_len {
+                        bail!("op #{oi}: reshape changes element count {in_len} -> {out_len}");
+                    }
+                    (StepKind::Reshape, 0)
+                }
+                OpCode::Softmax => (
+                    StepKind::Softmax {
+                        s_x: x_t.qparams.scale,
+                        z_x: x_t.qparams.zero_point,
+                        s_y: y_t.qparams.scale,
+                        z_y: y_t.qparams.zero_point,
+                    },
+                    0,
+                ),
+                OpCode::Relu => (
+                    StepKind::Relu {
+                        s_x: x_t.qparams.scale,
+                        z_x: x_t.qparams.zero_point,
+                        s_y: y_t.qparams.scale,
+                        z_y: y_t.qparams.zero_point,
+                    },
+                    0,
+                ),
+                OpCode::Relu6 => (
+                    StepKind::Relu6 {
+                        s_x: x_t.qparams.scale,
+                        z_x: x_t.qparams.zero_point,
+                        s_y: y_t.qparams.scale,
+                        z_y: y_t.qparams.zero_point,
+                    },
+                    0,
+                ),
+            };
+            steps.push(Step { kind, in_len, out_len, scratch_len });
+            cur_tensor = y_idx;
+        }
+        if cur_tensor != model.graph_outputs[0] {
+            bail!("graph output {} is not the last operator's output {cur_tensor}", model.graph_outputs[0]);
+        }
+
+        let memory = MemoryPlan::analyze(&steps);
+        Ok(CompiledModel {
+            steps,
+            input_shape: model.input_shape(),
+            output_shape: model.output_shape(),
+            input_qparams: model.input_qparams(),
+            output_qparams: model.output_qparams(),
+            memory,
+            page_plan,
+            options,
+        })
+    }
+
+    /// Per-sample input element count.
+    pub fn input_len(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+
+    pub fn output_len(&self) -> usize {
+        self.output_shape.iter().product()
+    }
+
+    /// Total MACs per inference (cost-model driver).
+    pub fn total_macs(&self) -> u64 {
+        self.steps.iter().map(|s| s.kind.macs(s.out_len)).sum()
+    }
+
+    /// Total weight + folded-constant bytes (the Flash payload).
+    pub fn weight_bytes(&self) -> usize {
+        self.steps.iter().map(|s| s.kind.weight_bytes()).sum()
+    }
+}
+
+fn check_out_dims(oi: usize, dims: &[usize], oh: usize, ow: usize, c: usize) -> Result<()> {
+    if dims != [1, oh, ow, c] {
+        bail!("op #{oi}: output dims {:?} don't match computed [1,{oh},{ow},{c}]", dims);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::format::mfb::MfbModel;
+
+    // reuse the hand-built tiny model from the format tests via a local copy
+    fn tiny() -> MfbModel {
+        MfbModel::parse(&crate::format::mfb::tests::tiny_mfb()).unwrap()
+    }
+
+    #[test]
+    fn compiles_tiny_fc_chain() {
+        let m = tiny();
+        let c = CompiledModel::compile(&m, CompileOptions::default()).unwrap();
+        assert_eq!(c.steps.len(), 1);
+        assert_eq!(c.input_len(), 2);
+        assert_eq!(c.output_len(), 3);
+        assert_eq!(c.total_macs(), 6);
+        match &c.steps[0].kind {
+            StepKind::FullyConnected { k, n, pc, paged, .. } => {
+                assert_eq!((*k, *n), (2, 3));
+                assert!(!paged);
+                // fused relu bounds: act_min == z_y == 0
+                assert_eq!(pc.act_min, 0);
+            }
+            other => panic!("unexpected step {other:?}"),
+        }
+    }
+
+    #[test]
+    fn paging_option_creates_page_plan() {
+        let m = tiny();
+        let c = CompiledModel::compile(&m, CompileOptions { paging: true }).unwrap();
+        let pp = c.page_plan.expect("page plan");
+        assert_eq!(pp.pages, 3); // one per output neuron
+        assert!(c.steps[0].scratch_len > 0);
+    }
+
+    #[test]
+    fn rejects_non_chain_graph() {
+        let mut m = tiny();
+        // corrupt: make the op consume tensor 1 (weights) as activation
+        m.operators[0].inputs[0] = 1;
+        assert!(CompiledModel::compile(&m, CompileOptions::default()).is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_graph_output() {
+        let mut m = tiny();
+        m.graph_outputs[0] = 0;
+        assert!(CompiledModel::compile(&m, CompileOptions::default()).is_err());
+    }
+}

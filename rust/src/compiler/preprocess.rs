@@ -1,0 +1,197 @@
+//! Pre-processing: fold every input-independent term of the quantized
+//! operator formulas into constants (paper Sec. 3.3.3; Eq. 4/7/10/13).
+//!
+//! For each weighted operator this computes, offline:
+//!
+//! * `const_bias[j] = z_Y + (s_b/s_Y)(b_q[j] - z_b)`   (float32)
+//! * `scale_ratio  = s_X s_W / s_Y`                    (float32)
+//! * `w_zp_term[j] = z_X * Σ_k W_q[k, j]`              (int32)
+//! * `kzxzw        = K z_X z_W`                        (int32)
+//!
+//! leaving only the data-dependent dot product and (when `z_W != 0`) the
+//! input row-sum for the runtime kernel.
+
+use anyhow::{bail, Result};
+
+use crate::format::mfb::{OpCode, Operator, TensorDef};
+use crate::tensor::quant::{FusedAct, PreComputed};
+
+/// Fold the constants for a FullyConnected operator (`w` is `[K, N]`).
+pub fn preprocess_fully_connected(
+    x_t: &TensorDef,
+    w_t: &TensorDef,
+    b_t: &TensorDef,
+    y_t: &TensorDef,
+    fused_act: FusedAct,
+) -> Result<PreComputed> {
+    let (k, n) = match w_t.dims[..] {
+        [k, n] => (k, n),
+        _ => bail!("FC weights must be 2-D, got {:?}", w_t.dims),
+    };
+    let w = w_t.data_i8()?;
+    let b = b_t.data_i32()?;
+    if b.len() != n {
+        bail!("FC bias len {} != N {}", b.len(), n);
+    }
+    let colsum: Vec<i32> = (0..n).map(|j| (0..k).map(|i| w[i * n + j] as i32).sum()).collect();
+    Ok(PreComputed::fold(
+        &b,
+        &colsum,
+        k,
+        x_t.qparams.scale,
+        x_t.qparams.zero_point,
+        w_t.qparams.scale,
+        w_t.qparams.zero_point,
+        b_t.qparams.scale,
+        b_t.qparams.zero_point,
+        y_t.qparams.scale,
+        y_t.qparams.zero_point,
+        fused_act,
+    ))
+}
+
+/// Fold the constants for Conv2D (`f` is `[Cout, KH, KW, Cin]`).
+pub fn preprocess_conv2d(
+    x_t: &TensorDef,
+    f_t: &TensorDef,
+    b_t: &TensorDef,
+    y_t: &TensorDef,
+    fused_act: FusedAct,
+) -> Result<PreComputed> {
+    let (c_out, kkc) = match f_t.dims[..] {
+        [co, kh, kw, ci] => (co, kh * kw * ci),
+        _ => bail!("Conv2D filters must be 4-D, got {:?}", f_t.dims),
+    };
+    let f = f_t.data_i8()?;
+    let b = b_t.data_i32()?;
+    if b.len() != c_out {
+        bail!("Conv2D bias len {} != Cout {}", b.len(), c_out);
+    }
+    let colsum: Vec<i32> = (0..c_out)
+        .map(|co| f[co * kkc..(co + 1) * kkc].iter().map(|&v| v as i32).sum())
+        .collect();
+    Ok(PreComputed::fold(
+        &b,
+        &colsum,
+        kkc,
+        x_t.qparams.scale,
+        x_t.qparams.zero_point,
+        f_t.qparams.scale,
+        f_t.qparams.zero_point,
+        b_t.qparams.scale,
+        b_t.qparams.zero_point,
+        y_t.qparams.scale,
+        y_t.qparams.zero_point,
+        fused_act,
+    ))
+}
+
+/// Fold the constants for DepthwiseConv2D (`w` is `[1, KH, KW, Cout]`).
+pub fn preprocess_depthwise(
+    x_t: &TensorDef,
+    w_t: &TensorDef,
+    b_t: &TensorDef,
+    y_t: &TensorDef,
+    fused_act: FusedAct,
+) -> Result<PreComputed> {
+    let (kk, c_out) = match w_t.dims[..] {
+        [1, kh, kw, co] => (kh * kw, co),
+        _ => bail!("DW filters must be [1,KH,KW,Cout], got {:?}", w_t.dims),
+    };
+    let w = w_t.data_i8()?;
+    let b = b_t.data_i32()?;
+    if b.len() != c_out {
+        bail!("DW bias len {} != Cout {}", b.len(), c_out);
+    }
+    let colsum: Vec<i32> =
+        (0..c_out).map(|co| (0..kk).map(|t| w[t * c_out + co] as i32).sum()).collect();
+    Ok(PreComputed::fold(
+        &b,
+        &colsum,
+        kk,
+        x_t.qparams.scale,
+        x_t.qparams.zero_point,
+        w_t.qparams.scale,
+        w_t.qparams.zero_point,
+        b_t.qparams.scale,
+        b_t.qparams.zero_point,
+        y_t.qparams.scale,
+        y_t.qparams.zero_point,
+        fused_act,
+    ))
+}
+
+/// Decode a fused-activation code from operator options.
+pub fn fused_act_of(op: &Operator) -> Result<FusedAct> {
+    use crate::format::mfb::OpOptions::*;
+    let code = match &op.options {
+        FullyConnected { fused_act } => *fused_act,
+        Conv2D { fused_act, .. } => *fused_act,
+        DepthwiseConv2D { fused_act, .. } => *fused_act,
+        AveragePool2D { fused_act, .. } => *fused_act,
+        _ => 0,
+    };
+    FusedAct::from_code(code)
+}
+
+/// Sanity checks shared by the planner: operator arity per opcode.
+pub fn expected_arity(opcode: OpCode) -> (usize, usize) {
+    match opcode {
+        OpCode::FullyConnected | OpCode::Conv2D | OpCode::DepthwiseConv2D => (3, 1),
+        _ => (1, 1),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{DType, QParams};
+
+    fn td(dims: Vec<usize>, qp: QParams, data_i8: Option<Vec<i8>>, data_i32: Option<Vec<i32>>) -> TensorDef {
+        let (dtype, data) = if let Some(d) = data_i8 {
+            (DType::I8, d.iter().map(|&v| v as u8).collect())
+        } else if let Some(d) = data_i32 {
+            (DType::I32, d.iter().flat_map(|v| v.to_le_bytes()).collect())
+        } else {
+            (DType::I8, Vec::new())
+        };
+        TensorDef { name: String::new(), dtype, dims, qparams: qp, data }
+    }
+
+    #[test]
+    fn fc_preprocess_folds_colsums() {
+        // K=2, N=2, W = [[1,2],[3,4]] (row-major [K,N]) -> colsums [4, 6]
+        let x = td(vec![1, 2], QParams::new(0.5, 2), None, None);
+        let w = td(vec![2, 2], QParams::new(0.25, 1), Some(vec![1, 2, 3, 4]), None);
+        let b = td(vec![2], QParams::new(0.125, 0), None, Some(vec![8, -8]));
+        let y = td(vec![1, 2], QParams::new(1.0, -3), None, None);
+        let pc = preprocess_fully_connected(&x, &w, &b, &y, FusedAct::None).unwrap();
+        assert_eq!(pc.w_zp_term, vec![8, 12]); // z_x(2) * colsum
+        assert_eq!(pc.kzxzw, 4); // K(2) * z_x(2) * z_w(1)
+        assert_eq!(pc.z_w, 1);
+        assert!((pc.scale_ratio - 0.125).abs() < 1e-7);
+        assert!((pc.const_bias[0] - (-3.0 + 0.125 * 8.0)).abs() < 1e-6);
+        assert!((pc.const_bias[1] - (-3.0 - 0.125 * 8.0)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn dw_preprocess_uses_per_channel_sums() {
+        // KK=2 (1x2 kernel), Cout=2, W layout [t*cout + co]
+        let x = td(vec![1, 1, 2, 2], QParams::new(0.5, 3), None, None);
+        let w = td(vec![1, 1, 2, 2], QParams::new(0.25, 0), Some(vec![1, 10, 2, 20]), None);
+        let b = td(vec![2], QParams::new(0.125, 0), None, Some(vec![0, 0]));
+        let y = td(vec![1, 1, 1, 2], QParams::new(1.0, 0), None, None);
+        let pc = preprocess_depthwise(&x, &w, &b, &y, FusedAct::None).unwrap();
+        assert_eq!(pc.w_zp_term, vec![9, 90]); // 3 * (1+2), 3 * (10+20)
+        assert_eq!(pc.kzxzw, 0); // z_w == 0
+    }
+
+    #[test]
+    fn shape_errors_are_reported() {
+        let x = td(vec![1, 2], QParams::NONE, None, None);
+        let w = td(vec![4], QParams::NONE, Some(vec![0; 4]), None);
+        let b = td(vec![2], QParams::NONE, None, Some(vec![0, 0]));
+        let y = td(vec![1, 2], QParams::NONE, None, None);
+        assert!(preprocess_fully_connected(&x, &w, &b, &y, FusedAct::None).is_err());
+    }
+}

@@ -1,0 +1,199 @@
+//! Execution backends for the coordinator (DESIGN.md S16).
+//!
+//! One trait, three implementations:
+//!
+//! * [`NativeBackend`] — the MicroFlow engine (this paper's system);
+//! * [`InterpBackend`] — the TFLM-like interpreter (baseline serving);
+//! * [`PjrtBackend`]   — the JAX-AOT'd HLO running on the XLA CPU client
+//!   (true batched execution, one executable per batch variant).
+
+use anyhow::Result;
+
+use crate::compiler::plan::CompileOptions;
+use crate::engine::MicroFlowEngine;
+use crate::format::mfb::MfbModel;
+use crate::interp::resolver::OpResolver;
+use crate::interp::Interpreter;
+use crate::runtime::PjrtEngine;
+use crate::tensor::quant::QParams;
+
+/// A quantized batched execution backend.
+pub trait Backend: Send {
+    fn kind(&self) -> &'static str;
+    fn input_len(&self) -> usize;
+    fn output_len(&self) -> usize;
+    fn input_qparams(&self) -> QParams;
+    fn output_qparams(&self) -> QParams;
+    /// Largest batch worth submitting at once (the batcher's target).
+    fn preferred_batch(&self) -> usize;
+    /// Execute `n` samples packed in `inputs`; returns `n * output_len`
+    /// values.
+    fn execute(&mut self, inputs: &[i8], n: usize) -> Result<Vec<i8>>;
+}
+
+/// MicroFlow engine backend (per-sample kernel loop).
+pub struct NativeBackend {
+    engine: MicroFlowEngine,
+}
+
+impl NativeBackend {
+    pub fn new(model: &MfbModel, options: CompileOptions) -> Result<Self> {
+        Ok(NativeBackend { engine: MicroFlowEngine::new(model, options)? })
+    }
+
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<Self> {
+        Ok(NativeBackend { engine: MicroFlowEngine::load(path, CompileOptions::default())? })
+    }
+}
+
+impl Backend for NativeBackend {
+    fn kind(&self) -> &'static str {
+        "microflow"
+    }
+    fn input_len(&self) -> usize {
+        self.engine.input_len()
+    }
+    fn output_len(&self) -> usize {
+        self.engine.output_len()
+    }
+    fn input_qparams(&self) -> QParams {
+        self.engine.input_qparams()
+    }
+    fn output_qparams(&self) -> QParams {
+        self.engine.output_qparams()
+    }
+    fn preferred_batch(&self) -> usize {
+        8
+    }
+    fn execute(&mut self, inputs: &[i8], n: usize) -> Result<Vec<i8>> {
+        let ilen = self.input_len();
+        let olen = self.output_len();
+        let mut out = vec![0i8; n * olen];
+        for i in 0..n {
+            self.engine
+                .predict_into(&inputs[i * ilen..(i + 1) * ilen], &mut out[i * olen..(i + 1) * olen]);
+        }
+        Ok(out)
+    }
+}
+
+/// TFLM-like interpreter backend.
+pub struct InterpBackend {
+    interp: Interpreter,
+}
+
+impl InterpBackend {
+    pub fn new(model_bytes: &[u8]) -> Result<Self> {
+        Ok(InterpBackend { interp: Interpreter::new(model_bytes, &OpResolver::with_all_kernels())? })
+    }
+
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<Self> {
+        let bytes = std::fs::read(path)?;
+        Self::new(&bytes)
+    }
+}
+
+impl Backend for InterpBackend {
+    fn kind(&self) -> &'static str {
+        "tflm-interp"
+    }
+    fn input_len(&self) -> usize {
+        self.interp.input_len()
+    }
+    fn output_len(&self) -> usize {
+        self.interp.output_len()
+    }
+    fn input_qparams(&self) -> QParams {
+        self.interp.input_qparams()
+    }
+    fn output_qparams(&self) -> QParams {
+        self.interp.output_qparams()
+    }
+    fn preferred_batch(&self) -> usize {
+        8
+    }
+    fn execute(&mut self, inputs: &[i8], n: usize) -> Result<Vec<i8>> {
+        let ilen = self.input_len();
+        let olen = self.output_len();
+        let mut out = Vec::with_capacity(n * olen);
+        for i in 0..n {
+            out.extend(self.interp.invoke(&inputs[i * ilen..(i + 1) * ilen])?);
+        }
+        Ok(out)
+    }
+}
+
+/// PJRT backend (batched HLO execution).
+pub struct PjrtBackend {
+    engine: PjrtEngine,
+}
+
+// SAFETY: the xla crate's client/executable handles hold `Rc`s, making the
+// type !Send by default. A `PjrtBackend` owns its client AND every
+// executable holding clones of that `Rc`; the whole object graph moves to
+// exactly one worker thread at `Server::start` and is never aliased across
+// threads afterwards (each worker owns its backend exclusively; the trait
+// takes `&mut self`).
+unsafe impl Send for PjrtBackend {}
+
+impl PjrtBackend {
+    pub fn load(artifacts: &std::path::Path, model: &str) -> Result<Self> {
+        Ok(PjrtBackend { engine: PjrtEngine::load(artifacts, model)? })
+    }
+
+    pub fn engine(&self) -> &PjrtEngine {
+        &self.engine
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn kind(&self) -> &'static str {
+        "pjrt"
+    }
+    fn input_len(&self) -> usize {
+        self.engine.input_len()
+    }
+    fn output_len(&self) -> usize {
+        self.engine.output_len()
+    }
+    fn input_qparams(&self) -> QParams {
+        self.engine.input_qparams
+    }
+    fn output_qparams(&self) -> QParams {
+        self.engine.output_qparams
+    }
+    fn preferred_batch(&self) -> usize {
+        *self.engine.batch_sizes().last().unwrap_or(&1)
+    }
+    fn execute(&mut self, inputs: &[i8], n: usize) -> Result<Vec<i8>> {
+        self.engine.execute_batch(inputs, n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_backend_batches_by_looping() {
+        let m = MfbModel::parse(&crate::format::mfb::tests::tiny_mfb()).unwrap();
+        let mut b = NativeBackend::new(&m, CompileOptions::default()).unwrap();
+        let one = b.execute(&[3, 1], 1).unwrap();
+        let two = b.execute(&[3, 1, 3, 1], 2).unwrap();
+        assert_eq!(two[..3], one[..]);
+        assert_eq!(two[3..], one[..]);
+    }
+
+    #[test]
+    fn interp_backend_matches_native_within_one() {
+        let bytes = crate::format::mfb::tests::tiny_mfb();
+        let m = MfbModel::parse(&bytes).unwrap();
+        let mut nat = NativeBackend::new(&m, CompileOptions::default()).unwrap();
+        let mut itp = InterpBackend::new(&bytes).unwrap();
+        let a = nat.execute(&[5, -9], 1).unwrap();
+        let b = itp.execute(&[5, -9], 1).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert!((*x as i32 - *y as i32).abs() <= 1);
+        }
+    }
+}

@@ -1,0 +1,94 @@
+//! Dynamic batcher (DESIGN.md S16).
+//!
+//! Requests accumulate until the batch target is reached or the oldest
+//! waiting request has been queued for `max_wait` — the standard
+//! latency/throughput trade (vLLM-router style, scaled to TinyML). The
+//! batcher runs inside each worker thread: it owns the receive side of the
+//! bounded request channel.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+use super::server::Request;
+
+/// Batching policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    /// Target batch size (usually the backend's `preferred_batch`).
+    pub max_batch: usize,
+    /// Longest a request may wait for peers before the batch is cut.
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// Collect the next batch from `rx`.
+///
+/// Blocks for the first request (or returns `None` when the channel is
+/// closed and drained — shutdown). After the first request arrives, keeps
+/// pulling until `max_batch` or the first request's age exceeds
+/// `max_wait`.
+pub fn next_batch(rx: &Receiver<Request>, cfg: &BatcherConfig) -> Option<Vec<Request>> {
+    let first = rx.recv().ok()?;
+    let deadline = Instant::now() + cfg.max_wait;
+    let mut batch = vec![first];
+    while batch.len() < cfg.max_batch {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(req) => batch.push(req),
+            Err(RecvTimeoutError::Timeout) => break,
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    Some(batch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::sync_channel;
+    use std::time::Instant as StdInstant;
+
+    fn req(v: i8) -> Request {
+        let (tx, _rx) = std::sync::mpsc::channel();
+        Request { input: vec![v], enqueued: StdInstant::now(), reply: tx }
+    }
+
+    #[test]
+    fn cuts_batch_at_max_size() {
+        let (tx, rx) = sync_channel(16);
+        for i in 0..5 {
+            tx.send(req(i)).unwrap();
+        }
+        let cfg = BatcherConfig { max_batch: 3, max_wait: Duration::from_secs(1) };
+        let b = next_batch(&rx, &cfg).unwrap();
+        assert_eq!(b.len(), 3);
+        let b2 = next_batch(&rx, &cfg).unwrap();
+        assert_eq!(b2.len(), 2); // drains the rest after timeout
+    }
+
+    #[test]
+    fn cuts_batch_at_deadline() {
+        let (tx, rx) = sync_channel::<Request>(16);
+        tx.send(req(1)).unwrap();
+        let cfg = BatcherConfig { max_batch: 100, max_wait: Duration::from_millis(5) };
+        let t0 = StdInstant::now();
+        let b = next_batch(&rx, &cfg).unwrap();
+        assert_eq!(b.len(), 1);
+        assert!(t0.elapsed() < Duration::from_millis(500));
+    }
+
+    #[test]
+    fn returns_none_on_shutdown() {
+        let (tx, rx) = sync_channel::<Request>(1);
+        drop(tx);
+        assert!(next_batch(&rx, &BatcherConfig::default()).is_none());
+    }
+}

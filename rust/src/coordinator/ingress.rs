@@ -1,0 +1,188 @@
+//! TCP ingress (DESIGN.md S16): a wire protocol in front of the
+//! coordinator, so external clients can drive inference — the serving
+//! deployment surface (std::net; tokio is unavailable offline).
+//!
+//! ## Wire protocol (little-endian, length-prefixed)
+//!
+//! ```text
+//! request:  magic "MFRQ" | u16 model-name len | name bytes
+//!           | u32 payload len | i8 payload (quantized input)
+//! response: magic "MFRS" | u8 status (0 ok, 1 error)
+//!           | u32 payload len | i8 payload (quantized output)
+//!             -- or, on error, utf8 message bytes
+//! ```
+//!
+//! One request per connection round (connections may pipeline rounds
+//! sequentially). The accept loop hands each connection to a handler
+//! thread; inference requests flow through the [`Router`] into the
+//! batched worker pools, so concurrent connections batch together.
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{bail, Context, Result};
+
+use super::router::Router;
+
+/// A running TCP ingress.
+pub struct Ingress {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+}
+
+impl Ingress {
+    /// Bind and serve `router` on `addr` (use port 0 for an ephemeral
+    /// port; the bound address is in `self.addr`).
+    pub fn start(addr: &str, router: Arc<Router>) -> Result<Ingress> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let accept_thread = std::thread::spawn(move || {
+            let mut handlers: Vec<JoinHandle<()>> = Vec::new();
+            while !stop2.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        // idle-read timeout so handler threads cannot
+                        // outlive an abandoned connection indefinitely
+                        let _ = stream.set_read_timeout(Some(std::time::Duration::from_secs(30)));
+                        let router = Arc::clone(&router);
+                        handlers.push(std::thread::spawn(move || {
+                            let _ = handle_connection(stream, &router);
+                        }));
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(std::time::Duration::from_millis(2));
+                    }
+                    Err(_) => break,
+                }
+                handlers.retain(|h| !h.is_finished());
+            }
+            // handler threads are NOT joined: they exit on client EOF or
+            // read timeout; joining here would deadlock shutdown against
+            // clients that keep their connection open
+        });
+        Ok(Ingress { addr: local, stop, accept_thread: Some(accept_thread) })
+    }
+
+    /// Stop accepting and join the accept loop.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn handle_connection(mut stream: TcpStream, router: &Router) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    loop {
+        let mut magic = [0u8; 4];
+        match stream.read_exact(&mut magic) {
+            Ok(()) => {}
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::UnexpectedEof
+                        | std::io::ErrorKind::WouldBlock
+                        | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                return Ok(())
+            }
+            Err(e) => return Err(e.into()),
+        }
+        if &magic != b"MFRQ" {
+            write_error(&mut stream, "bad request magic")?;
+            return Ok(());
+        }
+        let mut b2 = [0u8; 2];
+        stream.read_exact(&mut b2)?;
+        let name_len = u16::from_le_bytes(b2) as usize;
+        if name_len > 256 {
+            write_error(&mut stream, "model name too long")?;
+            return Ok(());
+        }
+        let mut name = vec![0u8; name_len];
+        stream.read_exact(&mut name)?;
+        let name = String::from_utf8(name).context("model name utf8")?;
+        let mut b4 = [0u8; 4];
+        stream.read_exact(&mut b4)?;
+        let payload_len = u32::from_le_bytes(b4) as usize;
+        if payload_len > 16 * 1024 * 1024 {
+            write_error(&mut stream, "payload too large")?;
+            return Ok(());
+        }
+        let mut payload = vec![0u8; payload_len];
+        stream.read_exact(&mut payload)?;
+        let input: Vec<i8> = payload.iter().map(|&b| b as i8).collect();
+
+        match router.infer(&name, input) {
+            Ok(out) => {
+                stream.write_all(b"MFRS")?;
+                stream.write_all(&[0u8])?;
+                stream.write_all(&(out.len() as u32).to_le_bytes())?;
+                let bytes: Vec<u8> = out.iter().map(|&v| v as u8).collect();
+                stream.write_all(&bytes)?;
+            }
+            Err(e) => write_error(&mut stream, &format!("{e:#}"))?,
+        }
+        stream.flush()?;
+    }
+}
+
+fn write_error(stream: &mut TcpStream, msg: &str) -> Result<()> {
+    stream.write_all(b"MFRS")?;
+    stream.write_all(&[1u8])?;
+    stream.write_all(&(msg.len() as u32).to_le_bytes())?;
+    stream.write_all(msg.as_bytes())?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// Minimal blocking client for tests, examples and the CLI.
+pub struct Client {
+    stream: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: impl std::net::ToSocketAddrs) -> Result<Client> {
+        let stream = TcpStream::connect(addr).context("connect")?;
+        stream.set_nodelay(true).ok();
+        Ok(Client { stream })
+    }
+
+    /// One inference round-trip.
+    pub fn infer(&mut self, model: &str, input: &[i8]) -> Result<Vec<i8>> {
+        let s = &mut self.stream;
+        s.write_all(b"MFRQ")?;
+        s.write_all(&(model.len() as u16).to_le_bytes())?;
+        s.write_all(model.as_bytes())?;
+        s.write_all(&(input.len() as u32).to_le_bytes())?;
+        let bytes: Vec<u8> = input.iter().map(|&v| v as u8).collect();
+        s.write_all(&bytes)?;
+        s.flush()?;
+
+        let mut magic = [0u8; 4];
+        s.read_exact(&mut magic)?;
+        if &magic != b"MFRS" {
+            bail!("bad response magic");
+        }
+        let mut status = [0u8; 1];
+        s.read_exact(&mut status)?;
+        let mut b4 = [0u8; 4];
+        s.read_exact(&mut b4)?;
+        let len = u32::from_le_bytes(b4) as usize;
+        let mut payload = vec![0u8; len];
+        s.read_exact(&mut payload)?;
+        if status[0] != 0 {
+            bail!("server error: {}", String::from_utf8_lossy(&payload));
+        }
+        Ok(payload.iter().map(|&b| b as i8).collect())
+    }
+}

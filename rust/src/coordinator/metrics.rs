@@ -1,0 +1,142 @@
+//! Serving metrics (DESIGN.md S16): latency quantiles + throughput.
+//!
+//! Lock-guarded reservoir of recent latencies plus monotonic counters.
+//! Cheap enough for the request path (one mutex lock per completion; the
+//! e2e bench shows the coordinator is not the bottleneck — EXPERIMENTS.md
+//! §Perf).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::util::stats::percentile_sorted;
+
+const RESERVOIR: usize = 65_536;
+
+/// Shared metrics sink.
+pub struct Metrics {
+    start: Instant,
+    completed: AtomicU64,
+    errors: AtomicU64,
+    batches: AtomicU64,
+    batched_samples: AtomicU64,
+    latencies_us: Mutex<Vec<u64>>,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics {
+            start: Instant::now(),
+            completed: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batched_samples: AtomicU64::new(0),
+            latencies_us: Mutex::new(Vec::with_capacity(4096)),
+        }
+    }
+
+    /// Record one completed request with its end-to-end latency.
+    pub fn record(&self, latency: Duration) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        let mut l = self.latencies_us.lock().unwrap();
+        if l.len() < RESERVOIR {
+            l.push(latency.as_micros() as u64);
+        }
+    }
+
+    pub fn record_error(&self) {
+        self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one executed batch of `n` samples.
+    pub fn record_batch(&self, n: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_samples.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let mut lat = self.latencies_us.lock().unwrap().clone();
+        lat.sort_unstable();
+        let latf: Vec<f64> = lat.iter().map(|&v| v as f64).collect();
+        let q = |p: f64| if latf.is_empty() { 0.0 } else { percentile_sorted(&latf, p) };
+        let completed = self.completed.load(Ordering::Relaxed);
+        let batches = self.batches.load(Ordering::Relaxed);
+        let samples = self.batched_samples.load(Ordering::Relaxed);
+        MetricsSnapshot {
+            completed,
+            errors: self.errors.load(Ordering::Relaxed),
+            elapsed: self.start.elapsed(),
+            p50_us: q(50.0),
+            p95_us: q(95.0),
+            p99_us: q(99.0),
+            mean_batch: if batches > 0 { samples as f64 / batches as f64 } else { 0.0 },
+        }
+    }
+}
+
+/// A point-in-time metrics view.
+#[derive(Clone, Copy, Debug)]
+pub struct MetricsSnapshot {
+    pub completed: u64,
+    pub errors: u64,
+    pub elapsed: Duration,
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+    pub mean_batch: f64,
+}
+
+impl MetricsSnapshot {
+    pub fn throughput_rps(&self) -> f64 {
+        self.completed as f64 / self.elapsed.as_secs_f64().max(1e-9)
+    }
+}
+
+impl std::fmt::Display for MetricsSnapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} done ({} err) in {:.2}s | {:.0} req/s | p50 {:.0}us p95 {:.0}us p99 {:.0}us | mean batch {:.2}",
+            self.completed,
+            self.errors,
+            self.elapsed.as_secs_f64(),
+            self.throughput_rps(),
+            self.p50_us,
+            self.p95_us,
+            self.p99_us,
+            self.mean_batch
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_snapshots() {
+        let m = Metrics::new();
+        for us in [100u64, 200, 300, 400, 500] {
+            m.record(Duration::from_micros(us));
+        }
+        m.record_batch(5);
+        let s = m.snapshot();
+        assert_eq!(s.completed, 5);
+        assert_eq!(s.p50_us, 300.0);
+        assert_eq!(s.mean_batch, 5.0);
+        assert!(s.throughput_rps() > 0.0);
+    }
+
+    #[test]
+    fn empty_snapshot_is_zeroes() {
+        let s = Metrics::new().snapshot();
+        assert_eq!(s.completed, 0);
+        assert_eq!(s.p99_us, 0.0);
+    }
+}

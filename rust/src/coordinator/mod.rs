@@ -1,0 +1,35 @@
+//! Serving coordinator (DESIGN.md S16) — the L3 layer of the session
+//! architecture.
+//!
+//! MicroFlow is a per-device inference engine; the coordinator is the host
+//! process that serves inference requests over it (and over the PJRT
+//! executables), vLLM-router style but sized for TinyML:
+//!
+//! * [`backend`] — the execution abstraction: native MicroFlow engine,
+//!   TFLM-like interpreter, or PJRT executable, all behind one trait;
+//! * [`batcher`] — dynamic batching: requests accumulate until
+//!   `max_batch` or `max_wait` elapses, then execute as one batch
+//!   (fills the AOT'd batch variants of the PJRT path);
+//! * [`server`]  — worker threads + bounded queues (std::thread + mpsc;
+//!   tokio is unavailable offline — DESIGN.md §7). Bounded channels give
+//!   backpressure: submit blocks when the queue is full;
+//! * [`router`]  — model-name → worker-pool routing for multi-model
+//!   deployments;
+//! * [`ingress`] — TCP wire protocol + blocking client, so external
+//!   processes can drive the router (the deployment surface);
+//! * [`metrics`] — per-model latency (p50/p95/p99) and throughput
+//!   counters, reported by the e2e example (`examples/serve_keywords.rs`).
+
+pub mod backend;
+pub mod batcher;
+pub mod ingress;
+pub mod metrics;
+pub mod router;
+pub mod server;
+
+pub use backend::{Backend, InterpBackend, NativeBackend, PjrtBackend};
+pub use ingress::{Client, Ingress};
+pub use batcher::BatcherConfig;
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use router::Router;
+pub use server::{Server, ServerConfig};

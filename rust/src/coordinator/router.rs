@@ -1,0 +1,73 @@
+//! Model router (DESIGN.md S16): name → [`Server`] for multi-model
+//! deployments (the fleet example serves sine + speech + person from one
+//! process).
+
+use std::collections::HashMap;
+
+use anyhow::{Context, Result};
+
+use super::server::Server;
+
+/// A multi-model routing table.
+#[derive(Default)]
+pub struct Router {
+    servers: HashMap<String, Server>,
+}
+
+impl Router {
+    pub fn new() -> Router {
+        Router::default()
+    }
+
+    pub fn add(&mut self, name: &str, server: Server) {
+        self.servers.insert(name.to_string(), server);
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Server> {
+        self.servers.get(name).with_context(|| format!("no model {name:?} registered"))
+    }
+
+    pub fn models(&self) -> Vec<&str> {
+        let mut m: Vec<&str> = self.servers.keys().map(|s| s.as_str()).collect();
+        m.sort();
+        m
+    }
+
+    /// Route an inference request by model name.
+    pub fn infer(&self, model: &str, input: Vec<i8>) -> Result<Vec<i8>> {
+        self.get(model)?.infer(input)
+    }
+
+    /// Shut down every server.
+    pub fn shutdown(self) {
+        for (_, s) in self.servers {
+            s.shutdown();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::plan::CompileOptions;
+    use crate::coordinator::backend::{Backend, NativeBackend};
+    use crate::coordinator::server::ServerConfig;
+    use crate::format::mfb::MfbModel;
+
+    fn tiny_server() -> Server {
+        let m = MfbModel::parse(&crate::format::mfb::tests::tiny_mfb()).unwrap();
+        let b: Vec<Box<dyn Backend>> =
+            vec![Box::new(NativeBackend::new(&m, CompileOptions::default()).unwrap())];
+        Server::start(b, ServerConfig::default()).unwrap()
+    }
+
+    #[test]
+    fn routes_by_name() {
+        let mut r = Router::new();
+        r.add("tiny", tiny_server());
+        assert_eq!(r.models(), vec!["tiny"]);
+        assert_eq!(r.infer("tiny", vec![3, 1]).unwrap(), vec![2, 0, 5]);
+        assert!(r.infer("missing", vec![0, 0]).is_err());
+        r.shutdown();
+    }
+}

@@ -1,0 +1,204 @@
+//! Worker-pool serving loop (DESIGN.md S16).
+//!
+//! `Server` owns one worker thread per backend instance, fed by a bounded
+//! request channel (backpressure: `submit` blocks when the queue is full).
+//! Each worker runs the dynamic batcher, executes the batch on its backend
+//! and replies through per-request channels. std::thread + mpsc (no tokio
+//! offline — DESIGN.md §7).
+
+use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::backend::Backend;
+use super::batcher::{next_batch, BatcherConfig};
+use super::metrics::Metrics;
+use crate::tensor::quant::QParams;
+
+/// One in-flight request.
+pub struct Request {
+    pub input: Vec<i8>,
+    pub enqueued: Instant,
+    pub reply: Sender<Result<Vec<i8>>>,
+}
+
+/// Server configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct ServerConfig {
+    pub queue_depth: usize,
+    pub batcher: BatcherConfig,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig { queue_depth: 256, batcher: BatcherConfig::default() }
+    }
+}
+
+/// A serving endpoint for one model.
+pub struct Server {
+    tx: SyncSender<Request>,
+    workers: Vec<JoinHandle<()>>,
+    pub metrics: Arc<Metrics>,
+    input_len: usize,
+    input_qparams: QParams,
+    output_qparams: QParams,
+}
+
+impl Server {
+    /// Start a server over a set of backend replicas (one worker each).
+    pub fn start(backends: Vec<Box<dyn Backend>>, cfg: ServerConfig) -> Result<Server> {
+        anyhow::ensure!(!backends.is_empty(), "need at least one backend");
+        let input_len = backends[0].input_len();
+        let input_qparams = backends[0].input_qparams();
+        let output_qparams = backends[0].output_qparams();
+        let metrics = Arc::new(Metrics::new());
+        let (tx, rx) = sync_channel::<Request>(cfg.queue_depth);
+        let shared_rx = Arc::new(std::sync::Mutex::new(rx));
+        let mut workers = Vec::new();
+        for mut backend in backends {
+            let rx = Arc::clone(&shared_rx);
+            let metrics = Arc::clone(&metrics);
+            let bcfg = BatcherConfig {
+                max_batch: cfg.batcher.max_batch.min(backend.preferred_batch().max(1)),
+                max_wait: cfg.batcher.max_wait,
+            };
+            workers.push(std::thread::spawn(move || {
+                worker_loop(&mut *backend, &rx, &bcfg, &metrics);
+            }));
+        }
+        Ok(Server { tx, workers, metrics, input_len, input_qparams, output_qparams })
+    }
+
+    pub fn input_qparams(&self) -> QParams {
+        self.input_qparams
+    }
+
+    pub fn output_qparams(&self) -> QParams {
+        self.output_qparams
+    }
+
+    /// Submit a quantized request; returns the reply channel. Blocks when
+    /// the queue is full (backpressure).
+    pub fn submit(&self, input: Vec<i8>) -> Result<Receiver<Result<Vec<i8>>>> {
+        anyhow::ensure!(input.len() == self.input_len, "input length");
+        let (reply_tx, reply_rx) = std::sync::mpsc::channel();
+        self.tx
+            .send(Request { input, enqueued: Instant::now(), reply: reply_tx })
+            .context("server is shut down")?;
+        Ok(reply_rx)
+    }
+
+    /// Submit and wait (convenience).
+    pub fn infer(&self, input: Vec<i8>) -> Result<Vec<i8>> {
+        let rx = self.submit(input)?;
+        rx.recv().context("worker dropped reply")?
+    }
+
+    /// Graceful shutdown: close the queue and join workers.
+    pub fn shutdown(self) {
+        drop(self.tx);
+        for w in self.workers {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(
+    backend: &mut dyn Backend,
+    rx: &std::sync::Mutex<Receiver<Request>>,
+    cfg: &BatcherConfig,
+    metrics: &Metrics,
+) {
+    let ilen = backend.input_len();
+    let olen = backend.output_len();
+    loop {
+        // hold the lock only while assembling a batch; workers alternate
+        let batch = {
+            let rx = rx.lock().unwrap();
+            next_batch(&rx, cfg)
+        };
+        let Some(batch) = batch else { return };
+        let n = batch.len();
+        metrics.record_batch(n);
+        let mut inputs = Vec::with_capacity(n * ilen);
+        for r in &batch {
+            inputs.extend_from_slice(&r.input);
+        }
+        match backend.execute(&inputs, n) {
+            Ok(outputs) => {
+                for (i, r) in batch.into_iter().enumerate() {
+                    let out = outputs[i * olen..(i + 1) * olen].to_vec();
+                    metrics.record(r.enqueued.elapsed());
+                    let _ = r.reply.send(Ok(out));
+                }
+            }
+            Err(e) => {
+                let msg = format!("batch execution failed: {e:#}");
+                for r in batch {
+                    metrics.record_error();
+                    let _ = r.reply.send(Err(anyhow::anyhow!(msg.clone())));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::plan::CompileOptions;
+    use crate::coordinator::backend::NativeBackend;
+    use crate::format::mfb::MfbModel;
+
+    fn tiny_server(replicas: usize) -> Server {
+        let m = MfbModel::parse(&crate::format::mfb::tests::tiny_mfb()).unwrap();
+        let backends: Vec<Box<dyn Backend>> = (0..replicas)
+            .map(|_| {
+                Box::new(NativeBackend::new(&m, CompileOptions::default()).unwrap())
+                    as Box<dyn Backend>
+            })
+            .collect();
+        Server::start(backends, ServerConfig::default()).unwrap()
+    }
+
+    #[test]
+    fn serves_requests_correctly() {
+        let s = tiny_server(1);
+        let out = s.infer(vec![3, 1]).unwrap();
+        assert_eq!(out, vec![2, 0, 5]); // same as the engine unit test
+        s.shutdown();
+    }
+
+    #[test]
+    fn concurrent_submissions_all_complete() {
+        let s = Arc::new(tiny_server(2));
+        let mut handles = Vec::new();
+        for t in 0..8 {
+            let s = Arc::clone(&s);
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..50 {
+                    let out = s.infer(vec![t as i8, 1]).unwrap();
+                    assert_eq!(out.len(), 3);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let snap = s.metrics.snapshot();
+        assert_eq!(snap.completed, 400);
+        assert_eq!(snap.errors, 0);
+        Arc::try_unwrap(s).ok().map(|s| s.shutdown());
+    }
+
+    #[test]
+    fn rejects_wrong_input_length() {
+        let s = tiny_server(1);
+        assert!(s.submit(vec![1, 2, 3]).is_err());
+        s.shutdown();
+    }
+}

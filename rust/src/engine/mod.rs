@@ -1,0 +1,228 @@
+//! The MicroFlow Runtime engine (paper Sec. 3.4; DESIGN.md S12).
+//!
+//! Executes a [`CompiledModel`]: a straight-line walk over the plan's
+//! steps with two ping-pong activation buffers and one scratch buffer, all
+//! sized by the compiler's [`MemoryPlan`] and allocated **once** at engine
+//! construction — the host-side equivalent of the paper's static stack
+//! allocation (no allocation ever happens on the predict path; asserted by
+//! `tests::no_allocation_on_hot_path` via buffer-pointer stability).
+//!
+//! The paged mode (Sec. 4.3) stages FullyConnected weight pages through the
+//! scratch buffer; everything else is identical.
+
+mod scratch;
+
+pub use scratch::Scratch;
+
+use anyhow::Result;
+
+use crate::compiler::plan::{CompiledModel, CompileOptions, StepKind};
+use crate::format::mfb::MfbModel;
+use crate::kernels::{activation, average_pool2d, conv2d, depthwise_conv2d, fully_connected};
+use crate::tensor::quant::QParams;
+
+/// The MicroFlow inference engine.
+///
+/// Construction runs the full compiler pipeline; [`MicroFlowEngine::predict`]
+/// is the pure runtime of the paper — kernels plus folded constants only.
+pub struct MicroFlowEngine {
+    compiled: CompiledModel,
+    scratch: std::cell::RefCell<Scratch>,
+}
+
+impl MicroFlowEngine {
+    /// Compile a parsed MFB model.
+    pub fn new(model: &MfbModel, options: CompileOptions) -> Result<Self> {
+        let compiled = CompiledModel::compile(model, options)?;
+        let scratch = Scratch::for_plan(&compiled);
+        Ok(MicroFlowEngine { compiled, scratch: std::cell::RefCell::new(scratch) })
+    }
+
+    /// Load + compile from an `.mfb` file.
+    pub fn load(path: impl AsRef<std::path::Path>, options: CompileOptions) -> Result<Self> {
+        let model = MfbModel::load(path)?;
+        Self::new(&model, options)
+    }
+
+    pub fn compiled(&self) -> &CompiledModel {
+        &self.compiled
+    }
+
+    pub fn input_len(&self) -> usize {
+        self.compiled.input_len()
+    }
+
+    pub fn output_len(&self) -> usize {
+        self.compiled.output_len()
+    }
+
+    pub fn input_qparams(&self) -> QParams {
+        self.compiled.input_qparams
+    }
+
+    pub fn output_qparams(&self) -> QParams {
+        self.compiled.output_qparams
+    }
+
+    /// Quantized inference: int8 in, int8 out, written into `out`.
+    ///
+    /// This is the hot path: no allocation, no parsing, no dispatch beyond
+    /// one match per step.
+    pub fn predict_into(&self, input: &[i8], out: &mut [i8]) {
+        assert_eq!(input.len(), self.compiled.input_len(), "input length");
+        assert_eq!(out.len(), self.compiled.output_len(), "output length");
+        let mut scratch = self.scratch.borrow_mut();
+        let result = run_plan(&self.compiled, input, &mut scratch);
+        out.copy_from_slice(result);
+    }
+
+    /// Quantized inference, allocating the output (convenience).
+    pub fn predict(&self, input: &[i8]) -> Vec<i8> {
+        let mut out = vec![0i8; self.compiled.output_len()];
+        self.predict_into(input, &mut out);
+        out
+    }
+
+    /// Float convenience wrapper: quantizes the input with the model's
+    /// input qparams, dequantizes the output.
+    pub fn predict_f32(&self, input: &[f32]) -> Vec<f32> {
+        let q = self.compiled.input_qparams.quantize_slice(input);
+        let out = self.predict(&q);
+        let oq = self.compiled.output_qparams;
+        out.iter().map(|&v| oq.dequantize(v)).collect()
+    }
+}
+
+/// Execute the plan over the scratch buffers; returns the slice holding the
+/// final activations (one of the ping-pong buffers).
+pub(crate) fn run_plan<'a>(
+    compiled: &CompiledModel,
+    input: &[i8],
+    scratch: &'a mut Scratch,
+) -> &'a [i8] {
+    scratch.load_input(input);
+    for step in &compiled.steps {
+        let in_len = step.in_len;
+        let out_len = step.out_len;
+        match &step.kind {
+            StepKind::Reshape => {
+                // pure metadata: the buffer is reinterpreted, nothing runs
+                continue;
+            }
+            StepKind::FullyConnected { k, n, weights, pc, paged } => {
+                let (x, y, page) = scratch.split(in_len, out_len);
+                if *paged {
+                    fully_connected::fully_connected_paged(x, weights, *k, *n, pc, &mut page[..*k], y);
+                } else {
+                    fully_connected::fully_connected_microflow(x, weights, *k, *n, pc, y);
+                }
+            }
+            StepKind::Conv2D { geo, c_out, filters, z_x, pc } => {
+                let (x, y, view) = scratch.split(in_len, out_len);
+                conv2d::conv2d_microflow(x, filters, geo, *c_out, *z_x, pc, &mut view[..step.scratch_len], y);
+            }
+            StepKind::DepthwiseConv2D { geo, depth_multiplier, filters, z_x, pc } => {
+                let (x, y, view) = scratch.split(in_len, out_len);
+                depthwise_conv2d::depthwise_conv2d_microflow(
+                    x,
+                    filters,
+                    geo,
+                    *depth_multiplier,
+                    *z_x,
+                    pc,
+                    &mut view[..step.scratch_len],
+                    y,
+                );
+            }
+            StepKind::AveragePool2D { geo, z_x, ratio, z_y, act_min, act_max } => {
+                let (x, y, view) = scratch.split(in_len, out_len);
+                average_pool2d::average_pool2d_microflow(
+                    x,
+                    geo,
+                    *z_x,
+                    *ratio,
+                    *z_y,
+                    *act_min,
+                    *act_max,
+                    &mut view[..step.scratch_len],
+                    y,
+                );
+            }
+            StepKind::Softmax { s_x, z_x, s_y, z_y } => {
+                let (x, y, _) = scratch.split(in_len, out_len);
+                activation::softmax(x, *s_x, *z_x, *s_y, *z_y, y);
+            }
+            StepKind::Relu { s_x, z_x, s_y, z_y } => {
+                let (x, y, _) = scratch.split(in_len, out_len);
+                activation::relu(x, *s_x, *z_x, *s_y, *z_y, y);
+            }
+            StepKind::Relu6 { s_x, z_x, s_y, z_y } => {
+                let (x, y, _) = scratch.split(in_len, out_len);
+                activation::relu6(x, *s_x, *z_x, *s_y, *z_y, y);
+            }
+        }
+        scratch.flip();
+    }
+    scratch.current(compiled.output_len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::format::mfb::MfbModel;
+
+    fn tiny_engine(paging: bool) -> MicroFlowEngine {
+        let m = MfbModel::parse(&crate::format::mfb::tests::tiny_mfb()).unwrap();
+        MicroFlowEngine::new(&m, CompileOptions { paging }).unwrap()
+    }
+
+    #[test]
+    fn tiny_fc_forward_is_correct() {
+        // model: FC [2 -> 3], W (K,N) = [[1,2,3],[-1,-2,-3]], b = [10,-20,30]
+        // s_x=0.5 z_x=-1, s_w=0.25 z_w=0, s_y=1.0 z_y=0, fused relu
+        let e = tiny_engine(false);
+        let x = [3i8, 1]; // dequant: (3-(-1))*0.5 = 2.0, (1+1)*0.5 = 1.0
+        let out = e.predict(&x);
+        // acc_j = sum (x - zx)(w): real = 0.5*0.25 * [(4*1+2*-1), (4*2+2*-2), (4*3+2*-3)]
+        //       = 0.125 * [2, 4, 6] = [0.25, 0.5, 0.75]
+        // bias real = 0.125 * [10,-20,30] = [1.25, -2.5, 3.75]
+        // y = relu([1.5, -2, 4.5]) / s_y = [2, 0, 5] after round (1.5 -> 2)
+        assert_eq!(out, vec![2, 0, 5]);
+    }
+
+    #[test]
+    fn paged_equals_unpaged() {
+        let a = tiny_engine(false);
+        let b = tiny_engine(true);
+        for x in [[0i8, 0], [127, -128], [-5, 99]] {
+            assert_eq!(a.predict(&x), b.predict(&x));
+        }
+    }
+
+    #[test]
+    fn predict_f32_roundtrips_quantization() {
+        let e = tiny_engine(false);
+        let y = e.predict_f32(&[2.0, 1.0]);
+        assert_eq!(y.len(), 3);
+        assert!((y[0] - 2.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn no_allocation_on_hot_path() {
+        // buffer pointers must be stable across predict calls — the static
+        // allocation story of Sec. 4.2
+        let e = tiny_engine(false);
+        let p0 = e.scratch.borrow().buf_ptrs();
+        for _ in 0..10 {
+            e.predict(&[1, 2]);
+        }
+        let p1 = e.scratch.borrow().buf_ptrs();
+        assert_eq!(p0, p1);
+    }
+
+    #[test]
+    #[should_panic(expected = "input length")]
+    fn wrong_input_length_panics() {
+        tiny_engine(false).predict(&[1, 2, 3]);
+    }
+}

@@ -1,0 +1,106 @@
+//! Static scratch buffers for the plan executor (paper Sec. 4.2).
+//!
+//! Two ping-pong activation buffers + one kernel scratch buffer, sized by
+//! the compiler's [`MemoryPlan`] and allocated exactly once. `split`
+//! hands the executor disjoint `(input, output, scratch)` views without
+//! any unsafe code, via `RefCell`-free plain borrows.
+
+use crate::compiler::plan::CompiledModel;
+
+/// Owned executor buffers.
+#[derive(Debug)]
+pub struct Scratch {
+    a: Vec<i8>,
+    b: Vec<i8>,
+    kernel: Vec<i8>,
+    /// Which buffer currently holds the live activations.
+    live_in_a: bool,
+}
+
+impl Scratch {
+    /// Allocate buffers per the compiled memory plan.
+    pub fn for_plan(compiled: &CompiledModel) -> Scratch {
+        let m = &compiled.memory;
+        // both buffers must also hold the model input/output endpoints
+        let a = m.buf_a.max(compiled.input_len()).max(compiled.output_len());
+        let b = m.buf_b.max(compiled.input_len()).max(compiled.output_len());
+        Scratch {
+            a: vec![0; a],
+            b: vec![0; b],
+            kernel: vec![0; m.scratch],
+            live_in_a: true,
+        }
+    }
+
+    /// Stage the model input into the live buffer.
+    pub fn load_input(&mut self, input: &[i8]) {
+        self.live_in_a = true;
+        self.a[..input.len()].copy_from_slice(input);
+    }
+
+    /// Disjoint (input, output, kernel-scratch) views for one step.
+    pub fn split(&mut self, in_len: usize, out_len: usize) -> (&[i8], &mut [i8], &mut [i8]) {
+        if self.live_in_a {
+            (&self.a[..in_len], &mut self.b[..out_len], &mut self.kernel[..])
+        } else {
+            (&self.b[..in_len], &mut self.a[..out_len], &mut self.kernel[..])
+        }
+    }
+
+    /// Flip after a step wrote its output.
+    pub fn flip(&mut self) {
+        self.live_in_a = !self.live_in_a;
+    }
+
+    /// The live buffer's first `len` elements (the final output).
+    pub fn current(&self, len: usize) -> &[i8] {
+        if self.live_in_a {
+            &self.a[..len]
+        } else {
+            &self.b[..len]
+        }
+    }
+
+    /// Buffer base pointers — used by tests to prove pointer stability
+    /// (no reallocation on the hot path).
+    pub fn buf_ptrs(&self) -> (usize, usize, usize) {
+        (self.a.as_ptr() as usize, self.b.as_ptr() as usize, self.kernel.as_ptr() as usize)
+    }
+
+    /// Total allocated bytes (must equal the memory plan's executor size,
+    /// modulo the input/output endpoint adjustment).
+    pub fn total_bytes(&self) -> usize {
+        self.a.len() + self.b.len() + self.kernel.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::plan::{CompileOptions, CompiledModel};
+    use crate::format::mfb::MfbModel;
+
+    #[test]
+    fn split_gives_disjoint_views_and_flip_swaps() {
+        let m = MfbModel::parse(&crate::format::mfb::tests::tiny_mfb()).unwrap();
+        let c = CompiledModel::compile(&m, CompileOptions::default()).unwrap();
+        let mut s = Scratch::for_plan(&c);
+        s.load_input(&[5, 6]);
+        {
+            let (x, y, _) = s.split(2, 3);
+            assert_eq!(x, &[5, 6]);
+            y[0] = 9;
+        }
+        s.flip();
+        assert_eq!(s.current(3)[0], 9);
+    }
+
+    #[test]
+    fn sized_at_least_for_endpoints() {
+        let m = MfbModel::parse(&crate::format::mfb::tests::tiny_mfb()).unwrap();
+        let c = CompiledModel::compile(&m, CompileOptions::default()).unwrap();
+        let s = Scratch::for_plan(&c);
+        assert!(s.a.len() >= c.input_len());
+        assert!(s.b.len() >= c.output_len());
+    }
+}

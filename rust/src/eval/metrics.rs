@@ -1,0 +1,118 @@
+//! Accuracy metrics (paper Sec. 6.2.1): MSE/RMSE for the sine predictor,
+//! Precision/Recall/F1 for the classifiers. Multi-class metrics are
+//! macro-averaged across classes, matching the paper's protocol for the
+//! speech command recognizer ("averaged to provide an overall accuracy
+//! across all of them").
+
+/// Mean squared error between predictions and targets.
+pub fn mse(pred: &[f32], target: &[f32]) -> f64 {
+    assert_eq!(pred.len(), target.len());
+    assert!(!pred.is_empty());
+    pred.iter()
+        .zip(target)
+        .map(|(p, t)| {
+            let d = (*p - *t) as f64;
+            d * d
+        })
+        .sum::<f64>()
+        / pred.len() as f64
+}
+
+/// Root mean squared error.
+pub fn rmse(pred: &[f32], target: &[f32]) -> f64 {
+    mse(pred, target).sqrt()
+}
+
+/// Per-class precision and recall for `n_classes` (one-vs-rest).
+pub fn precision_recall(pred: &[i32], truth: &[i32], n_classes: usize) -> Vec<(f64, f64)> {
+    assert_eq!(pred.len(), truth.len());
+    let mut tp = vec![0usize; n_classes];
+    let mut fp = vec![0usize; n_classes];
+    let mut fnn = vec![0usize; n_classes];
+    for (&p, &t) in pred.iter().zip(truth) {
+        let (p, t) = (p as usize, t as usize);
+        if p == t {
+            tp[p] += 1;
+        } else {
+            fp[p] += 1;
+            fnn[t] += 1;
+        }
+    }
+    (0..n_classes)
+        .map(|c| {
+            let prec = if tp[c] + fp[c] > 0 { tp[c] as f64 / (tp[c] + fp[c]) as f64 } else { 0.0 };
+            let rec = if tp[c] + fnn[c] > 0 { tp[c] as f64 / (tp[c] + fnn[c]) as f64 } else { 0.0 };
+            (prec, rec)
+        })
+        .collect()
+}
+
+/// F1 from precision and recall.
+pub fn f1_score(precision: f64, recall: f64) -> f64 {
+    if precision + recall == 0.0 {
+        0.0
+    } else {
+        2.0 * precision * recall / (precision + recall)
+    }
+}
+
+/// Macro-averaged (precision, recall, F1).
+pub fn macro_prf(pred: &[i32], truth: &[i32], n_classes: usize) -> (f64, f64, f64) {
+    let pr = precision_recall(pred, truth, n_classes);
+    let n = n_classes as f64;
+    let p = pr.iter().map(|x| x.0).sum::<f64>() / n;
+    let r = pr.iter().map(|x| x.1).sum::<f64>() / n;
+    (p, r, f1_score(p, r))
+}
+
+/// Binary-task (positive class = 1) precision/recall/F1 — the person
+/// detector protocol.
+pub fn binary_prf(pred: &[i32], truth: &[i32]) -> (f64, f64, f64) {
+    let pr = precision_recall(pred, truth, 2);
+    let (p, r) = pr[1];
+    (p, r, f1_score(p, r))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mse_of_identical_is_zero() {
+        assert_eq!(mse(&[1.0, 2.0], &[1.0, 2.0]), 0.0);
+    }
+
+    #[test]
+    fn mse_hand_value() {
+        // errors: 1, -2 -> (1+4)/2 = 2.5
+        assert!((mse(&[2.0, 0.0], &[1.0, 2.0]) - 2.5).abs() < 1e-12);
+        assert!((rmse(&[2.0, 0.0], &[1.0, 2.0]) - 2.5f64.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn perfect_classifier_prf() {
+        let y = [0, 1, 2, 1, 0];
+        let (p, r, f1) = macro_prf(&y, &y, 3);
+        assert_eq!((p, r, f1), (1.0, 1.0, 1.0));
+    }
+
+    #[test]
+    fn binary_prf_hand_example() {
+        // truth:  1 1 1 0 0
+        // pred:   1 0 1 1 0  -> tp=2 fp=1 fn=1 => P=2/3, R=2/3
+        let truth = [1, 1, 1, 0, 0];
+        let pred = [1, 0, 1, 1, 0];
+        let (p, r, f1) = binary_prf(&pred, &truth);
+        assert!((p - 2.0 / 3.0).abs() < 1e-12);
+        assert!((r - 2.0 / 3.0).abs() < 1e-12);
+        assert!((f1 - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn absent_class_gets_zero_precision() {
+        let truth = [0, 0, 1];
+        let pred = [0, 0, 0]; // class 1 never predicted
+        let pr = precision_recall(&pred, &truth, 2);
+        assert_eq!(pr[1], (0.0, 0.0));
+    }
+}

@@ -1,0 +1,8 @@
+//! Evaluation: datasets, metrics and the Table-5 accuracy runner
+//! (DESIGN.md S17, S20).
+
+pub mod accuracy;
+pub mod metrics;
+
+pub use accuracy::{evaluate_classifier, evaluate_sine, ClassifierScores, SineScores};
+pub use metrics::{f1_score, mse, precision_recall, rmse};

@@ -1,0 +1,112 @@
+//! GLD golden vector reader (DESIGN.md S4): int8 input/output pairs
+//! produced by the JAX oracle at build time. The Rust engines must
+//! reproduce these **bit-exactly** (MicroFlow float-scale path) or within
+//! ±1 output unit (TFLM fixed-point path) — asserted in
+//! `rust/tests/integration_artifacts.rs`.
+//!
+//! ```text
+//! magic "GLD1" | u32 version=1 | u32 n
+//! u8 in_ndims | u32* dims        (per-sample)
+//! u8 out_ndims | u32* dims
+//! i8* X (n * prod(in))  | i8* Y (n * prod(out))
+//! ```
+
+use anyhow::{bail, Context, Result};
+
+use super::reader::Reader;
+
+/// Golden input/output pairs.
+#[derive(Clone, Debug)]
+pub struct Golden {
+    pub n: usize,
+    pub in_shape: Vec<usize>,
+    pub out_shape: Vec<usize>,
+    pub x: Vec<i8>,
+    pub y: Vec<i8>,
+}
+
+impl Golden {
+    pub fn parse(buf: &[u8]) -> Result<Golden> {
+        let mut r = Reader::new(buf);
+        r.magic(b"GLD1")?;
+        let version = r.u32()?;
+        if version != 1 {
+            bail!("unsupported GLD version {version}");
+        }
+        let n = r.u32()? as usize;
+        let in_nd = r.u8()? as usize;
+        let mut in_shape = Vec::with_capacity(in_nd);
+        for _ in 0..in_nd {
+            in_shape.push(r.u32()? as usize);
+        }
+        let out_nd = r.u8()? as usize;
+        let mut out_shape = Vec::with_capacity(out_nd);
+        for _ in 0..out_nd {
+            out_shape.push(r.u32()? as usize);
+        }
+        let in_len: usize = in_shape.iter().product();
+        let out_len: usize = out_shape.iter().product();
+        let x = r.i8_vec(n * in_len)?;
+        let y = r.i8_vec(n * out_len)?;
+        Ok(Golden { n, in_shape, out_shape, x, y })
+    }
+
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<Golden> {
+        let buf = std::fs::read(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Self::parse(&buf)
+    }
+
+    pub fn in_len(&self) -> usize {
+        self.in_shape.iter().product()
+    }
+
+    pub fn out_len(&self) -> usize {
+        self.out_shape.iter().product()
+    }
+
+    pub fn input(&self, i: usize) -> &[i8] {
+        let len = self.in_len();
+        &self.x[i * len..(i + 1) * len]
+    }
+
+    pub fn output(&self, i: usize) -> &[i8] {
+        let len = self.out_len();
+        &self.y[i * len..(i + 1) * len]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn build() -> Vec<u8> {
+        let mut b: Vec<u8> = Vec::new();
+        b.extend_from_slice(b"GLD1");
+        b.extend_from_slice(&1u32.to_le_bytes());
+        b.extend_from_slice(&2u32.to_le_bytes()); // n = 2
+        b.push(1);
+        b.extend_from_slice(&3u32.to_le_bytes()); // in [3]
+        b.push(1);
+        b.extend_from_slice(&1u32.to_le_bytes()); // out [1]
+        b.extend_from_slice(&[1u8, 2, 255, 4, 5, 6]); // X
+        b.extend_from_slice(&[10u8, 246]); // Y: 10, -10
+        b
+    }
+
+    #[test]
+    fn parses_and_indexes() {
+        let g = Golden::parse(&build()).unwrap();
+        assert_eq!(g.n, 2);
+        assert_eq!(g.input(0), &[1, 2, -1]);
+        assert_eq!(g.input(1), &[4, 5, 6]);
+        assert_eq!(g.output(0), &[10]);
+        assert_eq!(g.output(1), &[-10]);
+    }
+
+    #[test]
+    fn truncation_is_error() {
+        let b = build();
+        assert!(Golden::parse(&b[..b.len() - 1]).is_err());
+    }
+}

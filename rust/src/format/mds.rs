@@ -1,0 +1,147 @@
+//! MDS dataset reader (DESIGN.md S17): evaluation datasets exported by
+//! `python/compile/export_mfb.py::write_mds`.
+//!
+//! ```text
+//! magic "MDS1" | u32 version=1 | str name
+//! u8 ndims | u32* dims                 (per-sample feature shape)
+//! u8 label_kind (0 regression, 1 class) | u32 label_dim
+//! u32 n
+//! f32* X   (n * prod(dims))
+//! f32*|i32* Y (n * label_dim)
+//! ```
+
+use anyhow::{bail, Context, Result};
+
+use super::reader::Reader;
+
+/// Labels: float regression targets or integer class ids.
+#[derive(Clone, Debug)]
+pub enum Labels {
+    Regression { dim: usize, values: Vec<f32> },
+    Classes(Vec<i32>),
+}
+
+/// An evaluation dataset.
+#[derive(Clone, Debug)]
+pub struct MdsDataset {
+    pub name: String,
+    pub sample_shape: Vec<usize>,
+    pub n: usize,
+    /// Row-major features: `n * prod(sample_shape)` floats.
+    pub x: Vec<f32>,
+    pub labels: Labels,
+}
+
+impl MdsDataset {
+    pub fn parse(buf: &[u8]) -> Result<MdsDataset> {
+        let mut r = Reader::new(buf);
+        r.magic(b"MDS1")?;
+        let version = r.u32()?;
+        if version != 1 {
+            bail!("unsupported MDS version {version}");
+        }
+        let name = r.string()?;
+        let ndims = r.u8()? as usize;
+        let mut sample_shape = Vec::with_capacity(ndims);
+        for _ in 0..ndims {
+            sample_shape.push(r.u32()? as usize);
+        }
+        let label_kind = r.u8()?;
+        let label_dim = r.u32()? as usize;
+        let n = r.u32()? as usize;
+        let sample_len: usize = sample_shape.iter().product();
+        let x = r.f32_vec(n * sample_len)?;
+        let labels = match label_kind {
+            0 => Labels::Regression { dim: label_dim, values: r.f32_vec(n * label_dim)? },
+            1 => Labels::Classes(r.i32_vec(n)?),
+            other => bail!("unknown label kind {other}"),
+        };
+        Ok(MdsDataset { name, sample_shape, n, x, labels })
+    }
+
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<MdsDataset> {
+        let buf = std::fs::read(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Self::parse(&buf)
+    }
+
+    /// Elements per sample.
+    pub fn sample_len(&self) -> usize {
+        self.sample_shape.iter().product()
+    }
+
+    /// Feature slice for sample `i`.
+    pub fn sample(&self, i: usize) -> &[f32] {
+        let len = self.sample_len();
+        &self.x[i * len..(i + 1) * len]
+    }
+
+    /// Class label for sample `i` (classification datasets only).
+    pub fn class(&self, i: usize) -> i32 {
+        match &self.labels {
+            Labels::Classes(c) => c[i],
+            _ => panic!("not a classification dataset"),
+        }
+    }
+
+    /// Regression target row for sample `i`.
+    pub fn target(&self, i: usize) -> &[f32] {
+        match &self.labels {
+            Labels::Regression { dim, values } => &values[i * dim..(i + 1) * dim],
+            _ => panic!("not a regression dataset"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn build(label_kind: u8) -> Vec<u8> {
+        let mut b: Vec<u8> = Vec::new();
+        b.extend_from_slice(b"MDS1");
+        b.extend_from_slice(&1u32.to_le_bytes());
+        b.extend_from_slice(&4u16.to_le_bytes());
+        b.extend_from_slice(b"mini");
+        b.push(1); // ndims
+        b.extend_from_slice(&2u32.to_le_bytes()); // dim = 2
+        b.push(label_kind);
+        b.extend_from_slice(&1u32.to_le_bytes()); // label_dim
+        b.extend_from_slice(&3u32.to_le_bytes()); // n
+        for v in [0.0f32, 1.0, 2.0, 3.0, 4.0, 5.0] {
+            b.extend_from_slice(&v.to_le_bytes());
+        }
+        if label_kind == 0 {
+            for v in [0.5f32, 1.5, 2.5] {
+                b.extend_from_slice(&v.to_le_bytes());
+            }
+        } else {
+            for v in [0i32, 1, 0] {
+                b.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        b
+    }
+
+    #[test]
+    fn parses_regression() {
+        let ds = MdsDataset::parse(&build(0)).unwrap();
+        assert_eq!(ds.name, "mini");
+        assert_eq!(ds.n, 3);
+        assert_eq!(ds.sample(1), &[2.0, 3.0]);
+        assert_eq!(ds.target(2), &[2.5]);
+    }
+
+    #[test]
+    fn parses_classification() {
+        let ds = MdsDataset::parse(&build(1)).unwrap();
+        assert_eq!(ds.class(0), 0);
+        assert_eq!(ds.class(1), 1);
+    }
+
+    #[test]
+    fn truncation_is_error() {
+        let b = build(1);
+        assert!(MdsDataset::parse(&b[..b.len() - 2]).is_err());
+    }
+}

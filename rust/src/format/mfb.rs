@@ -1,0 +1,484 @@
+//! MFB model container reader (DESIGN.md S4).
+//!
+//! Byte layout (little-endian) — must stay in lockstep with
+//! `python/compile/export_mfb.py`:
+//!
+//! ```text
+//! magic "MFB1" | u32 version=1 | str producer
+//! u32 n_tensors | tensor*
+//! u32 n_ops     | op*
+//! u8 n_graph_in  | i32*   (tensor indices)
+//! u8 n_graph_out | i32*
+//! str metadata
+//!
+//! str    := u16 len | utf8 bytes
+//! tensor := str name | u8 dtype(0=i8,1=i32,2=f32) | u8 ndims | u32* dims
+//!           | f32 scale | i32 zero_point | u64 nbytes | bytes data
+//! op     := u8 opcode | u32 version | u8 n_in | i32* | u8 n_out | i32*
+//!           | u16 opt_len | opts
+//! ```
+//!
+//! The container intentionally mirrors what a TFLite FlatBuffer carries
+//! (names, versions, metadata, full tensor tables) so the interpreter
+//! baseline has the same amount of runtime parsing to do as TFLM, while
+//! the MicroFlow compiler strips everything it can (paper Sec. 6.2.2).
+
+use anyhow::{bail, Context, Result};
+
+use super::reader::Reader;
+use crate::tensor::{DType, QParams};
+
+/// Operator codes (mirrors the exporter's `OPCODES`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum OpCode {
+    FullyConnected,
+    Conv2D,
+    DepthwiseConv2D,
+    AveragePool2D,
+    Reshape,
+    Softmax,
+    Relu,
+    Relu6,
+}
+
+impl OpCode {
+    pub fn from_u8(v: u8) -> Result<Self> {
+        Ok(match v {
+            0 => OpCode::FullyConnected,
+            1 => OpCode::Conv2D,
+            2 => OpCode::DepthwiseConv2D,
+            3 => OpCode::AveragePool2D,
+            4 => OpCode::Reshape,
+            5 => OpCode::Softmax,
+            6 => OpCode::Relu,
+            7 => OpCode::Relu6,
+            other => bail!("unknown opcode {other}"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            OpCode::FullyConnected => "FullyConnected",
+            OpCode::Conv2D => "Conv2D",
+            OpCode::DepthwiseConv2D => "DepthwiseConv2D",
+            OpCode::AveragePool2D => "AveragePool2D",
+            OpCode::Reshape => "Reshape",
+            OpCode::Softmax => "Softmax",
+            OpCode::Relu => "Relu",
+            OpCode::Relu6 => "Relu6",
+        }
+    }
+}
+
+/// Padding modes (TFLite convention).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Padding {
+    Same,
+    Valid,
+}
+
+impl Padding {
+    pub fn from_u8(v: u8) -> Result<Self> {
+        Ok(match v {
+            0 => Padding::Same,
+            1 => Padding::Valid,
+            other => bail!("unknown padding code {other}"),
+        })
+    }
+}
+
+/// One tensor table entry. Weight/bias tensors carry `data`; activation
+/// tensors have empty `data` and are materialized by the engines.
+#[derive(Clone, Debug)]
+pub struct TensorDef {
+    pub name: String,
+    pub dtype: DType,
+    pub dims: Vec<usize>,
+    pub qparams: QParams,
+    pub data: Vec<u8>,
+}
+
+impl TensorDef {
+    pub fn numel(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    /// Payload reinterpreted as int8 (weights).
+    pub fn data_i8(&self) -> Result<Vec<i8>> {
+        if self.dtype != DType::I8 {
+            bail!("tensor {} is not i8", self.name);
+        }
+        Ok(self.data.iter().map(|&b| b as i8).collect())
+    }
+
+    /// Payload reinterpreted as int32 (biases).
+    pub fn data_i32(&self) -> Result<Vec<i32>> {
+        if self.dtype != DType::I32 {
+            bail!("tensor {} is not i32", self.name);
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+}
+
+/// Parsed operator options.
+#[derive(Clone, Debug, PartialEq)]
+pub enum OpOptions {
+    FullyConnected { fused_act: u8 },
+    Conv2D { stride: (usize, usize), padding: Padding, fused_act: u8 },
+    DepthwiseConv2D { stride: (usize, usize), padding: Padding, fused_act: u8, depth_multiplier: usize },
+    AveragePool2D { filter: (usize, usize), stride: (usize, usize), padding: Padding, fused_act: u8 },
+    Reshape { dims: Vec<usize> },
+    Softmax { beta: f32 },
+    None,
+}
+
+/// One operator list entry: opcode, version, tensor indices and options.
+#[derive(Clone, Debug)]
+pub struct Operator {
+    pub opcode: OpCode,
+    pub version: u32,
+    pub inputs: Vec<i32>,
+    pub outputs: Vec<i32>,
+    pub options: OpOptions,
+}
+
+impl Operator {
+    pub fn input(&self, i: usize) -> Result<usize> {
+        let idx = *self.inputs.get(i).context("missing operator input")?;
+        if idx < 0 {
+            bail!("operator input {i} is absent");
+        }
+        Ok(idx as usize)
+    }
+
+    pub fn output(&self, i: usize) -> Result<usize> {
+        let idx = *self.outputs.get(i).context("missing operator output")?;
+        if idx < 0 {
+            bail!("operator output {i} is absent");
+        }
+        Ok(idx as usize)
+    }
+}
+
+/// A parsed MFB model: the lossless internal representation of Fig. 4.
+#[derive(Clone, Debug)]
+pub struct MfbModel {
+    pub version: u32,
+    pub producer: String,
+    pub tensors: Vec<TensorDef>,
+    pub operators: Vec<Operator>,
+    pub graph_inputs: Vec<usize>,
+    pub graph_outputs: Vec<usize>,
+    pub metadata: String,
+    /// Total serialized size (the Flash cost of storing the file as TFLM
+    /// stores the FlatBuffer; used by the memory model).
+    pub file_bytes: usize,
+}
+
+impl MfbModel {
+    /// Parse an MFB byte buffer.
+    pub fn parse(buf: &[u8]) -> Result<MfbModel> {
+        let mut r = Reader::new(buf);
+        r.magic(b"MFB1")?;
+        let version = r.u32()?;
+        if version != 1 {
+            bail!("unsupported MFB version {version}");
+        }
+        let producer = r.string()?;
+
+        let n_tensors = r.u32()? as usize;
+        // cap pre-allocation by remaining bytes: n_tensors is untrusted
+        let mut tensors = Vec::with_capacity(n_tensors.min(r.remaining()));
+        for _ in 0..n_tensors {
+            let name = r.string()?;
+            let dtype = match r.u8()? {
+                0 => DType::I8,
+                1 => DType::I32,
+                2 => DType::F32,
+                other => bail!("unknown dtype code {other} in tensor {name}"),
+            };
+            let ndims = r.u8()? as usize;
+            let mut dims = Vec::with_capacity(ndims);
+            for _ in 0..ndims {
+                dims.push(r.u32()? as usize);
+            }
+            let scale = r.f32()?;
+            let zero_point = r.i32()?;
+            let nbytes = r.u64()? as usize;
+            let data = r.take(nbytes)?.to_vec();
+            if !data.is_empty() {
+                let expect = dims.iter().product::<usize>() * dtype.size_bytes();
+                if data.len() != expect {
+                    bail!("tensor {name}: payload {} bytes, dims say {expect}", data.len());
+                }
+            }
+            tensors.push(TensorDef { name, dtype, dims, qparams: QParams::new(scale, zero_point), data });
+        }
+
+        let n_ops = r.u32()? as usize;
+        let mut operators = Vec::with_capacity(n_ops.min(r.remaining()));
+        for oi in 0..n_ops {
+            let opcode = OpCode::from_u8(r.u8()?)?;
+            let version = r.u32()?;
+            let n_in = r.u8()? as usize;
+            let mut inputs = Vec::with_capacity(n_in);
+            for _ in 0..n_in {
+                inputs.push(r.i32()?);
+            }
+            let n_out = r.u8()? as usize;
+            let mut outputs = Vec::with_capacity(n_out);
+            for _ in 0..n_out {
+                outputs.push(r.i32()?);
+            }
+            let opt_len = r.u16()? as usize;
+            let opts_raw = r.take(opt_len)?;
+            let options = parse_options(opcode, opts_raw)
+                .with_context(|| format!("operator #{oi} ({})", opcode.name()))?;
+            // validate indices now so downstream code can trust them
+            for &idx in inputs.iter().chain(outputs.iter()) {
+                if idx >= 0 && idx as usize >= n_tensors {
+                    bail!("operator #{oi}: tensor index {idx} out of range ({n_tensors} tensors)");
+                }
+            }
+            operators.push(Operator { opcode, version, inputs, outputs, options });
+        }
+
+        let n_gin = r.u8()? as usize;
+        let mut graph_inputs = Vec::with_capacity(n_gin);
+        for _ in 0..n_gin {
+            let idx = r.i32()?;
+            if idx < 0 || idx as usize >= n_tensors {
+                bail!("graph input index {idx} out of range");
+            }
+            graph_inputs.push(idx as usize);
+        }
+        let n_gout = r.u8()? as usize;
+        let mut graph_outputs = Vec::with_capacity(n_gout);
+        for _ in 0..n_gout {
+            let idx = r.i32()?;
+            if idx < 0 || idx as usize >= n_tensors {
+                bail!("graph output index {idx} out of range");
+            }
+            graph_outputs.push(idx as usize);
+        }
+        let metadata = r.string()?;
+
+        Ok(MfbModel {
+            version,
+            producer,
+            tensors,
+            operators,
+            graph_inputs,
+            graph_outputs,
+            metadata,
+            file_bytes: buf.len(),
+        })
+    }
+
+    /// Load from a file path.
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<MfbModel> {
+        let buf = std::fs::read(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Self::parse(&buf)
+    }
+
+    /// Sum of weight/bias payload bytes (the paper's model "Size").
+    pub fn weights_bytes(&self) -> usize {
+        self.tensors.iter().map(|t| t.data.len()).sum()
+    }
+
+    /// Bytes of *metadata* TFLM must keep in Flash but MicroFlow strips:
+    /// names, options, versions, table structure — everything except the
+    /// raw payloads.
+    pub fn metadata_bytes(&self) -> usize {
+        self.file_bytes - self.weights_bytes()
+    }
+
+    /// Per-sample input shape (graph input dims minus the batch dim).
+    pub fn input_shape(&self) -> Vec<usize> {
+        self.tensors[self.graph_inputs[0]].dims[1..].to_vec()
+    }
+
+    pub fn output_shape(&self) -> Vec<usize> {
+        self.tensors[self.graph_outputs[0]].dims[1..].to_vec()
+    }
+
+    pub fn input_qparams(&self) -> QParams {
+        self.tensors[self.graph_inputs[0]].qparams
+    }
+
+    pub fn output_qparams(&self) -> QParams {
+        self.tensors[self.graph_outputs[0]].qparams
+    }
+}
+
+fn parse_options(opcode: OpCode, raw: &[u8]) -> Result<OpOptions> {
+    let mut r = Reader::new(raw);
+    Ok(match opcode {
+        OpCode::FullyConnected => OpOptions::FullyConnected { fused_act: r.u8()? },
+        OpCode::Conv2D => OpOptions::Conv2D {
+            stride: (r.u8()? as usize, r.u8()? as usize),
+            padding: Padding::from_u8(r.u8()?)?,
+            fused_act: r.u8()?,
+        },
+        OpCode::DepthwiseConv2D => {
+            let stride = (r.u8()? as usize, r.u8()? as usize);
+            let padding = Padding::from_u8(r.u8()?)?;
+            let fused_act = r.u8()?;
+            let depth_multiplier = r.u32()? as usize;
+            OpOptions::DepthwiseConv2D { stride, padding, fused_act, depth_multiplier }
+        }
+        OpCode::AveragePool2D => OpOptions::AveragePool2D {
+            filter: (r.u8()? as usize, r.u8()? as usize),
+            stride: (r.u8()? as usize, r.u8()? as usize),
+            padding: Padding::from_u8(r.u8()?)?,
+            fused_act: r.u8()?,
+        },
+        OpCode::Reshape => {
+            let ndims = r.u8()? as usize;
+            let mut dims = Vec::with_capacity(ndims);
+            for _ in 0..ndims {
+                dims.push(r.u32()? as usize);
+            }
+            OpOptions::Reshape { dims }
+        }
+        OpCode::Softmax => OpOptions::Softmax { beta: r.f32()? },
+        OpCode::Relu | OpCode::Relu6 => OpOptions::None,
+    })
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+
+    /// Hand-build a tiny valid MFB buffer (1 FC op) for parser tests.
+    pub(crate) fn tiny_mfb() -> Vec<u8> {
+        let mut b: Vec<u8> = Vec::new();
+        let s = |b: &mut Vec<u8>, s: &str| {
+            b.extend_from_slice(&(s.len() as u16).to_le_bytes());
+            b.extend_from_slice(s.as_bytes());
+        };
+        b.extend_from_slice(b"MFB1");
+        b.extend_from_slice(&1u32.to_le_bytes());
+        s(&mut b, "test");
+        b.extend_from_slice(&4u32.to_le_bytes()); // 4 tensors
+        // t0: input act [1,2] i8
+        s(&mut b, "in");
+        b.push(0);
+        b.push(2);
+        b.extend_from_slice(&1u32.to_le_bytes());
+        b.extend_from_slice(&2u32.to_le_bytes());
+        b.extend_from_slice(&0.5f32.to_le_bytes());
+        b.extend_from_slice(&(-1i32).to_le_bytes());
+        b.extend_from_slice(&0u64.to_le_bytes());
+        // t1: weights [2,3] i8 with data
+        s(&mut b, "w");
+        b.push(0);
+        b.push(2);
+        b.extend_from_slice(&2u32.to_le_bytes());
+        b.extend_from_slice(&3u32.to_le_bytes());
+        b.extend_from_slice(&0.25f32.to_le_bytes());
+        b.extend_from_slice(&0i32.to_le_bytes());
+        b.extend_from_slice(&6u64.to_le_bytes());
+        b.extend_from_slice(&[1, 2, 3, 255, 254, 253]); // -1,-2,-3 as i8
+        // t2: bias [3] i32
+        s(&mut b, "b");
+        b.push(1);
+        b.push(1);
+        b.extend_from_slice(&3u32.to_le_bytes());
+        b.extend_from_slice(&0.125f32.to_le_bytes());
+        b.extend_from_slice(&0i32.to_le_bytes());
+        b.extend_from_slice(&12u64.to_le_bytes());
+        for v in [10i32, -20, 30] {
+            b.extend_from_slice(&v.to_le_bytes());
+        }
+        // t3: output act [1,3] i8
+        s(&mut b, "out");
+        b.push(0);
+        b.push(2);
+        b.extend_from_slice(&1u32.to_le_bytes());
+        b.extend_from_slice(&3u32.to_le_bytes());
+        b.extend_from_slice(&1.0f32.to_le_bytes());
+        b.extend_from_slice(&0i32.to_le_bytes());
+        b.extend_from_slice(&0u64.to_le_bytes());
+        // 1 op: FC(in=0, w=1, b=2) -> 3, fused relu
+        b.extend_from_slice(&1u32.to_le_bytes());
+        b.push(0); // opcode FC
+        b.extend_from_slice(&1u32.to_le_bytes()); // version
+        b.push(3);
+        for idx in [0i32, 1, 2] {
+            b.extend_from_slice(&idx.to_le_bytes());
+        }
+        b.push(1);
+        b.extend_from_slice(&3i32.to_le_bytes());
+        b.extend_from_slice(&1u16.to_le_bytes());
+        b.push(1); // fused_act = relu
+        // graph io
+        b.push(1);
+        b.extend_from_slice(&0i32.to_le_bytes());
+        b.push(1);
+        b.extend_from_slice(&3i32.to_le_bytes());
+        s(&mut b, "{}");
+        b
+    }
+
+    #[test]
+    fn parses_tiny_model() {
+        let buf = tiny_mfb();
+        let m = MfbModel::parse(&buf).unwrap();
+        assert_eq!(m.producer, "test");
+        assert_eq!(m.tensors.len(), 4);
+        assert_eq!(m.operators.len(), 1);
+        assert_eq!(m.operators[0].opcode, OpCode::FullyConnected);
+        assert_eq!(m.operators[0].options, OpOptions::FullyConnected { fused_act: 1 });
+        assert_eq!(m.tensors[1].data_i8().unwrap(), vec![1, 2, 3, -1, -2, -3]);
+        assert_eq!(m.tensors[2].data_i32().unwrap(), vec![10, -20, 30]);
+        assert_eq!(m.input_shape(), vec![2]);
+        assert_eq!(m.output_shape(), vec![3]);
+        assert_eq!(m.weights_bytes(), 18);
+        assert_eq!(m.file_bytes, buf.len());
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let mut buf = tiny_mfb();
+        buf[0] = b'X';
+        assert!(MfbModel::parse(&buf).is_err());
+    }
+
+    #[test]
+    fn rejects_truncation_everywhere() {
+        let buf = tiny_mfb();
+        // every strict prefix must fail cleanly, never panic
+        for cut in 0..buf.len() {
+            assert!(MfbModel::parse(&buf[..cut]).is_err(), "prefix {cut} parsed");
+        }
+    }
+
+    #[test]
+    fn rejects_out_of_range_tensor_index() {
+        let buf = tiny_mfb();
+        let m = MfbModel::parse(&buf).unwrap();
+        assert_eq!(m.graph_outputs, vec![3]);
+        // corrupt: find the graph-output index bytes (3i32 near the tail)
+        let mut bad = buf.clone();
+        let tail = bad.len() - 4 - 2; // before metadata str "{}"
+        bad[tail - 4..tail].copy_from_slice(&99i32.to_le_bytes());
+        assert!(MfbModel::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn wrong_payload_size_is_rejected() {
+        let mut buf = tiny_mfb();
+        // tensor t1 declares [2,3] i8 = 6 bytes; claim 5
+        // find the 6u64 length field: it's right before the 6 data bytes
+        let pos = buf.windows(8).position(|w| w == 6u64.to_le_bytes()).unwrap();
+        buf[pos..pos + 8].copy_from_slice(&5u64.to_le_bytes());
+        buf.remove(pos + 8); // drop one payload byte to keep framing
+        assert!(MfbModel::parse(&buf).is_err());
+    }
+}

@@ -1,0 +1,19 @@
+//! Binary container formats (DESIGN.md S4, §6): readers for the three
+//! build-time artifacts produced by `python/compile/export_mfb.py`.
+//!
+//! * [`mfb`]    — the MFB model container (TFLite-equivalent; byte layout
+//!   documented in the Python exporter and mirrored in `mfb::MfbModel`);
+//! * [`mds`]    — evaluation datasets;
+//! * [`golden`] — int8 golden input/output pairs from the JAX oracle.
+//!
+//! All formats are little-endian. Any layout change must be made in both
+//! the exporter and these readers, bumping the embedded version field.
+
+pub mod golden;
+pub mod mds;
+pub mod mfb;
+pub mod reader;
+
+pub use golden::Golden;
+pub use mds::{Labels, MdsDataset};
+pub use mfb::{MfbModel, OpCode, Operator, Padding, TensorDef};

@@ -1,0 +1,142 @@
+//! Little-endian byte cursor shared by the format readers.
+//!
+//! Deliberately fallible everywhere (no panics on truncated input): the
+//! interpreter baseline parses models at runtime like TFLM does, so a
+//! malformed file must surface as an error, not UB or a crash — that is
+//! the paper's robustness argument in executable form.
+
+use anyhow::{bail, Context, Result};
+
+/// Cursor over a byte slice with checked little-endian reads.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Reader { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn position(&self) -> usize {
+        self.pos
+    }
+
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            bail!("truncated input: need {n} bytes at offset {}, have {}", self.pos, self.remaining());
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u16(&mut self) -> Result<u16> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn i32(&mut self) -> Result<i32> {
+        let b = self.take(4)?;
+        Ok(i32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes(b.try_into().unwrap()))
+    }
+
+    pub fn f32(&mut self) -> Result<f32> {
+        let b = self.take(4)?;
+        Ok(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    /// `str := u16 len | utf8 bytes`
+    pub fn string(&mut self) -> Result<String> {
+        let len = self.u16()? as usize;
+        let raw = self.take(len)?;
+        String::from_utf8(raw.to_vec()).context("invalid utf8 in string field")
+    }
+
+    pub fn magic(&mut self, expect: &[u8; 4]) -> Result<()> {
+        let m = self.take(4)?;
+        if m != expect {
+            bail!(
+                "bad magic: expected {:?} got {:?}",
+                String::from_utf8_lossy(expect),
+                String::from_utf8_lossy(m)
+            );
+        }
+        Ok(())
+    }
+
+    pub fn i8_vec(&mut self, n: usize) -> Result<Vec<i8>> {
+        let raw = self.take(n)?;
+        Ok(raw.iter().map(|&b| b as i8).collect())
+    }
+
+    pub fn i32_vec(&mut self, n: usize) -> Result<Vec<i32>> {
+        let raw = self.take(n.checked_mul(4).context("i32 vec overflow")?)?;
+        Ok(raw.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    pub fn f32_vec(&mut self, n: usize) -> Result<Vec<f32>> {
+        let raw = self.take(n.checked_mul(4).context("f32 vec overflow")?)?;
+        Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reads_scalars_in_order() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&7u16.to_le_bytes());
+        buf.extend_from_slice(&0xdead_beefu32.to_le_bytes());
+        buf.extend_from_slice(&(-5i32).to_le_bytes());
+        buf.extend_from_slice(&1.5f32.to_le_bytes());
+        let mut r = Reader::new(&buf);
+        assert_eq!(r.u16().unwrap(), 7);
+        assert_eq!(r.u32().unwrap(), 0xdead_beef);
+        assert_eq!(r.i32().unwrap(), -5);
+        assert_eq!(r.f32().unwrap(), 1.5);
+        assert_eq!(r.remaining(), 0);
+    }
+
+    #[test]
+    fn truncation_is_an_error_not_a_panic() {
+        let mut r = Reader::new(&[1, 2]);
+        assert!(r.u32().is_err());
+    }
+
+    #[test]
+    fn string_roundtrip() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&5u16.to_le_bytes());
+        buf.extend_from_slice(b"hello");
+        let mut r = Reader::new(&buf);
+        assert_eq!(r.string().unwrap(), "hello");
+    }
+
+    #[test]
+    fn bad_magic_reports_both() {
+        let mut r = Reader::new(b"XXXXrest");
+        let err = r.magic(b"MFB1").unwrap_err().to_string();
+        assert!(err.contains("MFB1") && err.contains("XXXX"), "{err}");
+    }
+}

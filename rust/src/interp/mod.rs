@@ -1,0 +1,195 @@
+//! TFLM-like interpreter baseline (DESIGN.md S13) — the comparator the
+//! paper evaluates MicroFlow against.
+//!
+//! Faithfully reproduces the *mechanisms* the paper attributes TFLM's costs
+//! to (Sec. 2.3, 4.2, 6.2.2):
+//!
+//! * the **whole model container stays resident** (names, versions,
+//!   options — `MfbModel` is kept alive, like TFLM keeps the FlatBuffer
+//!   mapped in Flash);
+//! * parsing/validation happen at **runtime** (`Interpreter::new` is the
+//!   `AllocateTensors` moment, re-run per deployment);
+//! * activations live in a **tensor arena** sized for the worst case and
+//!   held for the interpreter's lifetime ([`arena`]);
+//! * kernels are resolved through an **op-resolver registry** of function
+//!   pointers ([`resolver`]) and invoked via per-node dispatch;
+//! * kernel arithmetic is integer-only gemmlowp fixed-point with
+//!   per-element zero-point application — more work per MAC, no folded
+//!   constants (`kernels::*_interp`).
+
+pub mod arena;
+pub mod resolver;
+
+use anyhow::{bail, Context, Result};
+
+use crate::format::mfb::MfbModel;
+use crate::tensor::quant::QParams;
+use arena::ArenaPlan;
+use resolver::{NodeData, OpResolver, RegisteredKernel};
+
+/// The interpreter instance (TFLM's `MicroInterpreter` analogue).
+pub struct Interpreter {
+    /// The full model stays resident — the interpreter reads options and
+    /// tensor metadata from it during prepare/invoke (Flash cost!).
+    model: MfbModel,
+    /// Prepared per-node state (fixed-point multipliers etc. — TFLM
+    /// computes these in each kernel's `Prepare`).
+    nodes: Vec<PreparedNode>,
+    /// The tensor arena: one allocation for the lifetime, never shrunk.
+    arena: Vec<i8>,
+    /// Kernel scratch (TFLM allocates these inside the arena at prepare;
+    /// kept separate here but sized once and counted by the memory model).
+    scratch: Vec<i8>,
+    plan: ArenaPlan,
+}
+
+struct PreparedNode {
+    kernel: RegisteredKernel,
+    data: NodeData,
+    op_index: usize,
+}
+
+impl Interpreter {
+    /// Parse + prepare (TFLM: `GetModel` + `AllocateTensors`).
+    ///
+    /// `resolver` lists the kernels linked into the binary. TFLM links
+    /// whatever the resolver registers regardless of the model — the
+    /// memory model charges Flash for all of them.
+    pub fn new(model_bytes: &[u8], resolver: &OpResolver) -> Result<Self> {
+        // 1. runtime parsing — every byte of metadata is walked here
+        let model = MfbModel::parse(model_bytes).context("interpreter: model parse")?;
+
+        // 2. arena planning (TFLM's greedy memory planner)
+        let plan = ArenaPlan::plan(&model)?;
+        let arena = vec![0i8; plan.arena_size];
+
+        // 3. per-node prepare: resolve kernels, precompute multipliers
+        let mut nodes = Vec::with_capacity(model.operators.len());
+        for (oi, op) in model.operators.iter().enumerate() {
+            let kernel = resolver
+                .lookup(op.opcode)
+                .with_context(|| format!("op #{oi}: {} not registered", op.opcode.name()))?;
+            let data = (kernel.prepare)(&model, oi)
+                .with_context(|| format!("op #{oi}: prepare failed"))?;
+            nodes.push(PreparedNode { kernel, data, op_index: oi });
+        }
+        if model.graph_inputs.len() != 1 || model.graph_outputs.len() != 1 {
+            bail!("interpreter supports single-input single-output graphs");
+        }
+        let scratch_len = nodes.iter().map(|n| n.data.scratch_len()).max().unwrap_or(0);
+        let scratch = vec![0i8; scratch_len];
+        Ok(Interpreter { model, nodes, arena, scratch, plan })
+    }
+
+    pub fn arena_size(&self) -> usize {
+        self.plan.arena_size
+    }
+
+    pub fn model(&self) -> &MfbModel {
+        &self.model
+    }
+
+    pub fn input_len(&self) -> usize {
+        self.model.tensors[self.model.graph_inputs[0]].numel()
+    }
+
+    pub fn output_len(&self) -> usize {
+        self.model.tensors[self.model.graph_outputs[0]].numel()
+    }
+
+    pub fn input_qparams(&self) -> QParams {
+        self.model.input_qparams()
+    }
+
+    pub fn output_qparams(&self) -> QParams {
+        self.model.output_qparams()
+    }
+
+    /// Run one inference (TFLM's `Invoke`): per-node dispatch through the
+    /// registered kernel function pointers, reading/writing arena slices.
+    pub fn invoke(&mut self, input: &[i8]) -> Result<Vec<i8>> {
+        if input.len() != self.input_len() {
+            bail!("input length {} != {}", input.len(), self.input_len());
+        }
+        let in_idx = self.model.graph_inputs[0];
+        let off = self.plan.offset_of(in_idx).context("input tensor not in arena")?;
+        self.arena[off..off + input.len()].copy_from_slice(input);
+
+        for node in &self.nodes {
+            (node.kernel.invoke)(
+                &self.model,
+                node.op_index,
+                &node.data,
+                &self.plan,
+                &mut self.arena,
+                &mut self.scratch,
+            )
+            .with_context(|| format!("invoke op #{}", node.op_index))?;
+        }
+
+        let out_idx = self.model.graph_outputs[0];
+        let off = self.plan.offset_of(out_idx).context("output tensor not in arena")?;
+        let n = self.output_len();
+        Ok(self.arena[off..off + n].to_vec())
+    }
+
+    /// Float convenience (same contract as the MicroFlow engine).
+    pub fn invoke_f32(&mut self, input: &[f32]) -> Result<Vec<f32>> {
+        let q = self.input_qparams().quantize_slice(input);
+        let out = self.invoke(&q)?;
+        let oq = self.output_qparams();
+        Ok(out.iter().map(|&v| oq.dequantize(v)).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::plan::CompileOptions;
+    use crate::engine::MicroFlowEngine;
+
+    fn tiny_bytes() -> Vec<u8> {
+        crate::format::mfb::tests::tiny_mfb()
+    }
+
+    #[test]
+    fn interpreter_runs_tiny_model() {
+        let resolver = OpResolver::with_all_kernels();
+        let mut it = Interpreter::new(&tiny_bytes(), &resolver).unwrap();
+        let out = it.invoke(&[3, 1]).unwrap();
+        assert_eq!(out.len(), 3);
+        // fixed-point path: within 1 unit of the MicroFlow float path
+        let m = crate::format::mfb::MfbModel::parse(&tiny_bytes()).unwrap();
+        let e = MicroFlowEngine::new(&m, CompileOptions::default()).unwrap();
+        let mf = e.predict(&[3, 1]);
+        for (a, b) in out.iter().zip(&mf) {
+            assert!((*a as i32 - *b as i32).abs() <= 1, "{out:?} vs {mf:?}");
+        }
+    }
+
+    #[test]
+    fn missing_kernel_is_a_prepare_time_error() {
+        let resolver = OpResolver::new(); // nothing registered
+        assert!(Interpreter::new(&tiny_bytes(), &resolver).is_err());
+    }
+
+    #[test]
+    fn arena_is_stable_across_invokes() {
+        let resolver = OpResolver::with_all_kernels();
+        let mut it = Interpreter::new(&tiny_bytes(), &resolver).unwrap();
+        let p0 = it.arena.as_ptr() as usize;
+        let size0 = it.arena_size();
+        for _ in 0..5 {
+            it.invoke(&[1, 2]).unwrap();
+        }
+        assert_eq!(it.arena.as_ptr() as usize, p0);
+        assert_eq!(it.arena_size(), size0);
+    }
+
+    #[test]
+    fn invoke_rejects_wrong_input_length() {
+        let resolver = OpResolver::with_all_kernels();
+        let mut it = Interpreter::new(&tiny_bytes(), &resolver).unwrap();
+        assert!(it.invoke(&[1]).is_err());
+    }
+}

@@ -1,0 +1,419 @@
+//! Op resolver — TFLM's `MicroMutableOpResolver` analogue (DESIGN.md S13).
+//!
+//! Kernels register `(prepare, invoke)` function pointers keyed by opcode.
+//! `prepare` runs once per node at `AllocateTensors` time (computing the
+//! gemmlowp fixed-point multipliers and geometry — exactly what TFLM
+//! kernels do in their `Prepare`); `invoke` runs per inference, reading
+//! weights from the *resident model* and activations from the arena.
+//!
+//! The crucial contrast with the MicroFlow compiler: nothing model-specific
+//! is specialized — every registered kernel is "linked in" whether the
+//! model uses it or not (the Flash story of Fig. 9/10), options are
+//! re-read from the container, and the arithmetic applies zero points per
+//! element with no folded constants.
+
+use anyhow::{bail, Context, Result};
+
+use super::arena::ArenaPlan;
+use crate::format::mfb::{MfbModel, OpCode, OpOptions};
+use crate::kernels::view::ConvGeometry;
+use crate::kernels::{activation, average_pool2d, conv2d, depthwise_conv2d, fully_connected};
+use crate::tensor::fixedpoint::FixedPointMultiplier;
+use crate::tensor::quant::FusedAct;
+
+/// Prepared per-node state.
+#[derive(Clone, Debug)]
+pub enum NodeData {
+    Fc {
+        k: usize,
+        n: usize,
+        z_x: i32,
+        z_w: i32,
+        mult: FixedPointMultiplier,
+        z_y: i32,
+        act_min: i8,
+        act_max: i8,
+        scratch: usize,
+    },
+    Conv {
+        geo: ConvGeometry,
+        c_out: usize,
+        depth_multiplier: usize, // 0 for dense conv
+        z_x: i32,
+        z_w: i32,
+        mult: FixedPointMultiplier,
+        z_y: i32,
+        act_min: i8,
+        act_max: i8,
+        scratch: usize,
+    },
+    Pool {
+        geo: ConvGeometry,
+        z_x: i32,
+        act_min: i8,
+        act_max: i8,
+        scratch: usize,
+    },
+    Elementwise,
+}
+
+impl NodeData {
+    pub fn scratch_len(&self) -> usize {
+        match self {
+            NodeData::Fc { scratch, .. }
+            | NodeData::Conv { scratch, .. }
+            | NodeData::Pool { scratch, .. } => *scratch,
+            NodeData::Elementwise => 0,
+        }
+    }
+}
+
+pub type PrepareFn = fn(&MfbModel, usize) -> Result<NodeData>;
+pub type InvokeFn =
+    fn(&MfbModel, usize, &NodeData, &ArenaPlan, &mut [i8], &mut [i8]) -> Result<()>;
+
+/// A registered kernel.
+#[derive(Clone, Copy)]
+pub struct RegisteredKernel {
+    pub opcode: OpCode,
+    pub prepare: PrepareFn,
+    pub invoke: InvokeFn,
+}
+
+/// The registry.
+#[derive(Default)]
+pub struct OpResolver {
+    kernels: Vec<RegisteredKernel>,
+}
+
+impl OpResolver {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register every built-in kernel (what the paper's TFLM firmware does
+    /// with `AllOpsResolver`).
+    pub fn with_all_kernels() -> Self {
+        let mut r = Self::new();
+        r.register(OpCode::FullyConnected, prepare_fc, invoke_fc);
+        r.register(OpCode::Conv2D, prepare_conv, invoke_conv);
+        r.register(OpCode::DepthwiseConv2D, prepare_dwconv, invoke_conv);
+        r.register(OpCode::AveragePool2D, prepare_pool, invoke_pool);
+        r.register(OpCode::Reshape, prepare_elementwise, invoke_reshape);
+        r.register(OpCode::Softmax, prepare_elementwise, invoke_softmax);
+        r.register(OpCode::Relu, prepare_elementwise, invoke_relu);
+        r.register(OpCode::Relu6, prepare_elementwise, invoke_relu6);
+        r
+    }
+
+    pub fn register(&mut self, opcode: OpCode, prepare: PrepareFn, invoke: InvokeFn) {
+        self.kernels.push(RegisteredKernel { opcode, prepare, invoke });
+    }
+
+    pub fn lookup(&self, opcode: OpCode) -> Option<RegisteredKernel> {
+        self.kernels.iter().find(|k| k.opcode == opcode).copied()
+    }
+
+    pub fn registered_count(&self) -> usize {
+        self.kernels.len()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// shared helpers
+// ---------------------------------------------------------------------------
+
+fn fused_act(model: &MfbModel, oi: usize) -> Result<FusedAct> {
+    crate::compiler::preprocess::fused_act_of(&model.operators[oi])
+}
+
+/// Disjoint (input, output) arena views for one node.
+fn arena_io<'a>(
+    model: &MfbModel,
+    oi: usize,
+    plan: &ArenaPlan,
+    arena: &'a mut [i8],
+) -> Result<(&'a [i8], &'a mut [i8])> {
+    let op = &model.operators[oi];
+    let in_idx = op.input(0)?;
+    let out_idx = op.output(0)?;
+    let in_len = model.tensors[in_idx].numel();
+    let out_len = model.tensors[out_idx].numel();
+    let in_off = plan.offset_of(in_idx).context("input not in arena")?;
+    let out_off = plan.offset_of(out_idx).context("output not in arena")?;
+    if in_off + in_len <= out_off {
+        let (a, b) = arena.split_at_mut(out_off);
+        Ok((&a[in_off..in_off + in_len], &mut b[..out_len]))
+    } else if out_off + out_len <= in_off {
+        let (a, b) = arena.split_at_mut(in_off);
+        Ok((&b[..in_len], &mut a[out_off..out_off + out_len]))
+    } else {
+        bail!("op #{oi}: overlapping arena placements (planner bug)");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// FullyConnected
+// ---------------------------------------------------------------------------
+
+fn prepare_fc(model: &MfbModel, oi: usize) -> Result<NodeData> {
+    let op = &model.operators[oi];
+    let x_t = &model.tensors[op.input(0)?];
+    let w_t = &model.tensors[op.input(1)?];
+    let y_t = &model.tensors[op.output(0)?];
+    let [k, n] = w_t.dims[..] else { bail!("FC weights must be 2-D") };
+    let real = (x_t.qparams.scale as f64 * w_t.qparams.scale as f64) / y_t.qparams.scale as f64;
+    let act = fused_act(model, oi)?;
+    let (act_min, act_max) = act.bounds(y_t.qparams.scale, y_t.qparams.zero_point);
+    Ok(NodeData::Fc {
+        k,
+        n,
+        z_x: x_t.qparams.zero_point,
+        z_w: w_t.qparams.zero_point,
+        mult: FixedPointMultiplier::from_real(real),
+        z_y: y_t.qparams.zero_point,
+        act_min,
+        act_max,
+        scratch: 0,
+    })
+}
+
+fn invoke_fc(
+    model: &MfbModel,
+    oi: usize,
+    data: &NodeData,
+    plan: &ArenaPlan,
+    arena: &mut [i8],
+    _scratch: &mut [i8],
+) -> Result<()> {
+    let NodeData::Fc { k, n, z_x, z_w, mult, z_y, act_min, act_max, .. } = data else {
+        bail!("node data mismatch")
+    };
+    let op = &model.operators[oi];
+    // weights/bias read from the resident container every invoke
+    let w = model.tensors[op.input(1)?].data_i8()?;
+    let b = model.tensors[op.input(2)?].data_i32()?;
+    let (x, y) = arena_io(model, oi, plan, arena)?;
+    fully_connected::fully_connected_interp(
+        x, &w, &b, *k, *n, *z_x, *z_w, *mult, *z_y, *act_min, *act_max, y,
+    );
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Conv2D / DepthwiseConv2D (shared invoke, distinct prepare)
+// ---------------------------------------------------------------------------
+
+fn prepare_conv(model: &MfbModel, oi: usize) -> Result<NodeData> {
+    let op = &model.operators[oi];
+    let x_t = &model.tensors[op.input(0)?];
+    let f_t = &model.tensors[op.input(1)?];
+    let y_t = &model.tensors[op.output(0)?];
+    let OpOptions::Conv2D { stride, padding, .. } = op.options else {
+        bail!("bad Conv2D options")
+    };
+    let [c_out, kh, kw, c_in] = f_t.dims[..] else { bail!("Conv2D filters must be 4-D") };
+    let [_, h, w, _] = x_t.dims[..] else { bail!("Conv2D input must be [1,H,W,C]") };
+    let geo = ConvGeometry::new(h, w, c_in, kh, kw, stride.0, stride.1, padding);
+    let real = (x_t.qparams.scale as f64 * f_t.qparams.scale as f64) / y_t.qparams.scale as f64;
+    let act = fused_act(model, oi)?;
+    let (act_min, act_max) = act.bounds(y_t.qparams.scale, y_t.qparams.zero_point);
+    Ok(NodeData::Conv {
+        geo,
+        c_out,
+        depth_multiplier: 0,
+        z_x: x_t.qparams.zero_point,
+        z_w: f_t.qparams.zero_point,
+        mult: FixedPointMultiplier::from_real(real),
+        z_y: y_t.qparams.zero_point,
+        act_min,
+        act_max,
+        scratch: kh * kw * c_in,
+    })
+}
+
+fn prepare_dwconv(model: &MfbModel, oi: usize) -> Result<NodeData> {
+    let op = &model.operators[oi];
+    let x_t = &model.tensors[op.input(0)?];
+    let w_t = &model.tensors[op.input(1)?];
+    let y_t = &model.tensors[op.output(0)?];
+    let OpOptions::DepthwiseConv2D { stride, padding, depth_multiplier, .. } = op.options else {
+        bail!("bad DepthwiseConv2D options")
+    };
+    let [_, kh, kw, c_out] = w_t.dims[..] else { bail!("DW filters must be [1,KH,KW,Cout]") };
+    let [_, h, w, c_in] = x_t.dims[..] else { bail!("DW input must be [1,H,W,C]") };
+    let geo = ConvGeometry::new(h, w, c_in, kh, kw, stride.0, stride.1, padding);
+    let real = (x_t.qparams.scale as f64 * w_t.qparams.scale as f64) / y_t.qparams.scale as f64;
+    let act = fused_act(model, oi)?;
+    let (act_min, act_max) = act.bounds(y_t.qparams.scale, y_t.qparams.zero_point);
+    Ok(NodeData::Conv {
+        geo,
+        c_out,
+        depth_multiplier,
+        z_x: x_t.qparams.zero_point,
+        z_w: w_t.qparams.zero_point,
+        mult: FixedPointMultiplier::from_real(real),
+        z_y: y_t.qparams.zero_point,
+        act_min,
+        act_max,
+        scratch: kh * kw * c_in,
+    })
+}
+
+fn invoke_conv(
+    model: &MfbModel,
+    oi: usize,
+    data: &NodeData,
+    plan: &ArenaPlan,
+    arena: &mut [i8],
+    scratch: &mut [i8],
+) -> Result<()> {
+    let NodeData::Conv {
+        geo, c_out, depth_multiplier, z_x, z_w, mult, z_y, act_min, act_max, scratch: slen,
+    } = data
+    else {
+        bail!("node data mismatch")
+    };
+    let op = &model.operators[oi];
+    let filters = model.tensors[op.input(1)?].data_i8()?;
+    let bias = model.tensors[op.input(2)?].data_i32()?;
+    let (x, y) = arena_io(model, oi, plan, arena)?;
+    let view = &mut scratch[..*slen];
+    if *depth_multiplier == 0 {
+        conv2d::conv2d_interp(
+            x, &filters, &bias, geo, *c_out, *z_x, *z_w, *mult, *z_y, *act_min, *act_max, view, y,
+        );
+    } else {
+        depthwise_conv2d::depthwise_conv2d_interp(
+            x,
+            &filters,
+            &bias,
+            geo,
+            *depth_multiplier,
+            *z_x,
+            *z_w,
+            *mult,
+            *z_y,
+            *act_min,
+            *act_max,
+            view,
+            y,
+        );
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// AveragePool2D
+// ---------------------------------------------------------------------------
+
+fn prepare_pool(model: &MfbModel, oi: usize) -> Result<NodeData> {
+    let op = &model.operators[oi];
+    let x_t = &model.tensors[op.input(0)?];
+    let y_t = &model.tensors[op.output(0)?];
+    let OpOptions::AveragePool2D { filter, stride, padding, .. } = op.options else {
+        bail!("bad AveragePool2D options")
+    };
+    let [_, h, w, c] = x_t.dims[..] else { bail!("pool input must be [1,H,W,C]") };
+    let geo = ConvGeometry::new(h, w, c, filter.0, filter.1, stride.0, stride.1, padding);
+    let act = fused_act(model, oi)?;
+    let (act_min, act_max) = act.bounds(y_t.qparams.scale, y_t.qparams.zero_point);
+    Ok(NodeData::Pool {
+        geo,
+        z_x: x_t.qparams.zero_point,
+        act_min,
+        act_max,
+        scratch: filter.0 * filter.1 * c,
+    })
+}
+
+fn invoke_pool(
+    model: &MfbModel,
+    oi: usize,
+    data: &NodeData,
+    plan: &ArenaPlan,
+    arena: &mut [i8],
+    scratch: &mut [i8],
+) -> Result<()> {
+    let NodeData::Pool { geo, z_x, act_min, act_max, scratch: slen } = data else {
+        bail!("node data mismatch")
+    };
+    let (x, y) = arena_io(model, oi, plan, arena)?;
+    average_pool2d::average_pool2d_interp(
+        x,
+        geo,
+        *z_x as i8,
+        *act_min,
+        *act_max,
+        &mut scratch[..*slen],
+        y,
+    );
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// element-wise ops
+// ---------------------------------------------------------------------------
+
+fn prepare_elementwise(_model: &MfbModel, _oi: usize) -> Result<NodeData> {
+    Ok(NodeData::Elementwise)
+}
+
+fn invoke_reshape(
+    model: &MfbModel,
+    oi: usize,
+    _data: &NodeData,
+    plan: &ArenaPlan,
+    arena: &mut [i8],
+    _scratch: &mut [i8],
+) -> Result<()> {
+    // the interpreter copies: it has no compile-time aliasing knowledge
+    let (x, y) = arena_io(model, oi, plan, arena)?;
+    y.copy_from_slice(x);
+    Ok(())
+}
+
+macro_rules! elementwise_invoke {
+    ($name:ident, $kernel:path) => {
+        fn $name(
+            model: &MfbModel,
+            oi: usize,
+            _data: &NodeData,
+            plan: &ArenaPlan,
+            arena: &mut [i8],
+            _scratch: &mut [i8],
+        ) -> Result<()> {
+            let op = &model.operators[oi];
+            let xq = model.tensors[op.input(0)?].qparams;
+            let yq = model.tensors[op.output(0)?].qparams;
+            let (x, y) = arena_io(model, oi, plan, arena)?;
+            $kernel(x, xq.scale, xq.zero_point, yq.scale, yq.zero_point, y);
+            Ok(())
+        }
+    };
+}
+
+elementwise_invoke!(invoke_softmax, activation::softmax);
+elementwise_invoke!(invoke_relu, activation::relu);
+elementwise_invoke!(invoke_relu6, activation::relu6);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_kernels_resolver_covers_every_opcode() {
+        let r = OpResolver::with_all_kernels();
+        for code in 0..8u8 {
+            let op = OpCode::from_u8(code).unwrap();
+            assert!(r.lookup(op).is_some(), "{op:?} missing");
+        }
+        assert_eq!(r.registered_count(), 8);
+    }
+
+    #[test]
+    fn empty_resolver_resolves_nothing() {
+        let r = OpResolver::new();
+        assert!(r.lookup(OpCode::FullyConnected).is_none());
+    }
+}

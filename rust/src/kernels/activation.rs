@@ -1,0 +1,118 @@
+//! Standalone activation kernels — Eqs. (14), (16), (18) (DESIGN.md S11).
+//!
+//! Fused activations are just clamp bounds inside the matmul epilogues
+//! (Eqs. 15/17; see `FusedAct::bounds`). These standalone kernels cover
+//! activations appearing as their own graph ops — in our models only
+//! Softmax does, but ReLU/ReLU6 are implemented and exported for
+//! completeness (paper Table 2 lists them as operators).
+
+use crate::tensor::quant::{requant_float, round_half_away_i32, INT8_MAX, INT8_MIN};
+
+/// Standalone quantized ReLU (Eq. 14).
+pub fn relu(x: &[i8], s_x: f32, z_x: i32, s_y: f32, z_y: i32, out: &mut [i8]) {
+    let ratio = s_x / s_y;
+    for (o, &xi) in out.iter_mut().zip(x) {
+        let xq = xi as i32;
+        *o = if xq < z_x {
+            z_y.clamp(INT8_MIN, INT8_MAX) as i8
+        } else {
+            requant_float(xq - z_x, z_y as f32, ratio, INT8_MIN as i8, INT8_MAX as i8)
+        };
+    }
+}
+
+/// Standalone quantized ReLU6 (Eq. 16).
+pub fn relu6(x: &[i8], s_x: f32, z_x: i32, s_y: f32, z_y: i32, out: &mut [i8]) {
+    let ratio = s_x / s_y;
+    let knee = z_x as f32 + 6.0 / s_x;
+    let top = z_y as f32 + 6.0 / s_y;
+    for (o, &xi) in out.iter_mut().zip(x) {
+        let xq = xi as i32;
+        let y = if (xq as f32) >= knee {
+            top
+        } else if xq < z_x {
+            z_y as f32
+        } else {
+            z_y as f32 + ratio * (xq - z_x) as f32
+        };
+        *o = round_half_away_i32(y).clamp(INT8_MIN, INT8_MAX) as i8;
+    }
+}
+
+/// Quantized Softmax over the last axis (Eq. 18), max-subtracted for
+/// stability — algebraically identical (the max and z_x terms cancel in
+/// the ratio). Matches `ref.softmax` bit-exactly.
+pub fn softmax(x: &[i8], s_x: f32, z_x: i32, s_y: f32, z_y: i32, out: &mut [i8]) {
+    debug_assert_eq!(x.len(), out.len());
+    let xf: Vec<f32> = x.iter().map(|&v| s_x * (v as i32 - z_x) as f32).collect();
+    let max = xf.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let e: Vec<f32> = xf.iter().map(|&v| (v - max).exp()).collect();
+    let sum: f32 = e.iter().sum();
+    for (o, ei) in out.iter_mut().zip(&e) {
+        let p = ei / sum;
+        let y = z_y as f32 + p / s_y;
+        *o = round_half_away_i32(y).clamp(INT8_MIN, INT8_MAX) as i8;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn relu_zeros_below_zero_point() {
+        let x = [-10i8, -1, 0, 1, 10];
+        let mut out = [0i8; 5];
+        relu(&x, 0.5, 0, 0.5, 0, &mut out);
+        assert_eq!(out, [0, 0, 0, 1, 10]);
+    }
+
+    #[test]
+    fn relu_rescales_when_scales_differ() {
+        let x = [4i8];
+        let mut out = [0i8; 1];
+        // s_x/s_y = 2, z_x = 2, z_y = -1: y = -1 + 2*(4-2) = 3
+        relu(&x, 1.0, 2, 0.5, -1, &mut out);
+        assert_eq!(out, [3]);
+    }
+
+    #[test]
+    fn relu6_saturates_at_six() {
+        // s = 0.1, z = 0: 6/s = 60
+        let x = [-5i8, 0, 30, 59, 60, 100];
+        let mut out = [0i8; 6];
+        relu6(&x, 0.1, 0, 0.1, 0, &mut out);
+        assert_eq!(out, [0, 0, 30, 59, 60, 60]);
+    }
+
+    #[test]
+    fn softmax_probabilities_sum_to_one() {
+        // TFLite convention: s_y = 1/256, z_y = -128; sum of (q + 128) ≈ 256
+        let x = [10i8, 20, 30, -5];
+        let mut out = [0i8; 4];
+        softmax(&x, 0.1, 0, 1.0 / 256.0, -128, &mut out);
+        let total: i32 = out.iter().map(|&q| q as i32 + 128).sum();
+        assert!((total - 256).abs() <= 2, "total {total}");
+        // monotone: larger logit -> larger prob
+        assert!(out[2] > out[1] && out[1] > out[0] && out[0] > out[3]);
+    }
+
+    #[test]
+    fn softmax_uniform_on_equal_logits() {
+        let x = [7i8; 4];
+        let mut out = [0i8; 4];
+        softmax(&x, 0.1, 0, 1.0 / 256.0, -128, &mut out);
+        // p = 0.25 -> q = -128 + 64 = -64
+        assert_eq!(out, [-64; 4]);
+    }
+
+    #[test]
+    fn softmax_is_shift_invariant() {
+        let a = [0i8, 10, 20, 30];
+        let b = [50i8, 60, 70, 80]; // shifted by +50 quant units
+        let (mut oa, mut ob) = ([0i8; 4], [0i8; 4]);
+        softmax(&a, 0.05, 0, 1.0 / 256.0, -128, &mut oa);
+        softmax(&b, 0.05, 0, 1.0 / 256.0, -128, &mut ob);
+        assert_eq!(oa, ob);
+    }
+}

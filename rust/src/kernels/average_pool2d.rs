@@ -1,0 +1,174 @@
+//! AveragePool2D kernels — Eq. (12) / Appendix A.4 (DESIGN.md S9).
+//!
+//! Per-channel pooling; the channel dimension is preserved. The MicroFlow
+//! variant uses the float epilogue of Eq. 12 with the pre-computed
+//! `s_X / s_y` ratio (Eq. 13); the interpreter variant mimics TFLM's
+//! integer rounding average (only valid when input/output qparams match,
+//! which TFLite guarantees for pooling — our exporter preserves that).
+
+use crate::kernels::view::ConvGeometry;
+use crate::tensor::quant::round_half_away_i32;
+
+/// MicroFlow AveragePool2D (Eq. 12).
+///
+/// `y_q = round(z_y + ratio * (mean(view) - z_x))`, `ratio = s_X / s_y`.
+#[allow(clippy::too_many_arguments)]
+pub fn average_pool2d_microflow(
+    input: &[i8],
+    geo: &ConvGeometry,
+    z_x: i8,
+    ratio: f32,
+    z_y: i32,
+    act_min: i8,
+    act_max: i8,
+    view: &mut [i8],
+    out: &mut [i8],
+) {
+    let c = geo.in_c;
+    let kk = geo.k_h * geo.k_w;
+    debug_assert_eq!(view.len(), kk * c);
+    debug_assert_eq!(out.len(), geo.out_h * geo.out_w * c);
+    let inv_mn = 1.0f32 / kk as f32;
+    for oy in 0..geo.out_h {
+        for ox in 0..geo.out_w {
+            geo.extract_view(input, oy, ox, z_x, view);
+            let base = (oy * geo.out_w + ox) * c;
+            for ch in 0..c {
+                let mut sum = 0i32;
+                for t in 0..kk {
+                    sum += view[t * c + ch] as i32;
+                }
+                let mean = sum as f32 * inv_mn;
+                // matches ref.average_pool2d: z_y + ratio * (mean - z_x)
+                let acc_form = mean - z_x as i32 as f32;
+                let y = z_y as f32 + ratio * acc_form;
+                out[base + ch] = round_half_away_i32(y).clamp(act_min as i32, act_max as i32) as i8;
+            }
+        }
+    }
+}
+
+/// TFLM-style AveragePool2D: integer rounding average (shared in/out
+/// qparams, as TFLite requires for pooling).
+#[allow(clippy::too_many_arguments)]
+pub fn average_pool2d_interp(
+    input: &[i8],
+    geo: &ConvGeometry,
+    z_x: i8,
+    act_min: i8,
+    act_max: i8,
+    view: &mut [i8],
+    out: &mut [i8],
+) {
+    let c = geo.in_c;
+    let kk = geo.k_h * geo.k_w;
+    for oy in 0..geo.out_h {
+        for ox in 0..geo.out_w {
+            geo.extract_view(input, oy, ox, z_x, view);
+            let base = (oy * geo.out_w + ox) * c;
+            for ch in 0..c {
+                let mut sum = 0i32;
+                for t in 0..kk {
+                    sum += view[t * c + ch] as i32;
+                }
+                // TFLM: rounded integer division, ties away from zero
+                let n = kk as i32;
+                let avg = if sum >= 0 { (sum + n / 2) / n } else { (sum - n / 2) / n };
+                out[base + ch] = avg.clamp(act_min as i32, act_max as i32) as i8;
+            }
+        }
+    }
+}
+
+/// The interpreter path also needs the generic requant form when in/out
+/// scales differ (kept for robustness; unused on our exported models).
+#[allow(clippy::too_many_arguments)]
+pub fn average_pool2d_requant(
+    input: &[i8],
+    geo: &ConvGeometry,
+    z_x: i8,
+    ratio: f32,
+    z_y: i32,
+    act_min: i8,
+    act_max: i8,
+    view: &mut [i8],
+    out: &mut [i8],
+) {
+    // identical math to the microflow variant; the interpreter pays for it
+    // in dispatch + parse cost, not arithmetic
+    average_pool2d_microflow(input, geo, z_x, ratio, z_y, act_min, act_max, view, out);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::format::mfb::Padding;
+    use crate::util::Prng;
+
+    #[test]
+    fn constant_input_pools_to_itself_when_qparams_match() {
+        let geo = ConvGeometry::new(4, 4, 2, 2, 2, 2, 2, Padding::Valid);
+        let input = vec![42i8; 4 * 4 * 2];
+        let mut view = vec![0i8; 2 * 2 * 2];
+        let mut out = vec![0i8; 2 * 2 * 2];
+        average_pool2d_microflow(&input, &geo, 0, 1.0, 0, -128, 127, &mut view, &mut out);
+        assert!(out.iter().all(|&v| v == 42));
+        let mut out2 = vec![0i8; 2 * 2 * 2];
+        average_pool2d_interp(&input, &geo, 0, -128, 127, &mut view, &mut out2);
+        assert_eq!(out, out2);
+    }
+
+    #[test]
+    fn mean_is_per_channel() {
+        // 2x2 window, 2 channels: ch0 = [0,2,4,6] -> 3; ch1 = [10,10,10,10] -> 10
+        let geo = ConvGeometry::new(2, 2, 2, 2, 2, 2, 2, Padding::Valid);
+        let input = vec![0i8, 10, 2, 10, 4, 10, 6, 10];
+        let mut view = vec![0i8; 8];
+        let mut out = vec![0i8; 2];
+        average_pool2d_microflow(&input, &geo, 0, 1.0, 0, -128, 127, &mut view, &mut out);
+        assert_eq!(out, vec![3, 10]);
+    }
+
+    #[test]
+    fn matches_ref_formula_with_scale_change() {
+        let mut rng = Prng::new(2);
+        let geo = ConvGeometry::new(6, 6, 3, 3, 3, 3, 3, Padding::Valid);
+        let input = rng.i8_vec(6 * 6 * 3);
+        let (s_x, z_x, s_y, z_y) = (0.05f32, 4, 0.07f32, -3);
+        let ratio = s_x / s_y;
+        let mut view = vec![0i8; 27];
+        let mut out = vec![0i8; 2 * 2 * 3];
+        average_pool2d_microflow(&input, &geo, z_x as i8, ratio, z_y, -128, 127, &mut view, &mut out);
+        // brute force per the Eq. 12 formula
+        for oy in 0..2 {
+            for ox in 0..2 {
+                for ch in 0..3 {
+                    let mut sum = 0f64;
+                    for ky in 0..3 {
+                        for kx in 0..3 {
+                            sum += input[((oy * 3 + ky) * 6 + ox * 3 + kx) * 3 + ch] as f64;
+                        }
+                    }
+                    let mean = sum / 9.0;
+                    let y = z_y as f64 + ratio as f64 * (mean - z_x as f64);
+                    let want = y.round().clamp(-128.0, 127.0) as i8;
+                    let got = out[(oy * 2 + ox) * 3 + ch];
+                    assert!((got as i32 - want as i32).abs() <= 1, "({oy},{ox},{ch}): {got} vs {want}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn interp_rounds_negative_sums_away_from_zero() {
+        let geo = ConvGeometry::new(2, 2, 1, 2, 2, 2, 2, Padding::Valid);
+        let input = vec![-1i8, -1, -1, -2]; // sum -5, avg -1.25 -> -1
+        let mut view = vec![0i8; 4];
+        let mut out = vec![0i8; 1];
+        average_pool2d_interp(&input, &geo, 0, -128, 127, &mut view, &mut out);
+        assert_eq!(out[0], -1);
+        let input2 = vec![-1i8, -2, -2, -1]; // sum -6, avg -1.5 -> -2 (away)
+        average_pool2d_interp(&input2, &geo, 0, -128, 127, &mut view, &mut out);
+        assert_eq!(out[0], -2);
+    }
+}

@@ -1,0 +1,237 @@
+//! Conv2D kernels — Eq. (6) / Appendix A.2 (DESIGN.md S9).
+//!
+//! Input `[H, W, Cin]`, filters `[Cout, KH, KW, Cin]` row-major, output
+//! `[OH, OW, Cout]`. View extraction is Algorithm 1 via
+//! [`ConvGeometry::extract_view`]; the extracted patch (`KH*KW*Cin`) is the
+//! operator's scratch working set charged by the static memory planner.
+
+use crate::kernels::view::ConvGeometry;
+use crate::tensor::fixedpoint::FixedPointMultiplier;
+use crate::tensor::quant::{requant_float, PreComputed};
+
+/// MicroFlow Conv2D: folded constants + float epilogue.
+///
+/// `pc.w_zp_term[co]` folds `z_X * Σ F[co]`; `pc.kzxzw` folds
+/// `KH*KW*Cin * z_X * z_F`; `pc.const_bias[co]` folds the bias term.
+pub fn conv2d_microflow(
+    input: &[i8],
+    filters: &[i8],
+    geo: &ConvGeometry,
+    c_out: usize,
+    z_x: i8,
+    pc: &PreComputed,
+    view: &mut [i8],
+    out: &mut [i8],
+) {
+    let kkc = geo.k_h * geo.k_w * geo.in_c;
+    debug_assert_eq!(filters.len(), c_out * kkc);
+    debug_assert_eq!(view.len(), kkc);
+    debug_assert_eq!(out.len(), geo.out_h * geo.out_w * c_out);
+
+    // pointwise fast path: a 1x1 stride-1 conv never needs view
+    // extraction — the "view" IS the pixel. This is the dominant layer
+    // class of MobileNet (13 of the person model's 14 dense convs);
+    // skipping the per-position copy buys ~25% (EXPERIMENTS.md §Perf).
+    if geo.k_h == 1 && geo.k_w == 1 && geo.stride_h == 1 && geo.stride_w == 1 {
+        let c_in = geo.in_c;
+        for (px, pixel) in input.chunks_exact(c_in).enumerate() {
+            let viewsum: i32 =
+                if pc.z_w != 0 { pixel.iter().map(|&v| v as i32).sum() } else { 0 };
+            let base = px * c_out;
+            for (co, f) in filters.chunks_exact(c_in).enumerate() {
+                let mut dot = 0i32;
+                for (v, w) in pixel.iter().zip(f) {
+                    dot += *v as i32 * *w as i32;
+                }
+                let acc = dot - pc.z_w * viewsum - pc.w_zp_term[co] + pc.kzxzw;
+                out[base + co] =
+                    requant_float(acc, pc.const_bias[co], pc.scale_ratio, pc.act_min, pc.act_max);
+            }
+        }
+        return;
+    }
+
+    for oy in 0..geo.out_h {
+        for ox in 0..geo.out_w {
+            geo.extract_view(input, oy, ox, z_x, view);
+            // data-dependent view sum (the z_F correction term of Eq. 6)
+            let viewsum: i32 = if pc.z_w != 0 { view.iter().map(|&v| v as i32).sum() } else { 0 };
+            let base = (oy * geo.out_w + ox) * c_out;
+            for co in 0..c_out {
+                let f = &filters[co * kkc..(co + 1) * kkc];
+                let mut dot = 0i32;
+                for (v, w) in view.iter().zip(f) {
+                    dot += *v as i32 * *w as i32;
+                }
+                let acc = dot - pc.z_w * viewsum - pc.w_zp_term[co] + pc.kzxzw;
+                out[base + co] =
+                    requant_float(acc, pc.const_bias[co], pc.scale_ratio, pc.act_min, pc.act_max);
+            }
+        }
+    }
+}
+
+/// TFLM-style Conv2D: per-element offsets + int32 bias + fixed point.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_interp(
+    input: &[i8],
+    filters: &[i8],
+    bias: &[i32],
+    geo: &ConvGeometry,
+    c_out: usize,
+    z_x: i32,
+    z_f: i32,
+    multiplier: FixedPointMultiplier,
+    z_y: i32,
+    act_min: i8,
+    act_max: i8,
+    view: &mut [i8],
+    out: &mut [i8],
+) {
+    let kkc = geo.k_h * geo.k_w * geo.in_c;
+    for oy in 0..geo.out_h {
+        for ox in 0..geo.out_w {
+            geo.extract_view(input, oy, ox, z_x as i8, view);
+            let base = (oy * geo.out_w + ox) * c_out;
+            for co in 0..c_out {
+                let f = &filters[co * kkc..(co + 1) * kkc];
+                let mut acc = 0i32;
+                for (v, w) in view.iter().zip(f) {
+                    acc += (*v as i32 - z_x) * (*w as i32 - z_f);
+                }
+                acc += bias[co];
+                out[base + co] = multiplier.requant(acc, z_y, act_min, act_max);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::format::mfb::Padding;
+    use crate::tensor::quant::FusedAct;
+    use crate::util::Prng;
+
+    /// f64 brute-force of Eq. (6) over the same view extraction.
+    #[allow(clippy::too_many_arguments)]
+    fn oracle(
+        input: &[i8],
+        filters: &[i8],
+        bias: &[i32],
+        geo: &ConvGeometry,
+        c_out: usize,
+        s_x: f32,
+        z_x: i32,
+        s_f: f32,
+        z_f: i32,
+        s_y: f32,
+        z_y: i32,
+        act: FusedAct,
+    ) -> Vec<i8> {
+        let kkc = geo.k_h * geo.k_w * geo.in_c;
+        let (lo, hi) = act.bounds(s_y, z_y);
+        let mut view = vec![0i8; kkc];
+        let mut out = vec![0i8; geo.out_h * geo.out_w * c_out];
+        for oy in 0..geo.out_h {
+            for ox in 0..geo.out_w {
+                geo.extract_view(input, oy, ox, z_x as i8, &mut view);
+                for co in 0..c_out {
+                    let f = &filters[co * kkc..(co + 1) * kkc];
+                    let mut acc = 0i64;
+                    for (v, w) in view.iter().zip(f) {
+                        acc += (*v as i64 - z_x as i64) * (*w as i64 - z_f as i64);
+                    }
+                    let cb = z_y as f32 + ((s_x * s_f) / s_y) * bias[co] as f32;
+                    let y = cb + (s_x * s_f / s_y) * acc as f32;
+                    out[(oy * geo.out_w + ox) * c_out + co] =
+                        y.round().clamp(lo as f32, hi as f32) as i8;
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn microflow_matches_literal_eq6() {
+        let mut rng = Prng::new(3);
+        for &(padding, stride) in
+            &[(Padding::Same, 1), (Padding::Same, 2), (Padding::Valid, 1), (Padding::Valid, 2)]
+        {
+            let (h, w, cin, cout, k) = (7, 6, 3, 4, 3);
+            let geo = ConvGeometry::new(h, w, cin, k, k, stride, stride, padding);
+            let input = rng.i8_vec(h * w * cin);
+            let filters = rng.i8_vec(cout * k * k * cin);
+            let bias = rng.i32_vec(cout, -1000, 1000);
+            let (s_x, z_x, s_f, z_f, s_y, z_y) = (0.04f32, -3, 0.02f32, 1, 0.06f32, 7);
+            let kkc = k * k * cin;
+            let colsum: Vec<i32> = (0..cout)
+                .map(|co| filters[co * kkc..(co + 1) * kkc].iter().map(|&v| v as i32).sum())
+                .collect();
+            let pc = PreComputed::fold(
+                &bias, &colsum, kkc, s_x, z_x, s_f, z_f, s_x * s_f, 0, s_y, z_y, FusedAct::Relu6,
+            );
+            let mut view = vec![0i8; kkc];
+            let mut out = vec![0i8; geo.out_h * geo.out_w * cout];
+            conv2d_microflow(&input, &filters, &geo, cout, z_x as i8, &pc, &mut view, &mut out);
+            let want = oracle(
+                &input, &filters, &bias, &geo, cout, s_x, z_x, s_f, z_f, s_y, z_y, FusedAct::Relu6,
+            );
+            assert_eq!(out, want, "padding {padding:?} stride {stride}");
+        }
+    }
+
+    #[test]
+    fn interp_within_one_unit() {
+        let mut rng = Prng::new(8);
+        let (h, w, cin, cout, k) = (6, 6, 2, 3, 3);
+        let geo = ConvGeometry::new(h, w, cin, k, k, 1, 1, Padding::Same);
+        let input = rng.i8_vec(h * w * cin);
+        let filters = rng.i8_vec(cout * k * k * cin);
+        let bias = rng.i32_vec(cout, -500, 500);
+        let (s_x, z_x, s_f, z_f, s_y, z_y) = (0.03f32, 2, 0.01f32, 0, 0.05f32, -9);
+        let kkc = k * k * cin;
+        let colsum: Vec<i32> = (0..cout)
+            .map(|co| filters[co * kkc..(co + 1) * kkc].iter().map(|&v| v as i32).sum())
+            .collect();
+        let pc =
+            PreComputed::fold(&bias, &colsum, kkc, s_x, z_x, s_f, z_f, s_x * s_f, 0, s_y, z_y, FusedAct::None);
+        let mut view = vec![0i8; kkc];
+        let mut mf = vec![0i8; geo.out_h * geo.out_w * cout];
+        conv2d_microflow(&input, &filters, &geo, cout, z_x as i8, &pc, &mut view, &mut mf);
+        let m = FixedPointMultiplier::from_real((s_x as f64 * s_f as f64) / s_y as f64);
+        let mut ip = vec![0i8; mf.len()];
+        conv2d_interp(
+            &input, &filters, &bias, &geo, cout, z_x, z_f, m, z_y, -128, 127, &mut view, &mut ip,
+        );
+        let worst =
+            mf.iter().zip(&ip).map(|(a, b)| (*a as i32 - *b as i32).abs()).max().unwrap();
+        assert!(worst <= 1, "worst deviation {worst}");
+    }
+
+    #[test]
+    fn one_by_one_conv_is_a_per_pixel_matmul() {
+        // pointwise conv (the MobileNet pw layers) sanity: k=1, padding
+        // irrelevant, each output pixel independent
+        let mut rng = Prng::new(4);
+        let (h, w, cin, cout) = (3, 3, 4, 5);
+        let geo = ConvGeometry::new(h, w, cin, 1, 1, 1, 1, Padding::Same);
+        assert_eq!((geo.out_h, geo.out_w), (3, 3));
+        let input = rng.i8_vec(h * w * cin);
+        let filters = rng.i8_vec(cout * cin);
+        let bias = vec![0i32; cout];
+        let colsum: Vec<i32> = (0..cout)
+            .map(|co| filters[co * cin..(co + 1) * cin].iter().map(|&v| v as i32).sum())
+            .collect();
+        let pc = PreComputed::fold(&bias, &colsum, cin, 0.1, 0, 0.1, 0, 0.01, 0, 0.2, 0, FusedAct::None);
+        let mut view = vec![0i8; cin];
+        let mut out = vec![0i8; h * w * cout];
+        conv2d_microflow(&input, &filters, &geo, cout, 0, &pc, &mut view, &mut out);
+        // manual check for pixel (1,1), channel 2
+        let px = &input[(1 * w + 1) * cin..(1 * w + 1) * cin + cin];
+        let f = &filters[2 * cin..3 * cin];
+        let dot: i32 = px.iter().zip(f).map(|(a, b)| *a as i32 * *b as i32).sum();
+        let want = (0.05f32 * dot as f32).round().clamp(-128.0, 127.0) as i8;
+        assert_eq!(out[(1 * w + 1) * cout + 2], want);
+    }
+}

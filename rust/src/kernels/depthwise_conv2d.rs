@@ -1,0 +1,244 @@
+//! DepthwiseConv2D kernels — Eq. (9) / Appendix A.3 (DESIGN.md S9).
+//!
+//! Filters `[KH, KW, Cout]` row-major with `Cout = Cin * depth_multiplier`
+//! (the TFLite `[1, KH, KW, Cout]` layout with the leading 1 dropped).
+//! Output channel `co` convolves input channel `co / depth_multiplier`
+//! only — channels never merge (paper Sec. 5.3).
+
+use crate::kernels::view::ConvGeometry;
+use crate::tensor::fixedpoint::FixedPointMultiplier;
+use crate::tensor::quant::{requant_float, PreComputed};
+
+/// MicroFlow DepthwiseConv2D: folded constants + float epilogue.
+///
+/// `pc` is per-output-channel: `w_zp_term[co] = z_X * Σ W[:,:,co]`,
+/// `kzxzw = KH*KW * z_X * z_W`.
+///
+/// **Filter layout: `[Cout, KH*KW]` channel-major** — the MicroFlow
+/// compiler re-lays the container's `[KH*KW, Cout]` weights out at
+/// compile time so every per-channel dot streams its filter contiguously
+/// (EXPERIMENTS.md §Perf). The interpreter variant below keeps the
+/// container layout, as TFLM must.
+#[allow(clippy::too_many_arguments)]
+pub fn depthwise_conv2d_microflow(
+    input: &[i8],
+    filters: &[i8],
+    geo: &ConvGeometry,
+    depth_multiplier: usize,
+    z_x: i8,
+    pc: &PreComputed,
+    view: &mut [i8],
+    out: &mut [i8],
+) {
+    let c_in = geo.in_c;
+    let c_out = c_in * depth_multiplier;
+    let kk = geo.k_h * geo.k_w;
+    debug_assert_eq!(filters.len(), kk * c_out);
+    debug_assert_eq!(view.len(), kk * c_in);
+    debug_assert_eq!(out.len(), geo.out_h * geo.out_w * c_out);
+
+    for oy in 0..geo.out_h {
+        for ox in 0..geo.out_w {
+            geo.extract_view(input, oy, ox, z_x, view);
+            let base = (oy * geo.out_w + ox) * c_out;
+            for ci in 0..c_in {
+                // per-input-channel window sum (z_W correction, Eq. 9)
+                let xsum: i32 = if pc.z_w != 0 {
+                    (0..kk).map(|t| view[t * c_in + ci] as i32).sum()
+                } else {
+                    0
+                };
+                for m in 0..depth_multiplier {
+                    let co = ci * depth_multiplier + m;
+                    let f = &filters[co * kk..(co + 1) * kk];
+                    let mut dot = 0i32;
+                    for (t, &fv) in f.iter().enumerate() {
+                        dot += view[t * c_in + ci] as i32 * fv as i32;
+                    }
+                    let acc = dot - pc.z_w * xsum - pc.w_zp_term[co] + pc.kzxzw;
+                    out[base + co] =
+                        requant_float(acc, pc.const_bias[co], pc.scale_ratio, pc.act_min, pc.act_max);
+                }
+            }
+        }
+    }
+}
+
+/// Transpose container-layout dw filters `[KK, Cout]` to the kernel's
+/// `[Cout, KK]` (what the compiler does once at plan time).
+pub fn transpose_filters(w: &[i8], kk: usize, c_out: usize) -> Vec<i8> {
+    let mut out = vec![0i8; kk * c_out];
+    for t in 0..kk {
+        for co in 0..c_out {
+            out[co * kk + t] = w[t * c_out + co];
+        }
+    }
+    out
+}
+
+/// TFLM-style DepthwiseConv2D: per-element offsets + fixed point.
+#[allow(clippy::too_many_arguments)]
+pub fn depthwise_conv2d_interp(
+    input: &[i8],
+    filters: &[i8],
+    bias: &[i32],
+    geo: &ConvGeometry,
+    depth_multiplier: usize,
+    z_x: i32,
+    z_w: i32,
+    multiplier: FixedPointMultiplier,
+    z_y: i32,
+    act_min: i8,
+    act_max: i8,
+    view: &mut [i8],
+    out: &mut [i8],
+) {
+    let c_in = geo.in_c;
+    let c_out = c_in * depth_multiplier;
+    let kk = geo.k_h * geo.k_w;
+    for oy in 0..geo.out_h {
+        for ox in 0..geo.out_w {
+            geo.extract_view(input, oy, ox, z_x as i8, view);
+            let base = (oy * geo.out_w + ox) * c_out;
+            for ci in 0..c_in {
+                for m in 0..depth_multiplier {
+                    let co = ci * depth_multiplier + m;
+                    let mut acc = 0i32;
+                    for t in 0..kk {
+                        acc += (view[t * c_in + ci] as i32 - z_x)
+                            * (filters[t * c_out + co] as i32 - z_w);
+                    }
+                    acc += bias[co];
+                    out[base + co] = multiplier.requant(acc, z_y, act_min, act_max);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::format::mfb::Padding;
+    use crate::tensor::quant::FusedAct;
+    use crate::util::Prng;
+
+    #[allow(clippy::too_many_arguments)]
+    fn oracle(
+        input: &[i8],
+        filters: &[i8],
+        bias: &[i32],
+        geo: &ConvGeometry,
+        mult: usize,
+        s_x: f32,
+        z_x: i32,
+        s_w: f32,
+        z_w: i32,
+        s_y: f32,
+        z_y: i32,
+        act: FusedAct,
+    ) -> Vec<i8> {
+        let c_in = geo.in_c;
+        let c_out = c_in * mult;
+        let kk = geo.k_h * geo.k_w;
+        let (lo, hi) = act.bounds(s_y, z_y);
+        let mut view = vec![0i8; kk * c_in];
+        let mut out = vec![0i8; geo.out_h * geo.out_w * c_out];
+        for oy in 0..geo.out_h {
+            for ox in 0..geo.out_w {
+                geo.extract_view(input, oy, ox, z_x as i8, &mut view);
+                for ci in 0..c_in {
+                    for m in 0..mult {
+                        let co = ci * mult + m;
+                        let mut acc = 0i64;
+                        for t in 0..kk {
+                            acc += (view[t * c_in + ci] as i64 - z_x as i64)
+                                * (filters[t * c_out + co] as i64 - z_w as i64);
+                        }
+                        let cb = z_y as f32 + ((s_x * s_w) / s_y) * bias[co] as f32;
+                        let y = cb + (s_x * s_w / s_y) * acc as f32;
+                        out[(oy * geo.out_w + ox) * c_out + co] =
+                            y.round().clamp(lo as f32, hi as f32) as i8;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn microflow_matches_literal_eq9() {
+        let mut rng = Prng::new(21);
+        for &(mult, stride) in &[(1usize, 1usize), (2, 1), (8, 2), (1, 2)] {
+            let (h, w, cin, k) = (8, 7, 3, 3);
+            let cout = cin * mult;
+            let geo = ConvGeometry::new(h, w, cin, k, k, stride, stride, Padding::Same);
+            let input = rng.i8_vec(h * w * cin);
+            let filters = rng.i8_vec(k * k * cout);
+            let bias = rng.i32_vec(cout, -800, 800);
+            let (s_x, z_x, s_w, z_w, s_y, z_y) = (0.03f32, -6, 0.015f32, 2, 0.05f32, 3);
+            let kk = k * k;
+            let colsum: Vec<i32> = (0..cout)
+                .map(|co| (0..kk).map(|t| filters[t * cout + co] as i32).sum())
+                .collect();
+            let pc = PreComputed::fold(
+                &bias, &colsum, kk, s_x, z_x, s_w, z_w, s_x * s_w, 0, s_y, z_y, FusedAct::Relu,
+            );
+            let mut view = vec![0i8; kk * cin];
+            let mut out = vec![0i8; geo.out_h * geo.out_w * cout];
+            let filters_t = transpose_filters(&filters, kk, cout);
+            depthwise_conv2d_microflow(&input, &filters_t, &geo, mult, z_x as i8, &pc, &mut view, &mut out);
+            let want = oracle(
+                &input, &filters, &bias, &geo, mult, s_x, z_x, s_w, z_w, s_y, z_y, FusedAct::Relu,
+            );
+            assert_eq!(out, want, "mult {mult} stride {stride}");
+        }
+    }
+
+    #[test]
+    fn interp_within_one_unit() {
+        let mut rng = Prng::new(33);
+        let (h, w, cin, k, mult) = (6, 6, 4, 3, 2);
+        let cout = cin * mult;
+        let geo = ConvGeometry::new(h, w, cin, k, k, 1, 1, Padding::Valid);
+        let input = rng.i8_vec(h * w * cin);
+        let filters = rng.i8_vec(k * k * cout);
+        let bias = rng.i32_vec(cout, -300, 300);
+        let (s_x, z_x, s_w, z_w, s_y, z_y) = (0.02f32, 4, 0.01f32, 0, 0.03f32, -2);
+        let kk = k * k;
+        let colsum: Vec<i32> =
+            (0..cout).map(|co| (0..kk).map(|t| filters[t * cout + co] as i32).sum()).collect();
+        let pc = PreComputed::fold(&bias, &colsum, kk, s_x, z_x, s_w, z_w, s_x * s_w, 0, s_y, z_y, FusedAct::None);
+        let mut view = vec![0i8; kk * cin];
+        let mut mf = vec![0i8; geo.out_h * geo.out_w * cout];
+        let filters_t = transpose_filters(&filters, kk, cout);
+        depthwise_conv2d_microflow(&input, &filters_t, &geo, mult, z_x as i8, &pc, &mut view, &mut mf);
+        let m = FixedPointMultiplier::from_real((s_x as f64 * s_w as f64) / s_y as f64);
+        let mut ip = vec![0i8; mf.len()];
+        depthwise_conv2d_interp(
+            &input, &filters, &bias, &geo, mult, z_x, z_w, m, z_y, -128, 127, &mut view, &mut ip,
+        );
+        let worst = mf.iter().zip(&ip).map(|(a, b)| (*a as i32 - *b as i32).abs()).max().unwrap();
+        assert!(worst <= 1, "worst deviation {worst}");
+    }
+
+    #[test]
+    fn speech_layer_geometry() {
+        // the TinyConv depthwise layer: 49x40x1, k 10x8, s2, mult 8
+        let geo = ConvGeometry::new(49, 40, 1, 10, 8, 2, 2, Padding::Same);
+        assert_eq!((geo.out_h, geo.out_w), (25, 20));
+        let mut rng = Prng::new(1);
+        let input = rng.i8_vec(49 * 40);
+        let filters = rng.i8_vec(10 * 8 * 8);
+        let bias = vec![0i32; 8];
+        let colsum: Vec<i32> =
+            (0..8).map(|co| (0..80).map(|t| filters[t * 8 + co] as i32).sum()).collect();
+        let pc = PreComputed::fold(&bias, &colsum, 80, 0.1, -128, 0.02, 0, 0.002, 0, 0.15, -128, FusedAct::Relu);
+        let mut view = vec![0i8; 80];
+        let mut out = vec![0i8; 25 * 20 * 8];
+        let filters_t = transpose_filters(&filters, 80, 8);
+        depthwise_conv2d_microflow(&input, &filters_t, &geo, 8, -128, &pc, &mut view, &mut out);
+        // fused ReLU clamps at z_y
+        assert!(out.iter().all(|&v| v >= -128));
+    }
+}

@@ -1,0 +1,241 @@
+//! FullyConnected kernels — Eq. (3) / Appendix A.1 (DESIGN.md S9).
+//!
+//! Weights are `[K, N]` row-major (TFLite stores `[N, K]`; the exporter
+//! emits `[K, N]` so the MicroFlow inner loop streams rows sequentially).
+//!
+//! Three variants:
+//! * [`fully_connected_microflow`] — folded constants + float epilogue;
+//! * [`fully_connected_paged`]     — the Sec. 4.3 paging execution: one
+//!   output neuron's weights are staged into a page buffer at a time;
+//! * [`fully_connected_interp`]    — TFLM-style per-element offsets +
+//!   gemmlowp fixed-point epilogue.
+
+use crate::tensor::fixedpoint::FixedPointMultiplier;
+use crate::tensor::quant::{requant_float, PreComputed};
+
+/// MicroFlow FC: `y[j] = requant(dot[j] - z_w*rowsum - wzp[j] + kzxzw)`.
+///
+/// `x`: `[K]`, `w`: `[K, N]` row-major, `out`: `[N]`.
+pub fn fully_connected_microflow(x: &[i8], w: &[i8], k: usize, n: usize, pc: &PreComputed, out: &mut [i8]) {
+    debug_assert_eq!(x.len(), k);
+    debug_assert_eq!(w.len(), k * n);
+    debug_assert_eq!(out.len(), n);
+    debug_assert_eq!(pc.const_bias.len(), n);
+
+    // data-dependent row sum (the only z_w term that cannot be folded)
+    let rowsum: i32 = if pc.z_w != 0 { x.iter().map(|&v| v as i32).sum() } else { 0 };
+
+    if n <= 8 {
+        // narrow-output path (the speech classifier head is 4000x4):
+        // stack accumulators + chunks_exact (no heap allocation, no
+        // per-row bounds checks, no per-row branch) — EXPERIMENTS.md
+        // §Perf: fc 4000x4 19.9us -> ~6us
+        let mut acc = [0i32; 8];
+        for (row, &xi) in w.chunks_exact(n).zip(x.iter()) {
+            let xv = xi as i32;
+            for (a, &wv) in acc[..n].iter_mut().zip(row) {
+                *a += xv * wv as i32;
+            }
+        }
+        for j in 0..n {
+            let a = acc[j] - pc.z_w * rowsum - pc.w_zp_term[j] + pc.kzxzw;
+            out[j] = requant_float(a, pc.const_bias[j], pc.scale_ratio, pc.act_min, pc.act_max);
+        }
+        return;
+    }
+
+    // wide-output path: accumulate column-wise over rows — w rows are
+    // contiguous (chunks_exact: no per-row bounds checks), so this walks
+    // w sequentially (cache/flash friendly, the same access pattern the
+    // paper's paged variant exploits) and the inner loop auto-vectorizes
+    // over the output row
+    let mut acc = vec![0i32; n];
+    for (row, &xi) in w.chunks_exact(n).zip(x.iter()) {
+        let xv = xi as i32;
+        for (a, &wv) in acc.iter_mut().zip(row) {
+            *a += xv * wv as i32;
+        }
+    }
+    for j in 0..n {
+        let a = acc[j] - pc.z_w * rowsum - pc.w_zp_term[j] + pc.kzxzw;
+        out[j] = requant_float(a, pc.const_bias[j], pc.scale_ratio, pc.act_min, pc.act_max);
+    }
+}
+
+/// Paged MicroFlow FC (paper Sec. 4.3, Fig. 6).
+///
+/// One *page* holds the connections feeding a single output neuron:
+/// `page_buf` (length `K`) is loaded from the `[K, N]` weight matrix
+/// column-by-column — modelling the Flash→RAM stage on a 2 kB device —
+/// then reduced with a single accumulator. RAM high-water mark per page:
+/// `K` weights + `K` inputs + 1 int32 accumulator + epilogue constants
+/// (the paper's 163-byte example for K = 32 — see `sim::memory_model`).
+pub fn fully_connected_paged(
+    x: &[i8],
+    w: &[i8],
+    k: usize,
+    n: usize,
+    pc: &PreComputed,
+    page_buf: &mut [i8],
+    out: &mut [i8],
+) {
+    debug_assert_eq!(page_buf.len(), k);
+    let rowsum: i32 = if pc.z_w != 0 { x.iter().map(|&v| v as i32).sum() } else { 0 };
+    for j in 0..n {
+        // stage the page: column j of w (strided in Flash, contiguous in RAM)
+        for i in 0..k {
+            page_buf[i] = w[i * n + j];
+        }
+        let mut acc = 0i32;
+        for i in 0..k {
+            acc += x[i] as i32 * page_buf[i] as i32;
+        }
+        let a = acc - pc.z_w * rowsum - pc.w_zp_term[j] + pc.kzxzw;
+        out[j] = requant_float(a, pc.const_bias[j], pc.scale_ratio, pc.act_min, pc.act_max);
+    }
+}
+
+/// TFLM-style FC: per-element zero-point application + int32 bias + fixed
+/// point requantization. No folded constants — this is what an interpreter
+/// that cannot pre-process does per inference.
+#[allow(clippy::too_many_arguments)]
+pub fn fully_connected_interp(
+    x: &[i8],
+    w: &[i8],
+    bias: &[i32],
+    k: usize,
+    n: usize,
+    z_x: i32,
+    z_w: i32,
+    multiplier: FixedPointMultiplier,
+    z_y: i32,
+    act_min: i8,
+    act_max: i8,
+    out: &mut [i8],
+) {
+    debug_assert_eq!(x.len(), k);
+    debug_assert_eq!(w.len(), k * n);
+    debug_assert_eq!(bias.len(), n);
+    debug_assert_eq!(out.len(), n);
+    for j in 0..n {
+        let mut acc = 0i32;
+        for i in 0..k {
+            // offsets applied inside the loop — TFLM reference kernel shape
+            acc += (x[i] as i32 - z_x) * (w[i * n + j] as i32 - z_w);
+        }
+        acc += bias[j];
+        out[j] = multiplier.requant(acc, z_y, act_min, act_max);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::quant::FusedAct;
+    use crate::util::Prng;
+
+    /// Brute-force Eq. (3) evaluated literally in f64 (test oracle).
+    #[allow(clippy::too_many_arguments)]
+    fn oracle(
+        x: &[i8],
+        w: &[i8],
+        b: &[i32],
+        k: usize,
+        n: usize,
+        s_x: f32,
+        z_x: i32,
+        s_w: f32,
+        z_w: i32,
+        s_y: f32,
+        z_y: i32,
+        act: FusedAct,
+    ) -> Vec<i8> {
+        let s_b = s_x * s_w;
+        let (lo, hi) = act.bounds(s_y, z_y);
+        (0..n)
+            .map(|j| {
+                let mut acc = 0i64;
+                for i in 0..k {
+                    acc += (x[i] as i64 - z_x as i64) * (w[i * n + j] as i64 - z_w as i64);
+                }
+                let cb = z_y as f32 + (s_b / s_y) * b[j] as f32;
+                let y = cb + (s_x * s_w / s_y) * acc as f32;
+                (y.round().clamp(lo as f32, hi as f32)) as i8
+            })
+            .collect()
+    }
+
+    fn setup(seed: u64, k: usize, n: usize) -> (Vec<i8>, Vec<i8>, Vec<i32>) {
+        let mut rng = Prng::new(seed);
+        (rng.i8_vec(k), rng.i8_vec(k * n), rng.i32_vec(n, -2000, 2000))
+    }
+
+    #[test]
+    fn microflow_matches_literal_eq3() {
+        for seed in 0..10u64 {
+            let (k, n) = (37, 11);
+            let (x, w, b) = setup(seed, k, n);
+            let (s_x, z_x, s_w, z_w, s_y, z_y) = (0.05f32, 3, 0.02f32, -2, 0.08f32, -5);
+            let colsum: Vec<i32> =
+                (0..n).map(|j| (0..k).map(|i| w[i * n + j] as i32).sum()).collect();
+            let pc = PreComputed::fold(&b, &colsum, k, s_x, z_x, s_w, z_w, s_x * s_w, 0, s_y, z_y, FusedAct::Relu);
+            let mut out = vec![0i8; n];
+            fully_connected_microflow(&x, &w, k, n, &pc, &mut out);
+            let want = oracle(&x, &w, &b, k, n, s_x, z_x, s_w, z_w, s_y, z_y, FusedAct::Relu);
+            assert_eq!(out, want, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn paged_is_bit_identical_to_unpaged() {
+        for seed in 0..10u64 {
+            let (k, n) = (64, 32);
+            let (x, w, b) = setup(seed, k, n);
+            let colsum: Vec<i32> =
+                (0..n).map(|j| (0..k).map(|i| w[i * n + j] as i32).sum()).collect();
+            let pc = PreComputed::fold(&b, &colsum, k, 0.1, -7, 0.03, 0, 0.003, 0, 0.09, 4, FusedAct::None);
+            let mut a = vec![0i8; n];
+            let mut p = vec![0i8; n];
+            let mut page = vec![0i8; k];
+            fully_connected_microflow(&x, &w, k, n, &pc, &mut a);
+            fully_connected_paged(&x, &w, k, n, &pc, &mut page, &mut p);
+            assert_eq!(a, p, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn interp_within_one_unit_of_microflow() {
+        // the paper's Sec. 6.2.1 property at the kernel level
+        let mut worst = 0i32;
+        for seed in 100..140u64 {
+            let (k, n) = (50, 16);
+            let (x, w, b) = setup(seed, k, n);
+            let (s_x, z_x, s_w, z_w, s_y, z_y) = (0.04f32, 5, 0.015f32, 0, 0.07f32, -11);
+            let colsum: Vec<i32> =
+                (0..n).map(|j| (0..k).map(|i| w[i * n + j] as i32).sum()).collect();
+            let pc = PreComputed::fold(&b, &colsum, k, s_x, z_x, s_w, z_w, s_x * s_w, 0, s_y, z_y, FusedAct::None);
+            let mut mf = vec![0i8; n];
+            fully_connected_microflow(&x, &w, k, n, &pc, &mut mf);
+            let m = FixedPointMultiplier::from_real((s_x as f64 * s_w as f64) / s_y as f64);
+            let mut ip = vec![0i8; n];
+            fully_connected_interp(&x, &w, &b, k, n, z_x, z_w, m, z_y, -128, 127, &mut ip);
+            for j in 0..n {
+                worst = worst.max((mf[j] as i32 - ip[j] as i32).abs());
+            }
+        }
+        assert!(worst <= 1, "worst deviation {worst} > 1 unit");
+    }
+
+    #[test]
+    fn zero_k_zero_point_skips_rowsum() {
+        // z_w == 0 must not change results vs the general path
+        let (k, n) = (8, 4);
+        let (x, w, b) = setup(7, k, n);
+        let colsum: Vec<i32> = (0..n).map(|j| (0..k).map(|i| w[i * n + j] as i32).sum()).collect();
+        let pc = PreComputed::fold(&b, &colsum, k, 0.1, 2, 0.1, 0, 0.01, 0, 0.1, 0, FusedAct::None);
+        let mut out = vec![0i8; n];
+        fully_connected_microflow(&x, &w, k, n, &pc, &mut out);
+        let want = oracle(&x, &w, &b, k, n, 0.1, 2, 0.1, 0, 0.1, 0, FusedAct::None);
+        assert_eq!(out, want);
+    }
+}

@@ -1,0 +1,56 @@
+//! Quantized operator kernels (paper Sec. 5 + Appendix A; DESIGN.md S9-S11).
+//!
+//! Every operator exists in **two arithmetic variants**, mirroring the two
+//! engines the paper compares:
+//!
+//! * `*_microflow` — the MicroFlow form: all input-independent terms of
+//!   Eq. 3/6/9/12 are folded offline into a [`PreComputed`] by the compiler
+//!   (Sec. 3.3.3), the inner loop is a raw int8 dot product, and the
+//!   epilogue is the float-scale requantization
+//!   (`tensor::quant::requant_float`). Bit-compatible with the JAX oracle.
+//!
+//! * `*_interp` — the TFLM form used by the interpreter baseline: zero
+//!   points are applied **per element** inside the MAC loop
+//!   (`(x - z_x)(w - z_w)`), the bias joins the int32 accumulator, and the
+//!   epilogue is gemmlowp fixed-point (`tensor::fixedpoint`). More work per
+//!   MAC and integer-only — exactly the trade TFLM makes, and the source of
+//!   the paper's ±1 output differences (Sec. 6.2.1).
+//!
+//! Kernels are **per-sample** (no batch dimension); the engines loop over
+//! the batch. Activations are `[H, W, C]` row-major; Conv2D filters
+//! `[Cout, KH, KW, Cin]`; DepthwiseConv2D filters `[KH, KW, Cout]`;
+//! FullyConnected weights `[K, N]`.
+
+pub mod activation;
+pub mod average_pool2d;
+pub mod conv2d;
+pub mod depthwise_conv2d;
+pub mod fully_connected;
+pub mod view;
+
+pub use view::ConvGeometry;
+
+use crate::format::mfb::Padding;
+
+/// Output spatial dims for SAME/VALID padding (TFLite convention; mirrors
+/// `ref.out_dims`).
+pub fn out_dims(h: usize, w: usize, kh: usize, kw: usize, sh: usize, sw: usize, padding: Padding) -> (usize, usize) {
+    match padding {
+        Padding::Same => (h.div_ceil(sh), w.div_ceil(sw)),
+        Padding::Valid => ((h - kh) / sh + 1, (w - kw) / sw + 1),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn out_dims_same_vs_valid() {
+        // 49x40, k 10x8, s 2x2 — the speech model's depthwise layer
+        assert_eq!(out_dims(49, 40, 10, 8, 2, 2, Padding::Same), (25, 20));
+        assert_eq!(out_dims(49, 40, 10, 8, 2, 2, Padding::Valid), (20, 17));
+        // 96x96, k 3x3, s 2x2 — the person model's first conv
+        assert_eq!(out_dims(96, 96, 3, 3, 2, 2, Padding::Same), (48, 48));
+    }
+}

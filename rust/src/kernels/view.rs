@@ -1,0 +1,150 @@
+//! View extraction — Algorithm 1 of the paper (DESIGN.md S10).
+//!
+//! Selects the receptive field feeding one output position, handling SAME
+//! padding (fill with `z_x`, the quantized zero — making the `(X - z_X)`
+//! factor vanish identically, equivalent to the paper's skip) and VALID
+//! padding, with arbitrary strides.
+
+use crate::format::mfb::Padding;
+
+/// Static geometry of a convolution-like operator, computed once by the
+/// compiler (never at inference time in the MicroFlow engine).
+#[derive(Clone, Copy, Debug)]
+pub struct ConvGeometry {
+    pub in_h: usize,
+    pub in_w: usize,
+    pub in_c: usize,
+    pub k_h: usize,
+    pub k_w: usize,
+    pub stride_h: usize,
+    pub stride_w: usize,
+    pub out_h: usize,
+    pub out_w: usize,
+    /// Top/left padding offsets (0 for VALID).
+    pub pad_top: isize,
+    pub pad_left: isize,
+}
+
+impl ConvGeometry {
+    pub fn new(
+        in_h: usize,
+        in_w: usize,
+        in_c: usize,
+        k_h: usize,
+        k_w: usize,
+        stride_h: usize,
+        stride_w: usize,
+        padding: Padding,
+    ) -> Self {
+        let (out_h, out_w) = super::out_dims(in_h, in_w, k_h, k_w, stride_h, stride_w, padding);
+        let (pad_top, pad_left) = match padding {
+            Padding::Valid => (0isize, 0isize),
+            Padding::Same => {
+                // TFLite SAME: total = max((o-1)*s + k - in, 0), low half first
+                let pad_h = ((out_h - 1) * stride_h + k_h).saturating_sub(in_h);
+                let pad_w = ((out_w - 1) * stride_w + k_w).saturating_sub(in_w);
+                ((pad_h / 2) as isize, (pad_w / 2) as isize)
+            }
+        };
+        ConvGeometry { in_h, in_w, in_c, k_h, k_w, stride_h, stride_w, out_h, out_w, pad_top, pad_left }
+    }
+
+    /// Number of MACs per output position per output channel (dense conv).
+    pub fn window_len(&self) -> usize {
+        self.k_h * self.k_w
+    }
+
+    /// Extract the view for output position `(oy, ox)` into `view`
+    /// (length `k_h * k_w * in_c`), filling out-of-bounds with `z_x`.
+    ///
+    /// This is Algorithm 1, specialized to one output position — the form
+    /// the runtime kernels call in their hot loop.
+    #[inline]
+    pub fn extract_view(&self, input: &[i8], oy: usize, ox: usize, z_x: i8, view: &mut [i8]) {
+        debug_assert_eq!(view.len(), self.k_h * self.k_w * self.in_c);
+        debug_assert_eq!(input.len(), self.in_h * self.in_w * self.in_c);
+        let base_y = (oy * self.stride_h) as isize - self.pad_top;
+        let base_x = (ox * self.stride_w) as isize - self.pad_left;
+        let c = self.in_c;
+        let mut vi = 0usize;
+        for ky in 0..self.k_h {
+            let iy = base_y + ky as isize;
+            if iy < 0 || iy >= self.in_h as isize {
+                view[vi..vi + self.k_w * c].fill(z_x);
+                vi += self.k_w * c;
+                continue;
+            }
+            let row = iy as usize * self.in_w * c;
+            for kx in 0..self.k_w {
+                let ix = base_x + kx as isize;
+                if ix < 0 || ix >= self.in_w as isize {
+                    view[vi..vi + c].fill(z_x);
+                } else {
+                    let src = row + ix as usize * c;
+                    view[vi..vi + c].copy_from_slice(&input[src..src + c]);
+                }
+                vi += c;
+            }
+        }
+    }
+
+    /// Bytes of scratch one view needs (the per-operator working set the
+    /// static memory planner charges for conv kernels).
+    pub fn view_bytes(&self) -> usize {
+        self.k_h * self.k_w * self.in_c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// 1-channel 3x3 input 1..9, identity for hand-checking.
+    fn input3x3() -> Vec<i8> {
+        (1..=9).collect()
+    }
+
+    #[test]
+    fn valid_padding_center_view() {
+        let g = ConvGeometry::new(3, 3, 1, 2, 2, 1, 1, Padding::Valid);
+        assert_eq!((g.out_h, g.out_w), (2, 2));
+        let mut v = vec![0i8; 4];
+        g.extract_view(&input3x3(), 0, 0, 0, &mut v);
+        assert_eq!(v, vec![1, 2, 4, 5]);
+        g.extract_view(&input3x3(), 1, 1, 0, &mut v);
+        assert_eq!(v, vec![5, 6, 8, 9]);
+    }
+
+    #[test]
+    fn same_padding_fills_zero_point() {
+        let g = ConvGeometry::new(3, 3, 1, 3, 3, 1, 1, Padding::Same);
+        assert_eq!((g.out_h, g.out_w), (3, 3));
+        let mut v = vec![0i8; 9];
+        // top-left corner: first row and column padded with z_x = -7
+        g.extract_view(&input3x3(), 0, 0, -7, &mut v);
+        assert_eq!(v, vec![-7, -7, -7, -7, 1, 2, -7, 4, 5]);
+    }
+
+    #[test]
+    fn stride_two_same_matches_tflite_offsets() {
+        // 4x4 input, k3 s2 SAME -> out 2x2, pad_total = (2-1)*2+3-4 = 1 -> pad_top 0
+        let g = ConvGeometry::new(4, 4, 1, 3, 3, 2, 2, Padding::Same);
+        assert_eq!((g.out_h, g.out_w), (2, 2));
+        assert_eq!((g.pad_top, g.pad_left), (0, 0));
+        let input: Vec<i8> = (1..=16).collect();
+        let mut v = vec![0i8; 9];
+        g.extract_view(&input, 1, 1, 0, &mut v);
+        // base (2,2): rows 2..4, cols 2..4 with bottom/right padding
+        assert_eq!(v, vec![11, 12, 0, 15, 16, 0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn multichannel_view_is_channel_interleaved() {
+        // 2x2x2 input: [[(1,2),(3,4)],[(5,6),(7,8)]]
+        let input: Vec<i8> = (1..=8).collect();
+        let g = ConvGeometry::new(2, 2, 2, 2, 2, 1, 1, Padding::Valid);
+        let mut v = vec![0i8; 8];
+        g.extract_view(&input, 0, 0, 0, &mut v);
+        assert_eq!(v, input);
+    }
+}

@@ -1,0 +1,58 @@
+//! # MicroFlow reproduction — three-layer Rust + JAX + Pallas stack
+//!
+//! This crate reproduces *"MicroFlow: An Efficient Rust-Based Inference
+//! Engine for TinyML"* (Carnelos, Pasti, Bellotto, 2024) as a full system:
+//!
+//! * [`format`] — the MFB model container (TFLite-equivalent, DESIGN.md §4)
+//!   plus dataset / golden-vector readers;
+//! * [`tensor`] — int8 tensors and the two requantization arithmetics
+//!   (MicroFlow float-scale vs TFLM gemmlowp fixed-point);
+//! * [`kernels`] — the paper's quantized operator kernels (Sec. 5 + App. A);
+//! * [`compiler`] — the MicroFlow Compiler: parse → internal representation
+//!   → constant pre-processing (Eq. 4/7/10/13) → static execution plan →
+//!   memory plan → paging plan (Sec. 3.3, 4);
+//! * [`engine`] — the MicroFlow Runtime: static-allocation plan executor and
+//!   the paged executor for 2 kB-RAM devices (Sec. 3.4, 4.3);
+//! * [`interp`] — the TFLM-like interpreter baseline the paper compares
+//!   against: runtime parsing, op resolver, tensor arena, dispatch;
+//! * [`sim`] — the MCU substrate (Table 4 devices), cycle/memory/energy
+//!   models used by the Fig. 9-11 / Table 6 benches;
+//! * [`runtime`] — PJRT client loading the JAX-AOT'd HLO artifacts (the
+//!   numerical oracle and host serving backend);
+//! * [`coordinator`] — the serving layer: dynamic batcher, model router,
+//!   worker pool, latency/throughput metrics;
+//! * [`eval`] — datasets, accuracy metrics and the Table 5 runner.
+//!
+//! The Python side (`python/compile/`) runs **only at build time**
+//! (`make artifacts`): it trains the three paper models, quantizes them,
+//! exports `.mfb`/`.mds`/golden files and AOT-lowers the quantized Pallas
+//! graphs to HLO text. Nothing in this crate imports Python.
+
+pub mod bench_support;
+pub mod cli;
+pub mod compiler;
+pub mod coordinator;
+pub mod engine;
+pub mod eval;
+pub mod format;
+pub mod interp;
+pub mod kernels;
+pub mod runtime;
+pub mod sim;
+pub mod tensor;
+pub mod util;
+
+/// Crate version (mirrors Cargo.toml).
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}
+
+/// Repo-relative artifacts directory, overridable with `MICROFLOW_ARTIFACTS`.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("MICROFLOW_ARTIFACTS") {
+        return p.into();
+    }
+    // examples/tests/benches run from the crate root
+    let cand = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    cand
+}

@@ -1,0 +1,261 @@
+//! `microflow` — the leader binary: CLI over the whole reproduction stack.
+//!
+//! See [`microflow::cli::USAGE`] for subcommands. Everything here uses only
+//! build-time artifacts (`make artifacts`); Python never runs.
+
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use microflow::cli::{Args, USAGE};
+use microflow::compiler::plan::{CompileOptions, CompiledModel};
+use microflow::coordinator::{Backend, InterpBackend, NativeBackend, PjrtBackend, Server, ServerConfig};
+use microflow::engine::MicroFlowEngine;
+use microflow::format::golden::Golden;
+use microflow::format::mds::MdsDataset;
+use microflow::format::mfb::MfbModel;
+use microflow::interp::resolver::OpResolver;
+use microflow::interp::Interpreter;
+use microflow::runtime::oracle::check_against_golden;
+use microflow::runtime::PjrtEngine;
+use microflow::sim;
+use microflow::sim::mcu::by_name;
+use microflow::util::{fmt_energy_wh, fmt_kb, fmt_time, Prng};
+
+const MODELS: [&str; 3] = ["sine", "speech", "person"];
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let code = match run(cmd, &args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(cmd: &str, args: &Args) -> Result<()> {
+    match cmd {
+        "models" => cmd_models(),
+        "predict" => cmd_predict(args),
+        "verify" => cmd_verify(args),
+        "deploy" => cmd_deploy(args),
+        "serve" => cmd_serve(args),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}\n\n{USAGE}"),
+    }
+}
+
+fn artifacts() -> std::path::PathBuf {
+    microflow::artifacts_dir()
+}
+
+fn model_arg(args: &Args) -> Result<&str> {
+    args.positional
+        .get(1)
+        .map(|s| s.as_str())
+        .context("missing <model> argument (sine | speech | person)")
+}
+
+/// `microflow models` — the Table-3 inventory, regenerated from artifacts.
+fn cmd_models() -> Result<()> {
+    let art = artifacts();
+    println!("{:8} | {:6} | {:>8} | {:>10} | {:>10} | {:>6} | ops", "model", "layers", "params*", "weights", "file", "test_n");
+    println!("{}", "-".repeat(84));
+    for name in MODELS {
+        let path = art.join(format!("{name}.mfb"));
+        if !path.exists() {
+            println!("{name:8} | (missing — run `make artifacts`)");
+            continue;
+        }
+        let m = MfbModel::load(&path)?;
+        let c = CompiledModel::compile(&m, CompileOptions::default())?;
+        let ds = MdsDataset::load(art.join(format!("{name}_test.mds")))?;
+        let mut kinds: Vec<&str> = c.steps.iter().map(|s| s.kind.name()).collect();
+        kinds.dedup();
+        println!(
+            "{name:8} | {:6} | {:>8} | {:>10} | {:>10} | {:>6} | {}",
+            c.steps.len(),
+            c.total_macs(),
+            fmt_kb(m.weights_bytes()),
+            fmt_kb(m.file_bytes),
+            ds.n,
+            kinds.join(",")
+        );
+    }
+    println!("\n* params column shows MACs per inference (cost-model driver)");
+    Ok(())
+}
+
+/// `microflow predict <model> [--index N] [--paging]`.
+fn cmd_predict(args: &Args) -> Result<()> {
+    let name = model_arg(args)?;
+    let art = artifacts();
+    let engine = MicroFlowEngine::load(
+        art.join(format!("{name}.mfb")),
+        CompileOptions { paging: args.flag("paging") },
+    )?;
+    let ds = MdsDataset::load(art.join(format!("{name}_test.mds")))?;
+    let idx = args.opt_usize("index", 0).min(ds.n - 1);
+    let t0 = Instant::now();
+    let out = engine.predict_f32(ds.sample(idx));
+    let dt = t0.elapsed();
+    println!("model={name} sample={idx} latency={}", fmt_time(dt.as_secs_f64()));
+    println!("output: {out:?}");
+    match &ds.labels {
+        microflow::format::mds::Labels::Classes(c) => println!("true class: {}", c[idx]),
+        microflow::format::mds::Labels::Regression { .. } => {
+            println!("true value: {:?}", ds.target(idx))
+        }
+    }
+    Ok(())
+}
+
+/// `microflow verify <model>` — cross-check every engine against the JAX
+/// golden vectors.
+fn cmd_verify(args: &Args) -> Result<()> {
+    let name = model_arg(args)?;
+    let art = artifacts();
+    let golden = Golden::load(art.join(format!("{name}_golden.bin")))?;
+    let mfb_path = art.join(format!("{name}.mfb"));
+
+    let engine = MicroFlowEngine::load(&mfb_path, CompileOptions::default())?;
+    let a = check_against_golden(&golden, |x| Ok(engine.predict(x)))?;
+    println!("microflow engine : exact {}/{} (max |Δ| = {})", a.exact, a.n_outputs, a.max_abs_diff);
+    anyhow::ensure!(a.is_bit_exact(), "microflow engine is not bit-exact vs the JAX oracle");
+
+    let bytes = std::fs::read(&mfb_path)?;
+    let mut interp = Interpreter::new(&bytes, &OpResolver::with_all_kernels())?;
+    let b = check_against_golden(&golden, |x| interp.invoke(x))?;
+    println!("tflm interpreter : exact {}/{} (max |Δ| = {})", b.exact, b.n_outputs, b.max_abs_diff);
+    if !b.is_within_one() {
+        // fixed-point vs float-scale requantization differences compound
+        // across deep models (paper Sec. 6.2.1 observes the per-operator
+        // ±1); the decision-level gate is argmax agreement
+        let mut agree = 0usize;
+        for i in 0..golden.n {
+            let out = interp.invoke(golden.input(i))?;
+            if microflow::eval::accuracy::argmax(&out)
+                == microflow::eval::accuracy::argmax(golden.output(i))
+            {
+                agree += 1;
+            }
+        }
+        println!("tflm interpreter : argmax agreement {agree}/{}", golden.n);
+        anyhow::ensure!(agree == golden.n, "interpreter argmax disagrees with the oracle");
+    }
+
+    let pjrt = PjrtEngine::load(&art, name)?;
+    let c = check_against_golden(&golden, |x| pjrt.predict_q(x))?;
+    println!("pjrt (AOT HLO)   : exact {}/{} (max |Δ| = {})", c.exact, c.n_outputs, c.max_abs_diff);
+    anyhow::ensure!(c.is_bit_exact(), "PJRT path is not bit-exact vs the JAX oracle");
+
+    println!("verify {name}: OK");
+    Ok(())
+}
+
+/// `microflow deploy <model> <mcu> [--paging] [--engine microflow|tflm]`.
+fn cmd_deploy(args: &Args) -> Result<()> {
+    let name = model_arg(args)?;
+    let mcu_name = args.positional.get(2).context("missing <mcu> argument")?;
+    let mcu = by_name(mcu_name).with_context(|| format!("unknown MCU {mcu_name:?}"))?;
+    let engine = args.opt("engine").unwrap_or("microflow");
+    let art = artifacts();
+    let m = MfbModel::load(art.join(format!("{name}.mfb")))?;
+    let opts = CompileOptions { paging: args.flag("paging") };
+    let compiled = CompiledModel::compile(&m, opts)?;
+
+    let (eng, fp) = match engine {
+        "microflow" => (sim::Engine::MicroFlow, sim::memory_model::microflow_footprint(&compiled, mcu)),
+        "tflm" => {
+            let arena = microflow::interp::arena::ArenaPlan::plan(&m)?;
+            (sim::Engine::Tflm, sim::memory_model::tflm_footprint(&m, &arena, mcu))
+        }
+        other => bail!("unknown engine {other:?}"),
+    };
+    println!("deploy {name} with {engine} on {} ({})", mcu.name, mcu.board);
+    println!("  flash: {:>10} / {:>10}", fmt_kb(fp.flash), fmt_kb(mcu.flash_bytes));
+    println!("  ram:   {:>10} / {:>10}", fmt_kb(fp.ram), fmt_kb(mcu.ram_bytes));
+    match sim::memory_model::fits(mcu, eng, fp) {
+        Ok(()) => {
+            let secs = sim::inference_seconds(&compiled, mcu, eng);
+            let wh = sim::energy::inference_energy_wh(&compiled, mcu, eng);
+            println!("  fits: yes");
+            println!("  modeled inference time: {}", fmt_time(secs));
+            println!("  modeled energy/inference: {}", fmt_energy_wh(wh));
+            if let Some(p) = compiled.page_plan {
+                println!("  paging: {} pages, {} per page (unpaged {})",
+                    p.pages, fmt_kb(p.page_bytes), fmt_kb(p.unpaged_bytes));
+            }
+            // Sec. 4.4: stack-overflow protection status on this target
+            let layout = sim::stack_guard::microflow_layout(mcu);
+            println!(
+                "  stack layout: {:?} (overflow on this target is {})",
+                layout,
+                if sim::stack_guard::flip_link_available(mcu.arch) {
+                    "a detectable hardware exception (flip-link)"
+                } else {
+                    "UNPROTECTED (flip-link is Cortex-M only)"
+                }
+            );
+        }
+        Err(e) => println!("  fits: NO — {e}"),
+    }
+    Ok(())
+}
+
+/// `microflow serve <model> [--requests N] [--rate RPS] [--backend B]
+/// [--replicas R] [--batch B]` — synthetic serving load, prints metrics.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let name = model_arg(args)?;
+    let art = artifacts();
+    let backend_kind = args.opt("backend").unwrap_or("microflow");
+    let replicas = args.opt_usize("replicas", 2);
+    let requests = args.opt_usize("requests", 500);
+    let rate = args.opt_f64("rate", 200.0);
+    let max_batch = args.opt_usize("batch", 8);
+
+    let mfb_path = art.join(format!("{name}.mfb"));
+    let backends: Vec<Box<dyn Backend>> = (0..replicas)
+        .map(|_| -> Result<Box<dyn Backend>> {
+            Ok(match backend_kind {
+                "microflow" => Box::new(NativeBackend::load(&mfb_path)?),
+                "tflm" => Box::new(InterpBackend::load(&mfb_path)?),
+                "pjrt" => Box::new(PjrtBackend::load(&art, name)?),
+                other => bail!("unknown backend {other:?}"),
+            })
+        })
+        .collect::<Result<_>>()?;
+
+    let mut cfg = ServerConfig::default();
+    cfg.batcher.max_batch = max_batch;
+    let server = Server::start(backends, cfg)?;
+
+    // synthetic Poisson open-loop load from the test set
+    let ds = MdsDataset::load(art.join(format!("{name}_test.mds")))?;
+    let qp = server.input_qparams();
+    let mut rng = Prng::new(42);
+    println!("serving {name} via {backend_kind} x{replicas}: {requests} requests @ ~{rate} rps");
+    let mut pending = Vec::new();
+    let t0 = Instant::now();
+    for i in 0..requests {
+        let sample = ds.sample(i % ds.n);
+        let q = qp.quantize_slice(sample);
+        pending.push(server.submit(q)?);
+        std::thread::sleep(Duration::from_secs_f64(rng.exp(rate)));
+    }
+    for rx in pending {
+        rx.recv().context("reply dropped")??;
+    }
+    let wall = t0.elapsed();
+    let snap = server.metrics.snapshot();
+    println!("done in {:.2}s: {}", wall.as_secs_f64(), snap);
+    server.shutdown();
+    Ok(())
+}

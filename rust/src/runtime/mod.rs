@@ -1,0 +1,166 @@
+//! PJRT runtime (DESIGN.md S15): loads the JAX-AOT'd HLO-text artifacts and
+//! executes them on the XLA CPU client via the `xla` crate.
+//!
+//! This is the session architecture's L3↔L2 bridge: python lowered the
+//! quantized Pallas inference graphs once (`make artifacts`); this module
+//! loads `artifacts/<model>_quant_b<N>.hlo.txt`, compiles each once, and
+//! serves executions from Rust with **no Python anywhere near the request
+//! path**. One compiled executable per (model, batch) variant.
+//!
+//! Roles in the reproduction:
+//! * **numerical oracle** — the golden path the native engines are checked
+//!   against (`tests/integration_artifacts.rs`);
+//! * **host serving backend** — the coordinator can route requests to
+//!   either the native MicroFlow engine or the PJRT executable.
+//!
+//! Gotchas inherited from the image (see /opt/xla-example/README.md): HLO
+//! **text** interchange only — serialized protos from jax ≥ 0.5 carry
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; lowering used
+//! `return_tuple=True`, so results unwrap with `to_tuple1`.
+
+pub mod oracle;
+
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::quant::QParams;
+
+/// A compiled (model, batch) executable.
+pub struct PjrtExecutable {
+    exe: xla::PjRtLoadedExecutable,
+    pub batch: usize,
+    pub in_len: usize,
+    pub out_len: usize,
+}
+
+/// PJRT-backed engine: a set of batch-variant executables for one model.
+pub struct PjrtEngine {
+    pub model: String,
+    client: xla::PjRtClient,
+    /// Sorted by batch size ascending.
+    variants: Vec<PjrtExecutable>,
+    pub input_qparams: QParams,
+    pub output_qparams: QParams,
+    in_len: usize,
+    out_len: usize,
+    /// Per-sample input dims (the HLO input is `[batch, ..sample_dims]`).
+    sample_dims: Vec<usize>,
+}
+
+impl PjrtEngine {
+    /// Load every `artifacts/<model>_quant_b*.hlo.txt` variant.
+    ///
+    /// Quantization params come from the `.mfb` container (the HLO operates
+    /// purely in the quantized int8 domain).
+    pub fn load(artifacts: &std::path::Path, model: &str) -> Result<PjrtEngine> {
+        let mfb = crate::format::mfb::MfbModel::load(artifacts.join(format!("{model}.mfb")))?;
+        let in_len: usize = mfb.input_shape().iter().product();
+        let out_len: usize = mfb.output_shape().iter().product();
+
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let mut variants = Vec::new();
+        for entry in std::fs::read_dir(artifacts).context("read artifacts dir")? {
+            let path = entry?.path();
+            let name = path.file_name().unwrap_or_default().to_string_lossy().to_string();
+            let prefix = format!("{model}_quant_b");
+            if let Some(rest) = name.strip_prefix(&prefix) {
+                if let Some(bs) = rest.strip_suffix(".hlo.txt") {
+                    let batch: usize = bs.parse().with_context(|| format!("batch in {name}"))?;
+                    let proto = xla::HloModuleProto::from_text_file(
+                        path.to_str().context("non-utf8 path")?,
+                    )
+                    .with_context(|| format!("parse HLO text {name}"))?;
+                    let comp = xla::XlaComputation::from_proto(&proto);
+                    let exe = client.compile(&comp).with_context(|| format!("compile {name}"))?;
+                    variants.push(PjrtExecutable { exe, batch, in_len, out_len });
+                }
+            }
+        }
+        if variants.is_empty() {
+            bail!("no {model}_quant_b*.hlo.txt artifacts found in {}", artifacts.display());
+        }
+        variants.sort_by_key(|v| v.batch);
+        Ok(PjrtEngine {
+            model: model.to_string(),
+            client,
+            variants,
+            input_qparams: mfb.input_qparams(),
+            output_qparams: mfb.output_qparams(),
+            in_len,
+            out_len,
+            sample_dims: mfb.input_shape(),
+        })
+    }
+
+    pub fn input_len(&self) -> usize {
+        self.in_len
+    }
+
+    pub fn output_len(&self) -> usize {
+        self.out_len
+    }
+
+    /// Available batch sizes (ascending).
+    pub fn batch_sizes(&self) -> Vec<usize> {
+        self.variants.iter().map(|v| v.batch).collect()
+    }
+
+    /// Smallest variant that fits `n` samples (or the largest available).
+    pub fn variant_for(&self, n: usize) -> &PjrtExecutable {
+        self.variants.iter().find(|v| v.batch >= n).unwrap_or(self.variants.last().unwrap())
+    }
+
+    /// Execute a batch of quantized samples (`inputs.len() == n * in_len`).
+    ///
+    /// Samples are padded up to the executable's batch size (extra rows are
+    /// discarded) — the dynamic batcher upstream aims to fill variants.
+    pub fn execute_batch(&self, inputs: &[i8], n: usize) -> Result<Vec<i8>> {
+        if inputs.len() != n * self.in_len {
+            bail!("batch input length {} != {} * {}", inputs.len(), n, self.in_len);
+        }
+        let mut out = Vec::with_capacity(n * self.out_len);
+        let mut done = 0usize;
+        while done < n {
+            let var = self.variant_for(n - done);
+            let take = (n - done).min(var.batch);
+            let mut chunk = vec![0i8; var.batch * self.in_len];
+            chunk[..take * self.in_len]
+                .copy_from_slice(&inputs[done * self.in_len..(done + take) * self.in_len]);
+            // i8 is ArrayElement but not NativeType in xla 0.1.6, so build
+            // the literal via create_from_shape + copy_raw_from
+            let shape: Vec<usize> = std::iter::once(var.batch)
+                .chain(self.per_sample_dims().iter().copied())
+                .collect();
+            let mut lit = xla::Literal::create_from_shape(xla::PrimitiveType::S8, &shape);
+            lit.copy_raw_from(&chunk)?;
+            let result = var.exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+            let tuple = result.to_tuple1()?;
+            let vals = tuple.to_vec::<i8>()?;
+            out.extend_from_slice(&vals[..take * self.out_len]);
+            done += take;
+        }
+        Ok(out)
+    }
+
+    fn per_sample_dims(&self) -> Vec<usize> {
+        // the HLO input is [batch, ...input_shape]; we only kept lengths,
+        // so recover dims from the mfb-declared shape at load time
+        self.sample_dims.clone()
+    }
+
+    /// Quantized single-sample predict (oracle convenience).
+    pub fn predict_q(&self, input: &[i8]) -> Result<Vec<i8>> {
+        self.execute_batch(input, 1)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // PJRT tests require built artifacts; they live in
+    // rust/tests/integration_artifacts.rs so `cargo test --lib` stays
+    // hermetic.
+}

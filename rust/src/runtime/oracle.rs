@@ -1,0 +1,104 @@
+//! Golden-path cross-checks (DESIGN.md S15).
+//!
+//! Three implementations of the same quantized model must agree:
+//!
+//! 1. the JAX/Pallas graph (captured in the golden `.bin` vectors and in
+//!    the AOT'd HLO executed by [`super::PjrtEngine`]);
+//! 2. the native MicroFlow engine (bit-exact — same float-scale epilogue);
+//! 3. the TFLM-like interpreter (within ±1 output unit — fixed-point
+//!    arithmetic; the paper's Sec. 6.2.1 observation).
+//!
+//! These functions are the assertion helpers used by
+//! `tests/integration_artifacts.rs` and the `microflow verify` CLI.
+
+use anyhow::{bail, Result};
+
+use crate::format::golden::Golden;
+
+/// Result of comparing an engine against golden vectors.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Agreement {
+    pub n_outputs: usize,
+    pub exact: usize,
+    pub within_one: usize,
+    pub max_abs_diff: i32,
+}
+
+impl Agreement {
+    pub fn is_bit_exact(&self) -> bool {
+        self.exact == self.n_outputs
+    }
+
+    pub fn is_within_one(&self) -> bool {
+        self.within_one == self.n_outputs
+    }
+}
+
+/// Compare a predictor's outputs against golden vectors.
+pub fn check_against_golden(
+    golden: &Golden,
+    mut predict: impl FnMut(&[i8]) -> Result<Vec<i8>>,
+) -> Result<Agreement> {
+    let mut agg =
+        Agreement { n_outputs: 0, exact: 0, within_one: 0, max_abs_diff: 0 };
+    for i in 0..golden.n {
+        let out = predict(golden.input(i))?;
+        let want = golden.output(i);
+        if out.len() != want.len() {
+            bail!("sample {i}: output length {} != golden {}", out.len(), want.len());
+        }
+        for (a, b) in out.iter().zip(want) {
+            let d = (*a as i32 - *b as i32).abs();
+            agg.n_outputs += 1;
+            if d == 0 {
+                agg.exact += 1;
+            }
+            if d <= 1 {
+                agg.within_one += 1;
+            }
+            agg.max_abs_diff = agg.max_abs_diff.max(d);
+        }
+    }
+    Ok(agg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn golden2() -> Golden {
+        Golden {
+            n: 2,
+            in_shape: vec![2],
+            out_shape: vec![2],
+            x: vec![1, 2, 3, 4],
+            y: vec![10, 20, 30, 40],
+        }
+    }
+
+    #[test]
+    fn exact_match_detected() {
+        let g = golden2();
+        let a = check_against_golden(&g, |x| Ok(x.iter().map(|v| v * 10).collect())).unwrap();
+        assert!(a.is_bit_exact());
+        assert_eq!(a.max_abs_diff, 0);
+    }
+
+    #[test]
+    fn off_by_one_detected() {
+        let g = golden2();
+        let a = check_against_golden(&g, |x| {
+            Ok(x.iter().map(|v| v * 10 + 1).collect())
+        })
+        .unwrap();
+        assert!(!a.is_bit_exact());
+        assert!(a.is_within_one());
+        assert_eq!(a.max_abs_diff, 1);
+    }
+
+    #[test]
+    fn length_mismatch_is_error() {
+        let g = golden2();
+        assert!(check_against_golden(&g, |_| Ok(vec![0i8; 3])).is_err());
+    }
+}

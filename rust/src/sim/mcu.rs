@@ -1,0 +1,132 @@
+//! The Table-4 MCU roster (DESIGN.md S14).
+//!
+//! Specs are the paper's Table 4; power draws are datasheet-typical active
+//! currents at nominal voltage (used by the Table-6 energy model); the
+//! per-architecture cost/code-size constants live in [`super::cost`] and
+//! [`super::memory_model`].
+
+/// Instruction-set / implementation class, driving cost and code-size
+/// constants.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ArchClass {
+    /// 32-bit Xtensa LX6 (ESP32) — fast clock, weak FPU, mediocre codegen.
+    Xtensa,
+    /// ARM Cortex-M7F — dual-issue, caches, fast FPU.
+    CortexM7F,
+    /// ARM Cortex-M4F — DSP extensions, fast FPU.
+    CortexM4F,
+    /// ARM Cortex-M3 — no FPU (softfloat), no DSP.
+    CortexM3,
+    /// 8-bit AVR — 8-bit ALU, 2-cycle 8x8 multiply, softfloat.
+    Avr8,
+}
+
+/// One microcontroller (a Table-4 row).
+#[derive(Clone, Copy, Debug)]
+pub struct Mcu {
+    pub name: &'static str,
+    pub board: &'static str,
+    pub arch: ArchClass,
+    pub flash_bytes: usize,
+    pub ram_bytes: usize,
+    pub clock_hz: u64,
+    /// Typical active power (W) while crunching — drives Table 6.
+    pub active_power_w: f64,
+    /// Whether a TFLM port exists for this target (the paper could run
+    /// TFLM only on ESP32 and nRF52840; Sec. 6.2.2).
+    pub tflm_supported: bool,
+    /// Whether the vendor ships optimized NN kernels TFLM can use
+    /// (CMSIS-NN / ESP-NN — the person-detector advantage, Sec. 6.2.3).
+    pub optimized_nn_kernels: bool,
+}
+
+/// The five paper devices, in the paper's performance order.
+pub const MCUS: [Mcu; 5] = [
+    Mcu {
+        name: "ESP32",
+        board: "Adafruit HUZZAH32",
+        arch: ArchClass::Xtensa,
+        flash_bytes: 4 * 1024 * 1024,
+        ram_bytes: 328 * 1024,
+        clock_hz: 240_000_000,
+        active_power_w: 0.24,
+        tflm_supported: true,
+        optimized_nn_kernels: true, // ESP-NN
+    },
+    Mcu {
+        name: "ATSAMV71",
+        board: "SAM V71 Xplained Ultra",
+        arch: ArchClass::CortexM7F,
+        flash_bytes: 2 * 1024 * 1024,
+        ram_bytes: 384 * 1024,
+        clock_hz: 300_000_000,
+        active_power_w: 0.165,
+        tflm_supported: false,
+        optimized_nn_kernels: true,
+    },
+    Mcu {
+        name: "nRF52840",
+        board: "Arduino Nano 33 BLE Sense",
+        arch: ArchClass::CortexM4F,
+        flash_bytes: 1024 * 1024,
+        ram_bytes: 256 * 1024,
+        clock_hz: 64_000_000,
+        active_power_w: 0.017,
+        tflm_supported: true,
+        optimized_nn_kernels: true, // CMSIS-NN
+    },
+    Mcu {
+        name: "LM3S6965",
+        board: "QEMU emulation",
+        arch: ArchClass::CortexM3,
+        flash_bytes: 256 * 1024,
+        ram_bytes: 64 * 1024,
+        clock_hz: 50_000_000,
+        active_power_w: 0.12,
+        tflm_supported: false,
+        optimized_nn_kernels: false,
+    },
+    Mcu {
+        name: "ATmega328",
+        board: "Arduino Uno",
+        arch: ArchClass::Avr8,
+        flash_bytes: 32 * 1024,
+        ram_bytes: 2 * 1024,
+        clock_hz: 20_000_000,
+        active_power_w: 0.045,
+        tflm_supported: false,
+        optimized_nn_kernels: false,
+    },
+];
+
+/// Look up an MCU by name.
+pub fn by_name(name: &str) -> Option<&'static Mcu> {
+    MCUS.iter().find(|m| m.name.eq_ignore_ascii_case(name))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roster_matches_table4() {
+        assert_eq!(MCUS.len(), 5);
+        let atmega = by_name("ATmega328").unwrap();
+        assert_eq!(atmega.flash_bytes, 32 * 1024);
+        assert_eq!(atmega.ram_bytes, 2 * 1024);
+        let esp = by_name("esp32").unwrap();
+        assert_eq!(esp.clock_hz, 240_000_000);
+    }
+
+    #[test]
+    fn only_esp32_and_nrf_have_tflm_ports() {
+        let supported: Vec<&str> =
+            MCUS.iter().filter(|m| m.tflm_supported).map(|m| m.name).collect();
+        assert_eq!(supported, vec!["ESP32", "nRF52840"]);
+    }
+
+    #[test]
+    fn descending_capability_order() {
+        assert!(MCUS.windows(2).all(|w| w[0].flash_bytes >= w[1].flash_bytes));
+    }
+}

@@ -1,0 +1,271 @@
+//! Flash / RAM accounting for both engines on each MCU (DESIGN.md S14;
+//! paper Sec. 6.2.2, Fig. 9/10).
+//!
+//! The *variable* parts come from the real algorithms in this repo:
+//!
+//! * MicroFlow RAM: the static planner's peak live set
+//!   ([`crate::compiler::memory::MemoryPlan::peak`]) — or the page plan's
+//!   footprint under paging;
+//! * TFLM RAM: the arena planner's size ([`crate::interp::arena`]) plus
+//!   per-tensor/per-node interpreter structures;
+//! * MicroFlow Flash payload: weights + folded constants
+//!   ([`CompiledModel::weight_bytes`]) — names/options/versions stripped;
+//! * TFLM Flash payload: the **entire model container**
+//!   ([`MfbModel::file_bytes`]) since the interpreter reads it at runtime.
+//!
+//! The *fixed* parts are per-architecture code-size constants (engine code,
+//! kernel code, firmware baseline), calibrated to the paper's Fig. 9
+//! anchors: MicroFlow sine on ATmega328 = 13.6 kB Flash / 1.7 kB RAM;
+//! ~65% Flash saving vs TFLM on ESP32; TFLM sine RAM on nRF52840 ≈ 45.7 kB
+//! vs MicroFlow ≈ 5.3 kB.
+
+use std::collections::BTreeSet;
+
+use crate::compiler::plan::CompiledModel;
+use crate::format::mfb::MfbModel;
+use crate::interp::arena::ArenaPlan;
+use crate::sim::cost::Engine;
+use crate::sim::mcu::{ArchClass, Mcu};
+
+/// Code-size constants (bytes) per architecture class.
+#[derive(Clone, Copy, Debug)]
+pub struct CodeSize {
+    /// MicroFlow runtime core (plan walker + requant helpers).
+    pub mf_core: usize,
+    /// MicroFlow per-used-operator kernel code.
+    pub mf_kernel: usize,
+    /// TFLM interpreter core (parser, allocator, dispatcher).
+    pub tflm_core: usize,
+    /// TFLM per-registered-kernel code (ALL kernels are linked).
+    pub tflm_kernel: usize,
+    /// Bare firmware baseline (vectors, runtime init, clock setup).
+    pub firmware: usize,
+    /// Base RAM: stack + engine statics.
+    pub mf_base_ram: usize,
+    /// TFLM base RAM: interpreter object, allocator, framework buffers.
+    pub tflm_base_ram: usize,
+}
+
+/// Per-architecture code sizes. 32-bit Thumb/Xtensa code is denser than
+/// AVR for 32-bit arithmetic; AVR pays heavily for int32/float emulation.
+pub fn code_size(arch: ArchClass) -> CodeSize {
+    match arch {
+        ArchClass::Xtensa => CodeSize {
+            mf_core: 7_000,
+            mf_kernel: 1_800,
+            tflm_core: 38_000,
+            tflm_kernel: 2_600,
+            firmware: 9_000,
+            mf_base_ram: 4_800,
+            tflm_base_ram: 40_000,
+        },
+        ArchClass::CortexM7F | ArchClass::CortexM4F => CodeSize {
+            mf_core: 6_000,
+            mf_kernel: 1_500,
+            tflm_core: 34_000,
+            tflm_kernel: 2_400,
+            firmware: 8_000,
+            mf_base_ram: 4_900,
+            tflm_base_ram: 40_000,
+        },
+        ArchClass::CortexM3 => CodeSize {
+            mf_core: 6_500,
+            mf_kernel: 1_600,
+            tflm_core: 36_000,
+            tflm_kernel: 2_500,
+            firmware: 8_000,
+            mf_base_ram: 4_000,
+            tflm_base_ram: 38_000,
+        },
+        ArchClass::Avr8 => CodeSize {
+            mf_core: 4_200,
+            mf_kernel: 2_100,
+            tflm_core: 46_000,
+            tflm_kernel: 3_200,
+            firmware: 5_800,
+            mf_base_ram: 1_450,
+            tflm_base_ram: 30_000,
+        },
+    }
+}
+
+/// Number of TFLM kernels linked by the all-ops resolver (Flash cost paid
+/// regardless of the model).
+pub const TFLM_REGISTERED_KERNELS: usize = 8;
+
+/// Per-tensor and per-node interpreter RAM structures (TFLM's
+/// `TfLiteTensor` / node bookkeeping).
+pub const TFLM_TENSOR_STRUCT: usize = 64;
+pub const TFLM_NODE_STRUCT: usize = 48;
+
+/// A computed memory footprint.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MemoryFootprint {
+    pub flash: usize,
+    pub ram: usize,
+}
+
+/// Why a deployment doesn't fit (the paper's "not enough memory" errors).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FitError {
+    /// No port of the engine exists for this target.
+    Unsupported,
+    FlashOverflow { need: usize, have: usize },
+    RamOverflow { need: usize, have: usize },
+}
+
+impl std::fmt::Display for FitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FitError::Unsupported => write!(f, "no framework port for this target"),
+            FitError::FlashOverflow { need, have } => {
+                write!(f, "not enough Flash: need {need} B, have {have} B")
+            }
+            FitError::RamOverflow { need, have } => {
+                write!(f, "not enough RAM: need {need} B, have {have} B")
+            }
+        }
+    }
+}
+
+/// Distinct operator kinds used by a compiled model (MicroFlow links only
+/// these kernels — the compiler-based Flash win).
+fn used_kernel_kinds(compiled: &CompiledModel) -> usize {
+    let kinds: BTreeSet<&'static str> = compiled.steps.iter().map(|s| s.kind.name()).collect();
+    kinds.len()
+}
+
+/// MicroFlow footprint on an MCU.
+///
+/// RAM charge per operator:
+///
+/// * On memory-mapped-Flash architectures (ARM, Xtensa) kernels stream
+///   weights straight from Flash, so each step is charged its executor
+///   live set (input + output + view scratch) — the `MemoryPlan` numbers.
+/// * On the Harvard-architecture AVR, Flash is not data-addressable
+///   (bytewise `LPM` only), so FullyConnected layers stage their working
+///   set in RAM. Unpaged that is the paper's footnote-13 costing (weights
+///   + int32 accumulators + vectors ≈ 5 kB for 32x32); paged it is one
+///   page (163 B for K = 32) — Sec. 4.3's entire raison d'être.
+/// * Paging, when enabled, caps every FC at one page on any architecture.
+pub fn microflow_footprint(compiled: &CompiledModel, mcu: &Mcu) -> MemoryFootprint {
+    use crate::compiler::paging::PagePlan;
+    use crate::compiler::plan::StepKind;
+
+    let cs = code_size(mcu.arch);
+    let flash = cs.firmware
+        + cs.mf_core
+        + cs.mf_kernel * used_kernel_kinds(compiled)
+        + compiled.weight_bytes();
+    let avr = mcu.arch == ArchClass::Avr8;
+    let peak = compiled
+        .memory
+        .per_step
+        .iter()
+        .zip(&compiled.steps)
+        .map(|(m, s)| match &s.kind {
+            StepKind::FullyConnected { k, n, paged, .. } => {
+                if *paged {
+                    PagePlan::paged_ram(*k)
+                } else if avr {
+                    PagePlan::unpaged_ram(*k, *n)
+                } else {
+                    m.live()
+                }
+            }
+            _ => m.live(),
+        })
+        .max()
+        .unwrap_or(0);
+    MemoryFootprint { flash, ram: cs.mf_base_ram + peak }
+}
+
+/// TFLM footprint on an MCU: full container resident in Flash, arena +
+/// interpreter structures in RAM.
+pub fn tflm_footprint(model: &MfbModel, arena: &ArenaPlan, mcu: &Mcu) -> MemoryFootprint {
+    let cs = code_size(mcu.arch);
+    let flash = cs.firmware
+        + cs.tflm_core
+        + cs.tflm_kernel * TFLM_REGISTERED_KERNELS
+        + model.file_bytes;
+    let ram = cs.tflm_base_ram
+        + arena.arena_size
+        + model.tensors.len() * TFLM_TENSOR_STRUCT
+        + model.operators.len() * TFLM_NODE_STRUCT;
+    MemoryFootprint { flash, ram }
+}
+
+/// Check whether a footprint fits a device for a given engine.
+pub fn fits(mcu: &Mcu, engine: Engine, fp: MemoryFootprint) -> Result<(), FitError> {
+    if engine == Engine::Tflm && !mcu.tflm_supported {
+        return Err(FitError::Unsupported);
+    }
+    if fp.flash > mcu.flash_bytes {
+        return Err(FitError::FlashOverflow { need: fp.flash, have: mcu.flash_bytes });
+    }
+    if fp.ram > mcu.ram_bytes {
+        return Err(FitError::RamOverflow { need: fp.ram, have: mcu.ram_bytes });
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::plan::{CompileOptions, CompiledModel};
+    use crate::format::mfb::MfbModel;
+    use crate::interp::arena::ArenaPlan;
+    use crate::sim::mcu::by_name;
+
+    fn tiny() -> (MfbModel, CompiledModel, ArenaPlan) {
+        let m = MfbModel::parse(&crate::format::mfb::tests::tiny_mfb()).unwrap();
+        let c = CompiledModel::compile(&m, CompileOptions::default()).unwrap();
+        let a = ArenaPlan::plan(&m).unwrap();
+        (m, c, a)
+    }
+
+    #[test]
+    fn microflow_flash_smaller_than_tflm() {
+        let (m, c, a) = tiny();
+        for mcu in crate::sim::mcu::MCUS.iter() {
+            let mf = microflow_footprint(&c, mcu);
+            let tf = tflm_footprint(&m, &a, mcu);
+            assert!(mf.flash < tf.flash, "{}: {} vs {}", mcu.name, mf.flash, tf.flash);
+            assert!(mf.ram < tf.ram, "{}: {} vs {}", mcu.name, mf.ram, tf.ram);
+        }
+    }
+
+    #[test]
+    fn tflm_unsupported_off_esp_and_nrf() {
+        let (m, _, a) = tiny();
+        let atmega = by_name("ATmega328").unwrap();
+        let fp = tflm_footprint(&m, &a, atmega);
+        assert_eq!(fits(atmega, Engine::Tflm, fp), Err(FitError::Unsupported));
+    }
+
+    #[test]
+    fn tiny_model_fits_atmega_with_microflow() {
+        let (_, c, _) = tiny();
+        let atmega = by_name("ATmega328").unwrap();
+        let fp = microflow_footprint(&c, atmega);
+        assert!(fits(atmega, Engine::MicroFlow, fp).is_ok(), "{fp:?}");
+    }
+
+    #[test]
+    fn flash_overflow_is_reported_with_sizes() {
+        let err = FitError::FlashOverflow { need: 100, have: 50 };
+        assert!(err.to_string().contains("100"));
+    }
+
+    #[test]
+    fn paging_reduces_modeled_ram() {
+        let m = MfbModel::parse(&crate::format::mfb::tests::tiny_mfb()).unwrap();
+        // tiny model's working set is already small, so construct the
+        // comparison at the PagePlan level: covered by paging tests; here
+        // just ensure the paged path is taken
+        let paged = CompiledModel::compile(&m, CompileOptions { paging: true }).unwrap();
+        let atmega = by_name("ATmega328").unwrap();
+        let fp = microflow_footprint(&paged, atmega);
+        assert!(fp.ram >= code_size(atmega.arch).mf_base_ram);
+    }
+}

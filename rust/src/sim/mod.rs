@@ -1,0 +1,34 @@
+//! MCU substrate simulator (DESIGN.md S14, §4 Substitutions).
+//!
+//! The paper evaluates on five physical boards (Table 4). We have none of
+//! them, so this module provides the closest synthetic equivalent that
+//! exercises the same code paths:
+//!
+//! * [`mcu`]          — the Table-4 device roster with Flash/RAM/clock,
+//!   architecture class, power draw and framework availability;
+//! * [`cost`]         — a first-order cycle model mapping a compiled
+//!   model's MAC/op counts to cycles per inference, per engine, per MCU.
+//!   **Calibrated to the paper's reported *ratios*** (sine ~10x, speech
+//!   +9/+15%, person −6%, nRF52840 ≈ 3x ESP32) — see `cost`;
+//! * [`memory_model`] — Flash/RAM accounting driven by the *real* outputs
+//!   of the static planner (`compiler::memory`) and the arena planner
+//!   (`interp::arena`) plus per-architecture code-size constants;
+//! * [`energy`]       — Table-6 energy = average power × modeled time;
+//! * [`report`]       — text renderers shared by the fig/table benches.
+//!
+//! What is real vs modeled: memory numbers derive from the actual
+//! planner/arena algorithms run on the actual models (plus code-size
+//! constants); time and energy are calibrated models (we cannot measure
+//! silicon we do not have). Host-measured wall-clock comparisons of the
+//! two engines are reported separately by `benches/kernels_micro.rs`.
+
+pub mod cost;
+pub mod energy;
+pub mod mcu;
+pub mod memory_model;
+pub mod report;
+pub mod stack_guard;
+
+pub use cost::{inference_cycles, inference_seconds, Engine};
+pub use mcu::{Mcu, MCUS};
+pub use memory_model::{FitError, MemoryFootprint};

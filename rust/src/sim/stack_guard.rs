@@ -1,0 +1,141 @@
+//! Stack-overflow protection model — paper Sec. 4.4 (flip-link).
+//!
+//! On bare-metal ARM Cortex-M the default memory layout places the stack
+//! *above* the static data (`.data`/`.bss`), growing down towards it: an
+//! overflow silently corrupts statics (undefined behaviour). The paper
+//! adopts `flip-link`, which flips the layout so the stack sits *below*
+//! the statics and an overflow walks off the bottom of RAM — a bus fault
+//! the firmware can catch. Currently Cortex-M only, exactly as in the
+//! paper.
+//!
+//! This module models both layouts for the simulated devices: given a
+//! device, a static-data size and a peak stack demand, it reports whether
+//! an overflow occurs and — crucially — whether it is *detected* (hardware
+//! exception) or *silent corruption*. The deploy CLI and the fleet example
+//! surface it; `integration_sim.rs` pins the Sec. 4.4 claims.
+
+use crate::sim::mcu::{ArchClass, Mcu};
+
+/// RAM layout strategy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StackLayout {
+    /// Default linker script: statics at the bottom, stack on top growing
+    /// down into them.
+    Default,
+    /// flip-link: stack at the bottom growing down past the RAM boundary.
+    Flipped,
+}
+
+/// Outcome of running with a given stack demand.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StackOutcome {
+    /// Stack fits; no overflow.
+    Ok { headroom: usize },
+    /// Overflow hit the RAM boundary → hardware exception (HardFault /
+    /// bus error) the runtime can handle. Safe failure.
+    DetectedOverflow { deficit: usize },
+    /// Overflow walked into the statics region undetected. Undefined
+    /// behaviour — the failure mode Sec. 4.4 eliminates.
+    SilentCorruption { deficit: usize },
+}
+
+impl StackOutcome {
+    pub fn is_safe(&self) -> bool {
+        !matches!(self, StackOutcome::SilentCorruption { .. })
+    }
+}
+
+/// Whether flip-link supports this architecture (Cortex-M only, like the
+/// paper's tooling note).
+pub fn flip_link_available(arch: ArchClass) -> bool {
+    matches!(arch, ArchClass::CortexM7F | ArchClass::CortexM4F | ArchClass::CortexM3)
+}
+
+/// Evaluate a stack demand against a device and layout.
+///
+/// `static_bytes` is the `.data`+`.bss` footprint (the engine's base RAM
+/// plus buffers); `stack_demand` the peak stack use of the inference.
+pub fn evaluate(
+    mcu: &Mcu,
+    layout: StackLayout,
+    static_bytes: usize,
+    stack_demand: usize,
+) -> StackOutcome {
+    let ram = mcu.ram_bytes;
+    let avail = ram.saturating_sub(static_bytes);
+    if stack_demand <= avail {
+        return StackOutcome::Ok { headroom: avail - stack_demand };
+    }
+    let deficit = stack_demand - avail;
+    match layout {
+        // stack grows down into .data/.bss: no MPU fence, silent
+        StackLayout::Default => StackOutcome::SilentCorruption { deficit },
+        // stack grows past the bottom of RAM: bus fault on Cortex-M;
+        // other architectures have no such fence even flipped
+        StackLayout::Flipped => {
+            if flip_link_available(mcu.arch) {
+                StackOutcome::DetectedOverflow { deficit }
+            } else {
+                StackOutcome::SilentCorruption { deficit }
+            }
+        }
+    }
+}
+
+/// The layout MicroFlow firmware uses on a device: flipped when the
+/// toolchain supports it (paper: flip-link on Cortex-M), default elsewhere.
+pub fn microflow_layout(mcu: &Mcu) -> StackLayout {
+    if flip_link_available(mcu.arch) {
+        StackLayout::Flipped
+    } else {
+        StackLayout::Default
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::mcu::by_name;
+
+    #[test]
+    fn fits_when_demand_is_small() {
+        let nrf = by_name("nRF52840").unwrap();
+        let o = evaluate(nrf, StackLayout::Flipped, 40_000, 10_000);
+        assert!(matches!(o, StackOutcome::Ok { .. }));
+    }
+
+    #[test]
+    fn default_layout_corrupts_silently() {
+        let nrf = by_name("nRF52840").unwrap();
+        let o = evaluate(nrf, StackLayout::Default, 200_000, 100_000);
+        assert!(matches!(o, StackOutcome::SilentCorruption { .. }));
+        assert!(!o.is_safe());
+    }
+
+    #[test]
+    fn flipped_layout_faults_detectably_on_cortex_m() {
+        let nrf = by_name("nRF52840").unwrap();
+        let o = evaluate(nrf, StackLayout::Flipped, 200_000, 100_000);
+        assert_eq!(o, StackOutcome::DetectedOverflow { deficit: 100_000 - (256 * 1024 - 200_000) });
+        assert!(o.is_safe());
+    }
+
+    #[test]
+    fn flip_link_is_cortex_m_only() {
+        assert!(flip_link_available(ArchClass::CortexM4F));
+        assert!(flip_link_available(ArchClass::CortexM3));
+        assert!(!flip_link_available(ArchClass::Avr8));
+        assert!(!flip_link_available(ArchClass::Xtensa));
+        // the paper's limitation verbatim: only Cortex-M targets get the
+        // protection today
+        let esp = by_name("ESP32").unwrap();
+        let o = evaluate(esp, StackLayout::Flipped, 320_000, 20_000);
+        assert!(matches!(o, StackOutcome::SilentCorruption { .. }));
+    }
+
+    #[test]
+    fn microflow_picks_flipped_where_possible() {
+        assert_eq!(microflow_layout(by_name("ATSAMV71").unwrap()), StackLayout::Flipped);
+        assert_eq!(microflow_layout(by_name("ATmega328").unwrap()), StackLayout::Default);
+    }
+}

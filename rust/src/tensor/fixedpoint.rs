@@ -1,0 +1,193 @@
+//! gemmlowp-style integer-only requantization (DESIGN.md S2) — the TFLM
+//! comparator arithmetic.
+//!
+//! TFLM never multiplies the accumulator by a float at inference time.
+//! Instead the real multiplier `M = s_X s_W / s_Y` (always in (0, 1) for
+//! sane models) is decomposed offline into a Q31 fixed-point mantissa and a
+//! power-of-two shift, and applied with
+//! `SaturatingRoundingDoublingHighMul` + `RoundingDivideByPOT` — exactly
+//! the reference gemmlowp/TFLite kernels. The bias is added to the int32
+//! accumulator directly (s_b = s_X s_W, so it lives in accumulator scale).
+//!
+//! This path intentionally differs from [`super::quant::requant_float`] by
+//! at most one output unit on rare inputs — the same ±1 discrepancies the
+//! paper observed between MicroFlow and TFLM (Sec. 6.2.1). The property
+//! test `fixedpoint_vs_float_within_one_unit` pins that bound.
+
+/// Decompose `real` (> 0) into `(quantized_multiplier, shift)` such that
+/// `real ≈ qm * 2^(shift - 31)` with `qm` in `[2^30, 2^31)`.
+///
+/// Matches TFLite's `QuantizeMultiplier`: `shift > 0` is a left shift
+/// (real >= 1), `shift <= 0` a right shift.
+pub fn quantize_multiplier(real: f64) -> (i32, i32) {
+    assert!(real > 0.0, "multiplier must be positive, got {real}");
+    let (frac, exp) = frexp(real);
+    // frac in [0.5, 1): q = round(frac * 2^31)
+    let mut q = (frac * (1i64 << 31) as f64).round() as i64;
+    let mut shift = exp;
+    if q == (1i64 << 31) {
+        q /= 2;
+        shift += 1;
+    }
+    assert!(q <= i32::MAX as i64);
+    (q as i32, shift)
+}
+
+/// `frexp` for positive finite doubles: returns `(frac, exp)` with
+/// `real = frac * 2^exp`, `frac` in `[0.5, 1)`.
+fn frexp(x: f64) -> (f64, i32) {
+    assert!(x.is_finite() && x > 0.0);
+    let bits = x.to_bits();
+    let raw_exp = ((bits >> 52) & 0x7ff) as i32;
+    if raw_exp == 0 {
+        // subnormal: normalize by scaling up 2^64
+        let (f, e) = frexp(x * (1u64 << 63) as f64 * 2.0);
+        return (f, e - 64);
+    }
+    let exp = raw_exp - 1022;
+    let frac_bits = (bits & 0x000f_ffff_ffff_ffff) | (1022u64 << 52);
+    (f64::from_bits(frac_bits), exp)
+}
+
+/// gemmlowp `SaturatingRoundingDoublingHighMul`: `(a * b * 2) >> 31` with
+/// round-to-nearest and saturation of the single overflow case
+/// `a = b = i32::MIN`.
+#[inline(always)]
+pub fn saturating_rounding_doubling_high_mul(a: i32, b: i32) -> i32 {
+    if a == i32::MIN && b == i32::MIN {
+        return i32::MAX;
+    }
+    let ab = a as i64 * b as i64;
+    let nudge: i64 = if ab >= 0 { 1 << 30 } else { 1 - (1 << 30) };
+    ((ab + nudge) >> 31) as i32
+}
+
+/// gemmlowp `RoundingDivideByPOT`: arithmetic right shift with
+/// round-to-nearest, ties away from zero (upward on the remainder test).
+#[inline(always)]
+pub fn rounding_divide_by_pot(x: i32, exponent: i32) -> i32 {
+    debug_assert!((0..=31).contains(&exponent));
+    if exponent == 0 {
+        return x;
+    }
+    let mask = (1i64 << exponent) - 1;
+    let remainder = (x as i64) & mask;
+    let threshold = (mask >> 1) + i64::from(x < 0);
+    (x >> exponent) + i32::from(remainder > threshold)
+}
+
+/// TFLite `MultiplyByQuantizedMultiplier`.
+#[inline(always)]
+pub fn multiply_by_quantized_multiplier(x: i32, quantized_multiplier: i32, shift: i32) -> i32 {
+    let left_shift = shift.max(0);
+    let right_shift = (-shift).max(0);
+    let shifted = x.saturating_mul(1i32 << left_shift);
+    rounding_divide_by_pot(
+        saturating_rounding_doubling_high_mul(shifted, quantized_multiplier),
+        right_shift,
+    )
+}
+
+/// Pre-decomposed fixed-point multiplier for one operator (TFLM path).
+#[derive(Clone, Copy, Debug)]
+pub struct FixedPointMultiplier {
+    pub quantized_multiplier: i32,
+    pub shift: i32,
+}
+
+impl FixedPointMultiplier {
+    pub fn from_real(real: f64) -> Self {
+        let (quantized_multiplier, shift) = quantize_multiplier(real);
+        FixedPointMultiplier { quantized_multiplier, shift }
+    }
+
+    /// Requantize an accumulator that already includes the int32 bias:
+    /// `y = clamp(z_y + MBQM(acc))`.
+    #[inline(always)]
+    pub fn requant(&self, acc: i32, z_y: i32, act_min: i8, act_max: i8) -> i8 {
+        let scaled = multiply_by_quantized_multiplier(acc, self.quantized_multiplier, self.shift);
+        (scaled + z_y).clamp(act_min as i32, act_max as i32) as i8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Prng;
+
+    #[test]
+    fn frexp_basic() {
+        let (f, e) = frexp(1.0);
+        assert_eq!((f, e), (0.5, 1));
+        let (f, e) = frexp(0.75);
+        assert_eq!((f, e), (0.75, 0));
+        let (f, e) = frexp(6.0);
+        assert_eq!((f, e), (0.75, 3));
+    }
+
+    #[test]
+    fn quantize_multiplier_reconstructs() {
+        for real in [0.5, 0.001234, 0.9999, 1.0, 7.25, 1e-6] {
+            let (qm, shift) = quantize_multiplier(real);
+            let back = qm as f64 * 2f64.powi(shift - 31);
+            assert!((back - real).abs() / real < 1e-8, "{real} -> {back}");
+        }
+    }
+
+    #[test]
+    fn srdhm_reference_values() {
+        assert_eq!(saturating_rounding_doubling_high_mul(i32::MIN, i32::MIN), i32::MAX);
+        assert_eq!(saturating_rounding_doubling_high_mul(1 << 30, 1 << 30), 1 << 29);
+        assert_eq!(saturating_rounding_doubling_high_mul(0, 12345), 0);
+    }
+
+    #[test]
+    fn rdbp_rounds_to_nearest() {
+        assert_eq!(rounding_divide_by_pot(7, 1), 4); // 3.5 -> 4
+        assert_eq!(rounding_divide_by_pot(5, 1), 3); // 2.5 -> 3 (ties up)
+        assert_eq!(rounding_divide_by_pot(-7, 1), -4); // -3.5 -> -4
+        assert_eq!(rounding_divide_by_pot(12, 2), 3);
+        assert_eq!(rounding_divide_by_pot(100, 0), 100);
+    }
+
+    #[test]
+    fn multiplier_approximates_float_scaling() {
+        let mut rng = Prng::new(11);
+        for _ in 0..2000 {
+            let real = rng.f64() * 0.01 + 1e-5;
+            let m = FixedPointMultiplier::from_real(real);
+            let acc = rng.range_i64(-1_000_000, 1_000_000) as i32;
+            let fixed = multiply_by_quantized_multiplier(acc, m.quantized_multiplier, m.shift);
+            let float = (acc as f64 * real).round();
+            assert!(
+                (fixed as f64 - float).abs() <= 1.0,
+                "acc={acc} real={real} fixed={fixed} float={float}"
+            );
+        }
+    }
+
+    #[test]
+    fn fixedpoint_vs_float_within_one_unit() {
+        // The paper's Sec. 6.2.1 observation, as an executable property:
+        // TFLM-style and MicroFlow-style requantization agree within 1 unit.
+        let mut rng = Prng::new(5);
+        for _ in 0..5000 {
+            let scale_ratio = (rng.f64() * 0.02 + 1e-6) as f32;
+            let z_y = rng.range_i64(-128, 127) as i32;
+            let acc = rng.range_i64(-40_000, 40_000) as i32;
+            let m = FixedPointMultiplier::from_real(scale_ratio as f64);
+            let fixed = m.requant(acc, z_y, -128, 127);
+            let float = crate::tensor::quant::requant_float(
+                acc,
+                z_y as f32,
+                scale_ratio,
+                -128,
+                127,
+            );
+            assert!(
+                (fixed as i32 - float as i32).abs() <= 1,
+                "acc={acc} ratio={scale_ratio} zy={z_y}: fixed={fixed} float={float}"
+            );
+        }
+    }
+}

@@ -1,0 +1,175 @@
+//! Tensor containers and quantization arithmetic (DESIGN.md S1-S3).
+//!
+//! The paper's runtime works on statically-shaped int8 tensors with
+//! per-tensor affine quantization (Eq. 1). This module provides:
+//!
+//! * [`Tensor`] — a simple row-major container over int8 / int32 / f32;
+//! * [`quant`] — the MicroFlow requantization path: int32 accumulate, then
+//!   a float32 epilogue with round-half-away-from-zero (bit-compatible
+//!   with the JAX/Pallas golden path);
+//! * [`fixedpoint`] — the TFLM/gemmlowp integer-only requantization used by
+//!   the interpreter baseline (source of the paper's ±1 output unit
+//!   differences, Sec. 6.2.1).
+
+pub mod fixedpoint;
+pub mod quant;
+
+pub use quant::QParams;
+
+/// Element type of a tensor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    I8,
+    I32,
+    F32,
+}
+
+impl DType {
+    pub fn size_bytes(self) -> usize {
+        match self {
+            DType::I8 => 1,
+            DType::I32 => 4,
+            DType::F32 => 4,
+        }
+    }
+}
+
+/// Tensor storage.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TensorData {
+    I8(Vec<i8>),
+    I32(Vec<i32>),
+    F32(Vec<f32>),
+}
+
+impl TensorData {
+    pub fn dtype(&self) -> DType {
+        match self {
+            TensorData::I8(_) => DType::I8,
+            TensorData::I32(_) => DType::I32,
+            TensorData::F32(_) => DType::F32,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            TensorData::I8(v) => v.len(),
+            TensorData::I32(v) => v.len(),
+            TensorData::F32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// A row-major n-dimensional tensor with quantization parameters.
+///
+/// Activation tensors in the engines are int8; biases int32; the float
+/// variant exists for dataset features and dequantized outputs.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: TensorData,
+    pub qparams: QParams,
+}
+
+impl Tensor {
+    pub fn new_i8(shape: Vec<usize>, data: Vec<i8>, qparams: QParams) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor { shape, data: TensorData::I8(data), qparams }
+    }
+
+    pub fn new_i32(shape: Vec<usize>, data: Vec<i32>, qparams: QParams) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor { shape, data: TensorData::I32(data), qparams }
+    }
+
+    pub fn new_f32(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor { shape, data: TensorData::F32(data), qparams: QParams::NONE }
+    }
+
+    pub fn zeros_i8(shape: Vec<usize>, qparams: QParams) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape, data: TensorData::I8(vec![0; n]), qparams }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn dtype(&self) -> DType {
+        self.data.dtype()
+    }
+
+    /// Bytes occupied by the payload (the planner's unit of account).
+    pub fn nbytes(&self) -> usize {
+        self.numel() * self.dtype().size_bytes()
+    }
+
+    pub fn as_i8(&self) -> &[i8] {
+        match &self.data {
+            TensorData::I8(v) => v,
+            other => panic!("expected i8 tensor, got {:?}", other.dtype()),
+        }
+    }
+
+    pub fn as_i8_mut(&mut self) -> &mut [i8] {
+        match &mut self.data {
+            TensorData::I8(v) => v,
+            other => panic!("expected i8 tensor, got {:?}", other.dtype()),
+        }
+    }
+
+    pub fn as_i32(&self) -> &[i32] {
+        match &self.data {
+            TensorData::I32(v) => v,
+            other => panic!("expected i32 tensor, got {:?}", other.dtype()),
+        }
+    }
+
+    pub fn as_f32(&self) -> &[f32] {
+        match &self.data {
+            TensorData::F32(v) => v,
+            other => panic!("expected f32 tensor, got {:?}", other.dtype()),
+        }
+    }
+
+    /// Dequantize an int8 tensor to float (Eq. 1).
+    pub fn dequantize(&self) -> Vec<f32> {
+        let q = self.as_i8();
+        q.iter().map(|&v| self.qparams.dequantize(v)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_accounting() {
+        let t = Tensor::zeros_i8(vec![2, 3, 4], QParams::new(0.5, 0));
+        assert_eq!(t.numel(), 24);
+        assert_eq!(t.nbytes(), 24);
+        let t32 = Tensor::new_i32(vec![3], vec![1, 2, 3], QParams::NONE);
+        assert_eq!(t32.nbytes(), 12);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn shape_mismatch_panics() {
+        Tensor::new_i8(vec![2, 2], vec![0; 3], QParams::NONE);
+    }
+
+    #[test]
+    fn dequantize_roundtrip() {
+        let qp = QParams::new(0.1, -3);
+        let t = Tensor::new_i8(vec![3], vec![-3, 7, -13], qp);
+        let f = t.dequantize();
+        assert!((f[0] - 0.0).abs() < 1e-6);
+        assert!((f[1] - 1.0).abs() < 1e-6);
+        assert!((f[2] + 1.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,236 @@
+//! Affine int8 quantization (Eq. 1) and the MicroFlow requantization
+//! epilogue (DESIGN.md S1).
+//!
+//! Bit-exactness contract with the JAX golden path (`python/compile/
+//! kernels/ref.py`): int32 accumulation, then
+//! `round_half_away(const_bias + scale_ratio * acc)` in **float32**, with
+//! `const_bias = z_Y + (s_b / s_Y) * (b_q - z_b)` and
+//! `scale_ratio = (s_X * s_W) / s_Y` computed in float32 in this exact
+//! operation order. `f32::round` rounds half away from zero, matching the
+//! oracle's `sign(x) * floor(|x| + 0.5)`.
+
+pub const INT8_MIN: i32 = -128;
+pub const INT8_MAX: i32 = 127;
+
+/// Per-tensor affine quantization parameters: `r = scale * (q - zero_point)`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QParams {
+    pub scale: f32,
+    pub zero_point: i32,
+}
+
+impl QParams {
+    /// Placeholder for non-quantized (f32) tensors.
+    pub const NONE: QParams = QParams { scale: 1.0, zero_point: 0 };
+
+    pub fn new(scale: f32, zero_point: i32) -> Self {
+        QParams { scale, zero_point }
+    }
+
+    /// Quantize one float value: `q = clamp(round(r / S) + Z)`.
+    pub fn quantize(&self, r: f32) -> i8 {
+        let q = round_half_away_i32(r / self.scale) + self.zero_point;
+        q.clamp(INT8_MIN, INT8_MAX) as i8
+    }
+
+    /// Dequantize one int8 value (Eq. 1).
+    pub fn dequantize(&self, q: i8) -> f32 {
+        self.scale * (q as i32 - self.zero_point) as f32
+    }
+
+    /// Quantize a float slice.
+    pub fn quantize_slice(&self, r: &[f32]) -> Vec<i8> {
+        r.iter().map(|&v| self.quantize(v)).collect()
+    }
+}
+
+/// Fused activation kinds (paper Sec. 5.5). In the quantized domain a fused
+/// activation is just a clamp (Eqs. 15/17).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FusedAct {
+    None,
+    Relu,
+    Relu6,
+}
+
+impl FusedAct {
+    pub fn from_code(code: u8) -> anyhow::Result<Self> {
+        Ok(match code {
+            0 => FusedAct::None,
+            1 => FusedAct::Relu,
+            2 => FusedAct::Relu6,
+            c => anyhow::bail!("unknown fused activation code {c}"),
+        })
+    }
+
+    /// Quantized clamp bounds (mirrors `ref.act_bounds`).
+    pub fn bounds(self, s_y: f32, z_y: i32) -> (i8, i8) {
+        match self {
+            FusedAct::None => (INT8_MIN as i8, INT8_MAX as i8),
+            FusedAct::Relu => (z_y.clamp(INT8_MIN, INT8_MAX) as i8, INT8_MAX as i8),
+            FusedAct::Relu6 => {
+                let hi = (z_y as f64 + 6.0 / s_y as f64 + 0.5).floor() as i32;
+                (
+                    z_y.clamp(INT8_MIN, INT8_MAX) as i8,
+                    hi.clamp(INT8_MIN, INT8_MAX) as i8,
+                )
+            }
+        }
+    }
+}
+
+/// Branch-free round-half-away-from-zero to i32.
+///
+/// Bit-identical to `f32::round() as i32` for every finite `y` whose
+/// magnitude is below 2^22 (all requantization outputs — they clamp to
+/// int8 anyway), but compiles to a `copysign` bit-op + `cvttss2si`
+/// instead of the `roundf` libcall that dominated small-dot kernels
+/// (EXPERIMENTS.md §Perf: the 96x96 first-conv regression).
+#[inline(always)]
+pub fn round_half_away_i32(y: f32) -> i32 {
+    (y + 0.5f32.copysign(y)) as i32
+}
+
+/// The MicroFlow float-scale requantization epilogue.
+///
+/// `y_q = clamp(round(const_bias + scale_ratio * acc), act_min, act_max)`
+#[inline(always)]
+pub fn requant_float(acc: i32, const_bias: f32, scale_ratio: f32, act_min: i8, act_max: i8) -> i8 {
+    let y = const_bias + scale_ratio * acc as f32;
+    round_half_away_i32(y).clamp(act_min as i32, act_max as i32) as i8
+}
+
+/// Pre-processed constants for one operator (the compiler's Eq. 4/7/10/13
+/// output). `const_bias[j]` folds `z_Y + (s_b/s_Y)(b_q[j] - z_b)`;
+/// `w_zp_term[j]` folds `z_X * Σ W[:, j]`; `kzxzw` folds `n z_X z_W`.
+#[derive(Clone, Debug)]
+pub struct PreComputed {
+    pub const_bias: Vec<f32>,
+    pub scale_ratio: f32,
+    pub w_zp_term: Vec<i32>,
+    pub kzxzw: i32,
+    pub z_w: i32,
+    pub act_min: i8,
+    pub act_max: i8,
+}
+
+impl PreComputed {
+    /// Fold the constants for a matmul-like operator.
+    ///
+    /// `w_colsum[j]` must be `Σ_k W_q[k, j]` (or the per-output-channel
+    /// filter sum for convs); `k` is the reduction length.
+    #[allow(clippy::too_many_arguments)]
+    pub fn fold(
+        bias_q: &[i32],
+        w_colsum: &[i32],
+        k: usize,
+        s_x: f32,
+        z_x: i32,
+        s_w: f32,
+        z_w: i32,
+        s_b: f32,
+        z_b: i32,
+        s_y: f32,
+        z_y: i32,
+        act: FusedAct,
+    ) -> Self {
+        assert_eq!(bias_q.len(), w_colsum.len());
+        // float32 op order must match ref.py exactly (see module docs)
+        let sb_over_sy = s_b / s_y;
+        let const_bias: Vec<f32> = bias_q
+            .iter()
+            .map(|&b| z_y as f32 + sb_over_sy * (b - z_b) as f32)
+            .collect();
+        let scale_ratio = s_x * s_w / s_y;
+        let w_zp_term: Vec<i32> = w_colsum.iter().map(|&s| z_x.wrapping_mul(s)).collect();
+        let kzxzw = (k as i32).wrapping_mul(z_x).wrapping_mul(z_w);
+        let (act_min, act_max) = act.bounds(s_y, z_y);
+        PreComputed { const_bias, scale_ratio, w_zp_term, kzxzw, z_w, act_min, act_max }
+    }
+
+    /// Bytes of RAM the folded constants occupy (for the memory model).
+    pub fn nbytes(&self) -> usize {
+        self.const_bias.len() * 4 + self.w_zp_term.len() * 4 + 16
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantize_round_half_away() {
+        let qp = QParams::new(1.0, 0);
+        assert_eq!(qp.quantize(0.5), 1); // away from zero, NOT banker's 0
+        assert_eq!(qp.quantize(-0.5), -1);
+        assert_eq!(qp.quantize(1.5), 2);
+        assert_eq!(qp.quantize(2.5), 3); // banker's would give 2
+    }
+
+    #[test]
+    fn quantize_saturates() {
+        let qp = QParams::new(0.1, 0);
+        assert_eq!(qp.quantize(1e9), 127);
+        assert_eq!(qp.quantize(-1e9), -128);
+    }
+
+    #[test]
+    fn dequantize_inverse_of_quantize_within_half_step() {
+        let qp = QParams::new(0.05, -7);
+        for r in [-3.0f32, -0.51, 0.0, 0.024, 1.99] {
+            let q = qp.quantize(r);
+            let back = qp.dequantize(q);
+            assert!((back - r).abs() <= 0.5 * qp.scale + 1e-6, "{r} -> {q} -> {back}");
+        }
+    }
+
+    #[test]
+    fn relu_bounds_clamp_at_zero_point() {
+        let (lo, hi) = FusedAct::Relu.bounds(0.1, -4);
+        assert_eq!((lo, hi), (-4, 127));
+    }
+
+    #[test]
+    fn relu6_bounds() {
+        // z=-128, s=6/255 => hi = -128 + 255 = 127
+        let (lo, hi) = FusedAct::Relu6.bounds(6.0 / 255.0, -128);
+        assert_eq!((lo, hi), (-128, 127));
+        // coarser scale: z=0, s=0.1 => hi = 60
+        let (lo2, hi2) = FusedAct::Relu6.bounds(0.1, 0);
+        assert_eq!((lo2, hi2), (0, 60));
+    }
+
+    #[test]
+    fn round_half_away_i32_matches_f32_round() {
+        // exhaustive over the representable requant range in coarse steps
+        // plus the tie points — the libcall-free path must be bit-identical
+        for i in -60_000..=60_000 {
+            let y = i as f32 * 0.01; // covers ties at *.x5 boundaries
+            assert_eq!(round_half_away_i32(y), y.round() as i32, "y={y}");
+        }
+        for t in [-2.5f32, -1.5, -0.5, 0.5, 1.5, 2.5, 126.5, -126.5] {
+            assert_eq!(round_half_away_i32(t), t.round() as i32, "tie {t}");
+        }
+    }
+
+    #[test]
+    fn requant_float_matches_formula() {
+        // const_bias=0.3, ratio=0.01, acc=170 -> 2.0 -> 2
+        assert_eq!(requant_float(170, 0.3, 0.01, -128, 127), 2);
+        // clamps
+        assert_eq!(requant_float(1_000_000, 0.0, 1.0, -128, 127), 127);
+        assert_eq!(requant_float(-1_000_000, 0.0, 1.0, -128, 127), -128);
+        // activation bound
+        assert_eq!(requant_float(-50, 0.0, 1.0, 0, 127), 0);
+    }
+
+    #[test]
+    fn fold_splits_match_paper_terms() {
+        // K=4, one output; W colsum = 10; zx=2, zw=3
+        let pc = PreComputed::fold(&[100], &[10], 4, 0.5, 2, 0.25, 3, 0.125, 0, 1.0, 5, FusedAct::None);
+        assert_eq!(pc.w_zp_term, vec![20]); // z_x * colsum
+        assert_eq!(pc.kzxzw, 24); // 4 * 2 * 3
+        assert!((pc.scale_ratio - 0.125).abs() < 1e-7);
+        assert!((pc.const_bias[0] - (5.0 + 0.125 * 100.0)).abs() < 1e-5);
+    }
+}

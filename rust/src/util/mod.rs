@@ -1,0 +1,64 @@
+//! Small self-contained utilities (no external deps are available offline —
+//! see DESIGN.md §7): a seeded PRNG for property tests, streaming statistics
+//! for the bench harness, and a tiny JSON/CSV writer for reports.
+
+pub mod json;
+pub mod prng;
+pub mod stats;
+
+pub use prng::Prng;
+pub use stats::Summary;
+
+/// Format a byte count the way the paper's figures do (kB with 3 decimals).
+pub fn fmt_kb(bytes: usize) -> String {
+    format!("{:.3}kB", bytes as f64 / 1000.0)
+}
+
+/// Format a duration in the unit that keeps 3-4 significant digits.
+pub fn fmt_time(seconds: f64) -> String {
+    if seconds >= 1.0 {
+        format!("{seconds:.3}s")
+    } else if seconds >= 1e-3 {
+        format!("{:.3}ms", seconds * 1e3)
+    } else if seconds >= 1e-6 {
+        format!("{:.3}us", seconds * 1e6)
+    } else {
+        format!("{:.1}ns", seconds * 1e9)
+    }
+}
+
+/// Format an energy quantity (Wh) like Table 6 (nWh / uWh / mWh).
+pub fn fmt_energy_wh(wh: f64) -> String {
+    if wh >= 1e-3 {
+        format!("{:.2}mWh", wh * 1e3)
+    } else if wh >= 1e-6 {
+        format!("{:.2}uWh", wh * 1e6)
+    } else {
+        format!("{:.0}nWh", wh * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_kb_matches_paper_style() {
+        assert_eq!(fmt_kb(13619), "13.619kB");
+        assert_eq!(fmt_kb(1706), "1.706kB");
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert_eq!(fmt_time(2.5), "2.500s");
+        assert_eq!(fmt_time(0.0125), "12.500ms");
+        assert_eq!(fmt_time(3.2e-5), "32.000us");
+        assert_eq!(fmt_time(5.0e-8), "50.0ns");
+    }
+
+    #[test]
+    fn fmt_energy_units() {
+        assert_eq!(fmt_energy_wh(149e-9), "149nWh");
+        assert_eq!(fmt_energy_wh(23.05e-3), "23.05mWh");
+    }
+}

@@ -1,0 +1,144 @@
+//! Seeded xoshiro256** PRNG for property tests and workload generation.
+//!
+//! `proptest`/`rand` are unavailable offline (DESIGN.md §7); this provides
+//! the deterministic randomness the property tests and the serving-workload
+//! generators need. xoshiro256** is a well-studied generator with 256-bit
+//! state; plenty for test-case generation.
+
+/// xoshiro256** generator.
+#[derive(Clone, Debug)]
+pub struct Prng {
+    s: [u64; 4],
+}
+
+impl Prng {
+    /// Create from a seed; any seed (including 0) is valid — the state is
+    /// expanded with splitmix64 as recommended by the xoshiro authors.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let mut next = || {
+            sm = sm.wrapping_add(0x9E37_79B9_7F4A_7C15);
+            let mut z = sm;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+            z ^ (z >> 31)
+        };
+        Self { s: [next(), next(), next(), next()] }
+    }
+
+    /// Next raw 64-bit value.
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in `[0, n)`. Uses rejection sampling to avoid modulo bias.
+    pub fn below(&mut self, n: u64) -> u64 {
+        assert!(n > 0);
+        let zone = u64::MAX - (u64::MAX % n);
+        loop {
+            let v = self.next_u64();
+            if v < zone {
+                return v % n;
+            }
+        }
+    }
+
+    /// Uniform integer in `[lo, hi]` inclusive.
+    pub fn range_i64(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(lo <= hi);
+        let span = (hi - lo) as u64 + 1;
+        lo + self.below(span) as i64
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in `[lo, hi)`.
+    pub fn f32_range(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (self.f64() as f32) * (hi - lo)
+    }
+
+    /// Random int8 over the full range.
+    pub fn i8(&mut self) -> i8 {
+        self.range_i64(-128, 127) as i8
+    }
+
+    /// Vector of random int8.
+    pub fn i8_vec(&mut self, n: usize) -> Vec<i8> {
+        (0..n).map(|_| self.i8()).collect()
+    }
+
+    /// Vector of random int32 in `[lo, hi]`.
+    pub fn i32_vec(&mut self, n: usize, lo: i32, hi: i32) -> Vec<i32> {
+        (0..n).map(|_| self.range_i64(lo as i64, hi as i64) as i32).collect()
+    }
+
+    /// Exponentially distributed f64 with the given rate (for Poisson
+    /// arrival processes in the serving benches).
+    pub fn exp(&mut self, rate: f64) -> f64 {
+        let u = loop {
+            let u = self.f64();
+            if u > 0.0 {
+                break u;
+            }
+        };
+        -u.ln() / rate
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = Prng::new(42);
+        let mut b = Prng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn below_is_in_range() {
+        let mut p = Prng::new(7);
+        for _ in 0..1000 {
+            assert!(p.below(17) < 17);
+        }
+    }
+
+    #[test]
+    fn f64_unit_interval() {
+        let mut p = Prng::new(3);
+        for _ in 0..1000 {
+            let v = p.f64();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn i8_covers_extremes() {
+        let mut p = Prng::new(1);
+        let v = p.i8_vec(20_000);
+        assert!(v.contains(&-128));
+        assert!(v.contains(&127));
+    }
+
+    #[test]
+    fn exp_positive_mean_close() {
+        let mut p = Prng::new(9);
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|_| p.exp(2.0)).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.02, "mean {mean}");
+    }
+}

@@ -1,0 +1,86 @@
+//! Summary statistics for the bench harness (criterion is unavailable
+//! offline). Mirrors the paper's own methodology: median of N iterations
+//! with a 95% percentile interval (Sec. 6.2.3).
+
+/// Summary of a sample of measurements.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub min: f64,
+    pub max: f64,
+    pub mean: f64,
+    pub median: f64,
+    pub p2_5: f64,
+    pub p97_5: f64,
+    pub std_dev: f64,
+}
+
+impl Summary {
+    /// Compute from raw samples (need not be sorted).
+    pub fn from(samples: &[f64]) -> Self {
+        assert!(!samples.is_empty(), "empty sample");
+        let mut s = samples.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = s.len();
+        let mean = s.iter().sum::<f64>() / n as f64;
+        let var = s.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        Summary {
+            n,
+            min: s[0],
+            max: s[n - 1],
+            mean,
+            median: percentile_sorted(&s, 50.0),
+            p2_5: percentile_sorted(&s, 2.5),
+            p97_5: percentile_sorted(&s, 97.5),
+            std_dev: var.sqrt(),
+        }
+    }
+}
+
+/// Linear-interpolated percentile of a **sorted** slice.
+pub fn percentile_sorted(sorted: &[f64], pct: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = pct / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] + (sorted[hi] - sorted[lo]) * frac
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn median_odd() {
+        let s = Summary::from(&[3.0, 1.0, 2.0]);
+        assert_eq!(s.median, 2.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+    }
+
+    #[test]
+    fn median_even_interpolates() {
+        let s = Summary::from(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.median, 2.5);
+    }
+
+    #[test]
+    fn percentiles_bracket_median() {
+        let v: Vec<f64> = (0..101).map(|i| i as f64).collect();
+        let s = Summary::from(&v);
+        assert_eq!(s.median, 50.0);
+        assert!((s.p2_5 - 2.5).abs() < 1e-9);
+        assert!((s.p97_5 - 97.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mean_and_std() {
+        let s = Summary::from(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
+        assert!((s.mean - 5.0).abs() < 1e-12);
+        assert!((s.std_dev - 2.0).abs() < 1e-12);
+    }
+}

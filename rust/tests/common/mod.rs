@@ -1,0 +1,31 @@
+//! Shared helpers for the integration tests.
+//!
+//! All integration tests run against the real build artifacts
+//! (`make artifacts`). When artifacts are missing the tests skip with a
+//! visible message instead of failing, so `cargo test` stays usable on a
+//! fresh checkout.
+
+use std::path::PathBuf;
+
+pub const MODELS: [&str; 3] = ["sine", "speech", "person"];
+
+pub fn artifacts() -> Option<PathBuf> {
+    let dir = microflow::artifacts_dir();
+    if MODELS.iter().all(|m| dir.join(format!("{m}.mfb")).exists()) {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts missing — run `make artifacts`");
+        None
+    }
+}
+
+/// Macro: early-return unless artifacts exist.
+#[macro_export]
+macro_rules! require_artifacts {
+    () => {
+        match common::artifacts() {
+            Some(dir) => dir,
+            None => return,
+        }
+    };
+}

@@ -1,0 +1,98 @@
+//! Integration: the PJRT path — the JAX-AOT'd HLO artifacts load, compile
+//! and agree bit-exactly with the golden vectors and the native engine
+//! (the three-implementations-one-model gate of DESIGN.md S15).
+//!
+//! These are the slowest tests (XLA compilation); person is exercised once.
+
+mod common;
+
+use microflow::compiler::plan::CompileOptions;
+use microflow::engine::MicroFlowEngine;
+use microflow::format::golden::Golden;
+use microflow::runtime::oracle::check_against_golden;
+use microflow::runtime::PjrtEngine;
+use microflow::util::Prng;
+
+#[test]
+fn pjrt_sine_bit_exact_vs_golden_and_engine() {
+    let art = require_artifacts!();
+    let pjrt = PjrtEngine::load(&art, "sine").unwrap();
+    assert_eq!(pjrt.batch_sizes(), vec![1, 32]);
+    let golden = Golden::load(art.join("sine_golden.bin")).unwrap();
+    let a = check_against_golden(&golden, |x| pjrt.predict_q(x)).unwrap();
+    assert!(a.is_bit_exact(), "{a:?}");
+
+    // engine and PJRT agree on arbitrary inputs, not just goldens
+    let engine = MicroFlowEngine::load(art.join("sine.mfb"), CompileOptions::default()).unwrap();
+    let mut rng = Prng::new(3);
+    for _ in 0..50 {
+        let x = rng.i8_vec(1);
+        assert_eq!(engine.predict(&x), pjrt.predict_q(&x).unwrap());
+    }
+}
+
+#[test]
+fn pjrt_speech_batch_variants_agree() {
+    let art = require_artifacts!();
+    let pjrt = PjrtEngine::load(&art, "speech").unwrap();
+    assert_eq!(pjrt.batch_sizes(), vec![1, 8]);
+    let golden = Golden::load(art.join("speech_golden.bin")).unwrap();
+    let a = check_against_golden(&golden, |x| pjrt.predict_q(x)).unwrap();
+    assert!(a.is_bit_exact(), "{a:?}");
+
+    // batched execution == per-sample execution (the b8 variant, filled)
+    let n = golden.n.min(8);
+    let mut packed = Vec::new();
+    for i in 0..n {
+        packed.extend_from_slice(golden.input(i));
+    }
+    let batch_out = pjrt.execute_batch(&packed, n).unwrap();
+    for i in 0..n {
+        let single = pjrt.predict_q(golden.input(i)).unwrap();
+        assert_eq!(
+            &batch_out[i * pjrt.output_len()..(i + 1) * pjrt.output_len()],
+            single.as_slice(),
+            "sample {i}"
+        );
+    }
+}
+
+#[test]
+fn pjrt_partial_batches_pad_correctly() {
+    let art = require_artifacts!();
+    let pjrt = PjrtEngine::load(&art, "speech").unwrap();
+    let golden = Golden::load(art.join("speech_golden.bin")).unwrap();
+    // n = 3 doesn't match any variant exactly: must pad the b8 executable
+    let n = 3;
+    let mut packed = Vec::new();
+    for i in 0..n {
+        packed.extend_from_slice(golden.input(i));
+    }
+    let out = pjrt.execute_batch(&packed, n).unwrap();
+    assert_eq!(out.len(), n * pjrt.output_len());
+    for i in 0..n {
+        assert_eq!(
+            &out[i * pjrt.output_len()..(i + 1) * pjrt.output_len()],
+            golden.output(i),
+            "sample {i}"
+        );
+    }
+}
+
+#[test]
+fn pjrt_person_bit_exact() {
+    let art = require_artifacts!();
+    let pjrt = PjrtEngine::load(&art, "person").unwrap();
+    let golden = Golden::load(art.join("person_golden.bin")).unwrap();
+    let a = check_against_golden(&golden, |x| pjrt.predict_q(x)).unwrap();
+    assert!(a.is_bit_exact(), "{a:?}");
+}
+
+#[test]
+fn qparams_come_from_the_container() {
+    let art = require_artifacts!();
+    let pjrt = PjrtEngine::load(&art, "speech").unwrap();
+    let engine = MicroFlowEngine::load(art.join("speech.mfb"), CompileOptions::default()).unwrap();
+    assert_eq!(pjrt.input_qparams, engine.input_qparams());
+    assert_eq!(pjrt.output_qparams, engine.output_qparams());
+}

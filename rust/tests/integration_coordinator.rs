@@ -1,0 +1,186 @@
+//! Integration: the serving coordinator over real models — batching,
+//! concurrency, backpressure, multi-model routing, and cross-backend
+//! output consistency.
+
+mod common;
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use microflow::coordinator::{
+    Backend, BatcherConfig, InterpBackend, NativeBackend, Router, Server, ServerConfig,
+};
+use microflow::eval::accuracy::argmax;
+use microflow::format::mds::MdsDataset;
+
+fn native_server(art: &std::path::Path, name: &str, replicas: usize, max_batch: usize) -> Server {
+    let backends: Vec<Box<dyn Backend>> = (0..replicas)
+        .map(|_| Box::new(NativeBackend::load(art.join(format!("{name}.mfb"))).unwrap()) as Box<dyn Backend>)
+        .collect();
+    let cfg = ServerConfig {
+        queue_depth: 64,
+        batcher: BatcherConfig { max_batch, max_wait: Duration::from_millis(1) },
+    };
+    Server::start(backends, cfg).unwrap()
+}
+
+#[test]
+fn serves_speech_with_correct_classes() {
+    let art = require_artifacts!();
+    let ds = MdsDataset::load(art.join("speech_test.mds")).unwrap();
+    let server = native_server(&art, "speech", 2, 8);
+    let qp = server.input_qparams();
+    let mut hits = 0;
+    let n = 60;
+    for i in 0..n {
+        let out = server.infer(qp.quantize_slice(ds.sample(i))).unwrap();
+        if argmax(&out) as i32 == ds.class(i) {
+            hits += 1;
+        }
+    }
+    // Table-5-level accuracy on this slice
+    assert!(hits as f64 / n as f64 > 0.8, "only {hits}/{n} correct");
+    let snap = server.metrics.snapshot();
+    assert_eq!(snap.completed, n as u64);
+    assert_eq!(snap.errors, 0);
+    server.shutdown();
+}
+
+#[test]
+fn batching_aggregates_under_concurrency() {
+    let art = require_artifacts!();
+    let server = Arc::new(native_server(&art, "sine", 1, 8));
+    let mut handles = Vec::new();
+    for t in 0..16 {
+        let s = Arc::clone(&server);
+        handles.push(std::thread::spawn(move || {
+            for i in 0..25 {
+                let out = s.infer(vec![(t * 7 + i) as i8]).unwrap();
+                assert_eq!(out.len(), 1);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let snap = server.metrics.snapshot();
+    assert_eq!(snap.completed, 400);
+    // with 16 concurrent clients and a single worker, batches must form
+    assert!(snap.mean_batch > 1.2, "mean batch {}", snap.mean_batch);
+    Arc::try_unwrap(server).ok().map(|s| s.shutdown());
+}
+
+#[test]
+fn batched_results_match_unbatched() {
+    let art = require_artifacts!();
+    let server = Arc::new(native_server(&art, "sine", 1, 8));
+    // reference: sequential (batch of 1)
+    let mut expected = Vec::new();
+    for q in -20..20i16 {
+        expected.push(server.infer(vec![q as i8]).unwrap());
+    }
+    // concurrent resubmission — batches form, results must be identical
+    let mut handles = Vec::new();
+    for (idx, q) in (-20..20i16).enumerate() {
+        let s = Arc::clone(&server);
+        handles.push(std::thread::spawn(move || (idx, s.infer(vec![q as i8]).unwrap())));
+    }
+    for h in handles {
+        let (idx, out) = h.join().unwrap();
+        assert_eq!(out, expected[idx], "request {idx}");
+    }
+    Arc::try_unwrap(server).ok().map(|s| s.shutdown());
+}
+
+#[test]
+fn router_serves_multiple_models() {
+    let art = require_artifacts!();
+    let mut router = Router::new();
+    router.add("sine", native_server(&art, "sine", 1, 4));
+    router.add("speech", native_server(&art, "speech", 1, 4));
+    assert_eq!(router.models(), vec!["sine", "speech"]);
+    let sine_q = router.get("sine").unwrap().input_qparams();
+    let out = router.infer("sine", vec![sine_q.quantize(1.0)]).unwrap();
+    assert_eq!(out.len(), 1);
+    let ds = MdsDataset::load(art.join("speech_test.mds")).unwrap();
+    let sp_q = router.get("speech").unwrap().input_qparams();
+    let out = router.infer("speech", sp_q.quantize_slice(ds.sample(0))).unwrap();
+    assert_eq!(out.len(), 4);
+    assert!(router.infer("nope", vec![0]).is_err());
+    router.shutdown();
+}
+
+#[test]
+fn interp_backend_serves_equivalently() {
+    let art = require_artifacts!();
+    let ds = MdsDataset::load(art.join("speech_test.mds")).unwrap();
+    let nat = native_server(&art, "speech", 1, 4);
+    let backends: Vec<Box<dyn Backend>> =
+        vec![Box::new(InterpBackend::load(art.join("speech.mfb")).unwrap())];
+    let itp = Server::start(backends, ServerConfig::default()).unwrap();
+    let qp = nat.input_qparams();
+    for i in 0..10 {
+        let q = qp.quantize_slice(ds.sample(i));
+        let a = nat.infer(q.clone()).unwrap();
+        let b = itp.infer(q).unwrap();
+        assert_eq!(argmax(&a), argmax(&b), "sample {i}");
+    }
+    nat.shutdown();
+    itp.shutdown();
+}
+
+#[test]
+fn shutdown_is_clean_with_queued_work() {
+    let art = require_artifacts!();
+    let server = native_server(&art, "sine", 2, 8);
+    let mut rxs = Vec::new();
+    for q in 0..32i16 {
+        rxs.push(server.submit(vec![q as i8]).unwrap());
+    }
+    // all replies must arrive before shutdown returns
+    for rx in rxs {
+        assert!(rx.recv().unwrap().is_ok());
+    }
+    server.shutdown();
+}
+
+#[test]
+fn tcp_ingress_serves_and_reports_errors() {
+    let art = require_artifacts!();
+    let mut router = Router::new();
+    router.add("sine", native_server(&art, "sine", 1, 4));
+    let router = Arc::new(router);
+    let ingress =
+        microflow::coordinator::Ingress::start("127.0.0.1:0", Arc::clone(&router)).unwrap();
+    let addr = ingress.addr;
+
+    // parallel clients over the wire, checking against in-process results
+    let expected = router.infer("sine", vec![5]).unwrap();
+    let mut handles = Vec::new();
+    for _ in 0..4 {
+        let expected = expected.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut c = microflow::coordinator::Client::connect(addr).unwrap();
+            for _ in 0..20 {
+                let out = c.infer("sine", &[5]).unwrap();
+                assert_eq!(out, expected);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    // unknown model -> clean error over the wire, connection stays usable
+    let mut c = microflow::coordinator::Client::connect(addr).unwrap();
+    let err = c.infer("missing", &[0]).unwrap_err().to_string();
+    assert!(err.contains("missing"), "{err}");
+    assert_eq!(c.infer("sine", &[5]).unwrap(), expected);
+    drop(c); // close the connection so its handler thread exits
+
+    ingress.shutdown();
+    match Arc::try_unwrap(router) {
+        Ok(r) => r.shutdown(),
+        Err(_) => panic!("router still referenced"),
+    }
+}

@@ -1,0 +1,126 @@
+//! Integration: the MicroFlow engine and the TFLM-like interpreter on the
+//! real shipped models — correctness, determinism, paging, and the two
+//! engines' Sec. 6.2.1 agreement.
+
+mod common;
+
+use microflow::compiler::plan::{CompileOptions, CompiledModel};
+use microflow::engine::MicroFlowEngine;
+use microflow::eval::accuracy::argmax;
+use microflow::format::golden::Golden;
+use microflow::format::mfb::MfbModel;
+use microflow::interp::resolver::OpResolver;
+use microflow::interp::Interpreter;
+use microflow::util::Prng;
+
+#[test]
+fn engine_is_bit_exact_vs_jax_golden_on_all_models() {
+    let art = require_artifacts!();
+    for name in common::MODELS {
+        let g = Golden::load(art.join(format!("{name}_golden.bin"))).unwrap();
+        let e = MicroFlowEngine::load(art.join(format!("{name}.mfb")), CompileOptions::default()).unwrap();
+        for i in 0..g.n {
+            let out = e.predict(g.input(i));
+            assert_eq!(out.as_slice(), g.output(i), "{name} sample {i}");
+        }
+    }
+}
+
+#[test]
+fn engine_is_deterministic() {
+    let art = require_artifacts!();
+    let e = MicroFlowEngine::load(art.join("speech.mfb"), CompileOptions::default()).unwrap();
+    let mut rng = Prng::new(5);
+    let x = rng.i8_vec(e.input_len());
+    let a = e.predict(&x);
+    for _ in 0..5 {
+        assert_eq!(e.predict(&x), a);
+    }
+}
+
+#[test]
+fn paged_execution_identical_on_sine() {
+    let art = require_artifacts!();
+    let m = MfbModel::load(art.join("sine.mfb")).unwrap();
+    let unpaged = MicroFlowEngine::new(&m, CompileOptions { paging: false }).unwrap();
+    let paged = MicroFlowEngine::new(&m, CompileOptions { paging: true }).unwrap();
+    for q in -128..=127i16 {
+        let x = [q as i8];
+        assert_eq!(unpaged.predict(&x), paged.predict(&x), "q={q}");
+    }
+}
+
+#[test]
+fn interpreter_agrees_with_engine_per_paper() {
+    // Sec. 6.2.1: on in-distribution inputs the engines agree within ±1
+    // per operator output; through multiple layers the rounding can
+    // compound, so the end-to-end gates are ±1 on the shallow speech
+    // model's probabilities and decision agreement everywhere.
+    let art = require_artifacts!();
+    for name in common::MODELS {
+        let path = art.join(format!("{name}.mfb"));
+        let e = MicroFlowEngine::load(&path, CompileOptions::default()).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        let mut it = Interpreter::new(&bytes, &OpResolver::with_all_kernels()).unwrap();
+        let ds = microflow::format::mds::MdsDataset::load(art.join(format!("{name}_test.mds"))).unwrap();
+        let qp = e.input_qparams();
+        for i in 0..10 {
+            let x = qp.quantize_slice(ds.sample(i));
+            let a = e.predict(&x);
+            let b = it.invoke(&x).unwrap();
+            match name {
+                "speech" => {
+                    for (u, v) in a.iter().zip(&b) {
+                        assert!((*u as i32 - *v as i32).abs() <= 1, "{name}: {a:?} vs {b:?}");
+                    }
+                }
+                "person" => assert_eq!(argmax(&a), argmax(&b), "{name}: decisions diverged"),
+                _ => {
+                    // sine: 3 stacked FCs with gain — allow small compounding
+                    let d = (a[0] as i32 - b[0] as i32).abs();
+                    assert!(d <= 4, "{name}: {a:?} vs {b:?}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn memory_plan_peak_is_consistent_with_buffers() {
+    let art = require_artifacts!();
+    for name in common::MODELS {
+        let m = MfbModel::load(art.join(format!("{name}.mfb"))).unwrap();
+        let c = CompiledModel::compile(&m, CompileOptions::default()).unwrap();
+        let mem = &c.memory;
+        // the per-step peak never exceeds what the executor allocates
+        assert!(mem.peak <= mem.executor_bytes() + c.input_len().max(c.output_len()));
+        // every step's live set is represented
+        assert_eq!(mem.per_step.len(), c.steps.len());
+        // the paper's claim: the peak step is a real operator, and for the
+        // conv models it's an early, wide layer
+        assert!(mem.peak_step < c.steps.len());
+        if name == "person" {
+            assert!(mem.peak_step <= 4, "person peak should be an early wide conv");
+        }
+    }
+}
+
+#[test]
+fn compiled_model_strips_what_the_interpreter_keeps() {
+    let art = require_artifacts!();
+    let m = MfbModel::load(art.join("speech.mfb")).unwrap();
+    let c = CompiledModel::compile(&m, CompileOptions::default()).unwrap();
+    // compiled weight payload (incl. folded f32 constants) stays below the
+    // serialized container size: names/options/versions are gone
+    assert!(c.weight_bytes() < m.file_bytes);
+}
+
+#[test]
+fn speech_macs_match_hand_count() {
+    let art = require_artifacts!();
+    let m = MfbModel::load(art.join("speech.mfb")).unwrap();
+    let c = CompiledModel::compile(&m, CompileOptions::default()).unwrap();
+    // dw: 25*20*8 outputs x 10*8 window = 320_000; fc: 4000*4 = 16_000;
+    // softmax: 4
+    assert_eq!(c.total_macs(), 320_000 + 16_000 + 4);
+}

@@ -1,0 +1,83 @@
+//! Integration: the real build artifacts parse correctly and carry the
+//! structure the paper's Table 3 describes.
+
+mod common;
+
+use microflow::format::golden::Golden;
+use microflow::format::mds::{Labels, MdsDataset};
+use microflow::format::mfb::{MfbModel, OpCode};
+
+#[test]
+fn all_models_parse_and_have_expected_ops() {
+    let art = require_artifacts!();
+    for name in common::MODELS {
+        let m = MfbModel::load(art.join(format!("{name}.mfb"))).unwrap();
+        assert_eq!(m.version, 1);
+        assert!(!m.producer.is_empty());
+        assert_eq!(m.graph_inputs.len(), 1);
+        assert_eq!(m.graph_outputs.len(), 1);
+        let ops: Vec<OpCode> = m.operators.iter().map(|o| o.opcode).collect();
+        match name {
+            "sine" => assert_eq!(ops, vec![OpCode::FullyConnected; 3]),
+            "speech" => assert_eq!(
+                ops,
+                vec![OpCode::DepthwiseConv2D, OpCode::Reshape, OpCode::FullyConnected, OpCode::Softmax]
+            ),
+            "person" => {
+                // MobileNet: conv + 13x(dw+pw) + pool + flatten + fc + softmax
+                assert_eq!(ops.len(), 31);
+                assert_eq!(ops[0], OpCode::Conv2D);
+                assert_eq!(ops.iter().filter(|o| **o == OpCode::DepthwiseConv2D).count(), 13);
+                assert_eq!(ops.iter().filter(|o| **o == OpCode::Conv2D).count(), 14);
+                assert_eq!(*ops.last().unwrap(), OpCode::Softmax);
+            }
+            _ => unreachable!(),
+        }
+    }
+}
+
+#[test]
+fn model_sizes_match_paper_table3_order() {
+    let art = require_artifacts!();
+    let size = |n: &str| MfbModel::load(art.join(format!("{n}.mfb"))).unwrap().weights_bytes();
+    let (sine, speech, person) = (size("sine"), size("speech"), size("person"));
+    // Table 3: 3 kB < 19 kB < 301 kB ordering; ours: ~0.4k < ~17k < ~219k
+    assert!(sine < speech && speech < person);
+    assert!(speech > 10_000 && speech < 25_000, "speech ~19kB class: {speech}");
+    assert!(person > 150_000 && person < 300_000, "person ~300kB class: {person}");
+}
+
+#[test]
+fn datasets_match_paper_protocol_sizes() {
+    let art = require_artifacts!();
+    let sine = MdsDataset::load(art.join("sine_test.mds")).unwrap();
+    assert_eq!(sine.n, 1000);
+    assert!(matches!(sine.labels, Labels::Regression { dim: 1, .. }));
+    let speech = MdsDataset::load(art.join("speech_test.mds")).unwrap();
+    assert_eq!(speech.n, 1236);
+    assert_eq!(speech.sample_shape, vec![49, 40, 1]);
+    let person = MdsDataset::load(art.join("person_test.mds")).unwrap();
+    assert_eq!(person.n, 406);
+    assert_eq!(person.sample_shape, vec![96, 96, 1]);
+}
+
+#[test]
+fn goldens_are_consistent_with_models() {
+    let art = require_artifacts!();
+    for name in common::MODELS {
+        let g = Golden::load(art.join(format!("{name}_golden.bin"))).unwrap();
+        let m = MfbModel::load(art.join(format!("{name}.mfb"))).unwrap();
+        assert_eq!(g.in_len(), m.input_shape().iter().product::<usize>());
+        assert_eq!(g.out_len(), m.output_shape().iter().product::<usize>());
+        assert!(g.n >= 8);
+    }
+}
+
+#[test]
+fn metadata_is_retained_for_the_interpreter() {
+    // the interpreter's Flash cost story requires names/metadata present
+    let art = require_artifacts!();
+    let m = MfbModel::load(art.join("speech.mfb")).unwrap();
+    assert!(m.metadata_bytes() > 200, "container must carry metadata: {}", m.metadata_bytes());
+    assert!(m.tensors.iter().all(|t| !t.name.is_empty()));
+}

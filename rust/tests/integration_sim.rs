@@ -1,0 +1,196 @@
+//! Integration: the simulator reproduces the paper's Fig. 9-11 / Table 6
+//! *shapes* on the real compiled models (the calibration gate of
+//! DESIGN.md §4 — these are the assertions that make the cost model's
+//! constants meaningful rather than arbitrary).
+
+mod common;
+
+use microflow::compiler::plan::{CompileOptions, CompiledModel};
+use microflow::format::mfb::MfbModel;
+use microflow::interp::arena::ArenaPlan;
+use microflow::sim::energy::inference_energy_wh;
+use microflow::sim::mcu::by_name;
+use microflow::sim::{self, Engine};
+
+fn compiled(art: &std::path::Path, name: &str, paging: bool) -> CompiledModel {
+    let m = MfbModel::load(art.join(format!("{name}.mfb"))).unwrap();
+    CompiledModel::compile(&m, CompileOptions { paging }).unwrap()
+}
+
+#[test]
+fn fig11_sine_ratio_about_10x() {
+    let art = require_artifacts!();
+    let c = compiled(&art, "sine", false);
+    for mcu_name in ["ESP32", "nRF52840"] {
+        let mcu = by_name(mcu_name).unwrap();
+        let ratio = sim::inference_seconds(&c, mcu, Engine::Tflm)
+            / sim::inference_seconds(&c, mcu, Engine::MicroFlow);
+        assert!((5.0..25.0).contains(&ratio), "{mcu_name} sine ratio {ratio} (paper ~10x)");
+    }
+}
+
+#[test]
+fn fig11_speech_margins_match_paper() {
+    let art = require_artifacts!();
+    let c = compiled(&art, "speech", false);
+    let esp = by_name("ESP32").unwrap();
+    let nrf = by_name("nRF52840").unwrap();
+    let r_esp = sim::inference_seconds(&c, esp, Engine::Tflm) / sim::inference_seconds(&c, esp, Engine::MicroFlow);
+    let r_nrf = sim::inference_seconds(&c, nrf, Engine::Tflm) / sim::inference_seconds(&c, nrf, Engine::MicroFlow);
+    // paper: +9% ESP32, +15% nRF52840
+    assert!((1.02..1.30).contains(&r_esp), "ESP32 speech ratio {r_esp}");
+    assert!((1.05..1.35).contains(&r_nrf), "nRF speech ratio {r_nrf}");
+    assert!(r_nrf > r_esp);
+}
+
+#[test]
+fn fig11_person_tflm_slightly_ahead() {
+    let art = require_artifacts!();
+    let c = compiled(&art, "person", false);
+    for mcu_name in ["ESP32", "nRF52840"] {
+        let mcu = by_name(mcu_name).unwrap();
+        let ratio = sim::inference_seconds(&c, mcu, Engine::Tflm)
+            / sim::inference_seconds(&c, mcu, Engine::MicroFlow);
+        assert!((0.85..1.0).contains(&ratio), "{mcu_name} person ratio {ratio} (paper ~0.94)");
+    }
+}
+
+#[test]
+fn nrf_beats_esp32_wall_clock_despite_slower_clock() {
+    let art = require_artifacts!();
+    for name in ["speech", "person"] {
+        let c = compiled(&art, name, false);
+        let esp = sim::inference_seconds(&c, by_name("ESP32").unwrap(), Engine::MicroFlow);
+        let nrf = sim::inference_seconds(&c, by_name("nRF52840").unwrap(), Engine::MicroFlow);
+        assert!(esp / nrf > 2.5, "{name}: ESP32/nRF = {}", esp / nrf);
+    }
+}
+
+#[test]
+fn fig9_anchor_sine_on_atmega_matches_paper_numbers() {
+    // paper: 13.619 kB Flash, 1.706 kB RAM — we assert the same class
+    let art = require_artifacts!();
+    let c = compiled(&art, "sine", true);
+    let atmega = by_name("ATmega328").unwrap();
+    let fp = sim::memory_model::microflow_footprint(&c, atmega);
+    assert!((9_000..17_000).contains(&fp.flash), "flash {} (paper 13.6 kB)", fp.flash);
+    assert!((1_200..2_048).contains(&fp.ram), "ram {} (paper 1.7 kB)", fp.ram);
+    assert!(sim::memory_model::fits(atmega, Engine::MicroFlow, fp).is_ok());
+}
+
+#[test]
+fn fig9_anchor_tflm_ram_on_nrf() {
+    // paper: TFLM sine RAM 45.728 kB vs MicroFlow 5.296 kB on nRF52840
+    let art = require_artifacts!();
+    let m = MfbModel::load(art.join("sine.mfb")).unwrap();
+    let arena = ArenaPlan::plan(&m).unwrap();
+    let nrf = by_name("nRF52840").unwrap();
+    let tf = sim::memory_model::tflm_footprint(&m, &arena, nrf);
+    let c = compiled(&art, "sine", false);
+    let mf = sim::memory_model::microflow_footprint(&c, nrf);
+    assert!((38_000..55_000).contains(&tf.ram), "tflm ram {} (paper 45.7 kB)", tf.ram);
+    assert!((4_000..8_000).contains(&mf.ram), "mf ram {} (paper 5.3 kB)", mf.ram);
+}
+
+#[test]
+fn fig10_person_saving_exceeds_15_percent() {
+    let art = require_artifacts!();
+    let m = MfbModel::load(art.join("person.mfb")).unwrap();
+    let arena = ArenaPlan::plan(&m).unwrap();
+    let esp = by_name("ESP32").unwrap();
+    let c = compiled(&art, "person", false);
+    let mf = sim::memory_model::microflow_footprint(&c, esp);
+    let tf = sim::memory_model::tflm_footprint(&m, &arena, esp);
+    let saving = 1.0 - mf.flash as f64 / tf.flash as f64;
+    assert!(saving > 0.15, "person flash saving {saving} (paper >15%)");
+}
+
+#[test]
+fn person_does_not_fit_small_devices() {
+    // paper Sec. 6.3: flashing the person detector on the ATmega328 fails
+    // with "not enough memory". (The paper also excludes the LM3S6965
+    // because its 301 kB container exceeds 256 kB Flash; our leaner MFB
+    // container is 219 kB, which genuinely fits the 256 kB part — noted
+    // in EXPERIMENTS.md §E5 as a substitution artifact.)
+    let art = require_artifacts!();
+    let c = compiled(&art, "person", false);
+    let mcu = by_name("ATmega328").unwrap();
+    let fp = sim::memory_model::microflow_footprint(&c, mcu);
+    assert!(
+        sim::memory_model::fits(mcu, Engine::MicroFlow, fp).is_err(),
+        "person must NOT fit ATmega328"
+    );
+    // speech is likewise excluded from the ATmega328 (paper Sec. 6.2.2)
+    let c = compiled(&art, "speech", false);
+    let fp = sim::memory_model::microflow_footprint(&c, mcu);
+    assert!(sim::memory_model::fits(mcu, Engine::MicroFlow, fp).is_err());
+}
+
+#[test]
+fn sine_on_atmega_needs_paging() {
+    // the Sec. 4.3 narrative on the real model: unpaged staging overflows
+    // the 2 kB AVR RAM, paging makes it fit
+    let art = require_artifacts!();
+    let atmega = by_name("ATmega328").unwrap();
+    let unpaged = compiled(&art, "sine", false);
+    let fp_u = sim::memory_model::microflow_footprint(&unpaged, atmega);
+    assert!(
+        sim::memory_model::fits(atmega, Engine::MicroFlow, fp_u).is_err(),
+        "unpaged sine should overflow the 2 kB AVR ({} B)",
+        fp_u.ram
+    );
+    let paged = compiled(&art, "sine", true);
+    let fp_p = sim::memory_model::microflow_footprint(&paged, atmega);
+    assert!(sim::memory_model::fits(atmega, Engine::MicroFlow, fp_p).is_ok(), "{fp_p:?}");
+}
+
+#[test]
+fn table6_energy_shape() {
+    let art = require_artifacts!();
+    for (name, mf_wins) in [("sine", true), ("speech", true), ("person", false)] {
+        let c = compiled(&art, name, false);
+        for mcu_name in ["ESP32", "nRF52840"] {
+            let mcu = by_name(mcu_name).unwrap();
+            let e_mf = inference_energy_wh(&c, mcu, Engine::MicroFlow);
+            let e_tf = inference_energy_wh(&c, mcu, Engine::Tflm);
+            assert_eq!(e_mf < e_tf, mf_wins, "{name} on {mcu_name}: {e_mf} vs {e_tf}");
+        }
+    }
+}
+
+#[test]
+fn paging_trades_time_for_ram_on_sine() {
+    let art = require_artifacts!();
+    let unpaged = compiled(&art, "sine", false);
+    let paged = compiled(&art, "sine", true);
+    let atmega = by_name("ATmega328").unwrap();
+    let t_u = sim::inference_seconds(&unpaged, atmega, Engine::MicroFlow);
+    let t_p = sim::inference_seconds(&paged, atmega, Engine::MicroFlow);
+    assert!(t_p > t_u, "paging must cost time");
+    let r_u = sim::memory_model::microflow_footprint(&unpaged, atmega).ram;
+    let r_p = sim::memory_model::microflow_footprint(&paged, atmega).ram;
+    assert!(r_p <= r_u, "paging must not increase RAM ({r_p} vs {r_u})");
+}
+
+#[test]
+fn stack_guard_reproduces_sec44() {
+    // Sec. 4.4: on Cortex-M with flip-link an overflow becomes a handled
+    // hardware exception; with the default layout (or off Cortex-M) it is
+    // silent static-data corruption. Exercised with the person model's
+    // working set against a shrunken region.
+    use microflow::sim::stack_guard::{evaluate, microflow_layout, StackLayout, StackOutcome};
+    let art = require_artifacts!();
+    let c = compiled(&art, "person", false);
+    let nrf = by_name("nRF52840").unwrap();
+    let statics = 220 * 1024; // pretend nearly all RAM is statics
+    let demand = c.memory.peak;
+    let flipped = evaluate(nrf, StackLayout::Flipped, statics, demand);
+    let default = evaluate(nrf, StackLayout::Default, statics, demand);
+    assert!(matches!(flipped, StackOutcome::DetectedOverflow { .. }), "{flipped:?}");
+    assert!(matches!(default, StackOutcome::SilentCorruption { .. }), "{default:?}");
+    assert_eq!(microflow_layout(nrf), StackLayout::Flipped);
+    // the ESP32 (Xtensa) has no flip-link: flipped layout does not help
+    let esp = by_name("ESP32").unwrap();
+    let esp_flipped = evaluate(esp, StackLayout::Flipped, 320 * 1024, demand);
+    assert!(!esp_flipped.is_safe());
+}
