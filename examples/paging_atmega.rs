@@ -8,9 +8,9 @@
 //! and (b) the memory/time trade.
 
 use anyhow::Result;
+use microflow::api::Session;
 use microflow::compiler::paging::PagePlan;
 use microflow::compiler::plan::{CompileOptions, CompiledModel};
-use microflow::engine::MicroFlowEngine;
 use microflow::format::mfb::MfbModel;
 use microflow::sim::mcu::by_name;
 use microflow::sim::{self, Engine};
@@ -53,13 +53,13 @@ fn main() -> Result<()> {
     }
 
     // bit-identical outputs regardless of paging (Sec. 4.3: a time/space
-    // trade, never an accuracy trade)
-    let unpaged = MicroFlowEngine::new(&model, CompileOptions { paging: false })?;
-    let paged = MicroFlowEngine::new(&model, CompileOptions { paging: true })?;
+    // trade, never an accuracy trade) — both sessions through the builder
+    let mut unpaged = Session::builder(&model).paging(false).build()?;
+    let mut paged = Session::builder(&model).paging(true).build()?;
     let mut checked = 0;
     for q in -60..60 {
-        let a = unpaged.predict(&[q]);
-        let b = paged.predict(&[q]);
+        let a = unpaged.run(&[q])?;
+        let b = paged.run(&[q])?;
         assert_eq!(a, b, "paged output diverged at input {q}");
         checked += 1;
     }

@@ -4,35 +4,47 @@
 //! make artifacts && cargo run --release --example quickstart
 //! ```
 //!
-//! Loads the sine predictor, compiles it with the MicroFlow compiler, runs
-//! a few inferences, cross-checks the TFLM-like interpreter and the PJRT
-//! (JAX-AOT) oracle, and prints the static memory plan — the whole paper
-//! in one screen.
+//! Builds a session for each of the three engines through the one entry
+//! point (`microflow::api::Session`), runs a few inferences, cross-checks
+//! them against the JAX golden vectors, and prints the static memory plan
+//! — the whole paper in one screen.
 
 use anyhow::Result;
-use microflow::compiler::plan::CompileOptions;
-use microflow::engine::MicroFlowEngine;
+use microflow::api::{Engine, Session};
+use microflow::compiler::plan::{CompileOptions, CompiledModel};
 use microflow::format::golden::Golden;
-use microflow::interp::resolver::OpResolver;
-use microflow::interp::Interpreter;
+use microflow::format::mfb::MfbModel;
 use microflow::runtime::oracle::check_against_golden;
-use microflow::runtime::PjrtEngine;
 use microflow::util::fmt_kb;
 
 fn main() -> Result<()> {
     let art = microflow::artifacts_dir();
     anyhow::ensure!(art.join("sine.mfb").exists(), "run `make artifacts` first");
+    let mfb_path = art.join("sine.mfb");
 
-    // 1. compile the model (paper Sec. 3.3: parse -> preprocess -> plan)
-    let engine = MicroFlowEngine::load(art.join("sine.mfb"), CompileOptions::default())?;
-    println!("== MicroFlow engine (sine predictor) ==");
-    println!("steps: {}", engine.compiled().steps.len());
-    println!("MACs/inference: {}", engine.compiled().total_macs());
-    println!("weights+consts: {}", fmt_kb(engine.compiled().weight_bytes()));
+    // 1. one builder, three engines (paper Sec. 3.3: parse -> preprocess
+    //    -> plan happens inside the MicroFlow session's build)
+    let mut engine = Session::builder(&mfb_path).engine(Engine::MicroFlow).build()?;
+    println!("== MicroFlow session (sine predictor) ==");
+    println!("engine: {}", engine.engine());
+    println!(
+        "signature: {:?} {:?} -> {:?} {:?}",
+        engine.signature().input.shape,
+        engine.input_qparams(),
+        engine.signature().output.shape,
+        engine.output_qparams(),
+    );
 
-    // 2. static memory plan (Sec. 4.2): two ping-pong buffers, no heap on
+    // 2. compiled-plan introspection stays on the compiler layer
+    let model = MfbModel::load(&mfb_path)?;
+    let compiled = CompiledModel::compile(&model, CompileOptions::default())?;
+    println!("steps: {}", compiled.steps.len());
+    println!("MACs/inference: {}", compiled.total_macs());
+    println!("weights+consts: {}", fmt_kb(compiled.weight_bytes()));
+
+    // 3. static memory plan (Sec. 4.2): two ping-pong buffers, no heap on
     //    the hot path
-    let m = &engine.compiled().memory;
+    let m = &compiled.memory;
     println!(
         "static memory plan: peak {} at step {} (buffers {} + {} + scratch {})",
         fmt_kb(m.peak),
@@ -42,30 +54,35 @@ fn main() -> Result<()> {
         fmt_kb(m.scratch),
     );
 
-    // 3. run inference: sin(x) for a few x
+    // 4. run inference: sin(x) for a few x
     println!("\n x      sin(x)   microflow");
     for x in [0.5f32, 1.0, 2.0, 4.0, 5.5] {
-        let y = engine.predict_f32(&[x]);
+        let y = engine.run_f32(&[x])?;
         println!("{x:4.1}   {:+.4}  {:+.4}", x.sin(), y[0]);
     }
 
-    // 4. golden cross-check: JAX oracle vs all three engines
+    // 5. golden cross-check: JAX oracle vs all three engines
     let golden = Golden::load(art.join("sine_golden.bin"))?;
-    let a = check_against_golden(&golden, |x| Ok(engine.predict(x)))?;
+    let a = check_against_golden(&golden, |x| engine.run(x))?;
     println!("\nvs JAX golden vectors:");
     println!("  microflow engine  : exact {}/{}", a.exact, a.n_outputs);
 
-    let bytes = std::fs::read(art.join("sine.mfb"))?;
-    let mut interp = Interpreter::new(&bytes, &OpResolver::with_all_kernels())?;
-    let b = check_against_golden(&golden, |x| interp.invoke(x))?;
+    let mut interp = Session::builder(&mfb_path).engine(Engine::Interp).build()?;
+    let b = check_against_golden(&golden, |x| interp.run(x))?;
     println!(
         "  tflm interpreter  : exact {}/{} (max |Δ| = {} — the paper's ±1)",
         b.exact, b.n_outputs, b.max_abs_diff
     );
 
-    let pjrt = PjrtEngine::load(&art, "sine")?;
-    let c = check_against_golden(&golden, |x| pjrt.predict_q(x))?;
-    println!("  pjrt (AOT HLO)    : exact {}/{} on {}", c.exact, c.n_outputs, pjrt.platform());
+    // PJRT is an optional build feature: skip on default builds, but on a
+    // pjrt build a load failure is a real failure (don't mask bad HLO)
+    if cfg!(feature = "pjrt") {
+        let mut pjrt = Session::builder(&mfb_path).engine(Engine::Pjrt).build()?;
+        let c = check_against_golden(&golden, |x| pjrt.run(x))?;
+        println!("  pjrt (AOT HLO)    : exact {}/{}", c.exact, c.n_outputs);
+    } else {
+        println!("  pjrt (AOT HLO)    : skipped — built without the `pjrt` feature");
+    }
 
     println!("\nquickstart OK");
     Ok(())

@@ -7,11 +7,9 @@
 //!   example, computed by the actual PagePlan);
 //! * time: host-measured slowdown of the paged executor (Flash re-reads).
 
+use microflow::api::Session;
 use microflow::bench_support::{black_box, time_iters};
 use microflow::compiler::paging::PagePlan;
-use microflow::compiler::plan::CompileOptions;
-use microflow::engine::MicroFlowEngine;
-use microflow::format::mfb::MfbModel;
 use microflow::kernels::fully_connected::{fully_connected_microflow, fully_connected_paged};
 use microflow::sim::report::{emit, Table};
 use microflow::tensor::quant::{FusedAct, PreComputed};
@@ -57,11 +55,11 @@ fn main() -> anyhow::Result<()> {
 
     // whole-model: paged == unpaged outputs on the shipped sine model
     let art = microflow::artifacts_dir();
-    let model = MfbModel::load(art.join("sine.mfb"))?;
-    let a = MicroFlowEngine::new(&model, CompileOptions { paging: false })?;
-    let b = MicroFlowEngine::new(&model, CompileOptions { paging: true })?;
+    let path = art.join("sine.mfb");
+    let mut a = Session::builder(&path).paging(false).build()?;
+    let mut b = Session::builder(&path).paging(true).build()?;
     for q in (-120..=120).step_by(7) {
-        assert_eq!(a.predict(&[q]), b.predict(&[q]));
+        assert_eq!(a.run(&[q])?, b.run(&[q])?);
     }
     println!("ablation_paging OK");
     Ok(())

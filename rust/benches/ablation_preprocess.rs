@@ -9,12 +9,10 @@
 
 use std::time::Instant;
 
+use microflow::api::{Engine, Session};
 use microflow::bench_support::{black_box, time_iters};
 use microflow::compiler::plan::{CompileOptions, CompiledModel};
-use microflow::engine::MicroFlowEngine;
 use microflow::format::mfb::MfbModel;
-use microflow::interp::resolver::OpResolver;
-use microflow::interp::Interpreter;
 use microflow::kernels::fully_connected::fully_connected_microflow;
 use microflow::sim::report::{emit, Table};
 use microflow::tensor::quant::{FusedAct, PreComputed};
@@ -67,22 +65,26 @@ fn main() -> anyhow::Result<()> {
         let bytes = std::fs::read(&path)?;
         let model = MfbModel::parse(&bytes)?;
 
+        // construct the builders (and their model-source copies) OUTSIDE
+        // the timed windows: the columns measure compile/prepare work, as
+        // the seed did with the bare constructors
+        let native_builder = Session::builder(&model).engine(Engine::MicroFlow);
         let t0 = Instant::now();
-        let engine = MicroFlowEngine::new(&model, CompileOptions::default())?;
+        let mut engine = native_builder.build()?;
         let compile_t = t0.elapsed().as_secs_f64();
 
+        let interp_builder = Session::builder(bytes.clone()).engine(Engine::Interp);
         let t0 = Instant::now();
-        let mut interp = Interpreter::new(&bytes, &OpResolver::with_all_kernels())?;
+        let mut interp = interp_builder.build()?;
         let init_t = t0.elapsed().as_secs_f64();
 
         let mut rng = Prng::new(2);
         let input = rng.i8_vec(engine.input_len());
         let mut out = vec![0i8; engine.output_len()];
+        let mut out_in = vec![0i8; interp.output_len()];
         let iters = if name == "person" { 20 } else { 100 };
-        let s_mf = time_iters(3, iters, || engine.predict_into(&input, &mut out));
-        let s_in = time_iters(3, iters, || {
-            let _ = interp.invoke(&input).unwrap();
-        });
+        let s_mf = time_iters(3, iters, || engine.run_into(&input, &mut out).unwrap());
+        let s_in = time_iters(3, iters, || interp.run_into(&input, &mut out_in).unwrap());
         t2.row(vec![
             name.into(),
             fmt_time(compile_t),

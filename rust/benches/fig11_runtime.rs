@@ -11,12 +11,10 @@
 //!    *mechanism* (interpreter overhead dominates small models, MAC work
 //!    dominates large ones) with real, unmodeled numbers.
 
+use microflow::api::Session;
 use microflow::bench_support::{paper_protocol, report_line};
 use microflow::compiler::plan::{CompileOptions, CompiledModel};
-use microflow::engine::MicroFlowEngine;
 use microflow::format::mfb::MfbModel;
-use microflow::interp::resolver::OpResolver;
-use microflow::interp::Interpreter;
 use microflow::sim::report::{emit, Table};
 use microflow::sim::{self, Engine};
 use microflow::util::{fmt_time, Prng};
@@ -87,16 +85,15 @@ fn main() -> anyhow::Result<()> {
     );
     for model_name in models {
         let path = art.join(format!("{model_name}.mfb"));
-        let engine = MicroFlowEngine::load(&path, CompileOptions::default())?;
-        let bytes = std::fs::read(&path)?;
-        let mut interp = Interpreter::new(&bytes, &OpResolver::with_all_kernels())?;
+        let mut engine = Session::builder(&path).engine(microflow::api::Engine::MicroFlow).build()?;
+        let mut interp = Session::builder(&path).engine(microflow::api::Engine::Interp).build()?;
         let mut rng = Prng::new(1);
         let input = rng.i8_vec(engine.input_len());
         let mut out = vec![0i8; engine.output_len()];
-        let s_mf = paper_protocol(|| engine.predict_into(&input, &mut out));
-        let s_tf = paper_protocol(|| {
-            let _ = interp.invoke(&input).unwrap();
-        });
+        let mut out_tf = vec![0i8; interp.output_len()];
+        // both engines timed on the same allocation-free run_into hot path
+        let s_mf = paper_protocol(|| engine.run_into(&input, &mut out).unwrap());
+        let s_tf = paper_protocol(|| interp.run_into(&input, &mut out_tf).unwrap());
         println!("{}", report_line(&format!("{model_name} microflow"), &s_mf));
         println!("{}", report_line(&format!("{model_name} tflm-interp"), &s_tf));
         t2.row(vec![

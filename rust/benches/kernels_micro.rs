@@ -52,7 +52,7 @@ fn main() {
 
     // --- DepthwiseConv2D at the TinyConv shape (49x40x1, k10x8, s2, mult 8)
     {
-        let geo = ConvGeometry::new(49, 40, 1, 10, 8, 2, 2, Padding::Same);
+        let geo = ConvGeometry::new(49, 40, 1, 10, 8, 2, 2, Padding::Same).unwrap();
         let cout = 8;
         let x = rng.i8_vec(49 * 40);
         let w = rng.i8_vec(80 * cout);
@@ -89,7 +89,7 @@ fn main() {
     for (h, w_, cin, cout, kk, stride, label) in
         [(6usize, 6usize, 128usize, 128usize, 1usize, 1usize, "pw 6x6x128"), (96, 96, 1, 8, 3, 2, "first 96x96")]
     {
-        let geo = ConvGeometry::new(h, w_, cin, kk, kk, stride, stride, Padding::Same);
+        let geo = ConvGeometry::new(h, w_, cin, kk, kk, stride, stride, Padding::Same).unwrap();
         let x = rng.i8_vec(h * w_ * cin);
         let f = rng.i8_vec(cout * kk * kk * cin);
         let b = rng.i32_vec(cout, -500, 500);

@@ -9,12 +9,9 @@
 //! Expected shape (paper Table 5): the two engines are on par, differing
 //! only through the ±1 requantization rounding.
 
-use microflow::compiler::plan::CompileOptions;
-use microflow::engine::MicroFlowEngine;
+use microflow::api::{Engine, Session};
 use microflow::eval::accuracy::{evaluate_classifier, evaluate_sine};
 use microflow::format::mds::MdsDataset;
-use microflow::interp::resolver::OpResolver;
-use microflow::interp::Interpreter;
 use microflow::sim::report::{emit, Table};
 
 fn pct(v: f64) -> String {
@@ -25,11 +22,10 @@ fn main() -> anyhow::Result<()> {
     let art = microflow::artifacts_dir();
     anyhow::ensure!(art.join("sine.mfb").exists(), "run `make artifacts` first");
 
-    let engines = |name: &str| -> anyhow::Result<(MicroFlowEngine, Interpreter)> {
+    let engines = |name: &str| -> anyhow::Result<(Session, Session)> {
         let path = art.join(format!("{name}.mfb"));
-        let e = MicroFlowEngine::load(&path, CompileOptions::default())?;
-        let bytes = std::fs::read(&path)?;
-        let i = Interpreter::new(&bytes, &OpResolver::with_all_kernels())?;
+        let e = Session::builder(&path).engine(Engine::MicroFlow).build()?;
+        let i = Session::builder(&path).engine(Engine::Interp).build()?;
         Ok((e, i))
     };
 

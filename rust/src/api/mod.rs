@@ -1,0 +1,633 @@
+//! `microflow::api` — the crate's single public inference entry point.
+//!
+//! The reproduction grew three incompatible front doors: the native
+//! MicroFlow engine (`MicroFlowEngine::new`), the TFLM-like interpreter
+//! (`Interpreter::new`) and the PJRT runtime (`PjrtEngine::load`), each with
+//! its own I/O conventions. This module unifies them behind one
+//! session-based surface, the way TFLM exposes a single `MicroInterpreter`
+//! regardless of which kernels end up linked in:
+//!
+//! ```no_run
+//! use microflow::api::{Engine, Session};
+//!
+//! let mut session = Session::builder("artifacts/sine.mfb")
+//!     .engine(Engine::MicroFlow)
+//!     .paging(false)
+//!     .preferred_batch(32)
+//!     .build()?;
+//! let sig = session.signature().clone();
+//! let q = sig.input.qparams.quantize_slice(&[1.0]);
+//! let out = session.run(&q)?;
+//! # anyhow::Ok(())
+//! ```
+//!
+//! Layers of the surface:
+//!
+//! * [`TensorSpec`] / [`IoSignature`] — shape + quantization of the model's
+//!   endpoints, replacing the scattered `input_len()` / `input_qparams()`
+//!   method quadruplets;
+//! * [`ModelSource`] — where the model comes from: a path, raw MFB bytes,
+//!   or an already-parsed [`MfbModel`];
+//! * [`SessionBuilder`] — engine selection plus per-engine options
+//!   (paging, preferred batch, PJRT artifact location) in one place;
+//! * [`InferenceSession`] — the executor trait all three engines
+//!   implement: allocation-free `run_into` / `run_batch_into` on the hot
+//!   path, with allocating conveniences layered on top;
+//! * [`Session`] — a boxed, engine-erased session; what the coordinator's
+//!   worker pool, the CLI and the benches all hold.
+//!
+//! The low-level constructors remain available for engine-internal work
+//! (compilation introspection, the sim memory model), but every serving
+//! path in the crate goes through this module.
+
+mod sessions;
+
+pub use sessions::{InterpSession, NativeSession, PjrtSession};
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::format::mfb::MfbModel;
+use crate::tensor::quant::QParams;
+
+/// Default preferred batch for the per-sample engines (native + interp).
+/// PJRT defaults to its largest AOT-compiled batch variant instead.
+pub const DEFAULT_PREFERRED_BATCH: usize = 8;
+
+/// Which executor a session runs on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Engine {
+    /// The paper's system: compile once, static buffers, folded constants.
+    MicroFlow,
+    /// The TFLM-like interpreter baseline: runtime parsing, tensor arena,
+    /// per-node dispatch, fixed-point requantization.
+    Interp,
+    /// The JAX-AOT'd HLO executed by the XLA CPU client (true batched
+    /// execution; requires the `pjrt` build feature and HLO artifacts).
+    Pjrt,
+}
+
+impl Engine {
+    /// Stable lowercase name (CLI values, metrics labels).
+    pub fn name(self) -> &'static str {
+        match self {
+            Engine::MicroFlow => "microflow",
+            Engine::Interp => "tflm-interp",
+            Engine::Pjrt => "pjrt",
+        }
+    }
+}
+
+impl std::fmt::Display for Engine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for Engine {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "microflow" | "native" => Engine::MicroFlow,
+            "tflm" | "interp" | "tflm-interp" => Engine::Interp,
+            "pjrt" | "xla" => Engine::Pjrt,
+            other => bail!("unknown engine {other:?} (microflow | tflm | pjrt)"),
+        })
+    }
+}
+
+/// Shape + quantization of one model endpoint.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    /// Per-sample dims (no batch dimension).
+    pub shape: Vec<usize>,
+    pub qparams: QParams,
+}
+
+impl TensorSpec {
+    pub fn new(shape: Vec<usize>, qparams: QParams) -> Self {
+        TensorSpec { shape, qparams }
+    }
+
+    /// Element count per sample.
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Quantize a float sample with this endpoint's qparams.
+    pub fn quantize(&self, r: &[f32]) -> Vec<i8> {
+        self.qparams.quantize_slice(r)
+    }
+
+    /// Dequantize a quantized sample with this endpoint's qparams.
+    pub fn dequantize(&self, q: &[i8]) -> Vec<f32> {
+        q.iter().map(|&v| self.qparams.dequantize(v)).collect()
+    }
+}
+
+/// A model's I/O contract: what goes in, what comes out.
+#[derive(Clone, Debug, PartialEq)]
+pub struct IoSignature {
+    pub input: TensorSpec,
+    pub output: TensorSpec,
+}
+
+impl IoSignature {
+    /// Read the signature off a parsed container (all engines agree on it
+    /// — the MFB is the single source of truth for shapes and qparams).
+    pub fn of_model(model: &MfbModel) -> IoSignature {
+        IoSignature {
+            input: TensorSpec::new(model.input_shape(), model.input_qparams()),
+            output: TensorSpec::new(model.output_shape(), model.output_qparams()),
+        }
+    }
+
+    pub fn input_len(&self) -> usize {
+        self.input.len()
+    }
+
+    pub fn output_len(&self) -> usize {
+        self.output.len()
+    }
+}
+
+/// Where a session's model comes from.
+#[derive(Clone, Debug)]
+pub enum ModelSource {
+    /// A `.mfb` file on disk.
+    Path(PathBuf),
+    /// Raw MFB container bytes.
+    Bytes(Vec<u8>),
+    /// An already-parsed container.
+    Parsed(MfbModel),
+}
+
+impl ModelSource {
+    /// The container bytes (read, kept, or re-serialized as needed).
+    fn into_bytes(self) -> Result<Vec<u8>> {
+        Ok(match self {
+            ModelSource::Path(p) => {
+                std::fs::read(&p).with_context(|| format!("reading {}", p.display()))?
+            }
+            ModelSource::Bytes(b) => b,
+            ModelSource::Parsed(m) => {
+                crate::format::builder::serialize(&m).context("serializing parsed model")?
+            }
+        })
+    }
+
+    /// The parsed container.
+    fn into_model(self) -> Result<MfbModel> {
+        Ok(match self {
+            ModelSource::Path(p) => MfbModel::load(&p)?,
+            ModelSource::Bytes(b) => MfbModel::parse(&b)?,
+            ModelSource::Parsed(m) => m,
+        })
+    }
+
+    /// `(artifacts dir, model name)` for the PJRT loader, derivable only
+    /// from a `<dir>/<name>.mfb` path.
+    fn pjrt_location(&self) -> Option<(PathBuf, String)> {
+        let ModelSource::Path(p) = self else { return None };
+        let dir = p.parent()?.to_path_buf();
+        let name = p.file_stem()?.to_str()?.to_string();
+        Some((dir, name))
+    }
+}
+
+impl From<PathBuf> for ModelSource {
+    fn from(p: PathBuf) -> Self {
+        ModelSource::Path(p)
+    }
+}
+
+impl From<&Path> for ModelSource {
+    fn from(p: &Path) -> Self {
+        ModelSource::Path(p.to_path_buf())
+    }
+}
+
+impl From<&PathBuf> for ModelSource {
+    fn from(p: &PathBuf) -> Self {
+        ModelSource::Path(p.clone())
+    }
+}
+
+impl From<&str> for ModelSource {
+    fn from(p: &str) -> Self {
+        ModelSource::Path(p.into())
+    }
+}
+
+impl From<Vec<u8>> for ModelSource {
+    fn from(b: Vec<u8>) -> Self {
+        ModelSource::Bytes(b)
+    }
+}
+
+impl From<&[u8]> for ModelSource {
+    fn from(b: &[u8]) -> Self {
+        ModelSource::Bytes(b.to_vec())
+    }
+}
+
+impl From<MfbModel> for ModelSource {
+    fn from(m: MfbModel) -> Self {
+        ModelSource::Parsed(m)
+    }
+}
+
+/// Deep-clones the model, **including every weight payload** — convenient
+/// for tests and small models; pass the `MfbModel` by value (or a path)
+/// when the copy matters.
+impl From<&MfbModel> for ModelSource {
+    fn from(m: &MfbModel) -> Self {
+        ModelSource::Parsed(m.clone())
+    }
+}
+
+/// An executor for one loaded model.
+///
+/// The hot-path contract: `run_into` and `run_batch_into` never allocate
+/// or resize the **session-owned buffers** (arena, ping-pong activations,
+/// kernel scratch, staging) — asserted by the pointer-stability
+/// conformance tests — and write results only into caller-provided
+/// slices. Two known exemptions remain: the PJRT implementation stages
+/// literals at the XLA FFI boundary, and the wide-output (`n > 8`)
+/// FullyConnected kernel still allocates its accumulator per call (open
+/// item in ROADMAP.md). All three engines implement this.
+pub trait InferenceSession: Send {
+    fn engine(&self) -> Engine;
+
+    fn signature(&self) -> &IoSignature;
+
+    /// Largest batch worth submitting at once (the dynamic batcher's
+    /// target). Builder-configurable via
+    /// [`SessionBuilder::preferred_batch`].
+    fn preferred_batch(&self) -> usize;
+
+    /// One quantized inference: int8 in, int8 out, written into `out`.
+    fn run_into(&mut self, input: &[i8], out: &mut [i8]) -> Result<()>;
+
+    /// Execute `n` samples packed in `inputs` (`n * input_len` values),
+    /// writing `n * output_len` values into `out`.
+    ///
+    /// The default loops `run_into` over the samples — allocation-free by
+    /// construction. Engines with native batch execution (PJRT) override.
+    fn run_batch_into(&mut self, inputs: &[i8], n: usize, out: &mut [i8]) -> Result<()> {
+        let (ilen, olen) = (self.signature().input_len(), self.signature().output_len());
+        check_batch(inputs.len(), out.len(), n, ilen, olen)?;
+        for i in 0..n {
+            self.run_into(&inputs[i * ilen..(i + 1) * ilen], &mut out[i * olen..(i + 1) * olen])?;
+        }
+        Ok(())
+    }
+
+    /// Base addresses of the session's long-lived internal buffers, for
+    /// pointer-stability tests (a changed address betrays a reallocation
+    /// on the hot path). Engines without host-visible buffers return `[]`.
+    fn buffer_ptrs(&self) -> Vec<usize> {
+        Vec::new()
+    }
+}
+
+/// Shared batch-shape validation for `run_batch_into` implementations.
+pub(crate) fn check_batch(in_len: usize, out_len: usize, n: usize, ilen: usize, olen: usize) -> Result<()> {
+    if in_len != n * ilen {
+        bail!("batch input length {in_len} != n {n} * input_len {ilen}");
+    }
+    if out_len != n * olen {
+        bail!("batch output length {out_len} != n {n} * output_len {olen}");
+    }
+    Ok(())
+}
+
+/// An engine-erased inference session — what the serving layers hold.
+pub struct Session {
+    inner: Box<dyn InferenceSession>,
+}
+
+impl Session {
+    /// Start configuring a session over a model source.
+    pub fn builder(source: impl Into<ModelSource>) -> SessionBuilder {
+        SessionBuilder::new(source)
+    }
+
+    /// Wrap a custom [`InferenceSession`] implementation (new backends
+    /// plug into the serving stack through this).
+    pub fn from_impl(inner: Box<dyn InferenceSession>) -> Session {
+        Session { inner }
+    }
+
+    pub fn engine(&self) -> Engine {
+        self.inner.engine()
+    }
+
+    pub fn signature(&self) -> &IoSignature {
+        self.inner.signature()
+    }
+
+    pub fn input_len(&self) -> usize {
+        self.inner.signature().input_len()
+    }
+
+    pub fn output_len(&self) -> usize {
+        self.inner.signature().output_len()
+    }
+
+    pub fn input_qparams(&self) -> QParams {
+        self.inner.signature().input.qparams
+    }
+
+    pub fn output_qparams(&self) -> QParams {
+        self.inner.signature().output.qparams
+    }
+
+    pub fn preferred_batch(&self) -> usize {
+        self.inner.preferred_batch()
+    }
+
+    /// Allocation-free single inference.
+    pub fn run_into(&mut self, input: &[i8], out: &mut [i8]) -> Result<()> {
+        self.inner.run_into(input, out)
+    }
+
+    /// Allocation-free batched inference (`n` packed samples).
+    pub fn run_batch_into(&mut self, inputs: &[i8], n: usize, out: &mut [i8]) -> Result<()> {
+        self.inner.run_batch_into(inputs, n, out)
+    }
+
+    /// Single inference, allocating the output (convenience).
+    pub fn run(&mut self, input: &[i8]) -> Result<Vec<i8>> {
+        let mut out = vec![0i8; self.output_len()];
+        self.inner.run_into(input, &mut out)?;
+        Ok(out)
+    }
+
+    /// Batched inference, allocating the output (convenience).
+    pub fn run_batch(&mut self, inputs: &[i8], n: usize) -> Result<Vec<i8>> {
+        let mut out = vec![0i8; n * self.output_len()];
+        self.inner.run_batch_into(inputs, n, &mut out)?;
+        Ok(out)
+    }
+
+    /// Float convenience: quantize in, dequantize out with the model's
+    /// endpoint qparams.
+    pub fn run_f32(&mut self, input: &[f32]) -> Result<Vec<f32>> {
+        let q = self.input_qparams().quantize_slice(input);
+        let out = self.run(&q)?;
+        let oq = self.output_qparams();
+        Ok(out.iter().map(|&v| oq.dequantize(v)).collect())
+    }
+
+    /// See [`InferenceSession::buffer_ptrs`].
+    pub fn buffer_ptrs(&self) -> Vec<usize> {
+        self.inner.buffer_ptrs()
+    }
+}
+
+impl std::fmt::Debug for Session {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Session")
+            .field("engine", &self.engine())
+            .field("signature", self.signature())
+            .finish()
+    }
+}
+
+/// Configures and constructs a [`Session`].
+///
+/// Subsumes the three removed ad-hoc constructors and the bare
+/// `CompileOptions { paging }` bool:
+///
+/// * `.engine(Engine::MicroFlow)` + `.paging(true)` — the paged native
+///   executor (old `MicroFlowEngine::new(&m, CompileOptions { paging })`);
+/// * `.engine(Engine::Interp)` — the TFLM-like interpreter (old
+///   `Interpreter::new(&bytes, &OpResolver::with_all_kernels())`);
+/// * `.engine(Engine::Pjrt)` — the AOT'd HLO runtime (old
+///   `PjrtEngine::load(dir, name)`); the artifacts location is derived
+///   from a `<dir>/<name>.mfb` path source or set explicitly with
+///   [`SessionBuilder::pjrt_artifacts`].
+#[derive(Debug)]
+pub struct SessionBuilder {
+    source: ModelSource,
+    engine: Engine,
+    paging: bool,
+    preferred_batch: Option<usize>,
+    pjrt_artifacts: Option<(PathBuf, String)>,
+}
+
+impl SessionBuilder {
+    pub fn new(source: impl Into<ModelSource>) -> SessionBuilder {
+        SessionBuilder {
+            source: source.into(),
+            engine: Engine::MicroFlow,
+            paging: false,
+            preferred_batch: None,
+            pjrt_artifacts: None,
+        }
+    }
+
+    /// Select the executor (default: [`Engine::MicroFlow`]).
+    pub fn engine(mut self, engine: Engine) -> Self {
+        self.engine = engine;
+        self
+    }
+
+    /// Execute FullyConnected layers page-by-page (paper Sec. 4.3; native
+    /// engine only — `build` rejects it for the other engines). Default:
+    /// off.
+    pub fn paging(mut self, paging: bool) -> Self {
+        self.paging = paging;
+        self
+    }
+
+    /// Override the batch size the session advertises to the dynamic
+    /// batcher. Defaults: [`DEFAULT_PREFERRED_BATCH`] for the per-sample
+    /// engines, the largest AOT batch variant for PJRT.
+    pub fn preferred_batch(mut self, n: usize) -> Self {
+        self.preferred_batch = Some(n.max(1));
+        self
+    }
+
+    /// Explicit PJRT artifact location (`<dir>/<name>_quant_b*.hlo.txt`),
+    /// for sources that aren't a `<dir>/<name>.mfb` path.
+    pub fn pjrt_artifacts(mut self, dir: impl Into<PathBuf>, model: impl Into<String>) -> Self {
+        self.pjrt_artifacts = Some((dir.into(), model.into()));
+        self
+    }
+
+    /// Construct the session: load/parse the model, run the selected
+    /// engine's setup (compile / allocate-tensors / XLA compile), and
+    /// box it behind the uniform surface.
+    pub fn build(self) -> Result<Session> {
+        let inner: Box<dyn InferenceSession> = match self.engine {
+            Engine::MicroFlow => Box::new(NativeSession::create(
+                self.source.into_model()?,
+                self.paging,
+                self.preferred_batch,
+            )?),
+            Engine::Interp => {
+                if self.paging {
+                    bail!("paging is a MicroFlow-engine option; the interpreter has no paged mode");
+                }
+                Box::new(InterpSession::create(self.source.into_bytes()?, self.preferred_batch)?)
+            }
+            Engine::Pjrt => {
+                if self.paging {
+                    bail!("paging is a MicroFlow-engine option; PJRT executes the AOT'd HLO");
+                }
+                let (dir, name) = match self.pjrt_artifacts {
+                    Some(loc) => loc,
+                    None => self.source.pjrt_location().context(
+                        "PJRT needs an artifacts location: pass a <dir>/<model>.mfb path \
+                         source or call .pjrt_artifacts(dir, model)",
+                    )?,
+                };
+                // the source supplies the signature (and is validated
+                // against the artifacts' own container inside create)
+                let model = self.source.into_model()?;
+                Box::new(PjrtSession::create(model, &dir, &name, self.preferred_batch)?)
+            }
+        };
+        Ok(Session { inner })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::format::mfb::tests::tiny_mfb;
+
+    fn tiny_session(engine: Engine) -> Session {
+        Session::builder(tiny_mfb()).engine(engine).build().unwrap()
+    }
+
+    #[test]
+    fn engine_parses_cli_names() {
+        assert_eq!("microflow".parse::<Engine>().unwrap(), Engine::MicroFlow);
+        assert_eq!("tflm".parse::<Engine>().unwrap(), Engine::Interp);
+        assert_eq!("pjrt".parse::<Engine>().unwrap(), Engine::Pjrt);
+        assert!("mystery".parse::<Engine>().is_err());
+    }
+
+    #[test]
+    fn signature_matches_the_container() {
+        let s = tiny_session(Engine::MicroFlow);
+        assert_eq!(s.signature().input.shape, vec![2]);
+        assert_eq!(s.signature().output.shape, vec![3]);
+        assert_eq!(s.input_len(), 2);
+        assert_eq!(s.output_len(), 3);
+        assert_eq!(s.input_qparams(), QParams::new(0.5, -1));
+    }
+
+    #[test]
+    fn native_session_runs_the_tiny_model() {
+        // same expectation as the engine unit test: FC + fused relu
+        let mut s = tiny_session(Engine::MicroFlow);
+        assert_eq!(s.run(&[3, 1]).unwrap(), vec![2, 0, 5]);
+    }
+
+    #[test]
+    fn interp_session_agrees_within_one() {
+        let mut nat = tiny_session(Engine::MicroFlow);
+        let mut itp = tiny_session(Engine::Interp);
+        assert_eq!(itp.engine(), Engine::Interp);
+        for x in [[3i8, 1], [-5, 99], [127, -128]] {
+            let a = nat.run(&x).unwrap();
+            let b = itp.run(&x).unwrap();
+            for (u, v) in a.iter().zip(&b) {
+                assert!((*u as i32 - *v as i32).abs() <= 1, "{a:?} vs {b:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn paged_native_is_bit_identical() {
+        let mut a = tiny_session(Engine::MicroFlow);
+        let mut b = Session::builder(tiny_mfb())
+            .engine(Engine::MicroFlow)
+            .paging(true)
+            .build()
+            .unwrap();
+        for x in [[0i8, 0], [127, -128], [-5, 99]] {
+            assert_eq!(a.run(&x).unwrap(), b.run(&x).unwrap());
+        }
+    }
+
+    #[test]
+    fn parsed_source_round_trips_through_the_serializer() {
+        let m = MfbModel::parse(&tiny_mfb()).unwrap();
+        let mut s = Session::builder(&m).engine(Engine::Interp).build().unwrap();
+        let out = s.run(&[3, 1]).unwrap();
+        assert_eq!(out.len(), 3);
+    }
+
+    #[test]
+    fn preferred_batch_is_configurable() {
+        let s = tiny_session(Engine::MicroFlow);
+        assert_eq!(s.preferred_batch(), DEFAULT_PREFERRED_BATCH);
+        let s = Session::builder(tiny_mfb()).preferred_batch(32).build().unwrap();
+        assert_eq!(s.preferred_batch(), 32);
+        let s = Session::builder(tiny_mfb()).engine(Engine::Interp).preferred_batch(3).build().unwrap();
+        assert_eq!(s.preferred_batch(), 3);
+    }
+
+    #[test]
+    fn run_batch_into_is_allocation_free() {
+        // buffer pointers stable across repeated batched calls — the
+        // static-allocation story extended to the batch path
+        for engine in [Engine::MicroFlow, Engine::Interp] {
+            let mut s = tiny_session(engine);
+            let inputs: Vec<i8> = vec![3, 1, -5, 99, 0, 0, 7, -7];
+            let mut out = vec![0i8; 4 * 3];
+            s.run_batch_into(&inputs, 4, &mut out).unwrap();
+            let p0 = s.buffer_ptrs();
+            assert!(!p0.is_empty(), "{engine} exposes no buffers");
+            for _ in 0..10 {
+                s.run_batch_into(&inputs, 4, &mut out).unwrap();
+            }
+            assert_eq!(s.buffer_ptrs(), p0, "{engine} reallocated on the batch path");
+        }
+    }
+
+    #[test]
+    fn batch_results_match_single_runs() {
+        for engine in [Engine::MicroFlow, Engine::Interp] {
+            let mut s = tiny_session(engine);
+            let inputs: Vec<i8> = vec![3, 1, -5, 99, 64, -64];
+            let batched = s.run_batch(&inputs, 3).unwrap();
+            for i in 0..3 {
+                let single = s.run(&inputs[i * 2..(i + 1) * 2]).unwrap();
+                assert_eq!(&batched[i * 3..(i + 1) * 3], single.as_slice(), "sample {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn shape_errors_are_results_not_panics() {
+        let mut s = tiny_session(Engine::MicroFlow);
+        assert!(s.run(&[1, 2, 3]).is_err());
+        let mut out = vec![0i8; 2]; // wrong: output_len is 3
+        assert!(s.run_into(&[1, 2], &mut out).is_err());
+        let mut out = vec![0i8; 6];
+        assert!(s.run_batch_into(&[1, 2, 3], 2, &mut out).is_err());
+    }
+
+    #[test]
+    fn interp_rejects_paging() {
+        assert!(Session::builder(tiny_mfb()).engine(Engine::Interp).paging(true).build().is_err());
+    }
+
+    #[test]
+    fn pjrt_without_location_is_a_clear_error() {
+        let err = Session::builder(tiny_mfb()).engine(Engine::Pjrt).build().unwrap_err();
+        assert!(format!("{err:#}").contains("artifacts"), "{err:#}");
+    }
+}

@@ -1,0 +1,203 @@
+//! The three [`InferenceSession`] implementations behind
+//! [`Session::builder`](super::Session::builder).
+//!
+//! Each wraps one executor and adapts it to the uniform allocation-free
+//! contract:
+//!
+//! * [`NativeSession`] — the MicroFlow engine: static ping-pong buffers,
+//!   batch = per-sample loop over `predict_into`;
+//! * [`InterpSession`] — the TFLM-like interpreter: tensor arena, batch =
+//!   per-sample loop over `invoke_into`;
+//! * [`PjrtSession`] — the AOT'd HLO on the XLA CPU client: true batched
+//!   execution against the compiled batch variants.
+
+use std::path::Path;
+
+use anyhow::{bail, ensure, Result};
+
+use super::{check_batch, Engine, InferenceSession, IoSignature, DEFAULT_PREFERRED_BATCH};
+use crate::compiler::plan::CompileOptions;
+use crate::engine::MicroFlowEngine;
+use crate::format::mfb::MfbModel;
+use crate::interp::resolver::OpResolver;
+use crate::interp::Interpreter;
+use crate::runtime::PjrtEngine;
+
+fn check_single(in_len: usize, out_len: usize, sig: &IoSignature) -> Result<()> {
+    if in_len != sig.input_len() {
+        bail!("input length {in_len} != model input {}", sig.input_len());
+    }
+    if out_len != sig.output_len() {
+        bail!("output length {out_len} != model output {}", sig.output_len());
+    }
+    Ok(())
+}
+
+/// The native MicroFlow engine behind the session surface.
+pub struct NativeSession {
+    engine: MicroFlowEngine,
+    signature: IoSignature,
+    preferred_batch: usize,
+}
+
+impl NativeSession {
+    pub(super) fn create(
+        model: MfbModel,
+        paging: bool,
+        preferred_batch: Option<usize>,
+    ) -> Result<NativeSession> {
+        let signature = IoSignature::of_model(&model);
+        let engine = MicroFlowEngine::new(&model, CompileOptions { paging })?;
+        Ok(NativeSession {
+            engine,
+            signature,
+            preferred_batch: preferred_batch.unwrap_or(DEFAULT_PREFERRED_BATCH),
+        })
+    }
+}
+
+impl InferenceSession for NativeSession {
+    fn engine(&self) -> Engine {
+        Engine::MicroFlow
+    }
+
+    fn signature(&self) -> &IoSignature {
+        &self.signature
+    }
+
+    fn preferred_batch(&self) -> usize {
+        self.preferred_batch
+    }
+
+    fn run_into(&mut self, input: &[i8], out: &mut [i8]) -> Result<()> {
+        check_single(input.len(), out.len(), &self.signature)?;
+        self.engine.predict_into(input, out);
+        Ok(())
+    }
+
+    fn buffer_ptrs(&self) -> Vec<usize> {
+        let (a, b, k) = self.engine.buffer_ptrs();
+        vec![a, b, k]
+    }
+}
+
+/// The TFLM-like interpreter behind the session surface.
+pub struct InterpSession {
+    interp: Interpreter,
+    signature: IoSignature,
+    preferred_batch: usize,
+}
+
+impl InterpSession {
+    pub(super) fn create(bytes: Vec<u8>, preferred_batch: Option<usize>) -> Result<InterpSession> {
+        let interp = Interpreter::new(&bytes, &OpResolver::with_all_kernels())?;
+        let signature = IoSignature::of_model(interp.model());
+        Ok(InterpSession {
+            interp,
+            signature,
+            preferred_batch: preferred_batch.unwrap_or(DEFAULT_PREFERRED_BATCH),
+        })
+    }
+}
+
+impl InferenceSession for InterpSession {
+    fn engine(&self) -> Engine {
+        Engine::Interp
+    }
+
+    fn signature(&self) -> &IoSignature {
+        &self.signature
+    }
+
+    fn preferred_batch(&self) -> usize {
+        self.preferred_batch
+    }
+
+    fn run_into(&mut self, input: &[i8], out: &mut [i8]) -> Result<()> {
+        check_single(input.len(), out.len(), &self.signature)?;
+        self.interp.invoke_into(input, out)
+    }
+
+    fn buffer_ptrs(&self) -> Vec<usize> {
+        let (arena, scratch) = self.interp.buffer_ptrs();
+        vec![arena, scratch]
+    }
+}
+
+/// The PJRT (JAX-AOT'd HLO) runtime behind the session surface.
+pub struct PjrtSession {
+    engine: PjrtEngine,
+    signature: IoSignature,
+    preferred_batch: usize,
+}
+
+// SAFETY: the xla crate's client/executable handles hold `Rc`s, making the
+// type !Send by default. A `PjrtSession` owns its client AND every
+// executable holding clones of that `Rc`; the whole object graph moves to
+// exactly one worker thread at `Server::start` and is never aliased across
+// threads afterwards (each worker owns its session exclusively; the trait
+// takes `&mut self`).
+unsafe impl Send for PjrtSession {}
+
+impl PjrtSession {
+    /// `model` is the caller's [`ModelSource`](super::ModelSource), parsed
+    /// — the signature comes from it, and it must agree with the `.mfb`
+    /// next to the HLO artifacts (the engine reads shapes/qparams there).
+    pub(super) fn create(
+        model: MfbModel,
+        artifacts: &Path,
+        name: &str,
+        preferred_batch: Option<usize>,
+    ) -> Result<PjrtSession> {
+        let engine = PjrtEngine::load(artifacts, name)?;
+        let signature = IoSignature::of_model(&model);
+        ensure!(
+            signature.input_len() == engine.input_len()
+                && signature.output_len() == engine.output_len()
+                && signature.input.qparams == engine.input_qparams
+                && signature.output.qparams == engine.output_qparams,
+            "model source disagrees with the PJRT artifacts for {name:?} in {}: \
+             source {}x{} {:?}/{:?} vs artifacts {}x{} {:?}/{:?}",
+            artifacts.display(),
+            signature.input_len(),
+            signature.output_len(),
+            signature.input.qparams,
+            signature.output.qparams,
+            engine.input_len(),
+            engine.output_len(),
+            engine.input_qparams,
+            engine.output_qparams,
+        );
+        let default_batch = engine.batch_sizes().last().copied().unwrap_or(1);
+        Ok(PjrtSession {
+            engine,
+            signature,
+            preferred_batch: preferred_batch.unwrap_or(default_batch),
+        })
+    }
+}
+
+impl InferenceSession for PjrtSession {
+    fn engine(&self) -> Engine {
+        Engine::Pjrt
+    }
+
+    fn signature(&self) -> &IoSignature {
+        &self.signature
+    }
+
+    fn preferred_batch(&self) -> usize {
+        self.preferred_batch
+    }
+
+    fn run_into(&mut self, input: &[i8], out: &mut [i8]) -> Result<()> {
+        check_single(input.len(), out.len(), &self.signature)?;
+        self.engine.execute_batch_into(input, 1, out)
+    }
+
+    /// True batched execution on the smallest AOT variant that fits.
+    fn run_batch_into(&mut self, inputs: &[i8], n: usize, out: &mut [i8]) -> Result<()> {
+        check_batch(inputs.len(), out.len(), n, self.signature.input_len(), self.signature.output_len())?;
+        self.engine.execute_batch_into(inputs, n, out)
+    }
+}

@@ -65,13 +65,18 @@ impl Args {
 pub const USAGE: &str = "\
 microflow — MicroFlow (Carnelos et al., 2024) reproduction CLI
 
+All inference runs through the session API (microflow::api): pick an
+engine, build a session, run. Engines: microflow | tflm | pjrt.
+
 USAGE:
   microflow models                         list model inventory (Table 3)
-  microflow predict <model> [--index N]    run one inference on a test sample
+  microflow predict <model> [--index N] [--engine E] [--paging]
+                                           run one inference on a test sample
   microflow verify  <model>                golden cross-check of all engines
   microflow deploy  <model> <mcu> [--paging] [--engine microflow|tflm]
                                            simulate a Table-4 deployment
-  microflow serve   <model> [--requests N] [--rate RPS] [--backend ...]
+  microflow serve   <model> [--requests N] [--rate RPS] [--backend E]
+                    [--replicas R] [--batch B] [--paging]
                                            serve synthetic load, print metrics
   microflow help                           this text
 

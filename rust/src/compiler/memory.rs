@@ -148,7 +148,7 @@ mod tests {
 
     #[test]
     fn conv_scratch_counts_toward_peak() {
-        let geo = ConvGeometry::new(8, 8, 4, 3, 3, 1, 1, Padding::Same);
+        let geo = ConvGeometry::new(8, 8, 4, 3, 3, 1, 1, Padding::Same).unwrap();
         let pc = PreComputed::fold(&[0], &[0], 36, 0.1, 0, 0.1, 0, 0.01, 0, 0.1, 0, FusedAct::None);
         let step = Step {
             kind: StepKind::Conv2D { geo, c_out: 1, filters: vec![0; 36], z_x: 0, pc },

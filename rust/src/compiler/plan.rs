@@ -224,7 +224,8 @@ impl CompiledModel {
                     if ci2 != c_in {
                         bail!("op #{oi}: Conv2D Cin mismatch {ci2} vs {c_in}");
                     }
-                    let geo = ConvGeometry::new(h, w, c_in, kh, kw, stride.0, stride.1, padding);
+                    let geo = ConvGeometry::new(h, w, c_in, kh, kw, stride.0, stride.1, padding)
+                        .with_context(|| format!("op #{oi} Conv2D"))?;
                     check_out_dims(oi, &y_t.dims, geo.out_h, geo.out_w, c_out)?;
                     let pc = preprocess::preprocess_conv2d(x_t, f_t, b_t, y_t, act)?;
                     let scratch = geo.k_h * geo.k_w * geo.in_c;
@@ -257,7 +258,8 @@ impl CompiledModel {
                     if c_out != c_in * mult {
                         bail!("op #{oi}: DW Cout {c_out} != Cin {c_in} * mult {mult}");
                     }
-                    let geo = ConvGeometry::new(h, w, c_in, kh, kw, stride.0, stride.1, padding);
+                    let geo = ConvGeometry::new(h, w, c_in, kh, kw, stride.0, stride.1, padding)
+                        .with_context(|| format!("op #{oi} DepthwiseConv2D"))?;
                     check_out_dims(oi, &y_t.dims, geo.out_h, geo.out_w, c_out)?;
                     let pc = preprocess::preprocess_depthwise(x_t, w_t, b_t, y_t, act)?;
                     let scratch = geo.k_h * geo.k_w * geo.in_c;
@@ -290,7 +292,8 @@ impl CompiledModel {
                     let [_, h, w, c] = x_t.dims[..] else {
                         bail!("op #{oi}: pool input must be [1,H,W,C]");
                     };
-                    let geo = ConvGeometry::new(h, w, c, filter.0, filter.1, stride.0, stride.1, padding);
+                    let geo = ConvGeometry::new(h, w, c, filter.0, filter.1, stride.0, stride.1, padding)
+                        .with_context(|| format!("op #{oi} AveragePool2D"))?;
                     check_out_dims(oi, &y_t.dims, geo.out_h, geo.out_w, c)?;
                     if padding == Padding::Same && (h % stride.0 != 0 || w % stride.1 != 0) {
                         // the Eq. 13 constant 1/(mn) assumes full windows

@@ -14,7 +14,7 @@ use super::server::Request;
 /// Batching policy.
 #[derive(Clone, Copy, Debug)]
 pub struct BatcherConfig {
-    /// Target batch size (usually the backend's `preferred_batch`).
+    /// Target batch size (usually the session's `preferred_batch`).
     pub max_batch: usize,
     /// Longest a request may wait for peers before the batch is cut.
     pub max_wait: Duration,

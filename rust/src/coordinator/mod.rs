@@ -5,8 +5,10 @@
 //! process that serves inference requests over it (and over the PJRT
 //! executables), vLLM-router style but sized for TinyML:
 //!
-//! * [`backend`] — the execution abstraction: native MicroFlow engine,
-//!   TFLM-like interpreter, or PJRT executable, all behind one trait;
+//! * execution — [`crate::api::Session`]: the unified session surface
+//!   (native MicroFlow engine, TFLM-like interpreter, or PJRT executable)
+//!   replaced the coordinator-private `Backend` trait; workers drive the
+//!   allocation-free `run_batch_into` hot path;
 //! * [`batcher`] — dynamic batching: requests accumulate until
 //!   `max_batch` or `max_wait` elapses, then execute as one batch
 //!   (fills the AOT'd batch variants of the PJRT path);
@@ -20,16 +22,17 @@
 //! * [`metrics`] — per-model latency (p50/p95/p99) and throughput
 //!   counters, reported by the e2e example (`examples/serve_keywords.rs`).
 
-pub mod backend;
 pub mod batcher;
 pub mod ingress;
 pub mod metrics;
 pub mod router;
 pub mod server;
 
-pub use backend::{Backend, InterpBackend, NativeBackend, PjrtBackend};
-pub use ingress::{Client, Ingress};
+// the execution surface lives in `crate::api`; re-exported here because
+// every server deployment needs it alongside the coordinator types
+pub use crate::api::{Engine, InferenceSession, Session, SessionBuilder};
 pub use batcher::BatcherConfig;
+pub use ingress::{Client, Ingress};
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use router::Router;
 pub use server::{Server, ServerConfig};

@@ -49,16 +49,12 @@ impl Router {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::compiler::plan::CompileOptions;
-    use crate::coordinator::backend::{Backend, NativeBackend};
+    use crate::api::Session;
     use crate::coordinator::server::ServerConfig;
-    use crate::format::mfb::MfbModel;
 
     fn tiny_server() -> Server {
-        let m = MfbModel::parse(&crate::format::mfb::tests::tiny_mfb()).unwrap();
-        let b: Vec<Box<dyn Backend>> =
-            vec![Box::new(NativeBackend::new(&m, CompileOptions::default()).unwrap())];
-        Server::start(b, ServerConfig::default()).unwrap()
+        let s = Session::builder(crate::format::mfb::tests::tiny_mfb()).build().unwrap();
+        Server::start(vec![s], ServerConfig::default()).unwrap()
     }
 
     #[test]

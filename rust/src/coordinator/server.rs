@@ -1,10 +1,12 @@
 //! Worker-pool serving loop (DESIGN.md S16).
 //!
-//! `Server` owns one worker thread per backend instance, fed by a bounded
-//! request channel (backpressure: `submit` blocks when the queue is full).
-//! Each worker runs the dynamic batcher, executes the batch on its backend
-//! and replies through per-request channels. std::thread + mpsc (no tokio
-//! offline — DESIGN.md §7).
+//! `Server` owns one worker thread per [`Session`] replica, fed by a
+//! bounded request channel (backpressure: `submit` blocks when the queue is
+//! full). Each worker runs the dynamic batcher and executes the batch with
+//! the session's allocation-free `run_batch_into` — the packed input and
+//! output staging buffers are reused across batches, so the steady-state
+//! request path allocates only the per-request reply vectors.
+//! std::thread + mpsc (no tokio offline — DESIGN.md §7).
 
 use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender};
 use std::sync::Arc;
@@ -13,9 +15,9 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use super::backend::Backend;
 use super::batcher::{next_batch, BatcherConfig};
 use super::metrics::Metrics;
+use crate::api::Session;
 use crate::tensor::quant::QParams;
 
 /// One in-flight request.
@@ -49,25 +51,38 @@ pub struct Server {
 }
 
 impl Server {
-    /// Start a server over a set of backend replicas (one worker each).
-    pub fn start(backends: Vec<Box<dyn Backend>>, cfg: ServerConfig) -> Result<Server> {
-        anyhow::ensure!(!backends.is_empty(), "need at least one backend");
-        let input_len = backends[0].input_len();
-        let input_qparams = backends[0].input_qparams();
-        let output_qparams = backends[0].output_qparams();
+    /// Start a server over a set of session replicas (one worker each).
+    ///
+    /// Replicas are built with [`crate::api::Session::builder`]; mixing
+    /// engines across replicas is allowed as long as they serve the same
+    /// model signature.
+    pub fn start(sessions: Vec<Session>, cfg: ServerConfig) -> Result<Server> {
+        anyhow::ensure!(!sessions.is_empty(), "need at least one session");
+        let sig = sessions[0].signature();
+        let input_len = sig.input_len();
+        let input_qparams = sig.input.qparams;
+        let output_qparams = sig.output.qparams;
+        for s in &sessions[1..] {
+            anyhow::ensure!(
+                s.signature() == sessions[0].signature(),
+                "replica signatures diverge: {:?} vs {:?}",
+                s.signature(),
+                sessions[0].signature()
+            );
+        }
         let metrics = Arc::new(Metrics::new());
         let (tx, rx) = sync_channel::<Request>(cfg.queue_depth);
         let shared_rx = Arc::new(std::sync::Mutex::new(rx));
         let mut workers = Vec::new();
-        for mut backend in backends {
+        for mut session in sessions {
             let rx = Arc::clone(&shared_rx);
             let metrics = Arc::clone(&metrics);
             let bcfg = BatcherConfig {
-                max_batch: cfg.batcher.max_batch.min(backend.preferred_batch().max(1)),
+                max_batch: cfg.batcher.max_batch.min(session.preferred_batch().max(1)),
                 max_wait: cfg.batcher.max_wait,
             };
             workers.push(std::thread::spawn(move || {
-                worker_loop(&mut *backend, &rx, &bcfg, &metrics);
+                worker_loop(&mut session, &rx, &bcfg, &metrics);
             }));
         }
         Ok(Server { tx, workers, metrics, input_len, input_qparams, output_qparams })
@@ -108,13 +123,16 @@ impl Server {
 }
 
 fn worker_loop(
-    backend: &mut dyn Backend,
+    session: &mut Session,
     rx: &std::sync::Mutex<Receiver<Request>>,
     cfg: &BatcherConfig,
     metrics: &Metrics,
 ) {
-    let ilen = backend.input_len();
-    let olen = backend.output_len();
+    let ilen = session.input_len();
+    let olen = session.output_len();
+    // staging buffers grow to the largest batch once, then are reused
+    let mut inputs: Vec<i8> = Vec::new();
+    let mut outputs: Vec<i8> = Vec::new();
     loop {
         // hold the lock only while assembling a batch; workers alternate
         let batch = {
@@ -124,12 +142,14 @@ fn worker_loop(
         let Some(batch) = batch else { return };
         let n = batch.len();
         metrics.record_batch(n);
-        let mut inputs = Vec::with_capacity(n * ilen);
+        inputs.clear();
         for r in &batch {
             inputs.extend_from_slice(&r.input);
         }
-        match backend.execute(&inputs, n) {
-            Ok(outputs) => {
+        outputs.resize(n * olen, 0);
+        debug_assert_eq!(inputs.len(), n * ilen);
+        match session.run_batch_into(&inputs, n, &mut outputs[..n * olen]) {
+            Ok(()) => {
                 for (i, r) in batch.into_iter().enumerate() {
                     let out = outputs[i * olen..(i + 1) * olen].to_vec();
                     metrics.record(r.enqueued.elapsed());
@@ -150,19 +170,18 @@ fn worker_loop(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::compiler::plan::CompileOptions;
-    use crate::coordinator::backend::NativeBackend;
-    use crate::format::mfb::MfbModel;
+    use crate::api::{Engine, Session};
 
     fn tiny_server(replicas: usize) -> Server {
-        let m = MfbModel::parse(&crate::format::mfb::tests::tiny_mfb()).unwrap();
-        let backends: Vec<Box<dyn Backend>> = (0..replicas)
+        let sessions: Vec<Session> = (0..replicas)
             .map(|_| {
-                Box::new(NativeBackend::new(&m, CompileOptions::default()).unwrap())
-                    as Box<dyn Backend>
+                Session::builder(crate::format::mfb::tests::tiny_mfb())
+                    .engine(Engine::MicroFlow)
+                    .build()
+                    .unwrap()
             })
             .collect();
-        Server::start(backends, ServerConfig::default()).unwrap()
+        Server::start(sessions, ServerConfig::default()).unwrap()
     }
 
     #[test]
@@ -199,6 +218,24 @@ mod tests {
     fn rejects_wrong_input_length() {
         let s = tiny_server(1);
         assert!(s.submit(vec![1, 2, 3]).is_err());
+        s.shutdown();
+    }
+
+    #[test]
+    fn mixed_engine_replicas_serve_together() {
+        let bytes = crate::format::mfb::tests::tiny_mfb();
+        let sessions = vec![
+            Session::builder(bytes.clone()).engine(Engine::MicroFlow).build().unwrap(),
+            Session::builder(bytes).engine(Engine::Interp).build().unwrap(),
+        ];
+        let s = Server::start(sessions, ServerConfig::default()).unwrap();
+        for _ in 0..20 {
+            let out = s.infer(vec![3, 1]).unwrap();
+            // engines agree within ±1 (paper Sec. 6.2.1)
+            for (got, want) in out.iter().zip(&[2i8, 0, 5]) {
+                assert!((*got as i32 - *want as i32).abs() <= 1, "{out:?}");
+            }
+        }
         s.shutdown();
     }
 }

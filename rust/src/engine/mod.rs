@@ -25,6 +25,11 @@ use crate::tensor::quant::QParams;
 ///
 /// Construction runs the full compiler pipeline; [`MicroFlowEngine::predict`]
 /// is the pure runtime of the paper — kernels plus folded constants only.
+///
+/// This is the engine-internal layer: serving code should construct it
+/// through [`crate::api::Session::builder`] (with
+/// [`crate::api::Engine::MicroFlow`]), which wraps it behind the uniform
+/// [`crate::api::InferenceSession`] surface.
 pub struct MicroFlowEngine {
     compiled: CompiledModel,
     scratch: std::cell::RefCell<Scratch>,
@@ -62,6 +67,12 @@ impl MicroFlowEngine {
 
     pub fn output_qparams(&self) -> QParams {
         self.compiled.output_qparams
+    }
+
+    /// Base addresses of the static buffers — pointer-stability
+    /// diagnostics for the no-allocation conformance tests.
+    pub fn buffer_ptrs(&self) -> (usize, usize, usize) {
+        self.scratch.borrow().buf_ptrs()
     }
 
     /// Quantized inference: int8 in, int8 out, written into `out`.

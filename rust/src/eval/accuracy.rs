@@ -32,6 +32,18 @@ pub trait QuantPredictor {
     }
 }
 
+impl QuantPredictor for crate::api::Session {
+    fn input_qparams(&self) -> QParams {
+        crate::api::Session::input_qparams(self)
+    }
+    fn output_qparams(&self) -> QParams {
+        crate::api::Session::output_qparams(self)
+    }
+    fn predict_q(&mut self, input_q: &[i8]) -> Result<Vec<i8>> {
+        self.run(input_q)
+    }
+}
+
 impl QuantPredictor for crate::engine::MicroFlowEngine {
     fn input_qparams(&self) -> QParams {
         crate::engine::MicroFlowEngine::input_qparams(self)

@@ -1,0 +1,244 @@
+//! MFB container writer — the exact inverse of [`super::mfb::MfbModel::parse`].
+//!
+//! Two consumers:
+//!
+//! * [`crate::api::ModelSource::Parsed`] — the interpreter parses the
+//!   container itself (that runtime parsing *is* the TFLM cost being
+//!   modeled), so an in-memory `MfbModel` handed to an interp session is
+//!   serialized through here first;
+//! * synthetic-model tests — the cross-engine conformance suite generates
+//!   randomized FC/Conv chains in memory and feeds every engine the same
+//!   bytes, with no build-time artifacts needed.
+//!
+//! Layout is documented in [`super::mfb`]; any change there must land here
+//! in the same commit (guarded by the round-trip tests below).
+
+use anyhow::{Context, Result};
+
+use crate::format::mfb::{MfbModel, OpCode, OpOptions, Operator, Padding, TensorDef};
+use crate::tensor::DType;
+
+/// The writer refuses (rather than truncates) values that don't fit the
+/// container's narrow fields — a truncated stride or wrapped string
+/// length would desynchronize the whole byte stream on reparse.
+fn narrow_u8(v: usize, what: &str) -> Result<u8> {
+    u8::try_from(v).ok().with_context(|| format!("{what} {v} exceeds the container's u8 field"))
+}
+
+fn narrow_u16(v: usize, what: &str) -> Result<u16> {
+    u16::try_from(v).ok().with_context(|| format!("{what} {v} exceeds the container's u16 field"))
+}
+
+fn narrow_u32(v: usize, what: &str) -> Result<u32> {
+    u32::try_from(v).ok().with_context(|| format!("{what} {v} exceeds the container's u32 field"))
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) -> Result<()> {
+    buf.extend_from_slice(&narrow_u16(s.len(), "string length")?.to_le_bytes());
+    buf.extend_from_slice(s.as_bytes());
+    Ok(())
+}
+
+fn dtype_code(d: DType) -> u8 {
+    match d {
+        DType::I8 => 0,
+        DType::I32 => 1,
+        DType::F32 => 2,
+    }
+}
+
+fn padding_code(p: Padding) -> u8 {
+    match p {
+        Padding::Same => 0,
+        Padding::Valid => 1,
+    }
+}
+
+fn put_tensor(buf: &mut Vec<u8>, t: &TensorDef) -> Result<()> {
+    put_str(buf, &t.name)?;
+    buf.push(dtype_code(t.dtype));
+    buf.push(narrow_u8(t.dims.len(), "tensor rank")?);
+    for &d in &t.dims {
+        buf.extend_from_slice(&narrow_u32(d, "tensor dim")?.to_le_bytes());
+    }
+    buf.extend_from_slice(&t.qparams.scale.to_le_bytes());
+    buf.extend_from_slice(&t.qparams.zero_point.to_le_bytes());
+    buf.extend_from_slice(&(t.data.len() as u64).to_le_bytes());
+    buf.extend_from_slice(&t.data);
+    Ok(())
+}
+
+fn options_bytes(options: &OpOptions) -> Result<Vec<u8>> {
+    let mut b = Vec::new();
+    match options {
+        OpOptions::FullyConnected { fused_act } => b.push(*fused_act),
+        OpOptions::Conv2D { stride, padding, fused_act } => {
+            b.push(narrow_u8(stride.0, "stride")?);
+            b.push(narrow_u8(stride.1, "stride")?);
+            b.push(padding_code(*padding));
+            b.push(*fused_act);
+        }
+        OpOptions::DepthwiseConv2D { stride, padding, fused_act, depth_multiplier } => {
+            b.push(narrow_u8(stride.0, "stride")?);
+            b.push(narrow_u8(stride.1, "stride")?);
+            b.push(padding_code(*padding));
+            b.push(*fused_act);
+            b.extend_from_slice(&narrow_u32(*depth_multiplier, "depth multiplier")?.to_le_bytes());
+        }
+        OpOptions::AveragePool2D { filter, stride, padding, fused_act } => {
+            b.push(narrow_u8(filter.0, "pool filter")?);
+            b.push(narrow_u8(filter.1, "pool filter")?);
+            b.push(narrow_u8(stride.0, "stride")?);
+            b.push(narrow_u8(stride.1, "stride")?);
+            b.push(padding_code(*padding));
+            b.push(*fused_act);
+        }
+        OpOptions::Reshape { dims } => {
+            b.push(narrow_u8(dims.len(), "reshape rank")?);
+            for &d in dims {
+                b.extend_from_slice(&narrow_u32(d, "reshape dim")?.to_le_bytes());
+            }
+        }
+        OpOptions::Softmax { beta } => b.extend_from_slice(&beta.to_le_bytes()),
+        OpOptions::None => {}
+    }
+    Ok(b)
+}
+
+fn put_op(buf: &mut Vec<u8>, op: &Operator) -> Result<()> {
+    buf.push(match op.opcode {
+        OpCode::FullyConnected => 0,
+        OpCode::Conv2D => 1,
+        OpCode::DepthwiseConv2D => 2,
+        OpCode::AveragePool2D => 3,
+        OpCode::Reshape => 4,
+        OpCode::Softmax => 5,
+        OpCode::Relu => 6,
+        OpCode::Relu6 => 7,
+    });
+    buf.extend_from_slice(&op.version.to_le_bytes());
+    buf.push(narrow_u8(op.inputs.len(), "operator input count")?);
+    for &idx in &op.inputs {
+        buf.extend_from_slice(&idx.to_le_bytes());
+    }
+    buf.push(narrow_u8(op.outputs.len(), "operator output count")?);
+    for &idx in &op.outputs {
+        buf.extend_from_slice(&idx.to_le_bytes());
+    }
+    let opts = options_bytes(&op.options)?;
+    buf.extend_from_slice(&narrow_u16(opts.len(), "options length")?.to_le_bytes());
+    buf.extend_from_slice(&opts);
+    Ok(())
+}
+
+/// Serialize a model to MFB container bytes (reparseable by
+/// [`MfbModel::parse`]; `file_bytes` of the round-tripped model reflects
+/// the new buffer, everything else is preserved). Errors if any field
+/// exceeds its narrow container encoding.
+pub fn serialize(model: &MfbModel) -> Result<Vec<u8>> {
+    let mut buf = Vec::with_capacity(model.file_bytes.max(256));
+    buf.extend_from_slice(b"MFB1");
+    buf.extend_from_slice(&model.version.to_le_bytes());
+    put_str(&mut buf, &model.producer)?;
+
+    buf.extend_from_slice(&narrow_u32(model.tensors.len(), "tensor count")?.to_le_bytes());
+    for t in &model.tensors {
+        put_tensor(&mut buf, t)?;
+    }
+
+    buf.extend_from_slice(&narrow_u32(model.operators.len(), "operator count")?.to_le_bytes());
+    for op in &model.operators {
+        put_op(&mut buf, op)?;
+    }
+
+    buf.push(narrow_u8(model.graph_inputs.len(), "graph input count")?);
+    for &idx in &model.graph_inputs {
+        buf.extend_from_slice(&(idx as i32).to_le_bytes());
+    }
+    buf.push(narrow_u8(model.graph_outputs.len(), "graph output count")?);
+    for &idx in &model.graph_outputs {
+        buf.extend_from_slice(&(idx as i32).to_le_bytes());
+    }
+    put_str(&mut buf, &model.metadata)?;
+    Ok(buf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::format::mfb::tests::tiny_mfb;
+
+    #[test]
+    fn serializer_is_byte_identical_on_the_tiny_model() {
+        // the writer inverts the parser exactly, not just semantically
+        let bytes = tiny_mfb();
+        let m = MfbModel::parse(&bytes).unwrap();
+        assert_eq!(serialize(&m).unwrap(), bytes);
+    }
+
+    #[test]
+    fn round_trip_preserves_semantics() {
+        let m = MfbModel::parse(&tiny_mfb()).unwrap();
+        let again = MfbModel::parse(&serialize(&m).unwrap()).unwrap();
+        assert_eq!(again.producer, m.producer);
+        assert_eq!(again.tensors.len(), m.tensors.len());
+        assert_eq!(again.operators[0].options, m.operators[0].options);
+        assert_eq!(again.graph_inputs, m.graph_inputs);
+        assert_eq!(again.graph_outputs, m.graph_outputs);
+        assert_eq!(again.tensors[1].data, m.tensors[1].data);
+        assert_eq!(again.input_qparams(), m.input_qparams());
+    }
+
+    #[test]
+    fn every_option_variant_round_trips() {
+        for options in [
+            OpOptions::FullyConnected { fused_act: 2 },
+            OpOptions::Conv2D { stride: (2, 3), padding: Padding::Valid, fused_act: 1 },
+            OpOptions::DepthwiseConv2D {
+                stride: (1, 2),
+                padding: Padding::Same,
+                fused_act: 0,
+                depth_multiplier: 4,
+            },
+            OpOptions::AveragePool2D {
+                filter: (2, 2),
+                stride: (2, 2),
+                padding: Padding::Valid,
+                fused_act: 0,
+            },
+            OpOptions::Reshape { dims: vec![1, 4, 4, 2] },
+            OpOptions::Softmax { beta: 1.5 },
+        ] {
+            let opcode = match options {
+                OpOptions::FullyConnected { .. } => OpCode::FullyConnected,
+                OpOptions::Conv2D { .. } => OpCode::Conv2D,
+                OpOptions::DepthwiseConv2D { .. } => OpCode::DepthwiseConv2D,
+                OpOptions::AveragePool2D { .. } => OpCode::AveragePool2D,
+                OpOptions::Reshape { .. } => OpCode::Reshape,
+                OpOptions::Softmax { .. } => OpCode::Softmax,
+                OpOptions::None => OpCode::Relu,
+            };
+            let raw = options_bytes(&options).unwrap();
+            let parsed = crate::format::mfb::parse_options_for_test(opcode, &raw).unwrap();
+            assert_eq!(parsed, options);
+        }
+    }
+
+    #[test]
+    fn out_of_range_fields_error_instead_of_truncating() {
+        // a stride of 256 would wrap to 0 under a silent `as u8` cast and
+        // desynchronize the stream; the writer must refuse it
+        let mut m = MfbModel::parse(&tiny_mfb()).unwrap();
+        m.operators[0].options = OpOptions::Conv2D {
+            stride: (256, 1),
+            padding: Padding::Valid,
+            fused_act: 0,
+        };
+        let err = serialize(&m).unwrap_err();
+        assert!(err.to_string().contains("u8"), "{err:#}");
+
+        let mut m = MfbModel::parse(&tiny_mfb()).unwrap();
+        m.metadata = "x".repeat(usize::from(u16::MAX) + 1);
+        assert!(serialize(&m).is_err());
+    }
+}

@@ -105,10 +105,18 @@ impl TensorDef {
 
     /// Payload reinterpreted as int8 (weights).
     pub fn data_i8(&self) -> Result<Vec<i8>> {
+        Ok(self.data_i8_ref()?.to_vec())
+    }
+
+    /// Borrowed int8 view of the payload — no copy, so per-invoke weight
+    /// reads (the interpreter's "weights stay in Flash" story) don't
+    /// allocate.
+    pub fn data_i8_ref(&self) -> Result<&[i8]> {
         if self.dtype != DType::I8 {
             bail!("tensor {} is not i8", self.name);
         }
-        Ok(self.data.iter().map(|&b| b as i8).collect())
+        // SAFETY: i8 and u8 have identical size, alignment and validity.
+        Ok(unsafe { std::slice::from_raw_parts(self.data.as_ptr() as *const i8, self.data.len()) })
     }
 
     /// Payload reinterpreted as int32 (biases).
@@ -349,6 +357,13 @@ fn parse_options(opcode: OpCode, raw: &[u8]) -> Result<OpOptions> {
         OpCode::Softmax => OpOptions::Softmax { beta: r.f32()? },
         OpCode::Relu | OpCode::Relu6 => OpOptions::None,
     })
+}
+
+/// Test-only access to the private options parser (the writer's round-trip
+/// tests exercise every `OpOptions` variant against it).
+#[cfg(test)]
+pub(crate) fn parse_options_for_test(opcode: OpCode, raw: &[u8]) -> Result<OpOptions> {
+    parse_options(opcode, raw)
 }
 
 #[cfg(test)]

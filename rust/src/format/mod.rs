@@ -1,14 +1,18 @@
 //! Binary container formats (DESIGN.md S4, §6): readers for the three
 //! build-time artifacts produced by `python/compile/export_mfb.py`.
 //!
-//! * [`mfb`]    — the MFB model container (TFLite-equivalent; byte layout
+//! * [`mfb`]     — the MFB model container (TFLite-equivalent; byte layout
 //!   documented in the Python exporter and mirrored in `mfb::MfbModel`);
-//! * [`mds`]    — evaluation datasets;
-//! * [`golden`] — int8 golden input/output pairs from the JAX oracle.
+//! * [`builder`] — the MFB writer (inverse of the reader; used by
+//!   `api::ModelSource::Parsed` and the synthetic-model test suites);
+//! * [`mds`]     — evaluation datasets;
+//! * [`golden`]  — int8 golden input/output pairs from the JAX oracle.
 //!
 //! All formats are little-endian. Any layout change must be made in both
-//! the exporter and these readers, bumping the embedded version field.
+//! the exporter and these readers/writers, bumping the embedded version
+//! field.
 
+pub mod builder;
 pub mod golden;
 pub mod mds;
 pub mod mfb;

@@ -108,8 +108,22 @@ impl Interpreter {
     /// Run one inference (TFLM's `Invoke`): per-node dispatch through the
     /// registered kernel function pointers, reading/writing arena slices.
     pub fn invoke(&mut self, input: &[i8]) -> Result<Vec<i8>> {
+        let mut out = vec![0i8; self.output_len()];
+        self.invoke_into(input, &mut out)?;
+        Ok(out)
+    }
+
+    /// Allocation-free `Invoke`: the result is copied from the arena into
+    /// `out`. This is the hot path the batched serving layers use —
+    /// weights are borrowed from the resident container and prepared
+    /// per-node state (bias, multipliers) was cached at `AllocateTensors`
+    /// time, so no heap allocation happens here.
+    pub fn invoke_into(&mut self, input: &[i8], out: &mut [i8]) -> Result<()> {
         if input.len() != self.input_len() {
             bail!("input length {} != {}", input.len(), self.input_len());
+        }
+        if out.len() != self.output_len() {
+            bail!("output length {} != {}", out.len(), self.output_len());
         }
         let in_idx = self.model.graph_inputs[0];
         let off = self.plan.offset_of(in_idx).context("input tensor not in arena")?;
@@ -129,8 +143,14 @@ impl Interpreter {
 
         let out_idx = self.model.graph_outputs[0];
         let off = self.plan.offset_of(out_idx).context("output tensor not in arena")?;
-        let n = self.output_len();
-        Ok(self.arena[off..off + n].to_vec())
+        out.copy_from_slice(&self.arena[off..off + out.len()]);
+        Ok(())
+    }
+
+    /// Arena + scratch base addresses — pointer-stability diagnostics for
+    /// the no-allocation conformance tests.
+    pub fn buffer_ptrs(&self) -> (usize, usize) {
+        (self.arena.as_ptr() as usize, self.scratch.as_ptr() as usize)
     }
 
     /// Float convenience (same contract as the MicroFlow engine).

@@ -11,6 +11,11 @@
 //! model uses it or not (the Flash story of Fig. 9/10), options are
 //! re-read from the container, and the arithmetic applies zero points per
 //! element with no folded constants.
+//!
+//! `invoke` is allocation-free, as TFLM's is: weights are *borrowed* from
+//! the resident container (TFLM reads them from Flash in place) and the
+//! bias is unpacked once at `Prepare` into [`NodeData`] (TFLM kernels
+//! likewise stash prepared per-channel data in their node userdata).
 
 use anyhow::{bail, Context, Result};
 
@@ -34,6 +39,9 @@ pub enum NodeData {
         act_min: i8,
         act_max: i8,
         scratch: usize,
+        /// Bias unpacked from the container at prepare time (invoke must
+        /// not allocate).
+        bias: Vec<i32>,
     },
     Conv {
         geo: ConvGeometry,
@@ -46,6 +54,7 @@ pub enum NodeData {
         act_min: i8,
         act_max: i8,
         scratch: usize,
+        bias: Vec<i32>,
     },
     Pool {
         geo: ConvGeometry,
@@ -175,6 +184,7 @@ fn prepare_fc(model: &MfbModel, oi: usize) -> Result<NodeData> {
         act_min,
         act_max,
         scratch: 0,
+        bias: model.tensors[op.input(2)?].data_i32()?,
     })
 }
 
@@ -186,16 +196,15 @@ fn invoke_fc(
     arena: &mut [i8],
     _scratch: &mut [i8],
 ) -> Result<()> {
-    let NodeData::Fc { k, n, z_x, z_w, mult, z_y, act_min, act_max, .. } = data else {
+    let NodeData::Fc { k, n, z_x, z_w, mult, z_y, act_min, act_max, bias, .. } = data else {
         bail!("node data mismatch")
     };
     let op = &model.operators[oi];
-    // weights/bias read from the resident container every invoke
-    let w = model.tensors[op.input(1)?].data_i8()?;
-    let b = model.tensors[op.input(2)?].data_i32()?;
+    // weights read (borrowed) from the resident container every invoke
+    let w = model.tensors[op.input(1)?].data_i8_ref()?;
     let (x, y) = arena_io(model, oi, plan, arena)?;
     fully_connected::fully_connected_interp(
-        x, &w, &b, *k, *n, *z_x, *z_w, *mult, *z_y, *act_min, *act_max, y,
+        x, w, bias, *k, *n, *z_x, *z_w, *mult, *z_y, *act_min, *act_max, y,
     );
     Ok(())
 }
@@ -214,7 +223,7 @@ fn prepare_conv(model: &MfbModel, oi: usize) -> Result<NodeData> {
     };
     let [c_out, kh, kw, c_in] = f_t.dims[..] else { bail!("Conv2D filters must be 4-D") };
     let [_, h, w, _] = x_t.dims[..] else { bail!("Conv2D input must be [1,H,W,C]") };
-    let geo = ConvGeometry::new(h, w, c_in, kh, kw, stride.0, stride.1, padding);
+    let geo = ConvGeometry::new(h, w, c_in, kh, kw, stride.0, stride.1, padding)?;
     let real = (x_t.qparams.scale as f64 * f_t.qparams.scale as f64) / y_t.qparams.scale as f64;
     let act = fused_act(model, oi)?;
     let (act_min, act_max) = act.bounds(y_t.qparams.scale, y_t.qparams.zero_point);
@@ -229,6 +238,7 @@ fn prepare_conv(model: &MfbModel, oi: usize) -> Result<NodeData> {
         act_min,
         act_max,
         scratch: kh * kw * c_in,
+        bias: model.tensors[op.input(2)?].data_i32()?,
     })
 }
 
@@ -242,7 +252,7 @@ fn prepare_dwconv(model: &MfbModel, oi: usize) -> Result<NodeData> {
     };
     let [_, kh, kw, c_out] = w_t.dims[..] else { bail!("DW filters must be [1,KH,KW,Cout]") };
     let [_, h, w, c_in] = x_t.dims[..] else { bail!("DW input must be [1,H,W,C]") };
-    let geo = ConvGeometry::new(h, w, c_in, kh, kw, stride.0, stride.1, padding);
+    let geo = ConvGeometry::new(h, w, c_in, kh, kw, stride.0, stride.1, padding)?;
     let real = (x_t.qparams.scale as f64 * w_t.qparams.scale as f64) / y_t.qparams.scale as f64;
     let act = fused_act(model, oi)?;
     let (act_min, act_max) = act.bounds(y_t.qparams.scale, y_t.qparams.zero_point);
@@ -257,6 +267,7 @@ fn prepare_dwconv(model: &MfbModel, oi: usize) -> Result<NodeData> {
         act_min,
         act_max,
         scratch: kh * kw * c_in,
+        bias: model.tensors[op.input(2)?].data_i32()?,
     })
 }
 
@@ -269,25 +280,24 @@ fn invoke_conv(
     scratch: &mut [i8],
 ) -> Result<()> {
     let NodeData::Conv {
-        geo, c_out, depth_multiplier, z_x, z_w, mult, z_y, act_min, act_max, scratch: slen,
+        geo, c_out, depth_multiplier, z_x, z_w, mult, z_y, act_min, act_max, scratch: slen, bias,
     } = data
     else {
         bail!("node data mismatch")
     };
     let op = &model.operators[oi];
-    let filters = model.tensors[op.input(1)?].data_i8()?;
-    let bias = model.tensors[op.input(2)?].data_i32()?;
+    let filters = model.tensors[op.input(1)?].data_i8_ref()?;
     let (x, y) = arena_io(model, oi, plan, arena)?;
     let view = &mut scratch[..*slen];
     if *depth_multiplier == 0 {
         conv2d::conv2d_interp(
-            x, &filters, &bias, geo, *c_out, *z_x, *z_w, *mult, *z_y, *act_min, *act_max, view, y,
+            x, filters, bias, geo, *c_out, *z_x, *z_w, *mult, *z_y, *act_min, *act_max, view, y,
         );
     } else {
         depthwise_conv2d::depthwise_conv2d_interp(
             x,
-            &filters,
-            &bias,
+            filters,
+            bias,
             geo,
             *depth_multiplier,
             *z_x,
@@ -315,7 +325,7 @@ fn prepare_pool(model: &MfbModel, oi: usize) -> Result<NodeData> {
         bail!("bad AveragePool2D options")
     };
     let [_, h, w, c] = x_t.dims[..] else { bail!("pool input must be [1,H,W,C]") };
-    let geo = ConvGeometry::new(h, w, c, filter.0, filter.1, stride.0, stride.1, padding);
+    let geo = ConvGeometry::new(h, w, c, filter.0, filter.1, stride.0, stride.1, padding)?;
     let act = fused_act(model, oi)?;
     let (act_min, act_max) = act.bounds(y_t.qparams.scale, y_t.qparams.zero_point);
     Ok(NodeData::Pool {

@@ -107,7 +107,7 @@ mod tests {
 
     #[test]
     fn constant_input_pools_to_itself_when_qparams_match() {
-        let geo = ConvGeometry::new(4, 4, 2, 2, 2, 2, 2, Padding::Valid);
+        let geo = ConvGeometry::new(4, 4, 2, 2, 2, 2, 2, Padding::Valid).unwrap();
         let input = vec![42i8; 4 * 4 * 2];
         let mut view = vec![0i8; 2 * 2 * 2];
         let mut out = vec![0i8; 2 * 2 * 2];
@@ -121,7 +121,7 @@ mod tests {
     #[test]
     fn mean_is_per_channel() {
         // 2x2 window, 2 channels: ch0 = [0,2,4,6] -> 3; ch1 = [10,10,10,10] -> 10
-        let geo = ConvGeometry::new(2, 2, 2, 2, 2, 2, 2, Padding::Valid);
+        let geo = ConvGeometry::new(2, 2, 2, 2, 2, 2, 2, Padding::Valid).unwrap();
         let input = vec![0i8, 10, 2, 10, 4, 10, 6, 10];
         let mut view = vec![0i8; 8];
         let mut out = vec![0i8; 2];
@@ -132,7 +132,7 @@ mod tests {
     #[test]
     fn matches_ref_formula_with_scale_change() {
         let mut rng = Prng::new(2);
-        let geo = ConvGeometry::new(6, 6, 3, 3, 3, 3, 3, Padding::Valid);
+        let geo = ConvGeometry::new(6, 6, 3, 3, 3, 3, 3, Padding::Valid).unwrap();
         let input = rng.i8_vec(6 * 6 * 3);
         let (s_x, z_x, s_y, z_y) = (0.05f32, 4, 0.07f32, -3);
         let ratio = s_x / s_y;
@@ -161,7 +161,7 @@ mod tests {
 
     #[test]
     fn interp_rounds_negative_sums_away_from_zero() {
-        let geo = ConvGeometry::new(2, 2, 1, 2, 2, 2, 2, Padding::Valid);
+        let geo = ConvGeometry::new(2, 2, 1, 2, 2, 2, 2, Padding::Valid).unwrap();
         let input = vec![-1i8, -1, -1, -2]; // sum -5, avg -1.25 -> -1
         let mut view = vec![0i8; 4];
         let mut out = vec![0i8; 1];

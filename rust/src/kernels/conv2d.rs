@@ -159,7 +159,7 @@ mod tests {
             &[(Padding::Same, 1), (Padding::Same, 2), (Padding::Valid, 1), (Padding::Valid, 2)]
         {
             let (h, w, cin, cout, k) = (7, 6, 3, 4, 3);
-            let geo = ConvGeometry::new(h, w, cin, k, k, stride, stride, padding);
+            let geo = ConvGeometry::new(h, w, cin, k, k, stride, stride, padding).unwrap();
             let input = rng.i8_vec(h * w * cin);
             let filters = rng.i8_vec(cout * k * k * cin);
             let bias = rng.i32_vec(cout, -1000, 1000);
@@ -185,7 +185,7 @@ mod tests {
     fn interp_within_one_unit() {
         let mut rng = Prng::new(8);
         let (h, w, cin, cout, k) = (6, 6, 2, 3, 3);
-        let geo = ConvGeometry::new(h, w, cin, k, k, 1, 1, Padding::Same);
+        let geo = ConvGeometry::new(h, w, cin, k, k, 1, 1, Padding::Same).unwrap();
         let input = rng.i8_vec(h * w * cin);
         let filters = rng.i8_vec(cout * k * k * cin);
         let bias = rng.i32_vec(cout, -500, 500);
@@ -215,7 +215,7 @@ mod tests {
         // irrelevant, each output pixel independent
         let mut rng = Prng::new(4);
         let (h, w, cin, cout) = (3, 3, 4, 5);
-        let geo = ConvGeometry::new(h, w, cin, 1, 1, 1, 1, Padding::Same);
+        let geo = ConvGeometry::new(h, w, cin, 1, 1, 1, 1, Padding::Same).unwrap();
         assert_eq!((geo.out_h, geo.out_w), (3, 3));
         let input = rng.i8_vec(h * w * cin);
         let filters = rng.i8_vec(cout * cin);

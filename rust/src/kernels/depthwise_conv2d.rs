@@ -172,7 +172,7 @@ mod tests {
         for &(mult, stride) in &[(1usize, 1usize), (2, 1), (8, 2), (1, 2)] {
             let (h, w, cin, k) = (8, 7, 3, 3);
             let cout = cin * mult;
-            let geo = ConvGeometry::new(h, w, cin, k, k, stride, stride, Padding::Same);
+            let geo = ConvGeometry::new(h, w, cin, k, k, stride, stride, Padding::Same).unwrap();
             let input = rng.i8_vec(h * w * cin);
             let filters = rng.i8_vec(k * k * cout);
             let bias = rng.i32_vec(cout, -800, 800);
@@ -200,7 +200,7 @@ mod tests {
         let mut rng = Prng::new(33);
         let (h, w, cin, k, mult) = (6, 6, 4, 3, 2);
         let cout = cin * mult;
-        let geo = ConvGeometry::new(h, w, cin, k, k, 1, 1, Padding::Valid);
+        let geo = ConvGeometry::new(h, w, cin, k, k, 1, 1, Padding::Valid).unwrap();
         let input = rng.i8_vec(h * w * cin);
         let filters = rng.i8_vec(k * k * cout);
         let bias = rng.i32_vec(cout, -300, 300);
@@ -225,7 +225,7 @@ mod tests {
     #[test]
     fn speech_layer_geometry() {
         // the TinyConv depthwise layer: 49x40x1, k 10x8, s2, mult 8
-        let geo = ConvGeometry::new(49, 40, 1, 10, 8, 2, 2, Padding::Same);
+        let geo = ConvGeometry::new(49, 40, 1, 10, 8, 2, 2, Padding::Same).unwrap();
         assert_eq!((geo.out_h, geo.out_w), (25, 20));
         let mut rng = Prng::new(1);
         let input = rng.i8_vec(49 * 40);

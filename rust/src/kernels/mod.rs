@@ -30,14 +30,33 @@ pub mod view;
 
 pub use view::ConvGeometry;
 
+use anyhow::{bail, ensure, Result};
+
 use crate::format::mfb::Padding;
 
 /// Output spatial dims for SAME/VALID padding (TFLite convention; mirrors
 /// `ref.out_dims`).
-pub fn out_dims(h: usize, w: usize, kh: usize, kw: usize, sh: usize, sw: usize, padding: Padding) -> (usize, usize) {
+///
+/// Malformed geometry is an error, never a panic: a VALID kernel larger
+/// than its input used to underflow-panic here on untrusted containers;
+/// it now surfaces as a compile/prepare-time `Err`.
+pub fn out_dims(
+    h: usize,
+    w: usize,
+    kh: usize,
+    kw: usize,
+    sh: usize,
+    sw: usize,
+    padding: Padding,
+) -> Result<(usize, usize)> {
+    ensure!(sh > 0 && sw > 0, "stride {sh}x{sw} must be nonzero");
+    ensure!(kh > 0 && kw > 0, "kernel {kh}x{kw} must be nonzero");
     match padding {
-        Padding::Same => (h.div_ceil(sh), w.div_ceil(sw)),
-        Padding::Valid => ((h - kh) / sh + 1, (w - kw) / sw + 1),
+        Padding::Same => Ok((h.div_ceil(sh), w.div_ceil(sw))),
+        Padding::Valid => match (h.checked_sub(kh), w.checked_sub(kw)) {
+            (Some(dh), Some(dw)) => Ok((dh / sh + 1, dw / sw + 1)),
+            _ => bail!("VALID padding: kernel {kh}x{kw} exceeds input {h}x{w}"),
+        },
     }
 }
 
@@ -48,9 +67,29 @@ mod tests {
     #[test]
     fn out_dims_same_vs_valid() {
         // 49x40, k 10x8, s 2x2 — the speech model's depthwise layer
-        assert_eq!(out_dims(49, 40, 10, 8, 2, 2, Padding::Same), (25, 20));
-        assert_eq!(out_dims(49, 40, 10, 8, 2, 2, Padding::Valid), (20, 17));
+        assert_eq!(out_dims(49, 40, 10, 8, 2, 2, Padding::Same).unwrap(), (25, 20));
+        assert_eq!(out_dims(49, 40, 10, 8, 2, 2, Padding::Valid).unwrap(), (20, 17));
         // 96x96, k 3x3, s 2x2 — the person model's first conv
-        assert_eq!(out_dims(96, 96, 3, 3, 2, 2, Padding::Same), (48, 48));
+        assert_eq!(out_dims(96, 96, 3, 3, 2, 2, Padding::Same).unwrap(), (48, 48));
+    }
+
+    #[test]
+    fn oversized_valid_kernel_is_an_error_not_a_panic() {
+        // regression: kh > h used to underflow-panic
+        let e = out_dims(5, 5, 10, 3, 1, 1, Padding::Valid).unwrap_err();
+        assert!(e.to_string().contains("exceeds input"), "{e}");
+        // kw > w independently
+        assert!(out_dims(5, 5, 3, 10, 1, 1, Padding::Valid).is_err());
+        // boundary: kernel exactly the input size is fine (1x1 output)
+        assert_eq!(out_dims(5, 5, 5, 5, 1, 1, Padding::Valid).unwrap(), (1, 1));
+        // SAME padding never underflows regardless of kernel size
+        assert_eq!(out_dims(5, 5, 10, 10, 1, 1, Padding::Same).unwrap(), (5, 5));
+    }
+
+    #[test]
+    fn degenerate_stride_and_kernel_are_errors() {
+        assert!(out_dims(8, 8, 3, 3, 0, 1, Padding::Valid).is_err());
+        assert!(out_dims(8, 8, 3, 3, 1, 0, Padding::Same).is_err());
+        assert!(out_dims(8, 8, 0, 3, 1, 1, Padding::Valid).is_err());
     }
 }

@@ -5,6 +5,8 @@
 //! factor vanish identically, equivalent to the paper's skip) and VALID
 //! padding, with arbitrary strides.
 
+use anyhow::Result;
+
 use crate::format::mfb::Padding;
 
 /// Static geometry of a convolution-like operator, computed once by the
@@ -26,6 +28,10 @@ pub struct ConvGeometry {
 }
 
 impl ConvGeometry {
+    /// Validated geometry; errors (rather than panics) on kernels that
+    /// exceed a VALID-padded input or zero strides — see
+    /// [`super::out_dims`].
+    #[allow(clippy::too_many_arguments)]
     pub fn new(
         in_h: usize,
         in_w: usize,
@@ -35,8 +41,8 @@ impl ConvGeometry {
         stride_h: usize,
         stride_w: usize,
         padding: Padding,
-    ) -> Self {
-        let (out_h, out_w) = super::out_dims(in_h, in_w, k_h, k_w, stride_h, stride_w, padding);
+    ) -> Result<Self> {
+        let (out_h, out_w) = super::out_dims(in_h, in_w, k_h, k_w, stride_h, stride_w, padding)?;
         let (pad_top, pad_left) = match padding {
             Padding::Valid => (0isize, 0isize),
             Padding::Same => {
@@ -46,7 +52,7 @@ impl ConvGeometry {
                 ((pad_h / 2) as isize, (pad_w / 2) as isize)
             }
         };
-        ConvGeometry { in_h, in_w, in_c, k_h, k_w, stride_h, stride_w, out_h, out_w, pad_top, pad_left }
+        Ok(ConvGeometry { in_h, in_w, in_c, k_h, k_w, stride_h, stride_w, out_h, out_w, pad_top, pad_left })
     }
 
     /// Number of MACs per output position per output channel (dense conv).
@@ -106,7 +112,7 @@ mod tests {
 
     #[test]
     fn valid_padding_center_view() {
-        let g = ConvGeometry::new(3, 3, 1, 2, 2, 1, 1, Padding::Valid);
+        let g = ConvGeometry::new(3, 3, 1, 2, 2, 1, 1, Padding::Valid).unwrap();
         assert_eq!((g.out_h, g.out_w), (2, 2));
         let mut v = vec![0i8; 4];
         g.extract_view(&input3x3(), 0, 0, 0, &mut v);
@@ -117,7 +123,7 @@ mod tests {
 
     #[test]
     fn same_padding_fills_zero_point() {
-        let g = ConvGeometry::new(3, 3, 1, 3, 3, 1, 1, Padding::Same);
+        let g = ConvGeometry::new(3, 3, 1, 3, 3, 1, 1, Padding::Same).unwrap();
         assert_eq!((g.out_h, g.out_w), (3, 3));
         let mut v = vec![0i8; 9];
         // top-left corner: first row and column padded with z_x = -7
@@ -128,7 +134,7 @@ mod tests {
     #[test]
     fn stride_two_same_matches_tflite_offsets() {
         // 4x4 input, k3 s2 SAME -> out 2x2, pad_total = (2-1)*2+3-4 = 1 -> pad_top 0
-        let g = ConvGeometry::new(4, 4, 1, 3, 3, 2, 2, Padding::Same);
+        let g = ConvGeometry::new(4, 4, 1, 3, 3, 2, 2, Padding::Same).unwrap();
         assert_eq!((g.out_h, g.out_w), (2, 2));
         assert_eq!((g.pad_top, g.pad_left), (0, 0));
         let input: Vec<i8> = (1..=16).collect();
@@ -142,7 +148,7 @@ mod tests {
     fn multichannel_view_is_channel_interleaved() {
         // 2x2x2 input: [[(1,2),(3,4)],[(5,6),(7,8)]]
         let input: Vec<i8> = (1..=8).collect();
-        let g = ConvGeometry::new(2, 2, 2, 2, 2, 1, 1, Padding::Valid);
+        let g = ConvGeometry::new(2, 2, 2, 2, 2, 1, 1, Padding::Valid).unwrap();
         let mut v = vec![0i8; 8];
         g.extract_view(&input, 0, 0, 0, &mut v);
         assert_eq!(v, input);

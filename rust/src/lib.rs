@@ -1,10 +1,56 @@
 //! # MicroFlow reproduction — three-layer Rust + JAX + Pallas stack
 //!
 //! This crate reproduces *"MicroFlow: An Efficient Rust-Based Inference
-//! Engine for TinyML"* (Carnelos, Pasti, Bellotto, 2024) as a full system:
+//! Engine for TinyML"* (Carnelos, Pasti, Bellotto, 2024) as a full system.
 //!
+//! ## The front door: `microflow::api`
+//!
+//! All inference goes through one session-based surface — pick an engine,
+//! build a session, run:
+//!
+//! ```no_run
+//! use microflow::api::{Engine, Session};
+//!
+//! // the paper's system: compile once, static buffers, folded constants
+//! let mut session = Session::builder("artifacts/sine.mfb")
+//!     .engine(Engine::MicroFlow)   // or Engine::Interp / Engine::Pjrt
+//!     .paging(false)               // Sec. 4.3 paged executor for 2 kB RAM
+//!     .preferred_batch(8)          // what the dynamic batcher targets
+//!     .build()?;
+//!
+//! let sig = session.signature().clone();       // shapes + quantization
+//! let q = sig.input.quantize(&[1.0]);
+//! let mut out = vec![0i8; sig.output.len()];
+//! session.run_into(&q, &mut out)?;             // allocation-free hot path
+//! # anyhow::Ok(())
+//! ```
+//!
+//! All three executors implement [`api::InferenceSession`] and are
+//! interchangeable behind [`api::Session`]: the coordinator's worker pool,
+//! the CLI (`predict`/`verify`/`serve`), the examples and the benches all
+//! run on this surface. **Migration from the pre-session constructors:**
+//!
+//! * `MicroFlowEngine::new(&model, CompileOptions { paging })` →
+//!   `Session::builder(model).engine(Engine::MicroFlow).paging(paging).build()`;
+//! * `Interpreter::new(&bytes, &OpResolver::with_all_kernels())` →
+//!   `Session::builder(bytes).engine(Engine::Interp).build()`;
+//! * `PjrtEngine::load(dir, name)` →
+//!   `Session::builder(dir.join(format!("{name}.mfb"))).engine(Engine::Pjrt).build()`
+//!   (requires the `pjrt` build feature);
+//! * `Backend::execute(&inputs, n) -> Vec<i8>` (allocating, coordinator-
+//!   private) → `Session::run_batch_into(&inputs, n, &mut out)`
+//!   (allocation-free, public).
+//!
+//! The low-level types remain public for compilation introspection and the
+//! simulator, but serving code should never construct them directly.
+//!
+//! ## Module map
+//!
+//! * [`api`] — **the public inference surface**: `TensorSpec`/`IoSignature`,
+//!   `ModelSource`, `SessionBuilder`, the `InferenceSession` trait and the
+//!   three engine sessions;
 //! * [`format`] — the MFB model container (TFLite-equivalent, DESIGN.md §4)
-//!   plus dataset / golden-vector readers;
+//!   reader *and* writer, plus dataset / golden-vector readers;
 //! * [`tensor`] — int8 tensors and the two requantization arithmetics
 //!   (MicroFlow float-scale vs TFLM gemmlowp fixed-point);
 //! * [`kernels`] — the paper's quantized operator kernels (Sec. 5 + App. A);
@@ -18,9 +64,10 @@
 //! * [`sim`] — the MCU substrate (Table 4 devices), cycle/memory/energy
 //!   models used by the Fig. 9-11 / Table 6 benches;
 //! * [`runtime`] — PJRT client loading the JAX-AOT'd HLO artifacts (the
-//!   numerical oracle and host serving backend);
+//!   numerical oracle and host serving backend; optional `pjrt` feature);
 //! * [`coordinator`] — the serving layer: dynamic batcher, model router,
-//!   worker pool, latency/throughput metrics;
+//!   worker pool over [`api::Session`] replicas, latency/throughput
+//!   metrics;
 //! * [`eval`] — datasets, accuracy metrics and the Table 5 runner.
 //!
 //! The Python side (`python/compile/`) runs **only at build time**
@@ -28,6 +75,7 @@
 //! exports `.mfb`/`.mds`/golden files and AOT-lowers the quantized Pallas
 //! graphs to HLO text. Nothing in this crate imports Python.
 
+pub mod api;
 pub mod bench_support;
 pub mod cli;
 pub mod compiler;
@@ -41,6 +89,8 @@ pub mod runtime;
 pub mod sim;
 pub mod tensor;
 pub mod util;
+
+pub use api::{Engine, InferenceSession, IoSignature, ModelSource, Session, SessionBuilder, TensorSpec};
 
 /// Crate version (mirrors Cargo.toml).
 pub fn version() -> &'static str {

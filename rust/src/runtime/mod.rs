@@ -10,8 +10,15 @@
 //! Roles in the reproduction:
 //! * **numerical oracle** — the golden path the native engines are checked
 //!   against (`tests/integration_artifacts.rs`);
-//! * **host serving backend** — the coordinator can route requests to
-//!   either the native MicroFlow engine or the PJRT executable.
+//! * **host serving backend** — `api::Session::builder(...).engine(Engine::Pjrt)`
+//!   routes coordinator traffic onto the AOT'd executables.
+//!
+//! The `xla` crate comes from the build image (not crates.io) and is gated
+//! behind the **`pjrt` feature** (see rust/Cargo.toml for how to wire the
+//! vendored crate in): without it this module compiles a stub whose `load`
+//! returns a clear error, so the rest of the crate (engine, interpreter,
+//! coordinator, sim) builds and tests on machines without the XLA
+//! toolchain.
 //!
 //! Gotchas inherited from the image (see /opt/xla-example/README.md): HLO
 //! **text** interchange only — serialized protos from jax ≥ 0.5 carry
@@ -20,13 +27,15 @@
 
 pub mod oracle;
 
-
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
+#[cfg(feature = "pjrt")]
+use anyhow::Context;
 
 use crate::tensor::quant::QParams;
 
 /// A compiled (model, batch) executable.
 pub struct PjrtExecutable {
+    #[cfg(feature = "pjrt")]
     exe: xla::PjRtLoadedExecutable,
     pub batch: usize,
     pub in_len: usize,
@@ -34,8 +43,10 @@ pub struct PjrtExecutable {
 }
 
 /// PJRT-backed engine: a set of batch-variant executables for one model.
+#[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
 pub struct PjrtEngine {
     pub model: String,
+    #[cfg(feature = "pjrt")]
     client: xla::PjRtClient,
     /// Sorted by batch size ascending.
     variants: Vec<PjrtExecutable>,
@@ -52,6 +63,7 @@ impl PjrtEngine {
     ///
     /// Quantization params come from the `.mfb` container (the HLO operates
     /// purely in the quantized int8 domain).
+    #[cfg(feature = "pjrt")]
     pub fn load(artifacts: &std::path::Path, model: &str) -> Result<PjrtEngine> {
         let mfb = crate::format::mfb::MfbModel::load(artifacts.join(format!("{model}.mfb")))?;
         let in_len: usize = mfb.input_shape().iter().product();
@@ -92,6 +104,15 @@ impl PjrtEngine {
         })
     }
 
+    /// Stub for builds without the XLA runtime.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn load(_artifacts: &std::path::Path, model: &str) -> Result<PjrtEngine> {
+        bail!(
+            "PJRT engine for {model:?} unavailable: this build lacks the `pjrt` feature \
+             (the optional `xla` dependency); rebuild with `--features pjrt`"
+        )
+    }
+
     pub fn input_len(&self) -> usize {
         self.in_len
     }
@@ -110,15 +131,21 @@ impl PjrtEngine {
         self.variants.iter().find(|v| v.batch >= n).unwrap_or(self.variants.last().unwrap())
     }
 
-    /// Execute a batch of quantized samples (`inputs.len() == n * in_len`).
+    /// Execute a batch of quantized samples (`inputs.len() == n * in_len`),
+    /// writing `n * out_len` values into `out`.
     ///
     /// Samples are padded up to the executable's batch size (extra rows are
     /// discarded) — the dynamic batcher upstream aims to fill variants.
-    pub fn execute_batch(&self, inputs: &[i8], n: usize) -> Result<Vec<i8>> {
+    /// The XLA FFI boundary stages data through literals, so unlike the
+    /// native engines this path does allocate internally.
+    #[cfg(feature = "pjrt")]
+    pub fn execute_batch_into(&self, inputs: &[i8], n: usize, out: &mut [i8]) -> Result<()> {
         if inputs.len() != n * self.in_len {
             bail!("batch input length {} != {} * {}", inputs.len(), n, self.in_len);
         }
-        let mut out = Vec::with_capacity(n * self.out_len);
+        if out.len() != n * self.out_len {
+            bail!("batch output length {} != {} * {}", out.len(), n, self.out_len);
+        }
         let mut done = 0usize;
         while done < n {
             let var = self.variant_for(n - done);
@@ -129,23 +156,30 @@ impl PjrtEngine {
             // i8 is ArrayElement but not NativeType in xla 0.1.6, so build
             // the literal via create_from_shape + copy_raw_from
             let shape: Vec<usize> = std::iter::once(var.batch)
-                .chain(self.per_sample_dims().iter().copied())
+                .chain(self.sample_dims.iter().copied())
                 .collect();
             let mut lit = xla::Literal::create_from_shape(xla::PrimitiveType::S8, &shape);
             lit.copy_raw_from(&chunk)?;
             let result = var.exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
             let tuple = result.to_tuple1()?;
             let vals = tuple.to_vec::<i8>()?;
-            out.extend_from_slice(&vals[..take * self.out_len]);
+            out[done * self.out_len..(done + take) * self.out_len]
+                .copy_from_slice(&vals[..take * self.out_len]);
             done += take;
         }
-        Ok(out)
+        Ok(())
     }
 
-    fn per_sample_dims(&self) -> Vec<usize> {
-        // the HLO input is [batch, ...input_shape]; we only kept lengths,
-        // so recover dims from the mfb-declared shape at load time
-        self.sample_dims.clone()
+    #[cfg(not(feature = "pjrt"))]
+    pub fn execute_batch_into(&self, _inputs: &[i8], _n: usize, _out: &mut [i8]) -> Result<()> {
+        bail!("PJRT execution unavailable without the `pjrt` feature")
+    }
+
+    /// Execute a batch, allocating the output (convenience).
+    pub fn execute_batch(&self, inputs: &[i8], n: usize) -> Result<Vec<i8>> {
+        let mut out = vec![0i8; n * self.out_len];
+        self.execute_batch_into(inputs, n, &mut out)?;
+        Ok(out)
     }
 
     /// Quantized single-sample predict (oracle convenience).
@@ -153,8 +187,14 @@ impl PjrtEngine {
         self.execute_batch(input, 1)
     }
 
+    #[cfg(feature = "pjrt")]
     pub fn platform(&self) -> String {
         self.client.platform_name()
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    pub fn platform(&self) -> String {
+        "unavailable (built without `pjrt`)".to_string()
     }
 }
 

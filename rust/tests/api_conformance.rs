@@ -1,0 +1,240 @@
+//! Session-API conformance suite — runs WITHOUT build artifacts.
+//!
+//! Randomized models (seeded via `util::Prng`, so fully deterministic) are
+//! constructed in memory, serialized through `format::builder`, and fed to
+//! every engine through the one entry point
+//! (`Session::builder(...).engine(...)`). The gates:
+//!
+//! * native and paged-native sessions are **bit-identical** (paging is a
+//!   time/space trade, never an accuracy trade — paper Sec. 4.3);
+//! * native and interp sessions agree within **±1 output unit** (the
+//!   paper's Sec. 6.2.1 float-scale vs fixed-point observation). The
+//!   generator bounds each layer's error gain so the ±1 holds through
+//!   multi-layer chains, not just single operators;
+//! * `run_batch_into` is allocation-free: internal buffer pointers are
+//!   stable across repeated batched calls and batches equal single runs;
+//! * malformed geometry (VALID kernel larger than its input) surfaces as a
+//!   build-time `Err` from every engine, never a panic.
+
+use microflow::api::{Engine, Session};
+use microflow::format::mfb::{MfbModel, OpCode, OpOptions, Operator, Padding, TensorDef};
+use microflow::kernels::out_dims;
+use microflow::tensor::quant::QParams;
+use microflow::tensor::DType;
+use microflow::util::Prng;
+
+fn act_tensor(name: &str, dims: Vec<usize>, scale: f32, zp: i32) -> TensorDef {
+    TensorDef { name: name.into(), dtype: DType::I8, dims, qparams: QParams::new(scale, zp), data: Vec::new() }
+}
+
+fn i8_tensor(name: &str, dims: Vec<usize>, scale: f32, data: Vec<i8>) -> TensorDef {
+    TensorDef {
+        name: name.into(),
+        dtype: DType::I8,
+        dims,
+        qparams: QParams::new(scale, 0),
+        data: data.iter().map(|&v| v as u8).collect(),
+    }
+}
+
+fn i32_tensor(name: &str, dims: Vec<usize>, scale: f32, data: Vec<i32>) -> TensorDef {
+    TensorDef {
+        name: name.into(),
+        dtype: DType::I32,
+        dims,
+        qparams: QParams::new(scale, 0),
+        data: data.iter().flat_map(|v| v.to_le_bytes()).collect(),
+    }
+}
+
+fn model(tensors: Vec<TensorDef>, operators: Vec<Operator>, out_idx: usize) -> MfbModel {
+    MfbModel {
+        version: 1,
+        producer: "api_conformance".into(),
+        tensors,
+        operators,
+        graph_inputs: vec![0],
+        graph_outputs: vec![out_idx],
+        metadata: "{}".into(),
+        file_bytes: 0, // refreshed when the serialized bytes are reparsed
+    }
+}
+
+/// Small weights + an output scale that caps each layer's error gain at
+/// 0.1: a ±1 input disagreement perturbs the pre-rounding output by at
+/// most 0.1 units, so the engines' outputs stay within ±1 at EVERY layer
+/// of a chain (gain * 1 + rounding < 2 ⇒ integer diff ≤ 1).
+const W_MAX: i64 = 8;
+const GAIN: f32 = 0.1;
+
+fn small_weights(rng: &mut Prng, n: usize) -> Vec<i8> {
+    (0..n).map(|_| rng.range_i64(-W_MAX, W_MAX) as i8).collect()
+}
+
+/// Randomized FC chain: input [1,k0] -> FC*depth, each with random dims,
+/// weights, bias and a fused relu on some layers.
+fn random_fc_chain(rng: &mut Prng, depth: usize) -> MfbModel {
+    let k0 = rng.range_i64(2, 16) as usize;
+    let mut tensors = vec![act_tensor("in", vec![1, k0], rng.f32_range(0.02, 0.1), rng.range_i64(-5, 5) as i32)];
+    let mut operators = Vec::new();
+    let mut k = k0;
+    let mut cur = 0usize;
+    for layer in 0..depth {
+        let n = rng.range_i64(1, 12) as usize;
+        let s_x = tensors[cur].qparams.scale;
+        let s_w = rng.f32_range(0.01, 0.05);
+        // max per-unit sensitivity is W_MAX * k weights: pick s_y for GAIN
+        let s_y = s_x * s_w * (W_MAX as f32) * (k as f32) / GAIN;
+        let z_y = rng.range_i64(-10, 10) as i32;
+        let w_idx = tensors.len();
+        tensors.push(i8_tensor(&format!("w{layer}"), vec![k, n], s_w, small_weights(rng, k * n)));
+        let b_idx = tensors.len();
+        tensors.push(i32_tensor(&format!("b{layer}"), vec![n], s_x * s_w, rng.i32_vec(n, -100, 100)));
+        let y_idx = tensors.len();
+        tensors.push(act_tensor(&format!("y{layer}"), vec![1, n], s_y, z_y));
+        operators.push(Operator {
+            opcode: OpCode::FullyConnected,
+            version: 1,
+            inputs: vec![cur as i32, w_idx as i32, b_idx as i32],
+            outputs: vec![y_idx as i32],
+            options: OpOptions::FullyConnected { fused_act: (rng.below(2)) as u8 },
+        });
+        cur = y_idx;
+        k = n;
+    }
+    model(tensors, operators, cur)
+}
+
+/// Randomized single Conv2D model (SAME or VALID, stride 1 or 2).
+fn random_conv(rng: &mut Prng) -> MfbModel {
+    let (h, w) = (rng.range_i64(3, 8) as usize, rng.range_i64(3, 8) as usize);
+    let c = rng.range_i64(1, 3) as usize;
+    let (kh, kw) = (rng.range_i64(1, h as i64) as usize, rng.range_i64(1, w as i64) as usize);
+    let stride = rng.range_i64(1, 2) as usize;
+    let padding = if rng.below(2) == 0 { Padding::Same } else { Padding::Valid };
+    let c_out = rng.range_i64(1, 4) as usize;
+    let (oh, ow) = out_dims(h, w, kh, kw, stride, stride, padding).unwrap();
+
+    let s_x = rng.f32_range(0.02, 0.1);
+    let z_x = rng.range_i64(-5, 5) as i32;
+    let s_f = rng.f32_range(0.01, 0.05);
+    let window = kh * kw * c;
+    let s_y = s_x * s_f * (W_MAX as f32) * (window as f32) / GAIN;
+    let z_y = rng.range_i64(-10, 10) as i32;
+
+    let tensors = vec![
+        act_tensor("in", vec![1, h, w, c], s_x, z_x),
+        i8_tensor("f", vec![c_out, kh, kw, c], s_f, small_weights(rng, c_out * window)),
+        i32_tensor("b", vec![c_out], s_x * s_f, rng.i32_vec(c_out, -100, 100)),
+        act_tensor("y", vec![1, oh, ow, c_out], s_y, z_y),
+    ];
+    let operators = vec![Operator {
+        opcode: OpCode::Conv2D,
+        version: 1,
+        inputs: vec![0, 1, 2],
+        outputs: vec![3],
+        options: OpOptions::Conv2D {
+            stride: (stride, stride),
+            padding,
+            fused_act: (rng.below(2)) as u8,
+        },
+    }];
+    model(tensors, operators, 3)
+}
+
+fn sessions_for(m: &MfbModel) -> (Session, Session, Session) {
+    let native = Session::builder(m).engine(Engine::MicroFlow).build().unwrap();
+    let paged = Session::builder(m).engine(Engine::MicroFlow).paging(true).build().unwrap();
+    let interp = Session::builder(m).engine(Engine::Interp).build().unwrap();
+    (native, paged, interp)
+}
+
+fn assert_parity(m: &MfbModel, rng: &mut Prng, runs: usize, label: &str) {
+    let (mut native, mut paged, mut interp) = sessions_for(m);
+    assert_eq!(native.signature(), interp.signature(), "{label}: signatures diverge");
+    let ilen = native.input_len();
+    for r in 0..runs {
+        let x = rng.i8_vec(ilen);
+        let a = native.run(&x).unwrap();
+        let p = paged.run(&x).unwrap();
+        assert_eq!(a, p, "{label} run {r}: paged output diverged");
+        let b = interp.run(&x).unwrap();
+        for (j, (u, v)) in a.iter().zip(&b).enumerate() {
+            assert!(
+                (*u as i32 - *v as i32).abs() <= 1,
+                "{label} run {r} out[{j}]: native {u} vs interp {v} ({a:?} vs {b:?})"
+            );
+        }
+    }
+}
+
+#[test]
+fn random_fc_chains_agree_across_engines() {
+    let mut rng = Prng::new(2024);
+    for case in 0..20 {
+        let depth = 1 + (case % 3); // chains of 1, 2 and 3 FC layers
+        let m = random_fc_chain(&mut rng, depth);
+        assert_parity(&m, &mut rng, 8, &format!("fc case {case} depth {depth}"));
+    }
+}
+
+#[test]
+fn random_convs_agree_across_engines() {
+    let mut rng = Prng::new(77);
+    for case in 0..12 {
+        let m = random_conv(&mut rng);
+        assert_parity(&m, &mut rng, 5, &format!("conv case {case}"));
+    }
+}
+
+#[test]
+fn run_batch_into_is_pointer_stable_on_random_models() {
+    let mut rng = Prng::new(31);
+    let m = random_fc_chain(&mut rng, 2);
+    for engine in [Engine::MicroFlow, Engine::Interp] {
+        let mut s = Session::builder(&m).engine(engine).build().unwrap();
+        let (ilen, olen) = (s.input_len(), s.output_len());
+        let n = 6;
+        let inputs = rng.i8_vec(n * ilen);
+        let mut out = vec![0i8; n * olen];
+        s.run_batch_into(&inputs, n, &mut out).unwrap();
+        let p0 = s.buffer_ptrs();
+        assert!(!p0.is_empty());
+        for _ in 0..16 {
+            s.run_batch_into(&inputs, n, &mut out).unwrap();
+        }
+        assert_eq!(s.buffer_ptrs(), p0, "{engine}: buffers reallocated on the batch path");
+        // and batching is semantics-preserving
+        for i in 0..n {
+            let single = s.run(&inputs[i * ilen..(i + 1) * ilen]).unwrap();
+            assert_eq!(&out[i * olen..(i + 1) * olen], single.as_slice(), "{engine} sample {i}");
+        }
+    }
+}
+
+#[test]
+fn oversized_valid_kernel_fails_cleanly_in_every_engine() {
+    // regression for the out_dims underflow: kh > h under VALID padding
+    // must be a build-time Err from both compile paths, never a panic
+    let mut rng = Prng::new(5);
+    let mut m = random_conv(&mut rng);
+    // force geometry kh > h with VALID padding, keeping the rest intact
+    let (h, w, c) = (3usize, 3usize, 1usize);
+    let (kh, kw) = (5usize, 2usize);
+    let c_out = 2usize;
+    m.tensors[0] = act_tensor("in", vec![1, h, w, c], 0.05, 0);
+    m.tensors[1] = i8_tensor("f", vec![c_out, kh, kw, c], 0.02, vec![1; c_out * kh * kw * c]);
+    m.tensors[2] = i32_tensor("b", vec![c_out], 0.001, vec![0; c_out]);
+    m.tensors[3] = act_tensor("y", vec![1, 1, 1, c_out], 1.0, 0);
+    m.operators[0] = Operator {
+        opcode: OpCode::Conv2D,
+        version: 1,
+        inputs: vec![0, 1, 2],
+        outputs: vec![3],
+        options: OpOptions::Conv2D { stride: (1, 1), padding: Padding::Valid, fused_act: 0 },
+    };
+    for engine in [Engine::MicroFlow, Engine::Interp] {
+        let err = Session::builder(&m).engine(engine).build().unwrap_err();
+        assert!(format!("{err:#}").contains("exceeds input"), "{engine}: {err:#}");
+    }
+}

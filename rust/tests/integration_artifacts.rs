@@ -2,97 +2,107 @@
 //! and agree bit-exactly with the golden vectors and the native engine
 //! (the three-implementations-one-model gate of DESIGN.md S15).
 //!
+//! PJRT sessions come through `Session::builder(...).engine(Engine::Pjrt)`
+//! like every other engine; the batch-variant plumbing (padding, variant
+//! selection) is additionally exercised on the runtime layer directly.
 //! These are the slowest tests (XLA compilation); person is exercised once.
+//! They compile/run only with the `pjrt` feature — on default builds the
+//! whole file is compiled out (the stub engine would fail every unwrap).
+#![cfg(feature = "pjrt")]
 
 mod common;
 
-use microflow::compiler::plan::CompileOptions;
-use microflow::engine::MicroFlowEngine;
+use microflow::api::{Engine, Session};
 use microflow::format::golden::Golden;
 use microflow::runtime::oracle::check_against_golden;
 use microflow::runtime::PjrtEngine;
 use microflow::util::Prng;
 
+fn pjrt_session(art: &std::path::Path, name: &str) -> Session {
+    Session::builder(art.join(format!("{name}.mfb"))).engine(Engine::Pjrt).build().unwrap()
+}
+
 #[test]
 fn pjrt_sine_bit_exact_vs_golden_and_engine() {
     let art = require_artifacts!();
-    let pjrt = PjrtEngine::load(&art, "sine").unwrap();
-    assert_eq!(pjrt.batch_sizes(), vec![1, 32]);
+    let mut pjrt = pjrt_session(&art, "sine");
     let golden = Golden::load(art.join("sine_golden.bin")).unwrap();
-    let a = check_against_golden(&golden, |x| pjrt.predict_q(x)).unwrap();
+    let a = check_against_golden(&golden, |x| pjrt.run(x)).unwrap();
     assert!(a.is_bit_exact(), "{a:?}");
 
     // engine and PJRT agree on arbitrary inputs, not just goldens
-    let engine = MicroFlowEngine::load(art.join("sine.mfb"), CompileOptions::default()).unwrap();
+    let mut engine = Session::builder(art.join("sine.mfb")).build().unwrap();
     let mut rng = Prng::new(3);
     for _ in 0..50 {
         let x = rng.i8_vec(1);
-        assert_eq!(engine.predict(&x), pjrt.predict_q(&x).unwrap());
+        assert_eq!(engine.run(&x).unwrap(), pjrt.run(&x).unwrap());
     }
 }
 
 #[test]
 fn pjrt_speech_batch_variants_agree() {
     let art = require_artifacts!();
+    // runtime layer: the AOT'd batch variants themselves
     let pjrt = PjrtEngine::load(&art, "speech").unwrap();
     assert_eq!(pjrt.batch_sizes(), vec![1, 8]);
     let golden = Golden::load(art.join("speech_golden.bin")).unwrap();
     let a = check_against_golden(&golden, |x| pjrt.predict_q(x)).unwrap();
     assert!(a.is_bit_exact(), "{a:?}");
 
-    // batched execution == per-sample execution (the b8 variant, filled)
+    // batched session execution == per-sample execution (the b8 variant,
+    // filled), through the uniform run_batch_into surface
+    let mut session = pjrt_session(&art, "speech");
+    let olen = session.output_len();
     let n = golden.n.min(8);
     let mut packed = Vec::new();
     for i in 0..n {
         packed.extend_from_slice(golden.input(i));
     }
-    let batch_out = pjrt.execute_batch(&packed, n).unwrap();
+    let mut batch_out = vec![0i8; n * olen];
+    session.run_batch_into(&packed, n, &mut batch_out).unwrap();
     for i in 0..n {
-        let single = pjrt.predict_q(golden.input(i)).unwrap();
-        assert_eq!(
-            &batch_out[i * pjrt.output_len()..(i + 1) * pjrt.output_len()],
-            single.as_slice(),
-            "sample {i}"
-        );
+        let single = session.run(golden.input(i)).unwrap();
+        assert_eq!(&batch_out[i * olen..(i + 1) * olen], single.as_slice(), "sample {i}");
     }
 }
 
 #[test]
 fn pjrt_partial_batches_pad_correctly() {
     let art = require_artifacts!();
-    let pjrt = PjrtEngine::load(&art, "speech").unwrap();
+    let mut session = pjrt_session(&art, "speech");
     let golden = Golden::load(art.join("speech_golden.bin")).unwrap();
     // n = 3 doesn't match any variant exactly: must pad the b8 executable
     let n = 3;
+    let olen = session.output_len();
     let mut packed = Vec::new();
     for i in 0..n {
         packed.extend_from_slice(golden.input(i));
     }
-    let out = pjrt.execute_batch(&packed, n).unwrap();
-    assert_eq!(out.len(), n * pjrt.output_len());
+    let out = session.run_batch(&packed, n).unwrap();
+    assert_eq!(out.len(), n * olen);
     for i in 0..n {
-        assert_eq!(
-            &out[i * pjrt.output_len()..(i + 1) * pjrt.output_len()],
-            golden.output(i),
-            "sample {i}"
-        );
+        assert_eq!(&out[i * olen..(i + 1) * olen], golden.output(i), "sample {i}");
     }
 }
 
 #[test]
 fn pjrt_person_bit_exact() {
     let art = require_artifacts!();
-    let pjrt = PjrtEngine::load(&art, "person").unwrap();
+    let mut pjrt = pjrt_session(&art, "person");
     let golden = Golden::load(art.join("person_golden.bin")).unwrap();
-    let a = check_against_golden(&golden, |x| pjrt.predict_q(x)).unwrap();
+    let a = check_against_golden(&golden, |x| pjrt.run(x)).unwrap();
     assert!(a.is_bit_exact(), "{a:?}");
 }
 
 #[test]
 fn qparams_come_from_the_container() {
     let art = require_artifacts!();
-    let pjrt = PjrtEngine::load(&art, "speech").unwrap();
-    let engine = MicroFlowEngine::load(art.join("speech.mfb"), CompileOptions::default()).unwrap();
-    assert_eq!(pjrt.input_qparams, engine.input_qparams());
-    assert_eq!(pjrt.output_qparams, engine.output_qparams());
+    let pjrt = pjrt_session(&art, "speech");
+    let engine = Session::builder(art.join("speech.mfb")).build().unwrap();
+    // one IoSignature to rule all engines
+    assert_eq!(pjrt.signature(), engine.signature());
+    assert_eq!(pjrt.input_qparams(), engine.input_qparams());
+    assert_eq!(pjrt.output_qparams(), engine.output_qparams());
+    // PJRT defaults its preferred batch to the largest AOT variant
+    assert_eq!(pjrt.preferred_batch(), 8);
 }

@@ -7,21 +7,26 @@ mod common;
 use std::sync::Arc;
 use std::time::Duration;
 
-use microflow::coordinator::{
-    Backend, BatcherConfig, InterpBackend, NativeBackend, Router, Server, ServerConfig,
-};
+use microflow::api::{Engine, Session};
+use microflow::coordinator::{BatcherConfig, Router, Server, ServerConfig};
 use microflow::eval::accuracy::argmax;
 use microflow::format::mds::MdsDataset;
 
 fn native_server(art: &std::path::Path, name: &str, replicas: usize, max_batch: usize) -> Server {
-    let backends: Vec<Box<dyn Backend>> = (0..replicas)
-        .map(|_| Box::new(NativeBackend::load(art.join(format!("{name}.mfb"))).unwrap()) as Box<dyn Backend>)
+    let sessions: Vec<Session> = (0..replicas)
+        .map(|_| {
+            Session::builder(art.join(format!("{name}.mfb")))
+                .engine(Engine::MicroFlow)
+                .preferred_batch(max_batch)
+                .build()
+                .unwrap()
+        })
         .collect();
     let cfg = ServerConfig {
         queue_depth: 64,
         batcher: BatcherConfig { max_batch, max_wait: Duration::from_millis(1) },
     };
-    Server::start(backends, cfg).unwrap()
+    Server::start(sessions, cfg).unwrap()
 }
 
 #[test]
@@ -115,9 +120,11 @@ fn interp_backend_serves_equivalently() {
     let art = require_artifacts!();
     let ds = MdsDataset::load(art.join("speech_test.mds")).unwrap();
     let nat = native_server(&art, "speech", 1, 4);
-    let backends: Vec<Box<dyn Backend>> =
-        vec![Box::new(InterpBackend::load(art.join("speech.mfb")).unwrap())];
-    let itp = Server::start(backends, ServerConfig::default()).unwrap();
+    let sessions = vec![Session::builder(art.join("speech.mfb"))
+        .engine(Engine::Interp)
+        .build()
+        .unwrap()];
+    let itp = Server::start(sessions, ServerConfig::default()).unwrap();
     let qp = nat.input_qparams();
     for i in 0..10 {
         let q = qp.quantize_slice(ds.sample(i));

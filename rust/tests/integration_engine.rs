@@ -1,16 +1,15 @@
 //! Integration: the MicroFlow engine and the TFLM-like interpreter on the
 //! real shipped models — correctness, determinism, paging, and the two
-//! engines' Sec. 6.2.1 agreement.
+//! engines' Sec. 6.2.1 agreement. All sessions are constructed through
+//! `microflow::api::Session::builder` (the crate's single entry point).
 
 mod common;
 
+use microflow::api::{Engine, Session};
 use microflow::compiler::plan::{CompileOptions, CompiledModel};
-use microflow::engine::MicroFlowEngine;
 use microflow::eval::accuracy::argmax;
 use microflow::format::golden::Golden;
 use microflow::format::mfb::MfbModel;
-use microflow::interp::resolver::OpResolver;
-use microflow::interp::Interpreter;
 use microflow::util::Prng;
 
 #[test]
@@ -18,9 +17,9 @@ fn engine_is_bit_exact_vs_jax_golden_on_all_models() {
     let art = require_artifacts!();
     for name in common::MODELS {
         let g = Golden::load(art.join(format!("{name}_golden.bin"))).unwrap();
-        let e = MicroFlowEngine::load(art.join(format!("{name}.mfb")), CompileOptions::default()).unwrap();
+        let mut s = Session::builder(art.join(format!("{name}.mfb"))).build().unwrap();
         for i in 0..g.n {
-            let out = e.predict(g.input(i));
+            let out = s.run(g.input(i)).unwrap();
             assert_eq!(out.as_slice(), g.output(i), "{name} sample {i}");
         }
     }
@@ -29,24 +28,24 @@ fn engine_is_bit_exact_vs_jax_golden_on_all_models() {
 #[test]
 fn engine_is_deterministic() {
     let art = require_artifacts!();
-    let e = MicroFlowEngine::load(art.join("speech.mfb"), CompileOptions::default()).unwrap();
+    let mut s = Session::builder(art.join("speech.mfb")).build().unwrap();
     let mut rng = Prng::new(5);
-    let x = rng.i8_vec(e.input_len());
-    let a = e.predict(&x);
+    let x = rng.i8_vec(s.input_len());
+    let a = s.run(&x).unwrap();
     for _ in 0..5 {
-        assert_eq!(e.predict(&x), a);
+        assert_eq!(s.run(&x).unwrap(), a);
     }
 }
 
 #[test]
 fn paged_execution_identical_on_sine() {
     let art = require_artifacts!();
-    let m = MfbModel::load(art.join("sine.mfb")).unwrap();
-    let unpaged = MicroFlowEngine::new(&m, CompileOptions { paging: false }).unwrap();
-    let paged = MicroFlowEngine::new(&m, CompileOptions { paging: true }).unwrap();
+    let path = art.join("sine.mfb");
+    let mut unpaged = Session::builder(&path).paging(false).build().unwrap();
+    let mut paged = Session::builder(&path).paging(true).build().unwrap();
     for q in -128..=127i16 {
         let x = [q as i8];
-        assert_eq!(unpaged.predict(&x), paged.predict(&x), "q={q}");
+        assert_eq!(unpaged.run(&x).unwrap(), paged.run(&x).unwrap(), "q={q}");
     }
 }
 
@@ -59,15 +58,14 @@ fn interpreter_agrees_with_engine_per_paper() {
     let art = require_artifacts!();
     for name in common::MODELS {
         let path = art.join(format!("{name}.mfb"));
-        let e = MicroFlowEngine::load(&path, CompileOptions::default()).unwrap();
-        let bytes = std::fs::read(&path).unwrap();
-        let mut it = Interpreter::new(&bytes, &OpResolver::with_all_kernels()).unwrap();
+        let mut e = Session::builder(&path).engine(Engine::MicroFlow).build().unwrap();
+        let mut it = Session::builder(&path).engine(Engine::Interp).build().unwrap();
         let ds = microflow::format::mds::MdsDataset::load(art.join(format!("{name}_test.mds"))).unwrap();
         let qp = e.input_qparams();
         for i in 0..10 {
             let x = qp.quantize_slice(ds.sample(i));
-            let a = e.predict(&x);
-            let b = it.invoke(&x).unwrap();
+            let a = e.run(&x).unwrap();
+            let b = it.run(&x).unwrap();
             match name {
                 "speech" => {
                     for (u, v) in a.iter().zip(&b) {
@@ -83,6 +81,27 @@ fn interpreter_agrees_with_engine_per_paper() {
             }
         }
     }
+}
+
+#[test]
+fn session_batches_match_singles_on_real_models() {
+    let art = require_artifacts!();
+    let mut s = Session::builder(art.join("speech.mfb")).build().unwrap();
+    let (ilen, olen) = (s.input_len(), s.output_len());
+    let mut rng = Prng::new(11);
+    let inputs = rng.i8_vec(4 * ilen);
+    let batched = s.run_batch(&inputs, 4).unwrap();
+    for i in 0..4 {
+        let single = s.run(&inputs[i * ilen..(i + 1) * ilen]).unwrap();
+        assert_eq!(&batched[i * olen..(i + 1) * olen], single.as_slice(), "sample {i}");
+    }
+    // pointer stability on a real model: no allocation on the batch path
+    let p0 = s.buffer_ptrs();
+    let mut out = vec![0i8; 4 * olen];
+    for _ in 0..5 {
+        s.run_batch_into(&inputs, 4, &mut out).unwrap();
+    }
+    assert_eq!(s.buffer_ptrs(), p0);
 }
 
 #[test]

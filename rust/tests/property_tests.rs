@@ -102,7 +102,7 @@ fn prop_view_extraction_covers_input_exactly_once_stride_k() {
         let oh = rng.range_i64(1, 4) as usize;
         let c = rng.range_i64(1, 3) as usize;
         let h = k * oh;
-        let geo = ConvGeometry::new(h, h, c, k, k, k, k, Padding::Valid);
+        let geo = ConvGeometry::new(h, h, c, k, k, k, k, Padding::Valid).unwrap();
         let input = rng.i8_vec(h * h * c);
         let mut seen = vec![0u32; input.len()];
         let mut view = vec![0i8; k * k * c];
@@ -131,7 +131,7 @@ fn prop_conv_1x1_equals_fc_per_pixel() {
             rng.range_i64(1, 6) as usize,
             rng.range_i64(1, 6) as usize,
         );
-        let geo = ConvGeometry::new(h, w, cin, 1, 1, 1, 1, Padding::Valid);
+        let geo = ConvGeometry::new(h, w, cin, 1, 1, 1, 1, Padding::Valid).unwrap();
         let input = rng.i8_vec(h * w * cin);
         let filters = rng.i8_vec(cout * cin); // [Cout, 1, 1, Cin]
         let bias = rng.i32_vec(cout, -500, 500);
@@ -173,7 +173,7 @@ fn prop_depthwise_mult1_matches_groupwise_conv() {
     for case in 0..30 {
         let h = rng.range_i64(3, 8) as usize;
         let k = rng.range_i64(1, 3) as usize;
-        let geo = ConvGeometry::new(h, h, 1, k, k, 1, 1, Padding::Same);
+        let geo = ConvGeometry::new(h, h, 1, k, k, 1, 1, Padding::Same).unwrap();
         let input = rng.i8_vec(h * h);
         let filters = rng.i8_vec(k * k); // both layouts coincide at C=1
         let bias = rng.i32_vec(1, -500, 500);
