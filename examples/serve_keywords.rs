@@ -15,11 +15,12 @@
 //! against the dataset labels (accuracy must match the Table-5 level).
 //! Results are recorded in EXPERIMENTS.md §E10.
 
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
-use microflow::api::{Engine, Session};
-use microflow::coordinator::{Server, ServerConfig};
+use microflow::api::{Engine, Session, SessionCache};
+use microflow::coordinator::{Fleet, PoolSpec, Server, ServerConfig};
 use microflow::eval::accuracy::argmax;
 use microflow::format::mds::MdsDataset;
 use microflow::util::Prng;
@@ -27,15 +28,24 @@ use microflow::util::Prng;
 const REQUESTS: usize = 1000;
 const RATE_RPS: f64 = 400.0;
 
-fn drive(name: &str, server: &Server, ds: &MdsDataset, requests: usize, rate: f64) -> Result<f64> {
-    let qp = server.input_qparams();
+/// Open-loop Poisson load over any submit endpoint (`Server` or `Fleet`
+/// both expose the same submit shape), tallying argmax accuracy against
+/// the dataset labels. The caller prints its own metrics snapshot.
+fn drive_load(
+    name: &str,
+    qp: microflow::tensor::quant::QParams,
+    submit: impl Fn(Vec<i8>) -> Result<std::sync::mpsc::Receiver<Result<Vec<i8>>>>,
+    ds: &MdsDataset,
+    requests: usize,
+    rate: f64,
+) -> Result<f64> {
     let mut rng = Prng::new(7);
     let mut pending = Vec::with_capacity(requests);
     let t0 = Instant::now();
     for i in 0..requests {
         let idx = i % ds.n;
         let q = qp.quantize_slice(ds.sample(idx));
-        pending.push((idx, server.submit(q)?));
+        pending.push((idx, submit(q)?));
         std::thread::sleep(Duration::from_secs_f64(rng.exp(rate)));
     }
     let mut hits = 0usize;
@@ -47,8 +57,6 @@ fn drive(name: &str, server: &Server, ds: &MdsDataset, requests: usize, rate: f6
     }
     let wall = t0.elapsed().as_secs_f64();
     let acc = hits as f64 / requests as f64;
-    let snap = server.metrics.snapshot();
-    println!("[{name}] {}", snap);
     println!(
         "[{name}] wall {:.2}s | offered {:.0} rps | achieved {:.0} rps | accuracy {:.1}%",
         wall,
@@ -56,6 +64,20 @@ fn drive(name: &str, server: &Server, ds: &MdsDataset, requests: usize, rate: f6
         requests as f64 / wall,
         acc * 100.0
     );
+    Ok(acc)
+}
+
+fn drive(name: &str, server: &Server, ds: &MdsDataset, requests: usize, rate: f64) -> Result<f64> {
+    let acc = drive_load(name, server.input_qparams(), |q| server.submit(q), ds, requests, rate)?;
+    println!("[{name}] {}", server.metrics.snapshot());
+    Ok(acc)
+}
+
+/// Same driver over a fleet: dispatch picks the least-loaded pool per
+/// request; per-pool metrics land in the snapshot.
+fn drive_fleet(name: &str, fleet: &Fleet, ds: &MdsDataset, requests: usize, rate: f64) -> Result<f64> {
+    let acc = drive_load(name, fleet.input_qparams(), |q| fleet.submit(q), ds, requests, rate)?;
+    print!("[{name}] {}", fleet.snapshot());
     Ok(acc)
 }
 
@@ -98,6 +120,52 @@ fn main() -> Result<()> {
     } else {
         println!("\npjrt backend: skipped — built without the `pjrt` feature");
     }
+
+    // --- backend 3: a heterogeneous fleet — native pool (low latency) +
+    //     interpreter pool (the TFLM-style baseline as spill capacity; on
+    //     a pjrt build, swap in a PJRT pool for bulk throughput). Replica
+    //     sessions build through the warm cache: one compile, N replicas.
+    println!();
+    let cache = Arc::new(SessionCache::new());
+    // same batcher as the plain backends, plus the fleet's per-replica
+    // adaptive tuning
+    let fleet_cfg = ServerConfig { adaptive: true, ..cfg };
+    let native_pool: Vec<Session> = (0..2)
+        .map(|i| {
+            Session::builder(&mfb_path)
+                .engine(Engine::MicroFlow)
+                .label(format!("native/{i}"))
+                .cache(&cache)
+                .build()
+        })
+        .collect::<Result<_>>()?;
+    let interp_pool = vec![Session::builder(&mfb_path)
+        .engine(Engine::Interp)
+        .label("interp/0")
+        .cache(&cache)
+        .build()?];
+    let fleet = Fleet::start(vec![
+        PoolSpec::new("native", native_pool).config(fleet_cfg),
+        PoolSpec::new("interp", interp_pool).config(fleet_cfg),
+    ])?;
+    println!(
+        "fleet: {} replicas in 2 pools (warm cache: {} hits / {} misses)",
+        fleet.replicas(),
+        cache.hits(),
+        cache.misses()
+    );
+    let acc_fleet = drive_fleet("fleet      ", &fleet, &ds, REQUESTS, RATE_RPS)?;
+    let snap = fleet.snapshot();
+    anyhow::ensure!(
+        snap.totals.completed == REQUESTS as u64 && snap.totals.errors == 0,
+        "fleet lost requests: {snap}"
+    );
+    fleet.shutdown();
+    // which pool served each request is timing-dependent, and the interp
+    // pool may flip argmax on near-ties (±1 per element) — so hold the
+    // fleet to the same absolute quality bar, not exact parity with the
+    // all-native run
+    anyhow::ensure!(acc_fleet > 0.80, "fleet serving accuracy collapsed: {acc_fleet}");
 
     anyhow::ensure!(acc_native > 0.80, "serving accuracy collapsed: {acc_native}");
     println!("\nserve_keywords OK: all layers compose (engine == AOT graph, accuracy {:.1}%)", acc_native * 100.0);

@@ -1,0 +1,128 @@
+//! Fleet throughput bench — requests/sec vs replica count and pool mix.
+//!
+//! Runs WITHOUT build artifacts: a deterministic synthetic FC chain
+//! (`microflow::synth`) is served by fleets of growing size under a
+//! closed-loop multi-threaded client, measuring end-to-end requests/sec
+//! through submit → least-outstanding dispatch → dynamic batcher →
+//! `run_batch_into`. Scaling is sublinear on small models (the mutex'd
+//! queue serializes batch assembly) — the point is to see where it bends.
+//!
+//! Also reports the warm-session-cache effect: every fleet builds its
+//! replicas through one `SessionCache`, so N replicas cost one compile.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use microflow::api::{Engine, Session, SessionCache};
+use microflow::coordinator::{Fleet, PoolSpec};
+use microflow::format::mfb::MfbModel;
+use microflow::sim::report::{emit, Table};
+use microflow::synth;
+use microflow::util::Prng;
+
+const CLIENT_THREADS: usize = 8;
+const REQUESTS_PER_THREAD: usize = 250;
+
+/// Closed-loop: each client thread round-trips its requests as fast as
+/// the fleet answers. Returns requests/sec.
+fn drive(fleet: &Arc<Fleet>, input: &[i8]) -> f64 {
+    let total = CLIENT_THREADS * REQUESTS_PER_THREAD;
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for _ in 0..CLIENT_THREADS {
+        let fleet = Arc::clone(fleet);
+        let input = input.to_vec();
+        handles.push(std::thread::spawn(move || {
+            for _ in 0..REQUESTS_PER_THREAD {
+                fleet.infer(input.clone()).unwrap();
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    total as f64 / t0.elapsed().as_secs_f64()
+}
+
+fn pool(m: &MfbModel, cache: &Arc<SessionCache>, engine: Engine, n: usize, name: &str) -> PoolSpec {
+    PoolSpec::new(
+        name,
+        (0..n)
+            .map(|i| {
+                Session::builder(m)
+                    .engine(engine)
+                    .label(format!("{name}/{i}"))
+                    .cache(cache)
+                    .build()
+                    .unwrap()
+            })
+            .collect(),
+    )
+}
+
+fn main() {
+    let mut rng = Prng::new(0xF1EE7);
+    // a model heavy enough that workers dominate the queue mutex
+    let m = synth::fc_chain(&mut rng, &[64, 128, 128, 32, 4]);
+    let input = rng.i8_vec(64);
+
+    let mut t = Table::new(
+        "fleet throughput (closed loop, 8 client threads)",
+        &["fleet", "replicas", "req/s", "vs x1", "cache hit/miss"],
+    );
+    let mut base = 0.0f64;
+    for replicas in [1usize, 2, 4] {
+        let cache = Arc::new(SessionCache::new());
+        let fleet = Arc::new(
+            Fleet::start(vec![pool(&m, &cache, Engine::MicroFlow, replicas, "native")]).unwrap(),
+        );
+        let rps = drive(&fleet, &input);
+        if replicas == 1 {
+            base = rps;
+        }
+        t.row(vec![
+            format!("native x{replicas}"),
+            replicas.to_string(),
+            format!("{rps:.0}"),
+            format!("{:.2}x", rps / base),
+            format!("{}/{}", cache.hits(), cache.misses()),
+        ]);
+        if let Ok(fleet) = Arc::try_unwrap(fleet) {
+            fleet.shutdown();
+        }
+    }
+
+    // heterogeneous: 2 native + 2 interp pools — dispatch keeps the slower
+    // interpreter pool from becoming the bottleneck
+    let cache = Arc::new(SessionCache::new());
+    let fleet = Arc::new(
+        Fleet::start(vec![
+            pool(&m, &cache, Engine::MicroFlow, 2, "native"),
+            pool(&m, &cache, Engine::Interp, 2, "interp"),
+        ])
+        .unwrap(),
+    );
+    let rps = drive(&fleet, &input);
+    t.row(vec![
+        "native x2 + interp x2".into(),
+        "4".into(),
+        format!("{rps:.0}"),
+        format!("{:.2}x", rps / base),
+        format!("{}/{}", cache.hits(), cache.misses()),
+    ]);
+    let snap = fleet.snapshot();
+    assert_eq!(
+        snap.totals.completed,
+        (CLIENT_THREADS * REQUESTS_PER_THREAD) as u64,
+        "fleet lost requests"
+    );
+    for (name, s) in &snap.per_pool {
+        println!("  [{name}] {s}");
+    }
+    if let Ok(fleet) = Arc::try_unwrap(fleet) {
+        fleet.shutdown();
+    }
+
+    emit("fleet_throughput", &t);
+    println!("fleet_throughput OK");
+}

@@ -31,8 +31,9 @@ fn main() {
         let pc = PreComputed::fold(&b, &colsum, k, 0.05, 3, 0.02, 0, 0.001, 0, 0.08, -5, FusedAct::Relu);
         let m = FixedPointMultiplier::from_real(0.05 * 0.02 / 0.08);
         let mut out = vec![0i8; n];
+        let mut acc = vec![0i32; n];
         let s_mf = time_iters(10, 200, || {
-            fully_connected::fully_connected_microflow(&x, &w, k, n, &pc, &mut out);
+            fully_connected::fully_connected_microflow(&x, &w, k, n, &pc, &mut acc, &mut out);
             black_box(&out);
         });
         let s_tf = time_iters(10, 200, || {

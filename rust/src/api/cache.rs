@@ -1,0 +1,178 @@
+//! Warm-session cache — amortize compiles across replica builds.
+//!
+//! A fleet builds many sessions over the *same* model (N replicas per
+//! pool, pools per model, restarts). The expensive part of
+//! `SessionBuilder::build` is everything before execution: reading the
+//! container, parsing it, folding constants and planning memory. This
+//! cache keys that work by a **content hash** of the container bytes
+//! ([`ModelSource::content_hash`]), so repeated builds of the same model
+//! reuse:
+//!
+//! * the compiled plan (`Arc<CompiledModel>`) for native sessions — every
+//!   replica shares one folded-weights image, the host-side analogue of N
+//!   cores streaming the same Flash;
+//! * the container bytes (`Arc<Vec<u8>>`) for interpreter sessions — the
+//!   interpreter still re-parses per session (that runtime parsing *is*
+//!   the TFLM cost being modeled), but the bytes are read/serialized once.
+//!
+//! PJRT sessions are not cached: the XLA client/executable graph holds
+//! `Rc` state that must stay owned by exactly one session (see the
+//! `Send` note in `api::sessions`).
+
+use std::collections::hash_map::Entry;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use super::ModelSource;
+use crate::compiler::plan::{CompileOptions, CompiledModel};
+use crate::format::mfb::MfbModel;
+
+/// FNV-1a 64-bit over the container bytes — stable, dependency-free, and
+/// plenty for cache keying (collisions would need adversarial containers).
+pub fn content_hash64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Shared warm cache; hand the same instance (via `Arc`) to every
+/// `SessionBuilder` that should share compiled plans.
+#[derive(Debug, Default)]
+pub struct SessionCache {
+    compiled: Mutex<HashMap<(u64, bool), Arc<CompiledModel>>>,
+    bytes: Mutex<HashMap<u64, Arc<Vec<u8>>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl SessionCache {
+    pub fn new() -> SessionCache {
+        SessionCache::default()
+    }
+
+    /// Cache lookups that found an entry.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Cache lookups that had to do the work.
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    fn record(&self, hit: bool) {
+        if hit {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// `(content hash, container bytes)` for `source`, keyed by hash.
+    fn bytes_entry(&self, source: ModelSource) -> Result<(u64, Arc<Vec<u8>>)> {
+        let bytes = source.into_bytes()?;
+        let h = content_hash64(&bytes);
+        let mut map = self.bytes.lock().unwrap();
+        let (hit, arc) = match map.entry(h) {
+            Entry::Occupied(e) => (true, Arc::clone(e.get())),
+            Entry::Vacant(v) => (false, Arc::clone(v.insert(Arc::new(bytes)))),
+        };
+        drop(map);
+        self.record(hit);
+        Ok((h, arc))
+    }
+
+    /// Container bytes for `source`, keyed by content hash.
+    pub(crate) fn cached_bytes(&self, source: ModelSource) -> Result<Arc<Vec<u8>>> {
+        Ok(self.bytes_entry(source)?.1)
+    }
+
+    /// Compiled plan for `source` under the given paging mode; compiles at
+    /// most once per (content hash, paging) pair.
+    pub(crate) fn compiled_plan(
+        &self,
+        source: ModelSource,
+        paging: bool,
+    ) -> Result<Arc<CompiledModel>> {
+        let (h, bytes) = self.bytes_entry(source)?;
+        if let Some(c) = self.compiled.lock().unwrap().get(&(h, paging)) {
+            self.record(true);
+            return Ok(Arc::clone(c));
+        }
+        // compile outside the lock (it can be seconds for big models);
+        // a racing builder may compile too — last insert wins, both valid
+        let model = MfbModel::parse(&bytes)?;
+        let compiled = Arc::new(CompiledModel::compile(&model, CompileOptions { paging })?);
+        self.compiled.lock().unwrap().insert((h, paging), Arc::clone(&compiled));
+        self.record(false);
+        Ok(compiled)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::{Engine, Session};
+    use crate::format::mfb::tests::tiny_mfb;
+
+    #[test]
+    fn fnv_is_stable_and_input_sensitive() {
+        let a = content_hash64(b"microflow");
+        assert_eq!(a, content_hash64(b"microflow"));
+        assert_ne!(a, content_hash64(b"microflou"));
+        assert_ne!(content_hash64(b""), content_hash64(b"\0"));
+    }
+
+    #[test]
+    fn native_replicas_share_one_compiled_plan() {
+        let cache = Arc::new(SessionCache::new());
+        let mut sessions: Vec<Session> = (0..4)
+            .map(|_| {
+                Session::builder(tiny_mfb())
+                    .engine(Engine::MicroFlow)
+                    .cache(&cache)
+                    .build()
+                    .unwrap()
+            })
+            .collect();
+        // first build: bytes miss + compile miss; then 3x (bytes hit + plan hit)
+        assert_eq!(cache.misses(), 2, "hits {} misses {}", cache.hits(), cache.misses());
+        assert_eq!(cache.hits(), 6, "hits {} misses {}", cache.hits(), cache.misses());
+        for s in &mut sessions {
+            assert_eq!(s.run(&[3, 1]).unwrap(), vec![2, 0, 5]);
+        }
+    }
+
+    #[test]
+    fn paging_modes_are_cached_separately() {
+        let cache = Arc::new(SessionCache::new());
+        let mut a = Session::builder(tiny_mfb()).cache(&cache).build().unwrap();
+        let mut b =
+            Session::builder(tiny_mfb()).paging(true).cache(&cache).build().unwrap();
+        // second build reuses the bytes but compiles its own paged plan
+        assert_eq!(cache.misses(), 3);
+        assert_eq!(a.run(&[3, 1]).unwrap(), b.run(&[3, 1]).unwrap());
+    }
+
+    #[test]
+    fn interp_builds_reuse_the_container_bytes() {
+        let cache = Arc::new(SessionCache::new());
+        for _ in 0..3 {
+            let mut s = Session::builder(tiny_mfb())
+                .engine(Engine::Interp)
+                .cache(&cache)
+                .build()
+                .unwrap();
+            let out = s.run(&[3, 1]).unwrap();
+            assert_eq!(out.len(), 3);
+        }
+        assert_eq!(cache.misses(), 1);
+        assert_eq!(cache.hits(), 2);
+    }
+}

@@ -40,11 +40,14 @@
 //! (compilation introspection, the sim memory model), but every serving
 //! path in the crate goes through this module.
 
+mod cache;
 mod sessions;
 
+pub use cache::{content_hash64, SessionCache};
 pub use sessions::{InterpSession, NativeSession, PjrtSession};
 
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
@@ -148,6 +151,15 @@ impl IoSignature {
         }
     }
 
+    /// Read the signature off a compiled plan (the same data the container
+    /// carries, surviving compilation — the warm-cache path uses this).
+    pub fn of_compiled(c: &crate::compiler::plan::CompiledModel) -> IoSignature {
+        IoSignature {
+            input: TensorSpec::new(c.input_shape.clone(), c.input_qparams),
+            output: TensorSpec::new(c.output_shape.clone(), c.output_qparams),
+        }
+    }
+
     pub fn input_len(&self) -> usize {
         self.input.len()
     }
@@ -188,6 +200,21 @@ impl ModelSource {
             ModelSource::Path(p) => MfbModel::load(&p)?,
             ModelSource::Bytes(b) => MfbModel::parse(&b)?,
             ModelSource::Parsed(m) => m,
+        })
+    }
+
+    /// Content hash of the container bytes (FNV-1a 64) — the warm-cache
+    /// key: two sources with the same serialized container hash equal
+    /// regardless of where they came from.
+    pub fn content_hash(&self) -> Result<u64> {
+        Ok(match self {
+            ModelSource::Path(p) => content_hash64(
+                &std::fs::read(p).with_context(|| format!("reading {}", p.display()))?,
+            ),
+            ModelSource::Bytes(b) => content_hash64(b),
+            ModelSource::Parsed(m) => content_hash64(
+                &crate::format::builder::serialize(m).context("serializing parsed model")?,
+            ),
         })
     }
 
@@ -255,13 +282,13 @@ impl From<&MfbModel> for ModelSource {
 /// An executor for one loaded model.
 ///
 /// The hot-path contract: `run_into` and `run_batch_into` never allocate
-/// or resize the **session-owned buffers** (arena, ping-pong activations,
-/// kernel scratch, staging) — asserted by the pointer-stability
-/// conformance tests — and write results only into caller-provided
-/// slices. Two known exemptions remain: the PJRT implementation stages
-/// literals at the XLA FFI boundary, and the wide-output (`n > 8`)
-/// FullyConnected kernel still allocates its accumulator per call (open
-/// item in ROADMAP.md). All three engines implement this.
+/// at all on the host engines — buffers (arena, ping-pong activations,
+/// kernel scratch, i32 accumulators, staging) are plan-sized at build
+/// time, asserted both by the pointer-stability conformance tests and by
+/// the counting-allocator suite (`tests/alloc_free.rs`) — and write
+/// results only into caller-provided slices. One exemption remains: the
+/// PJRT implementation stages literals at the XLA FFI boundary. All three
+/// engines implement this.
 pub trait InferenceSession: Send {
     fn engine(&self) -> Engine;
 
@@ -311,6 +338,7 @@ pub(crate) fn check_batch(in_len: usize, out_len: usize, n: usize, ilen: usize, 
 /// An engine-erased inference session — what the serving layers hold.
 pub struct Session {
     inner: Box<dyn InferenceSession>,
+    label: Option<String>,
 }
 
 impl Session {
@@ -322,7 +350,13 @@ impl Session {
     /// Wrap a custom [`InferenceSession`] implementation (new backends
     /// plug into the serving stack through this).
     pub fn from_impl(inner: Box<dyn InferenceSession>) -> Session {
-        Session { inner }
+        Session { inner, label: None }
+    }
+
+    /// Operator-assigned name (set via [`SessionBuilder::label`]) — shown
+    /// in fleet metrics and debug output; defaults to the engine name.
+    pub fn label(&self) -> &str {
+        self.label.as_deref().unwrap_or_else(|| self.inner.engine().name())
     }
 
     pub fn engine(&self) -> Engine {
@@ -396,6 +430,7 @@ impl std::fmt::Debug for Session {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("Session")
             .field("engine", &self.engine())
+            .field("label", &self.label())
             .field("signature", self.signature())
             .finish()
     }
@@ -421,6 +456,8 @@ pub struct SessionBuilder {
     paging: bool,
     preferred_batch: Option<usize>,
     pjrt_artifacts: Option<(PathBuf, String)>,
+    label: Option<String>,
+    cache: Option<Arc<SessionCache>>,
 }
 
 impl SessionBuilder {
@@ -431,6 +468,8 @@ impl SessionBuilder {
             paging: false,
             preferred_batch: None,
             pjrt_artifacts: None,
+            label: None,
+            cache: None,
         }
     }
 
@@ -463,21 +502,51 @@ impl SessionBuilder {
         self
     }
 
+    /// Name the session (shown in fleet metrics and `Debug` output).
+    pub fn label(mut self, label: impl Into<String>) -> Self {
+        self.label = Some(label.into());
+        self
+    }
+
+    /// Build through a warm [`SessionCache`]: native sessions reuse the
+    /// compiled plan of any earlier build of the same container (keyed by
+    /// [`ModelSource::content_hash`] + paging mode); interpreter sessions
+    /// reuse the container bytes. PJRT sessions are never cached.
+    pub fn cache(mut self, cache: &Arc<SessionCache>) -> Self {
+        self.cache = Some(Arc::clone(cache));
+        self
+    }
+
     /// Construct the session: load/parse the model, run the selected
     /// engine's setup (compile / allocate-tensors / XLA compile), and
     /// box it behind the uniform surface.
     pub fn build(self) -> Result<Session> {
         let inner: Box<dyn InferenceSession> = match self.engine {
-            Engine::MicroFlow => Box::new(NativeSession::create(
-                self.source.into_model()?,
-                self.paging,
-                self.preferred_batch,
-            )?),
+            Engine::MicroFlow => match &self.cache {
+                Some(cache) => Box::new(NativeSession::from_compiled(
+                    cache.compiled_plan(self.source, self.paging)?,
+                    self.preferred_batch,
+                )),
+                None => Box::new(NativeSession::create(
+                    self.source.into_model()?,
+                    self.paging,
+                    self.preferred_batch,
+                )?),
+            },
             Engine::Interp => {
                 if self.paging {
                     bail!("paging is a MicroFlow-engine option; the interpreter has no paged mode");
                 }
-                Box::new(InterpSession::create(self.source.into_bytes()?, self.preferred_batch)?)
+                match &self.cache {
+                    Some(cache) => Box::new(InterpSession::create(
+                        &cache.cached_bytes(self.source)?,
+                        self.preferred_batch,
+                    )?),
+                    None => Box::new(InterpSession::create(
+                        &self.source.into_bytes()?,
+                        self.preferred_batch,
+                    )?),
+                }
             }
             Engine::Pjrt => {
                 if self.paging {
@@ -496,7 +565,7 @@ impl SessionBuilder {
                 Box::new(PjrtSession::create(model, &dir, &name, self.preferred_batch)?)
             }
         };
-        Ok(Session { inner })
+        Ok(Session { inner, label: self.label })
     }
 }
 
@@ -618,6 +687,28 @@ mod tests {
         assert!(s.run_into(&[1, 2], &mut out).is_err());
         let mut out = vec![0i8; 6];
         assert!(s.run_batch_into(&[1, 2, 3], 2, &mut out).is_err());
+    }
+
+    #[test]
+    fn content_hash_is_source_independent() {
+        // the same container hashes equal whether held as bytes or parsed
+        let bytes = tiny_mfb();
+        let parsed = MfbModel::parse(&bytes).unwrap();
+        let h_bytes = ModelSource::from(bytes.clone()).content_hash().unwrap();
+        let h_parsed = ModelSource::from(parsed).content_hash().unwrap();
+        assert_eq!(h_bytes, h_parsed);
+        let mut other = bytes;
+        *other.last_mut().unwrap() ^= 1;
+        assert_ne!(h_bytes, ModelSource::from(other).content_hash().unwrap());
+    }
+
+    #[test]
+    fn label_defaults_to_engine_name() {
+        let s = tiny_session(Engine::MicroFlow);
+        assert_eq!(s.label(), "microflow");
+        let s = Session::builder(tiny_mfb()).label("pool-a/0").build().unwrap();
+        assert_eq!(s.label(), "pool-a/0");
+        assert!(format!("{s:?}").contains("pool-a/0"));
     }
 
     #[test]

@@ -12,11 +12,12 @@
 //!   execution against the compiled batch variants.
 
 use std::path::Path;
+use std::sync::Arc;
 
 use anyhow::{bail, ensure, Result};
 
 use super::{check_batch, Engine, InferenceSession, IoSignature, DEFAULT_PREFERRED_BATCH};
-use crate::compiler::plan::CompileOptions;
+use crate::compiler::plan::{CompileOptions, CompiledModel};
 use crate::engine::MicroFlowEngine;
 use crate::format::mfb::MfbModel;
 use crate::interp::resolver::OpResolver;
@@ -54,6 +55,21 @@ impl NativeSession {
             preferred_batch: preferred_batch.unwrap_or(DEFAULT_PREFERRED_BATCH),
         })
     }
+
+    /// Warm-cache path: reuse an already-compiled plan (shared via `Arc`,
+    /// so replicas of the same model share one folded-weights image); only
+    /// the per-session scratch buffers are allocated here.
+    pub(super) fn from_compiled(
+        compiled: Arc<CompiledModel>,
+        preferred_batch: Option<usize>,
+    ) -> NativeSession {
+        let signature = IoSignature::of_compiled(&compiled);
+        NativeSession {
+            engine: MicroFlowEngine::from_compiled(compiled),
+            signature,
+            preferred_batch: preferred_batch.unwrap_or(DEFAULT_PREFERRED_BATCH),
+        }
+    }
 }
 
 impl InferenceSession for NativeSession {
@@ -76,8 +92,7 @@ impl InferenceSession for NativeSession {
     }
 
     fn buffer_ptrs(&self) -> Vec<usize> {
-        let (a, b, k) = self.engine.buffer_ptrs();
-        vec![a, b, k]
+        self.engine.buffer_ptrs()
     }
 }
 
@@ -89,8 +104,8 @@ pub struct InterpSession {
 }
 
 impl InterpSession {
-    pub(super) fn create(bytes: Vec<u8>, preferred_batch: Option<usize>) -> Result<InterpSession> {
-        let interp = Interpreter::new(&bytes, &OpResolver::with_all_kernels())?;
+    pub(super) fn create(bytes: &[u8], preferred_batch: Option<usize>) -> Result<InterpSession> {
+        let interp = Interpreter::new(bytes, &OpResolver::with_all_kernels())?;
         let signature = IoSignature::of_model(interp.model());
         Ok(InterpSession {
             interp,

@@ -7,9 +7,15 @@
 //! * `verify <model>`    — golden-vector cross-check of all engines;
 //! * `deploy <model> <mcu>` — simulate a deployment: memory fit, timing,
 //!   energy on one Table-4 device;
-//! * `serve <model>`     — spin up the coordinator under synthetic load.
+//! * `serve <model>`     — spin up the coordinator under synthetic load,
+//!   as a homogeneous replica set (`--replicas`) or a heterogeneous
+//!   fleet (`--engine-mix microflow:2,tflm:1`).
 
 use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::api::Engine;
 
 /// Parsed command line: positional args + `--key value` / `--flag` options.
 #[derive(Debug, Default)]
@@ -62,6 +68,33 @@ impl Args {
     }
 }
 
+/// Parse a `--engine-mix` value: comma-separated `engine:replicas` pool
+/// specs, e.g. `microflow:2,tflm:1` or `pjrt:1,microflow:4`. An omitted
+/// count means one replica.
+pub fn parse_engine_mix(s: &str) -> Result<Vec<(Engine, usize)>> {
+    let mut mix = Vec::new();
+    for part in s.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            bail!("empty pool spec in --engine-mix {s:?}");
+        }
+        let (engine, count) = match part.split_once(':') {
+            Some((e, c)) => {
+                let count: usize = c
+                    .parse()
+                    .with_context(|| format!("bad replica count {c:?} in --engine-mix {s:?}"))?;
+                (e, count)
+            }
+            None => (part, 1),
+        };
+        if count == 0 {
+            bail!("pool {engine:?} has 0 replicas in --engine-mix {s:?}");
+        }
+        mix.push((engine.parse::<Engine>()?, count));
+    }
+    Ok(mix)
+}
+
 pub const USAGE: &str = "\
 microflow — MicroFlow (Carnelos et al., 2024) reproduction CLI
 
@@ -76,8 +109,22 @@ USAGE:
   microflow deploy  <model> <mcu> [--paging] [--engine microflow|tflm]
                                            simulate a Table-4 deployment
   microflow serve   <model> [--requests N] [--rate RPS] [--backend E]
-                    [--replicas R] [--batch B] [--paging]
+                    [--replicas R] [--engine-mix MIX] [--batch B]
+                    [--no-adaptive] [--paging]
                                            serve synthetic load, print metrics
+
+serve options:
+  --replicas R      session replicas of --backend (one worker each; default 2)
+  --engine-mix MIX  heterogeneous fleet instead of --backend/--replicas:
+                    comma-separated engine:replicas pools, each pool with its
+                    own queue, batcher and metrics, dispatched by least
+                    outstanding requests — e.g. --engine-mix microflow:2,tflm:1
+                    (pjrt pools need a `--features pjrt` build)
+  --batch B         dynamic batcher target batch size (default 8)
+  --no-adaptive     disable per-replica batcher tuning from observed queue depth
+  Replica sessions build through the warm session cache: repeated builds of
+  the same model reuse one compiled plan (reported at startup).
+
   microflow help                           this text
 
 Models: sine | speech | person (built by `make artifacts`)
@@ -112,5 +159,23 @@ mod tests {
         let a = parse("models");
         assert_eq!(a.opt_usize("index", 7), 7);
         assert!(!a.flag("paging"));
+    }
+
+    #[test]
+    fn engine_mix_parses_pools() {
+        let mix = parse_engine_mix("microflow:2,tflm:1").unwrap();
+        assert_eq!(mix, vec![(Engine::MicroFlow, 2), (Engine::Interp, 1)]);
+        // bare engine = one replica; whitespace tolerated
+        let mix = parse_engine_mix("pjrt, native:3").unwrap();
+        assert_eq!(mix, vec![(Engine::Pjrt, 1), (Engine::MicroFlow, 3)]);
+    }
+
+    #[test]
+    fn engine_mix_rejects_malformed_specs() {
+        assert!(parse_engine_mix("").is_err());
+        assert!(parse_engine_mix("microflow:x").is_err());
+        assert!(parse_engine_mix("microflow:0").is_err());
+        assert!(parse_engine_mix("warp-drive:1").is_err());
+        assert!(parse_engine_mix("microflow:1,,tflm:1").is_err());
     }
 }

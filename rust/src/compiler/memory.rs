@@ -10,7 +10,21 @@
 //! Contrast with the TFLM arena ([`crate::interp::arena`]): sized for the
 //! worst case, allocated for the whole lifetime, never freed.
 
-use super::plan::Step;
+use super::plan::{Step, StepKind};
+
+pub use crate::kernels::fully_connected::FC_NARROW_MAX;
+
+/// i32 accumulator elements a step needs from the executor's shared
+/// scratch (wide-output unpaged FullyConnected only: narrow outputs use a
+/// stack array, paged execution reduces into a single accumulator).
+/// Sized from the kernel's own [`FC_NARROW_MAX`] so the planner and the
+/// kernel's path selection cannot disagree.
+pub fn step_acc_i32(kind: &StepKind) -> usize {
+    match kind {
+        StepKind::FullyConnected { n, paged, .. } if !paged && *n > FC_NARROW_MAX => *n,
+        _ => 0,
+    }
+}
 
 /// Per-step memory accounting (bytes).
 #[derive(Clone, Debug, PartialEq)]
@@ -41,6 +55,10 @@ pub struct MemoryPlan {
     pub buf_b: usize,
     /// Largest kernel scratch (view/page buffer).
     pub scratch: usize,
+    /// Largest i32 accumulator scratch (elements) any wide-output
+    /// FullyConnected needs — threaded through the plan so the kernel
+    /// never allocates its accumulators per call.
+    pub acc_i32: usize,
 }
 
 impl MemoryPlan {
@@ -54,19 +72,23 @@ impl MemoryPlan {
         let mut buf_a = 0usize;
         let mut buf_b = 0usize;
         let mut scratch = 0usize;
+        let mut acc_i32 = 0usize;
         let mut reads_a = true;
         for (i, s) in steps.iter().enumerate() {
+            let step_acc = step_acc_i32(&s.kind);
             let m = StepMemory {
                 op: s.kind.name(),
                 input: s.in_len,
-                output: if matches!(s.kind, super::plan::StepKind::Reshape) { 0 } else { s.out_len },
-                scratch: s.scratch_len,
+                output: if matches!(s.kind, StepKind::Reshape) { 0 } else { s.out_len },
+                // the i32 accumulators are live during the step, so they
+                // count toward its scratch charge (4 bytes each)
+                scratch: s.scratch_len + step_acc * 4,
             };
             if m.live() > peak {
                 peak = m.live();
                 peak_step = i;
             }
-            if matches!(s.kind, super::plan::StepKind::Reshape) {
+            if matches!(s.kind, StepKind::Reshape) {
                 // in-place: no buffer flip, no new allocation
                 per_step.push(m);
                 continue;
@@ -79,15 +101,17 @@ impl MemoryPlan {
                 buf_a = buf_a.max(s.out_len);
             }
             scratch = scratch.max(s.scratch_len);
+            acc_i32 = acc_i32.max(step_acc);
             reads_a = !reads_a;
             per_step.push(m);
         }
-        MemoryPlan { per_step, peak, peak_step, buf_a, buf_b, scratch }
+        MemoryPlan { per_step, peak, peak_step, buf_a, buf_b, scratch, acc_i32 }
     }
 
-    /// Total bytes the executor actually allocates (ping-pong + scratch).
+    /// Total bytes the executor actually allocates (ping-pong + scratch +
+    /// i32 accumulators).
     pub fn executor_bytes(&self) -> usize {
-        self.buf_a + self.buf_b + self.scratch
+        self.buf_a + self.buf_b + self.scratch + self.acc_i32 * 4
     }
 }
 
@@ -126,11 +150,30 @@ mod tests {
     fn peak_is_biggest_live_set() {
         let steps = vec![fc_step(10, 100), fc_step(100, 4)];
         let plan = MemoryPlan::analyze(&steps);
-        assert_eq!(plan.peak, 110);
+        // wide FC (n = 100): input + output + 100 i32 accumulators
+        assert_eq!(plan.peak, 110 + 400);
         assert_eq!(plan.peak_step, 0);
         // ping-pong sizing: A holds inputs of even steps + outputs of odd
         assert_eq!(plan.buf_a, 10.max(4));
         assert_eq!(plan.buf_b, 100);
+        // accumulator scratch sized for the widest unpaged FC; the narrow
+        // second FC (n = 4) adds nothing
+        assert_eq!(plan.acc_i32, 100);
+        assert_eq!(plan.executor_bytes(), 10 + 100 + 0 + 400);
+    }
+
+    #[test]
+    fn narrow_and_paged_fc_need_no_acc_scratch() {
+        let narrow = vec![fc_step(100, 8)];
+        assert_eq!(MemoryPlan::analyze(&narrow).acc_i32, 0);
+        let mut paged = fc_step(64, 32);
+        if let StepKind::FullyConnected { paged: p, .. } = &mut paged.kind {
+            *p = true;
+        }
+        paged.scratch_len = 64; // page buffer
+        let plan = MemoryPlan::analyze(&[paged]);
+        assert_eq!(plan.acc_i32, 0);
+        assert_eq!(plan.scratch, 64);
     }
 
     #[test]

@@ -5,6 +5,14 @@
 //! latency/throughput trade (vLLM-router style, scaled to TinyML). The
 //! batcher runs inside each worker thread: it owns the receive side of the
 //! bounded request channel.
+//!
+//! [`AdaptiveBatcher`] layers per-replica tuning on top: each worker
+//! observes the queue depth at every batch cut (via
+//! [`Metrics::outstanding`](super::metrics::Metrics::outstanding)) and
+//! moves its own effective `BatcherConfig` between a latency posture
+//! (don't hold a lone request hostage for `max_wait`) and a throughput
+//! posture (the configured target) — the fleet's replica pools enable it
+//! per replica because `preferred_batch` is per-session config.
 
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::time::{Duration, Instant};
@@ -50,6 +58,69 @@ pub fn next_batch(rx: &Receiver<Request>, cfg: &BatcherConfig) -> Option<Vec<Req
     Some(batch)
 }
 
+/// Per-replica batcher tuning driven by observed queue depth.
+///
+/// Deterministic rules (unit-tested below):
+///
+/// * a **deep** observation (queue depth ≥ the configured `max_batch`)
+///   after a cut means the replica is throughput-bound: after
+///   [`ADAPT_STREAK`] consecutive deep cuts the full `max_wait` is
+///   restored so batches fill;
+/// * a **shallow** observation (queue depth ≤ 1) means waiting only adds
+///   latency: after [`ADAPT_STREAK`] consecutive shallow cuts the wait
+///   shrinks to `max_wait / `[`LATENCY_WAIT_DIV`];
+/// * anything in between decays both streaks without changing posture.
+///
+/// `max_batch` itself never exceeds the configured ceiling (which the
+/// server already clamps to the session's `preferred_batch`).
+#[derive(Clone, Copy, Debug)]
+pub struct AdaptiveBatcher {
+    base: BatcherConfig,
+    current: BatcherConfig,
+    deep_streak: u32,
+    shallow_streak: u32,
+}
+
+/// Consecutive same-sign observations before the posture flips.
+pub const ADAPT_STREAK: u32 = 2;
+/// Wait divisor in the latency posture.
+pub const LATENCY_WAIT_DIV: u32 = 8;
+
+impl AdaptiveBatcher {
+    /// Start in the throughput posture (the configured `base`).
+    pub fn new(base: BatcherConfig) -> AdaptiveBatcher {
+        AdaptiveBatcher { base, current: base, deep_streak: 0, shallow_streak: 0 }
+    }
+
+    /// The effective config for the next batch cut.
+    pub fn config(&self) -> BatcherConfig {
+        self.current
+    }
+
+    /// Feed one observation: the queue depth (outstanding requests) seen
+    /// right after a batch was cut.
+    pub fn observe(&mut self, queue_depth: u64) {
+        if queue_depth >= self.base.max_batch as u64 {
+            self.deep_streak += 1;
+            self.shallow_streak = 0;
+        } else if queue_depth <= 1 {
+            self.shallow_streak += 1;
+            self.deep_streak = 0;
+        } else {
+            self.deep_streak = self.deep_streak.saturating_sub(1);
+            self.shallow_streak = self.shallow_streak.saturating_sub(1);
+        }
+        if self.deep_streak >= ADAPT_STREAK {
+            self.current = self.base;
+        } else if self.shallow_streak >= ADAPT_STREAK {
+            self.current = BatcherConfig {
+                max_batch: self.base.max_batch,
+                max_wait: self.base.max_wait / LATENCY_WAIT_DIV,
+            };
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -90,5 +161,39 @@ mod tests {
         let (tx, rx) = sync_channel::<Request>(1);
         drop(tx);
         assert!(next_batch(&rx, &BatcherConfig::default()).is_none());
+    }
+
+    #[test]
+    fn adaptive_shrinks_wait_when_queue_is_shallow() {
+        let base = BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(8) };
+        let mut a = AdaptiveBatcher::new(base);
+        assert_eq!(a.config().max_wait, base.max_wait);
+        a.observe(0);
+        assert_eq!(a.config().max_wait, base.max_wait, "one observation must not flip");
+        a.observe(1);
+        assert_eq!(a.config().max_wait, Duration::from_millis(1), "latency posture after streak");
+        assert_eq!(a.config().max_batch, 8, "batch ceiling unchanged");
+    }
+
+    #[test]
+    fn adaptive_restores_wait_when_queue_is_deep() {
+        let base = BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(8) };
+        let mut a = AdaptiveBatcher::new(base);
+        a.observe(0);
+        a.observe(0); // latency posture
+        assert!(a.config().max_wait < base.max_wait);
+        a.observe(4);
+        a.observe(9); // deep streak: throughput posture
+        assert_eq!(a.config().max_wait, base.max_wait);
+    }
+
+    #[test]
+    fn adaptive_middle_depths_decay_streaks() {
+        let base = BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(8) };
+        let mut a = AdaptiveBatcher::new(base);
+        a.observe(1); // shallow (streak 1)
+        a.observe(3); // middle: decays
+        a.observe(1); // shallow again (streak 1, not 2)
+        assert_eq!(a.config().max_wait, base.max_wait, "decayed streak must not flip");
     }
 }

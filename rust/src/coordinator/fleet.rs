@@ -1,0 +1,286 @@
+//! Fleet scheduler — heterogeneous replica pools with load-aware dispatch.
+//!
+//! PR 1's session API made the three executors interchangeable; this
+//! module makes them *composable under load*. A [`Fleet`] serves one model
+//! from several **replica pools** — each pool a [`Server`]: a group of
+//! session replicas sharing a bounded queue, its own
+//! [`BatcherConfig`](super::batcher::BatcherConfig) and its own
+//! [`Metrics`](super::metrics::Metrics) — so a deployment can mix, say, a
+//! PJRT pool (true batched execution, high throughput) with a native
+//! MicroFlow pool (lowest single-request latency), the multicore-style
+//! parallel dispatch Ariel-ML explores for RIOT targets.
+//!
+//! Dispatch is **least-outstanding-requests**: every submit reads each
+//! pool's `Metrics::outstanding()` (submitted − completed − errors, all
+//! existing counters) and enqueues on the least-loaded pool; ties rotate
+//! round-robin so an idle fleet still spreads work. Per-replica batcher
+//! tuning (`ServerConfig::adaptive`) is on by default for fleet pools:
+//! each worker shifts between latency and throughput posture from the
+//! queue depth it observes.
+//!
+//! Session construction for pools typically goes through the warm
+//! [`SessionCache`](crate::api::SessionCache): replicas of the same model
+//! hash reuse the compiled plan instead of re-running the compiler.
+
+use anyhow::{ensure, Context, Result};
+
+use super::metrics::MetricsSnapshot;
+use super::server::{Server, ServerConfig};
+use crate::api::Session;
+use crate::tensor::quant::QParams;
+
+/// One replica pool spec: a name (shown in metrics), the session replicas
+/// (one worker thread each) and the pool's server/batcher configuration.
+pub struct PoolSpec {
+    pub name: String,
+    pub sessions: Vec<Session>,
+    pub config: ServerConfig,
+}
+
+impl PoolSpec {
+    /// Pool with the default config, adaptive batching on.
+    pub fn new(name: impl Into<String>, sessions: Vec<Session>) -> PoolSpec {
+        let config = ServerConfig { adaptive: true, ..ServerConfig::default() };
+        PoolSpec { name: name.into(), sessions, config }
+    }
+
+    pub fn config(mut self, config: ServerConfig) -> PoolSpec {
+        self.config = config;
+        self
+    }
+}
+
+/// A named running pool.
+struct Pool {
+    name: String,
+    server: Server,
+}
+
+/// A multi-pool serving endpoint for one model.
+pub struct Fleet {
+    pools: Vec<Pool>,
+    /// Round-robin cursor for dispatch tie-breaking.
+    rr: std::sync::atomic::AtomicUsize,
+}
+
+impl Fleet {
+    /// Start a fleet over one or more replica pools. All pools must serve
+    /// the same model signature (engines and batcher configs may differ).
+    pub fn start(pools: Vec<PoolSpec>) -> Result<Fleet> {
+        ensure!(!pools.is_empty(), "need at least one pool");
+        let mut running = Vec::with_capacity(pools.len());
+        for spec in pools {
+            let server = Server::start(spec.sessions, spec.config)
+                .with_context(|| format!("starting pool {:?}", spec.name))?;
+            running.push(Pool { name: spec.name, server });
+        }
+        let sig = running[0].server.signature().clone();
+        for p in &running[1..] {
+            ensure!(
+                *p.server.signature() == sig,
+                "pool {:?} signature diverges from pool {:?}: {:?} vs {:?}",
+                p.name,
+                running[0].name,
+                p.server.signature(),
+                sig
+            );
+        }
+        Ok(Fleet { pools: running, rr: std::sync::atomic::AtomicUsize::new(0) })
+    }
+
+    /// Wrap an already-running server as a single-pool fleet (the router's
+    /// compatibility path).
+    pub fn from_server(name: impl Into<String>, server: Server) -> Fleet {
+        Fleet {
+            pools: vec![Pool { name: name.into(), server }],
+            rr: std::sync::atomic::AtomicUsize::new(0),
+        }
+    }
+
+    pub fn input_qparams(&self) -> QParams {
+        self.pools[0].server.input_qparams()
+    }
+
+    pub fn output_qparams(&self) -> QParams {
+        self.pools[0].server.output_qparams()
+    }
+
+    pub fn input_len(&self) -> usize {
+        self.pools[0].server.input_len()
+    }
+
+    /// Pool names in dispatch order.
+    pub fn pool_names(&self) -> Vec<&str> {
+        self.pools.iter().map(|p| p.name.as_str()).collect()
+    }
+
+    /// Total session replicas across all pools.
+    pub fn replicas(&self) -> usize {
+        self.pools.iter().map(|p| p.server.replicas()).sum()
+    }
+
+    /// Least-outstanding-requests pool selection. Ties rotate through a
+    /// round-robin cursor so an idle fleet spreads work across pools
+    /// instead of always hammering pool 0.
+    fn select_pool(&self) -> &Pool {
+        let n = self.pools.len();
+        let start = self.rr.fetch_add(1, std::sync::atomic::Ordering::Relaxed) % n;
+        let mut best = start;
+        let mut best_load = self.pools[start].server.metrics.outstanding();
+        for off in 1..n {
+            let i = (start + off) % n;
+            let load = self.pools[i].server.metrics.outstanding();
+            if load < best_load {
+                best = i;
+                best_load = load;
+            }
+        }
+        &self.pools[best]
+    }
+
+    /// Submit a quantized request to the least-loaded pool; returns the
+    /// reply channel. Blocks when that pool's queue is full
+    /// (backpressure).
+    pub fn submit(&self, input: Vec<i8>) -> Result<std::sync::mpsc::Receiver<Result<Vec<i8>>>> {
+        self.select_pool().server.submit(input)
+    }
+
+    /// Submit and wait (convenience).
+    pub fn infer(&self, input: Vec<i8>) -> Result<Vec<i8>> {
+        let rx = self.submit(input)?;
+        rx.recv().context("worker dropped reply")?
+    }
+
+    /// Per-pool and aggregated metrics.
+    pub fn snapshot(&self) -> FleetSnapshot {
+        let per_pool: Vec<(String, MetricsSnapshot)> =
+            self.pools.iter().map(|p| (p.name.clone(), p.server.metrics.snapshot())).collect();
+        let mut agg = Totals::default();
+        for (_, s) in &per_pool {
+            agg.submitted += s.submitted;
+            agg.completed += s.completed;
+            agg.errors += s.errors;
+        }
+        FleetSnapshot { totals: agg, per_pool }
+    }
+
+    /// Graceful shutdown: every pool drains its queue and joins workers.
+    pub fn shutdown(self) {
+        for p in self.pools {
+            p.server.shutdown();
+        }
+    }
+}
+
+/// Aggregated request counters across pools.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Totals {
+    pub submitted: u64,
+    pub completed: u64,
+    pub errors: u64,
+}
+
+/// A point-in-time fleet metrics view.
+#[derive(Clone, Debug)]
+pub struct FleetSnapshot {
+    pub totals: Totals,
+    pub per_pool: Vec<(String, MetricsSnapshot)>,
+}
+
+impl std::fmt::Display for FleetSnapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(
+            f,
+            "fleet: {}/{} done ({} err) across {} pools",
+            self.totals.completed,
+            self.totals.submitted,
+            self.totals.errors,
+            self.per_pool.len()
+        )?;
+        for (name, s) in &self.per_pool {
+            writeln!(f, "  {name:16} {s}")?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::{Engine, Session};
+
+    fn tiny_session(engine: Engine, paging: bool) -> Session {
+        Session::builder(crate::format::mfb::tests::tiny_mfb())
+            .engine(engine)
+            .paging(paging)
+            .build()
+            .unwrap()
+    }
+
+    fn two_pool_fleet() -> Fleet {
+        Fleet::start(vec![
+            PoolSpec::new("native", vec![tiny_session(Engine::MicroFlow, false)]),
+            PoolSpec::new("interp", vec![tiny_session(Engine::Interp, false)]),
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn dispatches_and_answers_within_engine_tolerance() {
+        let f = two_pool_fleet();
+        assert_eq!(f.pool_names(), vec!["native", "interp"]);
+        assert_eq!(f.replicas(), 2);
+        for _ in 0..20 {
+            let out = f.infer(vec![3, 1]).unwrap();
+            // engines agree within ±1 (paper Sec. 6.2.1)
+            for (got, want) in out.iter().zip(&[2i8, 0, 5]) {
+                assert!((*got as i32 - *want as i32).abs() <= 1, "{out:?}");
+            }
+        }
+        let snap = f.snapshot();
+        assert_eq!(snap.totals.submitted, 20);
+        assert_eq!(snap.totals.completed, 20);
+        assert_eq!(snap.totals.errors, 0);
+        f.shutdown();
+    }
+
+    #[test]
+    fn round_robin_tiebreak_spreads_an_idle_fleet() {
+        // sequential round trips leave every pool idle at submit time —
+        // outstanding ties at 0, so the cursor must alternate pools
+        let f = two_pool_fleet();
+        for _ in 0..10 {
+            f.infer(vec![3, 1]).unwrap();
+        }
+        let snap = f.snapshot();
+        for (name, s) in &snap.per_pool {
+            assert_eq!(s.submitted, 5, "pool {name} got {} of 10", s.submitted);
+        }
+        f.shutdown();
+    }
+
+    #[test]
+    fn start_validates_pool_layout() {
+        // agreeing signatures across differently-configured pools: ok
+        let ok = Fleet::start(vec![
+            PoolSpec::new("a", vec![tiny_session(Engine::MicroFlow, false)]),
+            PoolSpec::new("b", vec![tiny_session(Engine::MicroFlow, true)]),
+        ]);
+        assert!(ok.is_ok());
+        ok.unwrap().shutdown();
+        // an empty fleet is rejected
+        assert!(Fleet::start(vec![]).is_err());
+        // an empty pool is rejected (by the pool's own Server::start)
+        assert!(Fleet::start(vec![PoolSpec::new("empty", vec![])]).is_err());
+    }
+
+    #[test]
+    fn single_pool_fleet_wraps_a_server() {
+        let server =
+            Server::start(vec![tiny_session(Engine::MicroFlow, false)], ServerConfig::default())
+                .unwrap();
+        let f = Fleet::from_server("solo", server);
+        assert_eq!(f.infer(vec![3, 1]).unwrap(), vec![2, 0, 5]);
+        f.shutdown();
+    }
+}

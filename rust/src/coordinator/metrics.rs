@@ -16,6 +16,7 @@ const RESERVOIR: usize = 65_536;
 /// Shared metrics sink.
 pub struct Metrics {
     start: Instant,
+    submitted: AtomicU64,
     completed: AtomicU64,
     errors: AtomicU64,
     batches: AtomicU64,
@@ -33,12 +34,27 @@ impl Metrics {
     pub fn new() -> Self {
         Metrics {
             start: Instant::now(),
+            submitted: AtomicU64::new(0),
             completed: AtomicU64::new(0),
             errors: AtomicU64::new(0),
             batches: AtomicU64::new(0),
             batched_samples: AtomicU64::new(0),
             latencies_us: Mutex::new(Vec::with_capacity(4096)),
         }
+    }
+
+    /// Record one accepted (enqueued) request.
+    pub fn record_submitted(&self) {
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Requests accepted but not yet answered (queued + in flight) — the
+    /// load signal the fleet's least-outstanding-requests dispatch and the
+    /// adaptive batcher read.
+    pub fn outstanding(&self) -> u64 {
+        let submitted = self.submitted.load(Ordering::Relaxed);
+        let done = self.completed.load(Ordering::Relaxed) + self.errors.load(Ordering::Relaxed);
+        submitted.saturating_sub(done)
     }
 
     /// Record one completed request with its end-to-end latency.
@@ -69,6 +85,7 @@ impl Metrics {
         let batches = self.batches.load(Ordering::Relaxed);
         let samples = self.batched_samples.load(Ordering::Relaxed);
         MetricsSnapshot {
+            submitted: self.submitted.load(Ordering::Relaxed),
             completed,
             errors: self.errors.load(Ordering::Relaxed),
             elapsed: self.start.elapsed(),
@@ -83,6 +100,7 @@ impl Metrics {
 /// A point-in-time metrics view.
 #[derive(Clone, Copy, Debug)]
 pub struct MetricsSnapshot {
+    pub submitted: u64,
     pub completed: u64,
     pub errors: u64,
     pub elapsed: Duration,
@@ -102,8 +120,9 @@ impl std::fmt::Display for MetricsSnapshot {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "{} done ({} err) in {:.2}s | {:.0} req/s | p50 {:.0}us p95 {:.0}us p99 {:.0}us | mean batch {:.2}",
+            "{}/{} done ({} err) in {:.2}s | {:.0} req/s | p50 {:.0}us p95 {:.0}us p99 {:.0}us | mean batch {:.2}",
             self.completed,
+            self.submitted,
             self.errors,
             self.elapsed.as_secs_f64(),
             self.throughput_rps(),
@@ -123,14 +142,29 @@ mod tests {
     fn records_and_snapshots() {
         let m = Metrics::new();
         for us in [100u64, 200, 300, 400, 500] {
+            m.record_submitted();
             m.record(Duration::from_micros(us));
         }
         m.record_batch(5);
         let s = m.snapshot();
+        assert_eq!(s.submitted, 5);
         assert_eq!(s.completed, 5);
         assert_eq!(s.p50_us, 300.0);
         assert_eq!(s.mean_batch, 5.0);
         assert!(s.throughput_rps() > 0.0);
+    }
+
+    #[test]
+    fn outstanding_tracks_submitted_minus_done() {
+        let m = Metrics::new();
+        for _ in 0..5 {
+            m.record_submitted();
+        }
+        assert_eq!(m.outstanding(), 5);
+        m.record(Duration::from_micros(10));
+        m.record_error();
+        assert_eq!(m.outstanding(), 3);
+        assert_eq!(m.snapshot().submitted, 5);
     }
 
     #[test]

@@ -11,11 +11,16 @@
 //!   allocation-free `run_batch_into` hot path;
 //! * [`batcher`] — dynamic batching: requests accumulate until
 //!   `max_batch` or `max_wait` elapses, then execute as one batch
-//!   (fills the AOT'd batch variants of the PJRT path);
+//!   (fills the AOT'd batch variants of the PJRT path); per-replica
+//!   adaptive tuning shifts each worker between latency and throughput
+//!   posture from the observed queue depth;
 //! * [`server`]  — worker threads + bounded queues (std::thread + mpsc;
 //!   tokio is unavailable offline — DESIGN.md §7). Bounded channels give
 //!   backpressure: submit blocks when the queue is full;
-//! * [`router`]  — model-name → worker-pool routing for multi-model
+//! * [`fleet`]   — heterogeneous replica pools for one model with
+//!   least-outstanding-requests dispatch across pools (e.g. a PJRT pool
+//!   for bulk throughput next to a native pool for low latency);
+//! * [`router`]  — model-name → fleet routing for multi-model
 //!   deployments;
 //! * [`ingress`] — TCP wire protocol + blocking client, so external
 //!   processes can drive the router (the deployment surface);
@@ -23,6 +28,7 @@
 //!   counters, reported by the e2e example (`examples/serve_keywords.rs`).
 
 pub mod batcher;
+pub mod fleet;
 pub mod ingress;
 pub mod metrics;
 pub mod router;
@@ -30,8 +36,9 @@ pub mod server;
 
 // the execution surface lives in `crate::api`; re-exported here because
 // every server deployment needs it alongside the coordinator types
-pub use crate::api::{Engine, InferenceSession, Session, SessionBuilder};
-pub use batcher::BatcherConfig;
+pub use crate::api::{Engine, InferenceSession, Session, SessionBuilder, SessionCache};
+pub use batcher::{AdaptiveBatcher, BatcherConfig};
+pub use fleet::{Fleet, FleetSnapshot, PoolSpec};
 pub use ingress::{Client, Ingress};
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use router::Router;

@@ -1,17 +1,22 @@
-//! Model router (DESIGN.md S16): name → [`Server`] for multi-model
+//! Model router (DESIGN.md S16): name → [`Fleet`] for multi-model
 //! deployments (the fleet example serves sine + speech + person from one
 //! process).
+//!
+//! Each model is served by a [`Fleet`] of replica pools; a bare [`Server`]
+//! registers as a single-pool fleet, so simple deployments keep working
+//! unchanged while heterogeneous ones add pools.
 
 use std::collections::HashMap;
 
 use anyhow::{Context, Result};
 
+use super::fleet::Fleet;
 use super::server::Server;
 
 /// A multi-model routing table.
 #[derive(Default)]
 pub struct Router {
-    servers: HashMap<String, Server>,
+    fleets: HashMap<String, Fleet>,
 }
 
 impl Router {
@@ -19,29 +24,36 @@ impl Router {
         Router::default()
     }
 
+    /// Register a single-pool deployment (wraps the server in a fleet).
     pub fn add(&mut self, name: &str, server: Server) {
-        self.servers.insert(name.to_string(), server);
+        self.fleets.insert(name.to_string(), Fleet::from_server(name, server));
     }
 
-    pub fn get(&self, name: &str) -> Result<&Server> {
-        self.servers.get(name).with_context(|| format!("no model {name:?} registered"))
+    /// Register a multi-pool deployment.
+    pub fn add_fleet(&mut self, name: &str, fleet: Fleet) {
+        self.fleets.insert(name.to_string(), fleet);
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Fleet> {
+        self.fleets.get(name).with_context(|| format!("no model {name:?} registered"))
     }
 
     pub fn models(&self) -> Vec<&str> {
-        let mut m: Vec<&str> = self.servers.keys().map(|s| s.as_str()).collect();
+        let mut m: Vec<&str> = self.fleets.keys().map(|s| s.as_str()).collect();
         m.sort();
         m
     }
 
-    /// Route an inference request by model name.
+    /// Route an inference request by model name (least-loaded pool of the
+    /// model's fleet).
     pub fn infer(&self, model: &str, input: Vec<i8>) -> Result<Vec<i8>> {
         self.get(model)?.infer(input)
     }
 
-    /// Shut down every server.
+    /// Shut down every fleet.
     pub fn shutdown(self) {
-        for (_, s) in self.servers {
-            s.shutdown();
+        for (_, f) in self.fleets {
+            f.shutdown();
         }
     }
 }
@@ -49,7 +61,8 @@ impl Router {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::api::Session;
+    use crate::api::{Engine, Session};
+    use crate::coordinator::fleet::PoolSpec;
     use crate::coordinator::server::ServerConfig;
 
     fn tiny_server() -> Server {
@@ -64,6 +77,35 @@ mod tests {
         assert_eq!(r.models(), vec!["tiny"]);
         assert_eq!(r.infer("tiny", vec![3, 1]).unwrap(), vec![2, 0, 5]);
         assert!(r.infer("missing", vec![0, 0]).is_err());
+        r.shutdown();
+    }
+
+    #[test]
+    fn routes_to_a_multi_pool_fleet() {
+        let bytes = crate::format::mfb::tests::tiny_mfb();
+        let fleet = Fleet::start(vec![
+            PoolSpec::new(
+                "fast",
+                vec![Session::builder(bytes.clone()).engine(Engine::MicroFlow).build().unwrap()],
+            ),
+            PoolSpec::new(
+                "paged",
+                vec![Session::builder(bytes)
+                    .engine(Engine::MicroFlow)
+                    .paging(true)
+                    .build()
+                    .unwrap()],
+            ),
+        ])
+        .unwrap();
+        let mut r = Router::new();
+        r.add_fleet("tiny", fleet);
+        // both pools are the native engine — outputs are bit-identical
+        for _ in 0..6 {
+            assert_eq!(r.infer("tiny", vec![3, 1]).unwrap(), vec![2, 0, 5]);
+        }
+        let snap = r.get("tiny").unwrap().snapshot();
+        assert_eq!(snap.totals.completed, 6);
         r.shutdown();
     }
 }

@@ -15,9 +15,9 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use super::batcher::{next_batch, BatcherConfig};
+use super::batcher::{next_batch, AdaptiveBatcher, BatcherConfig};
 use super::metrics::Metrics;
-use crate::api::Session;
+use crate::api::{IoSignature, Session};
 use crate::tensor::quant::QParams;
 
 /// One in-flight request.
@@ -32,22 +32,31 @@ pub struct Request {
 pub struct ServerConfig {
     pub queue_depth: usize,
     pub batcher: BatcherConfig,
+    /// Let each worker tune its own effective [`BatcherConfig`] from the
+    /// observed queue depth (see
+    /// [`AdaptiveBatcher`](super::batcher::AdaptiveBatcher)). Off by
+    /// default; the fleet turns it on for its replica pools.
+    pub adaptive: bool,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { queue_depth: 256, batcher: BatcherConfig::default() }
+        ServerConfig { queue_depth: 256, batcher: BatcherConfig::default(), adaptive: false }
     }
 }
 
-/// A serving endpoint for one model.
+/// A serving endpoint for one model — one replica pool: worker threads
+/// sharing a bounded queue. A [`Fleet`](super::fleet::Fleet) holds several
+/// of these and dispatches across them.
 pub struct Server {
     tx: SyncSender<Request>,
     workers: Vec<JoinHandle<()>>,
     pub metrics: Arc<Metrics>,
+    signature: IoSignature,
     input_len: usize,
     input_qparams: QParams,
     output_qparams: QParams,
+    replicas: usize,
 }
 
 impl Server {
@@ -58,16 +67,17 @@ impl Server {
     /// model signature.
     pub fn start(sessions: Vec<Session>, cfg: ServerConfig) -> Result<Server> {
         anyhow::ensure!(!sessions.is_empty(), "need at least one session");
-        let sig = sessions[0].signature();
+        let sig = sessions[0].signature().clone();
         let input_len = sig.input_len();
         let input_qparams = sig.input.qparams;
         let output_qparams = sig.output.qparams;
+        let replicas = sessions.len();
         for s in &sessions[1..] {
             anyhow::ensure!(
-                s.signature() == sessions[0].signature(),
+                *s.signature() == sig,
                 "replica signatures diverge: {:?} vs {:?}",
                 s.signature(),
-                sessions[0].signature()
+                sig
             );
         }
         let metrics = Arc::new(Metrics::new());
@@ -81,11 +91,34 @@ impl Server {
                 max_batch: cfg.batcher.max_batch.min(session.preferred_batch().max(1)),
                 max_wait: cfg.batcher.max_wait,
             };
+            let adaptive = cfg.adaptive;
             workers.push(std::thread::spawn(move || {
-                worker_loop(&mut session, &rx, &bcfg, &metrics);
+                worker_loop(&mut session, &rx, &bcfg, adaptive, replicas, &metrics);
             }));
         }
-        Ok(Server { tx, workers, metrics, input_len, input_qparams, output_qparams })
+        Ok(Server {
+            tx,
+            workers,
+            metrics,
+            signature: sig,
+            input_len,
+            input_qparams,
+            output_qparams,
+            replicas,
+        })
+    }
+
+    pub fn signature(&self) -> &IoSignature {
+        &self.signature
+    }
+
+    pub fn input_len(&self) -> usize {
+        self.input_len
+    }
+
+    /// Number of session replicas (worker threads) serving this pool.
+    pub fn replicas(&self) -> usize {
+        self.replicas
     }
 
     pub fn input_qparams(&self) -> QParams {
@@ -101,9 +134,15 @@ impl Server {
     pub fn submit(&self, input: Vec<i8>) -> Result<Receiver<Result<Vec<i8>>>> {
         anyhow::ensure!(input.len() == self.input_len, "input length");
         let (reply_tx, reply_rx) = std::sync::mpsc::channel();
-        self.tx
-            .send(Request { input, enqueued: Instant::now(), reply: reply_tx })
-            .context("server is shut down")?;
+        // count BEFORE the send: a worker may complete the request before
+        // this thread resumes, and completed must never exceed submitted
+        // (outstanding() would under-report and misroute fleet dispatch)
+        self.metrics.record_submitted();
+        if self.tx.send(Request { input, enqueued: Instant::now(), reply: reply_tx }).is_err() {
+            // balance the counter so outstanding() stays accurate
+            self.metrics.record_error();
+            anyhow::bail!("server is shut down");
+        }
         Ok(reply_rx)
     }
 
@@ -126,20 +165,32 @@ fn worker_loop(
     session: &mut Session,
     rx: &std::sync::Mutex<Receiver<Request>>,
     cfg: &BatcherConfig,
+    adaptive: bool,
+    replicas: usize,
     metrics: &Metrics,
 ) {
     let ilen = session.input_len();
     let olen = session.output_len();
+    let mut tuner = AdaptiveBatcher::new(*cfg);
     // staging buffers grow to the largest batch once, then are reused
     let mut inputs: Vec<i8> = Vec::new();
     let mut outputs: Vec<i8> = Vec::new();
     loop {
         // hold the lock only while assembling a batch; workers alternate
+        let bcfg = if adaptive { tuner.config() } else { *cfg };
         let batch = {
             let rx = rx.lock().unwrap();
-            next_batch(&rx, cfg)
+            next_batch(&rx, &bcfg)
         };
         let Some(batch) = batch else { return };
+        if adaptive {
+            // queue-depth proxy right after the cut: outstanding beyond
+            // the batch this worker just claimed, averaged per replica —
+            // the pool-wide counter includes sibling workers' in-flight
+            // batches, which would otherwise read as phantom queue depth
+            let beyond = metrics.outstanding().saturating_sub(batch.len() as u64);
+            tuner.observe(beyond / (replicas as u64).max(1));
+        }
         let n = batch.len();
         metrics.record_batch(n);
         inputs.clear();
@@ -211,7 +262,26 @@ mod tests {
         let snap = s.metrics.snapshot();
         assert_eq!(snap.completed, 400);
         assert_eq!(snap.errors, 0);
-        Arc::try_unwrap(s).ok().map(|s| s.shutdown());
+        if let Ok(s) = Arc::try_unwrap(s) {
+            s.shutdown();
+        }
+    }
+
+    #[test]
+    fn adaptive_batching_serves_correctly() {
+        let sessions = vec![Session::builder(crate::format::mfb::tests::tiny_mfb())
+            .engine(Engine::MicroFlow)
+            .build()
+            .unwrap()];
+        let cfg = ServerConfig { adaptive: true, ..ServerConfig::default() };
+        let s = Server::start(sessions, cfg).unwrap();
+        for _ in 0..30 {
+            assert_eq!(s.infer(vec![3, 1]).unwrap(), vec![2, 0, 5]);
+        }
+        let snap = s.metrics.snapshot();
+        assert_eq!(snap.submitted, 30);
+        assert_eq!(snap.completed, 30);
+        s.shutdown();
     }
 
     #[test]

@@ -31,7 +31,10 @@ use crate::tensor::quant::QParams;
 /// [`crate::api::Engine::MicroFlow`]), which wraps it behind the uniform
 /// [`crate::api::InferenceSession`] surface.
 pub struct MicroFlowEngine {
-    compiled: CompiledModel,
+    /// Shared with the warm-session cache: N replicas built from the same
+    /// cached plan hold one folded-weights image (the host-side analogue
+    /// of N cores streaming the same Flash).
+    compiled: std::sync::Arc<CompiledModel>,
     scratch: std::cell::RefCell<Scratch>,
 }
 
@@ -39,8 +42,14 @@ impl MicroFlowEngine {
     /// Compile a parsed MFB model.
     pub fn new(model: &MfbModel, options: CompileOptions) -> Result<Self> {
         let compiled = CompiledModel::compile(model, options)?;
+        Ok(Self::from_compiled(std::sync::Arc::new(compiled)))
+    }
+
+    /// Wrap an already-compiled plan (the warm-cache path): only the
+    /// per-engine scratch buffers are allocated here.
+    pub fn from_compiled(compiled: std::sync::Arc<CompiledModel>) -> Self {
         let scratch = Scratch::for_plan(&compiled);
-        Ok(MicroFlowEngine { compiled, scratch: std::cell::RefCell::new(scratch) })
+        MicroFlowEngine { compiled, scratch: std::cell::RefCell::new(scratch) }
     }
 
     /// Load + compile from an `.mfb` file.
@@ -71,7 +80,7 @@ impl MicroFlowEngine {
 
     /// Base addresses of the static buffers — pointer-stability
     /// diagnostics for the no-allocation conformance tests.
-    pub fn buffer_ptrs(&self) -> (usize, usize, usize) {
+    pub fn buffer_ptrs(&self) -> Vec<usize> {
         self.scratch.borrow().buf_ptrs()
     }
 
@@ -121,19 +130,19 @@ pub(crate) fn run_plan<'a>(
                 continue;
             }
             StepKind::FullyConnected { k, n, weights, pc, paged } => {
-                let (x, y, page) = scratch.split(in_len, out_len);
+                let (x, y, page, acc) = scratch.split(in_len, out_len);
                 if *paged {
                     fully_connected::fully_connected_paged(x, weights, *k, *n, pc, &mut page[..*k], y);
                 } else {
-                    fully_connected::fully_connected_microflow(x, weights, *k, *n, pc, y);
+                    fully_connected::fully_connected_microflow(x, weights, *k, *n, pc, acc, y);
                 }
             }
             StepKind::Conv2D { geo, c_out, filters, z_x, pc } => {
-                let (x, y, view) = scratch.split(in_len, out_len);
+                let (x, y, view, _) = scratch.split(in_len, out_len);
                 conv2d::conv2d_microflow(x, filters, geo, *c_out, *z_x, pc, &mut view[..step.scratch_len], y);
             }
             StepKind::DepthwiseConv2D { geo, depth_multiplier, filters, z_x, pc } => {
-                let (x, y, view) = scratch.split(in_len, out_len);
+                let (x, y, view, _) = scratch.split(in_len, out_len);
                 depthwise_conv2d::depthwise_conv2d_microflow(
                     x,
                     filters,
@@ -146,7 +155,7 @@ pub(crate) fn run_plan<'a>(
                 );
             }
             StepKind::AveragePool2D { geo, z_x, ratio, z_y, act_min, act_max } => {
-                let (x, y, view) = scratch.split(in_len, out_len);
+                let (x, y, view, _) = scratch.split(in_len, out_len);
                 average_pool2d::average_pool2d_microflow(
                     x,
                     geo,
@@ -160,15 +169,15 @@ pub(crate) fn run_plan<'a>(
                 );
             }
             StepKind::Softmax { s_x, z_x, s_y, z_y } => {
-                let (x, y, _) = scratch.split(in_len, out_len);
+                let (x, y, _, _) = scratch.split(in_len, out_len);
                 activation::softmax(x, *s_x, *z_x, *s_y, *z_y, y);
             }
             StepKind::Relu { s_x, z_x, s_y, z_y } => {
-                let (x, y, _) = scratch.split(in_len, out_len);
+                let (x, y, _, _) = scratch.split(in_len, out_len);
                 activation::relu(x, *s_x, *z_x, *s_y, *z_y, y);
             }
             StepKind::Relu6 { s_x, z_x, s_y, z_y } => {
-                let (x, y, _) = scratch.split(in_len, out_len);
+                let (x, y, _, _) = scratch.split(in_len, out_len);
                 activation::relu6(x, *s_x, *z_x, *s_y, *z_y, y);
             }
         }

@@ -1,9 +1,12 @@
 //! Static scratch buffers for the plan executor (paper Sec. 4.2).
 //!
-//! Two ping-pong activation buffers + one kernel scratch buffer, sized by
-//! the compiler's [`MemoryPlan`] and allocated exactly once. `split`
-//! hands the executor disjoint `(input, output, scratch)` views without
-//! any unsafe code, via `RefCell`-free plain borrows.
+//! Two ping-pong activation buffers + one i8 kernel scratch buffer + one
+//! i32 accumulator buffer (for wide-output FullyConnected, whose
+//! accumulators don't fit the narrow-path stack array), sized by the
+//! compiler's [`MemoryPlan`](crate::compiler::memory::MemoryPlan) and
+//! allocated exactly once. `split` hands the executor disjoint
+//! `(input, output, scratch, acc)` views without any unsafe code, via
+//! `RefCell`-free plain borrows.
 
 use crate::compiler::plan::CompiledModel;
 
@@ -13,6 +16,10 @@ pub struct Scratch {
     a: Vec<i8>,
     b: Vec<i8>,
     kernel: Vec<i8>,
+    /// i32 accumulator scratch for wide-output FullyConnected — threading
+    /// it through the plan keeps the whole predict path allocation-free
+    /// (ROADMAP open item closed in this PR).
+    acc: Vec<i32>,
     /// Which buffer currently holds the live activations.
     live_in_a: bool,
 }
@@ -28,6 +35,7 @@ impl Scratch {
             a: vec![0; a],
             b: vec![0; b],
             kernel: vec![0; m.scratch],
+            acc: vec![0; m.acc_i32],
             live_in_a: true,
         }
     }
@@ -38,12 +46,13 @@ impl Scratch {
         self.a[..input.len()].copy_from_slice(input);
     }
 
-    /// Disjoint (input, output, kernel-scratch) views for one step.
-    pub fn split(&mut self, in_len: usize, out_len: usize) -> (&[i8], &mut [i8], &mut [i8]) {
+    /// Disjoint (input, output, kernel-scratch, i32-accumulator) views for
+    /// one step.
+    pub fn split(&mut self, in_len: usize, out_len: usize) -> (&[i8], &mut [i8], &mut [i8], &mut [i32]) {
         if self.live_in_a {
-            (&self.a[..in_len], &mut self.b[..out_len], &mut self.kernel[..])
+            (&self.a[..in_len], &mut self.b[..out_len], &mut self.kernel[..], &mut self.acc[..])
         } else {
-            (&self.b[..in_len], &mut self.a[..out_len], &mut self.kernel[..])
+            (&self.b[..in_len], &mut self.a[..out_len], &mut self.kernel[..], &mut self.acc[..])
         }
     }
 
@@ -63,14 +72,19 @@ impl Scratch {
 
     /// Buffer base pointers — used by tests to prove pointer stability
     /// (no reallocation on the hot path).
-    pub fn buf_ptrs(&self) -> (usize, usize, usize) {
-        (self.a.as_ptr() as usize, self.b.as_ptr() as usize, self.kernel.as_ptr() as usize)
+    pub fn buf_ptrs(&self) -> Vec<usize> {
+        vec![
+            self.a.as_ptr() as usize,
+            self.b.as_ptr() as usize,
+            self.kernel.as_ptr() as usize,
+            self.acc.as_ptr() as usize,
+        ]
     }
 
     /// Total allocated bytes (must equal the memory plan's executor size,
     /// modulo the input/output endpoint adjustment).
     pub fn total_bytes(&self) -> usize {
-        self.a.len() + self.b.len() + self.kernel.len()
+        self.a.len() + self.b.len() + self.kernel.len() + self.acc.len() * 4
     }
 }
 
@@ -87,7 +101,7 @@ mod tests {
         let mut s = Scratch::for_plan(&c);
         s.load_input(&[5, 6]);
         {
-            let (x, y, _) = s.split(2, 3);
+            let (x, y, _, _) = s.split(2, 3);
             assert_eq!(x, &[5, 6]);
             y[0] = 9;
         }
@@ -102,5 +116,7 @@ mod tests {
         let s = Scratch::for_plan(&c);
         assert!(s.a.len() >= c.input_len());
         assert!(s.b.len() >= c.output_len());
+        // the tiny FC is narrow (n = 3): no accumulator scratch needed
+        assert_eq!(s.acc.len(), 0);
     }
 }

@@ -13,10 +13,31 @@
 use crate::tensor::fixedpoint::FixedPointMultiplier;
 use crate::tensor::quant::{requant_float, PreComputed};
 
+/// Widest output that accumulates in the narrow-path stack array; anything
+/// wider needs the caller's i32 accumulator scratch. The compiler's
+/// memory planner sizes the plan's shared scratch from this same constant
+/// (`compiler::memory::step_acc_i32`), so the two sides cannot drift.
+pub const FC_NARROW_MAX: usize = 8;
+
 /// MicroFlow FC: `y[j] = requant(dot[j] - z_w*rowsum - wzp[j] + kzxzw)`.
 ///
 /// `x`: `[K]`, `w`: `[K, N]` row-major, `out`: `[N]`.
-pub fn fully_connected_microflow(x: &[i8], w: &[i8], k: usize, n: usize, pc: &PreComputed, out: &mut [i8]) {
+///
+/// `acc` is the caller's i32 accumulator scratch, used only on the
+/// wide-output path (`n > 8`, where the accumulators don't fit the stack
+/// array) and required to hold at least `n` elements there. The engine
+/// threads it from the plan-sized [`Scratch`](crate::engine::Scratch)
+/// buffers, keeping the whole predict path allocation-free; narrow
+/// outputs may pass `&mut []`.
+pub fn fully_connected_microflow(
+    x: &[i8],
+    w: &[i8],
+    k: usize,
+    n: usize,
+    pc: &PreComputed,
+    acc: &mut [i32],
+    out: &mut [i8],
+) {
     debug_assert_eq!(x.len(), k);
     debug_assert_eq!(w.len(), k * n);
     debug_assert_eq!(out.len(), n);
@@ -25,12 +46,12 @@ pub fn fully_connected_microflow(x: &[i8], w: &[i8], k: usize, n: usize, pc: &Pr
     // data-dependent row sum (the only z_w term that cannot be folded)
     let rowsum: i32 = if pc.z_w != 0 { x.iter().map(|&v| v as i32).sum() } else { 0 };
 
-    if n <= 8 {
+    if n <= FC_NARROW_MAX {
         // narrow-output path (the speech classifier head is 4000x4):
         // stack accumulators + chunks_exact (no heap allocation, no
         // per-row bounds checks, no per-row branch) — EXPERIMENTS.md
         // §Perf: fc 4000x4 19.9us -> ~6us
-        let mut acc = [0i32; 8];
+        let mut acc = [0i32; FC_NARROW_MAX];
         for (row, &xi) in w.chunks_exact(n).zip(x.iter()) {
             let xv = xi as i32;
             for (a, &wv) in acc[..n].iter_mut().zip(row) {
@@ -49,7 +70,8 @@ pub fn fully_connected_microflow(x: &[i8], w: &[i8], k: usize, n: usize, pc: &Pr
     // w sequentially (cache/flash friendly, the same access pattern the
     // paper's paged variant exploits) and the inner loop auto-vectorizes
     // over the output row
-    let mut acc = vec![0i32; n];
+    let acc = &mut acc[..n];
+    acc.fill(0);
     for (row, &xi) in w.chunks_exact(n).zip(x.iter()) {
         let xv = xi as i32;
         for (a, &wv) in acc.iter_mut().zip(row) {
@@ -180,7 +202,8 @@ mod tests {
                 (0..n).map(|j| (0..k).map(|i| w[i * n + j] as i32).sum()).collect();
             let pc = PreComputed::fold(&b, &colsum, k, s_x, z_x, s_w, z_w, s_x * s_w, 0, s_y, z_y, FusedAct::Relu);
             let mut out = vec![0i8; n];
-            fully_connected_microflow(&x, &w, k, n, &pc, &mut out);
+            let mut acc = vec![0i32; n];
+            fully_connected_microflow(&x, &w, k, n, &pc, &mut acc, &mut out);
             let want = oracle(&x, &w, &b, k, n, s_x, z_x, s_w, z_w, s_y, z_y, FusedAct::Relu);
             assert_eq!(out, want, "seed {seed}");
         }
@@ -197,7 +220,8 @@ mod tests {
             let mut a = vec![0i8; n];
             let mut p = vec![0i8; n];
             let mut page = vec![0i8; k];
-            fully_connected_microflow(&x, &w, k, n, &pc, &mut a);
+            let mut acc = vec![0i32; n];
+            fully_connected_microflow(&x, &w, k, n, &pc, &mut acc, &mut a);
             fully_connected_paged(&x, &w, k, n, &pc, &mut page, &mut p);
             assert_eq!(a, p, "seed {seed}");
         }
@@ -215,7 +239,8 @@ mod tests {
                 (0..n).map(|j| (0..k).map(|i| w[i * n + j] as i32).sum()).collect();
             let pc = PreComputed::fold(&b, &colsum, k, s_x, z_x, s_w, z_w, s_x * s_w, 0, s_y, z_y, FusedAct::None);
             let mut mf = vec![0i8; n];
-            fully_connected_microflow(&x, &w, k, n, &pc, &mut mf);
+            let mut acc = vec![0i32; n];
+            fully_connected_microflow(&x, &w, k, n, &pc, &mut acc, &mut mf);
             let m = FixedPointMultiplier::from_real((s_x as f64 * s_w as f64) / s_y as f64);
             let mut ip = vec![0i8; n];
             fully_connected_interp(&x, &w, &b, k, n, z_x, z_w, m, z_y, -128, 127, &mut ip);
@@ -234,8 +259,38 @@ mod tests {
         let colsum: Vec<i32> = (0..n).map(|j| (0..k).map(|i| w[i * n + j] as i32).sum()).collect();
         let pc = PreComputed::fold(&b, &colsum, k, 0.1, 2, 0.1, 0, 0.01, 0, 0.1, 0, FusedAct::None);
         let mut out = vec![0i8; n];
-        fully_connected_microflow(&x, &w, k, n, &pc, &mut out);
+        fully_connected_microflow(&x, &w, k, n, &pc, &mut [], &mut out);
         let want = oracle(&x, &w, &b, k, n, 0.1, 2, 0.1, 0, 0.1, 0, FusedAct::None);
         assert_eq!(out, want);
+    }
+
+    #[test]
+    fn narrow_path_ignores_the_acc_scratch() {
+        // n <= 8 runs on the stack-array path; an empty scratch is fine
+        let (k, n) = (37, 8);
+        let (x, w, b) = setup(3, k, n);
+        let colsum: Vec<i32> = (0..n).map(|j| (0..k).map(|i| w[i * n + j] as i32).sum()).collect();
+        let pc = PreComputed::fold(&b, &colsum, k, 0.05, 3, 0.02, -2, 0.001, 0, 0.08, -5, FusedAct::None);
+        let mut a = vec![0i8; n];
+        let mut b2 = vec![0i8; n];
+        fully_connected_microflow(&x, &w, k, n, &pc, &mut [], &mut a);
+        let mut big = vec![123i32; n]; // dirty scratch must not matter
+        fully_connected_microflow(&x, &w, k, n, &pc, &mut big, &mut b2);
+        assert_eq!(a, b2);
+    }
+
+    #[test]
+    fn wide_path_zeroes_a_dirty_acc_scratch() {
+        let (k, n) = (16, 24);
+        let (x, w, b) = setup(11, k, n);
+        let colsum: Vec<i32> = (0..n).map(|j| (0..k).map(|i| w[i * n + j] as i32).sum()).collect();
+        let pc = PreComputed::fold(&b, &colsum, k, 0.05, 3, 0.02, -2, 0.001, 0, 0.08, -5, FusedAct::None);
+        let mut clean = vec![0i8; n];
+        let mut dirty = vec![0i8; n];
+        let mut acc = vec![0i32; n];
+        fully_connected_microflow(&x, &w, k, n, &pc, &mut acc, &mut clean);
+        // acc now holds the previous call's accumulators; reuse must not leak
+        fully_connected_microflow(&x, &w, k, n, &pc, &mut acc, &mut dirty);
+        assert_eq!(clean, dirty);
     }
 }

@@ -65,9 +65,12 @@
 //!   models used by the Fig. 9-11 / Table 6 benches;
 //! * [`runtime`] — PJRT client loading the JAX-AOT'd HLO artifacts (the
 //!   numerical oracle and host serving backend; optional `pjrt` feature);
-//! * [`coordinator`] — the serving layer: dynamic batcher, model router,
-//!   worker pool over [`api::Session`] replicas, latency/throughput
-//!   metrics;
+//! * [`coordinator`] — the serving layer: dynamic batcher (with
+//!   per-replica adaptive tuning), heterogeneous replica-pool fleets with
+//!   least-outstanding-requests dispatch, model router, worker pools over
+//!   [`api::Session`] replicas, latency/throughput metrics;
+//! * [`synth`] — seeded synthetic model generators backing the
+//!   artifact-free conformance/stress suites and the fleet bench;
 //! * [`eval`] — datasets, accuracy metrics and the Table 5 runner.
 //!
 //! The Python side (`python/compile/`) runs **only at build time**
@@ -87,10 +90,14 @@ pub mod interp;
 pub mod kernels;
 pub mod runtime;
 pub mod sim;
+pub mod synth;
 pub mod tensor;
 pub mod util;
 
-pub use api::{Engine, InferenceSession, IoSignature, ModelSource, Session, SessionBuilder, TensorSpec};
+pub use api::{
+    Engine, InferenceSession, IoSignature, ModelSource, Session, SessionBuilder, SessionCache,
+    TensorSpec,
+};
 
 /// Crate version (mirrors Cargo.toml).
 pub fn version() -> &'static str {

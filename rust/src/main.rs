@@ -9,10 +9,10 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
-use microflow::api::{Engine, Session};
-use microflow::cli::{Args, USAGE};
+use microflow::api::{Engine, Session, SessionCache};
+use microflow::cli::{parse_engine_mix, Args, USAGE};
 use microflow::compiler::plan::{CompileOptions, CompiledModel};
-use microflow::coordinator::{Server, ServerConfig};
+use microflow::coordinator::{Fleet, PoolSpec, ServerConfig};
 use microflow::format::golden::Golden;
 use microflow::format::mds::MdsDataset;
 use microflow::format::mfb::MfbModel;
@@ -223,51 +223,72 @@ fn cmd_deploy(args: &Args) -> Result<()> {
 }
 
 /// `microflow serve <model> [--requests N] [--rate RPS] [--backend B]
-/// [--replicas R] [--batch B] [--paging]` — synthetic serving load,
-/// prints metrics.
+/// [--replicas R] [--engine-mix MIX] [--batch B] [--no-adaptive]
+/// [--paging]` — synthetic serving load over a replica fleet, prints
+/// per-pool metrics.
 fn cmd_serve(args: &Args) -> Result<()> {
     let name = model_arg(args)?;
     let art = artifacts();
-    let engine = engine_arg(args, "backend")?;
-    let replicas = args.opt_usize("replicas", 2);
     let requests = args.opt_usize("requests", 500);
     let rate = args.opt_f64("rate", 200.0);
     let max_batch = args.opt_usize("batch", 8);
 
-    let mfb_path = art.join(format!("{name}.mfb"));
-    let sessions: Vec<Session> = (0..replicas)
-        .map(|_| {
-            Session::builder(&mfb_path)
-                .engine(engine)
-                .paging(args.flag("paging"))
-                .preferred_batch(max_batch)
-                .build()
-        })
-        .collect::<Result<_>>()?;
+    // pool layout: --engine-mix pools, or a single --backend x --replicas
+    let mix: Vec<(Engine, usize)> = match args.opt("engine-mix") {
+        Some(s) => parse_engine_mix(s)?,
+        None => vec![(engine_arg(args, "backend")?, args.opt_usize("replicas", 2))],
+    };
 
-    let mut cfg = ServerConfig::default();
+    let mfb_path = art.join(format!("{name}.mfb"));
+    let cache = std::sync::Arc::new(SessionCache::new());
+    let mut cfg = ServerConfig { adaptive: !args.flag("no-adaptive"), ..ServerConfig::default() };
     cfg.batcher.max_batch = max_batch;
-    let server = Server::start(sessions, cfg)?;
+    let pools = mix
+        .iter()
+        .map(|&(engine, replicas)| {
+            let sessions: Vec<Session> = (0..replicas)
+                .map(|i| {
+                    Session::builder(&mfb_path)
+                        .engine(engine)
+                        .paging(args.flag("paging"))
+                        .preferred_batch(max_batch)
+                        .label(format!("{engine}/{i}"))
+                        .cache(&cache)
+                        .build()
+                })
+                .collect::<Result<_>>()?;
+            Ok(PoolSpec::new(format!("{engine}x{replicas}"), sessions).config(cfg))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let fleet = Fleet::start(pools)?;
+    println!(
+        "warm session cache: {} hits / {} misses across {} replicas",
+        cache.hits(),
+        cache.misses(),
+        fleet.replicas()
+    );
 
     // synthetic Poisson open-loop load from the test set
     let ds = MdsDataset::load(art.join(format!("{name}_test.mds")))?;
-    let qp = server.input_qparams();
+    let qp = fleet.input_qparams();
     let mut rng = Prng::new(42);
-    println!("serving {name} via {engine} x{replicas}: {requests} requests @ ~{rate} rps");
+    println!(
+        "serving {name} via [{}]: {requests} requests @ ~{rate} rps",
+        fleet.pool_names().join(", ")
+    );
     let mut pending = Vec::new();
     let t0 = Instant::now();
     for i in 0..requests {
         let sample = ds.sample(i % ds.n);
         let q = qp.quantize_slice(sample);
-        pending.push(server.submit(q)?);
+        pending.push(fleet.submit(q)?);
         std::thread::sleep(Duration::from_secs_f64(rng.exp(rate)));
     }
     for rx in pending {
         rx.recv().context("reply dropped")??;
     }
     let wall = t0.elapsed();
-    let snap = server.metrics.snapshot();
-    println!("done in {:.2}s: {}", wall.as_secs_f64(), snap);
-    server.shutdown();
+    println!("done in {:.2}s\n{}", wall.as_secs_f64(), fleet.snapshot());
+    fleet.shutdown();
     Ok(())
 }

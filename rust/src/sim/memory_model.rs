@@ -22,7 +22,7 @@
 use std::collections::BTreeSet;
 
 use crate::compiler::plan::CompiledModel;
-use crate::format::mfb::MfbModel;
+use crate::format::mfb::{MfbModel, OpCode};
 use crate::interp::arena::ArenaPlan;
 use crate::sim::cost::Engine;
 use crate::sim::mcu::{ArchClass, Mcu};
@@ -97,6 +97,25 @@ pub const TFLM_REGISTERED_KERNELS: usize = 8;
 /// `TfLiteTensor` / node bookkeeping).
 pub const TFLM_TENSOR_STRUCT: usize = 64;
 pub const TFLM_NODE_STRUCT: usize = 48;
+
+/// RAM the interpreter's prepared per-node userdata occupies: our
+/// interpreter (like TFLM kernels) unpacks each weighted node's bias into
+/// i32s at `AllocateTensors` time and keeps it for the interpreter's
+/// lifetime (`interp::resolver::NodeData`), so the memory model charges
+/// 4 bytes per bias element for FullyConnected / Conv2D /
+/// DepthwiseConv2D nodes. (Multipliers, geometry and bounds fit inside
+/// [`TFLM_NODE_STRUCT`].)
+pub fn tflm_prepared_node_bytes(model: &MfbModel) -> usize {
+    model
+        .operators
+        .iter()
+        .filter(|op| {
+            matches!(op.opcode, OpCode::FullyConnected | OpCode::Conv2D | OpCode::DepthwiseConv2D)
+        })
+        .filter_map(|op| op.input(2).ok())
+        .map(|b| model.tensors[b].numel() * 4)
+        .sum()
+}
 
 /// A computed memory footprint.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -181,7 +200,7 @@ pub fn microflow_footprint(compiled: &CompiledModel, mcu: &Mcu) -> MemoryFootpri
 }
 
 /// TFLM footprint on an MCU: full container resident in Flash, arena +
-/// interpreter structures in RAM.
+/// interpreter structures + prepared node userdata in RAM.
 pub fn tflm_footprint(model: &MfbModel, arena: &ArenaPlan, mcu: &Mcu) -> MemoryFootprint {
     let cs = code_size(mcu.arch);
     let flash = cs.firmware
@@ -191,7 +210,8 @@ pub fn tflm_footprint(model: &MfbModel, arena: &ArenaPlan, mcu: &Mcu) -> MemoryF
     let ram = cs.tflm_base_ram
         + arena.arena_size
         + model.tensors.len() * TFLM_TENSOR_STRUCT
-        + model.operators.len() * TFLM_NODE_STRUCT;
+        + model.operators.len() * TFLM_NODE_STRUCT
+        + tflm_prepared_node_bytes(model);
     MemoryFootprint { flash, ram }
 }
 
@@ -233,6 +253,35 @@ mod tests {
             assert!(mf.flash < tf.flash, "{}: {} vs {}", mcu.name, mf.flash, tf.flash);
             assert!(mf.ram < tf.ram, "{}: {} vs {}", mcu.name, mf.ram, tf.ram);
         }
+    }
+
+    #[test]
+    fn tflm_ram_charges_prepared_node_userdata() {
+        // regression (ROADMAP): the interpreter caches each weighted
+        // node's bias as i32 userdata at prepare time; the memory model
+        // must charge it. The tiny model has one FC with a 3-element
+        // bias -> exactly 12 bytes, and the full RAM formula is pinned.
+        let (m, _, a) = tiny();
+        assert_eq!(tflm_prepared_node_bytes(&m), 12);
+        let nrf = by_name("nRF52840").unwrap();
+        let fp = tflm_footprint(&m, &a, nrf);
+        let cs = code_size(nrf.arch);
+        assert_eq!(
+            fp.ram,
+            cs.tflm_base_ram
+                + a.arena_size
+                + m.tensors.len() * TFLM_TENSOR_STRUCT
+                + m.operators.len() * TFLM_NODE_STRUCT
+                + 12
+        );
+    }
+
+    #[test]
+    fn prepared_node_bytes_skip_unweighted_ops() {
+        let mut m = MfbModel::parse(&crate::format::mfb::tests::tiny_mfb()).unwrap();
+        // turn the op into a (malformed but countable) Relu: no bias input
+        m.operators[0].opcode = crate::format::mfb::OpCode::Relu;
+        assert_eq!(tflm_prepared_node_bytes(&m), 0);
     }
 
     #[test]

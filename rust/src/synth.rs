@@ -1,0 +1,198 @@
+//! Synthetic in-memory model generators — seeded, deterministic, and
+//! artifact-free.
+//!
+//! The cross-engine conformance suite, the coordinator stress suite and
+//! the fleet throughput bench all need real models without `make
+//! artifacts`: models are constructed here as [`MfbModel`] values,
+//! serialized through `format::builder`, and fed to every engine through
+//! `Session::builder` — the same bytes everywhere.
+//!
+//! The generators bound each layer's error gain (see [`GAIN`]) so the
+//! paper's Sec. 6.2.1 ±1-unit agreement between the float-scale and
+//! fixed-point requantization paths survives multi-layer chains, which is
+//! what lets the suites assert exact/±1 parity on randomized models.
+
+use crate::format::mfb::{MfbModel, OpCode, OpOptions, Operator, Padding, TensorDef};
+use crate::kernels::out_dims;
+use crate::tensor::quant::QParams;
+use crate::tensor::DType;
+use crate::util::Prng;
+
+/// Activation tensor (no payload; materialized by the engines).
+pub fn act_tensor(name: &str, dims: Vec<usize>, scale: f32, zp: i32) -> TensorDef {
+    TensorDef {
+        name: name.into(),
+        dtype: DType::I8,
+        dims,
+        qparams: QParams::new(scale, zp),
+        data: Vec::new(),
+    }
+}
+
+/// Weight tensor with int8 payload.
+pub fn i8_tensor(name: &str, dims: Vec<usize>, scale: f32, data: Vec<i8>) -> TensorDef {
+    TensorDef {
+        name: name.into(),
+        dtype: DType::I8,
+        dims,
+        qparams: QParams::new(scale, 0),
+        data: data.iter().map(|&v| v as u8).collect(),
+    }
+}
+
+/// Bias tensor with int32 payload.
+pub fn i32_tensor(name: &str, dims: Vec<usize>, scale: f32, data: Vec<i32>) -> TensorDef {
+    TensorDef {
+        name: name.into(),
+        dtype: DType::I32,
+        dims,
+        qparams: QParams::new(scale, 0),
+        data: data.iter().flat_map(|v| v.to_le_bytes()).collect(),
+    }
+}
+
+/// Assemble a single-input single-output model around a tensor table.
+pub fn model(tensors: Vec<TensorDef>, operators: Vec<Operator>, out_idx: usize) -> MfbModel {
+    MfbModel {
+        version: 1,
+        producer: "synth".into(),
+        tensors,
+        operators,
+        graph_inputs: vec![0],
+        graph_outputs: vec![out_idx],
+        metadata: "{}".into(),
+        file_bytes: 0, // refreshed when the serialized bytes are reparsed
+    }
+}
+
+/// Weight magnitude cap: together with [`GAIN`] it bounds each layer's
+/// error amplification.
+pub const W_MAX: i64 = 8;
+/// Per-layer error gain cap: a ±1 input disagreement perturbs the
+/// pre-rounding output by at most 0.1 units, so engine outputs stay within
+/// ±1 at EVERY layer of a chain (gain * 1 + rounding < 2 ⇒ diff ≤ 1).
+pub const GAIN: f32 = 0.1;
+
+fn small_weights(rng: &mut Prng, n: usize) -> Vec<i8> {
+    (0..n).map(|_| rng.range_i64(-W_MAX, W_MAX) as i8).collect()
+}
+
+/// FC chain with the given layer widths: input `[1, widths[0]]`, then one
+/// FullyConnected per remaining width (fused relu on random layers).
+/// Weights/biases/qparams are drawn from `rng` under the error-gain bound.
+pub fn fc_chain(rng: &mut Prng, widths: &[usize]) -> MfbModel {
+    assert!(widths.len() >= 2, "need an input width and at least one layer");
+    let k0 = widths[0];
+    let mut tensors =
+        vec![act_tensor("in", vec![1, k0], rng.f32_range(0.02, 0.1), rng.range_i64(-5, 5) as i32)];
+    let mut operators = Vec::new();
+    let mut k = k0;
+    let mut cur = 0usize;
+    for (layer, &n) in widths[1..].iter().enumerate() {
+        let s_x = tensors[cur].qparams.scale;
+        let s_w = rng.f32_range(0.01, 0.05);
+        // max per-unit sensitivity is W_MAX * k weights: pick s_y for GAIN
+        let s_y = s_x * s_w * (W_MAX as f32) * (k as f32) / GAIN;
+        let z_y = rng.range_i64(-10, 10) as i32;
+        let w_idx = tensors.len();
+        tensors.push(i8_tensor(&format!("w{layer}"), vec![k, n], s_w, small_weights(rng, k * n)));
+        let b_idx = tensors.len();
+        let bias = rng.i32_vec(n, -100, 100);
+        tensors.push(i32_tensor(&format!("b{layer}"), vec![n], s_x * s_w, bias));
+        let y_idx = tensors.len();
+        tensors.push(act_tensor(&format!("y{layer}"), vec![1, n], s_y, z_y));
+        operators.push(Operator {
+            opcode: OpCode::FullyConnected,
+            version: 1,
+            inputs: vec![cur as i32, w_idx as i32, b_idx as i32],
+            outputs: vec![y_idx as i32],
+            options: OpOptions::FullyConnected { fused_act: (rng.below(2)) as u8 },
+        });
+        cur = y_idx;
+        k = n;
+    }
+    model(tensors, operators, cur)
+}
+
+/// Randomized FC chain: input `[1, k0]` → FC × depth, each with random
+/// dims, weights, bias and a fused relu on some layers.
+pub fn random_fc_chain(rng: &mut Prng, depth: usize) -> MfbModel {
+    let mut widths = vec![rng.range_i64(2, 16) as usize];
+    for _ in 0..depth {
+        widths.push(rng.range_i64(1, 12) as usize);
+    }
+    fc_chain(rng, &widths)
+}
+
+/// Randomized single Conv2D model (SAME or VALID, stride 1 or 2).
+pub fn random_conv(rng: &mut Prng) -> MfbModel {
+    let (h, w) = (rng.range_i64(3, 8) as usize, rng.range_i64(3, 8) as usize);
+    let c = rng.range_i64(1, 3) as usize;
+    let (kh, kw) = (rng.range_i64(1, h as i64) as usize, rng.range_i64(1, w as i64) as usize);
+    let stride = rng.range_i64(1, 2) as usize;
+    let padding = if rng.below(2) == 0 { Padding::Same } else { Padding::Valid };
+    let c_out = rng.range_i64(1, 4) as usize;
+    let (oh, ow) = out_dims(h, w, kh, kw, stride, stride, padding).unwrap();
+
+    let s_x = rng.f32_range(0.02, 0.1);
+    let z_x = rng.range_i64(-5, 5) as i32;
+    let s_f = rng.f32_range(0.01, 0.05);
+    let window = kh * kw * c;
+    let s_y = s_x * s_f * (W_MAX as f32) * (window as f32) / GAIN;
+    let z_y = rng.range_i64(-10, 10) as i32;
+
+    let tensors = vec![
+        act_tensor("in", vec![1, h, w, c], s_x, z_x),
+        i8_tensor("f", vec![c_out, kh, kw, c], s_f, small_weights(rng, c_out * window)),
+        i32_tensor("b", vec![c_out], s_x * s_f, rng.i32_vec(c_out, -100, 100)),
+        act_tensor("y", vec![1, oh, ow, c_out], s_y, z_y),
+    ];
+    let operators = vec![Operator {
+        opcode: OpCode::Conv2D,
+        version: 1,
+        inputs: vec![0, 1, 2],
+        outputs: vec![3],
+        options: OpOptions::Conv2D {
+            stride: (stride, stride),
+            padding,
+            fused_act: (rng.below(2)) as u8,
+        },
+    }];
+    model(tensors, operators, 3)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::{Engine, Session};
+
+    #[test]
+    fn generated_chains_compile_and_run_on_every_host_engine() {
+        let mut rng = Prng::new(7);
+        let m = random_fc_chain(&mut rng, 3);
+        for engine in [Engine::MicroFlow, Engine::Interp] {
+            let mut s = Session::builder(&m).engine(engine).build().unwrap();
+            let x = rng.i8_vec(s.input_len());
+            assert_eq!(s.run(&x).unwrap().len(), s.output_len());
+        }
+    }
+
+    #[test]
+    fn fc_chain_honors_requested_widths() {
+        let mut rng = Prng::new(1);
+        let m = fc_chain(&mut rng, &[16, 32, 4]);
+        assert_eq!(m.input_shape(), vec![16]);
+        assert_eq!(m.output_shape(), vec![4]);
+        assert_eq!(m.operators.len(), 2);
+    }
+
+    #[test]
+    fn generation_is_deterministic_per_seed() {
+        let a = random_fc_chain(&mut Prng::new(42), 2);
+        let b = random_fc_chain(&mut Prng::new(42), 2);
+        assert_eq!(
+            crate::format::builder::serialize(&a).unwrap(),
+            crate::format::builder::serialize(&b).unwrap()
+        );
+    }
+}

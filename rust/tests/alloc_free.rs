@@ -1,0 +1,84 @@
+//! The predict path is allocation-free — proven with a counting global
+//! allocator, not just pointer stability.
+//!
+//! The ROADMAP open item: the wide-output (`n > 8`) FullyConnected kernel
+//! used to allocate its accumulator `Vec<i32>` per call. The i32 scratch
+//! is now threaded through the plan (`MemoryPlan::acc_i32` →
+//! `engine::Scratch`), so a session's `run_into`/`run_batch_into` must
+//! perform **zero** heap allocations once built.
+//!
+//! This file holds exactly ONE `#[test]` so no sibling test thread can
+//! allocate concurrently between the two counter reads.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use microflow::api::{Engine, Session};
+use microflow::synth;
+use microflow::util::Prng;
+
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+
+struct CountingAlloc;
+
+// SAFETY: delegates every operation to `System`; the counter is a plain
+// atomic add with no allocation or TLS access (allocator-reentrancy safe).
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static COUNTING: CountingAlloc = CountingAlloc;
+
+#[test]
+fn predict_path_never_allocates() {
+    // widths force the wide-output (n > 8) FullyConnected path that used
+    // to allocate, plus a narrow head like the paper's classifiers
+    let mut rng = Prng::new(0xA110C);
+    let m = synth::fc_chain(&mut rng, &[16, 32, 24, 4]);
+
+    for engine in [Engine::MicroFlow, Engine::Interp] {
+        let mut session = Session::builder(&m).engine(engine).build().unwrap();
+        let (ilen, olen) = (session.input_len(), session.output_len());
+        let input = rng.i8_vec(ilen);
+        let mut out = vec![0i8; olen];
+        let batch = 4;
+        let batch_in = rng.i8_vec(batch * ilen);
+        let mut batch_out = vec![0i8; batch * olen];
+
+        // warm up (first calls may fault pages; they must not allocate
+        // either, but keep the measured window unambiguous)
+        session.run_into(&input, &mut out).unwrap();
+        session.run_batch_into(&batch_in, batch, &mut batch_out).unwrap();
+
+        let before = ALLOC_CALLS.load(Ordering::SeqCst);
+        for _ in 0..100 {
+            session.run_into(&input, &mut out).unwrap();
+            session.run_batch_into(&batch_in, batch, &mut batch_out).unwrap();
+        }
+        let after = ALLOC_CALLS.load(Ordering::SeqCst);
+        assert_eq!(
+            after - before,
+            0,
+            "{engine}: {} heap allocations on the predict path",
+            after - before
+        );
+    }
+}

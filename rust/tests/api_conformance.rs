@@ -1,8 +1,8 @@
 //! Session-API conformance suite — runs WITHOUT build artifacts.
 //!
 //! Randomized models (seeded via `util::Prng`, so fully deterministic) are
-//! constructed in memory, serialized through `format::builder`, and fed to
-//! every engine through the one entry point
+//! constructed in memory by `microflow::synth`, serialized through
+//! `format::builder`, and fed to every engine through the one entry point
 //! (`Session::builder(...).engine(...)`). The gates:
 //!
 //! * native and paged-native sessions are **bit-identical** (paging is a
@@ -13,134 +13,17 @@
 //!   multi-layer chains, not just single operators;
 //! * `run_batch_into` is allocation-free: internal buffer pointers are
 //!   stable across repeated batched calls and batches equal single runs;
+//! * **the serving tiers preserve the execution tier's outputs**: the same
+//!   model answers identically through `Session::run_into`, a 1-replica
+//!   `Server`, and a multi-replica heterogeneous `Fleet`;
 //! * malformed geometry (VALID kernel larger than its input) surfaces as a
 //!   build-time `Err` from every engine, never a panic.
 
 use microflow::api::{Engine, Session};
-use microflow::format::mfb::{MfbModel, OpCode, OpOptions, Operator, Padding, TensorDef};
-use microflow::kernels::out_dims;
-use microflow::tensor::quant::QParams;
-use microflow::tensor::DType;
+use microflow::coordinator::{Fleet, PoolSpec, Server, ServerConfig};
+use microflow::format::mfb::{MfbModel, OpCode, OpOptions, Operator, Padding};
+use microflow::synth::{self, random_conv, random_fc_chain};
 use microflow::util::Prng;
-
-fn act_tensor(name: &str, dims: Vec<usize>, scale: f32, zp: i32) -> TensorDef {
-    TensorDef { name: name.into(), dtype: DType::I8, dims, qparams: QParams::new(scale, zp), data: Vec::new() }
-}
-
-fn i8_tensor(name: &str, dims: Vec<usize>, scale: f32, data: Vec<i8>) -> TensorDef {
-    TensorDef {
-        name: name.into(),
-        dtype: DType::I8,
-        dims,
-        qparams: QParams::new(scale, 0),
-        data: data.iter().map(|&v| v as u8).collect(),
-    }
-}
-
-fn i32_tensor(name: &str, dims: Vec<usize>, scale: f32, data: Vec<i32>) -> TensorDef {
-    TensorDef {
-        name: name.into(),
-        dtype: DType::I32,
-        dims,
-        qparams: QParams::new(scale, 0),
-        data: data.iter().flat_map(|v| v.to_le_bytes()).collect(),
-    }
-}
-
-fn model(tensors: Vec<TensorDef>, operators: Vec<Operator>, out_idx: usize) -> MfbModel {
-    MfbModel {
-        version: 1,
-        producer: "api_conformance".into(),
-        tensors,
-        operators,
-        graph_inputs: vec![0],
-        graph_outputs: vec![out_idx],
-        metadata: "{}".into(),
-        file_bytes: 0, // refreshed when the serialized bytes are reparsed
-    }
-}
-
-/// Small weights + an output scale that caps each layer's error gain at
-/// 0.1: a ±1 input disagreement perturbs the pre-rounding output by at
-/// most 0.1 units, so the engines' outputs stay within ±1 at EVERY layer
-/// of a chain (gain * 1 + rounding < 2 ⇒ integer diff ≤ 1).
-const W_MAX: i64 = 8;
-const GAIN: f32 = 0.1;
-
-fn small_weights(rng: &mut Prng, n: usize) -> Vec<i8> {
-    (0..n).map(|_| rng.range_i64(-W_MAX, W_MAX) as i8).collect()
-}
-
-/// Randomized FC chain: input [1,k0] -> FC*depth, each with random dims,
-/// weights, bias and a fused relu on some layers.
-fn random_fc_chain(rng: &mut Prng, depth: usize) -> MfbModel {
-    let k0 = rng.range_i64(2, 16) as usize;
-    let mut tensors = vec![act_tensor("in", vec![1, k0], rng.f32_range(0.02, 0.1), rng.range_i64(-5, 5) as i32)];
-    let mut operators = Vec::new();
-    let mut k = k0;
-    let mut cur = 0usize;
-    for layer in 0..depth {
-        let n = rng.range_i64(1, 12) as usize;
-        let s_x = tensors[cur].qparams.scale;
-        let s_w = rng.f32_range(0.01, 0.05);
-        // max per-unit sensitivity is W_MAX * k weights: pick s_y for GAIN
-        let s_y = s_x * s_w * (W_MAX as f32) * (k as f32) / GAIN;
-        let z_y = rng.range_i64(-10, 10) as i32;
-        let w_idx = tensors.len();
-        tensors.push(i8_tensor(&format!("w{layer}"), vec![k, n], s_w, small_weights(rng, k * n)));
-        let b_idx = tensors.len();
-        tensors.push(i32_tensor(&format!("b{layer}"), vec![n], s_x * s_w, rng.i32_vec(n, -100, 100)));
-        let y_idx = tensors.len();
-        tensors.push(act_tensor(&format!("y{layer}"), vec![1, n], s_y, z_y));
-        operators.push(Operator {
-            opcode: OpCode::FullyConnected,
-            version: 1,
-            inputs: vec![cur as i32, w_idx as i32, b_idx as i32],
-            outputs: vec![y_idx as i32],
-            options: OpOptions::FullyConnected { fused_act: (rng.below(2)) as u8 },
-        });
-        cur = y_idx;
-        k = n;
-    }
-    model(tensors, operators, cur)
-}
-
-/// Randomized single Conv2D model (SAME or VALID, stride 1 or 2).
-fn random_conv(rng: &mut Prng) -> MfbModel {
-    let (h, w) = (rng.range_i64(3, 8) as usize, rng.range_i64(3, 8) as usize);
-    let c = rng.range_i64(1, 3) as usize;
-    let (kh, kw) = (rng.range_i64(1, h as i64) as usize, rng.range_i64(1, w as i64) as usize);
-    let stride = rng.range_i64(1, 2) as usize;
-    let padding = if rng.below(2) == 0 { Padding::Same } else { Padding::Valid };
-    let c_out = rng.range_i64(1, 4) as usize;
-    let (oh, ow) = out_dims(h, w, kh, kw, stride, stride, padding).unwrap();
-
-    let s_x = rng.f32_range(0.02, 0.1);
-    let z_x = rng.range_i64(-5, 5) as i32;
-    let s_f = rng.f32_range(0.01, 0.05);
-    let window = kh * kw * c;
-    let s_y = s_x * s_f * (W_MAX as f32) * (window as f32) / GAIN;
-    let z_y = rng.range_i64(-10, 10) as i32;
-
-    let tensors = vec![
-        act_tensor("in", vec![1, h, w, c], s_x, z_x),
-        i8_tensor("f", vec![c_out, kh, kw, c], s_f, small_weights(rng, c_out * window)),
-        i32_tensor("b", vec![c_out], s_x * s_f, rng.i32_vec(c_out, -100, 100)),
-        act_tensor("y", vec![1, oh, ow, c_out], s_y, z_y),
-    ];
-    let operators = vec![Operator {
-        opcode: OpCode::Conv2D,
-        version: 1,
-        inputs: vec![0, 1, 2],
-        outputs: vec![3],
-        options: OpOptions::Conv2D {
-            stride: (stride, stride),
-            padding,
-            fused_act: (rng.below(2)) as u8,
-        },
-    }];
-    model(tensors, operators, 3)
-}
 
 fn sessions_for(m: &MfbModel) -> (Session, Session, Session) {
     let native = Session::builder(m).engine(Engine::MicroFlow).build().unwrap();
@@ -212,6 +95,104 @@ fn run_batch_into_is_pointer_stable_on_random_models() {
     }
 }
 
+/// The fleet conformance gate: the same randomized models must produce
+/// identical outputs whether run through `Session::run_into`, a 1-replica
+/// `Server`, or a multi-replica heterogeneous `Fleet`. The heterogeneous
+/// fleet mixes unpaged and paged native pools (different executors, bit-
+/// identical semantics); a mixed native+interp fleet is additionally held
+/// to the ±1 engine-agreement bound.
+#[test]
+fn fleet_path_preserves_single_session_outputs() {
+    let mut rng = Prng::new(0xF1EE7);
+    for case in 0..6 {
+        let m = random_fc_chain(&mut rng, 1 + case % 3);
+
+        // ground truth: the execution tier
+        let mut single = Session::builder(&m).engine(Engine::MicroFlow).build().unwrap();
+        let ilen = single.input_len();
+        let inputs: Vec<Vec<i8>> = (0..8).map(|_| rng.i8_vec(ilen)).collect();
+        let truth: Vec<Vec<i8>> = inputs.iter().map(|x| single.run(x).unwrap()).collect();
+
+        // tier 2: a 1-replica server
+        let server = Server::start(
+            vec![Session::builder(&m).engine(Engine::MicroFlow).build().unwrap()],
+            ServerConfig::default(),
+        )
+        .unwrap();
+        for (x, want) in inputs.iter().zip(&truth) {
+            assert_eq!(&server.infer(x.clone()).unwrap(), want, "case {case}: server diverged");
+        }
+        server.shutdown();
+
+        // tier 3: a heterogeneous fleet (unpaged pool + paged pool, two
+        // replicas each) — still bit-identical to the single session
+        let fleet = Fleet::start(vec![
+            PoolSpec::new(
+                "unpaged",
+                (0..2)
+                    .map(|i| {
+                        Session::builder(&m)
+                            .engine(Engine::MicroFlow)
+                            .label(format!("unpaged/{i}"))
+                            .build()
+                            .unwrap()
+                    })
+                    .collect(),
+            ),
+            PoolSpec::new(
+                "paged",
+                (0..2)
+                    .map(|i| {
+                        Session::builder(&m)
+                            .engine(Engine::MicroFlow)
+                            .paging(true)
+                            .label(format!("paged/{i}"))
+                            .build()
+                            .unwrap()
+                    })
+                    .collect(),
+            ),
+        ])
+        .unwrap();
+        for round in 0..3 {
+            for (x, want) in inputs.iter().zip(&truth) {
+                assert_eq!(
+                    &fleet.infer(x.clone()).unwrap(),
+                    want,
+                    "case {case} round {round}: fleet diverged"
+                );
+            }
+        }
+        let snap = fleet.snapshot();
+        assert_eq!(snap.totals.completed, 24, "case {case}");
+        assert_eq!(snap.totals.errors, 0, "case {case}");
+        fleet.shutdown();
+
+        // mixed-engine fleet: replies must stay within the ±1 bound
+        let mixed = Fleet::start(vec![
+            PoolSpec::new(
+                "native",
+                vec![Session::builder(&m).engine(Engine::MicroFlow).build().unwrap()],
+            ),
+            PoolSpec::new(
+                "interp",
+                vec![Session::builder(&m).engine(Engine::Interp).build().unwrap()],
+            ),
+        ])
+        .unwrap();
+        for (x, want) in inputs.iter().zip(&truth) {
+            let got = mixed.infer(x.clone()).unwrap();
+            for (j, (g, w)) in got.iter().zip(want).enumerate() {
+                assert!(
+                    (*g as i32 - *w as i32).abs() <= 1,
+                    "case {case} out[{j}]: mixed fleet {g} vs native {w}"
+                );
+            }
+        }
+        mixed.shutdown();
+    }
+}
+
 #[test]
 fn oversized_valid_kernel_fails_cleanly_in_every_engine() {
     // regression for the out_dims underflow: kh > h under VALID padding
@@ -222,10 +203,10 @@ fn oversized_valid_kernel_fails_cleanly_in_every_engine() {
     let (h, w, c) = (3usize, 3usize, 1usize);
     let (kh, kw) = (5usize, 2usize);
     let c_out = 2usize;
-    m.tensors[0] = act_tensor("in", vec![1, h, w, c], 0.05, 0);
-    m.tensors[1] = i8_tensor("f", vec![c_out, kh, kw, c], 0.02, vec![1; c_out * kh * kw * c]);
-    m.tensors[2] = i32_tensor("b", vec![c_out], 0.001, vec![0; c_out]);
-    m.tensors[3] = act_tensor("y", vec![1, 1, 1, c_out], 1.0, 0);
+    m.tensors[0] = synth::act_tensor("in", vec![1, h, w, c], 0.05, 0);
+    m.tensors[1] = synth::i8_tensor("f", vec![c_out, kh, kw, c], 0.02, vec![1; c_out * kh * kw * c]);
+    m.tensors[2] = synth::i32_tensor("b", vec![c_out], 0.001, vec![0; c_out]);
+    m.tensors[3] = synth::act_tensor("y", vec![1, 1, 1, c_out], 1.0, 0);
     m.operators[0] = Operator {
         opcode: OpCode::Conv2D,
         version: 1,

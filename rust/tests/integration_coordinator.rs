@@ -25,6 +25,7 @@ fn native_server(art: &std::path::Path, name: &str, replicas: usize, max_batch: 
     let cfg = ServerConfig {
         queue_depth: 64,
         batcher: BatcherConfig { max_batch, max_wait: Duration::from_millis(1) },
+        adaptive: false,
     };
     Server::start(sessions, cfg).unwrap()
 }
@@ -72,7 +73,9 @@ fn batching_aggregates_under_concurrency() {
     assert_eq!(snap.completed, 400);
     // with 16 concurrent clients and a single worker, batches must form
     assert!(snap.mean_batch > 1.2, "mean batch {}", snap.mean_batch);
-    Arc::try_unwrap(server).ok().map(|s| s.shutdown());
+    if let Ok(server) = Arc::try_unwrap(server) {
+        server.shutdown();
+    }
 }
 
 #[test]
@@ -94,7 +97,9 @@ fn batched_results_match_unbatched() {
         let (idx, out) = h.join().unwrap();
         assert_eq!(out, expected[idx], "request {idx}");
     }
-    Arc::try_unwrap(server).ok().map(|s| s.shutdown());
+    if let Ok(server) = Arc::try_unwrap(server) {
+        server.shutdown();
+    }
 }
 
 #[test]

@@ -42,7 +42,8 @@ fn prop_fc_paged_equals_unpaged() {
         let mut a = vec![0i8; n];
         let mut p = vec![0i8; n];
         let mut page = vec![0i8; k];
-        fully_connected::fully_connected_microflow(&x, &w, k, n, &pc, &mut a);
+        let mut acc = vec![0i32; n];
+        fully_connected::fully_connected_microflow(&x, &w, k, n, &pc, &mut acc, &mut a);
         fully_connected::fully_connected_paged(&x, &w, k, n, &pc, &mut page, &mut p);
         assert_eq!(a, p, "case {case} (k={k}, n={n})");
     }
@@ -152,6 +153,7 @@ fn prop_conv_1x1_equals_fc_per_pixel() {
             }
         }
         let mut fc_out = vec![0i8; cout];
+        let mut acc = vec![0i32; cout];
         for px in 0..h * w {
             fully_connected::fully_connected_microflow(
                 &input[px * cin..(px + 1) * cin],
@@ -159,6 +161,7 @@ fn prop_conv_1x1_equals_fc_per_pixel() {
                 cin,
                 cout,
                 &pc,
+                &mut acc,
                 &mut fc_out,
             );
             assert_eq!(&conv_out[px * cout..(px + 1) * cout], fc_out.as_slice(), "case {case} px {px}");

@@ -1,0 +1,206 @@
+//! Randomized coordinator stress suite — mixed-engine fleets under
+//! concurrent load, no build artifacts needed.
+//!
+//! Every test derives all randomness from one seed so failures reproduce
+//! exactly. The seed defaults to a fixed value (CI determinism — see
+//! `.github/workflows/ci.yml`) and can be overridden for exploration:
+//!
+//! ```sh
+//! MICROFLOW_STRESS_SEED=12345 cargo test --test stress_coordinator
+//! ```
+//!
+//! The seed is printed at the start of every test and embedded in every
+//! assertion message, so a red run names its reproduction command.
+//!
+//! Gates:
+//! * replies under concurrency are **correct**: every reply equals one of
+//!   the per-engine single-session ground truths for its input (each
+//!   engine is deterministic; a fleet reply comes from exactly one of
+//!   them, and native/interp stay within the generator's ±1 bound);
+//! * metrics counters **sum to the submitted request count** across pools
+//!   (nothing lost, nothing double-counted);
+//! * shutdown under load is **clean**: every accepted request is answered
+//!   even when shutdown races the queue drain.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use microflow::api::{Engine, Session, SessionCache};
+use microflow::coordinator::{BatcherConfig, Fleet, PoolSpec, ServerConfig};
+use microflow::synth::random_fc_chain;
+use microflow::util::Prng;
+
+const DEFAULT_SEED: u64 = 0x5EED_2026;
+
+fn seed() -> u64 {
+    match std::env::var("MICROFLOW_STRESS_SEED") {
+        Ok(v) => v.parse().unwrap_or_else(|_| panic!("bad MICROFLOW_STRESS_SEED {v:?}")),
+        Err(_) => DEFAULT_SEED,
+    }
+}
+
+/// A mixed-engine fleet over `model`: native ×2 + interp ×2, small queues
+/// so backpressure is exercised, adaptive batching on (the PoolSpec
+/// default). Sessions build through a shared warm cache, as a real
+/// deployment would.
+fn mixed_fleet(m: &microflow::format::mfb::MfbModel, queue_depth: usize) -> Fleet {
+    let cache = Arc::new(SessionCache::new());
+    let config = ServerConfig {
+        queue_depth,
+        batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) },
+        adaptive: true,
+    };
+    let pool = |engine: Engine, name: &str| {
+        PoolSpec::new(
+            name,
+            (0..2)
+                .map(|i| {
+                    Session::builder(m)
+                        .engine(engine)
+                        .label(format!("{name}/{i}"))
+                        .cache(&cache)
+                        .build()
+                        .unwrap()
+                })
+                .collect(),
+        )
+        .config(config)
+    };
+    Fleet::start(vec![pool(Engine::MicroFlow, "native"), pool(Engine::Interp, "interp")]).unwrap()
+}
+
+#[test]
+fn stress_mixed_fleet_replies_correctly_under_concurrency() {
+    let seed = seed();
+    eprintln!("stress seed = {seed} (override with MICROFLOW_STRESS_SEED)");
+    let mut rng = Prng::new(seed);
+    let m = random_fc_chain(&mut rng, 3);
+
+    // ground truth per distinct input, from single sessions of each engine
+    let mut native = Session::builder(&m).engine(Engine::MicroFlow).build().unwrap();
+    let mut interp = Session::builder(&m).engine(Engine::Interp).build().unwrap();
+    let ilen = native.input_len();
+    const DISTINCT: usize = 32;
+    let inputs: Vec<Vec<i8>> = (0..DISTINCT).map(|_| rng.i8_vec(ilen)).collect();
+    let truths: Vec<[Vec<i8>; 2]> = inputs
+        .iter()
+        .map(|x| [native.run(x).unwrap(), interp.run(x).unwrap()])
+        .collect();
+
+    const THREADS: usize = 8;
+    const PER_THREAD: usize = 50;
+    let fleet = Arc::new(mixed_fleet(&m, 16));
+    let inputs = Arc::new(inputs);
+    let truths = Arc::new(truths);
+    let mut handles = Vec::new();
+    for t in 0..THREADS {
+        let fleet = Arc::clone(&fleet);
+        let inputs = Arc::clone(&inputs);
+        let truths = Arc::clone(&truths);
+        handles.push(std::thread::spawn(move || {
+            // per-thread deterministic input schedule
+            let mut trng = Prng::new(seed ^ (t as u64).wrapping_mul(0x9E37_79B9));
+            for r in 0..PER_THREAD {
+                let idx = trng.below(DISTINCT as u64) as usize;
+                let got = fleet
+                    .infer(inputs[idx].clone())
+                    .unwrap_or_else(|e| panic!("seed {seed} thread {t} req {r}: {e:#}"));
+                let [nat, itp] = &truths[idx];
+                assert!(
+                    got == *nat || got == *itp,
+                    "seed {seed} thread {t} req {r} input {idx}: reply {got:?} \
+                     matches neither native {nat:?} nor interp {itp:?}"
+                );
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    let total = (THREADS * PER_THREAD) as u64;
+    let snap = fleet.snapshot();
+    assert_eq!(snap.totals.submitted, total, "seed {seed}: submitted\n{snap}");
+    assert_eq!(snap.totals.completed, total, "seed {seed}: completed\n{snap}");
+    assert_eq!(snap.totals.errors, 0, "seed {seed}: errors\n{snap}");
+    // the per-pool counters are what summed: each pool must be consistent
+    for (name, s) in &snap.per_pool {
+        assert_eq!(
+            s.submitted, s.completed,
+            "seed {seed}: pool {name} lost requests\n{snap}"
+        );
+    }
+    // least-outstanding dispatch under sustained load must use both pools
+    for (name, s) in &snap.per_pool {
+        assert!(s.completed > 0, "seed {seed}: pool {name} served nothing\n{snap}");
+    }
+    if let Ok(fleet) = Arc::try_unwrap(fleet) {
+        fleet.shutdown();
+    }
+}
+
+#[test]
+fn stress_shutdown_under_load_answers_every_accepted_request() {
+    let seed = seed() ^ 0xD00D;
+    eprintln!("shutdown stress seed = {seed}");
+    let mut rng = Prng::new(seed);
+    let m = random_fc_chain(&mut rng, 2);
+    let fleet = mixed_fleet(&m, 64);
+    let ilen = fleet.input_len();
+
+    // flood the queues without consuming any reply, then shut down while
+    // the backlog is still draining
+    let mut pending = Vec::new();
+    for i in 0..96 {
+        let x = rng.i8_vec(ilen);
+        pending.push((i, fleet.submit(x).unwrap_or_else(|e| panic!("seed {seed} req {i}: {e:#}"))));
+    }
+    fleet.shutdown(); // drops the queues and joins workers — must drain first
+    for (i, rx) in pending {
+        let reply = rx
+            .recv()
+            .unwrap_or_else(|e| panic!("seed {seed} req {i}: reply dropped on shutdown: {e}"));
+        assert!(reply.is_ok(), "seed {seed} req {i}: {:#}", reply.unwrap_err());
+    }
+}
+
+#[test]
+fn stress_backpressure_never_drops_or_reorders_per_thread() {
+    // tiny queue: submitters block on a full queue; every request must
+    // still be answered exactly once with the right output
+    let seed = seed() ^ 0xB10C;
+    eprintln!("backpressure stress seed = {seed}");
+    let mut rng = Prng::new(seed);
+    let m = random_fc_chain(&mut rng, 1);
+    let mut native = Session::builder(&m).engine(Engine::MicroFlow).build().unwrap();
+    let mut interp = Session::builder(&m).engine(Engine::Interp).build().unwrap();
+    let ilen = native.input_len();
+    let x = rng.i8_vec(ilen);
+    let truth = [native.run(&x).unwrap(), interp.run(&x).unwrap()];
+
+    let fleet = Arc::new(mixed_fleet(&m, 2));
+    let mut handles = Vec::new();
+    for t in 0..6 {
+        let fleet = Arc::clone(&fleet);
+        let x = x.clone();
+        let truth = truth.clone();
+        handles.push(std::thread::spawn(move || {
+            for r in 0..40 {
+                let got = fleet.infer(x.clone()).unwrap();
+                assert!(
+                    got == truth[0] || got == truth[1],
+                    "seed {seed} thread {t} req {r}: {got:?}"
+                );
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let snap = fleet.snapshot();
+    assert_eq!(snap.totals.submitted, 240, "seed {seed}\n{snap}");
+    assert_eq!(snap.totals.completed, 240, "seed {seed}\n{snap}");
+    if let Ok(fleet) = Arc::try_unwrap(fleet) {
+        fleet.shutdown();
+    }
+}
