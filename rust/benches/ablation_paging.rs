@@ -30,9 +30,8 @@ fn main() -> anyhow::Result<()> {
         let pc = PreComputed::fold(&b, &colsum, k, 0.05, 3, 0.02, 0, 0.001, 0, 0.08, 0, FusedAct::None);
         let mut out = vec![0i8; n];
         let mut page = vec![0i8; k];
-        let mut acc = vec![0i32; n];
         let s_un = time_iters(10, 200, || {
-            fully_connected_microflow(&x, &w, k, n, &pc, &mut acc, &mut out);
+            fully_connected_microflow(&x, &w, k, n, &pc, &mut out);
             black_box(&out);
         });
         let s_pg = time_iters(10, 200, || {

@@ -32,9 +32,8 @@ fn main() -> anyhow::Result<()> {
         let colsum: Vec<i32> = (0..n).map(|j| (0..k).map(|i| w[i * n + j] as i32).sum()).collect();
         let pc = PreComputed::fold(&b, &colsum, k, 0.05, 3, 0.02, -1, 0.001, 0, 0.08, 0, FusedAct::None);
         let mut out = vec![0i8; n];
-        let mut acc = vec![0i32; n];
         let s_folded = time_iters(10, 100, || {
-            fully_connected_microflow(&x, &w, k, n, &pc, &mut acc, &mut out);
+            fully_connected_microflow(&x, &w, k, n, &pc, &mut out);
             black_box(&out);
         });
         let s_refold = time_iters(10, 100, || {
@@ -43,7 +42,7 @@ fn main() -> anyhow::Result<()> {
             let colsum: Vec<i32> =
                 (0..n).map(|j| (0..k).map(|i| w[i * n + j] as i32).sum()).collect();
             let pc2 = PreComputed::fold(&b, &colsum, k, 0.05, 3, 0.02, -1, 0.001, 0, 0.08, 0, FusedAct::None);
-            fully_connected_microflow(&x, &w, k, n, &pc2, &mut acc, &mut out);
+            fully_connected_microflow(&x, &w, k, n, &pc2, &mut out);
             black_box(&out);
         });
         t.row(vec![

@@ -9,6 +9,12 @@
 //!
 //! Also reports the warm-session-cache effect: every fleet builds its
 //! replicas through one `SessionCache`, so N replicas cost one compile.
+//!
+//! Besides the human table, writes machine-readable `BENCH_fleet.json` at
+//! the repo root (fleet mix, replicas, req/s, scaling vs x1, cache
+//! hit/miss) so the serving-throughput trajectory is comparable across
+//! PRs. `MICROFLOW_BENCH_SMOKE=1` cuts the request volume for CI smoke
+//! runs.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -16,24 +22,34 @@ use std::time::Instant;
 use microflow::api::{Engine, Session, SessionCache};
 use microflow::coordinator::{Fleet, PoolSpec};
 use microflow::format::mfb::MfbModel;
-use microflow::sim::report::{emit, Table};
+use microflow::bench_support::smoke_mode;
+use microflow::sim::report::{emit, emit_json, Table};
 use microflow::synth;
+use microflow::util::json::Json;
 use microflow::util::Prng;
 
 const CLIENT_THREADS: usize = 8;
-const REQUESTS_PER_THREAD: usize = 250;
+
+fn requests_per_thread() -> usize {
+    if smoke_mode() {
+        10
+    } else {
+        250
+    }
+}
 
 /// Closed-loop: each client thread round-trips its requests as fast as
 /// the fleet answers. Returns requests/sec.
 fn drive(fleet: &Arc<Fleet>, input: &[i8]) -> f64 {
-    let total = CLIENT_THREADS * REQUESTS_PER_THREAD;
+    let per_thread = requests_per_thread();
+    let total = CLIENT_THREADS * per_thread;
     let t0 = Instant::now();
     let mut handles = Vec::new();
     for _ in 0..CLIENT_THREADS {
         let fleet = Arc::clone(fleet);
         let input = input.to_vec();
         handles.push(std::thread::spawn(move || {
-            for _ in 0..REQUESTS_PER_THREAD {
+            for _ in 0..per_thread {
                 fleet.infer(input.clone()).unwrap();
             }
         }));
@@ -71,6 +87,7 @@ fn main() {
         &["fleet", "replicas", "req/s", "vs x1", "cache hit/miss"],
     );
     let mut base = 0.0f64;
+    let mut rows: Vec<Json> = Vec::new();
     for replicas in [1usize, 2, 4] {
         let cache = Arc::new(SessionCache::new());
         let fleet = Arc::new(
@@ -87,6 +104,15 @@ fn main() {
             format!("{:.2}x", rps / base),
             format!("{}/{}", cache.hits(), cache.misses()),
         ]);
+        rows.push(
+            Json::obj()
+                .set("fleet", format!("native x{replicas}"))
+                .set("replicas", replicas)
+                .set("req_per_s", rps)
+                .set("vs_x1", rps / base)
+                .set("cache_hits", cache.hits() as i64)
+                .set("cache_misses", cache.misses() as i64),
+        );
         if let Ok(fleet) = Arc::try_unwrap(fleet) {
             fleet.shutdown();
         }
@@ -110,10 +136,19 @@ fn main() {
         format!("{:.2}x", rps / base),
         format!("{}/{}", cache.hits(), cache.misses()),
     ]);
+    rows.push(
+        Json::obj()
+            .set("fleet", "native x2 + interp x2")
+            .set("replicas", 4usize)
+            .set("req_per_s", rps)
+            .set("vs_x1", rps / base)
+            .set("cache_hits", cache.hits() as i64)
+            .set("cache_misses", cache.misses() as i64),
+    );
     let snap = fleet.snapshot();
     assert_eq!(
         snap.totals.completed,
-        (CLIENT_THREADS * REQUESTS_PER_THREAD) as u64,
+        (CLIENT_THREADS * requests_per_thread()) as u64,
         "fleet lost requests"
     );
     for (name, s) in &snap.per_pool {
@@ -124,5 +159,14 @@ fn main() {
     }
 
     emit("fleet_throughput", &t);
+
+    // machine-readable artifact at the repo root: the cross-PR trail
+    let doc = Json::obj()
+        .set("bench", "fleet_throughput")
+        .set("client_threads", CLIENT_THREADS)
+        .set("requests_per_thread", requests_per_thread())
+        .set("smoke", smoke_mode())
+        .set("fleets", rows);
+    emit_json(if smoke_mode() { "BENCH_fleet.smoke" } else { "BENCH_fleet" }, &doc);
     println!("fleet_throughput OK");
 }

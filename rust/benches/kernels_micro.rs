@@ -3,23 +3,47 @@
 //! variants, at the layer shapes of the three paper models.
 //!
 //! This is also the §Perf harness: the perf pass iterates on these numbers
-//! (EXPERIMENTS.md records before/after).
+//! (EXPERIMENTS.md records before/after). MicroFlow kernels run on the
+//! compile-time packed layouts (`compiler::pack`), staged once outside the
+//! timed windows, exactly as the plan does.
+//!
+//! Outputs:
+//! * the human table + CSV via `sim::report::emit`;
+//! * machine-readable `BENCH_kernels.json` at the **repo root** (shapes,
+//!   medians, microflow-vs-interp ratio) so the perf trajectory is
+//!   comparable across PRs.
+//!
+//! Set `MICROFLOW_BENCH_SMOKE=1` to run a single iteration per shape (the
+//! CI layout-regression gate: it proves the packed kernels still run at
+//! every bench shape without paying bench wall-clock).
 
-use microflow::bench_support::{black_box, report_line, time_iters};
+use microflow::bench_support::{black_box, report_line, smoke_mode, time_iters};
+use microflow::compiler::pack;
 use microflow::format::mfb::Padding;
 use microflow::kernels::view::ConvGeometry;
 use microflow::kernels::{conv2d, depthwise_conv2d, fully_connected};
-use microflow::sim::report::{emit, Table};
+use microflow::sim::report::{emit, emit_json, Table};
 use microflow::tensor::fixedpoint::FixedPointMultiplier;
 use microflow::tensor::quant::{FusedAct, PreComputed};
+use microflow::util::json::Json;
 use microflow::util::{fmt_time, Prng};
 
+struct Row {
+    kernel: &'static str,
+    shape: String,
+    microflow_s: f64,
+    interp_s: f64,
+}
+
 fn main() {
+    let smoke = smoke_mode();
+    let (warmup, iters) = if smoke { (0usize, 1usize) } else { (10, 200) };
     let mut rng = Prng::new(3);
     let mut t = Table::new(
         "kernel micro-benches (host wall-clock, median of 200)",
         &["kernel", "shape", "microflow", "tflm-interp", "ratio"],
     );
+    let mut rows: Vec<Row> = Vec::new();
 
     // --- FullyConnected at the speech classifier shape (4000 -> 4) and the
     //     sine shapes (16 -> 16)
@@ -31,12 +55,11 @@ fn main() {
         let pc = PreComputed::fold(&b, &colsum, k, 0.05, 3, 0.02, 0, 0.001, 0, 0.08, -5, FusedAct::Relu);
         let m = FixedPointMultiplier::from_real(0.05 * 0.02 / 0.08);
         let mut out = vec![0i8; n];
-        let mut acc = vec![0i32; n];
-        let s_mf = time_iters(10, 200, || {
-            fully_connected::fully_connected_microflow(&x, &w, k, n, &pc, &mut acc, &mut out);
+        let s_mf = time_iters(warmup, iters, || {
+            fully_connected::fully_connected_microflow(&x, &w, k, n, &pc, &mut out);
             black_box(&out);
         });
-        let s_tf = time_iters(10, 200, || {
+        let s_tf = time_iters(warmup, iters, || {
             fully_connected::fully_connected_interp(&x, &w, &b, k, n, 3, 0, m, -5, -128, 127, &mut out);
             black_box(&out);
         });
@@ -49,6 +72,12 @@ fn main() {
             fmt_time(s_tf.median),
             format!("{:.2}x", s_tf.median / s_mf.median),
         ]);
+        rows.push(Row {
+            kernel: "fully_connected",
+            shape: format!("{k}x{n}"),
+            microflow_s: s_mf.median,
+            interp_s: s_tf.median,
+        });
     }
 
     // --- DepthwiseConv2D at the TinyConv shape (49x40x1, k10x8, s2, mult 8)
@@ -63,12 +92,13 @@ fn main() {
         let m = FixedPointMultiplier::from_real(0.05 * 0.02 / 0.1);
         let mut view = vec![0i8; 80];
         let mut out = vec![0i8; 25 * 20 * cout];
-        let w_t = depthwise_conv2d::transpose_filters(&w, 80, cout);
-        let s_mf = time_iters(5, 200, || {
+        // compile-time packing, outside the timed window (as the plan does)
+        let w_t = pack::pack_depthwise(&w, 80, cout);
+        let s_mf = time_iters(warmup.min(5), iters, || {
             depthwise_conv2d::depthwise_conv2d_microflow(&x, &w_t, &geo, 8, -128, &pc, &mut view, &mut out);
             black_box(&out);
         });
-        let s_tf = time_iters(5, 200, || {
+        let s_tf = time_iters(warmup.min(5), iters, || {
             depthwise_conv2d::depthwise_conv2d_interp(
                 &x, &w, &b, &geo, 8, -128, 0, m, -128, -128, 127, &mut view, &mut out,
             );
@@ -83,6 +113,12 @@ fn main() {
             fmt_time(s_tf.median),
             format!("{:.2}x", s_tf.median / s_mf.median),
         ]);
+        rows.push(Row {
+            kernel: "depthwise_conv2d",
+            shape: "49x40x1 k10x8 m8".into(),
+            microflow_s: s_mf.median,
+            interp_s: s_tf.median,
+        });
     }
 
     // --- Conv2D at a MobileNet pointwise shape (6x6x128 -> 128) and the
@@ -99,13 +135,15 @@ fn main() {
             (0..cout).map(|co| f[co * kkc..(co + 1) * kkc].iter().map(|&v| v as i32).sum()).collect();
         let pc = PreComputed::fold(&b, &colsum, kkc, 0.05, -3, 0.02, 0, 0.001, 0, 0.08, 4, FusedAct::Relu6);
         let m = FixedPointMultiplier::from_real(0.05 * 0.02 / 0.08);
+        // compile-time packing, outside the timed window
+        let packed = pack::pack_conv2d(&f, cout, kkc);
         let mut view = vec![0i8; kkc];
         let mut out = vec![0i8; geo.out_h * geo.out_w * cout];
-        let s_mf = time_iters(5, 200, || {
-            conv2d::conv2d_microflow(&x, &f, &geo, cout, -3, &pc, &mut view, &mut out);
+        let s_mf = time_iters(warmup.min(5), iters, || {
+            conv2d::conv2d_microflow(&x, &packed, &geo, -3, &pc, &mut view, &mut out);
             black_box(&out);
         });
-        let s_tf = time_iters(5, 200, || {
+        let s_tf = time_iters(warmup.min(5), iters, || {
             conv2d::conv2d_interp(&x, &f, &b, &geo, cout, -3, 0, m, 4, -128, 127, &mut view, &mut out);
             black_box(&out);
         });
@@ -118,8 +156,35 @@ fn main() {
             fmt_time(s_tf.median),
             format!("{:.2}x", s_tf.median / s_mf.median),
         ]);
+        rows.push(Row {
+            kernel: "conv2d",
+            shape: label.into(),
+            microflow_s: s_mf.median,
+            interp_s: s_tf.median,
+        });
     }
 
     emit("kernels_micro", &t);
+
+    // machine-readable artifact at the repo root: the cross-PR perf trail
+    let shapes: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            Json::obj()
+                .set("kernel", r.kernel)
+                .set("shape", r.shape.clone())
+                .set("microflow_s", r.microflow_s)
+                .set("interp_s", r.interp_s)
+                .set("ratio_interp_over_microflow", r.interp_s / r.microflow_s)
+        })
+        .collect();
+    let doc = Json::obj()
+        .set("bench", "kernels_micro")
+        .set("iters", iters)
+        .set("smoke", smoke)
+        .set("shapes", shapes);
+    // smoke runs go to a distinct (untracked) name so median-of-1 noise
+    // can never overwrite the tracked perf trail
+    emit_json(if smoke { "BENCH_kernels.smoke" } else { "BENCH_kernels" }, &doc);
     println!("kernels_micro OK");
 }

@@ -48,6 +48,14 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// True when `MICROFLOW_BENCH_SMOKE` is set: benches run one iteration
+/// per shape (the CI layout-regression gate) and write their JSON
+/// artifacts under a `.smoke` name so the tracked cross-PR perf trail
+/// only ever holds real-run medians.
+pub fn smoke_mode() -> bool {
+    std::env::var_os("MICROFLOW_BENCH_SMOKE").is_some()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

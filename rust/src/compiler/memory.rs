@@ -2,29 +2,21 @@
 //!
 //! MicroFlow allocates everything on the stack: during execution the live
 //! set at operator `i` is `input_i + output_i + scratch_i` (+ the folded
-//! constants, which live in Flash/rodata, not RAM). The engine therefore
-//! needs exactly two ping-pong activation buffers sized by the largest
-//! activations, plus the largest scratch — and the **peak** over operators
-//! is the device's RAM high-water mark (what Fig. 9/10 plot for MicroFlow).
+//! constants and packed weights, which live in Flash/rodata, not RAM).
+//! The engine therefore needs exactly two ping-pong activation buffers
+//! sized by the largest activations, plus the largest kernel scratch
+//! (view/page buffer) — and the **peak** over operators is the device's
+//! RAM high-water mark (what Fig. 9/10 plot for MicroFlow).
+//!
+//! The register-tiled kernel core keeps all dot-product accumulators in
+//! registers (`microkernel::NR` per walk), so no step charges i32
+//! accumulator scratch anymore — the wide-output FullyConnected buffer
+//! that PR 2 threaded through the plan is gone entirely.
 //!
 //! Contrast with the TFLM arena ([`crate::interp::arena`]): sized for the
 //! worst case, allocated for the whole lifetime, never freed.
 
 use super::plan::{Step, StepKind};
-
-pub use crate::kernels::fully_connected::FC_NARROW_MAX;
-
-/// i32 accumulator elements a step needs from the executor's shared
-/// scratch (wide-output unpaged FullyConnected only: narrow outputs use a
-/// stack array, paged execution reduces into a single accumulator).
-/// Sized from the kernel's own [`FC_NARROW_MAX`] so the planner and the
-/// kernel's path selection cannot disagree.
-pub fn step_acc_i32(kind: &StepKind) -> usize {
-    match kind {
-        StepKind::FullyConnected { n, paged, .. } if !paged && *n > FC_NARROW_MAX => *n,
-        _ => 0,
-    }
-}
 
 /// Per-step memory accounting (bytes).
 #[derive(Clone, Debug, PartialEq)]
@@ -55,10 +47,6 @@ pub struct MemoryPlan {
     pub buf_b: usize,
     /// Largest kernel scratch (view/page buffer).
     pub scratch: usize,
-    /// Largest i32 accumulator scratch (elements) any wide-output
-    /// FullyConnected needs — threaded through the plan so the kernel
-    /// never allocates its accumulators per call.
-    pub acc_i32: usize,
 }
 
 impl MemoryPlan {
@@ -72,17 +60,13 @@ impl MemoryPlan {
         let mut buf_a = 0usize;
         let mut buf_b = 0usize;
         let mut scratch = 0usize;
-        let mut acc_i32 = 0usize;
         let mut reads_a = true;
         for (i, s) in steps.iter().enumerate() {
-            let step_acc = step_acc_i32(&s.kind);
             let m = StepMemory {
                 op: s.kind.name(),
                 input: s.in_len,
                 output: if matches!(s.kind, StepKind::Reshape) { 0 } else { s.out_len },
-                // the i32 accumulators are live during the step, so they
-                // count toward its scratch charge (4 bytes each)
-                scratch: s.scratch_len + step_acc * 4,
+                scratch: s.scratch_len,
             };
             if m.live() > peak {
                 peak = m.live();
@@ -101,26 +85,25 @@ impl MemoryPlan {
                 buf_a = buf_a.max(s.out_len);
             }
             scratch = scratch.max(s.scratch_len);
-            acc_i32 = acc_i32.max(step_acc);
             reads_a = !reads_a;
             per_step.push(m);
         }
-        MemoryPlan { per_step, peak, peak_step, buf_a, buf_b, scratch, acc_i32 }
+        MemoryPlan { per_step, peak, peak_step, buf_a, buf_b, scratch }
     }
 
-    /// Total bytes the executor actually allocates (ping-pong + scratch +
-    /// i32 accumulators).
+    /// Total bytes the executor actually allocates (ping-pong + scratch).
     pub fn executor_bytes(&self) -> usize {
-        self.buf_a + self.buf_b + self.scratch + self.acc_i32 * 4
+        self.buf_a + self.buf_b + self.scratch
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::compiler::pack::pack_conv2d;
+    use crate::compiler::plan::{Step, StepKind};
     use crate::format::mfb::Padding;
     use crate::kernels::view::ConvGeometry;
-    use crate::compiler::plan::{Step, StepKind};
     use crate::tensor::quant::{FusedAct, PreComputed};
 
     fn fc_step(k: usize, n: usize) -> Step {
@@ -150,30 +133,25 @@ mod tests {
     fn peak_is_biggest_live_set() {
         let steps = vec![fc_step(10, 100), fc_step(100, 4)];
         let plan = MemoryPlan::analyze(&steps);
-        // wide FC (n = 100): input + output + 100 i32 accumulators
-        assert_eq!(plan.peak, 110 + 400);
+        // register-tiled FC: input + output only, no accumulator scratch
+        assert_eq!(plan.peak, 110);
         assert_eq!(plan.peak_step, 0);
         // ping-pong sizing: A holds inputs of even steps + outputs of odd
         assert_eq!(plan.buf_a, 10.max(4));
         assert_eq!(plan.buf_b, 100);
-        // accumulator scratch sized for the widest unpaged FC; the narrow
-        // second FC (n = 4) adds nothing
-        assert_eq!(plan.acc_i32, 100);
-        assert_eq!(plan.executor_bytes(), 10 + 100 + 0 + 400);
+        assert_eq!(plan.executor_bytes(), 10 + 100 + 0);
     }
 
     #[test]
-    fn narrow_and_paged_fc_need_no_acc_scratch() {
-        let narrow = vec![fc_step(100, 8)];
-        assert_eq!(MemoryPlan::analyze(&narrow).acc_i32, 0);
+    fn paged_fc_charges_its_page_buffer() {
         let mut paged = fc_step(64, 32);
         if let StepKind::FullyConnected { paged: p, .. } = &mut paged.kind {
             *p = true;
         }
         paged.scratch_len = 64; // page buffer
         let plan = MemoryPlan::analyze(&[paged]);
-        assert_eq!(plan.acc_i32, 0);
         assert_eq!(plan.scratch, 64);
+        assert_eq!(plan.peak, 64 + 32 + 64);
     }
 
     #[test]
@@ -194,7 +172,12 @@ mod tests {
         let geo = ConvGeometry::new(8, 8, 4, 3, 3, 1, 1, Padding::Same).unwrap();
         let pc = PreComputed::fold(&[0], &[0], 36, 0.1, 0, 0.1, 0, 0.01, 0, 0.1, 0, FusedAct::None);
         let step = Step {
-            kind: StepKind::Conv2D { geo, c_out: 1, filters: vec![0; 36], z_x: 0, pc },
+            kind: StepKind::Conv2D {
+                geo,
+                filters: pack_conv2d(&[0; 36], 1, 36),
+                z_x: 0,
+                pc,
+            },
             in_len: 8 * 8 * 4,
             out_len: 8 * 8,
             scratch_len: 36,

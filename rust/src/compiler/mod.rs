@@ -4,8 +4,9 @@
 //!
 //! ```text
 //! MFB bytes ──parse──▶ MfbModel (lossless IR) ──preprocess──▶ folded
-//! constants (Eq. 4/7/10/13) ──plan──▶ ExecutionPlan + MemoryPlan (+
-//! PagePlan when paging is requested)
+//! constants (Eq. 4/7/10/13) ──pack──▶ kernel-layout weight panels
+//! (conv NR-panels, dw transpose, FC panel view) ──plan──▶ ExecutionPlan
+//! + MemoryPlan (+ PagePlan when paging is requested)
 //! ```
 //!
 //! The paper runs this inside a procedural macro at `rustc` time; here the
@@ -21,10 +22,12 @@
 //! memory story of Fig. 9/10.
 
 pub mod memory;
+pub mod pack;
 pub mod paging;
 pub mod plan;
 pub mod preprocess;
 
 pub use memory::MemoryPlan;
+pub use pack::{PackedConvFilters, NR};
 pub use paging::PagePlan;
 pub use plan::{CompiledModel, CompileOptions, Step, StepKind};

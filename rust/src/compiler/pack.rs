@@ -1,0 +1,137 @@
+//! Compile-time weight packing (paper Sec. 3.3's pre-processing extended
+//! from *constants* to *layout*; DESIGN.md S9).
+//!
+//! The planner runs this pass once per weighted step, rewriting the
+//! container's flash image into the layout the register-tiled kernels
+//! ([`crate::kernels::microkernel`]) consume:
+//!
+//! * **Conv2D / pointwise** — `[Cout, KH*KW*Cin]` row-major filters are
+//!   re-laid into output-channel panels of width [`NR`]:
+//!   `[ceil(Cout/NR)][kkc][NR]`, channel-interleaved so the inner loop
+//!   reads `NR` weights contiguously per input byte. The tail panel is
+//!   zero-padded to `NR` lanes (computed, never written back).
+//! * **DepthwiseConv2D** — the container's `[KH*KW, Cout]` filters are
+//!   transposed once to `[Cout, KH*KW]` so every per-channel dot streams
+//!   its filter contiguously. This used to happen at each call site;
+//!   it is now part of the one compile-time pass.
+//! * **FullyConnected** — weights stay `[K, N]` (each row already holds
+//!   `N` contiguous per-channel weights, and the paged executor needs the
+//!   container layout); the kernel walks them through a **tail-aware panel
+//!   view** described by [`fc_panels`]: `n / NR` full register-tiled
+//!   panels plus one `n % NR`-wide tail walk.
+//!
+//! ## Bit-exactness contract
+//!
+//! Packing permutes *where* a weight lives, never its value, and the
+//! kernels accumulate in exact i32 arithmetic — so packed execution is
+//! **bit-identical** to the unpacked reference order, and the engine's
+//! exact-equality contract with the JAX golden path
+//! (`python/compile/kernels/ref.py`, gated by
+//! `tests/integration_engine.rs::engine_is_bit_exact_vs_jax_golden_on_all_models`)
+//! is preserved exactly — `assert_eq!`, not within-one-unit. The
+//! randomized oracle suite `tests/pack_equivalence.rs` pins this per
+//! kernel, including `c_out % NR != 0` tails, 1x1 filters, SAME/VALID
+//! padding and stride 2.
+
+pub use crate::kernels::microkernel::{fc_panels, PackedConvFilters, NR};
+
+/// Pack `[Cout, kkc]` row-major conv filters into `NR`-wide
+/// output-channel panels (`kkc = KH*KW*Cin`; pointwise is `kkc = Cin`).
+pub fn pack_conv2d(filters: &[i8], c_out: usize, kkc: usize) -> PackedConvFilters {
+    assert_eq!(filters.len(), c_out * kkc, "filter payload doesn't match [Cout, KH*KW*Cin]");
+    let panels = c_out.div_ceil(NR);
+    let mut data = vec![0i8; panels * kkc * NR];
+    for co in 0..c_out {
+        let (p, r) = (co / NR, co % NR);
+        let src = &filters[co * kkc..(co + 1) * kkc];
+        let dst = &mut data[p * kkc * NR..(p + 1) * kkc * NR];
+        for (k, &v) in src.iter().enumerate() {
+            dst[k * NR + r] = v;
+        }
+    }
+    PackedConvFilters { c_out, kkc, data }
+}
+
+/// Transpose container-layout depthwise filters `[KH*KW, Cout]` to the
+/// kernel's channel-major `[Cout, KH*KW]` — one pass, at compile time.
+pub fn pack_depthwise(w: &[i8], kk: usize, c_out: usize) -> Vec<i8> {
+    assert_eq!(w.len(), kk * c_out, "dw filter payload doesn't match [KH*KW, Cout]");
+    let mut out = vec![0i8; kk * c_out];
+    for t in 0..kk {
+        for co in 0..c_out {
+            out[co * kk + t] = w[t * c_out + co];
+        }
+    }
+    out
+}
+
+/// Output-channel lanes the packed conv kernel actually computes:
+/// `ceil(c_out / NR) * NR` — `c_out` rounded up to whole panels. The cost
+/// model charges conv MACs on this number (identical to `c_out` whenever
+/// `c_out % NR == 0`, which holds for every layer of the paper's models).
+pub fn padded_lanes(c_out: usize) -> usize {
+    c_out.div_ceil(NR) * NR
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Prng;
+
+    #[test]
+    fn conv_panels_interleave_channels() {
+        // Cout=2, kkc=3: F = [[1,2,3],[4,5,6]] -> one panel
+        // [k0: 1,4,0,0][k1: 2,5,0,0][k2: 3,6,0,0]
+        let pf = pack_conv2d(&[1, 2, 3, 4, 5, 6], 2, 3);
+        assert_eq!(pf.panels(), 1);
+        assert_eq!(pf.panel_width(0), 2);
+        assert_eq!(pf.data, vec![1, 4, 0, 0, 2, 5, 0, 0, 3, 6, 0, 0]);
+    }
+
+    #[test]
+    fn conv_packing_is_a_permutation_plus_zero_tail() {
+        let mut rng = Prng::new(11);
+        for &(c_out, kkc) in &[(1usize, 5usize), (4, 9), (6, 3), (13, 8)] {
+            let f = rng.i8_vec(c_out * kkc);
+            let pf = pack_conv2d(&f, c_out, kkc);
+            assert_eq!(pf.data.len(), c_out.div_ceil(NR) * kkc * NR);
+            // every original weight is findable at its packed slot
+            for co in 0..c_out {
+                let (p, r) = (co / NR, co % NR);
+                for k in 0..kkc {
+                    assert_eq!(pf.panel(p)[k * NR + r], f[co * kkc + k], "co {co} k {k}");
+                }
+            }
+            // tail lanes are zero
+            let last = pf.panels() - 1;
+            for r in pf.panel_width(last)..NR {
+                for k in 0..kkc {
+                    assert_eq!(pf.panel(last)[k * NR + r], 0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn depthwise_transpose_round_trips() {
+        // [KK=2, Cout=3]: [[1,2,3],[4,5,6]] -> [Cout, KK] = [1,4,2,5,3,6]
+        let t = pack_depthwise(&[1, 2, 3, 4, 5, 6], 2, 3);
+        assert_eq!(t, vec![1, 4, 2, 5, 3, 6]);
+    }
+
+    #[test]
+    fn fc_panel_view_covers_every_width() {
+        assert_eq!(fc_panels(1), (0, 1));
+        assert_eq!(fc_panels(4), (1, 0));
+        assert_eq!(fc_panels(7), (1, 3));
+        assert_eq!(fc_panels(128), (32, 0));
+    }
+
+    #[test]
+    fn padded_lanes_round_up_to_whole_panels() {
+        assert_eq!(padded_lanes(4), 4);
+        assert_eq!(padded_lanes(5), 8);
+        assert_eq!(padded_lanes(128), 128);
+        assert_eq!(padded_lanes(1), 4);
+    }
+}

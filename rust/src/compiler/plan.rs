@@ -6,7 +6,9 @@
 //!
 //! * all tensor shapes resolved (the const-generics of the paper),
 //! * all Eq. 4/7/10/13 constants folded ([`PreComputed`]),
-//! * weight payloads re-owned in kernel layout,
+//! * weight payloads **packed** into kernel layout by [`super::pack`]
+//!   (Conv2D filters as `NR`-wide output-channel panels, depthwise
+//!   filters pre-transposed — never at inference time),
 //! * every name / version / option byte dropped,
 //! * a [`MemoryPlan`] giving the static buffer sizes.
 //!
@@ -16,9 +18,11 @@
 use anyhow::{bail, Context, Result};
 
 use super::memory::MemoryPlan;
+use super::pack;
 use super::paging::PagePlan;
 use super::preprocess;
 use crate::format::mfb::{MfbModel, OpCode, OpOptions, Padding};
+use crate::kernels::microkernel::PackedConvFilters;
 use crate::kernels::view::ConvGeometry;
 use crate::tensor::quant::{PreComputed, QParams};
 
@@ -53,14 +57,16 @@ pub enum StepKind {
     },
     Conv2D {
         geo: ConvGeometry,
-        c_out: usize,
-        filters: Vec<i8>,
+        /// Compile-time packed panel image ([`pack::pack_conv2d`]); also
+        /// the single source of truth for `Cout`.
+        filters: PackedConvFilters,
         z_x: i8,
         pc: PreComputed,
     },
     DepthwiseConv2D {
         geo: ConvGeometry,
         depth_multiplier: usize,
+        /// Pre-transposed to `[Cout, KH*KW]` ([`pack::pack_depthwise`]).
         filters: Vec<i8>,
         z_x: i8,
         pc: PreComputed,
@@ -113,8 +119,8 @@ impl StepKind {
     pub fn macs(&self, out_len: usize) -> u64 {
         match self {
             StepKind::FullyConnected { k, n, .. } => (*k as u64) * (*n as u64),
-            StepKind::Conv2D { geo, c_out, .. } => {
-                (geo.out_h * geo.out_w * c_out * geo.k_h * geo.k_w * geo.in_c) as u64
+            StepKind::Conv2D { geo, filters, .. } => {
+                (geo.out_h * geo.out_w * filters.c_out * geo.k_h * geo.k_w * geo.in_c) as u64
             }
             StepKind::DepthwiseConv2D { geo, depth_multiplier, .. } => {
                 (geo.out_h * geo.out_w * geo.in_c * depth_multiplier * geo.k_h * geo.k_w) as u64
@@ -129,11 +135,14 @@ impl StepKind {
         }
     }
 
-    /// Weight bytes carried by this step (Flash cost).
+    /// Weight bytes carried by this step (Flash cost). Conv2D counts the
+    /// packed panel image — zero-filled tail lanes ship in Flash too.
     pub fn weight_bytes(&self) -> usize {
         match self {
             StepKind::FullyConnected { weights, pc, .. } => weights.len() + pc.const_bias.len() * 4,
-            StepKind::Conv2D { filters, pc, .. } => filters.len() + pc.const_bias.len() * 4,
+            StepKind::Conv2D { filters, pc, .. } => {
+                filters.flash_bytes() + pc.const_bias.len() * 4
+            }
             StepKind::DepthwiseConv2D { filters, pc, .. } => {
                 filters.len() + pc.const_bias.len() * 4
             }
@@ -228,12 +237,19 @@ impl CompiledModel {
                         .with_context(|| format!("op #{oi} Conv2D"))?;
                     check_out_dims(oi, &y_t.dims, geo.out_h, geo.out_w, c_out)?;
                     let pc = preprocess::preprocess_conv2d(x_t, f_t, b_t, y_t, act)?;
-                    let scratch = geo.k_h * geo.k_w * geo.in_c;
+                    // view scratch is only staged for boundary positions;
+                    // an all-interior conv (every VALID layer) borrows its
+                    // rows from the input and needs none
+                    let scratch =
+                        if geo.has_boundary() { geo.k_h * geo.k_w * geo.in_c } else { 0 };
+                    // compile-time weight packing: [Cout, KH*KW*Cin] ->
+                    // NR-wide output-channel panels for the register-tiled
+                    // kernel core (bit-identical by the pack contract)
+                    let filters = pack::pack_conv2d(&f_t.data_i8()?, c_out, kh * kw * c_in);
                     (
                         StepKind::Conv2D {
                             geo,
-                            c_out,
-                            filters: f_t.data_i8()?,
+                            filters,
                             z_x: x_t.qparams.zero_point as i8,
                             pc,
                         },
@@ -266,11 +282,7 @@ impl CompiledModel {
                     // compile-time weight re-layout: [KH*KW, Cout] ->
                     // [Cout, KH*KW] so the per-channel kernel streams its
                     // filter contiguously (EXPERIMENTS.md §Perf)
-                    let filters = crate::kernels::depthwise_conv2d::transpose_filters(
-                        &w_t.data_i8()?,
-                        kh * kw,
-                        c_out,
-                    );
+                    let filters = pack::pack_depthwise(&w_t.data_i8()?, kh * kw, c_out);
                     (
                         StepKind::DepthwiseConv2D {
                             geo,

@@ -9,7 +9,11 @@
 //! * `kzxzw        = K z_X z_W`                        (int32)
 //!
 //! leaving only the data-dependent dot product and (when `z_W != 0`) the
-//! input row-sum for the runtime kernel.
+//! input row-sum for the runtime kernel. Constant folding works on the
+//! container's layouts (colsums here index `[K, N]` / `[Cout, kkc]` /
+//! `[KH*KW, Cout]` directly); the sibling [`super::pack`] pass then
+//! rewrites the weight payloads themselves into kernel layout — both run
+//! once, offline, inside [`super::plan::CompiledModel::compile`].
 
 use anyhow::{bail, Result};
 

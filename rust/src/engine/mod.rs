@@ -130,19 +130,19 @@ pub(crate) fn run_plan<'a>(
                 continue;
             }
             StepKind::FullyConnected { k, n, weights, pc, paged } => {
-                let (x, y, page, acc) = scratch.split(in_len, out_len);
+                let (x, y, page) = scratch.split(in_len, out_len);
                 if *paged {
                     fully_connected::fully_connected_paged(x, weights, *k, *n, pc, &mut page[..*k], y);
                 } else {
-                    fully_connected::fully_connected_microflow(x, weights, *k, *n, pc, acc, y);
+                    fully_connected::fully_connected_microflow(x, weights, *k, *n, pc, y);
                 }
             }
-            StepKind::Conv2D { geo, c_out, filters, z_x, pc } => {
-                let (x, y, view, _) = scratch.split(in_len, out_len);
-                conv2d::conv2d_microflow(x, filters, geo, *c_out, *z_x, pc, &mut view[..step.scratch_len], y);
+            StepKind::Conv2D { geo, filters, z_x, pc } => {
+                let (x, y, view) = scratch.split(in_len, out_len);
+                conv2d::conv2d_microflow(x, filters, geo, *z_x, pc, &mut view[..step.scratch_len], y);
             }
             StepKind::DepthwiseConv2D { geo, depth_multiplier, filters, z_x, pc } => {
-                let (x, y, view, _) = scratch.split(in_len, out_len);
+                let (x, y, view) = scratch.split(in_len, out_len);
                 depthwise_conv2d::depthwise_conv2d_microflow(
                     x,
                     filters,
@@ -155,7 +155,7 @@ pub(crate) fn run_plan<'a>(
                 );
             }
             StepKind::AveragePool2D { geo, z_x, ratio, z_y, act_min, act_max } => {
-                let (x, y, view, _) = scratch.split(in_len, out_len);
+                let (x, y, view) = scratch.split(in_len, out_len);
                 average_pool2d::average_pool2d_microflow(
                     x,
                     geo,
@@ -169,15 +169,15 @@ pub(crate) fn run_plan<'a>(
                 );
             }
             StepKind::Softmax { s_x, z_x, s_y, z_y } => {
-                let (x, y, _, _) = scratch.split(in_len, out_len);
+                let (x, y, _) = scratch.split(in_len, out_len);
                 activation::softmax(x, *s_x, *z_x, *s_y, *z_y, y);
             }
             StepKind::Relu { s_x, z_x, s_y, z_y } => {
-                let (x, y, _, _) = scratch.split(in_len, out_len);
+                let (x, y, _) = scratch.split(in_len, out_len);
                 activation::relu(x, *s_x, *z_x, *s_y, *z_y, y);
             }
             StepKind::Relu6 { s_x, z_x, s_y, z_y } => {
-                let (x, y, _, _) = scratch.split(in_len, out_len);
+                let (x, y, _) = scratch.split(in_len, out_len);
                 activation::relu6(x, *s_x, *z_x, *s_y, *z_y, y);
             }
         }

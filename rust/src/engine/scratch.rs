@@ -1,12 +1,14 @@
 //! Static scratch buffers for the plan executor (paper Sec. 4.2).
 //!
-//! Two ping-pong activation buffers + one i8 kernel scratch buffer + one
-//! i32 accumulator buffer (for wide-output FullyConnected, whose
-//! accumulators don't fit the narrow-path stack array), sized by the
-//! compiler's [`MemoryPlan`](crate::compiler::memory::MemoryPlan) and
-//! allocated exactly once. `split` hands the executor disjoint
-//! `(input, output, scratch, acc)` views without any unsafe code, via
-//! `RefCell`-free plain borrows.
+//! Two ping-pong activation buffers + one i8 kernel scratch buffer
+//! (view/page staging), sized by the compiler's
+//! [`MemoryPlan`](crate::compiler::memory::MemoryPlan) and allocated
+//! exactly once. The register-tiled kernel core keeps all dot-product
+//! accumulators in registers, so no i32 accumulator buffer exists — the
+//! one PR 2 threaded through the plan for wide-output FullyConnected was
+//! deleted when the kernels moved onto `kernels::microkernel`. `split`
+//! hands the executor disjoint `(input, output, scratch)` views without
+//! any unsafe code, via plain borrows.
 
 use crate::compiler::plan::CompiledModel;
 
@@ -16,10 +18,6 @@ pub struct Scratch {
     a: Vec<i8>,
     b: Vec<i8>,
     kernel: Vec<i8>,
-    /// i32 accumulator scratch for wide-output FullyConnected — threading
-    /// it through the plan keeps the whole predict path allocation-free
-    /// (ROADMAP open item closed in this PR).
-    acc: Vec<i32>,
     /// Which buffer currently holds the live activations.
     live_in_a: bool,
 }
@@ -31,13 +29,7 @@ impl Scratch {
         // both buffers must also hold the model input/output endpoints
         let a = m.buf_a.max(compiled.input_len()).max(compiled.output_len());
         let b = m.buf_b.max(compiled.input_len()).max(compiled.output_len());
-        Scratch {
-            a: vec![0; a],
-            b: vec![0; b],
-            kernel: vec![0; m.scratch],
-            acc: vec![0; m.acc_i32],
-            live_in_a: true,
-        }
+        Scratch { a: vec![0; a], b: vec![0; b], kernel: vec![0; m.scratch], live_in_a: true }
     }
 
     /// Stage the model input into the live buffer.
@@ -46,13 +38,12 @@ impl Scratch {
         self.a[..input.len()].copy_from_slice(input);
     }
 
-    /// Disjoint (input, output, kernel-scratch, i32-accumulator) views for
-    /// one step.
-    pub fn split(&mut self, in_len: usize, out_len: usize) -> (&[i8], &mut [i8], &mut [i8], &mut [i32]) {
+    /// Disjoint (input, output, kernel-scratch) views for one step.
+    pub fn split(&mut self, in_len: usize, out_len: usize) -> (&[i8], &mut [i8], &mut [i8]) {
         if self.live_in_a {
-            (&self.a[..in_len], &mut self.b[..out_len], &mut self.kernel[..], &mut self.acc[..])
+            (&self.a[..in_len], &mut self.b[..out_len], &mut self.kernel[..])
         } else {
-            (&self.b[..in_len], &mut self.a[..out_len], &mut self.kernel[..], &mut self.acc[..])
+            (&self.b[..in_len], &mut self.a[..out_len], &mut self.kernel[..])
         }
     }
 
@@ -77,14 +68,13 @@ impl Scratch {
             self.a.as_ptr() as usize,
             self.b.as_ptr() as usize,
             self.kernel.as_ptr() as usize,
-            self.acc.as_ptr() as usize,
         ]
     }
 
     /// Total allocated bytes (must equal the memory plan's executor size,
     /// modulo the input/output endpoint adjustment).
     pub fn total_bytes(&self) -> usize {
-        self.a.len() + self.b.len() + self.kernel.len() + self.acc.len() * 4
+        self.a.len() + self.b.len() + self.kernel.len()
     }
 }
 
@@ -101,7 +91,7 @@ mod tests {
         let mut s = Scratch::for_plan(&c);
         s.load_input(&[5, 6]);
         {
-            let (x, y, _, _) = s.split(2, 3);
+            let (x, y, _) = s.split(2, 3);
             assert_eq!(x, &[5, 6]);
             y[0] = 9;
         }
@@ -116,7 +106,7 @@ mod tests {
         let s = Scratch::for_plan(&c);
         assert!(s.a.len() >= c.input_len());
         assert!(s.b.len() >= c.output_len());
-        // the tiny FC is narrow (n = 3): no accumulator scratch needed
-        assert_eq!(s.acc.len(), 0);
+        // register-tiled kernels: no accumulator buffer anywhere
+        assert_eq!(s.total_bytes(), s.a.len() + s.b.len() + s.kernel.len());
     }
 }

@@ -1,71 +1,117 @@
 //! Conv2D kernels — Eq. (6) / Appendix A.2 (DESIGN.md S9).
 //!
-//! Input `[H, W, Cin]`, filters `[Cout, KH, KW, Cin]` row-major, output
-//! `[OH, OW, Cout]`. View extraction is Algorithm 1 via
-//! [`ConvGeometry::extract_view`]; the extracted patch (`KH*KW*Cin`) is the
-//! operator's scratch working set charged by the static memory planner.
+//! Input `[H, W, Cin]`, output `[OH, OW, Cout]`. The MicroFlow variant
+//! consumes filters **packed at compile time** by
+//! [`crate::compiler::pack::pack_conv2d`] into `NR`-wide output-channel
+//! panels and runs on the register-tiled
+//! [`microkernel`](crate::kernels::microkernel) core: each input byte is
+//! loaded once and feeds `NR` interleaved i32 accumulators, with the
+//! Eq. 6 view sum folded into the first panel's walk. Interior output
+//! positions (no padding in play) borrow their unit-stride rows straight
+//! from the input via [`ConvGeometry::row_offset`]; only boundary
+//! positions pay the Algorithm 1 copy into the view buffer.
+//!
+//! The interpreter variant keeps the container's `[Cout, KH, KW, Cin]`
+//! row-major filters and the naive one-accumulator loop nest, as TFLM
+//! must.
 
+use crate::kernels::microkernel::{self, PackedConvFilters, NR};
 use crate::kernels::view::ConvGeometry;
 use crate::tensor::fixedpoint::FixedPointMultiplier;
 use crate::tensor::quant::{requant_float, PreComputed};
 
-/// MicroFlow Conv2D: folded constants + float epilogue.
+/// Requantize one panel's accumulators into the output channels it
+/// covers; tail lanes past `panel_width` are computed-but-dropped.
+#[inline(always)]
+fn finish_panel(
+    filters: &PackedConvFilters,
+    p: usize,
+    acc: &[i32; NR],
+    zw_viewsum: i32,
+    pc: &PreComputed,
+    out: &mut [i8],
+) {
+    for r in 0..filters.panel_width(p) {
+        let co = p * NR + r;
+        let a = acc[r] - zw_viewsum - pc.w_zp_term[co] + pc.kzxzw;
+        out[co] = requant_float(a, pc.const_bias[co], pc.scale_ratio, pc.act_min, pc.act_max);
+    }
+}
+
+/// MicroFlow Conv2D: packed panels + folded constants + float epilogue.
 ///
 /// `pc.w_zp_term[co]` folds `z_X * Σ F[co]`; `pc.kzxzw` folds
 /// `KH*KW*Cin * z_X * z_F`; `pc.const_bias[co]` folds the bias term.
+/// Bit-identical to the unpacked Eq. 6 reference (exact i32 accumulation;
+/// see `tests/pack_equivalence.rs`).
 pub fn conv2d_microflow(
     input: &[i8],
-    filters: &[i8],
+    filters: &PackedConvFilters,
     geo: &ConvGeometry,
-    c_out: usize,
     z_x: i8,
     pc: &PreComputed,
     view: &mut [i8],
     out: &mut [i8],
 ) {
+    let c_out = filters.c_out;
     let kkc = geo.k_h * geo.k_w * geo.in_c;
-    debug_assert_eq!(filters.len(), c_out * kkc);
-    debug_assert_eq!(view.len(), kkc);
+    debug_assert_eq!(filters.kkc, kkc);
+    // an all-interior geometry (every VALID conv) never stages a view, so
+    // the planner passes no scratch at all
+    debug_assert!(
+        view.len() == kkc || (view.is_empty() && !geo.has_boundary()),
+        "view scratch must hold one full view when padding is in play"
+    );
+    debug_assert_eq!(input.len(), geo.in_h * geo.in_w * geo.in_c);
     debug_assert_eq!(out.len(), geo.out_h * geo.out_w * c_out);
+    debug_assert_eq!(pc.const_bias.len(), c_out);
 
-    // pointwise fast path: a 1x1 stride-1 conv never needs view
-    // extraction — the "view" IS the pixel. This is the dominant layer
-    // class of MobileNet (13 of the person model's 14 dense convs);
-    // skipping the per-position copy buys ~25% (EXPERIMENTS.md §Perf).
-    if geo.k_h == 1 && geo.k_w == 1 && geo.stride_h == 1 && geo.stride_w == 1 {
-        let c_in = geo.in_c;
-        for (px, pixel) in input.chunks_exact(c_in).enumerate() {
-            let viewsum: i32 =
-                if pc.z_w != 0 { pixel.iter().map(|&v| v as i32).sum() } else { 0 };
-            let base = px * c_out;
-            for (co, f) in filters.chunks_exact(c_in).enumerate() {
-                let mut dot = 0i32;
-                for (v, w) in pixel.iter().zip(f) {
-                    dot += *v as i32 * *w as i32;
-                }
-                let acc = dot - pc.z_w * viewsum - pc.w_zp_term[co] + pc.kzxzw;
-                out[base + co] =
-                    requant_float(acc, pc.const_bias[co], pc.scale_ratio, pc.act_min, pc.act_max);
-            }
-        }
-        return;
-    }
-
+    let row_len = geo.k_w * geo.in_c;
+    let need_sum = pc.z_w != 0;
     for oy in 0..geo.out_h {
         for ox in 0..geo.out_w {
-            geo.extract_view(input, oy, ox, z_x, view);
-            // data-dependent view sum (the z_F correction term of Eq. 6)
-            let viewsum: i32 = if pc.z_w != 0 { view.iter().map(|&v| v as i32).sum() } else { 0 };
             let base = (oy * geo.out_w + ox) * c_out;
-            for co in 0..c_out {
-                let f = &filters[co * kkc..(co + 1) * kkc];
-                let mut dot = 0i32;
-                for (v, w) in view.iter().zip(f) {
-                    dot += *v as i32 * *w as i32;
+            let pos_out = &mut out[base..base + c_out];
+            // the z_F correction term of Eq. 6, filled by the first
+            // panel's fused walk when z_W != 0
+            let mut viewsum = 0i32;
+            // the interior and boundary branches repeat the panel-walk
+            // protocol on purpose: each keeps its hot loop over concrete
+            // slice patterns (borrowed rows vs the staged view) so the
+            // micro-kernel inlines without an abstraction layer between
+            // it and the segment source; pack_equivalence.rs holds both
+            // branches to the same oracle
+            if geo.interior(oy, ox) {
+                // fast path: borrow the unit-stride rows from the input
+                for p in 0..filters.panels() {
+                    let panel = filters.panel(p);
+                    let mut acc = [0i32; NR];
+                    for ky in 0..geo.k_h {
+                        let off = geo.row_offset(oy, ox, ky);
+                        let seg = &input[off..off + row_len];
+                        let pseg = &panel[ky * row_len * NR..(ky + 1) * row_len * NR];
+                        if need_sum && p == 0 {
+                            microkernel::dot4_sum(seg, pseg, &mut acc, &mut viewsum);
+                        } else {
+                            microkernel::dot4(seg, pseg, &mut acc);
+                        }
+                    }
+                    finish_panel(filters, p, &acc, pc.z_w * viewsum, pc, pos_out);
                 }
-                let acc = dot - pc.z_w * viewsum - pc.w_zp_term[co] + pc.kzxzw;
-                out[base + co] =
-                    requant_float(acc, pc.const_bias[co], pc.scale_ratio, pc.act_min, pc.act_max);
+            } else {
+                // boundary: Algorithm 1 copy (pads with z_x), then the
+                // same panel walks over the staged view
+                geo.extract_view(input, oy, ox, z_x, view);
+                for p in 0..filters.panels() {
+                    let panel = filters.panel(p);
+                    let mut acc = [0i32; NR];
+                    if need_sum && p == 0 {
+                        microkernel::dot4_sum(view, panel, &mut acc, &mut viewsum);
+                    } else {
+                        microkernel::dot4(view, panel, &mut acc);
+                    }
+                    finish_panel(filters, p, &acc, pc.z_w * viewsum, pc, pos_out);
+                }
             }
         }
     }
@@ -89,6 +135,11 @@ pub fn conv2d_interp(
     out: &mut [i8],
 ) {
     let kkc = geo.k_h * geo.k_w * geo.in_c;
+    debug_assert_eq!(filters.len(), c_out * kkc);
+    debug_assert_eq!(bias.len(), c_out);
+    debug_assert_eq!(view.len(), kkc);
+    debug_assert_eq!(input.len(), geo.in_h * geo.in_w * geo.in_c);
+    debug_assert_eq!(out.len(), geo.out_h * geo.out_w * c_out);
     for oy in 0..geo.out_h {
         for ox in 0..geo.out_w {
             geo.extract_view(input, oy, ox, z_x as i8, view);
@@ -109,6 +160,7 @@ pub fn conv2d_interp(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::compiler::pack::pack_conv2d;
     use crate::format::mfb::Padding;
     use crate::tensor::quant::FusedAct;
     use crate::util::Prng;
@@ -158,7 +210,8 @@ mod tests {
         for &(padding, stride) in
             &[(Padding::Same, 1), (Padding::Same, 2), (Padding::Valid, 1), (Padding::Valid, 2)]
         {
-            let (h, w, cin, cout, k) = (7, 6, 3, 4, 3);
+            // cout = 5 exercises the zero-padded tail panel
+            let (h, w, cin, cout, k) = (7, 6, 3, 5, 3);
             let geo = ConvGeometry::new(h, w, cin, k, k, stride, stride, padding).unwrap();
             let input = rng.i8_vec(h * w * cin);
             let filters = rng.i8_vec(cout * k * k * cin);
@@ -171,9 +224,10 @@ mod tests {
             let pc = PreComputed::fold(
                 &bias, &colsum, kkc, s_x, z_x, s_f, z_f, s_x * s_f, 0, s_y, z_y, FusedAct::Relu6,
             );
+            let packed = pack_conv2d(&filters, cout, kkc);
             let mut view = vec![0i8; kkc];
             let mut out = vec![0i8; geo.out_h * geo.out_w * cout];
-            conv2d_microflow(&input, &filters, &geo, cout, z_x as i8, &pc, &mut view, &mut out);
+            conv2d_microflow(&input, &packed, &geo, z_x as i8, &pc, &mut view, &mut out);
             let want = oracle(
                 &input, &filters, &bias, &geo, cout, s_x, z_x, s_f, z_f, s_y, z_y, FusedAct::Relu6,
             );
@@ -196,9 +250,10 @@ mod tests {
             .collect();
         let pc =
             PreComputed::fold(&bias, &colsum, kkc, s_x, z_x, s_f, z_f, s_x * s_f, 0, s_y, z_y, FusedAct::None);
+        let packed = pack_conv2d(&filters, cout, kkc);
         let mut view = vec![0i8; kkc];
         let mut mf = vec![0i8; geo.out_h * geo.out_w * cout];
-        conv2d_microflow(&input, &filters, &geo, cout, z_x as i8, &pc, &mut view, &mut mf);
+        conv2d_microflow(&input, &packed, &geo, z_x as i8, &pc, &mut view, &mut mf);
         let m = FixedPointMultiplier::from_real((s_x as f64 * s_f as f64) / s_y as f64);
         let mut ip = vec![0i8; mf.len()];
         conv2d_interp(
@@ -224,9 +279,10 @@ mod tests {
             .map(|co| filters[co * cin..(co + 1) * cin].iter().map(|&v| v as i32).sum())
             .collect();
         let pc = PreComputed::fold(&bias, &colsum, cin, 0.1, 0, 0.1, 0, 0.01, 0, 0.2, 0, FusedAct::None);
+        let packed = pack_conv2d(&filters, cout, cin);
         let mut view = vec![0i8; cin];
         let mut out = vec![0i8; h * w * cout];
-        conv2d_microflow(&input, &filters, &geo, cout, 0, &pc, &mut view, &mut out);
+        conv2d_microflow(&input, &packed, &geo, 0, &pc, &mut view, &mut out);
         // manual check for pixel (1,1), channel 2
         let px = &input[(1 * w + 1) * cin..(1 * w + 1) * cin + cin];
         let f = &filters[2 * cin..3 * cin];

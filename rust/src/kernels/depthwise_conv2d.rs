@@ -15,10 +15,11 @@ use crate::tensor::quant::{requant_float, PreComputed};
 /// `kzxzw = KH*KW * z_X * z_W`.
 ///
 /// **Filter layout: `[Cout, KH*KW]` channel-major** — the MicroFlow
-/// compiler re-lays the container's `[KH*KW, Cout]` weights out at
-/// compile time so every per-channel dot streams its filter contiguously
-/// (EXPERIMENTS.md §Perf). The interpreter variant below keeps the
-/// container layout, as TFLM must.
+/// compiler's packing pass ([`crate::compiler::pack::pack_depthwise`])
+/// re-lays the container's `[KH*KW, Cout]` weights out once at compile
+/// time so every per-channel dot streams its filter contiguously
+/// (EXPERIMENTS.md §Perf); no call site transposes at runtime. The
+/// interpreter variant below keeps the container layout, as TFLM must.
 #[allow(clippy::too_many_arguments)]
 pub fn depthwise_conv2d_microflow(
     input: &[i8],
@@ -64,18 +65,6 @@ pub fn depthwise_conv2d_microflow(
     }
 }
 
-/// Transpose container-layout dw filters `[KK, Cout]` to the kernel's
-/// `[Cout, KK]` (what the compiler does once at plan time).
-pub fn transpose_filters(w: &[i8], kk: usize, c_out: usize) -> Vec<i8> {
-    let mut out = vec![0i8; kk * c_out];
-    for t in 0..kk {
-        for co in 0..c_out {
-            out[co * kk + t] = w[t * c_out + co];
-        }
-    }
-    out
-}
-
 /// TFLM-style DepthwiseConv2D: per-element offsets + fixed point.
 #[allow(clippy::too_many_arguments)]
 pub fn depthwise_conv2d_interp(
@@ -119,6 +108,7 @@ pub fn depthwise_conv2d_interp(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::compiler::pack::pack_depthwise;
     use crate::format::mfb::Padding;
     use crate::tensor::quant::FusedAct;
     use crate::util::Prng;
@@ -186,7 +176,7 @@ mod tests {
             );
             let mut view = vec![0i8; kk * cin];
             let mut out = vec![0i8; geo.out_h * geo.out_w * cout];
-            let filters_t = transpose_filters(&filters, kk, cout);
+            let filters_t = pack_depthwise(&filters, kk, cout);
             depthwise_conv2d_microflow(&input, &filters_t, &geo, mult, z_x as i8, &pc, &mut view, &mut out);
             let want = oracle(
                 &input, &filters, &bias, &geo, mult, s_x, z_x, s_w, z_w, s_y, z_y, FusedAct::Relu,
@@ -211,7 +201,7 @@ mod tests {
         let pc = PreComputed::fold(&bias, &colsum, kk, s_x, z_x, s_w, z_w, s_x * s_w, 0, s_y, z_y, FusedAct::None);
         let mut view = vec![0i8; kk * cin];
         let mut mf = vec![0i8; geo.out_h * geo.out_w * cout];
-        let filters_t = transpose_filters(&filters, kk, cout);
+        let filters_t = pack_depthwise(&filters, kk, cout);
         depthwise_conv2d_microflow(&input, &filters_t, &geo, mult, z_x as i8, &pc, &mut view, &mut mf);
         let m = FixedPointMultiplier::from_real((s_x as f64 * s_w as f64) / s_y as f64);
         let mut ip = vec![0i8; mf.len()];
@@ -236,7 +226,7 @@ mod tests {
         let pc = PreComputed::fold(&bias, &colsum, 80, 0.1, -128, 0.02, 0, 0.002, 0, 0.15, -128, FusedAct::Relu);
         let mut view = vec![0i8; 80];
         let mut out = vec![0i8; 25 * 20 * 8];
-        let filters_t = transpose_filters(&filters, 80, 8);
+        let filters_t = pack_depthwise(&filters, 80, 8);
         depthwise_conv2d_microflow(&input, &filters_t, &geo, 8, -128, &pc, &mut view, &mut out);
         // fused ReLU clamps at z_y
         assert!(out.iter().all(|&v| v >= -128));

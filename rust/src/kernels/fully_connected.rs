@@ -1,7 +1,25 @@
 //! FullyConnected kernels — Eq. (3) / Appendix A.1 (DESIGN.md S9).
 //!
 //! Weights are `[K, N]` row-major (TFLite stores `[N, K]`; the exporter
-//! emits `[K, N]` so the MicroFlow inner loop streams rows sequentially).
+//! emits `[K, N]` so each row holds all `N` per-channel weights
+//! contiguously). The MicroFlow variant walks them through the compiler's
+//! tail-aware panel view ([`crate::compiler::pack::fc_panels`]): `N/NR`
+//! register-tiled column panels on the shared
+//! [`microkernel`](crate::kernels::microkernel) core — four i32
+//! accumulators in registers per walk, each input byte feeding four
+//! output neurons — plus one `N % NR`-wide tail walk. No accumulator
+//! scratch exists anywhere: the old wide-output path staged `N` i32s in a
+//! plan-threaded buffer; register tiling removed that buffer from the
+//! plan, the executor and the memory model entirely.
+//!
+//! Trade-off, stated explicitly: the panel walk reads `w` column-block
+//! by column-block (`N/NR` passes of 4 contiguous bytes per row) instead
+//! of the old single sequential row sweep, exchanging the sweep's `N`
+//! i32 accumulator loads+stores per row for re-walked weight lines. At
+//! this repo's FC shapes (≤ 32 kB of weights) every pass after the first
+//! is cache-resident, and on the paper's cache-less MCU targets a layer
+//! too big to re-stream from Flash is exactly what the paged executor
+//! ([`fully_connected_paged`], one sequential column per pass) is for.
 //!
 //! Three variants:
 //! * [`fully_connected_microflow`] — folded constants + float epilogue;
@@ -10,32 +28,21 @@
 //! * [`fully_connected_interp`]    — TFLM-style per-element offsets +
 //!   gemmlowp fixed-point epilogue.
 
+use crate::kernels::microkernel::{self, NR};
 use crate::tensor::fixedpoint::FixedPointMultiplier;
 use crate::tensor::quant::{requant_float, PreComputed};
 
-/// Widest output that accumulates in the narrow-path stack array; anything
-/// wider needs the caller's i32 accumulator scratch. The compiler's
-/// memory planner sizes the plan's shared scratch from this same constant
-/// (`compiler::memory::step_acc_i32`), so the two sides cannot drift.
-pub const FC_NARROW_MAX: usize = 8;
-
 /// MicroFlow FC: `y[j] = requant(dot[j] - z_w*rowsum - wzp[j] + kzxzw)`.
 ///
-/// `x`: `[K]`, `w`: `[K, N]` row-major, `out`: `[N]`.
-///
-/// `acc` is the caller's i32 accumulator scratch, used only on the
-/// wide-output path (`n > 8`, where the accumulators don't fit the stack
-/// array) and required to hold at least `n` elements there. The engine
-/// threads it from the plan-sized [`Scratch`](crate::engine::Scratch)
-/// buffers, keeping the whole predict path allocation-free; narrow
-/// outputs may pass `&mut []`.
+/// `x`: `[K]`, `w`: `[K, N]` row-major, `out`: `[N]`. Register-tiled
+/// panel walk; bit-identical to the scalar Eq. 3 reference (exact i32
+/// accumulation — see `tests/pack_equivalence.rs`) and allocation-free.
 pub fn fully_connected_microflow(
     x: &[i8],
     w: &[i8],
     k: usize,
     n: usize,
     pc: &PreComputed,
-    acc: &mut [i32],
     out: &mut [i8],
 ) {
     debug_assert_eq!(x.len(), k);
@@ -45,42 +52,28 @@ pub fn fully_connected_microflow(
 
     // data-dependent row sum (the only z_w term that cannot be folded)
     let rowsum: i32 = if pc.z_w != 0 { x.iter().map(|&v| v as i32).sum() } else { 0 };
+    let zw_rowsum = pc.z_w * rowsum;
 
-    if n <= FC_NARROW_MAX {
-        // narrow-output path (the speech classifier head is 4000x4):
-        // stack accumulators + chunks_exact (no heap allocation, no
-        // per-row bounds checks, no per-row branch) — EXPERIMENTS.md
-        // §Perf: fc 4000x4 19.9us -> ~6us
-        let mut acc = [0i32; FC_NARROW_MAX];
-        for (row, &xi) in w.chunks_exact(n).zip(x.iter()) {
-            let xv = xi as i32;
-            for (a, &wv) in acc[..n].iter_mut().zip(row) {
-                *a += xv * wv as i32;
-            }
-        }
-        for j in 0..n {
-            let a = acc[j] - pc.z_w * rowsum - pc.w_zp_term[j] + pc.kzxzw;
+    let (full, tail) = microkernel::fc_panels(n);
+    for p in 0..full {
+        let j0 = p * NR;
+        let mut acc = [0i32; NR];
+        microkernel::dot4_cols(x, w, n, j0, &mut acc);
+        for r in 0..NR {
+            let j = j0 + r;
+            let a = acc[r] - zw_rowsum - pc.w_zp_term[j] + pc.kzxzw;
             out[j] = requant_float(a, pc.const_bias[j], pc.scale_ratio, pc.act_min, pc.act_max);
         }
-        return;
     }
-
-    // wide-output path: accumulate column-wise over rows — w rows are
-    // contiguous (chunks_exact: no per-row bounds checks), so this walks
-    // w sequentially (cache/flash friendly, the same access pattern the
-    // paper's paged variant exploits) and the inner loop auto-vectorizes
-    // over the output row
-    let acc = &mut acc[..n];
-    acc.fill(0);
-    for (row, &xi) in w.chunks_exact(n).zip(x.iter()) {
-        let xv = xi as i32;
-        for (a, &wv) in acc.iter_mut().zip(row) {
-            *a += xv * wv as i32;
+    if tail > 0 {
+        let j0 = full * NR;
+        let mut acc = [0i32; NR];
+        microkernel::dot_cols(x, w, n, j0, tail, &mut acc);
+        for r in 0..tail {
+            let j = j0 + r;
+            let a = acc[r] - zw_rowsum - pc.w_zp_term[j] + pc.kzxzw;
+            out[j] = requant_float(a, pc.const_bias[j], pc.scale_ratio, pc.act_min, pc.act_max);
         }
-    }
-    for j in 0..n {
-        let a = acc[j] - pc.z_w * rowsum - pc.w_zp_term[j] + pc.kzxzw;
-        out[j] = requant_float(a, pc.const_bias[j], pc.scale_ratio, pc.act_min, pc.act_max);
     }
 }
 
@@ -195,6 +188,7 @@ mod tests {
     #[test]
     fn microflow_matches_literal_eq3() {
         for seed in 0..10u64 {
+            // n = 11 exercises 2 full panels + a 3-wide tail
             let (k, n) = (37, 11);
             let (x, w, b) = setup(seed, k, n);
             let (s_x, z_x, s_w, z_w, s_y, z_y) = (0.05f32, 3, 0.02f32, -2, 0.08f32, -5);
@@ -202,8 +196,7 @@ mod tests {
                 (0..n).map(|j| (0..k).map(|i| w[i * n + j] as i32).sum()).collect();
             let pc = PreComputed::fold(&b, &colsum, k, s_x, z_x, s_w, z_w, s_x * s_w, 0, s_y, z_y, FusedAct::Relu);
             let mut out = vec![0i8; n];
-            let mut acc = vec![0i32; n];
-            fully_connected_microflow(&x, &w, k, n, &pc, &mut acc, &mut out);
+            fully_connected_microflow(&x, &w, k, n, &pc, &mut out);
             let want = oracle(&x, &w, &b, k, n, s_x, z_x, s_w, z_w, s_y, z_y, FusedAct::Relu);
             assert_eq!(out, want, "seed {seed}");
         }
@@ -220,8 +213,7 @@ mod tests {
             let mut a = vec![0i8; n];
             let mut p = vec![0i8; n];
             let mut page = vec![0i8; k];
-            let mut acc = vec![0i32; n];
-            fully_connected_microflow(&x, &w, k, n, &pc, &mut acc, &mut a);
+            fully_connected_microflow(&x, &w, k, n, &pc, &mut a);
             fully_connected_paged(&x, &w, k, n, &pc, &mut page, &mut p);
             assert_eq!(a, p, "seed {seed}");
         }
@@ -239,8 +231,7 @@ mod tests {
                 (0..n).map(|j| (0..k).map(|i| w[i * n + j] as i32).sum()).collect();
             let pc = PreComputed::fold(&b, &colsum, k, s_x, z_x, s_w, z_w, s_x * s_w, 0, s_y, z_y, FusedAct::None);
             let mut mf = vec![0i8; n];
-            let mut acc = vec![0i32; n];
-            fully_connected_microflow(&x, &w, k, n, &pc, &mut acc, &mut mf);
+            fully_connected_microflow(&x, &w, k, n, &pc, &mut mf);
             let m = FixedPointMultiplier::from_real((s_x as f64 * s_w as f64) / s_y as f64);
             let mut ip = vec![0i8; n];
             fully_connected_interp(&x, &w, &b, k, n, z_x, z_w, m, z_y, -128, 127, &mut ip);
@@ -259,38 +250,24 @@ mod tests {
         let colsum: Vec<i32> = (0..n).map(|j| (0..k).map(|i| w[i * n + j] as i32).sum()).collect();
         let pc = PreComputed::fold(&b, &colsum, k, 0.1, 2, 0.1, 0, 0.01, 0, 0.1, 0, FusedAct::None);
         let mut out = vec![0i8; n];
-        fully_connected_microflow(&x, &w, k, n, &pc, &mut [], &mut out);
+        fully_connected_microflow(&x, &w, k, n, &pc, &mut out);
         let want = oracle(&x, &w, &b, k, n, 0.1, 2, 0.1, 0, 0.1, 0, FusedAct::None);
         assert_eq!(out, want);
     }
 
     #[test]
-    fn narrow_path_ignores_the_acc_scratch() {
-        // n <= 8 runs on the stack-array path; an empty scratch is fine
-        let (k, n) = (37, 8);
-        let (x, w, b) = setup(3, k, n);
-        let colsum: Vec<i32> = (0..n).map(|j| (0..k).map(|i| w[i * n + j] as i32).sum()).collect();
-        let pc = PreComputed::fold(&b, &colsum, k, 0.05, 3, 0.02, -2, 0.001, 0, 0.08, -5, FusedAct::None);
-        let mut a = vec![0i8; n];
-        let mut b2 = vec![0i8; n];
-        fully_connected_microflow(&x, &w, k, n, &pc, &mut [], &mut a);
-        let mut big = vec![123i32; n]; // dirty scratch must not matter
-        fully_connected_microflow(&x, &w, k, n, &pc, &mut big, &mut b2);
-        assert_eq!(a, b2);
-    }
-
-    #[test]
-    fn wide_path_zeroes_a_dirty_acc_scratch() {
-        let (k, n) = (16, 24);
-        let (x, w, b) = setup(11, k, n);
-        let colsum: Vec<i32> = (0..n).map(|j| (0..k).map(|i| w[i * n + j] as i32).sum()).collect();
-        let pc = PreComputed::fold(&b, &colsum, k, 0.05, 3, 0.02, -2, 0.001, 0, 0.08, -5, FusedAct::None);
-        let mut clean = vec![0i8; n];
-        let mut dirty = vec![0i8; n];
-        let mut acc = vec![0i32; n];
-        fully_connected_microflow(&x, &w, k, n, &pc, &mut acc, &mut clean);
-        // acc now holds the previous call's accumulators; reuse must not leak
-        fully_connected_microflow(&x, &w, k, n, &pc, &mut acc, &mut dirty);
-        assert_eq!(clean, dirty);
+    fn every_tail_width_matches_the_oracle() {
+        // n = 1..=9 sweeps pure-tail, exact-panel and panel+tail splits
+        for n in 1..=9usize {
+            let k = 23;
+            let (x, w, b) = setup(n as u64 + 40, k, n);
+            let colsum: Vec<i32> =
+                (0..n).map(|j| (0..k).map(|i| w[i * n + j] as i32).sum()).collect();
+            let pc = PreComputed::fold(&b, &colsum, k, 0.05, 3, 0.02, -2, 0.001, 0, 0.08, -5, FusedAct::None);
+            let mut out = vec![0i8; n];
+            fully_connected_microflow(&x, &w, k, n, &pc, &mut out);
+            let want = oracle(&x, &w, &b, k, n, 0.05, 3, 0.02, -2, 0.08, -5, FusedAct::None);
+            assert_eq!(out, want, "n = {n}");
+        }
     }
 }

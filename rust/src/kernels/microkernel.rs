@@ -1,0 +1,246 @@
+//! Register-tiled quantized micro-kernel core (DESIGN.md S9; the paper's
+//! compile-time pre-processing claim applied to *layout*, not just
+//! constants).
+//!
+//! Every weighted MicroFlow kernel reduces to walks of one shape: an i8
+//! input segment against a weight **panel** of [`NR`] output channels laid
+//! out `[k][NR]` (channel-interleaved, contiguous in the inner loop). One
+//! walk keeps `NR` interleaved i32 accumulators in registers, so each
+//! input byte is loaded **once** and feeds `NR` output channels — the
+//! instruction-level-parallelism angle the naive Eq. 3/6 loop nests leave
+//! on the table (one scalar accumulator, input re-read per channel).
+//!
+//! The panels are built offline by [`crate::compiler::pack`]; the
+//! contract between the two sides is this module's types.
+//!
+//! ## Bit-exactness
+//!
+//! All accumulation is exact i32 arithmetic on i8 products (max
+//! `|x*w| = 16384` per term; reduction lengths in this repo stay far
+//! below `i32::MAX / 16384`), and integer addition is associative and
+//! commutative — so a register-tiled walk produces **bit-identical**
+//! accumulators to the scalar reference order, and the packed kernels
+//! inherit the engine's exact-equality contract with the JAX golden path
+//! (`tests/pack_equivalence.rs` and the cross-engine conformance suite
+//! hold them to `assert_eq!`, not within-one-unit).
+
+/// Panel width: output channels computed per micro-kernel walk. Four i32
+/// accumulators fit the register file of every target this repo models
+/// (and SIMD lanes on the host); the compiler's packing pass and the cost
+/// model both derive their shapes from this one constant.
+pub const NR: usize = 4;
+
+/// Conv2D/pointwise filters re-laid by the compiler into output-channel
+/// panels: `data` is `[ceil(c_out/NR)][kkc][NR]` with `kkc = KH*KW*Cin`.
+/// Lane `r` of panel `p` holds output channel `p*NR + r`; tail lanes past
+/// `c_out` are zero-filled (computed but never written back).
+#[derive(Clone, Debug)]
+pub struct PackedConvFilters {
+    pub c_out: usize,
+    pub kkc: usize,
+    /// Packed panel image (the step's flash payload, padded tail included).
+    pub data: Vec<i8>,
+}
+
+impl PackedConvFilters {
+    /// Number of `NR`-wide panels (tail panel included).
+    pub fn panels(&self) -> usize {
+        self.c_out.div_ceil(NR)
+    }
+
+    /// Panel `p` as a contiguous `[kkc][NR]` slice.
+    #[inline]
+    pub fn panel(&self, p: usize) -> &[i8] {
+        let stride = self.kkc * NR;
+        &self.data[p * stride..(p + 1) * stride]
+    }
+
+    /// Real (unpadded) output channels in panel `p`: `NR` except possibly
+    /// the last panel.
+    #[inline]
+    pub fn panel_width(&self, p: usize) -> usize {
+        (self.c_out - p * NR).min(NR)
+    }
+
+    /// Flash bytes of the packed image (padded tail lanes ship too).
+    pub fn flash_bytes(&self) -> usize {
+        self.data.len()
+    }
+}
+
+/// The FullyConnected tail-aware panel view over `[K, N]` weights:
+/// `(full_panels, tail_width)` with `full_panels = n / NR` register-tiled
+/// [`dot4_cols`] walks and one `tail_width = n % NR` [`dot_cols`] walk.
+/// Shared by the kernel and the compiler (`compiler::pack` re-exports
+/// it), so the two sides cannot disagree about the split.
+pub fn fc_panels(n: usize) -> (usize, usize) {
+    (n / NR, n % NR)
+}
+
+/// One micro-kernel walk: `acc[r] += Σ_k seg[k] * panel[k*NR + r]`.
+///
+/// `seg` is a contiguous input segment (a full extracted view, a borrowed
+/// interior row, or a pointwise pixel); `panel` is the matching `[k][NR]`
+/// panel slice. Accumulates so callers can stitch segmented walks (the
+/// interior-row conv path) into one set of accumulators.
+#[inline(always)]
+pub fn dot4(seg: &[i8], panel: &[i8], acc: &mut [i32; NR]) {
+    debug_assert_eq!(panel.len(), seg.len() * NR);
+    for (x, w) in seg.iter().zip(panel.chunks_exact(NR)) {
+        let xv = *x as i32;
+        acc[0] += xv * w[0] as i32;
+        acc[1] += xv * w[1] as i32;
+        acc[2] += xv * w[2] as i32;
+        acc[3] += xv * w[3] as i32;
+    }
+}
+
+/// [`dot4`] with the data-dependent view sum (the `z_W` correction term of
+/// Eq. 6) folded into the same walk — the kernels run this on the first
+/// panel only and reuse the sum for the rest, deleting the separate
+/// view-summation pass the unpacked kernels paid.
+#[inline(always)]
+pub fn dot4_sum(seg: &[i8], panel: &[i8], acc: &mut [i32; NR], sum: &mut i32) {
+    debug_assert_eq!(panel.len(), seg.len() * NR);
+    for (x, w) in seg.iter().zip(panel.chunks_exact(NR)) {
+        let xv = *x as i32;
+        *sum += xv;
+        acc[0] += xv * w[0] as i32;
+        acc[1] += xv * w[1] as i32;
+        acc[2] += xv * w[2] as i32;
+        acc[3] += xv * w[3] as i32;
+    }
+}
+
+/// FullyConnected panel walk over `[K, N]` row-major weights kept in
+/// container layout: columns `j0..j0+NR` (each row's `NR` weights are
+/// contiguous), `acc[r] += Σ_i x[i] * w[i*n + j0 + r]`.
+#[inline(always)]
+pub fn dot4_cols(x: &[i8], w: &[i8], n: usize, j0: usize, acc: &mut [i32; NR]) {
+    debug_assert!(j0 + NR <= n);
+    debug_assert_eq!(w.len(), x.len() * n);
+    for (i, &xi) in x.iter().enumerate() {
+        let xv = xi as i32;
+        let row = &w[i * n + j0..i * n + j0 + NR];
+        acc[0] += xv * row[0] as i32;
+        acc[1] += xv * row[1] as i32;
+        acc[2] += xv * row[2] as i32;
+        acc[3] += xv * row[3] as i32;
+    }
+}
+
+/// Tail-aware variant of [`dot4_cols`] for the last `width < NR` columns
+/// (runs once per FC call; lanes `width..NR` stay untouched).
+#[inline(always)]
+pub fn dot_cols(x: &[i8], w: &[i8], n: usize, j0: usize, width: usize, acc: &mut [i32; NR]) {
+    debug_assert!(width <= NR && j0 + width <= n);
+    debug_assert_eq!(w.len(), x.len() * n);
+    for (i, &xi) in x.iter().enumerate() {
+        let xv = xi as i32;
+        let row = &w[i * n + j0..i * n + j0 + width];
+        for (a, &wv) in acc[..width].iter_mut().zip(row) {
+            *a += xv * wv as i32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Prng;
+
+    /// Scalar reference: one accumulator per channel, input re-read.
+    fn dot_scalar(seg: &[i8], weights: &[i8], lanes: usize) -> Vec<i32> {
+        (0..lanes)
+            .map(|r| seg.iter().enumerate().map(|(k, &x)| x as i32 * weights[k * lanes + r] as i32).sum())
+            .collect()
+    }
+
+    #[test]
+    fn dot4_matches_scalar_reference() {
+        let mut rng = Prng::new(1);
+        for len in [1usize, 3, 16, 127] {
+            let seg = rng.i8_vec(len);
+            let panel = rng.i8_vec(len * NR);
+            let mut acc = [0i32; NR];
+            dot4(&seg, &panel, &mut acc);
+            assert_eq!(acc.to_vec(), dot_scalar(&seg, &panel, NR), "len {len}");
+        }
+    }
+
+    #[test]
+    fn dot4_sum_folds_the_segment_sum() {
+        let mut rng = Prng::new(2);
+        let seg = rng.i8_vec(33);
+        let panel = rng.i8_vec(33 * NR);
+        let (mut a, mut b) = ([0i32; NR], [0i32; NR]);
+        let mut sum = 0i32;
+        dot4(&seg, &panel, &mut a);
+        dot4_sum(&seg, &panel, &mut b, &mut sum);
+        assert_eq!(a, b);
+        assert_eq!(sum, seg.iter().map(|&v| v as i32).sum::<i32>());
+    }
+
+    #[test]
+    fn dot4_accumulates_across_segments() {
+        // stitching two half-walks must equal one full walk (the
+        // interior-row conv path relies on this)
+        let mut rng = Prng::new(3);
+        let seg = rng.i8_vec(24);
+        let panel = rng.i8_vec(24 * NR);
+        let mut whole = [0i32; NR];
+        dot4(&seg, &panel, &mut whole);
+        let mut halves = [0i32; NR];
+        dot4(&seg[..10], &panel[..10 * NR], &mut halves);
+        dot4(&seg[10..], &panel[10 * NR..], &mut halves);
+        assert_eq!(whole, halves);
+    }
+
+    #[test]
+    fn dot4_cols_matches_scalar_columns() {
+        let mut rng = Prng::new(4);
+        let (k, n) = (19usize, 12usize);
+        let x = rng.i8_vec(k);
+        let w = rng.i8_vec(k * n);
+        for j0 in [0usize, 4, 8] {
+            let mut acc = [0i32; NR];
+            dot4_cols(&x, &w, n, j0, &mut acc);
+            for r in 0..NR {
+                let want: i32 = (0..k).map(|i| x[i] as i32 * w[i * n + j0 + r] as i32).sum();
+                assert_eq!(acc[r], want, "j0 {j0} lane {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn dot_cols_handles_every_tail_width() {
+        let mut rng = Prng::new(5);
+        let (k, n) = (11usize, 7usize);
+        let x = rng.i8_vec(k);
+        let w = rng.i8_vec(k * n);
+        for width in 1..=3usize {
+            let j0 = n - width;
+            let mut acc = [99i32; NR]; // sentinel: untouched lanes stay 99
+            acc[..width].fill(0);
+            dot_cols(&x, &w, n, j0, width, &mut acc);
+            for r in 0..width {
+                let want: i32 = (0..k).map(|i| x[i] as i32 * w[i * n + j0 + r] as i32).sum();
+                assert_eq!(acc[r], want);
+            }
+            for r in width..NR {
+                assert_eq!(acc[r], 99, "lane {r} must stay untouched");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_filters_panel_accessors() {
+        // c_out = 6 -> 2 panels, tail width 2
+        let pf = PackedConvFilters { c_out: 6, kkc: 3, data: vec![0; 2 * 3 * NR] };
+        assert_eq!(pf.panels(), 2);
+        assert_eq!(pf.panel_width(0), 4);
+        assert_eq!(pf.panel_width(1), 2);
+        assert_eq!(pf.panel(1).len(), 3 * NR);
+        assert_eq!(pf.flash_bytes(), 24);
+    }
+}

@@ -17,15 +17,22 @@
 //!   the paper's ±1 output differences (Sec. 6.2.1).
 //!
 //! Kernels are **per-sample** (no batch dimension); the engines loop over
-//! the batch. Activations are `[H, W, C]` row-major; Conv2D filters
-//! `[Cout, KH, KW, Cin]`; DepthwiseConv2D filters `[KH, KW, Cout]`;
-//! FullyConnected weights `[K, N]`.
+//! the batch. Activations are `[H, W, C]` row-major. The `*_microflow`
+//! weighted kernels consume **compile-time packed** layouts produced by
+//! [`crate::compiler::pack`] and share the register-tiled
+//! [`microkernel`] core: Conv2D filters arrive as `NR`-wide
+//! output-channel panels ([`microkernel::PackedConvFilters`]),
+//! DepthwiseConv2D filters pre-transposed to `[Cout, KH*KW]`, and
+//! FullyConnected weights stay `[K, N]` walked through a tail-aware
+//! panel view. The `*_interp` kernels keep the container layouts
+//! (`[Cout, KH, KW, Cin]` / `[KH, KW, Cout]` / `[K, N]`), as TFLM must.
 
 pub mod activation;
 pub mod average_pool2d;
 pub mod conv2d;
 pub mod depthwise_conv2d;
 pub mod fully_connected;
+pub mod microkernel;
 pub mod view;
 
 pub use view::ConvGeometry;

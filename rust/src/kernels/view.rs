@@ -99,6 +99,45 @@ impl ConvGeometry {
     pub fn view_bytes(&self) -> usize {
         self.k_h * self.k_w * self.in_c
     }
+
+    /// True when the whole receptive field of output `(oy, ox)` lies
+    /// inside the input (no padding in play). Interior positions never
+    /// need [`extract_view`](Self::extract_view): each kernel row is a
+    /// unit-stride span of the input that kernels borrow via
+    /// [`row_offset`](Self::row_offset) instead of copying into the view
+    /// buffer. Under VALID padding every position is interior.
+    #[inline]
+    pub fn interior(&self, oy: usize, ox: usize) -> bool {
+        let base_y = (oy * self.stride_h) as isize - self.pad_top;
+        let base_x = (ox * self.stride_w) as isize - self.pad_left;
+        base_y >= 0
+            && base_x >= 0
+            && base_y + self.k_h as isize <= self.in_h as isize
+            && base_x + self.k_w as isize <= self.in_w as isize
+    }
+
+    /// True when *any* output position needs padding (a non-interior
+    /// receptive field). When false — every VALID-padded conv, and SAME
+    /// geometries whose padding happens to be zero — the kernels never
+    /// call [`extract_view`](Self::extract_view) and the planner charges
+    /// no view scratch at all. The interiority constraints are monotone
+    /// in `oy`/`ox` and separable, so checking the two extreme corners
+    /// covers every position.
+    pub fn has_boundary(&self) -> bool {
+        !(self.interior(0, 0) && self.interior(self.out_h - 1, self.out_w - 1))
+    }
+
+    /// Flat input offset of kernel row `ky`'s first element for output
+    /// `(oy, ox)`; the span `[off, off + k_w * in_c)` is contiguous in the
+    /// input. Only valid for positions where [`interior`](Self::interior)
+    /// holds (debug-asserted).
+    #[inline]
+    pub fn row_offset(&self, oy: usize, ox: usize, ky: usize) -> usize {
+        debug_assert!(self.interior(oy, ox));
+        let iy = ((oy * self.stride_h + ky) as isize - self.pad_top) as usize;
+        let ix = ((ox * self.stride_w) as isize - self.pad_left) as usize;
+        (iy * self.in_w + ix) * self.in_c
+    }
 }
 
 #[cfg(test)]
@@ -142,6 +181,69 @@ mod tests {
         g.extract_view(&input, 1, 1, 0, &mut v);
         // base (2,2): rows 2..4, cols 2..4 with bottom/right padding
         assert_eq!(v, vec![11, 12, 0, 15, 16, 0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn interior_positions_match_extracted_views() {
+        // every interior row span must hold exactly the bytes extract_view
+        // copies; boundary positions must be flagged non-interior
+        let g = ConvGeometry::new(5, 6, 2, 3, 3, 1, 1, Padding::Same).unwrap();
+        let input: Vec<i8> = (0..(5 * 6 * 2)).map(|v| (v % 120) as i8).collect();
+        let mut view = vec![0i8; 3 * 3 * 2];
+        let row_len = g.k_w * g.in_c;
+        for oy in 0..g.out_h {
+            for ox in 0..g.out_w {
+                g.extract_view(&input, oy, ox, -99, &mut view);
+                if g.interior(oy, ox) {
+                    for ky in 0..g.k_h {
+                        let off = g.row_offset(oy, ox, ky);
+                        assert_eq!(
+                            &input[off..off + row_len],
+                            &view[ky * row_len..(ky + 1) * row_len],
+                            "({oy},{ox}) row {ky}"
+                        );
+                    }
+                } else {
+                    // non-interior: some slot must carry the pad value
+                    // (-99 never occurs in the 0..119 input)
+                    assert!(view.contains(&-99), "({oy},{ox}) flagged boundary but fully in-bounds");
+                }
+            }
+        }
+        // SAME 3x3 stride 1 on 5x6: exactly the 3x4 center is interior
+        let n_interior = (0..g.out_h)
+            .flat_map(|oy| (0..g.out_w).map(move |ox| (oy, ox)))
+            .filter(|&(oy, ox)| g.interior(oy, ox))
+            .count();
+        assert_eq!(n_interior, 3 * 4);
+    }
+
+    #[test]
+    fn valid_padding_is_all_interior() {
+        let g = ConvGeometry::new(6, 6, 1, 3, 3, 2, 2, Padding::Valid).unwrap();
+        for oy in 0..g.out_h {
+            for ox in 0..g.out_w {
+                assert!(g.interior(oy, ox));
+            }
+        }
+        assert!(!g.has_boundary());
+    }
+
+    #[test]
+    fn has_boundary_matches_exhaustive_scan() {
+        for &(h, w, k, s, padding) in &[
+            (5usize, 6usize, 3usize, 1usize, Padding::Same),
+            (5, 6, 3, 1, Padding::Valid),
+            (4, 4, 3, 2, Padding::Same), // pad_total 1 -> pad_top 0, but bottom overhang
+            (4, 4, 1, 1, Padding::Same), // 1x1: SAME needs no padding at all
+            (7, 3, 2, 2, Padding::Same),
+        ] {
+            let g = ConvGeometry::new(h, w, 1, k, k, s, s, padding).unwrap();
+            let any_boundary = (0..g.out_h)
+                .flat_map(|oy| (0..g.out_w).map(move |ox| (oy, ox)))
+                .any(|(oy, ox)| !g.interior(oy, ox));
+            assert_eq!(g.has_boundary(), any_boundary, "{h}x{w} k{k} s{s} {padding:?}");
+        }
     }
 
     #[test]

@@ -32,6 +32,7 @@
 //! The calibration is *verified against the real compiled models* in
 //! `rust/tests/integration_sim.rs`.
 
+use crate::compiler::pack;
 use crate::compiler::plan::{CompiledModel, StepKind};
 use crate::sim::mcu::{ArchClass, Mcu};
 
@@ -158,6 +159,28 @@ pub fn macs_by_class(compiled: &CompiledModel) -> Vec<(OpClass, u64)> {
         .collect()
 }
 
+/// MACs the *MicroFlow* engine actually executes for a step — the cost
+/// model knows the packed kernel's panel shape: Conv2D computes
+/// `ceil(Cout/NR) * NR` lanes per output position (tail lanes are real
+/// multiplies, just never written back), so its charge uses
+/// [`pack::padded_lanes`]. Identical to the logical [`StepKind::macs`]
+/// whenever `Cout % NR == 0` — true for every layer of the paper's three
+/// models, which keeps the Fig. 11 calibration intact. FC's tail-aware
+/// column view and depthwise's per-channel walk compute no padded lanes.
+pub fn microflow_step_macs(kind: &StepKind, out_len: usize) -> u64 {
+    match kind {
+        StepKind::Conv2D { geo, filters, .. } => {
+            (geo.out_h
+                * geo.out_w
+                * pack::padded_lanes(filters.c_out)
+                * geo.k_h
+                * geo.k_w
+                * geo.in_c) as u64
+        }
+        other => other.macs(out_len),
+    }
+}
+
 /// Modeled cycles for one inference.
 pub fn inference_cycles(compiled: &CompiledModel, mcu: &Mcu, engine: Engine) -> f64 {
     let c = arch_cost(mcu.arch);
@@ -173,7 +196,7 @@ pub fn inference_cycles(compiled: &CompiledModel, mcu: &Mcu, engine: Engine) -> 
                 .steps
                 .iter()
                 .map(|s| {
-                    let m = s.kind.macs(s.out_len) as f64 * c.cycles_per_mac;
+                    let m = microflow_step_macs(&s.kind, s.out_len) as f64 * c.cycles_per_mac;
                     if matches!(s.kind, StepKind::FullyConnected { paged: true, .. }) {
                         m * paging_factor
                     } else {
@@ -255,6 +278,47 @@ mod tests {
         let cycles = inference_cycles(&c, esp, Engine::MicroFlow);
         let secs = inference_seconds(&c, esp, Engine::MicroFlow);
         assert!((secs - cycles / 240e6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn conv_cost_charges_whole_panels() {
+        use crate::compiler::pack::{pack_conv2d, NR};
+        use crate::format::mfb::Padding;
+        use crate::kernels::view::ConvGeometry;
+        use crate::tensor::quant::{FusedAct, PreComputed};
+
+        let geo = ConvGeometry::new(6, 6, 2, 3, 3, 1, 1, Padding::Same).unwrap();
+        let step = |c_out: usize| {
+            let kkc = 3 * 3 * 2;
+            let pc = PreComputed::fold(
+                &vec![0; c_out],
+                &vec![0; c_out],
+                kkc,
+                0.1,
+                0,
+                0.1,
+                0,
+                0.01,
+                0,
+                0.1,
+                0,
+                FusedAct::None,
+            );
+            crate::compiler::plan::StepKind::Conv2D {
+                geo,
+                filters: pack_conv2d(&vec![0i8; c_out * kkc], c_out, kkc),
+                z_x: 0,
+                pc,
+            }
+        };
+        // c_out = 6 rounds up to 8 lanes; c_out = 8 is exact
+        let padded = microflow_step_macs(&step(6), 6 * 6 * 6);
+        let exact = microflow_step_macs(&step(8), 6 * 6 * 8);
+        assert_eq!(padded, exact, "6 channels cost a full 2-panel walk");
+        assert_eq!(exact, step(8).macs(6 * 6 * 8), "whole panels charge no padding");
+        assert_eq!(padded / (6 * 6 * 3 * 3 * 2), NR as u64 * 2);
+        // the logical MAC count (reporting/energy) stays unpadded
+        assert_eq!(step(6).macs(6 * 6 * 6), (6 * 6 * 6 * 3 * 3 * 2) as u64);
     }
 
     #[test]

@@ -83,6 +83,26 @@ pub fn emit(name: &str, table: &Table) {
     }
 }
 
+/// Write a machine-readable bench artifact to `<repo root>/<name>.json` —
+/// the cross-PR perf trail (`BENCH_kernels.json`, `BENCH_fleet.json`).
+/// The repo root is resolved from the crate manifest dir, so the path is
+/// stable regardless of the invoking working directory.
+pub fn emit_json(name: &str, doc: &crate::util::json::Json) {
+    // the manifest dir is baked in at compile time; if the binary runs on
+    // a machine where that path no longer exists (relocated checkout,
+    // prebuilt bench binaries), fall back to the working directory rather
+    // than silently dropping the artifact
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("crate lives under the repo root");
+    let root = if root.is_dir() { root } else { std::path::Path::new(".") };
+    let path = root.join(format!("{name}.json"));
+    match std::fs::write(&path, doc.render() + "\n") {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

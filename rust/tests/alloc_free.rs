@@ -1,11 +1,13 @@
 //! The predict path is allocation-free — proven with a counting global
 //! allocator, not just pointer stability.
 //!
-//! The ROADMAP open item: the wide-output (`n > 8`) FullyConnected kernel
-//! used to allocate its accumulator `Vec<i32>` per call. The i32 scratch
-//! is now threaded through the plan (`MemoryPlan::acc_i32` →
-//! `engine::Scratch`), so a session's `run_into`/`run_batch_into` must
-//! perform **zero** heap allocations once built.
+//! History: the wide-output FullyConnected kernel once allocated its
+//! accumulator `Vec<i32>` per call; PR 2 threaded an i32 scratch through
+//! the plan, and the register-tiled kernel core then deleted that buffer
+//! entirely (accumulators live in registers). Weight packing happens at
+//! compile time — no per-call transposes or panel staging — so a
+//! session's `run_into`/`run_batch_into` must perform **zero** heap
+//! allocations once built.
 //!
 //! This file holds exactly ONE `#[test]` so no sibling test thread can
 //! allocate concurrently between the two counter reads.

@@ -1,0 +1,231 @@
+//! Packed kernels are **bit-identical** to the unpacked references.
+//!
+//! `compiler::pack` + `kernels::microkernel` replaced the naive Eq. 3/6/9
+//! loop nests; this suite keeps copies of the *old unpacked kernels* as
+//! oracles and holds the packed production kernels to exact equality
+//! (`assert_eq!`, not within-one-unit — integer dot products are
+//! associative, so layout can never change a bit) across randomized
+//! shapes: `c_out % NR != 0` tails, 1x1 pointwise, SAME/VALID padding,
+//! stride 2, depth multipliers, and FC widths around every panel/tail
+//! split. All cases are seeded (`util::Prng`) and artifact-free.
+
+use microflow::compiler::pack::{self, NR};
+use microflow::format::mfb::Padding;
+use microflow::kernels::view::ConvGeometry;
+use microflow::kernels::{conv2d, depthwise_conv2d, fully_connected};
+use microflow::tensor::quant::{requant_float, FusedAct, PreComputed};
+use microflow::util::Prng;
+
+const CASES: usize = 120;
+
+/// Random qparams in realistic PTQ ranges; z_w drawn from a range that
+/// includes 0 so both the fused-viewsum and no-viewsum paths run.
+fn rand_qp(rng: &mut Prng) -> (f32, i32) {
+    (rng.f32_range(0.005, 0.2), rng.range_i64(-20, 20) as i32)
+}
+
+fn fold(rng: &mut Prng, bias: &[i32], colsum: &[i32], k: usize) -> (PreComputed, i32) {
+    let (s_x, z_x) = rand_qp(rng);
+    let (s_w, z_w) = rand_qp(rng);
+    let (s_y, z_y) = rand_qp(rng);
+    let act = match rng.below(3) {
+        0 => FusedAct::None,
+        1 => FusedAct::Relu,
+        _ => FusedAct::Relu6,
+    };
+    (PreComputed::fold(bias, colsum, k, s_x, z_x, s_w, z_w, s_x * s_w, 0, s_y, z_y, act), z_x)
+}
+
+/// ORACLE: the pre-pack Conv2D microflow kernel, verbatim — unpacked
+/// `[Cout, KH*KW*Cin]` filters, per-channel scalar accumulator, separate
+/// view-sum pass, view extracted at every position.
+#[allow(clippy::too_many_arguments)]
+fn conv2d_unpacked_reference(
+    input: &[i8],
+    filters: &[i8],
+    geo: &ConvGeometry,
+    c_out: usize,
+    z_x: i8,
+    pc: &PreComputed,
+    view: &mut [i8],
+    out: &mut [i8],
+) {
+    let kkc = geo.k_h * geo.k_w * geo.in_c;
+    for oy in 0..geo.out_h {
+        for ox in 0..geo.out_w {
+            geo.extract_view(input, oy, ox, z_x, view);
+            let viewsum: i32 = if pc.z_w != 0 { view.iter().map(|&v| v as i32).sum() } else { 0 };
+            let base = (oy * geo.out_w + ox) * c_out;
+            for co in 0..c_out {
+                let f = &filters[co * kkc..(co + 1) * kkc];
+                let mut dot = 0i32;
+                for (v, w) in view.iter().zip(f) {
+                    dot += *v as i32 * *w as i32;
+                }
+                let acc = dot - pc.z_w * viewsum - pc.w_zp_term[co] + pc.kzxzw;
+                out[base + co] =
+                    requant_float(acc, pc.const_bias[co], pc.scale_ratio, pc.act_min, pc.act_max);
+            }
+        }
+    }
+}
+
+/// ORACLE: the pre-pack FullyConnected microflow kernel — column-sweep
+/// accumulation over `[K, N]` rows with a full-width accumulator vector.
+fn fc_unpacked_reference(x: &[i8], w: &[i8], k: usize, n: usize, pc: &PreComputed, out: &mut [i8]) {
+    assert_eq!((x.len(), w.len()), (k, k * n));
+    let rowsum: i32 = if pc.z_w != 0 { x.iter().map(|&v| v as i32).sum() } else { 0 };
+    let mut acc = vec![0i32; n];
+    for (row, &xi) in w.chunks_exact(n).zip(x.iter()) {
+        let xv = xi as i32;
+        for (a, &wv) in acc.iter_mut().zip(row) {
+            *a += xv * wv as i32;
+        }
+    }
+    for j in 0..n {
+        let a = acc[j] - pc.z_w * rowsum - pc.w_zp_term[j] + pc.kzxzw;
+        out[j] = requant_float(a, pc.const_bias[j], pc.scale_ratio, pc.act_min, pc.act_max);
+    }
+}
+
+/// ORACLE: DepthwiseConv2D straight off the *container* `[KH*KW, Cout]`
+/// layout — what the kernel computed before the compile-time transpose
+/// (same arithmetic, strided filter reads).
+#[allow(clippy::too_many_arguments)]
+fn dw_container_reference(
+    input: &[i8],
+    filters: &[i8], // [KH*KW, Cout]
+    geo: &ConvGeometry,
+    mult: usize,
+    z_x: i8,
+    pc: &PreComputed,
+    view: &mut [i8],
+    out: &mut [i8],
+) {
+    let c_in = geo.in_c;
+    let c_out = c_in * mult;
+    let kk = geo.k_h * geo.k_w;
+    for oy in 0..geo.out_h {
+        for ox in 0..geo.out_w {
+            geo.extract_view(input, oy, ox, z_x, view);
+            let base = (oy * geo.out_w + ox) * c_out;
+            for ci in 0..c_in {
+                let xsum: i32 = if pc.z_w != 0 {
+                    (0..kk).map(|t| view[t * c_in + ci] as i32).sum()
+                } else {
+                    0
+                };
+                for m in 0..mult {
+                    let co = ci * mult + m;
+                    let mut dot = 0i32;
+                    for t in 0..kk {
+                        dot += view[t * c_in + ci] as i32 * filters[t * c_out + co] as i32;
+                    }
+                    let acc = dot - pc.z_w * xsum - pc.w_zp_term[co] + pc.kzxzw;
+                    out[base + co] =
+                        requant_float(acc, pc.const_bias[co], pc.scale_ratio, pc.act_min, pc.act_max);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn packed_conv2d_bit_identical_to_unpacked_reference() {
+    let mut rng = Prng::new(0x9AC4);
+    let mut tails_seen = [false; NR];
+    for case in 0..CASES {
+        let (h, w) = (rng.range_i64(2, 9) as usize, rng.range_i64(2, 9) as usize);
+        let c_in = rng.range_i64(1, 6) as usize;
+        // force 1x1 pointwise on a third of the cases
+        let (kh, kw) = if case % 3 == 0 {
+            (1, 1)
+        } else {
+            (rng.range_i64(1, h as i64) as usize, rng.range_i64(1, w as i64) as usize)
+        };
+        let stride = rng.range_i64(1, 2) as usize;
+        let padding = if rng.below(2) == 0 { Padding::Same } else { Padding::Valid };
+        // 1..=9 sweeps every c_out % NR tail, incl. whole-panel widths
+        let c_out = rng.range_i64(1, 9) as usize;
+        tails_seen[c_out % NR] = true;
+        let geo = ConvGeometry::new(h, w, c_in, kh, kw, stride, stride, padding).unwrap();
+        let kkc = kh * kw * c_in;
+
+        let input = rng.i8_vec(h * w * c_in);
+        let filters = rng.i8_vec(c_out * kkc);
+        let bias = rng.i32_vec(c_out, -1000, 1000);
+        let colsum: Vec<i32> = (0..c_out)
+            .map(|co| filters[co * kkc..(co + 1) * kkc].iter().map(|&v| v as i32).sum())
+            .collect();
+        let (pc, z_x) = fold(&mut rng, &bias, &colsum, kkc);
+
+        let mut view = vec![0i8; kkc];
+        let mut want = vec![0i8; geo.out_h * geo.out_w * c_out];
+        conv2d_unpacked_reference(&input, &filters, &geo, c_out, z_x as i8, &pc, &mut view, &mut want);
+
+        let packed = pack::pack_conv2d(&filters, c_out, kkc);
+        let mut got = vec![0i8; want.len()];
+        conv2d::conv2d_microflow(&input, &packed, &geo, z_x as i8, &pc, &mut view, &mut got);
+
+        assert_eq!(
+            got, want,
+            "case {case}: {h}x{w}x{c_in} k{kh}x{kw} s{stride} {padding:?} cout {c_out}"
+        );
+    }
+    assert!(tails_seen.iter().all(|&t| t), "case mix must cover every c_out % NR tail");
+}
+
+#[test]
+fn packed_fc_bit_identical_to_unpacked_reference() {
+    let mut rng = Prng::new(0xFC04);
+    for case in 0..CASES {
+        let k = rng.range_i64(1, 80) as usize;
+        // 1..=13 sweeps pure-tail, exact-panel and panel+tail widths
+        let n = rng.range_i64(1, 13) as usize;
+        let x = rng.i8_vec(k);
+        let w = rng.i8_vec(k * n);
+        let bias = rng.i32_vec(n, -2000, 2000);
+        let colsum: Vec<i32> = (0..n).map(|j| (0..k).map(|i| w[i * n + j] as i32).sum()).collect();
+        let (pc, _) = fold(&mut rng, &bias, &colsum, k);
+
+        let mut want = vec![0i8; n];
+        fc_unpacked_reference(&x, &w, k, n, &pc, &mut want);
+        let mut got = vec![0i8; n];
+        fully_connected::fully_connected_microflow(&x, &w, k, n, &pc, &mut got);
+        assert_eq!(got, want, "case {case}: k {k} n {n}");
+    }
+}
+
+#[test]
+fn packed_depthwise_bit_identical_to_container_reference() {
+    let mut rng = Prng::new(0xD304);
+    for case in 0..CASES {
+        let (h, w) = (rng.range_i64(3, 9) as usize, rng.range_i64(3, 9) as usize);
+        let c_in = rng.range_i64(1, 5) as usize;
+        let (kh, kw) = (rng.range_i64(1, 3) as usize, rng.range_i64(1, 3) as usize);
+        let stride = rng.range_i64(1, 2) as usize;
+        let padding = if rng.below(2) == 0 { Padding::Same } else { Padding::Valid };
+        let mult = rng.range_i64(1, 3) as usize;
+        let c_out = c_in * mult;
+        let kk = kh * kw;
+        let geo = ConvGeometry::new(h, w, c_in, kh, kw, stride, stride, padding).unwrap();
+
+        let input = rng.i8_vec(h * w * c_in);
+        let filters = rng.i8_vec(kk * c_out); // container layout [KK, Cout]
+        let bias = rng.i32_vec(c_out, -800, 800);
+        let colsum: Vec<i32> =
+            (0..c_out).map(|co| (0..kk).map(|t| filters[t * c_out + co] as i32).sum()).collect();
+        let (pc, z_x) = fold(&mut rng, &bias, &colsum, kk);
+
+        let mut view = vec![0i8; kk * c_in];
+        let mut want = vec![0i8; geo.out_h * geo.out_w * c_out];
+        dw_container_reference(&input, &filters, &geo, mult, z_x as i8, &pc, &mut view, &mut want);
+
+        let packed = pack::pack_depthwise(&filters, kk, c_out);
+        let mut got = vec![0i8; want.len()];
+        depthwise_conv2d::depthwise_conv2d_microflow(
+            &input, &packed, &geo, mult, z_x as i8, &pc, &mut view, &mut got,
+        );
+        assert_eq!(got, want, "case {case}: {h}x{w}x{c_in} k{kh}x{kw} s{stride} mult {mult}");
+    }
+}

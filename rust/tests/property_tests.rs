@@ -7,6 +7,7 @@
 
 mod common;
 
+use microflow::compiler::pack::pack_conv2d;
 use microflow::compiler::plan::{CompileOptions, CompiledModel};
 use microflow::format::mfb::{MfbModel, Padding};
 use microflow::interp::arena::ArenaPlan;
@@ -42,8 +43,7 @@ fn prop_fc_paged_equals_unpaged() {
         let mut a = vec![0i8; n];
         let mut p = vec![0i8; n];
         let mut page = vec![0i8; k];
-        let mut acc = vec![0i32; n];
-        fully_connected::fully_connected_microflow(&x, &w, k, n, &pc, &mut acc, &mut a);
+        fully_connected::fully_connected_microflow(&x, &w, k, n, &pc, &mut a);
         fully_connected::fully_connected_paged(&x, &w, k, n, &pc, &mut page, &mut p);
         assert_eq!(a, p, "case {case} (k={k}, n={n})");
     }
@@ -144,7 +144,8 @@ fn prop_conv_1x1_equals_fc_per_pixel() {
         let pc = PreComputed::fold(&bias, &colsum, cin, s_x, z_x, s_w, z_w, s_x * s_w, 0, s_y, z_y, FusedAct::None);
         let mut view = vec![0i8; cin];
         let mut conv_out = vec![0i8; h * w * cout];
-        conv2d::conv2d_microflow(&input, &filters, &geo, cout, z_x as i8, &pc, &mut view, &mut conv_out);
+        let packed = pack_conv2d(&filters, cout, cin);
+        conv2d::conv2d_microflow(&input, &packed, &geo, z_x as i8, &pc, &mut view, &mut conv_out);
         // FC with weights [Cin, Cout] (transposed filters)
         let mut wfc = vec![0i8; cin * cout];
         for co in 0..cout {
@@ -153,7 +154,6 @@ fn prop_conv_1x1_equals_fc_per_pixel() {
             }
         }
         let mut fc_out = vec![0i8; cout];
-        let mut acc = vec![0i32; cout];
         for px in 0..h * w {
             fully_connected::fully_connected_microflow(
                 &input[px * cin..(px + 1) * cin],
@@ -161,7 +161,6 @@ fn prop_conv_1x1_equals_fc_per_pixel() {
                 cin,
                 cout,
                 &pc,
-                &mut acc,
                 &mut fc_out,
             );
             assert_eq!(&conv_out[px * cout..(px + 1) * cout], fc_out.as_slice(), "case {case} px {px}");
@@ -188,7 +187,8 @@ fn prop_depthwise_mult1_matches_groupwise_conv() {
         let mut view = vec![0i8; k * k];
         let mut a = vec![0i8; geo.out_h * geo.out_w];
         let mut b = vec![0i8; geo.out_h * geo.out_w];
-        conv2d::conv2d_microflow(&input, &filters, &geo, 1, z_x as i8, &pc, &mut view, &mut a);
+        let packed = pack_conv2d(&filters, 1, k * k);
+        conv2d::conv2d_microflow(&input, &packed, &geo, z_x as i8, &pc, &mut view, &mut a);
         // dw filters are channel-major for the microflow kernel; with
         // c_out == 1 both layouts coincide
         depthwise_conv2d::depthwise_conv2d_microflow(&input, &filters, &geo, 1, z_x as i8, &pc, &mut view, &mut b);
