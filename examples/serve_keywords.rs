@@ -18,9 +18,11 @@
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 use microflow::api::{Engine, Session, SessionCache};
-use microflow::coordinator::{Fleet, PoolSpec, Server, ServerConfig};
+use microflow::coordinator::{
+    Fleet, PoolSpec, QosClass, QosProfile, Request, Server, ServerConfig, Ticket,
+};
 use microflow::eval::accuracy::argmax;
 use microflow::format::mds::MdsDataset;
 use microflow::util::Prng;
@@ -28,13 +30,16 @@ use microflow::util::Prng;
 const REQUESTS: usize = 1000;
 const RATE_RPS: f64 = 400.0;
 
-/// Open-loop Poisson load over any submit endpoint (`Server` or `Fleet`
-/// both expose the same submit shape), tallying argmax accuracy against
-/// the dataset labels. The caller prints its own metrics snapshot.
+/// Open-loop Poisson load over any submit endpoint (`Server` and `Fleet`
+/// both take a typed `Request` and answer with a `Ticket`), tallying
+/// argmax accuracy against the dataset labels. Requests carry a
+/// deterministic class blend — 3 interactive : 1 bulk — so class-aware
+/// fleets route and report per class. The caller prints its own metrics
+/// snapshot.
 fn drive_load(
     name: &str,
     qp: microflow::tensor::quant::QParams,
-    submit: impl Fn(Vec<i8>) -> Result<std::sync::mpsc::Receiver<Result<Vec<i8>>>>,
+    submit: impl Fn(Request) -> Result<Ticket>,
     ds: &MdsDataset,
     requests: usize,
     rate: f64,
@@ -45,12 +50,13 @@ fn drive_load(
     for i in 0..requests {
         let idx = i % ds.n;
         let q = qp.quantize_slice(ds.sample(idx));
-        pending.push((idx, submit(q)?));
+        let class = if i % 4 == 3 { QosClass::Bulk } else { QosClass::Interactive };
+        pending.push((idx, submit(Request::new(q).with_class(class))?));
         std::thread::sleep(Duration::from_secs_f64(rng.exp(rate)));
     }
     let mut hits = 0usize;
-    for (idx, rx) in pending {
-        let out = rx.recv().context("reply dropped")??;
+    for (idx, ticket) in pending {
+        let out = ticket.wait()?;
         if argmax(&out) as i32 == ds.class(idx) {
             hits += 1;
         }
@@ -68,15 +74,16 @@ fn drive_load(
 }
 
 fn drive(name: &str, server: &Server, ds: &MdsDataset, requests: usize, rate: f64) -> Result<f64> {
-    let acc = drive_load(name, server.input_qparams(), |q| server.submit(q), ds, requests, rate)?;
+    let acc = drive_load(name, server.input_qparams(), |r| server.submit(r), ds, requests, rate)?;
     println!("[{name}] {}", server.metrics.snapshot());
     Ok(acc)
 }
 
-/// Same driver over a fleet: dispatch picks the least-loaded pool per
-/// request; per-pool metrics land in the snapshot.
+/// Same driver over a fleet: dispatch picks the best profile match, then
+/// the least-loaded pool, per request; per-pool per-class metrics land in
+/// the snapshot.
 fn drive_fleet(name: &str, fleet: &Fleet, ds: &MdsDataset, requests: usize, rate: f64) -> Result<f64> {
-    let acc = drive_load(name, fleet.input_qparams(), |q| fleet.submit(q), ds, requests, rate)?;
+    let acc = drive_load(name, fleet.input_qparams(), |r| fleet.submit(r), ds, requests, rate)?;
     print!("[{name}] {}", fleet.snapshot());
     Ok(acc)
 }
@@ -121,10 +128,13 @@ fn main() -> Result<()> {
         println!("\npjrt backend: skipped — built without the `pjrt` feature");
     }
 
-    // --- backend 3: a heterogeneous fleet — native pool (low latency) +
-    //     interpreter pool (the TFLM-style baseline as spill capacity; on
-    //     a pjrt build, swap in a PJRT pool for bulk throughput). Replica
-    //     sessions build through the warm cache: one compile, N replicas.
+    // --- backend 3: a heterogeneous fleet — native pool (low latency,
+    //     Interactive-preferred) + interpreter pool (the TFLM-style
+    //     baseline as Bulk capacity; on a pjrt build, swap in a PJRT pool
+    //     for bulk throughput). Class-aware dispatch sends the interactive
+    //     share to the native pool and the bulk share to the interpreter.
+    //     Replica sessions build through the warm cache: one compile, N
+    //     replicas.
     println!();
     let cache = Arc::new(SessionCache::new());
     // same batcher as the plain backends, plus the fleet's per-replica
@@ -145,8 +155,12 @@ fn main() -> Result<()> {
         .cache(&cache)
         .build()?];
     let fleet = Fleet::start(vec![
-        PoolSpec::new("native", native_pool).config(fleet_cfg),
-        PoolSpec::new("interp", interp_pool).config(fleet_cfg),
+        PoolSpec::new("native", native_pool)
+            .config(fleet_cfg)
+            .profile(QosProfile::for_engine(Engine::MicroFlow)),
+        PoolSpec::new("interp", interp_pool)
+            .config(fleet_cfg)
+            .profile(QosProfile::for_engine(Engine::Interp)),
     ])?;
     println!(
         "fleet: {} replicas in 2 pools (warm cache: {} hits / {} misses)",
@@ -161,8 +175,8 @@ fn main() -> Result<()> {
         "fleet lost requests: {snap}"
     );
     fleet.shutdown();
-    // which pool served each request is timing-dependent, and the interp
-    // pool may flip argmax on near-ties (±1 per element) — so hold the
+    // the bulk share routes to the interp pool by class, and the interp
+    // engine may flip argmax on near-ties (±1 per element) — so hold the
     // fleet to the same absolute quality bar, not exact parity with the
     // all-native run
     anyhow::ensure!(acc_fleet > 0.80, "fleet serving accuracy collapsed: {acc_fleet}");

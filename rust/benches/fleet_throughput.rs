@@ -1,28 +1,33 @@
-//! Fleet throughput bench — requests/sec vs replica count and pool mix.
+//! Fleet throughput bench — requests/sec vs replica count and pool mix,
+//! plus per-class latency under QoS-aware dispatch.
 //!
 //! Runs WITHOUT build artifacts: a deterministic synthetic FC chain
 //! (`microflow::synth`) is served by fleets of growing size under a
 //! closed-loop multi-threaded client, measuring end-to-end requests/sec
-//! through submit → least-outstanding dispatch → dynamic batcher →
-//! `run_batch_into`. Scaling is sublinear on small models (the mutex'd
-//! queue serializes batch assembly) — the point is to see where it bends.
+//! through submit → class-aware least-outstanding dispatch → dynamic
+//! batcher → `run_batch_into`. Scaling is sublinear on small models (the
+//! mutex'd queue serializes batch assembly) — the point is to see where it
+//! bends.
 //!
-//! Also reports the warm-session-cache effect: every fleet builds its
-//! replicas through one `SessionCache`, so N replicas cost one compile.
+//! Also reports the warm-session-cache effect (every fleet builds its
+//! replicas through one `SessionCache`, so N replicas cost one compile)
+//! and, for the heterogeneous fleet, the per-class p50/p95 the QoS routing
+//! produces: interactive requests pinned to the native pool, bulk to the
+//! interpreter pool.
 //!
 //! Besides the human table, writes machine-readable `BENCH_fleet.json` at
 //! the repo root (fleet mix, replicas, req/s, scaling vs x1, cache
-//! hit/miss) so the serving-throughput trajectory is comparable across
-//! PRs. `MICROFLOW_BENCH_SMOKE=1` cuts the request volume for CI smoke
-//! runs.
+//! hit/miss, per-class p95) so the serving-throughput trajectory is
+//! comparable across PRs. `MICROFLOW_BENCH_SMOKE=1` cuts the request
+//! volume for CI smoke runs.
 
 use std::sync::Arc;
 use std::time::Instant;
 
 use microflow::api::{Engine, Session, SessionCache};
-use microflow::coordinator::{Fleet, PoolSpec};
-use microflow::format::mfb::MfbModel;
 use microflow::bench_support::smoke_mode;
+use microflow::coordinator::{Fleet, PoolSpec, QosClass, QosProfile, Request};
+use microflow::format::mfb::MfbModel;
 use microflow::sim::report::{emit, emit_json, Table};
 use microflow::synth;
 use microflow::util::json::Json;
@@ -39,18 +44,23 @@ fn requests_per_thread() -> usize {
 }
 
 /// Closed-loop: each client thread round-trips its requests as fast as
-/// the fleet answers. Returns requests/sec.
-fn drive(fleet: &Arc<Fleet>, input: &[i8]) -> f64 {
+/// the fleet answers, tagging them with `class` (Bulk = the legacy
+/// semantics; a thread-index-odd blend exercises QoS routing). Returns
+/// requests/sec.
+fn drive(fleet: &Arc<Fleet>, input: &[i8], mixed_classes: bool) -> f64 {
     let per_thread = requests_per_thread();
     let total = CLIENT_THREADS * per_thread;
     let t0 = Instant::now();
     let mut handles = Vec::new();
-    for _ in 0..CLIENT_THREADS {
+    for t in 0..CLIENT_THREADS {
         let fleet = Arc::clone(fleet);
         let input = input.to_vec();
+        let class =
+            if mixed_classes && t % 2 == 1 { QosClass::Interactive } else { QosClass::Bulk };
         handles.push(std::thread::spawn(move || {
             for _ in 0..per_thread {
-                fleet.infer(input.clone()).unwrap();
+                let req = Request::new(input.clone()).with_class(class);
+                fleet.submit(req).unwrap().wait().unwrap();
             }
         }));
     }
@@ -76,6 +86,49 @@ fn pool(m: &MfbModel, cache: &Arc<SessionCache>, engine: Engine, n: usize, name:
     )
 }
 
+/// One table + JSON row from a finished drive: throughput, scaling and the
+/// per-class p95 split (worst pool per class — a pinned class has exactly
+/// one serving pool anyway).
+#[allow(clippy::too_many_arguments)]
+fn push_row(
+    t: &mut Table,
+    rows: &mut Vec<Json>,
+    fleet: &Fleet,
+    label: &str,
+    replicas: usize,
+    rps: f64,
+    base: f64,
+    cache: &SessionCache,
+) {
+    let snap = fleet.snapshot();
+    let mut int_p95 = 0.0f64;
+    let mut bulk_p95 = 0.0f64;
+    for p in &snap.per_pool {
+        int_p95 = int_p95.max(p.metrics.class(QosClass::Interactive).p95_us);
+        bulk_p95 = bulk_p95.max(p.metrics.class(QosClass::Bulk).p95_us);
+    }
+    t.row(vec![
+        label.to_string(),
+        replicas.to_string(),
+        format!("{rps:.0}"),
+        format!("{:.2}x", rps / base),
+        format!("{int_p95:.0}"),
+        format!("{bulk_p95:.0}"),
+        format!("{}/{}", cache.hits(), cache.misses()),
+    ]);
+    rows.push(
+        Json::obj()
+            .set("fleet", label)
+            .set("replicas", replicas)
+            .set("req_per_s", rps)
+            .set("vs_x1", rps / base)
+            .set("interactive_p95_us", int_p95)
+            .set("bulk_p95_us", bulk_p95)
+            .set("cache_hits", cache.hits() as i64)
+            .set("cache_misses", cache.misses() as i64),
+    );
+}
+
 fn main() {
     let mut rng = Prng::new(0xF1EE7);
     // a model heavy enough that workers dominate the queue mutex
@@ -84,7 +137,7 @@ fn main() {
 
     let mut t = Table::new(
         "fleet throughput (closed loop, 8 client threads)",
-        &["fleet", "replicas", "req/s", "vs x1", "cache hit/miss"],
+        &["fleet", "replicas", "req/s", "vs x1", "int p95 us", "bulk p95 us", "cache hit/miss"],
     );
     let mut base = 0.0f64;
     let mut rows: Vec<Json> = Vec::new();
@@ -93,26 +146,12 @@ fn main() {
         let fleet = Arc::new(
             Fleet::start(vec![pool(&m, &cache, Engine::MicroFlow, replicas, "native")]).unwrap(),
         );
-        let rps = drive(&fleet, &input);
+        let rps = drive(&fleet, &input, false);
         if replicas == 1 {
             base = rps;
         }
-        t.row(vec![
-            format!("native x{replicas}"),
-            replicas.to_string(),
-            format!("{rps:.0}"),
-            format!("{:.2}x", rps / base),
-            format!("{}/{}", cache.hits(), cache.misses()),
-        ]);
-        rows.push(
-            Json::obj()
-                .set("fleet", format!("native x{replicas}"))
-                .set("replicas", replicas)
-                .set("req_per_s", rps)
-                .set("vs_x1", rps / base)
-                .set("cache_hits", cache.hits() as i64)
-                .set("cache_misses", cache.misses() as i64),
-        );
+        let label = format!("native x{replicas}");
+        push_row(&mut t, &mut rows, &fleet, &label, replicas, rps, base, &cache);
         if let Ok(fleet) = Arc::try_unwrap(fleet) {
             fleet.shutdown();
         }
@@ -128,31 +167,50 @@ fn main() {
         ])
         .unwrap(),
     );
-    let rps = drive(&fleet, &input);
-    t.row(vec![
-        "native x2 + interp x2".into(),
-        "4".into(),
-        format!("{rps:.0}"),
-        format!("{:.2}x", rps / base),
-        format!("{}/{}", cache.hits(), cache.misses()),
-    ]);
-    rows.push(
-        Json::obj()
-            .set("fleet", "native x2 + interp x2")
-            .set("replicas", 4usize)
-            .set("req_per_s", rps)
-            .set("vs_x1", rps / base)
-            .set("cache_hits", cache.hits() as i64)
-            .set("cache_misses", cache.misses() as i64),
-    );
+    let rps = drive(&fleet, &input, false);
+    push_row(&mut t, &mut rows, &fleet, "native x2 + interp x2", 4, rps, base, &cache);
     let snap = fleet.snapshot();
     assert_eq!(
         snap.totals.completed,
         (CLIENT_THREADS * requests_per_thread()) as u64,
         "fleet lost requests"
     );
-    for (name, s) in &snap.per_pool {
-        println!("  [{name}] {s}");
+    for p in &snap.per_pool {
+        println!("  [{}] {}", p.name, p.metrics);
+    }
+    if let Ok(fleet) = Arc::try_unwrap(fleet) {
+        fleet.shutdown();
+    }
+
+    // the same heterogeneous layout under QoS routing: native declares
+    // Interactive, interp declares Bulk, and half the client threads send
+    // interactive traffic — per-class p95 shows the latency split the
+    // SLO-aware dispatch buys
+    let cache = Arc::new(SessionCache::new());
+    let fleet = Arc::new(
+        Fleet::start(vec![
+            pool(&m, &cache, Engine::MicroFlow, 2, "native").profile(QosProfile::Interactive),
+            pool(&m, &cache, Engine::Interp, 2, "interp").profile(QosProfile::Bulk),
+        ])
+        .unwrap(),
+    );
+    let rps = drive(&fleet, &input, true);
+    push_row(&mut t, &mut rows, &fleet, "qos: native=int, interp=bulk", 4, rps, base, &cache);
+    let snap = fleet.snapshot();
+    let native = snap.pool("native").unwrap();
+    let interp = snap.pool("interp").unwrap();
+    assert_eq!(
+        interp.metrics.class(QosClass::Interactive).submitted,
+        0,
+        "interactive traffic leaked to the bulk pool"
+    );
+    assert_eq!(
+        native.metrics.class(QosClass::Bulk).submitted,
+        0,
+        "bulk traffic leaked to the interactive pool"
+    );
+    for p in &snap.per_pool {
+        println!("  [{}] {}", p.name, p.metrics);
     }
     if let Ok(fleet) = Arc::try_unwrap(fleet) {
         fleet.shutdown();

@@ -110,20 +110,38 @@ USAGE:
                                            simulate a Table-4 deployment
   microflow serve   <model> [--requests N] [--rate RPS] [--backend E]
                     [--replicas R] [--engine-mix MIX] [--batch B]
-                    [--no-adaptive] [--paging]
+                    [--no-adaptive] [--paging] [--default-class C]
+                    [--shed-after-ms MS]
                                            serve synthetic load, print metrics
 
-serve options:
+serve options (request lifecycle):
+  Every request is typed: a QoS class (interactive | bulk | background), an
+  optional shed deadline, and a unique id. Dispatch routes each request to
+  the pool whose QoS profile prefers its class (native pools prefer
+  interactive, tflm/pjrt pools prefer bulk+background), balancing by least
+  outstanding requests within the match set. The batcher never mixes
+  classes in one batch: interactive batches cut at the latency posture,
+  bulk fills the batch target. Requests still queued past their deadline
+  are shed (counted, never executed); cancelled tickets never execute.
+  Backpressure is explicit: submit blocks on a full queue, try_submit
+  hands the request back as QueueFull.
+
+  --default-class C class of the synthetic requests: interactive | bulk |
+                    background | mix (default mix: a deterministic blend,
+                    exercising class-aware dispatch and per-class metrics)
+  --shed-after-ms MS  give every request a deadline MS milliseconds after
+                    submit; requests still queued past it are shed
   --replicas R      session replicas of --backend (one worker each; default 2)
   --engine-mix MIX  heterogeneous fleet instead of --backend/--replicas:
                     comma-separated engine:replicas pools, each pool with its
-                    own queue, batcher and metrics, dispatched by least
-                    outstanding requests — e.g. --engine-mix microflow:2,tflm:1
+                    own queue, batcher, metrics and engine-derived QoS
+                    profile — e.g. --engine-mix microflow:2,tflm:1
                     (pjrt pools need a `--features pjrt` build)
   --batch B         dynamic batcher target batch size (default 8)
   --no-adaptive     disable per-replica batcher tuning from observed queue depth
   Replica sessions build through the warm session cache: repeated builds of
-  the same model reuse one compiled plan (reported at startup).
+  the same model reuse one compiled plan (reported at startup). Metrics are
+  reported per pool and per class (p50/p95/p99, shed/cancelled/late).
 
   microflow help                           this text
 

@@ -1,10 +1,24 @@
-//! Dynamic batcher (DESIGN.md S16).
+//! Dynamic batcher (DESIGN.md S16) — now QoS-aware.
 //!
 //! Requests accumulate until the batch target is reached or the oldest
-//! waiting request has been queued for `max_wait` — the standard
-//! latency/throughput trade (vLLM-router style, scaled to TinyML). The
-//! batcher runs inside each worker thread: it owns the receive side of the
-//! bounded request channel.
+//! waiting request has been queued for the class's wait budget — the
+//! standard latency/throughput trade (vLLM-router style, scaled to
+//! TinyML). The batcher runs inside each worker thread: it owns the
+//! receive side of the bounded request channel.
+//!
+//! Request-lifecycle rules (`coordinator::request`):
+//!
+//! * **never mix classes in one batch** — the first live request fixes the
+//!   batch's [`QosClass`]; a request of another class ends the batch and
+//!   is carried over (the worker's one-slot stash) to lead the next one;
+//! * **Interactive batches cut at the latency posture** — their wait is
+//!   capped at `max_wait /` [`LATENCY_WAIT_DIV`] regardless of adaptive
+//!   tuning, while Bulk/Background fill `max_batch` under the effective
+//!   (possibly adaptively restored) wait;
+//! * **shed before execution** — cancelled entries are dropped (their
+//!   ticket resolves to a "cancelled" error; the slot is never executed)
+//!   and expired-deadline entries are answered with a shed error; both are
+//!   counted per class in [`Metrics`](super::metrics::Metrics).
 //!
 //! [`AdaptiveBatcher`] layers per-replica tuning on top: each worker
 //! observes the queue depth at every batch cut (via
@@ -14,10 +28,13 @@
 //! posture (the configured target) — the fleet's replica pools enable it
 //! per replica because `preferred_batch` is per-session config.
 
-use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::sync::mpsc::Receiver;
 use std::time::{Duration, Instant};
 
-use super::server::Request;
+use anyhow::anyhow;
+
+use super::metrics::Metrics;
+use super::request::{Pending, QosClass};
 
 /// Batching policy.
 #[derive(Clone, Copy, Debug)]
@@ -34,25 +51,80 @@ impl Default for BatcherConfig {
     }
 }
 
-/// Collect the next batch from `rx`.
+/// Check one claimed entry's lifecycle: pass it through if live, otherwise
+/// resolve it (count + reply) and return `None`.
 ///
-/// Blocks for the first request (or returns `None` when the channel is
-/// closed and drained — shutdown). After the first request arrives, keeps
-/// pulling until `max_batch` or the first request's age exceeds
-/// `max_wait`.
-pub fn next_batch(rx: &Receiver<Request>, cfg: &BatcherConfig) -> Option<Vec<Request>> {
-    let first = rx.recv().ok()?;
-    let deadline = Instant::now() + cfg.max_wait;
+/// A cancelled entry is dropped without a reply — dropping the sender
+/// resolves its ticket to a "cancelled" error, and the slot is never
+/// executed. An expired-deadline entry is answered with a shed error so
+/// the caller learns its fate rather than waiting forever.
+fn admit(p: Pending, metrics: &Metrics) -> Option<Pending> {
+    if p.is_cancelled() {
+        metrics.record_cancelled(p.request.class);
+        return None;
+    }
+    if p.deadline_expired(Instant::now()) {
+        metrics.record_shed(p.request.class);
+        let id = p.request.id;
+        let _ =
+            p.reply.send(Err(anyhow!("request {id} shed: deadline expired before execution")));
+        return None;
+    }
+    Some(p)
+}
+
+/// Collect the next single-class batch from `rx`.
+///
+/// Blocks for the first live request (or returns `None` when the channel
+/// is closed, drained, and `carry` is empty — shutdown). After the first
+/// request arrives, keeps pulling until the class's batch target or wait
+/// budget is hit; a request of a *different* class is stashed in `carry`
+/// (it leads the next batch) so a batch never mixes classes. Cancelled and
+/// expired-deadline entries are shed as they surface and never occupy a
+/// batch slot.
+///
+/// `base` is the configured policy, `effective` the (possibly adaptively
+/// tuned) one: Interactive batches wait at most `base.max_wait /`
+/// [`LATENCY_WAIT_DIV`] even when the adaptive tuner is in its throughput
+/// posture.
+pub fn next_batch(
+    rx: &Receiver<Pending>,
+    carry: &mut Option<Pending>,
+    base: &BatcherConfig,
+    effective: &BatcherConfig,
+    metrics: &Metrics,
+) -> Option<Vec<Pending>> {
+    let first = loop {
+        let p = match carry.take() {
+            Some(p) => p, // the class boundary stashed by the previous cut
+            None => rx.recv().ok()?,
+        };
+        if let Some(p) = admit(p, metrics) {
+            break p;
+        }
+    };
+    let class = first.request.class;
+    let max_wait = match class {
+        QosClass::Interactive => effective.max_wait.min(base.max_wait / LATENCY_WAIT_DIV),
+        QosClass::Bulk | QosClass::Background => effective.max_wait,
+    };
+    let deadline = Instant::now() + max_wait;
     let mut batch = vec![first];
-    while batch.len() < cfg.max_batch {
+    while batch.len() < effective.max_batch {
         let now = Instant::now();
         if now >= deadline {
             break;
         }
         match rx.recv_timeout(deadline - now) {
-            Ok(req) => batch.push(req),
-            Err(RecvTimeoutError::Timeout) => break,
-            Err(RecvTimeoutError::Disconnected) => break,
+            Ok(p) => {
+                let Some(p) = admit(p, metrics) else { continue };
+                if p.request.class != class {
+                    *carry = Some(p);
+                    break;
+                }
+                batch.push(p);
+            }
+            Err(_) => break, // timeout, or disconnected with the batch non-empty
         }
     }
     Some(batch)
@@ -83,7 +155,9 @@ pub struct AdaptiveBatcher {
 
 /// Consecutive same-sign observations before the posture flips.
 pub const ADAPT_STREAK: u32 = 2;
-/// Wait divisor in the latency posture.
+/// Wait divisor in the latency posture (also the Interactive class's
+/// batching cap — an Interactive batch never waits longer than this
+/// fraction of the configured `max_wait`).
 pub const LATENCY_WAIT_DIV: u32 = 8;
 
 impl AdaptiveBatcher {
@@ -124,12 +198,28 @@ impl AdaptiveBatcher {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::request::Request;
     use std::sync::mpsc::sync_channel;
     use std::time::Instant as StdInstant;
 
-    fn req(v: i8) -> Request {
-        let (tx, _rx) = std::sync::mpsc::channel();
-        Request { input: vec![v], enqueued: StdInstant::now(), reply: tx }
+    fn req(v: i8) -> Pending {
+        let (p, _t) = Request::new(vec![v]).into_pending();
+        p
+    }
+
+    fn classed(v: i8, class: QosClass) -> Pending {
+        let (p, _t) = Request::new(vec![v]).with_class(class).into_pending();
+        p
+    }
+
+    /// `next_batch` with an untuned config (base == effective).
+    fn cut(
+        rx: &Receiver<Pending>,
+        carry: &mut Option<Pending>,
+        cfg: &BatcherConfig,
+        metrics: &Metrics,
+    ) -> Option<Vec<Pending>> {
+        next_batch(rx, carry, cfg, cfg, metrics)
     }
 
     #[test]
@@ -139,28 +229,129 @@ mod tests {
             tx.send(req(i)).unwrap();
         }
         let cfg = BatcherConfig { max_batch: 3, max_wait: Duration::from_secs(1) };
-        let b = next_batch(&rx, &cfg).unwrap();
+        let m = Metrics::new();
+        let mut carry = None;
+        let b = cut(&rx, &mut carry, &cfg, &m).unwrap();
         assert_eq!(b.len(), 3);
-        let b2 = next_batch(&rx, &cfg).unwrap();
+        let b2 = cut(&rx, &mut carry, &cfg, &m).unwrap();
         assert_eq!(b2.len(), 2); // drains the rest after timeout
     }
 
     #[test]
     fn cuts_batch_at_deadline() {
-        let (tx, rx) = sync_channel::<Request>(16);
+        let (tx, rx) = sync_channel::<Pending>(16);
         tx.send(req(1)).unwrap();
         let cfg = BatcherConfig { max_batch: 100, max_wait: Duration::from_millis(5) };
         let t0 = StdInstant::now();
-        let b = next_batch(&rx, &cfg).unwrap();
+        let b = cut(&rx, &mut None, &cfg, &Metrics::new()).unwrap();
         assert_eq!(b.len(), 1);
         assert!(t0.elapsed() < Duration::from_millis(500));
     }
 
     #[test]
     fn returns_none_on_shutdown() {
-        let (tx, rx) = sync_channel::<Request>(1);
+        let (tx, rx) = sync_channel::<Pending>(1);
         drop(tx);
-        assert!(next_batch(&rx, &BatcherConfig::default()).is_none());
+        let cfg = BatcherConfig::default();
+        assert!(cut(&rx, &mut None, &cfg, &Metrics::new()).is_none());
+    }
+
+    #[test]
+    fn batches_never_mix_classes() {
+        let (tx, rx) = sync_channel(16);
+        tx.send(classed(1, QosClass::Bulk)).unwrap();
+        tx.send(classed(2, QosClass::Bulk)).unwrap();
+        tx.send(classed(3, QosClass::Interactive)).unwrap();
+        tx.send(classed(4, QosClass::Interactive)).unwrap();
+        let cfg = BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(5) };
+        let m = Metrics::new();
+        let mut carry = None;
+        let b1 = cut(&rx, &mut carry, &cfg, &m).unwrap();
+        assert_eq!(b1.len(), 2, "the class boundary must end the batch");
+        assert!(b1.iter().all(|p| p.request.class == QosClass::Bulk));
+        assert!(carry.is_some(), "the boundary request is carried, not dropped");
+        let b2 = cut(&rx, &mut carry, &cfg, &m).unwrap();
+        assert_eq!(b2.len(), 2, "the carried request leads the next batch");
+        assert!(b2.iter().all(|p| p.request.class == QosClass::Interactive));
+        assert!(carry.is_none());
+    }
+
+    #[test]
+    fn interactive_batches_cut_at_the_latency_posture() {
+        let (tx, rx) = sync_channel::<Pending>(4);
+        tx.send(classed(1, QosClass::Interactive)).unwrap();
+        // a generous throughput-posture wait: Interactive must not pay it
+        let cfg = BatcherConfig { max_batch: 100, max_wait: Duration::from_millis(400) };
+        let t0 = StdInstant::now();
+        let b = cut(&rx, &mut None, &cfg, &Metrics::new()).unwrap();
+        assert_eq!(b.len(), 1);
+        // budget is 400/8 = 50ms; anything well under 400ms proves the cap
+        assert!(
+            t0.elapsed() < Duration::from_millis(300),
+            "interactive batch waited {:?}",
+            t0.elapsed()
+        );
+    }
+
+    #[test]
+    fn sheds_expired_deadline_requests_before_execution() {
+        let (tx, rx) = sync_channel(8);
+        // deterministic: the deadline is already in the past at cut time
+        let (dead, dead_ticket) =
+            Request::new(vec![1]).with_deadline(StdInstant::now()).into_pending();
+        tx.send(dead).unwrap();
+        tx.send(req(2)).unwrap();
+        let cfg = BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(2) };
+        let m = Metrics::new();
+        let b = cut(&rx, &mut None, &cfg, &m).unwrap();
+        assert_eq!(b.len(), 1, "the expired request must not occupy a batch slot");
+        assert_eq!(b[0].request.payload, vec![2]);
+        assert_eq!(m.snapshot().shed, 1);
+        let err = dead_ticket.wait().unwrap_err().to_string();
+        assert!(err.contains("shed"), "{err}");
+    }
+
+    #[test]
+    fn cancelled_requests_are_never_executed() {
+        let (tx, rx) = sync_channel(8);
+        let (p1, t1) = Request::new(vec![1]).into_pending();
+        let (p2, t2) = Request::new(vec![2]).into_pending();
+        t1.cancel(); // cancelled while queued — before the batcher claims it
+        tx.send(p1).unwrap();
+        tx.send(p2).unwrap();
+        let cfg = BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(2) };
+        let m = Metrics::new();
+        let b = cut(&rx, &mut None, &cfg, &m).unwrap();
+        assert_eq!(b.len(), 1, "the cancelled slot must never reach execution");
+        assert_eq!(b[0].request.payload, vec![2]);
+        assert_eq!(m.snapshot().cancelled, 1);
+        let err = t1.wait().unwrap_err().to_string();
+        assert!(err.contains("cancelled"), "{err}");
+        drop(b); // t2's entry resolves as dropped, not cancelled
+        let err2 = t2.wait().unwrap_err().to_string();
+        assert!(err2.contains("dropped"), "{err2}");
+    }
+
+    #[test]
+    fn carried_request_is_rechecked_for_cancellation() {
+        let (tx, rx) = sync_channel(8);
+        tx.send(classed(1, QosClass::Bulk)).unwrap();
+        let (boundary, boundary_ticket) =
+            Request::new(vec![9]).with_class(QosClass::Interactive).into_pending();
+        tx.send(boundary).unwrap();
+        tx.send(classed(2, QosClass::Interactive)).unwrap();
+        let cfg = BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(5) };
+        let m = Metrics::new();
+        let mut carry = None;
+        let b1 = cut(&rx, &mut carry, &cfg, &m).unwrap();
+        assert_eq!(b1.len(), 1);
+        // cancel while it sits in the carry slot
+        boundary_ticket.cancel();
+        let b2 = cut(&rx, &mut carry, &cfg, &m).unwrap();
+        assert_eq!(b2.len(), 1, "the cancelled carry must be shed at the next cut");
+        assert_eq!(b2[0].request.payload, vec![2]);
+        assert_eq!(m.snapshot().cancelled, 1);
+        assert!(boundary_ticket.wait().unwrap_err().to_string().contains("cancelled"));
     }
 
     #[test]

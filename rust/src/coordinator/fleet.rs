@@ -1,4 +1,4 @@
-//! Fleet scheduler — heterogeneous replica pools with load-aware dispatch.
+//! Fleet scheduler — heterogeneous replica pools with SLO-aware dispatch.
 //!
 //! PR 1's session API made the three executors interchangeable; this
 //! module makes them *composable under load*. A [`Fleet`] serves one model
@@ -10,42 +10,62 @@
 //! MicroFlow pool (lowest single-request latency), the multicore-style
 //! parallel dispatch Ariel-ML explores for RIOT targets.
 //!
-//! Dispatch is **least-outstanding-requests**: every submit reads each
-//! pool's `Metrics::outstanding()` (submitted − completed − errors, all
-//! existing counters) and enqueues on the least-loaded pool; ties rotate
-//! round-robin so an idle fleet still spreads work. Per-replica batcher
-//! tuning (`ServerConfig::adaptive`) is on by default for fleet pools:
-//! each worker shifts between latency and throughput posture from the
-//! queue depth it observes.
+//! Dispatch is **class-aware, then load-aware**. Each [`PoolSpec`]
+//! declares a [`QosProfile`] (native → Interactive-preferred, PJRT/interp
+//! → Bulk; [`QosProfile::Any`] by default). A request's
+//! [`QosClass`](super::request::QosClass) selects the candidate set in
+//! tiers — pools preferring the class, else `Any` pools, else every pool —
+//! and **least-outstanding-requests** picks within that set: every submit
+//! reads each candidate's `Metrics::outstanding()` (submitted − resolved)
+//! and enqueues on the least-loaded pool; ties rotate round-robin so an
+//! idle fleet still spreads work. With all pools at the default `Any`
+//! profile this degenerates to the PR 2 pure load balancing.
 //!
-//! Session construction for pools typically goes through the warm
-//! [`SessionCache`](crate::api::SessionCache): replicas of the same model
-//! hash reuse the compiled plan instead of re-running the compiler.
+//! `try_submit` adds explicit backpressure with spill: candidates are
+//! tried in load order and a request only fails with
+//! [`SubmitError::QueueFull`] when *every* candidate queue is full.
+//!
+//! Per-replica batcher tuning (`ServerConfig::adaptive`) is on by default
+//! for fleet pools. Session construction for pools typically goes through
+//! the warm [`SessionCache`](crate::api::SessionCache): replicas of the
+//! same model hash reuse the compiled plan instead of re-running the
+//! compiler.
 
 use anyhow::{ensure, Context, Result};
 
 use super::metrics::MetricsSnapshot;
+use super::request::{QosClass, QosProfile, Request, SubmitError, Ticket};
 use super::server::{Server, ServerConfig};
 use crate::api::Session;
 use crate::tensor::quant::QParams;
 
 /// One replica pool spec: a name (shown in metrics), the session replicas
-/// (one worker thread each) and the pool's server/batcher configuration.
+/// (one worker thread each), the pool's server/batcher configuration and
+/// its declared traffic profile.
 pub struct PoolSpec {
     pub name: String,
     pub sessions: Vec<Session>,
     pub config: ServerConfig,
+    pub profile: QosProfile,
 }
 
 impl PoolSpec {
-    /// Pool with the default config, adaptive batching on.
+    /// Pool with the default config: adaptive batching on, no declared
+    /// traffic affinity ([`QosProfile::Any`]).
     pub fn new(name: impl Into<String>, sessions: Vec<Session>) -> PoolSpec {
         let config = ServerConfig { adaptive: true, ..ServerConfig::default() };
-        PoolSpec { name: name.into(), sessions, config }
+        PoolSpec { name: name.into(), sessions, config, profile: QosProfile::Any }
     }
 
     pub fn config(mut self, config: ServerConfig) -> PoolSpec {
         self.config = config;
+        self
+    }
+
+    /// Declare the pool's traffic affinity (see
+    /// [`QosProfile::for_engine`] for the natural per-engine choice).
+    pub fn profile(mut self, profile: QosProfile) -> PoolSpec {
+        self.profile = profile;
         self
     }
 }
@@ -53,6 +73,7 @@ impl PoolSpec {
 /// A named running pool.
 struct Pool {
     name: String,
+    profile: QosProfile,
     server: Server,
 }
 
@@ -65,14 +86,15 @@ pub struct Fleet {
 
 impl Fleet {
     /// Start a fleet over one or more replica pools. All pools must serve
-    /// the same model signature (engines and batcher configs may differ).
+    /// the same model signature (engines, profiles and batcher configs may
+    /// differ).
     pub fn start(pools: Vec<PoolSpec>) -> Result<Fleet> {
         ensure!(!pools.is_empty(), "need at least one pool");
         let mut running = Vec::with_capacity(pools.len());
         for spec in pools {
             let server = Server::start(spec.sessions, spec.config)
                 .with_context(|| format!("starting pool {:?}", spec.name))?;
-            running.push(Pool { name: spec.name, server });
+            running.push(Pool { name: spec.name, profile: spec.profile, server });
         }
         let sig = running[0].server.signature().clone();
         for p in &running[1..] {
@@ -92,7 +114,7 @@ impl Fleet {
     /// compatibility path).
     pub fn from_server(name: impl Into<String>, server: Server) -> Fleet {
         Fleet {
-            pools: vec![Pool { name: name.into(), server }],
+            pools: vec![Pool { name: name.into(), profile: QosProfile::Any, server }],
             rr: std::sync::atomic::AtomicUsize::new(0),
         }
     }
@@ -119,47 +141,136 @@ impl Fleet {
         self.pools.iter().map(|p| p.server.replicas()).sum()
     }
 
-    /// Least-outstanding-requests pool selection. Ties rotate through a
-    /// round-robin cursor so an idle fleet spreads work across pools
-    /// instead of always hammering pool 0.
-    fn select_pool(&self) -> &Pool {
+    /// The candidate pool set for a class, in declaration order. Tiered:
+    /// pools whose profile *prefers* the class win outright; otherwise
+    /// undeclared ([`QosProfile::Any`]) pools; otherwise every pool (a
+    /// fleet of pure specialists still serves everything).
+    fn candidates(&self, class: QosClass) -> Vec<usize> {
+        let preferred: Vec<usize> = (0..self.pools.len())
+            .filter(|&i| self.pools[i].profile.prefers(class))
+            .collect();
+        if !preferred.is_empty() {
+            return preferred;
+        }
+        let any: Vec<usize> = (0..self.pools.len())
+            .filter(|&i| self.pools[i].profile == QosProfile::Any)
+            .collect();
+        if !any.is_empty() {
+            return any;
+        }
+        (0..self.pools.len()).collect()
+    }
+
+    /// Dispatch sort key for pool `i` under `class`: the tier rank first
+    /// (preferring pools win outright, then `Any`, then the rest — the
+    /// same tiers as [`Fleet::candidates`]), load within the tier.
+    fn pool_key(&self, i: usize, class: QosClass) -> (u8, u64) {
+        let p = &self.pools[i];
+        let rank = if p.profile.prefers(class) {
+            0
+        } else if p.profile == QosProfile::Any {
+            1
+        } else {
+            2
+        };
+        (rank, p.server.metrics.outstanding())
+    }
+
+    /// Pick the pool for one submit: a single rotated scan for the
+    /// lexicographically smallest `(tier rank, outstanding)` key, ties
+    /// keeping the round-robin rotation so an idle fleet still spreads
+    /// work. Allocation-free — this is the per-request hot path.
+    fn select_pool(&self, class: QosClass) -> usize {
         let n = self.pools.len();
         let start = self.rr.fetch_add(1, std::sync::atomic::Ordering::Relaxed) % n;
         let mut best = start;
-        let mut best_load = self.pools[start].server.metrics.outstanding();
+        let mut best_key = self.pool_key(start, class);
         for off in 1..n {
             let i = (start + off) % n;
-            let load = self.pools[i].server.metrics.outstanding();
-            if load < best_load {
+            let key = self.pool_key(i, class);
+            if key < best_key {
                 best = i;
-                best_load = load;
+                best_key = key;
             }
         }
-        &self.pools[best]
+        best
     }
 
-    /// Submit a quantized request to the least-loaded pool; returns the
-    /// reply channel. Blocks when that pool's queue is full
-    /// (backpressure).
-    pub fn submit(&self, input: Vec<i8>) -> Result<std::sync::mpsc::Receiver<Result<Vec<i8>>>> {
-        self.select_pool().server.submit(input)
+    /// Candidate pools for `class` in spill order: the candidate tier
+    /// rotated by the round-robin cursor, then stably sorted by load (ties
+    /// keep the rotation). Only the `try_submit` spill path pays for the
+    /// full ordering; blocking submits use the allocation-free
+    /// [`Fleet::select_pool`] scan.
+    fn dispatch_order(&self, class: QosClass) -> Vec<usize> {
+        let cand = self.candidates(class);
+        let n = cand.len();
+        let start = self.rr.fetch_add(1, std::sync::atomic::Ordering::Relaxed) % n;
+        let mut order: Vec<usize> = (0..n).map(|off| cand[(start + off) % n]).collect();
+        // stable sort over loads sampled once: equal loads preserve the
+        // rotated order (the tiebreak), and the comparator stays total
+        // even while workers drain queues concurrently
+        order.sort_by_cached_key(|&i| self.pools[i].server.metrics.outstanding());
+        order
     }
 
-    /// Submit and wait (convenience).
+    /// Submit a typed request to the best-matching, least-loaded pool;
+    /// returns its [`Ticket`]. Blocks when that pool's queue is full
+    /// (backpressure) — use [`Fleet::try_submit`] to spill instead.
+    pub fn submit(&self, req: Request) -> Result<Ticket> {
+        let best = self.select_pool(req.class);
+        self.pools[best].server.submit(req)
+    }
+
+    /// Non-blocking submit with spill: candidates are tried in load order
+    /// and the request only comes back as [`SubmitError::QueueFull`] (or
+    /// [`SubmitError::Shutdown`], if a shut-down pool was hit) when every
+    /// candidate rejected it — the payload is always handed back.
+    pub fn try_submit(&self, mut req: Request) -> std::result::Result<Ticket, SubmitError> {
+        let mut saw_shutdown = false;
+        for i in self.dispatch_order(req.class) {
+            match self.pools[i].server.try_submit(req) {
+                Ok(ticket) => return Ok(ticket),
+                // spill to the next candidate in both rejection cases
+                Err(SubmitError::QueueFull(r)) => req = r,
+                Err(SubmitError::Shutdown(r)) => {
+                    saw_shutdown = true;
+                    req = r;
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        if saw_shutdown {
+            Err(SubmitError::Shutdown(req))
+        } else {
+            Err(SubmitError::QueueFull(req))
+        }
+    }
+
+    /// Submit and wait (blocking convenience; Bulk class, no deadline —
+    /// the legacy semantics).
     pub fn infer(&self, input: Vec<i8>) -> Result<Vec<i8>> {
-        let rx = self.submit(input)?;
-        rx.recv().context("worker dropped reply")?
+        self.submit(Request::new(input))?.wait()
     }
 
     /// Per-pool and aggregated metrics.
     pub fn snapshot(&self) -> FleetSnapshot {
-        let per_pool: Vec<(String, MetricsSnapshot)> =
-            self.pools.iter().map(|p| (p.name.clone(), p.server.metrics.snapshot())).collect();
+        let per_pool: Vec<PoolSnapshot> = self
+            .pools
+            .iter()
+            .map(|p| PoolSnapshot {
+                name: p.name.clone(),
+                profile: p.profile,
+                metrics: p.server.metrics.snapshot(),
+            })
+            .collect();
         let mut agg = Totals::default();
-        for (_, s) in &per_pool {
-            agg.submitted += s.submitted;
-            agg.completed += s.completed;
-            agg.errors += s.errors;
+        for p in &per_pool {
+            agg.submitted += p.metrics.submitted;
+            agg.completed += p.metrics.completed;
+            agg.errors += p.metrics.errors;
+            agg.shed += p.metrics.shed;
+            agg.cancelled += p.metrics.cancelled;
+            agg.deadline_missed += p.metrics.deadline_missed;
         }
         FleetSnapshot { totals: agg, per_pool }
     }
@@ -172,33 +283,53 @@ impl Fleet {
     }
 }
 
-/// Aggregated request counters across pools.
+/// Aggregated request-lifecycle counters across pools.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct Totals {
     pub submitted: u64,
     pub completed: u64,
     pub errors: u64,
+    pub shed: u64,
+    pub cancelled: u64,
+    pub deadline_missed: u64,
+}
+
+/// One pool's slice of a [`FleetSnapshot`].
+#[derive(Clone, Debug)]
+pub struct PoolSnapshot {
+    pub name: String,
+    pub profile: QosProfile,
+    pub metrics: MetricsSnapshot,
 }
 
 /// A point-in-time fleet metrics view.
 #[derive(Clone, Debug)]
 pub struct FleetSnapshot {
     pub totals: Totals,
-    pub per_pool: Vec<(String, MetricsSnapshot)>,
+    pub per_pool: Vec<PoolSnapshot>,
+}
+
+impl FleetSnapshot {
+    pub fn pool(&self, name: &str) -> Option<&PoolSnapshot> {
+        self.per_pool.iter().find(|p| p.name == name)
+    }
 }
 
 impl std::fmt::Display for FleetSnapshot {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         writeln!(
             f,
-            "fleet: {}/{} done ({} err) across {} pools",
+            "fleet: {}/{} done ({} err, {} shed, {} canc, {} late) across {} pools",
             self.totals.completed,
             self.totals.submitted,
             self.totals.errors,
+            self.totals.shed,
+            self.totals.cancelled,
+            self.totals.deadline_missed,
             self.per_pool.len()
         )?;
-        for (name, s) in &self.per_pool {
-            writeln!(f, "  {name:16} {s}")?;
+        for p in &self.per_pool {
+            writeln!(f, "  {:16} [{:11}] {}", p.name, p.profile.name(), p.metrics)?;
         }
         Ok(())
     }
@@ -253,8 +384,67 @@ mod tests {
             f.infer(vec![3, 1]).unwrap();
         }
         let snap = f.snapshot();
-        for (name, s) in &snap.per_pool {
-            assert_eq!(s.submitted, 5, "pool {name} got {} of 10", s.submitted);
+        for p in &snap.per_pool {
+            assert_eq!(p.metrics.submitted, 5, "pool {} got {} of 10", p.name, p.metrics.submitted);
+        }
+        f.shutdown();
+    }
+
+    #[test]
+    fn class_routing_prefers_matching_profiles() {
+        // native declares Interactive, interp declares Bulk: strict routing
+        let f = Fleet::start(vec![
+            PoolSpec::new("native", vec![tiny_session(Engine::MicroFlow, false)])
+                .profile(QosProfile::Interactive),
+            PoolSpec::new("interp", vec![tiny_session(Engine::Interp, false)])
+                .profile(QosProfile::Bulk),
+        ])
+        .unwrap();
+        for _ in 0..6 {
+            // Interactive → native pool only: replies are bit-exact
+            let t = f.submit(Request::interactive(vec![3, 1])).unwrap();
+            assert_eq!(t.wait().unwrap(), vec![2, 0, 5]);
+            // Bulk and Background → interp pool
+            for class in [QosClass::Bulk, QosClass::Background] {
+                f.submit(Request::new(vec![3, 1]).with_class(class)).unwrap().wait().unwrap();
+            }
+        }
+        let snap = f.snapshot();
+        let native = snap.pool("native").unwrap();
+        let interp = snap.pool("interp").unwrap();
+        assert_eq!(native.metrics.class(QosClass::Interactive).submitted, 6);
+        assert_eq!(native.metrics.class(QosClass::Bulk).submitted, 0);
+        assert_eq!(native.metrics.class(QosClass::Background).submitted, 0);
+        assert_eq!(interp.metrics.class(QosClass::Interactive).submitted, 0);
+        assert_eq!(interp.metrics.class(QosClass::Bulk).submitted, 6);
+        assert_eq!(interp.metrics.class(QosClass::Background).submitted, 6);
+        f.shutdown();
+    }
+
+    #[test]
+    fn specialist_fleet_still_serves_unmatched_classes() {
+        // only an Interactive pool exists: Bulk falls through to it rather
+        // than being unroutable
+        let f = Fleet::start(vec![PoolSpec::new(
+            "native",
+            vec![tiny_session(Engine::MicroFlow, false)],
+        )
+        .profile(QosProfile::Interactive)])
+        .unwrap();
+        assert_eq!(f.infer(vec![3, 1]).unwrap(), vec![2, 0, 5]);
+        f.shutdown();
+    }
+
+    #[test]
+    fn try_submit_spills_and_reports_full_fleet() {
+        let f = two_pool_fleet();
+        // an idle fleet accepts immediately
+        let t = f.try_submit(Request::new(vec![3, 1])).unwrap();
+        assert_eq!(t.wait().unwrap().len(), 3);
+        // wrong input length is an explicit typed error, not a panic
+        match f.try_submit(Request::new(vec![1])) {
+            Err(SubmitError::InputLength { expected, got }) => assert_eq!((expected, got), (2, 1)),
+            other => panic!("expected InputLength, got {other:?}"),
         }
         f.shutdown();
     }

@@ -4,28 +4,67 @@
 //!
 //! ## Wire protocol (little-endian, length-prefixed)
 //!
+//! Two request frames are accepted on the same port:
+//!
 //! ```text
-//! request:  magic "MFRQ" | u16 model-name len | name bytes
-//!           | u32 payload len | i8 payload (quantized input)
-//! response: magic "MFRS" | u8 status (0 ok, 1 error)
-//!           | u32 payload len | i8 payload (quantized output)
-//!             -- or, on error, utf8 message bytes
+//! v1 request: magic "MFRQ" | u16 model-name len | name bytes
+//!             | u32 payload len | i8 payload (quantized input)
+//! v2 request: magic "MFR2" | u8 class (0 interactive, 1 bulk, 2 background)
+//!             | u32 deadline-ms (0 = none; relative to receipt)
+//!             | u16 model-name len | name bytes
+//!             | u32 payload len | i8 payload (quantized input)
+//! response:   magic "MFRS" | u8 status (0 ok, 1 error)
+//!             | u32 payload len | i8 payload (quantized output)
+//!               -- or, on error, utf8 message bytes
 //! ```
+//!
+//! A v1 frame is served with the configured
+//! [`IngressConfig::default_class`] and default deadline, so legacy
+//! clients round-trip unchanged against the v2 ingress. A request shed for
+//! a missed deadline (or cancelled server-side) comes back as a status-1
+//! error frame naming the cause.
 //!
 //! One request per connection round (connections may pipeline rounds
 //! sequentially). The accept loop hands each connection to a handler
-//! thread; inference requests flow through the [`Router`] into the
-//! batched worker pools, so concurrent connections batch together.
+//! thread and reaps finished handlers every iteration — joining them as
+//! they finish, so a long-running server's handler set stays bounded by
+//! the number of *live* connections rather than growing with every
+//! connection ever accepted. Inference requests flow through the
+//! [`Router`] into the batched worker pools, so concurrent connections
+//! batch together.
 
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
+use super::request::{QosClass, Request};
 use super::router::Router;
+
+/// Ingress-side request-lifecycle defaults, applied to frames that do not
+/// carry their own class/deadline (all v1 frames; v2 frames with
+/// deadline-ms 0). Deployments pass it to [`Ingress::start_with`]; the
+/// CLI's `--default-class` / `--shed-after-ms` flags apply the same
+/// defaults to its synthetic load generator.
+#[derive(Clone, Copy, Debug)]
+pub struct IngressConfig {
+    /// Class assigned to frames that name none (every v1 frame).
+    pub default_class: QosClass,
+    /// Deadline applied when a frame carries none: requests still queued
+    /// past it are shed.
+    pub default_deadline: Option<Duration>,
+}
+
+impl Default for IngressConfig {
+    fn default() -> Self {
+        // Bulk + no deadline: exactly the legacy ingress semantics
+        IngressConfig { default_class: QosClass::Bulk, default_deadline: None }
+    }
+}
 
 /// A running TCP ingress.
 pub struct Ingress {
@@ -35,9 +74,15 @@ pub struct Ingress {
 }
 
 impl Ingress {
-    /// Bind and serve `router` on `addr` (use port 0 for an ephemeral
-    /// port; the bound address is in `self.addr`).
+    /// Bind and serve `router` on `addr` with default lifecycle config
+    /// (use port 0 for an ephemeral port; the bound address is in
+    /// `self.addr`).
     pub fn start(addr: &str, router: Arc<Router>) -> Result<Ingress> {
+        Ingress::start_with(addr, router, IngressConfig::default())
+    }
+
+    /// Bind and serve with explicit request-lifecycle defaults.
+    pub fn start_with(addr: &str, router: Arc<Router>, cfg: IngressConfig) -> Result<Ingress> {
         let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
         let local = listener.local_addr()?;
         listener.set_nonblocking(true)?;
@@ -50,22 +95,22 @@ impl Ingress {
                     Ok((stream, _)) => {
                         // idle-read timeout so handler threads cannot
                         // outlive an abandoned connection indefinitely
-                        let _ = stream.set_read_timeout(Some(std::time::Duration::from_secs(30)));
+                        let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
                         let router = Arc::clone(&router);
                         handlers.push(std::thread::spawn(move || {
-                            let _ = handle_connection(stream, &router);
+                            let _ = handle_connection(stream, &router, cfg);
                         }));
                     }
                     Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                        std::thread::sleep(std::time::Duration::from_millis(2));
+                        std::thread::sleep(Duration::from_millis(2));
                     }
                     Err(_) => break,
                 }
-                handlers.retain(|h| !h.is_finished());
+                reap_finished(&mut handlers);
             }
-            // handler threads are NOT joined: they exit on client EOF or
-            // read timeout; joining here would deadlock shutdown against
-            // clients that keep their connection open
+            // live handler threads are NOT joined at shutdown: they exit
+            // on client EOF or read timeout; joining here would deadlock
+            // shutdown against clients that keep their connection open
         });
         Ok(Ingress { addr: local, stop, accept_thread: Some(accept_thread) })
     }
@@ -79,7 +124,36 @@ impl Ingress {
     }
 }
 
-fn handle_connection(mut stream: TcpStream, router: &Router) -> Result<()> {
+/// Join every finished handler thread, keeping only live ones — the
+/// accept loop calls this each iteration so the handler set stays bounded
+/// by concurrent connections (joining a finished thread is immediate and
+/// releases its stack instead of leaking a `JoinHandle` per connection
+/// ever served).
+fn reap_finished(handlers: &mut Vec<JoinHandle<()>>) {
+    let mut i = 0;
+    while i < handlers.len() {
+        if handlers[i].is_finished() {
+            let h = handlers.swap_remove(i);
+            let _ = h.join();
+        } else {
+            i += 1;
+        }
+    }
+}
+
+fn read_u16(stream: &mut TcpStream) -> std::io::Result<u16> {
+    let mut b = [0u8; 2];
+    stream.read_exact(&mut b)?;
+    Ok(u16::from_le_bytes(b))
+}
+
+fn read_u32(stream: &mut TcpStream) -> std::io::Result<u32> {
+    let mut b = [0u8; 4];
+    stream.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn handle_connection(mut stream: TcpStream, router: &Router, cfg: IngressConfig) -> Result<()> {
     stream.set_nodelay(true).ok();
     loop {
         let mut magic = [0u8; 4];
@@ -97,13 +171,27 @@ fn handle_connection(mut stream: TcpStream, router: &Router) -> Result<()> {
             }
             Err(e) => return Err(e.into()),
         }
-        if &magic != b"MFRQ" {
-            write_error(&mut stream, "bad request magic")?;
-            return Ok(());
-        }
-        let mut b2 = [0u8; 2];
-        stream.read_exact(&mut b2)?;
-        let name_len = u16::from_le_bytes(b2) as usize;
+        // lifecycle header: v2 carries class + deadline, v1 uses defaults
+        let (class, deadline_ms) = match &magic {
+            b"MFRQ" => (cfg.default_class, 0u32),
+            b"MFR2" => {
+                let mut cb = [0u8; 1];
+                stream.read_exact(&mut cb)?;
+                let class = match QosClass::from_u8(cb[0]) {
+                    Ok(c) => c,
+                    Err(e) => {
+                        write_error(&mut stream, &format!("{e:#}"))?;
+                        return Ok(());
+                    }
+                };
+                (class, read_u32(&mut stream)?)
+            }
+            _ => {
+                write_error(&mut stream, "bad request magic")?;
+                return Ok(());
+            }
+        };
+        let name_len = read_u16(&mut stream)? as usize;
         if name_len > 256 {
             write_error(&mut stream, "model name too long")?;
             return Ok(());
@@ -111,9 +199,7 @@ fn handle_connection(mut stream: TcpStream, router: &Router) -> Result<()> {
         let mut name = vec![0u8; name_len];
         stream.read_exact(&mut name)?;
         let name = String::from_utf8(name).context("model name utf8")?;
-        let mut b4 = [0u8; 4];
-        stream.read_exact(&mut b4)?;
-        let payload_len = u32::from_le_bytes(b4) as usize;
+        let payload_len = read_u32(&mut stream)? as usize;
         if payload_len > 16 * 1024 * 1024 {
             write_error(&mut stream, "payload too large")?;
             return Ok(());
@@ -122,7 +208,18 @@ fn handle_connection(mut stream: TcpStream, router: &Router) -> Result<()> {
         stream.read_exact(&mut payload)?;
         let input: Vec<i8> = payload.iter().map(|&b| b as i8).collect();
 
-        match router.infer(&name, input) {
+        // deadline is relative to receipt; 0 falls back to the configured
+        // default (if any)
+        let deadline = if deadline_ms > 0 {
+            Some(Instant::now() + Duration::from_millis(deadline_ms as u64))
+        } else {
+            cfg.default_deadline.map(|d| Instant::now() + d)
+        };
+        let mut req = Request::new(input).with_class(class);
+        if let Some(d) = deadline {
+            req = req.with_deadline(d);
+        }
+        match router.submit(&name, req).and_then(|ticket| ticket.wait()) {
             Ok(out) => {
                 stream.write_all(b"MFRS")?;
                 stream.write_all(&[0u8])?;
@@ -157,17 +254,45 @@ impl Client {
         Ok(Client { stream })
     }
 
-    /// One inference round-trip.
+    /// One inference round-trip on the legacy v1 `MFRQ` frame (no class,
+    /// no deadline — the server applies its configured defaults). Kept
+    /// deliberately: it doubles as the v1-compatibility probe.
     pub fn infer(&mut self, model: &str, input: &[i8]) -> Result<Vec<i8>> {
         let s = &mut self.stream;
         s.write_all(b"MFRQ")?;
+        Self::write_body(s, model, input)?;
+        Self::read_response(s)
+    }
+
+    /// One inference round-trip on the v2 `MFR2` frame with an explicit
+    /// QoS class and optional deadline (milliseconds from server receipt;
+    /// `None` leaves the server's default in force).
+    pub fn infer_with(
+        &mut self,
+        model: &str,
+        input: &[i8],
+        class: QosClass,
+        deadline_ms: Option<u32>,
+    ) -> Result<Vec<i8>> {
+        let s = &mut self.stream;
+        s.write_all(b"MFR2")?;
+        s.write_all(&[class.as_u8()])?;
+        s.write_all(&deadline_ms.unwrap_or(0).to_le_bytes())?;
+        Self::write_body(s, model, input)?;
+        Self::read_response(s)
+    }
+
+    fn write_body(s: &mut TcpStream, model: &str, input: &[i8]) -> Result<()> {
         s.write_all(&(model.len() as u16).to_le_bytes())?;
         s.write_all(model.as_bytes())?;
         s.write_all(&(input.len() as u32).to_le_bytes())?;
         let bytes: Vec<u8> = input.iter().map(|&v| v as u8).collect();
         s.write_all(&bytes)?;
         s.flush()?;
+        Ok(())
+    }
 
+    fn read_response(s: &mut TcpStream) -> Result<Vec<i8>> {
         let mut magic = [0u8; 4];
         s.read_exact(&mut magic)?;
         if &magic != b"MFRS" {

@@ -1,27 +1,62 @@
-//! Serving metrics (DESIGN.md S16): latency quantiles + throughput.
+//! Serving metrics (DESIGN.md S16): per-class latency quantiles, lifecycle
+//! counters and throughput.
 //!
-//! Lock-guarded reservoir of recent latencies plus monotonic counters.
-//! Cheap enough for the request path (one mutex lock per completion; the
-//! e2e bench shows the coordinator is not the bottleneck — EXPERIMENTS.md
-//! §Perf).
+//! Every counter and latency reservoir is kept **per [`QosClass`]**; the
+//! totals in a [`MetricsSnapshot`] are computed as the sum of the class
+//! lanes, so per-class counters sum to totals by construction (the stress
+//! suite still asserts it end-to-end). Lock-guarded reservoir of recent
+//! latencies plus monotonic atomics — cheap enough for the request path
+//! (one mutex lock per completion; the e2e bench shows the coordinator is
+//! not the bottleneck — EXPERIMENTS.md §Perf).
+//!
+//! Lifecycle counters beyond the classic submitted/completed/errors:
+//!
+//! * `shed` — expired-deadline requests dropped by the batcher before
+//!   execution (they consumed queue space, never a batch slot);
+//! * `cancelled` — cancelled tickets dropped before execution;
+//! * `deadline_missed` — requests that executed but completed after their
+//!   deadline (delivered late, the SLO signal autoscaling will read).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
+use super::request::QosClass;
 use crate::util::stats::percentile_sorted;
 
 const RESERVOIR: usize = 65_536;
 
-/// Shared metrics sink.
-pub struct Metrics {
-    start: Instant,
+/// One QoS class's counters + latency reservoir.
+struct ClassMetrics {
     submitted: AtomicU64,
     completed: AtomicU64,
     errors: AtomicU64,
+    shed: AtomicU64,
+    cancelled: AtomicU64,
+    deadline_missed: AtomicU64,
+    latencies_us: Mutex<Vec<u64>>,
+}
+
+impl ClassMetrics {
+    fn new() -> Self {
+        ClassMetrics {
+            submitted: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            cancelled: AtomicU64::new(0),
+            deadline_missed: AtomicU64::new(0),
+            latencies_us: Mutex::new(Vec::new()),
+        }
+    }
+}
+
+/// Shared metrics sink — one per replica pool.
+pub struct Metrics {
+    start: Instant,
+    classes: [ClassMetrics; 3],
     batches: AtomicU64,
     batched_samples: AtomicU64,
-    latencies_us: Mutex<Vec<u64>>,
 }
 
 impl Default for Metrics {
@@ -34,40 +69,74 @@ impl Metrics {
     pub fn new() -> Self {
         Metrics {
             start: Instant::now(),
-            submitted: AtomicU64::new(0),
-            completed: AtomicU64::new(0),
-            errors: AtomicU64::new(0),
+            classes: std::array::from_fn(|_| ClassMetrics::new()),
             batches: AtomicU64::new(0),
             batched_samples: AtomicU64::new(0),
-            latencies_us: Mutex::new(Vec::with_capacity(4096)),
         }
     }
 
-    /// Record one accepted (enqueued) request.
-    pub fn record_submitted(&self) {
-        self.submitted.fetch_add(1, Ordering::Relaxed);
+    fn lane(&self, class: QosClass) -> &ClassMetrics {
+        &self.classes[class.index()]
     }
 
-    /// Requests accepted but not yet answered (queued + in flight) — the
+    /// Record one accepted (enqueued) request.
+    pub fn record_submitted(&self, class: QosClass) {
+        self.lane(class).submitted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Undo one `record_submitted` — the `try_submit` path counts before
+    /// the non-blocking send (completed must never exceed submitted), then
+    /// retracts when the send is rejected (queue full or shut down) and
+    /// the request is handed back to the caller.
+    pub fn retract_submitted(&self, class: QosClass) {
+        self.lane(class).submitted.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// Requests accepted but not yet resolved (queued + in flight) — the
     /// load signal the fleet's least-outstanding-requests dispatch and the
-    /// adaptive batcher read.
+    /// adaptive batcher read. Shed and cancelled requests are resolved:
+    /// they left the queue without completing.
     pub fn outstanding(&self) -> u64 {
-        let submitted = self.submitted.load(Ordering::Relaxed);
-        let done = self.completed.load(Ordering::Relaxed) + self.errors.load(Ordering::Relaxed);
-        submitted.saturating_sub(done)
+        let mut submitted = 0u64;
+        let mut resolved = 0u64;
+        for lane in &self.classes {
+            submitted += lane.submitted.load(Ordering::Relaxed);
+            resolved += lane.completed.load(Ordering::Relaxed)
+                + lane.errors.load(Ordering::Relaxed)
+                + lane.shed.load(Ordering::Relaxed)
+                + lane.cancelled.load(Ordering::Relaxed);
+        }
+        submitted.saturating_sub(resolved)
     }
 
     /// Record one completed request with its end-to-end latency.
-    pub fn record(&self, latency: Duration) {
-        self.completed.fetch_add(1, Ordering::Relaxed);
-        let mut l = self.latencies_us.lock().unwrap();
+    pub fn record(&self, class: QosClass, latency: Duration) {
+        let lane = self.lane(class);
+        lane.completed.fetch_add(1, Ordering::Relaxed);
+        let mut l = lane.latencies_us.lock().unwrap();
         if l.len() < RESERVOIR {
             l.push(latency.as_micros() as u64);
         }
     }
 
-    pub fn record_error(&self) {
-        self.errors.fetch_add(1, Ordering::Relaxed);
+    pub fn record_error(&self, class: QosClass) {
+        self.lane(class).errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one expired-deadline request dropped before execution.
+    pub fn record_shed(&self, class: QosClass) {
+        self.lane(class).shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one cancelled request dropped before execution.
+    pub fn record_cancelled(&self, class: QosClass) {
+        self.lane(class).cancelled.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one request that executed but finished past its deadline
+    /// (also counted in `completed`; the reply is still delivered).
+    pub fn record_deadline_missed(&self, class: QosClass) {
+        self.lane(class).deadline_missed.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Record one executed batch of `n` samples.
@@ -77,42 +146,99 @@ impl Metrics {
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
-        let mut lat = self.latencies_us.lock().unwrap().clone();
-        lat.sort_unstable();
-        let latf: Vec<f64> = lat.iter().map(|&v| v as f64).collect();
-        let q = |p: f64| if latf.is_empty() { 0.0 } else { percentile_sorted(&latf, p) };
-        let completed = self.completed.load(Ordering::Relaxed);
+        let quantiles = |lat: &mut Vec<u64>| {
+            lat.sort_unstable();
+            let latf: Vec<f64> = lat.iter().map(|&v| v as f64).collect();
+            let q = |p: f64| if latf.is_empty() { 0.0 } else { percentile_sorted(&latf, p) };
+            (q(50.0), q(95.0), q(99.0))
+        };
+        let mut all_lat: Vec<u64> = Vec::new();
+        let per_class: [ClassSnapshot; 3] = std::array::from_fn(|i| {
+            let lane = &self.classes[i];
+            let mut lat = lane.latencies_us.lock().unwrap().clone();
+            all_lat.extend_from_slice(&lat);
+            let (p50_us, p95_us, p99_us) = quantiles(&mut lat);
+            ClassSnapshot {
+                class: QosClass::ALL[i],
+                submitted: lane.submitted.load(Ordering::Relaxed),
+                completed: lane.completed.load(Ordering::Relaxed),
+                errors: lane.errors.load(Ordering::Relaxed),
+                shed: lane.shed.load(Ordering::Relaxed),
+                cancelled: lane.cancelled.load(Ordering::Relaxed),
+                deadline_missed: lane.deadline_missed.load(Ordering::Relaxed),
+                p50_us,
+                p95_us,
+                p99_us,
+            }
+        });
+        let (p50_us, p95_us, p99_us) = quantiles(&mut all_lat);
+        let sum = |f: fn(&ClassSnapshot) -> u64| per_class.iter().map(f).sum::<u64>();
         let batches = self.batches.load(Ordering::Relaxed);
         let samples = self.batched_samples.load(Ordering::Relaxed);
         MetricsSnapshot {
-            submitted: self.submitted.load(Ordering::Relaxed),
-            completed,
-            errors: self.errors.load(Ordering::Relaxed),
+            submitted: sum(|c| c.submitted),
+            completed: sum(|c| c.completed),
+            errors: sum(|c| c.errors),
+            shed: sum(|c| c.shed),
+            cancelled: sum(|c| c.cancelled),
+            deadline_missed: sum(|c| c.deadline_missed),
             elapsed: self.start.elapsed(),
-            p50_us: q(50.0),
-            p95_us: q(95.0),
-            p99_us: q(99.0),
+            p50_us,
+            p95_us,
+            p99_us,
             mean_batch: if batches > 0 { samples as f64 / batches as f64 } else { 0.0 },
+            per_class,
         }
     }
 }
 
-/// A point-in-time metrics view.
+/// One class's lane in a [`MetricsSnapshot`].
+#[derive(Clone, Copy, Debug)]
+pub struct ClassSnapshot {
+    pub class: QosClass,
+    pub submitted: u64,
+    pub completed: u64,
+    pub errors: u64,
+    pub shed: u64,
+    pub cancelled: u64,
+    pub deadline_missed: u64,
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+}
+
+impl ClassSnapshot {
+    /// Any traffic in this lane at all?
+    pub fn is_active(&self) -> bool {
+        self.submitted > 0
+    }
+}
+
+/// A point-in-time metrics view. The flat fields are totals, always equal
+/// to the sum of the `per_class` lanes.
 #[derive(Clone, Copy, Debug)]
 pub struct MetricsSnapshot {
     pub submitted: u64,
     pub completed: u64,
     pub errors: u64,
+    pub shed: u64,
+    pub cancelled: u64,
+    pub deadline_missed: u64,
     pub elapsed: Duration,
     pub p50_us: f64,
     pub p95_us: f64,
     pub p99_us: f64,
     pub mean_batch: f64,
+    pub per_class: [ClassSnapshot; 3],
 }
 
 impl MetricsSnapshot {
     pub fn throughput_rps(&self) -> f64 {
         self.completed as f64 / self.elapsed.as_secs_f64().max(1e-9)
+    }
+
+    pub fn class(&self, class: QosClass) -> &ClassSnapshot {
+        &self.per_class[class.index()]
     }
 }
 
@@ -120,17 +246,31 @@ impl std::fmt::Display for MetricsSnapshot {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "{}/{} done ({} err) in {:.2}s | {:.0} req/s | p50 {:.0}us p95 {:.0}us p99 {:.0}us | mean batch {:.2}",
+            "{}/{} done ({} err, {} shed, {} canc, {} late) in {:.2}s | {:.0} req/s | p50 {:.0}us p95 {:.0}us p99 {:.0}us | mean batch {:.2}",
             self.completed,
             self.submitted,
             self.errors,
+            self.shed,
+            self.cancelled,
+            self.deadline_missed,
             self.elapsed.as_secs_f64(),
             self.throughput_rps(),
             self.p50_us,
             self.p95_us,
             self.p99_us,
             self.mean_batch
-        )
+        )?;
+        for c in self.per_class.iter().filter(|c| c.is_active()) {
+            write!(
+                f,
+                " | {} {}/{} p95 {:.0}us",
+                c.class.name(),
+                c.completed,
+                c.submitted,
+                c.p95_us
+            )?;
+        }
+        Ok(())
     }
 }
 
@@ -142,8 +282,8 @@ mod tests {
     fn records_and_snapshots() {
         let m = Metrics::new();
         for us in [100u64, 200, 300, 400, 500] {
-            m.record_submitted();
-            m.record(Duration::from_micros(us));
+            m.record_submitted(QosClass::Bulk);
+            m.record(QosClass::Bulk, Duration::from_micros(us));
         }
         m.record_batch(5);
         let s = m.snapshot();
@@ -152,19 +292,60 @@ mod tests {
         assert_eq!(s.p50_us, 300.0);
         assert_eq!(s.mean_batch, 5.0);
         assert!(s.throughput_rps() > 0.0);
+        assert_eq!(s.class(QosClass::Bulk).completed, 5);
+        assert_eq!(s.class(QosClass::Interactive).completed, 0);
     }
 
     #[test]
-    fn outstanding_tracks_submitted_minus_done() {
+    fn per_class_lanes_sum_to_totals() {
+        let m = Metrics::new();
+        m.record_submitted(QosClass::Interactive);
+        m.record(QosClass::Interactive, Duration::from_micros(50));
+        m.record_submitted(QosClass::Bulk);
+        m.record_shed(QosClass::Bulk);
+        m.record_submitted(QosClass::Background);
+        m.record_cancelled(QosClass::Background);
+        m.record_submitted(QosClass::Bulk);
+        m.record(QosClass::Bulk, Duration::from_micros(900));
+        m.record_deadline_missed(QosClass::Bulk);
+        let s = m.snapshot();
+        assert_eq!(s.submitted, 4);
+        assert_eq!(s.completed, 2);
+        assert_eq!(s.shed, 1);
+        assert_eq!(s.cancelled, 1);
+        assert_eq!(s.deadline_missed, 1);
+        let lane_sum = |f: fn(&ClassSnapshot) -> u64| s.per_class.iter().map(f).sum::<u64>();
+        assert_eq!(lane_sum(|c| c.submitted), s.submitted);
+        assert_eq!(lane_sum(|c| c.completed), s.completed);
+        assert_eq!(lane_sum(|c| c.errors), s.errors);
+        assert_eq!(lane_sum(|c| c.shed), s.shed);
+        assert_eq!(lane_sum(|c| c.cancelled), s.cancelled);
+        assert_eq!(lane_sum(|c| c.deadline_missed), s.deadline_missed);
+    }
+
+    #[test]
+    fn outstanding_counts_shed_and_cancelled_as_resolved() {
         let m = Metrics::new();
         for _ in 0..5 {
-            m.record_submitted();
+            m.record_submitted(QosClass::Bulk);
         }
         assert_eq!(m.outstanding(), 5);
-        m.record(Duration::from_micros(10));
-        m.record_error();
+        m.record(QosClass::Bulk, Duration::from_micros(10));
+        m.record_error(QosClass::Bulk);
         assert_eq!(m.outstanding(), 3);
+        m.record_shed(QosClass::Bulk);
+        m.record_cancelled(QosClass::Bulk);
+        assert_eq!(m.outstanding(), 1);
         assert_eq!(m.snapshot().submitted, 5);
+    }
+
+    #[test]
+    fn retract_submitted_balances_a_rejected_try_submit() {
+        let m = Metrics::new();
+        m.record_submitted(QosClass::Interactive);
+        m.retract_submitted(QosClass::Interactive);
+        assert_eq!(m.outstanding(), 0);
+        assert_eq!(m.snapshot().submitted, 0);
     }
 
     #[test]
@@ -172,5 +353,6 @@ mod tests {
         let s = Metrics::new().snapshot();
         assert_eq!(s.completed, 0);
         assert_eq!(s.p99_us, 0.0);
+        assert_eq!(s.shed, 0);
     }
 }

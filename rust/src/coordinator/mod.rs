@@ -3,34 +3,46 @@
 //!
 //! MicroFlow is a per-device inference engine; the coordinator is the host
 //! process that serves inference requests over it (and over the PJRT
-//! executables), vLLM-router style but sized for TinyML:
+//! executables), vLLM-router style but sized for TinyML. The whole tier
+//! runs on one **request lifecycle**: a typed [`Request`] (payload +
+//! [`QosClass`] + optional deadline + id) goes in, a [`Ticket`] comes
+//! back, and every stage in between reads the lifecycle fields:
 //!
+//! * [`request`] — the typed substrate: [`Request`], [`QosClass`]
+//!   (Interactive | Bulk | Background), [`Ticket`] (`wait` / `try_wait` /
+//!   `wait_deadline` / `cancel`), [`QosProfile`] (a pool's declared
+//!   traffic affinity) and [`SubmitError`] (explicit backpressure:
+//!   `try_submit` returns `QueueFull` instead of silently blocking;
+//!   `submit` keeps the blocking semantics);
 //! * execution — [`crate::api::Session`]: the unified session surface
-//!   (native MicroFlow engine, TFLM-like interpreter, or PJRT executable)
-//!   replaced the coordinator-private `Backend` trait; workers drive the
-//!   allocation-free `run_batch_into` hot path;
-//! * [`batcher`] — dynamic batching: requests accumulate until
-//!   `max_batch` or `max_wait` elapses, then execute as one batch
-//!   (fills the AOT'd batch variants of the PJRT path); per-replica
-//!   adaptive tuning shifts each worker between latency and throughput
-//!   posture from the observed queue depth;
+//!   (native MicroFlow engine, TFLM-like interpreter, or PJRT executable);
+//!   workers drive the allocation-free `run_batch_into` hot path;
+//! * [`batcher`] — QoS-aware dynamic batching: single-class batches
+//!   (Interactive cut at the latency posture, Bulk fills `max_batch`),
+//!   expired-deadline and cancelled requests shed *before* execution;
+//!   per-replica adaptive tuning shifts each worker between latency and
+//!   throughput posture from the observed queue depth;
 //! * [`server`]  — worker threads + bounded queues (std::thread + mpsc;
-//!   tokio is unavailable offline — DESIGN.md §7). Bounded channels give
-//!   backpressure: submit blocks when the queue is full;
+//!   tokio is unavailable offline — DESIGN.md §7);
 //! * [`fleet`]   — heterogeneous replica pools for one model with
-//!   least-outstanding-requests dispatch across pools (e.g. a PJRT pool
-//!   for bulk throughput next to a native pool for low latency);
+//!   SLO-aware dispatch: best [`QosProfile`] match first (native pool for
+//!   Interactive, PJRT/interp pool for Bulk), least-outstanding-requests
+//!   within the match set, spill across candidates on `try_submit`;
 //! * [`router`]  — model-name → fleet routing for multi-model
 //!   deployments;
-//! * [`ingress`] — TCP wire protocol + blocking client, so external
-//!   processes can drive the router (the deployment surface);
-//! * [`metrics`] — per-model latency (p50/p95/p99) and throughput
-//!   counters, reported by the e2e example (`examples/serve_keywords.rs`).
+//! * [`ingress`] — TCP wire protocol + blocking client: the v2 `MFR2`
+//!   frame carries class + deadline, legacy v1 `MFRQ` frames are served
+//!   with configurable defaults ([`IngressConfig`]);
+//! * [`metrics`] — per-class latency (p50/p95/p99) and lifecycle counters
+//!   (completed, errors, `shed`, `cancelled`, `deadline_missed`), always
+//!   summing to the totals, reported by the e2e example
+//!   (`examples/serve_keywords.rs`).
 
 pub mod batcher;
 pub mod fleet;
 pub mod ingress;
 pub mod metrics;
+pub mod request;
 pub mod router;
 pub mod server;
 
@@ -38,8 +50,9 @@ pub mod server;
 // every server deployment needs it alongside the coordinator types
 pub use crate::api::{Engine, InferenceSession, Session, SessionBuilder, SessionCache};
 pub use batcher::{AdaptiveBatcher, BatcherConfig};
-pub use fleet::{Fleet, FleetSnapshot, PoolSpec};
-pub use ingress::{Client, Ingress};
-pub use metrics::{Metrics, MetricsSnapshot};
+pub use fleet::{Fleet, FleetSnapshot, PoolSnapshot, PoolSpec};
+pub use ingress::{Client, Ingress, IngressConfig};
+pub use metrics::{ClassSnapshot, Metrics, MetricsSnapshot};
+pub use request::{QosClass, QosProfile, Request, SubmitError, Ticket};
 pub use router::Router;
 pub use server::{Server, ServerConfig};

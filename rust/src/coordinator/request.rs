@@ -1,0 +1,472 @@
+//! Request lifecycle (DESIGN.md S16) — typed requests, QoS classes and
+//! response tickets.
+//!
+//! The serving tier used to funnel everything through
+//! `submit(Vec<i8>) -> Receiver<Result<Vec<i8>>>`: requests carried no
+//! identity, no class, no deadline, could not be cancelled or shed, and
+//! dispatch could only balance by load. This module is the typed substrate
+//! the whole request path now runs on:
+//!
+//! * [`Request`] — payload + [`QosClass`] + optional deadline + unique id.
+//!   Built with [`Request::new`] (Bulk, no deadline — the legacy
+//!   semantics) and refined with `with_class` / `with_deadline_in`;
+//! * [`Ticket`] — the response handle returned by every submit path
+//!   (`wait`, `try_wait`, `wait_deadline`, `cancel`, `id`), replacing the
+//!   raw mpsc `Receiver` in `Server`, `Fleet` and `Router`;
+//! * [`QosProfile`] — a pool's declared affinity (native →
+//!   Interactive-preferred, PJRT/interp → Bulk); the fleet routes each
+//!   request to the best profile match first and balances by
+//!   least-outstanding load only within that match set;
+//! * [`SubmitError`] — explicit backpressure: `try_submit` returns
+//!   [`SubmitError::QueueFull`] (handing the request back for retry or
+//!   spill) instead of silently blocking;
+//! * [`Pending`] — the queue entry behind a ticket (request + reply sender
+//!   + enqueue timestamp); the batcher sheds expired-deadline and
+//!   cancelled entries before execution, so a cancelled ticket's slot is
+//!   never executed.
+//!
+//! Cancellation is cooperative and pre-execution: `cancel` flips a shared
+//! flag that the batcher checks when it claims the entry. A request
+//! already inside an executing batch completes normally (the result is
+//! simply discarded by the caller); one still queued is dropped, counted
+//! in `Metrics::cancelled`, and its ticket resolves to a "cancelled"
+//! error.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::api::Engine;
+
+/// Quality-of-service class of one request — the routing and batching
+/// signal (paper Sec. 2: "critical environments" need bounded latency as
+/// much as throughput).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum QosClass {
+    /// Small latency-sensitive request: routed to Interactive-preferred
+    /// pools, batched under the latency posture (never held for the full
+    /// batching window).
+    Interactive,
+    /// Throughput-oriented request: fills batches up to `max_batch` — the
+    /// legacy submit semantics, and the default (so untyped callers
+    /// behave exactly as before).
+    #[default]
+    Bulk,
+    /// Deferrable work: today batched and routed exactly like Bulk, but
+    /// tagged separately so its metrics lane stays distinct and future
+    /// policies (priority queues, shedding order) can treat it as the
+    /// first class to yield when capacity is short.
+    Background,
+}
+
+impl QosClass {
+    /// All classes, in `index()` order (per-class metrics lanes).
+    pub const ALL: [QosClass; 3] = [QosClass::Interactive, QosClass::Bulk, QosClass::Background];
+
+    /// Dense index for per-class counter arrays.
+    pub fn index(self) -> usize {
+        match self {
+            QosClass::Interactive => 0,
+            QosClass::Bulk => 1,
+            QosClass::Background => 2,
+        }
+    }
+
+    /// Stable lowercase name (CLI values, metrics labels).
+    pub fn name(self) -> &'static str {
+        match self {
+            QosClass::Interactive => "interactive",
+            QosClass::Bulk => "bulk",
+            QosClass::Background => "background",
+        }
+    }
+
+    /// Wire encoding for the `MFR2` request frame.
+    pub fn as_u8(self) -> u8 {
+        self.index() as u8
+    }
+
+    /// Decode the `MFR2` class byte.
+    pub fn from_u8(b: u8) -> Result<QosClass> {
+        match b {
+            0 => Ok(QosClass::Interactive),
+            1 => Ok(QosClass::Bulk),
+            2 => Ok(QosClass::Background),
+            other => bail!("unknown QoS class byte {other} (0 int | 1 bulk | 2 background)"),
+        }
+    }
+}
+
+impl std::fmt::Display for QosClass {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for QosClass {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "interactive" | "int" => QosClass::Interactive,
+            "bulk" => QosClass::Bulk,
+            "background" | "bg" => QosClass::Background,
+            other => bail!("unknown QoS class {other:?} (interactive | bulk | background)"),
+        })
+    }
+}
+
+/// A replica pool's declared traffic affinity. The fleet routes each
+/// request to pools preferring its class; only when no pool prefers it
+/// does routing widen to [`QosProfile::Any`] pools, then to every pool.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QosProfile {
+    /// Low-latency pool (e.g. native MicroFlow sessions): prefers
+    /// Interactive traffic.
+    Interactive,
+    /// Throughput pool (e.g. PJRT batched execution, or the interpreter
+    /// baseline as spill capacity): prefers Bulk and Background traffic.
+    Bulk,
+    /// No declared affinity: serves whatever dispatch sends (the default,
+    /// and the pre-QoS behavior).
+    Any,
+}
+
+impl QosProfile {
+    /// Does this pool prefer requests of `class`? `Any` prefers nothing —
+    /// it is the fallback tier, not a match.
+    pub fn prefers(self, class: QosClass) -> bool {
+        match self {
+            QosProfile::Interactive => class == QosClass::Interactive,
+            QosProfile::Bulk => matches!(class, QosClass::Bulk | QosClass::Background),
+            QosProfile::Any => false,
+        }
+    }
+
+    /// The natural profile for a pool of `engine` sessions: native engine
+    /// pools are latency-preferred, PJRT/interpreter pools are
+    /// throughput-preferred.
+    pub fn for_engine(engine: Engine) -> QosProfile {
+        match engine {
+            Engine::MicroFlow => QosProfile::Interactive,
+            Engine::Interp | Engine::Pjrt => QosProfile::Bulk,
+        }
+    }
+
+    /// Stable lowercase name (metrics labels, CLI output).
+    pub fn name(self) -> &'static str {
+        match self {
+            QosProfile::Interactive => "interactive",
+            QosProfile::Bulk => "bulk",
+            QosProfile::Any => "any",
+        }
+    }
+}
+
+impl std::fmt::Display for QosProfile {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Process-wide request id sequence (ids are unique per process, never 0).
+static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+
+/// A typed inference request: quantized payload plus the lifecycle fields
+/// dispatch, batching and shedding read. Construct with [`Request::new`];
+/// the embedded cancel flag is shared with the [`Ticket`] once submitted.
+pub struct Request {
+    /// Quantized input, exactly `input_len` elements of the target model.
+    pub payload: Vec<i8>,
+    pub class: QosClass,
+    /// Absolute shed deadline: a request still queued past this instant is
+    /// dropped (counted, never executed) instead of wasting a batch slot.
+    pub deadline: Option<Instant>,
+    /// Process-unique id, embedded in error messages and the ticket.
+    pub id: u64,
+    cancel: Arc<AtomicBool>,
+}
+
+impl Request {
+    /// A Bulk request with no deadline — the legacy submit semantics.
+    pub fn new(payload: Vec<i8>) -> Request {
+        Request {
+            payload,
+            class: QosClass::default(),
+            deadline: None,
+            id: NEXT_ID.fetch_add(1, Ordering::Relaxed),
+            cancel: Arc::new(AtomicBool::new(false)),
+        }
+    }
+
+    /// An Interactive request (convenience for the common case).
+    pub fn interactive(payload: Vec<i8>) -> Request {
+        Request::new(payload).with_class(QosClass::Interactive)
+    }
+
+    pub fn with_class(mut self, class: QosClass) -> Request {
+        self.class = class;
+        self
+    }
+
+    pub fn with_deadline(mut self, deadline: Instant) -> Request {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    /// Deadline `after` from now.
+    pub fn with_deadline_in(self, after: Duration) -> Request {
+        self.with_deadline(Instant::now() + after)
+    }
+
+    /// Cooperatively cancel. Effective while the request is still queued
+    /// (before or after submit): the batcher drops it unexecuted. A
+    /// request already executing completes and the result is discarded.
+    pub fn cancel(&self) {
+        self.cancel.store(true, Ordering::Relaxed);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.cancel.load(Ordering::Relaxed)
+    }
+
+    /// Split into the queue entry and the caller's response handle
+    /// (called by the submit paths; one reply channel per request).
+    pub(crate) fn into_pending(self) -> (Pending, Ticket) {
+        let (reply_tx, reply_rx) = channel();
+        let ticket = Ticket {
+            id: self.id,
+            class: self.class,
+            rx: reply_rx,
+            cancel: Arc::clone(&self.cancel),
+        };
+        (Pending { request: self, enqueued: Instant::now(), reply: reply_tx }, ticket)
+    }
+}
+
+impl std::fmt::Debug for Request {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Request")
+            .field("id", &self.id)
+            .field("class", &self.class)
+            .field("deadline", &self.deadline)
+            .field("payload_len", &self.payload.len())
+            .field("cancelled", &self.is_cancelled())
+            .finish()
+    }
+}
+
+/// One queued request: the [`Request`] plus its reply channel and enqueue
+/// timestamp. Lives on the server's bounded channel; the batcher claims
+/// it, sheds it (deadline expired), or drops it (cancelled).
+pub struct Pending {
+    pub request: Request,
+    pub enqueued: Instant,
+    pub reply: Sender<Result<Vec<i8>>>,
+}
+
+impl Pending {
+    pub fn is_cancelled(&self) -> bool {
+        self.request.is_cancelled()
+    }
+
+    pub fn deadline_expired(&self, now: Instant) -> bool {
+        self.request.deadline.is_some_and(|d| now >= d)
+    }
+
+    /// Recover the request (dropping the reply channel) — the
+    /// `try_submit` full-queue path hands it back to the caller.
+    pub fn into_request(self) -> Request {
+        self.request
+    }
+}
+
+/// The response handle for one submitted request — replaces the raw mpsc
+/// `Receiver<Result<Vec<i8>>>` everywhere in the coordinator.
+pub struct Ticket {
+    id: u64,
+    class: QosClass,
+    rx: Receiver<Result<Vec<i8>>>,
+    cancel: Arc<AtomicBool>,
+}
+
+impl Ticket {
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    pub fn class(&self) -> QosClass {
+        self.class
+    }
+
+    /// Block until the result arrives (or the request is shed, cancelled
+    /// or fails).
+    pub fn wait(self) -> Result<Vec<i8>> {
+        match self.rx.recv() {
+            Ok(r) => r,
+            Err(_) => Err(self.dropped_error()),
+        }
+    }
+
+    /// Non-blocking poll: `Ok(None)` while the request is still in
+    /// flight; at most one `Ok(Some(..))` is ever yielded.
+    pub fn try_wait(&mut self) -> Result<Option<Vec<i8>>> {
+        match self.rx.try_recv() {
+            Ok(r) => r.map(Some),
+            Err(TryRecvError::Empty) => Ok(None),
+            Err(TryRecvError::Disconnected) => Err(self.dropped_error()),
+        }
+    }
+
+    /// Block until the result arrives or `deadline` passes; `Ok(None)`
+    /// means the deadline passed with the request still in flight (the
+    /// ticket stays usable — callers may `cancel` or keep waiting).
+    pub fn wait_deadline(&mut self, deadline: Instant) -> Result<Option<Vec<i8>>> {
+        let timeout = deadline.saturating_duration_since(Instant::now());
+        match self.rx.recv_timeout(timeout) {
+            Ok(r) => r.map(Some),
+            Err(RecvTimeoutError::Timeout) => Ok(None),
+            Err(RecvTimeoutError::Disconnected) => Err(self.dropped_error()),
+        }
+    }
+
+    /// Cooperatively cancel (see [`Request::cancel`]): a still-queued
+    /// request is dropped unexecuted and this ticket resolves to a
+    /// "cancelled" error.
+    pub fn cancel(&self) {
+        self.cancel.store(true, Ordering::Relaxed);
+    }
+
+    /// The reply sender was dropped without an answer: either the request
+    /// was cancelled (batcher dropped it) or a worker died.
+    fn dropped_error(&self) -> anyhow::Error {
+        if self.cancel.load(Ordering::Relaxed) {
+            anyhow!("request {} cancelled before execution", self.id)
+        } else {
+            anyhow!("request {}: worker dropped reply", self.id)
+        }
+    }
+}
+
+/// Explicit backpressure and validation errors from `try_submit`. The
+/// rejected request is handed back whenever it still exists, so callers
+/// can retry, spill elsewhere, or shed it — never silently lose payloads.
+#[derive(Debug)]
+pub enum SubmitError {
+    /// The target queue(s) are full.
+    QueueFull(Request),
+    /// The server was shut down; the request never entered a queue.
+    Shutdown(Request),
+    /// Payload length does not match the model's input length.
+    InputLength { expected: usize, got: usize },
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::QueueFull(r) => {
+                write!(f, "queue full: request {} ({}) rejected", r.id, r.class)
+            }
+            SubmitError::Shutdown(r) => {
+                write!(f, "server is shut down: request {} ({}) rejected", r.id, r.class)
+            }
+            SubmitError::InputLength { expected, got } => {
+                write!(f, "input length {got} != model input length {expected}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ids_are_unique_and_nonzero() {
+        let a = Request::new(vec![1]);
+        let b = Request::new(vec![2]);
+        assert_ne!(a.id, 0);
+        assert_ne!(a.id, b.id);
+    }
+
+    #[test]
+    fn class_wire_byte_round_trips() {
+        for class in QosClass::ALL {
+            assert_eq!(QosClass::from_u8(class.as_u8()).unwrap(), class);
+            assert_eq!(class.name().parse::<QosClass>().unwrap(), class);
+        }
+        assert!(QosClass::from_u8(7).is_err());
+        assert!("warp".parse::<QosClass>().is_err());
+    }
+
+    #[test]
+    fn profile_preference_matrix() {
+        use QosClass::*;
+        assert!(QosProfile::Interactive.prefers(Interactive));
+        assert!(!QosProfile::Interactive.prefers(Bulk));
+        assert!(QosProfile::Bulk.prefers(Bulk));
+        assert!(QosProfile::Bulk.prefers(Background));
+        assert!(!QosProfile::Bulk.prefers(Interactive));
+        for c in QosClass::ALL {
+            assert!(!QosProfile::Any.prefers(c), "Any must be fallback-only ({c})");
+        }
+        assert_eq!(QosProfile::for_engine(Engine::MicroFlow), QosProfile::Interactive);
+        assert_eq!(QosProfile::for_engine(Engine::Interp), QosProfile::Bulk);
+    }
+
+    #[test]
+    fn ticket_waits_and_polls() {
+        let (pending, mut ticket) = Request::interactive(vec![1, 2]).into_pending();
+        assert_eq!(ticket.class(), QosClass::Interactive);
+        assert_eq!(ticket.id(), pending.request.id);
+        assert!(ticket.try_wait().unwrap().is_none(), "nothing sent yet");
+        let soon = Instant::now() + Duration::from_millis(1);
+        assert!(ticket.wait_deadline(soon).unwrap().is_none(), "deadline passes unanswered");
+        pending.reply.send(Ok(vec![7])).unwrap();
+        assert_eq!(ticket.try_wait().unwrap(), Some(vec![7]));
+    }
+
+    #[test]
+    fn cancelled_ticket_resolves_to_cancelled_error() {
+        let req = Request::new(vec![0]);
+        let (pending, ticket) = req.into_pending();
+        ticket.cancel();
+        assert!(pending.is_cancelled(), "cancel flag is shared with the queue entry");
+        drop(pending); // the batcher drops a cancelled entry without replying
+        let err = ticket.wait().unwrap_err().to_string();
+        assert!(err.contains("cancelled"), "{err}");
+    }
+
+    #[test]
+    fn cancel_before_submit_marks_the_queue_entry() {
+        let req = Request::new(vec![0]);
+        req.cancel();
+        let (pending, _ticket) = req.into_pending();
+        assert!(pending.is_cancelled());
+    }
+
+    #[test]
+    fn deadline_expiry_is_inclusive() {
+        let now = Instant::now();
+        let (pending, _t) = Request::new(vec![0]).with_deadline(now).into_pending();
+        assert!(pending.deadline_expired(now));
+        let (fresh, _t2) =
+            Request::new(vec![0]).with_deadline(now + Duration::from_secs(60)).into_pending();
+        assert!(!fresh.deadline_expired(now));
+    }
+
+    #[test]
+    fn submit_error_display_names_the_cause() {
+        let full = SubmitError::QueueFull(Request::new(vec![0]).with_class(QosClass::Bulk));
+        assert!(full.to_string().contains("queue full"), "{full}");
+        let len = SubmitError::InputLength { expected: 4, got: 2 };
+        assert!(len.to_string().contains('4'), "{len}");
+        let down = SubmitError::Shutdown(Request::new(vec![0]));
+        assert!(down.to_string().contains("shut down"), "{down}");
+    }
+}

@@ -4,13 +4,17 @@
 //!
 //! Each model is served by a [`Fleet`] of replica pools; a bare [`Server`]
 //! registers as a single-pool fleet, so simple deployments keep working
-//! unchanged while heterogeneous ones add pools.
+//! unchanged while heterogeneous ones add pools. Requests route by name,
+//! then by QoS class and load inside the fleet; [`Router::submit`] returns
+//! the request's [`Ticket`] (the ingress holds it per connection), while
+//! [`Router::infer`] stays as the blocking convenience wrapper.
 
 use std::collections::HashMap;
 
 use anyhow::{Context, Result};
 
 use super::fleet::Fleet;
+use super::request::{Request, Ticket};
 use super::server::Server;
 
 /// A multi-model routing table.
@@ -44,10 +48,15 @@ impl Router {
         m
     }
 
-    /// Route an inference request by model name (least-loaded pool of the
-    /// model's fleet).
+    /// Route a typed request by model name (class-aware pool selection in
+    /// the model's fleet); returns its [`Ticket`].
+    pub fn submit(&self, model: &str, req: Request) -> Result<Ticket> {
+        self.get(model)?.submit(req)
+    }
+
+    /// Route and wait (blocking convenience; Bulk class, no deadline).
     pub fn infer(&self, model: &str, input: Vec<i8>) -> Result<Vec<i8>> {
-        self.get(model)?.infer(input)
+        self.submit(model, Request::new(input))?.wait()
     }
 
     /// Shut down every fleet.
@@ -63,6 +72,7 @@ mod tests {
     use super::*;
     use crate::api::{Engine, Session};
     use crate::coordinator::fleet::PoolSpec;
+    use crate::coordinator::request::QosClass;
     use crate::coordinator::server::ServerConfig;
 
     fn tiny_server() -> Server {
@@ -77,6 +87,19 @@ mod tests {
         assert_eq!(r.models(), vec!["tiny"]);
         assert_eq!(r.infer("tiny", vec![3, 1]).unwrap(), vec![2, 0, 5]);
         assert!(r.infer("missing", vec![0, 0]).is_err());
+        r.shutdown();
+    }
+
+    #[test]
+    fn submit_returns_a_ticket_with_request_identity() {
+        let mut r = Router::new();
+        r.add("tiny", tiny_server());
+        let req = Request::new(vec![3, 1]).with_class(QosClass::Interactive);
+        let id = req.id;
+        let ticket = r.submit("tiny", req).unwrap();
+        assert_eq!(ticket.id(), id);
+        assert_eq!(ticket.wait().unwrap(), vec![2, 0, 5]);
+        assert!(r.submit("missing", Request::new(vec![0, 0])).is_err());
         r.shutdown();
     }
 

@@ -1,31 +1,29 @@
 //! Worker-pool serving loop (DESIGN.md S16).
 //!
 //! `Server` owns one worker thread per [`Session`] replica, fed by a
-//! bounded request channel (backpressure: `submit` blocks when the queue is
-//! full). Each worker runs the dynamic batcher and executes the batch with
+//! bounded channel of [`Pending`] request entries. Submission is typed
+//! ([`Request`] in, [`Ticket`] out): `submit` keeps the classic blocking
+//! backpressure, `try_submit` surfaces a full queue as
+//! [`SubmitError::QueueFull`] instead of blocking. Each worker runs the
+//! QoS-aware dynamic batcher (single-class batches; expired-deadline and
+//! cancelled entries shed before execution) and executes the batch with
 //! the session's allocation-free `run_batch_into` — the packed input and
 //! output staging buffers are reused across batches, so the steady-state
 //! request path allocates only the per-request reply vectors.
 //! std::thread + mpsc (no tokio offline — DESIGN.md §7).
 
-use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 use super::batcher::{next_batch, AdaptiveBatcher, BatcherConfig};
 use super::metrics::Metrics;
+use super::request::{Pending, Request, SubmitError, Ticket};
 use crate::api::{IoSignature, Session};
 use crate::tensor::quant::QParams;
-
-/// One in-flight request.
-pub struct Request {
-    pub input: Vec<i8>,
-    pub enqueued: Instant,
-    pub reply: Sender<Result<Vec<i8>>>,
-}
 
 /// Server configuration.
 #[derive(Clone, Copy, Debug)]
@@ -49,7 +47,7 @@ impl Default for ServerConfig {
 /// sharing a bounded queue. A [`Fleet`](super::fleet::Fleet) holds several
 /// of these and dispatches across them.
 pub struct Server {
-    tx: SyncSender<Request>,
+    tx: SyncSender<Pending>,
     workers: Vec<JoinHandle<()>>,
     pub metrics: Arc<Metrics>,
     signature: IoSignature,
@@ -81,7 +79,7 @@ impl Server {
             );
         }
         let metrics = Arc::new(Metrics::new());
-        let (tx, rx) = sync_channel::<Request>(cfg.queue_depth);
+        let (tx, rx) = sync_channel::<Pending>(cfg.queue_depth);
         let shared_rx = Arc::new(std::sync::Mutex::new(rx));
         let mut workers = Vec::new();
         for mut session in sessions {
@@ -129,27 +127,62 @@ impl Server {
         self.output_qparams
     }
 
-    /// Submit a quantized request; returns the reply channel. Blocks when
-    /// the queue is full (backpressure).
-    pub fn submit(&self, input: Vec<i8>) -> Result<Receiver<Result<Vec<i8>>>> {
-        anyhow::ensure!(input.len() == self.input_len, "input length");
-        let (reply_tx, reply_rx) = std::sync::mpsc::channel();
+    /// Submit a typed request; returns its [`Ticket`]. Blocks when the
+    /// queue is full (backpressure) — use [`Server::try_submit`] for an
+    /// explicit [`SubmitError::QueueFull`] instead.
+    pub fn submit(&self, req: Request) -> Result<Ticket> {
+        anyhow::ensure!(
+            req.payload.len() == self.input_len,
+            "input length {} != model input length {}",
+            req.payload.len(),
+            self.input_len
+        );
+        let class = req.class;
+        let (pending, ticket) = req.into_pending();
         // count BEFORE the send: a worker may complete the request before
         // this thread resumes, and completed must never exceed submitted
         // (outstanding() would under-report and misroute fleet dispatch)
-        self.metrics.record_submitted();
-        if self.tx.send(Request { input, enqueued: Instant::now(), reply: reply_tx }).is_err() {
+        self.metrics.record_submitted(class);
+        if self.tx.send(pending).is_err() {
             // balance the counter so outstanding() stays accurate
-            self.metrics.record_error();
+            self.metrics.record_error(class);
             anyhow::bail!("server is shut down");
         }
-        Ok(reply_rx)
+        Ok(ticket)
     }
 
-    /// Submit and wait (convenience).
+    /// Non-blocking submit: a full queue is an explicit
+    /// [`SubmitError::QueueFull`] handing the request back to the caller
+    /// (retry, spill to another pool, or shed).
+    pub fn try_submit(&self, req: Request) -> std::result::Result<Ticket, SubmitError> {
+        if req.payload.len() != self.input_len {
+            return Err(SubmitError::InputLength {
+                expected: self.input_len,
+                got: req.payload.len(),
+            });
+        }
+        let class = req.class;
+        let (pending, ticket) = req.into_pending();
+        self.metrics.record_submitted(class);
+        match self.tx.try_send(pending) {
+            Ok(()) => Ok(ticket),
+            Err(TrySendError::Full(p)) => {
+                // the request never entered the queue: retract the count
+                // and hand it back for retry/spill
+                self.metrics.retract_submitted(class);
+                Err(SubmitError::QueueFull(p.into_request()))
+            }
+            Err(TrySendError::Disconnected(p)) => {
+                self.metrics.retract_submitted(class);
+                Err(SubmitError::Shutdown(p.into_request()))
+            }
+        }
+    }
+
+    /// Submit and wait (blocking convenience; Bulk class, no deadline —
+    /// the legacy semantics).
     pub fn infer(&self, input: Vec<i8>) -> Result<Vec<i8>> {
-        let rx = self.submit(input)?;
-        rx.recv().context("worker dropped reply")?
+        self.submit(Request::new(input))?.wait()
     }
 
     /// Graceful shutdown: close the queue and join workers.
@@ -163,7 +196,7 @@ impl Server {
 
 fn worker_loop(
     session: &mut Session,
-    rx: &std::sync::Mutex<Receiver<Request>>,
+    rx: &std::sync::Mutex<Receiver<Pending>>,
     cfg: &BatcherConfig,
     adaptive: bool,
     replicas: usize,
@@ -172,15 +205,18 @@ fn worker_loop(
     let ilen = session.input_len();
     let olen = session.output_len();
     let mut tuner = AdaptiveBatcher::new(*cfg);
+    // one-slot stash for the request that ended the previous batch on a
+    // class boundary; it leads this worker's next batch
+    let mut carry: Option<Pending> = None;
     // staging buffers grow to the largest batch once, then are reused
     let mut inputs: Vec<i8> = Vec::new();
     let mut outputs: Vec<i8> = Vec::new();
     loop {
         // hold the lock only while assembling a batch; workers alternate
-        let bcfg = if adaptive { tuner.config() } else { *cfg };
+        let effective = if adaptive { tuner.config() } else { *cfg };
         let batch = {
             let rx = rx.lock().unwrap();
-            next_batch(&rx, &bcfg)
+            next_batch(&rx, &mut carry, cfg, &effective, metrics)
         };
         let Some(batch) = batch else { return };
         if adaptive {
@@ -194,24 +230,30 @@ fn worker_loop(
         let n = batch.len();
         metrics.record_batch(n);
         inputs.clear();
-        for r in &batch {
-            inputs.extend_from_slice(&r.input);
+        for p in &batch {
+            inputs.extend_from_slice(&p.request.payload);
         }
         outputs.resize(n * olen, 0);
         debug_assert_eq!(inputs.len(), n * ilen);
         match session.run_batch_into(&inputs, n, &mut outputs[..n * olen]) {
             Ok(()) => {
-                for (i, r) in batch.into_iter().enumerate() {
+                let done = Instant::now();
+                for (i, p) in batch.into_iter().enumerate() {
                     let out = outputs[i * olen..(i + 1) * olen].to_vec();
-                    metrics.record(r.enqueued.elapsed());
-                    let _ = r.reply.send(Ok(out));
+                    if p.request.deadline.is_some_and(|d| done > d) {
+                        // executed but late: delivered anyway, counted as
+                        // an SLO miss
+                        metrics.record_deadline_missed(p.request.class);
+                    }
+                    metrics.record(p.request.class, p.enqueued.elapsed());
+                    let _ = p.reply.send(Ok(out));
                 }
             }
             Err(e) => {
                 let msg = format!("batch execution failed: {e:#}");
-                for r in batch {
-                    metrics.record_error();
-                    let _ = r.reply.send(Err(anyhow::anyhow!(msg.clone())));
+                for p in batch {
+                    metrics.record_error(p.request.class);
+                    let _ = p.reply.send(Err(anyhow::anyhow!(msg.clone())));
                 }
             }
         }
@@ -222,6 +264,7 @@ fn worker_loop(
 mod tests {
     use super::*;
     use crate::api::{Engine, Session};
+    use crate::coordinator::request::QosClass;
 
     fn tiny_server(replicas: usize) -> Server {
         let sessions: Vec<Session> = (0..replicas)
@@ -240,6 +283,21 @@ mod tests {
         let s = tiny_server(1);
         let out = s.infer(vec![3, 1]).unwrap();
         assert_eq!(out, vec![2, 0, 5]); // same as the engine unit test
+        s.shutdown();
+    }
+
+    #[test]
+    fn serves_typed_requests_with_ticket_identity() {
+        let s = tiny_server(1);
+        let req = Request::interactive(vec![3, 1]);
+        let id = req.id;
+        let ticket = s.submit(req).unwrap();
+        assert_eq!(ticket.id(), id);
+        assert_eq!(ticket.class(), QosClass::Interactive);
+        assert_eq!(ticket.wait().unwrap(), vec![2, 0, 5]);
+        let snap = s.metrics.snapshot();
+        assert_eq!(snap.class(QosClass::Interactive).completed, 1);
+        assert_eq!(snap.class(QosClass::Bulk).completed, 0);
         s.shutdown();
     }
 
@@ -287,7 +345,59 @@ mod tests {
     #[test]
     fn rejects_wrong_input_length() {
         let s = tiny_server(1);
-        assert!(s.submit(vec![1, 2, 3]).is_err());
+        assert!(s.submit(Request::new(vec![1, 2, 3])).is_err());
+        match s.try_submit(Request::new(vec![1, 2, 3])) {
+            Err(SubmitError::InputLength { expected, got }) => {
+                assert_eq!((expected, got), (2, 3));
+            }
+            other => panic!("expected InputLength, got {other:?}"),
+        }
+        // rejected submissions never touch the counters
+        assert_eq!(s.metrics.snapshot().submitted, 0);
+        s.shutdown();
+    }
+
+    #[test]
+    fn cancelled_before_submit_is_never_executed() {
+        let s = tiny_server(1);
+        let req = Request::new(vec![3, 1]);
+        req.cancel(); // deterministic: cancelled before the queue sees it
+        let ticket = s.submit(req).unwrap();
+        let err = ticket.wait().unwrap_err().to_string();
+        assert!(err.contains("cancelled"), "{err}");
+        let snap = s.metrics.snapshot();
+        assert_eq!(snap.cancelled, 1);
+        assert_eq!(snap.completed, 0);
+        s.shutdown();
+    }
+
+    #[test]
+    fn expired_deadline_is_shed_not_executed() {
+        let s = tiny_server(1);
+        let ticket =
+            s.submit(Request::new(vec![3, 1]).with_deadline(std::time::Instant::now())).unwrap();
+        let err = ticket.wait().unwrap_err().to_string();
+        assert!(err.contains("shed"), "{err}");
+        let snap = s.metrics.snapshot();
+        assert_eq!(snap.shed, 1);
+        assert_eq!(snap.completed, 0);
+        s.shutdown();
+    }
+
+    #[test]
+    fn generous_deadline_completes_normally() {
+        let s = tiny_server(1);
+        let ticket = s
+            .submit(
+                Request::interactive(vec![3, 1])
+                    .with_deadline_in(std::time::Duration::from_secs(60)),
+            )
+            .unwrap();
+        assert_eq!(ticket.wait().unwrap(), vec![2, 0, 5]);
+        let snap = s.metrics.snapshot();
+        assert_eq!(snap.shed, 0);
+        assert_eq!(snap.deadline_missed, 0);
+        assert_eq!(snap.class(QosClass::Interactive).completed, 1);
         s.shutdown();
     }
 

@@ -12,7 +12,7 @@ use anyhow::{bail, Context, Result};
 use microflow::api::{Engine, Session, SessionCache};
 use microflow::cli::{parse_engine_mix, Args, USAGE};
 use microflow::compiler::plan::{CompileOptions, CompiledModel};
-use microflow::coordinator::{Fleet, PoolSpec, ServerConfig};
+use microflow::coordinator::{Fleet, PoolSpec, QosClass, QosProfile, Request, ServerConfig};
 use microflow::format::golden::Golden;
 use microflow::format::mds::MdsDataset;
 use microflow::format::mfb::MfbModel;
@@ -224,14 +224,24 @@ fn cmd_deploy(args: &Args) -> Result<()> {
 
 /// `microflow serve <model> [--requests N] [--rate RPS] [--backend B]
 /// [--replicas R] [--engine-mix MIX] [--batch B] [--no-adaptive]
-/// [--paging]` — synthetic serving load over a replica fleet, prints
-/// per-pool metrics.
+/// [--paging] [--default-class C] [--shed-after-ms MS]` — synthetic
+/// serving load over a replica fleet (typed requests with QoS classes and
+/// optional deadlines), prints per-pool, per-class metrics.
 fn cmd_serve(args: &Args) -> Result<()> {
     let name = model_arg(args)?;
     let art = artifacts();
     let requests = args.opt_usize("requests", 500);
     let rate = args.opt_f64("rate", 200.0);
     let max_batch = args.opt_usize("batch", 8);
+    // `mix` draws a deterministic blend of classes per request; a named
+    // class pins the whole load to it
+    let default_class: Option<QosClass> = match args.opt("default-class").unwrap_or("mix") {
+        "mix" => None,
+        c => Some(c.parse()?),
+    };
+    let shed_after: Option<Duration> =
+        args.opt("shed-after-ms").map(|v| v.parse::<u64>().context("--shed-after-ms")).transpose()?
+            .map(Duration::from_millis);
 
     // pool layout: --engine-mix pools, or a single --backend x --replicas
     let mix: Vec<(Engine, usize)> = match args.opt("engine-mix") {
@@ -243,6 +253,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let cache = std::sync::Arc::new(SessionCache::new());
     let mut cfg = ServerConfig { adaptive: !args.flag("no-adaptive"), ..ServerConfig::default() };
     cfg.batcher.max_batch = max_batch;
+    // single-pool layouts keep the profile open (Any) so every class is
+    // served; multi-pool fleets get the engine-derived QoS profiles the
+    // class-aware dispatch routes on
+    let single_pool = mix.len() == 1;
     let pools = mix
         .iter()
         .map(|&(engine, replicas)| {
@@ -257,7 +271,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
                         .build()
                 })
                 .collect::<Result<_>>()?;
-            Ok(PoolSpec::new(format!("{engine}x{replicas}"), sessions).config(cfg))
+            let profile =
+                if single_pool { QosProfile::Any } else { QosProfile::for_engine(engine) };
+            Ok(PoolSpec::new(format!("{engine}x{replicas}"), sessions)
+                .config(cfg)
+                .profile(profile))
         })
         .collect::<Result<Vec<_>>>()?;
     let fleet = Fleet::start(pools)?;
@@ -273,22 +291,45 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let qp = fleet.input_qparams();
     let mut rng = Prng::new(42);
     println!(
-        "serving {name} via [{}]: {requests} requests @ ~{rate} rps",
-        fleet.pool_names().join(", ")
+        "serving {name} via [{}]: {requests} requests @ ~{rate} rps (class {}, shed after {})",
+        fleet.pool_names().join(", "),
+        default_class.map(|c| c.name()).unwrap_or("mix"),
+        shed_after.map(|d| format!("{}ms", d.as_millis())).unwrap_or_else(|| "never".into()),
     );
     let mut pending = Vec::new();
     let t0 = Instant::now();
     for i in 0..requests {
         let sample = ds.sample(i % ds.n);
         let q = qp.quantize_slice(sample);
-        pending.push(fleet.submit(q)?);
+        // deterministic blend: half interactive, ~40% bulk, ~10% background
+        let class = default_class.unwrap_or_else(|| match rng.below(10) {
+            0..=4 => QosClass::Interactive,
+            5..=8 => QosClass::Bulk,
+            _ => QosClass::Background,
+        });
+        let mut req = Request::new(q).with_class(class);
+        if let Some(d) = shed_after {
+            req = req.with_deadline_in(d);
+        }
+        pending.push(fleet.submit(req)?);
         std::thread::sleep(Duration::from_secs_f64(rng.exp(rate)));
     }
-    for rx in pending {
-        rx.recv().context("reply dropped")??;
+    let mut served = 0usize;
+    let mut shed = 0usize;
+    for ticket in pending {
+        match ticket.wait() {
+            Ok(_) => served += 1,
+            // with --shed-after-ms, shed requests are an expected outcome
+            Err(e) if format!("{e:#}").contains("shed") => shed += 1,
+            Err(e) => return Err(e),
+        }
     }
     let wall = t0.elapsed();
-    println!("done in {:.2}s\n{}", wall.as_secs_f64(), fleet.snapshot());
+    println!(
+        "done in {:.2}s ({served} served, {shed} shed)\n{}",
+        wall.as_secs_f64(),
+        fleet.snapshot()
+    );
     fleet.shutdown();
     Ok(())
 }

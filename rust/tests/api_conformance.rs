@@ -16,11 +16,17 @@
 //! * **the serving tiers preserve the execution tier's outputs**: the same
 //!   model answers identically through `Session::run_into`, a 1-replica
 //!   `Server`, and a multi-replica heterogeneous `Fleet`;
+//! * **both wire generations round-trip**: a legacy v1 `MFRQ` client and a
+//!   v2 `MFR2` client (class + deadline) get identical, execution-tier
+//!   outputs from the same ingress, and a malformed v2 class byte is a
+//!   clean error frame;
 //! * malformed geometry (VALID kernel larger than its input) surfaces as a
 //!   build-time `Err` from every engine, never a panic.
 
 use microflow::api::{Engine, Session};
-use microflow::coordinator::{Fleet, PoolSpec, Server, ServerConfig};
+use microflow::coordinator::{
+    Client, Fleet, Ingress, IngressConfig, PoolSpec, QosClass, Router, Server, ServerConfig,
+};
 use microflow::format::mfb::{MfbModel, OpCode, OpOptions, Operator, Padding};
 use microflow::synth::{self, random_conv, random_fc_chain};
 use microflow::util::Prng;
@@ -191,6 +197,98 @@ fn fleet_path_preserves_single_session_outputs() {
         }
         mixed.shutdown();
     }
+}
+
+/// The wire-protocol conformance gate: the same randomized model must
+/// answer identically through `Session::run_into`, a legacy v1 `MFRQ`
+/// client, and a v2 `MFR2` client with explicit class and deadline — the
+/// v1 path proving that pre-QoS clients round-trip unchanged against the
+/// v2 ingress.
+#[test]
+fn ingress_serves_v1_and_v2_frames_identically() {
+    let mut rng = Prng::new(0x1f6e55);
+    let m = random_fc_chain(&mut rng, 2);
+    let mut single = Session::builder(&m).engine(Engine::MicroFlow).build().unwrap();
+    let ilen = single.input_len();
+    let inputs: Vec<Vec<i8>> = (0..4).map(|_| rng.i8_vec(ilen)).collect();
+    let truth: Vec<Vec<i8>> = inputs.iter().map(|x| single.run(x).unwrap()).collect();
+
+    let mut router = Router::new();
+    router.add(
+        "synth",
+        Server::start(
+            vec![Session::builder(&m).engine(Engine::MicroFlow).build().unwrap()],
+            ServerConfig::default(),
+        )
+        .unwrap(),
+    );
+    let router = std::sync::Arc::new(router);
+    let ingress = Ingress::start_with(
+        "127.0.0.1:0",
+        std::sync::Arc::clone(&router),
+        IngressConfig::default(),
+    )
+    .unwrap();
+    let mut c = Client::connect(ingress.addr).unwrap();
+    for (x, want) in inputs.iter().zip(&truth) {
+        // legacy v1 frame: no class, no deadline — served with defaults
+        assert_eq!(&c.infer("synth", x).unwrap(), want, "v1 frame diverged");
+        // v2 frame: explicit class, generous deadline — same output
+        let got = c.infer_with("synth", x, QosClass::Interactive, Some(10_000)).unwrap();
+        assert_eq!(&got, want, "v2 interactive frame diverged");
+        let got = c.infer_with("synth", x, QosClass::Background, None).unwrap();
+        assert_eq!(&got, want, "v2 background frame diverged");
+    }
+    // a malformed v2 class byte is a clean error frame, not a hang
+    {
+        use std::io::{Read, Write};
+        let mut raw = std::net::TcpStream::connect(ingress.addr).unwrap();
+        raw.write_all(b"MFR2").unwrap();
+        raw.write_all(&[9u8]).unwrap(); // invalid class
+        raw.write_all(&0u32.to_le_bytes()).unwrap();
+        raw.write_all(&(5u16).to_le_bytes()).unwrap();
+        raw.write_all(b"synth").unwrap();
+        raw.write_all(&(ilen as u32).to_le_bytes()).unwrap();
+        raw.write_all(&vec![0u8; ilen]).unwrap();
+        raw.flush().unwrap();
+        let mut head = [0u8; 5];
+        raw.read_exact(&mut head).unwrap();
+        assert_eq!(&head[..4], b"MFRS");
+        assert_eq!(head[4], 1, "invalid class byte must be a status-1 error");
+        let mut len = [0u8; 4];
+        raw.read_exact(&mut len).unwrap();
+        let mut msg = vec![0u8; u32::from_le_bytes(len) as usize];
+        raw.read_exact(&mut msg).unwrap();
+        let msg = String::from_utf8_lossy(&msg);
+        assert!(msg.contains("class"), "{msg}");
+    }
+    // unknown model still errors cleanly on both frame generations
+    let err = c.infer("missing", &inputs[0]).unwrap_err().to_string();
+    assert!(err.contains("missing"), "{err}");
+    let err = c
+        .infer_with("missing", &inputs[0], QosClass::Bulk, None)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("missing"), "{err}");
+    drop(c);
+    ingress.shutdown();
+    // handler threads drop their router Arc on connection EOF; give them a
+    // bounded grace period before unwrapping
+    let mut router = router;
+    let mut unwrapped = None;
+    for _ in 0..500 {
+        match std::sync::Arc::try_unwrap(router) {
+            Ok(r) => {
+                unwrapped = Some(r);
+                break;
+            }
+            Err(r) => {
+                router = r;
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+        }
+    }
+    unwrapped.expect("router still referenced by a handler thread").shutdown();
 }
 
 #[test]

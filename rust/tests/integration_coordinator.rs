@@ -8,7 +8,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use microflow::api::{Engine, Session};
-use microflow::coordinator::{BatcherConfig, Router, Server, ServerConfig};
+use microflow::coordinator::{BatcherConfig, QosClass, Request, Router, Server, ServerConfig};
 use microflow::eval::accuracy::argmax;
 use microflow::format::mds::MdsDataset;
 
@@ -145,13 +145,13 @@ fn interp_backend_serves_equivalently() {
 fn shutdown_is_clean_with_queued_work() {
     let art = require_artifacts!();
     let server = native_server(&art, "sine", 2, 8);
-    let mut rxs = Vec::new();
+    let mut tickets = Vec::new();
     for q in 0..32i16 {
-        rxs.push(server.submit(vec![q as i8]).unwrap());
+        tickets.push(server.submit(Request::new(vec![q as i8])).unwrap());
     }
     // all replies must arrive before shutdown returns
-    for rx in rxs {
-        assert!(rx.recv().unwrap().is_ok());
+    for t in tickets {
+        assert!(t.wait().is_ok());
     }
     server.shutdown();
 }
@@ -188,6 +188,9 @@ fn tcp_ingress_serves_and_reports_errors() {
     let err = c.infer("missing", &[0]).unwrap_err().to_string();
     assert!(err.contains("missing"), "{err}");
     assert_eq!(c.infer("sine", &[5]).unwrap(), expected);
+    // the v2 frame serves the same bytes on a real model artifact
+    let got = c.infer_with("sine", &[5], QosClass::Interactive, Some(30_000)).unwrap();
+    assert_eq!(got, expected);
     drop(c); // close the connection so its handler thread exits
 
     ingress.shutdown();

@@ -18,15 +18,21 @@
 //!   engine is deterministic; a fleet reply comes from exactly one of
 //!   them, and native/interp stay within the generator's ±1 bound);
 //! * metrics counters **sum to the submitted request count** across pools
-//!   (nothing lost, nothing double-counted);
+//!   and across QoS classes (nothing lost, nothing double-counted);
+//! * the request lifecycle holds under a **mixed-class workload**:
+//!   Interactive requests are served only by Interactive-preferred pools
+//!   when one exists, expired-deadline requests are shed (counted, never
+//!   executed), and cancelled tickets never execute;
 //! * shutdown under load is **clean**: every accepted request is answered
 //!   even when shutdown races the queue drain.
 
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use microflow::api::{Engine, Session, SessionCache};
-use microflow::coordinator::{BatcherConfig, Fleet, PoolSpec, ServerConfig};
+use microflow::coordinator::{
+    BatcherConfig, Fleet, PoolSpec, QosClass, QosProfile, Request, ServerConfig,
+};
 use microflow::synth::random_fc_chain;
 use microflow::util::Prng;
 
@@ -41,7 +47,8 @@ fn seed() -> u64 {
 
 /// A mixed-engine fleet over `model`: native ×2 + interp ×2, small queues
 /// so backpressure is exercised, adaptive batching on (the PoolSpec
-/// default). Sessions build through a shared warm cache, as a real
+/// default), no declared QoS profiles (pure load balancing — the legacy
+/// dispatch). Sessions build through a shared warm cache, as a real
 /// deployment would.
 fn mixed_fleet(m: &microflow::format::mfb::MfbModel, queue_depth: usize) -> Fleet {
     let cache = Arc::new(SessionCache::new());
@@ -124,16 +131,219 @@ fn stress_mixed_fleet_replies_correctly_under_concurrency() {
     assert_eq!(snap.totals.completed, total, "seed {seed}: completed\n{snap}");
     assert_eq!(snap.totals.errors, 0, "seed {seed}: errors\n{snap}");
     // the per-pool counters are what summed: each pool must be consistent
-    for (name, s) in &snap.per_pool {
+    for p in &snap.per_pool {
         assert_eq!(
-            s.submitted, s.completed,
-            "seed {seed}: pool {name} lost requests\n{snap}"
+            p.metrics.submitted, p.metrics.completed,
+            "seed {seed}: pool {} lost requests\n{snap}",
+            p.name
         );
     }
     // least-outstanding dispatch under sustained load must use both pools
-    for (name, s) in &snap.per_pool {
-        assert!(s.completed > 0, "seed {seed}: pool {name} served nothing\n{snap}");
+    for p in &snap.per_pool {
+        assert!(p.metrics.completed > 0, "seed {seed}: pool {} served nothing\n{snap}", p.name);
     }
+    if let Ok(fleet) = Arc::try_unwrap(fleet) {
+        fleet.shutdown();
+    }
+}
+
+/// The request-lifecycle gate: a QoS-profiled fleet under a concurrent
+/// mixed-class workload with deadlines and cancellations.
+///
+/// Deterministic by construction, not by timing:
+/// * shed requests carry a deadline already expired at submit time, so
+///   whatever the scheduling, the batcher must drop them pre-execution;
+/// * cancelled requests are cancelled *before* submit (the cancel flag
+///   travels with the request), so no worker interleaving can execute
+///   them;
+/// * Interactive routing is strict when a preferred pool exists, so the
+///   interp pool must see zero Interactive submissions — and every
+///   Interactive reply must be bit-identical to the native single-session
+///   truth (the interp engine is only ±1-close, so a leak would also show
+///   up as a wrong payload).
+#[test]
+fn stress_mixed_class_workload_routes_sheds_and_cancels() {
+    let seed = seed() ^ 0xC1A5;
+    eprintln!("qos stress seed = {seed}");
+    let mut rng = Prng::new(seed);
+    let m = random_fc_chain(&mut rng, 2);
+    let mut native = Session::builder(&m).engine(Engine::MicroFlow).build().unwrap();
+    let mut interp = Session::builder(&m).engine(Engine::Interp).build().unwrap();
+    let ilen = native.input_len();
+    const DISTINCT: usize = 16;
+    let inputs: Vec<Vec<i8>> = (0..DISTINCT).map(|_| rng.i8_vec(ilen)).collect();
+    let truths: Vec<[Vec<i8>; 2]> = inputs
+        .iter()
+        .map(|x| [native.run(x).unwrap(), interp.run(x).unwrap()])
+        .collect();
+
+    let cache = Arc::new(SessionCache::new());
+    let config = ServerConfig {
+        queue_depth: 32,
+        batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) },
+        adaptive: true,
+    };
+    let pool = |engine: Engine, name: &str, profile: QosProfile| {
+        PoolSpec::new(
+            name,
+            (0..2)
+                .map(|i| {
+                    Session::builder(&m)
+                        .engine(engine)
+                        .label(format!("{name}/{i}"))
+                        .cache(&cache)
+                        .build()
+                        .unwrap()
+                })
+                .collect(),
+        )
+        .config(config)
+        .profile(profile)
+    };
+    let fleet = Arc::new(
+        Fleet::start(vec![
+            pool(Engine::MicroFlow, "native", QosProfile::Interactive),
+            pool(Engine::Interp, "interp", QosProfile::Bulk),
+        ])
+        .unwrap(),
+    );
+
+    const THREADS: usize = 6;
+    const PER_THREAD: usize = 40;
+    let inputs = Arc::new(inputs);
+    let truths = Arc::new(truths);
+    let mut handles = Vec::new();
+    for t in 0..THREADS {
+        let fleet = Arc::clone(&fleet);
+        let inputs = Arc::clone(&inputs);
+        let truths = Arc::clone(&truths);
+        handles.push(std::thread::spawn(move || {
+            let mut trng = Prng::new(seed ^ (t as u64).wrapping_mul(0x9E37_79B9));
+            // (interactive, bulk, shed, cancelled) this thread observed
+            let mut tally = (0u64, 0u64, 0u64, 0u64);
+            for r in 0..PER_THREAD {
+                let idx = trng.below(DISTINCT as u64) as usize;
+                let x = inputs[idx].clone();
+                let [nat, itp] = &truths[idx];
+                match r % 10 {
+                    // half the load is interactive: strict-routed to the
+                    // native pool, so replies are bit-exact native outputs
+                    0..=4 => {
+                        let got = fleet
+                            .submit(Request::interactive(x))
+                            .and_then(|tk| tk.wait())
+                            .unwrap_or_else(|e| panic!("seed {seed} thread {t} req {r}: {e:#}"));
+                        assert_eq!(
+                            &got, nat,
+                            "seed {seed} thread {t} req {r}: interactive reply must come \
+                             from the native pool (interp truth: {itp:?})"
+                        );
+                        tally.0 += 1;
+                    }
+                    // bulk + background: routed to the interp pool
+                    5..=7 => {
+                        let class =
+                            if r % 2 == 0 { QosClass::Bulk } else { QosClass::Background };
+                        let got = fleet
+                            .submit(Request::new(x).with_class(class))
+                            .and_then(|tk| tk.wait())
+                            .unwrap_or_else(|e| panic!("seed {seed} thread {t} req {r}: {e:#}"));
+                        assert_eq!(
+                            &got, itp,
+                            "seed {seed} thread {t} req {r}: bulk reply must come from \
+                             the interp pool"
+                        );
+                        tally.1 += 1;
+                    }
+                    // already-expired deadline: must be shed, never run
+                    8 => {
+                        let req = Request::new(x)
+                            .with_class(QosClass::Bulk)
+                            .with_deadline(Instant::now());
+                        let err = fleet
+                            .submit(req)
+                            .and_then(|tk| tk.wait())
+                            .expect_err("expired deadline must not produce a reply");
+                        assert!(
+                            err.to_string().contains("shed"),
+                            "seed {seed} thread {t} req {r}: {err:#}"
+                        );
+                        tally.2 += 1;
+                    }
+                    // cancelled before submit: must never execute
+                    _ => {
+                        let req = Request::interactive(x);
+                        req.cancel();
+                        let err = fleet
+                            .submit(req)
+                            .and_then(|tk| tk.wait())
+                            .expect_err("cancelled ticket must not produce a reply");
+                        assert!(
+                            err.to_string().contains("cancelled"),
+                            "seed {seed} thread {t} req {r}: {err:#}"
+                        );
+                        tally.3 += 1;
+                    }
+                }
+            }
+            tally
+        }));
+    }
+    let mut want = (0u64, 0u64, 0u64, 0u64);
+    for h in handles {
+        let t = h.join().unwrap();
+        want.0 += t.0;
+        want.1 += t.1;
+        want.2 += t.2;
+        want.3 += t.3;
+    }
+
+    let total = (THREADS * PER_THREAD) as u64;
+    let snap = fleet.snapshot();
+    // lifecycle accounting: nothing lost, nothing double-counted
+    assert_eq!(snap.totals.submitted, total, "seed {seed}\n{snap}");
+    assert_eq!(snap.totals.completed, want.0 + want.1, "seed {seed}\n{snap}");
+    assert_eq!(snap.totals.shed, want.2, "seed {seed}: shed must be counted\n{snap}");
+    assert_eq!(snap.totals.cancelled, want.3, "seed {seed}: cancelled must be counted\n{snap}");
+    assert_eq!(snap.totals.errors, 0, "seed {seed}\n{snap}");
+    assert_eq!(
+        snap.totals.completed + snap.totals.shed + snap.totals.cancelled,
+        total,
+        "seed {seed}: every request resolves exactly once\n{snap}"
+    );
+    // per-class lanes sum to the per-pool totals (and thus to the fleet's)
+    for p in &snap.per_pool {
+        let pm = &p.metrics;
+        for (lane_sum, flat, what) in [
+            (pm.per_class.iter().map(|c| c.submitted).sum::<u64>(), pm.submitted, "submitted"),
+            (pm.per_class.iter().map(|c| c.completed).sum::<u64>(), pm.completed, "completed"),
+            (pm.per_class.iter().map(|c| c.shed).sum::<u64>(), pm.shed, "shed"),
+            (pm.per_class.iter().map(|c| c.cancelled).sum::<u64>(), pm.cancelled, "cancelled"),
+        ] {
+            assert_eq!(lane_sum, flat, "seed {seed}: pool {} {what} lanes\n{snap}", p.name);
+        }
+    }
+    // strict class routing: with an Interactive-preferred pool present, the
+    // bulk pool never sees Interactive traffic (and vice versa)
+    let native = snap.pool("native").unwrap();
+    let interp = snap.pool("interp").unwrap();
+    assert_eq!(
+        interp.metrics.class(QosClass::Interactive).submitted,
+        0,
+        "seed {seed}: interactive leaked to the bulk pool\n{snap}"
+    );
+    assert_eq!(
+        native.metrics.class(QosClass::Bulk).submitted
+            + native.metrics.class(QosClass::Background).submitted,
+        0,
+        "seed {seed}: bulk/background leaked to the interactive pool\n{snap}"
+    );
+    // and the interactive lane did the interactive work
+    assert_eq!(
+        native.metrics.class(QosClass::Interactive).completed,
+        want.0,
+        "seed {seed}\n{snap}"
+    );
     if let Ok(fleet) = Arc::try_unwrap(fleet) {
         fleet.shutdown();
     }
@@ -153,14 +363,19 @@ fn stress_shutdown_under_load_answers_every_accepted_request() {
     let mut pending = Vec::new();
     for i in 0..96 {
         let x = rng.i8_vec(ilen);
-        pending.push((i, fleet.submit(x).unwrap_or_else(|e| panic!("seed {seed} req {i}: {e:#}"))));
+        let ticket = fleet
+            .submit(Request::new(x))
+            .unwrap_or_else(|e| panic!("seed {seed} req {i}: {e:#}"));
+        pending.push((i, ticket));
     }
     fleet.shutdown(); // drops the queues and joins workers — must drain first
-    for (i, rx) in pending {
-        let reply = rx
-            .recv()
-            .unwrap_or_else(|e| panic!("seed {seed} req {i}: reply dropped on shutdown: {e}"));
-        assert!(reply.is_ok(), "seed {seed} req {i}: {:#}", reply.unwrap_err());
+    for (i, ticket) in pending {
+        let reply = ticket.wait();
+        assert!(
+            reply.is_ok(),
+            "seed {seed} req {i}: dropped or failed on shutdown: {:#}",
+            reply.unwrap_err()
+        );
     }
 }
 
