@@ -19,9 +19,9 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
-use microflow::api::{Engine, Session, SessionCache};
+use microflow::api::{Engine, ReplicaFactory, Session, SessionCache};
 use microflow::coordinator::{
-    Fleet, PoolSpec, QosClass, QosProfile, Request, Server, ServerConfig, Ticket,
+    AutoscalePolicy, Fleet, PoolSpec, QosClass, QosProfile, Request, Server, ServerConfig, Ticket,
 };
 use microflow::eval::accuracy::argmax;
 use microflow::format::mds::MdsDataset;
@@ -180,6 +180,95 @@ fn main() -> Result<()> {
     // fleet to the same absolute quality bar, not exact parity with the
     // all-native run
     anyhow::ensure!(acc_fleet > 0.80, "fleet serving accuracy collapsed: {acc_fleet}");
+
+    // --- backend 4: an elastic native pool under the SLO-driven
+    //     autoscaler. The pool starts at one replica; a burst (every
+    //     request carrying a tight deadline) breaches the SLO and the
+    //     controller grows the pool through the warm cache (no recompile);
+    //     the idle phase after the burst shrinks it back to the floor via
+    //     graceful drain. Replica trajectory is printed per tick.
+    println!();
+    let factory = Arc::new(
+        ReplicaFactory::new(&mfb_path, Engine::MicroFlow)
+            .cache(&cache)
+            .label_prefix("elastic"),
+    );
+    let policy = AutoscalePolicy::new(1, 3)
+        .slo_p95(Duration::from_millis(20))
+        .idle_ticks_down(2)
+        .cooldown_ticks(1);
+    let elastic = Fleet::start(vec![PoolSpec::new("elastic", vec![factory.provision()?])
+        .config(fleet_cfg)
+        .autoscale(policy, Arc::clone(&factory))])?;
+    let qp = elastic.input_qparams();
+    let mut trajectory = vec![elastic.snapshot().per_pool[0].live_replicas()];
+    let mut elastic_pending = Vec::new();
+    // bursty phase: chunks of back-to-back submits with a control tick
+    // after each chunk. Two probe requests per chunk carry an
+    // already-expired deadline — guaranteed sheds, so the burst breaches
+    // the SLO deterministically on any machine (the p95 rule additionally
+    // fires wherever one replica really is too slow for the burst).
+    for chunk in 0..8 {
+        for i in 0..25 {
+            let idx = (chunk * 25 + i) % ds.n;
+            let q = qp.quantize_slice(ds.sample(idx));
+            let req = Request::interactive(q).with_deadline_in(Duration::from_millis(250));
+            elastic_pending.push((idx, elastic.submit(req)?));
+        }
+        for _ in 0..2 {
+            let q = qp.quantize_slice(ds.sample(chunk % ds.n));
+            let probe = Request::interactive(q).with_deadline(Instant::now());
+            elastic_pending.push((chunk % ds.n, elastic.submit(probe)?));
+        }
+        for r in elastic.tick() {
+            trajectory.push(r.live_replicas);
+            if r.acted() {
+                println!("[autoscale] {r}");
+            }
+        }
+    }
+    let mut hits = 0usize;
+    let mut late_or_shed = 0usize;
+    let total = elastic_pending.len();
+    for (idx, ticket) in elastic_pending {
+        match ticket.wait() {
+            Ok(out) => {
+                if argmax(&out) as i32 == ds.class(idx) {
+                    hits += 1;
+                }
+            }
+            // a shed request is an SLO casualty, not a lost request: its
+            // ticket resolves with an explicit error
+            Err(e) if format!("{e:#}").contains("shed") => late_or_shed += 1,
+            Err(e) => return Err(e),
+        }
+    }
+    // idle phase: drain done, ticks walk the pool back to the floor
+    for _ in 0..10 {
+        for r in elastic.tick() {
+            trajectory.push(r.live_replicas);
+            if r.acted() {
+                println!("[autoscale] {r}");
+            }
+        }
+    }
+    let snap = elastic.snapshot();
+    println!(
+        "[elastic] replica trajectory {trajectory:?} | {hits}/{total} correct, {late_or_shed} shed\n{snap}"
+    );
+    let peak = *trajectory.iter().max().unwrap();
+    anyhow::ensure!(peak > 1, "the burst never scaled the pool up: {trajectory:?}");
+    anyhow::ensure!(
+        trajectory.last() == Some(&1),
+        "the idle phase never shrank the pool back: {trajectory:?}"
+    );
+    let resolved =
+        snap.totals.completed + snap.totals.shed + snap.totals.cancelled;
+    anyhow::ensure!(
+        resolved == snap.totals.submitted && snap.totals.errors == 0,
+        "elastic pool lost requests: {snap}"
+    );
+    elastic.shutdown();
 
     anyhow::ensure!(acc_native > 0.80, "serving accuracy collapsed: {acc_native}");
     println!("\nserve_keywords OK: all layers compose (engine == AOT graph, accuracy {:.1}%)", acc_native * 100.0);

@@ -22,11 +22,11 @@
 //! volume for CI smoke runs.
 
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-use microflow::api::{Engine, Session, SessionCache};
+use microflow::api::{Engine, ReplicaFactory, Session, SessionCache};
 use microflow::bench_support::smoke_mode;
-use microflow::coordinator::{Fleet, PoolSpec, QosClass, QosProfile, Request};
+use microflow::coordinator::{AutoscalePolicy, Fleet, PoolSpec, QosClass, QosProfile, Request};
 use microflow::format::mfb::MfbModel;
 use microflow::sim::report::{emit, emit_json, Table};
 use microflow::synth;
@@ -218,13 +218,112 @@ fn main() {
 
     emit("fleet_throughput", &t);
 
+    // SLO-driven autoscaling under a bursty, phase-shifting workload: the
+    // pool starts at one replica; each burst phase drives the closed loop
+    // (half interactive) and ticks the controller, whose aggressive 1µs
+    // interactive-p95 target makes any served burst a breach — so the
+    // trajectory shows the ramp; each idle phase ticks with no traffic
+    // until graceful drain walks the pool back to the floor. Rows record
+    // req/s and the replica count each drive ran with.
+    let cache = Arc::new(SessionCache::new());
+    let factory = Arc::new(
+        ReplicaFactory::new(&m, Engine::MicroFlow).cache(&cache).label_prefix("native"),
+    );
+    let policy = AutoscalePolicy::new(1, 4)
+        .slo_p95(Duration::from_micros(1))
+        .idle_ticks_down(2)
+        .cooldown_ticks(0);
+    let fleet = Arc::new(
+        Fleet::start(vec![PoolSpec::new("native", vec![factory.provision().unwrap()])
+            .autoscale(policy, Arc::clone(&factory))])
+        .unwrap(),
+    );
+    let mut t2 = Table::new(
+        "autoscale: bursty phase-shifting workload (native 1..4 replicas)",
+        &["phase", "replicas", "req/s", "after tick"],
+    );
+    let mut phases: Vec<Json> = Vec::new();
+    let mut trajectory: Vec<usize> = vec![fleet.snapshot().per_pool[0].live_replicas()];
+    let mut submitted_total = 0u64;
+    for burst in ["burst-a", "burst-b"] {
+        // two drives per burst: the second runs on whatever the breach tick
+        // provisioned, so the row pair shows the scale-up paying off
+        for sub in ["cold", "scaled"] {
+            let replicas = fleet.snapshot().per_pool[0].live_replicas();
+            let rps = drive(&fleet, &input, true);
+            submitted_total += (CLIENT_THREADS * requests_per_thread()) as u64;
+            let after = fleet.tick()[0].live_replicas;
+            trajectory.push(after);
+            t2.row(vec![
+                format!("{burst}/{sub}"),
+                replicas.to_string(),
+                format!("{rps:.0}"),
+                format!("x{after}"),
+            ]);
+            phases.push(
+                Json::obj()
+                    .set("phase", format!("{burst}/{sub}"))
+                    .set("replicas", replicas)
+                    .set("req_per_s", rps)
+                    .set("replicas_after_tick", after),
+            );
+        }
+        // idle phase: no traffic, tick until the pool is back at the floor
+        let mut idle_ticks = 0usize;
+        loop {
+            let live = fleet.tick()[0].live_replicas;
+            trajectory.push(live);
+            idle_ticks += 1;
+            if live == 1 || idle_ticks > 20 {
+                break;
+            }
+        }
+        t2.row(vec![
+            format!("{burst}/idle"),
+            "1".into(),
+            "0".into(),
+            format!("{idle_ticks} ticks to floor"),
+        ]);
+        phases.push(
+            Json::obj()
+                .set("phase", format!("{burst}/idle"))
+                .set("replicas", 1usize)
+                .set("req_per_s", 0.0)
+                .set("idle_ticks_to_floor", idle_ticks),
+        );
+    }
+    let snap = fleet.snapshot();
+    let peak = *trajectory.iter().max().unwrap();
+    assert!(peak > 1, "the bursts never scaled the pool up: {trajectory:?}");
+    assert_eq!(
+        *trajectory.last().unwrap(),
+        1,
+        "idle phases never drained back to the floor: {trajectory:?}"
+    );
+    assert_eq!(
+        snap.totals.completed + snap.totals.shed + snap.totals.cancelled,
+        submitted_total,
+        "autoscaled pool lost requests: {snap}"
+    );
+    println!("  replica trajectory: {trajectory:?}");
+    if let Ok(fleet) = Arc::try_unwrap(fleet) {
+        fleet.shutdown();
+    }
+    emit("fleet_throughput_autoscale", &t2);
+
     // machine-readable artifact at the repo root: the cross-PR trail
     let doc = Json::obj()
         .set("bench", "fleet_throughput")
         .set("client_threads", CLIENT_THREADS)
         .set("requests_per_thread", requests_per_thread())
         .set("smoke", smoke_mode())
-        .set("fleets", rows);
+        .set("fleets", rows)
+        .set("autoscale_peak_replicas", peak)
+        .set(
+            "autoscale_trajectory",
+            trajectory.iter().map(|&r| Json::Int(r as i64)).collect::<Vec<Json>>(),
+        )
+        .set("autoscale_phases", phases);
     emit_json(if smoke_mode() { "BENCH_fleet.smoke" } else { "BENCH_fleet" }, &doc);
     println!("fleet_throughput OK");
 }

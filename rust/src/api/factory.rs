@@ -1,0 +1,180 @@
+//! Warm replica provisioning — the autoscaler's session supply.
+//!
+//! Scaling a pool up at runtime means building a new [`Session`] while
+//! traffic is flowing; doing the full compile again per replica would
+//! make scale-up latency proportional to model size. A [`ReplicaFactory`]
+//! freezes one replica recipe (model source, engine, paging, preferred
+//! batch) and provisions every new session through a shared
+//! [`SessionCache`], so:
+//!
+//! * **native** replicas clone the shared `Arc<CompiledModel>` — scale-up
+//!   costs no recompile, just plan-sized buffer allocation;
+//! * **interpreter** replicas share the container bytes and pay only the
+//!   runtime parse (that parse *is* the TFLM cost being modeled);
+//! * **PJRT** sessions are built uncached, as everywhere else (their XLA
+//!   state must stay single-owner).
+//!
+//! The factory is `Send + Sync`: the fleet tick loop holds it behind an
+//! `Arc` and provisions from whatever thread drives the controller.
+//! Provisioned sessions are labeled `prefix/N` with a monotonically
+//! increasing N, so replica names stay unique across scale-up/down
+//! cycles (a retired replica's index is never reused).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::{Engine, ModelSource, Session, SessionCache};
+
+/// A frozen recipe for building interchangeable session replicas.
+pub struct ReplicaFactory {
+    source: ModelSource,
+    engine: Engine,
+    paging: bool,
+    preferred_batch: Option<usize>,
+    label_prefix: String,
+    cache: Arc<SessionCache>,
+    provisioned: AtomicUsize,
+}
+
+impl ReplicaFactory {
+    /// A factory over `source` + `engine` with its own fresh warm cache
+    /// and the engine name as the label prefix.
+    pub fn new(source: impl Into<ModelSource>, engine: Engine) -> ReplicaFactory {
+        ReplicaFactory {
+            source: source.into(),
+            engine,
+            paging: false,
+            preferred_batch: None,
+            label_prefix: engine.name().to_string(),
+            cache: Arc::new(SessionCache::new()),
+            provisioned: AtomicUsize::new(0),
+        }
+    }
+
+    /// Share a deployment-wide warm cache instead of the factory's own
+    /// (so initial pool builds and later scale-ups hit the same plans).
+    pub fn cache(mut self, cache: &Arc<SessionCache>) -> ReplicaFactory {
+        self.cache = Arc::clone(cache);
+        self
+    }
+
+    /// Native-engine paged execution (see [`super::SessionBuilder::paging`]).
+    pub fn paging(mut self, paging: bool) -> ReplicaFactory {
+        self.paging = paging;
+        self
+    }
+
+    /// Batch-size hint for provisioned sessions.
+    pub fn preferred_batch(mut self, n: usize) -> ReplicaFactory {
+        self.preferred_batch = Some(n.max(1));
+        self
+    }
+
+    /// Label prefix for provisioned sessions (`prefix/N`).
+    pub fn label_prefix(mut self, prefix: impl Into<String>) -> ReplicaFactory {
+        self.label_prefix = prefix.into();
+        self
+    }
+
+    /// Build one more replica session through the warm cache.
+    pub fn provision(&self) -> Result<Session> {
+        let n = self.provisioned.fetch_add(1, Ordering::Relaxed);
+        let mut b = Session::builder(self.source.clone())
+            .engine(self.engine)
+            .paging(self.paging)
+            .cache(&self.cache)
+            .label(format!("{}/{n}", self.label_prefix));
+        if let Some(pb) = self.preferred_batch {
+            b = b.preferred_batch(pb);
+        }
+        b.build()
+    }
+
+    /// Provision `n` replicas at once (the initial pool build).
+    pub fn provision_n(&self, n: usize) -> Result<Vec<Session>> {
+        (0..n).map(|_| self.provision()).collect()
+    }
+
+    /// Sessions provisioned so far (including failed builds' reserved
+    /// label indices).
+    pub fn provisioned(&self) -> usize {
+        self.provisioned.load(Ordering::Relaxed)
+    }
+
+    /// The warm cache behind this factory (hit/miss introspection).
+    pub fn warm_cache(&self) -> &Arc<SessionCache> {
+        &self.cache
+    }
+
+    pub fn engine(&self) -> Engine {
+        self.engine
+    }
+}
+
+impl std::fmt::Debug for ReplicaFactory {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ReplicaFactory")
+            .field("engine", &self.engine)
+            .field("paging", &self.paging)
+            .field("label_prefix", &self.label_prefix)
+            .field("provisioned", &self.provisioned())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::format::mfb::tests::tiny_mfb;
+
+    #[test]
+    fn provisions_working_uniquely_labeled_replicas() {
+        let f = ReplicaFactory::new(tiny_mfb(), Engine::MicroFlow).label_prefix("pool-a");
+        let mut a = f.provision().unwrap();
+        let mut b = f.provision().unwrap();
+        assert_eq!(a.label(), "pool-a/0");
+        assert_eq!(b.label(), "pool-a/1");
+        assert_eq!(f.provisioned(), 2);
+        assert_eq!(a.run(&[3, 1]).unwrap(), vec![2, 0, 5]);
+        assert_eq!(b.run(&[3, 1]).unwrap(), vec![2, 0, 5]);
+    }
+
+    #[test]
+    fn native_scale_up_costs_no_recompile() {
+        let f = ReplicaFactory::new(tiny_mfb(), Engine::MicroFlow);
+        let _first = f.provision().unwrap();
+        // the first build warms the cache: bytes miss + compile miss
+        assert_eq!(f.warm_cache().misses(), 2);
+        let _scaled: Vec<Session> = f.provision_n(3).unwrap();
+        // every later replica is pure cache hits (bytes + plan each)
+        assert_eq!(f.warm_cache().misses(), 2, "scale-up recompiled");
+        assert_eq!(f.warm_cache().hits(), 6);
+    }
+
+    #[test]
+    fn shares_a_deployment_cache() {
+        let cache = Arc::new(SessionCache::new());
+        let _initial =
+            Session::builder(tiny_mfb()).engine(Engine::MicroFlow).cache(&cache).build().unwrap();
+        let f = ReplicaFactory::new(tiny_mfb(), Engine::MicroFlow).cache(&cache);
+        let _scaled = f.provision().unwrap();
+        // the factory's build reuses the deployment's warm plan
+        assert_eq!(cache.misses(), 2);
+        assert_eq!(cache.hits(), 2);
+    }
+
+    #[test]
+    fn provision_failure_is_an_error_not_a_panic() {
+        let f = ReplicaFactory::new(vec![0u8, 1, 2, 3], Engine::MicroFlow);
+        assert!(f.provision().is_err());
+    }
+
+    #[test]
+    fn preferred_batch_and_paging_flow_through() {
+        let f = ReplicaFactory::new(tiny_mfb(), Engine::MicroFlow).paging(true).preferred_batch(16);
+        let s = f.provision().unwrap();
+        assert_eq!(s.preferred_batch(), 16);
+    }
+}

@@ -34,16 +34,21 @@
 //!   implement: allocation-free `run_into` / `run_batch_into` on the hot
 //!   path, with allocating conveniences layered on top;
 //! * [`Session`] — a boxed, engine-erased session; what the coordinator's
-//!   worker pool, the CLI and the benches all hold.
+//!   worker pool, the CLI and the benches all hold;
+//! * [`ReplicaFactory`] — a frozen replica recipe (source + engine +
+//!   options + warm [`SessionCache`]) the elastic serving tier provisions
+//!   scale-up sessions from without recompiling.
 //!
 //! The low-level constructors remain available for engine-internal work
 //! (compilation introspection, the sim memory model), but every serving
 //! path in the crate goes through this module.
 
 mod cache;
+mod factory;
 mod sessions;
 
 pub use cache::{content_hash64, SessionCache};
+pub use factory::ReplicaFactory;
 pub use sessions::{InterpSession, NativeSession, PjrtSession};
 
 use std::path::{Path, PathBuf};

@@ -95,6 +95,28 @@ pub fn parse_engine_mix(s: &str) -> Result<Vec<(Engine, usize)>> {
     Ok(mix)
 }
 
+/// Parse an `--autoscale` value: `min:max` replica bounds per pool, e.g.
+/// `1:4`. A bare number pins both bounds (`3` == `3:3`).
+pub fn parse_autoscale(s: &str) -> Result<(usize, usize)> {
+    let (min, max) = match s.split_once(':') {
+        Some((lo, hi)) => (
+            lo.parse::<usize>().with_context(|| format!("bad min {lo:?} in --autoscale {s:?}"))?,
+            hi.parse::<usize>().with_context(|| format!("bad max {hi:?} in --autoscale {s:?}"))?,
+        ),
+        None => {
+            let n = s.parse::<usize>().with_context(|| format!("bad --autoscale {s:?}"))?;
+            (n, n)
+        }
+    };
+    if min == 0 {
+        bail!("--autoscale min must be at least 1 (a pool always keeps one live replica)");
+    }
+    if max < min {
+        bail!("--autoscale max {max} is below min {min}");
+    }
+    Ok((min, max))
+}
+
 pub const USAGE: &str = "\
 microflow — MicroFlow (Carnelos et al., 2024) reproduction CLI
 
@@ -111,7 +133,8 @@ USAGE:
   microflow serve   <model> [--requests N] [--rate RPS] [--backend E]
                     [--replicas R] [--engine-mix MIX] [--batch B]
                     [--no-adaptive] [--paging] [--default-class C]
-                    [--shed-after-ms MS]
+                    [--shed-after-ms MS] [--autoscale MIN:MAX]
+                    [--slo-p95-ms MS] [--tick-ms MS]
                                            serve synthetic load, print metrics
 
 serve options (request lifecycle):
@@ -139,9 +162,23 @@ serve options (request lifecycle):
                     (pjrt pools need a `--features pjrt` build)
   --batch B         dynamic batcher target batch size (default 8)
   --no-adaptive     disable per-replica batcher tuning from observed queue depth
+  --autoscale MIN:MAX  make every pool elastic: an SLO-driven controller
+                    grows a pool (through the warm session cache — native
+                    scale-up costs no recompile) when a tick window shows
+                    shed or deadline-missed requests, or an interactive
+                    windowed p95 over --slo-p95-ms; it retires one replica
+                    after a sustained idle window via graceful drain
+                    (in-flight and queued requests always finish). Bounds
+                    are per pool; every decision is printed and shown in
+                    the final snapshot.
+  --slo-p95-ms MS   interactive p95 target per tick window (only with
+                    --autoscale; without it, scaling reacts to shed/missed
+                    counts alone)
+  --tick-ms MS      autoscaler control-loop cadence (default 100)
   Replica sessions build through the warm session cache: repeated builds of
   the same model reuse one compiled plan (reported at startup). Metrics are
-  reported per pool and per class (p50/p95/p99, shed/cancelled/late).
+  reported per pool and per class (p50/p95/p99, shed/cancelled/late);
+  long-running status lines use windowed rates, not lifetime counters.
 
   microflow help                           this text
 
@@ -195,5 +232,22 @@ mod tests {
         assert!(parse_engine_mix("microflow:0").is_err());
         assert!(parse_engine_mix("warp-drive:1").is_err());
         assert!(parse_engine_mix("microflow:1,,tflm:1").is_err());
+    }
+
+    #[test]
+    fn autoscale_parses_bounds() {
+        assert_eq!(parse_autoscale("1:4").unwrap(), (1, 4));
+        assert_eq!(parse_autoscale("2:2").unwrap(), (2, 2));
+        // a bare number pins both bounds
+        assert_eq!(parse_autoscale("3").unwrap(), (3, 3));
+    }
+
+    #[test]
+    fn autoscale_rejects_malformed_bounds() {
+        assert!(parse_autoscale("").is_err());
+        assert!(parse_autoscale("0:4").is_err(), "min 0 would retire the last replica");
+        assert!(parse_autoscale("4:1").is_err(), "max below min");
+        assert!(parse_autoscale("a:b").is_err());
+        assert!(parse_autoscale("1:2:3").is_err());
     }
 }

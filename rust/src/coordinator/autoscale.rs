@@ -1,0 +1,488 @@
+//! SLO-driven autoscaler — the control plane over the elastic serving
+//! tier.
+//!
+//! TFLM's static-arena philosophy (David et al., 2020) fixes capacity
+//! once at startup; under variable load that is either waste (idle
+//! replicas burning memory and threads) or an SLO breach (too few
+//! replicas when a burst lands). This module closes the loop the ROADMAP
+//! left open: the per-class `shed` / `deadline_missed` counters and
+//! latency quantiles landed in PR 4 are exactly the SLO signal to scale
+//! on, and PR 5's elastic [`Server`](super::server::Server) gives the
+//! actuator (`add_replica` / `remove_replica`).
+//!
+//! ## Design: a pure, tick-driven policy
+//!
+//! The controller is **deterministic by construction**. All state lives
+//! in [`PolicyState`]; one [`PolicyState::step`] call consumes one
+//! [`TickSignals`] observation (windowed *deltas*, from
+//! [`Metrics::window`](super::metrics::Metrics::window), never lifetime
+//! totals) and returns one [`Decision`]. Time is counted in **ticks**,
+//! not wall-clock: cooldowns and idle windows are `N consecutive step()
+//! calls`, so every policy transition is unit-testable without threads,
+//! clocks or sleeps. The driving cadence is the caller's choice —
+//! [`Fleet::tick`](super::fleet::Fleet::tick) is the production driver.
+//!
+//! ## The rules (all thresholds explicit in [`AutoscalePolicy`])
+//!
+//! * **raise to the floor**: a pool observed below `min_replicas` (it
+//!   started smaller than the floor — nothing validates the initial
+//!   size against the policy) is brought up to `min_replicas`
+//!   regardless of load ([`ScaleReason::BelowMin`]);
+//! * **scale up** when the window shows an SLO breach — more than
+//!   `breach_tolerance` shed + deadline-missed requests, or an
+//!   Interactive window p95 above `slo_p95` — by `scale_up_step`
+//!   replicas, clamped to `max_replicas`;
+//! * **scale down** by one replica after `idle_ticks_down` consecutive
+//!   idle ticks (no submissions in the window and nothing outstanding),
+//!   clamped to `min_replicas`;
+//! * **cooldown**: after any scale action, `cooldown_ticks` ticks must
+//!   pass before the next action — breaches during cooldown are
+//!   suppressed (reported as [`ScaleReason::Cooldown`]) so one burst
+//!   cannot staircase the pool to `max` before the new replicas have had
+//!   a window to absorb load. Idle ticks still accumulate during
+//!   cooldown, so a pool that went quiet right after a scale-up is not
+//!   penalized with an extra full idle window.
+//!
+//! The drain side of scale-down (why removing a replica can never drop an
+//! accepted request) is specified in the
+//! [`server`](super::server#elasticity-and-the-drain-protocol) module
+//! docs.
+
+use std::time::Duration;
+
+use super::metrics::WindowSnapshot;
+use super::request::QosClass;
+
+/// Per-pool autoscaling thresholds. Every knob is explicit; no wall-clock
+/// randomness anywhere — windows and cooldowns are measured in ticks.
+#[derive(Clone, Copy, Debug)]
+pub struct AutoscalePolicy {
+    /// Never retire below this many live replicas (≥ 1).
+    pub min_replicas: usize,
+    /// Never provision above this many live replicas.
+    pub max_replicas: usize,
+    /// Interactive-class windowed p95 target; a window whose p95 exceeds
+    /// it is an SLO breach. `None` scales on shed/missed counts only.
+    pub slo_p95: Option<Duration>,
+    /// Shed + deadline-missed requests tolerated per window before the
+    /// window counts as a breach (default 0: any shed/miss is a breach).
+    pub breach_tolerance: u64,
+    /// Replicas added per scale-up action (clamped to `max_replicas`).
+    pub scale_up_step: usize,
+    /// Consecutive idle ticks before one replica is retired.
+    pub idle_ticks_down: u32,
+    /// Ticks after any scale action during which further actions are
+    /// suppressed.
+    pub cooldown_ticks: u32,
+}
+
+impl AutoscalePolicy {
+    /// A policy scaling between `min` and `max` replicas with the default
+    /// thresholds (breach on any shed/miss, no p95 target, +1 per action,
+    /// 3 idle ticks to shrink, 2 cooldown ticks).
+    pub fn new(min: usize, max: usize) -> AutoscalePolicy {
+        AutoscalePolicy {
+            min_replicas: min.max(1),
+            max_replicas: max.max(min.max(1)),
+            slo_p95: None,
+            breach_tolerance: 0,
+            scale_up_step: 1,
+            idle_ticks_down: 3,
+            cooldown_ticks: 2,
+        }
+    }
+
+    /// Set the Interactive windowed-p95 SLO target.
+    pub fn slo_p95(mut self, target: Duration) -> AutoscalePolicy {
+        self.slo_p95 = Some(target);
+        self
+    }
+
+    pub fn breach_tolerance(mut self, n: u64) -> AutoscalePolicy {
+        self.breach_tolerance = n;
+        self
+    }
+
+    pub fn scale_up_step(mut self, n: usize) -> AutoscalePolicy {
+        self.scale_up_step = n.max(1);
+        self
+    }
+
+    pub fn idle_ticks_down(mut self, n: u32) -> AutoscalePolicy {
+        self.idle_ticks_down = n;
+        self
+    }
+
+    pub fn cooldown_ticks(mut self, n: u32) -> AutoscalePolicy {
+        self.cooldown_ticks = n;
+        self
+    }
+}
+
+impl Default for AutoscalePolicy {
+    fn default() -> Self {
+        AutoscalePolicy::new(1, 4)
+    }
+}
+
+/// One tick's observation of a pool — windowed deltas plus the pool's
+/// instantaneous state.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TickSignals {
+    /// Committed live replicas (running minus mid-drain retirements).
+    pub live_replicas: usize,
+    /// Requests accepted during the window (all classes).
+    pub submitted: u64,
+    /// Expired-deadline requests shed during the window.
+    pub shed: u64,
+    /// Requests delivered past their deadline during the window.
+    pub deadline_missed: u64,
+    /// Requests queued or in flight right now.
+    pub outstanding: u64,
+    /// Interactive-class p95 over the window, µs (0 when no samples).
+    pub interactive_p95_us: f64,
+}
+
+impl TickSignals {
+    /// Assemble the signals from a consumed metrics window plus the
+    /// pool's instantaneous counters.
+    pub fn observe(window: &WindowSnapshot, outstanding: u64, live_replicas: usize) -> TickSignals {
+        TickSignals {
+            live_replicas,
+            submitted: window.submitted(),
+            shed: window.shed(),
+            deadline_missed: window.deadline_missed(),
+            outstanding,
+            interactive_p95_us: window.class(QosClass::Interactive).p95_us,
+        }
+    }
+}
+
+/// What the policy decided to do this tick.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScaleAction {
+    /// Provision `n` more replicas.
+    Up(usize),
+    /// Retire `n` replicas.
+    Down(usize),
+    /// No change.
+    Hold,
+}
+
+/// Why the policy decided it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScaleReason {
+    /// The pool is running below `min_replicas` (e.g. started smaller
+    /// than the floor): raised to the floor regardless of load.
+    BelowMin,
+    /// The window breached the SLO (shed/missed over tolerance, or
+    /// Interactive p95 over target).
+    SloBreach,
+    /// `idle_ticks_down` consecutive idle windows passed.
+    SustainedIdle,
+    /// An action was wanted but suppressed by the post-action cooldown.
+    Cooldown,
+    /// Breach with the pool already at `max_replicas`.
+    AtMax,
+    /// Sustained idle with the pool already at `min_replicas`.
+    AtMin,
+    /// Nothing to do: the pool is healthy and not idle long enough.
+    Steady,
+    /// The applying layer could not provision a replica (build error) —
+    /// recorded by [`Fleet::tick`](super::fleet::Fleet::tick), never
+    /// produced by the pure policy.
+    ProvisionFailed,
+}
+
+impl ScaleReason {
+    /// Stable lowercase name (logs, snapshots, JSON).
+    pub fn name(self) -> &'static str {
+        match self {
+            ScaleReason::BelowMin => "below-min",
+            ScaleReason::SloBreach => "slo-breach",
+            ScaleReason::SustainedIdle => "sustained-idle",
+            ScaleReason::Cooldown => "cooldown",
+            ScaleReason::AtMax => "at-max",
+            ScaleReason::AtMin => "at-min",
+            ScaleReason::Steady => "steady",
+            ScaleReason::ProvisionFailed => "provision-failed",
+        }
+    }
+}
+
+/// One tick's decision: the action plus the rule that fired.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Decision {
+    pub action: ScaleAction,
+    pub reason: ScaleReason,
+}
+
+impl Decision {
+    fn hold(reason: ScaleReason) -> Decision {
+        Decision { action: ScaleAction::Hold, reason }
+    }
+}
+
+impl std::fmt::Display for Decision {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self.action {
+            ScaleAction::Up(n) => write!(f, "up+{n} ({})", self.reason.name()),
+            ScaleAction::Down(n) => write!(f, "down-{n} ({})", self.reason.name()),
+            ScaleAction::Hold => write!(f, "hold ({})", self.reason.name()),
+        }
+    }
+}
+
+/// The controller's entire mutable state — two counters. Everything else
+/// is derived from the per-tick signals, which is what keeps every
+/// transition unit-testable.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PolicyState {
+    idle_streak: u32,
+    cooldown: u32,
+}
+
+impl PolicyState {
+    /// Consume one observation, emit one decision. Pure with respect to
+    /// everything but `self`.
+    pub fn step(&mut self, policy: &AutoscalePolicy, s: &TickSignals) -> Decision {
+        let breach = s.shed + s.deadline_missed > policy.breach_tolerance
+            || policy.slo_p95.is_some_and(|t| {
+                s.interactive_p95_us > 0.0 && s.interactive_p95_us > t.as_micros() as f64
+            });
+        // idle = a healthy window with no new work and nothing in flight
+        let idle = !breach && s.submitted == 0 && s.outstanding == 0;
+        if idle {
+            self.idle_streak = self.idle_streak.saturating_add(1);
+        } else {
+            self.idle_streak = 0;
+        }
+        if self.cooldown > 0 {
+            self.cooldown -= 1;
+            return Decision::hold(ScaleReason::Cooldown);
+        }
+        // a pool below its floor (started smaller than min, or min was
+        // raised) is brought up to it regardless of load
+        if s.live_replicas < policy.min_replicas {
+            self.cooldown = policy.cooldown_ticks;
+            return Decision {
+                action: ScaleAction::Up(policy.min_replicas - s.live_replicas),
+                reason: ScaleReason::BelowMin,
+            };
+        }
+        if breach {
+            if s.live_replicas >= policy.max_replicas {
+                return Decision::hold(ScaleReason::AtMax);
+            }
+            let add = policy.scale_up_step.min(policy.max_replicas - s.live_replicas);
+            self.cooldown = policy.cooldown_ticks;
+            return Decision { action: ScaleAction::Up(add), reason: ScaleReason::SloBreach };
+        }
+        if idle && self.idle_streak >= policy.idle_ticks_down {
+            if s.live_replicas <= policy.min_replicas {
+                return Decision::hold(ScaleReason::AtMin);
+            }
+            self.cooldown = policy.cooldown_ticks;
+            self.idle_streak = 0;
+            return Decision { action: ScaleAction::Down(1), reason: ScaleReason::SustainedIdle };
+        }
+        Decision::hold(ScaleReason::Steady)
+    }
+}
+
+/// A pool's autoscaler as reported in a
+/// [`FleetSnapshot`](super::fleet::FleetSnapshot): the configured bounds,
+/// how many control ticks have run, and the last decision applied.
+#[derive(Clone, Copy, Debug)]
+pub struct AutoscaleStatus {
+    pub min_replicas: usize,
+    pub max_replicas: usize,
+    /// Control ticks evaluated so far.
+    pub ticks: u64,
+    /// The decision applied on the most recent tick (`None` before the
+    /// first tick).
+    pub last: Option<Decision>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quiet(live: usize) -> TickSignals {
+        TickSignals { live_replicas: live, ..TickSignals::default() }
+    }
+
+    fn busy(live: usize) -> TickSignals {
+        TickSignals { live_replicas: live, submitted: 10, ..TickSignals::default() }
+    }
+
+    fn shedding(live: usize, shed: u64) -> TickSignals {
+        TickSignals { live_replicas: live, submitted: 10, shed, ..TickSignals::default() }
+    }
+
+    #[test]
+    fn breach_scales_up() {
+        let p = AutoscalePolicy::new(1, 4);
+        let mut st = PolicyState::default();
+        let d = st.step(&p, &shedding(1, 3));
+        assert_eq!(d, Decision { action: ScaleAction::Up(1), reason: ScaleReason::SloBreach });
+    }
+
+    #[test]
+    fn deadline_misses_also_breach() {
+        let p = AutoscalePolicy::new(1, 4);
+        let mut st = PolicyState::default();
+        let s = TickSignals {
+            live_replicas: 1,
+            submitted: 5,
+            deadline_missed: 1,
+            ..TickSignals::default()
+        };
+        assert_eq!(st.step(&p, &s).action, ScaleAction::Up(1));
+    }
+
+    #[test]
+    fn p95_over_target_breaches_only_when_set() {
+        let hot = TickSignals {
+            live_replicas: 1,
+            submitted: 10,
+            interactive_p95_us: 9_000.0,
+            ..TickSignals::default()
+        };
+        // no p95 target: a slow-but-unshed window is merely Steady
+        let mut st = PolicyState::default();
+        let d = st.step(&AutoscalePolicy::new(1, 4), &hot);
+        assert_eq!(d.reason, ScaleReason::Steady);
+        // with a 5ms target the same window is a breach
+        let p = AutoscalePolicy::new(1, 4).slo_p95(Duration::from_millis(5));
+        let mut st = PolicyState::default();
+        assert_eq!(st.step(&p, &hot).action, ScaleAction::Up(1));
+        // an empty window (p95 = 0) never breaches the p95 rule
+        let mut st = PolicyState::default();
+        assert_eq!(st.step(&p, &quiet(1)).reason, ScaleReason::Steady);
+    }
+
+    #[test]
+    fn breach_tolerance_absorbs_small_shed_counts() {
+        let p = AutoscalePolicy::new(1, 4).breach_tolerance(2);
+        let mut st = PolicyState::default();
+        assert_eq!(st.step(&p, &shedding(1, 2)).reason, ScaleReason::Steady);
+        assert_eq!(st.step(&p, &shedding(1, 3)).action, ScaleAction::Up(1));
+    }
+
+    #[test]
+    fn scale_up_clamps_to_max() {
+        let p = AutoscalePolicy::new(1, 3).scale_up_step(4).cooldown_ticks(0);
+        let mut st = PolicyState::default();
+        // step 4 wants +4 but only 2 slots remain below max
+        assert_eq!(st.step(&p, &shedding(1, 1)).action, ScaleAction::Up(2));
+        // at max, a breach is reported but nothing is provisioned
+        assert_eq!(st.step(&p, &shedding(3, 1)), Decision::hold(ScaleReason::AtMax));
+    }
+
+    #[test]
+    fn sustained_idle_scales_down_after_the_window() {
+        let p = AutoscalePolicy::new(1, 4).idle_ticks_down(3).cooldown_ticks(0);
+        let mut st = PolicyState::default();
+        assert_eq!(st.step(&p, &quiet(3)).reason, ScaleReason::Steady);
+        assert_eq!(st.step(&p, &quiet(3)).reason, ScaleReason::Steady);
+        // third consecutive idle tick completes the window
+        assert_eq!(
+            st.step(&p, &quiet(3)),
+            Decision { action: ScaleAction::Down(1), reason: ScaleReason::SustainedIdle }
+        );
+        // the streak reset: shrinking further takes another full window
+        assert_eq!(st.step(&p, &quiet(2)).reason, ScaleReason::Steady);
+    }
+
+    #[test]
+    fn idle_never_shrinks_below_min() {
+        let p = AutoscalePolicy::new(2, 4).idle_ticks_down(1).cooldown_ticks(0);
+        let mut st = PolicyState::default();
+        assert_eq!(st.step(&p, &quiet(2)), Decision::hold(ScaleReason::AtMin));
+    }
+
+    #[test]
+    fn traffic_resets_the_idle_streak() {
+        let p = AutoscalePolicy::new(1, 4).idle_ticks_down(2).cooldown_ticks(0);
+        let mut st = PolicyState::default();
+        assert_eq!(st.step(&p, &quiet(2)).reason, ScaleReason::Steady);
+        // one busy window: the idle streak starts over
+        assert_eq!(st.step(&p, &busy(2)).reason, ScaleReason::Steady);
+        assert_eq!(st.step(&p, &quiet(2)).reason, ScaleReason::Steady);
+        assert_eq!(st.step(&p, &quiet(2)).action, ScaleAction::Down(1));
+    }
+
+    #[test]
+    fn outstanding_work_is_not_idle() {
+        let p = AutoscalePolicy::new(1, 4).idle_ticks_down(1).cooldown_ticks(0);
+        let mut st = PolicyState::default();
+        // nothing submitted this window, but a backlog is still draining
+        let draining =
+            TickSignals { live_replicas: 2, outstanding: 5, ..TickSignals::default() };
+        assert_eq!(st.step(&p, &draining).reason, ScaleReason::Steady);
+    }
+
+    #[test]
+    fn cooldown_suppresses_consecutive_actions() {
+        let p = AutoscalePolicy::new(1, 4).cooldown_ticks(2);
+        let mut st = PolicyState::default();
+        assert_eq!(st.step(&p, &shedding(1, 1)).action, ScaleAction::Up(1));
+        // two breaching ticks land inside the cooldown: suppressed
+        assert_eq!(st.step(&p, &shedding(2, 1)), Decision::hold(ScaleReason::Cooldown));
+        assert_eq!(st.step(&p, &shedding(2, 1)), Decision::hold(ScaleReason::Cooldown));
+        // cooldown over: the persisting breach acts again
+        assert_eq!(st.step(&p, &shedding(2, 1)).action, ScaleAction::Up(1));
+    }
+
+    #[test]
+    fn idle_streak_accumulates_through_cooldown() {
+        // a pool that goes quiet right after scaling up should not pay
+        // the cooldown AND a full fresh idle window
+        let p = AutoscalePolicy::new(1, 4).idle_ticks_down(2).cooldown_ticks(2);
+        let mut st = PolicyState::default();
+        assert_eq!(st.step(&p, &shedding(1, 1)).action, ScaleAction::Up(1));
+        assert_eq!(st.step(&p, &quiet(2)).reason, ScaleReason::Cooldown); // idle 1
+        assert_eq!(st.step(&p, &quiet(2)).reason, ScaleReason::Cooldown); // idle 2
+        assert_eq!(st.step(&p, &quiet(2)).action, ScaleAction::Down(1));
+    }
+
+    #[test]
+    fn below_min_pool_is_raised_to_the_floor() {
+        // nothing validates a pool's starting size against the policy, so
+        // the policy itself must repair a pool below its floor
+        let p = AutoscalePolicy::new(3, 6).cooldown_ticks(1);
+        let mut st = PolicyState::default();
+        assert_eq!(
+            st.step(&p, &busy(1)),
+            Decision { action: ScaleAction::Up(2), reason: ScaleReason::BelowMin }
+        );
+        // the raise is an action like any other: cooldown applies
+        assert_eq!(st.step(&p, &busy(3)).reason, ScaleReason::Cooldown);
+        assert_eq!(st.step(&p, &busy(3)).reason, ScaleReason::Steady);
+    }
+
+    #[test]
+    fn policy_constructor_clamps_degenerate_bounds() {
+        let p = AutoscalePolicy::new(0, 0);
+        assert_eq!((p.min_replicas, p.max_replicas), (1, 1));
+        let p = AutoscalePolicy::new(3, 1);
+        assert!(p.max_replicas >= p.min_replicas);
+    }
+
+    #[test]
+    fn signals_observe_reads_the_window() {
+        let m = crate::coordinator::metrics::Metrics::new();
+        m.record_submitted(QosClass::Interactive);
+        m.record(QosClass::Interactive, Duration::from_micros(800));
+        m.record_submitted(QosClass::Bulk);
+        m.record_shed(QosClass::Bulk);
+        let w = m.window();
+        let s = TickSignals::observe(&w, m.outstanding(), 2);
+        assert_eq!(s.live_replicas, 2);
+        assert_eq!(s.submitted, 2);
+        assert_eq!(s.shed, 1);
+        assert_eq!(s.outstanding, 0);
+        assert_eq!(s.interactive_p95_us, 800.0);
+    }
+}

@@ -18,7 +18,14 @@
 //! * **shed before execution** — cancelled entries are dropped (their
 //!   ticket resolves to a "cancelled" error; the slot is never executed)
 //!   and expired-deadline entries are answered with a shed error; both are
-//!   counted per class in [`Metrics`](super::metrics::Metrics).
+//!   counted per class in [`Metrics`](super::metrics::Metrics);
+//! * **graceful worker retirement** — a
+//!   [`QueueEntry::Retire`](super::request::QueueEntry) sentinel on the
+//!   queue ends the claiming worker's batch assembly ([`Cut::Retire`]):
+//!   the worker executes what it gathered, then exits, and entries behind
+//!   the sentinel stay queued for the surviving workers. This is how the
+//!   elastic [`Server`](super::server::Server) scales down without
+//!   dropping accepted requests.
 //!
 //! [`AdaptiveBatcher`] layers per-replica tuning on top: each worker
 //! observes the queue depth at every batch cut (via
@@ -34,7 +41,7 @@ use std::time::{Duration, Instant};
 use anyhow::anyhow;
 
 use super::metrics::Metrics;
-use super::request::{Pending, QosClass};
+use super::request::{Pending, QosClass, QueueEntry};
 
 /// Batching policy.
 #[derive(Clone, Copy, Debug)]
@@ -73,34 +80,62 @@ fn admit(p: Pending, metrics: &Metrics) -> Option<Pending> {
     Some(p)
 }
 
+/// What one `next_batch` call decided for its worker.
+#[derive(Debug)]
+pub enum Cut {
+    /// Execute this batch, then keep serving.
+    Batch(Vec<Pending>),
+    /// The worker claimed a [`QueueEntry::Retire`] sentinel: execute this
+    /// (possibly empty) batch, then exit. In-flight requests are never
+    /// dropped — the sentinel only ends *assembly*, not delivery.
+    Retire(Vec<Pending>),
+    /// The channel is closed and drained: server shutdown.
+    Shutdown,
+}
+
 /// Collect the next single-class batch from `rx`.
 ///
-/// Blocks for the first live request (or returns `None` when the channel
-/// is closed, drained, and `carry` is empty — shutdown). After the first
+/// Blocks for the first live request (or returns [`Cut::Shutdown`] when
+/// the channel is closed, drained, and `carry` is empty). After the first
 /// request arrives, keeps pulling until the class's batch target or wait
 /// budget is hit; a request of a *different* class is stashed in `carry`
 /// (it leads the next batch) so a batch never mixes classes. Cancelled and
 /// expired-deadline entries are shed as they surface and never occupy a
-/// batch slot.
+/// batch slot. A [`QueueEntry::Retire`] sentinel ends assembly immediately
+/// and turns the cut into [`Cut::Retire`] — the claiming worker executes
+/// what it already gathered, then retires; entries still queued behind the
+/// sentinel are left for the surviving workers. The carry slot is only
+/// ever filled by a class boundary, which also ends the cut, so a retiring
+/// cut can never strand a carried request (`carry` is `None` whenever
+/// `Retire` is returned).
 ///
 /// `base` is the configured policy, `effective` the (possibly adaptively
 /// tuned) one: Interactive batches wait at most `base.max_wait /`
 /// [`LATENCY_WAIT_DIV`] even when the adaptive tuner is in its throughput
 /// posture.
 pub fn next_batch(
-    rx: &Receiver<Pending>,
+    rx: &Receiver<QueueEntry>,
     carry: &mut Option<Pending>,
     base: &BatcherConfig,
     effective: &BatcherConfig,
     metrics: &Metrics,
-) -> Option<Vec<Pending>> {
+) -> Cut {
     let first = loop {
-        let p = match carry.take() {
-            Some(p) => p, // the class boundary stashed by the previous cut
-            None => rx.recv().ok()?,
+        let entry = match carry.take() {
+            // the class boundary stashed by the previous cut
+            Some(p) => QueueEntry::Req(p),
+            None => match rx.recv() {
+                Ok(e) => e,
+                Err(_) => return Cut::Shutdown,
+            },
         };
-        if let Some(p) = admit(p, metrics) {
-            break p;
+        match entry {
+            QueueEntry::Retire => return Cut::Retire(Vec::new()),
+            QueueEntry::Req(p) => {
+                if let Some(p) = admit(p, metrics) {
+                    break p;
+                }
+            }
         }
     };
     let class = first.request.class;
@@ -116,7 +151,8 @@ pub fn next_batch(
             break;
         }
         match rx.recv_timeout(deadline - now) {
-            Ok(p) => {
+            Ok(QueueEntry::Retire) => return Cut::Retire(batch),
+            Ok(QueueEntry::Req(p)) => {
                 let Some(p) = admit(p, metrics) else { continue };
                 if p.request.class != class {
                     *carry = Some(p);
@@ -127,7 +163,7 @@ pub fn next_batch(
             Err(_) => break, // timeout, or disconnected with the batch non-empty
         }
     }
-    Some(batch)
+    Cut::Batch(batch)
 }
 
 /// Per-replica batcher tuning driven by observed queue depth.
@@ -202,24 +238,32 @@ mod tests {
     use std::sync::mpsc::sync_channel;
     use std::time::Instant as StdInstant;
 
-    fn req(v: i8) -> Pending {
+    fn req(v: i8) -> QueueEntry {
         let (p, _t) = Request::new(vec![v]).into_pending();
-        p
+        QueueEntry::Req(p)
     }
 
-    fn classed(v: i8, class: QosClass) -> Pending {
+    fn classed(v: i8, class: QosClass) -> QueueEntry {
         let (p, _t) = Request::new(vec![v]).with_class(class).into_pending();
-        p
+        QueueEntry::Req(p)
     }
 
     /// `next_batch` with an untuned config (base == effective).
     fn cut(
-        rx: &Receiver<Pending>,
+        rx: &Receiver<QueueEntry>,
         carry: &mut Option<Pending>,
         cfg: &BatcherConfig,
         metrics: &Metrics,
-    ) -> Option<Vec<Pending>> {
+    ) -> Cut {
         next_batch(rx, carry, cfg, cfg, metrics)
+    }
+
+    /// Unwrap a [`Cut::Batch`] (panics on retire/shutdown).
+    fn must_batch(c: Cut) -> Vec<Pending> {
+        match c {
+            Cut::Batch(b) => b,
+            other => panic!("expected Cut::Batch, got {other:?}"),
+        }
     }
 
     #[test]
@@ -231,29 +275,97 @@ mod tests {
         let cfg = BatcherConfig { max_batch: 3, max_wait: Duration::from_secs(1) };
         let m = Metrics::new();
         let mut carry = None;
-        let b = cut(&rx, &mut carry, &cfg, &m).unwrap();
+        let b = must_batch(cut(&rx, &mut carry, &cfg, &m));
         assert_eq!(b.len(), 3);
-        let b2 = cut(&rx, &mut carry, &cfg, &m).unwrap();
+        let b2 = must_batch(cut(&rx, &mut carry, &cfg, &m));
         assert_eq!(b2.len(), 2); // drains the rest after timeout
     }
 
     #[test]
     fn cuts_batch_at_deadline() {
-        let (tx, rx) = sync_channel::<Pending>(16);
+        let (tx, rx) = sync_channel::<QueueEntry>(16);
         tx.send(req(1)).unwrap();
         let cfg = BatcherConfig { max_batch: 100, max_wait: Duration::from_millis(5) };
         let t0 = StdInstant::now();
-        let b = cut(&rx, &mut None, &cfg, &Metrics::new()).unwrap();
+        let b = must_batch(cut(&rx, &mut None, &cfg, &Metrics::new()));
         assert_eq!(b.len(), 1);
         assert!(t0.elapsed() < Duration::from_millis(500));
     }
 
     #[test]
-    fn returns_none_on_shutdown() {
-        let (tx, rx) = sync_channel::<Pending>(1);
+    fn returns_shutdown_on_closed_channel() {
+        let (tx, rx) = sync_channel::<QueueEntry>(1);
         drop(tx);
         let cfg = BatcherConfig::default();
-        assert!(cut(&rx, &mut None, &cfg, &Metrics::new()).is_none());
+        assert!(matches!(cut(&rx, &mut None, &cfg, &Metrics::new()), Cut::Shutdown));
+    }
+
+    #[test]
+    fn retire_sentinel_alone_retires_with_an_empty_batch() {
+        let (tx, rx) = sync_channel::<QueueEntry>(4);
+        tx.send(QueueEntry::Retire).unwrap();
+        tx.send(req(1)).unwrap(); // queued behind the sentinel
+        let cfg = BatcherConfig::default();
+        let m = Metrics::new();
+        let mut carry = None;
+        match cut(&rx, &mut carry, &cfg, &m) {
+            Cut::Retire(b) => assert!(b.is_empty()),
+            other => panic!("expected Cut::Retire, got {other:?}"),
+        }
+        assert!(carry.is_none());
+        // the request behind the sentinel is untouched: a surviving worker
+        // claims it on its next cut
+        let b = must_batch(cut(&rx, &mut carry, &cfg, &m));
+        assert_eq!(b.len(), 1);
+    }
+
+    #[test]
+    fn retire_mid_assembly_cuts_the_batch_and_retires() {
+        let (tx, rx) = sync_channel(8);
+        tx.send(req(1)).unwrap();
+        tx.send(req(2)).unwrap();
+        tx.send(QueueEntry::Retire).unwrap();
+        tx.send(req(3)).unwrap(); // behind the sentinel: stays queued
+        let cfg = BatcherConfig { max_batch: 8, max_wait: Duration::from_secs(1) };
+        let m = Metrics::new();
+        let mut carry = None;
+        match cut(&rx, &mut carry, &cfg, &m) {
+            Cut::Retire(b) => {
+                // the assembled batch is executed by the retiring worker —
+                // accepted requests are never dropped by a scale-down
+                assert_eq!(b.len(), 2);
+                assert!(carry.is_none());
+            }
+            other => panic!("expected Cut::Retire, got {other:?}"),
+        }
+        let b = must_batch(cut(&rx, &mut carry, &cfg, &m));
+        assert_eq!(b.len(), 1);
+        assert_eq!(b[0].request.payload, vec![3]);
+    }
+
+    #[test]
+    fn carried_boundary_survives_a_later_retire() {
+        // bulk batch ends on an interactive boundary (carried); the retire
+        // sentinel is claimed on the NEXT cut, which still executes the
+        // carried request first — retirement can never strand the carry
+        let (tx, rx) = sync_channel(8);
+        tx.send(classed(1, QosClass::Bulk)).unwrap();
+        tx.send(classed(2, QosClass::Interactive)).unwrap();
+        tx.send(QueueEntry::Retire).unwrap();
+        let cfg = BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(5) };
+        let m = Metrics::new();
+        let mut carry = None;
+        let b1 = must_batch(cut(&rx, &mut carry, &cfg, &m));
+        assert_eq!(b1.len(), 1);
+        assert!(carry.is_some());
+        match cut(&rx, &mut carry, &cfg, &m) {
+            Cut::Retire(b2) => {
+                assert_eq!(b2.len(), 1, "the carried request leads the retiring cut");
+                assert_eq!(b2[0].request.payload, vec![2]);
+                assert!(carry.is_none());
+            }
+            other => panic!("expected Cut::Retire, got {other:?}"),
+        }
     }
 
     #[test]
@@ -266,11 +378,11 @@ mod tests {
         let cfg = BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(5) };
         let m = Metrics::new();
         let mut carry = None;
-        let b1 = cut(&rx, &mut carry, &cfg, &m).unwrap();
+        let b1 = must_batch(cut(&rx, &mut carry, &cfg, &m));
         assert_eq!(b1.len(), 2, "the class boundary must end the batch");
         assert!(b1.iter().all(|p| p.request.class == QosClass::Bulk));
         assert!(carry.is_some(), "the boundary request is carried, not dropped");
-        let b2 = cut(&rx, &mut carry, &cfg, &m).unwrap();
+        let b2 = must_batch(cut(&rx, &mut carry, &cfg, &m));
         assert_eq!(b2.len(), 2, "the carried request leads the next batch");
         assert!(b2.iter().all(|p| p.request.class == QosClass::Interactive));
         assert!(carry.is_none());
@@ -278,12 +390,12 @@ mod tests {
 
     #[test]
     fn interactive_batches_cut_at_the_latency_posture() {
-        let (tx, rx) = sync_channel::<Pending>(4);
+        let (tx, rx) = sync_channel::<QueueEntry>(4);
         tx.send(classed(1, QosClass::Interactive)).unwrap();
         // a generous throughput-posture wait: Interactive must not pay it
         let cfg = BatcherConfig { max_batch: 100, max_wait: Duration::from_millis(400) };
         let t0 = StdInstant::now();
-        let b = cut(&rx, &mut None, &cfg, &Metrics::new()).unwrap();
+        let b = must_batch(cut(&rx, &mut None, &cfg, &Metrics::new()));
         assert_eq!(b.len(), 1);
         // budget is 400/8 = 50ms; anything well under 400ms proves the cap
         assert!(
@@ -299,11 +411,11 @@ mod tests {
         // deterministic: the deadline is already in the past at cut time
         let (dead, dead_ticket) =
             Request::new(vec![1]).with_deadline(StdInstant::now()).into_pending();
-        tx.send(dead).unwrap();
+        tx.send(QueueEntry::Req(dead)).unwrap();
         tx.send(req(2)).unwrap();
         let cfg = BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(2) };
         let m = Metrics::new();
-        let b = cut(&rx, &mut None, &cfg, &m).unwrap();
+        let b = must_batch(cut(&rx, &mut None, &cfg, &m));
         assert_eq!(b.len(), 1, "the expired request must not occupy a batch slot");
         assert_eq!(b[0].request.payload, vec![2]);
         assert_eq!(m.snapshot().shed, 1);
@@ -317,11 +429,11 @@ mod tests {
         let (p1, t1) = Request::new(vec![1]).into_pending();
         let (p2, t2) = Request::new(vec![2]).into_pending();
         t1.cancel(); // cancelled while queued — before the batcher claims it
-        tx.send(p1).unwrap();
-        tx.send(p2).unwrap();
+        tx.send(QueueEntry::Req(p1)).unwrap();
+        tx.send(QueueEntry::Req(p2)).unwrap();
         let cfg = BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(2) };
         let m = Metrics::new();
-        let b = cut(&rx, &mut None, &cfg, &m).unwrap();
+        let b = must_batch(cut(&rx, &mut None, &cfg, &m));
         assert_eq!(b.len(), 1, "the cancelled slot must never reach execution");
         assert_eq!(b[0].request.payload, vec![2]);
         assert_eq!(m.snapshot().cancelled, 1);
@@ -338,16 +450,16 @@ mod tests {
         tx.send(classed(1, QosClass::Bulk)).unwrap();
         let (boundary, boundary_ticket) =
             Request::new(vec![9]).with_class(QosClass::Interactive).into_pending();
-        tx.send(boundary).unwrap();
+        tx.send(QueueEntry::Req(boundary)).unwrap();
         tx.send(classed(2, QosClass::Interactive)).unwrap();
         let cfg = BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(5) };
         let m = Metrics::new();
         let mut carry = None;
-        let b1 = cut(&rx, &mut carry, &cfg, &m).unwrap();
+        let b1 = must_batch(cut(&rx, &mut carry, &cfg, &m));
         assert_eq!(b1.len(), 1);
         // cancel while it sits in the carry slot
         boundary_ticket.cancel();
-        let b2 = cut(&rx, &mut carry, &cfg, &m).unwrap();
+        let b2 = must_batch(cut(&rx, &mut carry, &cfg, &m));
         assert_eq!(b2.len(), 1, "the cancelled carry must be shed at the next cut");
         assert_eq!(b2[0].request.payload, vec![2]);
         assert_eq!(m.snapshot().cancelled, 1);

@@ -30,31 +30,57 @@
 //! the warm [`SessionCache`](crate::api::SessionCache): replicas of the
 //! same model hash reuse the compiled plan instead of re-running the
 //! compiler.
+//!
+//! **Autoscaling** (PR 5): a pool declared with
+//! [`PoolSpec::autoscale`] carries an
+//! [`AutoscalePolicy`](super::autoscale::AutoscalePolicy) and a warm
+//! [`ReplicaFactory`]. [`Fleet::tick`] is the control loop body: per
+//! pool, it consumes the metrics window
+//! ([`Metrics::window`](super::metrics::Metrics::window) — tick is the
+//! window's single consumer), steps the pure policy, and applies the
+//! decision through the elastic server (`add_replica` from the factory /
+//! `remove_replica` via the drain sentinel). Every decision is exposed in
+//! [`FleetSnapshot`] (per-pool replica count, last action, reason). The
+//! caller picks the cadence — the CLI's serve loop, the bench's phase
+//! loop, and the tests each drive `tick()` explicitly, which is what
+//! keeps the controller deterministic.
+
+use std::sync::{Arc, Mutex};
 
 use anyhow::{ensure, Context, Result};
 
-use super::metrics::MetricsSnapshot;
+use super::autoscale::{
+    AutoscalePolicy, AutoscaleStatus, Decision, PolicyState, ScaleAction, ScaleReason, TickSignals,
+};
+use super::metrics::{MetricsSnapshot, WindowSnapshot};
 use super::request::{QosClass, QosProfile, Request, SubmitError, Ticket};
 use super::server::{Server, ServerConfig};
-use crate::api::Session;
+use crate::api::{ReplicaFactory, Session};
 use crate::tensor::quant::QParams;
 
 /// One replica pool spec: a name (shown in metrics), the session replicas
-/// (one worker thread each), the pool's server/batcher configuration and
-/// its declared traffic profile.
+/// (one worker thread each), the pool's server/batcher configuration, its
+/// declared traffic profile, and (optionally) its autoscaler.
 pub struct PoolSpec {
     pub name: String,
     pub sessions: Vec<Session>,
     pub config: ServerConfig,
     pub profile: QosProfile,
+    pub autoscale: Option<(AutoscalePolicy, Arc<ReplicaFactory>)>,
 }
 
 impl PoolSpec {
     /// Pool with the default config: adaptive batching on, no declared
-    /// traffic affinity ([`QosProfile::Any`]).
+    /// traffic affinity ([`QosProfile::Any`]), no autoscaler.
     pub fn new(name: impl Into<String>, sessions: Vec<Session>) -> PoolSpec {
         let config = ServerConfig { adaptive: true, ..ServerConfig::default() };
-        PoolSpec { name: name.into(), sessions, config, profile: QosProfile::Any }
+        PoolSpec {
+            name: name.into(),
+            sessions,
+            config,
+            profile: QosProfile::Any,
+            autoscale: None,
+        }
     }
 
     pub fn config(mut self, config: ServerConfig) -> PoolSpec {
@@ -68,6 +94,24 @@ impl PoolSpec {
         self.profile = profile;
         self
     }
+
+    /// Make the pool elastic: [`Fleet::tick`] will grow it through
+    /// `factory` and shrink it via graceful drain, within `policy`'s
+    /// bounds.
+    pub fn autoscale(mut self, policy: AutoscalePolicy, factory: Arc<ReplicaFactory>) -> PoolSpec {
+        self.autoscale = Some((policy, factory));
+        self
+    }
+}
+
+/// A pool's controller: the policy, its state, the replica supply, and
+/// the last applied decision (for snapshots).
+struct PoolScaler {
+    policy: AutoscalePolicy,
+    state: PolicyState,
+    factory: Arc<ReplicaFactory>,
+    ticks: u64,
+    last: Option<Decision>,
 }
 
 /// A named running pool.
@@ -75,6 +119,7 @@ struct Pool {
     name: String,
     profile: QosProfile,
     server: Server,
+    scaler: Option<Mutex<PoolScaler>>,
 }
 
 /// A multi-pool serving endpoint for one model.
@@ -94,7 +139,16 @@ impl Fleet {
         for spec in pools {
             let server = Server::start(spec.sessions, spec.config)
                 .with_context(|| format!("starting pool {:?}", spec.name))?;
-            running.push(Pool { name: spec.name, profile: spec.profile, server });
+            let scaler = spec.autoscale.map(|(policy, factory)| {
+                Mutex::new(PoolScaler {
+                    policy,
+                    state: PolicyState::default(),
+                    factory,
+                    ticks: 0,
+                    last: None,
+                })
+            });
+            running.push(Pool { name: spec.name, profile: spec.profile, server, scaler });
         }
         let sig = running[0].server.signature().clone();
         for p in &running[1..] {
@@ -114,7 +168,12 @@ impl Fleet {
     /// compatibility path).
     pub fn from_server(name: impl Into<String>, server: Server) -> Fleet {
         Fleet {
-            pools: vec![Pool { name: name.into(), profile: QosProfile::Any, server }],
+            pools: vec![Pool {
+                name: name.into(),
+                profile: QosProfile::Any,
+                server,
+                scaler: None,
+            }],
             rr: std::sync::atomic::AtomicUsize::new(0),
         }
     }
@@ -252,6 +311,94 @@ impl Fleet {
         self.submit(Request::new(input))?.wait()
     }
 
+    /// One autoscaler control step across all pools — the body of the
+    /// deployment's tick loop (the caller picks the cadence). Per pool:
+    /// consume the metrics window (tick is the window's single consumer),
+    /// step the policy, apply the decision through the elastic server,
+    /// and report what happened. Static pools (no
+    /// [`PoolSpec::autoscale`]) still consume and report their window but
+    /// never act.
+    ///
+    /// A scale-up provisions replicas through the pool's
+    /// [`ReplicaFactory`]; if provisioning fails mid-step the partial
+    /// progress is kept and the decision is reported as
+    /// [`ScaleReason::ProvisionFailed`]. A scale-down enqueues one drain
+    /// sentinel per retired replica — accepted requests are never dropped
+    /// (see the server drain protocol).
+    pub fn tick(&self) -> Vec<PoolTickReport> {
+        self.pools
+            .iter()
+            .map(|p| {
+                let Some(scaler) = &p.scaler else {
+                    return PoolTickReport {
+                        pool: p.name.clone(),
+                        live_replicas: p.server.live_replicas(),
+                        decision: None,
+                        window: p.server.metrics.window(),
+                    };
+                };
+                let mut guard = scaler.lock().unwrap();
+                // consume the window only under the scaler lock: two
+                // concurrent tick() callers would otherwise each see half
+                // of one window's deltas and could both miss a breach
+                let window = p.server.metrics.window();
+                let PoolScaler { policy, state, factory, ticks, last } = &mut *guard;
+                let signals = TickSignals::observe(
+                    &window,
+                    p.server.metrics.outstanding(),
+                    p.server.live_replicas(),
+                );
+                let decision = state.step(policy, &signals);
+                let applied = match decision.action {
+                    ScaleAction::Up(want) => {
+                        let mut added = 0;
+                        for _ in 0..want {
+                            let ok = factory
+                                .provision()
+                                .and_then(|sess| p.server.add_replica(sess))
+                                .is_ok();
+                            if !ok {
+                                break;
+                            }
+                            added += 1;
+                        }
+                        if added == 0 {
+                            Decision {
+                                action: ScaleAction::Hold,
+                                reason: ScaleReason::ProvisionFailed,
+                            }
+                        } else {
+                            Decision { action: ScaleAction::Up(added), reason: decision.reason }
+                        }
+                    }
+                    ScaleAction::Down(want) => {
+                        let mut removed = 0;
+                        for _ in 0..want {
+                            if p.server.remove_replica().is_err() {
+                                break;
+                            }
+                            removed += 1;
+                        }
+                        if removed == 0 {
+                            Decision { action: ScaleAction::Hold, reason: ScaleReason::AtMin }
+                        } else {
+                            Decision { action: ScaleAction::Down(removed), reason: decision.reason }
+                        }
+                    }
+                    ScaleAction::Hold => decision,
+                };
+                *ticks += 1;
+                *last = Some(applied);
+                PoolTickReport {
+                    pool: p.name.clone(),
+                    live_replicas: p.server.live_replicas(),
+                    decision: Some(applied),
+                    window,
+                }
+            })
+            .collect()
+    }
+
     /// Per-pool and aggregated metrics.
     pub fn snapshot(&self) -> FleetSnapshot {
         let per_pool: Vec<PoolSnapshot> = self
@@ -260,6 +407,17 @@ impl Fleet {
             .map(|p| PoolSnapshot {
                 name: p.name.clone(),
                 profile: p.profile,
+                replicas: p.server.replicas(),
+                retiring: p.server.retiring(),
+                autoscale: p.scaler.as_ref().map(|s| {
+                    let s = s.lock().unwrap();
+                    AutoscaleStatus {
+                        min_replicas: s.policy.min_replicas,
+                        max_replicas: s.policy.max_replicas,
+                        ticks: s.ticks,
+                        last: s.last,
+                    }
+                }),
                 metrics: p.server.metrics.snapshot(),
             })
             .collect();
@@ -276,9 +434,17 @@ impl Fleet {
     }
 
     /// Graceful shutdown: every pool drains its queue and joins workers.
+    /// Pools drain **concurrently** (one closer thread each, joined at
+    /// the end), so shutdown latency is bounded by the slowest pool's
+    /// backlog rather than the sum of all pools'.
     pub fn shutdown(self) {
-        for p in self.pools {
-            p.server.shutdown();
+        let closers: Vec<_> = self
+            .pools
+            .into_iter()
+            .map(|p| std::thread::spawn(move || p.server.shutdown()))
+            .collect();
+        for c in closers {
+            let _ = c.join();
         }
     }
 }
@@ -294,12 +460,55 @@ pub struct Totals {
     pub deadline_missed: u64,
 }
 
+/// One pool's report from a [`Fleet::tick`] control step.
+#[derive(Debug)]
+pub struct PoolTickReport {
+    pub pool: String,
+    /// Committed live replicas after this tick's action.
+    pub live_replicas: usize,
+    /// The decision applied (`None` for pools without an autoscaler).
+    pub decision: Option<Decision>,
+    /// The metrics window this tick consumed (rates, windowed p95).
+    pub window: WindowSnapshot,
+}
+
+impl PoolTickReport {
+    /// Did this tick change the pool's size?
+    pub fn acted(&self) -> bool {
+        self.decision.is_some_and(|d| d.action != ScaleAction::Hold)
+    }
+}
+
+impl std::fmt::Display for PoolTickReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "[{}] x{}", self.pool, self.live_replicas)?;
+        if let Some(d) = self.decision {
+            write!(f, " {d}")?;
+        }
+        write!(f, " | {}", self.window)
+    }
+}
+
 /// One pool's slice of a [`FleetSnapshot`].
 #[derive(Clone, Debug)]
 pub struct PoolSnapshot {
     pub name: String,
     pub profile: QosProfile,
+    /// Worker threads currently running (retiring workers count until
+    /// their drain completes).
+    pub replicas: usize,
+    /// Retire sentinels still draining.
+    pub retiring: usize,
+    /// Autoscaler bounds + last decision, for elastic pools.
+    pub autoscale: Option<AutoscaleStatus>,
     pub metrics: MetricsSnapshot,
+}
+
+impl PoolSnapshot {
+    /// Committed steady-state replica count (running minus mid-drain).
+    pub fn live_replicas(&self) -> usize {
+        self.replicas.saturating_sub(self.retiring)
+    }
 }
 
 /// A point-in-time fleet metrics view.
@@ -329,7 +538,17 @@ impl std::fmt::Display for FleetSnapshot {
             self.per_pool.len()
         )?;
         for p in &self.per_pool {
-            writeln!(f, "  {:16} [{:11}] {}", p.name, p.profile.name(), p.metrics)?;
+            write!(f, "  {:16} [{:11}] x{}", p.name, p.profile.name(), p.replicas)?;
+            if p.retiring > 0 {
+                write!(f, " (-{} draining)", p.retiring)?;
+            }
+            if let Some(a) = &p.autoscale {
+                write!(f, " [{}..{}]", a.min_replicas, a.max_replicas)?;
+                if let Some(last) = a.last {
+                    write!(f, " last {last}")?;
+                }
+            }
+            writeln!(f, " {}", p.metrics)?;
         }
         Ok(())
     }
@@ -470,6 +689,91 @@ mod tests {
             Server::start(vec![tiny_session(Engine::MicroFlow, false)], ServerConfig::default())
                 .unwrap();
         let f = Fleet::from_server("solo", server);
+        assert_eq!(f.infer(vec![3, 1]).unwrap(), vec![2, 0, 5]);
+        f.shutdown();
+    }
+
+    #[test]
+    fn tick_scales_up_on_breach_and_back_down_when_idle() {
+        let factory = Arc::new(ReplicaFactory::new(
+            crate::format::mfb::tests::tiny_mfb(),
+            Engine::MicroFlow,
+        ));
+        let policy = AutoscalePolicy::new(1, 3).idle_ticks_down(2).cooldown_ticks(0);
+        let f = Fleet::start(vec![PoolSpec::new("elastic", vec![factory.provision().unwrap()])
+            .autoscale(policy, Arc::clone(&factory))])
+        .unwrap();
+        // deterministic SLO breach: an already-expired deadline is shed by
+        // the batcher before execution, whatever the thread scheduling
+        let t = f
+            .submit(Request::new(vec![3, 1]).with_deadline(std::time::Instant::now()))
+            .unwrap();
+        assert!(t.wait().unwrap_err().to_string().contains("shed"));
+        let r = f.tick();
+        assert_eq!(
+            r[0].decision.unwrap(),
+            Decision { action: ScaleAction::Up(1), reason: ScaleReason::SloBreach }
+        );
+        assert_eq!(r[0].live_replicas, 2);
+        let snap = f.snapshot();
+        assert_eq!(snap.per_pool[0].live_replicas(), 2, "\n{snap}");
+        let status = snap.per_pool[0].autoscale.unwrap();
+        assert_eq!((status.min_replicas, status.max_replicas), (1, 3));
+        assert_eq!(status.last.unwrap().action, ScaleAction::Up(1));
+        // the scaled-up pool serves correctly (warm replica, same model)
+        assert_eq!(f.infer(vec![3, 1]).unwrap(), vec![2, 0, 5]);
+        // that served window is not idle; then two idle windows shrink it
+        assert!(!f.tick()[0].acted());
+        assert!(!f.tick()[0].acted()); // idle 1
+        let r = f.tick(); // idle 2: sustained-idle window complete
+        assert_eq!(
+            r[0].decision.unwrap(),
+            Decision { action: ScaleAction::Down(1), reason: ScaleReason::SustainedIdle }
+        );
+        assert_eq!(r[0].live_replicas, 1);
+        // at min the pool never shrinks further
+        assert!(!f.tick()[0].acted()); // streak restarted: idle 1
+        let r = f.tick(); // idle 2 wants down, clamped
+        assert_eq!(r[0].decision.unwrap().reason, ScaleReason::AtMin);
+        assert_eq!(r[0].live_replicas, 1);
+        assert_eq!(f.infer(vec![3, 1]).unwrap(), vec![2, 0, 5]);
+        f.shutdown();
+    }
+
+    #[test]
+    fn static_pools_report_windows_but_never_act() {
+        let f = two_pool_fleet();
+        f.infer(vec![3, 1]).unwrap();
+        let reports = f.tick();
+        assert_eq!(reports.len(), 2);
+        assert!(reports.iter().all(|r| r.decision.is_none() && !r.acted()));
+        assert_eq!(reports.iter().map(|r| r.window.submitted()).sum::<u64>(), 1);
+        let snap = f.snapshot();
+        assert!(snap.per_pool.iter().all(|p| p.autoscale.is_none()));
+        f.shutdown();
+    }
+
+    #[test]
+    fn provision_failure_is_reported_not_fatal() {
+        // the factory's source is garbage: scale-up cannot build a session
+        let broken = Arc::new(ReplicaFactory::new(vec![9u8, 9, 9], Engine::MicroFlow));
+        let policy = AutoscalePolicy::new(1, 2).cooldown_ticks(0);
+        let f = Fleet::start(vec![PoolSpec::new(
+            "elastic",
+            vec![tiny_session(Engine::MicroFlow, false)],
+        )
+        .autoscale(policy, broken)])
+        .unwrap();
+        let t = f
+            .submit(Request::new(vec![3, 1]).with_deadline(std::time::Instant::now()))
+            .unwrap();
+        assert!(t.wait().is_err());
+        let r = f.tick();
+        let d = r[0].decision.unwrap();
+        assert_eq!(d.action, ScaleAction::Hold);
+        assert_eq!(d.reason, ScaleReason::ProvisionFailed);
+        assert_eq!(r[0].live_replicas, 1);
+        // the pool keeps serving despite the failed scale-up
         assert_eq!(f.infer(vec![3, 1]).unwrap(), vec![2, 0, 5]);
         f.shutdown();
     }

@@ -15,7 +15,20 @@
 //!   execution (they consumed queue space, never a batch slot);
 //! * `cancelled` — cancelled tickets dropped before execution;
 //! * `deadline_missed` — requests that executed but completed after their
-//!   deadline (delivered late, the SLO signal autoscaling will read).
+//!   deadline (delivered late, the SLO signal autoscaling reads).
+//!
+//! Two read surfaces serve two consumers:
+//!
+//! * [`Metrics::snapshot`] — **lifetime** totals, pure (any number of
+//!   callers, no state advanced). What tests assert and final reports
+//!   print.
+//! * [`Metrics::window`] — **deltas since the previous `window()` call**
+//!   plus the window's own latency quantiles. This is what a *controller*
+//!   wants: the autoscaler scales on "shed/missed *this window*", not on
+//!   lifetime counters that only ever grow (a long-running `serve` session
+//!   would otherwise look permanently unhealthy after one bad minute).
+//!   The call advances the cursor, so keep a single consumer per
+//!   deployment — the fleet's tick loop.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -25,8 +38,12 @@ use super::request::QosClass;
 use crate::util::stats::percentile_sorted;
 
 const RESERVOIR: usize = 65_536;
+/// Cap on the per-window latency buffer (drained by every [`Metrics::window`]
+/// call; the cap only matters if windows are left unconsumed for a long
+/// stretch of heavy traffic).
+const WINDOW_RESERVOIR: usize = 16_384;
 
-/// One QoS class's counters + latency reservoir.
+/// One QoS class's counters + latency reservoirs.
 struct ClassMetrics {
     submitted: AtomicU64,
     completed: AtomicU64,
@@ -35,6 +52,8 @@ struct ClassMetrics {
     cancelled: AtomicU64,
     deadline_missed: AtomicU64,
     latencies_us: Mutex<Vec<u64>>,
+    /// Latencies recorded since the last `window()` call (drained there).
+    window_latencies_us: Mutex<Vec<u64>>,
 }
 
 impl ClassMetrics {
@@ -47,8 +66,37 @@ impl ClassMetrics {
             cancelled: AtomicU64::new(0),
             deadline_missed: AtomicU64::new(0),
             latencies_us: Mutex::new(Vec::new()),
+            window_latencies_us: Mutex::new(Vec::new()),
         }
     }
+
+    fn counters(&self) -> ClassCounters {
+        ClassCounters {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
+            cancelled: self.cancelled.load(Ordering::Relaxed),
+            deadline_missed: self.deadline_missed.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// A plain copy of one class lane's counters (window-cursor bookkeeping).
+#[derive(Clone, Copy, Debug, Default)]
+struct ClassCounters {
+    submitted: u64,
+    completed: u64,
+    errors: u64,
+    shed: u64,
+    cancelled: u64,
+    deadline_missed: u64,
+}
+
+/// Where the previous `window()` call left off.
+struct WindowCursor {
+    prev: [ClassCounters; 3],
+    last_at: Instant,
 }
 
 /// Shared metrics sink — one per replica pool.
@@ -57,6 +105,7 @@ pub struct Metrics {
     classes: [ClassMetrics; 3],
     batches: AtomicU64,
     batched_samples: AtomicU64,
+    window: Mutex<WindowCursor>,
 }
 
 impl Default for Metrics {
@@ -72,6 +121,10 @@ impl Metrics {
             classes: std::array::from_fn(|_| ClassMetrics::new()),
             batches: AtomicU64::new(0),
             batched_samples: AtomicU64::new(0),
+            window: Mutex::new(WindowCursor {
+                prev: [ClassCounters::default(); 3],
+                last_at: Instant::now(),
+            }),
         }
     }
 
@@ -113,9 +166,16 @@ impl Metrics {
     pub fn record(&self, class: QosClass, latency: Duration) {
         let lane = self.lane(class);
         lane.completed.fetch_add(1, Ordering::Relaxed);
-        let mut l = lane.latencies_us.lock().unwrap();
-        if l.len() < RESERVOIR {
-            l.push(latency.as_micros() as u64);
+        let us = latency.as_micros() as u64;
+        {
+            let mut l = lane.latencies_us.lock().unwrap();
+            if l.len() < RESERVOIR {
+                l.push(us);
+            }
+        }
+        let mut w = lane.window_latencies_us.lock().unwrap();
+        if w.len() < WINDOW_RESERVOIR {
+            w.push(us);
         }
     }
 
@@ -189,6 +249,123 @@ impl Metrics {
             mean_batch: if batches > 0 { samples as f64 / batches as f64 } else { 0.0 },
             per_class,
         }
+    }
+
+    /// Per-class **deltas since the previous `window()` call** plus the
+    /// window's own latency quantiles — the rate view a controller scales
+    /// on. Advances the window cursor and drains the window latency
+    /// buffers: keep one consumer per deployment (the fleet tick loop).
+    pub fn window(&self) -> WindowSnapshot {
+        let mut cursor = self.window.lock().unwrap();
+        let elapsed = cursor.last_at.elapsed();
+        cursor.last_at = Instant::now();
+        let per_class: [ClassWindow; 3] = std::array::from_fn(|i| {
+            let lane = &self.classes[i];
+            let now = lane.counters();
+            let prev = cursor.prev[i];
+            cursor.prev[i] = now;
+            let mut lat = std::mem::take(&mut *lane.window_latencies_us.lock().unwrap());
+            lat.sort_unstable();
+            let latf: Vec<f64> = lat.iter().map(|&v| v as f64).collect();
+            let q = |p: f64| if latf.is_empty() { 0.0 } else { percentile_sorted(&latf, p) };
+            ClassWindow {
+                class: QosClass::ALL[i],
+                // saturating: a `retract_submitted` racing the window edge
+                // may make a counter read lower than the cursor's copy
+                submitted: now.submitted.saturating_sub(prev.submitted),
+                completed: now.completed.saturating_sub(prev.completed),
+                errors: now.errors.saturating_sub(prev.errors),
+                shed: now.shed.saturating_sub(prev.shed),
+                cancelled: now.cancelled.saturating_sub(prev.cancelled),
+                deadline_missed: now.deadline_missed.saturating_sub(prev.deadline_missed),
+                p50_us: q(50.0),
+                p95_us: q(95.0),
+            }
+        });
+        WindowSnapshot { elapsed, per_class }
+    }
+}
+
+/// One class's lane in a [`WindowSnapshot`]: counter deltas over the
+/// window plus the window's own latency quantiles.
+#[derive(Clone, Copy, Debug)]
+pub struct ClassWindow {
+    pub class: QosClass,
+    pub submitted: u64,
+    pub completed: u64,
+    pub errors: u64,
+    pub shed: u64,
+    pub cancelled: u64,
+    pub deadline_missed: u64,
+    pub p50_us: f64,
+    pub p95_us: f64,
+}
+
+/// Deltas since the previous [`Metrics::window`] call — what the
+/// autoscaler (and any periodic health line) reads instead of lifetime
+/// totals.
+#[derive(Clone, Copy, Debug)]
+pub struct WindowSnapshot {
+    /// Wall time covered by this window.
+    pub elapsed: Duration,
+    pub per_class: [ClassWindow; 3],
+}
+
+impl WindowSnapshot {
+    pub fn class(&self, class: QosClass) -> &ClassWindow {
+        &self.per_class[class.index()]
+    }
+
+    fn sum(&self, f: fn(&ClassWindow) -> u64) -> u64 {
+        self.per_class.iter().map(f).sum()
+    }
+
+    /// Requests accepted during the window (all classes).
+    pub fn submitted(&self) -> u64 {
+        self.sum(|c| c.submitted)
+    }
+
+    /// Requests completed during the window (all classes).
+    pub fn completed(&self) -> u64 {
+        self.sum(|c| c.completed)
+    }
+
+    /// Expired-deadline requests shed during the window (all classes).
+    pub fn shed(&self) -> u64 {
+        self.sum(|c| c.shed)
+    }
+
+    /// Requests delivered past their deadline during the window.
+    pub fn deadline_missed(&self) -> u64 {
+        self.sum(|c| c.deadline_missed)
+    }
+
+    /// Errors during the window (all classes).
+    pub fn errors(&self) -> u64 {
+        self.sum(|c| c.errors)
+    }
+
+    /// `count` as a per-second rate over this window's wall time.
+    pub fn per_sec(&self, count: u64) -> f64 {
+        count as f64 / self.elapsed.as_secs_f64().max(1e-9)
+    }
+}
+
+impl std::fmt::Display for WindowSnapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "window {:.2}s | {:.0} req/s in, {:.0} req/s done | {} shed, {} late",
+            self.elapsed.as_secs_f64(),
+            self.per_sec(self.submitted()),
+            self.per_sec(self.completed()),
+            self.shed(),
+            self.deadline_missed(),
+        )?;
+        for c in self.per_class.iter().filter(|c| c.submitted > 0 || c.completed > 0) {
+            write!(f, " | {} {}/{} p95 {:.0}us", c.class.name(), c.completed, c.submitted, c.p95_us)?;
+        }
+        Ok(())
     }
 }
 
@@ -354,5 +531,59 @@ mod tests {
         assert_eq!(s.completed, 0);
         assert_eq!(s.p99_us, 0.0);
         assert_eq!(s.shed, 0);
+    }
+
+    #[test]
+    fn window_reads_deltas_not_lifetime_totals() {
+        let m = Metrics::new();
+        for _ in 0..3 {
+            m.record_submitted(QosClass::Bulk);
+            m.record_shed(QosClass::Bulk);
+        }
+        let w1 = m.window();
+        assert_eq!(w1.submitted(), 3);
+        assert_eq!(w1.shed(), 3);
+        // a quiet second window reports zero even though lifetime totals
+        // still carry the earlier sheds
+        let w2 = m.window();
+        assert_eq!(w2.submitted(), 0);
+        assert_eq!(w2.shed(), 0, "window must not re-report consumed sheds");
+        assert_eq!(m.snapshot().shed, 3, "lifetime totals are untouched");
+        // fresh activity shows up in the next window only
+        m.record_submitted(QosClass::Interactive);
+        m.record_deadline_missed(QosClass::Interactive);
+        let w3 = m.window();
+        assert_eq!(w3.class(QosClass::Interactive).submitted, 1);
+        assert_eq!(w3.deadline_missed(), 1);
+        assert_eq!(w3.class(QosClass::Bulk).shed, 0);
+    }
+
+    #[test]
+    fn window_latency_quantiles_cover_only_the_window() {
+        let m = Metrics::new();
+        m.record_submitted(QosClass::Interactive);
+        m.record(QosClass::Interactive, Duration::from_micros(10_000));
+        let w1 = m.window();
+        assert_eq!(w1.class(QosClass::Interactive).p95_us, 10_000.0);
+        // the slow request must not haunt later windows (lifetime p95 keeps it)
+        m.record_submitted(QosClass::Interactive);
+        m.record(QosClass::Interactive, Duration::from_micros(100));
+        let w2 = m.window();
+        assert_eq!(w2.class(QosClass::Interactive).p95_us, 100.0);
+        assert_eq!(w2.completed(), 1);
+        assert!(m.snapshot().p95_us >= 100.0);
+    }
+
+    #[test]
+    fn window_survives_a_retract_across_the_edge() {
+        let m = Metrics::new();
+        m.record_submitted(QosClass::Bulk);
+        let w1 = m.window();
+        assert_eq!(w1.submitted(), 1);
+        // a rejected try_submit retracts after the cursor advanced: the
+        // next delta saturates at zero instead of underflowing
+        m.retract_submitted(QosClass::Bulk);
+        let w2 = m.window();
+        assert_eq!(w2.submitted(), 0);
     }
 }

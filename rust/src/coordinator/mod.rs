@@ -28,6 +28,12 @@
 //!   SLO-aware dispatch: best [`QosProfile`] match first (native pool for
 //!   Interactive, PJRT/interp pool for Bulk), least-outstanding-requests
 //!   within the match set, spill across candidates on `try_submit`;
+//! * [`autoscale`] — the SLO-driven control plane over the elastic
+//!   server: a deterministic tick policy ([`AutoscalePolicy`] /
+//!   [`PolicyState`]) reads windowed shed/missed/p95 signals and grows
+//!   pools through a warm [`crate::api::ReplicaFactory`] or shrinks them
+//!   via graceful drain ([`Fleet::tick`] is the loop body; every decision
+//!   lands in [`FleetSnapshot`]);
 //! * [`router`]  — model-name → fleet routing for multi-model
 //!   deployments;
 //! * [`ingress`] — TCP wire protocol + blocking client: the v2 `MFR2`
@@ -38,6 +44,7 @@
 //!   summing to the totals, reported by the e2e example
 //!   (`examples/serve_keywords.rs`).
 
+pub mod autoscale;
 pub mod batcher;
 pub mod fleet;
 pub mod ingress;
@@ -48,11 +55,16 @@ pub mod server;
 
 // the execution surface lives in `crate::api`; re-exported here because
 // every server deployment needs it alongside the coordinator types
-pub use crate::api::{Engine, InferenceSession, Session, SessionBuilder, SessionCache};
+pub use crate::api::{
+    Engine, InferenceSession, ReplicaFactory, Session, SessionBuilder, SessionCache,
+};
+pub use autoscale::{
+    AutoscalePolicy, AutoscaleStatus, Decision, PolicyState, ScaleAction, ScaleReason, TickSignals,
+};
 pub use batcher::{AdaptiveBatcher, BatcherConfig};
-pub use fleet::{Fleet, FleetSnapshot, PoolSnapshot, PoolSpec};
+pub use fleet::{Fleet, FleetSnapshot, PoolSnapshot, PoolSpec, PoolTickReport};
 pub use ingress::{Client, Ingress, IngressConfig};
-pub use metrics::{ClassSnapshot, Metrics, MetricsSnapshot};
-pub use request::{QosClass, QosProfile, Request, SubmitError, Ticket};
+pub use metrics::{ClassSnapshot, ClassWindow, Metrics, MetricsSnapshot, WindowSnapshot};
+pub use request::{QosClass, QosProfile, QueueEntry, Request, SubmitError, Ticket};
 pub use router::Router;
 pub use server::{Server, ServerConfig};

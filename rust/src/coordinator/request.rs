@@ -23,7 +23,10 @@
 //! * [`Pending`] — the queue entry behind a ticket (request + reply sender
 //!   + enqueue timestamp); the batcher sheds expired-deadline and
 //!   cancelled entries before execution, so a cancelled ticket's slot is
-//!   never executed.
+//!   never executed;
+//! * [`QueueEntry`] — what actually travels on a server's bounded queue: a
+//!   `Pending` request, or the retire sentinel the elastic server uses to
+//!   drain one worker gracefully (see the enum docs for the protocol).
 //!
 //! Cancellation is cooperative and pre-execution: `cancel` flips a shared
 //! flag that the batcher checks when it claims the entry. A request
@@ -262,6 +265,7 @@ impl std::fmt::Debug for Request {
 /// One queued request: the [`Request`] plus its reply channel and enqueue
 /// timestamp. Lives on the server's bounded channel; the batcher claims
 /// it, sheds it (deadline expired), or drops it (cancelled).
+#[derive(Debug)]
 pub struct Pending {
     pub request: Request,
     pub enqueued: Instant,
@@ -282,6 +286,22 @@ impl Pending {
     pub fn into_request(self) -> Request {
         self.request
     }
+}
+
+/// One slot on a server's bounded queue: a request entry, or the **retire
+/// sentinel** the elastic server uses to shrink its worker set.
+///
+/// Retirement protocol (the drain-graceful invariant): exactly one worker
+/// claims a given `Retire` entry off the shared channel — inside its batch
+/// assembly, under the receiver lock. That worker finishes the batch it
+/// was assembling (accepted requests are **never** dropped by a
+/// scale-down), executes it, and only then exits. Requests queued behind
+/// the sentinel stay on the channel for the surviving workers.
+pub enum QueueEntry {
+    /// A queued request awaiting batching.
+    Req(Pending),
+    /// Poisoned sentinel: the claiming worker drains and exits.
+    Retire,
 }
 
 /// The response handle for one submitted request — replaces the raw mpsc

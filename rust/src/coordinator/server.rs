@@ -1,7 +1,7 @@
-//! Worker-pool serving loop (DESIGN.md S16).
+//! Worker-pool serving loop (DESIGN.md S16) — now an **elastic** pool.
 //!
 //! `Server` owns one worker thread per [`Session`] replica, fed by a
-//! bounded channel of [`Pending`] request entries. Submission is typed
+//! bounded channel of [`QueueEntry`] items. Submission is typed
 //! ([`Request`] in, [`Ticket`] out): `submit` keeps the classic blocking
 //! backpressure, `try_submit` surfaces a full queue as
 //! [`SubmitError::QueueFull`] instead of blocking. Each worker runs the
@@ -11,17 +11,48 @@
 //! output staging buffers are reused across batches, so the steady-state
 //! request path allocates only the per-request reply vectors.
 //! std::thread + mpsc (no tokio offline — DESIGN.md §7).
+//!
+//! ## Elasticity and the drain protocol
+//!
+//! The worker set is dynamic — the autoscaler
+//! ([`coordinator::autoscale`](super::autoscale)) grows and shrinks it at
+//! runtime:
+//!
+//! * [`Server::add_replica`] joins a new session worker onto the
+//!   **existing** shared bounded queue (no new queue, no rebalancing:
+//!   the new worker simply starts claiming batches);
+//! * [`Server::remove_replica`] retires one worker by enqueuing a
+//!   [`QueueEntry::Retire`] sentinel. Exactly one worker claims it (the
+//!   queue is MPSC-consumed under a lock), finishes the batch it was
+//!   assembling, executes it, and exits.
+//!
+//! Drain invariants (tested here and in the stress suite):
+//!
+//! 1. **No accepted request is ever dropped by a scale-down** — the
+//!    sentinel ends batch *assembly*, never delivery, and requests queued
+//!    behind the sentinel remain for the surviving workers;
+//! 2. **the last live worker can never be retired** — `remove_replica`
+//!    reserves its victim against `replicas − pending_retires` and
+//!    refuses when one worker would remain, so the queue always has a
+//!    consumer;
+//! 3. **counts are honest** — [`Server::replicas`] reports workers still
+//!    running (a retiring worker counts until it actually exits);
+//!    [`Server::live_replicas`] reports the committed steady state
+//!    (`replicas − pending retires`) and is what the autoscaler and the
+//!    fleet snapshot reason about, so a decision made mid-drain sees the
+//!    post-drain size instead of double-retiring.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
 use anyhow::Result;
 
-use super::batcher::{next_batch, AdaptiveBatcher, BatcherConfig};
+use super::batcher::{next_batch, AdaptiveBatcher, BatcherConfig, Cut};
 use super::metrics::Metrics;
-use super::request::{Pending, Request, SubmitError, Ticket};
+use super::request::{Pending, QueueEntry, Request, SubmitError, Ticket};
 use crate::api::{IoSignature, Session};
 use crate::tensor::quant::QParams;
 
@@ -43,18 +74,34 @@ impl Default for ServerConfig {
     }
 }
 
-/// A serving endpoint for one model — one replica pool: worker threads
-/// sharing a bounded queue. A [`Fleet`](super::fleet::Fleet) holds several
-/// of these and dispatches across them.
+/// State every worker thread shares with the server handle.
+#[derive(Clone)]
+struct WorkerCtx {
+    rx: Arc<Mutex<Receiver<QueueEntry>>>,
+    metrics: Arc<Metrics>,
+    /// Workers currently running (a retiring worker decrements on exit).
+    replicas: Arc<AtomicUsize>,
+    /// Retire sentinels sent but not yet claimed-and-exited.
+    pending_retires: Arc<AtomicUsize>,
+}
+
+/// A serving endpoint for one model — one **elastic** replica pool:
+/// worker threads sharing a bounded queue, joined and retired at runtime
+/// (see the module docs for the drain protocol). A
+/// [`Fleet`](super::fleet::Fleet) holds several of these and dispatches
+/// across them.
 pub struct Server {
-    tx: SyncSender<Pending>,
-    workers: Vec<JoinHandle<()>>,
+    tx: SyncSender<QueueEntry>,
+    workers: Mutex<Vec<JoinHandle<()>>>,
+    ctx: WorkerCtx,
     pub metrics: Arc<Metrics>,
     signature: IoSignature,
     input_len: usize,
     input_qparams: QParams,
     output_qparams: QParams,
-    replicas: usize,
+    /// Base batcher policy handed to every worker, present and future.
+    batcher: BatcherConfig,
+    adaptive: bool,
 }
 
 impl Server {
@@ -69,7 +116,6 @@ impl Server {
         let input_len = sig.input_len();
         let input_qparams = sig.input.qparams;
         let output_qparams = sig.output.qparams;
-        let replicas = sessions.len();
         for s in &sessions[1..] {
             anyhow::ensure!(
                 *s.signature() == sig,
@@ -79,31 +125,92 @@ impl Server {
             );
         }
         let metrics = Arc::new(Metrics::new());
-        let (tx, rx) = sync_channel::<Pending>(cfg.queue_depth);
-        let shared_rx = Arc::new(std::sync::Mutex::new(rx));
-        let mut workers = Vec::new();
-        for mut session in sessions {
-            let rx = Arc::clone(&shared_rx);
-            let metrics = Arc::clone(&metrics);
-            let bcfg = BatcherConfig {
-                max_batch: cfg.batcher.max_batch.min(session.preferred_batch().max(1)),
-                max_wait: cfg.batcher.max_wait,
-            };
-            let adaptive = cfg.adaptive;
-            workers.push(std::thread::spawn(move || {
-                worker_loop(&mut session, &rx, &bcfg, adaptive, replicas, &metrics);
-            }));
-        }
-        Ok(Server {
+        let (tx, rx) = sync_channel::<QueueEntry>(cfg.queue_depth);
+        let ctx = WorkerCtx {
+            rx: Arc::new(Mutex::new(rx)),
+            metrics: Arc::clone(&metrics),
+            replicas: Arc::new(AtomicUsize::new(0)),
+            pending_retires: Arc::new(AtomicUsize::new(0)),
+        };
+        let server = Server {
             tx,
-            workers,
+            workers: Mutex::new(Vec::new()),
+            ctx,
             metrics,
             signature: sig,
             input_len,
             input_qparams,
             output_qparams,
-            replicas,
-        })
+            batcher: cfg.batcher,
+            adaptive: cfg.adaptive,
+        };
+        for session in sessions {
+            server.spawn_worker(session);
+        }
+        Ok(server)
+    }
+
+    /// Spawn one worker over `session` on the shared queue (signature
+    /// already validated by the caller).
+    fn spawn_worker(&self, mut session: Session) {
+        let bcfg = BatcherConfig {
+            max_batch: self.batcher.max_batch.min(session.preferred_batch().max(1)),
+            max_wait: self.batcher.max_wait,
+        };
+        let adaptive = self.adaptive;
+        let ctx = self.ctx.clone();
+        // counted before the thread runs so replicas() never under-reports
+        ctx.replicas.fetch_add(1, Ordering::SeqCst);
+        let handle = std::thread::spawn(move || {
+            worker_loop(&mut session, &ctx, &bcfg, adaptive);
+        });
+        let mut workers = self.workers.lock().unwrap();
+        // reap workers that already retired, so the handle set stays
+        // bounded by the number of live workers over the server's lifetime
+        let (done, live): (Vec<_>, Vec<_>) =
+            workers.drain(..).partition(|h| h.is_finished());
+        for h in done {
+            let _ = h.join();
+        }
+        *workers = live;
+        workers.push(handle);
+    }
+
+    /// Join a new session replica onto the existing shared queue — the
+    /// autoscaler's scale-up primitive. The new worker starts claiming
+    /// batches immediately; nothing is rebalanced or re-queued.
+    pub fn add_replica(&self, session: Session) -> Result<()> {
+        anyhow::ensure!(
+            *session.signature() == self.signature,
+            "replica signature diverges: {:?} vs {:?}",
+            session.signature(),
+            self.signature
+        );
+        self.spawn_worker(session);
+        Ok(())
+    }
+
+    /// Retire one worker via a [`QueueEntry::Retire`] sentinel — the
+    /// autoscaler's scale-down primitive. The victim (whichever worker
+    /// claims the sentinel) finishes and executes the batch it was
+    /// assembling, then exits: accepted requests are never dropped.
+    ///
+    /// Refuses to retire the last live worker (the queue must always have
+    /// a consumer); the reservation is atomic, so concurrent callers
+    /// cannot race the pool down to zero.
+    pub fn remove_replica(&self) -> Result<()> {
+        // reserve the victim first: live-after = replicas − (reserved + 1)
+        let reserved = self.ctx.pending_retires.fetch_add(1, Ordering::SeqCst);
+        let running = self.ctx.replicas.load(Ordering::SeqCst);
+        if running.saturating_sub(reserved + 1) < 1 {
+            self.ctx.pending_retires.fetch_sub(1, Ordering::SeqCst);
+            anyhow::bail!("cannot retire the last live replica");
+        }
+        if self.tx.send(QueueEntry::Retire).is_err() {
+            self.ctx.pending_retires.fetch_sub(1, Ordering::SeqCst);
+            anyhow::bail!("server is shut down");
+        }
+        Ok(())
     }
 
     pub fn signature(&self) -> &IoSignature {
@@ -114,9 +221,24 @@ impl Server {
         self.input_len
     }
 
-    /// Number of session replicas (worker threads) serving this pool.
+    /// Worker threads currently running (a retiring worker counts until
+    /// its drain completes and it exits).
     pub fn replicas(&self) -> usize {
-        self.replicas
+        self.ctx.replicas.load(Ordering::SeqCst)
+    }
+
+    /// The committed steady-state worker count: running workers minus
+    /// retire sentinels still in flight. This is the number the
+    /// autoscaler reasons about — it is stable across a drain (reserved
+    /// at `remove_replica` time, realized when the victim exits).
+    pub fn live_replicas(&self) -> usize {
+        let running = self.ctx.replicas.load(Ordering::SeqCst);
+        running.saturating_sub(self.ctx.pending_retires.load(Ordering::SeqCst))
+    }
+
+    /// Retire sentinels sent but not yet drained (workers mid-retirement).
+    pub fn retiring(&self) -> usize {
+        self.ctx.pending_retires.load(Ordering::SeqCst)
     }
 
     pub fn input_qparams(&self) -> QParams {
@@ -143,7 +265,7 @@ impl Server {
         // this thread resumes, and completed must never exceed submitted
         // (outstanding() would under-report and misroute fleet dispatch)
         self.metrics.record_submitted(class);
-        if self.tx.send(pending).is_err() {
+        if self.tx.send(QueueEntry::Req(pending)).is_err() {
             // balance the counter so outstanding() stays accurate
             self.metrics.record_error(class);
             anyhow::bail!("server is shut down");
@@ -164,18 +286,21 @@ impl Server {
         let class = req.class;
         let (pending, ticket) = req.into_pending();
         self.metrics.record_submitted(class);
-        match self.tx.try_send(pending) {
+        match self.tx.try_send(QueueEntry::Req(pending)) {
             Ok(()) => Ok(ticket),
-            Err(TrySendError::Full(p)) => {
+            Err(TrySendError::Full(QueueEntry::Req(p))) => {
                 // the request never entered the queue: retract the count
                 // and hand it back for retry/spill
                 self.metrics.retract_submitted(class);
                 Err(SubmitError::QueueFull(p.into_request()))
             }
-            Err(TrySendError::Disconnected(p)) => {
+            Err(TrySendError::Disconnected(QueueEntry::Req(p))) => {
                 self.metrics.retract_submitted(class);
                 Err(SubmitError::Shutdown(p.into_request()))
             }
+            // we only ever try_send a Req entry
+            Err(TrySendError::Full(QueueEntry::Retire))
+            | Err(TrySendError::Disconnected(QueueEntry::Retire)) => unreachable!(),
         }
     }
 
@@ -188,20 +313,15 @@ impl Server {
     /// Graceful shutdown: close the queue and join workers.
     pub fn shutdown(self) {
         drop(self.tx);
-        for w in self.workers {
+        let workers = self.workers.into_inner().unwrap();
+        for w in workers {
             let _ = w.join();
         }
     }
 }
 
-fn worker_loop(
-    session: &mut Session,
-    rx: &std::sync::Mutex<Receiver<Pending>>,
-    cfg: &BatcherConfig,
-    adaptive: bool,
-    replicas: usize,
-    metrics: &Metrics,
-) {
+fn worker_loop(session: &mut Session, ctx: &WorkerCtx, cfg: &BatcherConfig, adaptive: bool) {
+    let metrics = &*ctx.metrics;
     let ilen = session.input_len();
     let olen = session.output_len();
     let mut tuner = AdaptiveBatcher::new(*cfg);
@@ -214,48 +334,66 @@ fn worker_loop(
     loop {
         // hold the lock only while assembling a batch; workers alternate
         let effective = if adaptive { tuner.config() } else { *cfg };
-        let batch = {
-            let rx = rx.lock().unwrap();
+        let cut = {
+            let rx = ctx.rx.lock().unwrap();
             next_batch(&rx, &mut carry, cfg, &effective, metrics)
         };
-        let Some(batch) = batch else { return };
-        if adaptive {
+        let (batch, retiring) = match cut {
+            Cut::Shutdown => return,
+            Cut::Batch(b) => (b, false),
+            Cut::Retire(b) => (b, true),
+        };
+        if adaptive && !batch.is_empty() {
             // queue-depth proxy right after the cut: outstanding beyond
             // the batch this worker just claimed, averaged per replica —
             // the pool-wide counter includes sibling workers' in-flight
             // batches, which would otherwise read as phantom queue depth
             let beyond = metrics.outstanding().saturating_sub(batch.len() as u64);
-            tuner.observe(beyond / (replicas as u64).max(1));
+            let replicas = ctx.replicas.load(Ordering::Relaxed) as u64;
+            tuner.observe(beyond / replicas.max(1));
         }
         let n = batch.len();
-        metrics.record_batch(n);
-        inputs.clear();
-        for p in &batch {
-            inputs.extend_from_slice(&p.request.payload);
-        }
-        outputs.resize(n * olen, 0);
-        debug_assert_eq!(inputs.len(), n * ilen);
-        match session.run_batch_into(&inputs, n, &mut outputs[..n * olen]) {
-            Ok(()) => {
-                let done = Instant::now();
-                for (i, p) in batch.into_iter().enumerate() {
-                    let out = outputs[i * olen..(i + 1) * olen].to_vec();
-                    if p.request.deadline.is_some_and(|d| done > d) {
-                        // executed but late: delivered anyway, counted as
-                        // an SLO miss
-                        metrics.record_deadline_missed(p.request.class);
+        if n > 0 {
+            metrics.record_batch(n);
+            inputs.clear();
+            for p in &batch {
+                inputs.extend_from_slice(&p.request.payload);
+            }
+            outputs.resize(n * olen, 0);
+            debug_assert_eq!(inputs.len(), n * ilen);
+            match session.run_batch_into(&inputs, n, &mut outputs[..n * olen]) {
+                Ok(()) => {
+                    let done = Instant::now();
+                    for (i, p) in batch.into_iter().enumerate() {
+                        let out = outputs[i * olen..(i + 1) * olen].to_vec();
+                        if p.request.deadline.is_some_and(|d| done > d) {
+                            // executed but late: delivered anyway, counted
+                            // as an SLO miss
+                            metrics.record_deadline_missed(p.request.class);
+                        }
+                        metrics.record(p.request.class, p.enqueued.elapsed());
+                        let _ = p.reply.send(Ok(out));
                     }
-                    metrics.record(p.request.class, p.enqueued.elapsed());
-                    let _ = p.reply.send(Ok(out));
+                }
+                Err(e) => {
+                    let msg = format!("batch execution failed: {e:#}");
+                    for p in batch {
+                        metrics.record_error(p.request.class);
+                        let _ = p.reply.send(Err(anyhow::anyhow!(msg.clone())));
+                    }
                 }
             }
-            Err(e) => {
-                let msg = format!("batch execution failed: {e:#}");
-                for p in batch {
-                    metrics.record_error(p.request.class);
-                    let _ = p.reply.send(Err(anyhow::anyhow!(msg.clone())));
-                }
-            }
+        }
+        if retiring {
+            // the batcher never returns Retire with a stashed carry (a
+            // class boundary ends the cut before a sentinel can be pulled)
+            debug_assert!(carry.is_none(), "retiring with a stranded carry");
+            // drain complete: realize the reservation made by
+            // remove_replica, in one order (replicas first) so
+            // live_replicas() never transiently over-reports
+            ctx.replicas.fetch_sub(1, Ordering::SeqCst);
+            ctx.pending_retires.fetch_sub(1, Ordering::SeqCst);
+            return;
         }
     }
 }
@@ -398,6 +536,109 @@ mod tests {
         assert_eq!(snap.shed, 0);
         assert_eq!(snap.deadline_missed, 0);
         assert_eq!(snap.class(QosClass::Interactive).completed, 1);
+        s.shutdown();
+    }
+
+    /// Spin until the server's running-worker count reaches `want` (drain
+    /// completion is asynchronous but guaranteed; bounded wait keeps a
+    /// regression from hanging the suite).
+    fn wait_for_replicas(s: &Server, want: usize) {
+        let t0 = std::time::Instant::now();
+        while s.replicas() != want {
+            assert!(
+                t0.elapsed() < std::time::Duration::from_secs(10),
+                "replicas stuck at {} (want {want})",
+                s.replicas()
+            );
+            std::thread::yield_now();
+        }
+    }
+
+    #[test]
+    fn add_replica_joins_the_shared_queue() {
+        let s = tiny_server(1);
+        assert_eq!((s.replicas(), s.live_replicas()), (1, 1));
+        let extra = Session::builder(crate::format::mfb::tests::tiny_mfb())
+            .engine(Engine::MicroFlow)
+            .build()
+            .unwrap();
+        s.add_replica(extra).unwrap();
+        assert_eq!((s.replicas(), s.live_replicas()), (2, 2));
+        // both workers serve the same queue: replies stay correct
+        for _ in 0..40 {
+            assert_eq!(s.infer(vec![3, 1]).unwrap(), vec![2, 0, 5]);
+        }
+        assert_eq!(s.metrics.snapshot().completed, 40);
+        s.shutdown();
+    }
+
+    #[test]
+    fn add_replica_rejects_a_mismatched_signature() {
+        let s = tiny_server(1);
+        // a different model: signature diverges, the pool must refuse it
+        let mut rng = crate::util::Prng::new(9);
+        let other = crate::synth::fc_chain(&mut rng, &[4, 4]);
+        let bad = Session::builder(&other).build().unwrap();
+        assert!(s.add_replica(bad).is_err());
+        assert_eq!(s.replicas(), 1);
+        s.shutdown();
+    }
+
+    #[test]
+    fn remove_replica_drains_gracefully_under_backlog() {
+        let s = tiny_server(2);
+        // flood the queue, then retire one worker while the backlog is
+        // still draining: every accepted request must be answered
+        let tickets: Vec<Ticket> =
+            (0..64).map(|_| s.submit(Request::new(vec![3, 1])).unwrap()).collect();
+        s.remove_replica().unwrap();
+        assert_eq!(s.live_replicas(), 1, "the retirement is committed immediately");
+        for t in tickets {
+            assert_eq!(t.wait().unwrap(), vec![2, 0, 5], "scale-down dropped a request");
+        }
+        wait_for_replicas(&s, 1);
+        assert_eq!(s.retiring(), 0);
+        // the surviving worker still serves
+        assert_eq!(s.infer(vec![3, 1]).unwrap(), vec![2, 0, 5]);
+        let snap = s.metrics.snapshot();
+        assert_eq!(snap.completed, 65);
+        assert_eq!(snap.errors, 0);
+        s.shutdown();
+    }
+
+    #[test]
+    fn the_last_live_replica_can_never_be_retired() {
+        let s = tiny_server(1);
+        assert!(s.remove_replica().is_err(), "a 1-worker pool must refuse retirement");
+        let s2 = tiny_server(2);
+        s2.remove_replica().unwrap();
+        // the second retire would leave zero live workers — refused even
+        // though the first victim may not have exited yet
+        assert!(s2.remove_replica().is_err());
+        wait_for_replicas(&s2, 1);
+        assert_eq!(s2.infer(vec![3, 1]).unwrap(), vec![2, 0, 5]);
+        s2.shutdown();
+        s.shutdown();
+    }
+
+    #[test]
+    fn scale_up_down_cycle_keeps_serving() {
+        let s = tiny_server(1);
+        for round in 0..3 {
+            let extra = Session::builder(crate::format::mfb::tests::tiny_mfb())
+                .engine(Engine::MicroFlow)
+                .build()
+                .unwrap();
+            s.add_replica(extra).unwrap();
+            for _ in 0..10 {
+                assert_eq!(s.infer(vec![3, 1]).unwrap(), vec![2, 0, 5], "round {round}");
+            }
+            s.remove_replica().unwrap();
+            wait_for_replicas(&s, 1);
+        }
+        let snap = s.metrics.snapshot();
+        assert_eq!(snap.completed, 30);
+        assert_eq!(snap.errors, 0);
         s.shutdown();
     }
 

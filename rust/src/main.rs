@@ -9,10 +9,12 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
-use microflow::api::{Engine, Session, SessionCache};
-use microflow::cli::{parse_engine_mix, Args, USAGE};
+use microflow::api::{Engine, ReplicaFactory, Session, SessionCache};
+use microflow::cli::{parse_autoscale, parse_engine_mix, Args, USAGE};
 use microflow::compiler::plan::{CompileOptions, CompiledModel};
-use microflow::coordinator::{Fleet, PoolSpec, QosClass, QosProfile, Request, ServerConfig};
+use microflow::coordinator::{
+    AutoscalePolicy, Fleet, PoolSpec, QosClass, QosProfile, Request, ServerConfig,
+};
 use microflow::format::golden::Golden;
 use microflow::format::mds::MdsDataset;
 use microflow::format::mfb::MfbModel;
@@ -224,15 +226,27 @@ fn cmd_deploy(args: &Args) -> Result<()> {
 
 /// `microflow serve <model> [--requests N] [--rate RPS] [--backend B]
 /// [--replicas R] [--engine-mix MIX] [--batch B] [--no-adaptive]
-/// [--paging] [--default-class C] [--shed-after-ms MS]` — synthetic
+/// [--paging] [--default-class C] [--shed-after-ms MS]
+/// [--autoscale MIN:MAX] [--slo-p95-ms MS] [--tick-ms MS]` — synthetic
 /// serving load over a replica fleet (typed requests with QoS classes and
-/// optional deadlines), prints per-pool, per-class metrics.
+/// optional deadlines), prints per-pool, per-class metrics. With
+/// `--autoscale`, every pool is elastic: the SLO-driven controller ticks
+/// on a fixed cadence during the run, printing each scale decision and
+/// the windowed rates it acted on.
 fn cmd_serve(args: &Args) -> Result<()> {
     let name = model_arg(args)?;
     let art = artifacts();
     let requests = args.opt_usize("requests", 500);
     let rate = args.opt_f64("rate", 200.0);
     let max_batch = args.opt_usize("batch", 8);
+    let autoscale: Option<(usize, usize)> =
+        args.opt("autoscale").map(parse_autoscale).transpose()?;
+    let slo_p95: Option<Duration> = args
+        .opt("slo-p95-ms")
+        .map(|v| v.parse::<u64>().context("--slo-p95-ms"))
+        .transpose()?
+        .map(Duration::from_millis);
+    let tick_every = Duration::from_millis(args.opt_usize("tick-ms", 100) as u64);
     // `mix` draws a deterministic blend of classes per request; a named
     // class pins the whole load to it
     let default_class: Option<QosClass> = match args.opt("default-class").unwrap_or("mix") {
@@ -260,25 +274,42 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let pools = mix
         .iter()
         .map(|&(engine, replicas)| {
-            let sessions: Vec<Session> = (0..replicas)
-                .map(|i| {
-                    Session::builder(&mfb_path)
-                        .engine(engine)
-                        .paging(args.flag("paging"))
-                        .preferred_batch(max_batch)
-                        .label(format!("{engine}/{i}"))
-                        .cache(&cache)
-                        .build()
-                })
-                .collect::<Result<_>>()?;
+            // ONE replica recipe per pool: the initial sessions and any
+            // autoscale growth provision through the same factory (and
+            // the same warm cache — native growth costs no recompile),
+            // so scaled replicas can never drift from the originals
+            let factory = std::sync::Arc::new(
+                ReplicaFactory::new(&mfb_path, engine)
+                    .paging(args.flag("paging"))
+                    .preferred_batch(max_batch)
+                    .cache(&cache),
+            );
+            let sessions: Vec<Session> = factory.provision_n(replicas)?;
             let profile =
                 if single_pool { QosProfile::Any } else { QosProfile::for_engine(engine) };
-            Ok(PoolSpec::new(format!("{engine}x{replicas}"), sessions)
+            let mut spec = PoolSpec::new(format!("{engine}x{replicas}"), sessions)
                 .config(cfg)
-                .profile(profile))
+                .profile(profile);
+            if let Some((min, max)) = autoscale {
+                let mut policy = AutoscalePolicy::new(min, max);
+                if let Some(t) = slo_p95 {
+                    policy = policy.slo_p95(t);
+                }
+                spec = spec.autoscale(policy, factory);
+            }
+            Ok(spec)
         })
         .collect::<Result<Vec<_>>>()?;
     let fleet = Fleet::start(pools)?;
+    if let Some((min, max)) = autoscale {
+        println!(
+            "autoscale: each pool elastic in [{min}..{max}] replicas, tick every {}ms{}",
+            tick_every.as_millis(),
+            slo_p95
+                .map(|t| format!(", interactive p95 SLO {}ms", t.as_millis()))
+                .unwrap_or_default(),
+        );
+    }
     println!(
         "warm session cache: {} hits / {} misses across {} replicas",
         cache.hits(),
@@ -296,8 +327,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
         default_class.map(|c| c.name()).unwrap_or("mix"),
         shed_after.map(|d| format!("{}ms", d.as_millis())).unwrap_or_else(|| "never".into()),
     );
+    // tick helper: run one control step, print every non-hold decision
+    // with the window rates it acted on (windowed, not lifetime — a
+    // long-running session's status stays meaningful)
+    let run_tick = |label: &str| {
+        for r in fleet.tick() {
+            if r.acted() {
+                println!("autoscale {label}: {r}");
+            }
+        }
+    };
     let mut pending = Vec::new();
     let t0 = Instant::now();
+    let mut last_tick = Instant::now();
     for i in 0..requests {
         let sample = ds.sample(i % ds.n);
         let q = qp.quantize_slice(sample);
@@ -312,6 +354,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
             req = req.with_deadline_in(d);
         }
         pending.push(fleet.submit(req)?);
+        if autoscale.is_some() && last_tick.elapsed() >= tick_every {
+            run_tick("load");
+            last_tick = Instant::now();
+        }
         std::thread::sleep(Duration::from_secs_f64(rng.exp(rate)));
     }
     let mut served = 0usize;
@@ -325,6 +371,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
     }
     let wall = t0.elapsed();
+    if autoscale.is_some() {
+        // idle ticks after the drain: show the pool shrinking back toward
+        // its floor before the final snapshot
+        for _ in 0..8 {
+            std::thread::sleep(tick_every);
+            run_tick("idle");
+        }
+    }
     println!(
         "done in {:.2}s ({served} served, {shed} shed)\n{}",
         wall.as_secs_f64(),

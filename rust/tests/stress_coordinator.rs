@@ -24,14 +24,21 @@
 //!   when one exists, expired-deadline requests are shed (counted, never
 //!   executed), and cancelled tickets never execute;
 //! * shutdown under load is **clean**: every accepted request is answered
-//!   even when shutdown races the queue drain.
+//!   even when shutdown races the queue drain;
+//! * the **autoscaler** is safe under concurrency: a bursty
+//!   phase-shifting workload scales an elastic pool up on deterministic
+//!   SLO breaches and back down when idle, with bit-exact replies and
+//!   `completed + shed + cancelled == submitted` across concurrent
+//!   scale-up/scale-down events — no accepted request is ever dropped by
+//!   a graceful drain.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use microflow::api::{Engine, Session, SessionCache};
+use microflow::api::{Engine, ReplicaFactory, Session, SessionCache};
 use microflow::coordinator::{
-    BatcherConfig, Fleet, PoolSpec, QosClass, QosProfile, Request, ServerConfig,
+    AutoscalePolicy, BatcherConfig, Fleet, PoolSpec, QosClass, QosProfile, Request, ScaleAction,
+    ServerConfig,
 };
 use microflow::synth::random_fc_chain;
 use microflow::util::Prng;
@@ -344,6 +351,218 @@ fn stress_mixed_class_workload_routes_sheds_and_cancels() {
         want.0,
         "seed {seed}\n{snap}"
     );
+    if let Ok(fleet) = Arc::try_unwrap(fleet) {
+        fleet.shutdown();
+    }
+}
+
+/// The autoscaler gate: an elastic single-pool fleet under a bursty
+/// phase-shifting workload with concurrent scale-up and scale-down.
+///
+/// Deterministic by construction, not by timing:
+/// * the SLO-breach signal is carried by requests whose deadline is
+///   already expired at submit time — they are shed whatever the
+///   scheduling, so *some* tick's window must observe `shed > 0` and
+///   scale up (ticks run concurrently with the burst AND once after it
+///   joins, so the signal cannot be missed);
+/// * normal replies are bit-exact against the single-session native
+///   truth — workers joined mid-burst by `add_replica` serve the same
+///   warm compiled plan;
+/// * scale-downs drain gracefully: the accounting
+///   `completed + shed + cancelled == submitted` holds across the whole
+///   run, so no accepted request was dropped while workers retired;
+/// * after the idle phase the pool is provably back at its floor
+///   (asserted on `FleetSnapshot` replica counts).
+#[test]
+fn stress_autoscale_bursts_scale_up_and_idle_scales_down_without_losses() {
+    let seed = seed() ^ 0xE1A5_71C0;
+    eprintln!("autoscale stress seed = {seed}");
+    let mut rng = Prng::new(seed);
+    let m = random_fc_chain(&mut rng, 2);
+    let mut native = Session::builder(&m).engine(Engine::MicroFlow).build().unwrap();
+    let ilen = native.input_len();
+    const DISTINCT: usize = 16;
+    let inputs: Vec<Vec<i8>> = (0..DISTINCT).map(|_| rng.i8_vec(ilen)).collect();
+    let truths: Vec<Vec<i8>> = inputs.iter().map(|x| native.run(x).unwrap()).collect();
+
+    let cache = Arc::new(SessionCache::new());
+    let factory =
+        Arc::new(ReplicaFactory::new(&m, Engine::MicroFlow).cache(&cache).label_prefix("native"));
+    let policy = AutoscalePolicy::new(1, 4).idle_ticks_down(2).cooldown_ticks(0);
+    let config = ServerConfig {
+        queue_depth: 32,
+        batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) },
+        adaptive: true,
+    };
+    let fleet = Arc::new(
+        Fleet::start(vec![PoolSpec::new("native", vec![factory.provision().unwrap()])
+            .config(config)
+            .autoscale(policy, Arc::clone(&factory))])
+        .unwrap(),
+    );
+
+    const THREADS: usize = 4;
+    const PER_THREAD: usize = 50;
+    const CHAOS: usize = 40;
+    let inputs = Arc::new(inputs);
+    let truths = Arc::new(truths);
+    let mut max_live = 1usize;
+    let mut want = (0u64, 0u64, 0u64); // (completed, shed, cancelled)
+
+    for phase in 0..2u64 {
+        // ---- burst: concurrent clients + deterministic SLO casualties,
+        //      with the controller ticking live against the traffic ----
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        std::thread::scope(|s| {
+            let mut clients = Vec::new();
+            for t in 0..THREADS {
+                let fleet = Arc::clone(&fleet);
+                let inputs = Arc::clone(&inputs);
+                let truths = Arc::clone(&truths);
+                clients.push(s.spawn(move || {
+                    let mut trng =
+                        Prng::new(seed ^ phase ^ (t as u64).wrapping_mul(0x9E37_79B9));
+                    for r in 0..PER_THREAD {
+                        let idx = trng.below(DISTINCT as u64) as usize;
+                        let got = fleet
+                            .submit(Request::interactive(inputs[idx].clone()))
+                            .and_then(|tk| tk.wait())
+                            .unwrap_or_else(|e| {
+                                panic!("seed {seed} phase {phase} thread {t} req {r}: {e:#}")
+                            });
+                        assert_eq!(
+                            got, truths[idx],
+                            "seed {seed} phase {phase} thread {t} req {r}: reply must be \
+                             bit-exact native output"
+                        );
+                    }
+                }));
+            }
+            // chaos client: expired deadlines (deterministic sheds — the
+            // breach signal) and pre-submit cancels, interleaved
+            let chaos = {
+                let fleet = Arc::clone(&fleet);
+                let inputs = Arc::clone(&inputs);
+                s.spawn(move || {
+                    let mut trng = Prng::new(seed ^ phase ^ 0xC4A0_5000);
+                    for r in 0..CHAOS {
+                        let idx = trng.below(DISTINCT as u64) as usize;
+                        let x = inputs[idx].clone();
+                        if r % 2 == 0 {
+                            let req = Request::new(x).with_deadline(Instant::now());
+                            let err = fleet
+                                .submit(req)
+                                .and_then(|tk| tk.wait())
+                                .expect_err("expired deadline must not produce a reply");
+                            assert!(
+                                err.to_string().contains("shed"),
+                                "seed {seed} phase {phase} chaos {r}: {err:#}"
+                            );
+                        } else {
+                            let req = Request::interactive(x);
+                            req.cancel();
+                            let err = fleet
+                                .submit(req)
+                                .and_then(|tk| tk.wait())
+                                .expect_err("cancelled ticket must not produce a reply");
+                            assert!(
+                                err.to_string().contains("cancelled"),
+                                "seed {seed} phase {phase} chaos {r}: {err:#}"
+                            );
+                        }
+                    }
+                })
+            };
+            // controller: tick concurrently until every client is done
+            let ticker = {
+                let fleet = Arc::clone(&fleet);
+                let stop = Arc::clone(&stop);
+                s.spawn(move || {
+                    let mut max_seen = 1usize;
+                    while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                        for r in fleet.tick() {
+                            max_seen = max_seen.max(r.live_replicas);
+                        }
+                        std::thread::sleep(Duration::from_millis(1));
+                    }
+                    max_seen
+                })
+            };
+            for c in clients {
+                c.join().unwrap();
+            }
+            chaos.join().unwrap();
+            stop.store(true, std::sync::atomic::Ordering::Relaxed);
+            max_live = max_live.max(ticker.join().unwrap());
+        });
+        want.0 += (THREADS * PER_THREAD) as u64;
+        want.1 += (CHAOS / 2) as u64;
+        want.2 += (CHAOS / 2) as u64;
+
+        // one guaranteed post-burst tick: even if every concurrent tick
+        // missed the shed windows, this one observes the leftover deltas
+        // and must scale up (unless a concurrent tick already did)
+        let reports = fleet.tick();
+        let r = &reports[0];
+        max_live = max_live.max(r.live_replicas);
+        assert!(
+            max_live >= 2,
+            "seed {seed} phase {phase}: burst never scaled up (live {}, decision {:?})",
+            r.live_replicas,
+            r.decision
+        );
+
+        // ---- idle: no traffic; ticks must walk the pool back to the
+        //      floor via graceful drain ----
+        // the concurrent ticker may already have drained the pool to the
+        // floor between the last client finishing and the stop flag — in
+        // that case reaching the floor IS the scale-down evidence
+        let at_floor_already = fleet.snapshot().per_pool[0].live_replicas() == 1;
+        let mut saw_down = false;
+        for _ in 0..30 {
+            let reports = fleet.tick();
+            let r = &reports[0];
+            if let Some(d) = r.decision {
+                saw_down |= matches!(d.action, ScaleAction::Down(_));
+            }
+            if r.live_replicas == 1 {
+                break;
+            }
+        }
+        let snap = fleet.snapshot();
+        assert!(
+            saw_down || at_floor_already,
+            "seed {seed} phase {phase}: idle never scaled down\n{snap}"
+        );
+        assert_eq!(
+            snap.per_pool[0].live_replicas(),
+            1,
+            "seed {seed} phase {phase}: pool not back at its floor\n{snap}"
+        );
+        // the burst after this idle phase proves the shrunken pool (and
+        // any still-draining victim) keeps serving bit-exactly
+    }
+
+    // ---- accounting across all concurrent scale events ----
+    let total = want.0 + want.1 + want.2;
+    let snap = fleet.snapshot();
+    assert_eq!(snap.totals.submitted, total, "seed {seed}\n{snap}");
+    assert_eq!(snap.totals.completed, want.0, "seed {seed}\n{snap}");
+    assert_eq!(snap.totals.shed, want.1, "seed {seed}\n{snap}");
+    assert_eq!(snap.totals.cancelled, want.2, "seed {seed}\n{snap}");
+    assert_eq!(snap.totals.errors, 0, "seed {seed}\n{snap}");
+    assert_eq!(
+        snap.totals.completed + snap.totals.shed + snap.totals.cancelled,
+        snap.totals.submitted,
+        "seed {seed}: every request resolves exactly once\n{snap}"
+    );
+    assert!(max_live >= 2, "seed {seed}: autoscaler never grew the pool");
+    let status = snap.per_pool[0].autoscale.expect("elastic pool must report its autoscaler");
+    assert_eq!((status.min_replicas, status.max_replicas), (1, 4));
+    assert!(status.ticks > 0, "seed {seed}: the controller never ticked");
+    // replies kept flowing the whole time — and the warm factory never
+    // recompiled for any of the concurrent scale-ups
+    assert_eq!(factory.warm_cache().misses(), 2, "seed {seed}: scale-up recompiled the model");
     if let Ok(fleet) = Arc::try_unwrap(fleet) {
         fleet.shutdown();
     }
