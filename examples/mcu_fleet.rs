@@ -32,7 +32,7 @@ fn main() -> Result<()> {
                 // on the smallest device MicroFlow switches paging on,
                 // exactly as a user would (Sec. 4.3)
                 let paging = engine == Engine::MicroFlow && mcu.ram_bytes <= 4 * 1024;
-                let compiled = CompiledModel::compile(&model, CompileOptions { paging })?;
+                let compiled = CompiledModel::compile(&model, CompileOptions { paging, ..Default::default() })?;
                 let fp = match engine {
                     Engine::MicroFlow => sim::memory_model::microflow_footprint(&compiled, mcu),
                     Engine::Tflm => sim::memory_model::tflm_footprint(&model, &arena, mcu),
@@ -74,7 +74,7 @@ fn main() -> Result<()> {
     // the paper's headline qualitative claims, asserted:
     println!("checking paper claims ...");
     let sine = MfbModel::load(art.join("sine.mfb"))?;
-    let compiled = CompiledModel::compile(&sine, CompileOptions { paging: true })?;
+    let compiled = CompiledModel::compile(&sine, CompileOptions { paging: true, ..Default::default() })?;
     let atmega = sim::mcu::by_name("ATmega328").unwrap();
     let fp = sim::memory_model::microflow_footprint(&compiled, atmega);
     assert!(

@@ -36,7 +36,7 @@ fn main() -> Result<()> {
 
     println!("\n== sine predictor on the simulated ATmega328 ==");
     for paging in [false, true] {
-        let compiled = CompiledModel::compile(&model, CompileOptions { paging })?;
+        let compiled = CompiledModel::compile(&model, CompileOptions { paging, ..Default::default() })?;
         let fp = sim::memory_model::microflow_footprint(&compiled, atmega);
         let fit = sim::memory_model::fits(atmega, Engine::MicroFlow, fp);
         let t = sim::inference_seconds(&compiled, atmega, Engine::MicroFlow);

@@ -29,7 +29,7 @@ fn main() -> anyhow::Result<()> {
 
     for mcu in MCUS.iter() {
         let paging = mcu.ram_bytes <= 4 * 1024;
-        let compiled = CompiledModel::compile(&model, CompileOptions { paging })?;
+        let compiled = CompiledModel::compile(&model, CompileOptions { paging, ..Default::default() })?;
         let mf = sim::memory_model::microflow_footprint(&compiled, mcu);
         let tf = sim::memory_model::tflm_footprint(&model, &arena, mcu);
         let mf_ok = sim::memory_model::fits(mcu, Engine::MicroFlow, mf).is_ok();

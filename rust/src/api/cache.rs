@@ -45,7 +45,7 @@ pub fn content_hash64(bytes: &[u8]) -> u64 {
 /// `SessionBuilder` that should share compiled plans.
 #[derive(Debug, Default)]
 pub struct SessionCache {
-    compiled: Mutex<HashMap<(u64, bool), Arc<CompiledModel>>>,
+    compiled: Mutex<HashMap<(u64, bool, bool), Arc<CompiledModel>>>,
     bytes: Mutex<HashMap<u64, Arc<Vec<u8>>>>,
     hits: AtomicU64,
     misses: AtomicU64,
@@ -93,23 +93,27 @@ impl SessionCache {
         Ok(self.bytes_entry(source)?.1)
     }
 
-    /// Compiled plan for `source` under the given paging mode; compiles at
-    /// most once per (content hash, paging) pair.
+    /// Compiled plan for `source` under the given paging/certify modes;
+    /// compiles at most once per (content hash, paging, certify) triple.
+    /// Certified and uncertified plans are distinct entries: a certified
+    /// plan carries its `Certificate`, and a builder asking for
+    /// certification must never be handed an unverified cached plan.
     pub(crate) fn compiled_plan(
         &self,
         source: ModelSource,
         paging: bool,
+        certify: bool,
     ) -> Result<Arc<CompiledModel>> {
         let (h, bytes) = self.bytes_entry(source)?;
-        if let Some(c) = self.compiled.lock().unwrap().get(&(h, paging)) {
+        if let Some(c) = self.compiled.lock().unwrap().get(&(h, paging, certify)) {
             self.record(true);
             return Ok(Arc::clone(c));
         }
         // compile outside the lock (it can be seconds for big models);
         // a racing builder may compile too — last insert wins, both valid
         let model = MfbModel::parse(&bytes)?;
-        let compiled = Arc::new(CompiledModel::compile(&model, CompileOptions { paging })?);
-        self.compiled.lock().unwrap().insert((h, paging), Arc::clone(&compiled));
+        let compiled = Arc::new(CompiledModel::compile(&model, CompileOptions { paging, certify })?);
+        self.compiled.lock().unwrap().insert((h, paging, certify), Arc::clone(&compiled));
         self.record(false);
         Ok(compiled)
     }
@@ -158,6 +162,20 @@ mod tests {
         // second build reuses the bytes but compiles its own paged plan
         assert_eq!(cache.misses(), 3);
         assert_eq!(a.run(&[3, 1]).unwrap(), b.run(&[3, 1]).unwrap());
+    }
+
+    #[test]
+    fn certify_modes_are_cached_separately() {
+        // an uncertified cached plan must never satisfy a certifying build
+        let cache = Arc::new(SessionCache::new());
+        let certified = cache.compiled_plan(tiny_mfb().into(), false, true).unwrap();
+        let unchecked = cache.compiled_plan(tiny_mfb().into(), false, false).unwrap();
+        assert!(certified.certificate.is_some());
+        assert!(unchecked.certificate.is_none());
+        assert_eq!(cache.misses(), 3); // bytes + two distinct compiles
+        // and a repeat certifying build hits the certified entry
+        let again = cache.compiled_plan(tiny_mfb().into(), false, true).unwrap();
+        assert!(Arc::ptr_eq(&certified, &again));
     }
 
     #[test]

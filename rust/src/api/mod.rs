@@ -459,6 +459,7 @@ pub struct SessionBuilder {
     source: ModelSource,
     engine: Engine,
     paging: bool,
+    certify: bool,
     preferred_batch: Option<usize>,
     pjrt_artifacts: Option<(PathBuf, String)>,
     label: Option<String>,
@@ -471,6 +472,7 @@ impl SessionBuilder {
             source: source.into(),
             engine: Engine::MicroFlow,
             paging: false,
+            certify: true,
             preferred_batch: None,
             pjrt_artifacts: None,
             label: None,
@@ -489,6 +491,17 @@ impl SessionBuilder {
     /// off.
     pub fn paging(mut self, paging: bool) -> Self {
         self.paging = paging;
+        self
+    }
+
+    /// Statically certify the compiled plan (native engine only; see
+    /// [`crate::compiler::verify`]): shape/packing soundness, an
+    /// independent replay of the memory plan, and worst-case accumulator
+    /// interval analysis. Default: **on** — pass `false` to skip the
+    /// analysis (e.g. per-request compiles on a latency budget; the plan
+    /// then carries no [`crate::compiler::Certificate`]).
+    pub fn certify(mut self, certify: bool) -> Self {
+        self.certify = certify;
         self
     }
 
@@ -529,12 +542,13 @@ impl SessionBuilder {
         let inner: Box<dyn InferenceSession> = match self.engine {
             Engine::MicroFlow => match &self.cache {
                 Some(cache) => Box::new(NativeSession::from_compiled(
-                    cache.compiled_plan(self.source, self.paging)?,
+                    cache.compiled_plan(self.source, self.paging, self.certify)?,
                     self.preferred_batch,
                 )),
                 None => Box::new(NativeSession::create(
                     self.source.into_model()?,
                     self.paging,
+                    self.certify,
                     self.preferred_batch,
                 )?),
             },

@@ -45,10 +45,11 @@ impl NativeSession {
     pub(super) fn create(
         model: MfbModel,
         paging: bool,
+        certify: bool,
         preferred_batch: Option<usize>,
     ) -> Result<NativeSession> {
         let signature = IoSignature::of_model(&model);
-        let engine = MicroFlowEngine::new(&model, CompileOptions { paging })?;
+        let engine = MicroFlowEngine::new(&model, CompileOptions { paging, certify })?;
         Ok(NativeSession {
             engine,
             signature,
@@ -151,7 +152,9 @@ pub struct PjrtSession {
 // executable holding clones of that `Rc`; the whole object graph moves to
 // exactly one worker thread at `Server::start` and is never aliased across
 // threads afterwards (each worker owns its session exclusively; the trait
-// takes `&mut self`).
+// takes `&mut self`). This is the crate's single `#![deny(unsafe_code)]`
+// exemption.
+#[allow(unsafe_code)]
 unsafe impl Send for PjrtSession {}
 
 impl PjrtSession {

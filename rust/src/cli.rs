@@ -7,6 +7,9 @@
 //! * `verify <model>`    — golden-vector cross-check of all engines;
 //! * `deploy <model> <mcu>` — simulate a deployment: memory fit, timing,
 //!   energy on one Table-4 device;
+//! * `audit <model>`     — statically certify a compiled plan (shape,
+//!   memory and overflow soundness; `compiler::verify`), print the
+//!   certificate report;
 //! * `serve <model>`     — spin up the coordinator under synthetic load,
 //!   as a homogeneous replica set (`--replicas`) or a heterogeneous
 //!   fleet (`--engine-mix microflow:2,tflm:1`).
@@ -130,6 +133,16 @@ USAGE:
   microflow verify  <model>                golden cross-check of all engines
   microflow deploy  <model> <mcu> [--paging] [--engine microflow|tflm]
                                            simulate a Table-4 deployment
+  microflow audit   <model|path.mfb> [--paging]
+                                           statically certify the compiled plan
+                                           and print the certificate report
+                                           (peak RAM, per-step live bytes,
+                                           worst-case accumulator headroom)
+  microflow audit   --synth-zoo [--seed N] certify every synthetic-zoo model,
+                                           paged and unpaged (CI gate)
+  microflow audit   --codes                print the stable error-code table
+                                           (V1xx plan / V2xx memory / V3xx
+                                           arithmetic / E4xx decode)
   microflow serve   <model> [--requests N] [--rate RPS] [--backend E]
                     [--replicas R] [--engine-mix MIX] [--batch B]
                     [--no-adaptive] [--paging] [--default-class C]

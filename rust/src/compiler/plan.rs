@@ -21,17 +21,28 @@ use super::memory::MemoryPlan;
 use super::pack;
 use super::paging::PagePlan;
 use super::preprocess;
+use super::verify::Certificate;
 use crate::format::mfb::{MfbModel, OpCode, OpOptions, Padding};
 use crate::kernels::microkernel::PackedConvFilters;
 use crate::kernels::view::ConvGeometry;
 use crate::tensor::quant::{PreComputed, QParams};
 
 /// Compilation options.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug)]
 pub struct CompileOptions {
     /// Execute FullyConnected layers page-by-page (paper Sec. 4.3). Slower
     /// but shrinks the working set to one page (for 2 kB-RAM devices).
     pub paging: bool,
+    /// Run the static certifier ([`super::verify`]) on the finished plan
+    /// and attach the [`Certificate`]. On by default; opting out skips the
+    /// analysis but leaves the plan otherwise identical.
+    pub certify: bool,
+}
+
+impl Default for CompileOptions {
+    fn default() -> Self {
+        CompileOptions { paging: false, certify: true }
+    }
 }
 
 /// One executable step.
@@ -162,6 +173,9 @@ pub struct CompiledModel {
     pub memory: MemoryPlan,
     pub page_plan: Option<PagePlan>,
     pub options: CompileOptions,
+    /// Proof artifact from the static certifier; `Some` whenever the plan
+    /// was compiled with `options.certify` (the default).
+    pub certificate: Option<Certificate>,
 }
 
 impl CompiledModel {
@@ -173,6 +187,9 @@ impl CompiledModel {
         let mut steps = Vec::with_capacity(model.operators.len());
         let mut cur_tensor = model.graph_inputs[0];
         let mut page_plan: Option<PagePlan> = None;
+        let tensor = |idx: usize| {
+            model.tensors.get(idx).ok_or_else(|| anyhow::anyhow!("tensor index {idx} out of range"))
+        };
 
         for (oi, op) in model.operators.iter().enumerate() {
             let (want_in, _) = preprocess::expected_arity(op.opcode);
@@ -186,17 +203,17 @@ impl CompiledModel {
                     op.opcode.name()
                 );
             }
-            let x_t = &model.tensors[x_idx];
+            let x_t = tensor(x_idx)?;
             let y_idx = op.output(0)?;
-            let y_t = &model.tensors[y_idx];
-            let in_len: usize = x_t.dims.iter().product();
-            let out_len: usize = y_t.dims.iter().product();
+            let y_t = tensor(y_idx)?;
+            let in_len = checked_numel(oi, &x_t.dims)?;
+            let out_len = checked_numel(oi, &y_t.dims)?;
             let act = preprocess::fused_act_of(op)?;
 
             let (kind, scratch_len) = match op.opcode {
                 OpCode::FullyConnected => {
-                    let w_t = &model.tensors[op.input(1)?];
-                    let b_t = &model.tensors[op.input(2)?];
+                    let w_t = tensor(op.input(1)?)?;
+                    let b_t = tensor(op.input(2)?)?;
                     let pc = preprocess::preprocess_fully_connected(x_t, w_t, b_t, y_t, act)
                         .with_context(|| format!("op #{oi}"))?;
                     let (k, n) = (w_t.dims[0], w_t.dims[1]);
@@ -218,8 +235,8 @@ impl CompiledModel {
                     )
                 }
                 OpCode::Conv2D => {
-                    let f_t = &model.tensors[op.input(1)?];
-                    let b_t = &model.tensors[op.input(2)?];
+                    let f_t = tensor(op.input(1)?)?;
+                    let b_t = tensor(op.input(2)?)?;
                     let (stride, padding) = match op.options {
                         OpOptions::Conv2D { stride, padding, .. } => (stride, padding),
                         _ => bail!("op #{oi}: bad Conv2D options"),
@@ -250,15 +267,15 @@ impl CompiledModel {
                         StepKind::Conv2D {
                             geo,
                             filters,
-                            z_x: x_t.qparams.zero_point as i8,
+                            z_x: zp_i8(oi, x_t.qparams.zero_point)?,
                             pc,
                         },
                         scratch,
                     )
                 }
                 OpCode::DepthwiseConv2D => {
-                    let w_t = &model.tensors[op.input(1)?];
-                    let b_t = &model.tensors[op.input(2)?];
+                    let w_t = tensor(op.input(1)?)?;
+                    let b_t = tensor(op.input(2)?)?;
                     let (stride, padding, mult) = match op.options {
                         OpOptions::DepthwiseConv2D { stride, padding, depth_multiplier, .. } => {
                             (stride, padding, depth_multiplier)
@@ -288,7 +305,7 @@ impl CompiledModel {
                             geo,
                             depth_multiplier: mult,
                             filters,
-                            z_x: x_t.qparams.zero_point as i8,
+                            z_x: zp_i8(oi, x_t.qparams.zero_point)?,
                             pc,
                         },
                         scratch,
@@ -317,7 +334,7 @@ impl CompiledModel {
                     (
                         StepKind::AveragePool2D {
                             geo,
-                            z_x: x_t.qparams.zero_point as i8,
+                            z_x: zp_i8(oi, x_t.qparams.zero_point)?,
                             ratio,
                             z_y: y_t.qparams.zero_point,
                             act_min,
@@ -368,7 +385,7 @@ impl CompiledModel {
         }
 
         let memory = MemoryPlan::analyze(&steps);
-        Ok(CompiledModel {
+        let mut compiled = CompiledModel {
             steps,
             input_shape: model.input_shape(),
             output_shape: model.output_shape(),
@@ -377,7 +394,13 @@ impl CompiledModel {
             memory,
             page_plan,
             options,
-        })
+            certificate: None,
+        };
+        if options.certify {
+            compiled.certificate =
+                Some(super::verify::verify(&compiled).context("plan failed certification")?);
+        }
+        Ok(compiled)
     }
 
     /// Per-sample input element count.
@@ -405,6 +428,20 @@ fn check_out_dims(oi: usize, dims: &[usize], oh: usize, ow: usize, c: usize) -> 
         bail!("op #{oi}: output dims {:?} don't match computed [1,{oh},{ow},{c}]", dims);
     }
     Ok(())
+}
+
+/// Element count with overflow surfaced as a compile error instead of a
+/// debug panic / release wraparound.
+fn checked_numel(oi: usize, dims: &[usize]) -> Result<usize> {
+    dims.iter()
+        .try_fold(1usize, |a, &b| a.checked_mul(b))
+        .with_context(|| format!("op #{oi}: tensor element count overflows usize ({dims:?})"))
+}
+
+/// Checked i32 → i8 zero-point narrowing (int8 tensors must carry an
+/// in-range zero point; a hostile container can claim otherwise).
+fn zp_i8(oi: usize, zp: i32) -> Result<i8> {
+    i8::try_from(zp).map_err(|_| anyhow::anyhow!("op #{oi}: int8 zero point {zp} out of range"))
 }
 
 #[cfg(test)]
@@ -439,7 +476,7 @@ mod tests {
     #[test]
     fn paging_option_creates_page_plan() {
         let m = tiny();
-        let c = CompiledModel::compile(&m, CompileOptions { paging: true }).unwrap();
+        let c = CompiledModel::compile(&m, CompileOptions { paging: true, ..Default::default() }).unwrap();
         let pp = c.page_plan.expect("page plan");
         assert_eq!(pp.pages, 3); // one per output neuron
         assert!(c.steps[0].scratch_len > 0);

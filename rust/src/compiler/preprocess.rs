@@ -34,6 +34,9 @@ pub fn preprocess_fully_connected(
     };
     let w = w_t.data_i8()?;
     let b = b_t.data_i32()?;
+    if w.len() != k.checked_mul(n).unwrap_or(usize::MAX) {
+        bail!("FC weight payload {} elements != K*N = {k}*{n}", w.len());
+    }
     if b.len() != n {
         bail!("FC bias len {} != N {}", b.len(), n);
     }
@@ -68,6 +71,9 @@ pub fn preprocess_conv2d(
     };
     let f = f_t.data_i8()?;
     let b = b_t.data_i32()?;
+    if f.len() != c_out.checked_mul(kkc).unwrap_or(usize::MAX) {
+        bail!("Conv2D filter payload {} elements != Cout*KH*KW*Cin = {c_out}*{kkc}", f.len());
+    }
     if b.len() != c_out {
         bail!("Conv2D bias len {} != Cout {}", b.len(), c_out);
     }
@@ -104,6 +110,9 @@ pub fn preprocess_depthwise(
     };
     let w = w_t.data_i8()?;
     let b = b_t.data_i32()?;
+    if w.len() != kk.checked_mul(c_out).unwrap_or(usize::MAX) {
+        bail!("DW filter payload {} elements != KH*KW*Cout = {kk}*{c_out}", w.len());
+    }
     if b.len() != c_out {
         bail!("DW bias len {} != Cout {}", b.len(), c_out);
     }
@@ -153,9 +162,9 @@ mod tests {
 
     fn td(dims: Vec<usize>, qp: QParams, data_i8: Option<Vec<i8>>, data_i32: Option<Vec<i32>>) -> TensorDef {
         let (dtype, data) = if let Some(d) = data_i8 {
-            (DType::I8, d.iter().map(|&v| v as u8).collect())
+            (DType::I8, d)
         } else if let Some(d) = data_i32 {
-            (DType::I32, d.iter().flat_map(|v| v.to_le_bytes()).collect())
+            (DType::I32, d.iter().flat_map(|v| v.to_le_bytes()).map(|b| b as i8).collect())
         } else {
             (DType::I8, Vec::new())
         };

@@ -1,0 +1,981 @@
+//! Compile-time model certification — static verification of compiled
+//! plans (DESIGN.md S5; the safety story of the paper made checkable).
+//!
+//! The compiler pipeline (preprocess → pack → plan) is *assumed* correct
+//! everywhere else in this crate; this pass proves the properties the
+//! runtime relies on **by analysis, not by execution**, and attaches the
+//! proof artifacts to the plan as a [`Certificate`]:
+//!
+//! 1. **Plan soundness** (`V1xx`) — steps chain
+//!    (`out_len[i] == in_len[i+1]`, endpoints match the model signature),
+//!    packed panel images match their `ConvGeometry`
+//!    (`ceil(Cout/NR)*NR`-padded sizing with zero tail lanes, depthwise
+//!    pre-transpose extents), page plans cover every FullyConnected row
+//!    exactly once, and every step's scratch claim equals what its kernel
+//!    actually stages.
+//! 2. **Memory-plan soundness** (`V2xx`) — the ping-pong buffer schedule
+//!    is replayed independently of [`MemoryPlan`] and every claim
+//!    (`peak`, `peak_step`, per-step live sets, buffer and scratch sizes)
+//!    is cross-checked. The replay itself is the disjointness proof: each
+//!    non-Reshape step reads one ping-pong buffer and writes the other
+//!    (with kernel scratch a third region), so input/output/scratch can
+//!    never alias while live; the only in-place step, Reshape, is proven
+//!    length-preserving.
+//! 3. **Arithmetic soundness** (`V3xx`) — worst-case interval arithmetic
+//!    over i8 inputs × the *actual* compile-time weights summed over K,
+//!    proving every i32 accumulator (dot product, row/view sum, and each
+//!    intermediate of the Eq. 4/7/10/13 epilogue
+//!    `acc − z_W·Σx − w_zp_term[j] + kzxzw`) cannot overflow in any
+//!    evaluation order, and that every folded [`PreComputed`] constant is
+//!    finite and in representable range.
+//!
+//! Errors carry **stable codes** (see [`ERROR_CODE_TABLE`]); the decode
+//! front door uses the matching `E4xx` family
+//! ([`crate::format::error::DecodeError`]). `microflow audit` prints the
+//! certificate report for a model.
+
+use std::fmt;
+
+use super::memory::StepMemory;
+use super::pack::NR;
+use super::paging::PagePlan;
+use super::plan::{CompiledModel, Step, StepKind};
+use crate::kernels::view::ConvGeometry;
+use crate::tensor::quant::PreComputed;
+
+/// Stable verification error codes, grouped by analysis pass. The decode
+/// pass (`E4xx`) lives in [`crate::format::error`]; together the two
+/// tables are the crate's complete machine-checkable failure vocabulary.
+pub const ERROR_CODE_TABLE: &str = "\
+V101  plan    broken step chain (step I/O lengths don't connect)
+V102  plan    step shape/geometry inconsistent with its payload
+V103  plan    FullyConnected weight payload length mismatch
+V104  plan    packed Conv2D panel image malformed (sizing/tail lanes)
+V105  plan    depthwise pre-transpose extents mismatch
+V106  plan    page plan does not cover the paged FC rows exactly once
+V107  plan    scratch claim differs from the kernel's staging need
+V201  memory  peak RAM / peak step claim mismatch
+V202  memory  per-step live-set claim mismatch
+V203  memory  ping-pong buffer sizing mismatch (overlap possible)
+V204  memory  shared kernel scratch sizing mismatch
+V205  memory  in-place step is not length-preserving (aliasing)
+V301  arith   i32 accumulator can overflow under worst-case i8 inputs
+V302  arith   requantization multiplier non-finite or non-positive
+V303  arith   folded bias constant non-finite
+V304  arith   activation clamp bounds inverted
+V305  arith   folded constant vectors sized unlike the output channels
+E401  decode  bad magic or unsupported container version
+E402  decode  truncated input
+E403  decode  invalid UTF-8 in a string field
+E404  decode  invalid count/length field (overflow or impossible)
+E405  decode  tensor index out of range
+E406  decode  trailing bytes after a complete structure
+E407  decode  unknown enum code (opcode/dtype/padding/activation)
+E408  decode  payload size disagrees with dims × dtype
+";
+
+/// A failed static-verification obligation: stable `code`, offending
+/// `step` (when the obligation is per-step) and a human-readable message.
+#[derive(Clone, Debug)]
+pub struct VerifyError {
+    pub code: &'static str,
+    pub step: Option<usize>,
+    pub msg: String,
+}
+
+impl VerifyError {
+    fn new(code: &'static str, step: impl Into<Option<usize>>, msg: String) -> Self {
+        VerifyError { code, step: step.into(), msg }
+    }
+}
+
+impl fmt::Display for VerifyError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.step {
+            Some(i) => write!(f, "{}: step #{i}: {}", self.code, self.msg),
+            None => write!(f, "{}: {}", self.code, self.msg),
+        }
+    }
+}
+
+impl std::error::Error for VerifyError {}
+
+/// Proven worst-case bound for one step's i32 accumulator chain.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AccBound {
+    pub lo: i64,
+    pub hi: i64,
+}
+
+impl AccBound {
+    const ZERO: AccBound = AccBound { lo: 0, hi: 0 };
+
+    fn union(self, o: AccBound) -> AccBound {
+        AccBound { lo: self.lo.min(o.lo), hi: self.hi.max(o.hi) }
+    }
+
+    fn max_abs(self) -> i64 {
+        self.lo.unsigned_abs().max(self.hi.unsigned_abs()) as i64
+    }
+
+    fn fits_i32(self) -> bool {
+        self.lo >= i32::MIN as i64 && self.hi <= i32::MAX as i64
+    }
+
+    /// Unused i32 magnitude bits above the proven bound (31 when the
+    /// accumulator is identically zero).
+    pub fn headroom_bits(self) -> u32 {
+        let used = 64 - (self.max_abs() as u64).leading_zeros();
+        31u32.saturating_sub(used)
+    }
+}
+
+/// One step's certified facts.
+#[derive(Clone, Debug)]
+pub struct StepCert {
+    pub op: &'static str,
+    /// Live bytes while this step runs (input + output + scratch).
+    pub live_bytes: usize,
+    /// Worst-case accumulator interval (identically zero for
+    /// non-accumulating steps).
+    pub acc: AccBound,
+}
+
+/// The proof artifact attached to a certified [`CompiledModel`].
+#[derive(Clone, Debug)]
+pub struct Certificate {
+    /// Independently recomputed RAM high-water mark (bytes).
+    pub peak_ram: usize,
+    /// Step index where the peak occurs.
+    pub peak_step: usize,
+    /// Bytes the executor allocates (ping-pong buffers + scratch).
+    pub executor_bytes: usize,
+    pub steps: Vec<StepCert>,
+}
+
+impl Certificate {
+    /// Smallest accumulator headroom over all steps (31 for weightless
+    /// models).
+    pub fn min_headroom_bits(&self) -> u32 {
+        self.steps.iter().map(|s| s.acc.headroom_bits()).min().unwrap_or(31)
+    }
+}
+
+impl fmt::Display for Certificate {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(
+            f,
+            "certified: {} steps, peak RAM {} B at step #{}, executor allocates {} B, \
+             min accumulator headroom {} bits",
+            self.steps.len(),
+            self.peak_ram,
+            self.peak_step,
+            self.executor_bytes,
+            self.min_headroom_bits()
+        )?;
+        writeln!(f, "  {:<5} {:<16} {:>8}  {:<28} {}", "step", "op", "live B", "accumulator range", "headroom")?;
+        for (i, s) in self.steps.iter().enumerate() {
+            writeln!(
+                f,
+                "  {:<5} {:<16} {:>8}  {:<28} {} bits",
+                format!("#{i}"),
+                s.op,
+                s.live_bytes,
+                format!("[{}, {}]", s.acc.lo, s.acc.hi),
+                s.acc.headroom_bits()
+            )?;
+        }
+        Ok(())
+    }
+}
+
+/// Certify a compiled plan. Returns the [`Certificate`] or the first
+/// failed obligation.
+pub fn verify(m: &CompiledModel) -> Result<Certificate, VerifyError> {
+    verify_plan(m)?;
+    let (peak_ram, peak_step, executor_bytes, live) = verify_memory(m)?;
+    let accs = verify_arithmetic(m)?;
+    let steps = m
+        .steps
+        .iter()
+        .zip(live)
+        .zip(accs)
+        .map(|((s, live_bytes), acc)| StepCert { op: s.kind.name(), live_bytes, acc })
+        .collect();
+    Ok(Certificate { peak_ram, peak_step, executor_bytes, steps })
+}
+
+fn prod(i: usize, what: &str, dims: &[usize]) -> Result<usize, VerifyError> {
+    dims.iter().try_fold(1usize, |a, &b| a.checked_mul(b)).ok_or_else(|| {
+        VerifyError::new("V102", i, format!("{what} element count overflows usize"))
+    })
+}
+
+fn check_geometry(i: usize, geo: &ConvGeometry) -> Result<(), VerifyError> {
+    let fields = [
+        geo.in_h, geo.in_w, geo.in_c, geo.k_h, geo.k_w, geo.stride_h, geo.stride_w, geo.out_h,
+        geo.out_w,
+    ];
+    if fields.contains(&0) {
+        return Err(VerifyError::new("V102", i, format!("degenerate convolution geometry {geo:?}")));
+    }
+    Ok(())
+}
+
+fn check_io_lens(
+    i: usize,
+    s: &Step,
+    want_in: usize,
+    want_out: usize,
+) -> Result<(), VerifyError> {
+    if s.in_len != want_in || s.out_len != want_out {
+        return Err(VerifyError::new(
+            "V102",
+            i,
+            format!(
+                "step I/O lengths ({}, {}) don't match the payload's ({want_in}, {want_out})",
+                s.in_len, s.out_len
+            ),
+        ));
+    }
+    Ok(())
+}
+
+/// Pass 1: shape/plan soundness (`V1xx`).
+fn verify_plan(m: &CompiledModel) -> Result<(), VerifyError> {
+    let mut prev = m.input_len();
+    for (i, s) in m.steps.iter().enumerate() {
+        if s.in_len != prev {
+            return Err(VerifyError::new(
+                "V101",
+                i,
+                format!("input length {} != previous output length {prev}", s.in_len),
+            ));
+        }
+        prev = s.out_len;
+
+        match &s.kind {
+            StepKind::FullyConnected { k, n, weights, .. } => {
+                check_io_lens(i, s, *k, *n)?;
+                let want = prod(i, "FC weights", &[*k, *n])?;
+                if weights.len() != want {
+                    return Err(VerifyError::new(
+                        "V103",
+                        i,
+                        format!("FC weight payload {} elements, [K,N]=[{k},{n}] needs {want}", weights.len()),
+                    ));
+                }
+            }
+            StepKind::Conv2D { geo, filters, .. } => {
+                check_geometry(i, geo)?;
+                let in_len = prod(i, "conv input", &[geo.in_h, geo.in_w, geo.in_c])?;
+                let out_len = prod(i, "conv output", &[geo.out_h, geo.out_w, filters.c_out])?;
+                check_io_lens(i, s, in_len, out_len)?;
+                let kkc = prod(i, "conv window", &[geo.k_h, geo.k_w, geo.in_c])?;
+                if filters.c_out == 0 || filters.kkc != kkc {
+                    return Err(VerifyError::new(
+                        "V104",
+                        i,
+                        format!(
+                            "panel image geometry (c_out {}, kkc {}) disagrees with the conv window {kkc}",
+                            filters.c_out, filters.kkc
+                        ),
+                    ));
+                }
+                let want = prod(i, "panel image", &[filters.c_out.div_ceil(NR), NR, kkc])?;
+                if filters.data.len() != want {
+                    return Err(VerifyError::new(
+                        "V104",
+                        i,
+                        format!(
+                            "panel image {} bytes, ceil({}/{NR})*{NR}*{kkc} needs {want}",
+                            filters.data.len(),
+                            filters.c_out
+                        ),
+                    ));
+                }
+                // tail lanes past c_out are computed-but-dropped; they must
+                // be zero so dropped lanes can never overflow differently
+                // than certified real lanes
+                let tail = filters.c_out % NR;
+                if tail != 0 {
+                    let panel = filters.panel(filters.panels() - 1);
+                    for k in 0..kkc {
+                        for r in tail..NR {
+                            if panel[k * NR + r] != 0 {
+                                return Err(VerifyError::new(
+                                    "V104",
+                                    i,
+                                    format!("non-zero tail lane {r} at window offset {k}"),
+                                ));
+                            }
+                        }
+                    }
+                }
+            }
+            StepKind::DepthwiseConv2D { geo, depth_multiplier, filters, .. } => {
+                check_geometry(i, geo)?;
+                if *depth_multiplier == 0 {
+                    return Err(VerifyError::new("V102", i, "zero depth multiplier".into()));
+                }
+                let c_out = prod(i, "DW channels", &[geo.in_c, *depth_multiplier])?;
+                let in_len = prod(i, "DW input", &[geo.in_h, geo.in_w, geo.in_c])?;
+                let out_len = prod(i, "DW output", &[geo.out_h, geo.out_w, c_out])?;
+                check_io_lens(i, s, in_len, out_len)?;
+                let want = prod(i, "DW filters", &[geo.k_h, geo.k_w, c_out])?;
+                if filters.len() != want {
+                    return Err(VerifyError::new(
+                        "V105",
+                        i,
+                        format!(
+                            "pre-transposed DW filters {} elements, [Cout,KH*KW]=[{c_out},{}] needs {want}",
+                            filters.len(),
+                            geo.k_h * geo.k_w
+                        ),
+                    ));
+                }
+            }
+            StepKind::AveragePool2D { geo, .. } => {
+                check_geometry(i, geo)?;
+                let in_len = prod(i, "pool input", &[geo.in_h, geo.in_w, geo.in_c])?;
+                let out_len = prod(i, "pool output", &[geo.out_h, geo.out_w, geo.in_c])?;
+                check_io_lens(i, s, in_len, out_len)?;
+            }
+            StepKind::Reshape => {} // length preservation is obligation V205
+            StepKind::Softmax { .. } | StepKind::Relu { .. } | StepKind::Relu6 { .. } => {
+                check_io_lens(i, s, s.in_len, s.in_len)?;
+            }
+        }
+
+        let want_scratch = expected_scratch(s);
+        if s.scratch_len != want_scratch {
+            return Err(VerifyError::new(
+                "V107",
+                i,
+                format!(
+                    "{} claims {} scratch bytes, its kernel stages {want_scratch}",
+                    s.kind.name(),
+                    s.scratch_len
+                ),
+            ));
+        }
+    }
+    if prev != m.output_len() {
+        return Err(VerifyError::new(
+            "V101",
+            None,
+            format!("plan ends with {prev} elements, model signature says {}", m.output_len()),
+        ));
+    }
+    verify_page_plan(m)
+}
+
+/// What each kernel actually stages (the planner's scratch contract).
+fn expected_scratch(s: &Step) -> usize {
+    match &s.kind {
+        StepKind::FullyConnected { k, paged, .. } => {
+            if *paged {
+                *k
+            } else {
+                0
+            }
+        }
+        StepKind::Conv2D { geo, .. } => {
+            if geo.has_boundary() {
+                geo.view_bytes()
+            } else {
+                0
+            }
+        }
+        StepKind::DepthwiseConv2D { geo, .. } | StepKind::AveragePool2D { geo, .. } => {
+            geo.view_bytes()
+        }
+        _ => 0,
+    }
+}
+
+/// Page-plan coverage: paged FullyConnected steps must together account
+/// for every output row exactly once, with the footprints the paper's
+/// footnote-13 costing gives (`V106`).
+fn verify_page_plan(m: &CompiledModel) -> Result<(), VerifyError> {
+    let mut want: Option<PagePlan> = None;
+    for (i, s) in m.steps.iter().enumerate() {
+        if let StepKind::FullyConnected { k, n, paged, .. } = &s.kind {
+            if *paged != m.options.paging {
+                return Err(VerifyError::new(
+                    "V106",
+                    i,
+                    format!("FC paged={paged} but the plan was compiled with paging={}", m.options.paging),
+                ));
+            }
+            if *paged {
+                let layer = PagePlan::for_fully_connected(*k, *n);
+                want = Some(match want.take() {
+                    Some(p) => p.merge(layer),
+                    None => layer,
+                });
+            }
+        }
+    }
+    match (&m.page_plan, want) {
+        (None, None) => Ok(()),
+        (Some(pp), Some(w)) if *pp == w => Ok(()),
+        (Some(pp), Some(w)) => Err(VerifyError::new(
+            "V106",
+            None,
+            format!("page plan {pp:?} does not cover the paged FC rows exactly once (recomputed {w:?})"),
+        )),
+        (Some(pp), None) => Err(VerifyError::new(
+            "V106",
+            None,
+            format!("page plan {pp:?} present but no step is paged"),
+        )),
+        (None, Some(w)) => Err(VerifyError::new(
+            "V106",
+            None,
+            format!("paged FC steps need a page plan covering {} rows, none attached", w.pages),
+        )),
+    }
+}
+
+/// Pass 2: memory-plan soundness (`V2xx`). Replays the ping-pong buffer
+/// schedule independently of [`super::memory::MemoryPlan::analyze`] and
+/// cross-checks every claim. Returns the recomputed
+/// `(peak, peak_step, executor_bytes, per-step live bytes)`.
+fn verify_memory(m: &CompiledModel) -> Result<(usize, usize, usize, Vec<usize>), VerifyError> {
+    let mut per_step: Vec<StepMemory> = Vec::with_capacity(m.steps.len());
+    let mut live = Vec::with_capacity(m.steps.len());
+    let (mut peak, mut peak_step) = (0usize, 0usize);
+    let (mut buf_a, mut buf_b, mut scratch) = (0usize, 0usize, 0usize);
+    let mut reads_a = true;
+    for (i, s) in m.steps.iter().enumerate() {
+        let in_place = matches!(s.kind, StepKind::Reshape);
+        if in_place && s.in_len != s.out_len {
+            // the only in-place step: reinterpreting N elements as M != N
+            // would read or expose bytes outside the live region
+            return Err(VerifyError::new(
+                "V205",
+                i,
+                format!("in-place Reshape changes element count {} -> {}", s.in_len, s.out_len),
+            ));
+        }
+        let out_bytes = if in_place { 0 } else { s.out_len };
+        let step_live = s
+            .in_len
+            .checked_add(out_bytes)
+            .and_then(|v| v.checked_add(s.scratch_len))
+            .ok_or_else(|| VerifyError::new("V202", i, "live set overflows usize".into()))?;
+        if step_live > peak {
+            peak = step_live;
+            peak_step = i;
+        }
+        live.push(step_live);
+        per_step.push(StepMemory {
+            op: s.kind.name(),
+            input: s.in_len,
+            output: out_bytes,
+            scratch: s.scratch_len,
+        });
+        if in_place {
+            continue; // no flip: the live buffer is reinterpreted in place
+        }
+        // disjointness by construction: the reader and writer are distinct
+        // buffers on every non-in-place step, scratch is a third region
+        if reads_a {
+            buf_a = buf_a.max(s.in_len);
+            buf_b = buf_b.max(s.out_len);
+        } else {
+            buf_b = buf_b.max(s.in_len);
+            buf_a = buf_a.max(s.out_len);
+        }
+        scratch = scratch.max(s.scratch_len);
+        reads_a = !reads_a;
+    }
+
+    let mp = &m.memory;
+    if let Some(i) = (0..per_step.len()).find(|&i| mp.per_step.get(i) != Some(&per_step[i])) {
+        return Err(VerifyError::new(
+            "V202",
+            i,
+            format!("claimed live set {:?}, recomputed {:?}", mp.per_step.get(i), per_step[i]),
+        ));
+    }
+    if mp.per_step.len() != per_step.len() {
+        return Err(VerifyError::new(
+            "V202",
+            None,
+            format!("memory plan covers {} steps, the plan has {}", mp.per_step.len(), per_step.len()),
+        ));
+    }
+    if mp.peak != peak || mp.peak_step != peak_step {
+        return Err(VerifyError::new(
+            "V201",
+            None,
+            format!(
+                "claimed peak {} B at step #{}, recomputed {peak} B at step #{peak_step}",
+                mp.peak, mp.peak_step
+            ),
+        ));
+    }
+    if mp.buf_a != buf_a || mp.buf_b != buf_b {
+        return Err(VerifyError::new(
+            "V203",
+            None,
+            format!(
+                "claimed ping-pong buffers ({}, {}) B, the schedule needs ({buf_a}, {buf_b}) B",
+                mp.buf_a, mp.buf_b
+            ),
+        ));
+    }
+    if mp.scratch != scratch {
+        return Err(VerifyError::new(
+            "V204",
+            None,
+            format!("claimed kernel scratch {} B, the steps need {scratch} B", mp.scratch),
+        ));
+    }
+    Ok((peak, peak_step, buf_a + buf_b + scratch, live))
+}
+
+/// Pass 3: arithmetic soundness (`V3xx`).
+fn verify_arithmetic(m: &CompiledModel) -> Result<Vec<AccBound>, VerifyError> {
+    m.steps
+        .iter()
+        .enumerate()
+        .map(|(i, s)| match &s.kind {
+            StepKind::FullyConnected { k, n, weights, pc, .. } => {
+                check_pc(i, pc, *n)?;
+                epilogue_bounds(i, *k, pc, (0..*n).map(|j| (0..*k).map(move |r| weights[r * n + j])))
+            }
+            StepKind::Conv2D { geo, filters, pc, .. } => {
+                check_pc(i, pc, filters.c_out)?;
+                let kkc = geo.k_h * geo.k_w * geo.in_c;
+                epilogue_bounds(
+                    i,
+                    kkc,
+                    pc,
+                    (0..filters.c_out)
+                        .map(|co| (0..kkc).map(move |k| filters.panel(co / NR)[k * NR + co % NR])),
+                )
+            }
+            StepKind::DepthwiseConv2D { geo, depth_multiplier, filters, pc, .. } => {
+                let c_out = geo.in_c * depth_multiplier;
+                let kk = geo.k_h * geo.k_w;
+                check_pc(i, pc, c_out)?;
+                epilogue_bounds(
+                    i,
+                    kk,
+                    pc,
+                    (0..c_out).map(|co| filters[co * kk..(co + 1) * kk].iter().copied()),
+                )
+            }
+            StepKind::AveragePool2D { geo, ratio, act_min, act_max, .. } => {
+                if !(ratio.is_finite() && *ratio > 0.0) {
+                    return Err(VerifyError::new(
+                        "V302",
+                        i,
+                        format!("pool requantization ratio {ratio} is not a positive finite value"),
+                    ));
+                }
+                if act_min > act_max {
+                    return Err(VerifyError::new(
+                        "V304",
+                        i,
+                        format!("activation clamp [{act_min}, {act_max}] is inverted"),
+                    ));
+                }
+                // window sum of kk int8 values
+                let kk = (geo.k_h * geo.k_w) as i64;
+                let acc = AccBound { lo: kk.saturating_mul(-128), hi: kk.saturating_mul(127) };
+                if !acc.fits_i32() {
+                    return Err(VerifyError::new(
+                        "V301",
+                        i,
+                        format!("pool window sum bound [{}, {}] exceeds i32", acc.lo, acc.hi),
+                    ));
+                }
+                Ok(acc)
+            }
+            StepKind::Softmax { s_x, s_y, .. }
+            | StepKind::Relu { s_x, s_y, .. }
+            | StepKind::Relu6 { s_x, s_y, .. } => {
+                for (what, v) in [("input scale", *s_x), ("output scale", *s_y)] {
+                    if !(v.is_finite() && v > 0.0) {
+                        return Err(VerifyError::new(
+                            "V302",
+                            i,
+                            format!("{what} {v} is not a positive finite value"),
+                        ));
+                    }
+                }
+                Ok(AccBound::ZERO)
+            }
+            StepKind::Reshape => Ok(AccBound::ZERO),
+        })
+        .collect()
+}
+
+fn check_pc(i: usize, pc: &PreComputed, c_out: usize) -> Result<(), VerifyError> {
+    if pc.const_bias.len() != c_out || pc.w_zp_term.len() != c_out {
+        return Err(VerifyError::new(
+            "V305",
+            i,
+            format!(
+                "folded constants sized ({}, {}) for {c_out} output channels",
+                pc.const_bias.len(),
+                pc.w_zp_term.len()
+            ),
+        ));
+    }
+    if !(pc.scale_ratio.is_finite() && pc.scale_ratio > 0.0) {
+        return Err(VerifyError::new(
+            "V302",
+            i,
+            format!("scale ratio {} is not a positive finite value", pc.scale_ratio),
+        ));
+    }
+    if let Some(b) = pc.const_bias.iter().find(|b| !b.is_finite()) {
+        return Err(VerifyError::new("V303", i, format!("folded bias constant {b} is not finite")));
+    }
+    if pc.act_min > pc.act_max {
+        return Err(VerifyError::new(
+            "V304",
+            i,
+            format!("activation clamp [{}, {}] is inverted", pc.act_min, pc.act_max),
+        ));
+    }
+    Ok(())
+}
+
+/// Prove the full per-channel kernel expression
+/// `acc − z_W·Σx − w_zp_term[j] + kzxzw` stays inside i32 for worst-case
+/// i8 inputs, using the actual compile-time weights, in the kernels'
+/// exact evaluation order (`V301`). `columns` yields each output
+/// channel's K weights.
+fn epilogue_bounds<C, W>(
+    i: usize,
+    k: usize,
+    pc: &PreComputed,
+    columns: C,
+) -> Result<AccBound, VerifyError>
+where
+    C: Iterator<Item = W>,
+    W: Iterator<Item = i8>,
+{
+    let overflow = |what: &str, b: AccBound| {
+        VerifyError::new(
+            "V301",
+            i,
+            format!("{what} bound [{}, {}] exceeds the i32 accumulator", b.lo, b.hi),
+        )
+    };
+    // the data-dependent row/view sum: K int8 values summed in i32
+    let xsum = AccBound {
+        lo: (k as i64).saturating_mul(-128),
+        hi: (k as i64).saturating_mul(127),
+    };
+    if !xsum.fits_i32() {
+        return Err(overflow("input row sum", xsum));
+    }
+    // z_W · Σx, computed as an i32 product in the kernels
+    let zw = pc.z_w as i64;
+    let zw_xsum = AccBound {
+        lo: (xsum.lo.saturating_mul(zw)).min(xsum.hi.saturating_mul(zw)),
+        hi: (xsum.lo.saturating_mul(zw)).max(xsum.hi.saturating_mul(zw)),
+    };
+    if !zw_xsum.fits_i32() {
+        return Err(overflow("z_W row-sum correction", zw_xsum));
+    }
+
+    let mut worst = AccBound::ZERO;
+    for (j, col) in columns.enumerate() {
+        let (mut lo, mut hi, mut abs) = (0i64, 0i64, 0i64);
+        for w in col {
+            let w = w as i64;
+            let (a, b) = (w.saturating_mul(127), w.saturating_mul(-128));
+            lo = lo.saturating_add(a.min(b));
+            hi = hi.saturating_add(a.max(b));
+            abs = abs.saturating_add(w.unsigned_abs() as i64 * 128);
+        }
+        // order-independence: every partial sum of the dot product is
+        // bounded by Σ|w|·128, so any accumulation order stays in i32
+        if abs > i32::MAX as i64 {
+            return Err(overflow(&format!("channel {j} dot product (any order)"), AccBound { lo: -abs, hi: abs }));
+        }
+        let acc = AccBound { lo, hi };
+        // the kernel epilogue, one i32 operation at a time
+        let t1 = AccBound { lo: acc.lo.saturating_sub(zw_xsum.hi), hi: acc.hi.saturating_sub(zw_xsum.lo) };
+        if !t1.fits_i32() {
+            return Err(overflow(&format!("channel {j} acc − z_W·Σx"), t1));
+        }
+        let wz = pc.w_zp_term[j] as i64;
+        let t2 = AccBound { lo: t1.lo.saturating_sub(wz), hi: t1.hi.saturating_sub(wz) };
+        if !t2.fits_i32() {
+            return Err(overflow(&format!("channel {j} after w_zp_term"), t2));
+        }
+        let kz = pc.kzxzw as i64;
+        let t3 = AccBound { lo: t2.lo.saturating_add(kz), hi: t2.hi.saturating_add(kz) };
+        if !t3.fits_i32() {
+            return Err(overflow(&format!("channel {j} after kzxzw"), t3));
+        }
+        worst = worst.union(t3);
+    }
+    Ok(worst)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::memory::MemoryPlan;
+    use crate::compiler::plan::{CompileOptions, Step};
+    use crate::format::mfb::MfbModel;
+    use crate::tensor::quant::QParams;
+
+    fn tiny_compiled(paging: bool) -> CompiledModel {
+        let m = MfbModel::parse(&crate::format::mfb::tests::tiny_mfb()).unwrap();
+        CompiledModel::compile(&m, CompileOptions { paging, certify: true }).unwrap()
+    }
+
+    /// A hand-built single-FC plan with chosen weights and constants.
+    fn fc_plan(k: usize, n: usize, weights: Vec<i8>, w_zp_term: Vec<i32>, kzxzw: i32) -> CompiledModel {
+        let pc = PreComputed {
+            const_bias: vec![0.0; n],
+            scale_ratio: 0.5,
+            w_zp_term,
+            kzxzw,
+            z_w: 0,
+            act_min: -128,
+            act_max: 127,
+        };
+        let steps = vec![Step {
+            kind: StepKind::FullyConnected { k, n, weights, pc, paged: false },
+            in_len: k,
+            out_len: n,
+            scratch_len: 0,
+        }];
+        let memory = MemoryPlan::analyze(&steps);
+        CompiledModel {
+            steps,
+            input_shape: vec![k],
+            output_shape: vec![n],
+            input_qparams: QParams::NONE,
+            output_qparams: QParams::NONE,
+            memory,
+            page_plan: None,
+            options: CompileOptions { paging: false, certify: true },
+            certificate: None,
+        }
+    }
+
+    #[test]
+    fn certifies_the_tiny_model_and_reports() {
+        let c = tiny_compiled(false);
+        let cert = verify(&c).unwrap();
+        assert_eq!(cert.steps.len(), 1);
+        assert_eq!(cert.peak_ram, c.memory.peak);
+        assert_eq!(cert.executor_bytes, c.memory.executor_bytes());
+        assert!(cert.min_headroom_bits() > 10, "tiny FC has huge headroom");
+        let report = cert.to_string();
+        assert!(report.contains("FullyConnected") && report.contains("certified"), "{report}");
+    }
+
+    #[test]
+    fn certifies_paged_plans() {
+        let c = tiny_compiled(true);
+        let cert = verify(&c).unwrap();
+        assert_eq!(cert.steps[0].live_bytes, 2 + 3 + 2); // in + out + page scratch
+    }
+
+    #[test]
+    fn broken_chain_is_v101() {
+        let mut c = tiny_compiled(false);
+        c.input_shape = vec![5];
+        let e = verify(&c).unwrap_err();
+        assert_eq!(e.code, "V101");
+    }
+
+    #[test]
+    fn fc_weight_payload_mismatch_is_v103() {
+        let mut c = tiny_compiled(false);
+        if let StepKind::FullyConnected { weights, .. } = &mut c.steps[0].kind {
+            weights.pop();
+        }
+        assert_eq!(verify(&c).unwrap_err().code, "V103");
+    }
+
+    #[test]
+    fn overflow_capable_fc_is_v301() {
+        // K = 140_000 saturated weights: Σ|w|·128 = 140_000·127·128 ≈ 2.3e9
+        // exceeds i32::MAX ≈ 2.1e9, so some accumulation order overflows
+        let k = 140_000;
+        let c = fc_plan(k, 1, vec![127; k], vec![0], 0);
+        let e = verify(&c).unwrap_err();
+        assert_eq!(e.code, "V301");
+        assert!(e.to_string().contains("V301"), "{e}");
+    }
+
+    #[test]
+    fn epilogue_constant_overflow_is_v301() {
+        // tiny dot product, but the folded w_zp_term shifts it past i32
+        let c = fc_plan(2, 1, vec![1, 1], vec![i32::MIN], 0);
+        assert_eq!(verify(&c).unwrap_err().code, "V301");
+    }
+
+    #[test]
+    fn safe_fc_certifies_with_exact_interval() {
+        let c = fc_plan(2, 1, vec![3, -2], vec![7], -1);
+        let cert = verify(&c).unwrap();
+        // col interval: 3·[-128,127] + (-2)·[-128,127] = [-384+(-254), 381+256]
+        //             = [-638, 637]; then −7 then −1
+        assert_eq!(cert.steps[0].acc, AccBound { lo: -638 - 7 - 1, hi: 637 - 7 - 1 });
+    }
+
+    #[test]
+    fn lying_peak_is_v201() {
+        let mut c = tiny_compiled(false);
+        c.memory.peak += 1;
+        assert_eq!(verify(&c).unwrap_err().code, "V201");
+    }
+
+    #[test]
+    fn lying_live_set_is_v202() {
+        let mut c = tiny_compiled(false);
+        c.memory.per_step[0].input += 1;
+        assert_eq!(verify(&c).unwrap_err().code, "V202");
+    }
+
+    #[test]
+    fn undersized_ping_pong_buffer_is_v203() {
+        let mut c = tiny_compiled(false);
+        c.memory.buf_a -= 1;
+        assert_eq!(verify(&c).unwrap_err().code, "V203");
+    }
+
+    #[test]
+    fn undersized_scratch_is_v204() {
+        let mut c = tiny_compiled(true);
+        c.memory.scratch -= 1;
+        assert_eq!(verify(&c).unwrap_err().code, "V204");
+    }
+
+    #[test]
+    fn non_length_preserving_reshape_is_v205() {
+        let mut c = tiny_compiled(false);
+        // splice an in-place step that shrinks the buffer: 3 -> 2 elements
+        c.steps.push(Step { kind: StepKind::Reshape, in_len: 3, out_len: 2, scratch_len: 0 });
+        c.output_shape = vec![2];
+        c.memory = MemoryPlan::analyze(&c.steps);
+        assert_eq!(verify(&c).unwrap_err().code, "V205");
+    }
+
+    #[test]
+    fn bad_panel_sizing_is_v104() {
+        let m = crate::synth::random_conv(&mut crate::util::Prng::new(11));
+        let mut c = CompiledModel::compile(&m, CompileOptions::default()).unwrap();
+        if let StepKind::Conv2D { filters, .. } = &mut c.steps[0].kind {
+            filters.data.pop();
+        }
+        assert_eq!(verify(&c).unwrap_err().code, "V104");
+    }
+
+    #[test]
+    fn nonzero_tail_lane_is_v104() {
+        // find a seeded conv whose c_out is not a multiple of NR
+        let mut rng = crate::util::Prng::new(3);
+        let c = loop {
+            let m = crate::synth::random_conv(&mut rng);
+            let c = CompiledModel::compile(&m, CompileOptions::default()).unwrap();
+            let StepKind::Conv2D { filters, .. } = &c.steps[0].kind else { unreachable!() };
+            if filters.c_out % NR != 0 {
+                break c;
+            }
+        };
+        let mut c = c;
+        if let StepKind::Conv2D { filters, .. } = &mut c.steps[0].kind {
+            let last = filters.data.len() - 1; // lane NR-1 of the last window slot
+            filters.data[last] = 1;
+        }
+        assert_eq!(verify(&c).unwrap_err().code, "V104");
+    }
+
+    #[test]
+    fn page_plan_coverage_lies_are_v106() {
+        let mut c = tiny_compiled(true);
+        if let Some(pp) = &mut c.page_plan {
+            pp.pages += 1; // claims one more page than FC rows
+        }
+        assert_eq!(verify(&c).unwrap_err().code, "V106");
+        let mut c = tiny_compiled(true);
+        c.page_plan = None;
+        assert_eq!(verify(&c).unwrap_err().code, "V106");
+    }
+
+    #[test]
+    fn scratch_claim_mismatch_is_v107() {
+        let mut c = tiny_compiled(false);
+        c.steps[0].scratch_len = 99;
+        c.memory = MemoryPlan::analyze(&c.steps);
+        assert_eq!(verify(&c).unwrap_err().code, "V107");
+    }
+
+    #[test]
+    fn bad_scale_ratio_is_v302_and_nan_bias_v303() {
+        let mut c = fc_plan(2, 1, vec![1, 1], vec![0], 0);
+        if let StepKind::FullyConnected { pc, .. } = &mut c.steps[0].kind {
+            pc.scale_ratio = f32::NAN;
+        }
+        assert_eq!(verify(&c).unwrap_err().code, "V302");
+        let mut c = fc_plan(2, 1, vec![1, 1], vec![0], 0);
+        if let StepKind::FullyConnected { pc, .. } = &mut c.steps[0].kind {
+            pc.const_bias[0] = f32::INFINITY;
+        }
+        assert_eq!(verify(&c).unwrap_err().code, "V303");
+    }
+
+    #[test]
+    fn inverted_clamp_is_v304_and_wrong_pc_len_v305() {
+        let mut c = fc_plan(2, 1, vec![1, 1], vec![0], 0);
+        if let StepKind::FullyConnected { pc, .. } = &mut c.steps[0].kind {
+            pc.act_min = 10;
+            pc.act_max = -10;
+        }
+        assert_eq!(verify(&c).unwrap_err().code, "V304");
+        let mut c = fc_plan(2, 1, vec![1, 1], vec![0], 0);
+        if let StepKind::FullyConnected { pc, .. } = &mut c.steps[0].kind {
+            pc.w_zp_term.push(0);
+        }
+        assert_eq!(verify(&c).unwrap_err().code, "V305");
+    }
+
+    #[test]
+    fn synth_zoo_certifies_across_paging_modes() {
+        let mut rng = crate::util::Prng::new(1234);
+        for _ in 0..4 {
+            let m = crate::synth::random_fc_chain(&mut rng, 3);
+            for paging in [false, true] {
+                let c = CompiledModel::compile(&m, CompileOptions { paging, certify: true }).unwrap();
+                let cert = c.certificate.as_ref().expect("certified by default");
+                assert_eq!(cert.peak_ram, c.memory.peak);
+            }
+        }
+        for _ in 0..4 {
+            let m = crate::synth::random_conv(&mut rng);
+            let c = CompiledModel::compile(&m, CompileOptions::default()).unwrap();
+            assert!(c.certificate.is_some());
+        }
+    }
+
+    #[test]
+    fn headroom_bits_are_sane() {
+        assert_eq!(AccBound::ZERO.headroom_bits(), 31);
+        assert_eq!(AccBound { lo: -1, hi: 1 }.headroom_bits(), 30);
+        assert_eq!(AccBound { lo: 0, hi: i32::MAX as i64 }.headroom_bits(), 0);
+    }
+
+    #[test]
+    fn error_code_table_covers_every_family() {
+        for code in ["V101", "V107", "V201", "V205", "V301", "V305", "E401", "E408"] {
+            assert!(ERROR_CODE_TABLE.contains(code), "{code} missing from table");
+        }
+    }
+}

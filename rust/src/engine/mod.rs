@@ -193,7 +193,7 @@ mod tests {
 
     fn tiny_engine(paging: bool) -> MicroFlowEngine {
         let m = MfbModel::parse(&crate::format::mfb::tests::tiny_mfb()).unwrap();
-        MicroFlowEngine::new(&m, CompileOptions { paging }).unwrap()
+        MicroFlowEngine::new(&m, CompileOptions { paging, ..Default::default() }).unwrap()
     }
 
     #[test]

@@ -64,7 +64,7 @@ fn put_tensor(buf: &mut Vec<u8>, t: &TensorDef) -> Result<()> {
     buf.extend_from_slice(&t.qparams.scale.to_le_bytes());
     buf.extend_from_slice(&t.qparams.zero_point.to_le_bytes());
     buf.extend_from_slice(&(t.data.len() as u64).to_le_bytes());
-    buf.extend_from_slice(&t.data);
+    buf.extend(t.data.iter().map(|&v| v as u8));
     Ok(())
 }
 

@@ -1,0 +1,76 @@
+//! Typed, stable-coded decode errors (the `E4xx` family of the
+//! certification error table — see [`crate::compiler::verify::ERROR_CODE_TABLE`]).
+//!
+//! The decode front door ([`super::reader`], [`super::mfb`]) is strict and
+//! never panics on arbitrary bytes; every rejection carries one of these
+//! codes so callers (and the mutation harness in `tests/mfb_fuzz.rs`) can
+//! assert *which* contract was violated, not just that decoding failed.
+
+use std::fmt;
+
+/// Bad magic or unsupported container version.
+pub const E_MAGIC: &str = "E401";
+/// Truncated input: a read ran past the end of the buffer.
+pub const E_TRUNCATED: &str = "E402";
+/// Invalid UTF-8 in a string field.
+pub const E_UTF8: &str = "E403";
+/// Invalid count/length field (overflow or impossible for the buffer).
+pub const E_COUNT: &str = "E404";
+/// Tensor index out of range.
+pub const E_INDEX: &str = "E405";
+/// Trailing bytes after a complete structure.
+pub const E_TRAILING: &str = "E406";
+/// Unknown enum code (opcode / dtype / padding).
+pub const E_ENUM: &str = "E407";
+/// Tensor payload size disagrees with dims × dtype.
+pub const E_PAYLOAD: &str = "E408";
+
+/// A decode rejection with a stable `E4xx` code.
+#[derive(Clone, Debug)]
+pub struct DecodeError {
+    pub code: &'static str,
+    pub msg: String,
+}
+
+impl DecodeError {
+    pub fn new(code: &'static str, msg: impl Into<String>) -> Self {
+        DecodeError { code, msg: msg.into() }
+    }
+
+    /// Prefix the message with location context, keeping the code.
+    pub fn wrap(self, prefix: impl fmt::Display) -> Self {
+        DecodeError { code: self.code, msg: format!("{prefix}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}: {}", self.code, self.msg)
+    }
+}
+
+impl std::error::Error for DecodeError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_leads_with_the_code() {
+        let e = DecodeError::new(E_TRUNCATED, "need 4 bytes");
+        assert_eq!(e.to_string(), "E402: need 4 bytes");
+        let wrapped = e.wrap("tensor #3");
+        assert_eq!(wrapped.code, E_TRUNCATED);
+        assert_eq!(wrapped.to_string(), "E402: tensor #3: need 4 bytes");
+    }
+
+    #[test]
+    fn converts_into_anyhow() {
+        fn inner() -> anyhow::Result<()> {
+            Err(DecodeError::new(E_MAGIC, "nope"))?;
+            Ok(())
+        }
+        let err = inner().unwrap_err();
+        assert!(err.to_string().contains("E401"), "{err}");
+    }
+}

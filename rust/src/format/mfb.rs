@@ -22,9 +22,19 @@
 //! (names, versions, metadata, full tensor tables) so the interpreter
 //! baseline has the same amount of runtime parsing to do as TFLM, while
 //! the MicroFlow compiler strips everything it can (paper Sec. 6.2.2).
+//!
+//! ## Decoder contract
+//!
+//! [`MfbModel::parse`] is **strict and total** on arbitrary bytes: every
+//! count, length, index and enum code is validated before use, nothing is
+//! trusted for allocation sizing, trailing bytes (in the container and in
+//! every options sub-stream) are rejected, and every failure is a typed
+//! [`DecodeError`] with a stable `E4xx` code — never a panic. The seeded
+//! mutation harness (`tests/mfb_fuzz.rs`) holds the no-panic line.
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
 
+use super::error::{DecodeError, E_COUNT, E_ENUM, E_INDEX, E_MAGIC, E_PAYLOAD, E_TRAILING};
 use super::reader::Reader;
 use crate::tensor::{DType, QParams};
 
@@ -42,7 +52,7 @@ pub enum OpCode {
 }
 
 impl OpCode {
-    pub fn from_u8(v: u8) -> Result<Self> {
+    pub fn from_u8(v: u8) -> Result<Self, DecodeError> {
         Ok(match v {
             0 => OpCode::FullyConnected,
             1 => OpCode::Conv2D,
@@ -52,7 +62,7 @@ impl OpCode {
             5 => OpCode::Softmax,
             6 => OpCode::Relu,
             7 => OpCode::Relu6,
-            other => bail!("unknown opcode {other}"),
+            other => return Err(DecodeError::new(E_ENUM, format!("unknown opcode {other}"))),
         })
     }
 
@@ -78,11 +88,11 @@ pub enum Padding {
 }
 
 impl Padding {
-    pub fn from_u8(v: u8) -> Result<Self> {
+    pub fn from_u8(v: u8) -> Result<Self, DecodeError> {
         Ok(match v {
             0 => Padding::Same,
             1 => Padding::Valid,
-            other => bail!("unknown padding code {other}"),
+            other => return Err(DecodeError::new(E_ENUM, format!("unknown padding code {other}"))),
         })
     }
 }
@@ -95,12 +105,16 @@ pub struct TensorDef {
     pub dtype: DType,
     pub dims: Vec<usize>,
     pub qparams: QParams,
-    pub data: Vec<u8>,
+    /// Raw payload bytes, stored as `i8` (the dominant view: int8 weights
+    /// borrow it directly; wider dtypes reassemble from the bytes).
+    pub data: Vec<i8>,
 }
 
 impl TensorDef {
+    /// Element count; saturates instead of overflowing on hostile dims
+    /// (the parser independently bounds payload-carrying tensors).
     pub fn numel(&self) -> usize {
-        self.dims.iter().product()
+        self.dims.iter().fold(1usize, |a, &b| a.saturating_mul(b))
     }
 
     /// Payload reinterpreted as int8 (weights).
@@ -115,8 +129,7 @@ impl TensorDef {
         if self.dtype != DType::I8 {
             bail!("tensor {} is not i8", self.name);
         }
-        // SAFETY: i8 and u8 have identical size, alignment and validity.
-        Ok(unsafe { std::slice::from_raw_parts(self.data.as_ptr() as *const i8, self.data.len()) })
+        Ok(&self.data)
     }
 
     /// Payload reinterpreted as int32 (biases).
@@ -127,7 +140,7 @@ impl TensorDef {
         Ok(self
             .data
             .chunks_exact(4)
-            .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+            .map(|c| i32::from_le_bytes([c[0] as u8, c[1] as u8, c[2] as u8, c[3] as u8]))
             .collect())
     }
 }
@@ -156,21 +169,21 @@ pub struct Operator {
 
 impl Operator {
     pub fn input(&self, i: usize) -> Result<usize> {
-        let idx = *self.inputs.get(i).context("missing operator input")?;
-        if idx < 0 {
-            bail!("operator input {i} is absent");
-        }
-        Ok(idx as usize)
+        let idx = *self.inputs.get(i).ok_or_else(|| anyhow::anyhow!("missing operator input"))?;
+        usize::try_from(idx).map_err(|_| anyhow::anyhow!("operator input {i} is absent"))
     }
 
     pub fn output(&self, i: usize) -> Result<usize> {
-        let idx = *self.outputs.get(i).context("missing operator output")?;
-        if idx < 0 {
-            bail!("operator output {i} is absent");
-        }
-        Ok(idx as usize)
+        let idx = *self.outputs.get(i).ok_or_else(|| anyhow::anyhow!("missing operator output"))?;
+        usize::try_from(idx).map_err(|_| anyhow::anyhow!("operator output {i} is absent"))
     }
 }
+
+/// Smallest possible serialized tensor entry (empty name, 0 dims, no
+/// payload): used to reject impossible `n_tensors` before allocating.
+const TENSOR_MIN_BYTES: usize = 2 + 1 + 1 + 4 + 4 + 8;
+/// Smallest possible serialized operator (no tensors, no options).
+const OP_MIN_BYTES: usize = 1 + 4 + 1 + 1 + 2;
 
 /// A parsed MFB model: the lossless internal representation of Fig. 4.
 #[derive(Clone, Debug)]
@@ -188,49 +201,65 @@ pub struct MfbModel {
 }
 
 impl MfbModel {
-    /// Parse an MFB byte buffer.
-    pub fn parse(buf: &[u8]) -> Result<MfbModel> {
+    /// Parse an MFB byte buffer (strict; see the module-level decoder
+    /// contract).
+    pub fn parse(buf: &[u8]) -> Result<MfbModel, DecodeError> {
         let mut r = Reader::new(buf);
         r.magic(b"MFB1")?;
         let version = r.u32()?;
         if version != 1 {
-            bail!("unsupported MFB version {version}");
+            return Err(DecodeError::new(E_MAGIC, format!("unsupported MFB version {version}")));
         }
         let producer = r.string()?;
 
-        let n_tensors = r.u32()? as usize;
-        // cap pre-allocation by remaining bytes: n_tensors is untrusted
-        let mut tensors = Vec::with_capacity(n_tensors.min(r.remaining()));
-        for _ in 0..n_tensors {
-            let name = r.string()?;
+        let n_tensors = checked_count(r.u32()?, "tensor count", r.remaining(), TENSOR_MIN_BYTES)?;
+        let mut tensors = Vec::with_capacity(n_tensors);
+        for ti in 0..n_tensors {
+            let at_tensor = |e: DecodeError| e.wrap(format!("tensor #{ti}"));
+            let name = r.string().map_err(at_tensor)?;
             let dtype = match r.u8()? {
                 0 => DType::I8,
                 1 => DType::I32,
                 2 => DType::F32,
-                other => bail!("unknown dtype code {other} in tensor {name}"),
+                other => {
+                    return Err(DecodeError::new(
+                        E_ENUM,
+                        format!("unknown dtype code {other} in tensor {name}"),
+                    ))
+                }
             };
             let ndims = r.u8()? as usize;
             let mut dims = Vec::with_capacity(ndims);
             for _ in 0..ndims {
-                dims.push(r.u32()? as usize);
+                dims.push(to_usize(r.u32()? as u64, "tensor dim")?);
             }
             let scale = r.f32()?;
             let zero_point = r.i32()?;
-            let nbytes = r.u64()? as usize;
-            let data = r.take(nbytes)?.to_vec();
+            let nbytes = to_usize(r.u64()?, "tensor payload length")?;
+            let data = r.i8_vec(nbytes).map_err(at_tensor)?;
             if !data.is_empty() {
-                let expect = dims.iter().product::<usize>() * dtype.size_bytes();
-                if data.len() != expect {
-                    bail!("tensor {name}: payload {} bytes, dims say {expect}", data.len());
+                let elems = dims
+                    .iter()
+                    .try_fold(1usize, |a, &b| a.checked_mul(b))
+                    .and_then(|n| n.checked_mul(dtype.size_bytes()))
+                    .ok_or_else(|| {
+                        DecodeError::new(E_COUNT, format!("tensor {name}: dims overflow usize"))
+                    })?;
+                if data.len() != elems {
+                    return Err(DecodeError::new(
+                        E_PAYLOAD,
+                        format!("tensor {name}: payload {} bytes, dims say {elems}", data.len()),
+                    ));
                 }
             }
             tensors.push(TensorDef { name, dtype, dims, qparams: QParams::new(scale, zero_point), data });
         }
 
-        let n_ops = r.u32()? as usize;
-        let mut operators = Vec::with_capacity(n_ops.min(r.remaining()));
+        let n_ops = checked_count(r.u32()?, "operator count", r.remaining(), OP_MIN_BYTES)?;
+        let mut operators = Vec::with_capacity(n_ops);
         for oi in 0..n_ops {
-            let opcode = OpCode::from_u8(r.u8()?)?;
+            let opcode = OpCode::from_u8(r.u8()?)
+                .map_err(|e| e.wrap(format!("operator #{oi}")))?;
             let version = r.u32()?;
             let n_in = r.u8()? as usize;
             let mut inputs = Vec::with_capacity(n_in);
@@ -245,35 +274,34 @@ impl MfbModel {
             let opt_len = r.u16()? as usize;
             let opts_raw = r.take(opt_len)?;
             let options = parse_options(opcode, opts_raw)
-                .with_context(|| format!("operator #{oi} ({})", opcode.name()))?;
+                .map_err(|e| e.wrap(format!("operator #{oi} ({})", opcode.name())))?;
             // validate indices now so downstream code can trust them
+            // (negative means "absent" and is allowed by the container)
             for &idx in inputs.iter().chain(outputs.iter()) {
-                if idx >= 0 && idx as usize >= n_tensors {
-                    bail!("operator #{oi}: tensor index {idx} out of range ({n_tensors} tensors)");
+                if let Ok(t) = usize::try_from(idx) {
+                    if t >= tensors.len() {
+                        return Err(DecodeError::new(
+                            E_INDEX,
+                            format!(
+                                "operator #{oi}: tensor index {idx} out of range ({} tensors)",
+                                tensors.len()
+                            ),
+                        ));
+                    }
                 }
             }
             operators.push(Operator { opcode, version, inputs, outputs, options });
         }
 
-        let n_gin = r.u8()? as usize;
-        let mut graph_inputs = Vec::with_capacity(n_gin);
-        for _ in 0..n_gin {
-            let idx = r.i32()?;
-            if idx < 0 || idx as usize >= n_tensors {
-                bail!("graph input index {idx} out of range");
-            }
-            graph_inputs.push(idx as usize);
-        }
-        let n_gout = r.u8()? as usize;
-        let mut graph_outputs = Vec::with_capacity(n_gout);
-        for _ in 0..n_gout {
-            let idx = r.i32()?;
-            if idx < 0 || idx as usize >= n_tensors {
-                bail!("graph output index {idx} out of range");
-            }
-            graph_outputs.push(idx as usize);
-        }
+        let graph_inputs = parse_graph_io(&mut r, tensors.len(), "input")?;
+        let graph_outputs = parse_graph_io(&mut r, tensors.len(), "output")?;
         let metadata = r.string()?;
+        if r.remaining() != 0 {
+            return Err(DecodeError::new(
+                E_TRAILING,
+                format!("{} trailing bytes after a complete container", r.remaining()),
+            ));
+        }
 
         Ok(MfbModel {
             version,
@@ -290,8 +318,8 @@ impl MfbModel {
     /// Load from a file path.
     pub fn load(path: impl AsRef<std::path::Path>) -> Result<MfbModel> {
         let buf = std::fs::read(path.as_ref())
-            .with_context(|| format!("reading {}", path.as_ref().display()))?;
-        Self::parse(&buf)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.as_ref().display()))?;
+        Ok(Self::parse(&buf)?)
     }
 
     /// Sum of weight/bias payload bytes (the paper's model "Size").
@@ -307,26 +335,80 @@ impl MfbModel {
     }
 
     /// Per-sample input shape (graph input dims minus the batch dim).
+    /// Total (never panics): scalar or missing io degrades to `[]`.
     pub fn input_shape(&self) -> Vec<usize> {
-        self.tensors[self.graph_inputs[0]].dims[1..].to_vec()
+        self.io_shape(self.graph_inputs.first())
     }
 
     pub fn output_shape(&self) -> Vec<usize> {
-        self.tensors[self.graph_outputs[0]].dims[1..].to_vec()
+        self.io_shape(self.graph_outputs.first())
+    }
+
+    fn io_shape(&self, idx: Option<&usize>) -> Vec<usize> {
+        idx.and_then(|&i| self.tensors.get(i))
+            .map(|t| t.dims.get(1..).unwrap_or_default().to_vec())
+            .unwrap_or_default()
     }
 
     pub fn input_qparams(&self) -> QParams {
-        self.tensors[self.graph_inputs[0]].qparams
+        self.io_qparams(self.graph_inputs.first())
     }
 
     pub fn output_qparams(&self) -> QParams {
-        self.tensors[self.graph_outputs[0]].qparams
+        self.io_qparams(self.graph_outputs.first())
+    }
+
+    fn io_qparams(&self, idx: Option<&usize>) -> QParams {
+        idx.and_then(|&i| self.tensors.get(i)).map(|t| t.qparams).unwrap_or(QParams::NONE)
     }
 }
 
-fn parse_options(opcode: OpCode, raw: &[u8]) -> Result<OpOptions> {
+/// Validate an untrusted count field before allocating: `n` entries of at
+/// least `min_bytes` each must fit in the remaining buffer.
+fn checked_count(
+    v: u32,
+    what: &str,
+    remaining: usize,
+    min_bytes: usize,
+) -> Result<usize, DecodeError> {
+    let n = to_usize(v as u64, what)?;
+    match n.checked_mul(min_bytes) {
+        Some(need) if need <= remaining => Ok(n),
+        _ => Err(DecodeError::new(
+            E_COUNT,
+            format!("{what} {n} impossible: needs >= {min_bytes} bytes each, {remaining} remain"),
+        )),
+    }
+}
+
+fn to_usize(v: u64, what: &str) -> Result<usize, DecodeError> {
+    usize::try_from(v)
+        .map_err(|_| DecodeError::new(E_COUNT, format!("{what} {v} overflows usize")))
+}
+
+fn parse_graph_io(
+    r: &mut Reader<'_>,
+    n_tensors: usize,
+    what: &str,
+) -> Result<Vec<usize>, DecodeError> {
+    let n = r.u8()? as usize;
+    if n == 0 {
+        return Err(DecodeError::new(E_COUNT, format!("graph has no {what} tensors")));
+    }
+    let mut io = Vec::with_capacity(n);
+    for _ in 0..n {
+        let idx = r.i32()?;
+        let t = usize::try_from(idx).ok().filter(|&t| t < n_tensors).ok_or_else(|| {
+            DecodeError::new(E_INDEX, format!("graph {what} index {idx} out of range"))
+        })?;
+        io.push(t);
+    }
+    Ok(io)
+}
+
+fn parse_options(opcode: OpCode, raw: &[u8]) -> Result<OpOptions, DecodeError> {
     let mut r = Reader::new(raw);
-    Ok(match opcode {
+    let options = match opcode {
         OpCode::FullyConnected => OpOptions::FullyConnected { fused_act: r.u8()? },
         OpCode::Conv2D => OpOptions::Conv2D {
             stride: (r.u8()? as usize, r.u8()? as usize),
@@ -337,7 +419,7 @@ fn parse_options(opcode: OpCode, raw: &[u8]) -> Result<OpOptions> {
             let stride = (r.u8()? as usize, r.u8()? as usize);
             let padding = Padding::from_u8(r.u8()?)?;
             let fused_act = r.u8()?;
-            let depth_multiplier = r.u32()? as usize;
+            let depth_multiplier = to_usize(r.u32()? as u64, "depth multiplier")?;
             OpOptions::DepthwiseConv2D { stride, padding, fused_act, depth_multiplier }
         }
         OpCode::AveragePool2D => OpOptions::AveragePool2D {
@@ -350,19 +432,26 @@ fn parse_options(opcode: OpCode, raw: &[u8]) -> Result<OpOptions> {
             let ndims = r.u8()? as usize;
             let mut dims = Vec::with_capacity(ndims);
             for _ in 0..ndims {
-                dims.push(r.u32()? as usize);
+                dims.push(to_usize(r.u32()? as u64, "reshape dim")?);
             }
             OpOptions::Reshape { dims }
         }
         OpCode::Softmax => OpOptions::Softmax { beta: r.f32()? },
         OpCode::Relu | OpCode::Relu6 => OpOptions::None,
-    })
+    };
+    if r.remaining() != 0 {
+        return Err(DecodeError::new(
+            E_TRAILING,
+            format!("{} trailing bytes in options", r.remaining()),
+        ));
+    }
+    Ok(options)
 }
 
 /// Test-only access to the private options parser (the writer's round-trip
 /// tests exercise every `OpOptions` variant against it).
 #[cfg(test)]
-pub(crate) fn parse_options_for_test(opcode: OpCode, raw: &[u8]) -> Result<OpOptions> {
+pub(crate) fn parse_options_for_test(opcode: OpCode, raw: &[u8]) -> Result<OpOptions, DecodeError> {
     parse_options(opcode, raw)
 }
 
@@ -459,10 +548,13 @@ pub(crate) mod tests {
     }
 
     #[test]
-    fn rejects_bad_magic() {
+    fn rejects_bad_magic_with_e401() {
         let mut buf = tiny_mfb();
         buf[0] = b'X';
-        assert!(MfbModel::parse(&buf).is_err());
+        assert_eq!(MfbModel::parse(&buf).unwrap_err().code, "E401");
+        let mut buf = tiny_mfb();
+        buf[4] = 9; // version 9
+        assert_eq!(MfbModel::parse(&buf).unwrap_err().code, "E401");
     }
 
     #[test]
@@ -475,7 +567,14 @@ pub(crate) mod tests {
     }
 
     #[test]
-    fn rejects_out_of_range_tensor_index() {
+    fn rejects_trailing_bytes_with_e406() {
+        let mut buf = tiny_mfb();
+        buf.push(0);
+        assert_eq!(MfbModel::parse(&buf).unwrap_err().code, "E406");
+    }
+
+    #[test]
+    fn rejects_out_of_range_tensor_index_with_e405() {
         let buf = tiny_mfb();
         let m = MfbModel::parse(&buf).unwrap();
         assert_eq!(m.graph_outputs, vec![3]);
@@ -483,17 +582,70 @@ pub(crate) mod tests {
         let mut bad = buf.clone();
         let tail = bad.len() - 4 - 2; // before metadata str "{}"
         bad[tail - 4..tail].copy_from_slice(&99i32.to_le_bytes());
-        assert!(MfbModel::parse(&bad).is_err());
+        assert_eq!(MfbModel::parse(&bad).unwrap_err().code, "E405");
     }
 
     #[test]
-    fn wrong_payload_size_is_rejected() {
+    fn rejects_empty_graph_io_with_e404() {
+        let mut buf = tiny_mfb();
+        // n_graph_in byte sits 14 bytes from the end:
+        // n_gin(1) gin(4) n_gout(1) gout(4) metadata(2+2)
+        let pos = buf.len() - 14;
+        assert_eq!(buf[pos], 1);
+        buf[pos] = 0;
+        assert_eq!(MfbModel::parse(&buf).unwrap_err().code, "E404");
+    }
+
+    #[test]
+    fn rejects_impossible_tensor_count_with_e404() {
+        let mut buf = tiny_mfb();
+        // n_tensors field sits at offset 14 (magic 4, version 4, "test" 6)
+        buf[14..18].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert_eq!(MfbModel::parse(&buf).unwrap_err().code, "E404");
+    }
+
+    #[test]
+    fn rejects_unknown_dtype_with_e407() {
+        let mut buf = tiny_mfb();
+        // tensor t0's dtype byte: header 18 bytes + name "in" (2+2)
+        assert_eq!(buf[22], 0);
+        buf[22] = 9;
+        assert_eq!(MfbModel::parse(&buf).unwrap_err().code, "E407");
+    }
+
+    #[test]
+    fn wrong_payload_size_is_rejected_with_e408() {
         let mut buf = tiny_mfb();
         // tensor t1 declares [2,3] i8 = 6 bytes; claim 5
         // find the 6u64 length field: it's right before the 6 data bytes
         let pos = buf.windows(8).position(|w| w == 6u64.to_le_bytes()).unwrap();
         buf[pos..pos + 8].copy_from_slice(&5u64.to_le_bytes());
         buf.remove(pos + 8); // drop one payload byte to keep framing
-        assert!(MfbModel::parse(&buf).is_err());
+        assert_eq!(MfbModel::parse(&buf).unwrap_err().code, "E408");
+    }
+
+    #[test]
+    fn option_substream_trailing_bytes_are_e406() {
+        let e = parse_options_for_test(OpCode::FullyConnected, &[0, 0]).unwrap_err();
+        assert_eq!(e.code, "E406");
+    }
+
+    #[test]
+    fn unknown_padding_in_options_is_e407() {
+        let e = parse_options_for_test(OpCode::Conv2D, &[1, 1, 9, 0]).unwrap_err();
+        assert_eq!(e.code, "E407");
+    }
+
+    #[test]
+    fn accessors_are_total_on_degenerate_models() {
+        let mut m = MfbModel::parse(&tiny_mfb()).unwrap();
+        m.tensors[0].dims.clear(); // scalar graph input
+        assert_eq!(m.input_shape(), Vec::<usize>::new());
+        m.graph_inputs.clear(); // hostile hand-built model
+        assert_eq!(m.input_shape(), Vec::<usize>::new());
+        assert_eq!(m.input_qparams(), QParams::NONE);
+        // numel saturates instead of overflowing
+        m.tensors[1].dims = vec![usize::MAX, 3];
+        assert_eq!(m.tensors[1].numel(), usize::MAX);
     }
 }

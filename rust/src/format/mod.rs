@@ -13,11 +13,13 @@
 //! field.
 
 pub mod builder;
+pub mod error;
 pub mod golden;
 pub mod mds;
 pub mod mfb;
 pub mod reader;
 
+pub use error::DecodeError;
 pub use golden::Golden;
 pub use mds::{Labels, MdsDataset};
 pub use mfb::{MfbModel, OpCode, Operator, Padding, TensorDef};

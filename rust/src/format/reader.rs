@@ -3,9 +3,11 @@
 //! Deliberately fallible everywhere (no panics on truncated input): the
 //! interpreter baseline parses models at runtime like TFLM does, so a
 //! malformed file must surface as an error, not UB or a crash — that is
-//! the paper's robustness argument in executable form.
+//! the paper's robustness argument in executable form. Every rejection
+//! carries a stable `E4xx` code ([`super::error::DecodeError`]) so the
+//! mutation harness can assert the *kind* of failure.
 
-use anyhow::{bail, Context, Result};
+use super::error::{DecodeError, E_MAGIC, E_TRUNCATED, E_UTF8};
 
 /// Cursor over a byte slice with checked little-endian reads.
 pub struct Reader<'a> {
@@ -26,77 +28,99 @@ impl<'a> Reader<'a> {
         self.pos
     }
 
-    pub fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8], DecodeError> {
         if self.remaining() < n {
-            bail!("truncated input: need {n} bytes at offset {}, have {}", self.pos, self.remaining());
+            return Err(DecodeError::new(
+                E_TRUNCATED,
+                format!(
+                    "truncated input: need {n} bytes at offset {}, have {}",
+                    self.pos,
+                    self.remaining()
+                ),
+            ));
         }
         let s = &self.buf[self.pos..self.pos + n];
         self.pos += n;
         Ok(s)
     }
 
-    pub fn u8(&mut self) -> Result<u8> {
+    pub fn u8(&mut self) -> Result<u8, DecodeError> {
         Ok(self.take(1)?[0])
     }
 
-    pub fn u16(&mut self) -> Result<u16> {
+    pub fn u16(&mut self) -> Result<u16, DecodeError> {
         let b = self.take(2)?;
         Ok(u16::from_le_bytes([b[0], b[1]]))
     }
 
-    pub fn u32(&mut self) -> Result<u32> {
+    pub fn u32(&mut self) -> Result<u32, DecodeError> {
         let b = self.take(4)?;
         Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
     }
 
-    pub fn i32(&mut self) -> Result<i32> {
+    pub fn i32(&mut self) -> Result<i32, DecodeError> {
         let b = self.take(4)?;
         Ok(i32::from_le_bytes([b[0], b[1], b[2], b[3]]))
     }
 
-    pub fn u64(&mut self) -> Result<u64> {
+    pub fn u64(&mut self) -> Result<u64, DecodeError> {
         let b = self.take(8)?;
-        Ok(u64::from_le_bytes(b.try_into().unwrap()))
+        let arr: [u8; 8] = b.try_into().expect("take(8) returned 8 bytes");
+        Ok(u64::from_le_bytes(arr))
     }
 
-    pub fn f32(&mut self) -> Result<f32> {
+    pub fn f32(&mut self) -> Result<f32, DecodeError> {
         let b = self.take(4)?;
         Ok(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
     }
 
     /// `str := u16 len | utf8 bytes`
-    pub fn string(&mut self) -> Result<String> {
+    pub fn string(&mut self) -> Result<String, DecodeError> {
         let len = self.u16()? as usize;
+        let at = self.pos;
         let raw = self.take(len)?;
-        String::from_utf8(raw.to_vec()).context("invalid utf8 in string field")
+        String::from_utf8(raw.to_vec())
+            .map_err(|_| DecodeError::new(E_UTF8, format!("invalid utf8 in string at offset {at}")))
     }
 
-    pub fn magic(&mut self, expect: &[u8; 4]) -> Result<()> {
+    pub fn magic(&mut self, expect: &[u8; 4]) -> Result<(), DecodeError> {
         let m = self.take(4)?;
         if m != expect {
-            bail!(
-                "bad magic: expected {:?} got {:?}",
-                String::from_utf8_lossy(expect),
-                String::from_utf8_lossy(m)
-            );
+            return Err(DecodeError::new(
+                E_MAGIC,
+                format!(
+                    "bad magic: expected {:?} got {:?}",
+                    String::from_utf8_lossy(expect),
+                    String::from_utf8_lossy(m)
+                ),
+            ));
         }
         Ok(())
     }
 
-    pub fn i8_vec(&mut self, n: usize) -> Result<Vec<i8>> {
+    pub fn i8_vec(&mut self, n: usize) -> Result<Vec<i8>, DecodeError> {
         let raw = self.take(n)?;
         Ok(raw.iter().map(|&b| b as i8).collect())
     }
 
-    pub fn i32_vec(&mut self, n: usize) -> Result<Vec<i32>> {
-        let raw = self.take(n.checked_mul(4).context("i32 vec overflow")?)?;
-        Ok(raw.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect())
+    pub fn i32_vec(&mut self, n: usize) -> Result<Vec<i32>, DecodeError> {
+        let raw = self.take(checked_len(n, 4)?)?;
+        Ok(raw.chunks_exact(4).map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
     }
 
-    pub fn f32_vec(&mut self, n: usize) -> Result<Vec<f32>> {
-        let raw = self.take(n.checked_mul(4).context("f32 vec overflow")?)?;
-        Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    pub fn f32_vec(&mut self, n: usize) -> Result<Vec<f32>, DecodeError> {
+        let raw = self.take(checked_len(n, 4)?)?;
+        Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
     }
+}
+
+fn checked_len(n: usize, elem: usize) -> Result<usize, DecodeError> {
+    n.checked_mul(elem).ok_or_else(|| {
+        DecodeError::new(
+            super::error::E_COUNT,
+            format!("element count {n} x {elem} bytes overflows usize"),
+        )
+    })
 }
 
 #[cfg(test)]
@@ -119,9 +143,9 @@ mod tests {
     }
 
     #[test]
-    fn truncation_is_an_error_not_a_panic() {
+    fn truncation_is_a_coded_error_not_a_panic() {
         let mut r = Reader::new(&[1, 2]);
-        assert!(r.u32().is_err());
+        assert_eq!(r.u32().unwrap_err().code, "E402");
     }
 
     #[test]
@@ -134,9 +158,26 @@ mod tests {
     }
 
     #[test]
-    fn bad_magic_reports_both() {
+    fn invalid_utf8_is_e403() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&2u16.to_le_bytes());
+        buf.extend_from_slice(&[0xff, 0xfe]);
+        let mut r = Reader::new(&buf);
+        assert_eq!(r.string().unwrap_err().code, "E403");
+    }
+
+    #[test]
+    fn bad_magic_reports_both_and_is_e401() {
         let mut r = Reader::new(b"XXXXrest");
-        let err = r.magic(b"MFB1").unwrap_err().to_string();
-        assert!(err.contains("MFB1") && err.contains("XXXX"), "{err}");
+        let err = r.magic(b"MFB1").unwrap_err();
+        assert_eq!(err.code, "E401");
+        let msg = err.to_string();
+        assert!(msg.contains("MFB1") && msg.contains("XXXX"), "{msg}");
+    }
+
+    #[test]
+    fn vec_length_overflow_is_e404() {
+        let mut r = Reader::new(&[0u8; 16]);
+        assert_eq!(r.i32_vec(usize::MAX / 2).unwrap_err().code, "E404");
     }
 }

@@ -77,6 +77,41 @@
 //! (`make artifacts`): it trains the three paper models, quantizes them,
 //! exports `.mfb`/`.mds`/golden files and AOT-lowers the quantized Pallas
 //! graphs to HLO text. Nothing in this crate imports Python.
+//!
+//! ## Certification guarantees
+//!
+//! The paper's safety argument — a compiler-based engine plus Rust's
+//! guarantees makes TinyML fit for critical environments — is *checked*,
+//! not assumed. Two mechanisms:
+//!
+//! 1. **Static plan certification** ([`compiler::verify`]). Every
+//!    [`compiler::CompiledModel`] built with default options carries a
+//!    [`compiler::Certificate`] proving, by analysis and never by
+//!    execution: the step chain is shape-sound end to end; packed panel
+//!    images and depthwise pre-transposes match their geometry with zero
+//!    tail lanes; page plans cover every FullyConnected row exactly once;
+//!    the memory plan's peak/per-step/buffer/scratch claims equal an
+//!    independent replay of the ping-pong schedule (whose construction
+//!    proves input/output/scratch never alias while live); and worst-case
+//!    interval arithmetic over the actual weights shows no i32 accumulator
+//!    can overflow in any evaluation order (Eq. 4/7/10/13 epilogues
+//!    included). `Session::builder(..).certify(false)` opts out.
+//! 2. **A strict, never-panic decoder** ([`format::mfb`]). `MfbModel::parse`
+//!    is total on arbitrary bytes — truncation, length/count overflow,
+//!    index bounds, unknown enum codes and trailing bytes all surface as
+//!    typed [`format::DecodeError`]s, a contract held by a seeded
+//!    1000+-mutant harness (`tests/mfb_fuzz.rs`). The crate is
+//!    `#![deny(unsafe_code)]` with a single audited exemption
+//!    (`PjrtSession`'s `Send` impl).
+//!
+//! Rejections carry stable codes — `V1xx` plan, `V2xx` memory, `V3xx`
+//! arithmetic, `E4xx` decode — listed in
+//! [`compiler::verify::ERROR_CODE_TABLE`] and printed by
+//! `microflow audit --codes`. `microflow audit <model>` prints a
+//! certificate report: peak-RAM bound, per-step live bytes and worst-case
+//! accumulator headroom.
+
+#![deny(unsafe_code)]
 
 pub mod api;
 pub mod bench_support;

@@ -44,6 +44,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
         "predict" => cmd_predict(args),
         "verify" => cmd_verify(args),
         "deploy" => cmd_deploy(args),
+        "audit" => cmd_audit(args),
         "serve" => cmd_serve(args),
         "help" | "--help" | "-h" => {
             print!("{USAGE}");
@@ -182,7 +183,7 @@ fn cmd_deploy(args: &Args) -> Result<()> {
     let engine = args.opt("engine").unwrap_or("microflow");
     let art = artifacts();
     let m = MfbModel::load(art.join(format!("{name}.mfb")))?;
-    let opts = CompileOptions { paging: args.flag("paging") };
+    let opts = CompileOptions { paging: args.flag("paging"), ..Default::default() };
     let compiled = CompiledModel::compile(&m, opts)?;
 
     let (eng, fp) = match engine {
@@ -221,6 +222,64 @@ fn cmd_deploy(args: &Args) -> Result<()> {
         }
         Err(e) => println!("  fits: NO — {e}"),
     }
+    Ok(())
+}
+
+/// `microflow audit <model|path> [--paging]` — statically certify a
+/// compiled plan and print its certificate report. `--synth-zoo [--seed N]`
+/// certifies every synthetic-zoo model instead (both paging modes; the CI
+/// gate), and `--codes` prints the stable error-code table.
+fn cmd_audit(args: &Args) -> Result<()> {
+    if args.flag("codes") {
+        print!("{}", microflow::compiler::ERROR_CODE_TABLE);
+        return Ok(());
+    }
+    if args.flag("synth-zoo") {
+        let seed = args.opt_usize("seed", 20_260_731) as u64;
+        let mut failures = 0usize;
+        for (name, m) in microflow::synth::zoo(seed) {
+            // through the serializer: certify the exact bytes an engine
+            // would be handed, not the in-memory construction
+            let bytes = microflow::format::builder::serialize(&m)?;
+            let parsed = MfbModel::parse(&bytes)?;
+            for paging in [false, true] {
+                match CompiledModel::compile(&parsed, CompileOptions { paging, certify: true }) {
+                    Ok(c) => {
+                        let cert = c.certificate.as_ref().expect("certify was on");
+                        println!(
+                            "{name:12} paging={paging:5}  peak RAM {:>6} B  headroom {:>2} bits",
+                            cert.peak_ram,
+                            cert.min_headroom_bits()
+                        );
+                    }
+                    Err(e) => {
+                        failures += 1;
+                        println!("{name:12} paging={paging:5}  REJECTED — {e:#}");
+                    }
+                }
+            }
+        }
+        anyhow::ensure!(failures == 0, "{failures} synth-zoo plan(s) failed certification");
+        println!("synth zoo (seed {seed}): every plan certified");
+        return Ok(());
+    }
+
+    let name = args.positional.get(1).map(|s| s.as_str()).context(
+        "missing <model> argument (an artifact name, a path to an .mfb, \
+         or --synth-zoo / --codes)",
+    )?;
+    let path = if std::path::Path::new(name).is_file() {
+        std::path::PathBuf::from(name)
+    } else {
+        artifacts().join(format!("{name}.mfb"))
+    };
+    let m = MfbModel::load(&path)?;
+    let opts = CompileOptions { paging: args.flag("paging"), certify: true };
+    let compiled = CompiledModel::compile(&m, opts)
+        .with_context(|| format!("{} failed certification", path.display()))?;
+    let cert = compiled.certificate.as_ref().expect("certify was on");
+    println!("{cert}");
+    println!("audit {}: certified", path.display());
     Ok(())
 }
 

@@ -263,7 +263,7 @@ mod tests {
     fn paging_slows_microflow_down() {
         let m = MfbModel::parse(&crate::format::mfb::tests::tiny_mfb()).unwrap();
         let unpaged = CompiledModel::compile(&m, CompileOptions::default()).unwrap();
-        let paged = CompiledModel::compile(&m, CompileOptions { paging: true }).unwrap();
+        let paged = CompiledModel::compile(&m, CompileOptions { paging: true, ..Default::default() }).unwrap();
         let mcu = by_name("ATmega328").unwrap();
         assert!(
             inference_cycles(&paged, mcu, Engine::MicroFlow)

@@ -312,7 +312,7 @@ mod tests {
         // tiny model's working set is already small, so construct the
         // comparison at the PagePlan level: covered by paging tests; here
         // just ensure the paged path is taken
-        let paged = CompiledModel::compile(&m, CompileOptions { paging: true }).unwrap();
+        let paged = CompiledModel::compile(&m, CompileOptions { paging: true, ..Default::default() }).unwrap();
         let atmega = by_name("ATmega328").unwrap();
         let fp = microflow_footprint(&paged, atmega);
         assert!(fp.ram >= code_size(atmega.arch).mf_base_ram);

@@ -36,7 +36,7 @@ pub fn i8_tensor(name: &str, dims: Vec<usize>, scale: f32, data: Vec<i8>) -> Ten
         dtype: DType::I8,
         dims,
         qparams: QParams::new(scale, 0),
-        data: data.iter().map(|&v| v as u8).collect(),
+        data,
     }
 }
 
@@ -47,7 +47,7 @@ pub fn i32_tensor(name: &str, dims: Vec<usize>, scale: f32, data: Vec<i32>) -> T
         dtype: DType::I32,
         dims,
         qparams: QParams::new(scale, 0),
-        data: data.iter().flat_map(|v| v.to_le_bytes()).collect(),
+        data: data.iter().flat_map(|v| v.to_le_bytes()).map(|b| b as i8).collect(),
     }
 }
 
@@ -161,6 +161,23 @@ pub fn random_conv(rng: &mut Prng) -> MfbModel {
     model(tensors, operators, 3)
 }
 
+/// The seeded synthetic model zoo: a labelled sample of everything the
+/// generators produce (FC chains of several depths plus conv models).
+/// `microflow audit --synth-zoo` certifies every member, and CI runs that
+/// over the default seed so an uncertifiable plan fails the build.
+pub fn zoo(seed: u64) -> Vec<(String, MfbModel)> {
+    let mut rng = Prng::new(seed);
+    let mut out = Vec::new();
+    for depth in [1usize, 2, 4] {
+        out.push((format!("fc-depth{depth}"), random_fc_chain(&mut rng, depth)));
+    }
+    out.push(("fc-wide".to_string(), fc_chain(&mut rng, &[64, 128, 10])));
+    for i in 0..4 {
+        out.push((format!("conv{i}"), random_conv(&mut rng)));
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -184,6 +201,17 @@ mod tests {
         assert_eq!(m.input_shape(), vec![16]);
         assert_eq!(m.output_shape(), vec![4]);
         assert_eq!(m.operators.len(), 2);
+    }
+
+    #[test]
+    fn zoo_members_round_trip_and_certify() {
+        for (name, m) in zoo(20260731) {
+            let bytes = crate::format::builder::serialize(&m).unwrap();
+            let parsed = MfbModel::parse(&bytes).unwrap_or_else(|e| panic!("{name}: {e}"));
+            let c = crate::compiler::CompiledModel::compile(&parsed, Default::default())
+                .unwrap_or_else(|e| panic!("{name}: {e:#}"));
+            assert!(c.certificate.is_some(), "{name} missing certificate");
+        }
     }
 
     #[test]

@@ -1,0 +1,137 @@
+//! Negative suite for the static certifier: every tampered plan must be
+//! rejected with its documented stable code (`ERROR_CODE_TABLE`), from
+//! outside the crate, on real synthesized models.
+//!
+//! The unit tests in `compiler::verify` cover the analysis passes
+//! surgically; this file holds the *integration* contract: compile a
+//! genuinely valid model, corrupt one claim the runtime would rely on,
+//! and assert the certifier catches it with the exact code a monitoring
+//! system would match on.
+
+use microflow::compiler::{
+    verify, CompileOptions, CompiledModel, MemoryPlan, Step, StepKind, ERROR_CODE_TABLE,
+};
+use microflow::synth;
+use microflow::util::Prng;
+
+fn compiled_fc(paging: bool) -> CompiledModel {
+    let m = synth::fc_chain(&mut Prng::new(7), &[6, 4, 3]);
+    CompiledModel::compile(&m, CompileOptions { paging, certify: true }).unwrap()
+}
+
+fn compiled_conv() -> CompiledModel {
+    let m = synth::random_conv(&mut Prng::new(5));
+    CompiledModel::compile(&m, CompileOptions::default()).unwrap()
+}
+
+fn assert_rejected_with(c: &CompiledModel, code: &str) {
+    let e = verify(c).expect_err("tampered plan must fail certification");
+    assert_eq!(e.code, code, "wrong code for: {e}");
+    assert!(e.to_string().starts_with(code), "display must lead with the code: {e}");
+    assert!(ERROR_CODE_TABLE.contains(code), "{code} is not in the documented table");
+}
+
+#[test]
+fn untampered_plans_certify_and_report() {
+    for paging in [false, true] {
+        let c = compiled_fc(paging);
+        let cert = c.certificate.as_ref().expect("certify is the default");
+        assert_eq!(cert.steps.len(), c.steps.len());
+        assert_eq!(cert.peak_ram, c.memory.peak);
+        let report = cert.to_string();
+        assert!(report.contains("certified") && report.contains("FullyConnected"), "{report}");
+    }
+}
+
+#[test]
+fn lying_peak_ram_is_v201() {
+    let mut c = compiled_fc(false);
+    c.memory.peak += 1;
+    assert_rejected_with(&c, "V201");
+}
+
+#[test]
+fn tampered_live_set_is_v202() {
+    let mut c = compiled_fc(false);
+    c.memory.per_step[0].input += 1;
+    assert_rejected_with(&c, "V202");
+}
+
+#[test]
+fn undersized_ping_pong_buffer_is_v203() {
+    let mut c = compiled_fc(false);
+    c.memory.buf_a -= 1; // the schedule could now alias input and output
+    assert_rejected_with(&c, "V203");
+}
+
+#[test]
+fn undersized_kernel_scratch_is_v204() {
+    let mut c = compiled_fc(true); // paged FC stages a K-element page buffer
+    assert!(c.memory.scratch > 0);
+    c.memory.scratch -= 1;
+    assert_rejected_with(&c, "V204");
+}
+
+#[test]
+fn spliced_shrinking_reshape_is_v205() {
+    let mut c = compiled_fc(false);
+    let out = c.steps.last().unwrap().out_len;
+    c.steps.push(Step { kind: StepKind::Reshape, in_len: out, out_len: out - 1, scratch_len: 0 });
+    c.output_shape = vec![out - 1];
+    c.memory = MemoryPlan::analyze(&c.steps);
+    assert_rejected_with(&c, "V205");
+}
+
+#[test]
+fn truncated_conv_panel_image_is_v104() {
+    let mut c = compiled_conv();
+    let Some(StepKind::Conv2D { filters, .. }) =
+        c.steps.iter_mut().map(|s| &mut s.kind).find(|k| matches!(k, StepKind::Conv2D { .. }))
+    else {
+        panic!("random_conv produced no Conv2D step");
+    };
+    filters.data.pop();
+    assert_rejected_with(&c, "V104");
+}
+
+#[test]
+fn page_plan_coverage_lies_are_v106() {
+    let mut c = compiled_fc(true);
+    c.page_plan.as_mut().unwrap().pages += 1; // claims a page no FC row has
+    assert_rejected_with(&c, "V106");
+
+    let mut c = compiled_fc(true);
+    c.page_plan = None; // paged steps with no plan at all
+    assert_rejected_with(&c, "V106");
+}
+
+#[test]
+fn overflow_capable_epilogue_is_v301() {
+    let mut c = compiled_fc(false);
+    if let StepKind::FullyConnected { pc, .. } = &mut c.steps[0].kind {
+        // a folded constant the Eq. 4 epilogue subtracts: i32::MIN pushes
+        // the worst-case intermediate past the i32 accumulator
+        pc.w_zp_term[0] = i32::MIN;
+    }
+    assert_rejected_with(&c, "V301");
+}
+
+#[test]
+fn scratch_claim_mismatch_is_v107() {
+    let mut c = compiled_fc(false);
+    c.steps[0].scratch_len = 99; // unpaged FC kernels stage nothing
+    c.memory = MemoryPlan::analyze(&c.steps);
+    assert_rejected_with(&c, "V107");
+}
+
+#[test]
+fn opting_out_skips_the_proof_but_not_the_analysis() {
+    let m = synth::fc_chain(&mut Prng::new(7), &[6, 4, 3]);
+    let mut c =
+        CompiledModel::compile(&m, CompileOptions { paging: false, certify: false }).unwrap();
+    assert!(c.certificate.is_none(), "opt-out must not attach a certificate");
+    // the pass is still callable on demand, and still catches tampering
+    assert!(verify(&c).is_ok());
+    c.memory.peak += 1;
+    assert_rejected_with(&c, "V201");
+}

@@ -14,7 +14,7 @@ use microflow::sim::{self, Engine};
 
 fn compiled(art: &std::path::Path, name: &str, paging: bool) -> CompiledModel {
     let m = MfbModel::load(art.join(format!("{name}.mfb"))).unwrap();
-    CompiledModel::compile(&m, CompileOptions { paging }).unwrap()
+    CompiledModel::compile(&m, CompileOptions { paging, ..Default::default() }).unwrap()
 }
 
 #[test]
