@@ -28,6 +28,7 @@ use microflow::api::{Engine, ReplicaFactory, Session, SessionCache};
 use microflow::bench_support::smoke_mode;
 use microflow::coordinator::{AutoscalePolicy, Fleet, PoolSpec, QosClass, QosProfile, Request};
 use microflow::format::mfb::MfbModel;
+use microflow::kernels::microkernel::backend;
 use microflow::sim::report::{emit, emit_json, Table};
 use microflow::synth;
 use microflow::util::json::Json;
@@ -130,6 +131,9 @@ fn push_row(
 }
 
 fn main() {
+    // every native replica below runs on this backend — print it so the
+    // throughput numbers in the JSON trail are interpretable
+    println!("kernel backend: {}", backend::active().name());
     let mut rng = Prng::new(0xF1EE7);
     // a model heavy enough that workers dominate the queue mutex
     let m = synth::fc_chain(&mut rng, &[64, 128, 128, 32, 4]);
@@ -314,6 +318,7 @@ fn main() {
     // machine-readable artifact at the repo root: the cross-PR trail
     let doc = Json::obj()
         .set("bench", "fleet_throughput")
+        .set("kernel_backend", backend::active().name())
         .set("client_threads", CLIENT_THREADS)
         .set("requests_per_thread", requests_per_thread())
         .set("smoke", smoke_mode())

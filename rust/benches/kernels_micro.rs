@@ -5,21 +5,26 @@
 //! This is also the §Perf harness: the perf pass iterates on these numbers
 //! (EXPERIMENTS.md records before/after). MicroFlow kernels run on the
 //! compile-time packed layouts (`compiler::pack`), staged once outside the
-//! timed windows, exactly as the plan does.
+//! timed windows, exactly as the plan does — and each MicroFlow timing is
+//! taken once per *available* kernel backend (scalar + AVX2/NEON where the
+//! host reports them), so the SIMD win lands in the same perf trail that
+//! proved the packing win.
 //!
 //! Outputs:
 //! * the human table + CSV via `sim::report::emit`;
 //! * machine-readable `BENCH_kernels.json` at the **repo root** (shapes,
-//!   medians, microflow-vs-interp ratio) so the perf trajectory is
-//!   comparable across PRs.
+//!   medians, a `backend` field per row, microflow-vs-interp ratio) so the
+//!   perf trajectory is comparable across PRs.
 //!
 //! Set `MICROFLOW_BENCH_SMOKE=1` to run a single iteration per shape (the
 //! CI layout-regression gate: it proves the packed kernels still run at
-//! every bench shape without paying bench wall-clock).
+//! every bench shape — on every available backend — without paying bench
+//! wall-clock).
 
 use microflow::bench_support::{black_box, report_line, smoke_mode, time_iters};
 use microflow::compiler::pack;
 use microflow::format::mfb::Padding;
+use microflow::kernels::microkernel::backend::{self, KernelBackend};
 use microflow::kernels::view::ConvGeometry;
 use microflow::kernels::{conv2d, depthwise_conv2d, fully_connected};
 use microflow::sim::report::{emit, emit_json, Table};
@@ -30,6 +35,7 @@ use microflow::util::{fmt_time, Prng};
 
 struct Row {
     kernel: &'static str,
+    backend: &'static str,
     shape: String,
     microflow_s: f64,
     interp_s: f64,
@@ -38,10 +44,19 @@ struct Row {
 fn main() {
     let smoke = smoke_mode();
     let (warmup, iters) = if smoke { (0usize, 1usize) } else { (10, 200) };
+    let backends: Vec<&'static dyn KernelBackend> = backend::available()
+        .into_iter()
+        .map(|n| backend::resolve(n).expect("available backend must resolve"))
+        .collect();
+    println!(
+        "kernel backends under test: [{}] (process default: {})",
+        backend::available().join(", "),
+        backend::active().name()
+    );
     let mut rng = Prng::new(3);
     let mut t = Table::new(
         "kernel micro-benches (host wall-clock, median of 200)",
-        &["kernel", "shape", "microflow", "tflm-interp", "ratio"],
+        &["kernel", "backend", "shape", "microflow", "tflm-interp", "ratio"],
     );
     let mut rows: Vec<Row> = Vec::new();
 
@@ -55,29 +70,36 @@ fn main() {
         let pc = PreComputed::fold(&b, &colsum, k, 0.05, 3, 0.02, 0, 0.001, 0, 0.08, -5, FusedAct::Relu);
         let m = FixedPointMultiplier::from_real(0.05 * 0.02 / 0.08);
         let mut out = vec![0i8; n];
-        let s_mf = time_iters(warmup, iters, || {
-            fully_connected::fully_connected_microflow(&x, &w, k, n, &pc, &mut out);
-            black_box(&out);
-        });
         let s_tf = time_iters(warmup, iters, || {
             fully_connected::fully_connected_interp(&x, &w, &b, k, n, 3, 0, m, -5, -128, 127, &mut out);
             black_box(&out);
         });
-        println!("{}", report_line(&format!("fc {label} ({k}x{n}) microflow"), &s_mf));
         println!("{}", report_line(&format!("fc {label} ({k}x{n}) interp"), &s_tf));
-        t.row(vec![
-            "fully_connected".into(),
-            format!("{k}x{n}"),
-            fmt_time(s_mf.median),
-            fmt_time(s_tf.median),
-            format!("{:.2}x", s_tf.median / s_mf.median),
-        ]);
-        rows.push(Row {
-            kernel: "fully_connected",
-            shape: format!("{k}x{n}"),
-            microflow_s: s_mf.median,
-            interp_s: s_tf.median,
-        });
+        for kb in &backends {
+            let s_mf = time_iters(warmup, iters, || {
+                fully_connected::fully_connected_microflow_with(*kb, &x, &w, k, n, &pc, &mut out);
+                black_box(&out);
+            });
+            println!(
+                "{}",
+                report_line(&format!("fc {label} ({k}x{n}) microflow/{}", kb.name()), &s_mf)
+            );
+            t.row(vec![
+                "fully_connected".into(),
+                kb.name().into(),
+                format!("{k}x{n}"),
+                fmt_time(s_mf.median),
+                fmt_time(s_tf.median),
+                format!("{:.2}x", s_tf.median / s_mf.median),
+            ]);
+            rows.push(Row {
+                kernel: "fully_connected",
+                backend: kb.name(),
+                shape: format!("{k}x{n}"),
+                microflow_s: s_mf.median,
+                interp_s: s_tf.median,
+            });
+        }
     }
 
     // --- DepthwiseConv2D at the TinyConv shape (49x40x1, k10x8, s2, mult 8)
@@ -94,31 +116,43 @@ fn main() {
         let mut out = vec![0i8; 25 * 20 * cout];
         // compile-time packing, outside the timed window (as the plan does)
         let w_t = pack::pack_depthwise(&w, 80, cout);
-        let s_mf = time_iters(warmup.min(5), iters, || {
-            depthwise_conv2d::depthwise_conv2d_microflow(&x, &w_t, &geo, 8, -128, &pc, &mut view, &mut out);
-            black_box(&out);
-        });
         let s_tf = time_iters(warmup.min(5), iters, || {
             depthwise_conv2d::depthwise_conv2d_interp(
                 &x, &w, &b, &geo, 8, -128, 0, m, -128, -128, 127, &mut view, &mut out,
             );
             black_box(&out);
         });
-        println!("{}", report_line("dwconv speech (49x40, k10x8, m8) microflow", &s_mf));
         println!("{}", report_line("dwconv speech (49x40, k10x8, m8) interp", &s_tf));
-        t.row(vec![
-            "depthwise_conv2d".into(),
-            "49x40x1 k10x8 m8".into(),
-            fmt_time(s_mf.median),
-            fmt_time(s_tf.median),
-            format!("{:.2}x", s_tf.median / s_mf.median),
-        ]);
-        rows.push(Row {
-            kernel: "depthwise_conv2d",
-            shape: "49x40x1 k10x8 m8".into(),
-            microflow_s: s_mf.median,
-            interp_s: s_tf.median,
-        });
+        for kb in &backends {
+            let s_mf = time_iters(warmup.min(5), iters, || {
+                depthwise_conv2d::depthwise_conv2d_microflow_with(
+                    *kb, &x, &w_t, &geo, 8, -128, &pc, &mut view, &mut out,
+                );
+                black_box(&out);
+            });
+            println!(
+                "{}",
+                report_line(
+                    &format!("dwconv speech (49x40, k10x8, m8) microflow/{}", kb.name()),
+                    &s_mf
+                )
+            );
+            t.row(vec![
+                "depthwise_conv2d".into(),
+                kb.name().into(),
+                "49x40x1 k10x8 m8".into(),
+                fmt_time(s_mf.median),
+                fmt_time(s_tf.median),
+                format!("{:.2}x", s_tf.median / s_mf.median),
+            ]);
+            rows.push(Row {
+                kernel: "depthwise_conv2d",
+                backend: kb.name(),
+                shape: "49x40x1 k10x8 m8".into(),
+                microflow_s: s_mf.median,
+                interp_s: s_tf.median,
+            });
+        }
     }
 
     // --- Conv2D at a MobileNet pointwise shape (6x6x128 -> 128) and the
@@ -139,29 +173,33 @@ fn main() {
         let packed = pack::pack_conv2d(&f, cout, kkc);
         let mut view = vec![0i8; kkc];
         let mut out = vec![0i8; geo.out_h * geo.out_w * cout];
-        let s_mf = time_iters(warmup.min(5), iters, || {
-            conv2d::conv2d_microflow(&x, &packed, &geo, -3, &pc, &mut view, &mut out);
-            black_box(&out);
-        });
         let s_tf = time_iters(warmup.min(5), iters, || {
             conv2d::conv2d_interp(&x, &f, &b, &geo, cout, -3, 0, m, 4, -128, 127, &mut view, &mut out);
             black_box(&out);
         });
-        println!("{}", report_line(&format!("conv {label} microflow"), &s_mf));
         println!("{}", report_line(&format!("conv {label} interp"), &s_tf));
-        t.row(vec![
-            "conv2d".into(),
-            label.into(),
-            fmt_time(s_mf.median),
-            fmt_time(s_tf.median),
-            format!("{:.2}x", s_tf.median / s_mf.median),
-        ]);
-        rows.push(Row {
-            kernel: "conv2d",
-            shape: label.into(),
-            microflow_s: s_mf.median,
-            interp_s: s_tf.median,
-        });
+        for kb in &backends {
+            let s_mf = time_iters(warmup.min(5), iters, || {
+                conv2d::conv2d_microflow_with(*kb, &x, &packed, &geo, -3, &pc, &mut view, &mut out);
+                black_box(&out);
+            });
+            println!("{}", report_line(&format!("conv {label} microflow/{}", kb.name()), &s_mf));
+            t.row(vec![
+                "conv2d".into(),
+                kb.name().into(),
+                label.into(),
+                fmt_time(s_mf.median),
+                fmt_time(s_tf.median),
+                format!("{:.2}x", s_tf.median / s_mf.median),
+            ]);
+            rows.push(Row {
+                kernel: "conv2d",
+                backend: kb.name(),
+                shape: label.into(),
+                microflow_s: s_mf.median,
+                interp_s: s_tf.median,
+            });
+        }
     }
 
     emit("kernels_micro", &t);
@@ -172,16 +210,20 @@ fn main() {
         .map(|r| {
             Json::obj()
                 .set("kernel", r.kernel)
+                .set("backend", r.backend)
                 .set("shape", r.shape.clone())
                 .set("microflow_s", r.microflow_s)
                 .set("interp_s", r.interp_s)
                 .set("ratio_interp_over_microflow", r.interp_s / r.microflow_s)
         })
         .collect();
+    let avail: Vec<Json> = backend::available().into_iter().map(Json::from).collect();
     let doc = Json::obj()
         .set("bench", "kernels_micro")
         .set("iters", iters)
         .set("smoke", smoke)
+        .set("active_backend", backend::active().name())
+        .set("available_backends", avail)
         .set("shapes", shapes);
     // smoke runs go to a distinct (untracked) name so median-of-1 noise
     // can never overwrite the tracked perf trail

@@ -49,7 +49,17 @@ pub fn pack_conv2d(filters: &[i8], c_out: usize, kkc: usize) -> PackedConvFilter
             dst[k * NR + r] = v;
         }
     }
-    PackedConvFilters { c_out, kkc, data }
+    let packed = PackedConvFilters { c_out, kkc, data };
+    // producer-side enforcement of the panel-image invariant the
+    // certifier proves statically (compiler::verify, V104) and
+    // PackedConvFilters::panel() debug-asserts at the consumer: the
+    // image holds exactly ceil(c_out/NR) panels of [kkc][NR] bytes
+    assert_eq!(
+        packed.data.len(),
+        packed.panels() * packed.kkc * NR,
+        "packed conv image size must equal panels * kkc * NR"
+    );
+    packed
 }
 
 /// Transpose container-layout depthwise filters `[KH*KW, Cout]` to the

@@ -371,6 +371,16 @@ fn verify_plan(m: &CompiledModel) -> Result<(), VerifyError> {
 }
 
 /// What each kernel actually stages (the planner's scratch contract).
+///
+/// Kernel backends (`kernels::microkernel::backend`) do not change these
+/// obligations: every backend — scalar, AVX2, NEON — consumes the same
+/// `NR`-wide packed panels and staged views, keeps its accumulators in
+/// registers, and finishes SIMD stride remainders in-kernel, so no
+/// backend introduces widened-panel or realignment scratch. A future
+/// backend that widens `NR` (or adds an MR input-row tile) must extend
+/// this contract and the V104 packing checks above in the same PR — the
+/// ROADMAP invariant that a new pass teaches the certifier its
+/// obligations applies to kernel backends too.
 fn expected_scratch(s: &Step) -> usize {
     match &s.kind {
         StepKind::FullyConnected { k, paged, .. } => {

@@ -18,6 +18,7 @@ use anyhow::Result;
 
 use crate::compiler::plan::{CompiledModel, CompileOptions, StepKind};
 use crate::format::mfb::MfbModel;
+use crate::kernels::microkernel::backend;
 use crate::kernels::{activation, average_pool2d, conv2d, depthwise_conv2d, fully_connected};
 use crate::tensor::quant::QParams;
 
@@ -48,6 +49,10 @@ impl MicroFlowEngine {
     /// Wrap an already-compiled plan (the warm-cache path): only the
     /// per-engine scratch buffers are allocated here.
     pub fn from_compiled(compiled: std::sync::Arc<CompiledModel>) -> Self {
+        // resolve the kernel backend NOW (env lookup + feature detection
+        // allocate) so the predict path below only pays a cached load —
+        // tests/alloc_free.rs counts allocations from the first warm call
+        let _ = backend::active();
         let scratch = Scratch::for_plan(&compiled);
         MicroFlowEngine { compiled, scratch: std::cell::RefCell::new(scratch) }
     }
@@ -121,6 +126,9 @@ pub(crate) fn run_plan<'a>(
     scratch: &'a mut Scratch,
 ) -> &'a [i8] {
     scratch.load_input(input);
+    // one cached OnceLock load per predict; the per-step kernel calls
+    // below thread the same backend explicitly
+    let kb = backend::active();
     for step in &compiled.steps {
         let in_len = step.in_len;
         let out_len = step.out_len;
@@ -132,18 +140,30 @@ pub(crate) fn run_plan<'a>(
             StepKind::FullyConnected { k, n, weights, pc, paged } => {
                 let (x, y, page) = scratch.split(in_len, out_len);
                 if *paged {
+                    // paged mode models the Flash→RAM page stage; its one
+                    // column at a time is deliberately left scalar
                     fully_connected::fully_connected_paged(x, weights, *k, *n, pc, &mut page[..*k], y);
                 } else {
-                    fully_connected::fully_connected_microflow(x, weights, *k, *n, pc, y);
+                    fully_connected::fully_connected_microflow_with(kb, x, weights, *k, *n, pc, y);
                 }
             }
             StepKind::Conv2D { geo, filters, z_x, pc } => {
                 let (x, y, view) = scratch.split(in_len, out_len);
-                conv2d::conv2d_microflow(x, filters, geo, *z_x, pc, &mut view[..step.scratch_len], y);
+                conv2d::conv2d_microflow_with(
+                    kb,
+                    x,
+                    filters,
+                    geo,
+                    *z_x,
+                    pc,
+                    &mut view[..step.scratch_len],
+                    y,
+                );
             }
             StepKind::DepthwiseConv2D { geo, depth_multiplier, filters, z_x, pc } => {
                 let (x, y, view) = scratch.split(in_len, out_len);
-                depthwise_conv2d::depthwise_conv2d_microflow(
+                depthwise_conv2d::depthwise_conv2d_microflow_with(
+                    kb,
                     x,
                     filters,
                     geo,

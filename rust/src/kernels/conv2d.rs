@@ -15,7 +15,8 @@
 //! row-major filters and the naive one-accumulator loop nest, as TFLM
 //! must.
 
-use crate::kernels::microkernel::{self, PackedConvFilters, NR};
+use crate::kernels::microkernel::backend::{self, KernelBackend};
+use crate::kernels::microkernel::{PackedConvFilters, NR};
 use crate::kernels::view::ConvGeometry;
 use crate::tensor::fixedpoint::FixedPointMultiplier;
 use crate::tensor::quant::{requant_float, PreComputed};
@@ -53,6 +54,24 @@ pub fn conv2d_microflow(
     view: &mut [i8],
     out: &mut [i8],
 ) {
+    conv2d_microflow_with(backend::active(), input, filters, geo, z_x, pc, view, out);
+}
+
+/// [`conv2d_microflow`] on an explicit [`KernelBackend`]. The engine
+/// passes the process-wide selection resolved at session construction;
+/// the conformance sweeps (`tests/pack_equivalence.rs`) force every
+/// *available* backend through here and hold each to the same oracle.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_microflow_with(
+    kb: &dyn KernelBackend,
+    input: &[i8],
+    filters: &PackedConvFilters,
+    geo: &ConvGeometry,
+    z_x: i8,
+    pc: &PreComputed,
+    view: &mut [i8],
+    out: &mut [i8],
+) {
     let c_out = filters.c_out;
     let kkc = geo.k_h * geo.k_w * geo.in_c;
     debug_assert_eq!(filters.kkc, kkc);
@@ -64,7 +83,11 @@ pub fn conv2d_microflow(
     );
     debug_assert_eq!(input.len(), geo.in_h * geo.in_w * geo.in_c);
     debug_assert_eq!(out.len(), geo.out_h * geo.out_w * c_out);
+    // both per-channel tables are indexed up to c_out by finish_panel —
+    // a mismatched PreComputed must fail here, at the precondition, not
+    // deep inside the hot loop
     debug_assert_eq!(pc.const_bias.len(), c_out);
+    debug_assert_eq!(pc.w_zp_term.len(), c_out);
 
     let row_len = geo.k_w * geo.in_c;
     let need_sum = pc.z_w != 0;
@@ -91,9 +114,9 @@ pub fn conv2d_microflow(
                         let seg = &input[off..off + row_len];
                         let pseg = &panel[ky * row_len * NR..(ky + 1) * row_len * NR];
                         if need_sum && p == 0 {
-                            microkernel::dot4_sum(seg, pseg, &mut acc, &mut viewsum);
+                            kb.dot4_sum(seg, pseg, &mut acc, &mut viewsum);
                         } else {
-                            microkernel::dot4(seg, pseg, &mut acc);
+                            kb.dot4(seg, pseg, &mut acc);
                         }
                     }
                     finish_panel(filters, p, &acc, pc.z_w * viewsum, pc, pos_out);
@@ -106,9 +129,9 @@ pub fn conv2d_microflow(
                     let panel = filters.panel(p);
                     let mut acc = [0i32; NR];
                     if need_sum && p == 0 {
-                        microkernel::dot4_sum(view, panel, &mut acc, &mut viewsum);
+                        kb.dot4_sum(view, panel, &mut acc, &mut viewsum);
                     } else {
-                        microkernel::dot4(view, panel, &mut acc);
+                        kb.dot4(view, panel, &mut acc);
                     }
                     finish_panel(filters, p, &acc, pc.z_w * viewsum, pc, pos_out);
                 }

@@ -5,6 +5,7 @@
 //! Output channel `co` convolves input channel `co / depth_multiplier`
 //! only — channels never merge (paper Sec. 5.3).
 
+use crate::kernels::microkernel::backend::{self, KernelBackend};
 use crate::kernels::view::ConvGeometry;
 use crate::tensor::fixedpoint::FixedPointMultiplier;
 use crate::tensor::quant::{requant_float, PreComputed};
@@ -31,12 +32,46 @@ pub fn depthwise_conv2d_microflow(
     view: &mut [i8],
     out: &mut [i8],
 ) {
+    depthwise_conv2d_microflow_with(
+        backend::active(),
+        input,
+        filters,
+        geo,
+        depth_multiplier,
+        z_x,
+        pc,
+        view,
+        out,
+    );
+}
+
+/// [`depthwise_conv2d_microflow`] on an explicit [`KernelBackend`] (see
+/// the note on [`crate::kernels::conv2d::conv2d_microflow_with`]). The
+/// per-channel dot is strided by `c_in`; for single-channel inputs (the
+/// speech model's first layer) it is contiguous and SIMD backends take
+/// their vector path.
+#[allow(clippy::too_many_arguments)]
+pub fn depthwise_conv2d_microflow_with(
+    kb: &dyn KernelBackend,
+    input: &[i8],
+    filters: &[i8],
+    geo: &ConvGeometry,
+    depth_multiplier: usize,
+    z_x: i8,
+    pc: &PreComputed,
+    view: &mut [i8],
+    out: &mut [i8],
+) {
     let c_in = geo.in_c;
     let c_out = c_in * depth_multiplier;
     let kk = geo.k_h * geo.k_w;
     debug_assert_eq!(filters.len(), kk * c_out);
     debug_assert_eq!(view.len(), kk * c_in);
     debug_assert_eq!(out.len(), geo.out_h * geo.out_w * c_out);
+    // per-channel tables indexed up to c_out by the epilogue below —
+    // same precondition discipline as conv2d_microflow
+    debug_assert_eq!(pc.const_bias.len(), c_out);
+    debug_assert_eq!(pc.w_zp_term.len(), c_out);
 
     for oy in 0..geo.out_h {
         for ox in 0..geo.out_w {
@@ -52,10 +87,7 @@ pub fn depthwise_conv2d_microflow(
                 for m in 0..depth_multiplier {
                     let co = ci * depth_multiplier + m;
                     let f = &filters[co * kk..(co + 1) * kk];
-                    let mut dot = 0i32;
-                    for (t, &fv) in f.iter().enumerate() {
-                        dot += view[t * c_in + ci] as i32 * fv as i32;
-                    }
+                    let dot = kb.dot_strided(&view[ci..], c_in, f);
                     let acc = dot - pc.z_w * xsum - pc.w_zp_term[co] + pc.kzxzw;
                     out[base + co] =
                         requant_float(acc, pc.const_bias[co], pc.scale_ratio, pc.act_min, pc.act_max);

@@ -28,6 +28,7 @@
 //! * [`fully_connected_interp`]    — TFLM-style per-element offsets +
 //!   gemmlowp fixed-point epilogue.
 
+use crate::kernels::microkernel::backend::{self, KernelBackend};
 use crate::kernels::microkernel::{self, NR};
 use crate::tensor::fixedpoint::FixedPointMultiplier;
 use crate::tensor::quant::{requant_float, PreComputed};
@@ -45,10 +46,26 @@ pub fn fully_connected_microflow(
     pc: &PreComputed,
     out: &mut [i8],
 ) {
+    fully_connected_microflow_with(backend::active(), x, w, k, n, pc, out);
+}
+
+/// [`fully_connected_microflow`] on an explicit [`KernelBackend`] (see
+/// the note on [`crate::kernels::conv2d::conv2d_microflow_with`]).
+pub fn fully_connected_microflow_with(
+    kb: &dyn KernelBackend,
+    x: &[i8],
+    w: &[i8],
+    k: usize,
+    n: usize,
+    pc: &PreComputed,
+    out: &mut [i8],
+) {
     debug_assert_eq!(x.len(), k);
     debug_assert_eq!(w.len(), k * n);
     debug_assert_eq!(out.len(), n);
+    // both per-channel tables are indexed up to n by the epilogues below
     debug_assert_eq!(pc.const_bias.len(), n);
+    debug_assert_eq!(pc.w_zp_term.len(), n);
 
     // data-dependent row sum (the only z_w term that cannot be folded)
     let rowsum: i32 = if pc.z_w != 0 { x.iter().map(|&v| v as i32).sum() } else { 0 };
@@ -58,7 +75,7 @@ pub fn fully_connected_microflow(
     for p in 0..full {
         let j0 = p * NR;
         let mut acc = [0i32; NR];
-        microkernel::dot4_cols(x, w, n, j0, &mut acc);
+        kb.dot4_cols(x, w, n, j0, &mut acc);
         for r in 0..NR {
             let j = j0 + r;
             let a = acc[r] - zw_rowsum - pc.w_zp_term[j] + pc.kzxzw;
@@ -68,7 +85,7 @@ pub fn fully_connected_microflow(
     if tail > 0 {
         let j0 = full * NR;
         let mut acc = [0i32; NR];
-        microkernel::dot_cols(x, w, n, j0, tail, &mut acc);
+        kb.dot_cols(x, w, n, j0, tail, &mut acc);
         for r in 0..tail {
             let j = j0 + r;
             let a = acc[r] - zw_rowsum - pc.w_zp_term[j] + pc.kzxzw;
@@ -95,6 +112,12 @@ pub fn fully_connected_paged(
     out: &mut [i8],
 ) {
     debug_assert_eq!(page_buf.len(), k);
+    debug_assert_eq!(x.len(), k);
+    debug_assert_eq!(w.len(), k * n);
+    debug_assert_eq!(out.len(), n);
+    // same per-channel-table precondition as the unpaged variant
+    debug_assert_eq!(pc.const_bias.len(), n);
+    debug_assert_eq!(pc.w_zp_term.len(), n);
     let rowsum: i32 = if pc.z_w != 0 { x.iter().map(|&v| v as i32).sum() } else { 0 };
     for j in 0..n {
         // stage the page: column j of w (strided in Flash, contiguous in RAM)

@@ -24,6 +24,14 @@
 //! (`tests/pack_equivalence.rs` and the cross-engine conformance suite
 //! hold them to `assert_eq!`, not within-one-unit).
 
+/// Runtime-selected kernel backends (scalar reference + `std::arch`
+/// SIMD), all bit-identical over this module's walks.
+pub mod backend;
+#[cfg(target_arch = "aarch64")]
+mod simd_aarch64;
+#[cfg(target_arch = "x86_64")]
+mod simd_x86;
+
 /// Panel width: output channels computed per micro-kernel walk. Four i32
 /// accumulators fit the register file of every target this repo models
 /// (and SIMD lanes on the host); the compiler's packing pass and the cost
@@ -49,8 +57,17 @@ impl PackedConvFilters {
     }
 
     /// Panel `p` as a contiguous `[kkc][NR]` slice.
+    ///
+    /// An out-of-range `p` (or a short/corrupted panel image) fails
+    /// *here*, as a named precondition, rather than as an opaque slice
+    /// panic deep in the walk. These are the same invariants the
+    /// certifier proves statically (`compiler::verify`, V104) and
+    /// `compiler::pack` asserts at construction — this is the last line
+    /// of the producer/prover/consumer triangle.
     #[inline]
     pub fn panel(&self, p: usize) -> &[i8] {
+        debug_assert!(p < self.panels(), "panel {p} out of range ({} panels)", self.panels());
+        debug_assert_eq!(self.data.len(), self.panels() * self.kkc * NR, "panel image size");
         let stride = self.kkc * NR;
         &self.data[p * stride..(p + 1) * stride]
     }
@@ -142,6 +159,21 @@ pub fn dot_cols(x: &[i8], w: &[i8], n: usize, j0: usize, width: usize, acc: &mut
             *a += xv * wv as i32;
         }
     }
+}
+
+/// Depthwise per-channel walk: `Σ_t xs[t*stride] * w[t]` over `w.len()`
+/// taps. `stride` is the input channel count (`1` for single-channel
+/// inputs, where the walk degenerates to a contiguous dot product — the
+/// case SIMD backends accelerate).
+#[inline(always)]
+pub fn dot_strided(xs: &[i8], stride: usize, w: &[i8]) -> i32 {
+    debug_assert!(stride > 0);
+    debug_assert!(w.is_empty() || (w.len() - 1) * stride < xs.len());
+    let mut dot = 0i32;
+    for (t, &wv) in w.iter().enumerate() {
+        dot += xs[t * stride] as i32 * wv as i32;
+    }
+    dot
 }
 
 #[cfg(test)]
@@ -242,5 +274,23 @@ mod tests {
         assert_eq!(pf.panel_width(1), 2);
         assert_eq!(pf.panel(1).len(), 3 * NR);
         assert_eq!(pf.flash_bytes(), 24);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn out_of_range_panel_index_fails_the_named_precondition() {
+        let pf = PackedConvFilters { c_out: 6, kkc: 3, data: vec![0; 2 * 3 * NR] };
+        let _ = pf.panel(2);
+    }
+
+    #[test]
+    fn dot_strided_matches_the_naive_walk() {
+        let mut rng = Prng::new(6);
+        for &(taps, stride) in &[(5usize, 3usize), (8, 1), (1, 4), (10, 2)] {
+            let xs = rng.i8_vec((taps - 1) * stride + 1);
+            let w = rng.i8_vec(taps);
+            let want: i32 = (0..taps).map(|t| xs[t * stride] as i32 * w[t] as i32).sum();
+            assert_eq!(dot_strided(&xs, stride, &w), want, "taps {taps} stride {stride}");
+        }
     }
 }

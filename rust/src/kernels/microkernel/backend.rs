@@ -1,0 +1,286 @@
+//! Runtime-dispatched kernel backends (ROADMAP direction 1).
+//!
+//! The register-tiled walks of [`super`] (`dot4` / `dot4_sum` /
+//! `dot4_cols` / `dot_cols`, plus the depthwise strided dot) are the
+//! entire arithmetic surface of the MicroFlow hot path. This module puts
+//! that surface behind [`KernelBackend`] so one binary can pick, at
+//! startup, between:
+//!
+//! * **`scalar`** — the reference backend: the exact register-tiled
+//!   scalar walks of [`super`], compiled on every target, always
+//!   selectable. This is the oracle every other backend is held to.
+//! * **`avx2`** (x86_64) — `std::arch` AVX2: widening i8→i16 loads and
+//!   `vpmaddwd` pair-sums over the `[k][NR]` panels (`super::simd_x86`).
+//! * **`neon`** (aarch64) — `std::arch` NEON: `smlal`-style widening
+//!   multiply-accumulate (`vmlal_lane_s16`) over the same panels
+//!   (`super::simd_aarch64`).
+//!
+//! ## Selection
+//!
+//! [`active`] resolves once per process (a [`OnceLock`]): the
+//! `MICROFLOW_KERNEL_BACKEND` env var if set (`scalar` | `avx2` |
+//! `neon`; an unknown or unavailable name **panics** — the override
+//! exists to force a backend in tests and CI, and a typo silently
+//! measuring scalar would defeat it), otherwise the best backend CPU
+//! feature detection offers ([`is_x86_feature_detected!`] /
+//! `is_aarch64_feature_detected!`). Engines resolve the backend at
+//! session construction, so the predict path never pays the env lookup
+//! and stays allocation-free (`tests/alloc_free.rs`).
+//!
+//! ## Bit-exactness
+//!
+//! Every backend accumulates i8×i8 products in exact i32 arithmetic —
+//! only the *grouping* of the associative, commutative integer sum
+//! differs — so every backend is **bit-identical** to `scalar`
+//! (`assert_eq!`, not tolerance). This module's unit sweep holds each
+//! walk to the scalar result across SIMD stride remainders, and
+//! `tests/pack_equivalence.rs` re-runs the full randomized kernel
+//! oracle sweep once per available backend.
+
+use std::sync::OnceLock;
+
+use super::NR;
+
+/// The micro-kernel arithmetic surface. One dynamic call covers a whole
+/// `k` walk (an entire panel, FC column strip, or depthwise tap chain),
+/// so dispatch cost is amortized to nothing against the loop body.
+pub trait KernelBackend: Sync {
+    /// Stable selector name (`scalar` | `avx2` | `neon`) — printed by
+    /// benches and `microflow serve`, matched by
+    /// `MICROFLOW_KERNEL_BACKEND`.
+    fn name(&self) -> &'static str;
+
+    /// `acc[r] += Σ_k seg[k] * panel[k*NR + r]` — see [`super::dot4`].
+    fn dot4(&self, seg: &[i8], panel: &[i8], acc: &mut [i32; NR]);
+
+    /// [`Self::dot4`] with the segment sum folded in — see
+    /// [`super::dot4_sum`].
+    fn dot4_sum(&self, seg: &[i8], panel: &[i8], acc: &mut [i32; NR], sum: &mut i32);
+
+    /// FullyConnected walk over `[K, N]` columns `j0..j0+NR` — see
+    /// [`super::dot4_cols`].
+    fn dot4_cols(&self, x: &[i8], w: &[i8], n: usize, j0: usize, acc: &mut [i32; NR]);
+
+    /// FullyConnected tail walk over the last `width < NR` columns —
+    /// see [`super::dot_cols`]. Lanes `width..NR` must stay untouched.
+    fn dot_cols(&self, x: &[i8], w: &[i8], n: usize, j0: usize, width: usize, acc: &mut [i32; NR]);
+
+    /// Depthwise per-channel dot: `Σ_t xs[t*stride] * w[t]` over
+    /// `w.len()` taps — see [`super::dot_strided`]. `stride == 1` (every
+    /// single-channel input, e.g. the speech model's first layer) is the
+    /// contiguous case SIMD backends accelerate.
+    fn dot_strided(&self, xs: &[i8], stride: usize, w: &[i8]) -> i32;
+}
+
+/// The always-available reference backend: delegates straight to the
+/// scalar walks of [`super`], so "held bit-exact to scalar" means held
+/// to the exact code `tests/pack_equivalence.rs` proved against the
+/// unpacked oracles.
+pub struct Scalar;
+
+/// Singleton handed out by [`resolve`].
+pub static SCALAR: Scalar = Scalar;
+
+impl KernelBackend for Scalar {
+    fn name(&self) -> &'static str {
+        "scalar"
+    }
+
+    fn dot4(&self, seg: &[i8], panel: &[i8], acc: &mut [i32; NR]) {
+        super::dot4(seg, panel, acc);
+    }
+
+    fn dot4_sum(&self, seg: &[i8], panel: &[i8], acc: &mut [i32; NR], sum: &mut i32) {
+        super::dot4_sum(seg, panel, acc, sum);
+    }
+
+    fn dot4_cols(&self, x: &[i8], w: &[i8], n: usize, j0: usize, acc: &mut [i32; NR]) {
+        super::dot4_cols(x, w, n, j0, acc);
+    }
+
+    fn dot_cols(&self, x: &[i8], w: &[i8], n: usize, j0: usize, width: usize, acc: &mut [i32; NR]) {
+        super::dot_cols(x, w, n, j0, width, acc);
+    }
+
+    fn dot_strided(&self, xs: &[i8], stride: usize, w: &[i8]) -> i32 {
+        super::dot_strided(xs, stride, w)
+    }
+}
+
+/// Backend names selectable on this host, reference backend first.
+/// `scalar` is always present; a SIMD name appears only when both
+/// compiled for this target *and* reported by the running CPU.
+pub fn available() -> Vec<&'static str> {
+    let mut names = vec!["scalar"];
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") {
+            names.push("avx2");
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            names.push("neon");
+        }
+    }
+    names
+}
+
+/// Look a backend up by name. `Err` carries the valid names for this
+/// host — an unknown or unavailable name must fail loudly, never fall
+/// back (see the module docs on why the override is strict).
+pub fn resolve(name: &str) -> Result<&'static dyn KernelBackend, String> {
+    match name {
+        "scalar" => Ok(&SCALAR),
+        #[cfg(target_arch = "x86_64")]
+        "avx2" => {
+            if is_x86_feature_detected!("avx2") {
+                Ok(&super::simd_x86::AVX2)
+            } else {
+                Err("kernel backend \"avx2\" is compiled in but this CPU does not report AVX2"
+                    .to_string())
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        "neon" => {
+            if std::arch::is_aarch64_feature_detected!("neon") {
+                Ok(&super::simd_aarch64::NEON)
+            } else {
+                Err("kernel backend \"neon\" is compiled in but this CPU does not report NEON"
+                    .to_string())
+            }
+        }
+        other => Err(format!(
+            "unknown kernel backend {other:?}; valid on this host: {}",
+            available().join(", ")
+        )),
+    }
+}
+
+/// Best backend this host offers: the last entry of [`available`]
+/// (SIMD when detected, the scalar reference otherwise).
+fn autodetect() -> &'static dyn KernelBackend {
+    let names = available();
+    let best = names.last().expect("scalar is always available");
+    resolve(best).expect("every name available() lists must resolve")
+}
+
+static ACTIVE: OnceLock<&'static dyn KernelBackend> = OnceLock::new();
+
+/// The process-wide backend: `MICROFLOW_KERNEL_BACKEND` if set (panics
+/// on an unknown or unavailable name), otherwise [`autodetect`]. The
+/// choice is made once and cached for the life of the process; call
+/// sites on the predict path see a plain atomic load.
+pub fn active() -> &'static dyn KernelBackend {
+    *ACTIVE.get_or_init(|| match std::env::var("MICROFLOW_KERNEL_BACKEND") {
+        Ok(name) => resolve(name.trim())
+            .unwrap_or_else(|e| panic!("MICROFLOW_KERNEL_BACKEND: {e}")),
+        Err(std::env::VarError::NotPresent) => autodetect(),
+        Err(std::env::VarError::NotUnicode(v)) => {
+            panic!("MICROFLOW_KERNEL_BACKEND is not unicode: {v:?}")
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::microkernel as mk;
+    use crate::util::Prng;
+
+    fn backends() -> Vec<&'static dyn KernelBackend> {
+        available()
+            .into_iter()
+            .map(|n| resolve(n).expect("listed backend must resolve"))
+            .collect()
+    }
+
+    #[test]
+    fn scalar_is_always_first_and_resolves() {
+        let names = available();
+        assert_eq!(names[0], "scalar");
+        assert_eq!(resolve("scalar").unwrap().name(), "scalar");
+        // the active backend is one of the available ones, and stable
+        let a = active().name();
+        assert!(names.contains(&a), "active {a} not in {names:?}");
+        assert_eq!(active().name(), a);
+    }
+
+    #[test]
+    fn unknown_backend_name_fails_loudly() {
+        let e = resolve("warp-drive").unwrap_err();
+        assert!(e.contains("unknown kernel backend"), "{e}");
+        assert!(e.contains("scalar"), "error must list the valid names: {e}");
+        // the override is an exact token, not fuzzy: case and whitespace
+        // mistakes must not silently select something else
+        assert!(resolve("AVX2").is_err());
+        assert!(resolve("Scalar").is_err());
+        assert!(resolve("").is_err());
+    }
+
+    #[test]
+    fn every_backend_matches_scalar_on_remainder_lengths() {
+        // lengths straddling every SIMD stride in this repo: the 8-wide
+        // panel walks, the 16-wide contiguous dots, odd FC row pairs
+        let mut rng = Prng::new(0xB4C2);
+        for kb in backends() {
+            for &len in &[1usize, 2, 3, 4, 7, 8, 9, 15, 16, 17, 31, 33, 64] {
+                let seg = rng.i8_vec(len);
+                let panel = rng.i8_vec(len * NR);
+                let (mut want, mut got) = ([0i32; NR], [0i32; NR]);
+                mk::dot4(&seg, &panel, &mut want);
+                kb.dot4(&seg, &panel, &mut got);
+                assert_eq!(got, want, "{} dot4 len {len}", kb.name());
+
+                let (mut want2, mut got2) = ([3i32; NR], [3i32; NR]);
+                let (mut want_s, mut got_s) = (-5i32, -5i32);
+                mk::dot4_sum(&seg, &panel, &mut want2, &mut want_s);
+                kb.dot4_sum(&seg, &panel, &mut got2, &mut got_s);
+                assert_eq!((got2, got_s), (want2, want_s), "{} dot4_sum len {len}", kb.name());
+            }
+        }
+    }
+
+    #[test]
+    fn fc_walks_match_scalar_for_every_backend() {
+        let mut rng = Prng::new(0xFC02);
+        for kb in backends() {
+            for &k in &[1usize, 2, 7, 9, 31, 40] {
+                let n = 11; // two full panels + a 3-wide tail
+                let x = rng.i8_vec(k);
+                let w = rng.i8_vec(k * n);
+                for j0 in [0usize, 4] {
+                    let (mut want, mut got) = ([0i32; NR], [0i32; NR]);
+                    mk::dot4_cols(&x, &w, n, j0, &mut want);
+                    kb.dot4_cols(&x, &w, n, j0, &mut got);
+                    assert_eq!(got, want, "{} dot4_cols k {k} j0 {j0}", kb.name());
+                }
+                // sentinel lanes past the tail width must stay untouched
+                let (mut want, mut got) = ([7i32; NR], [7i32; NR]);
+                mk::dot_cols(&x, &w, n, 8, 3, &mut want);
+                kb.dot_cols(&x, &w, n, 8, 3, &mut got);
+                assert_eq!(got, want, "{} dot_cols k {k}", kb.name());
+            }
+        }
+    }
+
+    #[test]
+    fn strided_dot_matches_scalar_for_every_backend() {
+        let mut rng = Prng::new(0xD501);
+        let shapes: &[(usize, usize)] =
+            &[(1, 1), (7, 1), (16, 1), (33, 1), (80, 1), (9, 3), (12, 5)];
+        for kb in backends() {
+            for &(taps, stride) in shapes {
+                let xs = rng.i8_vec((taps - 1) * stride + 1);
+                let w = rng.i8_vec(taps);
+                assert_eq!(
+                    kb.dot_strided(&xs, stride, &w),
+                    mk::dot_strided(&xs, stride, &w),
+                    "{} taps {taps} stride {stride}",
+                    kb.name()
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,191 @@
+//! NEON micro-kernel backend (aarch64).
+//!
+//! Same arithmetic as the scalar walks of [`super`], restructured for
+//! 128-bit NEON:
+//!
+//! * panel walks consume 8 input bytes per step: the 32 matching panel
+//!   bytes are widened i8→i16 (`vmovl_s8`) and accumulated with
+//!   `smlal`-style widening multiply-accumulate —
+//!   `vmlal_lane_s16::<LANE>` multiplies a channel quad by one input
+//!   lane and adds into an int32x4 accumulator (two accumulators hide
+//!   the MLA latency chain, folded once at the end);
+//! * FullyConnected column walks run two `[K, N]` rows per iteration
+//!   against a two-lane input vector;
+//! * contiguous depthwise dots use `vmull_s8` + `vpadalq_s16`
+//!   (pairwise-add-accumulate), 8 taps per step.
+//!
+//! ## Exactness
+//!
+//! Every product is i8×i8 (|p| ≤ 16384), formed by *widening* multiplies
+//! straight into i16/i32 — NEON's widening MLA family cannot saturate on
+//! this range, so every sum is the exact i32 value in a different
+//! grouping, and results are bit-identical to the scalar oracle
+//! (`assert_eq!` in the backend unit sweep and
+//! `tests/pack_equivalence.rs`). Remainders (`k % 8`, odd FC rows,
+//! `k % 8` taps) finish on the scalar walk over the same accumulators.
+//!
+//! ## Safety
+//!
+//! The crate is `#![deny(unsafe_code)]`; this module carries the narrow
+//! exemption for `std::arch`. Every `#[target_feature(enable = "neon")]`
+//! function is private and reachable only through [`Neon`], which
+//! [`super::backend::resolve`] hands out strictly after
+//! `is_aarch64_feature_detected!("neon")` succeeds. All vector loads are
+//! derived from slices with debug-asserted lengths and never read past
+//! `len` (tails are finished scalar, short FC rows go through a stack
+//! buffer).
+#![allow(unsafe_code)]
+
+use core::arch::aarch64::*;
+
+use super::backend::KernelBackend;
+use super::NR;
+
+/// The NEON backend. Only [`super::backend::resolve`] constructs a
+/// reference to [`NEON`], and only after feature detection.
+pub struct Neon;
+
+/// Singleton handed out by [`super::backend::resolve`].
+pub static NEON: Neon = Neon;
+
+impl KernelBackend for Neon {
+    fn name(&self) -> &'static str {
+        "neon"
+    }
+
+    fn dot4(&self, seg: &[i8], panel: &[i8], acc: &mut [i32; NR]) {
+        // SAFETY: NEON presence was verified by resolve() before this
+        // backend could be obtained (see the module docs).
+        unsafe { dot4_neon(seg, panel, acc) }
+    }
+
+    fn dot4_sum(&self, seg: &[i8], panel: &[i8], acc: &mut [i32; NR], sum: &mut i32) {
+        // cheap linear pass kept scalar, identical to the reference fold
+        *sum += seg.iter().map(|&v| v as i32).sum::<i32>();
+        // SAFETY: as in `dot4`.
+        unsafe { dot4_neon(seg, panel, acc) }
+    }
+
+    fn dot4_cols(&self, x: &[i8], w: &[i8], n: usize, j0: usize, acc: &mut [i32; NR]) {
+        // SAFETY: as in `dot4`.
+        unsafe { dot4_cols_neon(x, w, n, j0, acc) }
+    }
+
+    fn dot_cols(&self, x: &[i8], w: &[i8], n: usize, j0: usize, width: usize, acc: &mut [i32; NR]) {
+        // runs once per FC call on < NR columns — scalar is the right tool
+        super::dot_cols(x, w, n, j0, width, acc);
+    }
+
+    fn dot_strided(&self, xs: &[i8], stride: usize, w: &[i8]) -> i32 {
+        if stride == 1 {
+            // SAFETY: as in `dot4`.
+            unsafe { dot_contig_neon(&xs[..w.len()], w) }
+        } else {
+            super::dot_strided(xs, stride, w)
+        }
+    }
+}
+
+/// Panel walk, 8 ks per iteration over one `[k][NR]` panel.
+///
+/// Per iteration: 8 input bytes widen to one int16x8 (`sl`/`sh` halves);
+/// the 32 panel bytes are four channel quads per k-pair after widening.
+/// `vmlal_lane_s16::<L>(acc, quad_k, s)` adds `quad_k * s[L]` — one k's
+/// four channels scaled by that k's input — so each accumulator lane
+/// stays a single output channel. Two accumulators split the eight MLAs.
+#[target_feature(enable = "neon")]
+unsafe fn dot4_neon(seg: &[i8], panel: &[i8], acc: &mut [i32; NR]) {
+    debug_assert_eq!(panel.len(), seg.len() * NR);
+    let k = seg.len();
+    let main = k - (k % 8);
+    let mut acc_a = vdupq_n_s32(0);
+    let mut acc_b = vdupq_n_s32(0);
+    let mut kk = 0usize;
+    while kk < main {
+        let s16 = vmovl_s8(vld1_s8(seg.as_ptr().add(kk)));
+        let sl = vget_low_s16(s16); // seg[kk..kk+4] as i16 lanes
+        let sh = vget_high_s16(s16); // seg[kk+4..kk+8]
+        let p0 = vld1q_s8(panel.as_ptr().add(kk * NR)); // ks kk..kk+4
+        let p1 = vld1q_s8(panel.as_ptr().add((kk + 4) * NR)); // ks kk+4..kk+8
+        let p0lo = vmovl_s8(vget_low_s8(p0)); // [k0 quad | k1 quad]
+        let p0hi = vmovl_s8(vget_high_s8(p0)); // [k2 quad | k3 quad]
+        let p1lo = vmovl_s8(vget_low_s8(p1));
+        let p1hi = vmovl_s8(vget_high_s8(p1));
+        acc_a = vmlal_lane_s16::<0>(acc_a, vget_low_s16(p0lo), sl);
+        acc_b = vmlal_lane_s16::<1>(acc_b, vget_high_s16(p0lo), sl);
+        acc_a = vmlal_lane_s16::<2>(acc_a, vget_low_s16(p0hi), sl);
+        acc_b = vmlal_lane_s16::<3>(acc_b, vget_high_s16(p0hi), sl);
+        acc_a = vmlal_lane_s16::<0>(acc_a, vget_low_s16(p1lo), sh);
+        acc_b = vmlal_lane_s16::<1>(acc_b, vget_high_s16(p1lo), sh);
+        acc_a = vmlal_lane_s16::<2>(acc_a, vget_low_s16(p1hi), sh);
+        acc_b = vmlal_lane_s16::<3>(acc_b, vget_high_s16(p1hi), sh);
+        kk += 8;
+    }
+    let mut lanes = [0i32; NR];
+    vst1q_s32(lanes.as_mut_ptr(), vaddq_s32(acc_a, acc_b));
+    for (a, l) in acc.iter_mut().zip(lanes) {
+        *a += l;
+    }
+    // scalar remainder: same accumulators, same exact i32 arithmetic
+    super::dot4(&seg[main..], &panel[main * NR..], acc);
+}
+
+/// FullyConnected column walk, two `[K, N]` rows per iteration: the two
+/// rows' column quads sit in the halves of one widened int16x8; each is
+/// MLA-ed against its input lane.
+#[target_feature(enable = "neon")]
+unsafe fn dot4_cols_neon(x: &[i8], w: &[i8], n: usize, j0: usize, acc: &mut [i32; NR]) {
+    debug_assert!(j0 + NR <= n);
+    debug_assert_eq!(w.len(), x.len() * n);
+    let k = x.len();
+    let main = k - (k % 2);
+    let mut acc4 = vdupq_n_s32(0);
+    let mut i = 0usize;
+    while i < main {
+        // stack-stage the two 4-byte rows: rows of a [K, N] matrix are
+        // not 8-contiguous, and a direct 8-byte load could overread the
+        // final row of the matrix
+        let mut rows = [0i8; 8];
+        rows[..NR].copy_from_slice(&w[i * n + j0..i * n + j0 + NR]);
+        rows[NR..].copy_from_slice(&w[(i + 1) * n + j0..(i + 1) * n + j0 + NR]);
+        let r16 = vmovl_s8(vld1_s8(rows.as_ptr()));
+        let xpair = vset_lane_s16::<1>(x[i + 1] as i16, vdup_n_s16(x[i] as i16));
+        acc4 = vmlal_lane_s16::<0>(acc4, vget_low_s16(r16), xpair);
+        acc4 = vmlal_lane_s16::<1>(acc4, vget_high_s16(r16), xpair);
+        i += 2;
+    }
+    let mut lanes = [0i32; NR];
+    vst1q_s32(lanes.as_mut_ptr(), acc4);
+    for (a, l) in acc.iter_mut().zip(lanes) {
+        *a += l;
+    }
+    if main < k {
+        // odd trailing row, scalar
+        let row = &w[main * n + j0..main * n + j0 + NR];
+        let xv = x[main] as i32;
+        for (a, &wv) in acc.iter_mut().zip(row) {
+            *a += xv * wv as i32;
+        }
+    }
+}
+
+/// Contiguous i8 dot product: `vmull_s8` widens 8 products to i16, then
+/// `vpadalq_s16` pairwise-adds them into four i32 accumulators.
+#[target_feature(enable = "neon")]
+unsafe fn dot_contig_neon(xs: &[i8], w: &[i8]) -> i32 {
+    debug_assert_eq!(xs.len(), w.len());
+    let k = w.len();
+    let main = k - (k % 8);
+    let mut acc4 = vdupq_n_s32(0);
+    let mut i = 0usize;
+    while i < main {
+        let prod = vmull_s8(vld1_s8(xs.as_ptr().add(i)), vld1_s8(w.as_ptr().add(i)));
+        acc4 = vpadalq_s16(acc4, prod);
+        i += 8;
+    }
+    let mut dot = vaddvq_s32(acc4);
+    for (xv, wv) in xs[main..].iter().zip(&w[main..]) {
+        dot += *xv as i32 * *wv as i32;
+    }
+    dot
+}

@@ -1,0 +1,225 @@
+//! AVX2 micro-kernel backend (x86_64).
+//!
+//! Same arithmetic as the scalar walks of [`super`], restructured for
+//! 256-bit integer SIMD:
+//!
+//! * panel walks consume 8 input bytes per step: the 32 matching panel
+//!   bytes are loaded once, byte-shuffled so adjacent i16 lanes hold two
+//!   adjacent `k`s of **one** output channel, widened i8→i16, and
+//!   reduced by `vpmaddwd` (`_mm256_madd_epi16`) into eight i32
+//!   accumulators (two channel quads, folded once at the end);
+//! * FullyConnected column walks pair two `[K, N]` rows per `vpmaddwd`
+//!   via a byte interleave (`_mm_unpacklo_epi8`);
+//! * contiguous depthwise dots widen 16 bytes of each operand per step.
+//!
+//! ## Exactness
+//!
+//! Every product is i8×i8 (|p| ≤ 16384 ⊂ i16), computed in i16 lanes and
+//! pair-summed into i32 by `vpmaddwd` — no saturation is reachable. (The
+//! u8×i8 `vpmaddubsw` shortcut ROADMAP once suggested is deliberately
+//! NOT used: it saturates at i16 and would break bit-exactness.) Only
+//! the grouping of the integer sum differs from the scalar walk, so
+//! results are bit-identical; `tests/pack_equivalence.rs` and the
+//! backend unit sweep hold this with `assert_eq!`.
+//!
+//! Remainders (`k % 8` panel tails, odd FC row counts, `k % 16`
+//! contiguous tails) finish on the scalar walk over the same
+//! accumulators — the SIMD/scalar seam is exactly where the remainder
+//! lengths in the unit sweep sit.
+//!
+//! ## Safety
+//!
+//! The crate is `#![deny(unsafe_code)]`; this module carries the narrow
+//! exemption for `std::arch`. Every `#[target_feature(enable = "avx2")]`
+//! function is private to the module and reachable only through
+//! [`Avx2`], which [`super::backend::resolve`] hands out strictly after
+//! `is_x86_feature_detected!("avx2")` succeeds — that runtime check is
+//! the safety contract for every call below. All loads go through
+//! bounds-checked slices or pointers derived from them with
+//! debug-asserted lengths; there are no unaligned-type or overread
+//! tricks (tail bytes are never touched by SIMD loads).
+#![allow(unsafe_code)]
+
+use core::arch::x86_64::*;
+
+use super::backend::KernelBackend;
+use super::NR;
+
+/// The AVX2 backend. Only [`super::backend::resolve`] constructs a
+/// reference to [`AVX2`], and only after feature detection.
+pub struct Avx2;
+
+/// Singleton handed out by [`super::backend::resolve`].
+pub static AVX2: Avx2 = Avx2;
+
+impl KernelBackend for Avx2 {
+    fn name(&self) -> &'static str {
+        "avx2"
+    }
+
+    fn dot4(&self, seg: &[i8], panel: &[i8], acc: &mut [i32; NR]) {
+        // SAFETY: AVX2 presence was verified by resolve() before this
+        // backend could be obtained (see the module docs).
+        unsafe { dot4_avx2(seg, panel, acc) }
+    }
+
+    fn dot4_sum(&self, seg: &[i8], panel: &[i8], acc: &mut [i32; NR], sum: &mut i32) {
+        // the segment sum is a cheap linear pass; doing it scalar keeps
+        // this trivially identical to the reference fold
+        *sum += seg.iter().map(|&v| v as i32).sum::<i32>();
+        // SAFETY: as in `dot4`.
+        unsafe { dot4_avx2(seg, panel, acc) }
+    }
+
+    fn dot4_cols(&self, x: &[i8], w: &[i8], n: usize, j0: usize, acc: &mut [i32; NR]) {
+        // SAFETY: as in `dot4`.
+        unsafe { dot4_cols_avx2(x, w, n, j0, acc) }
+    }
+
+    fn dot_cols(&self, x: &[i8], w: &[i8], n: usize, j0: usize, width: usize, acc: &mut [i32; NR]) {
+        // runs once per FC call on < NR columns — scalar is the right tool
+        super::dot_cols(x, w, n, j0, width, acc);
+    }
+
+    fn dot_strided(&self, xs: &[i8], stride: usize, w: &[i8]) -> i32 {
+        if stride == 1 {
+            // SAFETY: as in `dot4`.
+            unsafe { dot_contig_avx2(&xs[..w.len()], w) }
+        } else {
+            // strided gathers don't pay on AVX2 for these tap counts
+            super::dot_strided(xs, stride, w)
+        }
+    }
+}
+
+/// Two i8s as adjacent i16 lanes of one i32 (little-endian lane order:
+/// `a` in the low lane), ready for `_mm_set1_epi32` broadcast into the
+/// multiplier position of `vpmaddwd`.
+#[inline(always)]
+fn pair(a: i8, b: i8) -> i32 {
+    (a as i16 as u16 as u32 | ((b as i16 as u16 as u32) << 16)) as i32
+}
+
+/// Panel walk, 8 ks per iteration over one `[k][NR]` panel.
+///
+/// Lane plan per iteration (ks `kk..kk+8`, channels `c0..c3`):
+/// the 32 panel bytes `[k0c0 k0c1 k0c2 k0c3 | k1c0 ...]` are shuffled
+/// per 128-bit lane to `[k0c0 k1c0 k0c1 k1c1 k0c2 k1c2 k0c3 k1c3 |
+/// k2c0 k3c0 ...]`, widened to i16, and `vpmaddwd`-ed against the
+/// broadcast pair `(seg[k0], seg[k1])` — each resulting i32 lane is
+/// `seg[k0]*w[k0][c] + seg[k1]*w[k1][c]`, i.e. the pairwise add stays
+/// within one output channel. Two madds cover 8 ks; the two 128-bit
+/// halves are two independent channel quads folded at the end.
+#[target_feature(enable = "avx2")]
+unsafe fn dot4_avx2(seg: &[i8], panel: &[i8], acc: &mut [i32; NR]) {
+    debug_assert_eq!(panel.len(), seg.len() * NR);
+    let k = seg.len();
+    let main = k - (k % 8);
+    let interleave = _mm256_setr_epi8(
+        0, 4, 1, 5, 2, 6, 3, 7, 8, 12, 9, 13, 10, 14, 11, 15, // low lane: ks 0..4
+        0, 4, 1, 5, 2, 6, 3, 7, 8, 12, 9, 13, 10, 14, 11, 15, // high lane: ks 4..8
+    );
+    let mut acc8 = _mm256_setzero_si256();
+    let mut kk = 0usize;
+    while kk < main {
+        let pb = _mm256_loadu_si256(panel.as_ptr().add(kk * NR) as *const __m256i);
+        let il = _mm256_shuffle_epi8(pb, interleave);
+        let lo = _mm256_cvtepi8_epi16(_mm256_castsi256_si128(il));
+        let hi = _mm256_cvtepi8_epi16(_mm256_extracti128_si256::<1>(il));
+        let xa = pairs_2x(pair(seg[kk], seg[kk + 1]), pair(seg[kk + 2], seg[kk + 3]));
+        let xb = pairs_2x(pair(seg[kk + 4], seg[kk + 5]), pair(seg[kk + 6], seg[kk + 7]));
+        acc8 = _mm256_add_epi32(acc8, _mm256_madd_epi16(lo, xa));
+        acc8 = _mm256_add_epi32(acc8, _mm256_madd_epi16(hi, xb));
+        kk += 8;
+    }
+    fold_add(acc8, acc);
+    // scalar remainder: same accumulators, same exact i32 arithmetic
+    super::dot4(&seg[main..], &panel[main * NR..], acc);
+}
+
+/// `[lo ×4 | hi ×4]` as eight i32 lanes (each an i16 pair).
+#[target_feature(enable = "avx2")]
+unsafe fn pairs_2x(lo: i32, hi: i32) -> __m256i {
+    _mm256_inserti128_si256::<1>(_mm256_castsi128_si256(_mm_set1_epi32(lo)), _mm_set1_epi32(hi))
+}
+
+/// Fold the two channel quads of `acc8` and add into `acc`.
+#[target_feature(enable = "avx2")]
+unsafe fn fold_add(acc8: __m256i, acc: &mut [i32; NR]) {
+    let quad = _mm_add_epi32(_mm256_castsi256_si128(acc8), _mm256_extracti128_si256::<1>(acc8));
+    let mut lanes = [0i32; NR];
+    _mm_storeu_si128(lanes.as_mut_ptr() as *mut __m128i, quad);
+    for (a, l) in acc.iter_mut().zip(lanes) {
+        *a += l;
+    }
+}
+
+/// FullyConnected column walk, two `[K, N]` rows per `vpmaddwd`:
+/// `_mm_unpacklo_epi8(r0, r1)` interleaves the two rows' column bytes to
+/// `[r0c0 r1c0 r0c1 r1c1 ...]`, so after widening, the in-pair add of
+/// `vpmaddwd` against the broadcast `(x[i], x[i+1])` pair stays within
+/// one output column.
+#[target_feature(enable = "avx2")]
+unsafe fn dot4_cols_avx2(x: &[i8], w: &[i8], n: usize, j0: usize, acc: &mut [i32; NR]) {
+    debug_assert!(j0 + NR <= n);
+    debug_assert_eq!(w.len(), x.len() * n);
+    let k = x.len();
+    let main = k - (k % 2);
+    let mut acc4 = _mm_setzero_si128();
+    let mut i = 0usize;
+    while i < main {
+        let r0 = load_row4(w, i * n + j0);
+        let r1 = load_row4(w, (i + 1) * n + j0);
+        let p16 = _mm_cvtepi8_epi16(_mm_unpacklo_epi8(r0, r1));
+        let xv = _mm_set1_epi32(pair(x[i], x[i + 1]));
+        acc4 = _mm_add_epi32(acc4, _mm_madd_epi16(p16, xv));
+        i += 2;
+    }
+    let mut lanes = [0i32; NR];
+    _mm_storeu_si128(lanes.as_mut_ptr() as *mut __m128i, acc4);
+    for (a, l) in acc.iter_mut().zip(lanes) {
+        *a += l;
+    }
+    if main < k {
+        // odd trailing row, scalar
+        let row = &w[main * n + j0..main * n + j0 + NR];
+        let xv = x[main] as i32;
+        for (a, &wv) in acc.iter_mut().zip(row) {
+            *a += xv * wv as i32;
+        }
+    }
+}
+
+/// Four row bytes as the low i32 lane of an XMM register. Goes through a
+/// bounds-checked slice and `i32::from_le_bytes` — never a 16-byte load —
+/// so the last row of the weight matrix cannot overread.
+#[inline(always)]
+fn load_row4(w: &[i8], off: usize) -> __m128i {
+    let b = &w[off..off + NR];
+    let v = i32::from_le_bytes([b[0] as u8, b[1] as u8, b[2] as u8, b[3] as u8]);
+    // SAFETY: `_mm_cvtsi32_si128` is SSE2 — baseline on every x86_64.
+    unsafe { _mm_cvtsi32_si128(v) }
+}
+
+/// Contiguous i8 dot product, 16 bytes of each operand per step.
+#[target_feature(enable = "avx2")]
+unsafe fn dot_contig_avx2(xs: &[i8], w: &[i8]) -> i32 {
+    debug_assert_eq!(xs.len(), w.len());
+    let k = w.len();
+    let main = k - (k % 16);
+    let mut acc8 = _mm256_setzero_si256();
+    let mut i = 0usize;
+    while i < main {
+        let a = _mm256_cvtepi8_epi16(_mm_loadu_si128(xs.as_ptr().add(i) as *const __m128i));
+        let b = _mm256_cvtepi8_epi16(_mm_loadu_si128(w.as_ptr().add(i) as *const __m128i));
+        acc8 = _mm256_add_epi32(acc8, _mm256_madd_epi16(a, b));
+        i += 16;
+    }
+    let mut quads = [0i32; NR];
+    fold_add(acc8, &mut quads);
+    let mut dot = quads.iter().sum::<i32>();
+    for (xv, wv) in xs[main..].iter().zip(&w[main..]) {
+        dot += *xv as i32 * *wv as i32;
+    }
+    dot
+}

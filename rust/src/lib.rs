@@ -101,8 +101,9 @@
 //!    index bounds, unknown enum codes and trailing bytes all surface as
 //!    typed [`format::DecodeError`]s, a contract held by a seeded
 //!    1000+-mutant harness (`tests/mfb_fuzz.rs`). The crate is
-//!    `#![deny(unsafe_code)]` with a single audited exemption
-//!    (`PjrtSession`'s `Send` impl).
+//!    `#![deny(unsafe_code)]` with audited exemptions only for
+//!    `PjrtSession`'s `Send` impl and the SIMD kernel-backend modules
+//!    (see *Kernel backends* below).
 //!
 //! Rejections carry stable codes — `V1xx` plan, `V2xx` memory, `V3xx`
 //! arithmetic, `E4xx` decode — listed in
@@ -110,6 +111,30 @@
 //! `microflow audit --codes`. `microflow audit <model>` prints a
 //! certificate report: peak-RAM bound, per-step live bytes and worst-case
 //! accumulator headroom.
+//!
+//! ## Kernel backends
+//!
+//! The hot-path i8×i8→i32 panel micro-kernels
+//! ([`kernels::microkernel`]) are dispatched once per process through
+//! [`kernels::microkernel::backend`]: the portable **scalar** backend is
+//! always compiled (it is the reference oracle), and `std::arch` SIMD
+//! backends — **avx2** on x86_64, **neon** on aarch64 — are selected at
+//! startup when CPU feature detection reports them. Set
+//! `MICROFLOW_KERNEL_BACKEND=scalar|avx2|neon` to force one; an unknown
+//! or unavailable name panics at session construction rather than
+//! silently falling back, so a CI leg forcing `avx2` can never quietly
+//! test scalar.
+//!
+//! Every backend is held **bit-exact** to scalar: products of two `i8`
+//! values fit `i16` with no saturation and the plan's accumulators are
+//! exact `i32` sums, so any regrouping of the additions is identical —
+//! the per-backend oracle sweeps in `tests/pack_equivalence.rs` assert
+//! `assert_eq!` equality (not tolerance) across randomized shapes,
+//! including the `kkc % stride` remainder tails. The SIMD modules are
+//! the crate's only other `unsafe` exemptions: each carries a
+//! module-level allow with `SAFETY` documentation, and the
+//! `#[target_feature]` functions are reachable only through the runtime
+//! feature check in `backend::resolve`.
 
 #![deny(unsafe_code)]
 

@@ -375,6 +375,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         cache.misses(),
         fleet.replicas()
     );
+    // which micro-kernel backend the native replicas run on — needed to
+    // interpret any throughput numbers this run prints
+    println!(
+        "kernel backend: {} (available: [{}]; force with MICROFLOW_KERNEL_BACKEND)",
+        microflow::kernels::microkernel::backend::active().name(),
+        microflow::kernels::microkernel::backend::available().join(", ")
+    );
 
     // synthetic Poisson open-loop load from the test set
     let ds = MdsDataset::load(art.join(format!("{name}_test.mds")))?;

@@ -8,15 +8,35 @@
 //! shapes: `c_out % NR != 0` tails, 1x1 pointwise, SAME/VALID padding,
 //! stride 2, depth multipliers, and FC widths around every panel/tail
 //! split. All cases are seeded (`util::Prng`) and artifact-free.
+//!
+//! Since the kernel-backend layer landed, each sweep runs once per
+//! *available* backend (`microkernel::backend::available()` — always
+//! `scalar`, plus AVX2/NEON where the host CPU reports them), re-seeded
+//! so every backend sees the identical case mix. Dedicated shapes
+//! straddle the SIMD stride remainders (`kkc ∈ {1, 7, 9, 31}` against
+//! the 8-wide panel and 16-wide contiguous walks) alongside the
+//! existing `c_out % NR` tails — the remainder seams are where SIMD
+//! bugs live.
 
 use microflow::compiler::pack::{self, NR};
 use microflow::format::mfb::Padding;
+use microflow::kernels::microkernel::backend::{self, KernelBackend};
 use microflow::kernels::view::ConvGeometry;
 use microflow::kernels::{conv2d, depthwise_conv2d, fully_connected};
 use microflow::tensor::quant::{requant_float, FusedAct, PreComputed};
 use microflow::util::Prng;
 
 const CASES: usize = 120;
+
+/// Every backend selectable on this host, scalar first. Each must
+/// resolve — `available()` promising a name that `resolve()` rejects is
+/// itself a bug worth failing on.
+fn backends() -> Vec<&'static dyn KernelBackend> {
+    backend::available()
+        .into_iter()
+        .map(|n| backend::resolve(n).expect("available backend must resolve"))
+        .collect()
+}
 
 /// Random qparams in realistic PTQ ranges; z_w drawn from a range that
 /// includes 0 so both the fused-viewsum and no-viewsum paths run.
@@ -132,6 +152,12 @@ fn dw_container_reference(
 
 #[test]
 fn packed_conv2d_bit_identical_to_unpacked_reference() {
+    for kb in backends() {
+        conv2d_sweep(kb);
+    }
+}
+
+fn conv2d_sweep(kb: &'static dyn KernelBackend) {
     let mut rng = Prng::new(0x9AC4);
     let mut tails_seen = [false; NR];
     for case in 0..CASES {
@@ -165,21 +191,86 @@ fn packed_conv2d_bit_identical_to_unpacked_reference() {
 
         let packed = pack::pack_conv2d(&filters, c_out, kkc);
         let mut got = vec![0i8; want.len()];
-        conv2d::conv2d_microflow(&input, &packed, &geo, z_x as i8, &pc, &mut view, &mut got);
+        conv2d::conv2d_microflow_with(kb, &input, &packed, &geo, z_x as i8, &pc, &mut view, &mut got);
 
         assert_eq!(
-            got, want,
-            "case {case}: {h}x{w}x{c_in} k{kh}x{kw} s{stride} {padding:?} cout {c_out}"
+            got,
+            want,
+            "[{}] case {case}: {h}x{w}x{c_in} k{kh}x{kw} s{stride} {padding:?} cout {c_out}",
+            kb.name()
         );
     }
     assert!(tails_seen.iter().all(|&t| t), "case mix must cover every c_out % NR tail");
 }
 
 #[test]
+fn conv2d_simd_stride_remainders_bit_identical() {
+    // kkc ∈ {1, 7, 9, 31}: pointwise layers whose reduction length
+    // straddles the SIMD strides (below one 8-wide step, one step ± 1,
+    // just under four steps) — the panel-walk remainder seam. c_out = 5
+    // keeps the c_out % NR tail panel in play at the same time, and the
+    // SAME-padded 3x3 case makes the boundary (staged-view) path cross
+    // the same remainders.
+    for kb in backends() {
+        let mut rng = Prng::new(0x51D4);
+        for &c_in in &[1usize, 7, 9, 31] {
+            for &(kh, kw, padding) in &[(1usize, 1usize, Padding::Valid), (3, 3, Padding::Same)] {
+                let (h, w, c_out) = (4usize, 5usize, 5usize);
+                let geo = ConvGeometry::new(h, w, c_in, kh, kw, 1, 1, padding).unwrap();
+                let kkc = kh * kw * c_in;
+                let input = rng.i8_vec(h * w * c_in);
+                let filters = rng.i8_vec(c_out * kkc);
+                let bias = rng.i32_vec(c_out, -1000, 1000);
+                let colsum: Vec<i32> = (0..c_out)
+                    .map(|co| filters[co * kkc..(co + 1) * kkc].iter().map(|&v| v as i32).sum())
+                    .collect();
+                let (pc, z_x) = fold(&mut rng, &bias, &colsum, kkc);
+
+                let mut view = vec![0i8; kkc];
+                let mut want = vec![0i8; geo.out_h * geo.out_w * c_out];
+                conv2d_unpacked_reference(
+                    &input, &filters, &geo, c_out, z_x as i8, &pc, &mut view, &mut want,
+                );
+                let packed = pack::pack_conv2d(&filters, c_out, kkc);
+                let mut got = vec![0i8; want.len()];
+                conv2d::conv2d_microflow_with(
+                    kb, &input, &packed, &geo, z_x as i8, &pc, &mut view, &mut got,
+                );
+                assert_eq!(got, want, "[{}] kkc {kkc} k{kh}x{kw}", kb.name());
+            }
+        }
+    }
+}
+
+#[test]
+fn unknown_backend_name_fails_loudly_not_silently() {
+    // the env override exists to FORCE a backend in tests/CI; a typo
+    // must never silently measure something else
+    let err = backend::resolve("sse9-totally-real").unwrap_err();
+    assert!(err.contains("unknown kernel backend"), "{err}");
+    assert!(err.contains("scalar"), "must list valid names: {err}");
+}
+
+#[test]
 fn packed_fc_bit_identical_to_unpacked_reference() {
+    for kb in backends() {
+        fc_sweep(kb);
+    }
+}
+
+fn fc_sweep(kb: &'static dyn KernelBackend) {
     let mut rng = Prng::new(0xFC04);
     for case in 0..CASES {
-        let k = rng.range_i64(1, 80) as usize;
+        // the randomized k plus the fixed remainder set: the FC column
+        // walk pairs rows two at a time, so odd k and the {1,7,9,31}
+        // stride-straddlers all hit the SIMD seam
+        let k = match case % 5 {
+            0 => 1,
+            1 => 7,
+            2 => 9,
+            3 => 31,
+            _ => rng.range_i64(1, 80) as usize,
+        };
         // 1..=13 sweeps pure-tail, exact-panel and panel+tail widths
         let n = rng.range_i64(1, 13) as usize;
         let x = rng.i8_vec(k);
@@ -191,17 +282,26 @@ fn packed_fc_bit_identical_to_unpacked_reference() {
         let mut want = vec![0i8; n];
         fc_unpacked_reference(&x, &w, k, n, &pc, &mut want);
         let mut got = vec![0i8; n];
-        fully_connected::fully_connected_microflow(&x, &w, k, n, &pc, &mut got);
-        assert_eq!(got, want, "case {case}: k {k} n {n}");
+        fully_connected::fully_connected_microflow_with(kb, &x, &w, k, n, &pc, &mut got);
+        assert_eq!(got, want, "[{}] case {case}: k {k} n {n}", kb.name());
     }
 }
 
 #[test]
 fn packed_depthwise_bit_identical_to_container_reference() {
+    for kb in backends() {
+        depthwise_sweep(kb);
+    }
+}
+
+fn depthwise_sweep(kb: &'static dyn KernelBackend) {
     let mut rng = Prng::new(0xD304);
     for case in 0..CASES {
         let (h, w) = (rng.range_i64(3, 9) as usize, rng.range_i64(3, 9) as usize);
-        let c_in = rng.range_i64(1, 5) as usize;
+        // c_in == 1 is the contiguous (stride-1) dot SIMD backends take;
+        // force it on a quarter of the cases so the vector path and its
+        // kk % 8 remainder get steady coverage alongside the strided path
+        let c_in = if case % 4 == 0 { 1 } else { rng.range_i64(1, 5) as usize };
         let (kh, kw) = (rng.range_i64(1, 3) as usize, rng.range_i64(1, 3) as usize);
         let stride = rng.range_i64(1, 2) as usize;
         let padding = if rng.below(2) == 0 { Padding::Same } else { Padding::Valid };
@@ -223,9 +323,45 @@ fn packed_depthwise_bit_identical_to_container_reference() {
 
         let packed = pack::pack_depthwise(&filters, kk, c_out);
         let mut got = vec![0i8; want.len()];
-        depthwise_conv2d::depthwise_conv2d_microflow(
-            &input, &packed, &geo, mult, z_x as i8, &pc, &mut view, &mut got,
+        depthwise_conv2d::depthwise_conv2d_microflow_with(
+            kb, &input, &packed, &geo, mult, z_x as i8, &pc, &mut view, &mut got,
         );
-        assert_eq!(got, want, "case {case}: {h}x{w}x{c_in} k{kh}x{kw} s{stride} mult {mult}");
+        assert_eq!(
+            got,
+            want,
+            "[{}] case {case}: {h}x{w}x{c_in} k{kh}x{kw} s{stride} mult {mult}",
+            kb.name()
+        );
+    }
+}
+
+#[test]
+fn depthwise_large_contiguous_window_bit_identical() {
+    // single-channel 5x7 window (kk = 35, not a multiple of the 8-wide
+    // contiguous dot) with a depth multiplier — the speech-model shape
+    // family for the stride-1 SIMD path, sized to cross several vector
+    // steps plus a remainder
+    for kb in backends() {
+        let mut rng = Prng::new(0xD355);
+        let (h, w, c_in, kh, kw, mult) = (9usize, 9usize, 1usize, 5usize, 7usize, 3usize);
+        let c_out = c_in * mult;
+        let kk = kh * kw;
+        let geo = ConvGeometry::new(h, w, c_in, kh, kw, 1, 1, Padding::Same).unwrap();
+        let input = rng.i8_vec(h * w * c_in);
+        let filters = rng.i8_vec(kk * c_out);
+        let bias = rng.i32_vec(c_out, -800, 800);
+        let colsum: Vec<i32> =
+            (0..c_out).map(|co| (0..kk).map(|t| filters[t * c_out + co] as i32).sum()).collect();
+        let (pc, z_x) = fold(&mut rng, &bias, &colsum, kk);
+
+        let mut view = vec![0i8; kk * c_in];
+        let mut want = vec![0i8; geo.out_h * geo.out_w * c_out];
+        dw_container_reference(&input, &filters, &geo, mult, z_x as i8, &pc, &mut view, &mut want);
+        let packed = pack::pack_depthwise(&filters, kk, c_out);
+        let mut got = vec![0i8; want.len()];
+        depthwise_conv2d::depthwise_conv2d_microflow_with(
+            kb, &input, &packed, &geo, mult, z_x as i8, &pc, &mut view, &mut got,
+        );
+        assert_eq!(got, want, "[{}] kk {kk}", kb.name());
     }
 }
