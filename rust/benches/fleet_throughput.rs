@@ -305,7 +305,7 @@ fn main() {
         "idle phases never drained back to the floor: {trajectory:?}"
     );
     assert_eq!(
-        snap.totals.completed + snap.totals.shed + snap.totals.cancelled,
+        snap.totals.completed + snap.totals.shed + snap.totals.cancelled + snap.totals.failed,
         submitted_total,
         "autoscaled pool lost requests: {snap}"
     );

@@ -20,11 +20,13 @@
 //! increasing N, so replica names stay unique across scale-up/down
 //! cycles (a retired replica's index is never reused).
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
 use anyhow::Result;
 
+use super::faulty::FaultPlan;
 use super::{Engine, ModelSource, Session, SessionCache};
 
 /// A frozen recipe for building interchangeable session replicas.
@@ -36,6 +38,7 @@ pub struct ReplicaFactory {
     label_prefix: String,
     cache: Arc<SessionCache>,
     provisioned: AtomicUsize,
+    faults: HashMap<usize, FaultPlan>,
 }
 
 impl ReplicaFactory {
@@ -50,6 +53,7 @@ impl ReplicaFactory {
             label_prefix: engine.name().to_string(),
             cache: Arc::new(SessionCache::new()),
             provisioned: AtomicUsize::new(0),
+            faults: HashMap::new(),
         }
     }
 
@@ -78,6 +82,16 @@ impl ReplicaFactory {
         self
     }
 
+    /// Chaos hook: wrap the `index`-th provisioned replica (0-based, by
+    /// provisioning order) in a seeded [`FaultPlan`]. Later indices stay
+    /// healthy, so the same factory that seeds a faulty initial pool
+    /// also supplies the clean warm replacements ejection provisions —
+    /// all through one cache (the miss count stays pinned).
+    pub fn fault(mut self, index: usize, plan: FaultPlan) -> ReplicaFactory {
+        self.faults.insert(index, plan);
+        self
+    }
+
     /// Build one more replica session through the warm cache.
     pub fn provision(&self) -> Result<Session> {
         let n = self.provisioned.fetch_add(1, Ordering::Relaxed);
@@ -89,7 +103,11 @@ impl ReplicaFactory {
         if let Some(pb) = self.preferred_batch {
             b = b.preferred_batch(pb);
         }
-        b.build()
+        let session = b.build()?;
+        Ok(match self.faults.get(&n) {
+            Some(plan) => plan.clone().wrap(session),
+            None => session,
+        })
     }
 
     /// Provision `n` replicas at once (the initial pool build).
@@ -176,5 +194,21 @@ mod tests {
         let f = ReplicaFactory::new(tiny_mfb(), Engine::MicroFlow).paging(true).preferred_batch(16);
         let s = f.provision().unwrap();
         assert_eq!(s.preferred_batch(), 16);
+    }
+
+    #[test]
+    fn fault_hook_wraps_only_the_marked_index_and_keeps_cache_warm() {
+        let f = ReplicaFactory::new(tiny_mfb(), Engine::MicroFlow)
+            .label_prefix("chaos")
+            .fault(1, FaultPlan::new(0).transient_every(1));
+        let mut healthy = f.provision().unwrap();
+        let mut faulty = f.provision().unwrap();
+        let mut replacement = f.provision().unwrap();
+        assert_eq!(faulty.label(), "chaos/1", "wrap must keep the replica label");
+        assert_eq!(healthy.run(&[3, 1]).unwrap(), vec![2, 0, 5]);
+        assert!(faulty.run(&[3, 1]).is_err(), "index 1 fails every call");
+        assert_eq!(replacement.run(&[3, 1]).unwrap(), vec![2, 0, 5]);
+        // the wrapper adds no compiles: one bytes miss + one plan miss total
+        assert_eq!(f.warm_cache().misses(), 2);
     }
 }

@@ -1,0 +1,353 @@
+//! Deterministic, seeded fault injection for the serving stack.
+//!
+//! A [`FaultPlan`] wraps any [`InferenceSession`] in a [`FaultySession`]
+//! that fails on a schedule fixed entirely by the plan and its seed — no
+//! wall clock, no OS entropy — so a chaos run replays bit-for-bit from
+//! one seed. Three fault shapes cover the replica failure taxonomy the
+//! coordinator defends against:
+//!
+//! * **error-on-Nth-call** ([`FaultPlan::transient_every`]) — the call
+//!   fails with a [`FailureKind::Transient`] [`InjectedFault`]; the next
+//!   call succeeds again. Models a flaky replica (bit flips, transient
+//!   bus errors) that deadline-budgeted retry should absorb.
+//! * **wedge-forever** ([`FaultPlan::wedge_after`]) — every call after
+//!   the trigger fails, forever. The replica never recovers on its own;
+//!   only health-driven ejection heals the pool. (A wedge fails fast
+//!   rather than blocking: a worker blocked forever could never drain,
+//!   so "wedged" means *permanently failing*, which the health counters
+//!   observe as an unbroken consecutive-failure run.)
+//! * **fatal-on-call** ([`FaultPlan::fatal_on`]) — one call fails with
+//!   [`FailureKind::Fatal`]: the worker thread holding the session
+//!   treats the replica as dead and exits, and the pool floor is
+//!   restored by the autoscaler's warm below-min repair.
+//!
+//! Latency spikes ([`FaultPlan::spike_every`]) advance a **virtual tick**
+//! counter instead of sleeping, keeping tests deterministic; an optional
+//! real [`FaultPlan::tick_duration`] converts ticks to wall time for
+//! latency-oriented benches. The module is test/bench-oriented but
+//! compiled unconditionally: the chaos harness is a first-class part of
+//! the serving surface, not a `#[cfg(test)]` afterthought.
+
+use std::fmt;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::api::{Engine, InferenceSession, IoSignature, Session};
+
+/// How a replica failure should be treated by the serving layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum FailureKind {
+    /// The call failed but the replica is still usable: the request may
+    /// be redispatched (within its retry budget and deadline) and the
+    /// replica stays in the pool unless its health counters trip.
+    Transient,
+    /// The replica itself is gone: the worker exits, nothing on it is
+    /// retried against it, and the pool heals by warm re-provisioning.
+    Fatal,
+}
+
+impl FailureKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            FailureKind::Transient => "transient",
+            FailureKind::Fatal => "fatal",
+        }
+    }
+}
+
+impl fmt::Display for FailureKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Typed error produced by a [`FaultySession`]. The coordinator's worker
+/// classifies batch failures by downcasting to this type; any error that
+/// is *not* an `InjectedFault` (a real engine failure) is treated as
+/// [`FailureKind::Transient`] and bounded by the retry budget.
+#[derive(Debug, Clone)]
+pub struct InjectedFault {
+    pub kind: FailureKind,
+    /// 1-indexed call number at which the fault fired.
+    pub call: u64,
+    /// True when produced by the wedge schedule (permanently failing).
+    pub wedged: bool,
+}
+
+impl fmt::Display for InjectedFault {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "injected {} fault at call {}", self.kind, self.call)?;
+        if self.wedged {
+            f.write_str(" (replica wedged)")?;
+        }
+        Ok(())
+    }
+}
+
+impl std::error::Error for InjectedFault {}
+
+/// A deterministic fault schedule. All schedules compose; precedence per
+/// call is fatal → wedge → transient → spike (at most one fault fires).
+///
+/// The seed phase-shifts the periodic schedules so replicas sharing one
+/// plan template but different seeds fail on *different* calls — a fleet
+/// chaos run exercises staggered, not synchronized, failures.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    seed: u64,
+    transient_every: Option<u64>,
+    wedge_after: Option<u64>,
+    fatal_on: Option<u64>,
+    spike_every: Option<u64>,
+    spike_ticks: u64,
+    tick: Duration,
+}
+
+impl FaultPlan {
+    /// A plan with no faults scheduled (wrap is then a pass-through that
+    /// still counts calls/ticks — useful as a probe).
+    pub fn new(seed: u64) -> FaultPlan {
+        FaultPlan { seed, ..FaultPlan::default() }
+    }
+
+    /// Fail every `n`-th call transiently (1-indexed, phase-shifted by
+    /// the seed: call `c` fails when `(c + seed) % n == 0`).
+    pub fn transient_every(mut self, n: u64) -> Self {
+        self.transient_every = Some(n.max(1));
+        self
+    }
+
+    /// Every call after the first `n` fails, forever (the replica is
+    /// wedged; only ejection removes it from service).
+    pub fn wedge_after(mut self, n: u64) -> Self {
+        self.wedge_after = Some(n);
+        self
+    }
+
+    /// Call `n` (1-indexed) fails with [`FailureKind::Fatal`] — the
+    /// worker holding this session treats the replica as dead.
+    pub fn fatal_on(mut self, n: u64) -> Self {
+        self.fatal_on = Some(n.max(1));
+        self
+    }
+
+    /// Every `n`-th call stalls for `ticks` virtual ticks before
+    /// executing (phase-shifted by the seed like `transient_every`).
+    pub fn spike_every(mut self, n: u64, ticks: u64) -> Self {
+        self.spike_every = Some(n.max(1));
+        self.spike_ticks = ticks;
+        self
+    }
+
+    /// Real duration of one virtual tick (default zero: spikes advance
+    /// the tick counter only, keeping tests fast and deterministic).
+    pub fn tick_duration(mut self, d: Duration) -> Self {
+        self.tick = d;
+        self
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Wrap a session in this plan, preserving its label (so health
+    /// accounting and `ReplicaError`s name the replica, not the wrapper).
+    pub fn wrap(self, inner: Session) -> Session {
+        let label = inner.label().to_string();
+        Session::from_impl(Box::new(FaultySession::new(inner, self))).with_label(label)
+    }
+
+    /// Which fault (if any) fires on 1-indexed call `call`.
+    fn fault_at(&self, call: u64) -> Option<InjectedFault> {
+        if self.fatal_on == Some(call) {
+            return Some(InjectedFault { kind: FailureKind::Fatal, call, wedged: false });
+        }
+        if let Some(after) = self.wedge_after {
+            if call > after {
+                return Some(InjectedFault { kind: FailureKind::Transient, call, wedged: true });
+            }
+        }
+        if let Some(n) = self.transient_every {
+            if (call.wrapping_add(self.seed)) % n == 0 {
+                return Some(InjectedFault { kind: FailureKind::Transient, call, wedged: false });
+            }
+        }
+        None
+    }
+
+    /// Virtual ticks the spike schedule charges on call `call`.
+    fn spike_at(&self, call: u64) -> u64 {
+        match self.spike_every {
+            Some(n) if (call.wrapping_add(self.seed)) % n == 0 => self.spike_ticks,
+            _ => 0,
+        }
+    }
+}
+
+/// An [`InferenceSession`] that executes its inner session except where
+/// its [`FaultPlan`] schedules a fault. Batch calls count as ONE call:
+/// faults model the replica, not individual samples, so a failing call
+/// fails the whole batch exactly as a real replica fault would.
+pub struct FaultySession {
+    inner: Session,
+    plan: FaultPlan,
+    calls: u64,
+    virtual_ticks: u64,
+}
+
+impl FaultySession {
+    pub fn new(inner: Session, plan: FaultPlan) -> FaultySession {
+        FaultySession { inner, plan, calls: 0, virtual_ticks: 0 }
+    }
+
+    /// Calls attempted so far (including faulted ones).
+    pub fn calls(&self) -> u64 {
+        self.calls
+    }
+
+    /// Virtual ticks accumulated by latency spikes.
+    pub fn virtual_ticks(&self) -> u64 {
+        self.virtual_ticks
+    }
+
+    /// Advance the call counter and fire the scheduled fault, if any.
+    fn gate(&mut self) -> Result<()> {
+        self.calls += 1;
+        let spike = self.plan.spike_at(self.calls);
+        if spike > 0 {
+            self.virtual_ticks += spike;
+            if !self.plan.tick.is_zero() {
+                std::thread::sleep(self.plan.tick * spike.min(u32::MAX as u64) as u32);
+            }
+        }
+        match self.plan.fault_at(self.calls) {
+            Some(fault) => Err(fault.into()),
+            None => Ok(()),
+        }
+    }
+}
+
+impl InferenceSession for FaultySession {
+    fn engine(&self) -> Engine {
+        self.inner.engine()
+    }
+
+    fn signature(&self) -> &IoSignature {
+        self.inner.signature()
+    }
+
+    fn preferred_batch(&self) -> usize {
+        self.inner.preferred_batch()
+    }
+
+    fn run_into(&mut self, input: &[i8], out: &mut [i8]) -> Result<()> {
+        self.gate()?;
+        self.inner.run_into(input, out)
+    }
+
+    fn run_batch_into(&mut self, inputs: &[i8], n: usize, out: &mut [i8]) -> Result<()> {
+        self.gate()?;
+        self.inner.run_batch_into(inputs, n, out)
+    }
+
+    fn buffer_ptrs(&self) -> Vec<usize> {
+        self.inner.buffer_ptrs()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::synth;
+    use crate::util::Prng;
+
+    fn base_session() -> (Session, Vec<i8>, Vec<i8>) {
+        let mut rng = Prng::new(0xFA_017);
+        let m = synth::fc_chain(&mut rng, &[4, 8, 3]);
+        let mut s = Session::builder(&m).engine(Engine::MicroFlow).label("native/0").build().unwrap();
+        let x = rng.i8_vec(4);
+        let y = s.run(&x).unwrap();
+        (s, x, y)
+    }
+
+    #[test]
+    fn healthy_plan_is_a_labeled_passthrough() {
+        let (s, x, y) = base_session();
+        let mut wrapped = FaultPlan::new(7).wrap(s);
+        assert_eq!(wrapped.label(), "native/0", "wrap must preserve the replica label");
+        for _ in 0..5 {
+            assert_eq!(wrapped.run(&x).unwrap(), y, "pass-through must stay bit-exact");
+        }
+    }
+
+    #[test]
+    fn transient_schedule_fails_exactly_every_nth_call() {
+        let (s, x, _) = base_session();
+        // seed 0: calls 3, 6, 9, ... fail
+        let mut wrapped = FaultPlan::new(0).transient_every(3).wrap(s);
+        let mut outcomes = Vec::new();
+        for _ in 0..9 {
+            outcomes.push(wrapped.run(&x).is_ok());
+        }
+        assert_eq!(outcomes, [true, true, false, true, true, false, true, true, false]);
+    }
+
+    #[test]
+    fn seed_phase_shifts_the_schedule() {
+        let (s, x, _) = base_session();
+        // seed 1: (c + 1) % 3 == 0 -> calls 2, 5, 8 fail
+        let mut wrapped = FaultPlan::new(1).transient_every(3).wrap(s);
+        let outcomes: Vec<bool> = (0..6).map(|_| wrapped.run(&x).is_ok()).collect();
+        assert_eq!(outcomes, [true, false, true, true, false, true]);
+    }
+
+    #[test]
+    fn wedge_fails_forever_after_trigger() {
+        let (s, x, y) = base_session();
+        let mut wrapped = FaultPlan::new(0).wedge_after(2).wrap(s);
+        assert_eq!(wrapped.run(&x).unwrap(), y);
+        assert_eq!(wrapped.run(&x).unwrap(), y);
+        for call in 3..10u64 {
+            let err = wrapped.run(&x).unwrap_err();
+            let fault = err.downcast_ref::<InjectedFault>().expect("typed fault");
+            assert_eq!((fault.kind, fault.wedged, fault.call), (FailureKind::Transient, true, call));
+        }
+    }
+
+    #[test]
+    fn fatal_fires_once_with_fatal_kind() {
+        let (s, x, _) = base_session();
+        let mut wrapped = FaultPlan::new(0).fatal_on(2).wrap(s);
+        assert!(wrapped.run(&x).is_ok());
+        let err = wrapped.run(&x).unwrap_err();
+        assert_eq!(err.downcast_ref::<InjectedFault>().unwrap().kind, FailureKind::Fatal);
+        // fatal is a point event in the schedule; the session object is
+        // nominally usable after (the WORKER is what dies on Fatal)
+        assert!(wrapped.run(&x).is_ok());
+    }
+
+    #[test]
+    fn spikes_advance_virtual_ticks_without_wall_clock() {
+        let (s, x, _) = base_session();
+        let mut faulty = FaultySession::new(s, FaultPlan::new(0).spike_every(2, 5));
+        let mut out = vec![0i8; 3];
+        for _ in 0..6 {
+            faulty.run_into(&x, &mut out).unwrap();
+        }
+        assert_eq!(faulty.calls(), 6);
+        assert_eq!(faulty.virtual_ticks(), 15, "calls 2, 4, 6 spike 5 ticks each");
+    }
+
+    #[test]
+    fn batch_counts_as_one_call() {
+        let (s, x, _) = base_session();
+        let mut faulty = FaultySession::new(s, FaultPlan::new(0).transient_every(2));
+        let mut batch_in = x.clone();
+        batch_in.extend_from_slice(&x);
+        let mut out = vec![0i8; 6];
+        assert!(faulty.run_batch_into(&batch_in, 2, &mut out).is_ok(), "call 1 clean");
+        assert!(faulty.run_batch_into(&batch_in, 2, &mut out).is_err(), "call 2 faults whole batch");
+        assert_eq!(faulty.calls(), 2);
+    }
+}

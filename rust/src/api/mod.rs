@@ -37,7 +37,10 @@
 //!   worker pool, the CLI and the benches all hold;
 //! * [`ReplicaFactory`] — a frozen replica recipe (source + engine +
 //!   options + warm [`SessionCache`]) the elastic serving tier provisions
-//!   scale-up sessions from without recompiling.
+//!   scale-up sessions from without recompiling;
+//! * [`faulty`] — deterministic, seeded fault injection ([`FaultPlan`]
+//!   wrapping any session): the chaos harness the fault-tolerance layer
+//!   is tested against, compiled unconditionally.
 //!
 //! The low-level constructors remain available for engine-internal work
 //! (compilation introspection, the sim memory model), but every serving
@@ -45,10 +48,12 @@
 
 mod cache;
 mod factory;
+pub mod faulty;
 mod sessions;
 
 pub use cache::{content_hash64, SessionCache};
 pub use factory::ReplicaFactory;
+pub use faulty::{FailureKind, FaultPlan, FaultySession, InjectedFault};
 pub use sessions::{InterpSession, NativeSession, PjrtSession};
 
 use std::path::{Path, PathBuf};
@@ -362,6 +367,14 @@ impl Session {
     /// in fleet metrics and debug output; defaults to the engine name.
     pub fn label(&self) -> &str {
         self.label.as_deref().unwrap_or_else(|| self.inner.engine().name())
+    }
+
+    /// Attach or replace the label after construction. Wrappers built
+    /// through [`Session::from_impl`] (e.g. [`faulty::FaultPlan::wrap`])
+    /// use this to keep the wrapped replica's identity.
+    pub fn with_label(mut self, label: impl Into<String>) -> Session {
+        self.label = Some(label.into());
+        self
     }
 
     pub fn engine(&self) -> Engine {

@@ -120,6 +120,25 @@ pub fn parse_autoscale(s: &str) -> Result<(usize, usize)> {
     Ok((min, max))
 }
 
+/// Parse a `--chaos` value: `seed[:period]` for the seeded fault
+/// injector, e.g. `7` (every 10th call on the wrapped replica fails
+/// transiently, phase-shifted by seed 7) or `7:25` (every 25th).
+pub fn parse_chaos(s: &str) -> Result<(u64, u64)> {
+    let (seed, period) = match s.split_once(':') {
+        Some((seed, period)) => (
+            seed.parse::<u64>().with_context(|| format!("bad seed {seed:?} in --chaos {s:?}"))?,
+            period
+                .parse::<u64>()
+                .with_context(|| format!("bad period {period:?} in --chaos {s:?}"))?,
+        ),
+        None => (s.parse::<u64>().with_context(|| format!("bad --chaos {s:?}"))?, 10),
+    };
+    if period == 0 {
+        bail!("--chaos period must be at least 1 (every call failing wedges the replica)");
+    }
+    Ok((seed, period))
+}
+
 pub const USAGE: &str = "\
 microflow — MicroFlow (Carnelos et al., 2024) reproduction CLI
 
@@ -147,7 +166,8 @@ USAGE:
                     [--replicas R] [--engine-mix MIX] [--batch B]
                     [--no-adaptive] [--paging] [--default-class C]
                     [--shed-after-ms MS] [--autoscale MIN:MAX]
-                    [--slo-p95-ms MS] [--tick-ms MS]
+                    [--slo-p95-ms MS] [--tick-ms MS] [--retries N]
+                    [--no-breaker] [--chaos SEED[:P]]
                                            serve synthetic load, print metrics
 
 serve options (request lifecycle):
@@ -188,6 +208,21 @@ serve options (request lifecycle):
                     --autoscale; without it, scaling reacts to shed/missed
                     counts alone)
   --tick-ms MS      autoscaler control-loop cadence (default 100)
+  --retries N       transient-failure retry budget per request (default 1):
+                    a failed request is re-dispatched to a sibling replica
+                    unless its budget is spent, its deadline has passed or
+                    it was cancelled; exhausted budgets resolve as failed
+                    with a typed per-replica error
+  --no-breaker      disable the per-pool circuit breaker (on by default:
+                    a pool whose tick window shows >=50% failures opens —
+                    bulk/background requests are shed at admission while
+                    interactive traffic keeps flowing and doubles as the
+                    probe that re-closes the breaker)
+  --chaos SEED[:P]  wrap one replica per pool in the seeded fault injector:
+                    every P-th call (default 10) on that replica fails
+                    transiently, phase-shifted by SEED — deterministic
+                    chaos exercising retry, health ejection and the
+                    breaker without real hardware faults
   Replica sessions build through the warm session cache: repeated builds of
   the same model reuse one compiled plan (reported at startup). Metrics are
   reported per pool and per class (p50/p95/p99, shed/cancelled/late);
@@ -253,6 +288,21 @@ mod tests {
         assert_eq!(parse_autoscale("2:2").unwrap(), (2, 2));
         // a bare number pins both bounds
         assert_eq!(parse_autoscale("3").unwrap(), (3, 3));
+    }
+
+    #[test]
+    fn chaos_parses_seed_and_period() {
+        assert_eq!(parse_chaos("7").unwrap(), (7, 10));
+        assert_eq!(parse_chaos("7:25").unwrap(), (7, 25));
+        assert_eq!(parse_chaos("0:1").unwrap(), (0, 1));
+    }
+
+    #[test]
+    fn chaos_rejects_malformed_specs() {
+        assert!(parse_chaos("").is_err());
+        assert!(parse_chaos("x").is_err());
+        assert!(parse_chaos("7:").is_err());
+        assert!(parse_chaos("7:0").is_err(), "period 0 would wedge the replica");
     }
 
     #[test]

@@ -25,7 +25,14 @@
 //!   the worker executes what it gathered, then exits, and entries behind
 //!   the sentinel stay queued for the surviving workers. This is how the
 //!   elastic [`Server`](super::server::Server) scales down without
-//!   dropping accepted requests.
+//!   dropping accepted requests;
+//! * **retries lead batches** — a transiently-failed request re-enqueued
+//!   by a sibling worker sits in the shared retry buffer, which every
+//!   worker checks *before* the channel, so a retried request is never
+//!   starved behind fresh arrivals. The buffer is a plain
+//!   `Mutex<VecDeque>` rather than a second channel sender on purpose:
+//!   worker-held senders would keep the request channel connected after
+//!   the server drops its side, and shutdown would deadlock.
 //!
 //! [`AdaptiveBatcher`] layers per-replica tuning on top: each worker
 //! observes the queue depth at every batch cut (via
@@ -35,7 +42,9 @@
 //! posture (the configured target) — the fleet's replica pools enable it
 //! per replica because `preferred_batch` is per-session config.
 
-use std::sync::mpsc::Receiver;
+use std::collections::VecDeque;
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 use anyhow::anyhow;
@@ -80,6 +89,12 @@ fn admit(p: Pending, metrics: &Metrics) -> Option<Pending> {
     Some(p)
 }
 
+/// How long an idle worker blocks on the channel before surfacing to
+/// re-check its quarantine flag and the shared retry buffer. Bounds the
+/// latency of both targeted ejection and retry pickup when the request
+/// channel is quiet.
+pub const IDLE_POLL: Duration = Duration::from_millis(1);
+
 /// What one `next_batch` call decided for its worker.
 #[derive(Debug)]
 pub enum Cut {
@@ -89,14 +104,31 @@ pub enum Cut {
     /// (possibly empty) batch, then exit. In-flight requests are never
     /// dropped — the sentinel only ends *assembly*, not delivery.
     Retire(Vec<Pending>),
+    /// Nothing arrived within [`IDLE_POLL`]: the worker should re-check
+    /// its quarantine flag (and anything else control wants checked
+    /// between batches), then call again. Without this, a worker blocked
+    /// in `recv()` could never be ejected until traffic arrived.
+    Idle,
     /// The channel is closed and drained: server shutdown.
     Shutdown,
 }
 
-/// Collect the next single-class batch from `rx`.
+/// Pop the oldest retried request, if any. Kept tiny so the lock is held
+/// for a pop, never across channel waits.
+fn claim_retry(retry: &Mutex<VecDeque<Pending>>) -> Option<Pending> {
+    retry.lock().expect("retry buffer poisoned").pop_front()
+}
+
+/// Collect the next single-class batch from `rx`, preferring `retry`.
 ///
-/// Blocks for the first live request (or returns [`Cut::Shutdown`] when
-/// the channel is closed, drained, and `carry` is empty). After the first
+/// The first slot is claimed in a fixed order: the carry stash, then the
+/// shared retry buffer, then the channel. Waiting on the channel is
+/// bounded by [`IDLE_POLL`] — an empty poll returns [`Cut::Idle`] so the
+/// worker can re-check its quarantine flag and the retry buffer instead
+/// of blocking forever. A closed, drained channel returns
+/// [`Cut::Shutdown`] only once the retry buffer is also empty; a worker
+/// that pushed a retry always passes back through this claim order before
+/// exiting, so retried requests drain even during shutdown. After the first
 /// request arrives, keeps pulling until the class's batch target or wait
 /// budget is hit; a request of a *different* class is stashed in `carry`
 /// (it leads the next batch) so a batch never mixes classes. Cancelled and
@@ -116,6 +148,7 @@ pub enum Cut {
 pub fn next_batch(
     rx: &Receiver<QueueEntry>,
     carry: &mut Option<Pending>,
+    retry: &Mutex<VecDeque<Pending>>,
     base: &BatcherConfig,
     effective: &BatcherConfig,
     metrics: &Metrics,
@@ -124,9 +157,19 @@ pub fn next_batch(
         let entry = match carry.take() {
             // the class boundary stashed by the previous cut
             Some(p) => QueueEntry::Req(p),
-            None => match rx.recv() {
-                Ok(e) => e,
-                Err(_) => return Cut::Shutdown,
+            None => match claim_retry(retry) {
+                // a sibling's transient failure: retried ahead of arrivals
+                Some(p) => QueueEntry::Req(p),
+                None => match rx.recv_timeout(IDLE_POLL) {
+                    Ok(e) => e,
+                    Err(RecvTimeoutError::Timeout) => return Cut::Idle,
+                    // the server hung up; a retry pushed since the check
+                    // above must still be served before this worker exits
+                    Err(RecvTimeoutError::Disconnected) => match claim_retry(retry) {
+                        Some(p) => QueueEntry::Req(p),
+                        None => return Cut::Shutdown,
+                    },
+                },
             },
         };
         match entry {
@@ -248,14 +291,16 @@ mod tests {
         QueueEntry::Req(p)
     }
 
-    /// `next_batch` with an untuned config (base == effective).
+    /// `next_batch` with an untuned config (base == effective) and an
+    /// empty retry buffer.
     fn cut(
         rx: &Receiver<QueueEntry>,
         carry: &mut Option<Pending>,
         cfg: &BatcherConfig,
         metrics: &Metrics,
     ) -> Cut {
-        next_batch(rx, carry, cfg, cfg, metrics)
+        let retry = Mutex::new(VecDeque::new());
+        next_batch(rx, carry, &retry, cfg, cfg, metrics)
     }
 
     /// Unwrap a [`Cut::Batch`] (panics on retire/shutdown).
@@ -298,6 +343,72 @@ mod tests {
         drop(tx);
         let cfg = BatcherConfig::default();
         assert!(matches!(cut(&rx, &mut None, &cfg, &Metrics::new()), Cut::Shutdown));
+    }
+
+    #[test]
+    fn returns_idle_when_nothing_arrives() {
+        let (_tx, rx) = sync_channel::<QueueEntry>(1);
+        let cfg = BatcherConfig::default();
+        let t0 = StdInstant::now();
+        assert!(matches!(cut(&rx, &mut None, &cfg, &Metrics::new()), Cut::Idle));
+        // idle polls are bounded — the worker surfaces quickly to re-check
+        // its quarantine flag, it does not block until traffic arrives
+        assert!(t0.elapsed() < Duration::from_millis(500));
+    }
+
+    #[test]
+    fn retried_requests_lead_the_next_batch() {
+        let (tx, rx) = sync_channel(8);
+        tx.send(req(2)).unwrap();
+        let (retried, _t) = Request::new(vec![1]).into_pending();
+        let retry = Mutex::new(VecDeque::from([retried]));
+        let cfg = BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(2) };
+        let m = Metrics::new();
+        let b = match next_batch(&rx, &mut None, &retry, &cfg, &cfg, &m) {
+            Cut::Batch(b) => b,
+            other => panic!("expected Cut::Batch, got {other:?}"),
+        };
+        // the retried request is claimed before the fresh arrival
+        assert_eq!(b[0].request.payload, vec![1]);
+        assert!(retry.lock().unwrap().is_empty());
+    }
+
+    #[test]
+    fn retry_pushed_after_disconnect_is_still_served() {
+        let (tx, rx) = sync_channel::<QueueEntry>(1);
+        drop(tx);
+        let (retried, _t) = Request::new(vec![7]).into_pending();
+        let retry = Mutex::new(VecDeque::from([retried]));
+        let cfg = BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(2) };
+        let m = Metrics::new();
+        match next_batch(&rx, &mut None, &retry, &cfg, &cfg, &m) {
+            Cut::Batch(b) => assert_eq!(b[0].request.payload, vec![7]),
+            other => panic!("expected Cut::Batch, got {other:?}"),
+        }
+        // only once the retry buffer is drained does shutdown surface
+        assert!(matches!(next_batch(&rx, &mut None, &retry, &cfg, &cfg, &m), Cut::Shutdown));
+    }
+
+    #[test]
+    fn retried_requests_are_rechecked_for_cancellation_and_deadline() {
+        let (tx, rx) = sync_channel(8);
+        tx.send(req(3)).unwrap();
+        let (cancelled, cancelled_ticket) = Request::new(vec![1]).into_pending();
+        cancelled_ticket.cancel();
+        let (expired, expired_ticket) =
+            Request::new(vec![2]).with_deadline(StdInstant::now()).into_pending();
+        let retry = Mutex::new(VecDeque::from([cancelled, expired]));
+        let cfg = BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(2) };
+        let m = Metrics::new();
+        let b = match next_batch(&rx, &mut None, &retry, &cfg, &cfg, &m) {
+            Cut::Batch(b) => b,
+            other => panic!("expected Cut::Batch, got {other:?}"),
+        };
+        assert_eq!(b.len(), 1, "dead retries must never occupy a batch slot");
+        assert_eq!(b[0].request.payload, vec![3]);
+        assert_eq!(m.snapshot().cancelled, 1);
+        assert_eq!(m.snapshot().shed, 1);
+        assert!(expired_ticket.wait().unwrap_err().to_string().contains("shed"));
     }
 
     #[test]

@@ -44,7 +44,27 @@
 //! caller picks the cadence — the CLI's serve loop, the bench's phase
 //! loop, and the tests each drive `tick()` explicitly, which is what
 //! keeps the controller deterministic.
+//!
+//! **Fault tolerance** (PR 8): `tick()` also drives the pool's
+//! resilience policies ([`resilience`](super::resilience)), both on by
+//! default. The **health pass** asks the [`HealthPolicy`] which live
+//! replicas look wedged or error-prone, provisions a warm replacement
+//! through the pool's factory *first*, then ejects the sick replica via
+//! [`Server::eject_replica`] — the pool never dips below its floor, and
+//! an ejection that cannot be backed by a replacement simply does not
+//! happen (it needs an autoscaled pool; static pools track health but
+//! never eject). The **circuit breaker** steps once per tick on the same
+//! consumed window (`resolved = completed + failed`; admission sheds are
+//! deliberately excluded so the breaker's own brownout cannot hold it
+//! open) and mirrors its state into a lock-free atomic that the admission
+//! path reads: while a pool's breaker is **open**, Background and Bulk
+//! requests are shed *at admission* (counted `submitted` + `shed`,
+//! resolved with [`SubmitError::BreakerOpen`]) while Interactive traffic
+//! still flows and doubles as the probe. When several pools exist,
+//! dispatch simply skips open pools for background work and only sheds
+//! when no admitting candidate remains.
 
+use std::sync::atomic::{AtomicU8, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use anyhow::{ensure, Context, Result};
@@ -52,8 +72,9 @@ use anyhow::{ensure, Context, Result};
 use super::autoscale::{
     AutoscalePolicy, AutoscaleStatus, Decision, PolicyState, ScaleAction, ScaleReason, TickSignals,
 };
-use super::metrics::{MetricsSnapshot, WindowSnapshot};
+use super::metrics::{MetricsSnapshot, ReplicaHealthSnapshot, WindowSnapshot};
 use super::request::{QosClass, QosProfile, Request, SubmitError, Ticket};
+use super::resilience::{BreakerCore, BreakerPolicy, BreakerState, HealthPolicy};
 use super::server::{Server, ServerConfig};
 use crate::api::{ReplicaFactory, Session};
 use crate::tensor::quant::QParams;
@@ -67,11 +88,19 @@ pub struct PoolSpec {
     pub config: ServerConfig,
     pub profile: QosProfile,
     pub autoscale: Option<(AutoscalePolicy, Arc<ReplicaFactory>)>,
+    /// Circuit breaker thresholds; `None` disables breaking. On by
+    /// default with [`BreakerPolicy`]'s defaults.
+    pub breaker: Option<BreakerPolicy>,
+    /// Replica ejection thresholds; `None` disables the health pass. On
+    /// by default (ejection itself additionally requires an autoscaled
+    /// pool — replacements come from its factory).
+    pub health: Option<HealthPolicy>,
 }
 
 impl PoolSpec {
     /// Pool with the default config: adaptive batching on, no declared
-    /// traffic affinity ([`QosProfile::Any`]), no autoscaler.
+    /// traffic affinity ([`QosProfile::Any`]), no autoscaler, default
+    /// circuit-breaker and replica-health policies.
     pub fn new(name: impl Into<String>, sessions: Vec<Session>) -> PoolSpec {
         let config = ServerConfig { adaptive: true, ..ServerConfig::default() };
         PoolSpec {
@@ -80,6 +109,8 @@ impl PoolSpec {
             config,
             profile: QosProfile::Any,
             autoscale: None,
+            breaker: Some(BreakerPolicy::new()),
+            health: Some(HealthPolicy::new()),
         }
     }
 
@@ -102,6 +133,31 @@ impl PoolSpec {
         self.autoscale = Some((policy, factory));
         self
     }
+
+    /// Replace the default circuit-breaker thresholds.
+    pub fn breaker(mut self, policy: BreakerPolicy) -> PoolSpec {
+        self.breaker = Some(policy);
+        self
+    }
+
+    /// Disable circuit breaking for this pool (every class always
+    /// admitted, whatever the error rate).
+    pub fn no_breaker(mut self) -> PoolSpec {
+        self.breaker = None;
+        self
+    }
+
+    /// Replace the default replica-health thresholds.
+    pub fn health(mut self, policy: HealthPolicy) -> PoolSpec {
+        self.health = Some(policy);
+        self
+    }
+
+    /// Disable health-driven ejection for this pool.
+    pub fn no_health(mut self) -> PoolSpec {
+        self.health = None;
+        self
+    }
 }
 
 /// A pool's controller: the policy, its state, the replica supply, and
@@ -120,6 +176,25 @@ struct Pool {
     profile: QosProfile,
     server: Server,
     scaler: Option<Mutex<PoolScaler>>,
+    /// Breaker thresholds + state machine (stepped only by `tick()`).
+    breaker: Option<(BreakerPolicy, Mutex<BreakerCore>)>,
+    /// Lock-free mirror of the breaker state for the admission hot path
+    /// (stored by `tick()`, read by every submit).
+    breaker_state: AtomicU8,
+    health: Option<HealthPolicy>,
+}
+
+impl Pool {
+    /// The breaker state admission currently sees.
+    fn breaker_now(&self) -> BreakerState {
+        BreakerState::from_u8(self.breaker_state.load(Ordering::Relaxed))
+    }
+
+    /// Whether admission accepts `class` right now: an open breaker sheds
+    /// Background and Bulk, never Interactive (the probe traffic).
+    fn admits(&self, class: QosClass) -> bool {
+        class == QosClass::Interactive || self.breaker_now().admits_background_work()
+    }
 }
 
 /// A multi-pool serving endpoint for one model.
@@ -148,7 +223,16 @@ impl Fleet {
                     last: None,
                 })
             });
-            running.push(Pool { name: spec.name, profile: spec.profile, server, scaler });
+            let breaker = spec.breaker.map(|p| (p, Mutex::new(BreakerCore::new())));
+            running.push(Pool {
+                name: spec.name,
+                profile: spec.profile,
+                server,
+                scaler,
+                breaker,
+                breaker_state: AtomicU8::new(BreakerState::Closed.as_u8()),
+                health: spec.health,
+            });
         }
         let sig = running[0].server.signature().clone();
         for p in &running[1..] {
@@ -173,6 +257,10 @@ impl Fleet {
                 profile: QosProfile::Any,
                 server,
                 scaler: None,
+                // the compatibility wrapper adds no control-plane behavior
+                breaker: None,
+                breaker_state: AtomicU8::new(BreakerState::Closed.as_u8()),
+                health: None,
             }],
             rr: std::sync::atomic::AtomicUsize::new(0),
         }
@@ -272,21 +360,67 @@ impl Fleet {
         order
     }
 
-    /// Submit a typed request to the best-matching, least-loaded pool;
-    /// returns its [`Ticket`]. Blocks when that pool's queue is full
-    /// (backpressure) — use [`Fleet::try_submit`] to spill instead.
-    pub fn submit(&self, req: Request) -> Result<Ticket> {
-        let best = self.select_pool(req.class);
-        self.pools[best].server.submit(req)
+    /// Like [`Fleet::select_pool`], restricted to pools whose breaker
+    /// admits the class; `None` when every pool is browned out for it.
+    fn select_admitting_pool(&self, class: QosClass) -> Option<usize> {
+        let n = self.pools.len();
+        let start = self.rr.fetch_add(1, Ordering::Relaxed) % n;
+        let mut best: Option<(usize, (u8, u64))> = None;
+        for off in 0..n {
+            let i = (start + off) % n;
+            if !self.pools[i].admits(class) {
+                continue;
+            }
+            let key = self.pool_key(i, class);
+            if best.map_or(true, |(_, bk)| key < bk) {
+                best = Some((i, key));
+            }
+        }
+        best.map(|(i, _)| i)
     }
 
-    /// Non-blocking submit with spill: candidates are tried in load order
-    /// and the request only comes back as [`SubmitError::QueueFull`] (or
-    /// [`SubmitError::Shutdown`], if a shut-down pool was hit) when every
-    /// candidate rejected it — the payload is always handed back.
+    /// Resolve a browned-out request: count it `submitted` + `shed` on
+    /// the pool dispatch would have chosen (the accounting identity stays
+    /// exact — the request is resolved, not handed back) and produce the
+    /// typed admission error.
+    fn shed_at_admission(&self, req: Request) -> SubmitError {
+        let i = self.select_pool(req.class);
+        let pool = &self.pools[i];
+        pool.server.metrics.record_submitted(req.class);
+        pool.server.metrics.record_shed(req.class);
+        SubmitError::BreakerOpen { id: req.id, class: req.class, pool: pool.name.clone() }
+    }
+
+    /// Submit a typed request to the best-matching, least-loaded pool
+    /// whose breaker admits it; returns its [`Ticket`]. Blocks when that
+    /// pool's queue is full (backpressure) — use [`Fleet::try_submit`] to
+    /// spill instead. With every pool browned out for the class, the
+    /// request is shed at admission ([`SubmitError::BreakerOpen`]).
+    pub fn submit(&self, req: Request) -> Result<Ticket> {
+        match self.select_admitting_pool(req.class) {
+            Some(i) => self.pools[i].server.submit(req),
+            None => Err(self.shed_at_admission(req).into()),
+        }
+    }
+
+    /// Non-blocking submit with spill: admitting candidates are tried in
+    /// load order and the request only comes back as
+    /// [`SubmitError::QueueFull`] (or [`SubmitError::Shutdown`], if a
+    /// shut-down pool was hit) when every candidate rejected it — the
+    /// payload is always handed back. With every candidate browned out,
+    /// the request is shed at admission instead
+    /// ([`SubmitError::BreakerOpen`] — resolved, not handed back).
     pub fn try_submit(&self, mut req: Request) -> std::result::Result<Ticket, SubmitError> {
         let mut saw_shutdown = false;
-        for i in self.dispatch_order(req.class) {
+        let order: Vec<usize> = self
+            .dispatch_order(req.class)
+            .into_iter()
+            .filter(|&i| self.pools[i].admits(req.class))
+            .collect();
+        if order.is_empty() {
+            return Err(self.shed_at_admission(req));
+        }
+        for i in order {
             match self.pools[i].server.try_submit(req) {
                 Ok(ticket) => return Ok(ticket),
                 // spill to the next candidate in both rejection cases
@@ -325,74 +459,109 @@ impl Fleet {
     /// [`ScaleReason::ProvisionFailed`]. A scale-down enqueues one drain
     /// sentinel per retired replica — accepted requests are never dropped
     /// (see the server drain protocol).
+    /// Per-pool autoscale + health-ejection step (everything that needs
+    /// the scaler lock). Returns the consumed window, the applied
+    /// decision (`None` for static pools), and the labels ejected.
+    fn tick_control(&self, p: &Pool) -> (WindowSnapshot, Option<Decision>, Vec<String>) {
+        let Some(scaler) = &p.scaler else {
+            // static pool: nothing can act, so the window needs no lock
+            // (concurrent tick() callers were always the caller's bug —
+            // the window cursor is single-consumer by contract)
+            return (p.server.metrics.window(), None, Vec::new());
+        };
+        let mut guard = scaler.lock().unwrap();
+        // consume the window only under the scaler lock: two
+        // concurrent tick() callers would otherwise each see half
+        // of one window's deltas and could both miss a breach
+        let window = p.server.metrics.window();
+        let PoolScaler { policy, state, factory, ticks, last } = &mut *guard;
+        let signals = TickSignals::observe(
+            &window,
+            p.server.metrics.outstanding(),
+            p.server.live_replicas(),
+        );
+        let decision = state.step(policy, &signals);
+        let applied = match decision.action {
+            ScaleAction::Up(want) => {
+                let mut added = 0;
+                for _ in 0..want {
+                    let ok = factory
+                        .provision()
+                        .and_then(|sess| p.server.add_replica(sess))
+                        .is_ok();
+                    if !ok {
+                        break;
+                    }
+                    added += 1;
+                }
+                if added == 0 {
+                    Decision { action: ScaleAction::Hold, reason: ScaleReason::ProvisionFailed }
+                } else {
+                    Decision { action: ScaleAction::Up(added), reason: decision.reason }
+                }
+            }
+            ScaleAction::Down(want) => {
+                let mut removed = 0;
+                for _ in 0..want {
+                    if p.server.remove_replica().is_err() {
+                        break;
+                    }
+                    removed += 1;
+                }
+                if removed == 0 {
+                    Decision { action: ScaleAction::Hold, reason: ScaleReason::AtMin }
+                } else {
+                    Decision { action: ScaleAction::Down(removed), reason: decision.reason }
+                }
+            }
+            ScaleAction::Hold => decision,
+        };
+        // health pass, still under the scaler lock (the per-replica
+        // windows drained by `unhealthy` are single-consumer, and the
+        // replacements come from this scaler's factory)
+        let mut ejected = Vec::new();
+        if let Some(hp) = &p.health {
+            for label in hp.unhealthy(&p.server.metrics.replica_handles()) {
+                // replacement FIRST, then ejection: the pool never dips
+                // below its floor, and a sick replica outlives a failed
+                // provision rather than shrinking the pool
+                match factory.provision().and_then(|sess| p.server.add_replica(sess)) {
+                    Ok(()) => match p.server.eject_replica(&label) {
+                        Ok(()) => ejected.push(label),
+                        // raced (e.g. the replica died fatally between the
+                        // health read and here): undo the extra replica
+                        Err(_) => {
+                            let _ = p.server.remove_replica();
+                        }
+                    },
+                    Err(_) => break,
+                }
+            }
+        }
+        *ticks += 1;
+        *last = Some(applied);
+        (window, Some(applied), ejected)
+    }
+
     pub fn tick(&self) -> Vec<PoolTickReport> {
         self.pools
             .iter()
             .map(|p| {
-                let Some(scaler) = &p.scaler else {
-                    return PoolTickReport {
-                        pool: p.name.clone(),
-                        live_replicas: p.server.live_replicas(),
-                        decision: None,
-                        window: p.server.metrics.window(),
-                    };
-                };
-                let mut guard = scaler.lock().unwrap();
-                // consume the window only under the scaler lock: two
-                // concurrent tick() callers would otherwise each see half
-                // of one window's deltas and could both miss a breach
-                let window = p.server.metrics.window();
-                let PoolScaler { policy, state, factory, ticks, last } = &mut *guard;
-                let signals = TickSignals::observe(
-                    &window,
-                    p.server.metrics.outstanding(),
-                    p.server.live_replicas(),
-                );
-                let decision = state.step(policy, &signals);
-                let applied = match decision.action {
-                    ScaleAction::Up(want) => {
-                        let mut added = 0;
-                        for _ in 0..want {
-                            let ok = factory
-                                .provision()
-                                .and_then(|sess| p.server.add_replica(sess))
-                                .is_ok();
-                            if !ok {
-                                break;
-                            }
-                            added += 1;
-                        }
-                        if added == 0 {
-                            Decision {
-                                action: ScaleAction::Hold,
-                                reason: ScaleReason::ProvisionFailed,
-                            }
-                        } else {
-                            Decision { action: ScaleAction::Up(added), reason: decision.reason }
-                        }
-                    }
-                    ScaleAction::Down(want) => {
-                        let mut removed = 0;
-                        for _ in 0..want {
-                            if p.server.remove_replica().is_err() {
-                                break;
-                            }
-                            removed += 1;
-                        }
-                        if removed == 0 {
-                            Decision { action: ScaleAction::Hold, reason: ScaleReason::AtMin }
-                        } else {
-                            Decision { action: ScaleAction::Down(removed), reason: decision.reason }
-                        }
-                    }
-                    ScaleAction::Hold => decision,
-                };
-                *ticks += 1;
-                *last = Some(applied);
+                let (window, decision, ejected) = self.tick_control(p);
+                // breaker step on the SAME consumed window, then publish
+                // the state to the lock-free admission mirror
+                let breaker = p.breaker.as_ref().map(|(policy, core)| {
+                    let mut core = core.lock().unwrap();
+                    let state = core.step(policy, window.resolved(), window.failed());
+                    p.breaker_state.store(state.as_u8(), Ordering::Relaxed);
+                    state
+                });
                 PoolTickReport {
                     pool: p.name.clone(),
                     live_replicas: p.server.live_replicas(),
-                    decision: Some(applied),
+                    decision,
+                    breaker,
+                    ejected,
                     window,
                 }
             })
@@ -418,6 +587,8 @@ impl Fleet {
                         last: s.last,
                     }
                 }),
+                breaker: p.breaker.as_ref().map(|_| p.breaker_now()),
+                replica_health: p.server.metrics.replica_health(),
                 metrics: p.server.metrics.snapshot(),
             })
             .collect();
@@ -425,7 +596,8 @@ impl Fleet {
         for p in &per_pool {
             agg.submitted += p.metrics.submitted;
             agg.completed += p.metrics.completed;
-            agg.errors += p.metrics.errors;
+            agg.failed += p.metrics.failed;
+            agg.retried += p.metrics.retried;
             agg.shed += p.metrics.shed;
             agg.cancelled += p.metrics.cancelled;
             agg.deadline_missed += p.metrics.deadline_missed;
@@ -449,12 +621,17 @@ impl Fleet {
     }
 }
 
-/// Aggregated request-lifecycle counters across pools.
+/// Aggregated request-lifecycle counters across pools. The identity
+/// `completed + shed + cancelled + failed == submitted` holds fleet-wide
+/// once all tickets have resolved; `retried` and `deadline_missed` are
+/// observations outside the identity (a retried request is still
+/// outstanding; a late request still completed).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct Totals {
     pub submitted: u64,
     pub completed: u64,
-    pub errors: u64,
+    pub failed: u64,
+    pub retried: u64,
     pub shed: u64,
     pub cancelled: u64,
     pub deadline_missed: u64,
@@ -468,14 +645,18 @@ pub struct PoolTickReport {
     pub live_replicas: usize,
     /// The decision applied (`None` for pools without an autoscaler).
     pub decision: Option<Decision>,
+    /// Breaker state after this tick (`None` when breaking is disabled).
+    pub breaker: Option<BreakerState>,
+    /// Replicas the health pass ejected (and replaced) this tick.
+    pub ejected: Vec<String>,
     /// The metrics window this tick consumed (rates, windowed p95).
     pub window: WindowSnapshot,
 }
 
 impl PoolTickReport {
-    /// Did this tick change the pool's size?
+    /// Did this tick change the pool's size or membership?
     pub fn acted(&self) -> bool {
-        self.decision.is_some_and(|d| d.action != ScaleAction::Hold)
+        self.decision.is_some_and(|d| d.action != ScaleAction::Hold) || !self.ejected.is_empty()
     }
 }
 
@@ -484,6 +665,14 @@ impl std::fmt::Display for PoolTickReport {
         write!(f, "[{}] x{}", self.pool, self.live_replicas)?;
         if let Some(d) = self.decision {
             write!(f, " {d}")?;
+        }
+        if let Some(b) = self.breaker {
+            if b != BreakerState::Closed {
+                write!(f, " breaker={b}")?;
+            }
+        }
+        for label in &self.ejected {
+            write!(f, " ejected={label}")?;
         }
         write!(f, " | {}", self.window)
     }
@@ -501,6 +690,12 @@ pub struct PoolSnapshot {
     pub retiring: usize,
     /// Autoscaler bounds + last decision, for elastic pools.
     pub autoscale: Option<AutoscaleStatus>,
+    /// Breaker state at snapshot time (`None` when breaking is disabled).
+    pub breaker: Option<BreakerState>,
+    /// Every replica ever registered on this pool, with its phase and
+    /// lifetime batch/failure counts (ejected and dead ones included —
+    /// the registry is the pool's incident log).
+    pub replica_health: Vec<ReplicaHealthSnapshot>,
     pub metrics: MetricsSnapshot,
 }
 
@@ -528,10 +723,11 @@ impl std::fmt::Display for FleetSnapshot {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         writeln!(
             f,
-            "fleet: {}/{} done ({} err, {} shed, {} canc, {} late) across {} pools",
+            "fleet: {}/{} done ({} failed, {} retried, {} shed, {} canc, {} late) across {} pools",
             self.totals.completed,
             self.totals.submitted,
-            self.totals.errors,
+            self.totals.failed,
+            self.totals.retried,
             self.totals.shed,
             self.totals.cancelled,
             self.totals.deadline_missed,
@@ -541,6 +737,11 @@ impl std::fmt::Display for FleetSnapshot {
             write!(f, "  {:16} [{:11}] x{}", p.name, p.profile.name(), p.replicas)?;
             if p.retiring > 0 {
                 write!(f, " (-{} draining)", p.retiring)?;
+            }
+            if let Some(b) = p.breaker {
+                if b != BreakerState::Closed {
+                    write!(f, " breaker={b}")?;
+                }
             }
             if let Some(a) = &p.autoscale {
                 write!(f, " [{}..{}]", a.min_replicas, a.max_replicas)?;
@@ -556,8 +757,9 @@ impl std::fmt::Display for FleetSnapshot {
 
 #[cfg(test)]
 mod tests {
+    use super::super::metrics::ReplicaPhase;
     use super::*;
-    use crate::api::{Engine, Session};
+    use crate::api::{Engine, FaultPlan, Session};
 
     fn tiny_session(engine: Engine, paging: bool) -> Session {
         Session::builder(crate::format::mfb::tests::tiny_mfb())
@@ -590,7 +792,9 @@ mod tests {
         let snap = f.snapshot();
         assert_eq!(snap.totals.submitted, 20);
         assert_eq!(snap.totals.completed, 20);
-        assert_eq!(snap.totals.errors, 0);
+        assert_eq!(snap.totals.failed, 0);
+        // static pools still carry a breaker, closed at rest
+        assert!(snap.per_pool.iter().all(|p| p.breaker == Some(BreakerState::Closed)));
         f.shutdown();
     }
 
@@ -775,6 +979,98 @@ mod tests {
         assert_eq!(r[0].live_replicas, 1);
         // the pool keeps serving despite the failed scale-up
         assert_eq!(f.infer(vec![3, 1]).unwrap(), vec![2, 0, 5]);
+        f.shutdown();
+    }
+
+    #[test]
+    fn breaker_opens_ejects_the_wedged_replica_and_recloses_after_probe() {
+        // replica index 0 is wedged from its first call; every later
+        // provision (the warm replacement) is clean
+        let factory = Arc::new(
+            ReplicaFactory::new(crate::format::mfb::tests::tiny_mfb(), Engine::MicroFlow)
+                .label_prefix("frail")
+                .fault(0, FaultPlan::new(0).wedge_after(0)),
+        );
+        // autoscaling only as the health pass's actuator: breaches and
+        // idle windows are tuned to never move the pool on their own
+        let policy = AutoscalePolicy::new(1, 2)
+            .cooldown_ticks(0)
+            .breach_tolerance(u64::MAX)
+            .idle_ticks_down(u32::MAX);
+        let f = Fleet::start(vec![PoolSpec::new("frail", vec![factory.provision().unwrap()])
+            .config(ServerConfig { max_retries: 0, adaptive: true, ..ServerConfig::default() })
+            .autoscale(policy, Arc::clone(&factory))
+            .breaker(BreakerPolicy::new().min_window_requests(2).open_ticks(1))
+            .health(HealthPolicy::new().eject_consecutive_failures(2))])
+        .unwrap();
+
+        // four bulk requests all fail on the wedged replica (no retry
+        // budget), each resolving as a typed, labelled replica error
+        for _ in 0..4 {
+            let t = f.submit(Request::new(vec![3, 1]).with_class(QosClass::Bulk)).unwrap();
+            let err = t.wait().unwrap_err();
+            assert!(format!("{err:#}").contains("frail/0"), "{err:#}");
+        }
+
+        // tick 1: the window shows 4/4 failed — the breaker trips Open
+        // and the health pass swaps the wedged replica for a warm one
+        let r = f.tick();
+        assert_eq!(r[0].breaker, Some(BreakerState::Open));
+        assert_eq!(r[0].ejected, vec!["frail/0".to_string()]);
+        assert!(r[0].acted());
+        // wait for frail/0's drain to complete so only frail/1 serves
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        loop {
+            let p = &f.snapshot().per_pool[0];
+            if p.replicas == 1 && p.retiring == 0 {
+                break;
+            }
+            assert!(std::time::Instant::now() < deadline, "frail/0 never drained");
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+
+        // brownout: background work is shed at admission while open...
+        let err = f.submit(Request::new(vec![3, 1]).with_class(QosClass::Bulk)).unwrap_err();
+        assert!(format!("{err:#}").contains("shed at admission"), "{err:#}");
+        match f.try_submit(Request::new(vec![3, 1]).with_class(QosClass::Background)) {
+            Err(SubmitError::BreakerOpen { class, .. }) => {
+                assert_eq!(class, QosClass::Background);
+            }
+            other => panic!("expected BreakerOpen, got {other:?}"),
+        }
+        // ...but interactive traffic still flows, bit-exact, and doubles
+        // as the recovery probe
+        let t = f.submit(Request::interactive(vec![3, 1])).unwrap();
+        assert_eq!(t.wait().unwrap(), vec![2, 0, 5]);
+
+        // tick 2: the open interval has elapsed — probing resumes
+        let r = f.tick();
+        assert_eq!(r[0].breaker, Some(BreakerState::HalfOpen));
+        // a clean probe window closes the breaker on the next tick
+        let t = f.submit(Request::interactive(vec![3, 1])).unwrap();
+        assert_eq!(t.wait().unwrap(), vec![2, 0, 5]);
+        let r = f.tick();
+        assert_eq!(r[0].breaker, Some(BreakerState::Closed));
+        // background admission is restored
+        let t = f.submit(Request::new(vec![3, 1]).with_class(QosClass::Bulk)).unwrap();
+        assert_eq!(t.wait().unwrap(), vec![2, 0, 5]);
+
+        let snap = f.snapshot();
+        let t = &snap.totals;
+        assert_eq!(
+            t.completed + t.shed + t.cancelled + t.failed,
+            t.submitted,
+            "resolution identity must hold\n{snap}"
+        );
+        assert_eq!((t.failed, t.shed, t.completed), (4, 2, 3));
+        // the incident log keeps the ejected replica's record
+        let log = &snap.per_pool[0].replica_health;
+        let frail0 = log.iter().find(|h| h.label == "frail/0").unwrap();
+        assert_eq!(frail0.phase, ReplicaPhase::Ejected);
+        assert!(log.iter().any(|h| h.label == "frail/1" && h.phase == ReplicaPhase::Live));
+        // the replacement came from the warm cache: one bytes miss + one
+        // plan miss across both provisions
+        assert_eq!(factory.warm_cache().misses(), 2);
         f.shutdown();
     }
 }

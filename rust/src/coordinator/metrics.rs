@@ -9,13 +9,29 @@
 //! (one mutex lock per completion; the e2e bench shows the coordinator is
 //! not the bottleneck — EXPERIMENTS.md §Perf).
 //!
-//! Lifecycle counters beyond the classic submitted/completed/errors:
+//! Lifecycle counters beyond the classic submitted/completed:
 //!
 //! * `shed` — expired-deadline requests dropped by the batcher before
-//!   execution (they consumed queue space, never a batch slot);
+//!   execution (they consumed queue space, never a batch slot), plus
+//!   requests shed at admission by an open circuit breaker;
 //! * `cancelled` — cancelled tickets dropped before execution;
+//! * `failed` — requests whose ticket resolved to a replica execution
+//!   error (after any retry budget was spent). The accounting identity
+//!   every suite asserts is `completed + shed + cancelled + failed ==
+//!   submitted`: every accepted request resolves exactly once;
+//! * `retried` — redispatches after a transient replica failure. A
+//!   retried request is still outstanding (it resolves later into one of
+//!   the identity lanes), so `retried` sits *outside* the identity, like
+//!   `deadline_missed`;
 //! * `deadline_missed` — requests that executed but completed after their
 //!   deadline (delivered late, the SLO signal autoscaling reads).
+//!
+//! Beyond the per-class lanes, `Metrics` keeps a **per-replica health
+//! registry** ([`ReplicaHealth`]): each worker registers its replica
+//! label and records batch successes/failures, giving the fleet tick
+//! loop the consecutive-failure and windowed error-rate signals that
+//! drive quarantine + ejection — with no wall clock anywhere in the
+//! decision.
 //!
 //! Two read surfaces serve two consumers:
 //!
@@ -30,8 +46,8 @@
 //!   The call advances the cursor, so keep a single consumer per
 //!   deployment — the fleet's tick loop.
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicU8, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use super::request::QosClass;
@@ -47,7 +63,8 @@ const WINDOW_RESERVOIR: usize = 16_384;
 struct ClassMetrics {
     submitted: AtomicU64,
     completed: AtomicU64,
-    errors: AtomicU64,
+    failed: AtomicU64,
+    retried: AtomicU64,
     shed: AtomicU64,
     cancelled: AtomicU64,
     deadline_missed: AtomicU64,
@@ -61,7 +78,8 @@ impl ClassMetrics {
         ClassMetrics {
             submitted: AtomicU64::new(0),
             completed: AtomicU64::new(0),
-            errors: AtomicU64::new(0),
+            failed: AtomicU64::new(0),
+            retried: AtomicU64::new(0),
             shed: AtomicU64::new(0),
             cancelled: AtomicU64::new(0),
             deadline_missed: AtomicU64::new(0),
@@ -74,7 +92,8 @@ impl ClassMetrics {
         ClassCounters {
             submitted: self.submitted.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
-            errors: self.errors.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
+            retried: self.retried.load(Ordering::Relaxed),
             shed: self.shed.load(Ordering::Relaxed),
             cancelled: self.cancelled.load(Ordering::Relaxed),
             deadline_missed: self.deadline_missed.load(Ordering::Relaxed),
@@ -87,7 +106,8 @@ impl ClassMetrics {
 struct ClassCounters {
     submitted: u64,
     completed: u64,
-    errors: u64,
+    failed: u64,
+    retried: u64,
     shed: u64,
     cancelled: u64,
     deadline_missed: u64,
@@ -106,6 +126,10 @@ pub struct Metrics {
     batches: AtomicU64,
     batched_samples: AtomicU64,
     window: Mutex<WindowCursor>,
+    /// Per-replica health entries, appended as workers register. Entries
+    /// are never removed — a retired/dead replica's final state stays
+    /// visible in snapshots (and its label is never reused anyway).
+    replicas: Mutex<Vec<Arc<ReplicaHealth>>>,
 }
 
 impl Default for Metrics {
@@ -125,6 +149,7 @@ impl Metrics {
                 prev: [ClassCounters::default(); 3],
                 last_at: Instant::now(),
             }),
+            replicas: Mutex::new(Vec::new()),
         }
     }
 
@@ -154,8 +179,10 @@ impl Metrics {
         let mut resolved = 0u64;
         for lane in &self.classes {
             submitted += lane.submitted.load(Ordering::Relaxed);
+            // `retried` is deliberately absent: a retried request is
+            // still in flight until it completes, sheds or fails
             resolved += lane.completed.load(Ordering::Relaxed)
-                + lane.errors.load(Ordering::Relaxed)
+                + lane.failed.load(Ordering::Relaxed)
                 + lane.shed.load(Ordering::Relaxed)
                 + lane.cancelled.load(Ordering::Relaxed);
         }
@@ -179,8 +206,17 @@ impl Metrics {
         }
     }
 
-    pub fn record_error(&self, class: QosClass) {
-        self.lane(class).errors.fetch_add(1, Ordering::Relaxed);
+    /// Record one request resolved as failed (its ticket received a
+    /// replica error after the retry budget, if any, was spent).
+    pub fn record_failed(&self, class: QosClass) {
+        self.lane(class).failed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one redispatch of a transiently-failed request. The request
+    /// stays outstanding; only its eventual resolution touches the
+    /// accounting identity.
+    pub fn record_retried(&self, class: QosClass) {
+        self.lane(class).retried.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Record one expired-deadline request dropped before execution.
@@ -205,6 +241,32 @@ impl Metrics {
         self.batched_samples.fetch_add(n as u64, Ordering::Relaxed);
     }
 
+    /// Register a replica in the health registry (called by the worker at
+    /// spawn); the returned handle is what the worker records batch
+    /// outcomes on, and what the fleet's health pass reads.
+    pub fn register_replica(&self, label: &str) -> Arc<ReplicaHealth> {
+        let h = Arc::new(ReplicaHealth::new(label));
+        self.replicas.lock().unwrap().push(Arc::clone(&h));
+        h
+    }
+
+    /// Point-in-time health of every replica ever registered (including
+    /// ejected/dead ones — their terminal state is part of the story).
+    pub fn replica_health(&self) -> Vec<ReplicaHealthSnapshot> {
+        self.replicas.lock().unwrap().iter().map(|h| h.snapshot()).collect()
+    }
+
+    /// Live handles for the fleet's health pass (which needs to drain
+    /// per-replica windows and flip quarantine flags, not just read).
+    pub(crate) fn replica_handles(&self) -> Vec<Arc<ReplicaHealth>> {
+        self.replicas.lock().unwrap().clone()
+    }
+
+    /// Find one replica's health entry by label.
+    pub fn find_replica(&self, label: &str) -> Option<Arc<ReplicaHealth>> {
+        self.replicas.lock().unwrap().iter().find(|h| h.label() == label).cloned()
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let quantiles = |lat: &mut Vec<u64>| {
             lat.sort_unstable();
@@ -222,7 +284,8 @@ impl Metrics {
                 class: QosClass::ALL[i],
                 submitted: lane.submitted.load(Ordering::Relaxed),
                 completed: lane.completed.load(Ordering::Relaxed),
-                errors: lane.errors.load(Ordering::Relaxed),
+                failed: lane.failed.load(Ordering::Relaxed),
+                retried: lane.retried.load(Ordering::Relaxed),
                 shed: lane.shed.load(Ordering::Relaxed),
                 cancelled: lane.cancelled.load(Ordering::Relaxed),
                 deadline_missed: lane.deadline_missed.load(Ordering::Relaxed),
@@ -238,7 +301,8 @@ impl Metrics {
         MetricsSnapshot {
             submitted: sum(|c| c.submitted),
             completed: sum(|c| c.completed),
-            errors: sum(|c| c.errors),
+            failed: sum(|c| c.failed),
+            retried: sum(|c| c.retried),
             shed: sum(|c| c.shed),
             cancelled: sum(|c| c.cancelled),
             deadline_missed: sum(|c| c.deadline_missed),
@@ -274,7 +338,8 @@ impl Metrics {
                 // may make a counter read lower than the cursor's copy
                 submitted: now.submitted.saturating_sub(prev.submitted),
                 completed: now.completed.saturating_sub(prev.completed),
-                errors: now.errors.saturating_sub(prev.errors),
+                failed: now.failed.saturating_sub(prev.failed),
+                retried: now.retried.saturating_sub(prev.retried),
                 shed: now.shed.saturating_sub(prev.shed),
                 cancelled: now.cancelled.saturating_sub(prev.cancelled),
                 deadline_missed: now.deadline_missed.saturating_sub(prev.deadline_missed),
@@ -293,7 +358,8 @@ pub struct ClassWindow {
     pub class: QosClass,
     pub submitted: u64,
     pub completed: u64,
-    pub errors: u64,
+    pub failed: u64,
+    pub retried: u64,
     pub shed: u64,
     pub cancelled: u64,
     pub deadline_missed: u64,
@@ -340,9 +406,23 @@ impl WindowSnapshot {
         self.sum(|c| c.deadline_missed)
     }
 
-    /// Errors during the window (all classes).
-    pub fn errors(&self) -> u64 {
-        self.sum(|c| c.errors)
+    /// Requests resolved as failed during the window (all classes) — the
+    /// circuit breaker's trip signal.
+    pub fn failed(&self) -> u64 {
+        self.sum(|c| c.failed)
+    }
+
+    /// Redispatches during the window (all classes).
+    pub fn retried(&self) -> u64 {
+        self.sum(|c| c.retried)
+    }
+
+    /// Requests *resolved by execution* during the window: completed or
+    /// failed. Sheds and cancels are excluded on purpose — an open
+    /// breaker sheds at admission, and those sheds must not keep the
+    /// breaker open once the pool is actually executing cleanly again.
+    pub fn resolved(&self) -> u64 {
+        self.completed() + self.failed()
     }
 
     /// `count` as a per-second rate over this window's wall time.
@@ -355,17 +435,181 @@ impl std::fmt::Display for WindowSnapshot {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "window {:.2}s | {:.0} req/s in, {:.0} req/s done | {} shed, {} late",
+            "window {:.2}s | {:.0} req/s in, {:.0} req/s done | {} shed, {} late, {} failed",
             self.elapsed.as_secs_f64(),
             self.per_sec(self.submitted()),
             self.per_sec(self.completed()),
             self.shed(),
             self.deadline_missed(),
+            self.failed(),
         )?;
         for c in self.per_class.iter().filter(|c| c.submitted > 0 || c.completed > 0) {
             write!(f, " | {} {}/{} p95 {:.0}us", c.class.name(), c.completed, c.submitted, c.p95_us)?;
         }
         Ok(())
+    }
+}
+
+/// Lifecycle phase of one replica in the health registry.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReplicaPhase {
+    /// Serving normally.
+    Live,
+    /// Marked for ejection by the fleet's health pass; the worker exits
+    /// at its next batch boundary (a targeted graceful drain).
+    Quarantined,
+    /// The quarantined worker has exited — the ejection is realized.
+    Ejected,
+    /// The worker exited on a fatal replica failure (it did not drain; its
+    /// in-flight batch was failed to the tickets first).
+    Dead,
+}
+
+impl ReplicaPhase {
+    pub fn name(self) -> &'static str {
+        match self {
+            ReplicaPhase::Live => "live",
+            ReplicaPhase::Quarantined => "quarantined",
+            ReplicaPhase::Ejected => "ejected",
+            ReplicaPhase::Dead => "dead",
+        }
+    }
+
+    fn from_u8(v: u8) -> ReplicaPhase {
+        match v {
+            0 => ReplicaPhase::Live,
+            1 => ReplicaPhase::Quarantined,
+            2 => ReplicaPhase::Ejected,
+            _ => ReplicaPhase::Dead,
+        }
+    }
+}
+
+impl std::fmt::Display for ReplicaPhase {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Per-replica health accounting: the worker holding the replica records
+/// each batch outcome; the fleet's tick-driven health pass reads the
+/// consecutive-failure streak and drains the windowed error-rate counters
+/// to decide quarantine. All counters are batch-grained — a replica fault
+/// fails the whole batch, so batches are the natural failure unit.
+pub struct ReplicaHealth {
+    label: String,
+    phase: AtomicU8,
+    consecutive_failures: AtomicU32,
+    batches: AtomicU64,
+    failures: AtomicU64,
+    /// Batches/failures since the last `drain_window()` (the health
+    /// pass's per-tick error-rate signal).
+    window_batches: AtomicU64,
+    window_failures: AtomicU64,
+}
+
+impl ReplicaHealth {
+    fn new(label: &str) -> ReplicaHealth {
+        ReplicaHealth {
+            label: label.to_string(),
+            phase: AtomicU8::new(0),
+            consecutive_failures: AtomicU32::new(0),
+            batches: AtomicU64::new(0),
+            failures: AtomicU64::new(0),
+            window_batches: AtomicU64::new(0),
+            window_failures: AtomicU64::new(0),
+        }
+    }
+
+    pub fn label(&self) -> &str {
+        &self.label
+    }
+
+    pub fn phase(&self) -> ReplicaPhase {
+        ReplicaPhase::from_u8(self.phase.load(Ordering::Relaxed))
+    }
+
+    /// One successfully executed batch: breaks the failure streak.
+    pub fn record_success(&self) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.window_batches.fetch_add(1, Ordering::Relaxed);
+        self.consecutive_failures.store(0, Ordering::Relaxed);
+    }
+
+    /// One failed batch: extends the streak and the window error count.
+    pub fn record_failure(&self) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.failures.fetch_add(1, Ordering::Relaxed);
+        self.window_batches.fetch_add(1, Ordering::Relaxed);
+        self.window_failures.fetch_add(1, Ordering::Relaxed);
+        self.consecutive_failures.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn consecutive_failures(&self) -> u32 {
+        self.consecutive_failures.load(Ordering::Relaxed)
+    }
+
+    /// Take the per-window (batches, failures) counts, resetting them —
+    /// one consumer: the fleet's health pass.
+    pub fn drain_window(&self) -> (u64, u64) {
+        (
+            self.window_batches.swap(0, Ordering::Relaxed),
+            self.window_failures.swap(0, Ordering::Relaxed),
+        )
+    }
+
+    /// Flip Live → Quarantined; false if the replica already left Live
+    /// (quarantine is one-shot — the health pass never double-ejects).
+    pub fn quarantine(&self) -> bool {
+        self.phase
+            .compare_exchange(0, 1, Ordering::Relaxed, Ordering::Relaxed)
+            .is_ok()
+    }
+
+    pub fn is_quarantined(&self) -> bool {
+        self.phase() == ReplicaPhase::Quarantined
+    }
+
+    /// The quarantined worker exited (set by the worker itself).
+    pub fn mark_ejected(&self) {
+        self.phase.store(2, Ordering::Relaxed);
+    }
+
+    /// The worker died on a fatal replica failure.
+    pub fn mark_dead(&self) {
+        self.phase.store(3, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> ReplicaHealthSnapshot {
+        ReplicaHealthSnapshot {
+            label: self.label.clone(),
+            phase: self.phase(),
+            consecutive_failures: self.consecutive_failures(),
+            batches: self.batches.load(Ordering::Relaxed),
+            failures: self.failures.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time copy of one replica's health entry.
+#[derive(Clone, Debug)]
+pub struct ReplicaHealthSnapshot {
+    pub label: String,
+    pub phase: ReplicaPhase,
+    pub consecutive_failures: u32,
+    /// Lifetime executed batches (successes + failures).
+    pub batches: u64,
+    /// Lifetime failed batches.
+    pub failures: u64,
+}
+
+impl std::fmt::Display for ReplicaHealthSnapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} [{}] {}/{} batches failed (streak {})",
+            self.label, self.phase, self.failures, self.batches, self.consecutive_failures
+        )
     }
 }
 
@@ -375,7 +619,8 @@ pub struct ClassSnapshot {
     pub class: QosClass,
     pub submitted: u64,
     pub completed: u64,
-    pub errors: u64,
+    pub failed: u64,
+    pub retried: u64,
     pub shed: u64,
     pub cancelled: u64,
     pub deadline_missed: u64,
@@ -392,12 +637,15 @@ impl ClassSnapshot {
 }
 
 /// A point-in-time metrics view. The flat fields are totals, always equal
-/// to the sum of the `per_class` lanes.
+/// to the sum of the `per_class` lanes, and always satisfying
+/// `completed + shed + cancelled + failed == submitted` once the pool is
+/// quiescent (`retried` and `deadline_missed` sit outside the identity).
 #[derive(Clone, Copy, Debug)]
 pub struct MetricsSnapshot {
     pub submitted: u64,
     pub completed: u64,
-    pub errors: u64,
+    pub failed: u64,
+    pub retried: u64,
     pub shed: u64,
     pub cancelled: u64,
     pub deadline_missed: u64,
@@ -423,10 +671,11 @@ impl std::fmt::Display for MetricsSnapshot {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "{}/{} done ({} err, {} shed, {} canc, {} late) in {:.2}s | {:.0} req/s | p50 {:.0}us p95 {:.0}us p99 {:.0}us | mean batch {:.2}",
+            "{}/{} done ({} failed, {} retried, {} shed, {} canc, {} late) in {:.2}s | {:.0} req/s | p50 {:.0}us p95 {:.0}us p99 {:.0}us | mean batch {:.2}",
             self.completed,
             self.submitted,
-            self.errors,
+            self.failed,
+            self.retried,
             self.shed,
             self.cancelled,
             self.deadline_missed,
@@ -494,26 +743,42 @@ mod tests {
         let lane_sum = |f: fn(&ClassSnapshot) -> u64| s.per_class.iter().map(f).sum::<u64>();
         assert_eq!(lane_sum(|c| c.submitted), s.submitted);
         assert_eq!(lane_sum(|c| c.completed), s.completed);
-        assert_eq!(lane_sum(|c| c.errors), s.errors);
+        assert_eq!(lane_sum(|c| c.failed), s.failed);
+        assert_eq!(lane_sum(|c| c.retried), s.retried);
         assert_eq!(lane_sum(|c| c.shed), s.shed);
         assert_eq!(lane_sum(|c| c.cancelled), s.cancelled);
         assert_eq!(lane_sum(|c| c.deadline_missed), s.deadline_missed);
     }
 
     #[test]
-    fn outstanding_counts_shed_and_cancelled_as_resolved() {
+    fn outstanding_counts_shed_cancelled_and_failed_as_resolved() {
         let m = Metrics::new();
         for _ in 0..5 {
             m.record_submitted(QosClass::Bulk);
         }
         assert_eq!(m.outstanding(), 5);
         m.record(QosClass::Bulk, Duration::from_micros(10));
-        m.record_error(QosClass::Bulk);
+        m.record_failed(QosClass::Bulk);
         assert_eq!(m.outstanding(), 3);
         m.record_shed(QosClass::Bulk);
         m.record_cancelled(QosClass::Bulk);
         assert_eq!(m.outstanding(), 1);
         assert_eq!(m.snapshot().submitted, 5);
+    }
+
+    #[test]
+    fn retried_requests_stay_outstanding() {
+        let m = Metrics::new();
+        m.record_submitted(QosClass::Interactive);
+        m.record_retried(QosClass::Interactive);
+        m.record_retried(QosClass::Interactive);
+        assert_eq!(m.outstanding(), 1, "a retried request has not resolved");
+        // the retried request eventually fails: identity closes
+        m.record_failed(QosClass::Interactive);
+        assert_eq!(m.outstanding(), 0);
+        let s = m.snapshot();
+        assert_eq!(s.retried, 2);
+        assert_eq!(s.completed + s.shed + s.cancelled + s.failed, s.submitted);
     }
 
     #[test]
@@ -585,5 +850,60 @@ mod tests {
         m.retract_submitted(QosClass::Bulk);
         let w2 = m.window();
         assert_eq!(w2.submitted(), 0);
+    }
+
+    #[test]
+    fn window_reports_failed_and_retried_deltas() {
+        let m = Metrics::new();
+        for _ in 0..4 {
+            m.record_submitted(QosClass::Bulk);
+        }
+        m.record(QosClass::Bulk, Duration::from_micros(10));
+        m.record_retried(QosClass::Bulk);
+        m.record_failed(QosClass::Bulk);
+        let w = m.window();
+        assert_eq!(w.failed(), 1);
+        assert_eq!(w.retried(), 1);
+        assert_eq!(w.resolved(), 2, "resolved = completed + failed");
+        let w2 = m.window();
+        assert_eq!(w2.failed(), 0, "consumed by the previous window");
+        assert_eq!(w2.resolved(), 0);
+    }
+
+    #[test]
+    fn replica_health_tracks_streaks_and_windows() {
+        let m = Metrics::new();
+        let h = m.register_replica("native/0");
+        h.record_success();
+        h.record_failure();
+        h.record_failure();
+        assert_eq!(h.consecutive_failures(), 2);
+        assert_eq!(h.drain_window(), (3, 2));
+        assert_eq!(h.drain_window(), (0, 0), "window counters reset on drain");
+        h.record_success();
+        assert_eq!(h.consecutive_failures(), 0, "a success breaks the streak");
+        let snaps = m.replica_health();
+        assert_eq!(snaps.len(), 1);
+        assert_eq!(snaps[0].label, "native/0");
+        assert_eq!(snaps[0].batches, 4);
+        assert_eq!(snaps[0].failures, 2);
+        assert_eq!(snaps[0].phase, ReplicaPhase::Live);
+    }
+
+    #[test]
+    fn quarantine_is_one_shot_and_phases_are_terminal() {
+        let m = Metrics::new();
+        let h = m.register_replica("native/1");
+        assert!(h.quarantine(), "first quarantine wins");
+        assert!(!h.quarantine(), "second attempt must not re-eject");
+        assert!(h.is_quarantined());
+        h.mark_ejected();
+        assert_eq!(h.phase(), ReplicaPhase::Ejected);
+        assert!(!h.quarantine(), "an ejected replica never re-enters service");
+        let dead = m.register_replica("native/2");
+        dead.mark_dead();
+        assert_eq!(dead.phase(), ReplicaPhase::Dead);
+        assert_eq!(m.find_replica("native/2").unwrap().phase(), ReplicaPhase::Dead);
+        assert!(m.find_replica("nope").is_none());
     }
 }

@@ -34,14 +34,23 @@
 //!   pools through a warm [`crate::api::ReplicaFactory`] or shrinks them
 //!   via graceful drain ([`Fleet::tick`] is the loop body; every decision
 //!   lands in [`FleetSnapshot`]);
+//! * [`resilience`] — the fault-tolerance policy layer (PR 8): pure
+//!   [`BreakerCore`]/[`BreakerPolicy`] circuit-breaker state machines
+//!   (Closed → Open → HalfOpen, tick-counted like the autoscaler) and
+//!   [`HealthPolicy`] replica-ejection thresholds; [`Fleet::tick`] wires
+//!   both to live pools — failing replicas are quarantined, drained and
+//!   warm-replaced, open breakers shed Background/Bulk at admission while
+//!   Interactive traffic doubles as the recovery probe;
 //! * [`router`]  — model-name → fleet routing for multi-model
 //!   deployments;
 //! * [`ingress`] — TCP wire protocol + blocking client: the v2 `MFR2`
 //!   frame carries class + deadline, legacy v1 `MFRQ` frames are served
 //!   with configurable defaults ([`IngressConfig`]);
 //! * [`metrics`] — per-class latency (p50/p95/p99) and lifecycle counters
-//!   (completed, errors, `shed`, `cancelled`, `deadline_missed`), always
-//!   summing to the totals, reported by the e2e example
+//!   (completed, `failed`, `retried`, `shed`, `cancelled`,
+//!   `deadline_missed`; `completed + shed + cancelled + failed ==
+//!   submitted` always) plus the per-replica health registry
+//!   ([`ReplicaHealth`]) feeding ejection, reported by the e2e example
 //!   (`examples/serve_keywords.rs`).
 
 pub mod autoscale;
@@ -50,13 +59,15 @@ pub mod fleet;
 pub mod ingress;
 pub mod metrics;
 pub mod request;
+pub mod resilience;
 pub mod router;
 pub mod server;
 
 // the execution surface lives in `crate::api`; re-exported here because
 // every server deployment needs it alongside the coordinator types
 pub use crate::api::{
-    Engine, InferenceSession, ReplicaFactory, Session, SessionBuilder, SessionCache,
+    Engine, FailureKind, FaultPlan, FaultySession, InferenceSession, InjectedFault, ReplicaFactory,
+    Session, SessionBuilder, SessionCache,
 };
 pub use autoscale::{
     AutoscalePolicy, AutoscaleStatus, Decision, PolicyState, ScaleAction, ScaleReason, TickSignals,
@@ -64,7 +75,13 @@ pub use autoscale::{
 pub use batcher::{AdaptiveBatcher, BatcherConfig};
 pub use fleet::{Fleet, FleetSnapshot, PoolSnapshot, PoolSpec, PoolTickReport};
 pub use ingress::{Client, Ingress, IngressConfig};
-pub use metrics::{ClassSnapshot, ClassWindow, Metrics, MetricsSnapshot, WindowSnapshot};
-pub use request::{QosClass, QosProfile, QueueEntry, Request, SubmitError, Ticket};
+pub use metrics::{
+    ClassSnapshot, ClassWindow, Metrics, MetricsSnapshot, ReplicaHealth, ReplicaHealthSnapshot,
+    ReplicaPhase, WindowSnapshot,
+};
+pub use request::{
+    QosClass, QosProfile, QueueEntry, ReplicaError, Request, SubmitError, Ticket,
+};
+pub use resilience::{BreakerCore, BreakerPolicy, BreakerState, HealthPolicy};
 pub use router::Router;
 pub use server::{Server, ServerConfig};

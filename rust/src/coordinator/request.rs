@@ -42,6 +42,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::api::faulty::FailureKind;
 use crate::api::Engine;
 
 /// Quality-of-service class of one request — the routing and batching
@@ -190,6 +191,11 @@ pub struct Request {
     pub deadline: Option<Instant>,
     /// Process-unique id, embedded in error messages and the ticket.
     pub id: u64,
+    /// Redispatch count: 0 on first submit, incremented each time a
+    /// transient replica failure re-enqueues the request. Bounded by the
+    /// server's retry budget; travels with the request so the budget
+    /// survives re-enqueueing.
+    pub(crate) attempt: u32,
     cancel: Arc<AtomicBool>,
 }
 
@@ -201,8 +207,15 @@ impl Request {
             class: QosClass::default(),
             deadline: None,
             id: NEXT_ID.fetch_add(1, Ordering::Relaxed),
+            attempt: 0,
             cancel: Arc::new(AtomicBool::new(false)),
         }
+    }
+
+    /// Times this request has been redispatched after a transient
+    /// replica failure (0 = first attempt still pending).
+    pub fn attempts(&self) -> u32 {
+        self.attempt
     }
 
     /// An Interactive request (convenience for the common case).
@@ -257,6 +270,7 @@ impl std::fmt::Debug for Request {
             .field("class", &self.class)
             .field("deadline", &self.deadline)
             .field("payload_len", &self.payload.len())
+            .field("attempt", &self.attempt)
             .field("cancelled", &self.is_cancelled())
             .finish()
     }
@@ -371,9 +385,43 @@ impl Ticket {
     }
 }
 
+/// Typed replica execution failure — what every ticket in a failed batch
+/// receives (replacing the old opaque `"batch execution failed: .."`
+/// string). Carries the replica identity and the request id so a caller
+/// holding thousands of tickets can attribute a failure without any
+/// side-channel, plus the [`FailureKind`] the retry/ejection machinery
+/// classified the error as.
+#[derive(Debug, Clone)]
+pub struct ReplicaError {
+    /// Label of the replica whose batch failed (e.g. `native/3`).
+    pub replica_label: String,
+    /// Id of the request this error resolves.
+    pub request_id: u64,
+    /// Transient (retryable, replica stays unless health trips) or Fatal
+    /// (the worker exited; the pool heals by warm re-provisioning).
+    pub kind: FailureKind,
+    /// The underlying engine error, flattened.
+    pub detail: String,
+}
+
+impl std::fmt::Display for ReplicaError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "request {} failed on replica {} ({}): {}",
+            self.request_id, self.replica_label, self.kind, self.detail
+        )
+    }
+}
+
+impl std::error::Error for ReplicaError {}
+
 /// Explicit backpressure and validation errors from `try_submit`. The
 /// rejected request is handed back whenever it still exists, so callers
 /// can retry, spill elsewhere, or shed it — never silently lose payloads.
+/// The two exceptions carry no request: `BreakerOpen` *resolves* the
+/// request (it is counted as shed — resubmitting would double-count) and
+/// `Internal` guards a state the submit path cannot reach.
 #[derive(Debug)]
 pub enum SubmitError {
     /// The target queue(s) are full.
@@ -382,6 +430,14 @@ pub enum SubmitError {
     Shutdown(Request),
     /// Payload length does not match the model's input length.
     InputLength { expected: usize, got: usize },
+    /// Brownout: every candidate pool's circuit breaker sheds this class
+    /// at admission. The request is already counted `submitted` + `shed`
+    /// on the shedding pool — it is resolved, not handed back.
+    BreakerOpen { id: u64, class: QosClass, pool: String },
+    /// Defensive arm for states the queue protocol makes unreachable
+    /// (e.g. a `Retire` sentinel bounced back from `try_send`): reported
+    /// as an error instead of a panic in the admission hot path.
+    Internal { reason: &'static str },
 }
 
 impl std::fmt::Display for SubmitError {
@@ -395,6 +451,12 @@ impl std::fmt::Display for SubmitError {
             }
             SubmitError::InputLength { expected, got } => {
                 write!(f, "input length {got} != model input length {expected}")
+            }
+            SubmitError::BreakerOpen { id, class, pool } => {
+                write!(f, "request {id} ({class}) shed at admission: circuit breaker open on pool {pool:?}")
+            }
+            SubmitError::Internal { reason } => {
+                write!(f, "internal submit error: {reason}")
             }
         }
     }
@@ -488,5 +550,47 @@ mod tests {
         assert!(len.to_string().contains('4'), "{len}");
         let down = SubmitError::Shutdown(Request::new(vec![0]));
         assert!(down.to_string().contains("shut down"), "{down}");
+        let open = SubmitError::BreakerOpen { id: 9, class: QosClass::Background, pool: "p".into() };
+        assert!(open.to_string().contains("shed"), "{open}");
+        assert!(open.to_string().contains("breaker"), "{open}");
+        let internal = SubmitError::Internal { reason: "retire sentinel bounced" };
+        assert!(internal.to_string().contains("internal"), "{internal}");
+    }
+
+    #[test]
+    fn replica_error_names_replica_request_and_kind() {
+        let e = ReplicaError {
+            replica_label: "native/3".into(),
+            request_id: 42,
+            kind: FailureKind::Transient,
+            detail: "injected transient fault at call 5".into(),
+        };
+        let s = e.to_string();
+        assert!(s.contains("native/3"), "{s}");
+        assert!(s.contains("42"), "{s}");
+        assert!(s.contains("transient"), "{s}");
+        // downcastable through anyhow — the worker/ticket contract
+        let any: anyhow::Error = e.into();
+        assert_eq!(any.downcast_ref::<ReplicaError>().unwrap().request_id, 42);
+    }
+
+    #[test]
+    fn wait_deadline_returns_error_when_worker_drops_reply_mid_batch() {
+        // replica-death satellite: the owning worker exits without
+        // answering — the ticket must resolve, not hang
+        let (pending, mut ticket) = Request::new(vec![0]).into_pending();
+        drop(pending); // sender gone, no reply ever sent, not cancelled
+        let far = Instant::now() + Duration::from_secs(60);
+        let err = ticket.wait_deadline(far).unwrap_err().to_string();
+        assert!(err.contains("worker dropped reply"), "{err}");
+    }
+
+    #[test]
+    fn retry_attempt_counter_travels_with_the_request() {
+        let mut req = Request::new(vec![0]);
+        assert_eq!(req.attempts(), 0);
+        req.attempt += 1;
+        let (pending, _t) = req.into_pending();
+        assert_eq!(pending.request.attempts(), 1, "budget must survive re-enqueueing");
     }
 }

@@ -1,0 +1,403 @@
+//! Pool-level resilience policies: circuit breaking and replica health.
+//!
+//! Both policies follow the autoscaler's design contract
+//! ([`autoscale`](super::autoscale)): **pure, tick-driven state machines**
+//! with no wall clock anywhere — one `step` consumes one windowed
+//! observation and time is counted in consecutive `step` calls, so every
+//! transition is unit-testable without threads or sleeps. The production
+//! driver is [`Fleet::tick`](super::fleet::Fleet::tick), which feeds both
+//! policies from the *same* consumed metrics window it hands the
+//! autoscaler (the window cursor has a single consumer).
+//!
+//! ## The circuit breaker ([`BreakerCore`])
+//!
+//! Classic three-state breaker, one per pool:
+//!
+//! * **Closed** (normal) → **Open** when a window resolves at least
+//!   [`BreakerPolicy::min_window_requests`] requests and the failed
+//!   fraction reaches [`BreakerPolicy::open_error_rate`]. "Resolved"
+//!   deliberately means `completed + failed` — admission sheds are
+//!   excluded, otherwise the brownout the breaker itself causes (shedding
+//!   Background/Bulk at admission) would hold it open forever;
+//! * **Open** → **HalfOpen** after [`BreakerPolicy::open_ticks`]
+//!   consecutive ticks. While open, the pool browns out: Background and
+//!   Bulk are shed at admission, Interactive still flows (the live
+//!   traffic doubles as the probe);
+//! * **HalfOpen** → **Open** on any windowed failure, → **Closed** on a
+//!   clean window with at least one resolved request, and stays put on a
+//!   window with no traffic at all (no evidence either way).
+//!
+//! ## Replica health ([`HealthPolicy`])
+//!
+//! Decides which *individual* replicas to eject, from the per-replica
+//! counters workers feed into
+//! [`ReplicaHealth`](super::metrics::ReplicaHealth): a replica is
+//! unhealthy on an unbroken run of
+//! [`HealthPolicy::eject_consecutive_failures`] failed batches (the
+//! wedged-replica signature), or on a windowed batch error rate at or
+//! over [`HealthPolicy::eject_error_rate`] once the window has at least
+//! [`HealthPolicy::min_window_batches`] batches. The fleet's tick ejects
+//! the named replicas via
+//! [`Server::eject_replica`](super::server::Server::eject_replica), after
+//! provisioning warm replacements so the pool never dips below its floor.
+
+use std::sync::Arc;
+
+use super::metrics::{ReplicaHealth, ReplicaPhase};
+
+/// Per-pool circuit-breaker thresholds. All windows are metric windows,
+/// all durations are control ticks — no wall clock.
+#[derive(Clone, Copy, Debug)]
+pub struct BreakerPolicy {
+    /// Failed fraction of resolved (`completed + failed`) requests in one
+    /// window at which a closed breaker opens (0.0–1.0].
+    pub open_error_rate: f64,
+    /// Windows with fewer resolved requests than this never trip the
+    /// breaker (one early failure must not brown out an idle pool).
+    pub min_window_requests: u64,
+    /// Consecutive ticks a breaker stays open before probing (half-open).
+    pub open_ticks: u32,
+}
+
+impl BreakerPolicy {
+    /// Defaults: open at a 50% windowed error rate over at least 4
+    /// resolved requests, probe after 2 open ticks.
+    pub fn new() -> BreakerPolicy {
+        BreakerPolicy { open_error_rate: 0.5, min_window_requests: 4, open_ticks: 2 }
+    }
+
+    pub fn open_error_rate(mut self, rate: f64) -> BreakerPolicy {
+        self.open_error_rate = rate.clamp(f64::MIN_POSITIVE, 1.0);
+        self
+    }
+
+    pub fn min_window_requests(mut self, n: u64) -> BreakerPolicy {
+        self.min_window_requests = n.max(1);
+        self
+    }
+
+    pub fn open_ticks(mut self, n: u32) -> BreakerPolicy {
+        self.open_ticks = n.max(1);
+        self
+    }
+}
+
+impl Default for BreakerPolicy {
+    fn default() -> Self {
+        BreakerPolicy::new()
+    }
+}
+
+/// The breaker's position. Mirrored into an atomic on the pool so the
+/// admission path reads it lock-free.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BreakerState {
+    /// Normal service: every class admitted.
+    Closed,
+    /// Brownout: Background and Bulk shed at admission; Interactive still
+    /// admitted (it is the probe traffic).
+    Open,
+    /// Probation: admission behaves as Closed while the next windows
+    /// decide between re-closing and re-opening.
+    HalfOpen,
+}
+
+impl BreakerState {
+    /// Stable lowercase name (logs, snapshots, JSON).
+    pub fn name(self) -> &'static str {
+        match self {
+            BreakerState::Closed => "closed",
+            BreakerState::Open => "open",
+            BreakerState::HalfOpen => "half-open",
+        }
+    }
+
+    /// Encoding for the pool's lock-free admission mirror.
+    pub fn as_u8(self) -> u8 {
+        match self {
+            BreakerState::Closed => 0,
+            BreakerState::Open => 1,
+            BreakerState::HalfOpen => 2,
+        }
+    }
+
+    pub fn from_u8(v: u8) -> BreakerState {
+        match v {
+            1 => BreakerState::Open,
+            2 => BreakerState::HalfOpen,
+            _ => BreakerState::Closed,
+        }
+    }
+
+    /// Whether a request of the given class passes admission under this
+    /// breaker state. Only an *open* breaker sheds, and it never sheds
+    /// Interactive — brownout degrades batch work first.
+    pub fn admits_background_work(self) -> bool {
+        self != BreakerState::Open
+    }
+}
+
+impl std::fmt::Display for BreakerState {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// The breaker's entire mutable state: its position plus how many ticks
+/// it has been open. One [`BreakerCore::step`] per control tick.
+#[derive(Clone, Copy, Debug)]
+pub struct BreakerCore {
+    state: BreakerState,
+    ticks_open: u32,
+}
+
+impl BreakerCore {
+    pub fn new() -> BreakerCore {
+        BreakerCore { state: BreakerState::Closed, ticks_open: 0 }
+    }
+
+    pub fn state(&self) -> BreakerState {
+        self.state
+    }
+
+    /// Consume one window's `resolved` (= completed + failed, sheds
+    /// excluded) and `failed` counts; return the state the breaker is in
+    /// *after* this tick. Pure with respect to everything but `self`.
+    pub fn step(&mut self, policy: &BreakerPolicy, resolved: u64, failed: u64) -> BreakerState {
+        match self.state {
+            BreakerState::Closed => {
+                if resolved >= policy.min_window_requests
+                    && failed as f64 >= policy.open_error_rate * resolved as f64
+                {
+                    self.state = BreakerState::Open;
+                    self.ticks_open = 0;
+                }
+            }
+            BreakerState::Open => {
+                self.ticks_open += 1;
+                if self.ticks_open >= policy.open_ticks {
+                    self.state = BreakerState::HalfOpen;
+                }
+            }
+            BreakerState::HalfOpen => {
+                if failed > 0 {
+                    // the probe window failed: back to open, full timer
+                    self.state = BreakerState::Open;
+                    self.ticks_open = 0;
+                } else if resolved > 0 {
+                    self.state = BreakerState::Closed;
+                }
+                // a window with no traffic proves nothing: stay half-open
+            }
+        }
+        self.state
+    }
+}
+
+impl Default for BreakerCore {
+    fn default() -> Self {
+        BreakerCore::new()
+    }
+}
+
+/// Per-replica ejection thresholds.
+#[derive(Clone, Copy, Debug)]
+pub struct HealthPolicy {
+    /// Unbroken run of failed batches at which a replica is ejected (the
+    /// wedged-replica signature — a wedge never succeeds again, so the
+    /// streak only grows).
+    pub eject_consecutive_failures: u32,
+    /// Windowed batch failure fraction at which a replica is ejected.
+    pub eject_error_rate: f64,
+    /// Windows with fewer batches than this never trip the rate rule.
+    pub min_window_batches: u64,
+}
+
+impl HealthPolicy {
+    /// Defaults: eject on 3 consecutive failed batches, or a 50% windowed
+    /// batch error rate over at least 4 batches.
+    pub fn new() -> HealthPolicy {
+        HealthPolicy {
+            eject_consecutive_failures: 3,
+            eject_error_rate: 0.5,
+            min_window_batches: 4,
+        }
+    }
+
+    pub fn eject_consecutive_failures(mut self, n: u32) -> HealthPolicy {
+        self.eject_consecutive_failures = n.max(1);
+        self
+    }
+
+    pub fn eject_error_rate(mut self, rate: f64) -> HealthPolicy {
+        self.eject_error_rate = rate.clamp(f64::MIN_POSITIVE, 1.0);
+        self
+    }
+
+    pub fn min_window_batches(mut self, n: u64) -> HealthPolicy {
+        self.min_window_batches = n.max(1);
+        self
+    }
+
+    /// Labels of the live replicas this tick finds unhealthy. Drains
+    /// every live replica's batch window (the per-tick delta) — single
+    /// consumer, like the metrics window cursor: only the fleet tick may
+    /// call this.
+    pub fn unhealthy(&self, replicas: &[Arc<ReplicaHealth>]) -> Vec<String> {
+        let mut out = Vec::new();
+        for h in replicas {
+            if h.phase() != ReplicaPhase::Live {
+                continue;
+            }
+            let (batches, failures) = h.drain_window();
+            let streak = h.consecutive_failures() >= self.eject_consecutive_failures;
+            let rate = batches >= self.min_window_batches
+                && failures as f64 >= self.eject_error_rate * batches as f64;
+            if streak || rate {
+                out.push(h.label().to_string());
+            }
+        }
+        out
+    }
+}
+
+impl Default for HealthPolicy {
+    fn default() -> Self {
+        HealthPolicy::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::metrics::Metrics;
+
+    #[test]
+    fn closed_breaker_opens_only_on_a_qualified_window() {
+        let p = BreakerPolicy::new(); // rate 0.5, min 4
+        let mut b = BreakerCore::new();
+        assert_eq!(b.step(&p, 0, 0), BreakerState::Closed, "no traffic");
+        assert_eq!(b.step(&p, 3, 3), BreakerState::Closed, "under min resolved");
+        assert_eq!(b.step(&p, 10, 4), BreakerState::Closed, "40% < 50%");
+        assert_eq!(b.step(&p, 10, 5), BreakerState::Open, "50% trips at the threshold");
+    }
+
+    #[test]
+    fn open_breaker_half_opens_after_its_timer() {
+        let p = BreakerPolicy::new().open_ticks(2);
+        let mut b = BreakerCore::new();
+        b.step(&p, 4, 4);
+        assert_eq!(b.state(), BreakerState::Open);
+        // traffic during the open phase is irrelevant: only ticks count
+        assert_eq!(b.step(&p, 9, 9), BreakerState::Open, "one open tick");
+        assert_eq!(b.step(&p, 0, 0), BreakerState::HalfOpen, "second open tick probes");
+    }
+
+    #[test]
+    fn half_open_closes_on_a_clean_window() {
+        let p = BreakerPolicy::new().open_ticks(1);
+        let mut b = BreakerCore::new();
+        b.step(&p, 4, 4); // open
+        b.step(&p, 0, 0); // half-open
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+        assert_eq!(b.step(&p, 0, 0), BreakerState::HalfOpen, "no traffic proves nothing");
+        assert_eq!(b.step(&p, 1, 0), BreakerState::Closed, "one clean resolve closes");
+    }
+
+    #[test]
+    fn half_open_reopens_on_any_failure() {
+        let p = BreakerPolicy::new().open_ticks(1);
+        let mut b = BreakerCore::new();
+        b.step(&p, 4, 4); // open
+        b.step(&p, 0, 0); // half-open
+        // a single failure re-opens even though the window is tiny —
+        // probation has no min-traffic grace
+        assert_eq!(b.step(&p, 3, 1), BreakerState::Open);
+        // and the open timer starts over
+        assert_eq!(b.step(&p, 0, 0), BreakerState::HalfOpen);
+    }
+
+    #[test]
+    fn only_the_open_state_sheds_and_never_interactive() {
+        assert!(BreakerState::Closed.admits_background_work());
+        assert!(BreakerState::HalfOpen.admits_background_work());
+        assert!(!BreakerState::Open.admits_background_work());
+    }
+
+    #[test]
+    fn breaker_state_round_trips_through_the_atomic_encoding() {
+        for s in [BreakerState::Closed, BreakerState::Open, BreakerState::HalfOpen] {
+            assert_eq!(BreakerState::from_u8(s.as_u8()), s);
+        }
+        assert_eq!(BreakerState::from_u8(250), BreakerState::Closed, "garbage decodes closed");
+    }
+
+    #[test]
+    fn policy_builders_clamp_degenerate_values() {
+        let p = BreakerPolicy::new().open_error_rate(0.0).min_window_requests(0).open_ticks(0);
+        assert!(p.open_error_rate > 0.0);
+        assert_eq!(p.min_window_requests, 1);
+        assert_eq!(p.open_ticks, 1);
+        let h = HealthPolicy::new()
+            .eject_consecutive_failures(0)
+            .eject_error_rate(7.0)
+            .min_window_batches(0);
+        assert_eq!(h.eject_consecutive_failures, 1);
+        assert!(h.eject_error_rate <= 1.0);
+        assert_eq!(h.min_window_batches, 1);
+    }
+
+    #[test]
+    fn health_policy_flags_a_failure_streak() {
+        let m = Metrics::new();
+        let flaky = m.register_replica("p/flaky");
+        let fine = m.register_replica("p/fine");
+        for _ in 0..3 {
+            flaky.record_failure();
+            fine.record_success();
+        }
+        let hp = HealthPolicy::new().eject_consecutive_failures(3);
+        assert_eq!(hp.unhealthy(&m.replica_handles()), vec!["p/flaky".to_string()]);
+    }
+
+    #[test]
+    fn health_policy_flags_a_windowed_error_rate() {
+        let m = Metrics::new();
+        let h = m.register_replica("p/0");
+        // failures interleaved with successes: the streak never reaches 3,
+        // but the windowed rate is 50%
+        for _ in 0..2 {
+            h.record_failure();
+            h.record_success();
+        }
+        let hp = HealthPolicy::new().eject_consecutive_failures(3).min_window_batches(4);
+        assert_eq!(hp.unhealthy(&m.replica_handles()), vec!["p/0".to_string()]);
+    }
+
+    #[test]
+    fn health_windows_are_per_tick_deltas() {
+        let m = Metrics::new();
+        let h = m.register_replica("p/0");
+        h.record_failure();
+        h.record_success();
+        let hp = HealthPolicy::new().min_window_batches(2).eject_error_rate(0.5);
+        assert_eq!(hp.unhealthy(&m.replica_handles()), vec!["p/0".to_string()]);
+        // the flagged replica was NOT ejected (policy only names; the
+        // fleet decides) — next tick sees a fresh, sub-minimum window
+        assert!(hp.unhealthy(&m.replica_handles()).is_empty());
+    }
+
+    #[test]
+    fn non_live_replicas_are_never_re_flagged() {
+        let m = Metrics::new();
+        let h = m.register_replica("p/0");
+        for _ in 0..5 {
+            h.record_failure();
+        }
+        h.quarantine();
+        let hp = HealthPolicy::new();
+        assert!(hp.unhealthy(&m.replica_handles()).is_empty(), "quarantined is already handled");
+        h.mark_ejected();
+        assert!(hp.unhealthy(&m.replica_handles()).is_empty());
+    }
+}

@@ -41,7 +41,30 @@
 //!    (`replicas − pending retires`) and is what the autoscaler and the
 //!    fleet snapshot reason about, so a decision made mid-drain sees the
 //!    post-drain size instead of double-retiring.
+//!
+//! ## Failure handling
+//!
+//! A failed batch no longer collapses into one stringly error: every
+//! affected request resolves to a typed
+//! [`ReplicaError`](super::request::ReplicaError) naming the replica, the
+//! request id, and the failure kind. **Transient** failures are retried —
+//! the request goes to the shared retry buffer (attempt count
+//! incremented, `retried` lane recorded) where a *sibling* worker claims
+//! it ahead of fresh arrivals; a request is never retried past
+//! [`ServerConfig::max_retries`], past its deadline, or after
+//! cancellation. Exhausted or non-retryable failures land in the `failed`
+//! metric lane, keeping the accounting identity exact:
+//! `completed + shed + cancelled + failed == submitted`. **Fatal**
+//! failures kill the worker itself: it marks its health entry dead,
+//! re-queues any carried request, and exits — the pool's autoscaler floor
+//! provisions the replacement. Targeted removal of a *specific* unhealthy
+//! replica goes through [`Server::eject_replica`]: it flips the replica's
+//! one-shot quarantine flag, and the worker notices between batches (the
+//! batcher's [`Cut::Idle`] poll bounds the latency even on a quiet queue),
+//! marks itself ejected, and exits under the same reservation rules as a
+//! drain — so ejection, like retirement, never drops an accepted request.
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
@@ -51,9 +74,9 @@ use std::time::Instant;
 use anyhow::Result;
 
 use super::batcher::{next_batch, AdaptiveBatcher, BatcherConfig, Cut};
-use super::metrics::Metrics;
-use super::request::{Pending, QueueEntry, Request, SubmitError, Ticket};
-use crate::api::{IoSignature, Session};
+use super::metrics::{Metrics, ReplicaHealth};
+use super::request::{Pending, QueueEntry, ReplicaError, Request, SubmitError, Ticket};
+use crate::api::{FailureKind, InjectedFault, IoSignature, Session};
 use crate::tensor::quant::QParams;
 
 /// Server configuration.
@@ -66,11 +89,22 @@ pub struct ServerConfig {
     /// [`AdaptiveBatcher`](super::batcher::AdaptiveBatcher)). Off by
     /// default; the fleet turns it on for its replica pools.
     pub adaptive: bool,
+    /// Times a transiently-failed request may be redispatched to a
+    /// sibling replica before it resolves as failed. Retries never cross
+    /// the request's deadline or QoS class (the request itself travels,
+    /// class intact, and the deadline is re-checked at claim and at
+    /// redispatch).
+    pub max_retries: u32,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { queue_depth: 256, batcher: BatcherConfig::default(), adaptive: false }
+        ServerConfig {
+            queue_depth: 256,
+            batcher: BatcherConfig::default(),
+            adaptive: false,
+            max_retries: 1,
+        }
     }
 }
 
@@ -83,6 +117,13 @@ struct WorkerCtx {
     replicas: Arc<AtomicUsize>,
     /// Retire sentinels sent but not yet claimed-and-exited.
     pending_retires: Arc<AtomicUsize>,
+    /// Transiently-failed requests awaiting a sibling replica, plus
+    /// carried requests orphaned by a worker death. Deliberately a shared
+    /// deque, not a second channel: worker-held senders would keep the
+    /// request channel alive past shutdown (see the batcher module docs).
+    retry: Arc<Mutex<VecDeque<Pending>>>,
+    /// Redispatch budget per request ([`ServerConfig::max_retries`]).
+    max_retries: u32,
 }
 
 /// A serving endpoint for one model — one **elastic** replica pool:
@@ -131,6 +172,8 @@ impl Server {
             metrics: Arc::clone(&metrics),
             replicas: Arc::new(AtomicUsize::new(0)),
             pending_retires: Arc::new(AtomicUsize::new(0)),
+            retry: Arc::new(Mutex::new(VecDeque::new())),
+            max_retries: cfg.max_retries,
         };
         let server = Server {
             tx,
@@ -159,10 +202,11 @@ impl Server {
         };
         let adaptive = self.adaptive;
         let ctx = self.ctx.clone();
+        let health = self.metrics.register_replica(session.label());
         // counted before the thread runs so replicas() never under-reports
         ctx.replicas.fetch_add(1, Ordering::SeqCst);
         let handle = std::thread::spawn(move || {
-            worker_loop(&mut session, &ctx, &bcfg, adaptive);
+            worker_loop(&mut session, &ctx, &bcfg, adaptive, &health);
         });
         let mut workers = self.workers.lock().unwrap();
         // reap workers that already retired, so the handle set stays
@@ -209,6 +253,35 @@ impl Server {
         if self.tx.send(QueueEntry::Retire).is_err() {
             self.ctx.pending_retires.fetch_sub(1, Ordering::SeqCst);
             anyhow::bail!("server is shut down");
+        }
+        Ok(())
+    }
+
+    /// Quarantine and retire one *specific* replica by label — the health
+    /// policy's targeted scale-down. Unlike [`Server::remove_replica`]
+    /// (whose sentinel is claimed by whichever worker gets there first),
+    /// ejection flips the named replica's one-shot quarantine flag; that
+    /// worker notices between batches, re-queues anything it was carrying
+    /// onto the retry buffer, marks itself ejected, and exits.
+    ///
+    /// Uses the same last-live-worker reservation as `remove_replica`:
+    /// ejecting the only live replica is refused (provision the
+    /// replacement first — the fleet's health pass does). A replica
+    /// already quarantined, ejected, or dead cannot be ejected twice.
+    pub fn eject_replica(&self, label: &str) -> Result<()> {
+        let health = self
+            .metrics
+            .find_replica(label)
+            .ok_or_else(|| anyhow::anyhow!("no replica labeled {label:?} in this pool"))?;
+        let reserved = self.ctx.pending_retires.fetch_add(1, Ordering::SeqCst);
+        let running = self.ctx.replicas.load(Ordering::SeqCst);
+        if running.saturating_sub(reserved + 1) < 1 {
+            self.ctx.pending_retires.fetch_sub(1, Ordering::SeqCst);
+            anyhow::bail!("cannot eject the last live replica {label:?}");
+        }
+        if !health.quarantine() {
+            self.ctx.pending_retires.fetch_sub(1, Ordering::SeqCst);
+            anyhow::bail!("replica {label:?} is already {}", health.phase());
         }
         Ok(())
     }
@@ -267,7 +340,7 @@ impl Server {
         self.metrics.record_submitted(class);
         if self.tx.send(QueueEntry::Req(pending)).is_err() {
             // balance the counter so outstanding() stays accurate
-            self.metrics.record_error(class);
+            self.metrics.record_failed(class);
             anyhow::bail!("server is shut down");
         }
         Ok(ticket)
@@ -298,9 +371,16 @@ impl Server {
                 self.metrics.retract_submitted(class);
                 Err(SubmitError::Shutdown(p.into_request()))
             }
-            // we only ever try_send a Req entry
+            // we only ever try_send a Req entry, so a bounced sentinel
+            // would mean the channel handed back something it was never
+            // given. Panicking here would poison the caller's thread over
+            // a request that was already retracted — answer with a typed
+            // internal error and keep serving instead.
             Err(TrySendError::Full(QueueEntry::Retire))
-            | Err(TrySendError::Disconnected(QueueEntry::Retire)) => unreachable!(),
+            | Err(TrySendError::Disconnected(QueueEntry::Retire)) => {
+                self.metrics.retract_submitted(class);
+                Err(SubmitError::Internal { reason: "try_send bounced an entry it was not given" })
+            }
         }
     }
 
@@ -320,8 +400,71 @@ impl Server {
     }
 }
 
-fn worker_loop(session: &mut Session, ctx: &WorkerCtx, cfg: &BatcherConfig, adaptive: bool) {
+/// Resolve one worker's failed batch: retry what may be retried, fail the
+/// rest with a typed [`ReplicaError`]. Returns `true` when the failure
+/// was fatal (the caller must mark itself dead and exit).
+fn fail_batch(
+    batch: Vec<Pending>,
+    error: &anyhow::Error,
+    label: &str,
+    ctx: &WorkerCtx,
+    health: &ReplicaHealth,
+) -> bool {
     let metrics = &*ctx.metrics;
+    health.record_failure();
+    // injected faults carry their kind; anything else (a real engine
+    // error) is conservatively transient — the sibling replicas serve the
+    // same model, so a deterministic model error will simply exhaust the
+    // retry budget and resolve as failed
+    let kind = match error.downcast_ref::<InjectedFault>() {
+        Some(f) => f.kind,
+        None => FailureKind::Transient,
+    };
+    let detail = format!("{error:#}");
+    let now = Instant::now();
+    for mut p in batch {
+        let retryable = kind == FailureKind::Transient
+            && p.request.attempt < ctx.max_retries
+            && !p.is_cancelled()
+            && !p.deadline_expired(now);
+        if retryable {
+            // redispatch to a sibling: still outstanding, not resolved —
+            // submitted was already counted, so only the retry lane moves
+            p.request.attempt += 1;
+            metrics.record_retried(p.request.class);
+            ctx.retry.lock().expect("retry buffer poisoned").push_back(p);
+        } else {
+            metrics.record_failed(p.request.class);
+            let err = ReplicaError {
+                replica_label: label.to_string(),
+                request_id: p.request.id,
+                kind,
+                detail: detail.clone(),
+            };
+            let _ = p.reply.send(Err(anyhow::Error::new(err)));
+        }
+    }
+    kind == FailureKind::Fatal
+}
+
+/// Hand a carried request back to the pool before this worker exits —
+/// exits must never strand the one-slot stash. The request has not
+/// failed; it just needs a new owner, so no lane moves.
+fn requeue_carry(carry: &mut Option<Pending>, ctx: &WorkerCtx) {
+    if let Some(p) = carry.take() {
+        ctx.retry.lock().expect("retry buffer poisoned").push_back(p);
+    }
+}
+
+fn worker_loop(
+    session: &mut Session,
+    ctx: &WorkerCtx,
+    cfg: &BatcherConfig,
+    adaptive: bool,
+    health: &ReplicaHealth,
+) {
+    let metrics = &*ctx.metrics;
+    let label = session.label().to_string();
     let ilen = session.input_len();
     let olen = session.output_len();
     let mut tuner = AdaptiveBatcher::new(*cfg);
@@ -332,14 +475,27 @@ fn worker_loop(session: &mut Session, ctx: &WorkerCtx, cfg: &BatcherConfig, adap
     let mut inputs: Vec<i8> = Vec::new();
     let mut outputs: Vec<i8> = Vec::new();
     loop {
+        // a health-policy ejection lands here: the quarantine flag is
+        // checked between batches (Cut::Idle bounds the wait on a quiet
+        // queue), so the in-flight batch always completes first
+        if health.is_quarantined() {
+            requeue_carry(&mut carry, ctx);
+            health.mark_ejected();
+            // realize the reservation eject_replica made, replicas first
+            // so live_replicas() never transiently over-reports
+            ctx.replicas.fetch_sub(1, Ordering::SeqCst);
+            ctx.pending_retires.fetch_sub(1, Ordering::SeqCst);
+            return;
+        }
         // hold the lock only while assembling a batch; workers alternate
         let effective = if adaptive { tuner.config() } else { *cfg };
         let cut = {
             let rx = ctx.rx.lock().unwrap();
-            next_batch(&rx, &mut carry, cfg, &effective, metrics)
+            next_batch(&rx, &mut carry, &ctx.retry, cfg, &effective, metrics)
         };
         let (batch, retiring) = match cut {
             Cut::Shutdown => return,
+            Cut::Idle => continue,
             Cut::Batch(b) => (b, false),
             Cut::Retire(b) => (b, true),
         };
@@ -363,6 +519,7 @@ fn worker_loop(session: &mut Session, ctx: &WorkerCtx, cfg: &BatcherConfig, adap
             debug_assert_eq!(inputs.len(), n * ilen);
             match session.run_batch_into(&inputs, n, &mut outputs[..n * olen]) {
                 Ok(()) => {
+                    health.record_success();
                     let done = Instant::now();
                     for (i, p) in batch.into_iter().enumerate() {
                         let out = outputs[i * olen..(i + 1) * olen].to_vec();
@@ -376,10 +533,20 @@ fn worker_loop(session: &mut Session, ctx: &WorkerCtx, cfg: &BatcherConfig, adap
                     }
                 }
                 Err(e) => {
-                    let msg = format!("batch execution failed: {e:#}");
-                    for p in batch {
-                        metrics.record_error(p.request.class);
-                        let _ = p.reply.send(Err(anyhow::anyhow!(msg.clone())));
+                    if fail_batch(batch, &e, &label, ctx, health) {
+                        // fatal: this replica is gone. No reservation was
+                        // made for a death, so only the running count
+                        // moves; the carry is handed to the siblings and
+                        // the autoscaler floor provisions a replacement.
+                        health.mark_dead();
+                        requeue_carry(&mut carry, ctx);
+                        ctx.replicas.fetch_sub(1, Ordering::SeqCst);
+                        if retiring {
+                            // dying while holding a claimed sentinel still
+                            // realizes that drain reservation
+                            ctx.pending_retires.fetch_sub(1, Ordering::SeqCst);
+                        }
+                        return;
                     }
                 }
             }
@@ -393,6 +560,13 @@ fn worker_loop(session: &mut Session, ctx: &WorkerCtx, cfg: &BatcherConfig, adap
             // live_replicas() never transiently over-reports
             ctx.replicas.fetch_sub(1, Ordering::SeqCst);
             ctx.pending_retires.fetch_sub(1, Ordering::SeqCst);
+            // a quarantine that raced the sentinel claim is also realized
+            // by this exit (this worker is the one being removed either
+            // way); mark the phase so the registry stays truthful
+            if health.is_quarantined() {
+                health.mark_ejected();
+                ctx.pending_retires.fetch_sub(1, Ordering::SeqCst);
+            }
             return;
         }
     }
@@ -457,7 +631,7 @@ mod tests {
         }
         let snap = s.metrics.snapshot();
         assert_eq!(snap.completed, 400);
-        assert_eq!(snap.errors, 0);
+        assert_eq!(snap.failed, 0);
         if let Ok(s) = Arc::try_unwrap(s) {
             s.shutdown();
         }
@@ -602,7 +776,7 @@ mod tests {
         assert_eq!(s.infer(vec![3, 1]).unwrap(), vec![2, 0, 5]);
         let snap = s.metrics.snapshot();
         assert_eq!(snap.completed, 65);
-        assert_eq!(snap.errors, 0);
+        assert_eq!(snap.failed, 0);
         s.shutdown();
     }
 
@@ -638,7 +812,129 @@ mod tests {
         }
         let snap = s.metrics.snapshot();
         assert_eq!(snap.completed, 30);
-        assert_eq!(snap.errors, 0);
+        assert_eq!(snap.failed, 0);
+        s.shutdown();
+    }
+
+    #[test]
+    fn transient_failure_retries_to_completion() {
+        use crate::api::FaultPlan;
+        // seed 999 + period 1000: exactly call 1 fails, transiently — the
+        // retry (call 2) succeeds on the same schedule, deterministically
+        let session = Session::builder(crate::format::mfb::tests::tiny_mfb())
+            .engine(Engine::MicroFlow)
+            .label("flaky/0")
+            .build()
+            .unwrap();
+        let flaky = FaultPlan::new(999).transient_every(1000).wrap(session);
+        let s = Server::start(vec![flaky], ServerConfig::default()).unwrap();
+        assert_eq!(s.infer(vec![3, 1]).unwrap(), vec![2, 0, 5], "retry must stay bit-exact");
+        let snap = s.metrics.snapshot();
+        assert_eq!(snap.completed, 1);
+        assert_eq!(snap.retried, 1);
+        assert_eq!(snap.failed, 0);
+        assert_eq!(snap.completed + snap.shed + snap.cancelled + snap.failed, snap.submitted);
+        assert_eq!(s.metrics.outstanding(), 0);
+        s.shutdown();
+    }
+
+    #[test]
+    fn exhausted_retry_budget_resolves_as_a_typed_replica_error() {
+        use crate::api::FaultPlan;
+        let session = Session::builder(crate::format::mfb::tests::tiny_mfb())
+            .engine(Engine::MicroFlow)
+            .label("wedged/0")
+            .build()
+            .unwrap();
+        let wedged = FaultPlan::new(0).transient_every(1).wrap(session); // fails every call
+        let cfg = ServerConfig { max_retries: 2, ..ServerConfig::default() };
+        let s = Server::start(vec![wedged], cfg).unwrap();
+        let req = Request::interactive(vec![3, 1]);
+        let id = req.id;
+        let err = s.submit(req).unwrap().wait().unwrap_err();
+        let re = err.downcast_ref::<ReplicaError>().expect("typed replica error");
+        assert_eq!(re.replica_label, "wedged/0");
+        assert_eq!(re.request_id, id);
+        assert_eq!(re.kind, FailureKind::Transient);
+        let snap = s.metrics.snapshot();
+        assert_eq!(snap.retried, 2, "budget of 2 means two redispatches");
+        assert_eq!(snap.failed, 1);
+        assert_eq!(snap.completed + snap.shed + snap.cancelled + snap.failed, snap.submitted);
+        assert_eq!(s.metrics.outstanding(), 0);
+        s.shutdown();
+    }
+
+    #[test]
+    fn fatal_fault_kills_the_worker_and_resolves_its_batch() {
+        use crate::api::FaultPlan;
+        use crate::coordinator::metrics::ReplicaPhase;
+        let session = Session::builder(crate::format::mfb::tests::tiny_mfb())
+            .engine(Engine::MicroFlow)
+            .label("doomed/0")
+            .build()
+            .unwrap();
+        let doomed = FaultPlan::new(0).fatal_on(1).wrap(session);
+        let s = Server::start(vec![doomed], ServerConfig::default()).unwrap();
+        let err = s.submit(Request::new(vec![3, 1])).unwrap().wait().unwrap_err();
+        let re = err.downcast_ref::<ReplicaError>().expect("typed replica error");
+        assert_eq!(re.kind, FailureKind::Fatal);
+        assert_eq!(re.replica_label, "doomed/0");
+        wait_for_replicas(&s, 0);
+        let health = s.metrics.replica_health();
+        assert_eq!(health.len(), 1);
+        assert_eq!(health[0].phase, ReplicaPhase::Dead);
+        let snap = s.metrics.snapshot();
+        assert_eq!(snap.retried, 0, "fatal failures are never retried against anyone");
+        assert_eq!(snap.failed, 1);
+        // replica-death satellite: with no worker left, a queued ticket's
+        // deadline wait returns instead of hanging
+        let mut orphan = s.submit(Request::new(vec![3, 1])).unwrap();
+        let soon = std::time::Instant::now() + std::time::Duration::from_millis(50);
+        assert!(orphan.wait_deadline(soon).unwrap().is_none(), "must time out, not hang");
+        s.shutdown();
+    }
+
+    #[test]
+    fn eject_replica_retires_exactly_the_named_worker() {
+        use crate::coordinator::metrics::ReplicaPhase;
+        let mk = |label: &str| {
+            Session::builder(crate::format::mfb::tests::tiny_mfb())
+                .engine(Engine::MicroFlow)
+                .label(label)
+                .build()
+                .unwrap()
+        };
+        let s = Server::start(vec![mk("ej/a"), mk("ej/b")], ServerConfig::default()).unwrap();
+        assert!(s.eject_replica("ej/nope").is_err(), "unknown label must be refused");
+        s.eject_replica("ej/a").unwrap();
+        assert_eq!(s.live_replicas(), 1, "the ejection is committed immediately");
+        wait_for_replicas(&s, 1);
+        assert_eq!(s.retiring(), 0, "the reservation is realized by the ejected worker");
+        assert!(s.eject_replica("ej/a").is_err(), "a replica is ejected at most once");
+        assert!(s.eject_replica("ej/b").is_err(), "the last live replica is protected");
+        // the survivor is exactly ej/b, still serving
+        assert_eq!(s.infer(vec![3, 1]).unwrap(), vec![2, 0, 5]);
+        for h in s.metrics.replica_health() {
+            match h.label.as_str() {
+                "ej/a" => assert_eq!(h.phase, ReplicaPhase::Ejected),
+                "ej/b" => assert_eq!(h.phase, ReplicaPhase::Live),
+                other => panic!("unexpected replica {other}"),
+            }
+        }
+        s.shutdown();
+    }
+
+    #[test]
+    fn dropping_a_ticket_does_not_leak_an_outstanding_slot() {
+        let s = tiny_server(1);
+        let ticket = s.submit(Request::new(vec![3, 1])).unwrap();
+        drop(ticket); // caller walked away; the worker still executes
+        let t0 = std::time::Instant::now();
+        while s.metrics.snapshot().completed != 1 {
+            assert!(t0.elapsed() < std::time::Duration::from_secs(10), "request never resolved");
+            std::thread::yield_now();
+        }
+        assert_eq!(s.metrics.outstanding(), 0, "a dropped ticket must not leak its slot");
         s.shutdown();
     }
 

@@ -135,6 +135,51 @@
 //! module-level allow with `SAFETY` documentation, and the
 //! `#[target_feature]` functions are reachable only through the runtime
 //! feature check in `backend::resolve`.
+//!
+//! ## Fault tolerance guarantees
+//!
+//! The serving tier assumes replicas fail — wedged sessions, transient
+//! engine errors, dead workers — and holds one invariant through all of
+//! it: **every accepted request resolves exactly once**. The lifecycle
+//! identity `completed + shed + cancelled + failed == submitted` is
+//! asserted under seeded chaos (`tests/stress_coordinator.rs`), with
+//! `retried` counted outside the identity (a retry is the same request
+//! continuing, not a new one). The moving parts:
+//!
+//! * **Failure taxonomy** ([`coordinator::ReplicaError`]): every batch
+//!   failure is typed with the replica label, the request id and a
+//!   [`api::FailureKind`] — `Transient` (the request may be retried
+//!   elsewhere) or `Fatal` (the worker marks its replica dead and exits;
+//!   the autoscaler's `BelowMin` rule re-floors the pool). Unclassified
+//!   engine errors are conservatively `Transient` — safe because retries
+//!   are budget-bounded.
+//! * **Deadline-budgeted retry** ([`coordinator::ServerConfig`]
+//!   `max_retries`, default 1): a transiently-failed request is
+//!   re-enqueued for a sibling replica unless its budget is spent, its
+//!   deadline has passed or it was cancelled — never re-counted as
+//!   `submitted`, never crossing its QoS class, recorded in the
+//!   `retried` lane. Exhausted budgets resolve as `failed` with the
+//!   typed error.
+//! * **Replica health + auto-ejection** ([`coordinator::ReplicaHealth`],
+//!   [`coordinator::HealthPolicy`]): per-replica consecutive-failure
+//!   streaks and windowed failure rates; `Fleet::tick` quarantines a
+//!   replica over threshold, provisions a warm replacement *first* (the
+//!   pool never dips below its floor), then retires the sick worker via
+//!   the graceful drain protocol. Ejected replicas stay in the registry
+//!   as an incident log.
+//! * **Per-pool circuit breakers** ([`coordinator::BreakerPolicy`],
+//!   Closed → Open → HalfOpen): tick-counted like the autoscaler — no
+//!   wall clock in policy. An open breaker **browns out**, not blacks
+//!   out: Background and Bulk are shed at admission (resolved
+//!   immediately with [`coordinator::SubmitError::BreakerOpen`]) while
+//!   Interactive traffic always flows and doubles as the probe that
+//!   re-closes the breaker. Sheds are excluded from the breaker's own
+//!   error-rate window, so a brownout can never hold itself open.
+//! * **Seeded fault injection** ([`api::FaultPlan`]): deterministic
+//!   error/wedge/fatal/latency schedules wrap any session (compiled
+//!   unconditionally, zero overhead when unused), so every path above is
+//!   reproducible in CI from a fixed seed — same seed, same failures,
+//!   same replies.
 
 #![deny(unsafe_code)]
 

@@ -9,11 +9,11 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
-use microflow::api::{Engine, ReplicaFactory, Session, SessionCache};
-use microflow::cli::{parse_autoscale, parse_engine_mix, Args, USAGE};
+use microflow::api::{Engine, FaultPlan, ReplicaFactory, Session, SessionCache};
+use microflow::cli::{parse_autoscale, parse_chaos, parse_engine_mix, Args, USAGE};
 use microflow::compiler::plan::{CompileOptions, CompiledModel};
 use microflow::coordinator::{
-    AutoscalePolicy, Fleet, PoolSpec, QosClass, QosProfile, Request, ServerConfig,
+    AutoscalePolicy, BreakerState, Fleet, PoolSpec, QosClass, QosProfile, Request, ServerConfig,
 };
 use microflow::format::golden::Golden;
 use microflow::format::mds::MdsDataset;
@@ -286,12 +286,15 @@ fn cmd_audit(args: &Args) -> Result<()> {
 /// `microflow serve <model> [--requests N] [--rate RPS] [--backend B]
 /// [--replicas R] [--engine-mix MIX] [--batch B] [--no-adaptive]
 /// [--paging] [--default-class C] [--shed-after-ms MS]
-/// [--autoscale MIN:MAX] [--slo-p95-ms MS] [--tick-ms MS]` — synthetic
-/// serving load over a replica fleet (typed requests with QoS classes and
-/// optional deadlines), prints per-pool, per-class metrics. With
-/// `--autoscale`, every pool is elastic: the SLO-driven controller ticks
-/// on a fixed cadence during the run, printing each scale decision and
-/// the windowed rates it acted on.
+/// [--autoscale MIN:MAX] [--slo-p95-ms MS] [--tick-ms MS] [--retries N]
+/// [--no-breaker] [--chaos SEED[:P]]` — synthetic serving load over a
+/// replica fleet (typed requests with QoS classes and optional
+/// deadlines), prints per-pool, per-class metrics. With `--autoscale`,
+/// every pool is elastic: the SLO-driven controller ticks on a fixed
+/// cadence during the run, printing each scale decision and the windowed
+/// rates it acted on. With `--chaos`, one replica per pool runs under the
+/// seeded fault injector so the tick loop also exercises retry, health
+/// ejection and the circuit breaker.
 fn cmd_serve(args: &Args) -> Result<()> {
     let name = model_arg(args)?;
     let art = artifacts();
@@ -315,6 +318,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let shed_after: Option<Duration> =
         args.opt("shed-after-ms").map(|v| v.parse::<u64>().context("--shed-after-ms")).transpose()?
             .map(Duration::from_millis);
+    let chaos: Option<(u64, u64)> = args.opt("chaos").map(parse_chaos).transpose()?;
 
     // pool layout: --engine-mix pools, or a single --backend x --replicas
     let mix: Vec<(Engine, usize)> = match args.opt("engine-mix") {
@@ -326,6 +330,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let cache = std::sync::Arc::new(SessionCache::new());
     let mut cfg = ServerConfig { adaptive: !args.flag("no-adaptive"), ..ServerConfig::default() };
     cfg.batcher.max_batch = max_batch;
+    cfg.max_retries = args.opt_usize("retries", 1) as u32;
     // single-pool layouts keep the profile open (Any) so every class is
     // served; multi-pool fleets get the engine-derived QoS profiles the
     // class-aware dispatch routes on
@@ -337,18 +342,25 @@ fn cmd_serve(args: &Args) -> Result<()> {
             // autoscale growth provision through the same factory (and
             // the same warm cache — native growth costs no recompile),
             // so scaled replicas can never drift from the originals
-            let factory = std::sync::Arc::new(
-                ReplicaFactory::new(&mfb_path, engine)
-                    .paging(args.flag("paging"))
-                    .preferred_batch(max_batch)
-                    .cache(&cache),
-            );
+            let mut factory = ReplicaFactory::new(&mfb_path, engine)
+                .paging(args.flag("paging"))
+                .preferred_batch(max_batch)
+                .cache(&cache);
+            if let Some((seed, period)) = chaos {
+                // deterministic chaos: the pool's first replica fails every
+                // `period`-th call, phase-shifted by the seed
+                factory = factory.fault(0, FaultPlan::new(seed).transient_every(period));
+            }
+            let factory = std::sync::Arc::new(factory);
             let sessions: Vec<Session> = factory.provision_n(replicas)?;
             let profile =
                 if single_pool { QosProfile::Any } else { QosProfile::for_engine(engine) };
             let mut spec = PoolSpec::new(format!("{engine}x{replicas}"), sessions)
                 .config(cfg)
                 .profile(profile);
+            if args.flag("no-breaker") {
+                spec = spec.no_breaker();
+            }
             if let Some((min, max)) = autoscale {
                 let mut policy = AutoscalePolicy::new(min, max);
                 if let Some(t) = slo_p95 {
@@ -360,6 +372,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         })
         .collect::<Result<Vec<_>>>()?;
     let fleet = Fleet::start(pools)?;
+    if let Some((seed, period)) = chaos {
+        println!(
+            "chaos: replica 0 of every pool fails every {period}th call \
+             (seed {seed}, transient — retry budget {})",
+            cfg.max_retries
+        );
+    }
     if let Some((min, max)) = autoscale {
         println!(
             "autoscale: each pool elastic in [{min}..{max}] replicas, tick every {}ms{}",
@@ -394,16 +413,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
         shed_after.map(|d| format!("{}ms", d.as_millis())).unwrap_or_else(|| "never".into()),
     );
     // tick helper: run one control step, print every non-hold decision
-    // with the window rates it acted on (windowed, not lifetime — a
-    // long-running session's status stays meaningful)
+    // (scale actions AND health ejections) with the window rates it acted
+    // on, plus any pool whose breaker is away from Closed — windowed, not
+    // lifetime, so a long-running session's status stays meaningful
     let run_tick = |label: &str| {
         for r in fleet.tick() {
-            if r.acted() {
-                println!("autoscale {label}: {r}");
+            if r.acted() || r.breaker.is_some_and(|b| b != BreakerState::Closed) {
+                println!("tick {label}: {r}");
             }
         }
     };
     let mut pending = Vec::new();
+    let mut shed = 0usize;
     let t0 = Instant::now();
     let mut last_tick = Instant::now();
     for i in 0..requests {
@@ -419,34 +440,43 @@ fn cmd_serve(args: &Args) -> Result<()> {
         if let Some(d) = shed_after {
             req = req.with_deadline_in(d);
         }
-        pending.push(fleet.submit(req)?);
-        if autoscale.is_some() && last_tick.elapsed() >= tick_every {
+        match fleet.submit(req) {
+            Ok(t) => pending.push(t),
+            // an open breaker resolves background work at the door —
+            // already counted in the pool's shed lane, no ticket issued
+            Err(e) if format!("{e:#}").contains("shed at admission") => shed += 1,
+            Err(e) => return Err(e),
+        }
+        if (autoscale.is_some() || chaos.is_some()) && last_tick.elapsed() >= tick_every {
             run_tick("load");
             last_tick = Instant::now();
         }
         std::thread::sleep(Duration::from_secs_f64(rng.exp(rate)));
     }
     let mut served = 0usize;
-    let mut shed = 0usize;
+    let mut failed = 0usize;
     for ticket in pending {
         match ticket.wait() {
             Ok(_) => served += 1,
             // with --shed-after-ms, shed requests are an expected outcome
             Err(e) if format!("{e:#}").contains("shed") => shed += 1,
+            // under --chaos, exhausted retry budgets are expected too:
+            // the request resolved with a typed per-replica error
+            Err(e) if format!("{e:#}").contains("failed on replica") => failed += 1,
             Err(e) => return Err(e),
         }
     }
     let wall = t0.elapsed();
-    if autoscale.is_some() {
+    if autoscale.is_some() || chaos.is_some() {
         // idle ticks after the drain: show the pool shrinking back toward
-        // its floor before the final snapshot
+        // its floor (and any open breaker re-closing) before the snapshot
         for _ in 0..8 {
             std::thread::sleep(tick_every);
             run_tick("idle");
         }
     }
     println!(
-        "done in {:.2}s ({served} served, {shed} shed)\n{}",
+        "done in {:.2}s ({served} served, {shed} shed, {failed} failed)\n{}",
         wall.as_secs_f64(),
         fleet.snapshot()
     );

@@ -171,7 +171,7 @@ fn fleet_path_preserves_single_session_outputs() {
         }
         let snap = fleet.snapshot();
         assert_eq!(snap.totals.completed, 24, "case {case}");
-        assert_eq!(snap.totals.errors, 0, "case {case}");
+        assert_eq!(snap.totals.failed, 0, "case {case}");
         fleet.shutdown();
 
         // mixed-engine fleet: replies must stay within the ±1 bound

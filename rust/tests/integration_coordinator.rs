@@ -26,6 +26,7 @@ fn native_server(art: &std::path::Path, name: &str, replicas: usize, max_batch: 
         queue_depth: 64,
         batcher: BatcherConfig { max_batch, max_wait: Duration::from_millis(1) },
         adaptive: false,
+        max_retries: 1,
     };
     Server::start(sessions, cfg).unwrap()
 }
@@ -48,7 +49,7 @@ fn serves_speech_with_correct_classes() {
     assert!(hits as f64 / n as f64 > 0.8, "only {hits}/{n} correct");
     let snap = server.metrics.snapshot();
     assert_eq!(snap.completed, n as u64);
-    assert_eq!(snap.errors, 0);
+    assert_eq!(snap.failed, 0);
     server.shutdown();
 }
 

@@ -30,15 +30,22 @@
 //!   SLO breaches and back down when idle, with bit-exact replies and
 //!   `completed + shed + cancelled == submitted` across concurrent
 //!   scale-up/scale-down events — no accepted request is ever dropped by
-//!   a graceful drain.
+//!   a graceful drain;
+//! * **fault tolerance** heals without loss: a pool whose replicas fail
+//!   by seeded injection (transient errors, a wedged session, a fatal
+//!   death) retries, ejects and re-floors itself while the extended
+//!   identity `completed + shed + cancelled + failed == submitted` holds
+//!   exactly and every completed reply stays bit-exact. (The circuit
+//!   breaker's full Closed→Open→HalfOpen cycle is unit-tested
+//!   deterministically in `coordinator::fleet`.)
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use microflow::api::{Engine, ReplicaFactory, Session, SessionCache};
+use microflow::api::{Engine, FaultPlan, ReplicaFactory, Session, SessionCache};
 use microflow::coordinator::{
-    AutoscalePolicy, BatcherConfig, Fleet, PoolSpec, QosClass, QosProfile, Request, ScaleAction,
-    ServerConfig,
+    AutoscalePolicy, BatcherConfig, Fleet, PoolSpec, QosClass, QosProfile, ReplicaPhase, Request,
+    ScaleAction, ServerConfig,
 };
 use microflow::synth::random_fc_chain;
 use microflow::util::Prng;
@@ -63,6 +70,7 @@ fn mixed_fleet(m: &microflow::format::mfb::MfbModel, queue_depth: usize) -> Flee
         queue_depth,
         batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) },
         adaptive: true,
+        max_retries: 1,
     };
     let pool = |engine: Engine, name: &str| {
         PoolSpec::new(
@@ -136,7 +144,7 @@ fn stress_mixed_fleet_replies_correctly_under_concurrency() {
     let snap = fleet.snapshot();
     assert_eq!(snap.totals.submitted, total, "seed {seed}: submitted\n{snap}");
     assert_eq!(snap.totals.completed, total, "seed {seed}: completed\n{snap}");
-    assert_eq!(snap.totals.errors, 0, "seed {seed}: errors\n{snap}");
+    assert_eq!(snap.totals.failed, 0, "seed {seed}: failed\n{snap}");
     // the per-pool counters are what summed: each pool must be consistent
     for p in &snap.per_pool {
         assert_eq!(
@@ -189,6 +197,7 @@ fn stress_mixed_class_workload_routes_sheds_and_cancels() {
         queue_depth: 32,
         batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) },
         adaptive: true,
+        max_retries: 1,
     };
     let pool = |engine: Engine, name: &str, profile: QosProfile| {
         PoolSpec::new(
@@ -312,7 +321,7 @@ fn stress_mixed_class_workload_routes_sheds_and_cancels() {
     assert_eq!(snap.totals.completed, want.0 + want.1, "seed {seed}\n{snap}");
     assert_eq!(snap.totals.shed, want.2, "seed {seed}: shed must be counted\n{snap}");
     assert_eq!(snap.totals.cancelled, want.3, "seed {seed}: cancelled must be counted\n{snap}");
-    assert_eq!(snap.totals.errors, 0, "seed {seed}\n{snap}");
+    assert_eq!(snap.totals.failed, 0, "seed {seed}\n{snap}");
     assert_eq!(
         snap.totals.completed + snap.totals.shed + snap.totals.cancelled,
         total,
@@ -393,6 +402,7 @@ fn stress_autoscale_bursts_scale_up_and_idle_scales_down_without_losses() {
         queue_depth: 32,
         batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) },
         adaptive: true,
+        max_retries: 1,
     };
     let fleet = Arc::new(
         Fleet::start(vec![PoolSpec::new("native", vec![factory.provision().unwrap()])
@@ -550,7 +560,7 @@ fn stress_autoscale_bursts_scale_up_and_idle_scales_down_without_losses() {
     assert_eq!(snap.totals.completed, want.0, "seed {seed}\n{snap}");
     assert_eq!(snap.totals.shed, want.1, "seed {seed}\n{snap}");
     assert_eq!(snap.totals.cancelled, want.2, "seed {seed}\n{snap}");
-    assert_eq!(snap.totals.errors, 0, "seed {seed}\n{snap}");
+    assert_eq!(snap.totals.failed, 0, "seed {seed}\n{snap}");
     assert_eq!(
         snap.totals.completed + snap.totals.shed + snap.totals.cancelled,
         snap.totals.submitted,
@@ -634,6 +644,199 @@ fn stress_backpressure_never_drops_or_reorders_per_thread() {
     let snap = fleet.snapshot();
     assert_eq!(snap.totals.submitted, 240, "seed {seed}\n{snap}");
     assert_eq!(snap.totals.completed, 240, "seed {seed}\n{snap}");
+    if let Ok(fleet) = Arc::try_unwrap(fleet) {
+        fleet.shutdown();
+    }
+}
+
+/// The fault-tolerance gate: a four-replica elastic pool where three
+/// replicas misbehave by seeded injection — `chaos/1` fails transiently,
+/// `chaos/2` wedges (every call fails after a warm-up), `chaos/3` dies
+/// fatally — under a concurrent client load with the control loop
+/// ticking live.
+///
+/// Deterministic by construction where it matters:
+/// * the extended identity `completed + shed + cancelled + failed ==
+///   submitted` is asserted **exactly** — whatever the interleaving,
+///   every accepted request resolves exactly once (retries re-enqueue
+///   the same request and are counted outside the identity);
+/// * every completed reply is **bit-exact** against the single-session
+///   native truth (replicas are all native; the injector wraps them
+///   without touching payloads);
+/// * only the wedged replica is ever ejected (the transient replica can
+///   never build an ejection streak — consecutive calls cannot both be
+///   casualties of an every-Nth schedule — and the fatal one dies before
+///   the health pass sees it);
+/// * the pool heals back to its floor: the wedged replica is replaced
+///   warm (provision-first, so live never dips below the floor), the
+///   dead one is re-floored by the autoscaler's `BelowMin` rule, and the
+///   warm cache proves no replacement recompiled the model.
+#[test]
+fn stress_chaos_replica_failures_heal_without_loss() {
+    let seed = seed() ^ 0xFA17;
+    eprintln!("chaos stress seed = {seed}");
+    let mut rng = Prng::new(seed);
+    let m = random_fc_chain(&mut rng, 2);
+    let mut native = Session::builder(&m).engine(Engine::MicroFlow).build().unwrap();
+    let ilen = native.input_len();
+    const DISTINCT: usize = 16;
+    let inputs: Vec<Vec<i8>> = (0..DISTINCT).map(|_| rng.i8_vec(ilen)).collect();
+    let truths: Vec<Vec<i8>> = inputs.iter().map(|x| native.run(x).unwrap()).collect();
+
+    let cache = Arc::new(SessionCache::new());
+    // replica 0 healthy; 1 transient (~every 4th call, phase-shifted by
+    // the seed); 2 wedged after 5 calls; 3 fatal on its 8th call.
+    // Replacements provision past index 3, so they are always clean.
+    let factory = Arc::new(
+        ReplicaFactory::new(&m, Engine::MicroFlow)
+            .cache(&cache)
+            .label_prefix("chaos")
+            .fault(1, FaultPlan::new(seed).transient_every(4))
+            .fault(2, FaultPlan::new(seed).wedge_after(5))
+            .fault(3, FaultPlan::new(seed).fatal_on(8)),
+    );
+    let config = ServerConfig {
+        queue_depth: 32,
+        batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) },
+        adaptive: true,
+        max_retries: 2,
+    };
+    // the autoscaler is the healing actuator: floor 4 re-provisions the
+    // fatal death (BelowMin) and the health pass replaces the wedged
+    // replica through the same factory
+    let policy = AutoscalePolicy::new(4, 6).cooldown_ticks(0).idle_ticks_down(u32::MAX);
+    let fleet = Arc::new(
+        Fleet::start(vec![PoolSpec::new("chaos", factory.provision_n(4).unwrap())
+            .config(config)
+            .autoscale(policy, Arc::clone(&factory))
+            .no_breaker()])
+        .unwrap(),
+    );
+
+    const THREADS: usize = 6;
+    const PER_THREAD: usize = 40;
+    let inputs = Arc::new(inputs);
+    let truths = Arc::new(truths);
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let mut tallies = (0u64, 0u64); // (completed, failed)
+    let mut ejected_during_load: Vec<String> = Vec::new();
+    std::thread::scope(|s| {
+        let mut clients = Vec::new();
+        for t in 0..THREADS {
+            let fleet = Arc::clone(&fleet);
+            let inputs = Arc::clone(&inputs);
+            let truths = Arc::clone(&truths);
+            clients.push(s.spawn(move || {
+                let mut trng = Prng::new(seed ^ (t as u64).wrapping_mul(0x9E37_79B9));
+                let mut tally = (0u64, 0u64);
+                for r in 0..PER_THREAD {
+                    let idx = trng.below(DISTINCT as u64) as usize;
+                    match fleet.submit(Request::new(inputs[idx].clone())).and_then(|tk| tk.wait())
+                    {
+                        Ok(got) => {
+                            assert_eq!(
+                                got, truths[idx],
+                                "seed {seed} thread {t} req {r}: completed replies must \
+                                 stay bit-exact under chaos"
+                            );
+                            tally.0 += 1;
+                        }
+                        // an exhausted retry budget resolves as a typed,
+                        // labelled failure — a legitimate outcome here
+                        Err(e) if format!("{e:#}").contains("failed on replica") => tally.1 += 1,
+                        Err(e) => panic!("seed {seed} thread {t} req {r}: {e:#}"),
+                    }
+                }
+                tally
+            }));
+        }
+        // the control loop ticks live against the failing traffic:
+        // health ejection and BelowMin repair race the clients
+        let ticker = {
+            let fleet = Arc::clone(&fleet);
+            let stop = Arc::clone(&stop);
+            s.spawn(move || {
+                let mut ejected = Vec::new();
+                while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                    for r in fleet.tick() {
+                        ejected.extend(r.ejected);
+                    }
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                ejected
+            })
+        };
+        for c in clients {
+            let t = c.join().unwrap();
+            tallies.0 += t.0;
+            tallies.1 += t.1;
+        }
+        stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        ejected_during_load = ticker.join().unwrap();
+    });
+
+    // heal: keep ticking until the wedged replica is ejected, the fatal
+    // one is registered dead and the pool is back at its floor
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let healed = loop {
+        let snap = fleet.snapshot();
+        let p = &snap.per_pool[0];
+        let phase =
+            |label: &str| p.replica_health.iter().find(|h| h.label == label).map(|h| h.phase);
+        if phase("chaos/2") == Some(ReplicaPhase::Ejected)
+            && phase("chaos/3") == Some(ReplicaPhase::Dead)
+            && p.live_replicas() == 4
+            && p.retiring == 0
+        {
+            break snap;
+        }
+        assert!(Instant::now() < deadline, "seed {seed}: pool never healed\n{snap}");
+        for r in fleet.tick() {
+            ejected_during_load.extend(r.ejected);
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    };
+
+    // only the wedged replica is ever ejected — the transient one cannot
+    // streak and stays in service
+    assert!(
+        ejected_during_load.iter().all(|l| l == "chaos/2"),
+        "seed {seed}: unexpected ejections {ejected_during_load:?}"
+    );
+    let p = &healed.per_pool[0];
+    let phase_of = |label: &str| {
+        p.replica_health.iter().find(|h| h.label == label).map(|h| h.phase).unwrap()
+    };
+    assert_eq!(phase_of("chaos/0"), ReplicaPhase::Live, "seed {seed}\n{healed}");
+    assert_eq!(phase_of("chaos/1"), ReplicaPhase::Live, "seed {seed}\n{healed}");
+
+    // exact extended identity: every accepted request resolved once
+    let total = (THREADS * PER_THREAD) as u64;
+    let t = &healed.totals;
+    assert_eq!(t.submitted, total, "seed {seed}\n{healed}");
+    assert_eq!(t.completed, tallies.0, "seed {seed}\n{healed}");
+    assert_eq!(t.failed, tallies.1, "seed {seed}\n{healed}");
+    assert_eq!((t.shed, t.cancelled), (0, 0), "seed {seed}\n{healed}");
+    assert_eq!(
+        t.completed + t.shed + t.cancelled + t.failed,
+        t.submitted,
+        "seed {seed}: every request resolves exactly once\n{healed}"
+    );
+    // the injected faults actually exercised the retry path
+    assert!(
+        t.retried + t.failed > 0,
+        "seed {seed}: chaos injected no observable failures\n{healed}"
+    );
+    // healing reused the warm plan: one bytes miss + one plan miss total,
+    // across the initial four replicas AND every replacement
+    assert_eq!(factory.warm_cache().misses(), 2, "seed {seed}: a replacement recompiled");
+    // serving continues cleanly on the healed pool
+    let idx = 3 % DISTINCT;
+    assert_eq!(
+        fleet.infer(inputs[idx].clone()).unwrap(),
+        truths[idx],
+        "seed {seed}: healed pool must serve bit-exactly"
+    );
     if let Ok(fleet) = Arc::try_unwrap(fleet) {
         fleet.shutdown();
     }
