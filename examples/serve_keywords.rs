@@ -13,18 +13,24 @@
 //! pool and metrics (L3 coordinator). An open-loop Poisson client drives
 //! it with real test-set spectrograms, and the output classes are checked
 //! against the dataset labels (accuracy must match the Table-5 level).
-//! Results are recorded in EXPERIMENTS.md §E10.
+//! Backend 5 then pushes chunked audio frames over the v3 streaming wire
+//! protocol (MFR3) and asserts every pulsed verdict bit-exact against the
+//! one-shot path. Results are recorded in EXPERIMENTS.md §E10.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 use microflow::api::{Engine, ReplicaFactory, Session, SessionCache};
+use microflow::compiler::plan::{CompileOptions, CompiledModel};
+use microflow::compiler::PulsePlan;
 use microflow::coordinator::{
-    AutoscalePolicy, Fleet, PoolSpec, QosClass, QosProfile, Request, Server, ServerConfig, Ticket,
+    AutoscalePolicy, Client, Fleet, Ingress, PoolSpec, QosClass, QosProfile, Request, Router,
+    Server, ServerConfig, StreamHost, StreamHostConfig, Ticket,
 };
 use microflow::eval::accuracy::argmax;
 use microflow::format::mds::MdsDataset;
+use microflow::format::mfb::MfbModel;
 use microflow::util::Prng;
 
 const REQUESTS: usize = 1000;
@@ -269,6 +275,94 @@ fn main() -> Result<()> {
         "elastic pool lost requests: {snap}"
     );
     elastic.shutdown();
+
+    // --- backend 5: streaming over the v3 wire protocol (MFR3). Audio
+    //     arrives one spectrogram row per push through the TCP ingress;
+    //     the coordinator's streaming lane runs the pulsed incremental
+    //     path, and every verdict is asserted bit-exact against a
+    //     one-shot native run over the same materialized window. The
+    //     speech model is used when its geometry admits a pulse plan
+    //     (valid padding, window-covering kernels); otherwise a
+    //     synthetic streaming model stands in so the wire path is
+    //     always exercised.
+    println!();
+    let speech = MfbModel::load(&mfb_path)?;
+    let (stream_name, stream_model) = {
+        let compiled = CompiledModel::compile(&speech, CompileOptions::default())?;
+        match PulsePlan::plan(&compiled) {
+            Ok(_) => ("speech", speech),
+            Err(e) => {
+                println!(
+                    "[stream] speech model is not pulse-streamable ({e:#}); \
+                     using a synthetic streaming stand-in"
+                );
+                ("synth-stream", microflow::synth::stream_conv_chain(&mut Prng::new(42), 2))
+            }
+        }
+    };
+    let compiled = Arc::new(CompiledModel::compile(&stream_model, CompileOptions::default())?);
+    let plan = PulsePlan::plan(&compiled)?;
+    println!(
+        "[stream] model {stream_name}: window {} rows x {} bytes, verdict every {} frame(s), \
+         pulsed work {:.0}% of full recompute",
+        plan.window_rows,
+        plan.frame_len,
+        plan.pulse_frames,
+        plan.savings_ratio(&compiled) * 100.0
+    );
+    let host = Arc::new(StreamHost::start(Arc::clone(&compiled), StreamHostConfig::default())?);
+    let mut router = Router::new();
+    router.add_stream_host(stream_name, Arc::clone(&host));
+    let ingress = Ingress::start("127.0.0.1:0", Arc::new(router))?;
+    let mut client = Client::connect(ingress.addr)?;
+    let id = client.open_stream(stream_name)?;
+
+    // one-shot oracle + the frame source (real spectrogram rows when the
+    // speech model streams, deterministic noise for the stand-in)
+    let mut one_shot = Session::builder(&stream_model).engine(Engine::MicroFlow).build()?;
+    let window_len = plan.window_rows * plan.frame_len;
+    let frames = plan.window_rows * 2 + plan.pulse_frames * 2;
+    let need = frames * plan.frame_len;
+    let mut source: Vec<i8> = if stream_name == "speech" {
+        let qp = one_shot.input_qparams();
+        let mut s = Vec::with_capacity(need + window_len);
+        let mut i = 0usize;
+        while s.len() < need {
+            s.extend(qp.quantize_slice(ds.sample(i % ds.n)));
+            i += 1;
+        }
+        s
+    } else {
+        Prng::new(1234).i8_vec(need)
+    };
+    source.truncate(need);
+
+    let mut history: Vec<i8> = Vec::new();
+    let mut stream_verdicts = 0usize;
+    for frame in source.chunks_exact(plan.frame_len) {
+        history.extend_from_slice(frame);
+        if let Some(v) = client.push_frame(id, frame)? {
+            let expect = one_shot.run(&history[history.len() - window_len..])?;
+            anyhow::ensure!(
+                v == expect,
+                "streamed verdict diverged from the one-shot path at frame {}",
+                history.len() / plan.frame_len
+            );
+            stream_verdicts += 1;
+        }
+    }
+    let counters = client.close_stream(id)?;
+    ingress.shutdown();
+    println!(
+        "[stream] {frames} frames pushed, {stream_verdicts} verdicts, all bit-exact vs one-shot \
+         | submitted {} completed {} shed {} cancelled {} failed {}",
+        counters.submitted, counters.completed, counters.shed, counters.cancelled, counters.failed
+    );
+    anyhow::ensure!(stream_verdicts >= 2, "pulse cadence never fired twice over the wire");
+    anyhow::ensure!(
+        counters.identity_holds() && counters.submitted == frames as u64,
+        "stream lifecycle identity broken: {counters:?}"
+    );
 
     anyhow::ensure!(acc_native > 0.80, "serving accuracy collapsed: {acc_native}");
     println!("\nserve_keywords OK: all layers compose (engine == AOT graph, accuracy {:.1}%)", acc_native * 100.0);

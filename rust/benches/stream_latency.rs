@@ -1,0 +1,129 @@
+//! Stream latency bench — pulsed per-frame push vs a full-window re-run.
+//!
+//! Runs WITHOUT build artifacts: every model of the seeded streaming zoo
+//! (`microflow::synth::stream_zoo`) is compiled, pulse-planned (certified
+//! `V401`–`V405`) and driven to steady state; then the incremental pulsed
+//! push and the full-window replay oracle are timed over identical frame
+//! sequences. Two invariants are enforced, not just reported:
+//!
+//! * the plan's MAC accounting (`sim::cost`) must show the pulsed path
+//!   doing **strictly less** kernel work than a full-window re-run
+//!   (`savings_ratio < 1` — the `V405` obligation, re-asserted here so
+//!   the number in the JSON trail is the checked one);
+//! * pulsed and replay verdicts stay bit-exact through the timed runs.
+//!
+//! Besides the human table, writes machine-readable `BENCH_stream.json`
+//! at the repo root (per-model window/pulse geometry, planned MACs both
+//! ways, measured per-frame latency both ways, speedup) so the streaming
+//! perf trajectory is comparable across PRs. `MICROFLOW_BENCH_SMOKE=1`
+//! cuts iteration counts for CI smoke runs.
+
+use std::sync::Arc;
+
+use microflow::api::{Engine, Session};
+use microflow::bench_support::{black_box, smoke_mode, time_iters};
+use microflow::compiler::plan::{CompileOptions, CompiledModel};
+use microflow::compiler::PulsePlan;
+use microflow::kernels::microkernel::backend;
+use microflow::sim::report::{emit, emit_json, Table};
+use microflow::stream::StreamSession;
+use microflow::synth;
+use microflow::util::json::Json;
+use microflow::util::Prng;
+
+fn main() {
+    println!("kernel backend: {}", backend::active().name());
+    let iters = if smoke_mode() { 3 } else { 100 };
+    let mut t = Table::new(
+        "stream latency: pulsed push vs full-window replay (per frame)",
+        &["model", "window", "pulse", "prefix", "pulsed/frame", "replay/frame", "speedup", "mac ratio"],
+    );
+    let mut rows: Vec<Json> = Vec::new();
+    for (name, m) in synth::stream_zoo(0x57AE) {
+        let compiled = Arc::new(CompiledModel::compile(&m, CompileOptions::default()).unwrap());
+        let plan = PulsePlan::plan(&compiled).unwrap();
+        // the V405 obligation, re-checked where the trail is written: the
+        // pulsed path must be strictly cheaper by the sim::cost model
+        let pulse_macs = plan.pulse_macs(&compiled);
+        let full_macs = plan.full_macs(&compiled);
+        let mac_ratio = plan.savings_ratio(&compiled);
+        assert!(
+            pulse_macs < full_macs,
+            "{name}: pulsed work ({pulse_macs} MACs) must be strictly below a \
+             full-window re-run ({full_macs} MACs)"
+        );
+
+        let mut pulsed = StreamSession::pulsed(compiled.clone()).unwrap();
+        let oracle = Session::builder(&m).engine(Engine::MicroFlow).build().unwrap();
+        let mut replay = StreamSession::replay(oracle, plan.pulse_frames).unwrap();
+        let mut rng = Prng::new(0xBEEF ^ plan.window_rows as u64);
+        // steady state: fill the window on both paths, verdicts bit-exact
+        for _ in 0..plan.window_rows {
+            let f = rng.i8_vec(plan.frame_len);
+            let a = pulsed.push(&f).unwrap();
+            let b = replay.push(&f).unwrap();
+            assert_eq!(a, b, "{name}: warmup diverged");
+        }
+        // one pulse worth of frames, reused for every timed iteration so
+        // both paths chew identical inputs
+        let frames: Vec<Vec<i8>> =
+            (0..plan.pulse_frames).map(|_| rng.i8_vec(plan.frame_len)).collect();
+        let sp = time_iters(2, iters, || {
+            for f in &frames {
+                black_box(pulsed.push(f).unwrap());
+            }
+        });
+        let sr = time_iters(2, iters, || {
+            for f in &frames {
+                black_box(replay.push(f).unwrap());
+            }
+        });
+        // both sessions consumed the same frame count — they are still in
+        // lockstep; prove the timed work stayed bit-exact
+        for f in &frames {
+            assert_eq!(
+                pulsed.push(f).unwrap(),
+                replay.push(f).unwrap(),
+                "{name}: timed runs diverged"
+            );
+        }
+        let pulsed_frame = sp.median / plan.pulse_frames as f64;
+        let replay_frame = sr.median / plan.pulse_frames as f64;
+        let speedup = replay_frame / pulsed_frame.max(f64::MIN_POSITIVE);
+        t.row(vec![
+            name.clone(),
+            plan.window_rows.to_string(),
+            plan.pulse_frames.to_string(),
+            format!("{}/{}", plan.prefix.len(), compiled.steps.len()),
+            format!("{:.2}us", pulsed_frame * 1e6),
+            format!("{:.2}us", replay_frame * 1e6),
+            format!("{speedup:.2}x"),
+            format!("{mac_ratio:.3}"),
+        ]);
+        rows.push(
+            Json::obj()
+                .set("model", name)
+                .set("window_rows", plan.window_rows)
+                .set("frame_len", plan.frame_len)
+                .set("pulse_frames", plan.pulse_frames)
+                .set("prefix_steps", plan.prefix.len())
+                .set("total_steps", compiled.steps.len())
+                .set("state_bytes", plan.total_state_bytes())
+                .set("pulse_macs", pulse_macs as i64)
+                .set("full_macs", full_macs as i64)
+                .set("mac_ratio", mac_ratio)
+                .set("pulsed_frame_s", pulsed_frame)
+                .set("replay_frame_s", replay_frame)
+                .set("speedup", speedup),
+        );
+    }
+    emit("stream_latency", &t);
+    let doc = Json::obj()
+        .set("bench", "stream_latency")
+        .set("kernel_backend", backend::active().name())
+        .set("iters", iters)
+        .set("smoke", smoke_mode())
+        .set("models", rows);
+    emit_json(if smoke_mode() { "BENCH_stream.smoke" } else { "BENCH_stream" }, &doc);
+    println!("stream_latency OK");
+}

@@ -40,7 +40,11 @@
 //!   scale-up sessions from without recompiling;
 //! * [`faulty`] — deterministic, seeded fault injection ([`FaultPlan`]
 //!   wrapping any session): the chaos harness the fault-tolerance layer
-//!   is tested against, compiled unconditionally.
+//!   is tested against, compiled unconditionally;
+//! * [`StreamSession`] (re-exported from [`crate::stream`]) — the
+//!   stateful frame-at-a-time surface over the same engines:
+//!   `push(frame) -> Option<verdict>` with a compiled, certified pulse
+//!   schedule on the native path and any [`Session`] as replay oracle.
 //!
 //! The low-level constructors remain available for engine-internal work
 //! (compilation introspection, the sim memory model), but every serving
@@ -55,6 +59,8 @@ pub use cache::{content_hash64, SessionCache};
 pub use factory::ReplicaFactory;
 pub use faulty::{FailureKind, FaultPlan, FaultySession, InjectedFault};
 pub use sessions::{InterpSession, NativeSession, PjrtSession};
+
+pub use crate::stream::{RingBuffer, StreamSession};
 
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
@@ -205,7 +211,7 @@ impl ModelSource {
     }
 
     /// The parsed container.
-    fn into_model(self) -> Result<MfbModel> {
+    pub(crate) fn into_model(self) -> Result<MfbModel> {
         Ok(match self {
             ModelSource::Path(p) => MfbModel::load(&p)?,
             ModelSource::Bytes(b) => MfbModel::parse(&b)?,

@@ -12,7 +12,8 @@
 //!   certificate report;
 //! * `serve <model>`     — spin up the coordinator under synthetic load,
 //!   as a homogeneous replica set (`--replicas`) or a heterogeneous
-//!   fleet (`--engine-mix microflow:2,tflm:1`).
+//!   fleet (`--engine-mix microflow:2,tflm:1`); `--stream` serves pulsed
+//!   streaming sessions over the v3 `MFR3` frame-per-chunk protocol.
 
 use std::collections::HashMap;
 
@@ -161,7 +162,8 @@ USAGE:
                                            paged and unpaged (CI gate)
   microflow audit   --codes                print the stable error-code table
                                            (V1xx plan / V2xx memory / V3xx
-                                           arithmetic / E4xx decode)
+                                           arithmetic / V4xx pulse streaming /
+                                           E4xx decode)
   microflow serve   <model> [--requests N] [--rate RPS] [--backend E]
                     [--replicas R] [--engine-mix MIX] [--batch B]
                     [--no-adaptive] [--paging] [--default-class C]
@@ -169,6 +171,10 @@ USAGE:
                     [--slo-p95-ms MS] [--tick-ms MS] [--retries N]
                     [--no-breaker] [--chaos SEED[:P]]
                                            serve synthetic load, print metrics
+  microflow serve   <model|synth> --stream [--streams N] [--frames N]
+                    [--stream-replicas R] [--seed N] [--chaos SEED[:P]]
+                                           pulsed streaming over the v3 MFR3
+                                           wire protocol (frame-per-chunk)
 
 serve options (request lifecycle):
   Every request is typed: a QoS class (interactive | bulk | background), an
@@ -227,6 +233,20 @@ serve options (request lifecycle):
   the same model reuse one compiled plan (reported at startup). Metrics are
   reported per pool and per class (p50/p95/p99, shed/cancelled/late);
   long-running status lines use windowed rates, not lifetime counters.
+
+serve --stream options (pulsed streaming):
+  The model's pulse pass is planned and certified (V401-V405), a StreamHost
+  pins each stream to one replica, and N client streams push frames over
+  the v3 MFR3 protocol — one chunk per round, verdicts at the pulse
+  cadence. Every stream's lifecycle identity (completed + shed + cancelled
+  + failed == submitted) is checked at close. <model> may be `synth` for a
+  seeded synthetic streaming model (no artifacts needed).
+  --streams N           concurrent client streams (default 4)
+  --frames N            frames pushed per stream (default 64)
+  --stream-replicas R   pinned stream replicas (default 2)
+  --seed N              synthetic model / frame-noise seed
+  --chaos SEED[:P]      stream replica 0 fails every P-th push: exercises
+                        quarantine, ejection and ring-replay migration
 
   microflow help                           this text
 

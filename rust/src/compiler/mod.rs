@@ -26,10 +26,12 @@ pub mod pack;
 pub mod paging;
 pub mod plan;
 pub mod preprocess;
+pub mod pulse;
 pub mod verify;
 
 pub use memory::MemoryPlan;
 pub use pack::{PackedConvFilters, NR};
 pub use paging::PagePlan;
 pub use plan::{CompiledModel, CompileOptions, Step, StepKind};
+pub use pulse::{verify_pulse, PulsePlan, PulseStep, PulseStepKind};
 pub use verify::{verify, Certificate, StepCert, VerifyError, ERROR_CODE_TABLE};

@@ -1,0 +1,675 @@
+//! Pulse planning: compiled plan → incremental ("pulsed") execution over
+//! a sliding window (the streaming subsystem's compiler half).
+//!
+//! The paper's flagship workload — always-on wake-word detection — slides
+//! a spectrogram window one frame (one `H` row of the `[1,H,W,C]` input)
+//! at a time and re-classifies. Re-running the full window per frame
+//! re-pays every MAC for rows that were already processed. This pass
+//! proves, per layer, which output rows of the previous verdict stay
+//! valid when the window slides, and plans the minimal recompute:
+//!
+//! * The **streamable prefix**: the longest leading run of steps where a
+//!   slide of the input by `delta_in` rows shifts the output by a
+//!   computable `delta_out` rows and leaves every other row bit-identical.
+//!   A geometry step (Conv2D / DepthwiseConv2D / AveragePool2D) qualifies
+//!   iff it has no top padding and no bottom overhang in `H`
+//!   (`pad_top == 0 && (out_h-1)*stride_h + k_h <= in_h`): then output row
+//!   `oy` reads input rows `[oy*stride_h, oy*stride_h + k_h)`, so shifting
+//!   the input by `stride_h` rows shifts the output by exactly one row.
+//!   Pointwise steps (Relu / Relu6) shift trivially. Anything else
+//!   (FullyConnected, Reshape, Softmax) mixes rows and ends the prefix.
+//! * **Per-step state**: each geometry step keeps the trailing
+//!   `state_rows = need_rows + underhang` rows of its *input*, where
+//!   `need_rows = (delta_out-1)*stride_h + k_h` is what the incremental
+//!   sub-kernel reads and `underhang = in_h - ((out_h-1)*stride_h + k_h)`
+//!   is the bottom margin the full geometry never consumes. The sub-kernel
+//!   reads state rows `[0, need_rows)` — the newest `underhang` rows only
+//!   become visible after the next slide.
+//! * The **carry**: the full output of the last prefix step, shifted by
+//!   `carry_delta` rows per pulse and re-fed to the non-streamable tail,
+//!   which runs full-window each pulse (it is where the model mixes the
+//!   whole window anyway, and is typically the cheap part).
+//! * The **cadence**: one pulse consumes `pulse_frames = Π stride_h`
+//!   input rows (product over the prefix's geometry steps), so every
+//!   per-step `delta` divides exactly and the carry advances by one row.
+//!
+//! Every plan self-certifies before it is returned: [`verify_pulse`]
+//! re-derives the whole accounting from the [`CompiledModel`] and rejects
+//! with the `V4xx` family on any mismatch, including `V405` — the pulsed
+//! path must do *strictly less* kernel work than a full-window re-run.
+
+use anyhow::{anyhow, bail, Result};
+
+use super::plan::{CompiledModel, StepKind};
+use super::verify::VerifyError;
+use crate::kernels::view::ConvGeometry;
+use crate::sim::cost::{microflow_step_macs, microflow_step_macs_rows};
+
+/// How a prefix step participates in a pulse.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PulseStepKind {
+    /// Spatial step (Conv2D / DepthwiseConv2D / AveragePool2D): owns a
+    /// planned input-state region and re-runs a `delta_out`-row
+    /// sub-geometry per pulse.
+    Geo,
+    /// Pointwise step (Relu / Relu6): stateless, transforms the delta
+    /// rows in flight.
+    Pointwise,
+}
+
+/// Per-step slice of the pulse plan (delay/overlap accounting).
+#[derive(Clone, Copy, Debug)]
+pub struct PulseStep {
+    /// Index into `compiled.steps`.
+    pub step: usize,
+    pub kind: PulseStepKind,
+    /// Rows entering / leaving this step per pulse.
+    pub delta_in: usize,
+    pub delta_out: usize,
+    /// Elements per input / output row at this depth.
+    pub in_row: usize,
+    pub out_row: usize,
+    /// Input rows the incremental sub-kernel reads (geo steps; 0 for
+    /// pointwise).
+    pub need_rows: usize,
+    /// Input rows retained in this step's state region
+    /// (`need_rows + underhang`; 0 for pointwise).
+    pub state_rows: usize,
+}
+
+/// A certified pulse plan: everything the streaming executor needs, plus
+/// the planned state-region accounting the verifier signs off on.
+#[derive(Clone, Debug)]
+pub struct PulsePlan {
+    /// Sliding-window height (input `H`): frames needed before the first
+    /// verdict.
+    pub window_rows: usize,
+    /// Elements per frame (input `W * C`).
+    pub frame_len: usize,
+    /// Input rows consumed per pulse (verdict cadence after warmup).
+    pub pulse_frames: usize,
+    /// Streamable prefix, one entry per step in `[0, tail_start)`.
+    pub prefix: Vec<PulseStep>,
+    /// First step of the non-streamable tail (ran full-window per pulse);
+    /// `compiled.steps.len()` when the whole model streams.
+    pub tail_start: usize,
+    /// Carried activation (full output of the last prefix step): rows,
+    /// elements per row, and rows appended per pulse.
+    pub carry_rows: usize,
+    pub carry_row: usize,
+    pub carry_delta: usize,
+    /// Planned ring-buffer bytes (the input window itself).
+    pub ring_bytes: usize,
+    /// Planned per-step state bytes (geo states + carry), disjoint from
+    /// the ring.
+    pub state_bytes: usize,
+}
+
+/// Geometry of the three spatial step kinds, if any.
+fn step_geo(kind: &StepKind) -> Option<ConvGeometry> {
+    match kind {
+        StepKind::Conv2D { geo, .. }
+        | StepKind::DepthwiseConv2D { geo, .. }
+        | StepKind::AveragePool2D { geo, .. } => Some(*geo),
+        _ => None,
+    }
+}
+
+fn is_pointwise(kind: &StepKind) -> bool {
+    matches!(kind, StepKind::Relu { .. } | StepKind::Relu6 { .. })
+}
+
+/// A geometry step shifts cleanly iff the window's top edge is real data
+/// (no synthetic top padding rows that would stop being synthetic after a
+/// slide) and the bottom row of the output consumes rows that exist
+/// (shift-invariance of the row map `oy -> [oy*s, oy*s + k)`).
+fn geo_streamable(g: &ConvGeometry) -> bool {
+    g.pad_top == 0 && (g.out_h - 1) * g.stride_h + g.k_h <= g.in_h
+}
+
+impl PulsePlan {
+    /// Derive (and self-certify) the pulse plan for a compiled model.
+    ///
+    /// Errors when the model has no streamable prefix (rank-≠3 input, a
+    /// non-streamable first step, or a prefix whose incremental re-run
+    /// would not beat the full window — `V405`).
+    pub fn plan(compiled: &CompiledModel) -> Result<PulsePlan> {
+        let shape = &compiled.input_shape;
+        let [h, w, c] = shape[..] else {
+            bail!("streaming needs a rank-3 [H,W,C] input, got {shape:?}");
+        };
+        let (window_rows, frame_len) = (h, w * c);
+        if window_rows == 0 || frame_len == 0 {
+            bail!("degenerate input shape {shape:?}");
+        }
+
+        // 1. Longest candidate prefix by shift-invariance classification,
+        //    tracking the row structure through the chain.
+        let mut classes: Vec<Option<ConvGeometry>> = Vec::new();
+        let (mut rows, mut row) = (window_rows, frame_len);
+        for step in &compiled.steps {
+            if let Some(g) = step_geo(&step.kind) {
+                // the row chain must line up with the planner's view of
+                // the activation (guards against exotic reshapes upstream)
+                if !(geo_streamable(&g) && g.in_h == rows && g.in_w * g.in_c == row) {
+                    break;
+                }
+                rows = g.out_h;
+                row = step.out_len / g.out_h;
+                classes.push(Some(g));
+            } else if is_pointwise(&step.kind) {
+                classes.push(None);
+            } else {
+                break;
+            }
+        }
+
+        // 2. Shrink until the delta chain is feasible: the pulse size is
+        //    the product of the prefix's H-strides, and every step's
+        //    delta must fit its geometry. Dropping the trailing geometry
+        //    step shrinks the product, so this converges.
+        let mut end = classes.len();
+        let prefix = loop {
+            if end == 0 || !classes[..end].iter().any(Option::is_some) {
+                bail!("model has no streamable prefix (step 0 mixes rows or pads the top edge)");
+            }
+            let pulse_frames: usize =
+                classes[..end].iter().flatten().map(|g| g.stride_h).product();
+            match build_prefix(compiled, &classes[..end], window_rows, frame_len, pulse_frames) {
+                Some(prefix) => break prefix,
+                None => {
+                    // drop the last geometry step and retry
+                    end = classes[..end].iter().rposition(Option::is_some).unwrap();
+                }
+            }
+        };
+
+        let tail_start = prefix.len();
+        let last = prefix.last().unwrap();
+        let last_step = &compiled.steps[last.step];
+        let (carry_row, carry_delta) = (last.out_row, last.delta_out);
+        let carry_rows = last_step.out_len / carry_row;
+        let state_bytes = prefix
+            .iter()
+            .map(|ps| ps.state_rows * ps.in_row)
+            .sum::<usize>()
+            + last_step.out_len;
+        let pulse_frames = prefix[0].delta_in;
+
+        let plan = PulsePlan {
+            window_rows,
+            frame_len,
+            pulse_frames,
+            prefix,
+            tail_start,
+            carry_rows,
+            carry_row,
+            carry_delta,
+            ring_bytes: window_rows * frame_len,
+            state_bytes,
+        };
+        verify_pulse(compiled, &plan)
+            .map_err(|e| anyhow!("pulse plan failed certification: {e}"))?;
+        Ok(plan)
+    }
+
+    /// MACs one pulse pays: `delta_out`-row sub-runs over the prefix plus
+    /// a full-window tail re-run. Same cost basis as
+    /// [`microflow_step_macs`] so the `V405` comparison is apples-to-apples.
+    pub fn pulse_macs(&self, compiled: &CompiledModel) -> u64 {
+        let prefix: u64 = self
+            .prefix
+            .iter()
+            .map(|ps| {
+                let step = &compiled.steps[ps.step];
+                microflow_step_macs_rows(&step.kind, ps.delta_out, ps.delta_out * ps.out_row)
+            })
+            .sum();
+        let tail: u64 = compiled.steps[self.tail_start..]
+            .iter()
+            .map(|s| microflow_step_macs(&s.kind, s.out_len))
+            .sum();
+        prefix + tail
+    }
+
+    /// MACs a full-window re-run pays (the one-shot baseline).
+    pub fn full_macs(&self, compiled: &CompiledModel) -> u64 {
+        compiled.steps.iter().map(|s| microflow_step_macs(&s.kind, s.out_len)).sum()
+    }
+
+    /// `pulse_macs / full_macs` — strictly below 1.0 for every certified
+    /// plan (`V405`).
+    pub fn savings_ratio(&self, compiled: &CompiledModel) -> f64 {
+        self.pulse_macs(compiled) as f64 / self.full_macs(compiled) as f64
+    }
+
+    /// Total planned state region: ring + per-step states + carry.
+    pub fn total_state_bytes(&self) -> usize {
+        self.ring_bytes + self.state_bytes
+    }
+}
+
+/// Forward delta-chain construction over a candidate prefix. `None` when
+/// some step's delta exceeds its geometry (caller shrinks and retries).
+fn build_prefix(
+    compiled: &CompiledModel,
+    classes: &[Option<ConvGeometry>],
+    window_rows: usize,
+    frame_len: usize,
+    pulse_frames: usize,
+) -> Option<Vec<PulseStep>> {
+    if pulse_frames == 0 || pulse_frames > window_rows {
+        return None;
+    }
+    let mut prefix = Vec::with_capacity(classes.len());
+    let mut delta = pulse_frames;
+    let mut row = frame_len;
+    for (i, class) in classes.iter().enumerate() {
+        let step = &compiled.steps[i];
+        match class {
+            Some(g) => {
+                let delta_in = delta;
+                // exact by construction: delta_in is the product of the
+                // H-strides of this and every later geometry step
+                let delta_out = delta_in / g.stride_h;
+                if delta_in > g.in_h || delta_out > g.out_h {
+                    return None;
+                }
+                let need_rows = (delta_out - 1) * g.stride_h + g.k_h;
+                let underhang = g.in_h - ((g.out_h - 1) * g.stride_h + g.k_h);
+                let out_row = step.out_len / g.out_h;
+                prefix.push(PulseStep {
+                    step: i,
+                    kind: PulseStepKind::Geo,
+                    delta_in,
+                    delta_out,
+                    in_row: row,
+                    out_row,
+                    need_rows,
+                    state_rows: need_rows + underhang,
+                });
+                delta = delta_out;
+                row = out_row;
+            }
+            None => prefix.push(PulseStep {
+                step: i,
+                kind: PulseStepKind::Pointwise,
+                delta_in: delta,
+                delta_out: delta,
+                in_row: row,
+                out_row: row,
+                need_rows: 0,
+                state_rows: 0,
+            }),
+        }
+    }
+    Some(prefix)
+}
+
+/// Static certification of a pulse plan against its compiled model: the
+/// `V4xx` obligation family. Re-derives every quantity from the plan
+/// steps and rejects on any mismatch, so a corrupted or hand-rolled
+/// [`PulsePlan`] can never reach the streaming executor.
+///
+/// * `V401` — streamable-prefix classification unsound (padding /
+///   overhang / row-chain misalignment / non-contiguous prefix)
+/// * `V402` — pulse cadence broken (stride product, delta divisibility,
+///   window bounds)
+/// * `V403` — state-region sizing or disjoint accounting mismatch
+/// * `V404` — state-shift / carry accounting broken
+/// * `V405` — pulsed work not strictly less than a full-window re-run
+pub fn verify_pulse(compiled: &CompiledModel, plan: &PulsePlan) -> Result<(), VerifyError> {
+    let err = |code: &'static str, step: Option<usize>, msg: String| {
+        Err(VerifyError::new(code, step, msg))
+    };
+
+    // ---- V401: prefix classification + row chain --------------------
+    let [h, w, c] = compiled.input_shape[..] else {
+        return err(
+            "V401",
+            None,
+            format!("input shape {:?} is not rank-3 [H,W,C]", compiled.input_shape),
+        );
+    };
+    if plan.window_rows != h || plan.frame_len != w * c {
+        return err(
+            "V401",
+            None,
+            format!(
+                "window {}x{} disagrees with input [{h},{w},{c}]",
+                plan.window_rows, plan.frame_len
+            ),
+        );
+    }
+    if plan.prefix.is_empty() || plan.tail_start != plan.prefix.len() {
+        return err(
+            "V401",
+            None,
+            format!("prefix len {} vs tail_start {}", plan.prefix.len(), plan.tail_start),
+        );
+    }
+    if plan.tail_start > compiled.steps.len() {
+        return err("V401", None, format!("tail_start {} beyond plan", plan.tail_start));
+    }
+    let (mut rows, mut row) = (plan.window_rows, plan.frame_len);
+    let mut geo_seen = false;
+    for (pos, ps) in plan.prefix.iter().enumerate() {
+        if ps.step != pos {
+            return err("V401", Some(pos), format!("prefix not contiguous at slot {pos}"));
+        }
+        let step = &compiled.steps[ps.step];
+        match (step_geo(&step.kind), ps.kind) {
+            (Some(g), PulseStepKind::Geo) => {
+                if !geo_streamable(&g) {
+                    return err(
+                        "V401",
+                        Some(pos),
+                        format!(
+                            "{} pads the top edge or overhangs the bottom (pad_top={}, \
+                             rows {} of {})",
+                            step.kind.name(),
+                            g.pad_top,
+                            (g.out_h - 1) * g.stride_h + g.k_h,
+                            g.in_h
+                        ),
+                    );
+                }
+                if g.in_h != rows || g.in_w * g.in_c != row || ps.in_row != row {
+                    return err(
+                        "V401",
+                        Some(pos),
+                        format!(
+                            "row chain misaligned: geometry {}x{} vs chained {rows}x{row}",
+                            g.in_h,
+                            g.in_w * g.in_c
+                        ),
+                    );
+                }
+                let out_row = step.out_len / g.out_h;
+                if ps.out_row != out_row {
+                    return err(
+                        "V401",
+                        Some(pos),
+                        format!("out_row {} vs derived {out_row}", ps.out_row),
+                    );
+                }
+                rows = g.out_h;
+                row = out_row;
+                geo_seen = true;
+            }
+            (None, PulseStepKind::Pointwise) if is_pointwise(&step.kind) => {
+                if ps.in_row != row || ps.out_row != row {
+                    return err("V401", Some(pos), "pointwise step changes row width".into());
+                }
+            }
+            _ => {
+                return err(
+                    "V401",
+                    Some(pos),
+                    format!("{} misclassified as {:?}", step.kind.name(), ps.kind),
+                );
+            }
+        }
+    }
+    if !geo_seen {
+        return err("V401", None, "prefix has no geometry step (no recompute savings)".into());
+    }
+
+    // ---- V402: pulse cadence ----------------------------------------
+    let stride_product: usize = plan
+        .prefix
+        .iter()
+        .filter_map(|ps| step_geo(&compiled.steps[ps.step].kind).map(|g| g.stride_h))
+        .product();
+    if plan.pulse_frames != stride_product {
+        return err(
+            "V402",
+            None,
+            format!("pulse_frames {} != stride product {stride_product}", plan.pulse_frames),
+        );
+    }
+    if plan.pulse_frames == 0 || plan.pulse_frames > plan.window_rows {
+        return err(
+            "V402",
+            None,
+            format!("pulse of {} frames outside window {}", plan.pulse_frames, plan.window_rows),
+        );
+    }
+    let mut delta = plan.pulse_frames;
+    for (pos, ps) in plan.prefix.iter().enumerate() {
+        if ps.delta_in != delta {
+            return err(
+                "V402",
+                Some(pos),
+                format!("delta chain broken: delta_in {} vs carried {delta}", ps.delta_in),
+            );
+        }
+        match step_geo(&compiled.steps[ps.step].kind) {
+            Some(g) => {
+                if ps.delta_in % g.stride_h != 0 || ps.delta_out != ps.delta_in / g.stride_h {
+                    return err(
+                        "V402",
+                        Some(pos),
+                        format!(
+                            "delta {} does not divide by stride {} into {}",
+                            ps.delta_in, g.stride_h, ps.delta_out
+                        ),
+                    );
+                }
+                if ps.delta_in > g.in_h || ps.delta_out > g.out_h {
+                    return err(
+                        "V402",
+                        Some(pos),
+                        format!(
+                            "delta {}→{} exceeds geometry {}→{}",
+                            ps.delta_in, ps.delta_out, g.in_h, g.out_h
+                        ),
+                    );
+                }
+            }
+            None => {
+                if ps.delta_out != ps.delta_in {
+                    return err("V402", Some(pos), "pointwise step changes delta".into());
+                }
+            }
+        }
+        delta = ps.delta_out;
+    }
+
+    // ---- V403: state-region sizing + disjoint accounting ------------
+    let mut state_sum = 0usize;
+    for (pos, ps) in plan.prefix.iter().enumerate() {
+        match step_geo(&compiled.steps[ps.step].kind) {
+            Some(g) => {
+                let need = (ps.delta_out - 1) * g.stride_h + g.k_h;
+                let underhang = g.in_h - ((g.out_h - 1) * g.stride_h + g.k_h);
+                if ps.need_rows != need {
+                    return err(
+                        "V403",
+                        Some(pos),
+                        format!("need_rows {} vs derived {need}", ps.need_rows),
+                    );
+                }
+                if ps.state_rows != need + underhang || ps.state_rows > g.in_h {
+                    return err(
+                        "V403",
+                        Some(pos),
+                        format!(
+                            "state_rows {} vs derived {} (in_h {})",
+                            ps.state_rows,
+                            need + underhang,
+                            g.in_h
+                        ),
+                    );
+                }
+                state_sum += ps.state_rows * ps.in_row;
+            }
+            None => {
+                if ps.state_rows != 0 || ps.need_rows != 0 {
+                    return err("V403", Some(pos), "pointwise step claims state rows".into());
+                }
+            }
+        }
+    }
+    let last = plan.prefix.last().unwrap();
+    let carry_len = compiled.steps[last.step].out_len;
+    state_sum += carry_len;
+    if plan.state_bytes != state_sum {
+        return err(
+            "V403",
+            None,
+            format!(
+                "state region accounting {} != sum of disjoint regions {state_sum}",
+                plan.state_bytes
+            ),
+        );
+    }
+    if plan.ring_bytes != plan.window_rows * plan.frame_len {
+        return err(
+            "V403",
+            None,
+            format!(
+                "ring bytes {} != window {}x{}",
+                plan.ring_bytes, plan.window_rows, plan.frame_len
+            ),
+        );
+    }
+
+    // ---- V404: shift / carry accounting ------------------------------
+    if plan.carry_row != last.out_row
+        || plan.carry_rows * plan.carry_row != carry_len
+        || plan.carry_delta != last.delta_out
+        || plan.carry_delta > plan.carry_rows
+    {
+        return err(
+            "V404",
+            Some(last.step),
+            format!(
+                "carry {}x{} (+{}/pulse) disagrees with last prefix output len {carry_len} \
+                 (delta_out {})",
+                plan.carry_rows, plan.carry_row, plan.carry_delta, last.delta_out
+            ),
+        );
+    }
+    for (pos, ps) in plan.prefix.iter().enumerate() {
+        if ps.kind == PulseStepKind::Geo && ps.state_rows == 0 {
+            return err("V404", Some(pos), "geometry step with empty state cannot shift".into());
+        }
+    }
+
+    // ---- V405: strict recompute savings ------------------------------
+    let (pulse, full) = (plan.pulse_macs(compiled), plan.full_macs(compiled));
+    if pulse >= full {
+        return err(
+            "V405",
+            None,
+            format!("pulsed work {pulse} MACs is not strictly below full-window {full} MACs"),
+        );
+    }
+
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::synth;
+    use crate::util::Prng;
+
+    fn compiled(m: &crate::format::mfb::MfbModel) -> CompiledModel {
+        CompiledModel::compile(m, Default::default()).unwrap()
+    }
+
+    fn stream_model(seed: u64) -> CompiledModel {
+        compiled(&synth::stream_conv_chain(&mut Prng::new(seed), 2))
+    }
+
+    #[test]
+    fn plans_certify_over_the_stream_zoo() {
+        for (name, m) in synth::stream_zoo(20260731) {
+            let c = compiled(&m);
+            let p = PulsePlan::plan(&c).unwrap_or_else(|e| panic!("{name}: {e:#}"));
+            assert!(p.pulse_frames >= 1, "{name}");
+            assert!(!p.prefix.is_empty(), "{name}");
+            assert!(
+                p.savings_ratio(&c) < 1.0,
+                "{name}: ratio {}",
+                p.savings_ratio(&c)
+            );
+            verify_pulse(&c, &p).unwrap_or_else(|e| panic!("{name}: {e}"));
+        }
+    }
+
+    #[test]
+    fn delta_chain_ends_at_the_carry() {
+        let c = stream_model(11);
+        let p = PulsePlan::plan(&c).unwrap();
+        assert_eq!(p.prefix[0].delta_in, p.pulse_frames);
+        assert_eq!(p.prefix.last().unwrap().delta_out, p.carry_delta);
+        for pair in p.prefix.windows(2) {
+            assert_eq!(pair[0].delta_out, pair[1].delta_in);
+        }
+    }
+
+    #[test]
+    fn fc_models_have_no_streamable_prefix() {
+        let c = compiled(&synth::random_fc_chain(&mut Prng::new(3), 2));
+        let e = PulsePlan::plan(&c).unwrap_err().to_string();
+        assert!(e.contains("rank-3"), "{e}");
+    }
+
+    #[test]
+    fn no_savings_plan_is_rejected_with_v405() {
+        // a conv whose kernel spans the whole window recomputes everything
+        // every pulse: structurally consistent, zero savings
+        let c = compiled(&synth::stream_full_height_conv(&mut Prng::new(5)));
+        let e = PulsePlan::plan(&c).unwrap_err().to_string();
+        assert!(e.contains("V405"), "{e}");
+    }
+
+    #[test]
+    fn tampered_cadence_is_rejected_with_v402() {
+        let c = stream_model(7);
+        let mut p = PulsePlan::plan(&c).unwrap();
+        p.pulse_frames += 1;
+        let e = verify_pulse(&c, &p).unwrap_err();
+        assert_eq!(e.code, "V402", "{e}");
+    }
+
+    #[test]
+    fn tampered_state_rows_are_rejected_with_v403() {
+        let c = stream_model(7);
+        let mut p = PulsePlan::plan(&c).unwrap();
+        let geo = p.prefix.iter().position(|ps| ps.kind == PulseStepKind::Geo).unwrap();
+        p.prefix[geo].state_rows += 1;
+        let e = verify_pulse(&c, &p).unwrap_err();
+        assert_eq!(e.code, "V403", "{e}");
+    }
+
+    #[test]
+    fn tampered_state_accounting_is_rejected_with_v403() {
+        let c = stream_model(9);
+        let mut p = PulsePlan::plan(&c).unwrap();
+        p.state_bytes += 1;
+        let e = verify_pulse(&c, &p).unwrap_err();
+        assert_eq!(e.code, "V403", "{e}");
+    }
+
+    #[test]
+    fn tampered_carry_is_rejected_with_v404() {
+        let c = stream_model(13);
+        let mut p = PulsePlan::plan(&c).unwrap();
+        p.carry_rows += 1;
+        let e = verify_pulse(&c, &p).unwrap_err();
+        assert_eq!(e.code, "V404", "{e}");
+    }
+
+    #[test]
+    fn misaligned_prefix_is_rejected_with_v401() {
+        let c = stream_model(17);
+        let mut p = PulsePlan::plan(&c).unwrap();
+        p.prefix[0].step += 1;
+        let e = verify_pulse(&c, &p).unwrap_err();
+        assert_eq!(e.code, "V401", "{e}");
+    }
+}

@@ -64,6 +64,11 @@ V302  arith   requantization multiplier non-finite or non-positive
 V303  arith   folded bias constant non-finite
 V304  arith   activation clamp bounds inverted
 V305  arith   folded constant vectors sized unlike the output channels
+V401  pulse   streamable-prefix classification unsound (padding/overhang/row chain)
+V402  pulse   pulse cadence broken (stride product / delta divisibility / window)
+V403  pulse   state-region sizing or disjoint accounting mismatch
+V404  pulse   state-shift / carry accounting broken
+V405  pulse   pulsed work not strictly less than a full-window re-run
 E401  decode  bad magic or unsupported container version
 E402  decode  truncated input
 E403  decode  invalid UTF-8 in a string field
@@ -84,7 +89,7 @@ pub struct VerifyError {
 }
 
 impl VerifyError {
-    fn new(code: &'static str, step: impl Into<Option<usize>>, msg: String) -> Self {
+    pub(crate) fn new(code: &'static str, step: impl Into<Option<usize>>, msg: String) -> Self {
         VerifyError { code, step: step.into(), msg }
     }
 }
@@ -984,7 +989,7 @@ mod tests {
 
     #[test]
     fn error_code_table_covers_every_family() {
-        for code in ["V101", "V107", "V201", "V205", "V301", "V305", "E401", "E408"] {
+        for code in ["V101", "V107", "V201", "V205", "V301", "V305", "V401", "V405", "E401", "E408"] {
             assert!(ERROR_CODE_TABLE.contains(code), "{code} missing from table");
         }
     }

@@ -4,7 +4,7 @@
 //!
 //! ## Wire protocol (little-endian, length-prefixed)
 //!
-//! Two request frames are accepted on the same port:
+//! Three request frames are accepted on the same port:
 //!
 //! ```text
 //! v1 request: magic "MFRQ" | u16 model-name len | name bytes
@@ -16,6 +16,19 @@
 //! response:   magic "MFRS" | u8 status (0 ok, 1 error)
 //!             | u32 payload len | i8 payload (quantized output)
 //!               -- or, on error, utf8 message bytes
+//!
+//! v3 stream:  magic "MFR3" | u8 op
+//!   op 0 open:  u16 model-name len | name bytes
+//!   op 1 push:  u64 stream id | u32 payload len | i8 frame (one chunk)
+//!   op 2 close: u64 stream id
+//! v3 reply:   magic "MFS3" | u8 status | u32 payload len | payload
+//!   status 0 verdict    (payload: i8 quantized output)
+//!   status 1 error      (payload: utf8 message)
+//!   status 2 no-verdict (payload empty: warmup or mid-pulse)
+//!   status 3 opened     (payload: u64 stream id)
+//!   status 4 closed     (payload: six u64 lifecycle counters —
+//!                        submitted, completed, shed, cancelled, failed,
+//!                        verdicts)
 //! ```
 //!
 //! A v1 frame is served with the configured
@@ -23,6 +36,13 @@
 //! clients round-trip unchanged against the v2 ingress. A request shed for
 //! a missed deadline (or cancelled server-side) comes back as a status-1
 //! error frame naming the cause.
+//!
+//! The v3 frames drive the streaming lane ([`super::StreamHost`] via the
+//! router's stream registry): one frame-per-chunk `push` per round, many
+//! rounds per connection, interleaving freely with v1/v2 rounds. Every
+//! declared payload length (all three versions) is bounds-checked against
+//! [`IngressConfig::max_payload`] **before** any allocation; an oversized
+//! declaration earns a typed error frame, never a buffer.
 //!
 //! One request per connection round (connections may pipeline rounds
 //! sequentially). The accept loop hands each connection to a handler
@@ -44,6 +64,7 @@ use anyhow::{bail, Context, Result};
 
 use super::request::{QosClass, Request};
 use super::router::Router;
+use super::stream::{StreamCounters, StreamPush};
 
 /// Ingress-side request-lifecycle defaults, applied to frames that do not
 /// carry their own class/deadline (all v1 frames; v2 frames with
@@ -57,12 +78,20 @@ pub struct IngressConfig {
     /// Deadline applied when a frame carries none: requests still queued
     /// past it are shed.
     pub default_deadline: Option<Duration>,
+    /// Largest declared payload (bytes) any frame version may carry;
+    /// checked before allocating the receive buffer. Oversized frames
+    /// earn a typed error reply.
+    pub max_payload: usize,
 }
 
 impl Default for IngressConfig {
     fn default() -> Self {
         // Bulk + no deadline: exactly the legacy ingress semantics
-        IngressConfig { default_class: QosClass::Bulk, default_deadline: None }
+        IngressConfig {
+            default_class: QosClass::Bulk,
+            default_deadline: None,
+            max_payload: 16 * 1024 * 1024,
+        }
     }
 }
 
@@ -153,6 +182,12 @@ fn read_u32(stream: &mut TcpStream) -> std::io::Result<u32> {
     Ok(u32::from_le_bytes(b))
 }
 
+fn read_u64(stream: &mut TcpStream) -> std::io::Result<u64> {
+    let mut b = [0u8; 8];
+    stream.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
 fn handle_connection(mut stream: TcpStream, router: &Router, cfg: IngressConfig) -> Result<()> {
     stream.set_nodelay(true).ok();
     loop {
@@ -170,6 +205,13 @@ fn handle_connection(mut stream: TcpStream, router: &Router, cfg: IngressConfig)
                 return Ok(())
             }
             Err(e) => return Err(e.into()),
+        }
+        // v3 rounds route to the streaming lane and pipeline like the rest
+        if &magic == b"MFR3" {
+            if handle_stream_op(&mut stream, router, cfg)? {
+                continue;
+            }
+            return Ok(());
         }
         // lifecycle header: v2 carries class + deadline, v1 uses defaults
         let (class, deadline_ms) = match &magic {
@@ -199,9 +241,13 @@ fn handle_connection(mut stream: TcpStream, router: &Router, cfg: IngressConfig)
         let mut name = vec![0u8; name_len];
         stream.read_exact(&mut name)?;
         let name = String::from_utf8(name).context("model name utf8")?;
+        // bounds-check the declared length BEFORE allocating the buffer
         let payload_len = read_u32(&mut stream)? as usize;
-        if payload_len > 16 * 1024 * 1024 {
-            write_error(&mut stream, "payload too large")?;
+        if payload_len > cfg.max_payload {
+            write_error(
+                &mut stream,
+                &format!("payload of {payload_len} bytes exceeds limit {}", cfg.max_payload),
+            )?;
             return Ok(());
         }
         let mut payload = vec![0u8; payload_len];
@@ -240,6 +286,106 @@ fn write_error(stream: &mut TcpStream, msg: &str) -> Result<()> {
     stream.write_all(msg.as_bytes())?;
     stream.flush()?;
     Ok(())
+}
+
+/// v3 reply statuses (`MFS3`).
+const S3_VERDICT: u8 = 0;
+const S3_ERROR: u8 = 1;
+const S3_NO_VERDICT: u8 = 2;
+const S3_OPENED: u8 = 3;
+const S3_CLOSED: u8 = 4;
+
+fn write_stream_reply(stream: &mut TcpStream, status: u8, payload: &[u8]) -> Result<()> {
+    stream.write_all(b"MFS3")?;
+    stream.write_all(&[status])?;
+    stream.write_all(&(payload.len() as u32).to_le_bytes())?;
+    stream.write_all(payload)?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// One v3 round (the magic has been consumed). Returns `true` to keep the
+/// connection pipelining, `false` to drop it (malformed op).
+fn handle_stream_op(stream: &mut TcpStream, router: &Router, cfg: IngressConfig) -> Result<bool> {
+    let mut op = [0u8; 1];
+    stream.read_exact(&mut op)?;
+    match op[0] {
+        0 => {
+            // open: u16 name len | name
+            let name_len = read_u16(stream)? as usize;
+            if name_len > 256 {
+                write_stream_reply(stream, S3_ERROR, b"model name too long")?;
+                return Ok(false);
+            }
+            let mut name = vec![0u8; name_len];
+            stream.read_exact(&mut name)?;
+            let name = String::from_utf8(name).context("model name utf8")?;
+            match router.stream_open(&name) {
+                Ok(id) => write_stream_reply(stream, S3_OPENED, &id.to_le_bytes())?,
+                Err(e) => write_stream_reply(stream, S3_ERROR, format!("{e:#}").as_bytes())?,
+            }
+            Ok(true)
+        }
+        1 => {
+            // push: u64 stream id | u32 frame len | frame bytes
+            let id = read_u64(stream)?;
+            let frame_len = read_u32(stream)? as usize;
+            if frame_len > cfg.max_payload {
+                write_stream_reply(
+                    stream,
+                    S3_ERROR,
+                    format!("frame of {frame_len} bytes exceeds limit {}", cfg.max_payload)
+                        .as_bytes(),
+                )?;
+                return Ok(false);
+            }
+            let mut frame = vec![0u8; frame_len];
+            stream.read_exact(&mut frame)?;
+            let input: Vec<i8> = frame.iter().map(|&b| b as i8).collect();
+            match router.stream_push(id, &input) {
+                Ok(StreamPush::Verdict(out)) => {
+                    let bytes: Vec<u8> = out.iter().map(|&v| v as u8).collect();
+                    write_stream_reply(stream, S3_VERDICT, &bytes)?;
+                }
+                Ok(StreamPush::Pending) => write_stream_reply(stream, S3_NO_VERDICT, &[])?,
+                Ok(StreamPush::Closed) => {
+                    write_stream_reply(stream, S3_ERROR, b"stream cancelled")?
+                }
+                Ok(StreamPush::Shed) => write_stream_reply(
+                    stream,
+                    S3_ERROR,
+                    b"push shed: replica quarantined (frame retained; keep pushing)",
+                )?,
+                Ok(StreamPush::Failed(msg)) => write_stream_reply(
+                    stream,
+                    S3_ERROR,
+                    format!("push failed: {msg} (frame retained; keep pushing)").as_bytes(),
+                )?,
+                Err(e) => write_stream_reply(stream, S3_ERROR, format!("{e:#}").as_bytes())?,
+            }
+            Ok(true)
+        }
+        2 => {
+            // close: u64 stream id → final lifecycle counters
+            let id = read_u64(stream)?;
+            match router.stream_close(id) {
+                Ok(c) => {
+                    let mut payload = Vec::with_capacity(48);
+                    for v in [c.submitted, c.completed, c.shed, c.cancelled, c.failed, c.verdicts]
+                    {
+                        payload.extend_from_slice(&v.to_le_bytes());
+                    }
+                    write_stream_reply(stream, S3_CLOSED, &payload)?;
+                }
+                Err(e) => write_stream_reply(stream, S3_ERROR, format!("{e:#}").as_bytes())?,
+            }
+            Ok(true)
+        }
+        other => {
+            write_stream_reply(stream, S3_ERROR, format!("bad stream op {other}").as_bytes())?;
+            Ok(false)
+        }
+    }
 }
 
 /// Minimal blocking client for tests, examples and the CLI.
@@ -309,5 +455,89 @@ impl Client {
             bail!("server error: {}", String::from_utf8_lossy(&payload));
         }
         Ok(payload.iter().map(|&b| b as i8).collect())
+    }
+
+    /// Open a v3 stream on `model`; the returned id addresses
+    /// [`Client::push_frame`] / [`Client::close_stream`].
+    pub fn open_stream(&mut self, model: &str) -> Result<u64> {
+        let s = &mut self.stream;
+        s.write_all(b"MFR3")?;
+        s.write_all(&[0u8])?;
+        s.write_all(&(model.len() as u16).to_le_bytes())?;
+        s.write_all(model.as_bytes())?;
+        s.flush()?;
+        let (status, payload) = Self::read_stream_reply(s)?;
+        match status {
+            S3_OPENED if payload.len() == 8 => {
+                Ok(u64::from_le_bytes(payload.try_into().unwrap()))
+            }
+            S3_ERROR => bail!("open failed: {}", String::from_utf8_lossy(&payload)),
+            _ => bail!("unexpected open reply status {status}"),
+        }
+    }
+
+    /// Push one frame (one chunk) to an open stream. `Ok(Some(verdict))`
+    /// at pulse boundaries, `Ok(None)` while warming up or mid-pulse.
+    pub fn push_frame(&mut self, id: u64, frame: &[i8]) -> Result<Option<Vec<i8>>> {
+        let s = &mut self.stream;
+        s.write_all(b"MFR3")?;
+        s.write_all(&[1u8])?;
+        s.write_all(&id.to_le_bytes())?;
+        s.write_all(&(frame.len() as u32).to_le_bytes())?;
+        let bytes: Vec<u8> = frame.iter().map(|&v| v as u8).collect();
+        s.write_all(&bytes)?;
+        s.flush()?;
+        let (status, payload) = Self::read_stream_reply(s)?;
+        match status {
+            S3_VERDICT => Ok(Some(payload.iter().map(|&b| b as i8).collect())),
+            S3_NO_VERDICT => Ok(None),
+            S3_ERROR => bail!("push failed: {}", String::from_utf8_lossy(&payload)),
+            _ => bail!("unexpected push reply status {status}"),
+        }
+    }
+
+    /// End-of-stream close; returns the stream's final lifecycle
+    /// counters.
+    pub fn close_stream(&mut self, id: u64) -> Result<StreamCounters> {
+        let s = &mut self.stream;
+        s.write_all(b"MFR3")?;
+        s.write_all(&[2u8])?;
+        s.write_all(&id.to_le_bytes())?;
+        s.flush()?;
+        let (status, payload) = Self::read_stream_reply(s)?;
+        match status {
+            S3_CLOSED if payload.len() == 48 => {
+                let mut vals = [0u64; 6];
+                for (i, v) in vals.iter_mut().enumerate() {
+                    *v = u64::from_le_bytes(payload[i * 8..(i + 1) * 8].try_into().unwrap());
+                }
+                Ok(StreamCounters {
+                    submitted: vals[0],
+                    completed: vals[1],
+                    shed: vals[2],
+                    cancelled: vals[3],
+                    failed: vals[4],
+                    verdicts: vals[5],
+                })
+            }
+            S3_ERROR => bail!("close failed: {}", String::from_utf8_lossy(&payload)),
+            _ => bail!("unexpected close reply status {status}"),
+        }
+    }
+
+    fn read_stream_reply(s: &mut TcpStream) -> Result<(u8, Vec<u8>)> {
+        let mut magic = [0u8; 4];
+        s.read_exact(&mut magic)?;
+        if &magic != b"MFS3" {
+            bail!("bad stream reply magic");
+        }
+        let mut status = [0u8; 1];
+        s.read_exact(&mut status)?;
+        let mut b4 = [0u8; 4];
+        s.read_exact(&mut b4)?;
+        let len = u32::from_le_bytes(b4) as usize;
+        let mut payload = vec![0u8; len];
+        s.read_exact(&mut payload)?;
+        Ok((status[0], payload))
     }
 }

@@ -41,11 +41,23 @@
 //!   both to live pools — failing replicas are quarantined, drained and
 //!   warm-replaced, open breakers shed Background/Bulk at admission while
 //!   Interactive traffic doubles as the recovery probe;
+//! * [`stream`]  — the streaming affinity lane ([`StreamHost`]):
+//!   stateful [`crate::stream::StreamSession`]s pinned to one replica
+//!   (never split by the batcher), per-stream host-side ring buffers as
+//!   durable truth, per-push lifecycle counters holding the exactly-once
+//!   identity, and a health pass whose ejection migrates stream state to
+//!   a replacement replica via ring replay — bit-exact continuation on
+//!   the same pulse cadence;
 //! * [`router`]  — model-name → fleet routing for multi-model
-//!   deployments;
+//!   deployments, plus the stream registry (`stream_open` / `stream_push`
+//!   / `stream_close` route per-stream ids to their model's
+//!   [`StreamHost`]);
 //! * [`ingress`] — TCP wire protocol + blocking client: the v2 `MFR2`
 //!   frame carries class + deadline, legacy v1 `MFRQ` frames are served
-//!   with configurable defaults ([`IngressConfig`]);
+//!   with configurable defaults ([`IngressConfig`]), and the v3 `MFR3`
+//!   frame-per-chunk protocol carries streaming open/push/close rounds
+//!   with per-stream ids; declared payload lengths are bounds-checked
+//!   against [`IngressConfig::max_payload`] before any allocation;
 //! * [`metrics`] — per-class latency (p50/p95/p99) and lifecycle counters
 //!   (completed, `failed`, `retried`, `shed`, `cancelled`,
 //!   `deadline_missed`; `completed + shed + cancelled + failed ==
@@ -62,6 +74,7 @@ pub mod request;
 pub mod resilience;
 pub mod router;
 pub mod server;
+pub mod stream;
 
 // the execution surface lives in `crate::api`; re-exported here because
 // every server deployment needs it alongside the coordinator types
@@ -85,3 +98,7 @@ pub use request::{
 pub use resilience::{BreakerCore, BreakerPolicy, BreakerState, HealthPolicy};
 pub use router::Router;
 pub use server::{Server, ServerConfig};
+pub use stream::{
+    StreamCounters, StreamFault, StreamHost, StreamHostConfig, StreamHostSnapshot, StreamPush,
+    StreamSnapshot, StreamTickReport, StreamWorkerSnapshot,
+};

@@ -10,17 +10,24 @@
 //! [`Router::infer`] stays as the blocking convenience wrapper.
 
 use std::collections::HashMap;
+use std::sync::{Arc, RwLock};
 
 use anyhow::{Context, Result};
 
 use super::fleet::Fleet;
 use super::request::{Request, Ticket};
 use super::server::Server;
+use super::stream::{StreamCounters, StreamHost, StreamPush};
 
 /// A multi-model routing table.
 #[derive(Default)]
 pub struct Router {
     fleets: HashMap<String, Fleet>,
+    /// model name → streaming lane (models served with `--stream`).
+    stream_hosts: HashMap<String, Arc<StreamHost>>,
+    /// open stream id → model name (ids are globally unique, so the
+    /// router can route `push`/`close` without re-stating the model).
+    stream_index: RwLock<HashMap<u64, String>>,
 }
 
 impl Router {
@@ -57,6 +64,57 @@ impl Router {
     /// Route and wait (blocking convenience; Bulk class, no deadline).
     pub fn infer(&self, model: &str, input: Vec<i8>) -> Result<Vec<i8>> {
         self.submit(model, Request::new(input))?.wait()
+    }
+
+    /// Register a streaming lane for a model (alongside or instead of its
+    /// request/response fleet).
+    pub fn add_stream_host(&mut self, name: &str, host: Arc<StreamHost>) {
+        self.stream_hosts.insert(name.to_string(), host);
+    }
+
+    pub fn stream_host(&self, name: &str) -> Result<&Arc<StreamHost>> {
+        self.stream_hosts
+            .get(name)
+            .with_context(|| format!("no streaming lane for model {name:?}"))
+    }
+
+    /// Models with a streaming lane registered.
+    pub fn stream_models(&self) -> Vec<&str> {
+        let mut m: Vec<&str> = self.stream_hosts.keys().map(|s| s.as_str()).collect();
+        m.sort();
+        m
+    }
+
+    /// Open a stream on a model's streaming lane; the returned id routes
+    /// all subsequent [`Router::stream_push`] / [`Router::stream_close`]
+    /// calls.
+    pub fn stream_open(&self, model: &str) -> Result<u64> {
+        let id = self.stream_host(model)?.open(model)?;
+        self.stream_index.write().unwrap().insert(id, model.to_string());
+        Ok(id)
+    }
+
+    /// Route one frame to an open stream.
+    pub fn stream_push(&self, id: u64, frame: &[i8]) -> Result<StreamPush> {
+        let model = self
+            .stream_index
+            .read()
+            .unwrap()
+            .get(&id)
+            .cloned()
+            .with_context(|| format!("unknown stream {id}"))?;
+        self.stream_host(&model)?.push(id, frame)
+    }
+
+    /// Close an open stream, returning its final lifecycle counters.
+    pub fn stream_close(&self, id: u64) -> Result<StreamCounters> {
+        let model = self
+            .stream_index
+            .write()
+            .unwrap()
+            .remove(&id)
+            .with_context(|| format!("unknown stream {id}"))?;
+        self.stream_host(&model)?.close(id)
     }
 
     /// Shut down every fleet.
@@ -130,5 +188,34 @@ mod tests {
         let snap = r.get("tiny").unwrap().snapshot();
         assert_eq!(snap.totals.completed, 6);
         r.shutdown();
+    }
+
+    #[test]
+    fn stream_lane_routes_by_id() {
+        use crate::compiler::plan::{CompileOptions, CompiledModel};
+        use crate::coordinator::stream::StreamHostConfig;
+        use crate::util::Prng;
+        let m = crate::synth::stream_conv_chain(&mut Prng::new(31), 1);
+        let c = CompiledModel::compile(&m, CompileOptions::default()).unwrap();
+        let host =
+            Arc::new(StreamHost::start(Arc::new(c), StreamHostConfig::default()).unwrap());
+        let mut r = Router::new();
+        r.add_stream_host("kw", host.clone());
+        assert_eq!(r.stream_models(), vec!["kw"]);
+        assert!(r.stream_open("missing").is_err());
+        let id = r.stream_open("kw").unwrap();
+        let mut rng = Prng::new(32);
+        let mut verdicts = 0;
+        for _ in 0..host.window_rows() + host.pulse_frames() {
+            match r.stream_push(id, &rng.i8_vec(host.frame_len())).unwrap() {
+                StreamPush::Verdict(_) => verdicts += 1,
+                StreamPush::Pending => {}
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        assert_eq!(verdicts, 2, "prime + one pulse");
+        let counters = r.stream_close(id).unwrap();
+        assert!(counters.identity_holds());
+        assert!(r.stream_push(id, &[0]).is_err(), "closed id must unroute");
     }
 }

@@ -1,0 +1,632 @@
+//! Streaming affinity lane ([`StreamHost`]): stateful sessions over the
+//! replica pool.
+//!
+//! Request/response serving can spray a model's requests across replicas
+//! because every request is self-contained. A stream is not: its verdicts
+//! depend on per-session state (the input ring, per-layer pulse states).
+//! The affinity rules here keep that sound:
+//!
+//! * **Pinning** — a stream is assigned one replica at `open` and every
+//!   `push` executes there; the batcher is bypassed entirely, so a stream
+//!   is never split across replicas (frames of one stream serialize on
+//!   its replica; distinct streams on distinct replicas run in parallel).
+//! * **Durable truth** — the host keeps its own per-stream [`RingBuffer`]
+//!   of the last `window + pulse - 1` frames, written *before* the
+//!   replica attempt. Future verdicts are a pure function of ring
+//!   contents, so any replica's session state can be rebuilt by replay.
+//! * **Health + migration** — replica push failures are counted
+//!   (seeded, deterministic injection via [`StreamFault`]); a streak of
+//!   [`StreamHostConfig::eject_after`] quarantines the replica. The next
+//!   [`StreamHost::tick`] provisions a replacement *first* (mirroring
+//!   [`super::fleet::Fleet::tick`]), migrates every pinned stream to it,
+//!   then retires the sick replica. A migrated (or failure-desynced)
+//!   stream is lazily **re-primed from the host ring** — the boundary
+//!   window plus any mid-pulse pending frames — which lands the fresh
+//!   session on the same cadence with bit-exact verdicts.
+//! * **Lifecycle identity** — every accepted push resolves exactly once:
+//!   `completed + shed + cancelled + failed == submitted`, *per stream*
+//!   (asserted under seeded chaos by `tests/stream_conformance.rs`).
+//!   `shed` = push arrived while the pinned replica sat quarantined
+//!   awaiting migration (the frame still enters the host ring — no data
+//!   loss); `failed` = the replica attempt itself failed (frame likewise
+//!   retained); `cancelled` = push after [`StreamHost::cancel`].
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+use anyhow::{bail, Context, Result};
+
+use crate::compiler::plan::CompiledModel;
+use crate::compiler::pulse::PulsePlan;
+use crate::stream::{RingBuffer, StreamSession};
+
+/// Process-wide stream id source (globally unique, like request ids).
+static NEXT_STREAM_ID: AtomicU64 = AtomicU64::new(1);
+
+/// Host policy knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct StreamHostConfig {
+    /// Replicas to provision at start (streams spread by least-loaded).
+    pub replicas: usize,
+    /// Consecutive push failures that quarantine a replica.
+    pub eject_after: u32,
+}
+
+impl Default for StreamHostConfig {
+    fn default() -> Self {
+        StreamHostConfig { replicas: 2, eject_after: 3 }
+    }
+}
+
+/// Deterministic push-fault schedule: on replica `worker`, every
+/// `every`-th push (counted per replica) fails. Seeded chaos for the
+/// stress/conformance suites — same schedule, same failures, same
+/// verdicts.
+#[derive(Clone, Copy, Debug)]
+pub struct StreamFault {
+    pub worker: usize,
+    pub every: u64,
+}
+
+/// Outcome of one [`StreamHost::push`] — each maps to exactly one
+/// lifecycle lane.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum StreamPush {
+    /// Full window + pulse boundary: a verdict (`completed`).
+    Verdict(Vec<i8>),
+    /// Processed, no verdict yet — warmup or mid-pulse (`completed`).
+    Pending,
+    /// Stream was cancelled (`cancelled`).
+    Closed,
+    /// Pinned replica quarantined awaiting migration; frame retained in
+    /// the host ring (`shed`).
+    Shed,
+    /// Replica attempt failed; frame retained, session re-primed from
+    /// the ring on the next successful push (`failed`).
+    Failed(String),
+}
+
+/// Per-stream lifecycle counters (`completed + shed + cancelled +
+/// failed == submitted` always).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StreamCounters {
+    pub submitted: u64,
+    pub completed: u64,
+    pub shed: u64,
+    pub cancelled: u64,
+    pub failed: u64,
+    /// Verdicts emitted (a subset of `completed`; outside the identity).
+    pub verdicts: u64,
+}
+
+impl StreamCounters {
+    /// The exactly-once identity.
+    pub fn identity_holds(&self) -> bool {
+        self.completed + self.shed + self.cancelled + self.failed == self.submitted
+    }
+}
+
+/// One pinned replica: its stream sessions plus health state.
+struct StreamWorker {
+    label: String,
+    sessions: HashMap<u64, StreamSession>,
+    /// Total pushes attempted here (drives the fault schedule).
+    pushes: u64,
+    consecutive_failures: u32,
+    /// Over the failure threshold; sheds pushes until `tick` migrates.
+    quarantined: bool,
+    /// Migrated away and permanently out of rotation.
+    retired: bool,
+}
+
+/// The host-side record of one stream (the durable truth).
+struct StreamEntry {
+    id: u64,
+    name: String,
+    worker: usize,
+    ring: RingBuffer,
+    counters: StreamCounters,
+    closed: bool,
+    /// Replica session is behind the ring (failed/shed push, or fresh
+    /// after migration): rebuild it by replay before the next execute.
+    needs_reprime: bool,
+}
+
+/// Point-in-time view of one stream.
+#[derive(Clone, Debug)]
+pub struct StreamSnapshot {
+    pub id: u64,
+    pub name: String,
+    pub worker: String,
+    pub counters: StreamCounters,
+}
+
+/// Point-in-time view of one replica.
+#[derive(Clone, Debug)]
+pub struct StreamWorkerSnapshot {
+    pub label: String,
+    pub streams: usize,
+    pub pushes: u64,
+    pub consecutive_failures: u32,
+    pub quarantined: bool,
+    pub retired: bool,
+}
+
+/// Everything [`StreamHost::snapshot`] reports.
+#[derive(Clone, Debug)]
+pub struct StreamHostSnapshot {
+    pub streams: Vec<StreamSnapshot>,
+    pub workers: Vec<StreamWorkerSnapshot>,
+}
+
+/// What one health pass did.
+#[derive(Clone, Debug, Default)]
+pub struct StreamTickReport {
+    /// Labels of replicas retired this tick.
+    pub ejected: Vec<String>,
+    /// Streams migrated to replacement replicas.
+    pub migrated: usize,
+}
+
+/// Stateful streaming over a pinned replica pool (module docs have the
+/// affinity/migration contract). Shareable: all methods take `&self`.
+pub struct StreamHost {
+    compiled: Arc<CompiledModel>,
+    window_rows: usize,
+    frame_len: usize,
+    pulse_frames: usize,
+    eject_after: u32,
+    workers: RwLock<Vec<Arc<Mutex<StreamWorker>>>>,
+    streams: RwLock<HashMap<u64, Arc<Mutex<StreamEntry>>>>,
+    faults: Mutex<Vec<StreamFault>>,
+}
+
+impl StreamHost {
+    /// Plan (and certify — `V4xx`) the pulse pass once, then provision
+    /// the replica pool. Errors if the model has no streamable prefix.
+    pub fn start(compiled: Arc<CompiledModel>, cfg: StreamHostConfig) -> Result<StreamHost> {
+        if cfg.replicas == 0 {
+            bail!("stream host needs at least one replica");
+        }
+        let plan = PulsePlan::plan(&compiled).context("planning stream host pulse pass")?;
+        let workers = (0..cfg.replicas)
+            .map(|i| {
+                Arc::new(Mutex::new(StreamWorker {
+                    label: format!("stream-w{i}"),
+                    sessions: HashMap::new(),
+                    pushes: 0,
+                    consecutive_failures: 0,
+                    quarantined: false,
+                    retired: false,
+                }))
+            })
+            .collect();
+        Ok(StreamHost {
+            window_rows: plan.window_rows,
+            frame_len: plan.frame_len,
+            pulse_frames: plan.pulse_frames,
+            eject_after: cfg.eject_after.max(1),
+            compiled,
+            workers: RwLock::new(workers),
+            streams: RwLock::new(HashMap::new()),
+            faults: Mutex::new(Vec::new()),
+        })
+    }
+
+    pub fn window_rows(&self) -> usize {
+        self.window_rows
+    }
+
+    pub fn frame_len(&self) -> usize {
+        self.frame_len
+    }
+
+    pub fn pulse_frames(&self) -> usize {
+        self.pulse_frames
+    }
+
+    /// Install a deterministic fault schedule (before traffic, in tests).
+    pub fn inject_fault(&self, fault: StreamFault) {
+        self.faults.lock().unwrap().push(fault);
+    }
+
+    /// Open a stream: pin it to the least-loaded live replica, provision
+    /// its session there, and register the host-side ring. Returns the
+    /// globally unique stream id.
+    pub fn open(&self, name: impl Into<String>) -> Result<u64> {
+        let id = NEXT_STREAM_ID.fetch_add(1, Ordering::Relaxed);
+        let workers = self.workers.read().unwrap();
+        let widx = workers
+            .iter()
+            .enumerate()
+            .filter(|(_, w)| {
+                let w = w.lock().unwrap();
+                !w.quarantined && !w.retired
+            })
+            .min_by_key(|(_, w)| w.lock().unwrap().sessions.len())
+            .map(|(i, _)| i)
+            .context("no live stream replica")?;
+        let session = StreamSession::pulsed(self.compiled.clone())?;
+        workers[widx].lock().unwrap().sessions.insert(id, session);
+        drop(workers);
+        let entry = StreamEntry {
+            id,
+            name: name.into(),
+            worker: widx,
+            // boundary window + worst-case mid-pulse pending frames:
+            // exactly what a migration re-prime needs
+            ring: RingBuffer::new(self.window_rows + self.pulse_frames - 1, self.frame_len),
+            counters: StreamCounters::default(),
+            closed: false,
+            needs_reprime: false,
+        };
+        self.streams.write().unwrap().insert(id, Arc::new(Mutex::new(entry)));
+        Ok(id)
+    }
+
+    /// Feed one frame to a stream. Exactly one lifecycle lane is counted
+    /// per call; see [`StreamPush`] for the mapping.
+    pub fn push(&self, id: u64, frame: &[i8]) -> Result<StreamPush> {
+        if frame.len() != self.frame_len {
+            bail!("frame length {} != {}", frame.len(), self.frame_len);
+        }
+        let entry = self
+            .streams
+            .read()
+            .unwrap()
+            .get(&id)
+            .cloned()
+            .with_context(|| format!("unknown stream {id}"))?;
+        let mut e = entry.lock().unwrap();
+        e.counters.submitted += 1;
+        if e.closed {
+            e.counters.cancelled += 1;
+            return Ok(StreamPush::Closed);
+        }
+        // durable truth first: the ring sees every accepted frame, so a
+        // failed or shed replica attempt loses nothing
+        e.ring.push(frame);
+        let worker = self.workers.read().unwrap()[e.worker].clone();
+        let mut wk = worker.lock().unwrap();
+        if wk.quarantined || wk.retired {
+            e.counters.shed += 1;
+            e.needs_reprime = true;
+            return Ok(StreamPush::Shed);
+        }
+        wk.pushes += 1;
+        let injected = {
+            let faults = self.faults.lock().unwrap();
+            faults.iter().any(|f| f.worker == e.worker && f.every > 0 && wk.pushes % f.every == 0)
+        };
+        if injected {
+            wk.consecutive_failures += 1;
+            if wk.consecutive_failures >= self.eject_after {
+                wk.quarantined = true;
+            }
+            e.counters.failed += 1;
+            e.needs_reprime = true;
+            return Ok(StreamPush::Failed(format!(
+                "injected fault on {} (push {})",
+                wk.label, wk.pushes
+            )));
+        }
+        let result = if e.needs_reprime {
+            self.reprime(&mut e, &mut wk)
+        } else {
+            let sess = wk.sessions.get_mut(&id).expect("pinned session");
+            sess.push(frame)
+        };
+        match result {
+            Ok(v) => {
+                wk.consecutive_failures = 0;
+                e.needs_reprime = false;
+                e.counters.completed += 1;
+                match v {
+                    Some(out) => {
+                        e.counters.verdicts += 1;
+                        Ok(StreamPush::Verdict(out))
+                    }
+                    None => Ok(StreamPush::Pending),
+                }
+            }
+            Err(err) => {
+                wk.consecutive_failures += 1;
+                if wk.consecutive_failures >= self.eject_after {
+                    wk.quarantined = true;
+                }
+                e.counters.failed += 1;
+                e.needs_reprime = true;
+                Ok(StreamPush::Failed(err.to_string()))
+            }
+        }
+    }
+
+    /// Rebuild the replica session by replay from the host ring: the
+    /// boundary window plus any mid-pulse pending frames (the current
+    /// frame is already in the ring, so its own result falls out of the
+    /// replay — the final `push` below). Bit-exact by the streaming
+    /// contract: verdicts are a pure function of ring contents.
+    fn reprime(&self, e: &mut StreamEntry, wk: &mut StreamWorker) -> Result<Option<Vec<i8>>> {
+        let mut fresh = StreamSession::pulsed(self.compiled.clone())?;
+        let seen = e.ring.seen();
+        let w = self.window_rows as u64;
+        let feed = if seen < w {
+            e.ring.filled()
+        } else {
+            self.window_rows + ((seen - w) % self.pulse_frames as u64) as usize
+        };
+        let frames = e.ring.last_frames(feed);
+        let mut last = None;
+        for f in frames.chunks(self.frame_len) {
+            last = fresh.push(f)?;
+        }
+        wk.sessions.insert(e.id, fresh);
+        Ok(last)
+    }
+
+    /// Mark a stream cancelled: later pushes count `cancelled` and
+    /// return [`StreamPush::Closed`]; `close` reaps it.
+    pub fn cancel(&self, id: u64) -> Result<()> {
+        let entry = self
+            .streams
+            .read()
+            .unwrap()
+            .get(&id)
+            .cloned()
+            .with_context(|| format!("unknown stream {id}"))?;
+        entry.lock().unwrap().closed = true;
+        Ok(())
+    }
+
+    /// End-of-stream: drop the replica session and the host record,
+    /// returning the final counters.
+    pub fn close(&self, id: u64) -> Result<StreamCounters> {
+        let entry = self
+            .streams
+            .write()
+            .unwrap()
+            .remove(&id)
+            .with_context(|| format!("unknown stream {id}"))?;
+        let e = entry.lock().unwrap();
+        let workers = self.workers.read().unwrap();
+        if let Some(w) = workers.get(e.worker) {
+            w.lock().unwrap().sessions.remove(&id);
+        }
+        Ok(e.counters)
+    }
+
+    /// Health pass: for every quarantined replica, provision a
+    /// replacement *first*, migrate its streams (lazy ring re-prime on
+    /// their next push), then retire it. Deterministic and synchronous —
+    /// the control loop owns the cadence, mirroring `Fleet::tick`.
+    pub fn tick(&self) -> StreamTickReport {
+        let mut report = StreamTickReport::default();
+        let sick: Vec<usize> = {
+            let workers = self.workers.read().unwrap();
+            workers
+                .iter()
+                .enumerate()
+                .filter(|(_, w)| {
+                    let w = w.lock().unwrap();
+                    w.quarantined && !w.retired
+                })
+                .map(|(i, _)| i)
+                .collect()
+        };
+        for widx in sick {
+            // provision the replacement before touching the sick replica
+            let new_idx = {
+                let mut workers = self.workers.write().unwrap();
+                let n = workers.len();
+                workers.push(Arc::new(Mutex::new(StreamWorker {
+                    label: format!("stream-w{n}"),
+                    sessions: HashMap::new(),
+                    pushes: 0,
+                    consecutive_failures: 0,
+                    quarantined: false,
+                    retired: false,
+                })));
+                n
+            };
+            // migrate: repin every stream; state follows via ring replay
+            {
+                let streams = self.streams.read().unwrap();
+                for entry in streams.values() {
+                    let mut e = entry.lock().unwrap();
+                    if e.worker == widx {
+                        e.worker = new_idx;
+                        e.needs_reprime = true;
+                        report.migrated += 1;
+                    }
+                }
+            }
+            // retire the sick replica (sessions die with it)
+            let worker = self.workers.read().unwrap()[widx].clone();
+            let mut wk = worker.lock().unwrap();
+            wk.retired = true;
+            wk.sessions.clear();
+            report.ejected.push(wk.label.clone());
+        }
+        report
+    }
+
+    pub fn snapshot(&self) -> StreamHostSnapshot {
+        let workers = self.workers.read().unwrap();
+        let worker_snaps: Vec<StreamWorkerSnapshot> = workers
+            .iter()
+            .map(|w| {
+                let w = w.lock().unwrap();
+                StreamWorkerSnapshot {
+                    label: w.label.clone(),
+                    streams: w.sessions.len(),
+                    pushes: w.pushes,
+                    consecutive_failures: w.consecutive_failures,
+                    quarantined: w.quarantined,
+                    retired: w.retired,
+                }
+            })
+            .collect();
+        let mut stream_snaps: Vec<StreamSnapshot> = self
+            .streams
+            .read()
+            .unwrap()
+            .values()
+            .map(|entry| {
+                let e = entry.lock().unwrap();
+                StreamSnapshot {
+                    id: e.id,
+                    name: e.name.clone(),
+                    worker: worker_snaps
+                        .get(e.worker)
+                        .map(|w| w.label.clone())
+                        .unwrap_or_default(),
+                    counters: e.counters,
+                }
+            })
+            .collect();
+        stream_snaps.sort_by_key(|s| s.id);
+        StreamHostSnapshot { streams: stream_snaps, workers: worker_snaps }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::plan::CompileOptions;
+    use crate::util::Prng;
+
+    fn host(cfg: StreamHostConfig) -> StreamHost {
+        let m = crate::synth::stream_conv_chain(&mut Prng::new(11), 2);
+        let c = CompiledModel::compile(&m, CompileOptions::default()).unwrap();
+        StreamHost::start(Arc::new(c), cfg).unwrap()
+    }
+
+    /// Direct (uncoordinated) session over the same model — the oracle.
+    fn oracle(h: &StreamHost) -> StreamSession {
+        StreamSession::pulsed(h.compiled.clone()).unwrap()
+    }
+
+    #[test]
+    fn pinned_streams_keep_the_lifecycle_identity() {
+        let h = host(StreamHostConfig::default());
+        let mut rng = Prng::new(21);
+        let ids: Vec<u64> = (0..3).map(|i| h.open(format!("s{i}")).unwrap()).collect();
+        let frames = h.window_rows() + 3 * h.pulse_frames();
+        for _ in 0..frames {
+            for &id in &ids {
+                let f = rng.i8_vec(h.frame_len());
+                assert!(!matches!(h.push(id, &f).unwrap(), StreamPush::Failed(_)));
+            }
+        }
+        let snap = h.snapshot();
+        assert_eq!(snap.streams.len(), 3);
+        for s in &snap.streams {
+            assert!(s.counters.identity_holds(), "{s:?}");
+            assert_eq!(s.counters.submitted, frames as u64);
+            assert_eq!(s.counters.verdicts, 4); // prime + 3 pulses
+        }
+        for &id in &ids {
+            assert!(h.close(id).unwrap().identity_holds());
+        }
+    }
+
+    #[test]
+    fn host_verdicts_match_a_direct_session() {
+        let h = host(StreamHostConfig::default());
+        let mut direct = oracle(&h);
+        let id = h.open("s").unwrap();
+        let mut rng = Prng::new(22);
+        for _ in 0..h.window_rows() * 3 {
+            let f = rng.i8_vec(h.frame_len());
+            let want = direct.push(&f).unwrap();
+            match h.push(id, &f).unwrap() {
+                StreamPush::Verdict(v) => assert_eq!(Some(v), want),
+                StreamPush::Pending => assert_eq!(None, want),
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn failed_pushes_recover_bit_exact_via_ring_replay() {
+        let h = host(StreamHostConfig { replicas: 1, eject_after: 100 });
+        h.inject_fault(StreamFault { worker: 0, every: 7 });
+        let mut direct = oracle(&h);
+        let id = h.open("s").unwrap();
+        let mut rng = Prng::new(23);
+        let (mut failed, mut matched) = (0u64, 0u64);
+        for _ in 0..h.window_rows() * 4 {
+            let f = rng.i8_vec(h.frame_len());
+            let want = direct.push(&f).unwrap();
+            match h.push(id, &f).unwrap() {
+                StreamPush::Verdict(v) => {
+                    assert_eq!(Some(v), want);
+                    matched += 1;
+                }
+                StreamPush::Pending => assert_eq!(None, want),
+                StreamPush::Failed(_) => failed += 1,
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        assert!(failed > 0, "fault schedule never fired");
+        assert!(matched > 1, "no verdicts survived to compare");
+        let c = h.close(id).unwrap();
+        assert!(c.identity_holds());
+        assert_eq!(c.failed, failed);
+    }
+
+    #[test]
+    fn ejection_migrates_streams_and_verdicts_continue_bit_exact() {
+        let h = host(StreamHostConfig { replicas: 1, eject_after: 2 });
+        h.inject_fault(StreamFault { worker: 0, every: 1 }); // every push fails
+        let mut direct = oracle(&h);
+        let id = h.open("s").unwrap();
+        let mut rng = Prng::new(24);
+        // two failures quarantine w0; one more push sheds
+        for _ in 0..2 {
+            let f = rng.i8_vec(h.frame_len());
+            let _ = direct.push(&f).unwrap();
+            assert!(matches!(h.push(id, &f).unwrap(), StreamPush::Failed(_)));
+        }
+        let f = rng.i8_vec(h.frame_len());
+        let _ = direct.push(&f).unwrap();
+        assert_eq!(h.push(id, &f).unwrap(), StreamPush::Shed);
+        let report = h.tick();
+        assert_eq!(report.ejected, vec!["stream-w0".to_string()]);
+        assert_eq!(report.migrated, 1);
+        // all further pushes land on the replacement, re-primed from the
+        // host ring, and every verdict matches the uninterrupted oracle
+        let mut verdicts = 0;
+        for _ in 0..h.window_rows() * 3 {
+            let f = rng.i8_vec(h.frame_len());
+            let want = direct.push(&f).unwrap();
+            match h.push(id, &f).unwrap() {
+                StreamPush::Verdict(v) => {
+                    assert_eq!(Some(v), want);
+                    verdicts += 1;
+                }
+                StreamPush::Pending => assert_eq!(None, want),
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        assert!(verdicts > 1);
+        let snap = h.snapshot();
+        assert!(snap.workers[0].retired);
+        assert!(snap.streams[0].counters.identity_holds());
+    }
+
+    #[test]
+    fn cancelled_streams_count_the_cancelled_lane() {
+        let h = host(StreamHostConfig::default());
+        let id = h.open("s").unwrap();
+        let f = vec![0i8; h.frame_len()];
+        assert!(matches!(h.push(id, &f).unwrap(), StreamPush::Pending));
+        h.cancel(id).unwrap();
+        assert_eq!(h.push(id, &f).unwrap(), StreamPush::Closed);
+        let c = h.close(id).unwrap();
+        assert!(c.identity_holds());
+        assert_eq!(c.cancelled, 1);
+        assert!(h.push(id, &f).is_err(), "closed stream must be unknown");
+    }
+}

@@ -125,16 +125,42 @@ pub(crate) fn run_plan<'a>(
     input: &[i8],
     scratch: &'a mut Scratch,
 ) -> &'a [i8] {
+    run_plan_from(compiled, 0, input, scratch, None)
+}
+
+/// Execute the plan from `first_step` to the end, with `input` staged as
+/// the activation entering `first_step` (the model input when 0, an
+/// intermediate activation otherwise — the streaming executor's tail
+/// re-entry). `observe` is called once per executed step with the step
+/// index and its freshly written output (streaming uses it to capture
+/// per-layer state while priming). Range runs must use a scratch sized by
+/// [`Scratch::for_plan_any_start`], since the original ping-pong parity
+/// does not apply mid-plan.
+pub(crate) fn run_plan_from<'a>(
+    compiled: &CompiledModel,
+    first_step: usize,
+    input: &[i8],
+    scratch: &'a mut Scratch,
+    mut observe: Option<&mut dyn FnMut(usize, &[i8])>,
+) -> &'a [i8] {
+    debug_assert_eq!(
+        input.len(),
+        compiled.steps.get(first_step).map_or(compiled.input_len(), |s| s.in_len),
+        "range-run input length"
+    );
     scratch.load_input(input);
     // one cached OnceLock load per predict; the per-step kernel calls
     // below thread the same backend explicitly
     let kb = backend::active();
-    for step in &compiled.steps {
+    for (i, step) in compiled.steps.iter().enumerate().skip(first_step) {
         let in_len = step.in_len;
         let out_len = step.out_len;
         match &step.kind {
             StepKind::Reshape => {
                 // pure metadata: the buffer is reinterpreted, nothing runs
+                if let Some(cb) = observe.as_mut() {
+                    cb(i, scratch.current(out_len));
+                }
                 continue;
             }
             StepKind::FullyConnected { k, n, weights, pc, paged } => {
@@ -200,6 +226,9 @@ pub(crate) fn run_plan<'a>(
                 let (x, y, _) = scratch.split(in_len, out_len);
                 activation::relu6(x, *s_x, *z_x, *s_y, *z_y, y);
             }
+        }
+        if let Some(cb) = observe.as_mut() {
+            cb(i, scratch.out_view(out_len));
         }
         scratch.flip();
     }

@@ -32,6 +32,22 @@ impl Scratch {
         Scratch { a: vec![0; a], b: vec![0; b], kernel: vec![0; m.scratch], live_in_a: true }
     }
 
+    /// Allocate buffers sized so a *range* of the plan can run starting
+    /// from either ping-pong side. The streaming executor re-enters the
+    /// plan at an arbitrary tail step with its carried activation as the
+    /// "input"; the original schedule's buffer parity no longer applies,
+    /// so both buffers take the larger of the two plan sizes (and every
+    /// step endpoint, which `MemoryPlan` already folds into `buf_*`).
+    pub fn for_plan_any_start(compiled: &CompiledModel) -> Scratch {
+        let m = &compiled.memory;
+        let n = m
+            .buf_a
+            .max(m.buf_b)
+            .max(compiled.input_len())
+            .max(compiled.output_len());
+        Scratch { a: vec![0; n], b: vec![0; n], kernel: vec![0; m.scratch], live_in_a: true }
+    }
+
     /// Stage the model input into the live buffer.
     pub fn load_input(&mut self, input: &[i8]) {
         self.live_in_a = true;
@@ -58,6 +74,17 @@ impl Scratch {
             &self.a[..len]
         } else {
             &self.b[..len]
+        }
+    }
+
+    /// The *other* buffer's first `len` elements — the output a step just
+    /// wrote, viewed before [`flip`](Self::flip). Used by the plan
+    /// runner's per-step observer hook.
+    pub fn out_view(&self, len: usize) -> &[i8] {
+        if self.live_in_a {
+            &self.b[..len]
+        } else {
+            &self.a[..len]
         }
     }
 

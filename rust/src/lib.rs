@@ -68,7 +68,12 @@
 //! * [`coordinator`] — the serving layer: dynamic batcher (with
 //!   per-replica adaptive tuning), heterogeneous replica-pool fleets with
 //!   least-outstanding-requests dispatch, model router, worker pools over
-//!   [`api::Session`] replicas, latency/throughput metrics;
+//!   [`api::Session`] replicas, latency/throughput metrics, and the
+//!   streaming affinity lane ([`coordinator::StreamHost`]);
+//! * [`stream`] — pulsed stateful streaming: ring-buffer input state,
+//!   the incremental per-frame executor and the replay oracle behind
+//!   [`stream::StreamSession`] (planned + certified by
+//!   [`compiler::pulse`]);
 //! * [`synth`] — seeded synthetic model generators backing the
 //!   artifact-free conformance/stress suites and the fleet bench;
 //! * [`eval`] — datasets, accuracy metrics and the Table 5 runner.
@@ -106,11 +111,45 @@
 //!    (see *Kernel backends* below).
 //!
 //! Rejections carry stable codes — `V1xx` plan, `V2xx` memory, `V3xx`
-//! arithmetic, `E4xx` decode — listed in
+//! arithmetic, `V4xx` pulse/streaming, `E4xx` decode — listed in
 //! [`compiler::verify::ERROR_CODE_TABLE`] and printed by
 //! `microflow audit --codes`. `microflow audit <model>` prints a
 //! certificate report: peak-RAM bound, per-step live bytes and worst-case
 //! accumulator headroom.
+//!
+//! ## Streaming sessions
+//!
+//! [`stream::StreamSession`] (re-exported from [`api`]) turns any model
+//! with a streamable spatial prefix into a stateful frame-at-a-time
+//! consumer: `push(frame)` returns `Some(verdict)` once a full window has
+//! been seen and then at every pulse boundary, `None` while warming up or
+//! mid-pulse. The pulse schedule is *compiled* ([`compiler::pulse`]) and
+//! *certified* (`V401`–`V405`): ring/state regions are proven disjoint
+//! and correctly sized, the cadence is proven consistent with the layer
+//! strides, the state-shift/carry accounting is checked row by row, and
+//! the pulsed path is proven to do **strictly less** kernel work than a
+//! full-window re-run (`V405`, pinned by [`sim::cost`] MAC accounting).
+//! The contract:
+//!
+//! * **State ownership** — all cross-frame state (the ring-buffer input
+//!   window, per-layer row states, the carry activation) is owned by the
+//!   session; the compiled plan itself stays immutable and shareable.
+//! * **Bit-exactness vs replay** — every pulsed verdict equals, bit for
+//!   bit, a full-window re-run of the same engine over the frames the
+//!   ring holds at that push (`tests/stream_conformance.rs` asserts this
+//!   at every frame, warmup included; the interpreter replay oracle
+//!   carries its usual ±1-off-native tolerance *between* engines, while
+//!   each engine is exact against its own replay).
+//! * **Migration** — future verdicts are a pure function of ring
+//!   contents: the coordinator's [`coordinator::StreamHost`] keeps a
+//!   host-side ring per stream and re-primes a fresh session (boundary
+//!   window + mid-pulse pending frames) when a replica is ejected, so a
+//!   migrated stream's verdicts continue bit-exactly on the same cadence.
+//!   Streams are pinned to one replica; the batcher never splits a
+//!   stream across replicas.
+//!
+//! On the wire, `serve --stream` speaks the v3 `MFR3` frame-per-chunk
+//! protocol (open/push/close with per-stream ids) alongside v1/v2.
 //!
 //! ## Kernel backends
 //!
@@ -195,6 +234,7 @@ pub mod interp;
 pub mod kernels;
 pub mod runtime;
 pub mod sim;
+pub mod stream;
 pub mod synth;
 pub mod tensor;
 pub mod util;

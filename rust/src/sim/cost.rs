@@ -181,6 +181,28 @@ pub fn microflow_step_macs(kind: &StepKind, out_len: usize) -> u64 {
     }
 }
 
+/// MACs for recomputing only `rows` output rows of a spatial step — the
+/// pulsed (streaming) cost basis. Same padded-panel accounting as
+/// [`microflow_step_macs`] with `out_h` replaced by `rows`, so the
+/// planner's `V405` strict-savings obligation compares like with like.
+/// Non-spatial steps charge `out_elems` (the delta slice for pointwise
+/// steps; callers pass the full length for tail steps, which never pulse).
+pub fn microflow_step_macs_rows(kind: &StepKind, rows: usize, out_elems: usize) -> u64 {
+    match kind {
+        StepKind::Conv2D { geo, filters, .. } => {
+            (rows * geo.out_w * pack::padded_lanes(filters.c_out) * geo.k_h * geo.k_w * geo.in_c)
+                as u64
+        }
+        StepKind::DepthwiseConv2D { geo, depth_multiplier, .. } => {
+            (rows * geo.out_w * geo.in_c * depth_multiplier * geo.k_h * geo.k_w) as u64
+        }
+        StepKind::AveragePool2D { geo, .. } => {
+            (rows * geo.out_w * geo.in_c * geo.k_h * geo.k_w) as u64
+        }
+        other => other.macs(out_elems),
+    }
+}
+
 /// Modeled cycles for one inference.
 pub fn inference_cycles(compiled: &CompiledModel, mcu: &Mcu, engine: Engine) -> f64 {
     let c = arch_cost(mcu.arch);

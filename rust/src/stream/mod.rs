@@ -1,0 +1,586 @@
+//! `microflow::stream` — stateful pulsed inference over a sliding window
+//! (the runtime half of the streaming subsystem; the planning half is
+//! [`crate::compiler::pulse`]).
+//!
+//! A [`StreamSession`] consumes the input one frame (one `H` row of the
+//! model's `[H,W,C]` input) at a time and emits a verdict whenever a full
+//! window's worth of context is available at the pulse cadence:
+//!
+//! ```text
+//! push(frame) -> None        while the window warms up / between pulses
+//! push(frame) -> Some(out)   at seen == window, then every pulse_frames
+//! ```
+//!
+//! Guarantees (the streaming contract, asserted by
+//! `tests/stream_conformance.rs`):
+//!
+//! * **State ownership** — all cross-frame state (the input ring, the
+//!   per-layer pulse states, the carry) lives inside the session; the
+//!   model plan stays immutable and shared (`Arc<CompiledModel>`).
+//! * **Bit-exactness vs replay** — every verdict of the pulsed native
+//!   path equals, bit for bit, a full-window re-run of the same engine
+//!   over the ring contents at that frame. A replay-mode session over
+//!   any [`Session`] (including the interpreter) is the oracle.
+//! * **Migration** — a session's future verdicts are a pure function of
+//!   the frames in the ring: re-feeding the last window (plus any
+//!   mid-pulse pending frames) into a fresh session reproduces the state,
+//!   which is how the coordinator migrates streams off ejected replicas.
+//!
+//! Verdicts allocate (`Vec<i8>` per emission); the per-frame *compute*
+//! path reuses the session's plan-sized buffers, and pays only the
+//! incremental sub-kernels plus the (cheap) non-streamable tail.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::api::{ModelSource, Session};
+use crate::compiler::plan::{CompileOptions, CompiledModel, StepKind};
+use crate::compiler::pulse::{PulsePlan, PulseStepKind};
+use crate::engine::{run_plan_from, Scratch};
+use crate::kernels::microkernel::backend;
+use crate::kernels::view::ConvGeometry;
+use crate::kernels::{activation, average_pool2d, conv2d, depthwise_conv2d};
+
+/// Fixed-capacity frame ring: the durable truth of a stream's recent
+/// input. Pushing never allocates; reads materialize logical
+/// (oldest-first) order from the modular layout.
+#[derive(Clone, Debug)]
+pub struct RingBuffer {
+    buf: Vec<i8>,
+    frame_len: usize,
+    cap_frames: usize,
+    /// Next write slot (frame index).
+    head: usize,
+    /// Frames currently held (`<= cap_frames`).
+    filled: usize,
+    /// Total frames ever pushed.
+    seen: u64,
+}
+
+impl RingBuffer {
+    pub fn new(cap_frames: usize, frame_len: usize) -> RingBuffer {
+        assert!(cap_frames > 0 && frame_len > 0, "degenerate ring");
+        RingBuffer {
+            buf: vec![0; cap_frames * frame_len],
+            frame_len,
+            cap_frames,
+            head: 0,
+            filled: 0,
+            seen: 0,
+        }
+    }
+
+    pub fn push(&mut self, frame: &[i8]) {
+        assert_eq!(frame.len(), self.frame_len, "frame length");
+        let at = self.head * self.frame_len;
+        self.buf[at..at + self.frame_len].copy_from_slice(frame);
+        self.head = (self.head + 1) % self.cap_frames;
+        self.filled = (self.filled + 1).min(self.cap_frames);
+        self.seen += 1;
+    }
+
+    pub fn seen(&self) -> u64 {
+        self.seen
+    }
+
+    pub fn filled(&self) -> usize {
+        self.filled
+    }
+
+    pub fn frame_len(&self) -> usize {
+        self.frame_len
+    }
+
+    pub fn cap_frames(&self) -> usize {
+        self.cap_frames
+    }
+
+    /// Copy the newest `frames` frames into `out`, oldest of the selection
+    /// first. Allocation-free; panics if more frames are asked for than
+    /// held or `out` is missized.
+    pub fn copy_last_into(&self, frames: usize, out: &mut [i8]) {
+        assert!(frames <= self.filled, "ring holds {} < {frames} frames", self.filled);
+        assert_eq!(out.len(), frames * self.frame_len, "output length");
+        // physical slot of the oldest held frame
+        let base = (self.head + self.cap_frames - self.filled) % self.cap_frames;
+        let skip = self.filled - frames;
+        for j in 0..frames {
+            let slot = (base + skip + j) % self.cap_frames;
+            let src = slot * self.frame_len;
+            out[j * self.frame_len..(j + 1) * self.frame_len]
+                .copy_from_slice(&self.buf[src..src + self.frame_len]);
+        }
+    }
+
+    /// Newest `frames` frames, oldest-first (allocating convenience).
+    pub fn last_frames(&self, frames: usize) -> Vec<i8> {
+        let mut out = vec![0; frames * self.frame_len];
+        self.copy_last_into(frames, &mut out);
+        out
+    }
+}
+
+/// Geometry of the spatial step kinds (executor-side mirror of the
+/// planner's classification).
+fn geo_of(kind: &StepKind) -> Option<ConvGeometry> {
+    match kind {
+        StepKind::Conv2D { geo, .. }
+        | StepKind::DepthwiseConv2D { geo, .. }
+        | StepKind::AveragePool2D { geo, .. } => Some(*geo),
+        _ => None,
+    }
+}
+
+/// Slide a row-major state buffer up by the delta's rows and append the
+/// delta at the tail. When the delta alone exceeds the buffer, only its
+/// newest rows are kept (a stride skipping more rows than the kernel
+/// reads).
+fn shift_append(buf: &mut [i8], row: usize, delta: &[i8]) {
+    debug_assert_eq!(delta.len() % row, 0);
+    debug_assert_eq!(buf.len() % row, 0);
+    let cap = buf.len() / row;
+    let d = delta.len() / row;
+    if d >= cap {
+        buf.copy_from_slice(&delta[(d - cap) * row..]);
+    } else {
+        buf.copy_within(d * row.., 0);
+        buf[(cap - d) * row..].copy_from_slice(delta);
+    }
+}
+
+/// The pulsed native executor: per-layer states + carry + delta buffers,
+/// all sized once from the certified [`PulsePlan`].
+struct PulseState {
+    compiled: Arc<CompiledModel>,
+    plan: PulsePlan,
+    /// One state buffer per prefix step (`state_rows * in_row` elements;
+    /// empty for pointwise steps) — the planned, disjoint state regions
+    /// the `V403` obligation signs off on.
+    states: Vec<Vec<i8>>,
+    /// Full output of the last prefix step, shifted by `carry_delta` rows
+    /// per pulse and re-fed to the tail.
+    carry: Vec<i8>,
+    /// Delta ping-pong (sized for the widest delta slice in the prefix).
+    da: Vec<i8>,
+    db: Vec<i8>,
+    /// Kernel view staging for the incremental sub-runs.
+    view: Vec<i8>,
+    /// Tail-range execution buffers (parity-safe sizing).
+    scratch: Scratch,
+}
+
+impl PulseState {
+    fn new(compiled: Arc<CompiledModel>, plan: PulsePlan) -> PulseState {
+        let states: Vec<Vec<i8>> =
+            plan.prefix.iter().map(|ps| vec![0; ps.state_rows * ps.in_row]).collect();
+        let carry = vec![0; plan.carry_rows * plan.carry_row];
+        let delta_max = plan
+            .prefix
+            .iter()
+            .flat_map(|ps| [ps.delta_in * ps.in_row, ps.delta_out * ps.out_row])
+            .max()
+            .unwrap_or(1);
+        let view_max = plan
+            .prefix
+            .iter()
+            .filter_map(|ps| geo_of(&compiled.steps[ps.step].kind))
+            .map(|g| g.view_bytes())
+            .max()
+            .unwrap_or(0);
+        let scratch = Scratch::for_plan_any_start(&compiled);
+        PulseState {
+            plan,
+            states,
+            carry,
+            da: vec![0; delta_max],
+            db: vec![0; delta_max],
+            view: vec![0; view_max],
+            scratch,
+            compiled,
+        }
+    }
+
+    /// Full-window run that fills every state buffer and the carry as a
+    /// side effect (the first verdict, and the migration re-prime).
+    fn prime(&mut self, window: &[i8]) -> Vec<i8> {
+        let plan = &self.plan;
+        let states = &mut self.states;
+        let carry = &mut self.carry;
+        let tail_start = plan.tail_start;
+        let mut cb = |i: usize, y: &[i8]| {
+            // step i's output is step i+1's input: keep its tail rows
+            if let Some(ps) = plan.prefix.get(i + 1) {
+                if ps.kind == PulseStepKind::Geo {
+                    let keep = ps.state_rows * ps.in_row;
+                    states[i + 1].copy_from_slice(&y[y.len() - keep..]);
+                }
+            }
+            if i + 1 == tail_start {
+                carry.copy_from_slice(y);
+            }
+        };
+        let out =
+            run_plan_from(&self.compiled, 0, window, &mut self.scratch, Some(&mut cb)).to_vec();
+        // the first step's input is the window itself
+        let ps0 = self.plan.prefix[0];
+        if ps0.kind == PulseStepKind::Geo {
+            let keep = ps0.state_rows * ps0.in_row;
+            self.states[0].copy_from_slice(&window[window.len() - keep..]);
+        }
+        out
+    }
+
+    /// One pulse: `pulse_frames` fresh input rows in, one verdict out.
+    /// Pays `delta_out`-row sub-kernels over the prefix plus a full tail
+    /// re-run — exactly the work the plan's `V405` obligation accounts.
+    fn pulse(&mut self, new_rows: &[i8]) -> Vec<i8> {
+        debug_assert_eq!(new_rows.len(), self.plan.pulse_frames * self.plan.frame_len);
+        let kb = backend::active();
+        self.da[..new_rows.len()].copy_from_slice(new_rows);
+        let mut cur_len = new_rows.len();
+        for (idx, ps) in self.plan.prefix.iter().enumerate() {
+            let step = &self.compiled.steps[ps.step];
+            let out_len = ps.delta_out * ps.out_row;
+            match &step.kind {
+                StepKind::Relu { s_x, z_x, s_y, z_y } => {
+                    activation::relu(
+                        &self.da[..cur_len],
+                        *s_x,
+                        *z_x,
+                        *s_y,
+                        *z_y,
+                        &mut self.db[..cur_len],
+                    );
+                }
+                StepKind::Relu6 { s_x, z_x, s_y, z_y } => {
+                    activation::relu6(
+                        &self.da[..cur_len],
+                        *s_x,
+                        *z_x,
+                        *s_y,
+                        *z_y,
+                        &mut self.db[..cur_len],
+                    );
+                }
+                StepKind::Conv2D { geo, filters, z_x, pc } => {
+                    let st = &mut self.states[idx];
+                    shift_append(st, ps.in_row, &self.da[..cur_len]);
+                    let mut g = *geo;
+                    g.in_h = ps.need_rows;
+                    g.out_h = ps.delta_out;
+                    // the sub-geometry has no H boundary by construction
+                    // (pad_top == 0, rows [0, need) all real); only W
+                    // padding can demand the staging view
+                    let vlen = if g.has_boundary() { g.view_bytes() } else { 0 };
+                    conv2d::conv2d_microflow_with(
+                        kb,
+                        &st[..ps.need_rows * ps.in_row],
+                        filters,
+                        &g,
+                        *z_x,
+                        pc,
+                        &mut self.view[..vlen],
+                        &mut self.db[..out_len],
+                    );
+                }
+                StepKind::DepthwiseConv2D { geo, depth_multiplier, filters, z_x, pc } => {
+                    let st = &mut self.states[idx];
+                    shift_append(st, ps.in_row, &self.da[..cur_len]);
+                    let mut g = *geo;
+                    g.in_h = ps.need_rows;
+                    g.out_h = ps.delta_out;
+                    depthwise_conv2d::depthwise_conv2d_microflow_with(
+                        kb,
+                        &st[..ps.need_rows * ps.in_row],
+                        filters,
+                        &g,
+                        *depth_multiplier,
+                        *z_x,
+                        pc,
+                        &mut self.view[..g.view_bytes()],
+                        &mut self.db[..out_len],
+                    );
+                }
+                StepKind::AveragePool2D { geo, z_x, ratio, z_y, act_min, act_max } => {
+                    let st = &mut self.states[idx];
+                    shift_append(st, ps.in_row, &self.da[..cur_len]);
+                    let mut g = *geo;
+                    g.in_h = ps.need_rows;
+                    g.out_h = ps.delta_out;
+                    average_pool2d::average_pool2d_microflow(
+                        &st[..ps.need_rows * ps.in_row],
+                        &g,
+                        *z_x,
+                        *ratio,
+                        *z_y,
+                        *act_min,
+                        *act_max,
+                        &mut self.view[..g.view_bytes()],
+                        &mut self.db[..out_len],
+                    );
+                }
+                other => unreachable!("unstreamable {} survived verification", other.name()),
+            }
+            std::mem::swap(&mut self.da, &mut self.db);
+            cur_len = out_len;
+        }
+        shift_append(&mut self.carry, self.plan.carry_row, &self.da[..cur_len]);
+        if self.plan.tail_start == self.compiled.steps.len() {
+            return self.carry.clone();
+        }
+        run_plan_from(
+            &self.compiled,
+            self.plan.tail_start,
+            &self.carry,
+            &mut self.scratch,
+            None,
+        )
+        .to_vec()
+    }
+}
+
+/// Execution mode of a [`StreamSession`].
+enum StreamBackend {
+    /// Incremental native path driven by a certified [`PulsePlan`].
+    Pulsed(PulseState),
+    /// Full-window re-run of any engine session at the same cadence — the
+    /// replay oracle, and the migration/fallback path.
+    Replay(Session),
+}
+
+/// A stateful streaming session: frames in, verdicts out.
+pub struct StreamSession {
+    ring: RingBuffer,
+    window_rows: usize,
+    frame_len: usize,
+    pulse_frames: usize,
+    out_len: usize,
+    /// Frames accumulated since the last verdict (the next pulse's delta).
+    pending: Vec<i8>,
+    /// Window materialization buffer (prime + replay runs).
+    window_buf: Vec<i8>,
+    backend: StreamBackend,
+}
+
+impl StreamSession {
+    /// Pulsed native session over an already-compiled plan. Plans (and
+    /// certifies — `V4xx`) the pulse pass; errors if the model has no
+    /// streamable prefix.
+    pub fn pulsed(compiled: Arc<CompiledModel>) -> Result<StreamSession> {
+        let plan = PulsePlan::plan(&compiled)?;
+        let (window_rows, frame_len, pulse_frames) =
+            (plan.window_rows, plan.frame_len, plan.pulse_frames);
+        let out_len = compiled.output_len();
+        let state = PulseState::new(compiled, plan);
+        Ok(StreamSession {
+            ring: RingBuffer::new(window_rows, frame_len),
+            window_rows,
+            frame_len,
+            pulse_frames,
+            out_len,
+            pending: Vec::with_capacity(pulse_frames * frame_len),
+            window_buf: vec![0; window_rows * frame_len],
+            backend: StreamBackend::Pulsed(state),
+        })
+    }
+
+    /// Compile a model source and open a pulsed session over it
+    /// (certified, non-paged).
+    pub fn open(source: impl Into<ModelSource>) -> Result<StreamSession> {
+        let model = source.into().into_model()?;
+        let compiled = CompiledModel::compile(&model, CompileOptions::default())
+            .context("compiling stream model")?;
+        StreamSession::pulsed(Arc::new(compiled))
+    }
+
+    /// Replay session: a full-window re-run of `session` at every verdict
+    /// point — same cadence contract as the pulsed path, over any engine.
+    /// This is the oracle the pulsed path is asserted bit-exact against.
+    pub fn replay(session: Session, pulse_frames: usize) -> Result<StreamSession> {
+        let shape = session.signature().input.shape.clone();
+        let [h, w, c] = shape[..] else {
+            bail!("streaming needs a rank-3 [H,W,C] input, got {shape:?}");
+        };
+        if pulse_frames == 0 || pulse_frames > h {
+            bail!("pulse of {pulse_frames} frames outside window {h}");
+        }
+        let frame_len = w * c;
+        let out_len = session.output_len();
+        Ok(StreamSession {
+            ring: RingBuffer::new(h, frame_len),
+            window_rows: h,
+            frame_len,
+            pulse_frames,
+            out_len,
+            pending: Vec::new(),
+            window_buf: vec![0; h * frame_len],
+            backend: StreamBackend::Replay(session),
+        })
+    }
+
+    /// Feed one frame; `Some(verdict)` when a full window has been seen
+    /// and the pulse cadence lands on this frame, `None` otherwise
+    /// (warmup, or mid-pulse).
+    pub fn push(&mut self, frame: &[i8]) -> Result<Option<Vec<i8>>> {
+        if frame.len() != self.frame_len {
+            bail!("frame length {} != {}", frame.len(), self.frame_len);
+        }
+        self.ring.push(frame);
+        let seen = self.ring.seen();
+        let w = self.window_rows as u64;
+        if seen < w {
+            return Ok(None);
+        }
+        if seen == w {
+            // window just filled: the priming verdict
+            self.ring.copy_last_into(self.window_rows, &mut self.window_buf);
+            let v = match &mut self.backend {
+                StreamBackend::Pulsed(ps) => ps.prime(&self.window_buf),
+                StreamBackend::Replay(s) => s.run(&self.window_buf)?,
+            };
+            self.pending.clear();
+            return Ok(Some(v));
+        }
+        self.pending.extend_from_slice(frame);
+        if (seen - w) % self.pulse_frames as u64 != 0 {
+            return Ok(None);
+        }
+        let v = match &mut self.backend {
+            StreamBackend::Pulsed(ps) => ps.pulse(&self.pending),
+            StreamBackend::Replay(s) => {
+                self.ring.copy_last_into(self.window_rows, &mut self.window_buf);
+                s.run(&self.window_buf)?
+            }
+        };
+        self.pending.clear();
+        Ok(Some(v))
+    }
+
+    /// Total frames this session has consumed.
+    pub fn frames_seen(&self) -> u64 {
+        self.ring.seen()
+    }
+
+    /// Frames pushed since the last verdict (`0` right after a verdict);
+    /// a migration must re-feed this many frames past the last boundary
+    /// window to land the fresh session on the same cadence.
+    pub fn phase(&self) -> usize {
+        if self.ring.seen() < self.window_rows as u64 {
+            return 0;
+        }
+        ((self.ring.seen() - self.window_rows as u64) % self.pulse_frames as u64) as usize
+    }
+
+    pub fn window_rows(&self) -> usize {
+        self.window_rows
+    }
+
+    pub fn frame_len(&self) -> usize {
+        self.frame_len
+    }
+
+    pub fn pulse_frames(&self) -> usize {
+        self.pulse_frames
+    }
+
+    pub fn out_len(&self) -> usize {
+        self.out_len
+    }
+
+    /// The certified pulse plan (pulsed mode only).
+    pub fn plan(&self) -> Option<&PulsePlan> {
+        match &self.backend {
+            StreamBackend::Pulsed(ps) => Some(&ps.plan),
+            StreamBackend::Replay(_) => None,
+        }
+    }
+
+    /// `"pulsed"` or `"replay"` (metrics / debug label).
+    pub fn mode(&self) -> &'static str {
+        match &self.backend {
+            StreamBackend::Pulsed(_) => "pulsed",
+            StreamBackend::Replay(_) => "replay",
+        }
+    }
+}
+
+impl std::fmt::Debug for StreamSession {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("StreamSession")
+            .field("mode", &self.mode())
+            .field("window_rows", &self.window_rows)
+            .field("pulse_frames", &self.pulse_frames)
+            .field("frames_seen", &self.ring.seen())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::Engine;
+    use crate::util::Prng;
+
+    #[test]
+    fn ring_materializes_logical_order_across_wraps() {
+        let mut r = RingBuffer::new(3, 2);
+        for f in 0..7i8 {
+            r.push(&[f, -f]);
+        }
+        assert_eq!(r.seen(), 7);
+        assert_eq!(r.filled(), 3);
+        assert_eq!(r.last_frames(3), vec![4, -4, 5, -5, 6, -6]);
+        assert_eq!(r.last_frames(2), vec![5, -5, 6, -6]);
+        let mut out = vec![0; 2];
+        r.copy_last_into(1, &mut out);
+        assert_eq!(out, vec![6, -6]);
+    }
+
+    #[test]
+    fn shift_append_keeps_the_newest_rows() {
+        let mut buf = vec![1, 2, 3, 4, 5, 6]; // 3 rows of 2
+        shift_append(&mut buf, 2, &[7, 8]);
+        assert_eq!(buf, vec![3, 4, 5, 6, 7, 8]);
+        shift_append(&mut buf, 2, &[9, 10, 11, 12]);
+        assert_eq!(buf, vec![7, 8, 9, 10, 11, 12]);
+        // delta wider than the buffer: keep its newest rows only
+        shift_append(&mut buf, 2, &[1, 2, 3, 4, 5, 6, 7, 8]);
+        assert_eq!(buf, vec![3, 4, 5, 6, 7, 8]);
+    }
+
+    #[test]
+    fn warmup_yields_none_then_primes() {
+        let m = crate::synth::stream_conv_chain(&mut Prng::new(3), 1);
+        let mut s = StreamSession::open(&m).unwrap();
+        let mut rng = Prng::new(4);
+        for i in 0..s.window_rows() - 1 {
+            let frame = rng.i8_vec(s.frame_len());
+            assert!(s.push(&frame).unwrap().is_none(), "verdict before window filled (frame {i})");
+        }
+        let frame = rng.i8_vec(s.frame_len());
+        let v = s.push(&frame).unwrap().expect("priming verdict");
+        assert_eq!(v.len(), s.out_len());
+    }
+
+    #[test]
+    fn pulsed_matches_native_replay_on_every_frame() {
+        let m = crate::synth::stream_conv_chain(&mut Prng::new(5), 2);
+        let mut pulsed = StreamSession::open(&m).unwrap();
+        let oracle =
+            Session::builder(&m).engine(Engine::MicroFlow).build().unwrap();
+        let mut replay = StreamSession::replay(oracle, pulsed.pulse_frames()).unwrap();
+        let mut rng = Prng::new(6);
+        let mut verdicts = 0;
+        for i in 0..pulsed.window_rows() * 4 {
+            let frame = rng.i8_vec(pulsed.frame_len());
+            let a = pulsed.push(&frame).unwrap();
+            let b = replay.push(&frame).unwrap();
+            assert_eq!(a, b, "frame {i}");
+            if a.is_some() {
+                verdicts += 1;
+            }
+        }
+        assert!(verdicts > 1, "cadence never fired");
+    }
+}

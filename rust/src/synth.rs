@@ -161,6 +161,225 @@ pub fn random_conv(rng: &mut Prng) -> MfbModel {
     model(tensors, operators, 3)
 }
 
+/// Append one VALID-padded Conv2D under the error-gain bound; returns the
+/// new activation tensor index. VALID + stride `(sh, 1)` keeps the layer
+/// pulse-streamable (no top pad, no bottom overhang), which is what the
+/// streaming generators below rely on.
+fn push_valid_conv(
+    tensors: &mut Vec<TensorDef>,
+    operators: &mut Vec<Operator>,
+    rng: &mut Prng,
+    cur: usize,
+    name: &str,
+    kh: usize,
+    kw: usize,
+    sh: usize,
+    c_out: usize,
+) -> usize {
+    let [_, h, w, c] = tensors[cur].dims[..] else { panic!("conv input must be [1,H,W,C]") };
+    let (oh, ow) = out_dims(h, w, kh, kw, sh, 1, Padding::Valid).unwrap();
+    let s_x = tensors[cur].qparams.scale;
+    let s_f = rng.f32_range(0.01, 0.05);
+    let window = kh * kw * c;
+    let s_y = s_x * s_f * (W_MAX as f32) * (window as f32) / GAIN;
+    let z_y = rng.range_i64(-10, 10) as i32;
+    let f_idx = tensors.len();
+    tensors.push(i8_tensor(
+        &format!("{name}.f"),
+        vec![c_out, kh, kw, c],
+        s_f,
+        small_weights(rng, c_out * window),
+    ));
+    let b_idx = tensors.len();
+    tensors.push(i32_tensor(&format!("{name}.b"), vec![c_out], s_x * s_f, rng.i32_vec(c_out, -100, 100)));
+    let y_idx = tensors.len();
+    tensors.push(act_tensor(&format!("{name}.y"), vec![1, oh, ow, c_out], s_y, z_y));
+    operators.push(Operator {
+        opcode: OpCode::Conv2D,
+        version: 1,
+        inputs: vec![cur as i32, f_idx as i32, b_idx as i32],
+        outputs: vec![y_idx as i32],
+        options: OpOptions::Conv2D {
+            stride: (sh, 1),
+            padding: Padding::Valid,
+            fused_act: (rng.below(2)) as u8,
+        },
+    });
+    y_idx
+}
+
+/// Append a FullyConnected head flattening the current activation to `n`
+/// logits.
+fn push_fc_head(
+    tensors: &mut Vec<TensorDef>,
+    operators: &mut Vec<Operator>,
+    rng: &mut Prng,
+    cur: usize,
+    n: usize,
+) -> usize {
+    let k: usize = tensors[cur].dims[1..].iter().product();
+    let s_x = tensors[cur].qparams.scale;
+    let s_w = rng.f32_range(0.01, 0.05);
+    let s_y = s_x * s_w * (W_MAX as f32) * (k as f32) / GAIN;
+    let w_idx = tensors.len();
+    tensors.push(i8_tensor("head.w", vec![k, n], s_w, small_weights(rng, k * n)));
+    let b_idx = tensors.len();
+    tensors.push(i32_tensor("head.b", vec![n], s_x * s_w, rng.i32_vec(n, -100, 100)));
+    let y_idx = tensors.len();
+    tensors.push(act_tensor("head.y", vec![1, n], s_y, rng.range_i64(-10, 10) as i32));
+    operators.push(Operator {
+        opcode: OpCode::FullyConnected,
+        version: 1,
+        inputs: vec![cur as i32, w_idx as i32, b_idx as i32],
+        outputs: vec![y_idx as i32],
+        options: OpOptions::FullyConnected { fused_act: 0 },
+    });
+    y_idx
+}
+
+/// Append a standalone Relu (scale-preserving, so it never amplifies the
+/// ±1 agreement bound).
+fn push_relu(tensors: &mut Vec<TensorDef>, operators: &mut Vec<Operator>, cur: usize, name: &str) -> usize {
+    let dims = tensors[cur].dims.clone();
+    let qp = tensors[cur].qparams;
+    let y_idx = tensors.len();
+    tensors.push(act_tensor(name, dims, qp.scale, qp.zero_point));
+    operators.push(Operator {
+        opcode: OpCode::Relu,
+        version: 1,
+        inputs: vec![cur as i32],
+        outputs: vec![y_idx as i32],
+        options: OpOptions::None,
+    });
+    y_idx
+}
+
+/// Streamable conv chain: `[1,H,W,C]` input, `depth` VALID Conv2D layers
+/// (occasionally stride 2 along H, sometimes with a standalone Relu in
+/// between), then a FullyConnected head. Every spatial layer is pad-free
+/// in H, so the whole conv prefix pulses — these are the streaming
+/// subsystem's conformance workhorses.
+pub fn stream_conv_chain(rng: &mut Prng, depth: usize) -> MfbModel {
+    let h = 12 + rng.below(8) as usize;
+    let w = rng.range_i64(3, 5) as usize;
+    let c = rng.range_i64(1, 2) as usize;
+    let mut tensors =
+        vec![act_tensor("in", vec![1, h, w, c], rng.f32_range(0.02, 0.1), rng.range_i64(-5, 5) as i32)];
+    let mut operators = Vec::new();
+    let mut cur = 0usize;
+    for layer in 0..depth {
+        let [_, ch, cw, _] = tensors[cur].dims[..] else { unreachable!() };
+        let kh = 2 + rng.below(2) as usize;
+        let kw = rng.range_i64(1, cw as i64) as usize;
+        // stride 2 only while the map stays tall enough for deeper layers
+        let sh = if (ch - kh) / 2 + 1 >= 4 && rng.below(2) == 0 { 2 } else { 1 };
+        let c_out = rng.range_i64(1, 3) as usize;
+        cur = push_valid_conv(&mut tensors, &mut operators, rng, cur, &format!("c{layer}"), kh, kw, sh, c_out);
+        if rng.below(3) == 0 {
+            cur = push_relu(&mut tensors, &mut operators, cur, &format!("r{layer}"));
+        }
+    }
+    let classes = rng.range_i64(3, 6) as usize;
+    cur = push_fc_head(&mut tensors, &mut operators, rng, cur, classes);
+    model(tensors, operators, cur)
+}
+
+/// Mixed streamable chain: Conv2D → Relu → DepthwiseConv2D → AveragePool2D
+/// → FC head, all VALID / pad-free in H (depthwise and pooling both carry
+/// pulse state).
+pub fn stream_mixed(rng: &mut Prng) -> MfbModel {
+    let (h, w) = (14 + rng.below(4) as usize, rng.range_i64(3, 4) as usize);
+    let c = rng.range_i64(1, 2) as usize;
+    let mut tensors =
+        vec![act_tensor("in", vec![1, h, w, c], rng.f32_range(0.02, 0.1), rng.range_i64(-5, 5) as i32)];
+    let mut operators = Vec::new();
+    let mut cur = push_valid_conv(&mut tensors, &mut operators, rng, 0, "c0", 3, 2, 1, 2);
+    cur = push_relu(&mut tensors, &mut operators, cur, "r0");
+
+    // depthwise: [1,KH,KW,Cout] filters, mult 1, VALID, stride 1
+    let [_, dh, dw, dc] = tensors[cur].dims[..] else { unreachable!() };
+    let (kh, kw) = (2usize, 2.min(dw));
+    let (oh, ow) = out_dims(dh, dw, kh, kw, 1, 1, Padding::Valid).unwrap();
+    let s_x = tensors[cur].qparams.scale;
+    let s_f = rng.f32_range(0.01, 0.05);
+    let s_y = s_x * s_f * (W_MAX as f32) * ((kh * kw) as f32) / GAIN;
+    let f_idx = tensors.len();
+    tensors.push(i8_tensor("dw.f", vec![1, kh, kw, dc], s_f, small_weights(rng, kh * kw * dc)));
+    let b_idx = tensors.len();
+    tensors.push(i32_tensor("dw.b", vec![dc], s_x * s_f, rng.i32_vec(dc, -100, 100)));
+    let y_idx = tensors.len();
+    tensors.push(act_tensor("dw.y", vec![1, oh, ow, dc], s_y, rng.range_i64(-10, 10) as i32));
+    operators.push(Operator {
+        opcode: OpCode::DepthwiseConv2D,
+        version: 1,
+        inputs: vec![cur as i32, f_idx as i32, b_idx as i32],
+        outputs: vec![y_idx as i32],
+        options: OpOptions::DepthwiseConv2D {
+            stride: (1, 1),
+            padding: Padding::Valid,
+            fused_act: 0,
+            depth_multiplier: 1,
+        },
+    });
+    cur = y_idx;
+
+    // average pool: VALID 2x1 window, stride (2,1) — scale-preserving
+    let [_, ph, pw, pc] = tensors[cur].dims[..] else { unreachable!() };
+    let (poh, pow_) = out_dims(ph, pw, 2, 1, 2, 1, Padding::Valid).unwrap();
+    let qp = tensors[cur].qparams;
+    let y_idx = tensors.len();
+    tensors.push(act_tensor("pool.y", vec![1, poh, pow_, pc], qp.scale, qp.zero_point));
+    operators.push(Operator {
+        opcode: OpCode::AveragePool2D,
+        version: 1,
+        inputs: vec![cur as i32],
+        outputs: vec![y_idx as i32],
+        options: OpOptions::AveragePool2D {
+            filter: (2, 1),
+            stride: (2, 1),
+            padding: Padding::Valid,
+            fused_act: 0,
+        },
+    });
+    cur = y_idx;
+
+    cur = push_fc_head(&mut tensors, &mut operators, rng, cur, rng.range_i64(3, 5) as usize);
+    model(tensors, operators, cur)
+}
+
+/// Degenerate-by-design: one VALID conv whose kernel spans the whole
+/// window (`k_h == H`), so a pulse recomputes everything — the planner
+/// must reject it with `V405` (no strict savings).
+pub fn stream_full_height_conv(rng: &mut Prng) -> MfbModel {
+    let (h, w, c) = (8usize, 3usize, 1usize);
+    let mut tensors =
+        vec![act_tensor("in", vec![1, h, w, c], rng.f32_range(0.02, 0.1), rng.range_i64(-5, 5) as i32)];
+    let mut operators = Vec::new();
+    let cur = push_valid_conv(&mut tensors, &mut operators, rng, 0, "c0", h, 2, 1, 2);
+    model(tensors, operators, cur)
+}
+
+/// The seeded streaming model zoo: every member has a certifiable pulse
+/// plan. The streaming conformance suite and `benches/stream_latency.rs`
+/// both iterate this set.
+pub fn stream_zoo(seed: u64) -> Vec<(String, MfbModel)> {
+    let mut rng = Prng::new(seed);
+    let mut out = Vec::new();
+    for depth in [1usize, 2, 3] {
+        out.push((format!("stream-conv-d{depth}"), stream_conv_chain(&mut rng, depth)));
+    }
+    out.push(("stream-mixed".to_string(), stream_mixed(&mut rng)));
+    // guaranteed stride-2 member (pulse_frames > 1): k3 s2 conv, then k2 s1
+    let mut tensors =
+        vec![act_tensor("in", vec![1, 16, 3, 1], 0.05, rng.range_i64(-5, 5) as i32)];
+    let mut operators = Vec::new();
+    let mut cur = push_valid_conv(&mut tensors, &mut operators, &mut rng, 0, "c0", 3, 2, 2, 2);
+    cur = push_valid_conv(&mut tensors, &mut operators, &mut rng, cur, "c1", 2, 2, 1, 2);
+    cur = push_fc_head(&mut tensors, &mut operators, &mut rng, cur, 4);
+    out.push(("stream-stride2".to_string(), model(tensors, operators, cur)));
+    out
+}
+
 /// The seeded synthetic model zoo: a labelled sample of everything the
 /// generators produce (FC chains of several depths plus conv models).
 /// `microflow audit --synth-zoo` certifies every member, and CI runs that

@@ -1,0 +1,257 @@
+//! Streaming conformance suite — pulsed sessions vs the full-window
+//! replay oracle, across engines, under faults, no build artifacts
+//! needed.
+//!
+//! Every test derives all randomness from one seed so failures reproduce
+//! exactly. The seed defaults to a fixed value (CI determinism — see
+//! `.github/workflows/ci.yml`) and can be overridden for exploration:
+//!
+//! ```sh
+//! MICROFLOW_STRESS_SEED=12345 cargo test --test stream_conformance
+//! ```
+//!
+//! Gates (the streaming contract from `microflow::stream`):
+//! * **bit-exact pulses**: for every model of the seeded streaming zoo,
+//!   the pulsed native session returns *exactly* what a full-window
+//!   re-run of the native engine returns, at **every** push — warmup
+//!   `None`s included, across several whole windows of frames;
+//! * the replay oracle is **engine-generic**: an interp-backed replay
+//!   session equals a one-shot interp run over the materialized window
+//!   at every verdict boundary;
+//! * **cross-engine** verdicts stay within the established ±1 interp
+//!   requantization bound;
+//! * every zoo plan **certifies** (`V401`–`V405`) and is **strictly
+//!   cheaper** than full recompute by the `sim::cost` MAC model;
+//! * the coordinator's streaming lane survives **concurrent streams +
+//!   mid-stream replica ejection**: every delivered verdict is bit-exact
+//!   to an uninterrupted single-session oracle at the same frame index,
+//!   and the per-stream lifecycle identity
+//!   `completed + shed + cancelled + failed == submitted` holds exactly.
+
+use std::sync::Arc;
+use std::thread;
+
+use microflow::api::{Engine, Session};
+use microflow::compiler::plan::{CompileOptions, CompiledModel};
+use microflow::compiler::PulsePlan;
+use microflow::coordinator::{StreamFault, StreamHost, StreamHostConfig, StreamPush};
+use microflow::stream::StreamSession;
+use microflow::synth::stream_zoo;
+use microflow::util::Prng;
+
+const DEFAULT_SEED: u64 = 0x5EED_2026;
+
+fn seed() -> u64 {
+    match std::env::var("MICROFLOW_STRESS_SEED") {
+        Ok(v) => v.parse().unwrap_or_else(|_| panic!("bad MICROFLOW_STRESS_SEED {v:?}")),
+        Err(_) => DEFAULT_SEED,
+    }
+}
+
+fn compile(m: &microflow::format::mfb::MfbModel) -> Arc<CompiledModel> {
+    Arc::new(CompiledModel::compile(m, CompileOptions::default()).unwrap())
+}
+
+/// Pulsed native == full-window native replay at EVERY push, warmup
+/// `None`s included, for every member of the streaming zoo.
+#[test]
+fn pulsed_matches_native_replay_at_every_frame_across_the_zoo() {
+    let seed = seed();
+    eprintln!("stream seed = {seed} (override with MICROFLOW_STRESS_SEED)");
+    for (name, m) in stream_zoo(seed) {
+        let compiled = compile(&m);
+        let plan = PulsePlan::plan(&compiled).unwrap();
+        let mut pulsed = StreamSession::pulsed(compiled.clone()).unwrap();
+        let oracle = Session::builder(&m).engine(Engine::MicroFlow).build().unwrap();
+        let mut replay = StreamSession::replay(oracle, plan.pulse_frames).unwrap();
+        let mut rng = Prng::new(seed ^ 0x11);
+        let total = plan.window_rows * 3 + plan.pulse_frames;
+        let mut verdicts = 0usize;
+        for i in 0..total {
+            let f = rng.i8_vec(plan.frame_len);
+            let a = pulsed.push(&f).unwrap();
+            let b = replay.push(&f).unwrap();
+            assert_eq!(a, b, "seed {seed} model {name}: diverged at frame {i}");
+            if i + 1 < plan.window_rows {
+                assert!(a.is_none(), "seed {seed} model {name}: verdict before the window filled");
+            }
+            if a.is_some() {
+                verdicts += 1;
+            }
+        }
+        assert!(verdicts > 1, "seed {seed} model {name}: pulse cadence never fired twice");
+    }
+}
+
+/// The replay oracle is engine-generic: an interp-backed replay session
+/// equals a one-shot interp run over the materialized window at every
+/// verdict boundary.
+#[test]
+fn interp_replay_matches_interp_one_shot_windows() {
+    let seed = seed();
+    for (name, m) in stream_zoo(seed) {
+        let compiled = compile(&m);
+        let plan = PulsePlan::plan(&compiled).unwrap();
+        let interp = Session::builder(&m).engine(Engine::Interp).build().unwrap();
+        let mut replay = StreamSession::replay(interp, plan.pulse_frames).unwrap();
+        let mut one_shot = Session::builder(&m).engine(Engine::Interp).build().unwrap();
+        let mut rng = Prng::new(seed ^ 0x22);
+        let mut history: Vec<i8> = Vec::new();
+        let window_len = plan.window_rows * plan.frame_len;
+        for i in 0..plan.window_rows * 3 {
+            let f = rng.i8_vec(plan.frame_len);
+            history.extend_from_slice(&f);
+            if let Some(v) = replay.push(&f).unwrap() {
+                let window = &history[history.len() - window_len..];
+                let expect = one_shot.run(window).unwrap();
+                assert_eq!(v, expect, "seed {seed} model {name}: interp replay != one-shot at frame {i}");
+            }
+        }
+    }
+}
+
+/// Pulsed native vs interp replay: the ±1 requantization bound that
+/// holds for one-shot runs holds per verdict element on streams too.
+#[test]
+fn cross_engine_verdicts_agree_within_one_lsb() {
+    let seed = seed();
+    for (name, m) in stream_zoo(seed) {
+        let compiled = compile(&m);
+        let plan = PulsePlan::plan(&compiled).unwrap();
+        let mut pulsed = StreamSession::pulsed(compiled.clone()).unwrap();
+        let interp = Session::builder(&m).engine(Engine::Interp).build().unwrap();
+        let mut replay = StreamSession::replay(interp, plan.pulse_frames).unwrap();
+        let mut rng = Prng::new(seed ^ 0x33);
+        for i in 0..plan.window_rows * 2 {
+            let f = rng.i8_vec(plan.frame_len);
+            let a = pulsed.push(&f).unwrap();
+            let b = replay.push(&f).unwrap();
+            assert_eq!(a.is_some(), b.is_some(), "seed {seed} model {name}: cadence split at frame {i}");
+            if let (Some(a), Some(b)) = (a, b) {
+                for (j, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+                    let d = (*x as i16 - *y as i16).abs();
+                    assert!(
+                        d <= 1,
+                        "seed {seed} model {name}: frame {i} elem {j}: native {x} vs interp {y}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Every zoo plan certifies (`PulsePlan::plan` runs the `V4xx` verifier)
+/// and is strictly cheaper than a full-window recompute by the
+/// `sim::cost` MAC model — the incremental path must pay for itself.
+#[test]
+fn every_zoo_plan_certifies_and_is_strictly_cheaper_than_full_recompute() {
+    let seed = seed();
+    for (name, m) in stream_zoo(seed) {
+        let compiled = compile(&m);
+        let plan = PulsePlan::plan(&compiled).unwrap();
+        let pulse = plan.pulse_macs(&compiled);
+        let full = plan.full_macs(&compiled);
+        assert!(
+            pulse < full,
+            "seed {seed} model {name}: pulsed work {pulse} MACs not below full {full} MACs"
+        );
+        assert!(plan.total_state_bytes() > 0, "seed {seed} model {name}: plan carries no state");
+    }
+}
+
+/// Concurrent streams on a faulty host: worker 0 fails every push and is
+/// ejected mid-stream; every stream keeps its lifecycle identity, and
+/// every verdict that *was* delivered is bit-exact to an uninterrupted
+/// single-session oracle fed the same frames — migration replays the
+/// host-side ring, so no frame is ever lost.
+#[test]
+fn concurrent_streams_survive_ejection_with_identity_and_bit_exact_verdicts() {
+    let seed = seed();
+    eprintln!("stream seed = {seed} (override with MICROFLOW_STRESS_SEED)");
+    let (name, m) = stream_zoo(seed).into_iter().next().unwrap();
+    let compiled = compile(&m);
+    let plan = PulsePlan::plan(&compiled).unwrap();
+    let host = Arc::new(
+        StreamHost::start(compiled.clone(), StreamHostConfig { replicas: 2, eject_after: 2 })
+            .unwrap(),
+    );
+    // worker 0 fails every push: two consecutive failures quarantine it,
+    // and the next tick ejects + migrates its streams
+    host.inject_fault(StreamFault { worker: 0, every: 1 });
+
+    let streams = 4usize;
+    let frames = plan.window_rows * 2 + plan.pulse_frames * 4;
+    let mut handles = Vec::new();
+    for s in 0..streams {
+        let host = Arc::clone(&host);
+        let compiled = Arc::clone(&compiled);
+        let frame_len = plan.frame_len;
+        let model_name = name.clone();
+        handles.push(thread::spawn(move || {
+            // uninterrupted oracle over the same deterministic frames
+            let mut oracle = StreamSession::pulsed(compiled).unwrap();
+            let mut rng = Prng::new(seed ^ (0x9E3779B9 * (s as u64 + 1)));
+            let id = host.open(format!("conf-{s}")).unwrap();
+            let mut delivered = 0usize;
+            let mut soft = 0usize;
+            for i in 0..frames {
+                let f = rng.i8_vec(frame_len);
+                let expect = oracle.push(&f).unwrap();
+                match host.push(id, &f).unwrap() {
+                    StreamPush::Verdict(v) => {
+                        let e = expect.unwrap_or_else(|| {
+                            panic!("seed {seed} model {model_name} stream {s}: spurious verdict at frame {i}")
+                        });
+                        assert_eq!(
+                            v, e,
+                            "seed {seed} model {model_name} stream {s}: verdict at frame {i} not bit-exact"
+                        );
+                        delivered += 1;
+                    }
+                    StreamPush::Pending => {}
+                    StreamPush::Shed | StreamPush::Failed(_) => soft += 1,
+                    StreamPush::Closed => panic!("stream {s} closed early"),
+                }
+            }
+            let counters = host.close(id).unwrap();
+            assert!(
+                counters.identity_holds(),
+                "seed {seed} model {model_name} stream {s}: lifecycle identity broken: {counters:?}"
+            );
+            assert_eq!(
+                counters.submitted, frames as u64,
+                "seed {seed} stream {s}: submitted != frames pushed"
+            );
+            (delivered, soft)
+        }));
+    }
+    // tick the health pass while pushes are in flight so ejection and
+    // migration race real traffic
+    let mut ejected = Vec::new();
+    for _ in 0..200 {
+        let report = host.tick();
+        ejected.extend(report.ejected);
+        thread::yield_now();
+        if host.snapshot().streams.is_empty() {
+            break;
+        }
+    }
+    let mut total_delivered = 0usize;
+    let mut total_soft = 0usize;
+    for h in handles {
+        let (delivered, soft) = h.join().unwrap();
+        total_delivered += delivered;
+        total_soft += soft;
+    }
+    // drain any remaining quarantine
+    ejected.extend(host.tick().ejected);
+    assert!(
+        ejected.iter().any(|w| w == "stream-w0"),
+        "seed {seed}: the faulty replica was never ejected (ejected = {ejected:?})"
+    );
+    assert!(total_soft > 0, "seed {seed}: the fault never fired — test lost its teeth");
+    assert!(
+        total_delivered > 0,
+        "seed {seed}: no verdicts survived ejection — migration replay is broken"
+    );
+}
