@@ -1,0 +1,104 @@
+//! Per-step kernel profile bench — the observability plane's profiling
+//! tier over the synthetic zoo.
+//!
+//! Runs WITHOUT build artifacts: every seeded-zoo model builds a native
+//! session, attaches a [`StepProfiler`] (a fixed `[StepStat; MAX_STEPS]`
+//! table — the observed hot path stays allocation-free) and runs N
+//! profiled inferences. Two invariants are enforced, not just reported:
+//!
+//! * the profile rows must cover **every** plan step exactly once, in
+//!   step order, with exactly N invocations each — a row that drops out
+//!   or double-counts means the observer hook missed a step;
+//! * the profiled outputs stay bit-exact with unprofiled runs (the
+//!   observer is read-only; attaching it must not perturb inference).
+//!
+//! Besides the human table, writes machine-readable `BENCH_profile.json`
+//! at the repo root (per-model step count, per-step ns totals, hottest
+//! step) so per-layer cost trajectories are comparable across PRs.
+//! `MICROFLOW_BENCH_SMOKE=1` cuts iteration counts for CI smoke runs.
+
+use microflow::api::{Engine, Session};
+use microflow::bench_support::smoke_mode;
+use microflow::kernels::microkernel::backend;
+use microflow::observe::StepProfiler;
+use microflow::sim::report::{emit, emit_json, Table};
+use microflow::synth;
+use microflow::util::json::Json;
+use microflow::util::Prng;
+
+fn main() {
+    println!("kernel backend: {}", backend::active().name());
+    let (warmup, runs) = if smoke_mode() { (1, 10) } else { (10, 200) };
+    let mut t = Table::new(
+        "per-step kernel profile (native engine, StepProfiler attached)",
+        &["model", "steps", "hottest step", "hottest ns/call", "total ns/run"],
+    );
+    let mut rows: Vec<Json> = Vec::new();
+    for (name, m) in synth::zoo(0x0B5E) {
+        let mut session = Session::builder(&m).engine(Engine::MicroFlow).build().unwrap();
+        let mut rng = Prng::new(0xF00D ^ m.file_bytes as u64);
+        let input = rng.i8_vec(session.input_len());
+        let mut expected = vec![0i8; session.output_len()];
+        session.run_into(&input, &mut expected).unwrap();
+        let mut out = vec![0i8; session.output_len()];
+        let mut profiler = StepProfiler::new();
+        for _ in 0..warmup {
+            session.run_into_observed(&input, &mut out, &mut profiler).unwrap();
+        }
+        profiler.reset();
+        for _ in 0..runs {
+            session.run_into_observed(&input, &mut out, &mut profiler).unwrap();
+        }
+        assert_eq!(out, expected, "{name}: profiled run diverged from the unprofiled oracle");
+        let kinds = session.step_kinds();
+        let profile = profiler.rows(&kinds);
+        // coverage invariant: one row per plan step, in order, N calls each
+        assert_eq!(profile.len(), kinds.len(), "{name}: profile rows must cover every step");
+        assert_eq!(profiler.overflow(), 0, "{name}: zoo models must fit the fixed table");
+        for (i, row) in profile.iter().enumerate() {
+            assert_eq!(row.step, i, "{name}: rows must be in step order");
+            assert_eq!(
+                row.invocations, runs as u64,
+                "{name} step {i} ({}): expected exactly {runs} invocations",
+                row.kind
+            );
+        }
+        let total_ns: u64 = profile.iter().map(|r| r.total_ns).sum();
+        let hottest = profile.iter().max_by_key(|r| r.total_ns).unwrap();
+        t.row(vec![
+            name.clone(),
+            profile.len().to_string(),
+            format!("#{} {}", hottest.step, hottest.kind),
+            hottest.ns_per_call().to_string(),
+            format!("{}", total_ns / runs as u64),
+        ]);
+        let steps: Vec<Json> = profile
+            .iter()
+            .map(|r| {
+                Json::obj()
+                    .set("step", r.step)
+                    .set("kind", r.kind)
+                    .set("invocations", r.invocations as i64)
+                    .set("total_ns", r.total_ns as i64)
+                    .set("ns_per_call", r.ns_per_call() as i64)
+            })
+            .collect();
+        rows.push(
+            Json::obj()
+                .set("model", name)
+                .set("steps", steps)
+                .set("total_ns_per_run", (total_ns / runs as u64) as i64)
+                .set("hottest_step", hottest.step)
+                .set("hottest_kind", hottest.kind),
+        );
+    }
+    emit("profile_steps", &t);
+    let doc = Json::obj()
+        .set("bench", "profile_steps")
+        .set("kernel_backend", backend::active().name())
+        .set("runs", runs)
+        .set("smoke", smoke_mode())
+        .set("models", rows);
+    emit_json(if smoke_mode() { "BENCH_profile.smoke" } else { "BENCH_profile" }, &doc);
+    println!("profile_steps OK");
+}

@@ -318,6 +318,49 @@ pub trait InferenceSession: Send {
     /// One quantized inference: int8 in, int8 out, written into `out`.
     fn run_into(&mut self, input: &[i8], out: &mut [i8]) -> Result<()>;
 
+    /// Like [`InferenceSession::run_into`], with a per-step
+    /// [`StepObserver`](crate::observe::StepObserver) attached — the
+    /// profiling path. Engines with a step-granular executor (the native
+    /// engine) override to fire the hooks around every plan step; the
+    /// default just runs unobserved, so attaching a profiler to an
+    /// opaque-executor engine (interp, PJRT) is valid but records nothing.
+    fn run_into_observed(
+        &mut self,
+        input: &[i8],
+        out: &mut [i8],
+        _observer: &mut dyn crate::observe::StepObserver,
+    ) -> Result<()> {
+        self.run_into(input, out)
+    }
+
+    /// Batched [`InferenceSession::run_into_observed`]: the default loops
+    /// the observed single-sample path, allocation-free by construction.
+    fn run_batch_into_observed(
+        &mut self,
+        inputs: &[i8],
+        n: usize,
+        out: &mut [i8],
+        observer: &mut dyn crate::observe::StepObserver,
+    ) -> Result<()> {
+        let (ilen, olen) = (self.signature().input_len(), self.signature().output_len());
+        check_batch(inputs.len(), out.len(), n, ilen, olen)?;
+        for i in 0..n {
+            self.run_into_observed(
+                &inputs[i * ilen..(i + 1) * ilen],
+                &mut out[i * olen..(i + 1) * olen],
+                observer,
+            )?;
+        }
+        Ok(())
+    }
+
+    /// Stable kind names of the session's plan steps, in execution order
+    /// (what per-step profile rows are labelled with). Engines without a
+    /// step-granular plan return `[]`.
+    fn step_kinds(&self) -> Vec<&'static str> {
+        Vec::new()
+    }
+
     /// Execute `n` samples packed in `inputs` (`n * input_len` values),
     /// writing `n * output_len` values into `out`.
     ///
@@ -419,6 +462,33 @@ impl Session {
     /// Allocation-free batched inference (`n` packed samples).
     pub fn run_batch_into(&mut self, inputs: &[i8], n: usize, out: &mut [i8]) -> Result<()> {
         self.inner.run_batch_into(inputs, n, out)
+    }
+
+    /// Single inference with a per-step observer attached (see
+    /// [`InferenceSession::run_into_observed`]). Still allocation-free.
+    pub fn run_into_observed(
+        &mut self,
+        input: &[i8],
+        out: &mut [i8],
+        observer: &mut dyn crate::observe::StepObserver,
+    ) -> Result<()> {
+        self.inner.run_into_observed(input, out, observer)
+    }
+
+    /// Batched inference with a per-step observer attached.
+    pub fn run_batch_into_observed(
+        &mut self,
+        inputs: &[i8],
+        n: usize,
+        out: &mut [i8],
+        observer: &mut dyn crate::observe::StepObserver,
+    ) -> Result<()> {
+        self.inner.run_batch_into_observed(inputs, n, out, observer)
+    }
+
+    /// See [`InferenceSession::step_kinds`].
+    pub fn step_kinds(&self) -> Vec<&'static str> {
+        self.inner.step_kinds()
     }
 
     /// Single inference, allocating the output (convenience).

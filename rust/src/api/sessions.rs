@@ -92,6 +92,21 @@ impl InferenceSession for NativeSession {
         Ok(())
     }
 
+    fn run_into_observed(
+        &mut self,
+        input: &[i8],
+        out: &mut [i8],
+        observer: &mut dyn crate::observe::StepObserver,
+    ) -> Result<()> {
+        check_single(input.len(), out.len(), &self.signature)?;
+        self.engine.predict_into_observed(input, out, observer);
+        Ok(())
+    }
+
+    fn step_kinds(&self) -> Vec<&'static str> {
+        self.engine.compiled().steps.iter().map(|s| s.kind.name()).collect()
+    }
+
     fn buffer_ptrs(&self) -> Vec<usize> {
         self.engine.buffer_ptrs()
     }

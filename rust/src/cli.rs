@@ -13,7 +13,11 @@
 //! * `serve <model>`     — spin up the coordinator under synthetic load,
 //!   as a homogeneous replica set (`--replicas`) or a heterogeneous
 //!   fleet (`--engine-mix microflow:2,tflm:1`); `--stream` serves pulsed
-//!   streaming sessions over the v3 `MFR3` frame-per-chunk protocol.
+//!   streaming sessions over the v3 `MFR3` frame-per-chunk protocol;
+//!   `--metrics-addr` attaches the exposition tier (Prometheus text over
+//!   HTTP and the `STAT` wire op);
+//! * `top <addr>`        — scrape a serving deployment's exposition
+//!   snapshot and render it as per-pool lane/span/profile tables.
 
 use std::collections::HashMap;
 
@@ -164,12 +168,18 @@ USAGE:
                                            (V1xx plan / V2xx memory / V3xx
                                            arithmetic / V4xx pulse streaming /
                                            E4xx decode)
+  microflow audit   <model|path.mfb> --profile [--paging] [--runs N]
+                                           run N profiled inferences (default
+                                           100) and print the per-step kernel
+                                           profile (invocations, total ns,
+                                           ns/call per plan step)
   microflow serve   <model> [--requests N] [--rate RPS] [--backend E]
                     [--replicas R] [--engine-mix MIX] [--batch B]
                     [--no-adaptive] [--paging] [--default-class C]
                     [--shed-after-ms MS] [--autoscale MIN:MAX]
                     [--slo-p95-ms MS] [--tick-ms MS] [--retries N]
                     [--no-breaker] [--chaos SEED[:P]]
+                    [--metrics-addr ADDR] [--profile]
                                            serve synthetic load, print metrics
   microflow serve   <model|synth> --stream [--streams N] [--frames N]
                     [--stream-replicas R] [--seed N] [--chaos SEED[:P]]
@@ -229,6 +239,16 @@ serve options (request lifecycle):
                     transiently, phase-shifted by SEED — deterministic
                     chaos exercising retry, health ejection and the
                     breaker without real hardware faults
+  --metrics-addr ADDR  attach the observability exposition tier: serve a
+                    Prometheus-text snapshot at http://ADDR (e.g.
+                    127.0.0.1:9100; port 0 picks a free port) assembled
+                    only from tick-drained windows, spans and profiles —
+                    the same snapshot the STAT wire op and `microflow
+                    top` read. Exported lane counters hold the identity
+                    completed + shed + cancelled + failed == submitted.
+  --profile         attach the per-step kernel profiler to every worker:
+                    per-layer invocation counts and nanoseconds surface
+                    as microflow_step_* metrics (native-engine pools)
   Replica sessions build through the warm session cache: repeated builds of
   the same model reuse one compiled plan (reported at startup). Metrics are
   reported per pool and per class (p50/p95/p99, shed/cancelled/late);
@@ -248,6 +268,14 @@ serve --stream options (pulsed streaming):
   --chaos SEED[:P]      stream replica 0 fails every P-th push: exercises
                         quarantine, ejection and ring-replay migration
 
+  microflow top <addr> [--wire]            scrape one exposition snapshot from
+                                           a serving deployment and render it
+                                           as per-pool request-lane, span and
+                                           kernel-profile tables. <addr> is the
+                                           --metrics-addr HTTP endpoint; with
+                                           --wire it is the ingress address and
+                                           the snapshot travels over the STAT
+                                           wire op instead
   microflow help                           this text
 
 Models: sine | speech | person (built by `make artifacts`)

@@ -477,7 +477,8 @@ mod tests {
         m.record(QosClass::Interactive, Duration::from_micros(800));
         m.record_submitted(QosClass::Bulk);
         m.record_shed(QosClass::Bulk);
-        let w = m.window();
+        let c = m.window_consumer();
+        let w = m.window(&c);
         let s = TickSignals::observe(&w, m.outstanding(), 2);
         assert_eq!(s.live_replicas, 2);
         assert_eq!(s.submitted, 2);

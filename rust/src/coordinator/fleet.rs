@@ -72,11 +72,13 @@ use anyhow::{ensure, Context, Result};
 use super::autoscale::{
     AutoscalePolicy, AutoscaleStatus, Decision, PolicyState, ScaleAction, ScaleReason, TickSignals,
 };
-use super::metrics::{MetricsSnapshot, ReplicaHealthSnapshot, WindowSnapshot};
+use super::metrics::{MetricsSnapshot, ReplicaHealthSnapshot, WindowConsumer, WindowSnapshot};
 use super::request::{QosClass, QosProfile, Request, SubmitError, Ticket};
 use super::resilience::{BreakerCore, BreakerPolicy, BreakerState, HealthPolicy};
 use super::server::{Server, ServerConfig};
+use super::stream::{StreamHost, StreamHostSnapshot};
 use crate::api::{ReplicaFactory, Session};
+use crate::observe::{SpanWindow, StepProfileRow};
 use crate::tensor::quant::QParams;
 
 /// One replica pool spec: a name (shown in metrics), the session replicas
@@ -182,6 +184,9 @@ struct Pool {
     /// (stored by `tick()`, read by every submit).
     breaker_state: AtomicU8,
     health: Option<HealthPolicy>,
+    /// The claim on this pool's single-consumer metrics window cursor —
+    /// `tick()` drains it through this token and nothing else may.
+    window_consumer: WindowConsumer,
 }
 
 impl Pool {
@@ -202,6 +207,10 @@ pub struct Fleet {
     pools: Vec<Pool>,
     /// Round-robin cursor for dispatch tie-breaking.
     rr: std::sync::atomic::AtomicUsize,
+    /// Stream hosts attached for observability: their per-stream counters
+    /// ride along in [`FleetSnapshot::streams`]. Purely read-side — the
+    /// fleet never drives a host's control loop.
+    stream_hosts: Mutex<Vec<(String, Arc<StreamHost>)>>,
 }
 
 impl Fleet {
@@ -224,6 +233,7 @@ impl Fleet {
                 })
             });
             let breaker = spec.breaker.map(|p| (p, Mutex::new(BreakerCore::new())));
+            let window_consumer = server.metrics.window_consumer();
             running.push(Pool {
                 name: spec.name,
                 profile: spec.profile,
@@ -232,6 +242,7 @@ impl Fleet {
                 breaker,
                 breaker_state: AtomicU8::new(BreakerState::Closed.as_u8()),
                 health: spec.health,
+                window_consumer,
             });
         }
         let sig = running[0].server.signature().clone();
@@ -245,12 +256,24 @@ impl Fleet {
                 sig
             );
         }
-        Ok(Fleet { pools: running, rr: std::sync::atomic::AtomicUsize::new(0) })
+        Ok(Fleet {
+            pools: running,
+            rr: std::sync::atomic::AtomicUsize::new(0),
+            stream_hosts: Mutex::new(Vec::new()),
+        })
+    }
+
+    /// Attach a stream host so its per-stream counters surface in
+    /// [`Fleet::snapshot`] (under `label`). Observability-only: the fleet
+    /// reads `host.snapshot()` and nothing else.
+    pub fn attach_stream_host(&self, label: impl Into<String>, host: Arc<StreamHost>) {
+        self.stream_hosts.lock().unwrap().push((label.into(), host));
     }
 
     /// Wrap an already-running server as a single-pool fleet (the router's
     /// compatibility path).
     pub fn from_server(name: impl Into<String>, server: Server) -> Fleet {
+        let window_consumer = server.metrics.window_consumer();
         Fleet {
             pools: vec![Pool {
                 name: name.into(),
@@ -261,8 +284,10 @@ impl Fleet {
                 breaker: None,
                 breaker_state: AtomicU8::new(BreakerState::Closed.as_u8()),
                 health: None,
+                window_consumer,
             }],
             rr: std::sync::atomic::AtomicUsize::new(0),
+            stream_hosts: Mutex::new(Vec::new()),
         }
     }
 
@@ -467,13 +492,13 @@ impl Fleet {
             // static pool: nothing can act, so the window needs no lock
             // (concurrent tick() callers were always the caller's bug —
             // the window cursor is single-consumer by contract)
-            return (p.server.metrics.window(), None, Vec::new());
+            return (p.server.metrics.window(&p.window_consumer), None, Vec::new());
         };
         let mut guard = scaler.lock().unwrap();
         // consume the window only under the scaler lock: two
         // concurrent tick() callers would otherwise each see half
         // of one window's deltas and could both miss a breach
-        let window = p.server.metrics.window();
+        let window = p.server.metrics.window(&p.window_consumer);
         let PoolScaler { policy, state, factory, ticks, last } = &mut *guard;
         let signals = TickSignals::observe(
             &window,
@@ -563,6 +588,10 @@ impl Fleet {
                     breaker,
                     ejected,
                     window,
+                    // tick is also the span rings' single drain point: the
+                    // exposition tier only ever sees already-drained data
+                    spans: p.server.metrics.spans.drain_window(),
+                    profile: p.server.metrics.step_profile().rows(p.server.step_kinds()),
                 }
             })
             .collect()
@@ -602,7 +631,14 @@ impl Fleet {
             agg.cancelled += p.metrics.cancelled;
             agg.deadline_missed += p.metrics.deadline_missed;
         }
-        FleetSnapshot { totals: agg, per_pool }
+        let streams = self
+            .stream_hosts
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(label, host)| (label.clone(), host.snapshot()))
+            .collect();
+        FleetSnapshot { totals: agg, per_pool, streams }
     }
 
     /// Graceful shutdown: every pool drains its queue and joins workers.
@@ -651,6 +687,12 @@ pub struct PoolTickReport {
     pub ejected: Vec<String>,
     /// The metrics window this tick consumed (rates, windowed p95).
     pub window: WindowSnapshot,
+    /// Span events drained from the pool's rings by this tick (per-phase
+    /// × per-class counts, plus any overwrite loss — never silent).
+    pub spans: SpanWindow,
+    /// The pool's cumulative per-step kernel profile, one row per plan
+    /// step (empty unless the pool runs with `ServerConfig::profile`).
+    pub profile: Vec<StepProfileRow>,
 }
 
 impl PoolTickReport {
@@ -711,11 +753,19 @@ impl PoolSnapshot {
 pub struct FleetSnapshot {
     pub totals: Totals,
     pub per_pool: Vec<PoolSnapshot>,
+    /// Attached stream hosts' per-stream counters, labelled as attached
+    /// (empty unless [`Fleet::attach_stream_host`] was called).
+    pub streams: Vec<(String, StreamHostSnapshot)>,
 }
 
 impl FleetSnapshot {
     pub fn pool(&self, name: &str) -> Option<&PoolSnapshot> {
         self.per_pool.iter().find(|p| p.name == name)
+    }
+
+    /// An attached stream host's snapshot by label.
+    pub fn stream_host(&self, label: &str) -> Option<&StreamHostSnapshot> {
+        self.streams.iter().find(|(l, _)| l == label).map(|(_, s)| s)
     }
 }
 
@@ -750,6 +800,9 @@ impl std::fmt::Display for FleetSnapshot {
                 }
             }
             writeln!(f, " {}", p.metrics)?;
+        }
+        for (label, s) in &self.streams {
+            writeln!(f, "  streams[{label}]: {s}")?;
         }
         Ok(())
     }
@@ -954,6 +1007,57 @@ mod tests {
         assert_eq!(reports.iter().map(|r| r.window.submitted()).sum::<u64>(), 1);
         let snap = f.snapshot();
         assert!(snap.per_pool.iter().all(|p| p.autoscale.is_none()));
+        f.shutdown();
+    }
+
+    #[test]
+    fn tick_drains_spans_and_snapshot_surfaces_attached_stream_hosts() {
+        use crate::observe::Phase;
+        let f = Fleet::start(vec![PoolSpec::new(
+            "native",
+            vec![tiny_session(Engine::MicroFlow, false)],
+        )
+        .config(ServerConfig { adaptive: true, profile: true, ..ServerConfig::default() })])
+        .unwrap();
+        for _ in 0..5 {
+            f.infer(vec![3, 1]).unwrap();
+        }
+        let r = f.tick();
+        assert_eq!(r[0].spans.dropped, 0);
+        for phase in Phase::ALL {
+            assert_eq!(r[0].spans.by_phase(phase), 5, "phase {phase}");
+        }
+        assert!(!r[0].profile.is_empty(), "a profiled native pool must export rows");
+        assert!(r[0].profile.iter().all(|row| row.invocations == 5), "{:?}", r[0].profile);
+        // the tick drained the rings: a quiet second window is empty
+        assert_eq!(f.tick()[0].spans.recorded, 0);
+
+        // attach a stream host: its per-stream counters ride the snapshot
+        let m = crate::synth::stream_conv_chain(&mut crate::util::Prng::new(31), 2);
+        let c = crate::compiler::plan::CompiledModel::compile(
+            &m,
+            crate::compiler::plan::CompileOptions::default(),
+        )
+        .unwrap();
+        let host = Arc::new(
+            StreamHost::start(
+                Arc::new(c),
+                crate::coordinator::stream::StreamHostConfig::default(),
+            )
+            .unwrap(),
+        );
+        let id = host.open("obs").unwrap();
+        let frame = vec![0i8; host.frame_len()];
+        for _ in 0..3 {
+            host.push(id, &frame).unwrap();
+        }
+        f.attach_stream_host("kws", Arc::clone(&host));
+        let snap = f.snapshot();
+        let hs = snap.stream_host("kws").unwrap();
+        assert_eq!(hs.streams.len(), 1);
+        assert_eq!(hs.totals().submitted, 3);
+        assert!(hs.totals().identity_holds());
+        assert!(format!("{snap}").contains("streams[kws]"), "\n{snap}");
         f.shutdown();
     }
 

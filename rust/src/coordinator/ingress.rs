@@ -29,7 +29,17 @@
 //!   status 4 closed     (payload: six u64 lifecycle counters —
 //!                        submitted, completed, shed, cancelled, failed,
 //!                        verdicts)
+//!
+//! stats:      magic "STAT" (no body)
+//! reply:      magic "MFST" | u32 payload len
+//!             | utf8 Prometheus-text exposition snapshot
 //! ```
+//!
+//! `STAT` is deliberately version-agnostic: it carries no body and its
+//! reply is self-describing text, so any client generation can probe a
+//! deployment's metrics without speaking the request framing. When no
+//! exposition tier is attached the reply is a one-comment placeholder
+//! body rather than an error (see [`Router::render_metrics`]).
 //!
 //! A v1 frame is served with the configured
 //! [`IngressConfig::default_class`] and default deadline, so legacy
@@ -212,6 +222,15 @@ fn handle_connection(mut stream: TcpStream, router: &Router, cfg: IngressConfig)
                 continue;
             }
             return Ok(());
+        }
+        // stats rounds render the exposition snapshot and pipeline too
+        if &magic == b"STAT" {
+            let body = router.render_metrics();
+            stream.write_all(b"MFST")?;
+            stream.write_all(&(body.len() as u32).to_le_bytes())?;
+            stream.write_all(body.as_bytes())?;
+            stream.flush()?;
+            continue;
         }
         // lifecycle header: v2 carries class + deadline, v1 uses defaults
         let (class, deadline_ms) = match &magic {
@@ -523,6 +542,26 @@ impl Client {
             S3_ERROR => bail!("close failed: {}", String::from_utf8_lossy(&payload)),
             _ => bail!("unexpected close reply status {status}"),
         }
+    }
+
+    /// One `STAT` round-trip: the deployment's current exposition
+    /// snapshot as Prometheus text (or the placeholder comment when no
+    /// exposition tier is attached).
+    pub fn stats(&mut self) -> Result<String> {
+        let s = &mut self.stream;
+        s.write_all(b"STAT")?;
+        s.flush()?;
+        let mut magic = [0u8; 4];
+        s.read_exact(&mut magic)?;
+        if &magic != b"MFST" {
+            bail!("bad stats reply magic");
+        }
+        let mut b4 = [0u8; 4];
+        s.read_exact(&mut b4)?;
+        let len = u32::from_le_bytes(b4) as usize;
+        let mut payload = vec![0u8; len];
+        s.read_exact(&mut payload)?;
+        String::from_utf8(payload).context("stats body utf8")
     }
 
     fn read_stream_reply(s: &mut TcpStream) -> Result<(u8, Vec<u8>)> {

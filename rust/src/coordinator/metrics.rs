@@ -51,6 +51,7 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use super::request::QosClass;
+use crate::observe::{SharedStepProfile, SpanRecorder};
 use crate::util::stats::percentile_sorted;
 
 const RESERVOIR: usize = 65_536;
@@ -117,6 +118,21 @@ struct ClassCounters {
 struct WindowCursor {
     prev: [ClassCounters; 3],
     last_at: Instant,
+    /// Id of the [`WindowConsumer`] that first called `window()` — the
+    /// cursor is single-consumer, and debug builds enforce it loudly.
+    consumer: Option<u64>,
+}
+
+/// Capability token for [`Metrics::window`]. The window cursor is a
+/// consume-once delta stream: two independent drainers would silently
+/// halve each other's deltas (each sees only the traffic since the
+/// *other's* last call), which corrupts autoscaling and breaker signals
+/// without any error. Minting is explicit ([`Metrics::window_consumer`])
+/// and the token is deliberately neither `Clone` nor `Copy`; in debug
+/// builds a second distinct token draining the same cursor panics.
+#[derive(Debug)]
+pub struct WindowConsumer {
+    id: u64,
 }
 
 /// Shared metrics sink — one per replica pool.
@@ -126,10 +142,19 @@ pub struct Metrics {
     batches: AtomicU64,
     batched_samples: AtomicU64,
     window: Mutex<WindowCursor>,
+    /// Monotonic id source for [`Metrics::window_consumer`].
+    consumer_ids: AtomicU64,
     /// Per-replica health entries, appended as workers register. Entries
     /// are never removed — a retired/dead replica's final state stays
     /// visible in snapshots (and its label is never reused anyway).
     replicas: Mutex<Vec<Arc<ReplicaHealth>>>,
+    /// Hot-path span recorder for this pool (admit ring + one ring per
+    /// worker). Recording is wait-free; the fleet tick loop is the single
+    /// drain point, and no policy decision ever reads it.
+    pub spans: SpanRecorder,
+    /// Pool-wide per-step kernel profile, fed by workers running the
+    /// observed batch path when profiling is enabled.
+    step_profile: Arc<SharedStepProfile>,
 }
 
 impl Default for Metrics {
@@ -148,9 +173,27 @@ impl Metrics {
             window: Mutex::new(WindowCursor {
                 prev: [ClassCounters::default(); 3],
                 last_at: Instant::now(),
+                consumer: None,
             }),
+            consumer_ids: AtomicU64::new(0),
             replicas: Mutex::new(Vec::new()),
+            spans: SpanRecorder::new(),
+            step_profile: Arc::new(SharedStepProfile::new()),
         }
+    }
+
+    /// Mint the capability token [`Metrics::window`] requires. Mint one
+    /// per deployment and hand it to the component that owns the control
+    /// loop (the fleet's pool state); minting a second token is allowed —
+    /// using it on an already-claimed cursor is the debug-build error.
+    pub fn window_consumer(&self) -> WindowConsumer {
+        WindowConsumer { id: self.consumer_ids.fetch_add(1, Ordering::Relaxed) }
+    }
+
+    /// Shared per-step profile accumulator for this pool (what workers
+    /// feed and [`PoolTickReport`](super::fleet::PoolTickReport) exports).
+    pub fn step_profile(&self) -> Arc<SharedStepProfile> {
+        Arc::clone(&self.step_profile)
     }
 
     fn lane(&self, class: QosClass) -> &ClassMetrics {
@@ -318,9 +361,22 @@ impl Metrics {
     /// Per-class **deltas since the previous `window()` call** plus the
     /// window's own latency quantiles — the rate view a controller scales
     /// on. Advances the window cursor and drains the window latency
-    /// buffers: keep one consumer per deployment (the fleet tick loop).
-    pub fn window(&self) -> WindowSnapshot {
+    /// buffers: the cursor is **single-consumer** (the fleet tick loop),
+    /// and the [`WindowConsumer`] token makes that explicit — the first
+    /// token to drain claims the cursor, and in debug builds a different
+    /// token draining afterwards panics instead of silently splitting the
+    /// delta stream.
+    pub fn window(&self, consumer: &WindowConsumer) -> WindowSnapshot {
         let mut cursor = self.window.lock().unwrap();
+        match cursor.consumer {
+            None => cursor.consumer = Some(consumer.id),
+            Some(owner) => debug_assert_eq!(
+                owner, consumer.id,
+                "Metrics::window is single-consumer: the cursor was claimed by consumer \
+                 #{owner}, and draining it from a second consumer would silently split \
+                 the delta stream both controllers depend on"
+            ),
+        }
         let elapsed = cursor.last_at.elapsed();
         cursor.last_at = Instant::now();
         let per_class: [ClassWindow; 3] = std::array::from_fn(|i| {
@@ -805,19 +861,20 @@ mod tests {
             m.record_submitted(QosClass::Bulk);
             m.record_shed(QosClass::Bulk);
         }
-        let w1 = m.window();
+        let c = m.window_consumer();
+        let w1 = m.window(&c);
         assert_eq!(w1.submitted(), 3);
         assert_eq!(w1.shed(), 3);
         // a quiet second window reports zero even though lifetime totals
         // still carry the earlier sheds
-        let w2 = m.window();
+        let w2 = m.window(&c);
         assert_eq!(w2.submitted(), 0);
         assert_eq!(w2.shed(), 0, "window must not re-report consumed sheds");
         assert_eq!(m.snapshot().shed, 3, "lifetime totals are untouched");
         // fresh activity shows up in the next window only
         m.record_submitted(QosClass::Interactive);
         m.record_deadline_missed(QosClass::Interactive);
-        let w3 = m.window();
+        let w3 = m.window(&c);
         assert_eq!(w3.class(QosClass::Interactive).submitted, 1);
         assert_eq!(w3.deadline_missed(), 1);
         assert_eq!(w3.class(QosClass::Bulk).shed, 0);
@@ -828,12 +885,13 @@ mod tests {
         let m = Metrics::new();
         m.record_submitted(QosClass::Interactive);
         m.record(QosClass::Interactive, Duration::from_micros(10_000));
-        let w1 = m.window();
+        let c = m.window_consumer();
+        let w1 = m.window(&c);
         assert_eq!(w1.class(QosClass::Interactive).p95_us, 10_000.0);
         // the slow request must not haunt later windows (lifetime p95 keeps it)
         m.record_submitted(QosClass::Interactive);
         m.record(QosClass::Interactive, Duration::from_micros(100));
-        let w2 = m.window();
+        let w2 = m.window(&c);
         assert_eq!(w2.class(QosClass::Interactive).p95_us, 100.0);
         assert_eq!(w2.completed(), 1);
         assert!(m.snapshot().p95_us >= 100.0);
@@ -843,12 +901,13 @@ mod tests {
     fn window_survives_a_retract_across_the_edge() {
         let m = Metrics::new();
         m.record_submitted(QosClass::Bulk);
-        let w1 = m.window();
+        let c = m.window_consumer();
+        let w1 = m.window(&c);
         assert_eq!(w1.submitted(), 1);
         // a rejected try_submit retracts after the cursor advanced: the
         // next delta saturates at zero instead of underflowing
         m.retract_submitted(QosClass::Bulk);
-        let w2 = m.window();
+        let w2 = m.window(&c);
         assert_eq!(w2.submitted(), 0);
     }
 
@@ -861,13 +920,34 @@ mod tests {
         m.record(QosClass::Bulk, Duration::from_micros(10));
         m.record_retried(QosClass::Bulk);
         m.record_failed(QosClass::Bulk);
-        let w = m.window();
+        let c = m.window_consumer();
+        let w = m.window(&c);
         assert_eq!(w.failed(), 1);
         assert_eq!(w.retried(), 1);
         assert_eq!(w.resolved(), 2, "resolved = completed + failed");
-        let w2 = m.window();
+        let w2 = m.window(&c);
         assert_eq!(w2.failed(), 0, "consumed by the previous window");
         assert_eq!(w2.resolved(), 0);
+    }
+
+    #[test]
+    fn first_window_consumer_claims_the_cursor() {
+        let m = Metrics::new();
+        let c = m.window_consumer();
+        let _unused = m.window_consumer(); // minting more tokens is fine
+        m.window(&c);
+        m.window(&c); // the claiming token may drain forever
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "single-consumer")]
+    fn second_window_consumer_fails_loudly() {
+        let m = Metrics::new();
+        let first = m.window_consumer();
+        let second = m.window_consumer();
+        m.window(&first);
+        m.window(&second); // must panic: the cursor belongs to `first`
     }
 
     #[test]

@@ -63,7 +63,15 @@
 //!   `deadline_missed`; `completed + shed + cancelled + failed ==
 //!   submitted` always) plus the per-replica health registry
 //!   ([`ReplicaHealth`]) feeding ejection, reported by the e2e example
-//!   (`examples/serve_keywords.rs`).
+//!   (`examples/serve_keywords.rs`). The windowed view is drained through
+//!   a [`WindowConsumer`] token — minted once per pool, so the tick loop
+//!   is provably the single consumer of each window cursor.
+//!
+//! The observability plane ([`crate::observe`]) rides on this tier
+//! read-only: workers record [`crate::observe::Phase`] span events into
+//! per-worker rings, [`Fleet::tick`] drains rings, windows and per-step
+//! profiles into [`PoolTickReport`]s, and the exposition tier renders
+//! only what the tick drained. No policy decision reads a span ring.
 
 pub mod autoscale;
 pub mod batcher;
@@ -90,7 +98,7 @@ pub use fleet::{Fleet, FleetSnapshot, PoolSnapshot, PoolSpec, PoolTickReport};
 pub use ingress::{Client, Ingress, IngressConfig};
 pub use metrics::{
     ClassSnapshot, ClassWindow, Metrics, MetricsSnapshot, ReplicaHealth, ReplicaHealthSnapshot,
-    ReplicaPhase, WindowSnapshot,
+    ReplicaPhase, WindowConsumer, WindowSnapshot,
 };
 pub use request::{
     QosClass, QosProfile, QueueEntry, ReplicaError, Request, SubmitError, Ticket,

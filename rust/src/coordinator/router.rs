@@ -18,6 +18,7 @@ use super::fleet::Fleet;
 use super::request::{Request, Ticket};
 use super::server::Server;
 use super::stream::{StreamCounters, StreamHost, StreamPush};
+use crate::observe::Exposition;
 
 /// A multi-model routing table.
 #[derive(Default)]
@@ -28,6 +29,10 @@ pub struct Router {
     /// open stream id → model name (ids are globally unique, so the
     /// router can route `push`/`close` without re-stating the model).
     stream_index: RwLock<HashMap<u64, String>>,
+    /// The deployment's metrics sink, when serving with an exposition
+    /// tier attached. The router never writes to it — it only renders
+    /// snapshots for the `STAT` wire op.
+    exposition: RwLock<Option<Arc<Exposition>>>,
 }
 
 impl Router {
@@ -66,9 +71,31 @@ impl Router {
         self.submit(model, Request::new(input))?.wait()
     }
 
+    /// Attach the deployment's metrics sink, enabling the `STAT` wire op
+    /// to answer with a rendered exposition snapshot.
+    pub fn set_exposition(&self, expo: Arc<Exposition>) {
+        *self.exposition.write().unwrap() = Some(expo);
+    }
+
+    /// Render the attached exposition snapshot (Prometheus text format),
+    /// or a one-comment placeholder body when no exposition is attached —
+    /// the `STAT` op always answers rather than erroring, so probes can
+    /// distinguish "no metrics tier" from "server down".
+    pub fn render_metrics(&self) -> String {
+        match self.exposition.read().unwrap().as_ref() {
+            Some(expo) => expo.render(),
+            None => "# microflow: no exposition attached\n".to_string(),
+        }
+    }
+
     /// Register a streaming lane for a model (alongside or instead of its
-    /// request/response fleet).
+    /// request/response fleet). If a fleet with the same name is already
+    /// registered, the lane is also attached to it so the fleet's snapshot
+    /// surfaces the per-stream counters.
     pub fn add_stream_host(&mut self, name: &str, host: Arc<StreamHost>) {
+        if let Some(fleet) = self.fleets.get(name) {
+            fleet.attach_stream_host(name, Arc::clone(&host));
+        }
         self.stream_hosts.insert(name.to_string(), host);
     }
 
@@ -187,6 +214,44 @@ mod tests {
         }
         let snap = r.get("tiny").unwrap().snapshot();
         assert_eq!(snap.totals.completed, 6);
+        r.shutdown();
+    }
+
+    #[test]
+    fn metrics_render_falls_back_then_serves_the_attached_exposition() {
+        let r = Router::new();
+        assert_eq!(r.render_metrics(), "# microflow: no exposition attached\n");
+        let expo = Arc::new(Exposition::new());
+        r.set_exposition(Arc::clone(&expo));
+        assert!(r.render_metrics().is_empty(), "empty sink renders empty body");
+        // absorbing state through the shared handle is visible via the router
+        expo.absorb_streams(
+            "kws",
+            &crate::coordinator::stream::StreamHostSnapshot {
+                streams: Vec::new(),
+                workers: Vec::new(),
+            },
+        );
+        assert!(r.render_metrics().contains("microflow_stream_pushes_total"));
+    }
+
+    #[test]
+    fn stream_host_attaches_to_the_same_name_fleet() {
+        use crate::compiler::plan::{CompileOptions, CompiledModel};
+        use crate::coordinator::stream::StreamHostConfig;
+        use crate::util::Prng;
+        let m = crate::synth::stream_conv_chain(&mut Prng::new(41), 1);
+        let c = CompiledModel::compile(&m, CompileOptions::default()).unwrap();
+        let host =
+            Arc::new(StreamHost::start(Arc::new(c), StreamHostConfig::default()).unwrap());
+        let mut r = Router::new();
+        r.add("tiny", tiny_server());
+        r.add_stream_host("tiny", host);
+        let snap = r.get("tiny").unwrap().snapshot();
+        assert!(
+            snap.stream_host("tiny").is_some(),
+            "fleet snapshot must surface the attached lane"
+        );
         r.shutdown();
     }
 

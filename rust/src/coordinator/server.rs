@@ -77,6 +77,7 @@ use super::batcher::{next_batch, AdaptiveBatcher, BatcherConfig, Cut};
 use super::metrics::{Metrics, ReplicaHealth};
 use super::request::{Pending, QueueEntry, ReplicaError, Request, SubmitError, Ticket};
 use crate::api::{FailureKind, InjectedFault, IoSignature, Session};
+use crate::observe::{Phase, SharedProfileObserver};
 use crate::tensor::quant::QParams;
 
 /// Server configuration.
@@ -95,6 +96,12 @@ pub struct ServerConfig {
     /// class intact, and the deadline is re-checked at claim and at
     /// redispatch).
     pub max_retries: u32,
+    /// Run batches through the observed session path, accumulating
+    /// per-step kernel timings into the pool's shared
+    /// [`SharedStepProfile`](crate::observe::SharedStepProfile) (exported
+    /// by the fleet tick as `PoolTickReport::profile`). Off by default:
+    /// profiling costs one monotonic-clock read per plan step.
+    pub profile: bool,
 }
 
 impl Default for ServerConfig {
@@ -104,6 +111,7 @@ impl Default for ServerConfig {
             batcher: BatcherConfig::default(),
             adaptive: false,
             max_retries: 1,
+            profile: false,
         }
     }
 }
@@ -124,6 +132,9 @@ struct WorkerCtx {
     retry: Arc<Mutex<VecDeque<Pending>>>,
     /// Redispatch budget per request ([`ServerConfig::max_retries`]).
     max_retries: u32,
+    /// Route batches through the observed session path
+    /// ([`ServerConfig::profile`]).
+    profile: bool,
 }
 
 /// A serving endpoint for one model — one **elastic** replica pool:
@@ -143,6 +154,11 @@ pub struct Server {
     /// Base batcher policy handed to every worker, present and future.
     batcher: BatcherConfig,
     adaptive: bool,
+    /// Plan step kind names of the served model, in execution order
+    /// (captured from the first replica; replicas share one signature, so
+    /// engines with a step plan agree). What profile rows are labelled
+    /// with — empty for opaque executors.
+    step_kinds: Vec<&'static str>,
 }
 
 impl Server {
@@ -165,6 +181,7 @@ impl Server {
                 sig
             );
         }
+        let step_kinds = sessions[0].step_kinds();
         let metrics = Arc::new(Metrics::new());
         let (tx, rx) = sync_channel::<QueueEntry>(cfg.queue_depth);
         let ctx = WorkerCtx {
@@ -174,6 +191,7 @@ impl Server {
             pending_retires: Arc::new(AtomicUsize::new(0)),
             retry: Arc::new(Mutex::new(VecDeque::new())),
             max_retries: cfg.max_retries,
+            profile: cfg.profile,
         };
         let server = Server {
             tx,
@@ -186,6 +204,7 @@ impl Server {
             output_qparams,
             batcher: cfg.batcher,
             adaptive: cfg.adaptive,
+            step_kinds,
         };
         for session in sessions {
             server.spawn_worker(session);
@@ -314,6 +333,13 @@ impl Server {
         self.ctx.pending_retires.load(Ordering::SeqCst)
     }
 
+    /// Plan step kind names of the served model (see the field docs) —
+    /// what [`SharedStepProfile::rows`](crate::observe::SharedStepProfile)
+    /// labels the pool's profile with.
+    pub fn step_kinds(&self) -> &[&'static str] {
+        &self.step_kinds
+    }
+
     pub fn input_qparams(&self) -> QParams {
         self.input_qparams
     }
@@ -333,6 +359,7 @@ impl Server {
             self.input_len
         );
         let class = req.class;
+        let id = req.id;
         let (pending, ticket) = req.into_pending();
         // count BEFORE the send: a worker may complete the request before
         // this thread resumes, and completed must never exceed submitted
@@ -343,6 +370,8 @@ impl Server {
             self.metrics.record_failed(class);
             anyhow::bail!("server is shut down");
         }
+        // span events mark accepted requests only, after the send commits
+        self.metrics.spans.record_admit(id, class.as_u8(), Phase::Admit);
         Ok(ticket)
     }
 
@@ -357,10 +386,14 @@ impl Server {
             });
         }
         let class = req.class;
+        let id = req.id;
         let (pending, ticket) = req.into_pending();
         self.metrics.record_submitted(class);
         match self.tx.try_send(QueueEntry::Req(pending)) {
-            Ok(()) => Ok(ticket),
+            Ok(()) => {
+                self.metrics.spans.record_admit(id, class.as_u8(), Phase::Admit);
+                Ok(ticket)
+            }
             Err(TrySendError::Full(QueueEntry::Req(p))) => {
                 // the request never entered the queue: retract the count
                 // and hand it back for retry/spill
@@ -467,6 +500,10 @@ fn worker_loop(
     let label = session.label().to_string();
     let ilen = session.input_len();
     let olen = session.output_len();
+    // this worker's single-writer span ring (drained by the fleet tick)
+    // and the pool-shared per-step profile it feeds when profiling is on
+    let ring = metrics.spans.register_worker();
+    let step_profile = metrics.step_profile();
     let mut tuner = AdaptiveBatcher::new(*cfg);
     // one-slot stash for the request that ended the previous batch on a
     // class boundary; it leads this worker's next batch
@@ -513,15 +550,27 @@ fn worker_loop(
             metrics.record_batch(n);
             inputs.clear();
             for p in &batch {
+                // Queue closes (the request left the queue at this cut) and
+                // Batch opens (it holds a slot in the assembled batch)
+                ring.record(p.request.id, p.request.class.as_u8(), Phase::Queue);
+                ring.record(p.request.id, p.request.class.as_u8(), Phase::Batch);
                 inputs.extend_from_slice(&p.request.payload);
             }
             outputs.resize(n * olen, 0);
             debug_assert_eq!(inputs.len(), n * ilen);
-            match session.run_batch_into(&inputs, n, &mut outputs[..n * olen]) {
+            let executed = if ctx.profile {
+                let mut obs = SharedProfileObserver::new(&step_profile);
+                session.run_batch_into_observed(&inputs, n, &mut outputs[..n * olen], &mut obs)
+            } else {
+                session.run_batch_into(&inputs, n, &mut outputs[..n * olen])
+            };
+            match executed {
                 Ok(()) => {
                     health.record_success();
                     let done = Instant::now();
                     for (i, p) in batch.into_iter().enumerate() {
+                        let (id, class) = (p.request.id, p.request.class.as_u8());
+                        ring.record(id, class, Phase::Execute);
                         let out = outputs[i * olen..(i + 1) * olen].to_vec();
                         if p.request.deadline.is_some_and(|d| done > d) {
                             // executed but late: delivered anyway, counted
@@ -530,6 +579,7 @@ fn worker_loop(
                         }
                         metrics.record(p.request.class, p.enqueued.elapsed());
                         let _ = p.reply.send(Ok(out));
+                        ring.record(id, class, Phase::Reply);
                     }
                 }
                 Err(e) => {
@@ -651,6 +701,34 @@ mod tests {
         let snap = s.metrics.snapshot();
         assert_eq!(snap.submitted, 30);
         assert_eq!(snap.completed, 30);
+        s.shutdown();
+    }
+
+    #[test]
+    fn spans_and_profile_cover_the_request_lifecycle() {
+        let sessions = vec![Session::builder(crate::format::mfb::tests::tiny_mfb())
+            .engine(Engine::MicroFlow)
+            .build()
+            .unwrap()];
+        let cfg = ServerConfig { profile: true, ..ServerConfig::default() };
+        let s = Server::start(sessions, cfg).unwrap();
+        for _ in 0..10 {
+            assert_eq!(s.infer(vec![3, 1]).unwrap(), vec![2, 0, 5]);
+        }
+        // every completed request leaves one event per lifecycle phase
+        let w = s.metrics.spans.drain_window();
+        assert_eq!(w.dropped, 0);
+        for phase in Phase::ALL {
+            assert_eq!(w.by_phase(phase), 10, "phase {phase}");
+        }
+        // and the profiled pool accounts every plan step exactly once per
+        // inference, labelled with the plan's own step kinds
+        let rows = s.metrics.step_profile().rows(s.step_kinds());
+        assert!(!rows.is_empty(), "a native pool must expose step kinds");
+        assert_eq!(rows.len(), s.step_kinds().len());
+        for r in &rows {
+            assert_eq!(r.invocations, 10, "step {} ({})", r.step, r.kind);
+        }
         s.shutdown();
     }
 

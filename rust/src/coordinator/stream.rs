@@ -160,6 +160,58 @@ pub struct StreamHostSnapshot {
     pub workers: Vec<StreamWorkerSnapshot>,
 }
 
+impl StreamHostSnapshot {
+    /// Sum of every *open* stream's counters. Closed streams hand their
+    /// final counters back at [`StreamHost::close`] and leave the
+    /// snapshot, so this is a point-in-time aggregate, not a lifetime
+    /// total — the per-stream identity still holds for every lane shown.
+    pub fn totals(&self) -> StreamCounters {
+        let mut t = StreamCounters::default();
+        for s in &self.streams {
+            t.submitted += s.counters.submitted;
+            t.completed += s.counters.completed;
+            t.shed += s.counters.shed;
+            t.cancelled += s.counters.cancelled;
+            t.failed += s.counters.failed;
+            t.verdicts += s.counters.verdicts;
+        }
+        t
+    }
+
+    /// Workers currently accepting pushes.
+    pub fn live_workers(&self) -> usize {
+        self.workers.iter().filter(|w| !w.quarantined && !w.retired).count()
+    }
+}
+
+impl std::fmt::Display for StreamHostSnapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let t = self.totals();
+        write!(
+            f,
+            "{} streams on {}/{} live workers | pushes {}/{} done ({} shed, {} canc, {} failed), {} verdicts",
+            self.streams.len(),
+            self.live_workers(),
+            self.workers.len(),
+            t.completed,
+            t.submitted,
+            t.shed,
+            t.cancelled,
+            t.failed,
+            t.verdicts,
+        )?;
+        for s in &self.streams {
+            let c = &s.counters;
+            write!(
+                f,
+                "\n    #{} {} @{}: {}/{} done ({} shed, {} canc, {} failed), {} verdicts",
+                s.id, s.name, s.worker, c.completed, c.submitted, c.shed, c.cancelled, c.failed, c.verdicts,
+            )?;
+        }
+        Ok(())
+    }
+}
+
 /// What one health pass did.
 #[derive(Clone, Debug, Default)]
 pub struct StreamTickReport {
@@ -614,6 +666,30 @@ mod tests {
         let snap = h.snapshot();
         assert!(snap.workers[0].retired);
         assert!(snap.streams[0].counters.identity_holds());
+    }
+
+    #[test]
+    fn snapshot_totals_aggregate_open_streams_and_render() {
+        let h = host(StreamHostConfig::default());
+        let a = h.open("left").unwrap();
+        let b = h.open("right").unwrap();
+        let f = vec![0i8; h.frame_len()];
+        for _ in 0..3 {
+            h.push(a, &f).unwrap();
+        }
+        h.push(b, &f).unwrap();
+        let snap = h.snapshot();
+        let t = snap.totals();
+        assert_eq!(t.submitted, 4);
+        assert_eq!(t.completed, 4);
+        assert!(t.identity_holds());
+        assert_eq!(snap.live_workers(), 2);
+        let text = format!("{snap}");
+        assert!(text.contains("2 streams on 2/2 live workers"), "{text}");
+        assert!(text.contains("left"), "{text}");
+        assert!(text.contains("right"), "{text}");
+        assert!(h.close(a).unwrap().identity_holds());
+        assert!(h.close(b).unwrap().identity_holds());
     }
 
     #[test]

@@ -20,6 +20,7 @@ use crate::compiler::plan::{CompiledModel, CompileOptions, StepKind};
 use crate::format::mfb::MfbModel;
 use crate::kernels::microkernel::backend;
 use crate::kernels::{activation, average_pool2d, conv2d, depthwise_conv2d, fully_connected};
+use crate::observe::StepObserver;
 use crate::tensor::quant::QParams;
 
 /// The MicroFlow inference engine.
@@ -101,6 +102,18 @@ impl MicroFlowEngine {
         out.copy_from_slice(result);
     }
 
+    /// [`MicroFlowEngine::predict_into`] with a per-step observer attached
+    /// — the profiling path (`audit --profile`, `ServerConfig::profile`).
+    /// Same hot-path guarantees: the observer hooks add two `Instant`
+    /// reads and two integer adds per step and allocate nothing.
+    pub fn predict_into_observed(&self, input: &[i8], out: &mut [i8], observer: &mut dyn StepObserver) {
+        assert_eq!(input.len(), self.compiled.input_len(), "input length");
+        assert_eq!(out.len(), self.compiled.output_len(), "output length");
+        let mut scratch = self.scratch.borrow_mut();
+        let result = run_plan_from(&self.compiled, 0, input, &mut scratch, Some(observer));
+        out.copy_from_slice(result);
+    }
+
     /// Quantized inference, allocating the output (convenience).
     pub fn predict(&self, input: &[i8]) -> Vec<i8> {
         let mut out = vec![0i8; self.compiled.output_len()];
@@ -131,9 +144,12 @@ pub(crate) fn run_plan<'a>(
 /// Execute the plan from `first_step` to the end, with `input` staged as
 /// the activation entering `first_step` (the model input when 0, an
 /// intermediate activation otherwise — the streaming executor's tail
-/// re-entry). `observe` is called once per executed step with the step
-/// index and its freshly written output (streaming uses it to capture
-/// per-layer state while priming). Range runs must use a scratch sized by
+/// re-entry). `observe` is a [`StepObserver`] hooked around every executed
+/// step: `on_step_start` right before the kernel, `on_step` with the step
+/// index and its freshly written output right after (streaming uses the
+/// latter to capture per-layer state while priming; profilers time the
+/// pair). Plain `FnMut(usize, &[i8])` closures still satisfy the trait via
+/// its blanket impl. Range runs must use a scratch sized by
 /// [`Scratch::for_plan_any_start`], since the original ping-pong parity
 /// does not apply mid-plan.
 pub(crate) fn run_plan_from<'a>(
@@ -141,7 +157,7 @@ pub(crate) fn run_plan_from<'a>(
     first_step: usize,
     input: &[i8],
     scratch: &'a mut Scratch,
-    mut observe: Option<&mut dyn FnMut(usize, &[i8])>,
+    mut observe: Option<&mut dyn StepObserver>,
 ) -> &'a [i8] {
     debug_assert_eq!(
         input.len(),
@@ -155,11 +171,14 @@ pub(crate) fn run_plan_from<'a>(
     for (i, step) in compiled.steps.iter().enumerate().skip(first_step) {
         let in_len = step.in_len;
         let out_len = step.out_len;
+        if let Some(obs) = observe.as_mut() {
+            obs.on_step_start(i);
+        }
         match &step.kind {
             StepKind::Reshape => {
                 // pure metadata: the buffer is reinterpreted, nothing runs
-                if let Some(cb) = observe.as_mut() {
-                    cb(i, scratch.current(out_len));
+                if let Some(obs) = observe.as_mut() {
+                    obs.on_step(i, scratch.current(out_len));
                 }
                 continue;
             }
@@ -227,8 +246,8 @@ pub(crate) fn run_plan_from<'a>(
                 activation::relu6(x, *s_x, *z_x, *s_y, *z_y, y);
             }
         }
-        if let Some(cb) = observe.as_mut() {
-            cb(i, scratch.out_view(out_len));
+        if let Some(obs) = observe.as_mut() {
+            obs.on_step(i, scratch.out_view(out_len));
         }
         scratch.flip();
     }
@@ -293,5 +312,16 @@ mod tests {
     #[should_panic(expected = "input length")]
     fn wrong_input_length_panics() {
         tiny_engine(false).predict(&[1, 2, 3]);
+    }
+
+    #[test]
+    fn observed_predict_matches_and_profiles_every_step() {
+        let e = tiny_engine(false);
+        let mut prof = crate::observe::StepProfiler::new();
+        let mut out = [0i8; 3];
+        e.predict_into_observed(&[3, 1], &mut out, &mut prof);
+        assert_eq!(out, [2, 0, 5], "observer must not change results");
+        assert_eq!(prof.observed_steps(), e.compiled().steps.len());
+        assert!(prof.stats()[..prof.observed_steps()].iter().all(|s| s.invocations == 1));
     }
 }

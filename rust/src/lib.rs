@@ -74,6 +74,10 @@
 //!   the incremental per-frame executor and the replay oracle behind
 //!   [`stream::StreamSession`] (planned + certified by
 //!   [`compiler::pulse`]);
+//! * [`observe`] — the zero-allocation observability plane: hot-path
+//!   span rings, per-step kernel profiles ([`observe::StepProfiler`])
+//!   and the Prometheus-text exposition tier behind `serve
+//!   --metrics-addr`, the `STAT` wire op and `microflow top`;
 //! * [`synth`] — seeded synthetic model generators backing the
 //!   artifact-free conformance/stress suites and the fleet bench;
 //! * [`eval`] — datasets, accuracy metrics and the Table 5 runner.
@@ -219,6 +223,40 @@
 //!   unconditionally, zero overhead when unused), so every path above is
 //!   reproducible in CI from a fixed seed — same seed, same failures,
 //!   same replies.
+//!
+//! ## Observability
+//!
+//! The [`observe`] plane makes the serving tier measurable without
+//! perturbing it. Three tiers, strictly layered:
+//!
+//! * **Span recorder** ([`observe::SpanRing`]) — each pool keeps
+//!   preallocated fixed-capacity rings of POD span events (request id,
+//!   QoS class, phase admit → queue → batch → execute → reply, monotonic
+//!   µs timestamps). Recording is allocation-free, lock-free and
+//!   wait-free (one `fetch_add` + four atomic stores); a full ring
+//!   **overwrites oldest-first** and every overwritten or torn event is
+//!   counted in `SpanWindow::dropped` — loss is visible, never silent.
+//!   Timestamps are taken in the recorder, outside policy code.
+//! * **Per-step profiles** ([`observe::StepProfiler`]) — the
+//!   [`observe::StepObserver`] hook threaded through the engine's plan
+//!   executor accumulates per-layer nanoseconds + invocation counts into
+//!   a fixed `[StepStat; MAX_STEPS]` table (TFLM-style op profiling,
+//!   compile-time sized). Attachable to any session; surfaced by
+//!   `microflow audit --profile` and the `profile_steps` bench. Pools
+//!   started with `ServerConfig::profile` feed a shared atomic table.
+//! * **Exposition** ([`observe::Exposition`]) — a Prometheus-text
+//!   snapshot assembled **only** from windows the tick loop already
+//!   drained, served by `microflow serve --metrics-addr`, the
+//!   version-agnostic `STAT` wire op and the `microflow top` view. The
+//!   exported request counters satisfy `completed + shed + cancelled +
+//!   failed == submitted` per pool and class at quiescence.
+//!
+//! What is *not* on the hot path: draining, rendering and scraping all
+//! happen in the tick loop or the metrics thread. The invariant the
+//! suites hold: **observability is read-only** — no policy decision may
+//! read a span ring, and exporters only consume drained windows.
+//! `tests/alloc_free.rs` proves the predict path stays allocation-free
+//! with both a span recorder and a `StepProfiler` attached.
 
 #![deny(unsafe_code)]
 
@@ -232,6 +270,7 @@ pub mod eval;
 pub mod format;
 pub mod interp;
 pub mod kernels;
+pub mod observe;
 pub mod runtime;
 pub mod sim;
 pub mod stream;

@@ -17,6 +17,7 @@ use microflow::coordinator::{
     Request, Router, ServerConfig, StreamFault, StreamHost, StreamHostConfig,
 };
 use microflow::format::golden::Golden;
+use microflow::observe::{parse_exposition, Exposition, MetricsServer, Sample, StepProfiler};
 use microflow::format::mds::MdsDataset;
 use microflow::format::mfb::MfbModel;
 use microflow::runtime::oracle::check_against_golden;
@@ -47,6 +48,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
         "deploy" => cmd_deploy(args),
         "audit" => cmd_audit(args),
         "serve" => cmd_serve(args),
+        "top" => cmd_top(args),
         "help" | "--help" | "-h" => {
             print!("{USAGE}");
             Ok(())
@@ -281,6 +283,53 @@ fn cmd_audit(args: &Args) -> Result<()> {
     let cert = compiled.certificate.as_ref().expect("certify was on");
     println!("{cert}");
     println!("audit {}: certified", path.display());
+    if args.flag("profile") {
+        audit_profile(&path, args)?;
+    }
+    Ok(())
+}
+
+/// `audit --profile [--runs N]` tail: run N profiled zero-input
+/// inferences through the native engine with a [`StepProfiler`] attached
+/// and print the per-step kernel profile. The profiler writes into a
+/// fixed table, so the observed runs stay on the allocation-free path.
+fn audit_profile(path: &std::path::Path, args: &Args) -> Result<()> {
+    let runs = args.opt_usize("runs", 100).max(1);
+    let mut session = Session::builder(path)
+        .engine(Engine::MicroFlow)
+        .paging(args.flag("paging"))
+        .build()?;
+    let input = vec![0i8; session.input_len()];
+    let mut out = vec![0i8; session.output_len()];
+    let mut profiler = StepProfiler::new();
+    // one unprofiled warmup keeps cold-start noise out of step 0's column
+    session.run_into(&input, &mut out)?;
+    let t0 = Instant::now();
+    for _ in 0..runs {
+        session.run_into_observed(&input, &mut out, &mut profiler)?;
+    }
+    let wall = t0.elapsed();
+    let kinds = session.step_kinds();
+    let rows = profiler.rows(&kinds);
+    println!(
+        "\nper-step kernel profile ({runs} inference(s), {:.2} ms wall):",
+        wall.as_secs_f64() * 1e3
+    );
+    println!("{:>4} | {:16} | {:>8} | {:>12} | {:>10}", "step", "kind", "calls", "total ns", "ns/call");
+    println!("{}", "-".repeat(62));
+    let mut total_ns = 0u64;
+    for r in &rows {
+        total_ns += r.total_ns;
+        println!(
+            "{:>4} | {:16} | {:>8} | {:>12} | {:>10}",
+            r.step, r.kind, r.invocations, r.total_ns, r.ns_per_call()
+        );
+    }
+    println!("{}", "-".repeat(62));
+    println!("{:>4} | {:16} | {:>8} | {:>12} |", "", "total", runs, total_ns);
+    if profiler.overflow() > 0 {
+        println!("note: {} step(s) beyond the fixed profile table were not counted", profiler.overflow());
+    }
     Ok(())
 }
 
@@ -323,6 +372,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         args.opt("shed-after-ms").map(|v| v.parse::<u64>().context("--shed-after-ms")).transpose()?
             .map(Duration::from_millis);
     let chaos: Option<(u64, u64)> = args.opt("chaos").map(parse_chaos).transpose()?;
+    let metrics_addr: Option<&str> = args.opt("metrics-addr");
 
     // pool layout: --engine-mix pools, or a single --backend x --replicas
     let mix: Vec<(Engine, usize)> = match args.opt("engine-mix") {
@@ -335,6 +385,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let mut cfg = ServerConfig { adaptive: !args.flag("no-adaptive"), ..ServerConfig::default() };
     cfg.batcher.max_batch = max_batch;
     cfg.max_retries = args.opt_usize("retries", 1) as u32;
+    cfg.profile = args.flag("profile");
     // single-pool layouts keep the profile open (Any) so every class is
     // served; multi-pool fleets get the engine-derived QoS profiles the
     // class-aware dispatch routes on
@@ -376,6 +427,26 @@ fn cmd_serve(args: &Args) -> Result<()> {
         })
         .collect::<Result<Vec<_>>>()?;
     let fleet = Fleet::start(pools)?;
+    // exposition tier: assembled only from tick-drained windows, served
+    // over plain HTTP for scrapers (the STAT wire op reads the same sink)
+    let expo: Option<std::sync::Arc<Exposition>> =
+        metrics_addr.map(|_| std::sync::Arc::new(Exposition::new()));
+    let metrics_srv = match (metrics_addr, &expo) {
+        (Some(addr), Some(e)) => {
+            let srv = MetricsServer::start(addr, std::sync::Arc::clone(e))?;
+            println!(
+                "metrics: Prometheus exposition at http://{}/metrics \
+                 (tick-drained; `microflow top {}` renders it)",
+                srv.local_addr(),
+                srv.local_addr()
+            );
+            Some(srv)
+        }
+        _ => None,
+    };
+    if cfg.profile {
+        println!("profile: per-step kernel profiler attached to every worker");
+    }
     if let Some((seed, period)) = chaos {
         println!(
             "chaos: replica 0 of every pool fails every {period}th call \
@@ -421,12 +492,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // on, plus any pool whose breaker is away from Closed — windowed, not
     // lifetime, so a long-running session's status stays meaningful
     let run_tick = |label: &str| {
-        for r in fleet.tick() {
+        let reports = fleet.tick();
+        if let Some(e) = &expo {
+            e.absorb_tick(&reports);
+        }
+        for r in &reports {
             if r.acted() || r.breaker.is_some_and(|b| b != BreakerState::Closed) {
                 println!("tick {label}: {r}");
             }
         }
     };
+    let ticking = autoscale.is_some() || chaos.is_some() || expo.is_some();
     let mut pending = Vec::new();
     let mut shed = 0usize;
     let t0 = Instant::now();
@@ -451,7 +527,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             Err(e) if format!("{e:#}").contains("shed at admission") => shed += 1,
             Err(e) => return Err(e),
         }
-        if (autoscale.is_some() || chaos.is_some()) && last_tick.elapsed() >= tick_every {
+        if ticking && last_tick.elapsed() >= tick_every {
             run_tick("load");
             last_tick = Instant::now();
         }
@@ -471,9 +547,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
     }
     let wall = t0.elapsed();
-    if autoscale.is_some() || chaos.is_some() {
+    if ticking {
         // idle ticks after the drain: show the pool shrinking back toward
-        // its floor (and any open breaker re-closing) before the snapshot
+        // its floor (and any open breaker re-closing) before the snapshot;
+        // with metrics on, they also drain the final spans and windows
+        // into the exposition
         for _ in 0..8 {
             std::thread::sleep(tick_every);
             run_tick("idle");
@@ -484,7 +562,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
         wall.as_secs_f64(),
         fleet.snapshot()
     );
+    if let Some(e) = &expo {
+        // the drained pools are quiescent, so the exported lanes must hold
+        // the lifecycle identity class-by-class
+        println!(
+            "exposition lane identity (completed + shed + cancelled + failed == submitted): {}",
+            if e.identity_holds() { "ok" } else { "VIOLATED" }
+        );
+    }
+    if let Some(srv) = metrics_srv {
+        srv.shutdown();
+    }
     fleet.shutdown();
+    if let Some(e) = &expo {
+        anyhow::ensure!(e.identity_holds(), "exported lane identity violated");
+    }
     Ok(())
 }
 
@@ -538,6 +630,19 @@ fn cmd_serve_stream(args: &Args) -> Result<()> {
     }
     let mut router = Router::new();
     router.add_stream_host(name, host.clone());
+    // optional exposition tier: per-stream counters surface as
+    // microflow_stream_* metrics over HTTP and the STAT wire op
+    let expo: Option<std::sync::Arc<Exposition>> =
+        args.opt("metrics-addr").map(|_| std::sync::Arc::new(Exposition::new()));
+    let metrics_srv = match (args.opt("metrics-addr"), &expo) {
+        (Some(addr), Some(e)) => {
+            router.set_exposition(std::sync::Arc::clone(e));
+            let srv = MetricsServer::start(addr, std::sync::Arc::clone(e))?;
+            println!("metrics: Prometheus exposition at http://{}/metrics", srv.local_addr());
+            Some(srv)
+        }
+        _ => None,
+    };
     let ingress = Ingress::start("127.0.0.1:0", std::sync::Arc::new(router))?;
     println!(
         "serving {streams} stream(s) x {frames} frames of {name} over MFR3 at {} \
@@ -577,6 +682,16 @@ fn cmd_serve_stream(args: &Args) -> Result<()> {
                 );
             }
         }
+        if let Some(e) = &expo {
+            if fi % 16 == 15 {
+                e.absorb_streams(name, &host.snapshot());
+            }
+        }
+    }
+    if let Some(e) = &expo {
+        // final absorb while the streams are still open — close removes
+        // them from the host aggregate
+        e.absorb_streams(name, &host.snapshot());
     }
     let mut all_ok = true;
     for (c, id) in clients.iter_mut() {
@@ -595,7 +710,177 @@ fn cmd_serve_stream(args: &Args) -> Result<()> {
         );
     }
     println!("done: {verdicts} verdict(s), {soft_errors} soft push error(s)");
+    if let Some(srv) = metrics_srv {
+        srv.shutdown();
+    }
     ingress.shutdown();
     anyhow::ensure!(all_ok, "per-stream lifecycle identity violated");
     Ok(())
+}
+
+/// `microflow top <addr> [--wire]` — scrape one exposition snapshot from
+/// a serving deployment (HTTP `--metrics-addr` endpoint, or the ingress
+/// `STAT` wire op with `--wire`) and render it as per-pool request-lane,
+/// span and kernel-profile tables.
+fn cmd_top(args: &Args) -> Result<()> {
+    let addr = args
+        .positional
+        .get(1)
+        .map(|s| s.as_str())
+        .context("missing <addr> argument (the deployment's --metrics-addr, or its ingress address with --wire)")?;
+    let body = if args.flag("wire") {
+        Client::connect(addr)?.stats()?
+    } else {
+        http_get(addr)?
+    };
+    let samples = parse_exposition(&body);
+    if samples.is_empty() {
+        // placeholder comment (no exposition attached) or an empty sink
+        print!("{body}");
+        return Ok(());
+    }
+    render_top(&samples);
+    Ok(())
+}
+
+/// One blocking HTTP/1.0 GET against the metrics endpoint; returns the
+/// response body.
+fn http_get(addr: &str) -> Result<String> {
+    use std::io::{Read, Write};
+    let mut conn = std::net::TcpStream::connect(addr)
+        .with_context(|| format!("connect to metrics endpoint {addr}"))?;
+    conn.write_all(format!("GET /metrics HTTP/1.0\r\nHost: {addr}\r\n\r\n").as_bytes())?;
+    let mut resp = String::new();
+    conn.read_to_string(&mut resp)?;
+    match resp.split_once("\r\n\r\n") {
+        Some((head, body)) if head.starts_with("HTTP/1.0 200") => Ok(body.to_string()),
+        Some((head, _)) => bail!("metrics endpoint answered: {}", head.lines().next().unwrap_or("")),
+        None => bail!("malformed HTTP response from {addr}"),
+    }
+}
+
+/// Render parsed exposition samples as per-pool tables (the `top` view).
+fn render_top(samples: &[Sample]) {
+    let find = |name: &str, labels: &[(&str, &str)]| -> Option<f64> {
+        samples
+            .iter()
+            .find(|s| s.name == name && labels.iter().all(|&(k, v)| s.label(k) == Some(v)))
+            .map(|s| s.value)
+    };
+    let get = |name: &str, labels: &[(&str, &str)]| find(name, labels).unwrap_or(0.0);
+
+    let mut pools: Vec<&str> = samples
+        .iter()
+        .filter(|s| s.name == "microflow_requests_total")
+        .filter_map(|s| s.label("pool"))
+        .collect();
+    pools.sort_unstable();
+    pools.dedup();
+
+    for &pool in &pools {
+        let breaker = match find("microflow_breaker_state", &[("pool", pool)]).map(|v| v as u8) {
+            Some(0) => ", breaker closed",
+            Some(1) => ", breaker OPEN",
+            Some(2) => ", breaker half-open",
+            _ => "",
+        };
+        println!(
+            "pool {pool}: {} live replica(s), {} ejected, autoscale {} up / {} down{breaker}",
+            get("microflow_replicas", &[("pool", pool)]),
+            get("microflow_replicas_ejected_total", &[("pool", pool)]),
+            get("microflow_autoscale_decisions_total", &[("pool", pool), ("action", "up")]),
+            get("microflow_autoscale_decisions_total", &[("pool", pool), ("action", "down")]),
+        );
+        println!(
+            "  {:12} | {:>9} | {:>9} | {:>6} | {:>9} | {:>6} | {:>7} | {:>9}",
+            "class", "submitted", "completed", "shed", "cancelled", "failed", "retried", "p95 us"
+        );
+        for class in ["interactive", "bulk", "background"] {
+            let lane = |outcome: &str| {
+                get(
+                    "microflow_requests_total",
+                    &[("pool", pool), ("class", class), ("outcome", outcome)],
+                )
+            };
+            println!(
+                "  {:12} | {:>9} | {:>9} | {:>6} | {:>9} | {:>6} | {:>7} | {:>9.1}",
+                class,
+                lane("submitted"),
+                lane("completed"),
+                lane("shed"),
+                lane("cancelled"),
+                lane("failed"),
+                lane("retried"),
+                get("microflow_window_p95_us", &[("pool", pool), ("class", class)]),
+            );
+        }
+        let span_cells: Vec<String> = ["admit", "queue", "batch", "execute", "reply"]
+            .iter()
+            .map(|&phase| {
+                let total: f64 = samples
+                    .iter()
+                    .filter(|s| {
+                        s.name == "microflow_span_events_total"
+                            && s.label("pool") == Some(pool)
+                            && s.label("phase") == Some(phase)
+                    })
+                    .map(|s| s.value)
+                    .sum();
+                format!("{phase} {total}")
+            })
+            .collect();
+        println!(
+            "  spans: {} (dropped {})",
+            span_cells.join(" | "),
+            get("microflow_spans_dropped_total", &[("pool", pool)]),
+        );
+        let mut steps: Vec<(usize, &str, f64, f64)> = samples
+            .iter()
+            .filter(|s| {
+                s.name == "microflow_step_invocations_total" && s.label("pool") == Some(pool)
+            })
+            .filter_map(|s| {
+                let step: usize = s.label("step")?.parse().ok()?;
+                let kind = s.label("kind")?;
+                let ns = get(
+                    "microflow_step_ns_total",
+                    &[("pool", pool), ("step", s.label("step")?), ("kind", kind)],
+                );
+                Some((step, kind, s.value, ns))
+            })
+            .collect();
+        steps.sort_unstable_by_key(|&(step, ..)| step);
+        if !steps.is_empty() {
+            println!(
+                "  {:>4} | {:16} | {:>9} | {:>12} | {:>10}",
+                "step", "kind", "calls", "total ns", "ns/call"
+            );
+            for (step, kind, calls, ns) in steps {
+                let per = if calls > 0.0 { ns / calls } else { 0.0 };
+                println!("  {step:>4} | {kind:16} | {calls:>9} | {ns:>12} | {per:>10.1}");
+            }
+        }
+    }
+
+    let mut models: Vec<&str> = samples
+        .iter()
+        .filter(|s| s.name == "microflow_stream_pushes_total")
+        .filter_map(|s| s.label("model"))
+        .collect();
+    models.sort_unstable();
+    models.dedup();
+    for model in models {
+        let lane = |outcome: &str| {
+            get("microflow_stream_pushes_total", &[("model", model), ("outcome", outcome)])
+        };
+        println!(
+            "stream {model}: pushes {}/{} done ({} shed, {} cancelled, {} failed), {} verdict(s)",
+            lane("completed"),
+            lane("submitted"),
+            lane("shed"),
+            lane("cancelled"),
+            lane("failed"),
+            get("microflow_stream_verdicts_total", &[("model", model)]),
+        );
+    }
 }

@@ -1,0 +1,761 @@
+//! Exposition tier: a Prometheus-text-format snapshot assembled **only**
+//! from drained windows.
+//!
+//! [`Exposition`] is the single sink the deployment's tick loop feeds:
+//! [`Exposition::absorb_tick`] folds each [`PoolTickReport`] (the consumed
+//! metrics window, the drained span window, the cumulative per-step
+//! profile rows, breaker/autoscale/ejection outcomes) into per-pool
+//! accumulators, and [`Exposition::absorb_streams`] folds a
+//! [`StreamHostSnapshot`]. [`Exposition::render`] then serializes the
+//! accumulated state — it never touches a `Metrics`, a span ring or any
+//! other live counter, which is what keeps the exporter read-only and the
+//! window cursor single-consumer.
+//!
+//! Because the request lanes are accumulated from window *deltas*, the
+//! exported counters satisfy the lifecycle identity
+//! `completed + shed + cancelled + failed == submitted` per pool and per
+//! class whenever the pools are quiescent at tick time — re-asserted on
+//! the exported text itself by [`Exposition::identity_holds`] and the
+//! scrape-smoke suite.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::io::{Read, Write};
+use std::net::{TcpListener, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use super::profile::StepProfileRow;
+use super::span::{SpanWindow, CLASS_LANES, PHASE_COUNT};
+use crate::coordinator::autoscale::ScaleAction;
+use crate::coordinator::fleet::PoolTickReport;
+use crate::coordinator::resilience::BreakerState;
+use crate::coordinator::stream::StreamHostSnapshot;
+
+/// QoS lane names in dense-index order (mirrors `QosClass::ALL`).
+const CLASS_NAMES: [&str; CLASS_LANES] = ["interactive", "bulk", "background"];
+/// Phase names in dense-index order (mirrors `Phase::ALL`).
+const PHASE_NAMES: [&str; PHASE_COUNT] = ["admit", "queue", "batch", "execute", "reply"];
+
+/// One class lane's accumulated lifecycle counters.
+#[derive(Clone, Copy, Debug, Default)]
+struct LaneAcc {
+    submitted: u64,
+    completed: u64,
+    shed: u64,
+    cancelled: u64,
+    failed: u64,
+    retried: u64,
+    deadline_missed: u64,
+}
+
+/// One pool's accumulated exposition state.
+#[derive(Debug, Default)]
+struct PoolExpo {
+    lanes: [LaneAcc; CLASS_LANES],
+    /// Latest window's p95 per class (gauge).
+    p95_us: [f64; CLASS_LANES],
+    live_replicas: usize,
+    breaker: Option<BreakerState>,
+    ejected_total: u64,
+    scale_up_total: u64,
+    scale_down_total: u64,
+    spans: SpanWindow,
+    /// Cumulative per-step rows, replaced wholesale each tick (the
+    /// shared profile's counters are monotonic already).
+    profile: Vec<StepProfileRow>,
+}
+
+/// One stream host's latest aggregated counters. Streams leave the
+/// aggregate when closed, so these are exported from the most recent
+/// snapshot rather than accumulated (the per-stream identity still holds
+/// within any one snapshot).
+#[derive(Clone, Copy, Debug, Default)]
+struct StreamExpo {
+    submitted: u64,
+    completed: u64,
+    shed: u64,
+    cancelled: u64,
+    failed: u64,
+    verdicts: u64,
+}
+
+#[derive(Debug, Default)]
+struct ExpoState {
+    pools: BTreeMap<String, PoolExpo>,
+    streams: BTreeMap<String, StreamExpo>,
+}
+
+/// The metrics sink + renderer (module docs have the contract). Shareable:
+/// the tick loop absorbs, any number of scrapers render.
+#[derive(Default)]
+pub struct Exposition {
+    state: Mutex<ExpoState>,
+}
+
+impl Exposition {
+    pub fn new() -> Exposition {
+        Exposition::default()
+    }
+
+    /// Fold one tick's reports into the accumulators. Called from the
+    /// deployment's tick loop only — the reports carry everything the
+    /// exporter needs, already drained.
+    pub fn absorb_tick(&self, reports: &[PoolTickReport]) {
+        let mut st = self.state.lock().unwrap();
+        for r in reports {
+            let p = st.pools.entry(r.pool.clone()).or_default();
+            for (i, c) in r.window.per_class.iter().enumerate() {
+                let lane = &mut p.lanes[i];
+                lane.submitted += c.submitted;
+                lane.completed += c.completed;
+                lane.shed += c.shed;
+                lane.cancelled += c.cancelled;
+                lane.failed += c.failed;
+                lane.retried += c.retried;
+                lane.deadline_missed += c.deadline_missed;
+                if c.completed > 0 {
+                    p.p95_us[i] = c.p95_us;
+                }
+            }
+            p.live_replicas = r.live_replicas;
+            p.breaker = r.breaker;
+            p.ejected_total += r.ejected.len() as u64;
+            match r.decision.map(|d| d.action) {
+                Some(ScaleAction::Up(_)) => p.scale_up_total += 1,
+                Some(ScaleAction::Down(_)) => p.scale_down_total += 1,
+                _ => {}
+            }
+            p.spans.merge(&r.spans);
+            if !r.profile.is_empty() {
+                p.profile = r.profile.clone();
+            }
+        }
+    }
+
+    /// Fold one stream host's snapshot (keyed by model name).
+    pub fn absorb_streams(&self, model: &str, snap: &StreamHostSnapshot) {
+        let mut agg = StreamExpo::default();
+        for s in &snap.streams {
+            agg.submitted += s.counters.submitted;
+            agg.completed += s.counters.completed;
+            agg.shed += s.counters.shed;
+            agg.cancelled += s.counters.cancelled;
+            agg.failed += s.counters.failed;
+            agg.verdicts += s.counters.verdicts;
+        }
+        self.state.lock().unwrap().streams.insert(model.to_string(), agg);
+    }
+
+    /// Does every pool's every class lane satisfy
+    /// `completed + shed + cancelled + failed == submitted` in the
+    /// accumulated state? True exactly when the pools were quiescent at
+    /// the last absorbed tick.
+    pub fn identity_holds(&self) -> bool {
+        let st = self.state.lock().unwrap();
+        st.pools.values().all(|p| {
+            p.lanes
+                .iter()
+                .all(|l| l.completed + l.shed + l.cancelled + l.failed == l.submitted)
+        })
+    }
+
+    /// Serialize the accumulated state as Prometheus text format
+    /// (version 0.0.4): one `# HELP`/`# TYPE` pair per family, stable
+    /// (sorted) ordering, label values escaped.
+    pub fn render(&self) -> String {
+        let st = self.state.lock().unwrap();
+        let mut out = String::new();
+        let family = |out: &mut String, name: &str, help: &str, kind: &str| {
+            let _ = writeln!(out, "# HELP {name} {help}");
+            let _ = writeln!(out, "# TYPE {name} {kind}");
+        };
+
+        family(
+            &mut out,
+            "microflow_requests_total",
+            "Request lifecycle counters per pool, class and outcome.",
+            "counter",
+        );
+        for (name, p) in st.pools.iter() {
+            let pool = escape_label(name);
+            for (i, lane) in p.lanes.iter().enumerate() {
+                let class = CLASS_NAMES[i];
+                for (outcome, v) in [
+                    ("submitted", lane.submitted),
+                    ("completed", lane.completed),
+                    ("shed", lane.shed),
+                    ("cancelled", lane.cancelled),
+                    ("failed", lane.failed),
+                    ("retried", lane.retried),
+                    ("deadline_missed", lane.deadline_missed),
+                ] {
+                    let _ = writeln!(
+                        out,
+                        "microflow_requests_total{{pool=\"{pool}\",class=\"{class}\",outcome=\"{outcome}\"}} {v}"
+                    );
+                }
+            }
+        }
+
+        family(
+            &mut out,
+            "microflow_window_p95_us",
+            "p95 latency of the most recent active window, microseconds.",
+            "gauge",
+        );
+        for (name, p) in st.pools.iter() {
+            let pool = escape_label(name);
+            for (i, v) in p.p95_us.iter().enumerate() {
+                let _ = writeln!(
+                    out,
+                    "microflow_window_p95_us{{pool=\"{pool}\",class=\"{}\"}} {v}",
+                    CLASS_NAMES[i]
+                );
+            }
+        }
+
+        family(&mut out, "microflow_replicas", "Live replicas per pool.", "gauge");
+        for (name, p) in st.pools.iter() {
+            let _ = writeln!(
+                out,
+                "microflow_replicas{{pool=\"{}\"}} {}",
+                escape_label(name),
+                p.live_replicas
+            );
+        }
+
+        family(
+            &mut out,
+            "microflow_breaker_state",
+            "Circuit breaker state per pool (0=closed, 1=open, 2=half-open).",
+            "gauge",
+        );
+        for (name, p) in st.pools.iter() {
+            if let Some(b) = p.breaker {
+                let _ = writeln!(
+                    out,
+                    "microflow_breaker_state{{pool=\"{}\"}} {}",
+                    escape_label(name),
+                    b.as_u8()
+                );
+            }
+        }
+
+        family(
+            &mut out,
+            "microflow_replicas_ejected_total",
+            "Replicas ejected by the health pass per pool.",
+            "counter",
+        );
+        for (name, p) in st.pools.iter() {
+            let _ = writeln!(
+                out,
+                "microflow_replicas_ejected_total{{pool=\"{}\"}} {}",
+                escape_label(name),
+                p.ejected_total
+            );
+        }
+
+        family(
+            &mut out,
+            "microflow_autoscale_decisions_total",
+            "Applied autoscale decisions per pool and direction.",
+            "counter",
+        );
+        for (name, p) in st.pools.iter() {
+            let pool = escape_label(name);
+            let _ = writeln!(
+                out,
+                "microflow_autoscale_decisions_total{{pool=\"{pool}\",action=\"up\"}} {}",
+                p.scale_up_total
+            );
+            let _ = writeln!(
+                out,
+                "microflow_autoscale_decisions_total{{pool=\"{pool}\",action=\"down\"}} {}",
+                p.scale_down_total
+            );
+        }
+
+        family(
+            &mut out,
+            "microflow_span_events_total",
+            "Span events drained per pool, request phase and class.",
+            "counter",
+        );
+        for (name, p) in st.pools.iter() {
+            let pool = escape_label(name);
+            for (pi, phase) in PHASE_NAMES.iter().enumerate() {
+                for (ci, class) in CLASS_NAMES.iter().enumerate() {
+                    let _ = writeln!(
+                        out,
+                        "microflow_span_events_total{{pool=\"{pool}\",phase=\"{phase}\",class=\"{class}\"}} {}",
+                        p.spans.counts[pi][ci]
+                    );
+                }
+            }
+        }
+
+        family(
+            &mut out,
+            "microflow_spans_dropped_total",
+            "Span events lost to ring overwrite per pool.",
+            "counter",
+        );
+        for (name, p) in st.pools.iter() {
+            let _ = writeln!(
+                out,
+                "microflow_spans_dropped_total{{pool=\"{}\"}} {}",
+                escape_label(name),
+                p.spans.dropped
+            );
+        }
+
+        family(
+            &mut out,
+            "microflow_step_invocations_total",
+            "Plan-step kernel invocations per pool and step.",
+            "counter",
+        );
+        for (name, p) in st.pools.iter() {
+            let pool = escape_label(name);
+            for row in &p.profile {
+                let _ = writeln!(
+                    out,
+                    "microflow_step_invocations_total{{pool=\"{pool}\",step=\"{}\",kind=\"{}\"}} {}",
+                    row.step, row.kind, row.invocations
+                );
+            }
+        }
+
+        family(
+            &mut out,
+            "microflow_step_ns_total",
+            "Plan-step kernel nanoseconds per pool and step.",
+            "counter",
+        );
+        for (name, p) in st.pools.iter() {
+            let pool = escape_label(name);
+            for row in &p.profile {
+                let _ = writeln!(
+                    out,
+                    "microflow_step_ns_total{{pool=\"{pool}\",step=\"{}\",kind=\"{}\"}} {}",
+                    row.step, row.kind, row.total_ns
+                );
+            }
+        }
+
+        family(
+            &mut out,
+            "microflow_stream_pushes_total",
+            "Stream push lifecycle counters per model and outcome (open streams).",
+            "counter",
+        );
+        for (model, s) in st.streams.iter() {
+            let m = escape_label(model);
+            for (outcome, v) in [
+                ("submitted", s.submitted),
+                ("completed", s.completed),
+                ("shed", s.shed),
+                ("cancelled", s.cancelled),
+                ("failed", s.failed),
+            ] {
+                let _ = writeln!(
+                    out,
+                    "microflow_stream_pushes_total{{model=\"{m}\",outcome=\"{outcome}\"}} {v}"
+                );
+            }
+        }
+
+        family(
+            &mut out,
+            "microflow_stream_verdicts_total",
+            "Stream verdicts emitted per model (open streams).",
+            "counter",
+        );
+        for (model, s) in st.streams.iter() {
+            let _ = writeln!(
+                out,
+                "microflow_stream_verdicts_total{{model=\"{}\"}} {}",
+                escape_label(model),
+                s.verdicts
+            );
+        }
+
+        out
+    }
+}
+
+/// Escape a label value per the Prometheus text format: backslash, double
+/// quote and newline.
+pub fn escape_label(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// One parsed sample off an exposition body.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Sample {
+    pub name: String,
+    pub labels: Vec<(String, String)>,
+    pub value: f64,
+}
+
+impl Sample {
+    /// Value of label `key`, if present.
+    pub fn label(&self, key: &str) -> Option<&str> {
+        self.labels.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+}
+
+/// Parse a Prometheus-text-format body back into samples (label escapes
+/// reversed). The inverse of [`Exposition::render`] — what `microflow
+/// top` and the scrape tests consume. Comment/blank lines are skipped;
+/// malformed lines are dropped rather than failing the whole body.
+pub fn parse_exposition(text: &str) -> Vec<Sample> {
+    let mut out = Vec::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (head, value) = match line.rfind(' ') {
+            Some(i) => (&line[..i], &line[i + 1..]),
+            None => continue,
+        };
+        let Ok(value) = value.parse::<f64>() else { continue };
+        let (name, labels) = match head.find('{') {
+            None => (head.to_string(), Vec::new()),
+            Some(open) => {
+                let Some(close) = head.rfind('}') else { continue };
+                let name = head[..open].to_string();
+                let mut labels = Vec::new();
+                let body = &head[open + 1..close];
+                let mut chars = body.chars().peekable();
+                'pairs: while chars.peek().is_some() {
+                    let mut key = String::new();
+                    for c in chars.by_ref() {
+                        if c == '=' {
+                            break;
+                        }
+                        key.push(c);
+                    }
+                    if chars.next() != Some('"') {
+                        break 'pairs;
+                    }
+                    let mut val = String::new();
+                    loop {
+                        match chars.next() {
+                            Some('\\') => match chars.next() {
+                                Some('\\') => val.push('\\'),
+                                Some('"') => val.push('"'),
+                                Some('n') => val.push('\n'),
+                                Some(c) => val.push(c),
+                                None => break 'pairs,
+                            },
+                            Some('"') => break,
+                            Some(c) => val.push(c),
+                            None => break 'pairs,
+                        }
+                    }
+                    labels.push((key, val));
+                    if chars.peek() == Some(&',') {
+                        chars.next();
+                    }
+                }
+                (name, labels)
+            }
+        };
+        out.push(Sample { name, labels, value });
+    }
+    out
+}
+
+/// A minimal blocking HTTP/1.0 exposition endpoint: every request (any
+/// path) is answered with the current [`Exposition::render`] body. Built
+/// on the non-blocking std listener + one thread — no async runtime, no
+/// HTTP library, matching the repo's hand-rolled wire tier.
+pub struct MetricsServer {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl MetricsServer {
+    /// Bind `addr` (e.g. `127.0.0.1:9100`; port 0 picks a free port) and
+    /// start serving scrapes of `expo`.
+    pub fn start(addr: impl ToSocketAddrs, expo: Arc<Exposition>) -> Result<MetricsServer> {
+        let listener = TcpListener::bind(addr).context("binding metrics listener")?;
+        let addr = listener.local_addr().context("metrics listener addr")?;
+        listener.set_nonblocking(true).context("metrics listener nonblocking")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let handle = std::thread::Builder::new()
+            .name("mf-metrics".into())
+            .spawn(move || {
+                while !stop2.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((mut conn, _)) => {
+                            let _ = conn.set_nonblocking(false);
+                            // best-effort request drain: one read is enough
+                            // for any sane scraper's GET line + headers
+                            let mut buf = [0u8; 1024];
+                            let _ = conn.read(&mut buf);
+                            let body = expo.render();
+                            let head = format!(
+                                "HTTP/1.0 200 OK\r\nContent-Type: text/plain; version=0.0.4; charset=utf-8\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+                                body.len()
+                            );
+                            let _ = conn.write_all(head.as_bytes());
+                            let _ = conn.write_all(body.as_bytes());
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(std::time::Duration::from_millis(5));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })
+            .context("spawning metrics thread")?;
+        Ok(MetricsServer { addr, stop, handle: Some(handle) })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn local_addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting and join the serving thread.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::autoscale::{Decision, ScaleReason};
+    use crate::coordinator::metrics::{ClassWindow, WindowSnapshot};
+    use crate::coordinator::request::QosClass;
+    use std::time::Duration;
+
+    fn lane(class: QosClass, submitted: u64, completed: u64, shed: u64) -> ClassWindow {
+        ClassWindow {
+            class,
+            submitted,
+            completed,
+            failed: 0,
+            retried: 0,
+            shed,
+            cancelled: 0,
+            deadline_missed: 0,
+            p50_us: 10.0,
+            p95_us: 42.0,
+        }
+    }
+
+    fn report(pool: &str) -> PoolTickReport {
+        let mut counts = [[0u64; CLASS_LANES]; PHASE_COUNT];
+        counts[0][0] = 3; // 3 admits, interactive
+        let spans = SpanWindow { recorded: 3, counts, ..SpanWindow::default() };
+        PoolTickReport {
+            pool: pool.to_string(),
+            live_replicas: 2,
+            decision: Some(Decision {
+                action: ScaleAction::Up(1),
+                reason: ScaleReason::SloBreach,
+            }),
+            breaker: Some(BreakerState::Closed),
+            ejected: vec!["w0".to_string()],
+            window: WindowSnapshot {
+                elapsed: Duration::from_secs(1),
+                per_class: [
+                    lane(QosClass::Interactive, 3, 2, 1),
+                    lane(QosClass::Bulk, 0, 0, 0),
+                    lane(QosClass::Background, 0, 0, 0),
+                ],
+            },
+            spans,
+            profile: vec![
+                StepProfileRow { step: 0, kind: "FullyConnected", invocations: 5, total_ns: 1000 },
+                StepProfileRow { step: 1, kind: "Softmax", invocations: 5, total_ns: 200 },
+            ],
+        }
+    }
+
+    #[test]
+    fn escaping_covers_backslash_quote_and_newline() {
+        assert_eq!(escape_label(r#"a\b"c"#), r#"a\\b\"c"#);
+        assert_eq!(escape_label("x\ny"), r"x\ny");
+        assert_eq!(escape_label("plain"), "plain");
+    }
+
+    #[test]
+    fn render_is_stable_and_parse_roundtrips_escapes() {
+        let expo = Exposition::new();
+        expo.absorb_tick(&[report(r#"we"ird\pool"#)]);
+        let a = expo.render();
+        let b = expo.render();
+        assert_eq!(a, b, "rendering must be deterministic");
+        let samples = parse_exposition(&a);
+        let s = samples
+            .iter()
+            .find(|s| {
+                s.name == "microflow_requests_total"
+                    && s.label("class") == Some("interactive")
+                    && s.label("outcome") == Some("submitted")
+            })
+            .expect("submitted sample");
+        assert_eq!(s.label("pool"), Some(r#"we"ird\pool"#), "escapes must roundtrip");
+        assert_eq!(s.value, 3.0);
+    }
+
+    #[test]
+    fn lane_identity_is_assertable_on_the_exported_text() {
+        let expo = Exposition::new();
+        // two ticks accumulate: 6 submitted = 4 completed + 2 shed
+        expo.absorb_tick(&[report("pool")]);
+        expo.absorb_tick(&[report("pool")]);
+        assert!(expo.identity_holds());
+        let samples = parse_exposition(&expo.render());
+        for class in CLASS_NAMES {
+            let get = |outcome: &str| {
+                samples
+                    .iter()
+                    .find(|s| {
+                        s.name == "microflow_requests_total"
+                            && s.label("class") == Some(class)
+                            && s.label("outcome") == Some(outcome)
+                    })
+                    .map(|s| s.value)
+                    .unwrap()
+            };
+            assert_eq!(
+                get("completed") + get("shed") + get("cancelled") + get("failed"),
+                get("submitted"),
+                "identity broken for class {class}"
+            );
+        }
+    }
+
+    #[test]
+    fn control_plane_counters_accumulate_and_profiles_replace() {
+        let expo = Exposition::new();
+        expo.absorb_tick(&[report("p")]);
+        expo.absorb_tick(&[report("p")]);
+        let samples = parse_exposition(&expo.render());
+        let find = |name: &str, key: &str, val: &str| {
+            samples
+                .iter()
+                .find(|s| s.name == name && s.label(key) == Some(val))
+                .map(|s| s.value)
+                .unwrap()
+        };
+        assert_eq!(find("microflow_replicas_ejected_total", "pool", "p"), 2.0);
+        assert_eq!(find("microflow_autoscale_decisions_total", "action", "up"), 2.0);
+        assert_eq!(find("microflow_autoscale_decisions_total", "action", "down"), 0.0);
+        assert_eq!(find("microflow_span_events_total", "phase", "admit"), 6.0);
+        // profile rows are cumulative, so the latest replaces wholesale
+        assert_eq!(find("microflow_step_invocations_total", "step", "0"), 5.0);
+        assert_eq!(find("microflow_step_ns_total", "step", "1"), 200.0);
+        assert_eq!(find("microflow_replicas", "pool", "p"), 2.0);
+        assert_eq!(find("microflow_breaker_state", "pool", "p"), 0.0);
+    }
+
+    #[test]
+    fn help_and_type_appear_once_per_family() {
+        let expo = Exposition::new();
+        expo.absorb_tick(&[report("a"), report("b")]);
+        let text = expo.render();
+        for family in ["microflow_requests_total", "microflow_span_events_total"] {
+            let help = text.matches(&format!("# HELP {family} ")).count();
+            let kind = text.matches(&format!("# TYPE {family} ")).count();
+            assert_eq!((help, kind), (1, 1), "{family}");
+        }
+        // pools render in sorted order: "a" samples precede "b" samples
+        let a = text.find("pool=\"a\"").unwrap();
+        let b = text.find("pool=\"b\"").unwrap();
+        assert!(a < b);
+    }
+
+    #[test]
+    fn stream_counters_surface_with_the_identity() {
+        use crate::coordinator::stream::{StreamCounters, StreamSnapshot};
+        let expo = Exposition::new();
+        let snap = StreamHostSnapshot {
+            streams: vec![StreamSnapshot {
+                id: 1,
+                name: "s".into(),
+                worker: "stream-w0".into(),
+                counters: StreamCounters {
+                    submitted: 10,
+                    completed: 7,
+                    shed: 1,
+                    cancelled: 1,
+                    failed: 1,
+                    verdicts: 2,
+                },
+            }],
+            workers: Vec::new(),
+        };
+        expo.absorb_streams("kws", &snap);
+        let samples = parse_exposition(&expo.render());
+        let get = |outcome: &str| {
+            samples
+                .iter()
+                .find(|s| {
+                    s.name == "microflow_stream_pushes_total" && s.label("outcome") == Some(outcome)
+                })
+                .map(|s| s.value)
+                .unwrap()
+        };
+        assert_eq!(get("completed") + get("shed") + get("cancelled") + get("failed"), get("submitted"));
+        let v = samples
+            .iter()
+            .find(|s| s.name == "microflow_stream_verdicts_total")
+            .unwrap();
+        assert_eq!(v.label("model"), Some("kws"));
+        assert_eq!(v.value, 2.0);
+    }
+
+    #[test]
+    fn metrics_server_answers_a_raw_scrape() {
+        let expo = Arc::new(Exposition::new());
+        expo.absorb_tick(&[report("p")]);
+        let server = MetricsServer::start("127.0.0.1:0", Arc::clone(&expo)).unwrap();
+        let addr = server.local_addr();
+        let mut conn = std::net::TcpStream::connect(addr).unwrap();
+        conn.write_all(b"GET /metrics HTTP/1.0\r\nHost: x\r\n\r\n").unwrap();
+        let mut resp = String::new();
+        conn.read_to_string(&mut resp).unwrap();
+        assert!(resp.starts_with("HTTP/1.0 200 OK"), "{resp}");
+        assert!(resp.contains("text/plain; version=0.0.4"));
+        let body = resp.split("\r\n\r\n").nth(1).unwrap();
+        assert!(parse_exposition(body)
+            .iter()
+            .any(|s| s.name == "microflow_requests_total"));
+        server.shutdown();
+    }
+}

@@ -1,0 +1,36 @@
+//! Zero-allocation observability plane (DESIGN: ISSUE 10).
+//!
+//! Three tiers, strictly layered so observation never perturbs serving:
+//!
+//! 1. **Span recorder** ([`span`]) — preallocated fixed-capacity ring
+//!    buffers of POD span events covering the request lifecycle
+//!    (admit → queue → batch → execute → reply). Recording is
+//!    allocation-free, lock-free and wait-free; a full ring overwrites
+//!    oldest-first and the loss is counted, never silent.
+//! 2. **Per-step kernel profiles** ([`profile`]) — the [`StepObserver`]
+//!    hook threaded through `engine::run_plan_from`, with fixed-table
+//!    accumulators for single sessions ([`StepProfiler`]) and whole
+//!    worker pools ([`SharedStepProfile`]).
+//! 3. **Exposition** ([`expo`]) — the Prometheus-text snapshot assembled
+//!    only from windows the tick loop already drained, served over
+//!    `microflow serve --metrics-addr`, the version-agnostic `STAT` wire
+//!    op, and the `microflow top` view.
+//!
+//! **The read-only invariant**: no policy decision may read a span ring,
+//! and exporters only consume drained windows. The tick loop is the
+//! single drain point — the same place that consumes `Metrics::window` —
+//! so adding observability changes no control-loop behavior and no
+//! serving result.
+
+pub mod expo;
+pub mod profile;
+pub mod span;
+
+pub use expo::{escape_label, parse_exposition, Exposition, MetricsServer, Sample};
+pub use profile::{
+    SharedProfileObserver, SharedStepProfile, StepObserver, StepProfileRow, StepProfiler, StepStat,
+    MAX_STEPS,
+};
+pub use span::{
+    Phase, SpanRecorder, SpanRing, SpanWindow, CLASS_LANES, PHASE_COUNT, SPAN_RING_CAPACITY,
+};

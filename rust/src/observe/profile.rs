@@ -1,0 +1,325 @@
+//! Per-step kernel profiles: a reusable [`StepObserver`] hook threaded
+//! through `engine::run_plan_from`, plus two accumulator flavors —
+//! [`StepProfiler`] (single-threaded, plain counters, for `audit
+//! --profile` and benches) and [`SharedStepProfile`] (atomic counters a
+//! whole worker pool can feed, drained by the tick loop).
+//!
+//! Both accumulate into fixed `[_; MAX_STEPS]` tables sized at compile
+//! time, TFLM-style op profiling without its heap: attaching a profiler
+//! to a session adds two `Instant` reads and two integer adds per plan
+//! step and allocates nothing.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Per-step hook invoked by `engine::run_plan_from` around each plan
+/// step. `on_step_start` fires before the kernel runs; `on_step` fires
+/// after, with the step's output view (pre-flip scratch).
+///
+/// A blanket impl keeps plain `FnMut(usize, &[i8])` closures (the
+/// original `stream::prime()` observer shape) working unchanged — they
+/// simply never see `on_step_start`.
+pub trait StepObserver {
+    /// Called immediately before step `step` executes.
+    fn on_step_start(&mut self, _step: usize) {}
+    /// Called after step `step` produced `out` (its quantized output).
+    fn on_step(&mut self, step: usize, out: &[i8]);
+}
+
+impl<F: FnMut(usize, &[i8])> StepObserver for F {
+    fn on_step(&mut self, step: usize, out: &[i8]) {
+        self(step, out)
+    }
+}
+
+/// Maximum plan steps a profile table covers. Steps beyond this are
+/// counted in `overflow` instead of silently ignored. Every model the
+/// compiler or `synth` currently emits fits comfortably.
+pub const MAX_STEPS: usize = 64;
+
+/// Accumulated timing for one plan step.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StepStat {
+    /// Times the step executed.
+    pub invocations: u64,
+    /// Total wall-clock nanoseconds across all invocations.
+    pub total_ns: u64,
+}
+
+impl StepStat {
+    /// Mean nanoseconds per invocation (0 when never invoked).
+    pub fn ns_per_call(&self) -> u64 {
+        if self.invocations == 0 { 0 } else { self.total_ns / self.invocations }
+    }
+}
+
+/// One exported profile row: a step index paired with its kind name and
+/// cumulative counters. The exposition tier and `audit --profile` both
+/// render these.
+#[derive(Clone, Debug)]
+pub struct StepProfileRow {
+    pub step: usize,
+    pub kind: &'static str,
+    pub invocations: u64,
+    pub total_ns: u64,
+}
+
+impl StepProfileRow {
+    pub fn ns_per_call(&self) -> u64 {
+        if self.invocations == 0 { 0 } else { self.total_ns / self.invocations }
+    }
+}
+
+/// Single-threaded per-step profiler: a fixed `[StepStat; MAX_STEPS]`
+/// table fed through the [`StepObserver`] hook. No allocation after
+/// construction; safe to attach on the allocation-free predict path.
+pub struct StepProfiler {
+    stats: [StepStat; MAX_STEPS],
+    pending: Option<(usize, Instant)>,
+    overflow: u64,
+}
+
+impl StepProfiler {
+    pub fn new() -> StepProfiler {
+        StepProfiler { stats: [StepStat::default(); MAX_STEPS], pending: None, overflow: 0 }
+    }
+
+    /// The full fixed-size table (unused tail entries are zero).
+    pub fn stats(&self) -> &[StepStat; MAX_STEPS] {
+        &self.stats
+    }
+
+    /// One step's accumulated stat (`None` beyond [`MAX_STEPS`]).
+    pub fn stat(&self, step: usize) -> Option<StepStat> {
+        self.stats.get(step).copied()
+    }
+
+    /// Invocations of steps at index `>= MAX_STEPS` (not timed).
+    pub fn overflow(&self) -> u64 {
+        self.overflow
+    }
+
+    /// Number of leading table entries that have been invoked at least
+    /// once — for a full plan run this equals the plan's step count.
+    pub fn observed_steps(&self) -> usize {
+        self.stats.iter().rposition(|s| s.invocations > 0).map_or(0, |i| i + 1)
+    }
+
+    /// Zero the table and overflow counter.
+    pub fn reset(&mut self) {
+        self.stats = [StepStat::default(); MAX_STEPS];
+        self.pending = None;
+        self.overflow = 0;
+    }
+
+    /// Export one row per entry of `kinds` (the session's
+    /// `step_kinds()`), so rows cover every plan step exactly once even
+    /// when a step was never invoked.
+    pub fn rows(&self, kinds: &[&'static str]) -> Vec<StepProfileRow> {
+        kinds
+            .iter()
+            .enumerate()
+            .map(|(i, kind)| {
+                let s = self.stat(i).unwrap_or_default();
+                StepProfileRow { step: i, kind, invocations: s.invocations, total_ns: s.total_ns }
+            })
+            .collect()
+    }
+}
+
+impl Default for StepProfiler {
+    fn default() -> Self {
+        StepProfiler::new()
+    }
+}
+
+impl StepObserver for StepProfiler {
+    fn on_step_start(&mut self, step: usize) {
+        self.pending = Some((step, Instant::now()));
+    }
+
+    fn on_step(&mut self, step: usize, _out: &[i8]) {
+        let ns = match self.pending.take() {
+            Some((s, t0)) if s == step => t0.elapsed().as_nanos() as u64,
+            _ => 0,
+        };
+        if let Some(stat) = self.stats.get_mut(step) {
+            stat.invocations += 1;
+            stat.total_ns += ns;
+        } else {
+            self.overflow += 1;
+        }
+    }
+}
+
+/// Pool-shared per-step profile: the same fixed table, but atomic, so
+/// every worker in a `coordinator` pool can feed one instance through a
+/// [`SharedProfileObserver`] without locks. Read by the tick loop via
+/// [`SharedStepProfile::rows`] (cumulative counters — the exposition
+/// tier exports them as Prometheus counters directly).
+pub struct SharedStepProfile {
+    invocations: [AtomicU64; MAX_STEPS],
+    total_ns: [AtomicU64; MAX_STEPS],
+    overflow: AtomicU64,
+}
+
+impl SharedStepProfile {
+    pub fn new() -> SharedStepProfile {
+        SharedStepProfile {
+            invocations: std::array::from_fn(|_| AtomicU64::new(0)),
+            total_ns: std::array::from_fn(|_| AtomicU64::new(0)),
+            overflow: AtomicU64::new(0),
+        }
+    }
+
+    /// Fold one timed step execution into the table. Lock-free,
+    /// allocation-free.
+    pub fn record(&self, step: usize, ns: u64) {
+        if step < MAX_STEPS {
+            self.invocations[step].fetch_add(1, Ordering::Relaxed);
+            self.total_ns[step].fetch_add(ns, Ordering::Relaxed);
+        } else {
+            self.overflow.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    pub fn overflow(&self) -> u64 {
+        self.overflow.load(Ordering::Relaxed)
+    }
+
+    /// Cumulative rows, one per entry of `kinds` (the pool's plan step
+    /// kinds) — every plan step appears exactly once.
+    pub fn rows(&self, kinds: &[&'static str]) -> Vec<StepProfileRow> {
+        kinds
+            .iter()
+            .enumerate()
+            .map(|(i, kind)| StepProfileRow {
+                step: i,
+                kind,
+                invocations: if i < MAX_STEPS { self.invocations[i].load(Ordering::Relaxed) } else { 0 },
+                total_ns: if i < MAX_STEPS { self.total_ns[i].load(Ordering::Relaxed) } else { 0 },
+            })
+            .collect()
+    }
+}
+
+impl Default for SharedStepProfile {
+    fn default() -> Self {
+        SharedStepProfile::new()
+    }
+}
+
+/// Per-batch adapter a worker stack-allocates to feed a
+/// [`SharedStepProfile`]: times each step locally, publishes with one
+/// `fetch_add` pair per step.
+pub struct SharedProfileObserver<'a> {
+    shared: &'a SharedStepProfile,
+    pending: Option<(usize, Instant)>,
+}
+
+impl<'a> SharedProfileObserver<'a> {
+    pub fn new(shared: &'a SharedStepProfile) -> SharedProfileObserver<'a> {
+        SharedProfileObserver { shared, pending: None }
+    }
+}
+
+impl StepObserver for SharedProfileObserver<'_> {
+    fn on_step_start(&mut self, step: usize) {
+        self.pending = Some((step, Instant::now()));
+    }
+
+    fn on_step(&mut self, step: usize, _out: &[i8]) {
+        let ns = match self.pending.take() {
+            Some((s, t0)) if s == step => t0.elapsed().as_nanos() as u64,
+            _ => 0,
+        };
+        self.shared.record(step, ns);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn closure_observers_still_satisfy_the_trait() {
+        let mut seen = Vec::new();
+        let mut cb = |i: usize, out: &[i8]| seen.push((i, out.len()));
+        let obs: &mut dyn StepObserver = &mut cb;
+        obs.on_step_start(0); // default no-op for closures
+        obs.on_step(0, &[1, 2]);
+        obs.on_step(1, &[3]);
+        assert_eq!(seen, vec![(0, 2), (1, 1)]);
+    }
+
+    #[test]
+    fn profiler_accumulates_invocations_and_time() {
+        let mut p = StepProfiler::new();
+        for _ in 0..3 {
+            p.on_step_start(0);
+            p.on_step(0, &[0]);
+            p.on_step_start(1);
+            p.on_step(1, &[0]);
+        }
+        assert_eq!(p.stat(0).unwrap().invocations, 3);
+        assert_eq!(p.stat(1).unwrap().invocations, 3);
+        assert_eq!(p.observed_steps(), 2);
+        assert_eq!(p.overflow(), 0);
+        p.reset();
+        assert_eq!(p.observed_steps(), 0);
+    }
+
+    #[test]
+    fn overflow_steps_are_counted_not_dropped() {
+        let mut p = StepProfiler::new();
+        p.on_step_start(MAX_STEPS + 3);
+        p.on_step(MAX_STEPS + 3, &[0]);
+        assert_eq!(p.overflow(), 1);
+        assert_eq!(p.observed_steps(), 0);
+    }
+
+    #[test]
+    fn mismatched_start_records_zero_time_not_garbage() {
+        let mut p = StepProfiler::new();
+        p.on_step_start(0);
+        p.on_step(1, &[0]); // start/step mismatch: count it, time it 0
+        assert_eq!(p.stat(1).unwrap().invocations, 1);
+        assert_eq!(p.stat(1).unwrap().total_ns, 0);
+    }
+
+    #[test]
+    fn rows_cover_every_kind_exactly_once() {
+        let mut p = StepProfiler::new();
+        p.on_step_start(0);
+        p.on_step(0, &[0]);
+        let rows = p.rows(&["FullyConnected", "Relu", "Softmax"]);
+        assert_eq!(rows.len(), 3);
+        assert_eq!(rows.iter().map(|r| r.step).collect::<Vec<_>>(), vec![0, 1, 2]);
+        assert_eq!(rows[0].invocations, 1);
+        assert_eq!(rows[1].invocations, 0);
+        assert_eq!(rows[2].kind, "Softmax");
+    }
+
+    #[test]
+    fn shared_profile_merges_across_threads() {
+        let shared = std::sync::Arc::new(SharedStepProfile::new());
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let shared = std::sync::Arc::clone(&shared);
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..100 {
+                    let mut obs = SharedProfileObserver::new(&shared);
+                    obs.on_step_start(2);
+                    obs.on_step(2, &[0]);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let rows = shared.rows(&["A", "B", "C"]);
+        assert_eq!(rows[2].invocations, 400);
+        assert_eq!(rows[0].invocations, 0);
+        assert_eq!(shared.overflow(), 0);
+    }
+}

@@ -1,0 +1,386 @@
+//! Hot-path span recorder: preallocated, fixed-capacity ring buffers of
+//! POD span events covering the request lifecycle
+//! (admit → queue → batch → execute → reply).
+//!
+//! The record path is the whole point of this design:
+//!
+//! * **zero allocation** — every slot is preallocated at ring
+//!   construction; recording stores four machine words;
+//! * **zero locks** — slots are claimed with one `fetch_add` on the
+//!   ring's write counter and published with a per-slot sequence number
+//!   (a seqlock written entirely through atomics, so the race is
+//!   detected, never undefined behavior);
+//! * **wait-free** — a full ring *overwrites* the oldest events rather
+//!   than blocking or erroring. The drain side counts every overwritten
+//!   or torn slot in [`SpanWindow::dropped`], so loss is visible, not
+//!   silent.
+//!
+//! The drain path is single-consumer by contract: [`SpanRing::drain`] is
+//! only called from the deployment's tick loop (the same place that
+//! consumes [`Metrics::window`](crate::coordinator::Metrics::window)),
+//! which is what keeps the exporter read-only — no policy decision ever
+//! reads a span ring, and no reader ever touches the record path's cache
+//! lines outside the tick.
+
+use std::sync::atomic::{fence, AtomicU32, AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+use std::time::Instant;
+
+/// Request-lifecycle phase of one span event.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// Accepted by a pool's submit path (counted `submitted`).
+    Admit,
+    /// Claimed off the shared queue into a worker's batch assembly.
+    Queue,
+    /// Batch cut complete — the request is about to execute.
+    Batch,
+    /// The batch executed successfully (kernel work done).
+    Execute,
+    /// The reply was delivered to the ticket.
+    Reply,
+}
+
+/// Number of [`Phase`] variants (sizes the per-phase count tables).
+pub const PHASE_COUNT: usize = 5;
+
+impl Phase {
+    pub const ALL: [Phase; PHASE_COUNT] =
+        [Phase::Admit, Phase::Queue, Phase::Batch, Phase::Execute, Phase::Reply];
+
+    /// Dense index for per-phase count arrays.
+    pub fn index(self) -> usize {
+        match self {
+            Phase::Admit => 0,
+            Phase::Queue => 1,
+            Phase::Batch => 2,
+            Phase::Execute => 3,
+            Phase::Reply => 4,
+        }
+    }
+
+    /// Stable lowercase name (metric label values).
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Admit => "admit",
+            Phase::Queue => "queue",
+            Phase::Batch => "batch",
+            Phase::Execute => "execute",
+            Phase::Reply => "reply",
+        }
+    }
+}
+
+impl std::fmt::Display for Phase {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Default ring capacity in events (power of two; index masks, no `%`).
+pub const SPAN_RING_CAPACITY: usize = 1024;
+
+/// QoS-class lanes in the count tables (mirrors `QosClass::ALL`).
+pub const CLASS_LANES: usize = 3;
+
+/// One preallocated event slot. All fields are atomics so a torn
+/// concurrent write is a *detected data race*, never undefined behavior:
+/// `seq` runs the classic seqlock protocol (odd = in progress, `2n + 2` =
+/// generation `n` published).
+struct Slot {
+    seq: AtomicU64,
+    id: AtomicU64,
+    t_us: AtomicU64,
+    /// `class.index()` in the low byte, `phase.index()` in the next.
+    meta: AtomicU32,
+}
+
+/// A fixed-capacity ring of span events.
+///
+/// Writers claim a slot with `fetch_add` on `written` (so the ring is
+/// safe even with several recording threads — the per-slot sequence
+/// number detects a writer that lapped another mid-write); the single
+/// drainer walks `[drained, written)` and skips any slot whose sequence
+/// does not match its generation, counting it dropped.
+pub struct SpanRing {
+    slots: Box<[Slot]>,
+    written: AtomicU64,
+    /// Consumed cursor — only the (single) drainer touches it.
+    drained: AtomicU64,
+    epoch: Instant,
+}
+
+impl SpanRing {
+    /// Ring with the default capacity ([`SPAN_RING_CAPACITY`]).
+    pub fn new() -> SpanRing {
+        SpanRing::with_capacity(SPAN_RING_CAPACITY)
+    }
+
+    /// Ring with an explicit capacity (rounded up to a power of two so
+    /// slot indexing is a mask).
+    pub fn with_capacity(capacity: usize) -> SpanRing {
+        let cap = capacity.max(2).next_power_of_two();
+        let slots: Vec<Slot> = (0..cap)
+            .map(|_| Slot {
+                seq: AtomicU64::new(0),
+                id: AtomicU64::new(0),
+                t_us: AtomicU64::new(0),
+                meta: AtomicU32::new(0),
+            })
+            .collect();
+        SpanRing {
+            slots: slots.into_boxed_slice(),
+            written: AtomicU64::new(0),
+            drained: AtomicU64::new(0),
+            epoch: Instant::now(),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Events ever recorded (including any later overwritten).
+    pub fn recorded(&self) -> u64 {
+        self.written.load(Ordering::Relaxed)
+    }
+
+    /// Record one span event. The hot path: no allocation, no locks, one
+    /// `fetch_add` plus four plain atomic stores. `class` is the dense
+    /// `QosClass::index()` (values `>= CLASS_LANES` are clamped into the
+    /// last lane rather than dropped).
+    pub fn record(&self, id: u64, class: u8, phase: Phase) {
+        let n = self.written.fetch_add(1, Ordering::Relaxed);
+        let slot = &self.slots[(n as usize) & (self.slots.len() - 1)];
+        // odd = write in progress; generation-tagged so a drain racing
+        // this write (or a writer a full lap behind) reads a mismatch
+        slot.seq.store(2 * n + 1, Ordering::Release);
+        slot.id.store(id, Ordering::Relaxed);
+        slot.t_us.store(self.epoch.elapsed().as_micros() as u64, Ordering::Relaxed);
+        let lane = (class as u32).min(CLASS_LANES as u32 - 1);
+        slot.meta.store(lane | ((phase.index() as u32) << 8), Ordering::Relaxed);
+        slot.seq.store(2 * n + 2, Ordering::Release);
+    }
+
+    /// Drain every event recorded since the previous drain into `w`.
+    /// Single-consumer by contract (the tick loop); events overwritten
+    /// before this drain reached them — or torn by a racing writer — are
+    /// counted in [`SpanWindow::dropped`]. Allocation-free.
+    pub fn drain(&self, w: &mut SpanWindow) {
+        let cap = self.slots.len() as u64;
+        let end = self.written.load(Ordering::Acquire);
+        let consumed = self.drained.load(Ordering::Relaxed);
+        // anything more than one lap behind was overwritten unread
+        let start = consumed.max(end.saturating_sub(cap));
+        w.dropped += start - consumed;
+        for n in start..end {
+            let slot = &self.slots[(n as usize) & (self.slots.len() - 1)];
+            if slot.seq.load(Ordering::Acquire) != 2 * n + 2 {
+                w.dropped += 1;
+                continue;
+            }
+            let t_us = slot.t_us.load(Ordering::Relaxed);
+            let meta = slot.meta.load(Ordering::Relaxed);
+            // re-check after the field loads: a writer lapping us mid-read
+            // bumps the sequence, so a torn read is discarded, not counted
+            fence(Ordering::Acquire);
+            if slot.seq.load(Ordering::Relaxed) != 2 * n + 2 {
+                w.dropped += 1;
+                continue;
+            }
+            let class = (meta & 0xff) as usize;
+            let phase = ((meta >> 8) & 0xff) as usize;
+            w.recorded += 1;
+            w.counts[phase.min(PHASE_COUNT - 1)][class.min(CLASS_LANES - 1)] += 1;
+            w.last_t_us = w.last_t_us.max(t_us);
+        }
+        self.drained.store(end, Ordering::Relaxed);
+    }
+}
+
+impl Default for SpanRing {
+    fn default() -> Self {
+        SpanRing::new()
+    }
+}
+
+/// Aggregated counts drained out of one or more span rings — what the
+/// exposition tier consumes. Plain data, mergeable, allocation-free.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SpanWindow {
+    /// Events successfully drained into `counts`.
+    pub recorded: u64,
+    /// Events lost to ring overwrite or torn by a racing writer.
+    pub dropped: u64,
+    /// `counts[phase][class]` event counts (dense indices).
+    pub counts: [[u64; CLASS_LANES]; PHASE_COUNT],
+    /// Largest event timestamp seen, in µs since the ring's epoch.
+    pub last_t_us: u64,
+}
+
+impl SpanWindow {
+    /// Events in `phase` summed over classes.
+    pub fn by_phase(&self, phase: Phase) -> u64 {
+        self.counts[phase.index()].iter().sum()
+    }
+
+    /// Events in class lane `class` summed over phases.
+    pub fn by_class(&self, class: usize) -> u64 {
+        self.counts.iter().map(|p| p[class.min(CLASS_LANES - 1)]).sum()
+    }
+
+    /// Fold another window into this one.
+    pub fn merge(&mut self, other: &SpanWindow) {
+        self.recorded += other.recorded;
+        self.dropped += other.dropped;
+        for (mine, theirs) in self.counts.iter_mut().zip(other.counts.iter()) {
+            for (m, t) in mine.iter_mut().zip(theirs.iter()) {
+                *m += *t;
+            }
+        }
+        self.last_t_us = self.last_t_us.max(other.last_t_us);
+    }
+}
+
+/// One pool's span-recording surface: a ring for the admission path
+/// (written by submitting threads) plus one ring per registered worker
+/// (single-writer by construction). Draining walks every ring; the
+/// registry lock is only ever taken at worker registration and at drain —
+/// never on the record path.
+pub struct SpanRecorder {
+    admit: Arc<SpanRing>,
+    workers: RwLock<Vec<Arc<SpanRing>>>,
+}
+
+impl SpanRecorder {
+    pub fn new() -> SpanRecorder {
+        SpanRecorder { admit: Arc::new(SpanRing::new()), workers: RwLock::new(Vec::new()) }
+    }
+
+    /// Record one admission-path event (submit side). Lock-free,
+    /// allocation-free.
+    pub fn record_admit(&self, id: u64, class: u8, phase: Phase) {
+        self.admit.record(id, class, phase);
+    }
+
+    /// Register a worker's private ring (called once at worker spawn; the
+    /// worker keeps the handle and records on it without any further
+    /// coordination).
+    pub fn register_worker(&self) -> Arc<SpanRing> {
+        let ring = Arc::new(SpanRing::new());
+        self.workers.write().unwrap().push(Arc::clone(&ring));
+        ring
+    }
+
+    /// Drain the admission ring and every worker ring into one merged
+    /// window. Single consumer by contract: the tick loop.
+    pub fn drain_window(&self) -> SpanWindow {
+        let mut w = SpanWindow::default();
+        self.admit.drain(&mut w);
+        for ring in self.workers.read().unwrap().iter() {
+            ring.drain(&mut w);
+        }
+        w
+    }
+}
+
+impl Default for SpanRecorder {
+    fn default() -> Self {
+        SpanRecorder::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_then_drain_roundtrips_counts() {
+        let ring = SpanRing::with_capacity(8);
+        ring.record(1, 0, Phase::Admit);
+        ring.record(1, 0, Phase::Execute);
+        ring.record(2, 1, Phase::Admit);
+        let mut w = SpanWindow::default();
+        ring.drain(&mut w);
+        assert_eq!(w.recorded, 3);
+        assert_eq!(w.dropped, 0);
+        assert_eq!(w.by_phase(Phase::Admit), 2);
+        assert_eq!(w.by_phase(Phase::Execute), 1);
+        assert_eq!(w.counts[Phase::Admit.index()][1], 1);
+        assert_eq!(w.by_class(0), 2);
+        // a second drain sees nothing new
+        let mut w2 = SpanWindow::default();
+        ring.drain(&mut w2);
+        assert_eq!((w2.recorded, w2.dropped), (0, 0));
+    }
+
+    #[test]
+    fn overwrite_is_counted_as_dropped_never_silent() {
+        let ring = SpanRing::with_capacity(4);
+        for i in 0..10 {
+            ring.record(i, 0, Phase::Admit);
+        }
+        let mut w = SpanWindow::default();
+        ring.drain(&mut w);
+        // 10 recorded into 4 slots: the newest 4 survive, 6 were lapped
+        assert_eq!(w.recorded, 4);
+        assert_eq!(w.dropped, 6);
+        assert_eq!(ring.recorded(), 10);
+    }
+
+    #[test]
+    fn timestamps_are_monotonic_per_ring() {
+        let ring = SpanRing::new();
+        ring.record(1, 0, Phase::Admit);
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        ring.record(1, 0, Phase::Reply);
+        let mut w = SpanWindow::default();
+        ring.drain(&mut w);
+        assert!(w.last_t_us >= 2_000, "t={}", w.last_t_us);
+    }
+
+    #[test]
+    fn concurrent_writers_never_corrupt_a_drain() {
+        // several threads hammer one ring while the main thread drains;
+        // every drained event must carry a valid phase/class pair and
+        // recorded + dropped must equal the claimed total at quiescence
+        let ring = Arc::new(SpanRing::with_capacity(64));
+        let mut handles = Vec::new();
+        for t in 0..4u8 {
+            let ring = Arc::clone(&ring);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..500u64 {
+                    ring.record(i, t % 3, Phase::ALL[(i % 5) as usize]);
+                }
+            }));
+        }
+        let mut w = SpanWindow::default();
+        for _ in 0..50 {
+            ring.drain(&mut w);
+            std::thread::yield_now();
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        ring.drain(&mut w);
+        assert_eq!(w.recorded + w.dropped, 2000, "{w:?}");
+        let table_total: u64 = w.counts.iter().flatten().sum();
+        assert_eq!(table_total, w.recorded);
+    }
+
+    #[test]
+    fn recorder_merges_admit_and_worker_rings() {
+        let rec = SpanRecorder::new();
+        rec.record_admit(7, 0, Phase::Admit);
+        let worker = rec.register_worker();
+        worker.record(7, 0, Phase::Queue);
+        worker.record(7, 0, Phase::Execute);
+        worker.record(7, 0, Phase::Reply);
+        let w = rec.drain_window();
+        assert_eq!(w.recorded, 4);
+        for phase in [Phase::Admit, Phase::Queue, Phase::Execute, Phase::Reply] {
+            assert_eq!(w.by_phase(phase), 1, "{phase}");
+        }
+        assert_eq!(w.by_phase(Phase::Batch), 0);
+    }
+}

@@ -9,6 +9,11 @@
 //! session's `run_into`/`run_batch_into` must perform **zero** heap
 //! allocations once built.
 //!
+//! PR 10 extends the proof to the observability plane: the same counted
+//! window also drives the *observed* predict path with a [`StepProfiler`]
+//! attached and records span events into a preallocated [`SpanRing`] —
+//! tracing and profiling a request must cost zero heap allocations too.
+//!
 //! This file holds exactly ONE `#[test]` so no sibling test thread can
 //! allocate concurrently between the two counter reads.
 
@@ -16,6 +21,7 @@ use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use microflow::api::{Engine, Session};
+use microflow::observe::{Phase, SpanRing, StepProfiler};
 use microflow::synth;
 use microflow::util::Prng;
 
@@ -83,4 +89,33 @@ fn predict_path_never_allocates() {
             after - before
         );
     }
+
+    // ---- the observed hot path: tracing + profiling attached ----
+    // Everything is preallocated before the counted window: the ring's
+    // slot buffer at construction, the profiler's fixed table inline.
+    let mut session = Session::builder(&m).engine(Engine::MicroFlow).build().unwrap();
+    let (ilen, olen) = (session.input_len(), session.output_len());
+    let input = rng.i8_vec(ilen);
+    let mut out = vec![0i8; olen];
+    let mut profiler = StepProfiler::new();
+    let ring = SpanRing::new();
+    session.run_into_observed(&input, &mut out, &mut profiler).unwrap();
+
+    let before = ALLOC_CALLS.load(Ordering::SeqCst);
+    for i in 0..100u64 {
+        ring.record(i, 0, Phase::Admit);
+        session.run_into_observed(&input, &mut out, &mut profiler).unwrap();
+        ring.record(i, 0, Phase::Reply);
+    }
+    let after = ALLOC_CALLS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        0,
+        "{} heap allocations on the observed predict + span-record path",
+        after - before
+    );
+    // sanity outside the counted window: the instrumentation really ran
+    assert_eq!(ring.recorded(), 200);
+    assert!(profiler.observed_steps() > 0);
+    assert_eq!(profiler.stat(0).unwrap().invocations, 101);
 }

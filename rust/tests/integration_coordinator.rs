@@ -27,6 +27,7 @@ fn native_server(art: &std::path::Path, name: &str, replicas: usize, max_batch: 
         batcher: BatcherConfig { max_batch, max_wait: Duration::from_millis(1) },
         adaptive: false,
         max_retries: 1,
+        profile: false,
     };
     Server::start(sessions, cfg).unwrap()
 }

@@ -1,0 +1,238 @@
+//! Scrape smoke: the observability plane end-to-end, artifact-free.
+//!
+//! A synthetic fleet runs a fixed mixed-class workload (completions in
+//! every QoS lane, deterministic sheds via already-expired deadlines,
+//! pre-submit cancels) with the per-step profiler attached; `Fleet::tick`
+//! drains spans, windows and profiles into the exposition; and a raw HTTP
+//! scrape of [`MetricsServer`] is parsed back to prove, on the exported
+//! text itself:
+//!
+//! * the lifecycle identity `completed + shed + cancelled + failed ==
+//!   submitted` holds lane-by-lane;
+//! * span events cover the request lifecycle — `admit` matches the
+//!   submitted lane, `execute`/`reply` match the completed lane, and the
+//!   rings dropped nothing;
+//! * the per-step profile rows cover every plan step exactly once, each
+//!   with one invocation per executed sample.
+//!
+//! A second test drives the version-agnostic `STAT` wire op through a
+//! real ingress: placeholder body before an exposition is attached, the
+//! rendered snapshot after.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use microflow::api::{Engine, Session};
+use microflow::coordinator::{
+    BatcherConfig, Client, Fleet, Ingress, PoolSpec, QosClass, Request, Router, Server,
+    ServerConfig,
+};
+use microflow::observe::{parse_exposition, Exposition, MetricsServer, Sample};
+use microflow::synth;
+use microflow::util::Prng;
+
+fn profiled_config() -> ServerConfig {
+    ServerConfig {
+        queue_depth: 64,
+        batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) },
+        adaptive: false,
+        max_retries: 1,
+        profile: true,
+    }
+}
+
+/// Value of the unique sample matching `name` + all `labels`.
+fn get(samples: &[Sample], name: &str, labels: &[(&str, &str)]) -> f64 {
+    let matches: Vec<&Sample> = samples
+        .iter()
+        .filter(|s| s.name == name && labels.iter().all(|&(k, v)| s.label(k) == Some(v)))
+        .collect();
+    assert_eq!(matches.len(), 1, "expected exactly one {name} {labels:?}, got {matches:?}");
+    matches[0].value
+}
+
+#[test]
+fn scrape_exports_lane_identity_and_full_step_coverage() {
+    let mut rng = Prng::new(0x5C4A_9E01);
+    let m = synth::fc_chain(&mut rng, &[16, 32, 24, 4]);
+    let sessions: Vec<Session> = (0..2)
+        .map(|_| Session::builder(&m).engine(Engine::MicroFlow).build().unwrap())
+        .collect();
+    let step_kinds = sessions[0].step_kinds();
+    let ilen = sessions[0].input_len();
+    let fleet =
+        Fleet::start(vec![PoolSpec::new("native", sessions).config(profiled_config())]).unwrap();
+
+    // fixed workload: 10 completions per class, 5 deterministic sheds
+    // (expired at submit), 5 pre-submit cancels — every lane exercised
+    let mut completions = Vec::new();
+    for class in [QosClass::Interactive, QosClass::Bulk, QosClass::Background] {
+        for _ in 0..10 {
+            let req = Request::new(rng.i8_vec(ilen)).with_class(class);
+            completions.push(fleet.submit(req).unwrap());
+        }
+    }
+    for t in completions {
+        t.wait().unwrap();
+    }
+    for _ in 0..5 {
+        let req = Request::new(rng.i8_vec(ilen))
+            .with_class(QosClass::Bulk)
+            .with_deadline(Instant::now());
+        let err = fleet.submit(req).and_then(|t| t.wait()).unwrap_err();
+        assert!(err.to_string().contains("shed"), "{err:#}");
+    }
+    for _ in 0..5 {
+        let req = Request::new(rng.i8_vec(ilen)).with_class(QosClass::Interactive);
+        req.cancel();
+        let err = fleet.submit(req).and_then(|t| t.wait()).unwrap_err();
+        assert!(err.to_string().contains("cancelled"), "{err:#}");
+    }
+    // replies resolve at send; give the workers a beat to record the
+    // trailing Reply span events before the tick drains the rings
+    std::thread::sleep(Duration::from_millis(200));
+
+    let expo = Arc::new(Exposition::new());
+    expo.absorb_tick(&fleet.tick());
+    assert!(expo.identity_holds(), "quiescent pools must export the identity");
+
+    // raw HTTP scrape — what a real Prometheus would read
+    let server = MetricsServer::start("127.0.0.1:0", Arc::clone(&expo)).unwrap();
+    let addr = server.local_addr();
+    let body = {
+        use std::io::{Read, Write};
+        let mut conn = std::net::TcpStream::connect(addr).unwrap();
+        conn.write_all(b"GET /metrics HTTP/1.0\r\n\r\n").unwrap();
+        let mut resp = String::new();
+        conn.read_to_string(&mut resp).unwrap();
+        assert!(resp.starts_with("HTTP/1.0 200 OK"), "{resp}");
+        resp.split_once("\r\n\r\n").unwrap().1.to_string()
+    };
+    server.shutdown();
+    let samples = parse_exposition(&body);
+
+    // lane identity, class by class, on the exported text itself
+    let expected = [
+        ("interactive", 15.0, 10.0, 0.0, 5.0),
+        ("bulk", 15.0, 10.0, 5.0, 0.0),
+        ("background", 10.0, 10.0, 0.0, 0.0),
+    ];
+    for (class, submitted, completed, shed, cancelled) in expected {
+        let lane = |outcome: &str| {
+            get(
+                &samples,
+                "microflow_requests_total",
+                &[("pool", "native"), ("class", class), ("outcome", outcome)],
+            )
+        };
+        assert_eq!(lane("submitted"), submitted, "{class}");
+        assert_eq!(lane("completed"), completed, "{class}");
+        assert_eq!(lane("shed"), shed, "{class}");
+        assert_eq!(lane("cancelled"), cancelled, "{class}");
+        assert_eq!(
+            lane("completed") + lane("shed") + lane("cancelled") + lane("failed"),
+            lane("submitted"),
+            "identity broken for class {class}"
+        );
+    }
+
+    // span coverage: admit mirrors the submitted lane, execute/reply the
+    // completed lane, and the rings dropped nothing
+    for (class, submitted, completed, ..) in expected {
+        let span = |phase: &str| {
+            get(
+                &samples,
+                "microflow_span_events_total",
+                &[("pool", "native"), ("phase", phase), ("class", class)],
+            )
+        };
+        assert_eq!(span("admit"), submitted, "{class} admits");
+        assert_eq!(span("execute"), completed, "{class} executes");
+        assert_eq!(span("reply"), completed, "{class} replies");
+    }
+    assert_eq!(get(&samples, "microflow_spans_dropped_total", &[("pool", "native")]), 0.0);
+
+    // per-step profile rows cover every plan step exactly once, each with
+    // one invocation per executed sample (30 completions; shed and
+    // cancelled requests never execute)
+    let rows: Vec<&Sample> = samples
+        .iter()
+        .filter(|s| {
+            s.name == "microflow_step_invocations_total" && s.label("pool") == Some("native")
+        })
+        .collect();
+    assert_eq!(rows.len(), step_kinds.len(), "one exported row per plan step");
+    for (i, kind) in step_kinds.iter().enumerate() {
+        let step = i.to_string();
+        let calls = get(
+            &samples,
+            "microflow_step_invocations_total",
+            &[("pool", "native"), ("step", &step), ("kind", kind)],
+        );
+        assert_eq!(calls, 30.0, "step {i} ({kind}) must run once per executed sample");
+    }
+
+    fleet.shutdown();
+}
+
+#[test]
+fn stat_wire_op_serves_the_snapshot_version_agnostically() {
+    let mut rng = Prng::new(0x5C4A_9E02);
+    let m = synth::fc_chain(&mut rng, &[8, 12, 3]);
+    let sessions: Vec<Session> =
+        vec![Session::builder(&m).engine(Engine::MicroFlow).build().unwrap()];
+    let ilen = sessions[0].input_len();
+    let server = Server::start(sessions, profiled_config()).unwrap();
+    let mut router = Router::new();
+    router.add("tiny", server);
+    let router = Arc::new(router);
+    let ingress = Ingress::start("127.0.0.1:0", Arc::clone(&router)).unwrap();
+    let mut c = Client::connect(ingress.addr).unwrap();
+
+    // before an exposition is attached: the placeholder body, not an error
+    assert_eq!(c.stats().unwrap(), "# microflow: no exposition attached\n");
+
+    // drive real traffic over the wire, then drain one tick into the sink
+    for _ in 0..4 {
+        c.infer("tiny", &rng.i8_vec(ilen)).unwrap();
+    }
+    std::thread::sleep(Duration::from_millis(200));
+    let expo = Arc::new(Exposition::new());
+    expo.absorb_tick(&router.get("tiny").unwrap().tick());
+    router.set_exposition(Arc::clone(&expo));
+
+    // the STAT round pipelines with inference rounds on one connection
+    let samples = parse_exposition(&c.stats().unwrap());
+    // v1 frames are served with the default class (bulk)
+    assert_eq!(
+        get(
+            &samples,
+            "microflow_requests_total",
+            &[("pool", "tiny"), ("class", "bulk"), ("outcome", "submitted")],
+        ),
+        4.0
+    );
+    assert_eq!(
+        get(
+            &samples,
+            "microflow_requests_total",
+            &[("pool", "tiny"), ("class", "bulk"), ("outcome", "completed")],
+        ),
+        4.0
+    );
+    // the profiled pool exports step rows over the wire too
+    assert!(
+        samples.iter().any(|s| s.name == "microflow_step_invocations_total"
+            && s.label("pool") == Some("tiny")),
+        "step profile rows must survive the wire"
+    );
+    // and the connection still serves inference after the STAT round
+    c.infer("tiny", &rng.i8_vec(ilen)).unwrap();
+    drop(c);
+
+    ingress.shutdown();
+    match Arc::try_unwrap(router) {
+        Ok(r) => r.shutdown(),
+        Err(_) => panic!("router still referenced"),
+    }
+}

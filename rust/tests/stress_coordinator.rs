@@ -71,6 +71,7 @@ fn mixed_fleet(m: &microflow::format::mfb::MfbModel, queue_depth: usize) -> Flee
         batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) },
         adaptive: true,
         max_retries: 1,
+        profile: false,
     };
     let pool = |engine: Engine, name: &str| {
         PoolSpec::new(
@@ -198,6 +199,7 @@ fn stress_mixed_class_workload_routes_sheds_and_cancels() {
         batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) },
         adaptive: true,
         max_retries: 1,
+        profile: false,
     };
     let pool = |engine: Engine, name: &str, profile: QosProfile| {
         PoolSpec::new(
@@ -403,6 +405,7 @@ fn stress_autoscale_bursts_scale_up_and_idle_scales_down_without_losses() {
         batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) },
         adaptive: true,
         max_retries: 1,
+        profile: false,
     };
     let fleet = Arc::new(
         Fleet::start(vec![PoolSpec::new("native", vec![factory.provision().unwrap()])
@@ -700,6 +703,7 @@ fn stress_chaos_replica_failures_heal_without_loss() {
         batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) },
         adaptive: true,
         max_retries: 2,
+        profile: false,
     };
     // the autoscaler is the healing actuator: floor 4 re-provisions the
     // fatal death (BelowMin) and the health pass replaces the wedged
